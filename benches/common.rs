@@ -1,0 +1,50 @@
+//! Minimal self-timing bench harness (criterion is unavailable in this
+//! offline build; `[[bench]] harness = false` targets use this instead).
+//!
+//! Each figure bench (a) regenerates the paper artifact and prints the
+//! table/series, (b) checks the qualitative paper-shape predicate, and
+//! (c) reports wall-clock timings for the regeneration so `cargo bench`
+//! doubles as a coarse performance tracker.
+
+use std::time::Instant;
+
+/// Time one closure over `iters` runs; prints mean ± spread like criterion.
+pub fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) {
+    assert!(iters > 0);
+    // Warmup run (excluded).
+    f();
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    samples.sort_by(|a, b| a.total_cmp(b));
+    let mean: f64 = samples.iter().sum::<f64>() / samples.len() as f64;
+    let min = samples[0];
+    let max = samples[samples.len() - 1];
+    println!("bench {name:<42} {:>10} (min {} / max {})", human(mean), human(min), human(max));
+}
+
+/// Render seconds human-readably.
+pub fn human(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} µs", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+/// Standard bench epilogue: assert + report the paper-shape check.
+pub fn report_shape(name: &str, ok: bool) {
+    if ok {
+        println!("[shape OK] {name} matches the paper's qualitative shape");
+    } else {
+        println!("[shape MISMATCH] {name}");
+        std::process::exit(1);
+    }
+}

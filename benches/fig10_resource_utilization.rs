@@ -1,0 +1,12 @@
+//! Regenerates paper Fig 10: tuner resource utilization, LASP vs BLISS.
+#[path = "common.rs"]
+mod common;
+
+fn main() {
+    let fig = lasp::experiments::fig10::run();
+    fig.report();
+    common::bench("fig10 model + host measurement", 3, || {
+        let _ = lasp::experiments::fig10::run();
+    });
+    common::report_shape("fig10", fig.matches_paper_shape());
+}

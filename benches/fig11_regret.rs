@@ -1,0 +1,21 @@
+//! Regenerates paper Fig 11: cumulative regret (best run), α ∈ {0.8, 0.2}.
+#[path = "common.rs"]
+mod common;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let (iters, tries) = if quick { (800, 2) } else { (1500, 5) };
+    let fig = lasp::experiments::fig11::run(iters, tries);
+    fig.report();
+    common::bench("fig11 one regret-instrumented run", 3, || {
+        let _ = lasp::experiments::harness::run_with_regret(
+            lasp::apps::AppKind::Kripke,
+            lasp::device::PowerMode::Maxn,
+            iters,
+            0.8,
+            0.2,
+            1,
+        );
+    });
+    common::report_shape("fig11", fig.matches_paper_shape());
+}

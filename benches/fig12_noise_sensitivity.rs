@@ -1,0 +1,23 @@
+//! Regenerates paper Fig 12: gains under 5/10/15% synthetic measurement
+//! error.
+#[path = "common.rs"]
+mod common;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let (iters, seeds) = if quick { (400, 2) } else { (800, 5) };
+    let fig = lasp::experiments::fig12::run(iters, seeds);
+    fig.report();
+    common::bench("fig12 one noisy tuning run", 3, || {
+        let _ = lasp::experiments::harness::run_lasp(
+            lasp::apps::AppKind::Kripke,
+            lasp::device::PowerMode::Maxn,
+            iters,
+            0.8,
+            0.2,
+            7,
+            lasp::device::NoiseModel::uniform(0.10),
+        );
+    });
+    common::report_shape("fig12", fig.matches_paper_shape());
+}

@@ -1,0 +1,12 @@
+//! Regenerates paper Fig 2: LF/HF optimal-configuration overlap.
+#[path = "common.rs"]
+mod common;
+
+fn main() {
+    let fig = lasp::experiments::fig2::run();
+    fig.report();
+    common::bench("fig2 full regeneration", 3, || {
+        let _ = lasp::experiments::fig2::run();
+    });
+    common::report_shape("fig2", fig.matches_paper_shape());
+}

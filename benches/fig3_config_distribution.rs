@@ -1,0 +1,12 @@
+//! Regenerates paper Fig 3: Kripke execution-time distribution.
+#[path = "common.rs"]
+mod common;
+
+fn main() {
+    let fig = lasp::experiments::fig3::run();
+    fig.report();
+    common::bench("fig3 oracle sweep + histogram", 5, || {
+        let _ = lasp::experiments::fig3::run();
+    });
+    common::report_shape("fig3", fig.matches_paper_shape());
+}

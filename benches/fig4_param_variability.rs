@@ -1,0 +1,12 @@
+//! Regenerates paper Fig 4: per-parameter runtime variability (Kripke).
+#[path = "common.rs"]
+mod common;
+
+fn main() {
+    let fig = lasp::experiments::fig4::run();
+    fig.report();
+    common::bench("fig4 independent parameter sweeps", 5, || {
+        let _ = lasp::experiments::fig4::run();
+    });
+    common::report_shape("fig4", fig.matches_paper_shape());
+}

@@ -1,0 +1,13 @@
+//! Regenerates paper Fig 6: Lulesh selection-frequency heatmaps
+//! (500/1000 iterations × time/power objectives).
+#[path = "common.rs"]
+mod common;
+
+fn main() {
+    let fig = lasp::experiments::fig6::run();
+    fig.report();
+    common::bench("fig6 four tuning runs (500/1000 it)", 3, || {
+        let _ = lasp::experiments::fig6::run();
+    });
+    common::report_shape("fig6", fig.matches_paper_shape());
+}

@@ -1,0 +1,12 @@
+//! Regenerates paper Fig 7: exploration convergence for Kripke and Clomp.
+#[path = "common.rs"]
+mod common;
+
+fn main() {
+    let fig = lasp::experiments::fig7::run();
+    fig.report();
+    common::bench("fig7 four exploration runs", 3, || {
+        let _ = lasp::experiments::fig7::run();
+    });
+    common::report_shape("fig7", fig.matches_paper_shape());
+}

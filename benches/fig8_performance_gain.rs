@@ -1,0 +1,12 @@
+//! Regenerates paper Fig 8: performance gain vs default under varying α.
+#[path = "common.rs"]
+mod common;
+
+fn main() {
+    let fig = lasp::experiments::fig8::run(1000);
+    fig.report();
+    common::bench("fig8 16 tuning runs (1000 it)", 2, || {
+        let _ = lasp::experiments::fig8::run(1000);
+    });
+    common::report_shape("fig8", fig.matches_paper_shape());
+}

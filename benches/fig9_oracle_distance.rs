@@ -1,0 +1,15 @@
+//! Regenerates paper Fig 9: mean distance from Oracle over repeated runs
+//! (the paper runs LASP 100 times; pass --quick for 10).
+#[path = "common.rs"]
+mod common;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let (runs, iters) = if quick { (10, 500) } else { (100, 1000) };
+    let fig = lasp::experiments::fig9::run(runs, iters);
+    fig.report();
+    common::bench("fig9 one (app x objective) cell", 2, || {
+        let _ = lasp::experiments::fig9::run(2, iters);
+    });
+    common::report_shape("fig9", fig.matches_paper_shape());
+}

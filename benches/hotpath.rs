@@ -1,0 +1,125 @@
+//! Hot-path microbenchmarks (EXPERIMENTS.md §Perf): the per-iteration LASP
+//! scoring step for every application space, scalar vs PJRT backends, plus
+//! the BLISS GP proposal and the fused episode artifact.
+
+#[path = "common.rs"]
+mod common;
+
+use lasp::bandit::{RewardState, ScalarBackend, ScoreBackend};
+use lasp::runtime::EngineHandle;
+use lasp::util::Rng;
+
+fn populated_state(k: usize, pulls: usize, seed: u64) -> RewardState {
+    let mut state = RewardState::new(k);
+    let mut rng = Rng::new(seed);
+    for _ in 0..pulls {
+        let arm = rng.below(k);
+        state.observe(arm, rng.range(0.5, 3.0), rng.range(3.0, 9.0));
+    }
+    state
+}
+
+fn main() {
+    let apps: [(&str, usize); 4] =
+        [("lulesh", 128), ("kripke", 216), ("clomp", 125), ("hypre", 92_160)];
+
+    println!("## scalar backend — fused lasp_step (reward norm + UCB + argmax)");
+    for (app, k) in apps {
+        let state = populated_state(k, 1000, 7);
+        let mut backend = ScalarBackend;
+        common::bench(&format!("scalar lasp_step {app} (K={k})"), 50, || {
+            let _ = backend.lasp_step(&state, 0.8, 0.2, 0.25).unwrap();
+        });
+    }
+
+    match EngineHandle::spawn_default() {
+        Ok(engine) => {
+            println!("\n## PJRT backend — same step through the AOT artifact");
+            for (app, k) in apps {
+                let state = populated_state(k, 1000, 7);
+                let tau: Vec<f32> = state.tau_sum.iter().map(|&v| v as f32).collect();
+                let rho: Vec<f32> = state.rho_sum.iter().map(|&v| v as f32).collect();
+                let cnt: Vec<f32> = state.counts.iter().map(|&v| v as f32).collect();
+                // Warm the executable cache before timing.
+                let _ = engine
+                    .lasp_step(app, tau.clone(), rho.clone(), cnt.clone(), 1001.0, 0.8, 0.2, 0.25)
+                    .unwrap();
+                common::bench(&format!("pjrt lasp_step {app} (K={k})"), 30, || {
+                    let _ = engine
+                        .lasp_step(
+                            app,
+                            tau.clone(),
+                            rho.clone(),
+                            cnt.clone(),
+                            1001.0,
+                            0.8,
+                            0.2,
+                            0.25,
+                        )
+                        .unwrap();
+                });
+            }
+
+            println!("\n## PJRT fused episode replay (L2 scan artifact)");
+            let rewards: Vec<f32> = (0..216).map(|i| (i % 13) as f32 / 13.0).collect();
+            let _ = engine
+                .ucb_episode("kripke", 500, rewards.clone(), vec![0.0; 216], 1.0, 0.25)
+                .unwrap();
+            common::bench("pjrt ucb_episode kripke t=500", 10, || {
+                let _ = engine
+                    .ucb_episode("kripke", 500, rewards.clone(), vec![0.0; 216], 1.0, 0.25)
+                    .unwrap();
+            });
+
+            println!("\n## PJRT GP proposal (BLISS surrogate)");
+            let (n, m, d) = engine.gp_shape().unwrap();
+            let x = vec![0.3f32; n * d];
+            let y = vec![0.5f32; n];
+            let mut mask = vec![0f32; n];
+            mask.iter_mut().take(n / 2).for_each(|v| *v = 1.0);
+            let xs = vec![0.4f32; m * d];
+            let _ = engine
+                .gp_propose(x.clone(), y.clone(), mask.clone(), xs.clone(), 0.35, 1e-3, 0.6)
+                .unwrap();
+            common::bench(&format!("pjrt gp_propose (N={n}, M={m}, D={d})"), 10, || {
+                let _ = engine
+                    .gp_propose(x.clone(), y.clone(), mask.clone(), xs.clone(), 0.35, 1e-3, 0.6)
+                    .unwrap();
+            });
+        }
+        Err(e) => println!("\n(pjrt benches skipped: {e})"),
+    }
+
+    println!("\n## rust GP surrogate (BLISS fallback path)");
+    let mut gp = lasp::baselines::GpSurrogate::new(0.35, 1e-3);
+    let mut rng = Rng::new(3);
+    let xs: Vec<Vec<f64>> = (0..64).map(|_| (0..12).map(|_| rng.uniform()).collect()).collect();
+    let ys: Vec<f64> = (0..64).map(|_| rng.uniform()).collect();
+    common::bench("rust GP fit (N=64, D=12)", 30, || {
+        gp.fit(xs.clone(), ys.clone()).unwrap();
+    });
+    let q: Vec<f64> = (0..12).map(|_| 0.5).collect();
+    common::bench("rust GP predict x512", 30, || {
+        for _ in 0..512 {
+            let _ = gp.predict(&q);
+        }
+    });
+
+    println!("\n## end-to-end tuning iteration (app model + device + tuner)");
+    for (kind, label) in [
+        (lasp::apps::AppKind::Kripke, "kripke"),
+        (lasp::apps::AppKind::Hypre, "hypre (subset)"),
+    ] {
+        common::bench(&format!("500-iteration LASP run on {label}"), 3, || {
+            let _ = lasp::experiments::harness::run_lasp(
+                kind,
+                lasp::device::PowerMode::Maxn,
+                500,
+                0.8,
+                0.2,
+                5,
+                lasp::device::NoiseModel::none(),
+            );
+        });
+    }
+}

@@ -1,0 +1,125 @@
+//! End-to-end driver (EXPERIMENTS.md §E2E): exercises every layer of the
+//! stack on a real small workload —
+//!
+//!   1. loads the AOT artifacts (L1 Pallas kernels + L2 graphs, lowered by
+//!      `make artifacts`) into the PJRT CPU runtime;
+//!   2. spawns a 3-device edge fleet whose workers score arms *through the
+//!      PJRT artifact* (python is not running — the HLO is);
+//!   3. tunes all four paper applications at low fidelity with measurement
+//!      noise on the lossy link;
+//!   4. transfers each tuned configuration to the simulated i7-14700 and
+//!      validates at high fidelity (paper Fig 1);
+//!   5. reports the paper's headline metrics: Eq. 8 gain over default,
+//!      §II-A oracle distance, and the tuner's own footprint.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example end_to_end
+//! ```
+//! Falls back to the scalar backend (with a warning) if artifacts are
+//! missing, so the driver always runs.
+
+use lasp::apps::{self, AppKind};
+use lasp::coordinator::transfer::validate_on_hpc;
+use lasp::coordinator::{Fleet, FleetConfig, TuneJob};
+use lasp::device::{NoiseModel, PowerMode};
+use lasp::runtime::EngineHandle;
+use lasp::telemetry::ResourceTracker;
+use std::time::Duration;
+
+fn main() -> lasp::Result<()> {
+    println!("=== LASP end-to-end driver ===\n");
+
+    // --- 1. runtime + artifacts ------------------------------------------
+    let engine = match EngineHandle::spawn_default() {
+        Ok(h) => {
+            println!("[runtime] PJRT engine up: platform={}", h.platform()?);
+            h.warmup(&[
+                "lasp_step_lulesh",
+                "lasp_step_kripke",
+                "lasp_step_clomp",
+                "lasp_step_hypre",
+            ])?;
+            println!("[runtime] warmed 4 lasp_step artifacts (compiled from HLO text)");
+            Some(h)
+        }
+        Err(e) => {
+            println!("[runtime] WARNING: {e}; falling back to scalar backend");
+            None
+        }
+    };
+
+    // --- 2-3. fleet tuning ------------------------------------------------
+    let tracker = ResourceTracker::start();
+    let mut fleet = Fleet::spawn(
+        FleetConfig {
+            devices: 3,
+            modes: vec![PowerMode::Maxn, PowerMode::Maxn, PowerMode::FiveW],
+            seed: 2026,
+            fidelity: 0.15,
+            loss_prob: 0.03,
+            mean_latency_s: 0.005,
+            injected_noise: NoiseModel::uniform(0.05),
+            progress_every: 125,
+        },
+        engine.clone(),
+    )?;
+    println!(
+        "[fleet] {} devices up (2×MAXN + 1×5W), 3% loss, 5% measurement noise",
+        fleet.size()
+    );
+
+    let iterations = 500;
+    for app in AppKind::all() {
+        let id = fleet.submit(TuneJob { app, iterations, alpha: 0.8, beta: 0.2 })?;
+        println!("[fleet] job {id} submitted: tune {app} for {iterations} iterations");
+    }
+    let mut results = fleet.drain(Duration::from_secs(600))?;
+    results.sort_by_key(|r| r.job_id);
+
+    // --- 4-5. HF validation + report --------------------------------------
+    println!("\n=== results (LF edge tuning -> HF i7-14700 validation) ===");
+    println!(
+        "{:<8} {:>6} {:>12} {:>12} {:>10} {:>10} {:>12}",
+        "app", "dev", "sim time", "tuner time", "HF gain", "oracle", "pulls(best)"
+    );
+    let mut all_gains = vec![];
+    for r in &results {
+        let app = apps::build(r.app);
+        let v = validate_on_hpc(app.as_ref(), r.best_index, 2026);
+        all_gains.push(v.gain_pct);
+        println!(
+            "{:<8} {:>6} {:>11.1}s {:>11.3}s {:>9.1}% {:>9.1}% {:>12.0}",
+            r.app.to_string(),
+            r.device_id,
+            r.simulated_device_seconds,
+            r.tuner_wall_seconds,
+            v.gain_pct,
+            v.oracle_distance_pct,
+            r.pulls_of_best
+        );
+        println!("         tuned: {}", app.space().describe(r.best_index));
+    }
+
+    let res = tracker.report();
+    println!("\n=== headline ===");
+    println!(
+        "mean HF gain over Table II defaults: {:+.1}%  (paper reports 6-14% at power focus,\nlarger for time focus — shape: every app positive)",
+        all_gains.iter().sum::<f64>() / all_gains.len() as f64
+    );
+    println!(
+        "tuner footprint for the whole 4-app campaign: {:.2}s cpu over {:.2}s wall, ΔRSS {:.1} MiB",
+        res.cpu_seconds, res.wall_seconds, res.peak_rss_mib
+    );
+    println!(
+        "backend on the hot path: {}",
+        if engine.is_some() { "pjrt (AOT artifacts)" } else { "scalar (fallback)" }
+    );
+    fleet.shutdown();
+
+    // Exit nonzero if the headline shape does not hold.
+    if !all_gains.iter().all(|&g| g > -5.0) {
+        eprintln!("FAIL: a tuned configuration regressed badly vs default at HF");
+        std::process::exit(1);
+    }
+    Ok(())
+}

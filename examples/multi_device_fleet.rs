@@ -1,0 +1,70 @@
+//! Fleet scenario: a leader dispatches tuning jobs for all four paper
+//! applications across a heterogeneous edge fleet (MAXN and 5W boards) over
+//! a lossy CoAP-like link, then validates every result on the HPC node.
+//!
+//! ```bash
+//! cargo run --release --example multi_device_fleet
+//! ```
+
+use lasp::apps::{self, AppKind};
+use lasp::coordinator::transfer::validate_on_hpc;
+use lasp::coordinator::{Fleet, FleetConfig, TuneJob};
+use lasp::device::{NoiseModel, PowerMode};
+use std::time::Duration;
+
+fn main() -> lasp::Result<()> {
+    let mut fleet = Fleet::spawn(
+        FleetConfig {
+            devices: 4,
+            modes: vec![PowerMode::Maxn, PowerMode::FiveW],
+            seed: 7,
+            fidelity: 0.15,
+            loss_prob: 0.05,     // 5% message loss on the edge radio
+            mean_latency_s: 0.01,
+            injected_noise: NoiseModel::uniform(0.05),
+            progress_every: 100,
+        },
+        None,
+    )?;
+    println!("fleet up: {} devices (MAXN + 5W, 5% loss)", fleet.size());
+
+    for app in AppKind::all() {
+        let id = fleet.submit(TuneJob { app, iterations: 500, alpha: 0.8, beta: 0.2 })?;
+        println!("submitted job {id}: {app}");
+    }
+
+    let mut results = fleet.drain(Duration::from_secs(300))?;
+    results.sort_by_key(|r| r.job_id);
+    println!("\n{:<8} {:<8} {:<45} {:>9} {:>8}", "device", "app", "tuned configuration", "HF gain", "oracle");
+    for r in &results {
+        let app = apps::build(r.app);
+        let v = validate_on_hpc(app.as_ref(), r.best_index, 7);
+        println!(
+            "{:<8} {:<8} {:<45} {:>8.1}% {:>7.1}%",
+            r.device_id,
+            r.app.to_string(),
+            app.space().describe(r.best_index),
+            v.gain_pct,
+            v.oracle_distance_pct
+        );
+    }
+
+    // Volatility event: drop the whole fleet to 5 W and re-tune one app —
+    // the new tuning session adapts to the new operating point.
+    println!("\nswitching fleet to 5W and re-tuning kripke ...");
+    fleet.set_power_mode(PowerMode::FiveW);
+    fleet.submit(TuneJob { app: AppKind::Kripke, iterations: 300, alpha: 0.8, beta: 0.2 })?;
+    let r = fleet.drain(Duration::from_secs(300))?;
+    for r in r {
+        let app = apps::build(r.app);
+        println!(
+            "device {} re-tuned {}: {}",
+            r.device_id,
+            r.app,
+            app.space().describe(r.best_index)
+        );
+    }
+
+    fleet.shutdown();
+    Ok(())
+}

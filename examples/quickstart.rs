@@ -1,0 +1,54 @@
+//! Quickstart: tune one HPC application on one simulated edge device.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! This is the 30-second tour: build an app model (Kripke), a Jetson Nano
+//! in MAXN mode, run LASP for 500 iterations with the paper's default
+//! priorities (α = 0.8, β = 0.2), and print the tuned configuration with
+//! its gain over the Table II default.
+
+use lasp::apps::{self, AppKind};
+use lasp::device::{Device, JetsonNano, PowerMode};
+use lasp::tuning::{oracle_sweep, oracle_distance_pct, SessionConfig, TuningSession};
+
+fn main() -> lasp::Result<()> {
+    let app = apps::build(AppKind::Kripke);
+    let device = JetsonNano::new(PowerMode::Maxn, 42);
+    println!(
+        "tuning {} ({} configurations) on {} ...",
+        app.name(),
+        app.space().len(),
+        device.spec().name
+    );
+
+    let mut session = TuningSession::new(
+        app,
+        Box::new(device),
+        SessionConfig { iterations: 500, alpha: 0.8, beta: 0.2, record_history: false },
+    );
+    let outcome = session.run()?;
+
+    println!("tuned configuration (Eq. 4): {}", outcome.best_config);
+    println!(
+        "pulls of best: {:.0}/500 | simulated device time {:.1}s | tuner overhead {:.4}s",
+        outcome.counts[outcome.best_index],
+        outcome.simulated_device_seconds,
+        outcome.tuner_wall_seconds
+    );
+
+    // Score it against the noise-free oracle and the default config.
+    let app = apps::build(AppKind::Kripke);
+    let sweep = oracle_sweep(app.as_ref(), &PowerMode::Maxn.spec(), 0.15);
+    let default = app.default_index();
+    let gain = (sweep[default].time_s - sweep[outcome.best_index].time_s)
+        / sweep[default].time_s
+        * 100.0;
+    println!(
+        "vs default: {:+.1}% execution time | distance from oracle: {:.1}%",
+        gain,
+        oracle_distance_pct(&sweep, outcome.best_index)
+    );
+    Ok(())
+}

@@ -1,0 +1,167 @@
+"""AOT-lower the L2 graphs to HLO *text* artifacts for the rust runtime.
+
+HLO text (NOT serialized HloModuleProto) is the interchange format: jax >=
+0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version behind the published `xla` 0.1.6 crate) rejects; the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Every artifact is lowered with ``return_tuple=True`` — the rust side unwraps
+with ``to_tuple()``. A ``manifest.json`` describing every artifact's entry
+point, input shapes/dtypes and outputs is written next to the .hlo.txt files
+so the rust runtime can validate what it loads.
+
+Usage: python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+# Arm counts per application (Table II; see DESIGN.md for the Hypre
+# discretization that realizes the paper's stated 92,160 size).
+APP_SPACES = {
+    "lulesh": 128,
+    "kripke": 216,
+    "clomp": 125,
+    "hypre": 92160,
+}
+
+# BLISS GP surrogate shapes: up to N observations, M candidates, D features.
+GP_N, GP_M, GP_D = 64, 512, 12
+
+# Episode-replay artifacts (small spaces only; the scan inlines the kernel).
+EPISODE_SHAPES = [("lulesh", 128, 500), ("lulesh", 128, 1000), ("kripke", 216, 500)]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _desc(shape, dtype="f32"):
+    return {"shape": list(shape), "dtype": dtype}
+
+
+def build_plan():
+    """(name, jitted fn, example specs, input descr, output descr) tuples."""
+    plan = []
+    f32 = jnp.float32
+    for app, k in APP_SPACES.items():
+        plan.append(
+            dict(
+                name=f"lasp_step_{app}",
+                fn=jax.jit(model.lasp_step),
+                specs=(_spec((k,)), _spec((k,)), _spec((k,)), _spec(()), _spec(()), _spec(()), _spec(())),
+                inputs=[
+                    _desc((k,)), _desc((k,)), _desc((k,)),
+                    _desc(()), _desc(()), _desc(()), _desc(()),
+                ],
+                outputs=[_desc((), "s32"), _desc(()), _desc((k,))],
+                meta={"kind": "lasp_step", "k": k, "app": app},
+            )
+        )
+        plan.append(
+            dict(
+                name=f"ucb_scores_{app}",
+                fn=jax.jit(model.ucb_scores_graph),
+                specs=(_spec((k,)), _spec((k,)), _spec(()), _spec(())),
+                inputs=[_desc((k,)), _desc((k,)), _desc(()), _desc(())],
+                outputs=[_desc((k,)), _desc((), "s32")],
+                meta={"kind": "ucb_scores", "k": k, "app": app},
+            )
+        )
+        plan.append(
+            dict(
+                name=f"reward_norm_{app}",
+                fn=jax.jit(model.reward_norm),
+                specs=(_spec((k,)), _spec((k,)), _spec((k,)), _spec(()), _spec(())),
+                inputs=[_desc((k,)), _desc((k,)), _desc((k,)), _desc(()), _desc(())],
+                outputs=[_desc((k,))],
+                meta={"kind": "reward_norm", "k": k, "app": app},
+            )
+        )
+    for app, k, steps in EPISODE_SHAPES:
+        plan.append(
+            dict(
+                name=f"ucb_episode_{app}_t{steps}",
+                fn=jax.jit(lambda r, c0, t, ec, s=steps: model.ucb_episode(r, c0, t, ec, s)),
+                specs=(_spec((k,)), _spec((k,)), _spec(()), _spec(())),
+                inputs=[_desc((k,)), _desc((k,)), _desc(()), _desc(())],
+                outputs=[_desc((k,)), _desc((steps,), "s32")],
+                meta={"kind": "ucb_episode", "k": k, "app": app, "steps": steps},
+            )
+        )
+    plan.append(
+        dict(
+            name="gp_propose",
+            fn=jax.jit(model.gp_propose),
+            specs=(
+                _spec((GP_N, GP_D)), _spec((GP_N,)), _spec((GP_N,)),
+                _spec((GP_M, GP_D)), _spec(()), _spec(()), _spec(()),
+            ),
+            inputs=[
+                _desc((GP_N, GP_D)), _desc((GP_N,)), _desc((GP_N,)),
+                _desc((GP_M, GP_D)), _desc(()), _desc(()), _desc(()),
+            ],
+            outputs=[_desc((GP_M,)), _desc((GP_M,)), _desc((GP_M,)), _desc((), "s32")],
+            meta={"kind": "gp_propose", "n": GP_N, "m": GP_M, "d": GP_D},
+        )
+    )
+    return plan
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts")
+    parser.add_argument("--only", default=None, help="substring filter on artifact names")
+    args = parser.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {"format": "hlo-text", "return_tuple": True, "artifacts": []}
+    manifest_path = os.path.join(args.out_dir, "manifest.json")
+    if args.only and os.path.exists(manifest_path):
+        # Partial rebuild: keep entries for artifacts we are not touching.
+        with open(manifest_path) as f:
+            old = json.load(f)
+        manifest["artifacts"] = [
+            a for a in old.get("artifacts", []) if args.only not in a["name"]
+        ]
+    for item in build_plan():
+        if args.only and args.only not in item["name"]:
+            continue
+        path = os.path.join(args.out_dir, f"{item['name']}.hlo.txt")
+        lowered = item["fn"].lower(*item["specs"])
+        text = to_hlo_text(lowered)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"].append(
+            {
+                "name": item["name"],
+                "file": os.path.basename(path),
+                "inputs": item["inputs"],
+                "outputs": item["outputs"],
+                **item["meta"],
+            }
+        )
+        print(f"wrote {path} ({len(text) / 1024:.0f} KiB)")
+
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {manifest_path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""L1 Pallas kernel for the BLISS baseline's GP surrogate: RBF kernel matrix.
+
+BLISS (Roy et al., PLDI'21) drives tuning with a pool of lightweight surrogate
+models; our reimplementation uses a Gaussian-process surrogate whose dominant
+cost is building K(X, Y) = exp(-||x - y||^2 / (2 l^2)) for X: (N, D),
+Y: (M, D). We tile (N, M) into MXU-friendly blocks and use the
+||x||^2 + ||y||^2 - 2 x.y^T decomposition so the inner product is a matmul
+that would hit the systolic array on real TPU hardware (interpret=True here —
+CPU PJRT cannot run Mosaic calls).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_N = 128
+BLOCK_M = 128
+
+
+def _rbf_kernel(inv2l2_ref, x_ref, y_ref, o_ref):
+    """One (BLOCK_N, BLOCK_M) tile of the RBF kernel matrix.
+
+    x_ref: (BLOCK_N, D), y_ref: (BLOCK_M, D) — D rides along whole.
+    """
+    x = x_ref[...]
+    y = y_ref[...]
+    xx = jnp.sum(x * x, axis=1, keepdims=True)          # (bn, 1)
+    yy = jnp.sum(y * y, axis=1, keepdims=True).T        # (1, bm)
+    # The MXU-shaped part: (bn, D) @ (D, bm) in fp32.
+    xy = jax.lax.dot_general(
+        x, y, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    sq = jnp.maximum(xx + yy - 2.0 * xy, 0.0)
+    o_ref[...] = jnp.exp(-sq * inv2l2_ref[0])
+
+
+def _pad_rows(a, block):
+    n = a.shape[0]
+    pad = (-n) % block
+    if pad:
+        a = jnp.concatenate([a, jnp.zeros((pad,) + a.shape[1:], a.dtype)])
+    return a
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "block_m"))
+def rbf_matrix(x, y, lengthscale, block_n=BLOCK_N, block_m=BLOCK_M):
+    """K(X, Y) with RBF kernel. x: f32[N, D], y: f32[M, D] -> f32[N, M]."""
+    n, d = x.shape
+    m = y.shape[0]
+    block_n = min(block_n, max(8, n))
+    block_m = min(block_m, max(8, m))
+    xp = _pad_rows(x.astype(jnp.float32), block_n)
+    yp = _pad_rows(y.astype(jnp.float32), block_m)
+    grid = (xp.shape[0] // block_n, yp.shape[0] // block_m)
+    inv2l2 = jnp.reshape(0.5 / (lengthscale.astype(jnp.float32) ** 2), (1,))
+    out = pl.pallas_call(
+        _rbf_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pl.ANY),
+            pl.BlockSpec((block_n, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_m, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_n, block_m), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((xp.shape[0], yp.shape[0]), jnp.float32),
+        interpret=True,
+    )(inv2l2, xp, yp)
+    return out[:n, :m]

@@ -1,0 +1,136 @@
+"""L1 Pallas kernels for the LASP UCB hot path.
+
+The per-iteration cost of LASP is scoring every arm:
+
+    score(x) = R_x + sqrt(2 ln t / N_x)          (paper Eq. 2)
+
+with the convention that an arm never pulled (N_x == 0) scores +BIG so the
+initial round-robin "try each arm once" phase of UCB1 falls out of the same
+kernel. For the largest space in the paper (Hypre, K = 92,160 arms) this is a
+bandwidth-bound elementwise pass followed by an argmax reduction.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the arm axis is tiled
+with ``BlockSpec((TILE,))`` so each grid step streams one VMEM-resident tile
+of (R, N) pairs, computes scores on the VPU in fp32, and emits a per-tile
+(max, argmax) pair; the final cross-tile reduction is a tiny jnp argmax at L2.
+``interpret=True`` everywhere — the CPU PJRT plugin cannot run Mosaic
+custom-calls (see /opt/xla-example/README.md).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Score assigned to never-pulled arms: larger than any reachable UCB value
+# (rewards are normalized to [0, 1]; the exploration bonus is <= sqrt(2 ln t)).
+UNPULLED_SCORE = 1.0e9
+
+# Arm-axis tile. 1024 f32 lanes * 3 live buffers (R, N, scores) is 12 KiB of
+# VMEM per step — far under the ~16 MiB budget; chosen to keep the grid short
+# for small spaces while still exercising multi-tile paths for Hypre.
+DEFAULT_TILE = 1024
+
+
+def _score_kernel(tc_ref, r_ref, n_ref, o_ref):
+    """scores = R + c·sqrt(2 ln t / N), +BIG where N == 0 (one VMEM tile).
+
+    `c` is the exploration coefficient (paper Eq. 2 has c = 1; with rewards
+    re-normalized to [0, 1] the effective paper setting is c ≪ 1 — see
+    DESIGN.md §Calibration).
+    """
+    r = r_ref[...]
+    n = n_ref[...]
+    t = tc_ref[0]
+    c = tc_ref[1]
+    # ln t is uniform across the tile; computed once on the scalar.
+    bonus = c * jnp.sqrt(2.0 * jnp.log(jnp.maximum(t, 1.0)) / jnp.maximum(n, 1.0))
+    o_ref[...] = jnp.where(n > 0.0, r + bonus, UNPULLED_SCORE)
+
+
+def _select_kernel(tc_ref, r_ref, n_ref, max_ref, arg_ref):
+    """Per-tile (max score, argmax lane) pair.
+
+    The cross-tile argmax happens at L2; each grid step writes one (max, arg)
+    into its slot, so the kernel output is (num_tiles,) x 2.
+    """
+    i = pl.program_id(0)
+    r = r_ref[...]
+    n = n_ref[...]
+    t = tc_ref[0]
+    c = tc_ref[1]
+    tile = r.shape[0]
+    bonus = c * jnp.sqrt(2.0 * jnp.log(jnp.maximum(t, 1.0)) / jnp.maximum(n, 1.0))
+    scores = jnp.where(n > 0.0, r + bonus, UNPULLED_SCORE)
+    lane = jnp.argmax(scores)
+    max_ref[0] = scores[lane]
+    arg_ref[0] = (i * tile + lane).astype(jnp.int32)
+
+
+def _pad_to_tile(x, tile, fill):
+    k = x.shape[0]
+    pad = (-k) % tile
+    if pad:
+        x = jnp.concatenate([x, jnp.full((pad,), fill, x.dtype)])
+    return x
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def ucb_scores(rewards, counts, t, c=1.0, tile=DEFAULT_TILE):
+    """Score all K arms. rewards/counts: f32[K]; t, c: f32 scalars.
+
+    Returns f32[K] scores (Eq. 2 with exploration coefficient c, and the
+    unpulled-arm convention).
+    """
+    k = rewards.shape[0]
+    tile = min(tile, max(k, 8))
+    r = _pad_to_tile(rewards.astype(jnp.float32), tile, 0.0)
+    # Padding arms get count +inf so their bonus is 0 and reward 0: never win.
+    n = _pad_to_tile(counts.astype(jnp.float32), tile, jnp.float32(1e30))
+    grid = r.shape[0] // tile
+    out = pl.pallas_call(
+        _score_kernel,
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pl.ANY),  # t: broadcast scalar-as-(1,)
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((tile,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((r.shape[0],), jnp.float32),
+        interpret=True,
+    )(jnp.stack([jnp.asarray(t, jnp.float32), jnp.asarray(c, jnp.float32)]), r, n)
+    return out[:k]
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def ucb_select(rewards, counts, t, c=1.0, tile=DEFAULT_TILE):
+    """argmax_x UCB(x, t) via per-tile reduction. Returns (best_idx i32, best_score f32)."""
+    k = rewards.shape[0]
+    tile = min(tile, max(k, 8))
+    # Padding lanes: reward -BIG and count +BIG so they can never win the
+    # argmax, even when every real arm has a negative reward.
+    r = _pad_to_tile(rewards.astype(jnp.float32), tile, jnp.float32(-1e30))
+    n = _pad_to_tile(counts.astype(jnp.float32), tile, jnp.float32(1e30))
+    grid = r.shape[0] // tile
+    maxes, args = pl.pallas_call(
+        _select_kernel,
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pl.ANY),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((grid,), jnp.float32),
+            jax.ShapeDtypeStruct((grid,), jnp.int32),
+        ],
+        interpret=True,
+    )(jnp.stack([jnp.asarray(t, jnp.float32), jnp.asarray(c, jnp.float32)]), r, n)
+    best_tile = jnp.argmax(maxes)
+    return args[best_tile], maxes[best_tile]

@@ -1,0 +1,170 @@
+"""L2 compute graphs for LASP — the functions that get AOT-lowered to HLO.
+
+Each public function here is a pure jax function over fixed-shape arrays,
+calling the L1 Pallas kernels (kernels/ucb.py, kernels/gp.py). `aot.py`
+lowers one HLO-text artifact per (function, shape) pair; the rust runtime
+(`rust/src/runtime/`) loads and executes them on the PJRT CPU client.
+
+Entry points
+------------
+lasp_step        : the per-iteration hot path — sums/counts -> weighted
+                   reward (Eq. 5) -> UCB scores (Eq. 2) -> argmax (Eq. 3).
+ucb_scores_graph : scores only (diagnostics, fig6 heatmaps from rust).
+reward_norm      : Alg. 1 line 2 + Eq. 5 as a standalone graph.
+ucb_episode      : T-step mean-field replay of Alg. 1 as a lax.scan.
+gp_propose       : BLISS surrogate — masked GP posterior + EI argmax.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import gp as gpk
+from compile.kernels import ucb as ucbk
+
+REWARD_EPS = 1e-2  # guard for the 1/metric inverse in Eq. 5
+MINMAX_EPS = 1e-9  # degenerate-range guard for MinMax normalization
+
+
+def _minmax(v):
+    lo = jnp.min(v)
+    hi = jnp.max(v)
+    return (v - lo) / jnp.maximum(hi - lo, MINMAX_EPS)
+
+
+def weighted_reward(mean_tau, mean_rho, alpha, beta):
+    """Paper Eq. 5 on MinMax-normalized per-arm means, re-normalized to [0,1]."""
+    tau_hat = _minmax(mean_tau)
+    rho_hat = _minmax(mean_rho)
+    raw = alpha / (tau_hat + REWARD_EPS) + beta / (rho_hat + REWARD_EPS)
+    return _minmax(raw)
+
+
+def reward_norm(tau_sum, rho_sum, counts, alpha, beta):
+    """Standalone reward graph: running sums + counts -> R[K] in [0, 1].
+
+    Arms never pulled contribute the *mean of pulled arms* to normalization
+    (neutral value) so one unpulled arm cannot stretch the MinMax range.
+    """
+    n = jnp.maximum(counts, 1.0)
+    mean_tau = tau_sum / n
+    mean_rho = rho_sum / n
+    pulled = counts > 0.0
+    denom = jnp.maximum(jnp.sum(pulled.astype(jnp.float32)), 1.0)
+    fill_tau = jnp.sum(jnp.where(pulled, mean_tau, 0.0)) / denom
+    fill_rho = jnp.sum(jnp.where(pulled, mean_rho, 0.0)) / denom
+    mean_tau = jnp.where(pulled, mean_tau, fill_tau)
+    mean_rho = jnp.where(pulled, mean_rho, fill_rho)
+    return (weighted_reward(mean_tau, mean_rho, alpha, beta),)
+
+
+def lasp_step(tau_sum, rho_sum, counts, t, alpha, beta, c):
+    """Fused per-iteration hot path (Alg. 1 lines 4-9).
+
+    Inputs: f32[K] running sums of execution time / power, f32[K] pull
+    counts, scalars t, alpha, beta, exploration coefficient c. Returns
+    (best_idx i32, best_score f32, rewards f32[K]).
+    """
+    (rewards,) = reward_norm(tau_sum, rho_sum, counts, alpha, beta)
+    idx, score = ucbk.ucb_select(rewards, counts, t, c)
+    return idx, score, rewards
+
+
+def ucb_scores_graph(rewards, counts, t, c):
+    """Eq. 2 scores for all arms (Pallas kernel), plus the Eq. 3 argmax."""
+    scores = ucbk.ucb_scores(rewards, counts, t, c)
+    idx = jnp.argmax(scores).astype(jnp.int32)
+    return scores, idx
+
+
+def ucb_episode(expected_rewards, counts0, t0, c, steps):
+    """Mean-field replay of a whole tuning episode as one lax.scan.
+
+    Treats each arm's reward as its (fixed) expectation — the deterministic
+    skeleton of Alg. 1, used for fig6/fig7 heatmaps and as an L2 fusion
+    showcase. Returns (final counts f32[K], trace i32[steps]).
+    """
+
+    def body(carry, _):
+        counts, t = carry
+        scores = ucbk.ucb_scores(expected_rewards, counts, t, c)
+        idx = jnp.argmax(scores).astype(jnp.int32)
+        counts = counts.at[idx].add(1.0)
+        return (counts, t + 1.0), idx
+
+    (counts, _), trace = jax.lax.scan(
+        body, (counts0, t0), None, length=steps
+    )
+    return counts, trace
+
+
+def _cg_solve(k_mat, b, iters):
+    """Batched conjugate gradient: solve `k_mat @ x = b` for SPD k_mat.
+
+    b: (N, M) right-hand sides. Pure HLO ops only — the obvious
+    `jax.scipy.linalg.cho_solve` lowers to a LAPACK typed-FFI custom call
+    that xla_extension 0.5.1 (behind the rust `xla` crate) cannot compile,
+    so the AOT path needs an iterative solve.
+    """
+
+    def body(carry, _):
+        x, r, p, rs = carry
+        kp = k_mat @ p
+        alpha = rs / jnp.maximum(jnp.sum(p * kp, axis=0), 1e-30)
+        x = x + p * alpha
+        r = r - kp * alpha
+        rs_new = jnp.sum(r * r, axis=0)
+        beta = rs_new / jnp.maximum(rs, 1e-30)
+        p = r + p * beta
+        return (x, r, p, rs_new), None
+
+    x0 = jnp.zeros_like(b)
+    r0 = b
+    (x, _, _, _), _ = jax.lax.scan(
+        body, (x0, r0, r0, jnp.sum(r0 * r0, axis=0)), None, length=iters
+    )
+    return x
+
+
+def gp_propose(x, y, mask, xs, lengthscale, noise, best):
+    """BLISS surrogate step: masked GP posterior at candidates + EI argmax.
+
+    x: f32[N, D] observed configs (padded), y: f32[N] observed rewards,
+    mask: f32[N] (1 = real row), xs: f32[M, D] candidate configs.
+    Returns (mean f32[M], var f32[M], ei f32[M], best_idx i32).
+
+    Masking decouples padded rows exactly: K' = M·K·M + (I − M) + σ²·M with
+    M = diag(mask), so padded coordinates reduce to the identity equation
+    and contribute nothing to the posterior.
+    """
+    n = x.shape[0]
+    k = gpk.rbf_matrix(x, x, lengthscale)
+    mm = mask[:, None] * mask[None, :]
+    k = k * mm + jnp.diag((1.0 - mask) + noise * mask)
+    ks = gpk.rbf_matrix(x, xs, lengthscale) * mask[:, None]  # (N, M)
+    rhs = jnp.concatenate([(y * mask)[:, None], ks], axis=1)
+    sol = _cg_solve(k, rhs, iters=2 * n)
+    alpha_v = sol[:, 0]
+    v = sol[:, 1:]
+    mean = ks.T @ alpha_v
+    var = jnp.maximum(1.0 - jnp.sum(ks * v, axis=0), 1e-12)
+    std = jnp.sqrt(var)
+    xi = 0.01
+    z = (mean - best - xi) / std
+    phi = jnp.exp(-0.5 * z * z) / jnp.sqrt(2.0 * jnp.pi)
+    cdf = 0.5 * (1.0 + jnp.tanh(0.7978845608028654 * (z + 0.044715 * z**3)))
+    ei = (mean - best - xi) * cdf + std * phi
+    best_idx = jnp.argmax(ei).astype(jnp.int32)
+    return mean, var, ei, best_idx
+
+
+# ---------------------------------------------------------------------------
+# jit wrappers with static episode length (for lowering + python-side tests)
+# ---------------------------------------------------------------------------
+
+lasp_step_jit = jax.jit(lasp_step)
+ucb_scores_jit = jax.jit(ucb_scores_graph)
+reward_norm_jit = jax.jit(reward_norm)
+gp_propose_jit = jax.jit(gp_propose)
+ucb_episode_jit = jax.jit(functools.partial(ucb_episode), static_argnames="steps")

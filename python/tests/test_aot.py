@@ -1,0 +1,69 @@
+"""AOT plumbing: the lowering plan is well-formed and HLO text round-trips."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, model
+
+jax.config.update("jax_platform_name", "cpu")
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+class TestPlan:
+    def test_plan_covers_all_apps(self):
+        plan = aot.build_plan()
+        names = {p["name"] for p in plan}
+        for app in ("lulesh", "kripke", "clomp", "hypre"):
+            assert f"lasp_step_{app}" in names
+            assert f"ucb_scores_{app}" in names
+            assert f"reward_norm_{app}" in names
+        assert "gp_propose" in names
+
+    def test_arm_counts_match_table2(self):
+        # Table II sizes: kripke 216, lulesh 128, clomp 125, hypre 92160.
+        assert aot.APP_SPACES == {
+            "lulesh": 128,
+            "kripke": 216,
+            "clomp": 125,
+            "hypre": 92160,
+        }
+
+    def test_plan_shapes_consistent(self):
+        for item in aot.build_plan():
+            assert len(item["specs"]) == len(item["inputs"])
+            for spec, desc in zip(item["specs"], item["inputs"]):
+                assert list(spec.shape) == desc["shape"]
+
+
+class TestHloText:
+    def test_small_artifact_lowering_smoke(self):
+        lowered = jax.jit(model.ucb_scores_graph).lower(
+            jax.ShapeDtypeStruct((125,), jnp.float32),
+            jax.ShapeDtypeStruct((125,), jnp.float32),
+            jax.ShapeDtypeStruct((), jnp.float32),
+            jax.ShapeDtypeStruct((), jnp.float32),
+        )
+        text = aot.to_hlo_text(lowered)
+        assert "HloModule" in text
+        assert "f32[125]" in text
+
+    @pytest.mark.skipif(
+        not os.path.exists(os.path.join(ART_DIR, "manifest.json")),
+        reason="artifacts not built (run `make artifacts`)",
+    )
+    def test_manifest_matches_files(self):
+        with open(os.path.join(ART_DIR, "manifest.json")) as f:
+            manifest = json.load(f)
+        assert manifest["format"] == "hlo-text"
+        assert manifest["return_tuple"] is True
+        for art in manifest["artifacts"]:
+            path = os.path.join(ART_DIR, art["file"])
+            assert os.path.exists(path), art["file"]
+            with open(path) as fh:
+                head = fh.read(4096)
+            assert "HloModule" in head

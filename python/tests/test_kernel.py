@@ -1,0 +1,184 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracles in ref.py.
+
+Hypothesis sweeps shapes, dtypes-adjacent ranges, and degenerate cases; each
+property is the kernel == oracle contract the rust runtime relies on.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import gp, ref, ucb
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rewards_counts(seed, k, max_count=20.0):
+    kr, kc = jax.random.split(jax.random.PRNGKey(seed))
+    r = jax.random.uniform(kr, (k,), dtype=jnp.float32)
+    n = jnp.floor(jax.random.uniform(kc, (k,), dtype=jnp.float32) * max_count)
+    return r, n
+
+
+# ---------------------------------------------------------------------------
+# ucb_scores kernel
+# ---------------------------------------------------------------------------
+
+
+class TestUcbScores:
+    @pytest.mark.parametrize("k", [1, 7, 8, 120, 125, 128, 216, 1023, 1024, 1025, 4096])
+    def test_matches_ref_across_sizes(self, k):
+        r, n = _rewards_counts(k, k)
+        t = jnp.float32(17.0)
+        np.testing.assert_allclose(
+            ucb.ucb_scores(r, n, t), ref.ucb_scores(r, n, t), rtol=1e-6
+        )
+
+    def test_hypre_size(self):
+        r, n = _rewards_counts(0, 92160)
+        t = jnp.float32(501.0)
+        np.testing.assert_allclose(
+            ucb.ucb_scores(r, n, t), ref.ucb_scores(r, n, t), rtol=1e-6
+        )
+
+    def test_unpulled_arm_scores_big(self):
+        r = jnp.array([0.5, 0.9, 0.1], jnp.float32)
+        n = jnp.array([3.0, 0.0, 1.0], jnp.float32)
+        s = ucb.ucb_scores(r, n, jnp.float32(5.0))
+        assert float(s[1]) == ucb.UNPULLED_SCORE
+        assert float(s[0]) < ucb.UNPULLED_SCORE
+
+    def test_t_equals_one_gives_zero_bonus(self):
+        # ln 1 = 0: score must equal the raw reward for pulled arms.
+        r = jnp.array([0.25, 0.75], jnp.float32)
+        n = jnp.array([1.0, 2.0], jnp.float32)
+        s = ucb.ucb_scores(r, n, jnp.float32(1.0))
+        np.testing.assert_allclose(s, r, atol=1e-7)
+
+    def test_t_below_one_clamped(self):
+        # t = 0 would be log(0); kernel clamps to t >= 1.
+        r = jnp.array([0.3], jnp.float32)
+        n = jnp.array([2.0], jnp.float32)
+        s = ucb.ucb_scores(r, n, jnp.float32(0.0))
+        np.testing.assert_allclose(s, r, atol=1e-7)
+
+    def test_bonus_decreases_with_count(self):
+        r = jnp.zeros((4,), jnp.float32)
+        n = jnp.array([1.0, 2.0, 4.0, 8.0], jnp.float32)
+        s = np.asarray(ucb.ucb_scores(r, n, jnp.float32(100.0)))
+        assert (np.diff(s) < 0).all()
+
+    @settings(max_examples=30, deadline=None)
+    @given(
+        k=st.integers(1, 300),
+        t=st.floats(1.0, 1e6),
+        seed=st.integers(0, 2**31 - 1),
+        tile=st.sampled_from([8, 32, 128, 1024]),
+    )
+    def test_property_matches_ref(self, k, t, seed, tile):
+        r, n = _rewards_counts(seed, k)
+        tt = jnp.float32(t)
+        np.testing.assert_allclose(
+            ucb.ucb_scores(r, n, tt, tile=tile),
+            ref.ucb_scores(r, n, tt),
+            rtol=1e-5,
+        )
+
+
+# ---------------------------------------------------------------------------
+# ucb_select kernel (per-tile max/argmax reduction)
+# ---------------------------------------------------------------------------
+
+
+class TestUcbSelect:
+    @pytest.mark.parametrize("k", [1, 5, 128, 216, 1024, 5000])
+    def test_matches_ref(self, k):
+        r, n = _rewards_counts(k + 1, k)
+        t = jnp.float32(42.0)
+        ik, sk = ucb.ucb_select(r, n, t)
+        ir, sr = ref.ucb_select(r, n, t)
+        assert int(ik) == int(ir)
+        np.testing.assert_allclose(float(sk), float(sr), rtol=1e-6)
+
+    def test_prefers_unpulled_arm(self):
+        r = jnp.array([0.99, 0.01, 0.5], jnp.float32)
+        n = jnp.array([10.0, 0.0, 10.0], jnp.float32)
+        idx, _ = ucb.ucb_select(r, n, jnp.float32(100.0))
+        assert int(idx) == 1
+
+    def test_padding_never_wins(self):
+        # k = 9 with tile 8 pads 7 lanes; none may be selected.
+        r = jnp.full((9,), -5.0, jnp.float32)
+        n = jnp.ones((9,), jnp.float32)
+        idx, _ = ucb.ucb_select(r, n, jnp.float32(2.0), tile=8)
+        assert 0 <= int(idx) < 9
+
+    @settings(max_examples=30, deadline=None)
+    @given(
+        k=st.integers(2, 400),
+        t=st.floats(1.0, 1e5),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_property_select_is_argmax(self, k, t, seed):
+        r, n = _rewards_counts(seed, k)
+        tt = jnp.float32(t)
+        idx, score = ucb.ucb_select(r, n, tt)
+        scores = ref.ucb_scores(r, n, tt)
+        np.testing.assert_allclose(float(score), float(jnp.max(scores)), rtol=1e-5)
+        np.testing.assert_allclose(
+            float(scores[int(idx)]), float(jnp.max(scores)), rtol=1e-5
+        )
+
+
+# ---------------------------------------------------------------------------
+# RBF kernel matrix (BLISS GP surrogate)
+# ---------------------------------------------------------------------------
+
+
+class TestRbfMatrix:
+    @pytest.mark.parametrize(
+        "n,m,d", [(1, 1, 1), (8, 8, 4), (40, 70, 12), (128, 128, 12), (130, 200, 3)]
+    )
+    def test_matches_ref(self, n, m, d):
+        kx, ky = jax.random.split(jax.random.PRNGKey(n * 1000 + m))
+        x = jax.random.normal(kx, (n, d), jnp.float32)
+        y = jax.random.normal(ky, (m, d), jnp.float32)
+        got = gp.rbf_matrix(x, y, jnp.float32(1.3))
+        want = ref.rbf_matrix(x, y, jnp.float32(1.3))
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+    def test_diagonal_is_one(self):
+        x = jax.random.normal(jax.random.PRNGKey(0), (16, 5), jnp.float32)
+        k = gp.rbf_matrix(x, x, jnp.float32(0.7))
+        np.testing.assert_allclose(jnp.diag(k), jnp.ones(16), atol=1e-5)
+
+    def test_symmetry(self):
+        x = jax.random.normal(jax.random.PRNGKey(1), (33, 6), jnp.float32)
+        k = np.asarray(gp.rbf_matrix(x, x, jnp.float32(2.0)))
+        np.testing.assert_allclose(k, k.T, atol=1e-5)
+
+    def test_values_in_unit_interval(self):
+        x = 10.0 * jax.random.normal(jax.random.PRNGKey(2), (20, 4), jnp.float32)
+        k = np.asarray(gp.rbf_matrix(x, x, jnp.float32(0.5)))
+        assert (k >= 0.0).all() and (k <= 1.0 + 1e-6).all()
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        n=st.integers(1, 60),
+        m=st.integers(1, 60),
+        d=st.integers(1, 16),
+        ls=st.floats(0.1, 10.0),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_property_matches_ref(self, n, m, d, ls, seed):
+        kx, ky = jax.random.split(jax.random.PRNGKey(seed))
+        x = jax.random.normal(kx, (n, d), jnp.float32)
+        y = jax.random.normal(ky, (m, d), jnp.float32)
+        np.testing.assert_allclose(
+            gp.rbf_matrix(x, y, jnp.float32(ls)),
+            ref.rbf_matrix(x, y, jnp.float32(ls)),
+            rtol=1e-4,
+            atol=1e-5,
+        )

@@ -1,0 +1,197 @@
+"""L2 correctness: the lowered compute graphs implement the paper's math."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _sums(seed, k):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    counts = jnp.floor(jax.random.uniform(k3, (k,)) * 6)
+    tau_sum = jax.random.uniform(k1, (k,), minval=0.5, maxval=5.0) * counts
+    rho_sum = jax.random.uniform(k2, (k,), minval=1.0, maxval=10.0) * counts
+    return tau_sum, rho_sum, counts
+
+
+class TestRewardNorm:
+    def test_rewards_in_unit_interval(self):
+        tau_sum, rho_sum, counts = _sums(0, 64)
+        (r,) = model.reward_norm_jit(
+            tau_sum, rho_sum, counts, jnp.float32(0.8), jnp.float32(0.2)
+        )
+        r = np.asarray(r)
+        assert (r >= 0.0).all() and (r <= 1.0 + 1e-6).all()
+
+    def test_fastest_arm_gets_best_reward_time_focus(self):
+        # alpha = 1: reward is monotone decreasing in mean execution time.
+        counts = jnp.ones((8,), jnp.float32)
+        tau_sum = jnp.arange(1, 9, dtype=jnp.float32)
+        rho_sum = jnp.ones((8,), jnp.float32)
+        (r,) = model.reward_norm_jit(
+            tau_sum, rho_sum, counts, jnp.float32(1.0), jnp.float32(0.0)
+        )
+        r = np.asarray(r)
+        assert r.argmax() == 0
+        assert (np.diff(r) <= 1e-6).all()
+
+    def test_power_focus_flips_ranking(self):
+        counts = jnp.ones((4,), jnp.float32)
+        tau_sum = jnp.array([1.0, 2.0, 3.0, 4.0], jnp.float32)
+        rho_sum = jnp.array([4.0, 3.0, 2.0, 1.0], jnp.float32)
+        (rt,) = model.reward_norm_jit(
+            tau_sum, rho_sum, counts, jnp.float32(1.0), jnp.float32(0.0)
+        )
+        (rp,) = model.reward_norm_jit(
+            tau_sum, rho_sum, counts, jnp.float32(0.0), jnp.float32(1.0)
+        )
+        assert np.asarray(rt).argmax() == 0
+        assert np.asarray(rp).argmax() == 3
+
+    def test_unpulled_arms_neutral(self):
+        # An unpulled arm must not stretch the MinMax range.
+        counts = jnp.array([2.0, 2.0, 0.0], jnp.float32)
+        tau_sum = jnp.array([2.0, 6.0, 0.0], jnp.float32)
+        rho_sum = jnp.array([4.0, 4.0, 0.0], jnp.float32)
+        (r,) = model.reward_norm_jit(
+            tau_sum, rho_sum, counts, jnp.float32(1.0), jnp.float32(0.0)
+        )
+        r = np.asarray(r)
+        assert r[0] == pytest.approx(1.0, abs=1e-5)  # fastest pulled arm
+        assert r[2] == pytest.approx(r[1:3].mean(), abs=0.5)  # mid-range-ish
+        assert 0.0 <= r[2] <= 1.0
+
+    def test_matches_ref_weighted_reward(self):
+        counts = jnp.full((32,), 3.0, jnp.float32)
+        tau_sum, rho_sum, _ = _sums(7, 32)
+        (got,) = model.reward_norm_jit(
+            tau_sum, rho_sum, counts, jnp.float32(0.6), jnp.float32(0.4)
+        )
+        want = ref.weighted_reward(
+            tau_sum / 3.0, rho_sum / 3.0, jnp.float32(0.6), jnp.float32(0.4)
+        )
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+class TestLaspStep:
+    def test_selects_unpulled_first(self):
+        k = 16
+        tau_sum = jnp.zeros((k,), jnp.float32).at[: k - 1].set(1.0)
+        rho_sum = tau_sum
+        counts = jnp.zeros((k,), jnp.float32).at[: k - 1].set(1.0)
+        idx, score, _ = model.lasp_step_jit(
+            tau_sum, rho_sum, counts, jnp.float32(16.0), jnp.float32(0.8),
+            jnp.float32(0.2), jnp.float32(1.0),
+        )
+        assert int(idx) == k - 1
+
+    def test_converges_to_best_arm_when_exploited(self):
+        # After heavy sampling, argmax should be the arm with the best reward.
+        k = 8
+        counts = jnp.full((k,), 1000.0, jnp.float32)
+        tau = jnp.array([5.0, 4.0, 3.0, 2.0, 1.0, 6.0, 7.0, 8.0], jnp.float32)
+        idx, _, rewards = model.lasp_step_jit(
+            tau * counts, jnp.ones((k,)) * counts, counts,
+            jnp.float32(8000.0), jnp.float32(1.0), jnp.float32(0.0), jnp.float32(1.0),
+        )
+        assert int(idx) == 4
+        assert np.asarray(rewards).argmax() == 4
+
+    @settings(max_examples=15, deadline=None)
+    @given(k=st.integers(2, 200), seed=st.integers(0, 2**31 - 1))
+    def test_property_idx_in_range_and_rewards_bounded(self, k, seed):
+        tau_sum, rho_sum, counts = _sums(seed, k)
+        idx, score, rewards = model.lasp_step_jit(
+            tau_sum, rho_sum, counts,
+            jnp.float32(counts.sum() + 1.0), jnp.float32(0.5), jnp.float32(0.5),
+            jnp.float32(1.0),
+        )
+        assert 0 <= int(idx) < k
+        r = np.asarray(rewards)
+        assert (r >= -1e-6).all() and (r <= 1.0 + 1e-6).all()
+
+
+class TestUcbEpisode:
+    def test_matches_ref_replay(self):
+        k = 12
+        r = jax.random.uniform(jax.random.PRNGKey(0), (k,))
+        c0 = jnp.zeros((k,), jnp.float32)
+        counts, trace = model.ucb_episode_jit(r, c0, jnp.float32(1.0), jnp.float32(1.0), steps=60)
+        counts_ref, trace_ref = ref.ucb_episode(r, 1.0, c0, 60)
+        np.testing.assert_array_equal(np.asarray(trace), np.asarray(trace_ref))
+        np.testing.assert_allclose(counts, counts_ref)
+
+    def test_plays_each_arm_then_concentrates(self):
+        k = 6
+        r = jnp.array([0.1, 0.2, 0.95, 0.3, 0.4, 0.5], jnp.float32)
+        counts, trace = model.ucb_episode_jit(
+            r, jnp.zeros((k,)), jnp.float32(1.0), jnp.float32(1.0), steps=300
+        )
+        counts = np.asarray(counts)
+        assert (counts >= 1).all()  # every arm tried
+        assert counts.argmax() == 2  # best arm dominates
+        assert counts[2] > 0.5 * 300
+
+    def test_total_count_equals_steps(self):
+        k = 9
+        r = jax.random.uniform(jax.random.PRNGKey(3), (k,))
+        counts, _ = model.ucb_episode_jit(
+            r, jnp.zeros((k,)), jnp.float32(1.0), jnp.float32(1.0), steps=120
+        )
+        assert float(counts.sum()) == 120.0
+
+
+class TestGpPropose:
+    def test_posterior_matches_ref(self):
+        N, M, D = 24, 40, 6
+        x = jax.random.normal(jax.random.PRNGKey(1), (N, D))
+        y = jax.random.uniform(jax.random.PRNGKey(2), (N,))
+        mask = jnp.where(jnp.arange(N) < 15, 1.0, 0.0)
+        xs = jax.random.normal(jax.random.PRNGKey(3), (M, D))
+        mean, var, ei, bi = model.gp_propose_jit(
+            x, y, mask, xs, jnp.float32(1.0), jnp.float32(1e-3), jnp.float32(0.5)
+        )
+        mr, vr = ref.gp_posterior(x, y, mask, xs, jnp.float32(1.0), jnp.float32(1e-3))
+        np.testing.assert_allclose(mean, mr, rtol=1e-3, atol=1e-4)
+        np.testing.assert_allclose(var, vr, rtol=1e-3, atol=1e-4)
+        assert 0 <= int(bi) < M
+
+    def test_interpolates_training_points(self):
+        # Posterior mean at an observed point ~ its observed value.
+        N, D = 10, 3
+        x = jax.random.normal(jax.random.PRNGKey(4), (N, D))
+        y = jax.random.uniform(jax.random.PRNGKey(5), (N,))
+        mask = jnp.ones((N,))
+        mean, var, _, _ = model.gp_propose_jit(
+            x, y, mask, x, jnp.float32(1.0), jnp.float32(1e-4), jnp.float32(0.0)
+        )
+        np.testing.assert_allclose(mean, y, atol=1e-2)
+        assert (np.asarray(var) < 1e-2).all()
+
+    def test_variance_high_far_from_data(self):
+        N, D = 8, 2
+        x = jax.random.normal(jax.random.PRNGKey(6), (N, D)) * 0.1
+        y = jnp.ones((N,)) * 0.5
+        mask = jnp.ones((N,))
+        far = jnp.full((4, D), 50.0, jnp.float32)
+        _, var, _, _ = model.gp_propose_jit(
+            x, y, mask, far, jnp.float32(1.0), jnp.float32(1e-4), jnp.float32(0.5)
+        )
+        np.testing.assert_allclose(var, 1.0, atol=1e-3)
+
+    def test_ei_nonnegative(self):
+        N, M, D = 16, 30, 4
+        x = jax.random.normal(jax.random.PRNGKey(7), (N, D))
+        y = jax.random.uniform(jax.random.PRNGKey(8), (N,))
+        mask = jnp.ones((N,))
+        xs = jax.random.normal(jax.random.PRNGKey(9), (M, D))
+        _, _, ei, _ = model.gp_propose_jit(
+            x, y, mask, xs, jnp.float32(1.5), jnp.float32(1e-3), jnp.float32(float(y.max()))
+        )
+        assert (np.asarray(ei) >= -1e-4).all()

@@ -1,0 +1,223 @@
+//! Kripke performance model (Table II: Layout ∈ 6 nestings, Gset ∈
+//! {1,2,3,8,16,32}, Dset ∈ {8,16,32,48,64,96}; defaults DGZ/1/8; 216 configs).
+//!
+//! Kripke is an Sn transport sweep; its performance story (Kunen et al.,
+//! LLNL-TR-2015) is dominated by how the (Direction, Group, Zone) loop
+//! nesting — the `Layout` — matches the blocking induced by the number of
+//! group sets and direction sets:
+//!
+//! * `Gset`/`Dset` split the 32 energy groups / 96 directions into sets; the
+//!   inner kernel operates on one (groups-per-set × dirs-per-set × zones)
+//!   block. Small blocks → loop/sweep scheduling overhead; large blocks →
+//!   the block spills L2 and the innermost stride pattern starts to matter.
+//! * Each `Layout` nests the three loops differently. A layout is fast when
+//!   its innermost axis is the *longest* axis of the block (long unit-stride
+//!   runs) and slow when the innermost axis is short (strided access
+//!   dominates). That makes the best layout a function of Gset × Dset — the
+//!   Fig 4 observation that layout is the highest-impact parameter, and the
+//!   interaction Fig 3(a) shows.
+
+use super::{fidelity_scale, micro_jitter, AppKind, AppModel, Workload};
+use crate::space::{ParamDef, ParamSpace};
+
+/// See module docs.
+pub struct Kripke {
+    space: ParamSpace,
+}
+
+const APP_TAG: u64 = 0x4B52_4950_4B45; // "KRIPKE"
+const TOTAL_GROUPS: f64 = 32.0;
+const TOTAL_DIRS: f64 = 96.0;
+/// Zones per sweep subdomain at full fidelity (64³ in the paper's HF runs).
+const TOTAL_ZONES: f64 = 64.0 * 64.0 * 64.0;
+
+const LAYOUTS: [&str; 6] = ["DGZ", "DZG", "GDZ", "GZD", "ZDG", "ZGD"];
+
+impl Kripke {
+    pub fn new() -> Self {
+        let space = ParamSpace::new(
+            "kripke",
+            vec![
+                ParamDef::tags("layout", &LAYOUTS, "DGZ")
+                    .describe("data layout and kernel implementation details"),
+                ParamDef::ints("gset", &[1, 2, 3, 8, 16, 32], 1)
+                    .describe("number of energy group sets"),
+                ParamDef::ints("dset", &[8, 16, 32, 48, 64, 96], 8)
+                    .describe("number of direction sets"),
+            ],
+        );
+        Kripke { space }
+    }
+
+    /// Stride efficiency of `layout` for a (g × d × z) block: innermost axis
+    /// length relative to the longest block axis, squashed into a penalty.
+    fn layout_penalty(layout: &str, g: f64, d: f64, z: f64) -> f64 {
+        // The trailing letter of the nesting is the innermost (unit-stride)
+        // axis; the leading letter the outermost.
+        let axis_len = |c: u8| match c {
+            b'D' => d,
+            b'G' => g,
+            b'Z' => z,
+            _ => unreachable!(),
+        };
+        let inner = axis_len(layout.as_bytes()[2]);
+        let middle = axis_len(layout.as_bytes()[1]);
+        let longest = g.max(d).max(z);
+        // Short unit-stride runs cost dearly; a long middle axis helps a bit
+        // (hardware prefetch across lines).
+        let inner_ratio = (inner / longest).clamp(1e-3, 1.0);
+        let penalty = 1.0 + 0.55 * (1.0 - inner_ratio).powf(1.5)
+            + 0.08 * (1.0 - (middle / longest).clamp(0.0, 1.0));
+        penalty
+    }
+}
+
+impl Default for Kripke {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl AppModel for Kripke {
+    fn kind(&self) -> AppKind {
+        AppKind::Kripke
+    }
+
+    fn space(&self) -> &ParamSpace {
+        &self.space
+    }
+
+    fn workload(&self, index: usize, fidelity: f64) -> Workload {
+        let cfg = self.space.decode(index);
+        let layout = cfg.values[0].as_tag().to_string();
+        let gsets = cfg.values[1].as_int() as f64;
+        let dsets = cfg.values[2].as_int() as f64;
+
+        // Block dims: groups-per-set × dirs-per-set × zones-per-tile.
+        let g = TOTAL_GROUPS / gsets;
+        let d = TOTAL_DIRS / dsets;
+        // Fidelity scales the zone count (paper: zone size 32³ vs 64³).
+        let zones = TOTAL_ZONES * fidelity_scale(fidelity, 0.08);
+        let z_tile = 512.0; // zones per cache tile, layout-independent
+
+        // Granularity: number of (gset × dset) sweep tasks; more tasks →
+        // more sweep-scheduling overhead but better pipelining up to a point.
+        let tasks = gsets * dsets;
+        let sched = 1.0 + 0.012 * tasks + 0.35 / tasks;
+
+        // Cache behaviour: block working set (g*d*z_tile values).
+        let block = g * d * z_tile;
+        let l2 = 64.0 * 1024.0; // values that fit "L2" in the model
+        let spill = if block > l2 { 1.0 + 0.25 * ((block / l2).ln()) } else { 1.0 };
+
+        let stride = Self::layout_penalty(&layout, g, d, z_tile);
+        let jitter = 1.0 + 0.02 * micro_jitter(APP_TAG, index);
+
+        // Total angular work is gsets·dsets·(g·d)·zones = G·D·zones: fixed;
+        // the knobs only move efficiency.
+        let work_units = TOTAL_GROUPS * TOTAL_DIRS * zones / 1e8;
+        let compute = 0.9 * work_units * stride * sched * spill * jitter;
+
+        Workload {
+            compute,
+            // DRAM traffic dominates the power story for the sweep: spilled
+            // blocks stream from memory every pass, strided layouts waste
+            // bandwidth on partial lines. The Table II default (gset=1,
+            // dset=8) has the *largest* block and therefore the heaviest
+            // traffic — the power-focused tuner has real headroom (paper
+            // Fig 8 reports ~6% for Kripke).
+            mem_intensity: (0.35 + 0.28 * (1.0 - 1.0 / stride) + 1.0 * (spill - 1.0))
+                .min(0.95),
+            // Every configuration has ≥ 8 sweep tasks on 4 cores: core-side
+            // parallelism is saturated and flat across the space.
+            parallel_frac: 0.90,
+            overhead: 0.008 + 0.0015 * tasks,
+        }
+        .sanitized()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats;
+
+    fn all_times(q: f64) -> Vec<f64> {
+        let app = Kripke::new();
+        app.space()
+            .indices()
+            .map(|i| {
+                let w = app.workload(i, q);
+                w.compute + w.overhead
+            })
+            .collect()
+    }
+
+    #[test]
+    fn space_matches_table2() {
+        let app = Kripke::new();
+        assert_eq!(app.space().len(), 216);
+        let d = app.space().decode(app.default_index());
+        assert_eq!(d.values[0].as_tag(), "DGZ");
+        assert_eq!(d.values[1].as_int(), 1);
+        assert_eq!(d.values[2].as_int(), 8);
+    }
+
+    #[test]
+    fn layout_is_high_impact() {
+        // Fig 4: varying layout alone (others default) moves runtime a lot.
+        let app = Kripke::new();
+        let mut ts = vec![];
+        for l in 0..6 {
+            let idx = app.space().encode_positions(&[l, 0, 0]);
+            ts.push(app.workload(idx, 1.0).compute);
+        }
+        let spread = ts.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+            / ts.iter().cloned().fold(f64::INFINITY, f64::min);
+        assert!(spread > 1.15, "layout spread only {spread}");
+    }
+
+    #[test]
+    fn best_layout_depends_on_sets() {
+        let app = Kripke::new();
+        let best_layout = |gpos: usize, dpos: usize| {
+            (0..6)
+                .min_by(|&a, &b| {
+                    let ia = app.space().encode_positions(&[a, gpos, dpos]);
+                    let ib = app.space().encode_positions(&[b, gpos, dpos]);
+                    app.workload(ia, 1.0)
+                        .compute
+                        .total_cmp(&app.workload(ib, 1.0).compute)
+                })
+                .unwrap()
+        };
+        // Many group sets (small g) vs many direction sets (small d) should
+        // favour different nestings.
+        assert_ne!(best_layout(5, 0), best_layout(0, 5));
+    }
+
+    #[test]
+    fn long_tail_distribution() {
+        // Fig 3(b): most configurations deviate significantly from best.
+        let t = all_times(1.0);
+        let best = t.iter().cloned().fold(f64::INFINITY, f64::min);
+        let within_10pct = t.iter().filter(|&&x| x <= best * 1.10).count();
+        assert!(within_10pct <= t.len() / 6, "{within_10pct} within 10%");
+    }
+
+    #[test]
+    fn lf_hf_top20_overlap() {
+        let lf = all_times(0.15);
+        let hf = all_times(1.0);
+        let a: std::collections::HashSet<_> = stats::bottom_k(&lf, 20).into_iter().collect();
+        let b: std::collections::HashSet<_> = stats::bottom_k(&hf, 20).into_iter().collect();
+        let common = a.intersection(&b).count();
+        assert!(common >= 8, "overlap {common}");
+    }
+
+    #[test]
+    fn more_fidelity_more_work() {
+        let app = Kripke::new();
+        assert!(app.workload(0, 1.0).compute > 3.0 * app.workload(0, 0.1).compute);
+    }
+}

@@ -1,0 +1,245 @@
+//! Simulated HPC applications (paper Table II).
+//!
+//! The paper runs four LLNL proxy/benchmark apps on real hardware; we do not
+//! have that testbed, so each app is an **analytic performance model** over
+//! exactly the Table II parameter space (see DESIGN.md §Simulator design for
+//! the substitution argument). Each model maps
+//! `(configuration index, fidelity q)` to an abstract [`Workload`]; the
+//! [`crate::device`] layer turns a workload into measured execution time and
+//! power for a concrete device, adding run-to-run noise.
+//!
+//! The models are deterministic and cheap (an exhaustive oracle sweep over
+//! Hypre's 92,160 arms is a few ms), and are constructed to exhibit the
+//! properties the paper's experiments rely on:
+//!
+//! 1. a unique oracle with most configurations far from it (Fig 3b);
+//! 2. strong parameter interactions (Fig 3a, Fig 4);
+//! 3. fidelity-dependent *mild* rank perturbation: compute terms scale with
+//!    `q`, per-configuration overhead terms do not, so the LF and HF
+//!    rankings overlap heavily but not exactly (Fig 2);
+//! 4. power varies much less than time (paper §V-D's observation that the
+//!    edge device saturates power under HPC load).
+
+mod clomp;
+mod hypre;
+mod kripke;
+mod lulesh;
+
+pub use clomp::Clomp;
+pub use hypre::Hypre;
+pub use kripke::Kripke;
+pub use lulesh::Lulesh;
+
+use crate::space::ParamSpace;
+
+/// The four applications evaluated in the paper.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum AppKind {
+    Lulesh,
+    Kripke,
+    Clomp,
+    Hypre,
+}
+
+impl AppKind {
+    /// All apps, in the paper's order.
+    pub fn all() -> [AppKind; 4] {
+        [AppKind::Lulesh, AppKind::Kripke, AppKind::Clomp, AppKind::Hypre]
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            AppKind::Lulesh => "lulesh",
+            AppKind::Kripke => "kripke",
+            AppKind::Clomp => "clomp",
+            AppKind::Hypre => "hypre",
+        }
+    }
+}
+
+impl std::str::FromStr for AppKind {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "lulesh" => Ok(AppKind::Lulesh),
+            "kripke" => Ok(AppKind::Kripke),
+            "clomp" => Ok(AppKind::Clomp),
+            "hypre" => Ok(AppKind::Hypre),
+            other => Err(anyhow::anyhow!("unknown application '{other}'")),
+        }
+    }
+}
+
+impl std::fmt::Display for AppKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Abstract work produced by running one configuration at one fidelity.
+/// The device model turns this into (time, power).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Workload {
+    /// Compute work in *reference core-seconds*: seconds on one reference
+    /// core (1 GHz, IPC 1) with no memory stalls.
+    pub compute: f64,
+    /// Memory-boundedness in `[0, 1]`: 0 = pure compute, 1 = pure streaming.
+    pub mem_intensity: f64,
+    /// Amdahl parallel fraction in `[0, 1]`.
+    pub parallel_frac: f64,
+    /// Serial per-run overhead (scheduling/setup) in reference core-seconds;
+    /// does *not* scale with fidelity.
+    pub overhead: f64,
+}
+
+impl Workload {
+    /// Clamp all fields into their documented domains.
+    pub fn sanitized(mut self) -> Self {
+        self.compute = self.compute.max(1e-9);
+        self.mem_intensity = self.mem_intensity.clamp(0.0, 1.0);
+        self.parallel_frac = self.parallel_frac.clamp(0.0, 1.0);
+        self.overhead = self.overhead.max(0.0);
+        self
+    }
+}
+
+/// A simulated HPC application: a Table II parameter space plus the analytic
+/// performance model over it.
+pub trait AppModel: Send + Sync {
+    /// Application kind tag.
+    fn kind(&self) -> AppKind;
+
+    /// The Table II parameter space.
+    fn space(&self) -> &ParamSpace;
+
+    /// Evaluate the model: configuration `index` at fidelity `q ∈ [0, 1]`
+    /// (paper §II-C: `q_min` = cheapest edge run, `q_max` = 1 = the HPC
+    /// production problem size).
+    fn workload(&self, index: usize, fidelity: f64) -> Workload;
+
+    /// Application name.
+    fn name(&self) -> &'static str {
+        self.kind().name()
+    }
+
+    /// Dense index of the all-defaults configuration.
+    fn default_index(&self) -> usize {
+        self.space().default_index()
+    }
+}
+
+/// Construct the simulator for `kind`.
+pub fn build(kind: AppKind) -> Box<dyn AppModel> {
+    match kind {
+        AppKind::Lulesh => Box::new(Lulesh::new()),
+        AppKind::Kripke => Box::new(Kripke::new()),
+        AppKind::Clomp => Box::new(Clomp::new()),
+        AppKind::Hypre => Box::new(Hypre::new()),
+    }
+}
+
+/// Deterministic per-configuration micro-structure in `[-1, 1]`.
+///
+/// Real runtime surfaces are rugged: configurations that are neighbours in
+/// parameter space still differ by small idiosyncratic amounts (alignment,
+/// allocator behaviour, instruction scheduling). A hash of the index gives
+/// every configuration a fixed, reproducible residual.
+pub(crate) fn micro_jitter(app_tag: u64, index: usize) -> f64 {
+    let mut z = (index as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ app_tag;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^= z >> 31;
+    (z >> 11) as f64 / (1u64 << 53) as f64 * 2.0 - 1.0
+}
+
+/// Fidelity scale for compute work: linear interpolation between the LF
+/// floor and 1.0 (paper §II-C assumes evaluation cost linear in `q`).
+pub(crate) fn fidelity_scale(q: f64, lf_floor: f64) -> f64 {
+    let q = q.clamp(0.0, 1.0);
+    lf_floor + (1.0 - lf_floor) * q
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_space_sizes() {
+        // Table II: kripke 216, lulesh 128, clomp 125, hypre 92160.
+        assert_eq!(build(AppKind::Kripke).space().len(), 216);
+        assert_eq!(build(AppKind::Lulesh).space().len(), 128);
+        assert_eq!(build(AppKind::Clomp).space().len(), 125);
+        assert_eq!(build(AppKind::Hypre).space().len(), 92_160);
+    }
+
+    #[test]
+    fn workloads_sane_everywhere_small_apps() {
+        for kind in [AppKind::Lulesh, AppKind::Kripke, AppKind::Clomp] {
+            let app = build(kind);
+            for i in app.space().indices() {
+                for q in [0.0, 0.3, 1.0] {
+                    let w = app.workload(i, q);
+                    assert!(w.compute > 0.0, "{kind} #{i} q={q}");
+                    assert!((0.0..=1.0).contains(&w.mem_intensity));
+                    assert!((0.0..=1.0).contains(&w.parallel_frac));
+                    assert!(w.overhead >= 0.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn workloads_sane_sampled_hypre() {
+        let app = build(AppKind::Hypre);
+        for i in (0..app.space().len()).step_by(97) {
+            let w = app.workload(i, 0.5);
+            assert!(w.compute > 0.0 && w.compute.is_finite());
+            assert!((0.0..=1.0).contains(&w.mem_intensity));
+        }
+    }
+
+    #[test]
+    fn fidelity_increases_compute() {
+        for kind in AppKind::all() {
+            let app = build(kind);
+            let idx = app.default_index();
+            let lo = app.workload(idx, 0.1).compute;
+            let hi = app.workload(idx, 1.0).compute;
+            assert!(hi > lo * 1.5, "{kind}: {lo} !<< {hi}");
+        }
+    }
+
+    #[test]
+    fn overhead_fidelity_invariant() {
+        // Overhead must not scale with q — that's what perturbs LF ranking.
+        for kind in AppKind::all() {
+            let app = build(kind);
+            let idx = app.default_index();
+            let lo = app.workload(idx, 0.1).overhead;
+            let hi = app.workload(idx, 1.0).overhead;
+            assert!((lo - hi).abs() < 1e-12, "{kind}");
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let app = build(AppKind::Kripke);
+        assert_eq!(app.workload(17, 0.4), app.workload(17, 0.4));
+    }
+
+    #[test]
+    fn micro_jitter_bounded_and_stable() {
+        for i in 0..1000 {
+            let j = micro_jitter(7, i);
+            assert!((-1.0..=1.0).contains(&j));
+            assert_eq!(j, micro_jitter(7, i));
+        }
+    }
+
+    #[test]
+    fn fidelity_scale_monotone() {
+        assert!(fidelity_scale(0.0, 0.05) < fidelity_scale(0.5, 0.05));
+        assert!(fidelity_scale(0.5, 0.05) < fidelity_scale(1.0, 0.05));
+        assert!((fidelity_scale(1.0, 0.05) - 1.0).abs() < 1e-12);
+    }
+}

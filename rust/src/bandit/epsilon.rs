@@ -1,0 +1,105 @@
+//! ε-greedy ablation policy.
+//!
+//! The simplest explore/exploit baseline: with probability ε pick a random
+//! arm, otherwise exploit the best current weighted reward. Used by the
+//! ablation benches to quantify what UCB's confidence bonus buys LASP.
+
+use super::reward::{weighted_rewards, RewardState};
+use super::Policy;
+use crate::util::{stats, Rng};
+
+/// ε-greedy over the paper's Eq. 5 reward.
+pub struct EpsilonGreedy {
+    state: RewardState,
+    alpha: f64,
+    beta: f64,
+    epsilon: f64,
+    rng: Rng,
+}
+
+impl EpsilonGreedy {
+    pub fn new(k: usize, alpha: f64, beta: f64, epsilon: f64, seed: u64) -> Self {
+        assert!((0.0..=1.0).contains(&epsilon));
+        EpsilonGreedy {
+            state: RewardState::new(k),
+            alpha,
+            beta,
+            epsilon,
+            rng: Rng::new(seed),
+        }
+    }
+}
+
+impl Policy for EpsilonGreedy {
+    fn k(&self) -> usize {
+        self.state.k()
+    }
+
+    fn select(&mut self) -> usize {
+        // Unpulled arms first (same initialization as UCB1).
+        if let Some(arm) = self.state.counts.iter().position(|&c| c == 0.0) {
+            return arm;
+        }
+        if self.rng.uniform() < self.epsilon {
+            return self.rng.below(self.k());
+        }
+        let (mt, mr) = self.state.filled_means();
+        let rewards = weighted_rewards(&mt, &mr, self.alpha, self.beta);
+        stats::argmax(&rewards)
+    }
+
+    fn update(&mut self, arm: usize, time_s: f64, power_w: f64) {
+        self.state.observe(arm, time_s, power_w);
+    }
+
+    fn counts(&self) -> &[f64] {
+        &self.state.counts
+    }
+
+    fn name(&self) -> &'static str {
+        "epsilon-greedy"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn initial_sweep_covers_all_arms() {
+        let k = 6;
+        let mut p = EpsilonGreedy::new(k, 1.0, 0.0, 0.2, 3);
+        for expected in 0..k {
+            let arm = p.select();
+            assert_eq!(arm, expected);
+            p.update(arm, 1.0, 1.0);
+        }
+    }
+
+    #[test]
+    fn zero_epsilon_pure_greedy() {
+        let mut p = EpsilonGreedy::new(3, 1.0, 0.0, 0.0, 1);
+        let times = [3.0, 1.0, 2.0];
+        for _ in 0..100 {
+            let arm = p.select();
+            p.update(arm, times[arm], 1.0);
+        }
+        assert_eq!(p.most_selected(), 1);
+        // After the sweep, greedy never leaves the best arm.
+        assert_eq!(p.counts()[1], 98.0);
+    }
+
+    #[test]
+    fn high_epsilon_keeps_exploring() {
+        let mut p = EpsilonGreedy::new(4, 1.0, 0.0, 0.9, 5);
+        let times = [2.0, 1.0, 2.0, 2.0];
+        for _ in 0..800 {
+            let arm = p.select();
+            p.update(arm, times[arm], 1.0);
+        }
+        // Every arm keeps getting substantial pulls under heavy exploration.
+        for &c in p.counts() {
+            assert!(c > 80.0, "counts {:?}", p.counts());
+        }
+    }
+}

@@ -1,0 +1,241 @@
+//! Tuner-state checkpointing and warm starts.
+//!
+//! The paper's motivation section stresses that "the optimal configuration
+//! evolves with changes in input type, input size, or incremental
+//! algorithmic improvements" and that re-tuning from scratch is what makes
+//! cumulative autotuning cost explode. A bandit's sufficient statistics
+//! are tiny (3 f64 per arm), so LASP can checkpoint them after a campaign
+//! and *warm-start* the next one: prior knowledge is kept but discounted,
+//! letting the tuner re-verify quickly instead of re-exploring blindly.
+
+use super::reward::RewardState;
+use crate::util::json::Json;
+use anyhow::{anyhow, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Current checkpoint format version.
+const VERSION: f64 = 1.0;
+
+/// Serialize a reward state (plus identifying metadata) to JSON text.
+pub fn to_json(state: &RewardState, app: &str, alpha: f64, beta: f64) -> String {
+    let mut obj = BTreeMap::new();
+    obj.insert("version".into(), Json::Num(VERSION));
+    obj.insert("app".into(), Json::Str(app.into()));
+    obj.insert("alpha".into(), Json::Num(alpha));
+    obj.insert("beta".into(), Json::Num(beta));
+    obj.insert("t".into(), Json::Num(state.t));
+    let vec_of = |v: &[f64]| Json::Arr(v.iter().map(|&x| Json::Num(x)).collect());
+    obj.insert("tau_sum".into(), vec_of(&state.tau_sum));
+    obj.insert("rho_sum".into(), vec_of(&state.rho_sum));
+    obj.insert("counts".into(), vec_of(&state.counts));
+    Json::Obj(obj).to_string()
+}
+
+/// Parsed checkpoint.
+#[derive(Debug, Clone)]
+pub struct Checkpoint {
+    pub app: String,
+    pub alpha: f64,
+    pub beta: f64,
+    pub state: RewardState,
+}
+
+/// Parse a checkpoint from JSON text.
+pub fn from_json(text: &str) -> Result<Checkpoint> {
+    let root = Json::parse(text).map_err(|e| anyhow!("checkpoint parse: {e}"))?;
+    if root.get("version").and_then(Json::as_f64) != Some(VERSION) {
+        return Err(anyhow!("unsupported checkpoint version"));
+    }
+    let read_vec = |key: &str| -> Result<Vec<f64>> {
+        root.get(key)
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("checkpoint missing {key}"))?
+            .iter()
+            .map(|v| v.as_f64().ok_or_else(|| anyhow!("non-numeric {key}")))
+            .collect()
+    };
+    let tau_sum = read_vec("tau_sum")?;
+    let rho_sum = read_vec("rho_sum")?;
+    let counts = read_vec("counts")?;
+    if tau_sum.len() != counts.len() || rho_sum.len() != counts.len() {
+        return Err(anyhow!("checkpoint vector lengths disagree"));
+    }
+    if counts.iter().any(|&c| c < 0.0 || !c.is_finite()) {
+        return Err(anyhow!("checkpoint counts invalid"));
+    }
+    let mut state = RewardState::new(counts.len());
+    state.tau_sum = tau_sum;
+    state.rho_sum = rho_sum;
+    state.counts = counts;
+    state.t = root.get("t").and_then(Json::as_f64).unwrap_or(1.0).max(1.0);
+    Ok(Checkpoint {
+        app: root
+            .get("app")
+            .and_then(Json::as_str)
+            .unwrap_or("unknown")
+            .to_string(),
+        alpha: root.get("alpha").and_then(Json::as_f64).unwrap_or(0.8),
+        beta: root.get("beta").and_then(Json::as_f64).unwrap_or(0.2),
+        state,
+    })
+}
+
+/// Write a checkpoint file.
+pub fn save(path: &Path, state: &RewardState, app: &str, alpha: f64, beta: f64) -> Result<()> {
+    std::fs::write(path, to_json(state, app, alpha, beta))
+        .with_context(|| format!("writing {}", path.display()))
+}
+
+/// Read a checkpoint file.
+pub fn load(path: &Path) -> Result<Checkpoint> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    from_json(&text)
+}
+
+/// Discount a prior state for warm-starting: keep per-arm means but shrink
+/// effective counts by `retain ∈ (0, 1]`, so prior knowledge biases early
+/// selection without suppressing re-verification of a shifted environment.
+pub fn discounted(prior: &RewardState, retain: f64) -> RewardState {
+    assert!(retain > 0.0 && retain <= 1.0);
+    let k = prior.k();
+    let mut out = RewardState::new(k);
+    for i in 0..k {
+        if prior.counts[i] > 0.0 {
+            let kept = (prior.counts[i] * retain).max(1.0);
+            let mean_tau = prior.tau_sum[i] / prior.counts[i];
+            let mean_rho = prior.rho_sum[i] / prior.counts[i];
+            out.counts[i] = kept;
+            out.tau_sum[i] = mean_tau * kept;
+            out.rho_sum[i] = mean_rho * kept;
+        }
+    }
+    out.t = out.counts.iter().sum::<f64>() + 1.0;
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bandit::{Policy, UcbTuner};
+    use crate::util::Rng;
+
+    fn populated(k: usize, pulls: usize) -> RewardState {
+        let mut s = RewardState::new(k);
+        let mut rng = Rng::new(3);
+        for _ in 0..pulls {
+            s.observe(rng.below(k), rng.range(0.2, 4.0), rng.range(2.0, 9.0));
+        }
+        s
+    }
+
+    #[test]
+    fn json_roundtrip_exact() {
+        let s = populated(40, 500);
+        let text = to_json(&s, "kripke", 0.8, 0.2);
+        let cp = from_json(&text).unwrap();
+        assert_eq!(cp.app, "kripke");
+        assert_eq!(cp.state.tau_sum, s.tau_sum);
+        assert_eq!(cp.state.rho_sum, s.rho_sum);
+        assert_eq!(cp.state.counts, s.counts);
+        assert_eq!(cp.state.t, s.t);
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("lasp-ckpt-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("state.json");
+        let s = populated(16, 100);
+        save(&path, &s, "clomp", 1.0, 0.0).unwrap();
+        let cp = load(&path).unwrap();
+        assert_eq!(cp.app, "clomp");
+        assert_eq!(cp.state.counts, s.counts);
+    }
+
+    #[test]
+    fn rejects_corrupt_checkpoints() {
+        assert!(from_json("{}").is_err());
+        assert!(from_json("not json").is_err());
+        // Mismatched lengths.
+        let bad = r#"{"version":1,"app":"x","alpha":1,"beta":0,"t":3,
+            "tau_sum":[1,2],"rho_sum":[1],"counts":[1,1]}"#;
+        assert!(from_json(bad).is_err());
+        // Negative counts.
+        let bad = r#"{"version":1,"app":"x","alpha":1,"beta":0,"t":3,
+            "tau_sum":[1],"rho_sum":[1],"counts":[-2]}"#;
+        assert!(from_json(bad).is_err());
+    }
+
+    #[test]
+    fn discount_preserves_means_shrinks_counts() {
+        let s = populated(10, 300);
+        let d = discounted(&s, 0.1);
+        for i in 0..10 {
+            if s.counts[i] > 0.0 {
+                let m1 = s.tau_sum[i] / s.counts[i];
+                let m2 = d.tau_sum[i] / d.counts[i];
+                assert!((m1 - m2).abs() < 1e-12);
+                assert!(d.counts[i] <= s.counts[i]);
+                assert!(d.counts[i] >= 1.0);
+            }
+        }
+    }
+
+    #[test]
+    fn warm_start_converges_faster_after_input_change() {
+        // Scenario from the paper's motivation: the input size changes
+        // (fidelity 0.15 -> 0.5 shifts the surface mildly). A warm-started
+        // tuner should reach a near-oracle arm with fewer fresh pulls than
+        // a cold-started one.
+        use crate::apps::{self, AppKind};
+        use crate::device::{Device, JetsonNano, PowerMode};
+        let app = apps::build(AppKind::Clomp);
+        let k = app.space().len();
+
+        // Phase 1: tune at q=0.15 and checkpoint.
+        let mut device = JetsonNano::new(PowerMode::Maxn, 8).with_fidelity(0.15);
+        let mut cold = UcbTuner::new(k, 1.0, 0.0);
+        for _ in 0..800 {
+            let arm = cold.select();
+            let m = device.run(&app.workload(arm, device.fidelity()));
+            cold.update(arm, m.time_s, m.power_w);
+        }
+        let prior = cold.state().clone();
+
+        // Phase 2 (new input size q=0.5): cold vs warm with a small budget.
+        let sweep: Vec<f64> = app
+            .space()
+            .indices()
+            .map(|i| {
+                crate::device::run_with_cap(&PowerMode::Maxn.spec(), &app.workload(i, 0.5)).time_s
+            })
+            .collect();
+        let best_time = sweep.iter().cloned().fold(f64::INFINITY, f64::min);
+
+        // Budget smaller than k: a cold start cannot even finish the UCB
+        // init sweep, a warm start exploits prior knowledge immediately.
+        let run_phase2 = |state: Option<RewardState>| -> f64 {
+            let mut tuner = UcbTuner::new(k, 1.0, 0.0);
+            if let Some(s) = state {
+                tuner = tuner.with_state(s);
+            }
+            let mut device = JetsonNano::new(PowerMode::Maxn, 9).with_fidelity(0.5);
+            for _ in 0..60 {
+                let arm = tuner.select();
+                let m = device.run(&app.workload(arm, device.fidelity()));
+                tuner.update(arm, m.time_s, m.power_w);
+            }
+            sweep[tuner.most_selected()] / best_time
+        };
+
+        let cold_ratio = run_phase2(None);
+        let warm_ratio = run_phase2(Some(discounted(&prior, 0.2)));
+        assert!(
+            warm_ratio <= cold_ratio + 1e-9,
+            "warm {warm_ratio} worse than cold {cold_ratio}"
+        );
+        assert!(warm_ratio < 1.10, "warm start should land near-oracle: {warm_ratio}");
+    }
+}

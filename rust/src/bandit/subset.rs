@@ -1,0 +1,162 @@
+//! Candidate-subset tuning for very large spaces (paper §IV-B).
+//!
+//! The paper names scalability as LASP's main limitation: "as the number of
+//! arms increases, the UCB algorithm requires exploring a large number of
+//! options before it can intelligently determine the optimal
+//! configurations". With K ≫ T (Hypre: 92,160 arms vs ~10³ iterations) the
+//! UCB init sweep alone exceeds the budget. [`SubsetTuner`] realizes the
+//! paper's "swiftly discarding low-performing configurations" idea in its
+//! simplest robust form: draw a seeded uniform candidate subset sized to
+//! the budget and run full LASP over it. Pull counts are reported in the
+//! full space so Eq. 4 output and downstream metrics are unchanged.
+
+use super::ucb::UcbTuner;
+use super::Policy;
+use crate::util::Rng;
+use std::collections::HashMap;
+
+/// LASP over a uniform candidate subset of a large space.
+pub struct SubsetTuner {
+    inner: UcbTuner,
+    /// subset position -> full-space index.
+    candidates: Vec<usize>,
+    /// full-space index -> subset position.
+    positions: HashMap<usize, usize>,
+    /// Full-space pull counts (Eq. 4 view).
+    full_counts: Vec<f64>,
+}
+
+impl SubsetTuner {
+    /// Draw `m` candidates from `0..k` with `seed`, tune over them.
+    pub fn new(k: usize, m: usize, alpha: f64, beta: f64, seed: u64) -> Self {
+        assert!(m >= 2 && m <= k);
+        let mut rng = Rng::new(seed);
+        let candidates = rng.sample_indices(k, m);
+        Self::with_candidates(k, candidates, alpha, beta)
+    }
+
+    /// Tune over an explicit candidate list (e.g. pre-screened configs).
+    pub fn with_candidates(k: usize, candidates: Vec<usize>, alpha: f64, beta: f64) -> Self {
+        assert!(!candidates.is_empty());
+        let positions: HashMap<usize, usize> =
+            candidates.iter().enumerate().map(|(p, &i)| (i, p)).collect();
+        assert_eq!(positions.len(), candidates.len(), "duplicate candidates");
+        assert!(candidates.iter().all(|&c| c < k));
+        SubsetTuner {
+            inner: UcbTuner::new(candidates.len(), alpha, beta),
+            candidates,
+            positions,
+            full_counts: vec![0.0; k],
+        }
+    }
+
+    /// Builder: exploration coefficient of the inner UCB.
+    pub fn with_exploration(mut self, c: f64) -> Self {
+        self.inner = std::mem::replace(
+            &mut self.inner,
+            UcbTuner::new(1, 1.0, 0.0),
+        )
+        .with_exploration(c);
+        self
+    }
+
+    /// The candidate list (full-space indices).
+    pub fn candidates(&self) -> &[usize] {
+        &self.candidates
+    }
+
+    /// Recommended subset size for a `k`-arm space under `iterations`
+    /// budget: at most a third of the budget goes to the init sweep.
+    pub fn recommended_size(k: usize, iterations: usize) -> usize {
+        (iterations / 3).clamp(16, 1024).min(k)
+    }
+}
+
+impl Policy for SubsetTuner {
+    fn k(&self) -> usize {
+        self.full_counts.len()
+    }
+
+    fn select(&mut self) -> usize {
+        self.candidates[self.inner.select()]
+    }
+
+    fn update(&mut self, arm: usize, time_s: f64, power_w: f64) {
+        let pos = *self
+            .positions
+            .get(&arm)
+            .unwrap_or_else(|| panic!("arm {arm} not in candidate subset"));
+        self.inner.update(pos, time_s, power_w);
+        self.full_counts[arm] += 1.0;
+    }
+
+    fn counts(&self) -> &[f64] {
+        &self.full_counts
+    }
+
+    fn name(&self) -> &'static str {
+        "lasp-ucb1-subset"
+    }
+
+    fn reward_state(&self) -> Option<&crate::bandit::RewardState> {
+        // Subset-local state (positions are subset indices).
+        self.inner.reward_state()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn maps_selection_into_candidate_set() {
+        let mut t = SubsetTuner::new(10_000, 32, 1.0, 0.0, 7);
+        let cands: std::collections::HashSet<usize> =
+            t.candidates().iter().copied().collect();
+        for _ in 0..100 {
+            let arm = t.select();
+            assert!(cands.contains(&arm));
+            t.update(arm, 1.0, 1.0);
+        }
+        assert_eq!(t.total_pulls(), 100.0);
+    }
+
+    #[test]
+    fn concentrates_within_subset() {
+        let mut t = SubsetTuner::new(5_000, 24, 1.0, 0.0, 3);
+        // The lowest candidate index is the fastest arm.
+        let best = *t.candidates().iter().min().unwrap();
+        for _ in 0..600 {
+            let arm = t.select();
+            let time = if arm == best { 0.3 } else { 2.0 };
+            t.update(arm, time, 5.0);
+        }
+        assert_eq!(t.most_selected(), best);
+    }
+
+    #[test]
+    fn full_counts_live_in_full_space() {
+        let mut t = SubsetTuner::new(1000, 16, 0.5, 0.5, 1);
+        for _ in 0..50 {
+            let arm = t.select();
+            t.update(arm, 1.0, 1.0);
+        }
+        assert_eq!(t.counts().len(), 1000);
+        assert_eq!(t.counts().iter().sum::<f64>(), 50.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn update_outside_subset_panics() {
+        let mut t = SubsetTuner::with_candidates(100, vec![1, 2, 3], 1.0, 0.0);
+        t.update(99, 1.0, 1.0);
+    }
+
+    #[test]
+    fn recommended_size_bounds() {
+        assert_eq!(SubsetTuner::recommended_size(92_160, 1000), 333);
+        assert_eq!(SubsetTuner::recommended_size(92_160, 10_000), 1024);
+        assert_eq!(SubsetTuner::recommended_size(128, 1000), 128);
+        assert_eq!(SubsetTuner::recommended_size(92_160, 10), 16);
+    }
+}

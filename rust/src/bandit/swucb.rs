@@ -1,0 +1,166 @@
+//! Sliding-window UCB for non-stationary edge environments.
+//!
+//! The paper stresses that edge conditions drift (thermal throttling, power
+//! mode switches, co-located load). Plain UCB1 averages over all history;
+//! SW-UCB computes rewards over only the last `window` observations, so a
+//! reward distribution shift is forgotten after one window. This is the
+//! "future work: adaptive algorithms" direction made concrete, exercised by
+//! the mode-switch ablation bench.
+
+use super::reward::{ucb_scores, weighted_rewards, RewardState, DEFAULT_EXPLORATION};
+use super::Policy;
+use crate::util::stats;
+use std::collections::VecDeque;
+
+/// UCB1 over a sliding window of the most recent observations.
+pub struct SlidingWindowUcb {
+    k: usize,
+    alpha: f64,
+    beta: f64,
+    window: usize,
+    /// (arm, time, power) of the most recent `window` pulls.
+    history: VecDeque<(usize, f64, f64)>,
+    /// Windowed sufficient statistics, kept incrementally.
+    state: RewardState,
+    /// Lifetime pull counts (Eq. 4 output still uses all history).
+    lifetime_counts: Vec<f64>,
+    t: f64,
+}
+
+impl SlidingWindowUcb {
+    pub fn new(k: usize, alpha: f64, beta: f64, window: usize) -> Self {
+        assert!(window >= k, "window must cover at least one pull per arm");
+        SlidingWindowUcb {
+            k,
+            alpha,
+            beta,
+            window,
+            history: VecDeque::with_capacity(window + 1),
+            state: RewardState::new(k),
+            lifetime_counts: vec![0.0; k],
+            t: 1.0,
+        }
+    }
+
+    /// The configured window length.
+    pub fn window(&self) -> usize {
+        self.window
+    }
+}
+
+impl Policy for SlidingWindowUcb {
+    fn k(&self) -> usize {
+        self.k
+    }
+
+    fn select(&mut self) -> usize {
+        // Arms absent from the current window are "unpulled": retried.
+        if let Some(arm) = self.state.counts.iter().position(|&c| c == 0.0) {
+            return arm;
+        }
+        let (mt, mr) = self.state.filled_means();
+        let rewards = weighted_rewards(&mt, &mr, self.alpha, self.beta);
+        // Windowed t: bonus uses the window size, not lifetime.
+        let t_eff = (self.history.len() as f64).max(1.0);
+        let scores = ucb_scores(&rewards, &self.state.counts, t_eff, DEFAULT_EXPLORATION);
+        stats::argmax(&scores)
+    }
+
+    fn update(&mut self, arm: usize, time_s: f64, power_w: f64) {
+        self.history.push_back((arm, time_s, power_w));
+        self.state.tau_sum[arm] += time_s;
+        self.state.rho_sum[arm] += power_w;
+        self.state.counts[arm] += 1.0;
+        self.lifetime_counts[arm] += 1.0;
+        self.t += 1.0;
+        if self.history.len() > self.window {
+            let (old_arm, old_t, old_p) = self.history.pop_front().unwrap();
+            self.state.tau_sum[old_arm] -= old_t;
+            self.state.rho_sum[old_arm] -= old_p;
+            self.state.counts[old_arm] -= 1.0;
+            // Guard accumulated fp error at zero.
+            if self.state.counts[old_arm] < 1e-9 {
+                self.state.counts[old_arm] = 0.0;
+                self.state.tau_sum[old_arm] = 0.0;
+                self.state.rho_sum[old_arm] = 0.0;
+            }
+        }
+    }
+
+    fn counts(&self) -> &[f64] {
+        &self.lifetime_counts
+    }
+
+    fn name(&self) -> &'static str {
+        "sw-ucb"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn adapts_to_distribution_shift() {
+        // Arm 0 is best for 600 pulls, then arm 2 becomes best. SW-UCB must
+        // switch; measure pulls of arm 2 in the last 200 rounds.
+        let mut p = SlidingWindowUcb::new(3, 1.0, 0.0, 150);
+        let mut recent_arm2 = 0;
+        for t in 0..1200 {
+            let arm = p.select();
+            let time = if t < 600 {
+                [1.0, 2.0, 2.0][arm]
+            } else {
+                [2.0, 2.0, 1.0][arm]
+            };
+            p.update(arm, time, 1.0);
+            if t >= 1000 && arm == 2 {
+                recent_arm2 += 1;
+            }
+        }
+        assert!(recent_arm2 > 120, "only {recent_arm2} recent pulls of new best");
+    }
+
+    #[test]
+    fn plain_ucb_adapts_slower_than_swucb() {
+        // Same shift; count post-shift pulls of the new best arm.
+        let run = |mut p: Box<dyn Policy>| {
+            let mut post_shift_best = 0;
+            for t in 0..1200 {
+                let arm = p.select();
+                let time = if t < 600 {
+                    [1.0, 2.0, 2.0][arm]
+                } else {
+                    [2.0, 2.0, 1.0][arm]
+                };
+                p.update(arm, time, 1.0);
+                if t >= 600 && arm == 2 {
+                    post_shift_best += 1;
+                }
+            }
+            post_shift_best
+        };
+        let sw = run(Box::new(SlidingWindowUcb::new(3, 1.0, 0.0, 150)));
+        let plain = run(Box::new(crate::bandit::UcbTuner::new(3, 1.0, 0.0)));
+        assert!(sw > plain, "sw {sw} <= plain {plain}");
+    }
+
+    #[test]
+    fn window_eviction_keeps_counts_consistent() {
+        let mut p = SlidingWindowUcb::new(4, 0.5, 0.5, 16);
+        for i in 0..200 {
+            let arm = i % 4;
+            p.update(arm, 1.0 + arm as f64, 2.0);
+        }
+        let window_total: f64 = p.state.counts.iter().sum();
+        assert_eq!(window_total, 16.0);
+        let lifetime_total: f64 = p.counts().iter().sum();
+        assert_eq!(lifetime_total, 200.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn window_smaller_than_arms_rejected() {
+        SlidingWindowUcb::new(10, 1.0, 0.0, 5);
+    }
+}

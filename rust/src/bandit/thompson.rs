@@ -1,0 +1,95 @@
+//! Gaussian Thompson-sampling ablation policy.
+//!
+//! Posterior-sampling alternative to UCB's optimism: each arm's reward mean
+//! gets a Normal posterior (known-variance model); every round samples each
+//! posterior and plays the argmax. Included to quantify the paper's choice
+//! of UCB against the other classic stochastic-bandit family.
+
+use super::reward::{weighted_rewards, RewardState};
+use super::Policy;
+use crate::util::{stats, Rng};
+
+/// Thompson sampling over the paper's Eq. 5 reward.
+pub struct ThompsonSampler {
+    state: RewardState,
+    alpha: f64,
+    beta: f64,
+    rng: Rng,
+    /// Assumed observation std-dev of the normalized reward.
+    obs_std: f64,
+}
+
+impl ThompsonSampler {
+    pub fn new(k: usize, alpha: f64, beta: f64, seed: u64) -> Self {
+        ThompsonSampler {
+            state: RewardState::new(k),
+            alpha,
+            beta,
+            rng: Rng::new(seed),
+            obs_std: 0.25,
+        }
+    }
+}
+
+impl Policy for ThompsonSampler {
+    fn k(&self) -> usize {
+        self.state.k()
+    }
+
+    fn select(&mut self) -> usize {
+        if let Some(arm) = self.state.counts.iter().position(|&c| c == 0.0) {
+            return arm;
+        }
+        let (mt, mr) = self.state.filled_means();
+        let rewards = weighted_rewards(&mt, &mr, self.alpha, self.beta);
+        // Sample posterior mean ~ N(reward_i, obs_std² / N_i) per arm.
+        let samples: Vec<f64> = rewards
+            .iter()
+            .zip(&self.state.counts)
+            .map(|(r, n)| r + self.rng.normal() * self.obs_std / n.max(1.0).sqrt())
+            .collect();
+        stats::argmax(&samples)
+    }
+
+    fn update(&mut self, arm: usize, time_s: f64, power_w: f64) {
+        self.state.observe(arm, time_s, power_w);
+    }
+
+    fn counts(&self) -> &[f64] {
+        &self.state.counts
+    }
+
+    fn name(&self) -> &'static str {
+        "thompson"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn converges_on_clear_winner() {
+        let mut p = ThompsonSampler::new(4, 1.0, 0.0, 17);
+        let times = [3.0, 0.5, 2.5, 3.5];
+        for _ in 0..600 {
+            let arm = p.select();
+            p.update(arm, times[arm], 1.0);
+        }
+        assert_eq!(p.most_selected(), 1);
+        assert!(p.counts()[1] > 400.0);
+    }
+
+    #[test]
+    fn posterior_narrows_with_pulls() {
+        // With many pulls everywhere, selection becomes near-deterministic.
+        let mut p = ThompsonSampler::new(3, 1.0, 0.0, 23);
+        let times = [2.0, 1.0, 1.5];
+        for _ in 0..900 {
+            let arm = p.select();
+            p.update(arm, times[arm], 1.0);
+        }
+        let last_hundred: f64 = p.counts()[1];
+        assert!(last_hundred > 600.0, "counts {:?}", p.counts());
+    }
+}

@@ -1,0 +1,194 @@
+//! LASP's UCB1 policy (paper Alg. 1).
+
+use super::reward::{RewardState, ScalarBackend, ScoreBackend, DEFAULT_EXPLORATION};
+use super::Policy;
+
+/// The LASP tuner: UCB1 over the weighted time/power reward.
+///
+/// `alpha` and `beta` are the paper's user-priority weights for execution
+/// time and power consumption respectively (§III). The score computation is
+/// pluggable: [`ScalarBackend`] by default, or the AOT PJRT artifact via
+/// [`UcbTuner::with_backend`].
+pub struct UcbTuner {
+    state: RewardState,
+    alpha: f64,
+    beta: f64,
+    exploration: f64,
+    backend: Box<dyn ScoreBackend>,
+    /// Cached selection made by `select`, consumed by `update`.
+    last_selected: Option<usize>,
+    /// Rewards from the most recent scoring pass (diagnostics).
+    last_rewards: Vec<f64>,
+}
+
+impl UcbTuner {
+    /// UCB1 with the pure-rust scalar backend.
+    pub fn new(k: usize, alpha: f64, beta: f64) -> Self {
+        Self::with_backend(k, alpha, beta, Box::new(ScalarBackend))
+    }
+
+    /// UCB1 with an explicit scoring backend (e.g. the PJRT engine).
+    pub fn with_backend(
+        k: usize,
+        alpha: f64,
+        beta: f64,
+        backend: Box<dyn ScoreBackend>,
+    ) -> Self {
+        assert!(k > 0);
+        assert!((0.0..=1.0).contains(&alpha) && (0.0..=1.0).contains(&beta));
+        UcbTuner {
+            state: RewardState::new(k),
+            alpha,
+            beta,
+            exploration: DEFAULT_EXPLORATION,
+            backend,
+            last_selected: None,
+            last_rewards: vec![],
+        }
+    }
+
+    /// Builder: warm-start from a prior reward state (see
+    /// [`super::persist`]). The state's arm count must match `k`.
+    pub fn with_state(mut self, state: RewardState) -> Self {
+        assert_eq!(state.k(), self.state.k(), "warm-start arm count mismatch");
+        self.state = state;
+        self
+    }
+
+    /// Builder: override the exploration coefficient (1.0 = textbook UCB1).
+    pub fn with_exploration(mut self, c: f64) -> Self {
+        assert!(c >= 0.0);
+        self.exploration = c;
+        self
+    }
+
+    /// The exploration coefficient c.
+    pub fn exploration(&self) -> f64 {
+        self.exploration
+    }
+
+    /// The time-priority weight α.
+    pub fn alpha(&self) -> f64 {
+        self.alpha
+    }
+
+    /// The power-priority weight β.
+    pub fn beta(&self) -> f64 {
+        self.beta
+    }
+
+    /// Current iteration counter `t`.
+    pub fn t(&self) -> f64 {
+        self.state.t
+    }
+
+    /// Rewards from the most recent scoring pass (empty before first call).
+    pub fn last_rewards(&self) -> &[f64] {
+        &self.last_rewards
+    }
+
+    /// Scoring backend name ("scalar" or "pjrt").
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.backend_name()
+    }
+
+    /// Borrow the raw reward state (telemetry / checkpointing).
+    pub fn state(&self) -> &RewardState {
+        &self.state
+    }
+}
+
+impl Policy for UcbTuner {
+    fn k(&self) -> usize {
+        self.state.k()
+    }
+
+    fn select(&mut self) -> usize {
+        let out = self
+            .backend
+            .lasp_step(&self.state, self.alpha, self.beta, self.exploration)
+            .expect("score backend failed");
+        self.last_rewards = out.rewards;
+        self.last_selected = Some(out.best);
+        out.best
+    }
+
+    fn update(&mut self, arm: usize, time_s: f64, power_w: f64) {
+        debug_assert!(
+            self.last_selected.map_or(true, |s| s == arm),
+            "update for arm {arm} but selected {:?}",
+            self.last_selected
+        );
+        self.last_selected = None;
+        self.state.observe(arm, time_s, power_w);
+    }
+
+    fn counts(&self) -> &[f64] {
+        &self.state.counts
+    }
+
+    fn name(&self) -> &'static str {
+        "lasp-ucb1"
+    }
+
+    fn reward_state(&self) -> Option<&RewardState> {
+        Some(&self.state)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tries_every_arm_first() {
+        let k = 8;
+        let mut tuner = UcbTuner::new(k, 1.0, 0.0);
+        let mut seen = vec![false; k];
+        for _ in 0..k {
+            let arm = tuner.select();
+            assert!(!seen[arm], "arm {arm} repeated before full sweep");
+            seen[arm] = true;
+            tuner.update(arm, 1.0, 1.0);
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn concentrates_on_fastest_arm() {
+        let mut tuner = UcbTuner::new(5, 1.0, 0.0);
+        let times = [2.0, 1.8, 0.6, 1.5, 2.2];
+        for _ in 0..600 {
+            let arm = tuner.select();
+            tuner.update(arm, times[arm], 5.0);
+        }
+        assert_eq!(tuner.most_selected(), 2);
+        assert!(tuner.counts()[2] > 300.0);
+    }
+
+    #[test]
+    fn beta_focus_prefers_frugal_arm() {
+        let mut tuner = UcbTuner::new(3, 0.0, 1.0);
+        let power = [8.0, 3.0, 6.0];
+        for _ in 0..400 {
+            let arm = tuner.select();
+            tuner.update(arm, 1.0, power[arm]);
+        }
+        assert_eq!(tuner.most_selected(), 1);
+    }
+
+    #[test]
+    fn t_advances_per_update() {
+        let mut tuner = UcbTuner::new(2, 0.5, 0.5);
+        assert_eq!(tuner.t(), 1.0);
+        let a = tuner.select();
+        tuner.update(a, 1.0, 1.0);
+        assert_eq!(tuner.t(), 2.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn invalid_alpha_rejected() {
+        UcbTuner::new(2, 1.5, 0.0);
+    }
+}

@@ -1,0 +1,112 @@
+//! Simulated annealing over the dense configuration index — the classic
+//! rule-based heuristic family the paper contrasts with (Kirkpatrick [10]):
+//! fast, but liable to park in local optima on rugged surfaces.
+
+use super::{EvalFn, Objective, Sample, SearchOutcome, Searcher};
+use crate::util::Rng;
+use anyhow::Result;
+
+/// Metropolis annealer with geometric cooling and index-neighbourhood moves.
+pub struct SimulatedAnnealing {
+    rng: Rng,
+    objective: Objective,
+    /// Initial temperature (in normalized-cost units).
+    pub t0: f64,
+    /// Geometric cooling factor per step.
+    pub cooling: f64,
+    /// Neighbourhood radius as a fraction of `k`.
+    pub radius_frac: f64,
+}
+
+impl SimulatedAnnealing {
+    pub fn new(seed: u64, alpha: f64, beta: f64) -> Self {
+        SimulatedAnnealing {
+            rng: Rng::new(seed),
+            objective: Objective::new(alpha, beta),
+            t0: 0.4,
+            cooling: 0.985,
+            radius_frac: 0.08,
+        }
+    }
+
+    fn neighbour(&mut self, current: usize, k: usize) -> usize {
+        let radius = ((k as f64 * self.radius_frac) as i64).max(1);
+        let delta = self.rng.below((2 * radius + 1) as usize) as i64 - radius;
+        (current as i64 + delta).rem_euclid(k as i64) as usize
+    }
+}
+
+impl Searcher for SimulatedAnnealing {
+    fn run(&mut self, k: usize, budget: usize, eval: &mut dyn EvalFn) -> Result<SearchOutcome> {
+        let q = eval.native_fidelity();
+        let mut trace = Vec::with_capacity(budget);
+        let mut current = self.rng.below(k);
+        let m0 = eval.eval(current, q);
+        self.objective.observe(&m0);
+        trace.push(Sample { index: current, measurement: m0, fidelity: q });
+        let mut current_cost = self.objective.cost(&m0);
+        let (mut best_index, mut best_cost) = (current, current_cost);
+        let mut temp = self.t0;
+
+        while trace.len() < budget {
+            let cand = self.neighbour(current, k);
+            let m = eval.eval(cand, q);
+            self.objective.observe(&m);
+            trace.push(Sample { index: cand, measurement: m, fidelity: q });
+            let cost = self.objective.cost(&m);
+            // Metropolis acceptance on the normalized objective.
+            let accept = cost < current_cost
+                || self.rng.uniform() < ((current_cost - cost) / temp.max(1e-6)).exp();
+            if accept {
+                current = cand;
+                current_cost = cost;
+            }
+            if cost < best_cost {
+                best_cost = cost;
+                best_index = cand;
+            }
+            temp *= self.cooling;
+        }
+        Ok(SearchOutcome { best_index, best_objective: best_cost, trace })
+    }
+
+    fn name(&self) -> &'static str {
+        "simulated-annealing"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::testutil::valley_eval;
+    use crate::baselines::FnEval;
+
+    #[test]
+    fn cools_toward_exploitation() {
+        // Late-phase moves should cluster near the incumbent: measure mean
+        // |Δindex| of accepted positions early vs late.
+        let k = 200;
+        let mut s = SimulatedAnnealing::new(3, 1.0, 0.0);
+        let mut eval = FnEval { f: valley_eval(k, 4), fidelity: 0.2 };
+        let out = s.run(k, 400, &mut eval).unwrap();
+        let idx: Vec<f64> = out.trace.iter().map(|s| s.index as f64).collect();
+        let spread = |xs: &[f64]| crate::util::stats::std_dev(xs);
+        assert!(spread(&idx[300..]) < spread(&idx[..100]) * 1.2);
+    }
+
+    #[test]
+    fn budget_respected() {
+        let mut s = SimulatedAnnealing::new(1, 1.0, 0.0);
+        let mut eval = FnEval { f: valley_eval(50, 5), fidelity: 0.2 };
+        assert_eq!(s.run(50, 33, &mut eval).unwrap().evaluations(), 33);
+    }
+
+    #[test]
+    fn neighbour_wraps_and_stays_in_range() {
+        let mut s = SimulatedAnnealing::new(2, 1.0, 0.0);
+        for _ in 0..1000 {
+            let n = s.neighbour(0, 100);
+            assert!(n < 100);
+        }
+    }
+}

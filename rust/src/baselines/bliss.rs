@@ -1,0 +1,397 @@
+//! BLISS-style Bayesian-optimization baseline (Roy et al., PLDI'21 [16]).
+//!
+//! BLISS drives tuning with lightweight surrogate models; our
+//! reimplementation uses a Gaussian-process surrogate with an
+//! expected-improvement acquisition over a random candidate pool. The GP
+//! math runs either in pure rust ([`GpSurrogate`], dense Cholesky) or on
+//! the AOT `gp_propose` artifact via the PJRT engine — both paths are
+//! differentially tested.
+//!
+//! This baseline exists for two paper artifacts: Fig 10 (resource footprint
+//! of BLISS vs LASP) and the §V-D discussion (BLISS converges in fewer
+//! evaluations but costs far more per iteration).
+
+use super::{EvalFn, Objective, Sample, SearchOutcome, Searcher};
+use crate::runtime::EngineHandle;
+use crate::util::{stats, Rng};
+use anyhow::{anyhow, Result};
+
+/// Pure-rust GP regression surrogate (RBF kernel, dense Cholesky).
+pub struct GpSurrogate {
+    pub lengthscale: f64,
+    pub noise: f64,
+    x: Vec<Vec<f64>>,
+    y: Vec<f64>,
+    /// Cholesky factor of K + σ²I (lower triangular, row-major).
+    chol: Vec<f64>,
+}
+
+impl GpSurrogate {
+    pub fn new(lengthscale: f64, noise: f64) -> Self {
+        GpSurrogate { lengthscale, noise, x: vec![], y: vec![], chol: vec![] }
+    }
+
+    fn kernel(&self, a: &[f64], b: &[f64]) -> f64 {
+        let sq: f64 = a.iter().zip(b).map(|(p, q)| (p - q) * (p - q)).sum();
+        (-sq / (2.0 * self.lengthscale * self.lengthscale)).exp()
+    }
+
+    /// Fit on observations (replaces any previous fit).
+    pub fn fit(&mut self, x: Vec<Vec<f64>>, y: Vec<f64>) -> Result<()> {
+        assert_eq!(x.len(), y.len());
+        let n = x.len();
+        let mut k = vec![0.0; n * n];
+        for i in 0..n {
+            for j in 0..=i {
+                let v = self.kernel(&x[i], &x[j]);
+                k[i * n + j] = v;
+                k[j * n + i] = v;
+            }
+            k[i * n + i] += self.noise;
+        }
+        self.chol = cholesky(&k, n)?;
+        self.x = x;
+        self.y = y;
+        Ok(())
+    }
+
+    /// Posterior (mean, variance) at a query point.
+    pub fn predict(&self, q: &[f64]) -> (f64, f64) {
+        let n = self.x.len();
+        if n == 0 {
+            return (0.0, 1.0);
+        }
+        let ks: Vec<f64> = self.x.iter().map(|xi| self.kernel(xi, q)).collect();
+        // alpha = K⁻¹ y via two triangular solves.
+        let alpha = chol_solve(&self.chol, n, &self.y);
+        let mean = ks.iter().zip(&alpha).map(|(a, b)| a * b).sum();
+        // v = L⁻¹ ks; var = k(q,q) − ‖v‖².
+        let v = forward_sub(&self.chol, n, &ks);
+        let var: f64 = 1.0 - v.iter().map(|x| x * x).sum::<f64>();
+        (mean, var.max(1e-12))
+    }
+
+    /// Expected improvement (maximization) at `q` given incumbent `best`.
+    pub fn expected_improvement(&self, q: &[f64], best: f64) -> f64 {
+        let (mean, var) = self.predict(q);
+        let std = var.sqrt();
+        let xi = 0.01;
+        let z = (mean - best - xi) / std;
+        let phi = (-0.5 * z * z).exp() / (2.0 * std::f64::consts::PI).sqrt();
+        let cdf = 0.5 * (1.0 + erf_approx(z / std::f64::consts::SQRT_2));
+        (mean - best - xi) * cdf + std * phi
+    }
+}
+
+/// Dense Cholesky (lower factor), row-major.
+fn cholesky(a: &[f64], n: usize) -> Result<Vec<f64>> {
+    let mut l = vec![0.0; n * n];
+    for i in 0..n {
+        for j in 0..=i {
+            let mut sum = a[i * n + j];
+            for k in 0..j {
+                sum -= l[i * n + k] * l[j * n + k];
+            }
+            if i == j {
+                if sum <= 0.0 {
+                    return Err(anyhow!("matrix not positive definite at {i}"));
+                }
+                l[i * n + i] = sum.sqrt();
+            } else {
+                l[i * n + j] = sum / l[j * n + j];
+            }
+        }
+    }
+    Ok(l)
+}
+
+/// Solve L z = b.
+fn forward_sub(l: &[f64], n: usize, b: &[f64]) -> Vec<f64> {
+    let mut z = vec![0.0; n];
+    for i in 0..n {
+        let mut sum = b[i];
+        for j in 0..i {
+            sum -= l[i * n + j] * z[j];
+        }
+        z[i] = sum / l[i * n + i];
+    }
+    z
+}
+
+/// Solve (L Lᵀ) x = b.
+fn chol_solve(l: &[f64], n: usize, b: &[f64]) -> Vec<f64> {
+    let z = forward_sub(l, n, b);
+    let mut x = vec![0.0; n];
+    for i in (0..n).rev() {
+        let mut sum = z[i];
+        for j in i + 1..n {
+            sum -= l[j * n + i] * x[j];
+        }
+        x[i] = sum / l[i * n + i];
+    }
+    x
+}
+
+/// Abramowitz-Stegun erf approximation (|err| < 1.5e-7).
+fn erf_approx(x: f64) -> f64 {
+    let sign = if x < 0.0 { -1.0 } else { 1.0 };
+    let x = x.abs();
+    let t = 1.0 / (1.0 + 0.3275911 * x);
+    let y = 1.0
+        - (((((1.061405429 * t - 1.453152027) * t) + 1.421413741) * t - 0.284496736) * t
+            + 0.254829592)
+            * t
+            * (-x * x).exp();
+    sign * y
+}
+
+/// The BLISS-style BO searcher.
+pub struct BlissBo {
+    rng: Rng,
+    objective: Objective,
+    /// Feature embedding for configurations; defaults to scaled index.
+    features: Option<Box<dyn Fn(usize) -> Vec<f64> + Send>>,
+    /// Random initial design size.
+    pub init_samples: usize,
+    /// Candidate pool per BO iteration.
+    pub candidates: usize,
+    /// Observation cap (matches the AOT artifact's N).
+    pub max_obs: usize,
+    pub lengthscale: f64,
+    pub noise: f64,
+    /// Optional PJRT engine: use the `gp_propose` artifact.
+    engine: Option<EngineHandle>,
+}
+
+impl BlissBo {
+    pub fn new(seed: u64, alpha: f64, beta: f64) -> Self {
+        BlissBo {
+            rng: Rng::new(seed),
+            objective: Objective::new(alpha, beta),
+            features: None,
+            init_samples: 8,
+            candidates: 256,
+            max_obs: 64,
+            lengthscale: 0.35,
+            noise: 1e-3,
+            engine: None,
+        }
+    }
+
+    /// Use a real feature embedding (e.g. `ParamSpace::features`).
+    pub fn with_features(mut self, f: impl Fn(usize) -> Vec<f64> + Send + 'static) -> Self {
+        self.features = Some(Box::new(f));
+        self
+    }
+
+    /// Route GP math through the AOT `gp_propose` artifact.
+    pub fn with_engine(mut self, engine: EngineHandle) -> Self {
+        self.engine = Some(engine);
+        self
+    }
+
+    fn feat(&self, index: usize, k: usize) -> Vec<f64> {
+        match &self.features {
+            Some(f) => f(index),
+            None => vec![index as f64 / k.max(1) as f64],
+        }
+    }
+
+    /// Propose the next index from candidates given observations.
+    fn propose(
+        &mut self,
+        k: usize,
+        obs_x: &[Vec<f64>],
+        obs_y: &[f64],
+        cands: &[usize],
+    ) -> Result<usize> {
+        let best = obs_y.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        if let Some(engine) = &self.engine {
+            let (n_max, m_max, d_max) = engine.gp_shape()?;
+            let n = obs_x.len().min(n_max);
+            let d = obs_x[0].len().min(d_max);
+            let mut x = vec![0f32; n_max * d_max];
+            let mut y = vec![0f32; n_max];
+            let mut mask = vec![0f32; n_max];
+            // Most recent n observations.
+            let start = obs_x.len() - n;
+            for (row, i) in (start..obs_x.len()).enumerate() {
+                for (c, &v) in obs_x[i].iter().take(d).enumerate() {
+                    x[row * d_max + c] = v as f32;
+                }
+                y[row] = obs_y[i] as f32;
+                mask[row] = 1.0;
+            }
+            let mut xs = vec![0f32; m_max * d_max];
+            for (row, &ci) in cands.iter().take(m_max).enumerate() {
+                let f = self.feat(ci, k);
+                for (c, &v) in f.iter().take(d).enumerate() {
+                    xs[row * d_max + c] = v as f32;
+                }
+            }
+            // Unused candidate rows duplicate candidate 0 (harmless ties).
+            for row in cands.len().min(m_max)..m_max {
+                for c in 0..d_max {
+                    xs[row * d_max + c] = xs[c];
+                }
+            }
+            let (_, _, _, idx) = engine.gp_propose(
+                x,
+                y,
+                mask,
+                xs,
+                self.lengthscale as f32,
+                self.noise as f32,
+                best as f32,
+            )?;
+            return Ok(cands[idx.min(cands.len() - 1)]);
+        }
+        let mut gp = GpSurrogate::new(self.lengthscale, self.noise);
+        gp.fit(obs_x.to_vec(), obs_y.to_vec())?;
+        let ei: Vec<f64> = cands
+            .iter()
+            .map(|&c| gp.expected_improvement(&self.feat(c, k), best))
+            .collect();
+        Ok(cands[stats::argmax(&ei)])
+    }
+}
+
+impl Searcher for BlissBo {
+    fn run(&mut self, k: usize, budget: usize, eval: &mut dyn EvalFn) -> Result<SearchOutcome> {
+        let q = eval.native_fidelity();
+        let mut trace: Vec<Sample> = Vec::with_capacity(budget);
+        let mut seen: Vec<usize> = vec![];
+
+        let init = self.init_samples.min(budget);
+        for _ in 0..init {
+            let index = self.rng.below(k);
+            let m = eval.eval(index, q);
+            self.objective.observe(&m);
+            trace.push(Sample { index, measurement: m, fidelity: q });
+            seen.push(index);
+        }
+
+        while trace.len() < budget {
+            // Rebuild y from the stable, latest objective extrema: reward =
+            // 1 − cost (BO maximizes).
+            let window = trace.len().saturating_sub(self.max_obs);
+            let obs: Vec<&Sample> = trace[window..].iter().collect();
+            let obs_x: Vec<Vec<f64>> =
+                obs.iter().map(|s| self.feat(s.index, k)).collect();
+            let obs_y: Vec<f64> = obs
+                .iter()
+                .map(|s| 1.0 - self.objective.cost(&s.measurement))
+                .collect();
+            let n_cand = self.candidates.min(k);
+            let cands = self.rng.sample_indices(k, n_cand);
+            let index = self.propose(k, &obs_x, &obs_y, &cands)?;
+            let m = eval.eval(index, q);
+            self.objective.observe(&m);
+            trace.push(Sample { index, measurement: m, fidelity: q });
+            seen.push(index);
+        }
+
+        let (mut best_index, mut best_cost) = (trace[0].index, f64::INFINITY);
+        for s in &trace {
+            let c = self.objective.cost(&s.measurement);
+            if c < best_cost {
+                best_cost = c;
+                best_index = s.index;
+            }
+        }
+        Ok(SearchOutcome { best_index, best_objective: best_cost, trace })
+    }
+
+    fn name(&self) -> &'static str {
+        "bliss-bo"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::testutil::valley_eval;
+    use crate::baselines::FnEval;
+
+    #[test]
+    fn cholesky_roundtrip() {
+        // A = L Lᵀ for a known SPD matrix.
+        let a = vec![4.0, 2.0, 2.0, 3.0];
+        let l = cholesky(&a, 2).unwrap();
+        assert!((l[0] - 2.0).abs() < 1e-12);
+        assert!((l[2] - 1.0).abs() < 1e-12);
+        assert!((l[3] - (3.0f64 - 1.0).sqrt()).abs() < 1e-12);
+        // Solve A x = b and check.
+        let x = chol_solve(&l, 2, &[8.0, 7.0]);
+        assert!((4.0 * x[0] + 2.0 * x[1] - 8.0).abs() < 1e-9);
+        assert!((2.0 * x[0] + 3.0 * x[1] - 7.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let a = vec![1.0, 2.0, 2.0, 1.0];
+        assert!(cholesky(&a, 2).is_err());
+    }
+
+    #[test]
+    fn gp_interpolates() {
+        let mut gp = GpSurrogate::new(0.5, 1e-6);
+        let x: Vec<Vec<f64>> = (0..8).map(|i| vec![i as f64 / 8.0]).collect();
+        let y: Vec<f64> = x.iter().map(|p| (p[0] * 6.0).sin()).collect();
+        gp.fit(x.clone(), y.clone()).unwrap();
+        for (xi, yi) in x.iter().zip(&y) {
+            let (m, v) = gp.predict(xi);
+            assert!((m - yi).abs() < 1e-3, "{m} vs {yi}");
+            assert!(v < 1e-3);
+        }
+        // Far from data: prior variance.
+        let (_, v) = gp.predict(&[10.0]);
+        assert!(v > 0.9);
+    }
+
+    #[test]
+    fn erf_matches_known_values() {
+        assert!(erf_approx(0.0).abs() < 1e-7);
+        assert!((erf_approx(1.0) - 0.8427007).abs() < 1e-5);
+        assert!((erf_approx(-1.0) + 0.8427007).abs() < 1e-5);
+    }
+
+    #[test]
+    fn bo_beats_random_at_small_budget() {
+        // BO with 40 evals should land nearer the valley optimum than
+        // random with 40 evals (averaged over seeds).
+        let k = 200;
+        let err = |best: usize| (best as f64 / k as f64 - 1.0 / 3.0).abs();
+        let mut bo_err = 0.0;
+        let mut rnd_err = 0.0;
+        for seed in 0..5 {
+            let mut eval = FnEval { f: valley_eval(k, 100 + seed), fidelity: 0.2 };
+            let out = BlissBo::new(seed, 1.0, 0.0).run(k, 40, &mut eval).unwrap();
+            bo_err += err(out.best_index);
+            let mut eval = FnEval { f: valley_eval(k, 100 + seed), fidelity: 0.2 };
+            let out = crate::baselines::RandomSearch::new(seed, 1.0, 0.0)
+                .run(k, 40, &mut eval)
+                .unwrap();
+            rnd_err += err(out.best_index);
+        }
+        assert!(bo_err <= rnd_err + 0.05, "bo {bo_err} vs random {rnd_err}");
+    }
+
+    #[test]
+    fn pjrt_engine_path_matches_scalar_path() {
+        let Some(dir) = crate::runtime::find_artifacts_dir() else { return };
+        let engine = EngineHandle::spawn(dir).unwrap();
+        let k = 120;
+        let run = |bo: BlissBo| {
+            let mut bo = bo;
+            let mut eval = FnEval { f: valley_eval(k, 55), fidelity: 0.2 };
+            bo.run(k, 30, &mut eval).unwrap().best_index as f64 / k as f64
+        };
+        let scalar = run(BlissBo::new(9, 1.0, 0.0));
+        let pjrt = run(BlissBo::new(9, 1.0, 0.0).with_engine(engine));
+        // Same seed, same candidates; proposals may differ slightly in f32
+        // vs f64, but both must land near the valley.
+        assert!((scalar - 1.0 / 3.0).abs() < 0.12, "scalar {scalar}");
+        assert!((pjrt - 1.0 / 3.0).abs() < 0.12, "pjrt {pjrt}");
+    }
+}

@@ -1,0 +1,126 @@
+//! Hyperband-style successive halving (Li et al. [29]) over the fidelity
+//! knob: evaluate many configurations cheaply at low fidelity, keep the
+//! best fraction, re-evaluate the survivors at higher fidelity, repeat.
+//! The natural multi-fidelity competitor to LASP's single-fidelity bandit.
+
+use super::{EvalFn, Objective, Sample, SearchOutcome, Searcher};
+use crate::util::Rng;
+use anyhow::Result;
+
+/// Successive halving with geometric fidelity ramp.
+pub struct SuccessiveHalving {
+    rng: Rng,
+    objective: Objective,
+    /// Survivor fraction per rung (1/eta).
+    pub eta: usize,
+    /// Fidelity of the first rung (fraction of native q..1 range).
+    pub q_min: f64,
+}
+
+impl SuccessiveHalving {
+    pub fn new(seed: u64, alpha: f64, beta: f64) -> Self {
+        SuccessiveHalving {
+            rng: Rng::new(seed),
+            objective: Objective::new(alpha, beta),
+            eta: 3,
+            q_min: 0.05,
+        }
+    }
+}
+
+impl Searcher for SuccessiveHalving {
+    fn run(&mut self, k: usize, budget: usize, eval: &mut dyn EvalFn) -> Result<SearchOutcome> {
+        let mut trace: Vec<Sample> = vec![];
+        // Rung count from budget: each rung keeps 1/eta of the cohort; the
+        // initial cohort is sized so the whole ladder fits the budget.
+        let rungs = 3usize;
+        // cohort + cohort/eta + cohort/eta² <= budget
+        let denom: f64 = (0..rungs).map(|r| 1.0 / (self.eta as f64).powi(r as i32)).sum();
+        let cohort_size = ((budget as f64 / denom) as usize).clamp(1, k);
+
+        let mut cohort = self.rng.sample_indices(k, cohort_size);
+        let q_hi = 1.0f64.min(eval.native_fidelity().max(self.q_min) * 4.0);
+        // Costs are only comparable within one rung (execution time scales
+        // with fidelity), so the recommendation is the *last* rung's winner.
+        let mut last_winner: Option<(usize, f64)> = None;
+
+        for rung in 0..rungs {
+            // Geometric fidelity ramp: q_min -> q_hi across rungs.
+            let frac = rung as f64 / (rungs - 1).max(1) as f64;
+            let q = self.q_min * (q_hi / self.q_min).powf(frac);
+            // Per-rung objective: measurements at this fidelity only.
+            let mut rung_obj = Objective::new(self.objective.alpha, self.objective.beta);
+            let mut rung_ms: Vec<(usize, crate::device::Measurement)> = vec![];
+            for &index in &cohort {
+                if trace.len() >= budget {
+                    break;
+                }
+                let m = eval.eval(index, q);
+                rung_obj.observe(&m);
+                self.objective.observe(&m);
+                trace.push(Sample { index, measurement: m, fidelity: q });
+                rung_ms.push((index, m));
+            }
+            let mut scored: Vec<(usize, f64)> = rung_ms
+                .into_iter()
+                .map(|(i, m)| (i, rung_obj.cost(&m)))
+                .collect();
+            scored.sort_by(|a, b| a.1.total_cmp(&b.1));
+            if let Some(&(i, c)) = scored.first() {
+                last_winner = Some((i, c));
+            }
+            let keep = (scored.len() / self.eta).max(1);
+            cohort = scored.into_iter().take(keep).map(|(i, _)| i).collect();
+            if trace.len() >= budget || cohort.len() <= 1 {
+                break;
+            }
+        }
+
+        let (best_index, best_objective) =
+            last_winner.unwrap_or((cohort.first().copied().unwrap_or(0), f64::INFINITY));
+        Ok(SearchOutcome { best_index, best_objective, trace })
+    }
+
+    fn name(&self) -> &'static str {
+        "successive-halving"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::testutil::valley_eval;
+    use crate::baselines::FnEval;
+
+    #[test]
+    fn fidelity_ramps_upward() {
+        let mut s = SuccessiveHalving::new(1, 1.0, 0.0);
+        let mut eval = FnEval { f: valley_eval(100, 2), fidelity: 0.2 };
+        let out = s.run(100, 200, &mut eval).unwrap();
+        let first = out.trace.first().unwrap().fidelity;
+        let last = out.trace.last().unwrap().fidelity;
+        assert!(last > first, "fidelity did not ramp: {first} -> {last}");
+    }
+
+    #[test]
+    fn survivors_shrink() {
+        let mut s = SuccessiveHalving::new(2, 1.0, 0.0);
+        let mut eval = FnEval { f: valley_eval(100, 3), fidelity: 0.2 };
+        let out = s.run(100, 150, &mut eval).unwrap();
+        // Count distinct configs per fidelity level; must be decreasing.
+        let mut by_q: std::collections::BTreeMap<u64, std::collections::HashSet<usize>> =
+            Default::default();
+        for s in &out.trace {
+            by_q.entry((s.fidelity * 1e6) as u64).or_default().insert(s.index);
+        }
+        let sizes: Vec<usize> = by_q.values().map(|v| v.len()).collect();
+        assert!(sizes.windows(2).all(|w| w[1] <= w[0]), "{sizes:?}");
+    }
+
+    #[test]
+    fn budget_respected() {
+        let mut s = SuccessiveHalving::new(3, 1.0, 0.0);
+        let mut eval = FnEval { f: valley_eval(80, 4), fidelity: 0.2 };
+        assert!(s.run(80, 90, &mut eval).unwrap().evaluations() <= 90);
+    }
+}

@@ -1,0 +1,188 @@
+//! Baseline configuration-search strategies the paper compares against (or
+//! that its citations represent): default-config, exhaustive oracle, random
+//! search, simulated annealing (the classic heuristic family [10]), a
+//! BLISS-style Bayesian-optimization tuner [16], and Hyperband-style
+//! successive halving [29] over the fidelity knob.
+//!
+//! All strategies implement [`Searcher`] over an abstract evaluation
+//! closure so the experiment drivers can run any of them against the same
+//! simulated app + device pair.
+
+mod annealing;
+mod bliss;
+mod halving;
+mod random_search;
+
+pub use annealing::SimulatedAnnealing;
+pub use bliss::{BlissBo, GpSurrogate};
+pub use halving::SuccessiveHalving;
+pub use random_search::RandomSearch;
+
+use crate::device::Measurement;
+use anyhow::Result;
+
+/// One evaluated sample in a search trace.
+#[derive(Debug, Clone, Copy)]
+pub struct Sample {
+    pub index: usize,
+    pub measurement: Measurement,
+    /// Fidelity the sample was evaluated at (successive halving varies it).
+    pub fidelity: f64,
+}
+
+/// Result of a search run.
+#[derive(Debug, Clone)]
+pub struct SearchOutcome {
+    /// The configuration the searcher recommends.
+    pub best_index: usize,
+    /// Objective value of the recommendation (as seen by the searcher).
+    pub best_objective: f64,
+    /// Every evaluation performed, in order.
+    pub trace: Vec<Sample>,
+}
+
+impl SearchOutcome {
+    /// Number of evaluations consumed.
+    pub fn evaluations(&self) -> usize {
+        self.trace.len()
+    }
+}
+
+/// Evaluation oracle handed to a searcher: runs configuration `index` at
+/// fidelity `q` and returns the measurement. Implementations wrap an app
+/// model + device simulator (see `experiments::harness`).
+pub trait EvalFn {
+    fn eval(&mut self, index: usize, fidelity: f64) -> Measurement;
+    /// The device's native (low) fidelity.
+    fn native_fidelity(&self) -> f64;
+}
+
+/// Adapter so closures `(usize, f64) -> Measurement` can serve as [`EvalFn`]
+/// with an explicit native fidelity tag.
+pub struct FnEval<F: FnMut(usize, f64) -> Measurement> {
+    pub f: F,
+    pub fidelity: f64,
+}
+
+impl<F: FnMut(usize, f64) -> Measurement> EvalFn for FnEval<F> {
+    fn eval(&mut self, index: usize, fidelity: f64) -> Measurement {
+        (self.f)(index, fidelity)
+    }
+
+    fn native_fidelity(&self) -> f64 {
+        self.fidelity
+    }
+}
+
+/// A sequential configuration searcher.
+pub trait Searcher {
+    /// Search over `k` arms with at most `budget` evaluations.
+    fn run(&mut self, k: usize, budget: usize, eval: &mut dyn EvalFn) -> Result<SearchOutcome>;
+
+    /// Strategy name for reports.
+    fn name(&self) -> &'static str;
+}
+
+/// Scalarizes measurements into the search objective (lower = better),
+/// mirroring the paper's α/β weighting over MinMax-normalized metrics;
+/// searchers track running extrema since global min/max are unknown online.
+#[derive(Debug, Clone)]
+pub struct Objective {
+    pub alpha: f64,
+    pub beta: f64,
+    tau_lo: f64,
+    tau_hi: f64,
+    rho_lo: f64,
+    rho_hi: f64,
+}
+
+impl Objective {
+    pub fn new(alpha: f64, beta: f64) -> Self {
+        Objective {
+            alpha,
+            beta,
+            tau_lo: f64::INFINITY,
+            tau_hi: f64::NEG_INFINITY,
+            rho_lo: f64::INFINITY,
+            rho_hi: f64::NEG_INFINITY,
+        }
+    }
+
+    /// Update extrema with a new measurement.
+    pub fn observe(&mut self, m: &Measurement) {
+        self.tau_lo = self.tau_lo.min(m.time_s);
+        self.tau_hi = self.tau_hi.max(m.time_s);
+        self.rho_lo = self.rho_lo.min(m.power_w);
+        self.rho_hi = self.rho_hi.max(m.power_w);
+    }
+
+    /// Weighted normalized cost in `[0, 1]` (lower = better).
+    pub fn cost(&self, m: &Measurement) -> f64 {
+        let tau = (m.time_s - self.tau_lo) / (self.tau_hi - self.tau_lo).max(1e-9);
+        let rho = (m.power_w - self.rho_lo) / (self.rho_hi - self.rho_lo).max(1e-9);
+        (self.alpha * tau + self.beta * rho) / (self.alpha + self.beta).max(1e-9)
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    use super::*;
+    use crate::util::Rng;
+
+    /// Synthetic quadratic valley over k arms; minimum at k/3.
+    pub fn valley_eval(k: usize, seed: u64) -> impl FnMut(usize, f64) -> Measurement {
+        let mut rng = Rng::new(seed);
+        move |i, q| {
+            let x = i as f64 / k as f64;
+            let opt = 1.0 / 3.0;
+            let t = (0.5 + 4.0 * (x - opt) * (x - opt)) * q.max(0.05);
+            Measurement {
+                time_s: t * rng.relative_noise(0.02),
+                power_w: 5.0 + x * rng.relative_noise(0.02),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::testutil::valley_eval;
+    use super::*;
+
+    fn check_searcher(mut s: Box<dyn Searcher>, budget: usize, tol: f64) {
+        let k = 120;
+        let mut eval = FnEval { f: valley_eval(k, 9), fidelity: 0.2 };
+        let out = s.run(k, budget, &mut eval).unwrap();
+        assert!(out.evaluations() <= budget, "{} overspent", s.name());
+        let got = out.best_index as f64 / k as f64;
+        assert!(
+            (got - 1.0 / 3.0).abs() < tol,
+            "{}: best {} ({} evals)",
+            s.name(),
+            out.best_index,
+            out.evaluations()
+        );
+    }
+
+    #[test]
+    fn all_searchers_find_the_valley() {
+        check_searcher(Box::new(RandomSearch::new(3, 1.0, 0.0)), 200, 0.10);
+        check_searcher(Box::new(SimulatedAnnealing::new(5, 1.0, 0.0)), 300, 0.10);
+        check_searcher(Box::new(BlissBo::new(7, 1.0, 0.0)), 60, 0.10);
+        check_searcher(Box::new(SuccessiveHalving::new(11, 1.0, 0.0)), 400, 0.10);
+    }
+
+    #[test]
+    fn objective_orders_measurements() {
+        let mut o = Objective::new(1.0, 0.0);
+        let fast = Measurement { time_s: 1.0, power_w: 9.0 };
+        let slow = Measurement { time_s: 3.0, power_w: 4.0 };
+        o.observe(&fast);
+        o.observe(&slow);
+        assert!(o.cost(&fast) < o.cost(&slow));
+        let mut p = Objective::new(0.0, 1.0);
+        p.observe(&fast);
+        p.observe(&slow);
+        assert!(p.cost(&slow) < p.cost(&fast));
+    }
+}

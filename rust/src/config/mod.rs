@@ -1,0 +1,227 @@
+//! Configuration system: a TOML-subset parser (offline build — no external
+//! crates) and the typed [`LaspConfig`] the CLI and examples consume.
+//!
+//! Supported TOML subset: `[section]` headers, `key = value` with string,
+//! integer, float and boolean values, `#` comments. That covers every knob
+//! this system exposes; nested tables/arrays are intentionally rejected.
+
+mod toml_mini;
+
+pub use toml_mini::{parse_toml, TomlValue};
+
+use crate::apps::AppKind;
+use crate::device::{NoiseModel, PowerMode};
+use anyhow::{anyhow, Context, Result};
+use std::path::Path;
+
+/// Which scoring backend the tuner uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    /// Pure-rust scalar math.
+    Scalar,
+    /// AOT PJRT artifacts (requires `make artifacts`).
+    Pjrt,
+}
+
+impl std::str::FromStr for Backend {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "scalar" => Ok(Backend::Scalar),
+            "pjrt" => Ok(Backend::Pjrt),
+            other => Err(anyhow!("unknown backend '{other}' (scalar|pjrt)")),
+        }
+    }
+}
+
+/// Full run configuration (CLI flags override file values).
+#[derive(Debug, Clone)]
+pub struct LaspConfig {
+    // [tune]
+    pub app: AppKind,
+    pub iterations: usize,
+    pub alpha: f64,
+    pub beta: f64,
+    pub seed: u64,
+    pub backend: Backend,
+    // [device]
+    pub mode: PowerMode,
+    pub fidelity: f64,
+    /// Injected synthetic measurement error percentage (0.0-1.0).
+    pub noise_pct: f64,
+    // [fleet]
+    pub devices: usize,
+    pub loss_prob: f64,
+    pub latency_s: f64,
+}
+
+impl Default for LaspConfig {
+    fn default() -> Self {
+        LaspConfig {
+            app: AppKind::Kripke,
+            iterations: 500,
+            alpha: 0.8,
+            beta: 0.2,
+            seed: 42,
+            backend: Backend::Scalar,
+            mode: PowerMode::Maxn,
+            fidelity: 0.15,
+            noise_pct: 0.0,
+            devices: 2,
+            loss_prob: 0.0,
+            latency_s: 0.0,
+        }
+    }
+}
+
+impl LaspConfig {
+    /// Load from a TOML file, with defaults for anything unspecified.
+    pub fn from_file(path: &Path) -> Result<LaspConfig> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::from_toml_str(&text)
+    }
+
+    /// Parse from TOML text.
+    pub fn from_toml_str(text: &str) -> Result<LaspConfig> {
+        let doc = parse_toml(text).map_err(|e| anyhow!("config parse: {e}"))?;
+        let mut cfg = LaspConfig::default();
+
+        let get = |section: &str, key: &str| -> Option<&TomlValue> {
+            doc.get(section).and_then(|s| s.get(key))
+        };
+        if let Some(v) = get("tune", "app") {
+            cfg.app = v.as_str().ok_or_else(|| anyhow!("tune.app must be a string"))?.parse()?;
+        }
+        if let Some(v) = get("tune", "iterations") {
+            cfg.iterations = v.as_int().ok_or_else(|| anyhow!("tune.iterations must be int"))? as usize;
+        }
+        if let Some(v) = get("tune", "alpha") {
+            cfg.alpha = v.as_float().ok_or_else(|| anyhow!("tune.alpha must be number"))?;
+        }
+        if let Some(v) = get("tune", "beta") {
+            cfg.beta = v.as_float().ok_or_else(|| anyhow!("tune.beta must be number"))?;
+        }
+        if let Some(v) = get("tune", "seed") {
+            cfg.seed = v.as_int().ok_or_else(|| anyhow!("tune.seed must be int"))? as u64;
+        }
+        if let Some(v) = get("tune", "backend") {
+            cfg.backend = v.as_str().ok_or_else(|| anyhow!("tune.backend must be string"))?.parse()?;
+        }
+        if let Some(v) = get("device", "mode") {
+            cfg.mode = v.as_str().ok_or_else(|| anyhow!("device.mode must be string"))?.parse()?;
+        }
+        if let Some(v) = get("device", "fidelity") {
+            cfg.fidelity = v.as_float().ok_or_else(|| anyhow!("device.fidelity must be number"))?;
+        }
+        if let Some(v) = get("device", "noise_pct") {
+            cfg.noise_pct = v.as_float().ok_or_else(|| anyhow!("device.noise_pct must be number"))?;
+        }
+        if let Some(v) = get("fleet", "devices") {
+            cfg.devices = v.as_int().ok_or_else(|| anyhow!("fleet.devices must be int"))? as usize;
+        }
+        if let Some(v) = get("fleet", "loss_prob") {
+            cfg.loss_prob = v.as_float().ok_or_else(|| anyhow!("fleet.loss_prob must be number"))?;
+        }
+        if let Some(v) = get("fleet", "latency_s") {
+            cfg.latency_s = v.as_float().ok_or_else(|| anyhow!("fleet.latency_s must be number"))?;
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Sanity-check ranges.
+    pub fn validate(&self) -> Result<()> {
+        if !(0.0..=1.0).contains(&self.alpha) || !(0.0..=1.0).contains(&self.beta) {
+            return Err(anyhow!("alpha/beta must lie in [0, 1]"));
+        }
+        if self.alpha + self.beta == 0.0 {
+            return Err(anyhow!("alpha + beta must be positive"));
+        }
+        if !(0.0..=1.0).contains(&self.fidelity) {
+            return Err(anyhow!("fidelity must lie in [0, 1]"));
+        }
+        if !(0.0..1.0).contains(&self.loss_prob) {
+            return Err(anyhow!("loss_prob must lie in [0, 1)"));
+        }
+        if self.iterations == 0 || self.devices == 0 {
+            return Err(anyhow!("iterations and devices must be positive"));
+        }
+        Ok(())
+    }
+
+    /// The injected-noise model from `noise_pct`.
+    pub fn noise(&self) -> NoiseModel {
+        if self.noise_pct > 0.0 {
+            NoiseModel::uniform(self.noise_pct)
+        } else {
+            NoiseModel::none()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_valid() {
+        LaspConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn parses_full_config() {
+        let cfg = LaspConfig::from_toml_str(
+            r#"
+            # LASP experiment
+            [tune]
+            app = "hypre"
+            iterations = 1000
+            alpha = 0.2
+            beta = 0.8
+            seed = 7
+            backend = "pjrt"
+
+            [device]
+            mode = "5w"
+            fidelity = 0.3
+            noise_pct = 0.10
+
+            [fleet]
+            devices = 4
+            loss_prob = 0.05
+            latency_s = 0.02
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.app, AppKind::Hypre);
+        assert_eq!(cfg.iterations, 1000);
+        assert_eq!(cfg.backend, Backend::Pjrt);
+        assert_eq!(cfg.mode, PowerMode::FiveW);
+        assert_eq!(cfg.devices, 4);
+        assert!((cfg.noise_pct - 0.10).abs() < 1e-12);
+    }
+
+    #[test]
+    fn partial_config_keeps_defaults() {
+        let cfg = LaspConfig::from_toml_str("[tune]\napp = \"clomp\"\n").unwrap();
+        assert_eq!(cfg.app, AppKind::Clomp);
+        assert_eq!(cfg.iterations, LaspConfig::default().iterations);
+    }
+
+    #[test]
+    fn rejects_bad_values() {
+        assert!(LaspConfig::from_toml_str("[tune]\nalpha = 2.0\n").is_err());
+        assert!(LaspConfig::from_toml_str("[tune]\napp = \"nope\"\n").is_err());
+        assert!(LaspConfig::from_toml_str("[tune]\niterations = 0\n").is_err());
+        assert!(LaspConfig::from_toml_str("[tune]\nalpha = 0.0\nbeta = 0.0\n").is_err());
+    }
+
+    #[test]
+    fn noise_model_from_pct() {
+        let mut cfg = LaspConfig::default();
+        assert_eq!(cfg.noise(), NoiseModel::none());
+        cfg.noise_pct = 0.15;
+        assert_eq!(cfg.noise(), NoiseModel::uniform(0.15));
+    }
+}

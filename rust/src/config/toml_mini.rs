@@ -1,0 +1,181 @@
+//! TOML-subset parser: `[section]`, `key = value`, `#` comments.
+
+use std::collections::BTreeMap;
+
+/// A parsed scalar value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    /// Floats accept integer literals too (`alpha = 1` is fine).
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(f) => Some(*f),
+            TomlValue::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// Parsed document: section -> key -> value. Keys before any `[section]`
+/// land in the `""` section.
+pub type TomlDoc = BTreeMap<String, BTreeMap<String, TomlValue>>;
+
+/// Parse the TOML subset. Errors carry the 1-based line number.
+pub fn parse_toml(text: &str) -> Result<TomlDoc, String> {
+    let mut doc: TomlDoc = BTreeMap::new();
+    let mut section = String::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest
+                .strip_suffix(']')
+                .ok_or_else(|| format!("line {}: unterminated section", lineno + 1))?
+                .trim();
+            if name.is_empty() || name.contains('[') || name.contains('.') {
+                return Err(format!("line {}: unsupported section '{name}'", lineno + 1));
+            }
+            section = name.to_string();
+            doc.entry(section.clone()).or_default();
+            continue;
+        }
+        let (key, value) = line
+            .split_once('=')
+            .ok_or_else(|| format!("line {}: expected key = value", lineno + 1))?;
+        let key = key.trim();
+        if key.is_empty() {
+            return Err(format!("line {}: empty key", lineno + 1));
+        }
+        let value = parse_value(value.trim())
+            .map_err(|e| format!("line {}: {e}", lineno + 1))?;
+        doc.entry(section.clone())
+            .or_default()
+            .insert(key.to_string(), value);
+    }
+    Ok(doc)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' inside a quoted string does not start a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(v: &str) -> Result<TomlValue, String> {
+    if v.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(stripped) = v.strip_prefix('"') {
+        let inner = stripped
+            .strip_suffix('"')
+            .ok_or("unterminated string")?;
+        if inner.contains('"') {
+            return Err("embedded quote in string".into());
+        }
+        return Ok(TomlValue::Str(inner.to_string()));
+    }
+    match v {
+        "true" => return Ok(TomlValue::Bool(true)),
+        "false" => return Ok(TomlValue::Bool(false)),
+        _ => {}
+    }
+    if v.starts_with('[') {
+        return Err("arrays are not supported in this subset".into());
+    }
+    if let Ok(i) = v.parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = v.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    Err(format!("cannot parse value '{v}'"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = parse_toml(
+            "top = 1\n[a]\nx = \"s\"\ny = 2\nz = 2.5\nw = true\n[b]\nq = false\n",
+        )
+        .unwrap();
+        assert_eq!(doc[""]["top"], TomlValue::Int(1));
+        assert_eq!(doc["a"]["x"], TomlValue::Str("s".into()));
+        assert_eq!(doc["a"]["y"], TomlValue::Int(2));
+        assert_eq!(doc["a"]["z"], TomlValue::Float(2.5));
+        assert_eq!(doc["a"]["w"], TomlValue::Bool(true));
+        assert_eq!(doc["b"]["q"], TomlValue::Bool(false));
+    }
+
+    #[test]
+    fn comments_stripped_but_not_in_strings() {
+        let doc = parse_toml("[s]\na = 1 # trailing\nb = \"x # y\"\n").unwrap();
+        assert_eq!(doc["s"]["a"], TomlValue::Int(1));
+        assert_eq!(doc["s"]["b"], TomlValue::Str("x # y".into()));
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let err = parse_toml("[s]\nbad line\n").unwrap_err();
+        assert!(err.contains("line 2"), "{err}");
+        let err = parse_toml("[unterminated\n").unwrap_err();
+        assert!(err.contains("line 1"), "{err}");
+    }
+
+    #[test]
+    fn rejects_unsupported_constructs() {
+        assert!(parse_toml("[a.b]\n").is_err());
+        assert!(parse_toml("x = [1, 2]\n").is_err());
+        assert!(parse_toml("x = \"unterminated\n").is_err());
+    }
+
+    #[test]
+    fn float_coercion() {
+        assert_eq!(TomlValue::Int(3).as_float(), Some(3.0));
+        assert_eq!(TomlValue::Str("s".into()).as_float(), None);
+    }
+
+    #[test]
+    fn later_values_override() {
+        let doc = parse_toml("[s]\na = 1\na = 2\n").unwrap();
+        assert_eq!(doc["s"]["a"], TomlValue::Int(2));
+    }
+}

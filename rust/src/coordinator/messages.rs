@@ -1,0 +1,191 @@
+//! Leader↔worker wire protocol with CoAP-flavoured constraints.
+//!
+//! The paper (§IV-A) positions LASP behind CoAP (Constrained Application
+//! Protocol). We model the properties that matter to the coordinator:
+//! small payloads (configuration indices and scalar measurements — never
+//! full traces), per-message size accounting, and a lossy/laggy link
+//! simulator that the leader's retry logic must absorb.
+
+use crate::apps::AppKind;
+use crate::device::PowerMode;
+use crate::util::Rng;
+
+/// Protocol messages. Payload sizes are kept CoAP-friendly: indices and
+/// scalars only.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Message {
+    /// Leader -> worker: run a tuning job.
+    TuneJob {
+        job_id: u64,
+        app: AppKind,
+        iterations: usize,
+        alpha: f64,
+        beta: f64,
+    },
+    /// Leader -> worker: switch power mode (environment volatility).
+    SetPowerMode { mode: PowerMode },
+    /// Leader -> worker: orderly shutdown.
+    Shutdown,
+    /// Worker -> leader: periodic progress beacon.
+    Progress {
+        job_id: u64,
+        device_id: u32,
+        iterations_done: usize,
+        current_best: usize,
+    },
+    /// Worker -> leader: job finished.
+    JobDone {
+        job_id: u64,
+        device_id: u32,
+        best_index: usize,
+        pulls_of_best: f64,
+        tuner_wall_seconds: f64,
+        simulated_device_seconds: f64,
+    },
+    /// Worker -> leader: device registering with the fleet.
+    Register { device_id: u32, mode: PowerMode },
+}
+
+impl Message {
+    /// Approximate encoded size in bytes (CoAP budget accounting). The
+    /// constants mirror a compact CBOR-ish encoding of each variant.
+    pub fn wire_size(&self) -> usize {
+        match self {
+            Message::TuneJob { .. } => 4 + 8 + 1 + 4 + 8 + 8,
+            Message::SetPowerMode { .. } => 4 + 1,
+            Message::Shutdown => 4,
+            Message::Progress { .. } => 4 + 8 + 4 + 4 + 4,
+            Message::JobDone { .. } => 4 + 8 + 4 + 4 + 8 + 8 + 8,
+            Message::Register { .. } => 4 + 4 + 1,
+        }
+    }
+
+    /// CoAP default MTU-safe payload bound (RFC 7252 suggests ≤ ~1 KiB;
+    /// we keep an order of magnitude under it).
+    pub const MAX_WIRE_SIZE: usize = 128;
+}
+
+/// A message in flight, stamped with simulated arrival delay.
+#[derive(Debug, Clone)]
+pub struct Envelope {
+    pub msg: Message,
+    /// Simulated network latency for this hop, seconds.
+    pub latency_s: f64,
+}
+
+/// Lossy, laggy link model for the edge network.
+#[derive(Debug, Clone)]
+pub struct LinkSim {
+    rng: Rng,
+    /// Probability a message is dropped.
+    pub loss_prob: f64,
+    /// Mean latency, seconds.
+    pub mean_latency_s: f64,
+    dropped: u64,
+    delivered: u64,
+    bytes: u64,
+}
+
+impl LinkSim {
+    pub fn new(seed: u64, loss_prob: f64, mean_latency_s: f64) -> Self {
+        assert!((0.0..1.0).contains(&loss_prob));
+        LinkSim {
+            rng: Rng::new(seed),
+            loss_prob,
+            mean_latency_s,
+            dropped: 0,
+            delivered: 0,
+            bytes: 0,
+        }
+    }
+
+    /// Perfect link.
+    pub fn ideal() -> Self {
+        LinkSim::new(0, 0.0, 0.0)
+    }
+
+    /// Attempt a send: `None` = dropped, `Some(envelope)` = delivered with
+    /// a sampled latency.
+    pub fn transmit(&mut self, msg: Message) -> Option<Envelope> {
+        assert!(
+            msg.wire_size() <= Message::MAX_WIRE_SIZE,
+            "message exceeds CoAP budget: {} B",
+            msg.wire_size()
+        );
+        if self.rng.uniform() < self.loss_prob {
+            self.dropped += 1;
+            return None;
+        }
+        // Exponential-ish latency: -ln(U) * mean.
+        let latency_s = -self.rng.uniform().max(1e-12).ln() * self.mean_latency_s;
+        self.delivered += 1;
+        self.bytes += msg.wire_size() as u64;
+        Some(Envelope { msg, latency_s })
+    }
+
+    /// (delivered, dropped, bytes) counters.
+    pub fn stats(&self) -> (u64, u64, u64) {
+        (self.delivered, self.dropped, self.bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_messages_fit_coap_budget() {
+        let msgs = [
+            Message::TuneJob { job_id: 1, app: AppKind::Hypre, iterations: 1000, alpha: 0.8, beta: 0.2 },
+            Message::SetPowerMode { mode: PowerMode::FiveW },
+            Message::Shutdown,
+            Message::Progress { job_id: 1, device_id: 2, iterations_done: 10, current_best: 5 },
+            Message::JobDone {
+                job_id: 1,
+                device_id: 2,
+                best_index: 7,
+                pulls_of_best: 99.0,
+                tuner_wall_seconds: 0.2,
+                simulated_device_seconds: 100.0,
+            },
+            Message::Register { device_id: 2, mode: PowerMode::Maxn },
+        ];
+        for m in msgs {
+            assert!(m.wire_size() <= Message::MAX_WIRE_SIZE, "{m:?}");
+        }
+    }
+
+    #[test]
+    fn ideal_link_delivers_everything() {
+        let mut link = LinkSim::ideal();
+        for _ in 0..100 {
+            assert!(link.transmit(Message::Shutdown).is_some());
+        }
+        assert_eq!(link.stats().1, 0);
+    }
+
+    #[test]
+    fn lossy_link_drops_roughly_p() {
+        let mut link = LinkSim::new(5, 0.3, 0.01);
+        let mut dropped = 0;
+        for _ in 0..10_000 {
+            if link.transmit(Message::Shutdown).is_none() {
+                dropped += 1;
+            }
+        }
+        let rate = dropped as f64 / 10_000.0;
+        assert!((rate - 0.3).abs() < 0.03, "drop rate {rate}");
+    }
+
+    #[test]
+    fn latency_positive_mean_close() {
+        let mut link = LinkSim::new(7, 0.0, 0.05);
+        let lats: Vec<f64> = (0..5000)
+            .filter_map(|_| link.transmit(Message::Shutdown))
+            .map(|e| e.latency_s)
+            .collect();
+        let mean = crate::util::stats::mean(&lats);
+        assert!((mean - 0.05).abs() < 0.01, "mean latency {mean}");
+        assert!(lats.iter().all(|&l| l >= 0.0));
+    }
+}

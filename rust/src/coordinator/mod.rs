@@ -1,0 +1,29 @@
+//! Edge-fleet coordinator (paper Fig 1 + §IV-A).
+//!
+//! The paper's deployment story: a *leader* (the HPC-side controller)
+//! dispatches tuning jobs to a fleet of heterogeneous edge devices over a
+//! constrained CoAP-like transport; each device runs LASP locally at low
+//! fidelity; tuned configurations flow back and are validated at high
+//! fidelity on the HPC node before production use.
+//!
+//! This module builds that system with std threads and bounded channels
+//! (no external async runtime exists in this offline build — and bounded
+//! channels give us backpressure for free):
+//!
+//! * [`messages`] — the wire protocol: message enums with CoAP-style
+//!   payload-size accounting and a lossy/laggy link simulator.
+//! * [`worker`] — one thread per edge device: owns a `JetsonNano`, executes
+//!   `TuneJob`s with a local [`crate::bandit::UcbTuner`], streams progress.
+//! * [`leader`] — job queue, device registry, least-loaded dispatch,
+//!   result collection, retry on device loss.
+//! * [`transfer`] — LF→HF transfer validation on the simulated HPC node.
+
+pub mod leader;
+pub mod messages;
+pub mod transfer;
+pub mod worker;
+
+pub use leader::{Fleet, FleetConfig, JobResult, TuneJob};
+pub use messages::{Envelope, LinkSim, Message};
+pub use transfer::{HfValidation, validate_on_hpc};
+pub use worker::{DeviceWorker, WorkerConfig};

@@ -1,0 +1,124 @@
+//! LF→HF transfer validation (paper Fig 1, right-hand side): take a
+//! configuration tuned on an edge device at low fidelity and evaluate it on
+//! the HPC node at full fidelity, reporting the paper's §II-A metrics.
+
+use crate::apps::AppModel;
+use crate::device::{Device, HpcNode};
+use crate::tuning::{oracle_sweep, oracle_distance_pct};
+use crate::util::stats;
+
+/// Result of validating a tuned configuration at high fidelity.
+#[derive(Debug, Clone)]
+pub struct HfValidation {
+    /// The validated configuration.
+    pub index: usize,
+    /// Measured HF execution time, seconds.
+    pub hf_time_s: f64,
+    /// Measured HF power, watts.
+    pub hf_power_w: f64,
+    /// HF execution time of the Table II default configuration.
+    pub default_time_s: f64,
+    /// Eq. 8 performance gain over the default, percent.
+    pub gain_pct: f64,
+    /// §II-A distance from the HF oracle, percent.
+    pub oracle_distance_pct: f64,
+}
+
+/// Evaluate `index` on the simulated i7-14700 at `q = 1` and score it
+/// against the default configuration and the HF oracle.
+pub fn validate_on_hpc(app: &dyn AppModel, index: usize, seed: u64) -> HfValidation {
+    let mut node = HpcNode::new(seed);
+    let m = node.run(&app.workload(index, 1.0));
+    let m_default = node.run(&app.workload(app.default_index(), 1.0));
+
+    // Oracle sweep on the HF spec (noise-free).
+    let sweep = oracle_sweep(app, node.spec(), 1.0);
+    let dist = oracle_distance_pct(&sweep, index);
+    let gain_pct = (m_default.time_s - m.time_s) / m_default.time_s * 100.0;
+
+    HfValidation {
+        index,
+        hf_time_s: m.time_s,
+        hf_power_w: m.power_w,
+        default_time_s: m_default.time_s,
+        gain_pct,
+        oracle_distance_pct: dist,
+    }
+}
+
+/// Fig 2(a) helper: average HF oracle distance of the LF top-`k` configs.
+pub fn lf_topk_hf_distance(
+    app: &dyn AppModel,
+    edge_spec: &crate::device::DeviceSpec,
+    hpc_spec: &crate::device::DeviceSpec,
+    lf: f64,
+    k: usize,
+) -> f64 {
+    let lf_sweep = oracle_sweep(app, edge_spec, lf);
+    let hf_sweep = oracle_sweep(app, hpc_spec, 1.0);
+    let lf_times: Vec<f64> = lf_sweep.iter().map(|m| m.time_s).collect();
+    let top = stats::bottom_k(&lf_times, k);
+    let dists: Vec<f64> = top
+        .iter()
+        .map(|&i| oracle_distance_pct(&hf_sweep, i))
+        .collect();
+    stats::mean(&dists)
+}
+
+/// Fig 2(b) helper: |top-k(LF) ∩ top-k(HF)|.
+pub fn lf_hf_topk_overlap(
+    app: &dyn AppModel,
+    edge_spec: &crate::device::DeviceSpec,
+    hpc_spec: &crate::device::DeviceSpec,
+    lf: f64,
+    k: usize,
+) -> usize {
+    let lf_sweep = oracle_sweep(app, edge_spec, lf);
+    let hf_sweep = oracle_sweep(app, hpc_spec, 1.0);
+    let lf_times: Vec<f64> = lf_sweep.iter().map(|m| m.time_s).collect();
+    let hf_times: Vec<f64> = hf_sweep.iter().map(|m| m.time_s).collect();
+    let a: std::collections::HashSet<usize> =
+        stats::bottom_k(&lf_times, k).into_iter().collect();
+    let b: std::collections::HashSet<usize> =
+        stats::bottom_k(&hf_times, k).into_iter().collect();
+    a.intersection(&b).count()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::{self, AppKind};
+    use crate::device::PowerMode;
+
+    #[test]
+    fn oracle_validates_at_zero_distance() {
+        let app = apps::build(AppKind::Lulesh);
+        let node = HpcNode::new(0);
+        let sweep = oracle_sweep(app.as_ref(), node.spec(), 1.0);
+        let times: Vec<f64> = sweep.iter().map(|m| m.time_s).collect();
+        let oracle = stats::argmin(&times);
+        let v = validate_on_hpc(app.as_ref(), oracle, 3);
+        assert!(v.oracle_distance_pct.abs() < 1e-9);
+        assert!(v.gain_pct > 0.0, "oracle beats default");
+    }
+
+    #[test]
+    fn default_config_gains_zero() {
+        let app = apps::build(AppKind::Kripke);
+        let v = validate_on_hpc(app.as_ref(), app.default_index(), 5);
+        // Default vs default: gain within run-to-run noise of zero.
+        assert!(v.gain_pct.abs() < 5.0, "gain {}", v.gain_pct);
+    }
+
+    #[test]
+    fn fig2_metrics_reasonable() {
+        let app = apps::build(AppKind::Kripke);
+        let edge = PowerMode::Maxn.spec();
+        let hpc = HpcNode::new(0);
+        let d = lf_topk_hf_distance(app.as_ref(), &edge, hpc.spec(), 0.15, 20);
+        // Paper: LF top-20 within ~25% of HF oracle.
+        assert!(d >= 0.0 && d < 60.0, "distance {d}");
+        let overlap = lf_hf_topk_overlap(app.as_ref(), &edge, hpc.spec(), 0.15, 20);
+        assert!(overlap >= 8, "overlap {overlap}");
+    }
+}

@@ -1,0 +1,282 @@
+//! Edge-device worker: one thread per simulated Jetson, executing tuning
+//! jobs with a local UCB tuner and streaming progress beacons to the
+//! leader. Python never appears here — if the PJRT backend is enabled the
+//! worker scores arms through the shared [`crate::runtime::EngineHandle`].
+
+use super::messages::{LinkSim, Message};
+use crate::apps::{self};
+use crate::bandit::{Policy, SubsetTuner, UcbTuner};
+use crate::device::{Device, JetsonNano, NoiseModel, PowerMode};
+use crate::runtime::{EngineHandle, PjrtScoreBackend};
+use std::sync::mpsc::{Receiver, Sender, TryRecvError};
+
+/// Static worker parameters.
+#[derive(Debug, Clone)]
+pub struct WorkerConfig {
+    pub device_id: u32,
+    pub mode: PowerMode,
+    pub seed: u64,
+    /// LF evaluation point for this device.
+    pub fidelity: f64,
+    /// Send a Progress beacon every this many iterations.
+    pub progress_every: usize,
+    /// Injected measurement error (Fig 12 studies).
+    pub injected_noise: NoiseModel,
+}
+
+impl Default for WorkerConfig {
+    fn default() -> Self {
+        WorkerConfig {
+            device_id: 0,
+            mode: PowerMode::Maxn,
+            seed: 1,
+            fidelity: 0.15,
+            progress_every: 100,
+            injected_noise: NoiseModel::none(),
+        }
+    }
+}
+
+/// A running worker thread (joined on drop of the fleet).
+pub struct DeviceWorker {
+    pub device_id: u32,
+    handle: Option<std::thread::JoinHandle<()>>,
+    /// Leader -> worker mailbox.
+    pub mailbox: Sender<Message>,
+}
+
+impl DeviceWorker {
+    /// Spawn the worker loop. `uplink` carries worker->leader messages
+    /// through the lossy link owned by the worker (each edge device has its
+    /// own radio).
+    pub fn spawn(
+        config: WorkerConfig,
+        uplink: Sender<Message>,
+        mut link: LinkSim,
+        engine: Option<EngineHandle>,
+    ) -> DeviceWorker {
+        let (tx, rx): (Sender<Message>, Receiver<Message>) = std::sync::mpsc::channel();
+        let device_id = config.device_id;
+        let handle = std::thread::Builder::new()
+            .name(format!("edge-{device_id}"))
+            .spawn(move || worker_loop(config, rx, uplink, &mut link, engine))
+            .expect("spawn worker");
+        DeviceWorker { device_id, handle: Some(handle), mailbox: tx }
+    }
+
+    /// Wait for the worker to exit (after a Shutdown message).
+    pub fn join(mut self) {
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Non-confirmable send (CoAP NON): progress beacons may be lost.
+fn send_up(link: &mut LinkSim, uplink: &Sender<Message>, msg: Message) {
+    // Lossy transmit: drops vanish, deliveries carry simulated latency
+    // which we surface as ordering only (no wall-clock sleep in tests).
+    if let Some(env) = link.transmit(msg) {
+        let _ = uplink.send(env.msg);
+    }
+}
+
+/// Confirmable send (CoAP CON): retransmit until the link delivers.
+/// Registration and JobDone must not be lost, or the leader would leak the
+/// job; CoAP's acknowledged retransmission provides exactly this.
+fn send_up_confirmable(link: &mut LinkSim, uplink: &Sender<Message>, msg: Message) {
+    for _ in 0..1000 {
+        if let Some(env) = link.transmit(msg.clone()) {
+            let _ = uplink.send(env.msg);
+            return;
+        }
+    }
+    // Pathologically lossy link: give up (leader's timeout handles it).
+}
+
+fn worker_loop(
+    config: WorkerConfig,
+    rx: Receiver<Message>,
+    uplink: Sender<Message>,
+    link: &mut LinkSim,
+    engine: Option<EngineHandle>,
+) {
+    let mut device = JetsonNano::new(config.mode, config.seed)
+        .with_fidelity(config.fidelity)
+        .with_injected_noise(config.injected_noise);
+    send_up_confirmable(
+        link,
+        &uplink,
+        Message::Register { device_id: config.device_id, mode: config.mode },
+    );
+
+    loop {
+        let msg = match rx.recv() {
+            Ok(m) => m,
+            Err(_) => return, // leader gone
+        };
+        match msg {
+            Message::Shutdown => return,
+            Message::SetPowerMode { mode } => {
+                // Mode switch mid-fleet: new spec, thermals persist.
+                let seed = config.seed.wrapping_add(0x5157);
+                device = JetsonNano::new(mode, seed)
+                    .with_fidelity(config.fidelity)
+                    .with_injected_noise(config.injected_noise);
+            }
+            Message::TuneJob { job_id, app, iterations, alpha, beta } => {
+                let model = apps::build(app);
+                let k = model.space().len();
+                // Large spaces tune over a seeded candidate subset
+                // (bandit::subset); otherwise full UCB1 — through the PJRT
+                // artifact when the engine is attached.
+                let mut tuner: Box<dyn Policy> = if k > iterations / 2 && k > 256 {
+                    let m = SubsetTuner::recommended_size(k, iterations);
+                    Box::new(SubsetTuner::new(k, m, alpha, beta, config.seed))
+                } else {
+                    match &engine {
+                        Some(h) => Box::new(UcbTuner::with_backend(
+                            k,
+                            alpha,
+                            beta,
+                            Box::new(PjrtScoreBackend::new(h.clone(), app.name())),
+                        )),
+                        None => Box::new(UcbTuner::new(k, alpha, beta)),
+                    }
+                };
+                let started = std::time::Instant::now();
+                let mut device_seconds = 0.0;
+                for it in 0..iterations {
+                    // Mid-job control: handle mode switches without abandoning
+                    // the job (the bandit adapts to the new distribution).
+                    match rx.try_recv() {
+                        Ok(Message::SetPowerMode { mode }) => {
+                            let seed = config.seed.wrapping_add(it as u64);
+                            device = JetsonNano::new(mode, seed)
+                                .with_fidelity(config.fidelity)
+                                .with_injected_noise(config.injected_noise);
+                        }
+                        Ok(Message::Shutdown) => return,
+                        Ok(_) | Err(TryRecvError::Empty) => {}
+                        Err(TryRecvError::Disconnected) => return,
+                    }
+                    let arm = tuner.select();
+                    let w = model.workload(arm, device.fidelity());
+                    let m = device.run(&w);
+                    device_seconds += m.time_s;
+                    tuner.update(arm, m.time_s, m.power_w);
+                    if (it + 1) % config.progress_every == 0 {
+                        send_up(
+                            link,
+                            &uplink,
+                            Message::Progress {
+                                job_id,
+                                device_id: config.device_id,
+                                iterations_done: it + 1,
+                                current_best: tuner.most_selected(),
+                            },
+                        );
+                    }
+                }
+                let best_index = tuner.most_selected();
+                send_up_confirmable(
+                    link,
+                    &uplink,
+                    Message::JobDone {
+                        job_id,
+                        device_id: config.device_id,
+                        best_index,
+                        pulls_of_best: tuner.counts()[best_index],
+                        tuner_wall_seconds: started.elapsed().as_secs_f64(),
+                        simulated_device_seconds: device_seconds,
+                    },
+                );
+            }
+            // Leader-bound messages are ignored if misrouted.
+            Message::Progress { .. } | Message::JobDone { .. } | Message::Register { .. } => {}
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::AppKind;
+
+    #[test]
+    fn worker_registers_runs_job_and_shuts_down() {
+        let (up_tx, up_rx) = std::sync::mpsc::channel();
+        let w = DeviceWorker::spawn(
+            WorkerConfig { device_id: 7, progress_every: 50, ..Default::default() },
+            up_tx,
+            LinkSim::ideal(),
+            None,
+        );
+        // Registration arrives first.
+        match up_rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap() {
+            Message::Register { device_id, .. } => assert_eq!(device_id, 7),
+            other => panic!("expected Register, got {other:?}"),
+        }
+        w.mailbox
+            .send(Message::TuneJob {
+                job_id: 42,
+                app: AppKind::Clomp,
+                iterations: 200,
+                alpha: 1.0,
+                beta: 0.0,
+            })
+            .unwrap();
+        let mut progress_seen = 0;
+        let done = loop {
+            match up_rx.recv_timeout(std::time::Duration::from_secs(30)).unwrap() {
+                Message::Progress { job_id, .. } => {
+                    assert_eq!(job_id, 42);
+                    progress_seen += 1;
+                }
+                Message::JobDone { job_id, best_index, .. } => {
+                    assert_eq!(job_id, 42);
+                    break best_index;
+                }
+                other => panic!("unexpected {other:?}"),
+            }
+        };
+        assert!(progress_seen >= 3, "progress beacons: {progress_seen}");
+        assert!(done < 125);
+        w.mailbox.send(Message::Shutdown).unwrap();
+        w.join();
+    }
+
+    #[test]
+    fn worker_survives_mode_switch_mid_job() {
+        let (up_tx, up_rx) = std::sync::mpsc::channel();
+        let w = DeviceWorker::spawn(
+            WorkerConfig { device_id: 1, progress_every: 25, ..Default::default() },
+            up_tx,
+            LinkSim::ideal(),
+            None,
+        );
+        let _ = up_rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap();
+        w.mailbox
+            .send(Message::TuneJob {
+                job_id: 1,
+                app: AppKind::Lulesh,
+                iterations: 300,
+                alpha: 0.8,
+                beta: 0.2,
+            })
+            .unwrap();
+        // Switch power mode while the job runs.
+        w.mailbox.send(Message::SetPowerMode { mode: PowerMode::FiveW }).unwrap();
+        loop {
+            match up_rx.recv_timeout(std::time::Duration::from_secs(60)).unwrap() {
+                Message::JobDone { job_id, .. } => {
+                    assert_eq!(job_id, 1);
+                    break;
+                }
+                _ => continue,
+            }
+        }
+        w.mailbox.send(Message::Shutdown).unwrap();
+        w.join();
+    }
+}

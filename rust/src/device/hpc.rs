@@ -1,0 +1,116 @@
+//! High-fidelity target node — the paper's Intel i7-14700 system
+//! (20 cores / 28 threads, 5.3 GHz max turbo, 64 GB DDR5, Ubuntu 24.04).
+//!
+//! Configurations tuned at low fidelity on the edge device are validated
+//! here at `q = 1` (paper Fig 1's right-hand side). Actively cooled and
+//! effectively uncapped for our workloads.
+
+use super::{ideal_run, run_with_cap, Device, DeviceSpec, Measurement, NoiseModel};
+use crate::apps::Workload;
+use crate::device::thermal::ThermalModel;
+use crate::util::Rng;
+
+/// Simulated i7-14700 workstation.
+pub struct HpcNode {
+    spec: DeviceSpec,
+    thermal: ThermalModel,
+    rng: Rng,
+    seed: u64,
+    intrinsic_noise: NoiseModel,
+}
+
+impl HpcNode {
+    /// i7-14700 class node, deterministic from `seed`.
+    pub fn new(seed: u64) -> Self {
+        HpcNode {
+            spec: DeviceSpec {
+                name: "i7-14700".into(),
+                cores: 20,
+                freq_ghz: 5.3,
+                ipc: 3.2,
+                mem_bw_gbs: 89.6, // dual-channel DDR5-5600
+                power_budget_w: 219.0,
+                idle_power_w: 18.0,
+                core_power_w: 9.0,
+                mem_power_w: 8.0,
+            },
+            thermal: ThermalModel::active_cooling(),
+            rng: Rng::new(seed),
+            seed,
+            intrinsic_noise: NoiseModel::uniform(0.01),
+        }
+    }
+
+    /// Builder: override intrinsic variability.
+    pub fn with_intrinsic_noise(mut self, noise: NoiseModel) -> Self {
+        self.intrinsic_noise = noise;
+        self
+    }
+}
+
+impl Device for HpcNode {
+    fn spec(&self) -> &DeviceSpec {
+        &self.spec
+    }
+
+    /// High fidelity: the production problem size.
+    fn fidelity(&self) -> f64 {
+        1.0
+    }
+
+    fn run(&mut self, w: &Workload) -> Measurement {
+        let scale = self.thermal.freq_scale();
+        let ideal = if scale < 1.0 {
+            ideal_run(&self.spec, w, scale)
+        } else {
+            run_with_cap(&self.spec, w)
+        };
+        self.thermal.advance(ideal.power_w, ideal.time_s);
+        self.intrinsic_noise.perturb(ideal, &mut self.rng)
+    }
+
+    fn reset(&mut self) {
+        self.thermal.reset();
+        self.rng = Rng::new(self.seed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::{JetsonNano, PowerMode};
+
+    fn wl() -> Workload {
+        Workload { compute: 3.0, mem_intensity: 0.45, parallel_frac: 0.92, overhead: 0.02 }
+    }
+
+    #[test]
+    fn much_faster_than_edge() {
+        let mut hpc = HpcNode::new(1).with_intrinsic_noise(NoiseModel::none());
+        let mut edge = JetsonNano::new(PowerMode::Maxn, 1)
+            .with_intrinsic_noise(NoiseModel::none());
+        let (h, e) = (hpc.run(&wl()), edge.run(&wl()));
+        assert!(e.time_s / h.time_s > 4.0, "speedup {}", e.time_s / h.time_s);
+    }
+
+    #[test]
+    fn full_fidelity() {
+        assert_eq!(HpcNode::new(0).fidelity(), 1.0);
+    }
+
+    #[test]
+    fn deterministic_and_resettable() {
+        let mut a = HpcNode::new(5);
+        let first = a.run(&wl());
+        a.run(&wl());
+        a.reset();
+        assert_eq!(a.run(&wl()), first);
+    }
+
+    #[test]
+    fn draws_more_power_than_edge() {
+        let mut hpc = HpcNode::new(2).with_intrinsic_noise(NoiseModel::none());
+        let m = hpc.run(&wl());
+        assert!(m.power_w > 20.0);
+    }
+}

@@ -1,0 +1,257 @@
+//! NVIDIA Jetson Nano simulator — the paper's edge testbed (Table I).
+//!
+//! | Parameter               | MAXN  | 5W  |
+//! |--------------------------|-------|-----|
+//! | Power budget (watts)     | 10    | 5   |
+//! | Online CPU               | 4     | 2   |
+//! | CPU max frequency (MHz)  | 1479  | 918 |
+//! | GPU TPC (MHz)            | 921.6 | 640 |
+//!
+//! The CPU-side model executes the Table I operating point with the shared
+//! roofline core ([`super::ideal_run`]), power-cap throttling
+//! ([`super::run_with_cap`]), a passive-cooling thermal governor, and
+//! intrinsic run-to-run noise. The GPU clock appears only through the
+//! board's idle/aux power (our four workloads are CPU codes).
+
+use super::{run_with_cap, Device, DeviceSpec, ideal_run, Measurement, NoiseModel};
+use crate::apps::Workload;
+use crate::device::thermal::ThermalModel;
+use crate::util::Rng;
+
+/// Table I operating modes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PowerMode {
+    /// 10 W budget, 4 cores @ 1479 MHz.
+    Maxn,
+    /// 5 W budget, 2 cores @ 918 MHz.
+    FiveW,
+}
+
+impl PowerMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            PowerMode::Maxn => "MAXN",
+            PowerMode::FiveW => "5W",
+        }
+    }
+
+    /// Table I row for this mode.
+    pub fn spec(&self) -> DeviceSpec {
+        match self {
+            PowerMode::Maxn => DeviceSpec {
+                name: "jetson-nano-maxn".into(),
+                cores: 4,
+                freq_ghz: 1.479,
+                ipc: 1.6, // Cortex-A57 class
+                mem_bw_gbs: 25.6,
+                power_budget_w: 10.0,
+                idle_power_w: 1.25,
+                core_power_w: 1.65,
+                mem_power_w: 1.1,
+            },
+            PowerMode::FiveW => DeviceSpec {
+                name: "jetson-nano-5w".into(),
+                cores: 2,
+                freq_ghz: 0.918,
+                ipc: 1.6,
+                mem_bw_gbs: 25.6,
+                power_budget_w: 5.0,
+                idle_power_w: 1.0,
+                core_power_w: 1.65,
+                mem_power_w: 1.1,
+            },
+        }
+    }
+}
+
+impl std::str::FromStr for PowerMode {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "maxn" => Ok(PowerMode::Maxn),
+            "5w" | "fivew" => Ok(PowerMode::FiveW),
+            other => Err(anyhow::anyhow!("unknown power mode '{other}' (maxn|5w)")),
+        }
+    }
+}
+
+/// A stateful simulated Jetson Nano.
+pub struct JetsonNano {
+    spec: DeviceSpec,
+    mode: PowerMode,
+    thermal: ThermalModel,
+    rng: Rng,
+    seed: u64,
+    /// Low-fidelity evaluation point for this device (paper §II-C).
+    fidelity: f64,
+    /// Intrinsic run-to-run variability (always present on real boards).
+    intrinsic_noise: NoiseModel,
+    /// Injected synthetic error (Fig 12); default none.
+    injected_noise: NoiseModel,
+    runs: u64,
+}
+
+impl JetsonNano {
+    /// Standard board at `mode`, deterministic from `seed`. LF point 0.15.
+    pub fn new(mode: PowerMode, seed: u64) -> Self {
+        JetsonNano {
+            spec: mode.spec(),
+            mode,
+            thermal: ThermalModel::edge(),
+            rng: Rng::new(seed),
+            seed,
+            fidelity: 0.15,
+            intrinsic_noise: NoiseModel::uniform(0.015),
+            injected_noise: NoiseModel::none(),
+            runs: 0,
+        }
+    }
+
+    /// Builder: set the LF evaluation fidelity.
+    pub fn with_fidelity(mut self, q: f64) -> Self {
+        self.fidelity = q.clamp(0.0, 1.0);
+        self
+    }
+
+    /// Builder: inject Fig 12 synthetic measurement error.
+    pub fn with_injected_noise(mut self, noise: NoiseModel) -> Self {
+        self.injected_noise = noise;
+        self
+    }
+
+    /// Builder: override intrinsic variability (0 = ideal board).
+    pub fn with_intrinsic_noise(mut self, noise: NoiseModel) -> Self {
+        self.intrinsic_noise = noise;
+        self
+    }
+
+    pub fn mode(&self) -> PowerMode {
+        self.mode
+    }
+
+    /// Current die temperature (for telemetry).
+    pub fn temperature_c(&self) -> f64 {
+        self.thermal.temperature()
+    }
+
+    /// Number of runs executed since the last reset.
+    pub fn run_count(&self) -> u64 {
+        self.runs
+    }
+}
+
+impl Device for JetsonNano {
+    fn spec(&self) -> &DeviceSpec {
+        &self.spec
+    }
+
+    fn fidelity(&self) -> f64 {
+        self.fidelity
+    }
+
+    fn run(&mut self, w: &Workload) -> Measurement {
+        // Thermal governor picks the clock before the run...
+        let thermal_scale = self.thermal.freq_scale();
+        let ideal = if thermal_scale < 1.0 {
+            ideal_run(&self.spec, w, thermal_scale)
+        } else {
+            run_with_cap(&self.spec, w)
+        };
+        // ...and the dissipated heat advances the RC state.
+        self.thermal.advance(ideal.power_w, ideal.time_s);
+        self.runs += 1;
+
+        let measured = self.intrinsic_noise.perturb(ideal, &mut self.rng);
+        self.injected_noise.perturb(measured, &mut self.rng)
+    }
+
+    fn reset(&mut self) {
+        self.thermal.reset();
+        self.rng = Rng::new(self.seed);
+        self.runs = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn wl() -> Workload {
+        Workload { compute: 1.5, mem_intensity: 0.45, parallel_frac: 0.9, overhead: 0.01 }
+    }
+
+    #[test]
+    fn table1_specs() {
+        let maxn = PowerMode::Maxn.spec();
+        assert_eq!(maxn.cores, 4);
+        assert!((maxn.freq_ghz - 1.479).abs() < 1e-9);
+        assert_eq!(maxn.power_budget_w, 10.0);
+        let five = PowerMode::FiveW.spec();
+        assert_eq!(five.cores, 2);
+        assert!((five.freq_ghz - 0.918).abs() < 1e-9);
+        assert_eq!(five.power_budget_w, 5.0);
+    }
+
+    #[test]
+    fn five_watt_slower_than_maxn() {
+        let mut a = JetsonNano::new(PowerMode::Maxn, 1).with_intrinsic_noise(NoiseModel::none());
+        let mut b = JetsonNano::new(PowerMode::FiveW, 1).with_intrinsic_noise(NoiseModel::none());
+        let (ma, mb) = (a.run(&wl()), b.run(&wl()));
+        assert!(mb.time_s > ma.time_s * 1.2, "{} vs {}", mb.time_s, ma.time_s);
+        assert!(mb.power_w <= 5.0 + 1e-6);
+        assert!(ma.power_w <= 10.0 + 1e-6);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = JetsonNano::new(PowerMode::Maxn, 99);
+        let mut b = JetsonNano::new(PowerMode::Maxn, 99);
+        for _ in 0..10 {
+            assert_eq!(a.run(&wl()), b.run(&wl()));
+        }
+    }
+
+    #[test]
+    fn reset_restores_stream() {
+        let mut d = JetsonNano::new(PowerMode::Maxn, 7);
+        let first = d.run(&wl());
+        for _ in 0..5 {
+            d.run(&wl());
+        }
+        d.reset();
+        assert_eq!(d.run(&wl()), first);
+        assert_eq!(d.run_count(), 1);
+    }
+
+    #[test]
+    fn sustained_load_heats_and_throttles() {
+        let mut d = JetsonNano::new(PowerMode::Maxn, 3).with_intrinsic_noise(NoiseModel::none());
+        let heavy = Workload { compute: 40.0, mem_intensity: 0.2, parallel_frac: 0.97, overhead: 0.0 };
+        let cold = d.run(&heavy);
+        for _ in 0..30 {
+            d.run(&heavy);
+        }
+        let hot = d.run(&heavy);
+        assert!(d.temperature_c() > 60.0, "temp {}", d.temperature_c());
+        assert!(hot.time_s >= cold.time_s * 0.99, "no slowdown under heat");
+    }
+
+    #[test]
+    fn injected_noise_widens_spread() {
+        let spread = |noise: NoiseModel| {
+            let mut d = JetsonNano::new(PowerMode::Maxn, 5)
+                .with_intrinsic_noise(NoiseModel::none())
+                .with_injected_noise(noise);
+            let light = Workload { compute: 0.2, ..wl() };
+            let xs: Vec<f64> = (0..200).map(|_| d.run(&light).time_s).collect();
+            crate::util::stats::std_dev(&xs) / crate::util::stats::mean(&xs)
+        };
+        assert!(spread(NoiseModel::uniform(0.15)) > spread(NoiseModel::uniform(0.05)));
+    }
+
+    #[test]
+    fn fidelity_builder() {
+        let d = JetsonNano::new(PowerMode::Maxn, 1).with_fidelity(0.3);
+        assert_eq!(d.fidelity(), 0.3);
+    }
+}

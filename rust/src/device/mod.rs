@@ -1,0 +1,214 @@
+//! Device simulators: the NVIDIA Jetson Nano edge board (Table I) and the
+//! high-fidelity HPC node (i7-14700) the paper transfers configurations to.
+//!
+//! A device turns an abstract [`crate::apps::Workload`] into a measured
+//! `(execution time, average power)` pair using a roofline-flavoured model:
+//!
+//! * per-core throughput falls with the workload's memory intensity
+//!   (edge DRAM bandwidth is the scarce resource: 25.6 GB/s on the Nano);
+//! * multi-core speedup follows Amdahl with the workload's parallel
+//!   fraction over the mode's online cores;
+//! * power = idle + dynamic(cores, utilization, memory traffic), **capped**
+//!   by the mode's power budget — exceeding the cap throttles the clock,
+//!   stretching execution time. This produces the power saturation the
+//!   paper observes (§V-D: power rewards are flatter than time rewards);
+//! * a thermal state (RC model) throttles sustained heavy loads — the
+//!   "volatile edge environment" the bandit must adapt to;
+//! * run-to-run measurement noise (uniform relative), plus optional
+//!   injected synthetic error for the Fig 12 sensitivity study.
+
+pub mod hpc;
+pub mod jetson;
+pub mod noise;
+pub mod thermal;
+
+pub use hpc::HpcNode;
+pub use jetson::{JetsonNano, PowerMode};
+pub use noise::NoiseModel;
+
+use crate::apps::Workload;
+
+/// One measured application run (paper: "sample evaluation").
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Measurement {
+    /// Wall-clock execution time, seconds.
+    pub time_s: f64,
+    /// Average power draw over the run, watts.
+    pub power_w: f64,
+}
+
+impl Measurement {
+    /// Energy consumed by the run, joules.
+    pub fn energy_j(&self) -> f64 {
+        self.time_s * self.power_w
+    }
+}
+
+/// Static description of a device's operating point.
+#[derive(Debug, Clone)]
+pub struct DeviceSpec {
+    pub name: String,
+    /// Online CPU cores.
+    pub cores: u32,
+    /// Sustained CPU clock, GHz.
+    pub freq_ghz: f64,
+    /// Peak instructions-per-cycle per core for compute-bound code.
+    pub ipc: f64,
+    /// Memory bandwidth, GB/s (relative penalty scale for memory-bound code).
+    pub mem_bw_gbs: f64,
+    /// Power budget, watts (throttling cap). `f64::INFINITY` = uncapped.
+    pub power_budget_w: f64,
+    /// Idle power, watts.
+    pub idle_power_w: f64,
+    /// Dynamic power per active core at full clock, watts.
+    pub core_power_w: f64,
+    /// Additional power for memory traffic at full intensity, watts.
+    pub mem_power_w: f64,
+}
+
+/// A device that can execute workloads. `run` mutates internal state
+/// (thermals, RNG) — devices are stateful simulators, one per tuning agent.
+pub trait Device: Send {
+    /// The device's current operating spec.
+    fn spec(&self) -> &DeviceSpec;
+
+    /// Execute a workload, returning a (noisy) measurement.
+    fn run(&mut self, w: &Workload) -> Measurement;
+
+    /// The fidelity this device evaluates at (paper: `q` < 1 on the edge,
+    /// 1.0 on the HPC target).
+    fn fidelity(&self) -> f64;
+
+    /// Reset mutable state (thermals, noise stream) between experiments.
+    fn reset(&mut self);
+}
+
+/// Deterministic core of the device model, shared by Jetson and HPC node:
+/// maps a workload to *noise-free* (time, power) under `spec`.
+pub fn ideal_run(spec: &DeviceSpec, w: &Workload, freq_scale: f64) -> Measurement {
+    let w = w.sanitized();
+    let freq = spec.freq_ghz * freq_scale.clamp(0.2, 1.0);
+
+    // Effective per-core throughput (reference core-seconds per second):
+    // compute-bound work scales with freq·ipc; memory-bound work is pinned
+    // to the bandwidth term and does not speed up with clock.
+    let compute_rate = freq * spec.ipc;
+    let mem_rate = spec.mem_bw_gbs / 8.0; // normalized: ref core ≈ 8 GB/s
+    let core_rate = 1.0
+        / ((1.0 - w.mem_intensity) / compute_rate + w.mem_intensity / mem_rate);
+
+    // Amdahl over online cores; memory-bound parallel work also contends
+    // for the shared bandwidth (cores beyond bw saturation don't help).
+    let cores = spec.cores as f64;
+    let bw_limited_cores = (mem_rate * 4.0 / core_rate).max(1.0);
+    let eff_cores = cores.min(1.0 + (bw_limited_cores - 1.0).max(0.0));
+    let speedup = 1.0 / ((1.0 - w.parallel_frac) + w.parallel_frac / eff_cores.max(1.0));
+
+    let time_s = w.overhead / freq + w.compute / (core_rate * speedup);
+
+    // Power: idle + active cores at utilization + memory traffic. The
+    // parallel phase keeps all cores busy, the serial phase one.
+    let util_cores = 1.0 + (cores - 1.0) * w.parallel_frac;
+    // Dynamic power ~ f³ for the capped-clock regime (V scales with f).
+    let dyn_power = util_cores * spec.core_power_w * freq_scale.powi(3)
+        + spec.mem_power_w * w.mem_intensity;
+    let power_w = spec.idle_power_w + dyn_power;
+
+    Measurement { time_s, power_w }
+}
+
+/// Resolve power-cap throttling: find the frequency scale at which the
+/// modelled power fits the budget, and return the throttled measurement.
+pub fn run_with_cap(spec: &DeviceSpec, w: &Workload) -> Measurement {
+    let full = ideal_run(spec, w, 1.0);
+    if full.power_w <= spec.power_budget_w {
+        return full;
+    }
+    // Bisect the frequency scale; dyn power ~ scale³ makes this monotone.
+    let (mut lo, mut hi) = (0.2f64, 1.0f64);
+    for _ in 0..24 {
+        let mid = 0.5 * (lo + hi);
+        if ideal_run(spec, w, mid).power_w > spec.power_budget_w {
+            hi = mid;
+        } else {
+            lo = mid;
+        }
+    }
+    ideal_run(spec, w, lo)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> DeviceSpec {
+        DeviceSpec {
+            name: "test".into(),
+            cores: 4,
+            freq_ghz: 1.5,
+            ipc: 2.0,
+            mem_bw_gbs: 25.6,
+            power_budget_w: 10.0,
+            idle_power_w: 1.5,
+            core_power_w: 1.8,
+            mem_power_w: 1.2,
+        }
+    }
+
+    fn wl() -> Workload {
+        Workload { compute: 2.0, mem_intensity: 0.4, parallel_frac: 0.9, overhead: 0.01 }
+    }
+
+    #[test]
+    fn more_compute_more_time() {
+        let s = spec();
+        let a = ideal_run(&s, &wl(), 1.0);
+        let b = ideal_run(&s, &Workload { compute: 4.0, ..wl() }, 1.0);
+        assert!(b.time_s > a.time_s * 1.5);
+    }
+
+    #[test]
+    fn parallel_work_faster_than_serial() {
+        let s = spec();
+        let par = ideal_run(&s, &Workload { parallel_frac: 0.95, ..wl() }, 1.0);
+        let ser = ideal_run(&s, &Workload { parallel_frac: 0.0, ..wl() }, 1.0);
+        assert!(par.time_s < ser.time_s);
+        // ...and draws more power (more cores busy).
+        assert!(par.power_w > ser.power_w);
+    }
+
+    #[test]
+    fn memory_bound_insensitive_to_clock() {
+        let s = spec();
+        let membound = Workload { mem_intensity: 1.0, ..wl() };
+        let fast = ideal_run(&s, &membound, 1.0);
+        let slow = ideal_run(&s, &membound, 0.5);
+        // Memory-bound time barely moves with clock (only overhead scales).
+        assert!(slow.time_s / fast.time_s < 1.15);
+    }
+
+    #[test]
+    fn throttling_respects_budget() {
+        let mut s = spec();
+        s.power_budget_w = 5.0;
+        let heavy = Workload { compute: 5.0, mem_intensity: 0.2, parallel_frac: 0.98, overhead: 0.0 };
+        let uncapped = ideal_run(&s, &heavy, 1.0);
+        assert!(uncapped.power_w > 5.0, "test needs a hot workload");
+        let capped = run_with_cap(&s, &heavy);
+        assert!(capped.power_w <= 5.0 + 1e-6);
+        assert!(capped.time_s > uncapped.time_s);
+    }
+
+    #[test]
+    fn uncapped_fast_path() {
+        let s = spec();
+        let light = Workload { compute: 0.1, mem_intensity: 0.9, parallel_frac: 0.2, overhead: 0.0 };
+        assert_eq!(run_with_cap(&s, &light), ideal_run(&s, &light, 1.0));
+    }
+
+    #[test]
+    fn energy_is_time_times_power() {
+        let m = Measurement { time_s: 2.0, power_w: 5.0 };
+        assert_eq!(m.energy_j(), 10.0);
+    }
+}

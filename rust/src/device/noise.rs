@@ -1,0 +1,114 @@
+//! Measurement-noise models.
+//!
+//! Two layers, matching the paper:
+//! * intrinsic run-to-run variability of a real device (always on, small);
+//! * *synthetic injected error* for the Fig 12 sensitivity study: "random
+//!   noise … within a range of 5%, 10%, and 15%", which the paper also
+//!   treats as a proxy for network fluctuation between edge devices.
+
+use super::Measurement;
+use crate::util::Rng;
+
+/// Noise distribution shape.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NoiseKind {
+    /// `x · (1 + U(-pct, +pct))` — the paper's Fig 12 model.
+    Uniform,
+    /// `x · (1 + N(0, pct/2))`, truncated at ±3σ.
+    Gaussian,
+}
+
+/// Relative measurement noise.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NoiseModel {
+    pub kind: NoiseKind,
+    /// Relative magnitude (0.05 = 5%).
+    pub pct: f64,
+}
+
+impl NoiseModel {
+    pub fn none() -> Self {
+        NoiseModel { kind: NoiseKind::Uniform, pct: 0.0 }
+    }
+
+    pub fn uniform(pct: f64) -> Self {
+        assert!(pct >= 0.0);
+        NoiseModel { kind: NoiseKind::Uniform, pct }
+    }
+
+    pub fn gaussian(pct: f64) -> Self {
+        assert!(pct >= 0.0);
+        NoiseModel { kind: NoiseKind::Gaussian, pct }
+    }
+
+    /// Draw one multiplicative noise factor (always > 0).
+    pub fn factor(&self, rng: &mut Rng) -> f64 {
+        if self.pct == 0.0 {
+            return 1.0;
+        }
+        match self.kind {
+            NoiseKind::Uniform => rng.relative_noise(self.pct),
+            NoiseKind::Gaussian => {
+                let z = rng.normal().clamp(-3.0, 3.0);
+                (1.0 + z * self.pct / 2.0).max(0.05)
+            }
+        }
+    }
+
+    /// Apply independent noise to time and power of a measurement.
+    pub fn perturb(&self, m: Measurement, rng: &mut Rng) -> Measurement {
+        Measurement {
+            time_s: m.time_s * self.factor(rng),
+            power_w: m.power_w * self.factor(rng),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_noise_is_identity() {
+        let mut rng = Rng::new(1);
+        let m = Measurement { time_s: 2.0, power_w: 5.0 };
+        assert_eq!(NoiseModel::none().perturb(m, &mut rng), m);
+    }
+
+    #[test]
+    fn uniform_bounded() {
+        let mut rng = Rng::new(2);
+        let nm = NoiseModel::uniform(0.10);
+        for _ in 0..10_000 {
+            let f = nm.factor(&mut rng);
+            assert!((0.9..=1.1).contains(&f), "{f}");
+        }
+    }
+
+    #[test]
+    fn uniform_unbiased() {
+        let mut rng = Rng::new(3);
+        let nm = NoiseModel::uniform(0.15);
+        let mean: f64 =
+            (0..100_000).map(|_| nm.factor(&mut rng)).sum::<f64>() / 100_000.0;
+        assert!((mean - 1.0).abs() < 0.002, "{mean}");
+    }
+
+    #[test]
+    fn gaussian_positive() {
+        let mut rng = Rng::new(4);
+        let nm = NoiseModel::gaussian(0.15);
+        for _ in 0..10_000 {
+            assert!(nm.factor(&mut rng) > 0.0);
+        }
+    }
+
+    #[test]
+    fn perturb_moves_both_fields_independently() {
+        let mut rng = Rng::new(5);
+        let nm = NoiseModel::uniform(0.10);
+        let m = Measurement { time_s: 1.0, power_w: 1.0 };
+        let p = nm.perturb(m, &mut rng);
+        assert_ne!(p.time_s, p.power_w); // independent draws
+    }
+}

@@ -1,0 +1,138 @@
+//! First-order RC thermal model for the edge board.
+//!
+//! The Jetson Nano throttles under sustained load (passively cooled). We
+//! model die temperature as an RC circuit driven by dissipated power; above
+//! the throttle threshold the clock is scaled down linearly until the hard
+//! limit. This supplies the "dynamic environment" volatility the paper's
+//! online bandit is designed to absorb.
+
+
+/// RC thermal state + throttle law.
+#[derive(Debug, Clone)]
+pub struct ThermalModel {
+    /// Ambient temperature, °C.
+    pub ambient_c: f64,
+    /// Thermal resistance, °C per watt (steady state rise = R·P).
+    pub r_c_per_w: f64,
+    /// Thermal time constant, seconds.
+    pub tau_s: f64,
+    /// Throttling starts here.
+    pub throttle_start_c: f64,
+    /// Hard limit: clock pinned to `min_scale` at/above this temperature.
+    pub throttle_max_c: f64,
+    /// Lowest frequency scale the governor will apply.
+    pub min_scale: f64,
+    /// Current die temperature, °C.
+    temp_c: f64,
+}
+
+impl ThermalModel {
+    /// Passive-cooled edge board defaults (Nano-like): at the 10 W MAXN
+    /// budget the steady-state die temperature (25 + 5.5·10 = 80 °C) sits
+    /// inside the throttle band, so sustained full-power load throttles.
+    pub fn edge() -> Self {
+        ThermalModel {
+            ambient_c: 25.0,
+            r_c_per_w: 5.5,
+            tau_s: 30.0,
+            throttle_start_c: 70.0,
+            throttle_max_c: 95.0,
+            min_scale: 0.5,
+            temp_c: 25.0,
+        }
+    }
+
+    /// Actively-cooled node: effectively never throttles.
+    pub fn active_cooling() -> Self {
+        ThermalModel {
+            ambient_c: 25.0,
+            r_c_per_w: 0.4,
+            tau_s: 10.0,
+            throttle_start_c: 90.0,
+            throttle_max_c: 105.0,
+            min_scale: 0.8,
+            temp_c: 25.0,
+        }
+    }
+
+    /// Current temperature, °C.
+    pub fn temperature(&self) -> f64 {
+        self.temp_c
+    }
+
+    /// Frequency scale the governor applies at the current temperature.
+    pub fn freq_scale(&self) -> f64 {
+        if self.temp_c <= self.throttle_start_c {
+            1.0
+        } else if self.temp_c >= self.throttle_max_c {
+            self.min_scale
+        } else {
+            let frac = (self.temp_c - self.throttle_start_c)
+                / (self.throttle_max_c - self.throttle_start_c);
+            1.0 - frac * (1.0 - self.min_scale)
+        }
+    }
+
+    /// Advance the RC state by a run dissipating `power_w` for `dt_s`.
+    pub fn advance(&mut self, power_w: f64, dt_s: f64) {
+        let steady = self.ambient_c + self.r_c_per_w * power_w;
+        let a = (-dt_s / self.tau_s).exp();
+        self.temp_c = steady + (self.temp_c - steady) * a;
+    }
+
+    /// Cool back to ambient (between experiments).
+    pub fn reset(&mut self) {
+        self.temp_c = self.ambient_c;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn heats_toward_steady_state() {
+        let mut t = ThermalModel::edge();
+        t.advance(10.0, 1000.0); // long enough to converge
+        assert!((t.temperature() - (25.0 + 5.5 * 10.0)).abs() < 0.5);
+    }
+
+    #[test]
+    fn no_throttle_when_cool() {
+        let t = ThermalModel::edge();
+        assert_eq!(t.freq_scale(), 1.0);
+    }
+
+    #[test]
+    fn throttles_when_hot() {
+        let mut t = ThermalModel::edge();
+        t.advance(15.0, 1000.0); // steady ~85°C
+        let s = t.freq_scale();
+        assert!(s < 1.0 && s >= t.min_scale, "scale {s}");
+    }
+
+    #[test]
+    fn hard_limit_pins_min_scale() {
+        let mut t = ThermalModel::edge();
+        t.advance(30.0, 10_000.0); // way past max
+        assert_eq!(t.freq_scale(), t.min_scale);
+    }
+
+    #[test]
+    fn cools_back_down() {
+        let mut t = ThermalModel::edge();
+        t.advance(15.0, 500.0);
+        let hot = t.temperature();
+        t.advance(0.0, 500.0);
+        assert!(t.temperature() < hot);
+        t.reset();
+        assert_eq!(t.temperature(), 25.0);
+    }
+
+    #[test]
+    fn active_cooling_stays_cool() {
+        let mut t = ThermalModel::active_cooling();
+        t.advance(100.0, 1000.0); // 100 W server load
+        assert_eq!(t.freq_scale(), 1.0);
+    }
+}

@@ -1,0 +1,110 @@
+//! Fig 12 — performance under synthetic measurement error: random noise of
+//! 5%, 10% and 15% injected into the measured data (also a proxy for
+//! network fluctuation). The paper's claim: gains degrade gracefully, LASP
+//! keeps finding good configurations.
+
+use super::harness::{edge_oracle, print_table, run_lasp, LF_FIDELITY};
+use crate::apps::{self, AppKind};
+use crate::device::{NoiseModel, PowerMode};
+use crate::util::stats;
+
+/// One (app, noise level) cell.
+#[derive(Debug, Clone)]
+pub struct Fig12Cell {
+    pub app: AppKind,
+    pub noise_pct: f64,
+    /// Eq. 8 time gain vs default under this noise level (mean over seeds).
+    pub gain_pct: f64,
+}
+
+/// Fig 12 result.
+#[derive(Debug, Clone)]
+pub struct Fig12 {
+    pub cells: Vec<Fig12Cell>,
+    pub iterations: usize,
+}
+
+/// Run all apps × noise ∈ {0, 5, 10, 15}%.
+pub fn run(iterations: usize, seeds: usize) -> Fig12 {
+    let mut cells = vec![];
+    for app in AppKind::all() {
+        let sweep = edge_oracle(app, PowerMode::Maxn, LF_FIDELITY);
+        let default = apps::build(app).default_index();
+        for noise_pct in [0.0, 0.05, 0.10, 0.15] {
+            let noise = if noise_pct > 0.0 {
+                NoiseModel::uniform(noise_pct)
+            } else {
+                NoiseModel::none()
+            };
+            let gains: Vec<f64> = (0..seeds)
+                .map(|s| {
+                    let (best, _, _) = run_lasp(
+                        app,
+                        PowerMode::Maxn,
+                        iterations,
+                        0.8,
+                        0.2,
+                        1200 + s as u64,
+                        noise,
+                    );
+                    (sweep[default].time_s - sweep[best].time_s) / sweep[default].time_s
+                        * 100.0
+                })
+                .collect();
+            cells.push(Fig12Cell { app, noise_pct, gain_pct: stats::mean(&gains) });
+        }
+    }
+    Fig12 { cells, iterations }
+}
+
+impl Fig12 {
+    pub fn report(&self) {
+        let rows: Vec<Vec<String>> = AppKind::all()
+            .into_iter()
+            .map(|app| {
+                let mut row = vec![app.to_string()];
+                for n in [0.0, 0.05, 0.10, 0.15] {
+                    let c = self
+                        .cells
+                        .iter()
+                        .find(|c| c.app == app && c.noise_pct == n)
+                        .unwrap();
+                    row.push(format!("{:+.1}%", c.gain_pct));
+                }
+                row
+            })
+            .collect();
+        print_table(
+            &format!("Fig 12 — time gain vs default under measurement error ({} iters)", self.iterations),
+            &["app", "no noise", "5% noise", "10% noise", "15% noise"],
+            &rows,
+        );
+    }
+
+    /// Shape: considerable gains survive even at 15% noise.
+    pub fn matches_paper_shape(&self) -> bool {
+        self.cells
+            .iter()
+            .filter(|c| c.noise_pct == 0.15)
+            .all(|c| c.gain_pct > 0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig12_shape_holds() {
+        let fig = run(500, 2);
+        assert_eq!(fig.cells.len(), 16);
+        assert!(
+            fig.matches_paper_shape(),
+            "{:?}",
+            fig.cells
+                .iter()
+                .map(|c| (c.app, c.noise_pct, c.gain_pct))
+                .collect::<Vec<_>>()
+        );
+    }
+}

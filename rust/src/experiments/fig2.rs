@@ -1,0 +1,99 @@
+//! Fig 2 — overlap of optimal configurations between low- and high-fidelity
+//! settings: (a) average HF-oracle distance of the LF top-20; (b) number of
+//! common configurations in the LF and HF top-20.
+//!
+//! Paper workloads: Lulesh (mesh 50 vs 80), Kripke (zones 32 vs 64), Hypre
+//! (grid 32 vs 64) — i.e. LF on the Jetson vs HF on the i7-14700.
+
+use super::harness::{print_table, LF_FIDELITY};
+use crate::apps::{self, AppKind};
+use crate::coordinator::transfer::{lf_hf_topk_overlap, lf_topk_hf_distance};
+use crate::device::{Device, HpcNode, PowerMode};
+
+/// One Fig 2 row.
+#[derive(Debug, Clone)]
+pub struct Fig2Row {
+    pub app: AppKind,
+    /// (a) mean HF-oracle distance (%) of the LF top-20.
+    pub avg_distance_pct: f64,
+    /// (b) |top-20(LF) ∩ top-20(HF)|.
+    pub common_in_top20: usize,
+}
+
+/// Full Fig 2 result.
+#[derive(Debug, Clone)]
+pub struct Fig2 {
+    pub rows: Vec<Fig2Row>,
+}
+
+/// Run the experiment for the apps the paper uses in this figure.
+pub fn run() -> Fig2 {
+    let edge = PowerMode::Maxn.spec();
+    let hpc_node = HpcNode::new(0);
+    let hpc = hpc_node.spec();
+    let rows = [AppKind::Lulesh, AppKind::Kripke, AppKind::Clomp, AppKind::Hypre]
+        .into_iter()
+        .map(|kind| {
+            let app = apps::build(kind);
+            Fig2Row {
+                app: kind,
+                avg_distance_pct: lf_topk_hf_distance(app.as_ref(), &edge, hpc, LF_FIDELITY, 20),
+                common_in_top20: lf_hf_topk_overlap(app.as_ref(), &edge, hpc, LF_FIDELITY, 20),
+            }
+        })
+        .collect();
+    Fig2 { rows }
+}
+
+impl Fig2 {
+    /// Print the figure's two panels as tables.
+    pub fn report(&self) {
+        let rows: Vec<Vec<String>> = self
+            .rows
+            .iter()
+            .map(|r| {
+                vec![
+                    r.app.to_string(),
+                    format!("{:.1}%", r.avg_distance_pct),
+                    format!("{}/20", r.common_in_top20),
+                ]
+            })
+            .collect();
+        print_table(
+            "Fig 2 — LF/HF optimal-configuration overlap",
+            &["app", "(a) avg distance of LF top-20 on HF", "(b) common in top-20"],
+            &rows,
+        );
+    }
+
+    /// Paper-shape acceptance: distances bounded, overlap significant.
+    pub fn matches_paper_shape(&self) -> bool {
+        self.rows.iter().all(|r| {
+            // Paper: "within 25% of the oracle" on average (we allow 2x
+            // slack for the simulated substrate) and meaningful overlap.
+            r.avg_distance_pct < 50.0 && r.common_in_top20 >= 5
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig2_shape_holds() {
+        let fig = run();
+        assert_eq!(fig.rows.len(), 4);
+        assert!(fig.matches_paper_shape(), "{:?}", fig.rows);
+    }
+
+    #[test]
+    fn small_apps_overlap_heavily() {
+        let fig = run();
+        for r in &fig.rows {
+            if matches!(r.app, AppKind::Lulesh | AppKind::Kripke | AppKind::Clomp) {
+                assert!(r.common_in_top20 >= 8, "{:?}", r);
+            }
+        }
+    }
+}

@@ -1,0 +1,109 @@
+//! Fig 3 — distribution of Kripke execution times over the configuration
+//! space: (a) variance induced by tuning only two parameter groups;
+//! (b) histogram over all 216 configurations.
+
+use super::harness::{edge_oracle, print_table};
+use crate::apps::{self, AppKind};
+use crate::device::PowerMode;
+use crate::util::stats;
+
+/// Fig 3 result.
+#[derive(Debug, Clone)]
+pub struct Fig3 {
+    /// (a) spread of execution time when tuning only (gset, dset) at the
+    /// default layout: (min, median, max) seconds.
+    pub two_param_spread: (f64, f64, f64),
+    /// (a) same spread when tuning all three parameters.
+    pub full_spread: (f64, f64, f64),
+    /// (b) histogram over all configurations: (lo, hi, count) bins.
+    pub histogram: Vec<(f64, f64, usize)>,
+    /// All execution times (for downstream analysis).
+    pub times: Vec<f64>,
+}
+
+/// Run on Kripke at HF (the paper plots the target-size distribution).
+pub fn run() -> Fig3 {
+    let sweep = edge_oracle(AppKind::Kripke, PowerMode::Maxn, 1.0);
+    let times: Vec<f64> = sweep.iter().map(|m| m.time_s).collect();
+
+    // Two-parameter slice: default layout (position 0), vary gset & dset.
+    let app = apps::build(AppKind::Kripke);
+    let mut slice = vec![];
+    for g in 0..6 {
+        for d in 0..6 {
+            let idx = app.space().encode_positions(&[0, g, d]);
+            slice.push(times[idx]);
+        }
+    }
+    let spread = |xs: &[f64]| {
+        (
+            xs.iter().cloned().fold(f64::INFINITY, f64::min),
+            stats::quantile(xs, 0.5),
+            xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max),
+        )
+    };
+    Fig3 {
+        two_param_spread: spread(&slice),
+        full_spread: spread(&times),
+        histogram: stats::histogram(&times, 12),
+        times,
+    }
+}
+
+impl Fig3 {
+    pub fn report(&self) {
+        let fmt = |s: (f64, f64, f64)| {
+            vec![format!("{:.2}s", s.0), format!("{:.2}s", s.1), format!("{:.2}s", s.2)]
+        };
+        let mut rows = vec![];
+        let mut a = vec!["2 params (gset,dset)".to_string()];
+        a.extend(fmt(self.two_param_spread));
+        rows.push(a);
+        let mut b = vec!["all 3 params".to_string()];
+        b.extend(fmt(self.full_spread));
+        rows.push(b);
+        print_table(
+            "Fig 3(a) — Kripke execution-time spread",
+            &["tuned set", "min", "median", "max"],
+            &rows,
+        );
+        let hist_rows: Vec<Vec<String>> = self
+            .histogram
+            .iter()
+            .map(|(lo, hi, c)| {
+                vec![
+                    format!("{lo:.2}-{hi:.2}s"),
+                    format!("{c}"),
+                    "#".repeat(*c / 2 + usize::from(*c > 0)),
+                ]
+            })
+            .collect();
+        print_table("Fig 3(b) — distribution over all configurations", &["bin", "count", ""], &hist_rows);
+    }
+
+    /// Shape: wide variance from 2 params; wider with 3; long tail.
+    pub fn matches_paper_shape(&self) -> bool {
+        let (lo2, _, hi2) = self.two_param_spread;
+        let (lo3, med3, hi3) = self.full_spread;
+        hi2 / lo2 > 1.3 // two params alone already move runtime a lot
+            && hi3 / lo3 >= hi2 / lo2 // full space is wider
+            && (med3 - lo3) < (hi3 - med3) // right-skewed tail
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig3_shape_holds() {
+        let fig = run();
+        assert!(fig.matches_paper_shape(), "{:?} {:?}", fig.two_param_spread, fig.full_spread);
+    }
+
+    #[test]
+    fn histogram_covers_all_configs() {
+        let fig = run();
+        assert_eq!(fig.histogram.iter().map(|(_, _, c)| c).sum::<usize>(), 216);
+    }
+}

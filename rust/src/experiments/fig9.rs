@@ -1,0 +1,143 @@
+//! Fig 9 — mean distance from the Oracle configuration (§II-A metric)
+//! across repeated LASP runs. Paper: within 12% of the optimal even on
+//! Hypre's 92k-arm space when optimizing execution time; power-focused
+//! runs land farther (power rewards are flatter).
+
+use super::harness::{edge_oracle, print_table, run_lasp, LF_FIDELITY};
+use crate::apps::AppKind;
+use crate::device::{NoiseModel, PowerMode};
+use crate::tuning::oracle_distance_pct;
+use crate::util::stats;
+
+/// One (app, objective) row.
+#[derive(Debug, Clone)]
+pub struct Fig9Row {
+    pub app: AppKind,
+    pub objective: &'static str,
+    /// Mean distance from Oracle over the runs, percent.
+    pub mean_distance_pct: f64,
+    /// Std-dev across runs.
+    pub std_pct: f64,
+    /// Best run.
+    pub min_pct: f64,
+}
+
+/// Fig 9 result.
+#[derive(Debug, Clone)]
+pub struct Fig9 {
+    pub rows: Vec<Fig9Row>,
+    pub runs: usize,
+    pub iterations: usize,
+}
+
+fn distance_of_run(
+    app: AppKind,
+    alpha: f64,
+    beta: f64,
+    iterations: usize,
+    seed: u64,
+    sweep: &[crate::device::Measurement],
+) -> f64 {
+    let (best, _, _) = run_lasp(
+        app,
+        PowerMode::Maxn,
+        iterations,
+        alpha,
+        beta,
+        seed,
+        NoiseModel::none(),
+    );
+    if alpha >= 0.5 {
+        oracle_distance_pct(sweep, best)
+    } else {
+        // Power objective: same §II-A formula over power draw.
+        let powers: Vec<f64> = sweep.iter().map(|m| m.power_w).collect();
+        let oracle = powers[stats::argmin(&powers)];
+        (powers[best] / oracle - 1.0) * 100.0
+    }
+}
+
+/// Run `runs` repetitions per (app, objective) pair.
+pub fn run(runs: usize, iterations: usize) -> Fig9 {
+    let mut rows = vec![];
+    for app in AppKind::all() {
+        let sweep = edge_oracle(app, PowerMode::Maxn, LF_FIDELITY);
+        for (objective, alpha, beta) in [("time", 0.8, 0.2), ("power", 0.2, 0.8)] {
+            let dists: Vec<f64> = (0..runs)
+                .map(|r| {
+                    distance_of_run(app, alpha, beta, iterations, 900 + r as u64, &sweep)
+                })
+                .collect();
+            rows.push(Fig9Row {
+                app,
+                objective,
+                mean_distance_pct: stats::mean(&dists),
+                std_pct: stats::std_dev(&dists),
+                min_pct: dists.iter().cloned().fold(f64::INFINITY, f64::min),
+            });
+        }
+    }
+    Fig9 { rows, runs, iterations }
+}
+
+impl Fig9 {
+    pub fn report(&self) {
+        let rows: Vec<Vec<String>> = self
+            .rows
+            .iter()
+            .map(|r| {
+                vec![
+                    r.app.to_string(),
+                    r.objective.to_string(),
+                    format!("{:.1}%", r.mean_distance_pct),
+                    format!("{:.1}%", r.std_pct),
+                    format!("{:.1}%", r.min_pct),
+                ]
+            })
+            .collect();
+        print_table(
+            &format!(
+                "Fig 9 — distance from Oracle ({} runs × {} iterations)",
+                self.runs, self.iterations
+            ),
+            &["app", "objective", "mean", "std", "best run"],
+            &rows,
+        );
+    }
+
+    /// Shape: small spaces land close to the oracle; time-focused runs on
+    /// every app are within a modest band; power-focused runs are allowed
+    /// to be worse (the paper's own observation).
+    pub fn matches_paper_shape(&self) -> bool {
+        self.rows.iter().all(|r| {
+            let bound = match (r.app, r.objective) {
+                // Paper: within 12% even for Hypre (time focus). Our band
+                // doubles it for substrate slack.
+                (AppKind::Hypre, "time") => 25.0,
+                (_, "time") => 15.0,
+                _ => 60.0, // power focus: flatter rewards, larger distances
+            };
+            r.mean_distance_pct < bound && r.mean_distance_pct >= 0.0
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig9_shape_holds_small_runs() {
+        // Keep CI cheap: 5 runs; the bench runs the paper's 100.
+        let fig = run(5, 600);
+        assert_eq!(fig.rows.len(), 8);
+        assert!(
+            fig.matches_paper_shape(),
+            "{:?}",
+            fig.rows
+                .iter()
+                .map(|r| (r.app, r.objective, r.mean_distance_pct))
+                .collect::<Vec<_>>()
+        );
+    }
+}

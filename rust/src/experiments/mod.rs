@@ -1,0 +1,107 @@
+//! Experiment drivers — one module per table/figure in the paper's
+//! evaluation (see DESIGN.md §2 for the full index). Each driver exposes
+//! `run(...) -> FigN` with a `report()` printer and a
+//! `matches_paper_shape()` acceptance predicate; the `benches/figN_*`
+//! binaries and the `lasp experiment` CLI subcommand are thin wrappers.
+
+pub mod ablation;
+pub mod fig10;
+pub mod fig11;
+pub mod fig12;
+pub mod fig2;
+pub mod fig3;
+pub mod fig4;
+pub mod fig6;
+pub mod fig7;
+pub mod fig8;
+pub mod fig9;
+pub mod harness;
+pub mod tables;
+
+use anyhow::{anyhow, Result};
+
+/// Run an experiment by figure/table id, printing its report. Returns
+/// whether the paper-shape acceptance check passed.
+pub fn run_by_name(name: &str, quick: bool) -> Result<bool> {
+    let ok = match name {
+        "table1" => {
+            tables::table1_report();
+            true
+        }
+        "table2" => {
+            tables::table2_report();
+            true
+        }
+        "fig2" => {
+            let f = fig2::run();
+            f.report();
+            f.matches_paper_shape()
+        }
+        "fig3" => {
+            let f = fig3::run();
+            f.report();
+            f.matches_paper_shape()
+        }
+        "fig4" => {
+            let f = fig4::run();
+            f.report();
+            f.matches_paper_shape()
+        }
+        "fig6" => {
+            let f = fig6::run();
+            f.report();
+            f.matches_paper_shape()
+        }
+        "fig7" => {
+            let f = fig7::run();
+            f.report();
+            f.matches_paper_shape()
+        }
+        "fig8" => {
+            let f = fig8::run(if quick { 400 } else { 1000 });
+            f.report();
+            f.matches_paper_shape()
+        }
+        "fig9" => {
+            let f = fig9::run(if quick { 10 } else { 100 }, if quick { 500 } else { 1000 });
+            f.report();
+            f.matches_paper_shape()
+        }
+        "fig10" => {
+            let f = fig10::run();
+            f.report();
+            f.matches_paper_shape()
+        }
+        "fig11" => {
+            let f = fig11::run(if quick { 600 } else { 1500 }, if quick { 2 } else { 5 });
+            f.report();
+            f.matches_paper_shape()
+        }
+        "fig12" => {
+            let f = fig12::run(if quick { 400 } else { 800 }, if quick { 2 } else { 5 });
+            f.report();
+            f.matches_paper_shape()
+        }
+        "ablation" => {
+            let f = ablation::run(if quick { 400 } else { 1000 });
+            f.report();
+            true
+        }
+        other => return Err(anyhow!("unknown experiment '{other}'")),
+    };
+    Ok(ok)
+}
+
+/// All experiment ids, in paper order.
+pub const ALL: &[&str] = &[
+    "table1", "table2", "fig2", "fig3", "fig4", "fig6", "fig7", "fig8", "fig9",
+    "fig10", "fig11", "fig12", "ablation",
+];
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn unknown_experiment_rejected() {
+        assert!(super::run_by_name("fig99", true).is_err());
+    }
+}

@@ -1,0 +1,67 @@
+//! Table I (Jetson power modes) and Table II (application parameter
+//! spaces) as printable reports backed by the live definitions — the
+//! tables are *derived from the code*, so they cannot drift.
+
+use super::harness::print_table;
+use crate::apps::{self, AppKind};
+use crate::device::PowerMode;
+
+/// Print Table I from the device-model constants.
+pub fn table1_report() {
+    let rows: Vec<Vec<String>> = [PowerMode::Maxn, PowerMode::FiveW]
+        .iter()
+        .map(|m| {
+            let s = m.spec();
+            vec![
+                m.name().to_string(),
+                format!("{:.0}", s.power_budget_w),
+                format!("{}", s.cores),
+                format!("{:.0}", s.freq_ghz * 1000.0),
+            ]
+        })
+        .collect();
+    print_table(
+        "Table I — Jetson Nano power modes",
+        &["mode", "power budget (W)", "online CPU", "CPU max freq (MHz)"],
+        &rows,
+    );
+}
+
+/// Print Table II from the live parameter spaces.
+pub fn table2_report() {
+    let mut rows = vec![];
+    for kind in AppKind::all() {
+        let app = apps::build(kind);
+        for p in app.space().params() {
+            let vals: Vec<String> = p.values().iter().map(|v| v.to_string()).collect();
+            let range = if vals.len() > 6 {
+                format!("{}..{} ({} values)", vals[0], vals[vals.len() - 1], vals.len())
+            } else {
+                vals.join(", ")
+            };
+            rows.push(vec![
+                kind.to_string(),
+                p.name().to_string(),
+                format!("{}", app.space().len()),
+                range,
+                p.default_value().to_string(),
+            ]);
+        }
+    }
+    print_table(
+        "Table II — application configuration parameters",
+        &["application", "parameter", "size", "range", "default"],
+        &rows,
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reports_do_not_panic() {
+        table1_report();
+        table2_report();
+    }
+}

@@ -1,0 +1,32 @@
+//! # LASP — Lightweight Autotuning of Scientific Application Parameters
+//!
+//! A reproduction of *"HPC Application Parameter Autotuning on Edge Devices:
+//! A Bandit Learning Approach"* (Hossain et al., 2025) as a three-layer
+//! Rust + JAX + Pallas system:
+//!
+//! * **L3 (this crate)** — the tuning coordinator: bandit engine, simulated
+//!   HPC applications and edge devices, baselines, fleet orchestration and
+//!   the experiment drivers that regenerate every table/figure in the paper.
+//! * **L2/L1 (`python/compile/`)** — the UCB scoring / GP surrogate compute
+//!   graphs and their Pallas kernels, AOT-lowered to `artifacts/*.hlo.txt`
+//!   at build time and executed here through the PJRT CPU client
+//!   ([`runtime`]). Python never runs on the tuning path.
+//!
+//! See `DESIGN.md` for the system inventory and the experiment index, and
+//! `examples/` for runnable entry points (`quickstart`, `end_to_end`,
+//! `multi_device_fleet`, `lf_hf_transfer`).
+
+pub mod apps;
+pub mod bandit;
+pub mod baselines;
+pub mod config;
+pub mod coordinator;
+pub mod device;
+pub mod experiments;
+pub mod runtime;
+pub mod space;
+pub mod telemetry;
+pub mod tuning;
+pub mod util;
+
+pub use anyhow::Result;

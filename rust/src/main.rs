@@ -1,0 +1,351 @@
+//! `lasp` — command-line entry point for the LASP reproduction.
+//!
+//! Subcommands:
+//!   tune        run LASP on one application (single device)
+//!   fleet       run tuning jobs across a simulated edge fleet
+//!   compare     LASP vs baselines on one application
+//!   experiment  regenerate a paper table/figure (or `all`)
+//!   spaces      print Table II (application parameter spaces)
+//!   devices     print Table I (Jetson power modes)
+//!
+//! Flag parsing is hand-rolled (offline build: no clap). `--config
+//! <file.toml>` loads defaults; explicit flags override it.
+
+use anyhow::{anyhow, Context, Result};
+use lasp::apps;
+use lasp::config::{Backend, LaspConfig};
+use lasp::coordinator::transfer::validate_on_hpc;
+use lasp::coordinator::{Fleet, FleetConfig, TuneJob};
+use lasp::device::{JetsonNano, PowerMode};
+use lasp::runtime::EngineHandle;
+use lasp::tuning::{SessionConfig, TuningSession};
+use std::collections::HashMap;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(args: &[String]) -> Result<()> {
+    let Some(cmd) = args.first() else {
+        print_usage();
+        return Ok(());
+    };
+    let flags = Flags::parse(&args[1..])?;
+    match cmd.as_str() {
+        "tune" => cmd_tune(&flags),
+        "fleet" => cmd_fleet(&flags),
+        "compare" => cmd_compare(&flags),
+        "experiment" => cmd_experiment(&flags),
+        "spaces" => {
+            lasp::experiments::tables::table2_report();
+            Ok(())
+        }
+        "devices" => {
+            lasp::experiments::tables::table1_report();
+            Ok(())
+        }
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => Err(anyhow!("unknown command '{other}' (try `lasp help`)")),
+    }
+}
+
+fn print_usage() {
+    println!(
+        "lasp — Lightweight Autotuning of Scientific Application Parameters\n\
+         \n\
+         USAGE: lasp <command> [flags]\n\
+         \n\
+         COMMANDS\n\
+         \x20 tune        run LASP on one application\n\
+         \x20 fleet       run jobs across a simulated edge fleet\n\
+         \x20 compare     LASP vs baselines on one application\n\
+         \x20 experiment  regenerate a paper artifact: table1|table2|fig2..fig12|ablation|all\n\
+         \x20 spaces      print Table II\n\
+         \x20 devices     print Table I\n\
+         \n\
+         FLAGS (tune/fleet/compare)\n\
+         \x20 --config <file>      TOML config (flags override)\n\
+         \x20 --app <name>         lulesh|kripke|clomp|hypre   [kripke]\n\
+         \x20 --iters <n>          tuning iterations           [500]\n\
+         \x20 --alpha <f> --beta <f>  objective weights        [0.8/0.2]\n\
+         \x20 --mode <m>           maxn|5w                     [maxn]\n\
+         \x20 --seed <n>           RNG seed                    [42]\n\
+         \x20 --backend <b>        scalar|pjrt                 [scalar]\n\
+         \x20 --noise <pct>        injected error, e.g. 0.10   [0]\n\
+         \x20 --devices <n>        fleet size                  [2]\n\
+         \x20 --budget <n>         compare: evaluation budget  [--iters]\n\
+         \x20 --name <id>          experiment id               [all]\n\
+         \x20 --quick              experiment: reduced repetitions\n\
+         \x20 --hf-validate        tune: validate result on the HPC node\n\
+         \x20 --save-state <file>  tune: checkpoint the tuner state (JSON)\n\
+         \x20 --load-state <file>  tune: warm-start from a checkpoint"
+    );
+}
+
+/// Parsed `--flag value` pairs (+ boolean flags).
+struct Flags {
+    values: HashMap<String, String>,
+    bools: Vec<String>,
+}
+
+impl Flags {
+    fn parse(args: &[String]) -> Result<Flags> {
+        let mut values = HashMap::new();
+        let mut bools = vec![];
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            let name = a
+                .strip_prefix("--")
+                .ok_or_else(|| anyhow!("expected --flag, got '{a}'"))?;
+            match name {
+                "quick" | "hf-validate" => {
+                    bools.push(name.to_string());
+                    i += 1;
+                }
+                _ => {
+                    let v = args
+                        .get(i + 1)
+                        .ok_or_else(|| anyhow!("--{name} needs a value"))?;
+                    values.insert(name.to_string(), v.clone());
+                    i += 2;
+                }
+            }
+        }
+        Ok(Flags { values, bools })
+    }
+
+    fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(String::as_str)
+    }
+
+    fn has(&self, name: &str) -> bool {
+        self.bools.iter().any(|b| b == name)
+    }
+
+    /// Build the effective config: file (if given) + flag overrides.
+    fn config(&self) -> Result<LaspConfig> {
+        let mut cfg = match self.get("config") {
+            Some(path) => LaspConfig::from_file(std::path::Path::new(path))?,
+            None => LaspConfig::default(),
+        };
+        if let Some(v) = self.get("app") {
+            cfg.app = v.parse()?;
+        }
+        if let Some(v) = self.get("iters") {
+            cfg.iterations = v.parse().context("--iters")?;
+        }
+        if let Some(v) = self.get("alpha") {
+            cfg.alpha = v.parse().context("--alpha")?;
+        }
+        if let Some(v) = self.get("beta") {
+            cfg.beta = v.parse().context("--beta")?;
+        }
+        if let Some(v) = self.get("mode") {
+            cfg.mode = v.parse()?;
+        }
+        if let Some(v) = self.get("seed") {
+            cfg.seed = v.parse().context("--seed")?;
+        }
+        if let Some(v) = self.get("backend") {
+            cfg.backend = v.parse()?;
+        }
+        if let Some(v) = self.get("noise") {
+            cfg.noise_pct = v.parse().context("--noise")?;
+        }
+        if let Some(v) = self.get("devices") {
+            cfg.devices = v.parse().context("--devices")?;
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
+fn engine_for(cfg: &LaspConfig) -> Result<Option<EngineHandle>> {
+    match cfg.backend {
+        Backend::Scalar => Ok(None),
+        Backend::Pjrt => {
+            let h = EngineHandle::spawn_default()
+                .context("spawning PJRT engine (run `make artifacts` first)")?;
+            println!("# backend: pjrt ({})", h.platform()?);
+            Ok(Some(h))
+        }
+    }
+}
+
+fn cmd_tune(flags: &Flags) -> Result<()> {
+    let cfg = flags.config()?;
+    println!(
+        "# lasp tune: app={} iters={} α={} β={} mode={} backend={:?} noise={:.0}%",
+        cfg.app,
+        cfg.iterations,
+        cfg.alpha,
+        cfg.beta,
+        cfg.mode.name(),
+        cfg.backend,
+        cfg.noise_pct * 100.0
+    );
+    let app = apps::build(cfg.app);
+    let device = JetsonNano::new(cfg.mode, cfg.seed)
+        .with_fidelity(cfg.fidelity)
+        .with_injected_noise(cfg.noise());
+    let engine = engine_for(&cfg)?;
+    let k = app.space().len();
+    let mut tuner = match engine {
+        Some(h) => lasp::bandit::UcbTuner::with_backend(
+            k,
+            cfg.alpha,
+            cfg.beta,
+            Box::new(lasp::runtime::PjrtScoreBackend::new(h, cfg.app.name())),
+        ),
+        None => lasp::bandit::UcbTuner::new(k, cfg.alpha, cfg.beta),
+    };
+    if let Some(path) = flags.get("load-state") {
+        let cp = lasp::bandit::persist::load(std::path::Path::new(path))?;
+        if cp.app != cfg.app.name() {
+            return Err(anyhow!(
+                "checkpoint is for '{}', tuning '{}'",
+                cp.app,
+                cfg.app
+            ));
+        }
+        println!("# warm start from {path} (t={})", cp.state.t);
+        tuner = tuner.with_state(lasp::bandit::persist::discounted(&cp.state, 0.2));
+    }
+    let save_state = flags.get("save-state").map(String::from);
+    let policy: Box<dyn lasp::bandit::Policy> = Box::new(tuner);
+    let mut session = TuningSession::with_policy(
+        app,
+        Box::new(device),
+        policy,
+        SessionConfig {
+            iterations: cfg.iterations,
+            alpha: cfg.alpha,
+            beta: cfg.beta,
+            record_history: false,
+        },
+    );
+    let out = session.run()?;
+    println!("tuned configuration (Eq.4): {}", out.best_config);
+    println!(
+        "pulls of best: {:.0}/{}  |  simulated device time: {:.1}s  |  tuner overhead: {:.3}s",
+        out.counts[out.best_index],
+        cfg.iterations,
+        out.simulated_device_seconds,
+        out.tuner_wall_seconds
+    );
+    println!(
+        "tuner footprint: cpu {:.2}s over {:.2}s wall, ΔRSS {:.1} MiB",
+        out.resources.cpu_seconds, out.resources.wall_seconds, out.resources.peak_rss_mib
+    );
+    if let Some(path) = save_state {
+        // The session owns the policy; recover state through the counts it
+        // reports plus sums reconstructed by replay would be lossy — so the
+        // session exposes the policy state directly.
+        session.save_policy_state(std::path::Path::new(&path), cfg.app.name(), cfg.alpha, cfg.beta)?;
+        println!("# checkpoint written to {path}");
+    }
+    if flags.has("hf-validate") {
+        let app = apps::build(cfg.app);
+        let v = validate_on_hpc(app.as_ref(), out.best_index, cfg.seed);
+        println!(
+            "HF validation (i7-14700, q=1): time {:.3}s vs default {:.3}s -> gain {:+.1}% | oracle distance {:.1}%",
+            v.hf_time_s, v.default_time_s, v.gain_pct, v.oracle_distance_pct
+        );
+    }
+    Ok(())
+}
+
+fn cmd_fleet(flags: &Flags) -> Result<()> {
+    let cfg = flags.config()?;
+    println!(
+        "# lasp fleet: {} devices, app={} iters={} loss={:.0}%",
+        cfg.devices,
+        cfg.app,
+        cfg.iterations,
+        cfg.loss_prob * 100.0
+    );
+    let engine = engine_for(&cfg)?;
+    let mut fleet = Fleet::spawn(
+        FleetConfig {
+            devices: cfg.devices,
+            modes: vec![PowerMode::Maxn, PowerMode::FiveW],
+            seed: cfg.seed,
+            fidelity: cfg.fidelity,
+            loss_prob: cfg.loss_prob,
+            mean_latency_s: cfg.latency_s,
+            injected_noise: cfg.noise(),
+            progress_every: (cfg.iterations / 5).max(1),
+        },
+        engine,
+    )?;
+    for app in apps::AppKind::all() {
+        fleet.submit(TuneJob {
+            app,
+            iterations: cfg.iterations,
+            alpha: cfg.alpha,
+            beta: cfg.beta,
+        })?;
+    }
+    let results = fleet.drain(std::time::Duration::from_secs(600))?;
+    for r in &results {
+        let app = apps::build(r.app);
+        let v = validate_on_hpc(app.as_ref(), r.best_index, cfg.seed);
+        println!(
+            "device {} tuned {:>7}: {} | HF gain {:+.1}% | oracle dist {:.1}% | tuner {:.2}s",
+            r.device_id,
+            r.app.to_string(),
+            app.space().describe(r.best_index),
+            v.gain_pct,
+            v.oracle_distance_pct,
+            r.tuner_wall_seconds,
+        );
+    }
+    fleet.shutdown();
+    Ok(())
+}
+
+fn cmd_compare(flags: &Flags) -> Result<()> {
+    let cfg = flags.config()?;
+    let budget: usize = match flags.get("budget") {
+        Some(v) => v.parse().context("--budget")?,
+        None => cfg.iterations,
+    };
+    println!("# lasp compare: app={} budget={budget}", cfg.app);
+    let a = lasp::experiments::ablation::run(budget);
+    a.report();
+    Ok(())
+}
+
+fn cmd_experiment(flags: &Flags) -> Result<()> {
+    let name = flags.get("name").unwrap_or("all");
+    let quick = flags.has("quick");
+    let names: Vec<&str> = if name == "all" {
+        lasp::experiments::ALL.to_vec()
+    } else {
+        vec![name]
+    };
+    let mut failures = vec![];
+    for n in names {
+        println!("\n=== experiment {n} ===");
+        match lasp::experiments::run_by_name(n, quick) {
+            Ok(true) => println!("[shape OK] {n} matches the paper's qualitative shape"),
+            Ok(false) => {
+                println!("[shape MISMATCH] {n}");
+                failures.push(n.to_string());
+            }
+            Err(e) => return Err(e),
+        }
+    }
+    if !failures.is_empty() {
+        return Err(anyhow!("shape mismatches: {failures:?}"));
+    }
+    Ok(())
+}

@@ -1,0 +1,204 @@
+//! `artifacts/manifest.json` schema (written by `python/compile/aot.py`).
+
+use crate::util::json::Json;
+use anyhow::{anyhow, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Tensor shape + dtype descriptor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorDesc {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorDesc {
+    fn from_json(v: &Json) -> Result<TensorDesc> {
+        let shape = v
+            .get("shape")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("tensor desc missing shape"))?
+            .iter()
+            .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = v
+            .get("dtype")
+            .and_then(Json::as_str)
+            .unwrap_or("f32")
+            .to_string();
+        Ok(TensorDesc { shape, dtype })
+    }
+
+    /// Total element count.
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One AOT artifact entry.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub name: String,
+    /// File name within the artifacts dir.
+    pub file: String,
+    /// Graph kind: `lasp_step`, `ucb_scores`, `reward_norm`, `ucb_episode`,
+    /// `gp_propose`.
+    pub kind: String,
+    /// Application tag if the artifact is app-specific.
+    pub app: Option<String>,
+    /// Arm count for bandit artifacts.
+    pub k: Option<usize>,
+    /// Episode length for `ucb_episode`.
+    pub steps: Option<usize>,
+    pub inputs: Vec<TensorDesc>,
+    pub outputs: Vec<TensorDesc>,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: Vec<ArtifactMeta>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let root = Json::parse(&text).map_err(|e| anyhow!("manifest parse: {e}"))?;
+        if root.get("format").and_then(Json::as_str) != Some("hlo-text") {
+            return Err(anyhow!("unsupported manifest format"));
+        }
+        if root.get("return_tuple").and_then(Json::as_bool) != Some(true) {
+            return Err(anyhow!("artifacts must be lowered with return_tuple"));
+        }
+        let artifacts = root
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing artifacts"))?
+            .iter()
+            .map(|a| {
+                Ok(ArtifactMeta {
+                    name: a
+                        .get("name")
+                        .and_then(Json::as_str)
+                        .ok_or_else(|| anyhow!("artifact missing name"))?
+                        .to_string(),
+                    file: a
+                        .get("file")
+                        .and_then(Json::as_str)
+                        .ok_or_else(|| anyhow!("artifact missing file"))?
+                        .to_string(),
+                    kind: a
+                        .get("kind")
+                        .and_then(Json::as_str)
+                        .unwrap_or("unknown")
+                        .to_string(),
+                    app: a.get("app").and_then(Json::as_str).map(String::from),
+                    k: a.get("k").and_then(Json::as_usize),
+                    steps: a.get("steps").and_then(Json::as_usize),
+                    inputs: a
+                        .get("inputs")
+                        .and_then(Json::as_arr)
+                        .unwrap_or(&[])
+                        .iter()
+                        .map(TensorDesc::from_json)
+                        .collect::<Result<Vec<_>>>()?,
+                    outputs: a
+                        .get("outputs")
+                        .and_then(Json::as_arr)
+                        .unwrap_or(&[])
+                        .iter()
+                        .map(TensorDesc::from_json)
+                        .collect::<Result<Vec<_>>>()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Manifest { dir: dir.to_path_buf(), artifacts })
+    }
+
+    /// Find an artifact by exact name.
+    pub fn by_name(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    /// Find an artifact by kind + app (e.g. the `lasp_step` for "kripke").
+    pub fn by_kind_app(&self, kind: &str, app: &str) -> Option<&ArtifactMeta> {
+        self.artifacts
+            .iter()
+            .find(|a| a.kind == kind && a.app.as_deref() == Some(app))
+    }
+
+    /// Absolute path of an artifact's HLO text file.
+    pub fn path_of(&self, meta: &ArtifactMeta) -> PathBuf {
+        self.dir.join(&meta.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path, body: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), body).unwrap();
+    }
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("lasp-manifest-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn loads_valid_manifest() {
+        let dir = tmpdir("ok");
+        write_manifest(
+            &dir,
+            r#"{"format":"hlo-text","return_tuple":true,"artifacts":[
+              {"name":"lasp_step_kripke","file":"lasp_step_kripke.hlo.txt",
+               "kind":"lasp_step","app":"kripke","k":216,
+               "inputs":[{"shape":[216],"dtype":"f32"},{"shape":[],"dtype":"f32"}],
+               "outputs":[{"shape":[],"dtype":"s32"}]}]}"#,
+        );
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.artifacts.len(), 1);
+        let a = m.by_kind_app("lasp_step", "kripke").unwrap();
+        assert_eq!(a.k, Some(216));
+        assert_eq!(a.inputs[0].elements(), 216);
+        assert_eq!(a.inputs[1].elements(), 1); // scalar
+        assert!(m.by_name("nope").is_none());
+        assert!(m.path_of(a).ends_with("lasp_step_kripke.hlo.txt"));
+    }
+
+    #[test]
+    fn rejects_wrong_format() {
+        let dir = tmpdir("badfmt");
+        write_manifest(&dir, r#"{"format":"protobuf","return_tuple":true,"artifacts":[]}"#);
+        assert!(Manifest::load(&dir).is_err());
+    }
+
+    #[test]
+    fn rejects_non_tuple() {
+        let dir = tmpdir("notuple");
+        write_manifest(&dir, r#"{"format":"hlo-text","return_tuple":false,"artifacts":[]}"#);
+        assert!(Manifest::load(&dir).is_err());
+    }
+
+    #[test]
+    fn missing_file_errors() {
+        assert!(Manifest::load(Path::new("/nonexistent-lasp")).is_err());
+    }
+
+    #[test]
+    fn real_manifest_loads_if_built() {
+        if let Some(dir) = crate::runtime::find_artifacts_dir() {
+            let m = Manifest::load(&dir).unwrap();
+            for app in ["lulesh", "kripke", "clomp", "hypre"] {
+                let a = m.by_kind_app("lasp_step", app).unwrap();
+                assert!(m.path_of(a).exists());
+            }
+        }
+    }
+}

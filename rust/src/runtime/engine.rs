@@ -1,0 +1,362 @@
+//! Direct (single-thread) PJRT engine: compile-once, execute-many.
+
+use super::artifact::{ArtifactMeta, Manifest};
+use anyhow::{anyhow, Result};
+use std::collections::HashMap;
+use std::path::Path;
+
+/// PJRT CPU engine over the AOT artifact set. Not `Send` (PJRT handles are
+/// raw pointers) — see [`super::EngineHandle`] for the threaded wrapper.
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    /// Compiled executables, keyed by artifact name (compiled on demand).
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+/// Result of a fused `lasp_step` artifact execution.
+#[derive(Debug, Clone)]
+pub struct PjrtStep {
+    pub best: usize,
+    pub score: f64,
+    pub rewards: Vec<f32>,
+}
+
+impl Engine {
+    /// Create a CPU engine over `dir` (must contain `manifest.json`).
+    pub fn load(dir: &Path) -> Result<Engine> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu: {e:?}"))?;
+        Ok(Engine { client, manifest, executables: HashMap::new() })
+    }
+
+    /// Engine over the auto-discovered artifacts dir.
+    pub fn load_default() -> Result<Engine> {
+        let dir = super::find_artifacts_dir()
+            .ok_or_else(|| anyhow!("artifacts/ not found — run `make artifacts`"))?;
+        Self::load(&dir)
+    }
+
+    /// The manifest describing available artifacts.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// PJRT platform string (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn meta(&self, name: &str) -> Result<ArtifactMeta> {
+        self.manifest
+            .by_name(name)
+            .cloned()
+            .ok_or_else(|| anyhow!("artifact '{name}' not in manifest"))
+    }
+
+    /// Compile (or fetch the cached) executable for `name`.
+    fn executable(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.executables.contains_key(name) {
+            let meta = self.meta(name)?;
+            let path = self.manifest.path_of(&meta);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(|e| anyhow!("parse {}: {e:?}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+            self.executables.insert(name.to_string(), exe);
+        }
+        Ok(&self.executables[name])
+    }
+
+    /// Pre-compile a set of artifacts (hot-path warmup).
+    pub fn warmup(&mut self, names: &[&str]) -> Result<()> {
+        for n in names {
+            self.executable(n)?;
+        }
+        Ok(())
+    }
+
+    fn run_tuple(
+        &mut self,
+        name: &str,
+        inputs: &[xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        let exe = self.executable(name)?;
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow!("execute {name}: {e:?}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch {name}: {e:?}"))?;
+        lit.to_tuple().map_err(|e| anyhow!("untuple {name}: {e:?}"))
+    }
+
+    /// Execute the fused `lasp_step_<app>` artifact.
+    #[allow(clippy::too_many_arguments)]
+    pub fn lasp_step(
+        &mut self,
+        app: &str,
+        tau_sum: &[f32],
+        rho_sum: &[f32],
+        counts: &[f32],
+        t: f32,
+        alpha: f32,
+        beta: f32,
+        exploration: f32,
+    ) -> Result<PjrtStep> {
+        let name = format!("lasp_step_{app}");
+        let meta = self.meta(&name)?;
+        let k = meta.k.ok_or_else(|| anyhow!("{name}: missing k"))?;
+        if tau_sum.len() != k || rho_sum.len() != k || counts.len() != k {
+            return Err(anyhow!(
+                "{name}: expected vectors of len {k}, got {}/{}/{}",
+                tau_sum.len(),
+                rho_sum.len(),
+                counts.len()
+            ));
+        }
+        let inputs = vec![
+            xla::Literal::vec1(tau_sum),
+            xla::Literal::vec1(rho_sum),
+            xla::Literal::vec1(counts),
+            xla::Literal::scalar(t),
+            xla::Literal::scalar(alpha),
+            xla::Literal::scalar(beta),
+            xla::Literal::scalar(exploration),
+        ];
+        let out = self.run_tuple(&name, &inputs)?;
+        if out.len() != 3 {
+            return Err(anyhow!("{name}: expected 3 outputs, got {}", out.len()));
+        }
+        let best = out[0]
+            .get_first_element::<i32>()
+            .map_err(|e| anyhow!("{name} idx: {e:?}"))? as usize;
+        let score = out[1]
+            .get_first_element::<f32>()
+            .map_err(|e| anyhow!("{name} score: {e:?}"))? as f64;
+        let rewards = out[2]
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("{name} rewards: {e:?}"))?;
+        Ok(PjrtStep { best, score, rewards })
+    }
+
+    /// Execute `ucb_scores_<app>`: Eq. 2 scores + argmax.
+    pub fn ucb_scores(
+        &mut self,
+        app: &str,
+        rewards: &[f32],
+        counts: &[f32],
+        t: f32,
+        exploration: f32,
+    ) -> Result<(Vec<f32>, usize)> {
+        let name = format!("ucb_scores_{app}");
+        let inputs = vec![
+            xla::Literal::vec1(rewards),
+            xla::Literal::vec1(counts),
+            xla::Literal::scalar(t),
+            xla::Literal::scalar(exploration),
+        ];
+        let out = self.run_tuple(&name, &inputs)?;
+        let scores = out[0].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+        let idx = out[1].get_first_element::<i32>().map_err(|e| anyhow!("{e:?}"))? as usize;
+        Ok((scores, idx))
+    }
+
+    /// Execute `reward_norm_<app>`: Eq. 5 rewards from running sums.
+    pub fn reward_norm(
+        &mut self,
+        app: &str,
+        tau_sum: &[f32],
+        rho_sum: &[f32],
+        counts: &[f32],
+        alpha: f32,
+        beta: f32,
+    ) -> Result<Vec<f32>> {
+        let name = format!("reward_norm_{app}");
+        let inputs = vec![
+            xla::Literal::vec1(tau_sum),
+            xla::Literal::vec1(rho_sum),
+            xla::Literal::vec1(counts),
+            xla::Literal::scalar(alpha),
+            xla::Literal::scalar(beta),
+        ];
+        let out = self.run_tuple(&name, &inputs)?;
+        out[0].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))
+    }
+
+    /// Execute `ucb_episode_<app>_t<steps>`: mean-field episode replay.
+    /// Returns (final counts, selection trace).
+    #[allow(clippy::too_many_arguments)]
+    pub fn ucb_episode(
+        &mut self,
+        app: &str,
+        steps: usize,
+        expected_rewards: &[f32],
+        counts0: &[f32],
+        t0: f32,
+        exploration: f32,
+    ) -> Result<(Vec<f32>, Vec<i32>)> {
+        let name = format!("ucb_episode_{app}_t{steps}");
+        let inputs = vec![
+            xla::Literal::vec1(expected_rewards),
+            xla::Literal::vec1(counts0),
+            xla::Literal::scalar(t0),
+            xla::Literal::scalar(exploration),
+        ];
+        let out = self.run_tuple(&name, &inputs)?;
+        let counts = out[0].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+        let trace = out[1].to_vec::<i32>().map_err(|e| anyhow!("{e:?}"))?;
+        Ok((counts, trace))
+    }
+
+    /// Execute the BLISS `gp_propose` artifact: masked GP posterior + EI.
+    /// Shapes are fixed at lowering time (see manifest); `x`/`y`/`mask` are
+    /// padded to N, `xs` to M rows.
+    #[allow(clippy::too_many_arguments)]
+    pub fn gp_propose(
+        &mut self,
+        x: &[f32],
+        y: &[f32],
+        mask: &[f32],
+        xs: &[f32],
+        lengthscale: f32,
+        noise: f32,
+        best: f32,
+    ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>, usize)> {
+        let meta = self.meta("gp_propose")?;
+        let (n, d) = (meta.inputs[0].shape[0], meta.inputs[0].shape[1]);
+        let m = meta.inputs[3].shape[0];
+        if x.len() != n * d || y.len() != n || mask.len() != n || xs.len() != m * d {
+            return Err(anyhow!(
+                "gp_propose shape mismatch: x {} (want {}), y {} (want {}), xs {} (want {})",
+                x.len(),
+                n * d,
+                y.len(),
+                n,
+                xs.len(),
+                m * d
+            ));
+        }
+        let inputs = vec![
+            xla::Literal::vec1(x).reshape(&[n as i64, d as i64]).map_err(|e| anyhow!("{e:?}"))?,
+            xla::Literal::vec1(y),
+            xla::Literal::vec1(mask),
+            xla::Literal::vec1(xs).reshape(&[m as i64, d as i64]).map_err(|e| anyhow!("{e:?}"))?,
+            xla::Literal::scalar(lengthscale),
+            xla::Literal::scalar(noise),
+            xla::Literal::scalar(best),
+        ];
+        let out = self.run_tuple("gp_propose", &inputs)?;
+        let mean = out[0].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+        let var = out[1].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+        let ei = out[2].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+        let idx = out[3].get_first_element::<i32>().map_err(|e| anyhow!("{e:?}"))? as usize;
+        Ok((mean, var, ei, idx))
+    }
+
+    /// GP surrogate shape constants (N, M, D) from the manifest.
+    pub fn gp_shape(&self) -> Result<(usize, usize, usize)> {
+        let meta = self.meta("gp_propose")?;
+        Ok((
+            meta.inputs[0].shape[0],
+            meta.inputs[3].shape[0],
+            meta.inputs[0].shape[1],
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn engine() -> Option<Engine> {
+        let dir = crate::runtime::find_artifacts_dir()?;
+        Some(Engine::load(&dir).expect("engine load"))
+    }
+
+    #[test]
+    fn lasp_step_matches_scalar_backend() {
+        let Some(mut e) = engine() else { return };
+        let k = 216;
+        let mut state = crate::bandit::RewardState::new(k);
+        let mut rng = crate::util::Rng::new(3);
+        for _ in 0..400 {
+            let arm = rng.below(k);
+            state.observe(arm, rng.range(0.5, 3.0), rng.range(3.0, 9.0));
+        }
+        let tau: Vec<f32> = state.tau_sum.iter().map(|&v| v as f32).collect();
+        let rho: Vec<f32> = state.rho_sum.iter().map(|&v| v as f32).collect();
+        let cnt: Vec<f32> = state.counts.iter().map(|&v| v as f32).collect();
+        let out = e
+            .lasp_step("kripke", &tau, &rho, &cnt, state.t as f32, 0.8, 0.2, 1.0)
+            .unwrap();
+        let mut sb = crate::bandit::ScalarBackend;
+        let scalar =
+            crate::bandit::ScoreBackend::lasp_step(&mut sb, &state, 0.8, 0.2, 1.0).unwrap();
+        // Rewards agree to f32 tolerance...
+        for (a, b) in out.rewards.iter().zip(&scalar.rewards) {
+            assert!((*a as f64 - b).abs() < 1e-4, "{a} vs {b}");
+        }
+        // ...and the selected arm matches (or ties within tolerance).
+        if out.best != scalar.best {
+            let diff = (out.score - scalar.score).abs();
+            assert!(diff < 1e-4, "idx {} vs {}, scores differ {diff}", out.best, scalar.best);
+        }
+    }
+
+    #[test]
+    fn lasp_step_rejects_bad_lengths() {
+        let Some(mut e) = engine() else { return };
+        let err = e.lasp_step("kripke", &[0.0; 5], &[0.0; 5], &[0.0; 5], 1.0, 1.0, 0.0, 1.0);
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn episode_trace_counts_consistent() {
+        let Some(mut e) = engine() else { return };
+        let k = 216;
+        let rewards: Vec<f32> = (0..k).map(|i| (i % 17) as f32 / 17.0).collect();
+        let (counts, trace) = e
+            .ucb_episode("kripke", 500, &rewards, &vec![0.0; k], 1.0, 1.0)
+            .unwrap();
+        assert_eq!(trace.len(), 500);
+        assert_eq!(counts.iter().sum::<f32>(), 500.0);
+        // Trace histogram equals final counts.
+        let mut hist = vec![0f32; k];
+        for &i in &trace {
+            hist[i as usize] += 1.0;
+        }
+        assert_eq!(hist, counts);
+    }
+
+    #[test]
+    fn gp_propose_shapes() {
+        let Some(mut e) = engine() else { return };
+        let (n, m, d) = e.gp_shape().unwrap();
+        let x = vec![0.1f32; n * d];
+        let y = vec![0.5f32; n];
+        let mut mask = vec![0.0f32; n];
+        mask[0] = 1.0;
+        mask[1] = 1.0;
+        let xs = vec![0.2f32; m * d];
+        let (mean, var, ei, idx) = e
+            .gp_propose(&x, &y, &mask, &xs, 1.0, 1e-3, 0.5)
+            .unwrap();
+        assert_eq!(mean.len(), m);
+        assert_eq!(var.len(), m);
+        assert_eq!(ei.len(), m);
+        assert!(idx < m);
+        for v in var {
+            assert!(v >= 0.0);
+        }
+    }
+
+    #[test]
+    fn missing_artifact_is_error() {
+        let Some(mut e) = engine() else { return };
+        assert!(e.lasp_step("nope", &[], &[], &[], 1.0, 1.0, 0.0, 1.0).is_err());
+    }
+}

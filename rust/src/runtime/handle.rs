@@ -1,0 +1,323 @@
+//! `Send + Clone` engine handle: a dedicated actor thread owns the PJRT
+//! [`Engine`] (whose handles are `!Send`); callers talk to it over
+//! channels. This is what [`crate::bandit::UcbTuner`] and the fleet
+//! coordinator use when the AOT backend is enabled.
+
+use super::engine::{Engine, PjrtStep};
+use crate::bandit::{RewardState, ScoreBackend, StepOutput};
+use anyhow::{anyhow, Result};
+use std::path::PathBuf;
+use std::sync::mpsc;
+
+enum Request {
+    LaspStep {
+        app: String,
+        tau_sum: Vec<f32>,
+        rho_sum: Vec<f32>,
+        counts: Vec<f32>,
+        t: f32,
+        alpha: f32,
+        beta: f32,
+        exploration: f32,
+        reply: mpsc::Sender<Result<PjrtStep>>,
+    },
+    Episode {
+        app: String,
+        steps: usize,
+        rewards: Vec<f32>,
+        counts0: Vec<f32>,
+        t0: f32,
+        exploration: f32,
+        reply: mpsc::Sender<Result<(Vec<f32>, Vec<i32>)>>,
+    },
+    GpPropose {
+        x: Vec<f32>,
+        y: Vec<f32>,
+        mask: Vec<f32>,
+        xs: Vec<f32>,
+        lengthscale: f32,
+        noise: f32,
+        best: f32,
+        reply: mpsc::Sender<Result<(Vec<f32>, Vec<f32>, Vec<f32>, usize)>>,
+    },
+    GpShape {
+        reply: mpsc::Sender<Result<(usize, usize, usize)>>,
+    },
+    Warmup {
+        names: Vec<String>,
+        reply: mpsc::Sender<Result<()>>,
+    },
+    Platform {
+        reply: mpsc::Sender<String>,
+    },
+}
+
+/// Cloneable, `Send` handle to a PJRT engine actor thread.
+#[derive(Clone)]
+pub struct EngineHandle {
+    tx: mpsc::Sender<Request>,
+}
+
+impl EngineHandle {
+    /// Spawn the actor over an explicit artifacts dir.
+    pub fn spawn(dir: PathBuf) -> Result<EngineHandle> {
+        let (tx, rx) = mpsc::channel::<Request>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        std::thread::Builder::new()
+            .name("lasp-pjrt".into())
+            .spawn(move || {
+                let mut engine = match Engine::load(&dir) {
+                    Ok(e) => {
+                        let _ = ready_tx.send(Ok(()));
+                        e
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                while let Ok(req) = rx.recv() {
+                    match req {
+                        Request::LaspStep {
+                            app, tau_sum, rho_sum, counts, t, alpha, beta, exploration, reply,
+                        } => {
+                            let r = engine.lasp_step(
+                                &app, &tau_sum, &rho_sum, &counts, t, alpha, beta, exploration,
+                            );
+                            let _ = reply.send(r);
+                        }
+                        Request::Episode {
+                            app, steps, rewards, counts0, t0, exploration, reply,
+                        } => {
+                            let r = engine
+                                .ucb_episode(&app, steps, &rewards, &counts0, t0, exploration);
+                            let _ = reply.send(r);
+                        }
+                        Request::GpPropose {
+                            x, y, mask, xs, lengthscale, noise, best, reply,
+                        } => {
+                            let r = engine
+                                .gp_propose(&x, &y, &mask, &xs, lengthscale, noise, best);
+                            let _ = reply.send(r);
+                        }
+                        Request::GpShape { reply } => {
+                            let _ = reply.send(engine.gp_shape());
+                        }
+                        Request::Warmup { names, reply } => {
+                            let refs: Vec<&str> = names.iter().map(String::as_str).collect();
+                            let _ = reply.send(engine.warmup(&refs));
+                        }
+                        Request::Platform { reply } => {
+                            let _ = reply.send(engine.platform());
+                        }
+                    }
+                }
+            })
+            .map_err(|e| anyhow!("spawn pjrt thread: {e}"))?;
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow!("pjrt thread died during init"))??;
+        Ok(EngineHandle { tx })
+    }
+
+    /// Spawn over the auto-discovered artifacts dir.
+    pub fn spawn_default() -> Result<EngineHandle> {
+        let dir = super::find_artifacts_dir()
+            .ok_or_else(|| anyhow!("artifacts/ not found — run `make artifacts`"))?;
+        Self::spawn(dir)
+    }
+
+    fn call<T>(&self, build: impl FnOnce(mpsc::Sender<T>) -> Request) -> Result<T> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.tx
+            .send(build(reply_tx))
+            .map_err(|_| anyhow!("pjrt actor gone"))?;
+        reply_rx.recv().map_err(|_| anyhow!("pjrt actor dropped reply"))
+    }
+
+    /// Fused `lasp_step` on the actor.
+    #[allow(clippy::too_many_arguments)]
+    pub fn lasp_step(
+        &self,
+        app: &str,
+        tau_sum: Vec<f32>,
+        rho_sum: Vec<f32>,
+        counts: Vec<f32>,
+        t: f32,
+        alpha: f32,
+        beta: f32,
+        exploration: f32,
+    ) -> Result<PjrtStep> {
+        self.call(|reply| Request::LaspStep {
+            app: app.to_string(),
+            tau_sum,
+            rho_sum,
+            counts,
+            t,
+            alpha,
+            beta,
+            exploration,
+            reply,
+        })?
+    }
+
+    /// Mean-field episode replay on the actor.
+    #[allow(clippy::too_many_arguments)]
+    pub fn ucb_episode(
+        &self,
+        app: &str,
+        steps: usize,
+        rewards: Vec<f32>,
+        counts0: Vec<f32>,
+        t0: f32,
+        exploration: f32,
+    ) -> Result<(Vec<f32>, Vec<i32>)> {
+        self.call(|reply| Request::Episode {
+            app: app.to_string(),
+            steps,
+            rewards,
+            counts0,
+            t0,
+            exploration,
+            reply,
+        })?
+    }
+
+    /// BLISS GP surrogate proposal on the actor.
+    #[allow(clippy::too_many_arguments)]
+    pub fn gp_propose(
+        &self,
+        x: Vec<f32>,
+        y: Vec<f32>,
+        mask: Vec<f32>,
+        xs: Vec<f32>,
+        lengthscale: f32,
+        noise: f32,
+        best: f32,
+    ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>, usize)> {
+        self.call(|reply| Request::GpPropose {
+            x,
+            y,
+            mask,
+            xs,
+            lengthscale,
+            noise,
+            best,
+            reply,
+        })?
+    }
+
+    /// GP shape constants (N, M, D).
+    pub fn gp_shape(&self) -> Result<(usize, usize, usize)> {
+        self.call(|reply| Request::GpShape { reply })?
+    }
+
+    /// Pre-compile artifacts.
+    pub fn warmup(&self, names: &[&str]) -> Result<()> {
+        self.call(|reply| Request::Warmup {
+            names: names.iter().map(|s| s.to_string()).collect(),
+            reply,
+        })?
+    }
+
+    /// PJRT platform string.
+    pub fn platform(&self) -> Result<String> {
+        self.call(|reply| Request::Platform { reply })
+    }
+}
+
+/// A `ScoreBackend` that routes the per-iteration hot path through the AOT
+/// artifact for one application.
+pub struct PjrtScoreBackend {
+    handle: EngineHandle,
+    app: String,
+}
+
+impl PjrtScoreBackend {
+    pub fn new(handle: EngineHandle, app: impl Into<String>) -> Self {
+        PjrtScoreBackend { handle, app: app.into() }
+    }
+}
+
+impl ScoreBackend for PjrtScoreBackend {
+    fn lasp_step(
+        &mut self,
+        state: &RewardState,
+        alpha: f64,
+        beta: f64,
+        exploration: f64,
+    ) -> Result<StepOutput> {
+        let tau: Vec<f32> = state.tau_sum.iter().map(|&v| v as f32).collect();
+        let rho: Vec<f32> = state.rho_sum.iter().map(|&v| v as f32).collect();
+        let cnt: Vec<f32> = state.counts.iter().map(|&v| v as f32).collect();
+        let out = self.handle.lasp_step(
+            &self.app,
+            tau,
+            rho,
+            cnt,
+            state.t as f32,
+            alpha as f32,
+            beta as f32,
+            exploration as f32,
+        )?;
+        Ok(StepOutput {
+            best: out.best,
+            score: out.score,
+            rewards: out.rewards.iter().map(|&v| v as f64).collect(),
+        })
+    }
+
+    fn backend_name(&self) -> &'static str {
+        "pjrt"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bandit::{Policy, UcbTuner};
+
+    #[test]
+    fn handle_is_send_and_clone() {
+        fn assert_send_clone<T: Send + Clone>() {}
+        assert_send_clone::<EngineHandle>();
+    }
+
+    #[test]
+    fn tuner_over_pjrt_backend_converges() {
+        let Some(dir) = crate::runtime::find_artifacts_dir() else { return };
+        let handle = EngineHandle::spawn(dir).unwrap();
+        let backend = PjrtScoreBackend::new(handle, "clomp");
+        let k = 125;
+        let mut tuner = UcbTuner::with_backend(k, 1.0, 0.0, Box::new(backend));
+        // Arm 40 is the fastest.
+        for _ in 0..400 {
+            let arm = tuner.select();
+            let time = if arm == 40 { 0.5 } else { 2.0 + (arm % 7) as f64 * 0.1 };
+            tuner.update(arm, time, 5.0);
+        }
+        assert_eq!(tuner.most_selected(), 40);
+        assert_eq!(tuner.backend_name(), "pjrt");
+    }
+
+    #[test]
+    fn handle_usable_from_worker_threads() {
+        let Some(dir) = crate::runtime::find_artifacts_dir() else { return };
+        let handle = EngineHandle::spawn(dir).unwrap();
+        let mut joins = vec![];
+        for i in 0..4 {
+            let h = handle.clone();
+            joins.push(std::thread::spawn(move || {
+                let k = 125;
+                let tau = vec![1.0f32 + i as f32; k];
+                let rho = vec![5.0f32; k];
+                let cnt = vec![1.0f32; k];
+                let out = h.lasp_step("clomp", tau, rho, cnt, 126.0, 0.8, 0.2, 1.0).unwrap();
+                assert!(out.best < k);
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+    }
+}

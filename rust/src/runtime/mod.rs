@@ -1,0 +1,42 @@
+//! AOT runtime: load `artifacts/*.hlo.txt` (lowered by
+//! `python/compile/aot.py`) and execute them on the PJRT CPU client via the
+//! `xla` crate. Python never runs here — the HLO text is the only thing
+//! that crosses the language boundary.
+//!
+//! Two entry styles:
+//! * [`Engine`] — direct, single-threaded use (PJRT handles are `!Send`).
+//! * [`EngineHandle`] — a `Send + Clone` handle backed by a dedicated actor
+//!   thread that owns the `Engine`; this is what the tuning loop and the
+//!   fleet coordinator use, and it implements
+//!   [`crate::bandit::ScoreBackend`].
+
+mod artifact;
+mod engine;
+mod handle;
+
+pub use artifact::{ArtifactMeta, Manifest};
+pub use engine::Engine;
+pub use handle::{EngineHandle, PjrtScoreBackend};
+
+/// Default artifacts directory relative to the repo root.
+pub const DEFAULT_ARTIFACTS_DIR: &str = "artifacts";
+
+/// Locate the artifacts directory: `$LASP_ARTIFACTS` or `artifacts/`
+/// relative to the current dir or the crate root.
+pub fn find_artifacts_dir() -> Option<std::path::PathBuf> {
+    if let Ok(dir) = std::env::var("LASP_ARTIFACTS") {
+        let p = std::path::PathBuf::from(dir);
+        if p.join("manifest.json").exists() {
+            return Some(p);
+        }
+    }
+    for base in [
+        std::path::PathBuf::from(DEFAULT_ARTIFACTS_DIR),
+        std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join(DEFAULT_ARTIFACTS_DIR),
+    ] {
+        if base.join("manifest.json").exists() {
+            return Some(base);
+        }
+    }
+    None
+}

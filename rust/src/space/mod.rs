@@ -1,0 +1,262 @@
+//! Parameter/configuration space machinery (paper §II-A, Table II).
+//!
+//! A [`ParamSpace`] is the cartesian product of named, discrete
+//! [`ParamDef`]s. Every point in the product is a *configuration* — one
+//! bandit arm — addressed by a dense mixed-radix index in `0..space.len()`.
+//! The dense indexing is what lets the AOT artifacts treat the whole space
+//! as flat `f32[K]` vectors.
+
+mod param;
+
+pub use param::{ParamDef, Value};
+
+
+/// A full cartesian parameter space.
+#[derive(Debug, Clone)]
+pub struct ParamSpace {
+    name: String,
+    params: Vec<ParamDef>,
+    /// Mixed-radix strides; `strides[i]` = product of sizes of params after i.
+    strides: Vec<usize>,
+    size: usize,
+}
+
+/// One concrete configuration: the decoded values plus its dense index.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Config {
+    pub index: usize,
+    pub values: Vec<Value>,
+}
+
+impl ParamSpace {
+    /// Build a space from parameter definitions. Panics on an empty product.
+    pub fn new(name: impl Into<String>, params: Vec<ParamDef>) -> Self {
+        assert!(!params.is_empty(), "empty parameter list");
+        let mut size = 1usize;
+        for p in &params {
+            assert!(p.cardinality() > 0, "parameter {} has no values", p.name());
+            size = size
+                .checked_mul(p.cardinality())
+                .expect("parameter space overflow");
+        }
+        let mut strides = vec![1usize; params.len()];
+        for i in (0..params.len().saturating_sub(1)).rev() {
+            strides[i] = strides[i + 1] * params[i + 1].cardinality();
+        }
+        ParamSpace { name: name.into(), params, strides, size }
+    }
+
+    /// Space name (application name).
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Total number of configurations (arms), i.e. `a_1 a_2 ... a_n`.
+    pub fn len(&self) -> usize {
+        self.size
+    }
+
+    /// True when the space has exactly one configuration.
+    pub fn is_empty(&self) -> bool {
+        self.size == 0
+    }
+
+    /// Number of tunable parameters (dimensions).
+    pub fn dims(&self) -> usize {
+        self.params.len()
+    }
+
+    /// Parameter definitions in declaration order.
+    pub fn params(&self) -> &[ParamDef] {
+        &self.params
+    }
+
+    /// Decode a dense index into per-parameter value positions.
+    pub fn positions(&self, index: usize) -> Vec<usize> {
+        assert!(index < self.size, "index {index} out of space {}", self.size);
+        self.params
+            .iter()
+            .zip(&self.strides)
+            .map(|(p, s)| (index / s) % p.cardinality())
+            .collect()
+    }
+
+    /// Decode a dense index into a [`Config`].
+    pub fn decode(&self, index: usize) -> Config {
+        let values = self
+            .positions(index)
+            .iter()
+            .zip(&self.params)
+            .map(|(&pos, p)| p.values()[pos].clone())
+            .collect();
+        Config { index, values }
+    }
+
+    /// Encode per-parameter value positions back to the dense index.
+    pub fn encode_positions(&self, positions: &[usize]) -> usize {
+        assert_eq!(positions.len(), self.params.len());
+        positions
+            .iter()
+            .zip(&self.params)
+            .zip(&self.strides)
+            .map(|((&pos, p), s)| {
+                assert!(pos < p.cardinality());
+                pos * s
+            })
+            .sum()
+    }
+
+    /// Find a configuration index by named values; `None` if any value is
+    /// absent from its parameter's domain.
+    pub fn encode_named(&self, named: &[(&str, Value)]) -> Option<usize> {
+        let mut positions = self.default_positions();
+        for (name, value) in named {
+            let (i, p) = self
+                .params
+                .iter()
+                .enumerate()
+                .find(|(_, p)| p.name() == *name)?;
+            positions[i] = p.position_of(value)?;
+        }
+        Some(self.encode_positions(&positions))
+    }
+
+    /// Positions of every parameter's declared default value.
+    pub fn default_positions(&self) -> Vec<usize> {
+        self.params.iter().map(|p| p.default_position()).collect()
+    }
+
+    /// Dense index of the all-defaults configuration (Table II "Default").
+    pub fn default_index(&self) -> usize {
+        self.encode_positions(&self.default_positions())
+    }
+
+    /// Normalized feature vector in `[0, 1]^dims` for surrogate models
+    /// (BLISS GP): each parameter mapped by its position within its domain.
+    pub fn features(&self, index: usize) -> Vec<f64> {
+        self.positions(index)
+            .iter()
+            .zip(&self.params)
+            .map(|(&pos, p)| {
+                if p.cardinality() == 1 {
+                    0.5
+                } else {
+                    pos as f64 / (p.cardinality() - 1) as f64
+                }
+            })
+            .collect()
+    }
+
+    /// Iterate over all dense indices.
+    pub fn indices(&self) -> impl Iterator<Item = usize> {
+        0..self.size
+    }
+
+    /// Human-readable rendering of a configuration.
+    pub fn describe(&self, index: usize) -> String {
+        let cfg = self.decode(index);
+        let parts: Vec<String> = self
+            .params
+            .iter()
+            .zip(&cfg.values)
+            .map(|(p, v)| format!("{}={}", p.name(), v))
+            .collect();
+        format!("#{index} {{{}}}", parts.join(", "))
+    }
+}
+
+impl std::fmt::Display for Config {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "#{}[", self.index)?;
+        for (i, v) in self.values.iter().enumerate() {
+            if i > 0 {
+                write!(f, ", ")?;
+            }
+            write!(f, "{v}")?;
+        }
+        write!(f, "]")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> ParamSpace {
+        ParamSpace::new(
+            "toy",
+            vec![
+                ParamDef::ints("a", &[1, 2, 3], 2),
+                ParamDef::tags("b", &["x", "y"], "x"),
+                ParamDef::floats("c", &[0.1, 0.2, 0.3, 0.4], 0.2),
+            ],
+        )
+    }
+
+    #[test]
+    fn size_is_product() {
+        assert_eq!(toy().len(), 3 * 2 * 4);
+    }
+
+    #[test]
+    fn encode_decode_roundtrip_all() {
+        let s = toy();
+        for i in s.indices() {
+            let pos = s.positions(i);
+            assert_eq!(s.encode_positions(&pos), i);
+            let cfg = s.decode(i);
+            assert_eq!(cfg.index, i);
+            assert_eq!(cfg.values.len(), 3);
+        }
+    }
+
+    #[test]
+    fn default_index_matches_declared_defaults() {
+        let s = toy();
+        let d = s.decode(s.default_index());
+        assert_eq!(d.values[0], Value::Int(2));
+        assert_eq!(d.values[1], Value::Tag("x".into()));
+        assert_eq!(d.values[2], Value::Float(0.2));
+    }
+
+    #[test]
+    fn encode_named_finds_config() {
+        let s = toy();
+        let idx = s
+            .encode_named(&[("a", Value::Int(3)), ("b", Value::Tag("y".into()))])
+            .unwrap();
+        let cfg = s.decode(idx);
+        assert_eq!(cfg.values[0], Value::Int(3));
+        assert_eq!(cfg.values[1], Value::Tag("y".into()));
+        // Unspecified parameter keeps its default.
+        assert_eq!(cfg.values[2], Value::Float(0.2));
+        assert!(s.encode_named(&[("a", Value::Int(99))]).is_none());
+        assert!(s.encode_named(&[("zzz", Value::Int(1))]).is_none());
+    }
+
+    #[test]
+    fn features_normalized() {
+        let s = toy();
+        for i in s.indices() {
+            for f in s.features(i) {
+                assert!((0.0..=1.0).contains(&f));
+            }
+        }
+        // First config: all positions 0 -> features all 0.
+        assert_eq!(s.features(0), vec![0.0, 0.0, 0.0]);
+        // Last config: all positions max -> features all 1.
+        assert_eq!(s.features(s.len() - 1), vec![1.0, 1.0, 1.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn out_of_range_index_panics() {
+        toy().positions(24);
+    }
+
+    #[test]
+    fn describe_contains_names() {
+        let d = toy().describe(0);
+        assert!(d.contains("a=1") && d.contains("b=x") && d.contains("c=0.1"));
+    }
+}

@@ -1,0 +1,188 @@
+//! Single tunable parameter definitions.
+
+
+/// A parameter value: integer, float, or categorical tag (e.g. Kripke's
+/// `Layout` ∈ {DGZ, DZG, GDZ, GZD, ZDG, ZGD}).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Int(i64),
+    Float(f64),
+    Tag(String),
+}
+
+impl Value {
+    /// Integer payload; panics if the value is not an `Int`.
+    pub fn as_int(&self) -> i64 {
+        match self {
+            Value::Int(v) => *v,
+            other => panic!("expected Int, got {other:?}"),
+        }
+    }
+
+    /// Float payload (ints coerce); panics on tags.
+    pub fn as_float(&self) -> f64 {
+        match self {
+            Value::Float(v) => *v,
+            Value::Int(v) => *v as f64,
+            other => panic!("expected numeric, got {other:?}"),
+        }
+    }
+
+    /// Tag payload; panics otherwise.
+    pub fn as_tag(&self) -> &str {
+        match self {
+            Value::Tag(s) => s,
+            other => panic!("expected Tag, got {other:?}"),
+        }
+    }
+}
+
+impl std::fmt::Display for Value {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Value::Int(v) => write!(f, "{v}"),
+            Value::Float(v) => write!(f, "{v}"),
+            Value::Tag(s) => write!(f, "{s}"),
+        }
+    }
+}
+
+/// A named tunable parameter with a finite ordered domain and a default.
+#[derive(Debug, Clone)]
+pub struct ParamDef {
+    name: String,
+    values: Vec<Value>,
+    default_pos: usize,
+    /// One-line description (Table II "Parameter Description").
+    description: String,
+}
+
+impl ParamDef {
+    /// Generic constructor; `default_pos` indexes into `values`.
+    pub fn new(
+        name: impl Into<String>,
+        values: Vec<Value>,
+        default_pos: usize,
+        description: impl Into<String>,
+    ) -> Self {
+        assert!(!values.is_empty());
+        assert!(default_pos < values.len());
+        ParamDef {
+            name: name.into(),
+            values,
+            default_pos,
+            description: description.into(),
+        }
+    }
+
+    /// Integer-valued parameter; `default` must be one of `vals`.
+    pub fn ints(name: impl Into<String>, vals: &[i64], default: i64) -> Self {
+        let values: Vec<Value> = vals.iter().map(|&v| Value::Int(v)).collect();
+        let pos = vals
+            .iter()
+            .position(|&v| v == default)
+            .expect("default not in domain");
+        ParamDef::new(name, values, pos, "")
+    }
+
+    /// Contiguous integer range `lo..=hi`.
+    pub fn int_range(name: impl Into<String>, lo: i64, hi: i64, default: i64) -> Self {
+        let vals: Vec<i64> = (lo..=hi).collect();
+        ParamDef::ints(name, &vals, default)
+    }
+
+    /// Float-valued parameter.
+    pub fn floats(name: impl Into<String>, vals: &[f64], default: f64) -> Self {
+        let values: Vec<Value> = vals.iter().map(|&v| Value::Float(v)).collect();
+        let pos = vals
+            .iter()
+            .position(|&v| v == default)
+            .expect("default not in domain");
+        ParamDef::new(name, values, pos, "")
+    }
+
+    /// Categorical parameter.
+    pub fn tags(name: impl Into<String>, vals: &[&str], default: &str) -> Self {
+        let values: Vec<Value> = vals.iter().map(|v| Value::Tag(v.to_string())).collect();
+        let pos = vals
+            .iter()
+            .position(|v| *v == default)
+            .expect("default not in domain");
+        ParamDef::new(name, values, pos, "")
+    }
+
+    /// Attach a human-readable description (builder style).
+    pub fn describe(mut self, d: impl Into<String>) -> Self {
+        self.description = d.into();
+        self
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn description(&self) -> &str {
+        &self.description
+    }
+
+    pub fn values(&self) -> &[Value] {
+        &self.values
+    }
+
+    pub fn cardinality(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn default_position(&self) -> usize {
+        self.default_pos
+    }
+
+    pub fn default_value(&self) -> &Value {
+        &self.values[self.default_pos]
+    }
+
+    /// Position of `value` in the domain, if present.
+    pub fn position_of(&self, value: &Value) -> Option<usize> {
+        self.values.iter().position(|v| v == value)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn int_range_inclusive() {
+        let p = ParamDef::int_range("r", 1, 15, 11);
+        assert_eq!(p.cardinality(), 15);
+        assert_eq!(p.default_value(), &Value::Int(11));
+    }
+
+    #[test]
+    fn tags_default_position() {
+        let p = ParamDef::tags("layout", &["DGZ", "DZG", "GDZ"], "DGZ");
+        assert_eq!(p.default_position(), 0);
+        assert_eq!(p.position_of(&Value::Tag("GDZ".into())), Some(2));
+        assert_eq!(p.position_of(&Value::Tag("nope".into())), None);
+    }
+
+    #[test]
+    #[should_panic]
+    fn default_must_be_in_domain() {
+        ParamDef::ints("x", &[1, 2], 3);
+    }
+
+    #[test]
+    fn value_accessors() {
+        assert_eq!(Value::Int(3).as_int(), 3);
+        assert_eq!(Value::Int(3).as_float(), 3.0);
+        assert_eq!(Value::Float(0.5).as_float(), 0.5);
+        assert_eq!(Value::Tag("a".into()).as_tag(), "a");
+    }
+
+    #[test]
+    fn display_forms() {
+        assert_eq!(Value::Int(7).to_string(), "7");
+        assert_eq!(Value::Tag("ZDG".into()).to_string(), "ZDG");
+    }
+}

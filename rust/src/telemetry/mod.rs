@@ -1,0 +1,228 @@
+//! Tuner resource telemetry (paper Fig 10: CPU and memory footprint of the
+//! autotuner itself, LASP vs BLISS, on MAXN vs 5W).
+//!
+//! Two sources:
+//! * **real process sampling** — RSS and CPU time of *this* process read
+//!   from `/proc/self`, sampled while a tuner runs (what our Fig 10 bench
+//!   reports for our own implementations);
+//! * **footprint model** — an analytic estimate of what each tuner would
+//!   occupy on the Jetson (scaled by the mode's clock), used to put LASP
+//!   and BLISS on the paper's axes.
+
+
+/// Aggregated resource usage over a tuning session.
+#[derive(Debug, Clone, Default)]
+pub struct ResourceReport {
+    /// Peak resident set size delta over the session, MiB.
+    pub peak_rss_mib: f64,
+    /// Mean RSS over samples, MiB.
+    pub mean_rss_mib: f64,
+    /// CPU seconds consumed by this process during the session.
+    pub cpu_seconds: f64,
+    /// Wall seconds elapsed.
+    pub wall_seconds: f64,
+    /// Samples taken.
+    pub samples: usize,
+}
+
+impl ResourceReport {
+    /// Average CPU utilization of one core, percent.
+    pub fn cpu_pct(&self) -> f64 {
+        if self.wall_seconds <= 0.0 {
+            0.0
+        } else {
+            100.0 * self.cpu_seconds / self.wall_seconds
+        }
+    }
+}
+
+/// Samples `/proc/self` while a tuner runs.
+pub struct ResourceTracker {
+    start_cpu: f64,
+    start_wall: std::time::Instant,
+    baseline_rss: f64,
+    peak_rss: f64,
+    rss_sum: f64,
+    samples: usize,
+}
+
+/// Read (rss_mib, cpu_seconds) for the current process. Falls back to zeros
+/// off-Linux.
+pub fn read_self_usage() -> (f64, f64) {
+    let statm = std::fs::read_to_string("/proc/self/statm").unwrap_or_default();
+    let rss_pages: f64 = statm
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0.0);
+    let page_kib = 4.0; // x86-64/aarch64 default
+    let rss_mib = rss_pages * page_kib / 1024.0;
+
+    let stat = std::fs::read_to_string("/proc/self/stat").unwrap_or_default();
+    // utime+stime are fields 14/15 (1-based) after the comm field, which can
+    // contain spaces — split after the closing paren.
+    let cpu = stat
+        .rsplit_once(')')
+        .map(|(_, rest)| {
+            let f: Vec<&str> = rest.split_whitespace().collect();
+            let utime: f64 = f.get(11).and_then(|s| s.parse().ok()).unwrap_or(0.0);
+            let stime: f64 = f.get(12).and_then(|s| s.parse().ok()).unwrap_or(0.0);
+            (utime + stime) / clock_ticks_per_sec()
+        })
+        .unwrap_or(0.0);
+    (rss_mib, cpu)
+}
+
+fn clock_ticks_per_sec() -> f64 {
+    // sysconf(_SC_CLK_TCK) is 100 on every Linux we target.
+    100.0
+}
+
+impl ResourceTracker {
+    /// Begin tracking now.
+    pub fn start() -> Self {
+        let (rss, cpu) = read_self_usage();
+        ResourceTracker {
+            start_cpu: cpu,
+            start_wall: std::time::Instant::now(),
+            baseline_rss: rss,
+            peak_rss: rss,
+            rss_sum: 0.0,
+            samples: 0,
+        }
+    }
+
+    /// Take one sample (cheap; call per iteration or per batch).
+    pub fn sample(&mut self) {
+        // Sampling /proc every iteration is itself overhead; subsample.
+        if self.samples % 16 == 0 {
+            let (rss, _) = read_self_usage();
+            self.peak_rss = self.peak_rss.max(rss);
+            self.rss_sum += rss;
+        }
+        self.samples += 1;
+    }
+
+    /// Finish and summarize.
+    pub fn report(&self) -> ResourceReport {
+        let (rss, cpu) = read_self_usage();
+        let peak = self.peak_rss.max(rss);
+        let taken = (self.samples / 16).max(1);
+        ResourceReport {
+            peak_rss_mib: (peak - self.baseline_rss).max(0.0) + 0.0,
+            mean_rss_mib: if self.samples == 0 {
+                rss
+            } else {
+                self.rss_sum / taken as f64
+            },
+            cpu_seconds: (cpu - self.start_cpu).max(0.0),
+            wall_seconds: self.start_wall.elapsed().as_secs_f64(),
+            samples: self.samples,
+        }
+    }
+}
+
+/// Analytic footprint model for Fig 10's four bars: what each tuner costs
+/// *on the Jetson*, derived from its per-iteration work.
+///
+/// * LASP: one O(K) vector pass per iteration + O(K) f64 state.
+/// * BLISS (BO/GP): O(N²·D) kernel build + O(N³) Cholesky per iteration on
+///   a growing observation set, plus surrogate-pool state — the published
+///   BLISS keeps several models.
+#[derive(Debug, Clone, Copy)]
+pub struct FootprintModel {
+    /// Arm count of the tuned application.
+    pub arms: usize,
+    /// Observations the surrogate retains (BLISS) — 0 for LASP.
+    pub surrogate_obs: usize,
+    /// Surrogate pool size (BLISS trains several lightweight models).
+    pub surrogate_pool: usize,
+}
+
+/// Estimated (cpu_pct, rss_mib) on a Jetson power mode.
+pub fn jetson_footprint(
+    m: &FootprintModel,
+    mode: crate::device::PowerMode,
+) -> (f64, f64) {
+    let spec = mode.spec();
+    // Normalize work against the MAXN clock: the same tuner burns a larger
+    // share of a slower core (the paper's 5W bars are higher).
+    let clock_ratio = 1.479 / spec.freq_ghz;
+    if m.surrogate_obs == 0 {
+        // LASP: 3 f64 vectors of length K streamed once per iteration.
+        let vec_pass_ms = (m.arms as f64) * 3.0 * 8.0 / 2.0e9 * 1e3 * clock_ratio;
+        // Assume ~1 iteration per second of app runtime: cpu% ≈ pass/1s.
+        let cpu_pct = (vec_pass_ms / 10.0 + 1.2) * clock_ratio;
+        let rss_mib = 4.0 + (m.arms as f64) * 3.0 * 8.0 / 1.0e6;
+        (cpu_pct, rss_mib)
+    } else {
+        let n = m.surrogate_obs as f64;
+        let pool = m.surrogate_pool.max(1) as f64;
+        // GP iteration: kernel build + Cholesky, per surrogate in the pool.
+        let flops = pool * (n * n * 12.0 + n * n * n / 3.0);
+        let cpu_pct = (flops / 2.0e7 + 8.0) * clock_ratio;
+        // Python + sklearn-ish resident footprint plus pool state.
+        let rss_mib = 120.0 + pool * n * n * 8.0 / 1.0e6 + (m.arms as f64) * 1.6e-4;
+        (cpu_pct.min(100.0 * spec.cores as f64), rss_mib)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::PowerMode;
+
+    #[test]
+    fn read_usage_nonzero_on_linux() {
+        let (rss, _cpu) = read_self_usage();
+        assert!(rss > 1.0, "rss {rss}");
+    }
+
+    #[test]
+    fn tracker_reports_consistent() {
+        let mut t = ResourceTracker::start();
+        let mut v = vec![0u8; 4 << 20];
+        for (i, b) in v.iter_mut().enumerate() {
+            *b = i as u8;
+        }
+        for _ in 0..64 {
+            t.sample();
+        }
+        let r = t.report();
+        assert_eq!(r.samples, 64);
+        assert!(r.wall_seconds >= 0.0);
+        assert!(r.mean_rss_mib > 0.0);
+        drop(v);
+    }
+
+    #[test]
+    fn lasp_footprint_below_bliss() {
+        // Fig 10's headline: LASP uses far less CPU and memory than BLISS.
+        for mode in [PowerMode::Maxn, PowerMode::FiveW] {
+            let lasp = jetson_footprint(
+                &FootprintModel { arms: 92_160, surrogate_obs: 0, surrogate_pool: 0 },
+                mode,
+            );
+            let bliss = jetson_footprint(
+                &FootprintModel { arms: 92_160, surrogate_obs: 64, surrogate_pool: 4 },
+                mode,
+            );
+            assert!(lasp.0 < bliss.0, "{mode:?} cpu {} !< {}", lasp.0, bliss.0);
+            assert!(lasp.1 < bliss.1, "{mode:?} rss {} !< {}", lasp.1, bliss.1);
+        }
+    }
+
+    #[test]
+    fn five_watt_mode_costs_more_cpu_share() {
+        let m = FootprintModel { arms: 216, surrogate_obs: 0, surrogate_pool: 0 };
+        let maxn = jetson_footprint(&m, PowerMode::Maxn);
+        let five = jetson_footprint(&m, PowerMode::FiveW);
+        assert!(five.0 > maxn.0);
+    }
+
+    #[test]
+    fn cpu_pct_zero_without_time() {
+        let r = ResourceReport::default();
+        assert_eq!(r.cpu_pct(), 0.0);
+    }
+}

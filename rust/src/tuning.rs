@@ -1,0 +1,246 @@
+//! The single-device tuning loop: glue between an application model, a
+//! device simulator, and a bandit policy (paper Fig 5's block diagram).
+
+use crate::apps::AppModel;
+use crate::bandit::{Policy, RegretTracker, UcbTuner};
+use crate::device::{Device, Measurement};
+use crate::telemetry::ResourceTracker;
+use crate::util::stats;
+use anyhow::Result;
+
+/// Session parameters (paper Alg. 1 inputs).
+#[derive(Debug, Clone)]
+pub struct SessionConfig {
+    /// Total iterations `T`.
+    pub iterations: usize,
+    /// Execution-time weight α.
+    pub alpha: f64,
+    /// Power weight β.
+    pub beta: f64,
+    /// Record the full per-iteration history (arm, measurement).
+    pub record_history: bool,
+}
+
+impl Default for SessionConfig {
+    fn default() -> Self {
+        SessionConfig { iterations: 500, alpha: 0.8, beta: 0.2, record_history: true }
+    }
+}
+
+/// Result of a tuning session.
+#[derive(Debug, Clone)]
+pub struct Outcome {
+    /// Eq. 4: most frequently selected arm — the tuned configuration.
+    pub best_index: usize,
+    /// Human-readable rendering of the tuned configuration.
+    pub best_config: String,
+    /// Pull counts per arm at the end.
+    pub counts: Vec<f64>,
+    /// Per-iteration (arm, measurement) if recording was enabled.
+    pub history: Vec<(usize, Measurement)>,
+    /// Cumulative-regret trajectory if a regret oracle was installed.
+    pub regret: Option<Vec<f64>>,
+    /// Tuner resource footprint over the session.
+    pub resources: crate::telemetry::ResourceReport,
+    /// Total simulated seconds of application execution ("device time").
+    pub simulated_device_seconds: f64,
+    /// Wall-clock seconds the tuner itself spent (the lightweight claim).
+    pub tuner_wall_seconds: f64,
+}
+
+/// One tuning run of a policy against an app on a device.
+pub struct TuningSession {
+    app: Box<dyn AppModel>,
+    device: Box<dyn Device>,
+    policy: Box<dyn Policy>,
+    config: SessionConfig,
+    regret: Option<RegretTracker>,
+}
+
+impl TuningSession {
+    /// LASP session: UCB1 policy with the scalar backend.
+    pub fn new(app: Box<dyn AppModel>, device: Box<dyn Device>, config: SessionConfig) -> Self {
+        let k = app.space().len();
+        let policy = Box::new(UcbTuner::new(k, config.alpha, config.beta));
+        Self::with_policy(app, device, policy, config)
+    }
+
+    /// Session with an explicit policy (ablations, PJRT backend, …).
+    pub fn with_policy(
+        app: Box<dyn AppModel>,
+        device: Box<dyn Device>,
+        policy: Box<dyn Policy>,
+        config: SessionConfig,
+    ) -> Self {
+        assert_eq!(policy.k(), app.space().len(), "policy/space arm mismatch");
+        TuningSession { app, device, policy, config, regret: None }
+    }
+
+    /// Install a regret oracle (per-arm expected rewards) for Fig 11.
+    pub fn with_regret_oracle(mut self, mu: Vec<f64>) -> Self {
+        assert_eq!(mu.len(), self.app.space().len());
+        self.regret = Some(RegretTracker::new(mu));
+        self
+    }
+
+    /// Run the loop for `config.iterations` rounds.
+    pub fn run(&mut self) -> Result<Outcome> {
+        let mut history = Vec::new();
+        let mut tracker = ResourceTracker::start();
+        let mut device_seconds = 0.0;
+        let mut tuner_seconds = 0.0;
+        let q = self.device.fidelity();
+
+        for _ in 0..self.config.iterations {
+            let sel_start = std::time::Instant::now();
+            let arm = self.policy.select();
+            tuner_seconds += sel_start.elapsed().as_secs_f64();
+
+            let workload = self.app.workload(arm, q);
+            let m = self.device.run(&workload);
+            device_seconds += m.time_s;
+
+            let upd_start = std::time::Instant::now();
+            self.policy.update(arm, m.time_s, m.power_w);
+            tuner_seconds += upd_start.elapsed().as_secs_f64();
+
+            if let Some(r) = &mut self.regret {
+                r.record(arm);
+            }
+            if self.config.record_history {
+                history.push((arm, m));
+            }
+            tracker.sample();
+        }
+
+        let best_index = self.policy.most_selected();
+        Ok(Outcome {
+            best_index,
+            best_config: self.app.space().describe(best_index),
+            counts: self.policy.counts().to_vec(),
+            history,
+            regret: self.regret.as_ref().map(|r| r.trajectory().to_vec()),
+            resources: tracker.report(),
+            simulated_device_seconds: device_seconds,
+            tuner_wall_seconds: tuner_seconds,
+        })
+    }
+
+    /// The app under tuning.
+    pub fn app(&self) -> &dyn AppModel {
+        self.app.as_ref()
+    }
+
+    /// Checkpoint the policy's reward state (UCB-family policies only).
+    pub fn save_policy_state(
+        &self,
+        path: &std::path::Path,
+        app: &str,
+        alpha: f64,
+        beta: f64,
+    ) -> Result<()> {
+        let state = self
+            .policy
+            .reward_state()
+            .ok_or_else(|| anyhow::anyhow!("policy '{}' keeps no reward state", self.policy.name()))?;
+        crate::bandit::persist::save(path, state, app, alpha, beta)
+    }
+}
+
+/// Exhaustively evaluate the *expected* (noise-free) behaviour of every arm
+/// of `app` at fidelity `q` on a device spec, returning per-arm
+/// (time, power). This is the Oracle sweep used by Fig 2/3/4/9/11.
+pub fn oracle_sweep(
+    app: &dyn AppModel,
+    spec: &crate::device::DeviceSpec,
+    q: f64,
+) -> Vec<Measurement> {
+    app.space()
+        .indices()
+        .map(|i| crate::device::run_with_cap(spec, &app.workload(i, q)))
+        .collect()
+}
+
+/// Per-arm expected Eq. 5 rewards from an oracle sweep (regret oracle).
+pub fn expected_rewards(sweep: &[Measurement], alpha: f64, beta: f64) -> Vec<f64> {
+    let tau: Vec<f64> = sweep.iter().map(|m| m.time_s).collect();
+    let rho: Vec<f64> = sweep.iter().map(|m| m.power_w).collect();
+    crate::bandit::reward::weighted_rewards(&tau, &rho, alpha, beta)
+}
+
+/// Distance-from-Oracle metric (paper §II-A):
+/// `(time(x)/time(oracle) − 1) · 100%`.
+pub fn oracle_distance_pct(sweep: &[Measurement], index: usize) -> f64 {
+    let times: Vec<f64> = sweep.iter().map(|m| m.time_s).collect();
+    let oracle = times[stats::argmin(&times)];
+    (times[index] / oracle - 1.0) * 100.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::{self, AppKind};
+    use crate::device::{JetsonNano, PowerMode};
+
+    fn session(iters: usize, alpha: f64, beta: f64) -> TuningSession {
+        TuningSession::new(
+            apps::build(AppKind::Clomp),
+            Box::new(JetsonNano::new(PowerMode::Maxn, 42)),
+            SessionConfig { iterations: iters, alpha, beta, record_history: true },
+        )
+    }
+
+    #[test]
+    fn runs_to_completion_with_history() {
+        let mut s = session(300, 0.8, 0.2);
+        let out = s.run().unwrap();
+        assert_eq!(out.history.len(), 300);
+        assert_eq!(out.counts.iter().sum::<f64>(), 300.0);
+        assert!(out.simulated_device_seconds > 0.0);
+        assert!(out.best_config.contains("partsPerThread"));
+    }
+
+    #[test]
+    fn finds_configuration_better_than_default() {
+        let app = apps::build(AppKind::Clomp);
+        let spec = PowerMode::Maxn.spec();
+        let sweep = oracle_sweep(app.as_ref(), &spec, 0.15);
+        let default_time = sweep[app.default_index()].time_s;
+
+        let mut s = session(600, 1.0, 0.0);
+        let out = s.run().unwrap();
+        let tuned_time = sweep[out.best_index].time_s;
+        assert!(
+            tuned_time < default_time,
+            "tuned {tuned_time} !< default {default_time}"
+        );
+    }
+
+    #[test]
+    fn regret_trajectory_saturates() {
+        let app = apps::build(AppKind::Clomp);
+        let spec = PowerMode::Maxn.spec();
+        let sweep = oracle_sweep(app.as_ref(), &spec, 0.15);
+        let mu = expected_rewards(&sweep, 0.8, 0.2);
+        let mut s = session(1000, 0.8, 0.2).with_regret_oracle(mu);
+        let out = s.run().unwrap();
+        let regret = out.regret.unwrap();
+        assert_eq!(regret.len(), 1000);
+        // Regret increments in the last quarter must be much smaller than
+        // in the first quarter (log saturation, Fig 11).
+        let first_q = regret[249];
+        let last_q = regret[999] - regret[749];
+        assert!(last_q < first_q, "first {first_q} last {last_q}");
+    }
+
+    #[test]
+    fn oracle_distance_zero_for_oracle() {
+        let app = apps::build(AppKind::Lulesh);
+        let spec = PowerMode::Maxn.spec();
+        let sweep = oracle_sweep(app.as_ref(), &spec, 1.0);
+        let times: Vec<f64> = sweep.iter().map(|m| m.time_s).collect();
+        let oracle = stats::argmin(&times);
+        assert_eq!(oracle_distance_pct(&sweep, oracle), 0.0);
+        assert!(oracle_distance_pct(&sweep, app.default_index()) > 0.0);
+    }
+}

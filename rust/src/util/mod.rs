@@ -1,0 +1,7 @@
+//! Small shared utilities: deterministic RNG, statistics helpers.
+
+pub mod rng;
+pub mod json;
+pub mod stats;
+
+pub use rng::Rng;

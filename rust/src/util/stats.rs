@@ -1,0 +1,167 @@
+//! Tiny statistics helpers shared by experiments and telemetry.
+
+/// Arithmetic mean; 0.0 for an empty slice.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Population standard deviation.
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// `q`-quantile (0..=1) by linear interpolation on a sorted copy.
+pub fn quantile(xs: &[f64], q: f64) -> f64 {
+    assert!((0.0..=1.0).contains(&q));
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.total_cmp(b));
+    let pos = q * (v.len() - 1) as f64;
+    let (lo, hi) = (pos.floor() as usize, pos.ceil() as usize);
+    let frac = pos - lo as f64;
+    v[lo] * (1.0 - frac) + v[hi] * frac
+}
+
+/// MinMax normalization into `[0, 1]` (paper Alg. 1 line 2). Degenerate
+/// ranges map to all-zeros.
+pub fn minmax(xs: &[f64]) -> Vec<f64> {
+    let lo = xs.iter().cloned().fold(f64::INFINITY, f64::min);
+    let hi = xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let range = (hi - lo).max(1e-9);
+    xs.iter().map(|x| (x - lo) / range).collect()
+}
+
+/// Index of the minimum element (ties: first, matching `jnp.argmin`).
+pub fn argmin(xs: &[f64]) -> usize {
+    let mut best = 0;
+    let mut best_v = f64::INFINITY;
+    for (i, &x) in xs.iter().enumerate() {
+        if x < best_v {
+            best_v = x;
+            best = i;
+        }
+    }
+    best
+}
+
+/// Index of the maximum element (ties: first, matching `jnp.argmax` — the
+/// AOT artifacts and the fused scalar backend must agree on ties).
+pub fn argmax(xs: &[f64]) -> usize {
+    let mut best = 0;
+    let mut best_v = f64::NEG_INFINITY;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > best_v {
+            best_v = x;
+            best = i;
+        }
+    }
+    best
+}
+
+/// Indices of the `k` smallest elements, ascending.
+pub fn bottom_k(xs: &[f64], k: usize) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..xs.len()).collect();
+    idx.sort_by(|&a, &b| xs[a].total_cmp(&xs[b]));
+    idx.truncate(k);
+    idx
+}
+
+/// Pearson correlation of two equal-length slices.
+pub fn pearson(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let (ma, mb) = (mean(a), mean(b));
+    let mut num = 0.0;
+    let mut da = 0.0;
+    let mut db = 0.0;
+    for (x, y) in a.iter().zip(b) {
+        num += (x - ma) * (y - mb);
+        da += (x - ma) * (x - ma);
+        db += (y - mb) * (y - mb);
+    }
+    num / (da.sqrt() * db.sqrt()).max(1e-12)
+}
+
+/// Simple fixed-width ASCII histogram, used by the CLI experiment output.
+pub fn histogram(xs: &[f64], bins: usize) -> Vec<(f64, f64, usize)> {
+    if xs.is_empty() || bins == 0 {
+        return vec![];
+    }
+    let lo = xs.iter().cloned().fold(f64::INFINITY, f64::min);
+    let hi = xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let width = ((hi - lo) / bins as f64).max(1e-12);
+    let mut counts = vec![0usize; bins];
+    for &x in xs {
+        let b = (((x - lo) / width) as usize).min(bins - 1);
+        counts[b] += 1;
+    }
+    counts
+        .into_iter()
+        .enumerate()
+        .map(|(i, c)| (lo + i as f64 * width, lo + (i + 1) as f64 * width, c))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_and_std() {
+        assert_eq!(mean(&[1.0, 2.0, 3.0]), 2.0);
+        assert!(std_dev(&[2.0, 2.0, 2.0]) < 1e-12);
+        assert!((std_dev(&[1.0, 3.0]) - 1.0).abs() < 1e-12);
+        assert_eq!(mean(&[]), 0.0);
+    }
+
+    #[test]
+    fn quantiles() {
+        let xs = [4.0, 1.0, 3.0, 2.0];
+        assert_eq!(quantile(&xs, 0.0), 1.0);
+        assert_eq!(quantile(&xs, 1.0), 4.0);
+        assert_eq!(quantile(&xs, 0.5), 2.5);
+    }
+
+    #[test]
+    fn minmax_bounds() {
+        let v = minmax(&[5.0, 10.0, 7.5]);
+        assert_eq!(v, vec![0.0, 1.0, 0.5]);
+        // Degenerate range: all zeros, no NaN.
+        let d = minmax(&[3.0, 3.0]);
+        assert!(d.iter().all(|x| *x == 0.0));
+    }
+
+    #[test]
+    fn arg_and_topk() {
+        let xs = [3.0, 1.0, 2.0];
+        assert_eq!(argmin(&xs), 1);
+        assert_eq!(argmax(&xs), 0);
+        assert_eq!(bottom_k(&xs, 2), vec![1, 2]);
+    }
+
+    #[test]
+    fn pearson_perfect() {
+        let a = [1.0, 2.0, 3.0];
+        let b = [2.0, 4.0, 6.0];
+        assert!((pearson(&a, &b) - 1.0).abs() < 1e-9);
+        let c = [3.0, 2.0, 1.0];
+        assert!((pearson(&a, &c) + 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn histogram_counts_sum() {
+        let xs: Vec<f64> = (0..100).map(|i| i as f64).collect();
+        let h = histogram(&xs, 10);
+        assert_eq!(h.iter().map(|(_, _, c)| c).sum::<usize>(), 100);
+        assert_eq!(h.len(), 10);
+    }
+}

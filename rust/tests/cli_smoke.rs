@@ -1,0 +1,154 @@
+//! CLI smoke tests: run the `lasp` binary end to end through its
+//! subcommands (config file parsing, tuning, tables).
+
+use std::process::Command;
+
+fn lasp_bin() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_lasp"))
+}
+
+#[test]
+fn help_lists_commands() {
+    let out = lasp_bin().arg("help").output().unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    for cmd in ["tune", "fleet", "compare", "experiment", "spaces", "devices"] {
+        assert!(text.contains(cmd), "help missing '{cmd}'");
+    }
+}
+
+#[test]
+fn no_args_prints_usage() {
+    let out = lasp_bin().output().unwrap();
+    assert!(out.status.success());
+    assert!(String::from_utf8_lossy(&out.stdout).contains("USAGE"));
+}
+
+#[test]
+fn unknown_command_fails() {
+    let out = lasp_bin().arg("frobnicate").output().unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown command"));
+}
+
+#[test]
+fn devices_prints_table1() {
+    let out = lasp_bin().arg("devices").output().unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("MAXN") && text.contains("5W"));
+    assert!(text.contains("1479"));
+}
+
+#[test]
+fn spaces_prints_table2() {
+    let out = lasp_bin().arg("spaces").output().unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    for needle in ["kripke", "92160", "partsPerThread", "strong_threshold"] {
+        assert!(text.contains(needle), "missing '{needle}'");
+    }
+}
+
+#[test]
+fn tune_runs_and_validates() {
+    let out = lasp_bin()
+        .args([
+            "tune",
+            "--app",
+            "clomp",
+            "--iters",
+            "200",
+            "--alpha",
+            "1.0",
+            "--beta",
+            "0.0",
+            "--seed",
+            "3",
+            "--hf-validate",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("tuned configuration"));
+    assert!(text.contains("HF validation"));
+}
+
+#[test]
+fn tune_with_config_file_and_override() {
+    let dir = std::env::temp_dir().join(format!("lasp-cli-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let cfg = dir.join("exp.toml");
+    std::fs::write(
+        &cfg,
+        "[tune]\napp = \"lulesh\"\niterations = 150\nalpha = 1.0\nbeta = 0.0\n",
+    )
+    .unwrap();
+    let out = lasp_bin()
+        .args(["tune", "--config", cfg.to_str().unwrap(), "--seed", "9"])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("app=lulesh"), "{text}");
+    assert!(text.contains("iters=150"), "{text}");
+}
+
+#[test]
+fn invalid_flags_rejected() {
+    let out = lasp_bin().args(["tune", "--alpha", "7"]).output().unwrap();
+    assert!(!out.status.success());
+    let out = lasp_bin().args(["tune", "--app", "doom"]).output().unwrap();
+    assert!(!out.status.success());
+    let out = lasp_bin().args(["tune", "--iters"]).output().unwrap();
+    assert!(!out.status.success());
+}
+
+#[test]
+fn checkpoint_save_and_warm_start() {
+    let dir = std::env::temp_dir().join(format!("lasp-cli-ckpt-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let ckpt = dir.join("clomp.json");
+    let out = lasp_bin()
+        .args(["tune", "--app", "clomp", "--iters", "150", "--save-state", ckpt.to_str().unwrap()])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    assert!(ckpt.exists());
+
+    let out = lasp_bin()
+        .args(["tune", "--app", "clomp", "--iters", "60", "--load-state", ckpt.to_str().unwrap()])
+        .output()
+        .unwrap();
+    assert!(out.status.success());
+    assert!(String::from_utf8_lossy(&out.stdout).contains("warm start"));
+
+    // App mismatch must be rejected.
+    let out = lasp_bin()
+        .args(["tune", "--app", "kripke", "--load-state", ckpt.to_str().unwrap()])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+}
+
+#[test]
+fn experiment_table2_runs() {
+    let out = lasp_bin()
+        .args(["experiment", "--name", "table2"])
+        .output()
+        .unwrap();
+    assert!(out.status.success());
+    assert!(String::from_utf8_lossy(&out.stdout).contains("shape OK"));
+}
+
+#[test]
+fn experiment_fig3_quick_runs() {
+    let out = lasp_bin()
+        .args(["experiment", "--name", "fig3", "--quick"])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("[shape OK] fig3"));
+}

@@ -1,0 +1,179 @@
+//! Differential tests: the PJRT artifact path must agree with the pure-rust
+//! scalar math across many random states — the core cross-layer correctness
+//! guarantee of the three-layer architecture. All tests no-op (pass) when
+//! artifacts are absent; `make artifacts` builds them.
+
+use lasp::bandit::{RewardState, ScalarBackend, ScoreBackend};
+use lasp::runtime::{Engine, EngineHandle};
+use lasp::util::Rng;
+
+fn engine() -> Option<Engine> {
+    let dir = lasp::runtime::find_artifacts_dir()?;
+    Some(Engine::load(&dir).expect("engine load"))
+}
+
+fn random_state(k: usize, pulls: usize, rng: &mut Rng) -> RewardState {
+    let mut s = RewardState::new(k);
+    for _ in 0..pulls {
+        s.observe(rng.below(k), rng.range(0.05, 8.0), rng.range(1.0, 11.0));
+    }
+    s
+}
+
+#[test]
+fn lasp_step_agrees_across_backends_many_states() {
+    let Some(mut e) = engine() else { return };
+    let mut rng = Rng::new(99);
+    for trial in 0..40 {
+        let (app, k) = [("lulesh", 128), ("kripke", 216), ("clomp", 125)][trial % 3];
+        let pulls = 1 + rng.below(3000);
+        let state = random_state(k, pulls, &mut rng);
+        let (alpha, beta) = (rng.uniform(), rng.uniform());
+        let c = rng.range(0.05, 1.0);
+
+        let tau: Vec<f32> = state.tau_sum.iter().map(|&v| v as f32).collect();
+        let rho: Vec<f32> = state.rho_sum.iter().map(|&v| v as f32).collect();
+        let cnt: Vec<f32> = state.counts.iter().map(|&v| v as f32).collect();
+        let pjrt = e
+            .lasp_step(app, &tau, &rho, &cnt, state.t as f32, alpha as f32, beta as f32, c as f32)
+            .unwrap();
+        let scalar = ScalarBackend.lasp_step(&state, alpha, beta, c).unwrap();
+
+        // Rewards agree to f32 tolerance.
+        for (i, (a, b)) in pjrt.rewards.iter().zip(&scalar.rewards).enumerate() {
+            assert!(
+                (*a as f64 - b).abs() < 5e-4,
+                "trial {trial} {app} arm {i}: pjrt {a} vs scalar {b}"
+            );
+        }
+        // Selection agrees, or is an f32-level tie.
+        if pjrt.best != scalar.best {
+            assert!(
+                (pjrt.score - scalar.score).abs() < 5e-4,
+                "trial {trial} {app}: pjrt #{} ({}) vs scalar #{} ({})",
+                pjrt.best,
+                pjrt.score,
+                scalar.best,
+                scalar.score
+            );
+        }
+    }
+}
+
+#[test]
+fn episode_artifact_matches_step_by_step_scalar_replay() {
+    let Some(mut e) = engine() else { return };
+    let k = 216;
+    let mut rng = Rng::new(7);
+    let rewards_f64: Vec<f64> = (0..k).map(|_| rng.uniform()).collect();
+    let rewards: Vec<f32> = rewards_f64.iter().map(|&v| v as f32).collect();
+    let (counts, trace) = e
+        .ucb_episode("kripke", 500, &rewards, &vec![0.0; k], 1.0, 1.0)
+        .unwrap();
+
+    // Scalar replay of the same mean-field episode.
+    let mut c = vec![0.0f64; k];
+    let mut t = 1.0f64;
+    for (step, &sel) in trace.iter().enumerate() {
+        let scores = lasp::bandit::reward::ucb_scores(&rewards_f64, &c, t, 1.0);
+        let best = lasp::util::stats::argmax(&scores);
+        // f32 ties can flip the argmax; accept scores equal to 1e-5.
+        assert!(
+            (scores[best] - scores[sel as usize]).abs() < 1e-5,
+            "step {step}: scalar #{best} vs artifact #{sel}"
+        );
+        c[sel as usize] += 1.0;
+        t += 1.0;
+    }
+    let sum: f32 = counts.iter().sum();
+    assert_eq!(sum, 500.0);
+}
+
+#[test]
+fn reward_norm_artifact_matches_scalar() {
+    let Some(mut e) = engine() else { return };
+    let mut rng = Rng::new(17);
+    let k = 125;
+    let state = random_state(k, 700, &mut rng);
+    let tau: Vec<f32> = state.tau_sum.iter().map(|&v| v as f32).collect();
+    let rho: Vec<f32> = state.rho_sum.iter().map(|&v| v as f32).collect();
+    let cnt: Vec<f32> = state.counts.iter().map(|&v| v as f32).collect();
+    let rewards = e.reward_norm("clomp", &tau, &rho, &cnt, 0.6, 0.4).unwrap();
+    let (mt, mr) = state.filled_means();
+    let want = lasp::bandit::reward::weighted_rewards(&mt, &mr, 0.6, 0.4);
+    for (i, (a, b)) in rewards.iter().zip(&want).enumerate() {
+        assert!((*a as f64 - b).abs() < 5e-4, "arm {i}: {a} vs {b}");
+    }
+}
+
+#[test]
+fn handle_and_direct_engine_agree() {
+    let Some(dir) = lasp::runtime::find_artifacts_dir() else { return };
+    let mut direct = Engine::load(&dir).unwrap();
+    let handle = EngineHandle::spawn(dir).unwrap();
+    let mut rng = Rng::new(23);
+    let k = 128;
+    let state = random_state(k, 500, &mut rng);
+    let tau: Vec<f32> = state.tau_sum.iter().map(|&v| v as f32).collect();
+    let rho: Vec<f32> = state.rho_sum.iter().map(|&v| v as f32).collect();
+    let cnt: Vec<f32> = state.counts.iter().map(|&v| v as f32).collect();
+    let a = direct
+        .lasp_step("lulesh", &tau, &rho, &cnt, 501.0, 0.8, 0.2, 0.25)
+        .unwrap();
+    let b = handle
+        .lasp_step("lulesh", tau, rho, cnt, 501.0, 0.8, 0.2, 0.25)
+        .unwrap();
+    assert_eq!(a.best, b.best);
+    assert_eq!(a.rewards, b.rewards);
+}
+
+#[test]
+fn gp_artifact_agrees_with_rust_gp() {
+    let Some(mut e) = engine() else { return };
+    let (n, m, d) = e.gp_shape().unwrap();
+    let mut rng = Rng::new(31);
+    let n_real = 20;
+    // Random observed points in [0,1]^d and rewards.
+    let mut x = vec![0f32; n * d];
+    let mut y = vec![0f32; n];
+    let mut mask = vec![0f32; n];
+    let mut x_rust: Vec<Vec<f64>> = vec![];
+    let mut y_rust: Vec<f64> = vec![];
+    for i in 0..n_real {
+        let row: Vec<f64> = (0..d).map(|_| rng.uniform()).collect();
+        for (c, &v) in row.iter().enumerate() {
+            x[i * d + c] = v as f32;
+        }
+        let val = rng.uniform();
+        y[i] = val as f32;
+        mask[i] = 1.0;
+        x_rust.push(row);
+        y_rust.push(val);
+    }
+    let mut xs = vec![0f32; m * d];
+    let mut queries: Vec<Vec<f64>> = vec![];
+    for r in 0..m {
+        let row: Vec<f64> = (0..d).map(|_| rng.uniform()).collect();
+        for (c, &v) in row.iter().enumerate() {
+            xs[r * d + c] = v as f32;
+        }
+        queries.push(row);
+    }
+    let (mean, var, _, _) = e.gp_propose(&x, &y, &mask, &xs, 0.5, 1e-2, 0.5).unwrap();
+
+    let mut gp = lasp::baselines::GpSurrogate::new(0.5, 1e-2);
+    gp.fit(x_rust, y_rust).unwrap();
+    for i in (0..m).step_by(37) {
+        let (mu, v) = gp.predict(&queries[i]);
+        assert!(
+            (mean[i] as f64 - mu).abs() < 2e-2,
+            "mean[{i}]: pjrt {} vs rust {mu}",
+            mean[i]
+        );
+        assert!(
+            (var[i] as f64 - v).abs() < 2e-2,
+            "var[{i}]: pjrt {} vs rust {v}",
+            var[i]
+        );
+    }
+}

@@ -1,0 +1,181 @@
+//! Cross-module integration tests: apps × devices × bandits × coordinator
+//! composed the way the examples and the paper's workflow compose them.
+
+use lasp::apps::{self, AppKind};
+use lasp::baselines::{FnEval, RandomSearch, Searcher};
+use lasp::coordinator::transfer::{lf_hf_topk_overlap, validate_on_hpc};
+use lasp::coordinator::{Fleet, FleetConfig, TuneJob};
+use lasp::device::{Device, HpcNode, JetsonNano, NoiseModel, PowerMode};
+use lasp::tuning::{oracle_sweep, SessionConfig, TuningSession};
+use lasp::util::stats;
+use std::time::Duration;
+
+#[test]
+fn lasp_beats_random_search_on_every_app_at_equal_budget() {
+    // The headline ordering: at 500 evaluations (LF, noisy), LASP's pick
+    // should be at least as good as random search's on expected time,
+    // averaged across apps.
+    let budget = 500;
+    let mut lasp_total = 0.0;
+    let mut random_total = 0.0;
+    for kind in AppKind::all() {
+        let sweep = oracle_sweep(
+            apps::build(kind).as_ref(),
+            &PowerMode::Maxn.spec(),
+            0.15,
+        );
+        let (lasp_pick, _, _) = lasp::experiments::harness::run_lasp(
+            kind,
+            PowerMode::Maxn,
+            budget,
+            1.0,
+            0.0,
+            21,
+            NoiseModel::uniform(0.02),
+        );
+        let mut eval = lasp::experiments::harness::AppEval::new(kind, PowerMode::Maxn, 21);
+        let rnd = RandomSearch::new(21, 1.0, 0.0)
+            .run(apps::build(kind).space().len(), budget, &mut eval)
+            .unwrap();
+        lasp_total += sweep[lasp_pick].time_s / sweep[rnd.best_index].time_s;
+        random_total += 1.0;
+    }
+    let ratio = lasp_total / random_total;
+    assert!(ratio < 1.10, "LASP/random expected-time ratio {ratio}");
+}
+
+#[test]
+fn full_paper_workflow_tune_then_transfer() {
+    // Fig 1 end to end for one app: LF tuning on the edge, HF validation.
+    let app = apps::build(AppKind::Lulesh);
+    let device = JetsonNano::new(PowerMode::Maxn, 5);
+    let mut session = TuningSession::new(
+        app,
+        Box::new(device),
+        SessionConfig { iterations: 600, alpha: 0.8, beta: 0.2, record_history: true },
+    );
+    let out = session.run().unwrap();
+    let app = apps::build(AppKind::Lulesh);
+    let v = validate_on_hpc(app.as_ref(), out.best_index, 5);
+    assert!(v.gain_pct > 0.0, "no HF gain: {:?}", v);
+    assert!(v.oracle_distance_pct < 40.0, "too far from oracle: {:?}", v);
+    // History is complete and the best arm is its mode.
+    assert_eq!(out.history.len(), 600);
+}
+
+#[test]
+fn fleet_with_pjrt_engine_if_artifacts_present() {
+    // The full stack: PJRT artifacts on the worker hot path.
+    let engine = lasp::runtime::EngineHandle::spawn_default().ok();
+    let mut fleet = Fleet::spawn(
+        FleetConfig { devices: 2, seed: 11, ..Default::default() },
+        engine.clone(),
+    )
+    .unwrap();
+    for app in [AppKind::Kripke, AppKind::Clomp] {
+        fleet.submit(TuneJob { app, iterations: 250, alpha: 0.8, beta: 0.2 }).unwrap();
+    }
+    let results = fleet.drain(Duration::from_secs(300)).unwrap();
+    assert_eq!(results.len(), 2);
+    for r in &results {
+        let app = apps::build(r.app);
+        assert!(r.best_index < app.space().len());
+        assert!(r.pulls_of_best >= 1.0);
+    }
+    fleet.shutdown();
+}
+
+#[test]
+fn fig2_premise_holds_for_all_apps() {
+    // LF and HF top-20 overlap significantly — the premise that makes the
+    // whole edge-as-surrogate idea work.
+    let edge = PowerMode::Maxn.spec();
+    let node = HpcNode::new(0);
+    for kind in AppKind::all() {
+        let app = apps::build(kind);
+        let overlap = lf_hf_topk_overlap(app.as_ref(), &edge, node.spec(), 0.15, 20);
+        assert!(overlap >= 5, "{kind}: overlap {overlap}");
+    }
+}
+
+#[test]
+fn noise_degrades_gracefully() {
+    // Monotonicity in expectation is too strict for one seed; assert that
+    // even at 15% injected noise the tuned config beats default on Clomp.
+    let sweep = oracle_sweep(
+        apps::build(AppKind::Clomp).as_ref(),
+        &PowerMode::Maxn.spec(),
+        0.15,
+    );
+    let default = apps::build(AppKind::Clomp).default_index();
+    for noise in [0.05, 0.10, 0.15] {
+        let (pick, _, _) = lasp::experiments::harness::run_lasp(
+            AppKind::Clomp,
+            PowerMode::Maxn,
+            600,
+            1.0,
+            0.0,
+            31,
+            NoiseModel::uniform(noise),
+        );
+        assert!(
+            sweep[pick].time_s < sweep[default].time_s,
+            "noise {noise}: pick {} not better than default {}",
+            sweep[pick].time_s,
+            sweep[default].time_s
+        );
+    }
+}
+
+#[test]
+fn searcher_trait_objects_interchangeable() {
+    // All searchers run through the same harness types (API contract).
+    let searchers: Vec<Box<dyn Searcher>> = vec![
+        Box::new(RandomSearch::new(1, 1.0, 0.0)),
+        Box::new(lasp::baselines::SimulatedAnnealing::new(1, 1.0, 0.0)),
+        Box::new(lasp::baselines::BlissBo::new(1, 1.0, 0.0)),
+        Box::new(lasp::baselines::SuccessiveHalving::new(1, 1.0, 0.0)),
+    ];
+    for mut s in searchers {
+        let mut device = JetsonNano::new(PowerMode::Maxn, 3);
+        let app = apps::build(AppKind::Clomp);
+        let mut eval = FnEval {
+            f: move |i: usize, q: f64| device.run(&app.workload(i, q)),
+            fidelity: 0.15,
+        };
+        let out = s.run(125, 60, &mut eval).unwrap();
+        assert!(out.best_index < 125, "{}", s.name());
+        assert!(out.evaluations() <= 60);
+    }
+}
+
+#[test]
+fn thermal_throttling_visible_through_full_stack() {
+    // Long heavy session on the edge device heats it; the bandit still
+    // completes and the device reports elevated temperature.
+    let mut device = JetsonNano::new(PowerMode::Maxn, 77);
+    let app = apps::build(AppKind::Kripke);
+    let mut tuner = lasp::bandit::UcbTuner::new(app.space().len(), 1.0, 0.0);
+    use lasp::bandit::Policy;
+    for _ in 0..400 {
+        let arm = tuner.select();
+        let m = device.run(&app.workload(arm, 0.5)); // mid fidelity: heavy
+        tuner.update(arm, m.time_s, m.power_w);
+    }
+    assert!(device.temperature_c() > 50.0, "temp {}", device.temperature_c());
+}
+
+#[test]
+fn hf_validation_metrics_consistent() {
+    let app = apps::build(AppKind::Hypre);
+    // Validate the default config: gain ~0, distance > 0 (not oracle).
+    let v = validate_on_hpc(app.as_ref(), app.default_index(), 9);
+    assert!(v.gain_pct.abs() < 5.0);
+    assert!(v.oracle_distance_pct > 0.0);
+    // Validate the HF time oracle: distance 0.
+    let node = HpcNode::new(9);
+    let sweep = oracle_sweep(app.as_ref(), node.spec(), 1.0);
+    let times: Vec<f64> = sweep.iter().map(|m| m.time_s).collect();
+    let v = validate_on_hpc(app.as_ref(), stats::argmin(&times), 9);
+    assert!(v.oracle_distance_pct.abs() < 1e-9);
+}

@@ -1,0 +1,202 @@
+//! Property-based tests over coordinator/bandit invariants.
+//!
+//! `proptest` is unavailable in this offline build (see Cargo.toml), so the
+//! same discipline is implemented directly: each property runs against many
+//! seeded random cases and reports the failing seed on violation.
+
+use lasp::bandit::{Policy, RewardState, ScalarBackend, ScoreBackend, SubsetTuner, UcbTuner};
+use lasp::space::{ParamDef, ParamSpace};
+use lasp::util::{stats, Rng};
+
+/// Run `prop` on `cases` seeded inputs; panic with the seed on failure.
+fn forall(cases: u64, prop: impl Fn(&mut Rng)) {
+    for seed in 0..cases {
+        let mut rng = Rng::new(0xF00D + seed);
+        // A panic inside carries context; wrap to report the seed.
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            prop(&mut rng);
+        }));
+        if let Err(e) = result {
+            panic!("property failed for seed {seed}: {e:?}");
+        }
+    }
+}
+
+fn random_space(rng: &mut Rng) -> ParamSpace {
+    let dims = 1 + rng.below(4);
+    let params: Vec<ParamDef> = (0..dims)
+        .map(|d| {
+            let card = 2 + rng.below(6) as i64;
+            let vals: Vec<i64> = (0..card).collect();
+            let default = vals[rng.below(vals.len())];
+            ParamDef::ints(format!("p{d}"), &vals, default)
+        })
+        .collect();
+    ParamSpace::new("random", params)
+}
+
+#[test]
+fn prop_space_encode_decode_roundtrip() {
+    forall(50, |rng| {
+        let space = random_space(rng);
+        for _ in 0..20 {
+            let idx = rng.below(space.len());
+            assert_eq!(space.encode_positions(&space.positions(idx)), idx);
+            let f = space.features(idx);
+            assert_eq!(f.len(), space.dims());
+            assert!(f.iter().all(|v| (0.0..=1.0).contains(v)));
+        }
+        assert!(space.default_index() < space.len());
+    });
+}
+
+#[test]
+fn prop_rewards_always_normalized() {
+    // For any observation pattern, Eq. 5 rewards stay in [0, 1] and the
+    // best arm's reward is exactly 1 when alpha = 1.
+    forall(60, |rng| {
+        let k = 2 + rng.below(40);
+        let mut state = RewardState::new(k);
+        let pulls = 1 + rng.below(200);
+        for _ in 0..pulls {
+            state.observe(rng.below(k), rng.range(0.1, 10.0), rng.range(1.0, 12.0));
+        }
+        let out = ScalarBackend.lasp_step(&state, 1.0, 0.0, 0.25).unwrap();
+        assert!(out.rewards.iter().all(|r| (-1e-12..=1.0 + 1e-12).contains(r)));
+        // The arm with the minimum mean time gets reward 1.
+        let (mt, _) = state.filled_means();
+        let best_mean = stats::argmin(&mt);
+        assert!(
+            (out.rewards[best_mean] - 1.0).abs() < 1e-9,
+            "best-mean arm reward {}",
+            out.rewards[best_mean]
+        );
+    });
+}
+
+#[test]
+fn prop_ucb_selection_always_in_range_and_counts_conserved() {
+    forall(40, |rng| {
+        let k = 2 + rng.below(30);
+        let mut tuner = UcbTuner::new(k, 0.7, 0.3);
+        let rounds = 5 + rng.below(300);
+        for _ in 0..rounds {
+            let arm = tuner.select();
+            assert!(arm < k);
+            tuner.update(arm, rng.range(0.1, 5.0), rng.range(1.0, 10.0));
+        }
+        assert_eq!(tuner.total_pulls(), rounds as f64);
+        assert_eq!(
+            tuner.counts().iter().sum::<f64>(),
+            rounds as f64,
+            "counts conserve pulls"
+        );
+        assert!(tuner.most_selected() < k);
+    });
+}
+
+#[test]
+fn prop_ucb_never_starves_with_full_exploration() {
+    // With c = 1 (textbook UCB1) every arm is pulled infinitely often: over
+    // 60·k rounds, no arm stays at its initial single pull.
+    forall(20, |rng| {
+        let k = 3 + rng.below(10);
+        let mut tuner = UcbTuner::new(k, 1.0, 0.0).with_exploration(1.0);
+        for _ in 0..60 * k {
+            let arm = tuner.select();
+            tuner.update(arm, rng.range(0.5, 1.5), 5.0);
+        }
+        let min_pulls = tuner.counts().iter().cloned().fold(f64::INFINITY, f64::min);
+        assert!(min_pulls >= 2.0, "an arm starved: {:?}", tuner.counts());
+    });
+}
+
+#[test]
+fn prop_subset_tuner_stays_in_candidates() {
+    forall(30, |rng| {
+        let k = 100 + rng.below(5000);
+        let m = 8 + rng.below(56);
+        let mut tuner = SubsetTuner::new(k, m.min(k), 0.8, 0.2, rng.next_u64());
+        let cands: std::collections::HashSet<usize> =
+            tuner.candidates().iter().copied().collect();
+        for _ in 0..200 {
+            let arm = tuner.select();
+            assert!(cands.contains(&arm));
+            tuner.update(arm, rng.range(0.1, 2.0), rng.range(1.0, 9.0));
+        }
+        // Eq. 4 output is a candidate and counts live in the full space.
+        assert!(cands.contains(&tuner.most_selected()));
+        assert_eq!(tuner.counts().len(), k);
+    });
+}
+
+#[test]
+fn prop_scalar_step_deterministic() {
+    // Same state must always produce the same selection (pure function).
+    forall(30, |rng| {
+        let k = 2 + rng.below(50);
+        let mut state = RewardState::new(k);
+        for _ in 0..rng.below(100) + k {
+            state.observe(rng.below(k), rng.range(0.1, 4.0), rng.range(1.0, 8.0));
+        }
+        let a = ScalarBackend.lasp_step(&state, 0.8, 0.2, 0.25).unwrap();
+        let b = ScalarBackend.lasp_step(&state, 0.8, 0.2, 0.25).unwrap();
+        assert_eq!(a.best, b.best);
+        assert_eq!(a.rewards, b.rewards);
+    });
+}
+
+#[test]
+fn prop_device_time_positive_and_power_capped() {
+    // Any sane workload on any mode yields positive time and capped power.
+    use lasp::apps::Workload;
+    use lasp::device::{Device, JetsonNano, PowerMode};
+    forall(40, |rng| {
+        let mode = if rng.uniform() < 0.5 { PowerMode::Maxn } else { PowerMode::FiveW };
+        let budget = mode.spec().power_budget_w;
+        let mut device = JetsonNano::new(mode, rng.next_u64());
+        for _ in 0..20 {
+            let w = Workload {
+                compute: rng.range(0.01, 50.0),
+                mem_intensity: rng.uniform(),
+                parallel_frac: rng.uniform(),
+                overhead: rng.range(0.0, 0.5),
+            };
+            let m = device.run(&w);
+            assert!(m.time_s > 0.0 && m.time_s.is_finite());
+            // Intrinsic noise is 1.5%; allow its excursion above the cap.
+            assert!(m.power_w <= budget * 1.05, "{} > {budget}", m.power_w);
+        }
+    });
+}
+
+#[test]
+fn prop_fidelity_monotone_in_expected_time() {
+    // Higher fidelity never makes the expected (noise-free) run faster.
+    use lasp::apps::{self, AppKind};
+    use lasp::device::{run_with_cap, PowerMode};
+    forall(30, |rng| {
+        let kind = AppKind::all()[rng.below(4)];
+        let app = apps::build(kind);
+        let spec = PowerMode::Maxn.spec();
+        let idx = rng.below(app.space().len());
+        let q1 = rng.uniform();
+        let q2 = (q1 + rng.uniform() * (1.0 - q1)).min(1.0);
+        let t1 = run_with_cap(&spec, &app.workload(idx, q1)).time_s;
+        let t2 = run_with_cap(&spec, &app.workload(idx, q2)).time_s;
+        assert!(t2 >= t1 - 1e-9, "{kind} #{idx}: q{q1:.2}->{t1}, q{q2:.2}->{t2}");
+    });
+}
+
+#[test]
+fn prop_minmax_idempotent_on_unit_range() {
+    forall(40, |rng| {
+        let n = 2 + rng.below(100);
+        let xs: Vec<f64> = (0..n).map(|_| rng.range(-50.0, 50.0)).collect();
+        let once = stats::minmax(&xs);
+        let twice = stats::minmax(&once);
+        for (a, b) in once.iter().zip(&twice) {
+            assert!((a - b).abs() < 1e-9);
+        }
+    });
+}
