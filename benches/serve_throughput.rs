@@ -1,0 +1,61 @@
+//! Serve-layer throughput bench: boots the tuning service in-process on an
+//! ephemeral port and measures (a) single-connection suggest round-trip
+//! latency through the real HTTP stack, and (b) closed-loop loadgen
+//! throughput with concurrent sessions across all four apps.
+
+#[path = "common.rs"]
+mod common;
+
+use lasp::serve::{loadgen, LoadgenConfig, ServeConfig};
+use lasp::util::json::Json;
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+fn suggest_body(client: &str, app: &str) -> Json {
+    let mut obj = BTreeMap::new();
+    obj.insert("client_id".to_string(), Json::Str(client.to_string()));
+    obj.insert("app".to_string(), Json::Str(app.to_string()));
+    obj.insert("device".to_string(), Json::Str("maxn".to_string()));
+    Json::Obj(obj)
+}
+
+fn main() {
+    let handle = lasp::serve::start(ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        workers: 8,
+        shards: 8,
+        checkpoint_dir: None,
+        checkpoint_every: Duration::from_secs(3600),
+        ..Default::default()
+    })
+    .expect("boot serve");
+    let addr = handle.addr().to_string();
+
+    println!("## single-connection suggest round-trip (real HTTP stack)");
+    let mut client = lasp::serve::HttpClient::connect(&addr).expect("connect");
+    for app in ["clomp", "kripke", "lulesh", "hypre"] {
+        let body = suggest_body("bench", app);
+        common::bench(&format!("http suggest {app}"), 200, || {
+            let (status, _) = client.post("/v1/suggest", &body).expect("suggest");
+            assert_eq!(status, 200);
+        });
+    }
+
+    println!("\n## closed-loop loadgen (concurrent sessions, all apps)");
+    let report = loadgen::run(&LoadgenConfig {
+        addr: addr.clone(),
+        sessions: 64,
+        rounds: 4000,
+        threads: 4,
+        ..Default::default()
+    })
+    .expect("loadgen");
+    report.print();
+
+    drop(client);
+    handle.shutdown().expect("shutdown");
+    common::report_shape(
+        "serve_throughput",
+        report.errors == 0 && report.rounds == 4000 && report.p99_ms > 0.0,
+    );
+}

@@ -81,10 +81,37 @@ pub fn from_json(text: &str) -> Result<Checkpoint> {
     })
 }
 
-/// Write a checkpoint file.
+/// Write `text` to `path` atomically (unique temp file + fsync + rename),
+/// so a reader — or a crash — never observes a torn checkpoint. The temp
+/// name is unique per call, so concurrent writers of the same path (e.g.
+/// the serve layer's periodic checkpointer racing a manual
+/// `POST /v1/checkpoint`) each install a complete file; last rename wins.
+pub fn write_atomic(path: &Path, text: &str) -> Result<()> {
+    use std::io::Write as _;
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static TMP_SEQ: AtomicU64 = AtomicU64::new(0);
+    let seq = TMP_SEQ.fetch_add(1, Ordering::Relaxed);
+    let tmp = path.with_extension(format!("tmp.{}.{seq}", std::process::id()));
+    let result = (|| -> Result<()> {
+        let mut f = std::fs::File::create(&tmp)
+            .with_context(|| format!("creating {}", tmp.display()))?;
+        f.write_all(text.as_bytes())
+            .with_context(|| format!("writing {}", tmp.display()))?;
+        // Flush data blocks before the rename so a crash cannot install a
+        // name pointing at unwritten content.
+        f.sync_all().with_context(|| format!("syncing {}", tmp.display()))?;
+        std::fs::rename(&tmp, path)
+            .with_context(|| format!("renaming into {}", path.display()))
+    })();
+    if result.is_err() {
+        let _ = std::fs::remove_file(&tmp);
+    }
+    result
+}
+
+/// Write a checkpoint file (atomically).
 pub fn save(path: &Path, state: &RewardState, app: &str, alpha: f64, beta: f64) -> Result<()> {
-    std::fs::write(path, to_json(state, app, alpha, beta))
-        .with_context(|| format!("writing {}", path.display()))
+    write_atomic(path, &to_json(state, app, alpha, beta))
 }
 
 /// Read a checkpoint file.
@@ -166,6 +193,86 @@ mod tests {
         let bad = r#"{"version":1,"app":"x","alpha":1,"beta":0,"t":3,
             "tau_sum":[1],"rho_sum":[1],"counts":[-2]}"#;
         assert!(from_json(bad).is_err());
+        // Non-finite counts.
+        let bad = r#"{"version":1,"app":"x","alpha":1,"beta":0,"t":3,
+            "tau_sum":[1],"rho_sum":[1],"counts":[1e999]}"#;
+        assert!(from_json(bad).is_err());
+        // Non-numeric vector entries.
+        let bad = r#"{"version":1,"app":"x","alpha":1,"beta":0,"t":3,
+            "tau_sum":["a"],"rho_sum":[1],"counts":[1]}"#;
+        assert!(from_json(bad).is_err());
+        // Wrong / missing version.
+        let bad = r#"{"version":99,"app":"x","alpha":1,"beta":0,"t":3,
+            "tau_sum":[1],"rho_sum":[1],"counts":[1]}"#;
+        assert!(from_json(bad).is_err());
+        let bad = r#"{"app":"x","alpha":1,"beta":0,"t":3,
+            "tau_sum":[1],"rho_sum":[1],"counts":[1]}"#;
+        assert!(from_json(bad).is_err());
+    }
+
+    #[test]
+    fn metadata_defaults_fill_in() {
+        // Optional metadata falls back instead of failing: `t` clamps to
+        // at least 1, app/alpha/beta take the paper defaults.
+        let min = r#"{"version":1,"tau_sum":[2],"rho_sum":[4],"counts":[2]}"#;
+        let cp = from_json(min).unwrap();
+        assert_eq!(cp.app, "unknown");
+        assert_eq!(cp.alpha, 0.8);
+        assert_eq!(cp.beta, 0.2);
+        assert_eq!(cp.state.t, 1.0);
+        let clamped = r#"{"version":1,"t":-5,"tau_sum":[2],"rho_sum":[4],"counts":[2]}"#;
+        assert_eq!(from_json(clamped).unwrap().state.t, 1.0);
+    }
+
+    #[test]
+    fn atomic_write_replaces_and_leaves_no_temp() {
+        let dir = std::env::temp_dir().join(format!("lasp-atomic-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("ckpt.json");
+        let s1 = populated(8, 50);
+        let s2 = populated(8, 90);
+        save(&path, &s1, "kripke", 0.8, 0.2).unwrap();
+        save(&path, &s2, "kripke", 0.8, 0.2).unwrap();
+        let cp = load(&path).unwrap();
+        assert_eq!(cp.state.counts, s2.counts, "second write must win");
+        let leftovers = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| e.file_name().to_string_lossy().contains("tmp"))
+            .count();
+        assert_eq!(leftovers, 0, "temp files left behind");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn discount_full_retention_is_lossless() {
+        // retain = 1.0 keeps pulled arms' counts and sums exactly
+        // (counts from observe() are whole numbers >= 1).
+        let s = populated(12, 200);
+        let d = discounted(&s, 1.0);
+        for i in 0..12 {
+            if s.counts[i] > 0.0 {
+                assert!((d.counts[i] - s.counts[i]).abs() < 1e-12);
+                assert!((d.tau_sum[i] - s.tau_sum[i]).abs() < 1e-9);
+                assert!((d.rho_sum[i] - s.rho_sum[i]).abs() < 1e-9);
+            } else {
+                assert_eq!(d.counts[i], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn discount_never_revives_unpulled_arms() {
+        let mut s = RewardState::new(6);
+        s.observe(2, 1.0, 2.0);
+        s.observe(4, 3.0, 2.0);
+        let d = discounted(&s, 0.3);
+        for i in [0usize, 1, 3, 5] {
+            assert_eq!(d.counts[i], 0.0);
+            assert_eq!(d.tau_sum[i], 0.0);
+        }
+        // t is rebuilt from the retained counts.
+        assert!((d.t - (d.counts.iter().sum::<f64>() + 1.0)).abs() < 1e-12);
     }
 
     #[test]

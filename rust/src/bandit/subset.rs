@@ -65,6 +65,36 @@ impl SubsetTuner {
         &self.candidates
     }
 
+    /// Whether a full-space arm is in the candidate subset.
+    pub fn contains_arm(&self, arm: usize) -> bool {
+        self.positions.contains_key(&arm)
+    }
+
+    /// Subset position of a full-space arm, if it is a candidate.
+    pub fn position_of(&self, arm: usize) -> Option<usize> {
+        self.positions.get(&arm).copied()
+    }
+
+    /// Builder: warm-start the inner tuner from a *subset-space* prior
+    /// (e.g. a [`super::persist`] checkpoint of this tuner's
+    /// `reward_state`). The caller must rebuild the tuner with the same
+    /// candidate list — in practice the same draw seed — so positions line
+    /// up. The prior counts are also projected into the full-space Eq. 4
+    /// view so `most_selected` survives a restart.
+    pub fn with_prior_state(mut self, state: super::reward::RewardState) -> Self {
+        assert_eq!(
+            state.k(),
+            self.candidates.len(),
+            "subset warm-start size mismatch"
+        );
+        for (pos, &full) in self.candidates.iter().enumerate() {
+            self.full_counts[full] = state.counts[pos];
+        }
+        self.inner = std::mem::replace(&mut self.inner, UcbTuner::new(1, 1.0, 0.0))
+            .with_state(state);
+        self
+    }
+
     /// Recommended subset size for a `k`-arm space under `iterations`
     /// budget: at most a third of the budget goes to the init sweep.
     pub fn recommended_size(k: usize, iterations: usize) -> usize {
@@ -150,6 +180,38 @@ mod tests {
     fn update_outside_subset_panics() {
         let mut t = SubsetTuner::with_candidates(100, vec![1, 2, 3], 1.0, 0.0);
         t.update(99, 1.0, 1.0);
+    }
+
+    #[test]
+    fn same_seed_same_candidates_and_warm_start() {
+        // The serve checkpoint path: tune, checkpoint the subset-space
+        // state, rebuild with the same seed, restore. Candidates and the
+        // Eq. 4 answer must line up.
+        let mut t = SubsetTuner::new(10_000, 64, 1.0, 0.0, 123);
+        for _ in 0..300 {
+            let arm = t.select();
+            let time = if arm == t.candidates()[5] { 0.3 } else { 2.0 };
+            t.update(arm, time, 5.0);
+        }
+        let best = t.most_selected();
+        let state = t.reward_state().unwrap().clone();
+
+        let rebuilt = SubsetTuner::new(10_000, 64, 1.0, 0.0, 123).with_prior_state(state);
+        assert_eq!(rebuilt.candidates(), t.candidates());
+        assert_eq!(rebuilt.most_selected(), best);
+        assert_eq!(rebuilt.total_pulls(), 300.0);
+        assert!(rebuilt.contains_arm(best));
+        assert_eq!(
+            rebuilt.position_of(best),
+            t.candidates().iter().position(|&c| c == best)
+        );
+    }
+
+    #[test]
+    #[should_panic]
+    fn warm_start_size_mismatch_panics() {
+        let state = crate::bandit::RewardState::new(32);
+        let _ = SubsetTuner::new(1000, 16, 1.0, 0.0, 1).with_prior_state(state);
     }
 
     #[test]

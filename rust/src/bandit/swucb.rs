@@ -46,6 +46,46 @@ impl SlidingWindowUcb {
     pub fn window(&self) -> usize {
         self.window
     }
+
+    /// Builder: warm-start from a prior reward state (see
+    /// [`super::persist`]) by replaying each arm's mean into the window as
+    /// synthetic observations. Going through the history deque (rather
+    /// than poking the sums directly) preserves the eviction invariant:
+    /// every unit of windowed state has a history entry that will
+    /// eventually age out, so prior knowledge is forgotten exactly like
+    /// real observations. When the prior holds more pulls than the window,
+    /// every arm's replay count is scaled down *proportionally* (with a
+    /// floor of one entry per pulled arm), so no arm loses its prior just
+    /// because of its index.
+    pub fn with_prior(mut self, prior: &RewardState) -> Self {
+        assert_eq!(prior.k(), self.k, "warm-start arm count mismatch");
+        let total: f64 = prior.counts.iter().filter(|&&c| c > 0.0).sum();
+        if total <= 0.0 {
+            return self;
+        }
+        let scale = (self.window as f64 / total).min(1.0);
+        for arm in 0..self.k {
+            if prior.counts[arm] <= 0.0 {
+                continue;
+            }
+            let n = ((prior.counts[arm] * scale).round() as usize).max(1);
+            let mean_tau = prior.tau_sum[arm] / prior.counts[arm];
+            let mean_rho = prior.rho_sum[arm] / prior.counts[arm];
+            for _ in 0..n {
+                if self.history.len() >= self.window {
+                    break;
+                }
+                self.history.push_back((arm, mean_tau, mean_rho));
+                self.state.tau_sum[arm] += mean_tau;
+                self.state.rho_sum[arm] += mean_rho;
+                self.state.counts[arm] += 1.0;
+                self.lifetime_counts[arm] += 1.0;
+                self.t += 1.0;
+            }
+        }
+        self.state.t = self.t;
+        self
+    }
 }
 
 impl Policy for SlidingWindowUcb {
@@ -93,6 +133,13 @@ impl Policy for SlidingWindowUcb {
 
     fn name(&self) -> &'static str {
         "sw-ucb"
+    }
+
+    fn reward_state(&self) -> Option<&RewardState> {
+        // The *windowed* sufficient statistics: a checkpoint restores the
+        // recent view of the environment, which is exactly what SW-UCB
+        // considers current.
+        Some(&self.state)
     }
 }
 
@@ -162,5 +209,50 @@ mod tests {
     #[should_panic]
     fn window_smaller_than_arms_rejected() {
         SlidingWindowUcb::new(10, 1.0, 0.0, 5);
+    }
+
+    #[test]
+    fn warm_start_replays_prior_into_window() {
+        let mut prior = RewardState::new(3);
+        for _ in 0..20 {
+            prior.observe(0, 2.0, 4.0);
+            prior.observe(1, 0.5, 4.0);
+            prior.observe(2, 3.0, 4.0);
+        }
+        let p = SlidingWindowUcb::new(3, 1.0, 0.0, 100).with_prior(&prior);
+        // Replayed means match the prior exactly.
+        assert_eq!(p.state.counts, vec![20.0, 20.0, 20.0]);
+        assert!((p.state.tau_sum[1] / p.state.counts[1] - 0.5).abs() < 1e-12);
+        assert_eq!(p.history.len(), 60);
+        // And the replayed entries age out like real observations.
+        let mut p = p;
+        for _ in 0..100 {
+            let arm = p.select();
+            p.update(arm, 1.0, 1.0);
+        }
+        let window_total: f64 = p.state.counts.iter().sum();
+        assert_eq!(window_total, 100.0);
+    }
+
+    #[test]
+    fn warm_start_capped_at_window_proportionally() {
+        // 1500 prior pulls into a 64-slot window: every arm keeps a share
+        // proportional to its prior counts — no arm is dropped just
+        // because of its index.
+        let mut prior = RewardState::new(3);
+        for _ in 0..500 {
+            prior.observe(0, 1.0, 1.0);
+            prior.observe(1, 2.0, 1.0);
+            prior.observe(2, 3.0, 1.0);
+        }
+        let p = SlidingWindowUcb::new(3, 1.0, 0.0, 64).with_prior(&prior);
+        assert!(p.history.len() <= 64);
+        for arm in 0..3 {
+            assert!(p.state.counts[arm] > 0.0, "arm {arm} lost its prior");
+            let mean = p.state.tau_sum[arm] / p.state.counts[arm];
+            assert!((mean - (arm as f64 + 1.0)).abs() < 1e-9);
+        }
+        // Shares are roughly equal for equal prior counts.
+        assert!((p.state.counts[0] - p.state.counts[2]).abs() <= 1.0);
     }
 }

@@ -15,8 +15,6 @@ pub struct UcbTuner {
     beta: f64,
     exploration: f64,
     backend: Box<dyn ScoreBackend>,
-    /// Cached selection made by `select`, consumed by `update`.
-    last_selected: Option<usize>,
     /// Rewards from the most recent scoring pass (diagnostics).
     last_rewards: Vec<f64>,
 }
@@ -42,7 +40,6 @@ impl UcbTuner {
             beta,
             exploration: DEFAULT_EXPLORATION,
             backend,
-            last_selected: None,
             last_rewards: vec![],
         }
     }
@@ -109,17 +106,15 @@ impl Policy for UcbTuner {
             .lasp_step(&self.state, self.alpha, self.beta, self.exploration)
             .expect("score backend failed");
         self.last_rewards = out.rewards;
-        self.last_selected = Some(out.best);
         out.best
     }
 
     fn update(&mut self, arm: usize, time_s: f64, power_w: f64) {
-        debug_assert!(
-            self.last_selected.map_or(true, |s| s == arm),
-            "update for arm {arm} but selected {:?}",
-            self.last_selected
-        );
-        self.last_selected = None;
+        // No select/update pairing is enforced: the online tuning service
+        // (`serve`) applies reports asynchronously through batched
+        // ingestion, so updates may arrive out of order relative to the
+        // most recent `select`. UCB's sufficient statistics are
+        // order-free, so any valid arm is accepted.
         self.state.observe(arm, time_s, power_w);
     }
 

@@ -53,6 +53,15 @@ pub struct LaspConfig {
     pub devices: usize,
     pub loss_prob: f64,
     pub latency_s: f64,
+    // [serve]
+    pub serve_port: u16,
+    pub serve_workers: usize,
+    pub serve_shards: usize,
+    pub serve_queue_cap: usize,
+    pub serve_batch: usize,
+    pub serve_checkpoint_dir: Option<String>,
+    pub serve_checkpoint_secs: f64,
+    pub serve_retain: f64,
 }
 
 impl Default for LaspConfig {
@@ -70,6 +79,14 @@ impl Default for LaspConfig {
             devices: 2,
             loss_prob: 0.0,
             latency_s: 0.0,
+            serve_port: 8787,
+            serve_workers: 8,
+            serve_shards: 8,
+            serve_queue_cap: 4096,
+            serve_batch: 128,
+            serve_checkpoint_dir: None,
+            serve_checkpoint_secs: 30.0,
+            serve_retain: 0.5,
         }
     }
 }
@@ -126,6 +143,50 @@ impl LaspConfig {
         if let Some(v) = get("fleet", "latency_s") {
             cfg.latency_s = v.as_float().ok_or_else(|| anyhow!("fleet.latency_s must be number"))?;
         }
+        // Checked integer conversion: TOML values are i64, and a plain
+        // `as usize` would wrap negatives into huge counts.
+        let pos_count = |section: &str, key: &str, v: &TomlValue| -> Result<usize> {
+            let i = v.as_int().ok_or_else(|| anyhow!("{section}.{key} must be int"))?;
+            if !(1..=1_000_000).contains(&i) {
+                return Err(anyhow!("{section}.{key} must lie in 1..=1000000, got {i}"));
+            }
+            Ok(i as usize)
+        };
+        if let Some(v) = get("serve", "port") {
+            let i = v.as_int().ok_or_else(|| anyhow!("serve.port must be int"))?;
+            if !(0..=65_535).contains(&i) {
+                return Err(anyhow!("serve.port must lie in 0..=65535, got {i}"));
+            }
+            cfg.serve_port = i as u16;
+        }
+        if let Some(v) = get("serve", "workers") {
+            cfg.serve_workers = pos_count("serve", "workers", v)?;
+        }
+        if let Some(v) = get("serve", "shards") {
+            cfg.serve_shards = pos_count("serve", "shards", v)?;
+        }
+        if let Some(v) = get("serve", "queue_cap") {
+            cfg.serve_queue_cap = pos_count("serve", "queue_cap", v)?;
+        }
+        if let Some(v) = get("serve", "batch") {
+            cfg.serve_batch = pos_count("serve", "batch", v)?;
+        }
+        if let Some(v) = get("serve", "checkpoint_dir") {
+            cfg.serve_checkpoint_dir = Some(
+                v.as_str()
+                    .ok_or_else(|| anyhow!("serve.checkpoint_dir must be a string"))?
+                    .to_string(),
+            );
+        }
+        if let Some(v) = get("serve", "checkpoint_secs") {
+            cfg.serve_checkpoint_secs = v
+                .as_float()
+                .ok_or_else(|| anyhow!("serve.checkpoint_secs must be number"))?;
+        }
+        if let Some(v) = get("serve", "retain") {
+            cfg.serve_retain =
+                v.as_float().ok_or_else(|| anyhow!("serve.retain must be number"))?;
+        }
         cfg.validate()?;
         Ok(cfg)
     }
@@ -147,7 +208,28 @@ impl LaspConfig {
         if self.iterations == 0 || self.devices == 0 {
             return Err(anyhow!("iterations and devices must be positive"));
         }
+        // Guard before serve_config(): Duration::from_secs_f64 panics on
+        // negative/non-finite input.
+        if !(self.serve_checkpoint_secs.is_finite() && self.serve_checkpoint_secs > 0.0) {
+            return Err(anyhow!("serve.checkpoint_secs must be positive"));
+        }
+        // Single source of truth for the remaining serve rules.
+        self.serve_config().validate()?;
         Ok(())
+    }
+
+    /// The serve-layer configuration view of this config.
+    pub fn serve_config(&self) -> crate::serve::ServeConfig {
+        crate::serve::ServeConfig {
+            addr: format!("127.0.0.1:{}", self.serve_port),
+            workers: self.serve_workers,
+            shards: self.serve_shards,
+            queue_cap: self.serve_queue_cap,
+            max_batch: self.serve_batch,
+            checkpoint_dir: self.serve_checkpoint_dir.as_ref().map(std::path::PathBuf::from),
+            checkpoint_every: std::time::Duration::from_secs_f64(self.serve_checkpoint_secs),
+            warm_retain: self.serve_retain,
+        }
     }
 
     /// The injected-noise model from `noise_pct`.
@@ -215,6 +297,48 @@ mod tests {
         assert!(LaspConfig::from_toml_str("[tune]\napp = \"nope\"\n").is_err());
         assert!(LaspConfig::from_toml_str("[tune]\niterations = 0\n").is_err());
         assert!(LaspConfig::from_toml_str("[tune]\nalpha = 0.0\nbeta = 0.0\n").is_err());
+    }
+
+    #[test]
+    fn parses_serve_section() {
+        let cfg = LaspConfig::from_toml_str(
+            r#"
+            [serve]
+            port = 9999
+            workers = 4
+            shards = 16
+            queue_cap = 512
+            batch = 64
+            checkpoint_dir = "/tmp/lasp-ckpt"
+            checkpoint_secs = 5.0
+            retain = 0.25
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.serve_port, 9999);
+        assert_eq!(cfg.serve_workers, 4);
+        assert_eq!(cfg.serve_shards, 16);
+        assert_eq!(cfg.serve_queue_cap, 512);
+        assert_eq!(cfg.serve_batch, 64);
+        assert_eq!(cfg.serve_checkpoint_dir.as_deref(), Some("/tmp/lasp-ckpt"));
+        assert!((cfg.serve_checkpoint_secs - 5.0).abs() < 1e-12);
+        assert!((cfg.serve_retain - 0.25).abs() < 1e-12);
+        let sc = cfg.serve_config();
+        assert_eq!(sc.addr, "127.0.0.1:9999");
+        assert_eq!(sc.shards, 16);
+        assert_eq!(sc.checkpoint_every, std::time::Duration::from_secs(5));
+    }
+
+    #[test]
+    fn rejects_bad_serve_values() {
+        assert!(LaspConfig::from_toml_str("[serve]\nshards = 0\n").is_err());
+        assert!(LaspConfig::from_toml_str("[serve]\nretain = 0.0\n").is_err());
+        assert!(LaspConfig::from_toml_str("[serve]\nretain = 1.5\n").is_err());
+        assert!(LaspConfig::from_toml_str("[serve]\ncheckpoint_secs = 0\n").is_err());
+        // Negative/oversized integers must error, not wrap through `as`.
+        assert!(LaspConfig::from_toml_str("[serve]\nworkers = -1\n").is_err());
+        assert!(LaspConfig::from_toml_str("[serve]\nport = 65536\n").is_err());
+        assert!(LaspConfig::from_toml_str("[serve]\nport = -1\n").is_err());
     }
 
     #[test]

@@ -24,6 +24,7 @@ pub mod coordinator;
 pub mod device;
 pub mod experiments;
 pub mod runtime;
+pub mod serve;
 pub mod space;
 pub mod telemetry;
 pub mod tuning;

@@ -3,6 +3,8 @@
 //! Subcommands:
 //!   tune        run LASP on one application (single device)
 //!   fleet       run tuning jobs across a simulated edge fleet
+//!   serve       run the online tuning service (HTTP + JSON)
+//!   loadgen     drive suggest/report load against a running server
 //!   compare     LASP vs baselines on one application
 //!   experiment  regenerate a paper table/figure (or `all`)
 //!   spaces      print Table II (application parameter spaces)
@@ -38,6 +40,8 @@ fn dispatch(args: &[String]) -> Result<()> {
     match cmd.as_str() {
         "tune" => cmd_tune(&flags),
         "fleet" => cmd_fleet(&flags),
+        "serve" => cmd_serve(&flags),
+        "loadgen" => cmd_loadgen(&flags),
         "compare" => cmd_compare(&flags),
         "experiment" => cmd_experiment(&flags),
         "spaces" => {
@@ -52,41 +56,68 @@ fn dispatch(args: &[String]) -> Result<()> {
             print_usage();
             Ok(())
         }
-        other => Err(anyhow!("unknown command '{other}' (try `lasp help`)")),
+        other => {
+            // Full usage on stderr so a typo is immediately recoverable.
+            eprintln!("{}", usage_text());
+            Err(anyhow!("unknown command '{other}' (try `lasp help`)"))
+        }
     }
 }
 
+fn usage_text() -> &'static str {
+    "lasp — Lightweight Autotuning of Scientific Application Parameters\n\
+     \n\
+     USAGE: lasp <command> [flags]\n\
+     \n\
+     COMMANDS\n\
+     \x20 tune        run LASP on one application\n\
+     \x20 fleet       run jobs across a simulated edge fleet\n\
+     \x20 serve       run the online tuning service (HTTP + JSON)\n\
+     \x20 loadgen     drive suggest/report load against a running server\n\
+     \x20 compare     LASP vs baselines on one application\n\
+     \x20 experiment  regenerate a paper artifact: table1|table2|fig2..fig12|ablation|all\n\
+     \x20 spaces      print Table II\n\
+     \x20 devices     print Table I\n\
+     \x20 help        print this message\n\
+     \n\
+     FLAGS (tune/fleet/compare)\n\
+     \x20 --config <file>      TOML config (flags override)\n\
+     \x20 --app <name>         lulesh|kripke|clomp|hypre   [kripke]\n\
+     \x20 --iters <n>          tuning iterations           [500]\n\
+     \x20 --alpha <f> --beta <f>  objective weights        [0.8/0.2]\n\
+     \x20 --mode <m>           maxn|5w                     [maxn]\n\
+     \x20 --seed <n>           RNG seed                    [42]\n\
+     \x20 --backend <b>        scalar|pjrt                 [scalar]\n\
+     \x20 --noise <pct>        injected error, e.g. 0.10   [0]\n\
+     \x20 --devices <n>        fleet size                  [2]\n\
+     \x20 --budget <n>         compare: evaluation budget  [--iters]\n\
+     \x20 --name <id>          experiment id               [all]\n\
+     \x20 --quick              experiment: reduced repetitions\n\
+     \x20 --hf-validate        tune: validate result on the HPC node\n\
+     \x20 --save-state <file>  tune: checkpoint the tuner state (JSON)\n\
+     \x20 --load-state <file>  tune: warm-start from a checkpoint\n\
+     \n\
+     FLAGS (serve)\n\
+     \x20 --port <n>             bind 127.0.0.1:<port>     [8787]\n\
+     \x20 --addr <host:port>     explicit bind address (overrides --port)\n\
+     \x20 --workers <n>          HTTP worker threads       [8]\n\
+     \x20 --shards <n>           session-store shards      [8]\n\
+     \x20 --queue-cap <n>        per-shard report queue    [4096]\n\
+     \x20 --batch <n>            max updates per drain     [128]\n\
+     \x20 --checkpoint-dir <d>   snapshot sessions here    [off]\n\
+     \x20 --checkpoint-secs <s>  snapshot period           [30]\n\
+     \x20 --retain <f>           warm-start retention      [0.5]\n\
+     \n\
+     FLAGS (loadgen)\n\
+     \x20 --addr <host:port>     server to hammer          [127.0.0.1:8787]\n\
+     \x20 --sessions <n>         concurrent sessions       [128]\n\
+     \x20 --rounds <n>           suggest/report round-trips [12000]\n\
+     \x20 --threads <n>          client threads            [8]\n\
+     \x20 --apps <list>          all | comma list          [all]"
+}
+
 fn print_usage() {
-    println!(
-        "lasp — Lightweight Autotuning of Scientific Application Parameters\n\
-         \n\
-         USAGE: lasp <command> [flags]\n\
-         \n\
-         COMMANDS\n\
-         \x20 tune        run LASP on one application\n\
-         \x20 fleet       run jobs across a simulated edge fleet\n\
-         \x20 compare     LASP vs baselines on one application\n\
-         \x20 experiment  regenerate a paper artifact: table1|table2|fig2..fig12|ablation|all\n\
-         \x20 spaces      print Table II\n\
-         \x20 devices     print Table I\n\
-         \n\
-         FLAGS (tune/fleet/compare)\n\
-         \x20 --config <file>      TOML config (flags override)\n\
-         \x20 --app <name>         lulesh|kripke|clomp|hypre   [kripke]\n\
-         \x20 --iters <n>          tuning iterations           [500]\n\
-         \x20 --alpha <f> --beta <f>  objective weights        [0.8/0.2]\n\
-         \x20 --mode <m>           maxn|5w                     [maxn]\n\
-         \x20 --seed <n>           RNG seed                    [42]\n\
-         \x20 --backend <b>        scalar|pjrt                 [scalar]\n\
-         \x20 --noise <pct>        injected error, e.g. 0.10   [0]\n\
-         \x20 --devices <n>        fleet size                  [2]\n\
-         \x20 --budget <n>         compare: evaluation budget  [--iters]\n\
-         \x20 --name <id>          experiment id               [all]\n\
-         \x20 --quick              experiment: reduced repetitions\n\
-         \x20 --hf-validate        tune: validate result on the HPC node\n\
-         \x20 --save-state <file>  tune: checkpoint the tuner state (JSON)\n\
-         \x20 --load-state <file>  tune: warm-start from a checkpoint"
-    );
+    println!("{}", usage_text());
 }
 
 /// Parsed `--flag value` pairs (+ boolean flags).
@@ -309,6 +340,113 @@ fn cmd_fleet(flags: &Flags) -> Result<()> {
         );
     }
     fleet.shutdown();
+    Ok(())
+}
+
+fn cmd_serve(flags: &Flags) -> Result<()> {
+    let cfg = flags.config()?;
+    let mut serve_cfg = cfg.serve_config();
+    if let Some(v) = flags.get("port") {
+        let port: u16 = v.parse().context("--port")?;
+        serve_cfg.addr = format!("127.0.0.1:{port}");
+    }
+    if let Some(v) = flags.get("addr") {
+        serve_cfg.addr = v.to_string();
+    }
+    if let Some(v) = flags.get("workers") {
+        serve_cfg.workers = v.parse().context("--workers")?;
+    }
+    if let Some(v) = flags.get("shards") {
+        serve_cfg.shards = v.parse().context("--shards")?;
+    }
+    if let Some(v) = flags.get("queue-cap") {
+        serve_cfg.queue_cap = v.parse().context("--queue-cap")?;
+    }
+    if let Some(v) = flags.get("batch") {
+        serve_cfg.max_batch = v.parse().context("--batch")?;
+    }
+    if let Some(v) = flags.get("checkpoint-dir") {
+        serve_cfg.checkpoint_dir = Some(std::path::PathBuf::from(v));
+    }
+    if let Some(v) = flags.get("checkpoint-secs") {
+        let secs: f64 = v.parse().context("--checkpoint-secs")?;
+        if secs <= 0.0 {
+            return Err(anyhow!("--checkpoint-secs must be positive"));
+        }
+        serve_cfg.checkpoint_every = std::time::Duration::from_secs_f64(secs);
+    }
+    if let Some(v) = flags.get("retain") {
+        serve_cfg.warm_retain = v.parse().context("--retain")?;
+    }
+    let ckpt = serve_cfg
+        .checkpoint_dir
+        .as_ref()
+        .map(|d| d.display().to_string())
+        .unwrap_or_else(|| "off".to_string());
+    let handle = lasp::serve::start(serve_cfg.clone())?;
+    println!(
+        "# lasp serve: listening on {} | workers={} shards={} queue={} batch={} checkpoints={}",
+        handle.addr(),
+        serve_cfg.workers,
+        serve_cfg.shards,
+        serve_cfg.queue_cap,
+        serve_cfg.max_batch,
+        ckpt,
+    );
+    if handle.restored_sessions() > 0 {
+        println!(
+            "# warm start: {} session(s) restored (retain={})",
+            handle.restored_sessions(),
+            serve_cfg.warm_retain
+        );
+    }
+    println!("# endpoints: POST /v1/suggest  POST /v1/report  GET /v1/best  GET /healthz  GET /metrics");
+    handle.wait();
+    Ok(())
+}
+
+fn cmd_loadgen(flags: &Flags) -> Result<()> {
+    let cfg = flags.config()?;
+    let mut lg = lasp::serve::LoadgenConfig {
+        alpha: cfg.alpha,
+        beta: cfg.beta,
+        fidelity: cfg.fidelity,
+        seed: cfg.seed,
+        ..Default::default()
+    };
+    if let Some(v) = flags.get("addr") {
+        lg.addr = v.to_string();
+    } else if let Some(v) = flags.get("port") {
+        let port: u16 = v.parse().context("--port")?;
+        lg.addr = format!("127.0.0.1:{port}");
+    }
+    if let Some(v) = flags.get("sessions") {
+        lg.sessions = v.parse().context("--sessions")?;
+    }
+    if let Some(v) = flags.get("rounds") {
+        lg.rounds = v.parse().context("--rounds")?;
+    }
+    if let Some(v) = flags.get("threads") {
+        lg.threads = v.parse().context("--threads")?;
+    }
+    if let Some(v) = flags.get("apps") {
+        if v != "all" {
+            lg.apps = v
+                .split(',')
+                .map(|s| s.trim().parse())
+                .collect::<Result<Vec<_>>>()?;
+        }
+    }
+    println!(
+        "# lasp loadgen: {} | sessions={} rounds={} threads={} apps={:?}",
+        lg.addr,
+        lg.sessions,
+        lg.rounds,
+        lg.threads,
+        lg.apps.iter().map(|a| a.name()).collect::<Vec<_>>(),
+    );
+    let report = lasp::serve::loadgen::run(&lg)?;
+    report.print();
     Ok(())
 }
 

@@ -1,0 +1,318 @@
+//! Batched reward ingestion: the write plane of the tuning service.
+//!
+//! `POST /v1/report` must not pay for a bandit update inline — the suggest
+//! hot path shares the shard lock, so a burst of reports would stretch
+//! suggest tail latency. Instead each shard owns a bounded queue drained
+//! by a dedicated updater thread that applies reports in batches under a
+//! single lock acquisition. The queue bound is the backpressure: when a
+//! shard's updater falls behind, enqueueing blocks the reporting client
+//! (never unbounded memory), mirroring the bounded-channel discipline of
+//! [`crate::coordinator`].
+
+use super::metrics::Metrics;
+use super::store::{AppsCache, SessionKey, ShardedStore};
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+/// One measured evaluation reported by an edge client.
+#[derive(Debug, Clone)]
+pub struct Report {
+    pub key: SessionKey,
+    pub alpha: f64,
+    pub beta: f64,
+    pub arm: usize,
+    pub time_s: f64,
+    pub power_w: f64,
+}
+
+enum Msg {
+    Report(Report),
+    Stop,
+}
+
+/// Per-shard bounded queues + updater threads.
+pub struct BatchIngest {
+    /// `SyncSender` is wrapped in a `Mutex` per shard so the ingest handle
+    /// can be shared across worker threads without requiring `Sync`
+    /// senders; the critical section is a single `try_send`.
+    txs: Vec<Mutex<SyncSender<Msg>>>,
+    updaters: Mutex<Vec<JoinHandle<()>>>,
+}
+
+impl BatchIngest {
+    /// Spawn one updater thread per shard.
+    pub fn start(
+        store: Arc<ShardedStore>,
+        apps: Arc<AppsCache>,
+        metrics: Arc<Metrics>,
+        queue_cap: usize,
+        max_batch: usize,
+    ) -> BatchIngest {
+        assert!(queue_cap > 0 && max_batch > 0);
+        let shards = store.num_shards();
+        let mut txs = Vec::with_capacity(shards);
+        let mut updaters = Vec::with_capacity(shards);
+        for shard in 0..shards {
+            let (tx, rx): (SyncSender<Msg>, Receiver<Msg>) = sync_channel(queue_cap);
+            txs.push(Mutex::new(tx));
+            let store = store.clone();
+            let apps = apps.clone();
+            let metrics = metrics.clone();
+            updaters.push(std::thread::spawn(move || {
+                updater_loop(shard, &rx, &store, &apps, &metrics, max_batch)
+            }));
+        }
+        BatchIngest {
+            txs,
+            updaters: Mutex::new(updaters),
+        }
+    }
+
+    /// Enqueue a report for its shard's updater. Fast path is a lock-light
+    /// `try_send`; a full queue blocks (backpressure) rather than dropping.
+    pub fn enqueue(&self, shard: usize, report: Report, metrics: &Metrics) -> Result<(), String> {
+        let tx = match self.txs[shard].lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        };
+        match tx.try_send(Msg::Report(report)) {
+            Ok(()) => Ok(()),
+            Err(TrySendError::Full(m)) => {
+                metrics.queue_backpressure.fetch_add(1, Ordering::Relaxed);
+                tx.send(m).map_err(|_| "updater thread exited".to_string())
+            }
+            Err(TrySendError::Disconnected(_)) => Err("updater thread exited".to_string()),
+        }
+    }
+
+    /// Stop all updaters after draining everything queued ahead of the
+    /// stop marker. Safe to call once; later enqueues fail cleanly.
+    pub fn stop(&self) {
+        for tx in &self.txs {
+            let tx = match tx.lock() {
+                Ok(g) => g,
+                Err(p) => p.into_inner(),
+            };
+            let _ = tx.send(Msg::Stop);
+        }
+        let mut updaters = match self.updaters.lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        };
+        for h in updaters.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn updater_loop(
+    shard: usize,
+    rx: &Receiver<Msg>,
+    store: &ShardedStore,
+    apps: &AppsCache,
+    metrics: &Metrics,
+    max_batch: usize,
+) {
+    loop {
+        // Block for the first report, then opportunistically drain up to
+        // `max_batch` more so a burst costs one lock acquisition.
+        let first = match rx.recv() {
+            Ok(Msg::Report(r)) => r,
+            Ok(Msg::Stop) | Err(_) => return,
+        };
+        let mut batch = vec![first];
+        let mut stop_after = false;
+        while batch.len() < max_batch {
+            match rx.try_recv() {
+                Ok(Msg::Report(r)) => batch.push(r),
+                Ok(Msg::Stop) => {
+                    stop_after = true;
+                    break;
+                }
+                Err(_) => break,
+            }
+        }
+        apply_batch(shard, batch, store, apps, metrics);
+        metrics.update_batches.fetch_add(1, Ordering::Relaxed);
+        if stop_after {
+            return;
+        }
+    }
+}
+
+fn apply_batch(
+    shard: usize,
+    batch: Vec<Report>,
+    store: &ShardedStore,
+    apps: &AppsCache,
+    metrics: &Metrics,
+) {
+    let mut guard = store.lock_shard(shard);
+    for r in batch {
+        let k = apps.arms(r.key.app);
+        // Reports may precede any suggest for the session (e.g. a client
+        // replaying measurements after a server restart): create cold.
+        match guard.get_or_create(&r.key, r.alpha, r.beta, k) {
+            Ok((session, created)) => {
+                if created {
+                    metrics.sessions_created.fetch_add(1, Ordering::Relaxed);
+                }
+                match session.tuner.observe(r.arm, r.time_s, r.power_w) {
+                    Ok(()) => {
+                        session.reports += 1;
+                        metrics.reports_applied.fetch_add(1, Ordering::Relaxed);
+                    }
+                    Err(_) => {
+                        metrics.reports_rejected.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            }
+            Err(_) => {
+                metrics.reports_rejected.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::AppKind;
+    use crate::device::PowerMode;
+    use crate::serve::store::PolicyKind;
+    use std::time::{Duration, Instant};
+
+    fn key(client: &str) -> SessionKey {
+        SessionKey {
+            client_id: client.to_string(),
+            app: AppKind::Clomp,
+            device: PowerMode::Maxn,
+            policy: PolicyKind::Ucb,
+        }
+    }
+
+    fn wait_for<F: Fn() -> bool>(cond: F, timeout: Duration) -> bool {
+        let deadline = Instant::now() + timeout;
+        while Instant::now() < deadline {
+            if cond() {
+                return true;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        cond()
+    }
+
+    #[test]
+    fn reports_are_applied_asynchronously() {
+        let store = Arc::new(ShardedStore::new(4));
+        let apps = Arc::new(AppsCache::new());
+        let metrics = Arc::new(Metrics::new());
+        let ingest = BatchIngest::start(store.clone(), apps, metrics.clone(), 64, 16);
+
+        let k = key("async-client");
+        let shard = store.shard_of(&k);
+        for i in 0..50 {
+            ingest
+                .enqueue(
+                    shard,
+                    Report {
+                        key: k.clone(),
+                        alpha: 1.0,
+                        beta: 0.0,
+                        arm: i % 125,
+                        time_s: 1.0,
+                        power_w: 5.0,
+                    },
+                    &metrics,
+                )
+                .unwrap();
+        }
+        assert!(
+            wait_for(
+                || metrics.reports_applied.load(Ordering::Relaxed) == 50,
+                Duration::from_secs(5)
+            ),
+            "applied {} of 50",
+            metrics.reports_applied.load(Ordering::Relaxed)
+        );
+        let guard = store.lock_shard(shard);
+        let session = guard.sessions.get(&k).unwrap();
+        assert_eq!(session.tuner.total_pulls(), 50.0);
+        drop(guard);
+        ingest.stop();
+    }
+
+    #[test]
+    fn bad_reports_are_rejected_not_fatal() {
+        let store = Arc::new(ShardedStore::new(2));
+        let apps = Arc::new(AppsCache::new());
+        let metrics = Arc::new(Metrics::new());
+        let ingest = BatchIngest::start(store.clone(), apps, metrics.clone(), 16, 8);
+        let k = key("bad-client");
+        let shard = store.shard_of(&k);
+        // Arm out of range for clomp (125 arms).
+        ingest
+            .enqueue(
+                shard,
+                Report {
+                    key: k.clone(),
+                    alpha: 1.0,
+                    beta: 0.0,
+                    arm: 10_000,
+                    time_s: 1.0,
+                    power_w: 5.0,
+                },
+                &metrics,
+            )
+            .unwrap();
+        ingest
+            .enqueue(
+                shard,
+                Report {
+                    key: k.clone(),
+                    alpha: 1.0,
+                    beta: 0.0,
+                    arm: 3,
+                    time_s: 1.0,
+                    power_w: 5.0,
+                },
+                &metrics,
+            )
+            .unwrap();
+        assert!(wait_for(
+            || metrics.reports_applied.load(Ordering::Relaxed) == 1
+                && metrics.reports_rejected.load(Ordering::Relaxed) == 1,
+            Duration::from_secs(5)
+        ));
+        ingest.stop();
+    }
+
+    #[test]
+    fn stop_drains_pending_reports() {
+        let store = Arc::new(ShardedStore::new(1));
+        let apps = Arc::new(AppsCache::new());
+        let metrics = Arc::new(Metrics::new());
+        let ingest = BatchIngest::start(store.clone(), apps, metrics.clone(), 256, 32);
+        let k = key("drain-client");
+        for i in 0..100 {
+            ingest
+                .enqueue(
+                    0,
+                    Report {
+                        key: k.clone(),
+                        alpha: 1.0,
+                        beta: 0.0,
+                        arm: i % 125,
+                        time_s: 0.5,
+                        power_w: 4.0,
+                    },
+                    &metrics,
+                )
+                .unwrap();
+        }
+        ingest.stop();
+        assert_eq!(metrics.reports_applied.load(Ordering::Relaxed), 100);
+    }
+}

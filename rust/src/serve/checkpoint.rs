@@ -1,0 +1,223 @@
+//! Checkpoint/warm-start for the session store.
+//!
+//! Every session whose policy exposes reward sufficient statistics is
+//! periodically serialized — one JSON file per session, written atomically
+//! via [`persist::write_atomic`] so a crash mid-snapshot never leaves a
+//! torn file. On boot the service re-reads the directory and rebuilds each
+//! session with [`persist::discounted`] applied: prior knowledge is kept
+//! but its effective pull counts are shrunk, so a restarted service biases
+//! toward what it had learned while still re-verifying a possibly shifted
+//! environment (the paper's warm-start story, applied to the service).
+
+use super::store::{AppsCache, PolicyKind, Session, SessionKey, ShardedStore, Tuner};
+use crate::apps::AppKind;
+use crate::bandit::persist;
+use crate::device::PowerMode;
+use crate::util::json::Json;
+use anyhow::{anyhow, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Session-envelope format version.
+const VERSION: f64 = 1.0;
+
+/// Serialize one session (metadata envelope + embedded persist state).
+/// Returns `None` for policies with no checkpointable state.
+pub fn session_to_json(session: &Session) -> Option<String> {
+    let state = session.tuner.reward_state()?;
+    let inner = persist::to_json(state, session.key.app.name(), session.alpha, session.beta);
+    let inner = Json::parse(&inner).ok()?;
+    let mut obj = BTreeMap::new();
+    obj.insert("version".to_string(), Json::Num(VERSION));
+    obj.insert("client_id".to_string(), Json::Str(session.key.client_id.clone()));
+    obj.insert("app".to_string(), Json::Str(session.key.app.name().to_string()));
+    obj.insert(
+        "device".to_string(),
+        Json::Str(session.key.device.name().to_ascii_lowercase()),
+    );
+    obj.insert("policy".to_string(), Json::Str(session.key.policy.name().to_string()));
+    obj.insert("alpha".to_string(), Json::Num(session.alpha));
+    obj.insert("beta".to_string(), Json::Num(session.beta));
+    obj.insert("suggests".to_string(), Json::Num(session.suggests as f64));
+    obj.insert("reports".to_string(), Json::Num(session.reports as f64));
+    obj.insert("state".to_string(), inner);
+    Some(Json::Obj(obj).to_string())
+}
+
+/// Rebuild a session from an envelope, discounting the prior by `retain`.
+pub fn session_from_json(text: &str, apps: &AppsCache, retain: f64) -> Result<Session> {
+    let root = Json::parse(text).map_err(|e| anyhow!("session envelope parse: {e}"))?;
+    if root.get("version").and_then(Json::as_f64) != Some(VERSION) {
+        return Err(anyhow!("unsupported session envelope version"));
+    }
+    let field = |name: &str| -> Result<&str> {
+        root.get(name)
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("envelope missing '{name}'"))
+    };
+    let client_id = field("client_id")?.to_string();
+    if client_id.is_empty() {
+        return Err(anyhow!("empty client_id"));
+    }
+    let app: AppKind = field("app")?.parse()?;
+    let device: PowerMode = field("device")?.parse()?;
+    let policy: PolicyKind = field("policy")?.parse()?;
+    let alpha = root.get("alpha").and_then(Json::as_f64).unwrap_or(0.8);
+    let beta = root.get("beta").and_then(Json::as_f64).unwrap_or(0.2);
+    let state_text = root
+        .get("state")
+        .ok_or_else(|| anyhow!("envelope missing 'state'"))?
+        .to_string();
+    let cp = persist::from_json(&state_text)?;
+    let key = SessionKey { client_id, app, device, policy };
+    let k = apps.arms(app);
+    let tuner = Tuner::build(policy, k, alpha, beta, key.hash64(), Some(&cp.state), retain)
+        .map_err(|e| anyhow!("rebuilding tuner: {e}"))?;
+    Ok(Session {
+        key,
+        alpha,
+        beta,
+        tuner,
+        suggests: root.get("suggests").and_then(Json::as_f64).unwrap_or(0.0) as u64,
+        reports: root.get("reports").and_then(Json::as_f64).unwrap_or(0.0) as u64,
+    })
+}
+
+/// Checkpoint file name for a session (stable across restarts).
+fn file_name(key: &SessionKey) -> String {
+    format!("sess-{:016x}.json", key.hash64())
+}
+
+/// Snapshot every checkpointable session into `dir`. Serialization happens
+/// under each shard lock; file I/O happens outside it so a slow disk never
+/// blocks the suggest path. Returns the number of sessions written.
+pub fn snapshot(store: &ShardedStore, dir: &Path) -> Result<usize> {
+    std::fs::create_dir_all(dir).with_context(|| format!("creating {}", dir.display()))?;
+    let mut written = 0usize;
+    for i in 0..store.num_shards() {
+        let payloads: Vec<(String, String)> = {
+            let shard = store.lock_shard(i);
+            shard
+                .sessions
+                .values()
+                .filter_map(|s| session_to_json(s).map(|text| (file_name(&s.key), text)))
+                .collect()
+        };
+        for (name, text) in payloads {
+            persist::write_atomic(&dir.join(name), &text)?;
+            written += 1;
+        }
+    }
+    Ok(written)
+}
+
+/// Restore sessions from `dir` into an (empty) store. Corrupt or stale
+/// files are skipped, not fatal — a tuning service must boot even if one
+/// checkpoint rotted. Returns the number of sessions restored.
+pub fn restore(store: &ShardedStore, apps: &AppsCache, dir: &Path, retain: f64) -> Result<usize> {
+    if !dir.is_dir() {
+        return Ok(0);
+    }
+    let entries =
+        std::fs::read_dir(dir).with_context(|| format!("reading {}", dir.display()))?;
+    let mut restored = 0usize;
+    for entry in entries.flatten() {
+        let path = entry.path();
+        if path.extension().and_then(|e| e.to_str()) != Some("json") {
+            continue;
+        }
+        let Ok(text) = std::fs::read_to_string(&path) else {
+            continue;
+        };
+        if let Ok(session) = session_from_json(&text, apps, retain) {
+            store.insert_session(session);
+            restored += 1;
+        }
+    }
+    Ok(restored)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dir(tag: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!("lasp-serve-ckpt-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn trained_session(client: &str, pulls: usize) -> Session {
+        let key = SessionKey {
+            client_id: client.to_string(),
+            app: AppKind::Clomp,
+            device: PowerMode::Maxn,
+            policy: PolicyKind::Ucb,
+        };
+        let mut tuner = Tuner::build(PolicyKind::Ucb, 125, 1.0, 0.0, key.hash64(), None, 1.0).unwrap();
+        for i in 0..pulls {
+            let arm = tuner.select();
+            // Arm 7 is clearly best.
+            let t = if arm == 7 { 0.4 } else { 2.0 + (i % 3) as f64 * 0.1 };
+            tuner.observe(arm, t, 5.0).unwrap();
+        }
+        Session { key, alpha: 1.0, beta: 0.0, tuner, suggests: pulls as u64, reports: pulls as u64 }
+    }
+
+    #[test]
+    fn envelope_roundtrip_preserves_identity_and_means() {
+        let apps = AppsCache::new();
+        let s = trained_session("round", 400);
+        let best = s.tuner.most_selected();
+        let (mean_before, _) = s.tuner.mean_of(best).unwrap();
+        let text = session_to_json(&s).unwrap();
+        let restored = session_from_json(&text, &apps, 0.5).unwrap();
+        assert_eq!(restored.key, s.key);
+        assert_eq!(restored.suggests, 400);
+        // Discounting shrinks counts but preserves per-arm means, so the
+        // most-selected arm and its mean survive the restart.
+        assert_eq!(restored.tuner.most_selected(), best);
+        let (mean_after, _) = restored.tuner.mean_of(best).unwrap();
+        assert!((mean_before - mean_after).abs() < 1e-9);
+        assert!(restored.tuner.total_pulls() > 0.0);
+        assert!(restored.tuner.total_pulls() < s.tuner.total_pulls());
+    }
+
+    #[test]
+    fn snapshot_restore_through_store() {
+        let d = dir("store");
+        let store = ShardedStore::new(4);
+        let apps = AppsCache::new();
+        for i in 0..6 {
+            store.insert_session(trained_session(&format!("c{i}"), 120));
+        }
+        let written = snapshot(&store, &d).unwrap();
+        assert_eq!(written, 6);
+
+        let fresh = ShardedStore::new(4);
+        let restored = restore(&fresh, &apps, &d, 0.5).unwrap();
+        assert_eq!(restored, 6);
+        assert_eq!(fresh.session_count(), 6);
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn corrupt_checkpoints_are_skipped() {
+        let d = dir("corrupt");
+        std::fs::write(d.join("sess-bad.json"), "not json at all").unwrap();
+        std::fs::write(d.join("ignored.txt"), "not a checkpoint").unwrap();
+        let store = ShardedStore::new(2);
+        let apps = AppsCache::new();
+        assert_eq!(restore(&store, &apps, &d, 0.5).unwrap(), 0);
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn missing_dir_restores_nothing() {
+        let store = ShardedStore::new(2);
+        let apps = AppsCache::new();
+        let n = restore(&store, &apps, Path::new("/nonexistent/lasp-ckpt"), 0.5).unwrap();
+        assert_eq!(n, 0);
+    }
+}

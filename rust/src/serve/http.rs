@@ -1,0 +1,482 @@
+//! Minimal HTTP/1.1 + JSON transport for the tuning service.
+//!
+//! No async runtime exists in this offline build, so this is the same
+//! std-threads-and-bounded-channels idiom as [`crate::coordinator`]: one
+//! accept thread feeds accepted connections into a bounded channel drained
+//! by a fixed pool of worker threads (the bound is the backpressure — a
+//! flood of connections blocks in `accept`, not in unbounded memory).
+//! Supported surface: request line + headers + `Content-Length` bodies,
+//! keep-alive, and nothing else (no chunked encoding, no TLS, no HTTP/2);
+//! that is exactly what the loadgen, the integration tests and a curl
+//! smoke test need.
+//!
+//! Each worker owns one connection at a time, so the pool size bounds the
+//! number of concurrent keep-alive clients — size `workers` to the client
+//! population (the `serve` CLI default of 8 matches the loadgen default).
+
+use crate::util::json::Json;
+use anyhow::{Context as _, Result};
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Request bodies above this are rejected (a suggest/report payload is
+/// a few hundred bytes).
+pub const MAX_BODY_BYTES: usize = 1 << 20;
+/// Header-section ceiling.
+const MAX_HEADER_BYTES: usize = 16 * 1024;
+/// Idle keep-alive connections wake this often to check for shutdown.
+const READ_TIMEOUT: Duration = Duration::from_millis(500);
+
+/// A parsed HTTP request.
+#[derive(Debug)]
+pub struct Request {
+    pub method: String,
+    /// Path without the query string, e.g. `/v1/suggest`.
+    pub path: String,
+    /// Decoded query parameters.
+    pub query: HashMap<String, String>,
+    pub body: Vec<u8>,
+    /// Client sent `Connection: close`.
+    pub close: bool,
+}
+
+impl Request {
+    /// Parse the body as JSON.
+    pub fn json(&self) -> Result<Json, String> {
+        let text = std::str::from_utf8(&self.body).map_err(|_| "body is not UTF-8".to_string())?;
+        Json::parse(text)
+    }
+}
+
+/// An HTTP response ready to serialize.
+#[derive(Debug)]
+pub struct Response {
+    pub status: u16,
+    pub content_type: &'static str,
+    pub body: Vec<u8>,
+}
+
+impl Response {
+    /// JSON response.
+    pub fn json(status: u16, v: &Json) -> Response {
+        Response {
+            status,
+            content_type: "application/json",
+            body: v.to_string().into_bytes(),
+        }
+    }
+
+    /// Plain-text response.
+    pub fn text(status: u16, body: impl Into<String>) -> Response {
+        Response {
+            status,
+            content_type: "text/plain; charset=utf-8",
+            body: body.into().into_bytes(),
+        }
+    }
+
+    /// JSON error envelope `{"error": msg}`.
+    pub fn error(status: u16, msg: &str) -> Response {
+        let mut obj = std::collections::BTreeMap::new();
+        obj.insert("error".to_string(), Json::Str(msg.to_string()));
+        Response::json(status, &Json::Obj(obj))
+    }
+}
+
+fn status_text(code: u16) -> &'static str {
+    match code {
+        200 => "OK",
+        202 => "Accepted",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        413 => "Payload Too Large",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        _ => "Unknown",
+    }
+}
+
+/// Outcome of trying to read one request off a connection.
+enum ReadOutcome {
+    Request(Request),
+    /// Peer closed cleanly between requests.
+    Closed,
+    /// Idle read timeout between requests (connection still healthy).
+    Idle,
+    /// Protocol violation; connection must be dropped after a 400.
+    Malformed(String),
+}
+
+fn read_request(reader: &mut BufReader<TcpStream>) -> ReadOutcome {
+    // Request line. A timeout with nothing read means an idle keep-alive
+    // connection; a timeout after partial bytes (read_line appends what it
+    // consumed before erroring) means a stalled half-written request —
+    // retrying would lose the consumed prefix and desync the stream.
+    let mut line = String::new();
+    match reader.read_line(&mut line) {
+        Ok(0) => return ReadOutcome::Closed,
+        Ok(_) => {}
+        Err(e)
+            if e.kind() == std::io::ErrorKind::WouldBlock
+                || e.kind() == std::io::ErrorKind::TimedOut =>
+        {
+            if line.is_empty() {
+                return ReadOutcome::Idle;
+            }
+            return ReadOutcome::Malformed("timed out mid-request".into());
+        }
+        Err(_) => return ReadOutcome::Closed,
+    }
+    let mut parts = line.split_whitespace();
+    let (Some(method), Some(target), Some(version)) =
+        (parts.next(), parts.next(), parts.next())
+    else {
+        return ReadOutcome::Malformed("bad request line".into());
+    };
+    if !version.starts_with("HTTP/1.") {
+        return ReadOutcome::Malformed("unsupported HTTP version".into());
+    }
+    let (path, query) = match target.split_once('?') {
+        Some((p, q)) => (p.to_string(), parse_query(q)),
+        None => (target.to_string(), HashMap::new()),
+    };
+
+    // Headers.
+    let mut content_length = 0usize;
+    let mut close = false;
+    let mut header_bytes = 0usize;
+    loop {
+        let mut h = String::new();
+        match reader.read_line(&mut h) {
+            Ok(0) => return ReadOutcome::Malformed("eof in headers".into()),
+            Ok(n) => header_bytes += n,
+            Err(_) => return ReadOutcome::Malformed("read error in headers".into()),
+        }
+        if header_bytes > MAX_HEADER_BYTES {
+            return ReadOutcome::Malformed("headers too large".into());
+        }
+        let h = h.trim_end();
+        if h.is_empty() {
+            break;
+        }
+        let Some((name, value)) = h.split_once(':') else {
+            return ReadOutcome::Malformed("bad header".into());
+        };
+        let name = name.trim().to_ascii_lowercase();
+        let value = value.trim();
+        if name == "content-length" {
+            match value.parse::<usize>() {
+                Ok(n) if n <= MAX_BODY_BYTES => content_length = n,
+                Ok(_) => return ReadOutcome::Malformed("body too large".into()),
+                Err(_) => return ReadOutcome::Malformed("bad content-length".into()),
+            }
+        } else if name == "connection" && value.eq_ignore_ascii_case("close") {
+            close = true;
+        }
+    }
+
+    // Body.
+    let mut body = vec![0u8; content_length];
+    if content_length > 0 && reader.read_exact(&mut body).is_err() {
+        return ReadOutcome::Malformed("short body".into());
+    }
+    ReadOutcome::Request(Request {
+        method: method.to_string(),
+        path,
+        query,
+        body,
+        close,
+    })
+}
+
+/// Decode `a=b&c=d` with minimal percent-decoding (`%XX` and `+`).
+fn parse_query(q: &str) -> HashMap<String, String> {
+    q.split('&')
+        .filter(|kv| !kv.is_empty())
+        .map(|kv| match kv.split_once('=') {
+            Some((k, v)) => (percent_decode(k), percent_decode(v)),
+            None => (percent_decode(kv), String::new()),
+        })
+        .collect()
+}
+
+fn percent_decode(s: &str) -> String {
+    let bytes = s.as_bytes();
+    let mut out = Vec::with_capacity(bytes.len());
+    let mut i = 0;
+    while i < bytes.len() {
+        match bytes[i] {
+            b'+' => {
+                out.push(b' ');
+                i += 1;
+            }
+            b'%' => {
+                let hex = bytes.get(i + 1..i + 3);
+                match hex.and_then(|h| u8::from_str_radix(std::str::from_utf8(h).ok()?, 16).ok())
+                {
+                    Some(b) => {
+                        out.push(b);
+                        i += 3;
+                    }
+                    None => {
+                        out.push(b'%');
+                        i += 1;
+                    }
+                }
+            }
+            b => {
+                out.push(b);
+                i += 1;
+            }
+        }
+    }
+    String::from_utf8_lossy(&out).into_owned()
+}
+
+/// Serialize a response.
+fn write_response(stream: &mut TcpStream, resp: &Response, keep_alive: bool) -> std::io::Result<()> {
+    let head = format!(
+        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: {}\r\n\r\n",
+        resp.status,
+        status_text(resp.status),
+        resp.content_type,
+        resp.body.len(),
+        if keep_alive { "keep-alive" } else { "close" },
+    );
+    // One buffer, one write: head and body in the same segment keeps the
+    // hot suggest path at a single syscall per response.
+    let mut frame = Vec::with_capacity(head.len() + resp.body.len());
+    frame.extend_from_slice(head.as_bytes());
+    frame.extend_from_slice(&resp.body);
+    stream.write_all(&frame)?;
+    stream.flush()
+}
+
+/// The request handler shared by all worker threads.
+pub type HttpHandler = Arc<dyn Fn(&Request) -> Response + Send + Sync>;
+
+/// A running HTTP server: accept thread + fixed worker pool.
+pub struct HttpServer {
+    addr: SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    accept_thread: JoinHandle<()>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl HttpServer {
+    /// Start serving `listener` with `workers` handler threads.
+    pub fn start(listener: TcpListener, workers: usize, handler: HttpHandler) -> Result<HttpServer> {
+        assert!(workers > 0);
+        let addr = listener.local_addr().context("reading bound address")?;
+        let shutdown = Arc::new(AtomicBool::new(false));
+
+        // Bounded hand-off: a connection flood blocks the accept thread
+        // (kernel backlog) instead of queueing unboundedly in memory.
+        let (tx, rx): (SyncSender<TcpStream>, Receiver<TcpStream>) = sync_channel(workers * 4);
+        let rx = Arc::new(Mutex::new(rx));
+
+        let mut pool = Vec::with_capacity(workers);
+        for _ in 0..workers {
+            let rx = rx.clone();
+            let handler = handler.clone();
+            let shutdown = shutdown.clone();
+            pool.push(std::thread::spawn(move || loop {
+                let stream = {
+                    let guard = match rx.lock() {
+                        Ok(g) => g,
+                        Err(p) => p.into_inner(),
+                    };
+                    guard.recv()
+                };
+                match stream {
+                    Ok(s) => handle_connection(s, &handler, &shutdown),
+                    Err(_) => return, // accept thread gone: shutdown
+                }
+            }));
+        }
+
+        let accept_thread = {
+            let shutdown = shutdown.clone();
+            std::thread::spawn(move || {
+                // `tx` lives in this thread; dropping it on exit releases
+                // the worker pool.
+                for conn in listener.incoming() {
+                    if shutdown.load(Ordering::SeqCst) {
+                        return;
+                    }
+                    let Ok(stream) = conn else { continue };
+                    let _ = stream.set_nodelay(true);
+                    let _ = stream.set_read_timeout(Some(READ_TIMEOUT));
+                    if tx.send(stream).is_err() {
+                        return;
+                    }
+                }
+            })
+        };
+
+        Ok(HttpServer {
+            addr,
+            shutdown,
+            accept_thread,
+            workers: pool,
+        })
+    }
+
+    /// The bound address (ephemeral ports resolved).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting, close workers, join all threads.
+    pub fn stop(self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        // Wake the accept thread out of its blocking accept.
+        let _ = TcpStream::connect(self.addr);
+        let _ = self.accept_thread.join();
+        for w in self.workers {
+            let _ = w.join();
+        }
+    }
+
+    /// Block until the server exits on its own (never, in practice) —
+    /// used by the `lasp serve` CLI to park the main thread.
+    pub fn join(self) {
+        let _ = self.accept_thread.join();
+        for w in self.workers {
+            let _ = w.join();
+        }
+    }
+}
+
+fn handle_connection(stream: TcpStream, handler: &HttpHandler, shutdown: &AtomicBool) {
+    let Ok(read_half) = stream.try_clone() else {
+        return;
+    };
+    let mut reader = BufReader::new(read_half);
+    let mut write_half = stream;
+    loop {
+        if shutdown.load(Ordering::SeqCst) {
+            return;
+        }
+        match read_request(&mut reader) {
+            ReadOutcome::Request(req) => {
+                let resp = handler(&req);
+                let keep = !req.close;
+                if write_response(&mut write_half, &resp, keep).is_err() || !keep {
+                    return;
+                }
+            }
+            ReadOutcome::Idle => continue,
+            ReadOutcome::Closed => return,
+            ReadOutcome::Malformed(msg) => {
+                let _ = write_response(&mut write_half, &Response::error(400, &msg), false);
+                return;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn echo_server() -> HttpServer {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let handler: HttpHandler = Arc::new(|req: &Request| {
+            let mut obj = std::collections::BTreeMap::new();
+            obj.insert("method".into(), Json::Str(req.method.clone()));
+            obj.insert("path".into(), Json::Str(req.path.clone()));
+            obj.insert(
+                "body_len".into(),
+                Json::Num(req.body.len() as f64),
+            );
+            if let Some(v) = req.query.get("q") {
+                obj.insert("q".into(), Json::Str(v.clone()));
+            }
+            Response::json(200, &Json::Obj(obj))
+        });
+        HttpServer::start(listener, 2, handler).unwrap()
+    }
+
+    fn raw_roundtrip(addr: SocketAddr, request: &str) -> String {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(request.as_bytes()).unwrap();
+        s.shutdown(std::net::Shutdown::Write).unwrap();
+        let mut out = String::new();
+        s.read_to_string(&mut out).unwrap();
+        out
+    }
+
+    #[test]
+    fn serves_get_with_query() {
+        let server = echo_server();
+        let resp = raw_roundtrip(
+            server.addr(),
+            "GET /hello?q=a%20b HTTP/1.1\r\nHost: x\r\nConnection: close\r\n\r\n",
+        );
+        assert!(resp.starts_with("HTTP/1.1 200 OK"), "{resp}");
+        assert!(resp.contains("\"path\":\"/hello\""), "{resp}");
+        assert!(resp.contains("\"q\":\"a b\""), "{resp}");
+        server.stop();
+    }
+
+    #[test]
+    fn serves_post_body_and_keep_alive() {
+        let server = echo_server();
+        let mut s = TcpStream::connect(server.addr()).unwrap();
+        for _ in 0..3 {
+            let body = "{\"x\":1}";
+            let req = format!(
+                "POST /v1/echo HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n{body}",
+                body.len()
+            );
+            s.write_all(req.as_bytes()).unwrap();
+            // Read the response head + body off the same connection
+            // (looping in case the head and body arrive in two segments).
+            let mut text = String::new();
+            let mut buf = [0u8; 4096];
+            while !text.contains("body_len") {
+                let n = s.read(&mut buf).unwrap();
+                assert!(n > 0, "connection closed early: {text}");
+                text.push_str(&String::from_utf8_lossy(&buf[..n]));
+            }
+            assert!(text.starts_with("HTTP/1.1 200 OK"), "{text}");
+            assert!(text.contains("\"body_len\":7"), "{text}");
+        }
+        server.stop();
+    }
+
+    #[test]
+    fn rejects_malformed_request_line() {
+        let server = echo_server();
+        let resp = raw_roundtrip(server.addr(), "NOT-HTTP\r\n\r\n");
+        assert!(resp.starts_with("HTTP/1.1 400"), "{resp}");
+        server.stop();
+    }
+
+    #[test]
+    fn rejects_oversized_body_declaration() {
+        let server = echo_server();
+        let resp = raw_roundtrip(
+            server.addr(),
+            "POST / HTTP/1.1\r\nContent-Length: 99999999\r\n\r\n",
+        );
+        assert!(resp.starts_with("HTTP/1.1 400"), "{resp}");
+        server.stop();
+    }
+
+    #[test]
+    fn percent_decoding() {
+        assert_eq!(percent_decode("a%20b+c"), "a b c");
+        assert_eq!(percent_decode("plain"), "plain");
+        assert_eq!(percent_decode("bad%zz"), "bad%zz");
+        assert_eq!(percent_decode("%41"), "A");
+    }
+}

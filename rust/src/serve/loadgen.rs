@@ -1,0 +1,348 @@
+//! Closed-loop load generator for a running `lasp serve` instance.
+//!
+//! Simulates a fleet of edge clients: each session asks the service for a
+//! configuration (`/v1/suggest`), runs it on a *local* device simulator
+//! ([`JetsonNano`]) at low fidelity, and reports the measurement back
+//! (`/v1/report`). Sessions are partitioned across client threads
+//! (round-robin), each thread reuses one keep-alive connection, and every
+//! HTTP round-trip is timed; the report prints throughput plus p50/p99
+//! latency — the numbers the service exists to keep flat under load.
+
+use crate::apps::{self, AppKind, AppModel};
+use crate::device::{Device, JetsonNano, PowerMode};
+use crate::util::json::Json;
+use crate::util::stats;
+use anyhow::{anyhow, Context, Result};
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+/// Load-generation parameters.
+#[derive(Debug, Clone)]
+pub struct LoadgenConfig {
+    /// Server address, e.g. `127.0.0.1:8787`.
+    pub addr: String,
+    /// Concurrent tuning sessions to maintain.
+    pub sessions: usize,
+    /// Total suggest+report round-trips across all sessions.
+    pub rounds: usize,
+    /// Client threads (each owns `sessions / threads` sessions).
+    pub threads: usize,
+    /// Applications to spread sessions over.
+    pub apps: Vec<AppKind>,
+    /// Objective weights sent with every request.
+    pub alpha: f64,
+    pub beta: f64,
+    /// Device-simulator fidelity and seed.
+    pub fidelity: f64,
+    pub seed: u64,
+}
+
+impl Default for LoadgenConfig {
+    fn default() -> Self {
+        LoadgenConfig {
+            addr: "127.0.0.1:8787".to_string(),
+            sessions: 128,
+            rounds: 12_000,
+            threads: 8,
+            apps: AppKind::all().to_vec(),
+            alpha: 0.8,
+            beta: 0.2,
+            fidelity: 0.15,
+            seed: 42,
+        }
+    }
+}
+
+/// Aggregated load-generation results.
+#[derive(Debug, Clone)]
+pub struct LoadgenReport {
+    /// Completed suggest+report round-trips.
+    pub rounds: usize,
+    pub sessions: usize,
+    /// Requests that failed (after one reconnect attempt) or returned an
+    /// unexpected status.
+    pub errors: usize,
+    pub elapsed_s: f64,
+    /// Round-trips (suggest+report pairs) per second.
+    pub round_trips_per_s: f64,
+    /// Per-HTTP-request latency quantiles, milliseconds.
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    pub mean_ms: f64,
+}
+
+impl LoadgenReport {
+    /// Print the human-readable summary the CLI shows.
+    pub fn print(&self) {
+        println!(
+            "loadgen: {} round-trips over {} sessions in {:.2}s ({} errors)",
+            self.rounds, self.sessions, self.elapsed_s, self.errors
+        );
+        println!(
+            "throughput: {:.0} round-trips/s ({:.0} req/s) | latency p50 {:.2}ms p99 {:.2}ms mean {:.2}ms",
+            self.round_trips_per_s,
+            self.round_trips_per_s * 2.0,
+            self.p50_ms,
+            self.p99_ms,
+            self.mean_ms
+        );
+    }
+}
+
+/// A tiny keep-alive HTTP/1.1 client (shared with the integration tests).
+pub struct HttpClient {
+    addr: String,
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl HttpClient {
+    pub fn connect(addr: &str) -> Result<HttpClient> {
+        let stream = TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
+        stream.set_nodelay(true).ok();
+        stream
+            .set_read_timeout(Some(Duration::from_secs(30)))
+            .ok();
+        let reader = BufReader::new(stream.try_clone().context("cloning stream")?);
+        Ok(HttpClient { addr: addr.to_string(), reader, writer: stream })
+    }
+
+    /// POST a JSON body; reconnects once on a broken connection.
+    pub fn post(&mut self, path: &str, body: &Json) -> Result<(u16, Json)> {
+        let payload = body.to_string();
+        match self.roundtrip("POST", path, Some(&payload)) {
+            Ok(r) => Ok(r),
+            Err(_) => {
+                *self = HttpClient::connect(&self.addr)?;
+                self.roundtrip("POST", path, Some(&payload))
+            }
+        }
+    }
+
+    /// GET a path (with query string); reconnects once on failure.
+    pub fn get(&mut self, path_and_query: &str) -> Result<(u16, Json)> {
+        match self.roundtrip("GET", path_and_query, None) {
+            Ok(r) => Ok(r),
+            Err(_) => {
+                *self = HttpClient::connect(&self.addr)?;
+                self.roundtrip("GET", path_and_query, None)
+            }
+        }
+    }
+
+    fn roundtrip(&mut self, method: &str, target: &str, body: Option<&str>) -> Result<(u16, Json)> {
+        let body = body.unwrap_or("");
+        let req = format!(
+            "{method} {target} HTTP/1.1\r\nHost: lasp\r\nContent-Type: application/json\r\nContent-Length: {}\r\n\r\n{body}",
+            body.len()
+        );
+        self.writer.write_all(req.as_bytes()).context("writing request")?;
+        self.writer.flush().ok();
+
+        // Status line.
+        let mut line = String::new();
+        self.reader.read_line(&mut line).context("reading status line")?;
+        if line.is_empty() {
+            return Err(anyhow!("connection closed"));
+        }
+        let status: u16 = line
+            .split_whitespace()
+            .nth(1)
+            .and_then(|s| s.parse().ok())
+            .ok_or_else(|| anyhow!("bad status line: {line:?}"))?;
+
+        // Headers.
+        let mut content_length = 0usize;
+        loop {
+            let mut h = String::new();
+            let n = self.reader.read_line(&mut h).context("reading header")?;
+            if n == 0 {
+                return Err(anyhow!("eof in headers"));
+            }
+            let h = h.trim_end();
+            if h.is_empty() {
+                break;
+            }
+            if let Some((name, value)) = h.split_once(':') {
+                if name.trim().eq_ignore_ascii_case("content-length") {
+                    content_length = value.trim().parse().unwrap_or(0);
+                }
+            }
+        }
+
+        // Body.
+        let mut raw = vec![0u8; content_length];
+        self.reader.read_exact(&mut raw).context("reading body")?;
+        let text = String::from_utf8_lossy(&raw);
+        // Non-JSON bodies (e.g. the Prometheus text of /metrics) come
+        // back as a raw string value.
+        let json = if text.trim().is_empty() {
+            Json::Null
+        } else {
+            Json::parse(&text).unwrap_or_else(|_| Json::Str(text.into_owned()))
+        };
+        Ok((status, json))
+    }
+}
+
+/// One simulated edge-client session.
+struct ClientSession {
+    client_id: String,
+    app_index: usize,
+    kind: AppKind,
+    mode: PowerMode,
+    device: JetsonNano,
+}
+
+fn request_body(cfg: &LoadgenConfig, s: &ClientSession) -> BTreeMap<String, Json> {
+    let mut obj = BTreeMap::new();
+    obj.insert("client_id".to_string(), Json::Str(s.client_id.clone()));
+    obj.insert("app".to_string(), Json::Str(s.kind.name().to_string()));
+    obj.insert(
+        "device".to_string(),
+        Json::Str(s.mode.name().to_ascii_lowercase()),
+    );
+    obj.insert("alpha".to_string(), Json::Num(cfg.alpha));
+    obj.insert("beta".to_string(), Json::Num(cfg.beta));
+    obj
+}
+
+/// Drive the configured load and aggregate the per-thread results.
+pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
+    if cfg.sessions == 0 || cfg.rounds == 0 || cfg.threads == 0 || cfg.apps.is_empty() {
+        return Err(anyhow!("loadgen: sessions/rounds/threads/apps must be non-empty"));
+    }
+    let t0 = Instant::now();
+    let threads = cfg.threads.min(cfg.sessions);
+    let mut handles = Vec::with_capacity(threads);
+    for t in 0..threads {
+        let cfg = cfg.clone();
+        // Rounds split evenly; the first threads absorb the remainder.
+        let my_rounds = cfg.rounds / threads + usize::from(t < cfg.rounds % threads);
+        handles.push(std::thread::spawn(move || worker(t, threads, my_rounds, &cfg)));
+    }
+
+    let mut latencies: Vec<f64> = Vec::with_capacity(cfg.rounds * 2);
+    let mut errors = 0usize;
+    let mut rounds_done = 0usize;
+    for h in handles {
+        let (lat, errs, rounds) = h
+            .join()
+            .map_err(|_| anyhow!("loadgen worker panicked"))??;
+        latencies.extend(lat);
+        errors += errs;
+        rounds_done += rounds;
+    }
+    let elapsed = t0.elapsed().as_secs_f64().max(1e-9);
+    Ok(LoadgenReport {
+        rounds: rounds_done,
+        sessions: cfg.sessions,
+        errors,
+        elapsed_s: elapsed,
+        round_trips_per_s: rounds_done as f64 / elapsed,
+        p50_ms: stats::quantile(&latencies, 0.5) * 1e3,
+        p99_ms: stats::quantile(&latencies, 0.99) * 1e3,
+        mean_ms: stats::mean(&latencies) * 1e3,
+    })
+}
+
+fn worker(
+    thread_id: usize,
+    threads: usize,
+    my_rounds: usize,
+    cfg: &LoadgenConfig,
+) -> Result<(Vec<f64>, usize, usize)> {
+    // This thread owns sessions thread_id, thread_id+threads, ...
+    let mut sessions: Vec<ClientSession> = (0..cfg.sessions)
+        .skip(thread_id)
+        .step_by(threads)
+        .map(|s| {
+            let app_index = s % cfg.apps.len();
+            let mode = if s % 2 == 0 { PowerMode::Maxn } else { PowerMode::FiveW };
+            ClientSession {
+                client_id: format!("lg-{s}"),
+                app_index,
+                kind: cfg.apps[app_index],
+                mode,
+                device: JetsonNano::new(mode, cfg.seed.wrapping_add(s as u64))
+                    .with_fidelity(cfg.fidelity),
+            }
+        })
+        .collect();
+    if sessions.is_empty() {
+        return Ok((vec![], 0, 0));
+    }
+    let models: Vec<Box<dyn AppModel>> = cfg.apps.iter().map(|&k| apps::build(k)).collect();
+    let mut client = HttpClient::connect(&cfg.addr)?;
+    let mut latencies = Vec::with_capacity(my_rounds * 2);
+    let mut errors = 0usize;
+    let mut rounds_done = 0usize;
+
+    for round in 0..my_rounds {
+        let idx = round % sessions.len();
+        let s = &mut sessions[idx];
+
+        // Suggest.
+        let body = Json::Obj(request_body(cfg, s));
+        let t0 = Instant::now();
+        let (status, resp) = match client.post("/v1/suggest", &body) {
+            Ok(r) => r,
+            Err(_) => {
+                errors += 1;
+                continue;
+            }
+        };
+        latencies.push(t0.elapsed().as_secs_f64());
+        if status != 200 {
+            errors += 1;
+            continue;
+        }
+        let Some(arm) = resp.get("arm").and_then(Json::as_usize) else {
+            errors += 1;
+            continue;
+        };
+
+        // Evaluate locally on the simulated device.
+        let workload = models[s.app_index].workload(arm, cfg.fidelity);
+        let m = s.device.run(&workload);
+
+        // Report.
+        let mut obj = request_body(cfg, s);
+        obj.insert("arm".to_string(), Json::Num(arm as f64));
+        obj.insert("time_s".to_string(), Json::Num(m.time_s));
+        obj.insert("power_w".to_string(), Json::Num(m.power_w));
+        let body = Json::Obj(obj);
+        let t0 = Instant::now();
+        match client.post("/v1/report", &body) {
+            Ok((202, _)) | Ok((200, _)) => {
+                latencies.push(t0.elapsed().as_secs_f64());
+                rounds_done += 1;
+            }
+            Ok(_) | Err(_) => {
+                errors += 1;
+            }
+        }
+    }
+    Ok((latencies, errors, rounds_done))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_coherent() {
+        let cfg = LoadgenConfig::default();
+        assert!(cfg.sessions >= 64, "acceptance needs >= 64 sessions");
+        assert!(cfg.rounds >= 10_000, "acceptance needs >= 10k round-trips");
+        assert_eq!(cfg.apps.len(), 4);
+    }
+
+    #[test]
+    fn rejects_empty_config() {
+        let cfg = LoadgenConfig { sessions: 0, ..Default::default() };
+        assert!(run(&cfg).is_err());
+    }
+}

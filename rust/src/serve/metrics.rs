@@ -1,0 +1,230 @@
+//! Service metrics: lock-free counters and fixed-bucket latency
+//! histograms, rendered in Prometheus text exposition format for
+//! `GET /metrics`. The paper's Fig 10 argument — the tuner itself must be
+//! lightweight — carries over to the service: observing a latency is two
+//! relaxed atomic adds, nothing allocates on the hot path.
+
+use crate::telemetry::ResourceReport;
+use std::fmt::Write as _;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+
+/// Histogram bucket upper bounds in microseconds (plus a +Inf bucket).
+pub const LATENCY_BOUNDS_US: [u64; 12] = [
+    50, 100, 250, 500, 1_000, 2_500, 5_000, 10_000, 25_000, 50_000, 100_000, 250_000,
+];
+
+/// A fixed-bucket latency histogram with atomic counters.
+pub struct Histogram {
+    /// One counter per bound, plus the +Inf bucket at the end.
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_us: AtomicU64,
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram {
+            buckets: (0..=LATENCY_BOUNDS_US.len()).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one observation.
+    pub fn observe(&self, d: Duration) {
+        let us = d.as_micros().min(u128::from(u64::MAX)) as u64;
+        let idx = LATENCY_BOUNDS_US
+            .iter()
+            .position(|&b| us <= b)
+            .unwrap_or(LATENCY_BOUNDS_US.len());
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+    }
+
+    /// Observations recorded.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Mean latency in microseconds.
+    pub fn mean_us(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum_us.load(Ordering::Relaxed) as f64 / n as f64
+        }
+    }
+
+    /// Approximate `q`-quantile in microseconds (linear interpolation
+    /// inside the winning bucket; the +Inf bucket reports its lower bound).
+    pub fn quantile_us(&self, q: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = (q.clamp(0.0, 1.0) * total as f64).ceil().max(1.0) as u64;
+        let mut cum = 0u64;
+        for (i, bucket) in self.buckets.iter().enumerate() {
+            let n = bucket.load(Ordering::Relaxed);
+            if cum + n >= target && n > 0 {
+                let lo = if i == 0 { 0 } else { LATENCY_BOUNDS_US[i - 1] };
+                let hi = LATENCY_BOUNDS_US.get(i).copied().unwrap_or(lo);
+                if hi <= lo {
+                    return lo as f64;
+                }
+                let frac = (target - cum) as f64 / n as f64;
+                return lo as f64 + frac * (hi - lo) as f64;
+            }
+            cum += n;
+        }
+        *LATENCY_BOUNDS_US.last().unwrap() as f64
+    }
+
+    /// Append Prometheus `_bucket`/`_sum`/`_count` lines.
+    pub fn render(&self, name: &str, out: &mut String) {
+        let _ = writeln!(out, "# TYPE {name} histogram");
+        let mut cum = 0u64;
+        for (i, bound) in LATENCY_BOUNDS_US.iter().enumerate() {
+            cum += self.buckets[i].load(Ordering::Relaxed);
+            let _ = writeln!(out, "{name}_bucket{{le=\"{bound}\"}} {cum}");
+        }
+        cum += self.buckets[LATENCY_BOUNDS_US.len()].load(Ordering::Relaxed);
+        let _ = writeln!(out, "{name}_bucket{{le=\"+Inf\"}} {cum}");
+        let _ = writeln!(out, "{name}_sum_us {}", self.sum_us.load(Ordering::Relaxed));
+        let _ = writeln!(out, "{name}_count {}", self.count());
+    }
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// All counters the service exports.
+pub struct Metrics {
+    started: Instant,
+    pub suggest_latency: Histogram,
+    pub report_latency: Histogram,
+    pub best_latency: Histogram,
+    pub http_requests: AtomicU64,
+    pub http_errors: AtomicU64,
+    pub suggests: AtomicU64,
+    pub reports_enqueued: AtomicU64,
+    pub reports_applied: AtomicU64,
+    pub reports_rejected: AtomicU64,
+    pub update_batches: AtomicU64,
+    pub queue_backpressure: AtomicU64,
+    pub sessions_created: AtomicU64,
+    pub checkpoints: AtomicU64,
+    pub checkpoint_sessions: AtomicU64,
+    pub sessions_restored: AtomicU64,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics {
+            started: Instant::now(),
+            suggest_latency: Histogram::new(),
+            report_latency: Histogram::new(),
+            best_latency: Histogram::new(),
+            http_requests: AtomicU64::new(0),
+            http_errors: AtomicU64::new(0),
+            suggests: AtomicU64::new(0),
+            reports_enqueued: AtomicU64::new(0),
+            reports_applied: AtomicU64::new(0),
+            reports_rejected: AtomicU64::new(0),
+            update_batches: AtomicU64::new(0),
+            queue_backpressure: AtomicU64::new(0),
+            sessions_created: AtomicU64::new(0),
+            checkpoints: AtomicU64::new(0),
+            checkpoint_sessions: AtomicU64::new(0),
+            sessions_restored: AtomicU64::new(0),
+        }
+    }
+
+    /// Seconds since service start.
+    pub fn uptime_s(&self) -> f64 {
+        self.started.elapsed().as_secs_f64()
+    }
+
+    /// Render the full `/metrics` page.
+    pub fn render(&self, sessions: usize, shards: usize, resources: &ResourceReport) -> String {
+        let mut out = String::with_capacity(2048);
+        let gauge = |out: &mut String, name: &str, v: f64| {
+            let _ = writeln!(out, "# TYPE {name} gauge\n{name} {v}");
+        };
+        let counter = |out: &mut String, name: &str, v: &AtomicU64| {
+            let _ = writeln!(out, "# TYPE {name} counter\n{name} {}", v.load(Ordering::Relaxed));
+        };
+        gauge(&mut out, "lasp_serve_uptime_seconds", self.uptime_s());
+        gauge(&mut out, "lasp_serve_sessions", sessions as f64);
+        gauge(&mut out, "lasp_serve_shards", shards as f64);
+        counter(&mut out, "lasp_serve_http_requests_total", &self.http_requests);
+        counter(&mut out, "lasp_serve_http_errors_total", &self.http_errors);
+        counter(&mut out, "lasp_serve_suggests_total", &self.suggests);
+        counter(&mut out, "lasp_serve_reports_enqueued_total", &self.reports_enqueued);
+        counter(&mut out, "lasp_serve_reports_applied_total", &self.reports_applied);
+        counter(&mut out, "lasp_serve_reports_rejected_total", &self.reports_rejected);
+        counter(&mut out, "lasp_serve_update_batches_total", &self.update_batches);
+        counter(&mut out, "lasp_serve_queue_backpressure_total", &self.queue_backpressure);
+        counter(&mut out, "lasp_serve_sessions_created_total", &self.sessions_created);
+        counter(&mut out, "lasp_serve_checkpoints_total", &self.checkpoints);
+        counter(&mut out, "lasp_serve_checkpoint_sessions_total", &self.checkpoint_sessions);
+        counter(&mut out, "lasp_serve_sessions_restored_total", &self.sessions_restored);
+        self.suggest_latency.render("lasp_serve_suggest_latency_us", &mut out);
+        self.report_latency.render("lasp_serve_report_latency_us", &mut out);
+        self.best_latency.render("lasp_serve_best_latency_us", &mut out);
+        resources.render_prometheus("lasp_serve_process", &mut out);
+        out
+    }
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_counts_and_quantiles() {
+        let h = Histogram::new();
+        for us in [40u64, 80, 80, 200, 600, 2_000, 400_000] {
+            h.observe(Duration::from_micros(us));
+        }
+        assert_eq!(h.count(), 7);
+        assert!(h.mean_us() > 0.0);
+        let p50 = h.quantile_us(0.5);
+        assert!(p50 >= 50.0 && p50 <= 250.0, "p50 {p50}");
+        let p99 = h.quantile_us(0.99);
+        assert!(p99 >= 250_000.0, "p99 {p99}");
+        assert!(h.quantile_us(0.0) >= 0.0);
+    }
+
+    #[test]
+    fn empty_histogram_is_quiet() {
+        let h = Histogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.mean_us(), 0.0);
+        assert_eq!(h.quantile_us(0.99), 0.0);
+    }
+
+    #[test]
+    fn render_is_prometheus_shaped() {
+        let m = Metrics::new();
+        m.http_requests.fetch_add(3, Ordering::Relaxed);
+        m.suggest_latency.observe(Duration::from_micros(120));
+        let page = m.render(5, 8, &ResourceReport::default());
+        assert!(page.contains("lasp_serve_http_requests_total 3"), "{page}");
+        assert!(page.contains("lasp_serve_sessions 5"), "{page}");
+        assert!(page.contains("lasp_serve_suggest_latency_us_bucket{le=\"250\"} 1"));
+        assert!(page.contains("lasp_serve_process_peak_rss_mib"));
+    }
+}

@@ -1,0 +1,42 @@
+//! LASP-as-a-service: a long-running online tuning daemon.
+//!
+//! The paper frames LASP as an *online* tuner — "online exploration and
+//! exploitation" that "adapts seamlessly to changing environments" — but
+//! the rest of this crate only exposes one-shot CLI campaigns and an
+//! in-process fleet simulation. This module turns the bandit engine into
+//! a service many edge clients can query concurrently, in the spirit of
+//! on-line autotuning frameworks (mARGOt) and MAB-driven edge decision
+//! services:
+//!
+//! * [`http`] — a dependency-free HTTP/1.1 + JSON server over
+//!   `std::net::TcpListener` with a fixed worker thread pool and bounded
+//!   hand-off (the [`crate::coordinator`] backpressure idiom);
+//! * [`store`] — the **sharded session store**: sessions keyed by
+//!   `(client_id, app, device, policy)` hash onto N shards, each shard
+//!   owning its bandit tuners behind a single lock, so the store scales
+//!   across cores without a global bottleneck;
+//! * [`batch`] — **batched reward ingestion**: `/v1/report` enqueues into
+//!   per-shard bounded queues drained by background updaters, decoupling
+//!   hot-path suggest latency from bandit updates;
+//! * [`checkpoint`] — periodic snapshots of every shard via
+//!   [`crate::bandit::persist`], with [`crate::bandit::persist::discounted`]
+//!   staleness decay on boot, so a restarted service resumes learned state;
+//! * [`metrics`] — latency histograms and counters for `GET /metrics`;
+//! * [`service`] — the endpoint router and server lifecycle
+//!   (`/v1/suggest`, `/v1/report`, `/v1/best`, `/v1/checkpoint`,
+//!   `/healthz`, `/metrics`);
+//! * [`loadgen`] — a closed-loop load generator (`lasp loadgen`) that
+//!   hammers a running server with concurrent sessions across all four
+//!   apps and reports throughput + p50/p99 latency.
+
+pub mod batch;
+pub mod checkpoint;
+pub mod http;
+pub mod loadgen;
+pub mod metrics;
+pub mod service;
+pub mod store;
+
+pub use loadgen::{HttpClient, LoadgenConfig, LoadgenReport};
+pub use service::{start, ServeConfig, ServerHandle, TuningService};
+pub use store::{PolicyKind, SessionKey};

@@ -1,0 +1,426 @@
+//! The tuning service proper: route handling over the [`super::http`]
+//! transport, wired to the sharded store, the batched ingest plane and the
+//! checkpointer.
+//!
+//! Endpoints:
+//!
+//! | method | path             | purpose                                      |
+//! |--------|------------------|----------------------------------------------|
+//! | POST   | `/v1/suggest`    | next configuration to evaluate (Eq. 2-3)     |
+//! | POST   | `/v1/report`     | enqueue a measured evaluation (batched)      |
+//! | GET    | `/v1/best`       | the session's tuned configuration (Eq. 4)    |
+//! | POST   | `/v1/checkpoint` | force a snapshot of every session            |
+//! | GET    | `/healthz`       | liveness + session count                     |
+//! | GET    | `/metrics`       | Prometheus counters, latency histograms,     |
+//! |        |                  | process [`ResourceReport`]                   |
+//!
+//! [`ResourceReport`]: crate::telemetry::ResourceReport
+
+use super::batch::{BatchIngest, Report};
+use super::checkpoint;
+use super::http::{HttpHandler, HttpServer, Request, Response};
+use super::metrics::Metrics;
+use super::store::{AppsCache, PolicyKind, SessionKey, ShardedStore};
+use crate::apps::AppKind;
+use crate::device::PowerMode;
+use crate::telemetry::ResourceTracker;
+use crate::util::json::Json;
+use anyhow::{anyhow, Context, Result};
+use std::collections::BTreeMap;
+use std::net::{SocketAddr, TcpListener};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Service configuration (see `config/` for the `[serve]` TOML section).
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Bind address, e.g. `127.0.0.1:8787` (`:0` for an ephemeral port).
+    pub addr: String,
+    /// HTTP worker threads.
+    pub workers: usize,
+    /// Session-store shards.
+    pub shards: usize,
+    /// Per-shard report queue capacity (backpressure bound).
+    pub queue_cap: usize,
+    /// Max reports applied per shard-lock acquisition.
+    pub max_batch: usize,
+    /// Directory for periodic session snapshots (None = stateless).
+    pub checkpoint_dir: Option<PathBuf>,
+    /// Period between automatic snapshots.
+    pub checkpoint_every: Duration,
+    /// Warm-start retention `∈ (0, 1]` applied to restored states.
+    pub warm_retain: f64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            addr: "127.0.0.1:8787".to_string(),
+            workers: 8,
+            shards: 8,
+            queue_cap: 4096,
+            max_batch: 128,
+            checkpoint_dir: None,
+            checkpoint_every: Duration::from_secs(30),
+            warm_retain: 0.5,
+        }
+    }
+}
+
+impl ServeConfig {
+    /// Sanity-check ranges (also delegated to by `LaspConfig::validate`).
+    pub fn validate(&self) -> Result<()> {
+        if self.workers == 0 || self.shards == 0 || self.queue_cap == 0 || self.max_batch == 0 {
+            return Err(anyhow!("serve: workers/shards/queue_cap/max_batch must be positive"));
+        }
+        if !(self.warm_retain > 0.0 && self.warm_retain <= 1.0) {
+            return Err(anyhow!("serve: warm_retain must lie in (0, 1]"));
+        }
+        if self.checkpoint_every.is_zero() {
+            return Err(anyhow!("serve: checkpoint_every must be positive"));
+        }
+        Ok(())
+    }
+}
+
+/// Shared state behind every worker thread.
+pub struct TuningService {
+    cfg: ServeConfig,
+    store: Arc<ShardedStore>,
+    apps: Arc<AppsCache>,
+    ingest: BatchIngest,
+    metrics: Arc<Metrics>,
+    tracker: Mutex<ResourceTracker>,
+}
+
+impl TuningService {
+    /// Route one request.
+    pub fn handle(&self, req: &Request) -> Response {
+        self.metrics.http_requests.fetch_add(1, Ordering::Relaxed);
+        let resp = match (req.method.as_str(), req.path.as_str()) {
+            ("POST", "/v1/suggest") => self.suggest(req),
+            ("POST", "/v1/report") => self.report(req),
+            ("GET", "/v1/best") => self.best(req),
+            ("POST", "/v1/checkpoint") => self.checkpoint_now(),
+            ("GET", "/healthz") => self.healthz(),
+            ("GET", "/metrics") => self.metrics_page(),
+            ("POST" | "GET", _) => Response::error(404, "no such endpoint"),
+            _ => Response::error(405, "method not allowed"),
+        };
+        if resp.status >= 400 {
+            self.metrics.http_errors.fetch_add(1, Ordering::Relaxed);
+        }
+        resp
+    }
+
+    /// Read the session identity (+ weights) from a request body or query.
+    fn parse_key(
+        &self,
+        get: impl Fn(&str) -> Option<String>,
+    ) -> Result<(SessionKey, f64, f64), String> {
+        let client_id = get("client_id").unwrap_or_default();
+        if client_id.is_empty() {
+            return Err("missing client_id".to_string());
+        }
+        let app: AppKind = get("app")
+            .ok_or_else(|| "missing app".to_string())?
+            .parse()
+            .map_err(|e| format!("{e:#}"))?;
+        let device: PowerMode = match get("device") {
+            Some(d) => d.parse().map_err(|e| format!("{e:#}"))?,
+            None => PowerMode::Maxn,
+        };
+        let k = self.apps.arms(app);
+        let policy: PolicyKind = match get("policy") {
+            Some(p) => p.parse().map_err(|e| format!("{e:#}"))?,
+            None => PolicyKind::default_for(k),
+        };
+        let parse_weight = |name: &str, default: f64| -> Result<f64, String> {
+            match get(name) {
+                None => Ok(default),
+                Some(s) => s.parse::<f64>().map_err(|_| format!("bad {name}")),
+            }
+        };
+        let alpha = parse_weight("alpha", 0.8)?;
+        let beta = parse_weight("beta", 0.2)?;
+        if !(0.0..=1.0).contains(&alpha) || !(0.0..=1.0).contains(&beta) || alpha + beta == 0.0 {
+            return Err("alpha/beta must lie in [0,1] with alpha+beta > 0".to_string());
+        }
+        Ok((SessionKey { client_id, app, device, policy }, alpha, beta))
+    }
+
+    fn body_getter(body: &Json) -> impl Fn(&str) -> Option<String> + '_ {
+        move |name: &str| {
+            body.get(name).and_then(|v| match v {
+                Json::Str(s) => Some(s.clone()),
+                Json::Num(n) => Some(format!("{n}")),
+                _ => None,
+            })
+        }
+    }
+
+    fn suggest(&self, req: &Request) -> Response {
+        let t0 = Instant::now();
+        let body = match req.json() {
+            Ok(b) => b,
+            Err(e) => return Response::error(400, &format!("bad JSON: {e}")),
+        };
+        let (key, alpha, beta) = match self.parse_key(Self::body_getter(&body)) {
+            Ok(x) => x,
+            Err(e) => return Response::error(400, &e),
+        };
+        let k = self.apps.arms(key.app);
+        let shard_i = self.store.shard_of(&key);
+        let (arm, total_pulls, created) = {
+            let mut shard = self.store.lock_shard(shard_i);
+            let (session, created) = match shard.get_or_create(&key, alpha, beta, k) {
+                Ok(x) => x,
+                Err(e) => return Response::error(500, &e),
+            };
+            session.suggests += 1;
+            let arm = session.tuner.select();
+            (arm, session.tuner.total_pulls(), created)
+        };
+        if created {
+            self.metrics.sessions_created.fetch_add(1, Ordering::Relaxed);
+        }
+        self.metrics.suggests.fetch_add(1, Ordering::Relaxed);
+        let mut obj = BTreeMap::new();
+        obj.insert("arm".to_string(), Json::Num(arm as f64));
+        obj.insert("config".to_string(), Json::Str(self.apps.describe(key.app, arm)));
+        obj.insert("shard".to_string(), Json::Num(shard_i as f64));
+        obj.insert("total_pulls".to_string(), Json::Num(total_pulls));
+        let resp = Response::json(200, &Json::Obj(obj));
+        self.metrics.suggest_latency.observe(t0.elapsed());
+        resp
+    }
+
+    fn report(&self, req: &Request) -> Response {
+        let t0 = Instant::now();
+        let body = match req.json() {
+            Ok(b) => b,
+            Err(e) => return Response::error(400, &format!("bad JSON: {e}")),
+        };
+        let (key, alpha, beta) = match self.parse_key(Self::body_getter(&body)) {
+            Ok(x) => x,
+            Err(e) => return Response::error(400, &e),
+        };
+        let arm = match body.get("arm").and_then(Json::as_f64) {
+            Some(a) if a >= 0.0 && a.fract() == 0.0 => a as usize,
+            _ => return Response::error(400, "missing/invalid arm"),
+        };
+        let (time_s, power_w) = match (
+            body.get("time_s").and_then(Json::as_f64),
+            body.get("power_w").and_then(Json::as_f64),
+        ) {
+            (Some(t), Some(p)) if t.is_finite() && t > 0.0 && p.is_finite() && p >= 0.0 => (t, p),
+            _ => return Response::error(400, "missing/invalid time_s or power_w"),
+        };
+        let shard_i = self.store.shard_of(&key);
+        let report = Report { key, alpha, beta, arm, time_s, power_w };
+        let resp = match self.ingest.enqueue(shard_i, report, &self.metrics) {
+            Ok(()) => {
+                self.metrics.reports_enqueued.fetch_add(1, Ordering::Relaxed);
+                let mut obj = BTreeMap::new();
+                obj.insert("queued".to_string(), Json::Bool(true));
+                obj.insert("shard".to_string(), Json::Num(shard_i as f64));
+                Response::json(202, &Json::Obj(obj))
+            }
+            Err(e) => Response::error(503, &e),
+        };
+        self.metrics.report_latency.observe(t0.elapsed());
+        resp
+    }
+
+    fn best(&self, req: &Request) -> Response {
+        let t0 = Instant::now();
+        let query = &req.query;
+        let (key, _, _) =
+            match self.parse_key(|name: &str| query.get(name).cloned()) {
+                Ok(x) => x,
+                Err(e) => return Response::error(400, &e),
+            };
+        let shard_i = self.store.shard_of(&key);
+        let shard = self.store.lock_shard(shard_i);
+        let Some(session) = shard.sessions.get(&key) else {
+            return Response::error(404, "unknown session");
+        };
+        let best = session.tuner.most_selected();
+        let mut obj = BTreeMap::new();
+        obj.insert("arm".to_string(), Json::Num(best as f64));
+        obj.insert("config".to_string(), Json::Str(self.apps.describe(key.app, best)));
+        obj.insert("pulls_of_best".to_string(), Json::Num(session.tuner.counts()[best]));
+        obj.insert("total_pulls".to_string(), Json::Num(session.tuner.total_pulls()));
+        obj.insert("suggests".to_string(), Json::Num(session.suggests as f64));
+        obj.insert("reports".to_string(), Json::Num(session.reports as f64));
+        obj.insert("policy".to_string(), Json::Str(session.tuner.name().to_string()));
+        if let Some((mean_t, mean_p)) = session.tuner.mean_of(best) {
+            obj.insert("mean_time_s".to_string(), Json::Num(mean_t));
+            obj.insert("mean_power_w".to_string(), Json::Num(mean_p));
+        }
+        drop(shard);
+        let resp = Response::json(200, &Json::Obj(obj));
+        self.metrics.best_latency.observe(t0.elapsed());
+        resp
+    }
+
+    fn checkpoint_now(&self) -> Response {
+        let Some(dir) = &self.cfg.checkpoint_dir else {
+            return Response::error(400, "no checkpoint_dir configured");
+        };
+        match checkpoint::snapshot(&self.store, dir) {
+            Ok(n) => {
+                self.metrics.checkpoints.fetch_add(1, Ordering::Relaxed);
+                self.metrics.checkpoint_sessions.fetch_add(n as u64, Ordering::Relaxed);
+                let mut obj = BTreeMap::new();
+                obj.insert("sessions".to_string(), Json::Num(n as f64));
+                Response::json(200, &Json::Obj(obj))
+            }
+            Err(e) => Response::error(500, &format!("{e:#}")),
+        }
+    }
+
+    fn healthz(&self) -> Response {
+        let mut obj = BTreeMap::new();
+        obj.insert("ok".to_string(), Json::Bool(true));
+        obj.insert("uptime_s".to_string(), Json::Num(self.metrics.uptime_s()));
+        obj.insert("sessions".to_string(), Json::Num(self.store.session_count() as f64));
+        obj.insert("shards".to_string(), Json::Num(self.store.num_shards() as f64));
+        Response::json(200, &Json::Obj(obj))
+    }
+
+    fn metrics_page(&self) -> Response {
+        let resources = {
+            let mut tracker = match self.tracker.lock() {
+                Ok(g) => g,
+                Err(p) => p.into_inner(),
+            };
+            tracker.sample();
+            tracker.report()
+        };
+        let body =
+            self.metrics
+                .render(self.store.session_count(), self.store.num_shards(), &resources);
+        Response::text(200, body)
+    }
+}
+
+/// A running server. Dropping the handle leaks the threads; call
+/// [`ServerHandle::shutdown`] for an orderly stop (drains report queues,
+/// writes a final checkpoint) or [`ServerHandle::wait`] to park forever.
+pub struct ServerHandle {
+    addr: SocketAddr,
+    http: HttpServer,
+    service: Arc<TuningService>,
+    stop_checkpointer: Arc<AtomicBool>,
+    checkpointer: Option<JoinHandle<()>>,
+    restored: usize,
+}
+
+impl ServerHandle {
+    /// The bound address (ephemeral ports resolved).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Sessions warm-started from the checkpoint directory at boot.
+    pub fn restored_sessions(&self) -> usize {
+        self.restored
+    }
+
+    /// Orderly shutdown: stop HTTP, drain report queues, final snapshot.
+    pub fn shutdown(self) -> Result<()> {
+        self.http.stop();
+        self.service.ingest.stop();
+        self.stop_checkpointer.store(true, Ordering::SeqCst);
+        if let Some(h) = self.checkpointer {
+            let _ = h.join();
+        }
+        if let Some(dir) = &self.service.cfg.checkpoint_dir {
+            checkpoint::snapshot(&self.service.store, dir)
+                .context("final shutdown checkpoint")?;
+        }
+        Ok(())
+    }
+
+    /// Block the calling thread for the life of the server (CLI mode).
+    pub fn wait(self) {
+        self.http.join();
+    }
+}
+
+/// Boot the service: restore checkpoints, start ingest, bind, serve.
+pub fn start(cfg: ServeConfig) -> Result<ServerHandle> {
+    cfg.validate()?;
+    let store = Arc::new(ShardedStore::new(cfg.shards));
+    let apps = Arc::new(AppsCache::new());
+    let metrics = Arc::new(Metrics::new());
+
+    let mut restored = 0;
+    if let Some(dir) = &cfg.checkpoint_dir {
+        restored = checkpoint::restore(&store, &apps, dir, cfg.warm_retain)?;
+        metrics.sessions_restored.fetch_add(restored as u64, Ordering::Relaxed);
+    }
+
+    let ingest = BatchIngest::start(
+        store.clone(),
+        apps.clone(),
+        metrics.clone(),
+        cfg.queue_cap,
+        cfg.max_batch,
+    );
+    let service = Arc::new(TuningService {
+        cfg: cfg.clone(),
+        store: store.clone(),
+        apps,
+        ingest,
+        metrics: metrics.clone(),
+        tracker: Mutex::new(ResourceTracker::start()),
+    });
+
+    let listener =
+        TcpListener::bind(&cfg.addr).with_context(|| format!("binding {}", cfg.addr))?;
+    let handler: HttpHandler = {
+        let service = service.clone();
+        Arc::new(move |req: &Request| service.handle(req))
+    };
+    let http = HttpServer::start(listener, cfg.workers, handler)?;
+    let addr = http.addr();
+
+    // Periodic checkpointer (only when a directory is configured).
+    let stop_checkpointer = Arc::new(AtomicBool::new(false));
+    let checkpointer = cfg.checkpoint_dir.clone().map(|dir| {
+        let store = store.clone();
+        let metrics = metrics.clone();
+        let stop = stop_checkpointer.clone();
+        let every = cfg.checkpoint_every;
+        std::thread::spawn(move || {
+            let mut last = Instant::now();
+            loop {
+                std::thread::sleep(Duration::from_millis(100));
+                if stop.load(Ordering::SeqCst) {
+                    return;
+                }
+                if last.elapsed() >= every {
+                    if let Ok(n) = checkpoint::snapshot(&store, &dir) {
+                        metrics.checkpoints.fetch_add(1, Ordering::Relaxed);
+                        metrics.checkpoint_sessions.fetch_add(n as u64, Ordering::Relaxed);
+                    }
+                    last = Instant::now();
+                }
+            }
+        })
+    });
+
+    Ok(ServerHandle {
+        addr,
+        http,
+        service,
+        stop_checkpointer,
+        checkpointer,
+        restored,
+    })
+}

@@ -1,0 +1,559 @@
+//! Sharded session store: the state plane of the tuning service.
+//!
+//! A *session* is one independent bandit-tuning campaign, keyed by
+//! `(client_id, app, device, policy)`. Sessions are partitioned across N
+//! shards by a **stable** 64-bit hash of the key (FNV-1a — `DefaultHasher`
+//! is randomized per process, which would scramble checkpoint/shard
+//! affinity across restarts). Each shard owns its sessions behind a single
+//! `Mutex`, so concurrent requests for different shards never contend and
+//! the store scales across cores without a global bottleneck; within a
+//! shard the critical section is one `select()` or one batched update
+//! drain (see [`super::batch`]).
+
+use crate::apps::{self, AppKind, AppModel};
+use crate::bandit::persist;
+use crate::bandit::reward::RewardState;
+use crate::bandit::{Policy, SlidingWindowUcb, SubsetTuner, ThompsonSampler, UcbTuner};
+use crate::device::PowerMode;
+use std::collections::HashMap;
+use std::sync::{Mutex, MutexGuard};
+
+/// Spaces larger than this default to [`SubsetTuner`] (a full UCB init
+/// sweep over Hypre's 92,160 arms would dwarf any realistic session).
+pub const SUBSET_THRESHOLD: usize = 4096;
+
+/// Candidate-subset size used for very large spaces.
+pub const SUBSET_ARMS: usize = 1024;
+
+/// Sliding-window length floor for `swucb` sessions.
+const SWUCB_MIN_WINDOW: usize = 512;
+
+/// The bandit policy driving a session.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PolicyKind {
+    /// LASP's UCB1 (the paper's Alg. 1).
+    Ucb,
+    /// Sliding-window UCB for drifting environments.
+    SwUcb,
+    /// Gaussian Thompson sampling.
+    Thompson,
+    /// UCB over a seeded candidate subset (very large spaces).
+    Subset,
+}
+
+impl PolicyKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            PolicyKind::Ucb => "ucb",
+            PolicyKind::SwUcb => "swucb",
+            PolicyKind::Thompson => "thompson",
+            PolicyKind::Subset => "subset",
+        }
+    }
+
+    /// Default policy for a `k`-arm space: plain UCB, or subset-UCB when
+    /// the init sweep alone would exceed any plausible session budget.
+    pub fn default_for(k: usize) -> PolicyKind {
+        if k > SUBSET_THRESHOLD {
+            PolicyKind::Subset
+        } else {
+            PolicyKind::Ucb
+        }
+    }
+}
+
+impl std::str::FromStr for PolicyKind {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "ucb" => Ok(PolicyKind::Ucb),
+            "swucb" | "sw-ucb" => Ok(PolicyKind::SwUcb),
+            "thompson" => Ok(PolicyKind::Thompson),
+            "subset" => Ok(PolicyKind::Subset),
+            other => Err(anyhow::anyhow!(
+                "unknown policy '{other}' (ucb|swucb|thompson|subset)"
+            )),
+        }
+    }
+}
+
+/// Identity of one tuning session.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct SessionKey {
+    pub client_id: String,
+    pub app: AppKind,
+    pub device: PowerMode,
+    pub policy: PolicyKind,
+}
+
+impl SessionKey {
+    /// Stable (process- and restart-invariant) FNV-1a hash of the key.
+    /// Drives shard placement, checkpoint file names, and the seeds of
+    /// stochastic policies, so it must never depend on process state.
+    pub fn hash64(&self) -> u64 {
+        const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+        const PRIME: u64 = 0x0000_0100_0000_01b3;
+        let mut h = OFFSET;
+        let mut eat = |bytes: &[u8]| {
+            for &b in bytes {
+                h ^= b as u64;
+                h = h.wrapping_mul(PRIME);
+            }
+        };
+        eat(self.client_id.as_bytes());
+        eat(b"\0");
+        eat(self.app.name().as_bytes());
+        eat(b"\0");
+        eat(self.device.name().as_bytes());
+        eat(b"\0");
+        eat(self.policy.name().as_bytes());
+        h
+    }
+}
+
+/// A session's bandit tuner. An enum (not `Box<dyn Policy>`) so the store
+/// can reject malformed client input — out-of-range or out-of-subset arms
+/// — as errors instead of panics, and can reach policy-specific state for
+/// checkpointing.
+pub enum Tuner {
+    Ucb(UcbTuner),
+    SwUcb(SlidingWindowUcb),
+    Thompson(ThompsonSampler),
+    Subset(SubsetTuner),
+}
+
+impl Tuner {
+    /// Construct a tuner, optionally warm-started from a checkpointed
+    /// reward state discounted by `retain` (see [`persist::discounted`]).
+    pub fn build(
+        kind: PolicyKind,
+        k: usize,
+        alpha: f64,
+        beta: f64,
+        seed: u64,
+        prior: Option<&RewardState>,
+        retain: f64,
+    ) -> Result<Tuner, String> {
+        if k == 0 {
+            return Err("empty parameter space".into());
+        }
+        if !(0.0..=1.0).contains(&alpha) || !(0.0..=1.0).contains(&beta) {
+            return Err(format!("alpha/beta out of [0,1]: {alpha}/{beta}"));
+        }
+        if !(retain > 0.0 && retain <= 1.0) {
+            return Err(format!("retain out of (0,1]: {retain}"));
+        }
+        match kind {
+            PolicyKind::Ucb => {
+                let mut t = UcbTuner::new(k, alpha, beta);
+                if let Some(p) = prior {
+                    if p.k() != k {
+                        return Err(format!("checkpoint has {} arms, space has {k}", p.k()));
+                    }
+                    t = t.with_state(persist::discounted(p, retain));
+                }
+                Ok(Tuner::Ucb(t))
+            }
+            PolicyKind::SwUcb => {
+                let window = (2 * k).max(SWUCB_MIN_WINDOW);
+                let mut t = SlidingWindowUcb::new(k, alpha, beta, window);
+                if let Some(p) = prior {
+                    if p.k() != k {
+                        return Err(format!("checkpoint has {} arms, space has {k}", p.k()));
+                    }
+                    t = t.with_prior(&persist::discounted(p, retain));
+                }
+                Ok(Tuner::SwUcb(t))
+            }
+            PolicyKind::Thompson => {
+                let mut t = ThompsonSampler::new(k, alpha, beta, seed);
+                if let Some(p) = prior {
+                    if p.k() != k {
+                        return Err(format!("checkpoint has {} arms, space has {k}", p.k()));
+                    }
+                    t = t.with_state(persist::discounted(p, retain));
+                }
+                Ok(Tuner::Thompson(t))
+            }
+            PolicyKind::Subset => {
+                let m = SUBSET_ARMS.min(k).max(2.min(k));
+                // The candidate draw is seeded by the session-key hash, so
+                // a restarted service regenerates the identical subset and
+                // a checkpointed subset-space state lines up position-wise.
+                let mut t = SubsetTuner::new(k, m, alpha, beta, seed);
+                if let Some(p) = prior {
+                    if p.k() != m {
+                        return Err(format!(
+                            "checkpoint subset has {} arms, expected {m}",
+                            p.k()
+                        ));
+                    }
+                    t = t.with_prior_state(persist::discounted(p, retain));
+                }
+                Ok(Tuner::Subset(t))
+            }
+        }
+    }
+
+    /// Arm count of the (full) space.
+    pub fn k(&self) -> usize {
+        match self {
+            Tuner::Ucb(t) => t.k(),
+            Tuner::SwUcb(t) => t.k(),
+            Tuner::Thompson(t) => t.k(),
+            Tuner::Subset(t) => t.k(),
+        }
+    }
+
+    /// Choose the next arm to evaluate.
+    pub fn select(&mut self) -> usize {
+        match self {
+            Tuner::Ucb(t) => t.select(),
+            Tuner::SwUcb(t) => t.select(),
+            Tuner::Thompson(t) => t.select(),
+            Tuner::Subset(t) => t.select(),
+        }
+    }
+
+    /// Apply one measured report. Unlike [`Policy::update`], malformed arms
+    /// (out of range, or outside a subset tuner's candidate set) are
+    /// rejected as errors — a network service must not panic on bad input.
+    pub fn observe(&mut self, arm: usize, time_s: f64, power_w: f64) -> Result<(), String> {
+        if arm >= self.k() {
+            return Err(format!("arm {arm} out of range (k={})", self.k()));
+        }
+        if !time_s.is_finite() || time_s <= 0.0 || !power_w.is_finite() || power_w < 0.0 {
+            return Err(format!("invalid measurement time={time_s} power={power_w}"));
+        }
+        match self {
+            Tuner::Ucb(t) => t.update(arm, time_s, power_w),
+            Tuner::SwUcb(t) => t.update(arm, time_s, power_w),
+            Tuner::Thompson(t) => t.update(arm, time_s, power_w),
+            Tuner::Subset(t) => {
+                if !t.contains_arm(arm) {
+                    return Err(format!("arm {arm} outside the candidate subset"));
+                }
+                t.update(arm, time_s, power_w);
+            }
+        }
+        Ok(())
+    }
+
+    /// Full-space pull counts.
+    pub fn counts(&self) -> &[f64] {
+        match self {
+            Tuner::Ucb(t) => t.counts(),
+            Tuner::SwUcb(t) => t.counts(),
+            Tuner::Thompson(t) => t.counts(),
+            Tuner::Subset(t) => t.counts(),
+        }
+    }
+
+    /// Eq. 4: the most frequently selected arm.
+    pub fn most_selected(&self) -> usize {
+        match self {
+            Tuner::Ucb(t) => t.most_selected(),
+            Tuner::SwUcb(t) => t.most_selected(),
+            Tuner::Thompson(t) => t.most_selected(),
+            Tuner::Subset(t) => t.most_selected(),
+        }
+    }
+
+    /// Total pulls observed.
+    pub fn total_pulls(&self) -> f64 {
+        match self {
+            Tuner::Ucb(t) => t.total_pulls(),
+            Tuner::SwUcb(t) => t.total_pulls(),
+            Tuner::Thompson(t) => t.total_pulls(),
+            Tuner::Subset(t) => t.total_pulls(),
+        }
+    }
+
+    /// Checkpointable sufficient statistics (subset tuners expose the
+    /// subset-space state; positions are subset indices).
+    pub fn reward_state(&self) -> Option<&RewardState> {
+        match self {
+            Tuner::Ucb(t) => t.reward_state(),
+            Tuner::SwUcb(t) => t.reward_state(),
+            Tuner::Thompson(t) => t.reward_state(),
+            Tuner::Subset(t) => t.reward_state(),
+        }
+    }
+
+    /// Mean observed (time, power) for a full-space arm, if it has been
+    /// pulled. Handles the subset tuner's index mapping.
+    pub fn mean_of(&self, arm: usize) -> Option<(f64, f64)> {
+        let (state, idx) = match self {
+            Tuner::Subset(t) => (t.reward_state()?, t.position_of(arm)?),
+            other => (other.reward_state()?, arm),
+        };
+        if idx >= state.k() || state.counts[idx] <= 0.0 {
+            return None;
+        }
+        Some((
+            state.tau_sum[idx] / state.counts[idx],
+            state.rho_sum[idx] / state.counts[idx],
+        ))
+    }
+
+    /// Policy name for reports.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Tuner::Ucb(t) => t.name(),
+            Tuner::SwUcb(t) => t.name(),
+            Tuner::Thompson(t) => t.name(),
+            Tuner::Subset(t) => t.name(),
+        }
+    }
+}
+
+/// One tuning session: key, weights, tuner, and traffic counters.
+pub struct Session {
+    pub key: SessionKey,
+    pub alpha: f64,
+    pub beta: f64,
+    pub tuner: Tuner,
+    /// Suggest requests served.
+    pub suggests: u64,
+    /// Reports applied.
+    pub reports: u64,
+}
+
+/// The sessions owned by one shard.
+#[derive(Default)]
+pub struct Shard {
+    pub sessions: HashMap<SessionKey, Session>,
+}
+
+impl Shard {
+    /// Fetch a session, creating a cold one on first contact. Returns the
+    /// session and whether it was created. A session's `alpha`/`beta` are
+    /// fixed at creation; later requests with different weights reuse the
+    /// existing tuner (re-keying by weights would fragment state).
+    pub fn get_or_create(
+        &mut self,
+        key: &SessionKey,
+        alpha: f64,
+        beta: f64,
+        k: usize,
+    ) -> Result<(&mut Session, bool), String> {
+        use std::collections::hash_map::Entry;
+        match self.sessions.entry(key.clone()) {
+            Entry::Occupied(e) => Ok((e.into_mut(), false)),
+            Entry::Vacant(v) => {
+                let tuner = Tuner::build(key.policy, k, alpha, beta, key.hash64(), None, 1.0)?;
+                let session = Session {
+                    key: key.clone(),
+                    alpha,
+                    beta,
+                    tuner,
+                    suggests: 0,
+                    reports: 0,
+                };
+                Ok((v.insert(session), true))
+            }
+        }
+    }
+}
+
+/// N shards of sessions, keyed by stable hash.
+pub struct ShardedStore {
+    shards: Vec<Mutex<Shard>>,
+}
+
+impl ShardedStore {
+    pub fn new(shards: usize) -> ShardedStore {
+        assert!(shards > 0, "need at least one shard");
+        ShardedStore {
+            shards: (0..shards).map(|_| Mutex::new(Shard::default())).collect(),
+        }
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// The shard index owning `key`.
+    pub fn shard_of(&self, key: &SessionKey) -> usize {
+        (key.hash64() % self.shards.len() as u64) as usize
+    }
+
+    /// Lock shard `i` (poisoned locks are recovered — a panicking request
+    /// handler must not take the whole shard down with it).
+    pub fn lock_shard(&self, i: usize) -> MutexGuard<'_, Shard> {
+        match self.shards[i].lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        }
+    }
+
+    /// Total sessions across all shards.
+    pub fn session_count(&self) -> usize {
+        (0..self.num_shards())
+            .map(|i| self.lock_shard(i).sessions.len())
+            .sum()
+    }
+
+    /// Insert a fully built session (checkpoint restore). Existing live
+    /// sessions win over checkpointed ones.
+    pub fn insert_session(&self, session: Session) {
+        let i = self.shard_of(&session.key);
+        let mut shard = self.lock_shard(i);
+        shard.sessions.entry(session.key.clone()).or_insert(session);
+    }
+}
+
+/// Immutable per-app lookups shared by every serve component: the four app
+/// models are built once, then only read (`AppModel` is `Send + Sync`).
+pub struct AppsCache {
+    models: Vec<Box<dyn AppModel>>,
+}
+
+impl AppsCache {
+    pub fn new() -> AppsCache {
+        AppsCache {
+            models: AppKind::all().iter().map(|&k| apps::build(k)).collect(),
+        }
+    }
+
+    fn idx(kind: AppKind) -> usize {
+        match kind {
+            AppKind::Lulesh => 0,
+            AppKind::Kripke => 1,
+            AppKind::Clomp => 2,
+            AppKind::Hypre => 3,
+        }
+    }
+
+    /// The app model.
+    pub fn model(&self, kind: AppKind) -> &dyn AppModel {
+        self.models[Self::idx(kind)].as_ref()
+    }
+
+    /// Arm count of the app's Table II space.
+    pub fn arms(&self, kind: AppKind) -> usize {
+        self.model(kind).space().len()
+    }
+
+    /// Human-readable rendering of configuration `arm`.
+    pub fn describe(&self, kind: AppKind, arm: usize) -> String {
+        self.model(kind).space().describe(arm)
+    }
+}
+
+impl Default for AppsCache {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(client: &str, app: AppKind, policy: PolicyKind) -> SessionKey {
+        SessionKey {
+            client_id: client.to_string(),
+            app,
+            device: PowerMode::Maxn,
+            policy,
+        }
+    }
+
+    #[test]
+    fn hash_is_stable_and_field_sensitive() {
+        let a = key("alice", AppKind::Clomp, PolicyKind::Ucb);
+        assert_eq!(a.hash64(), a.clone().hash64());
+        let b = key("alicf", AppKind::Clomp, PolicyKind::Ucb);
+        assert_ne!(a.hash64(), b.hash64());
+        let c = key("alice", AppKind::Kripke, PolicyKind::Ucb);
+        assert_ne!(a.hash64(), c.hash64());
+        let d = key("alice", AppKind::Clomp, PolicyKind::Thompson);
+        assert_ne!(a.hash64(), d.hash64());
+    }
+
+    #[test]
+    fn sessions_spread_across_shards() {
+        let store = ShardedStore::new(8);
+        let mut seen = std::collections::HashSet::new();
+        for i in 0..64 {
+            let k = key(&format!("client-{i}"), AppKind::Clomp, PolicyKind::Ucb);
+            seen.insert(store.shard_of(&k));
+        }
+        assert!(seen.len() >= 4, "only {} shards used", seen.len());
+    }
+
+    #[test]
+    fn get_or_create_then_select_and_observe() {
+        let store = ShardedStore::new(4);
+        let k = key("c1", AppKind::Clomp, PolicyKind::Ucb);
+        let i = store.shard_of(&k);
+        let mut shard = store.lock_shard(i);
+        let (s, created) = shard.get_or_create(&k, 0.8, 0.2, 125).unwrap();
+        assert!(created);
+        let arm = s.tuner.select();
+        assert!(arm < 125);
+        s.tuner.observe(arm, 1.0, 5.0).unwrap();
+        assert_eq!(s.tuner.total_pulls(), 1.0);
+        let (_, created_again) = shard.get_or_create(&k, 0.8, 0.2, 125).unwrap();
+        assert!(!created_again);
+    }
+
+    #[test]
+    fn observe_rejects_bad_input_without_panic() {
+        let mut t = Tuner::build(PolicyKind::Ucb, 8, 1.0, 0.0, 1, None, 1.0).unwrap();
+        assert!(t.observe(8, 1.0, 1.0).is_err());
+        assert!(t.observe(0, f64::NAN, 1.0).is_err());
+        assert!(t.observe(0, -1.0, 1.0).is_err());
+        assert!(t.observe(0, 1.0, -1.0).is_err());
+        assert!(t.observe(0, 1.0, 1.0).is_ok());
+    }
+
+    #[test]
+    fn subset_rejects_non_candidate_arms() {
+        let mut t =
+            Tuner::build(PolicyKind::Subset, 92_160, 1.0, 0.0, 99, None, 1.0).unwrap();
+        let arm = t.select();
+        assert!(t.observe(arm, 1.0, 1.0).is_ok());
+        // Find a non-candidate arm: with 1024 of 92160 chosen, scanning a
+        // few indices is guaranteed to hit one.
+        let miss = (0..92_160)
+            .find(|&a| t.observe(a, 1.0, 1.0).is_err())
+            .expect("some arm outside the subset");
+        assert!(miss < 92_160);
+    }
+
+    #[test]
+    fn default_policy_scales_with_space() {
+        assert_eq!(PolicyKind::default_for(216), PolicyKind::Ucb);
+        assert_eq!(PolicyKind::default_for(92_160), PolicyKind::Subset);
+    }
+
+    #[test]
+    fn warm_start_preserves_means() {
+        let mut state = RewardState::new(16);
+        for arm in 0..16 {
+            for _ in 0..10 {
+                state.observe(arm, 1.0 + arm as f64, 5.0);
+            }
+        }
+        let t = Tuner::build(PolicyKind::Ucb, 16, 1.0, 0.0, 7, Some(&state), 0.5).unwrap();
+        let (mt, _) = t.mean_of(3).unwrap();
+        assert!((mt - 4.0).abs() < 1e-9);
+        assert!(t.total_pulls() > 0.0);
+    }
+
+    #[test]
+    fn warm_start_arm_mismatch_is_error() {
+        let state = RewardState::new(8);
+        assert!(Tuner::build(PolicyKind::Ucb, 16, 1.0, 0.0, 7, Some(&state), 0.5).is_err());
+    }
+
+    #[test]
+    fn apps_cache_matches_table2() {
+        let cache = AppsCache::new();
+        assert_eq!(cache.arms(AppKind::Kripke), 216);
+        assert_eq!(cache.arms(AppKind::Hypre), 92_160);
+        assert!(!cache.describe(AppKind::Clomp, 0).is_empty());
+    }
+}

@@ -34,6 +34,20 @@ impl ResourceReport {
             100.0 * self.cpu_seconds / self.wall_seconds
         }
     }
+
+    /// Append Prometheus-style gauges for this report under `prefix`
+    /// (used by the serve layer's `GET /metrics`).
+    pub fn render_prometheus(&self, prefix: &str, out: &mut String) {
+        use std::fmt::Write as _;
+        let mut gauge = |name: &str, v: f64| {
+            let _ = writeln!(out, "# TYPE {prefix}_{name} gauge\n{prefix}_{name} {v}");
+        };
+        gauge("peak_rss_mib", self.peak_rss_mib);
+        gauge("mean_rss_mib", self.mean_rss_mib);
+        gauge("cpu_seconds", self.cpu_seconds);
+        gauge("wall_seconds", self.wall_seconds);
+        gauge("cpu_pct", self.cpu_pct());
+    }
 }
 
 /// Samples `/proc/self` while a tuner runs.
@@ -224,5 +238,21 @@ mod tests {
     fn cpu_pct_zero_without_time() {
         let r = ResourceReport::default();
         assert_eq!(r.cpu_pct(), 0.0);
+    }
+
+    #[test]
+    fn prometheus_render_emits_all_gauges() {
+        let r = ResourceReport {
+            peak_rss_mib: 3.5,
+            mean_rss_mib: 2.0,
+            cpu_seconds: 1.25,
+            wall_seconds: 2.5,
+            samples: 10,
+        };
+        let mut out = String::new();
+        r.render_prometheus("proc", &mut out);
+        assert!(out.contains("proc_peak_rss_mib 3.5"), "{out}");
+        assert!(out.contains("proc_cpu_pct 50"), "{out}");
+        assert!(out.contains("# TYPE proc_wall_seconds gauge"), "{out}");
     }
 }

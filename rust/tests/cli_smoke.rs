@@ -12,7 +12,9 @@ fn help_lists_commands() {
     let out = lasp_bin().arg("help").output().unwrap();
     assert!(out.status.success());
     let text = String::from_utf8_lossy(&out.stdout);
-    for cmd in ["tune", "fleet", "compare", "experiment", "spaces", "devices"] {
+    for cmd in [
+        "tune", "fleet", "serve", "loadgen", "compare", "experiment", "spaces", "devices",
+    ] {
         assert!(text.contains(cmd), "help missing '{cmd}'");
     }
 }
@@ -25,10 +27,14 @@ fn no_args_prints_usage() {
 }
 
 #[test]
-fn unknown_command_fails() {
+fn unknown_command_fails_with_usage() {
     let out = lasp_bin().arg("frobnicate").output().unwrap();
     assert!(!out.status.success());
-    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown command"));
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("unknown command"), "{err}");
+    // Not an opaque error: the full usage text rides along.
+    assert!(err.contains("USAGE"), "{err}");
+    assert!(err.contains("serve"), "{err}");
 }
 
 #[test]

@@ -1,0 +1,304 @@
+//! Serve-layer integration: boot the tuning service on an ephemeral port,
+//! drive mixed suggest/report traffic from many client threads, restart
+//! the server from its checkpoint directory, and assert the learned
+//! bandit state (pull counts / per-arm means) survived.
+
+use lasp::serve::{start, HttpClient, ServeConfig};
+use lasp::util::json::Json;
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+fn test_dir(tag: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("lasp-serve-it-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn cfg_with_dir(dir: &std::path::Path) -> ServeConfig {
+    ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        // One worker per concurrent keep-alive client (8 traffic threads):
+        // the fixed pool bounds concurrent connections by design.
+        workers: 8,
+        shards: 4,
+        queue_cap: 1024,
+        max_batch: 64,
+        checkpoint_dir: Some(dir.to_path_buf()),
+        // Effectively manual: the test drives snapshots via /v1/checkpoint
+        // and the final shutdown snapshot.
+        checkpoint_every: Duration::from_secs(3600),
+        warm_retain: 0.5,
+    }
+}
+
+fn body(client: &str, app: &str, extra: &[(&str, Json)]) -> Json {
+    let mut obj = BTreeMap::new();
+    obj.insert("client_id".to_string(), Json::Str(client.to_string()));
+    obj.insert("app".to_string(), Json::Str(app.to_string()));
+    obj.insert("device".to_string(), Json::Str("maxn".to_string()));
+    obj.insert("alpha".to_string(), Json::Num(1.0));
+    obj.insert("beta".to_string(), Json::Num(0.0));
+    for (k, v) in extra {
+        obj.insert((*k).to_string(), v.clone());
+    }
+    Json::Obj(obj)
+}
+
+/// Synthetic measurement: arm-determined, so the bandit sees a stationary
+/// landscape without needing the device simulator in the loop.
+fn fake_time(arm: usize) -> f64 {
+    0.5 + (arm % 17) as f64 * 0.15
+}
+
+fn best_query(client: &str, app: &str) -> String {
+    format!("/v1/best?client_id={client}&app={app}&device=maxn&alpha=1.0&beta=0.0")
+}
+
+fn wait_until<F: FnMut() -> bool>(mut cond: F, timeout: Duration) -> bool {
+    let deadline = Instant::now() + timeout;
+    while Instant::now() < deadline {
+        if cond() {
+            return true;
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    cond()
+}
+
+#[test]
+fn mixed_traffic_checkpoint_restart_preserves_state() {
+    let dir = test_dir("restart");
+    let handle = start(cfg_with_dir(&dir)).unwrap();
+    let addr = handle.addr().to_string();
+
+    // Drive mixed suggest/report traffic from many concurrent clients:
+    // 8 threads x 40 rounds across three apps.
+    let apps = ["clomp", "kripke", "lulesh"];
+    let rounds_per_client = 40usize;
+    let mut workers = vec![];
+    for t in 0..8usize {
+        let addr = addr.clone();
+        let app = apps[t % apps.len()].to_string();
+        workers.push(std::thread::spawn(move || {
+            let mut client = HttpClient::connect(&addr).unwrap();
+            let client_id = format!("it-{t}");
+            for _ in 0..rounds_per_client {
+                let (status, resp) =
+                    client.post("/v1/suggest", &body(&client_id, &app, &[])).unwrap();
+                assert_eq!(status, 200, "suggest failed: {resp:?}");
+                let arm = resp.get("arm").and_then(Json::as_usize).unwrap();
+                let (status, resp) = client
+                    .post(
+                        "/v1/report",
+                        &body(
+                            &client_id,
+                            &app,
+                            &[
+                                ("arm", Json::Num(arm as f64)),
+                                ("time_s", Json::Num(fake_time(arm))),
+                                ("power_w", Json::Num(5.0)),
+                            ],
+                        ),
+                    )
+                    .unwrap();
+                assert_eq!(status, 202, "report not queued: {resp:?}");
+            }
+        }));
+    }
+    for w in workers {
+        w.join().unwrap();
+    }
+
+    let mut probe = HttpClient::connect(&addr).unwrap();
+
+    // Health and metrics surfaces are alive and consistent.
+    let (status, health) = probe.get("/healthz").unwrap();
+    assert_eq!(status, 200);
+    assert_eq!(health.get("ok"), Some(&Json::Bool(true)));
+    assert_eq!(health.get("sessions").and_then(Json::as_usize), Some(8));
+
+    // Reports are applied asynchronously; wait for every shard's batched
+    // updater to drain before snapshotting expectations.
+    let expected_pulls = rounds_per_client as f64;
+    for t in 0..8usize {
+        let app = apps[t % apps.len()];
+        let q = best_query(&format!("it-{t}"), app);
+        assert!(
+            wait_until(
+                || {
+                    let (s, b) = probe.get(&q).unwrap();
+                    s == 200
+                        && b.get("total_pulls").and_then(Json::as_f64) == Some(expected_pulls)
+                },
+                Duration::from_secs(10)
+            ),
+            "reports never fully applied for it-{t}"
+        );
+    }
+
+    // The metrics surface is alive and counting.
+    let (status, metrics_page) = probe.get("/metrics").unwrap();
+    assert_eq!(status, 200);
+    let metrics_text = metrics_page.as_str().unwrap_or_default().to_string();
+    assert!(
+        metrics_text.contains("lasp_serve_reports_applied_total 320"),
+        "{metrics_text}"
+    );
+    assert!(metrics_text.contains("lasp_serve_suggest_latency_us_count"), "{metrics_text}");
+    assert!(metrics_text.contains("lasp_serve_process_cpu_seconds"), "{metrics_text}");
+
+    // Record the pre-restart answer for every client.
+    let mut before = BTreeMap::new();
+    for t in 0..8usize {
+        let app = apps[t % apps.len()];
+        let (status, b) = probe.get(&best_query(&format!("it-{t}"), app)).unwrap();
+        assert_eq!(status, 200);
+        let arm = b.get("arm").and_then(Json::as_usize).unwrap();
+        let pulls = b.get("total_pulls").and_then(Json::as_f64).unwrap();
+        let mean = b.get("mean_time_s").and_then(Json::as_f64);
+        assert!(pulls >= expected_pulls, "pulls {pulls}");
+        before.insert(t, (arm, mean));
+    }
+
+    // Snapshot explicitly, then shut down (which snapshots again).
+    let (status, snap) = probe.post("/v1/checkpoint", &Json::Obj(BTreeMap::new())).unwrap();
+    assert_eq!(status, 200, "{snap:?}");
+    assert_eq!(snap.get("sessions").and_then(Json::as_usize), Some(8));
+    drop(probe);
+    handle.shutdown().unwrap();
+
+    // Restart from the same directory (new ephemeral port).
+    let handle2 = start(cfg_with_dir(&dir)).unwrap();
+    assert_eq!(handle2.restored_sessions(), 8);
+    let addr2 = handle2.addr().to_string();
+    let mut probe2 = HttpClient::connect(&addr2).unwrap();
+
+    for t in 0..8usize {
+        let app = apps[t % apps.len()];
+        let (status, b) = probe2.get(&best_query(&format!("it-{t}"), app)).unwrap();
+        assert_eq!(status, 200, "session it-{t} lost across restart");
+        let (arm_before, mean_before) = before[&t];
+        // Discounting shrinks counts but preserves per-arm means, so the
+        // Eq. 4 answer and its observed mean survive the restart.
+        assert_eq!(
+            b.get("arm").and_then(Json::as_usize),
+            Some(arm_before),
+            "tuned arm changed across restart for it-{t}"
+        );
+        let pulls = b.get("total_pulls").and_then(Json::as_f64).unwrap();
+        assert!(pulls > 0.0, "no retained pulls for it-{t}");
+        // Discounting never grows counts (per-arm floor is 1 pull).
+        assert!(
+            pulls <= expected_pulls,
+            "retention grew counts: {pulls} vs {expected_pulls}"
+        );
+        if let (Some(mb), Some(ma)) = (mean_before, b.get("mean_time_s").and_then(Json::as_f64)) {
+            assert!((mb - ma).abs() < 1e-9, "mean drifted: {mb} -> {ma}");
+        }
+        // And the session keeps learning after the restart.
+        let (status, resp) = probe2.post("/v1/suggest", &body(&format!("it-{t}"), app, &[])).unwrap();
+        assert_eq!(status, 200, "{resp:?}");
+    }
+
+    handle2.shutdown().unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn api_error_paths() {
+    let handle = start(ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        workers: 2,
+        shards: 2,
+        checkpoint_dir: None,
+        ..Default::default()
+    })
+    .unwrap();
+    let addr = handle.addr().to_string();
+    let mut client = HttpClient::connect(&addr).unwrap();
+
+    // Unknown session -> 404.
+    let (status, _) = client.get(&best_query("nobody", "clomp")).unwrap();
+    assert_eq!(status, 404);
+
+    // Malformed JSON -> 400.
+    let (status, _) = client.post("/v1/suggest", &Json::Str("not an object".into())).unwrap();
+    assert_eq!(status, 400);
+
+    // Missing fields -> 400.
+    let (status, _) = client
+        .post("/v1/suggest", &Json::Obj(BTreeMap::new()))
+        .unwrap();
+    assert_eq!(status, 400);
+
+    // Bad app -> 400.
+    let (status, _) = client.post("/v1/suggest", &body("c", "doom", &[])).unwrap();
+    assert_eq!(status, 400);
+
+    // Report without measurement -> 400.
+    let (status, _) = client.post("/v1/report", &body("c", "clomp", &[])).unwrap();
+    assert_eq!(status, 400);
+
+    // Checkpoint without a configured dir -> 400.
+    let (status, _) = client.post("/v1/checkpoint", &Json::Obj(BTreeMap::new())).unwrap();
+    assert_eq!(status, 400);
+
+    // Unknown endpoint -> 404.
+    let (status, _) = client.post("/v1/nope", &Json::Obj(BTreeMap::new())).unwrap();
+    assert_eq!(status, 404);
+
+    handle.shutdown().unwrap();
+}
+
+#[test]
+fn subset_policy_serves_hypre_scale() {
+    // The 92,160-arm Hypre space defaults to the subset policy; suggests
+    // must stay inside the candidate set and reports must apply.
+    let handle = start(ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        workers: 2,
+        shards: 2,
+        checkpoint_dir: None,
+        ..Default::default()
+    })
+    .unwrap();
+    let addr = handle.addr().to_string();
+    let mut client = HttpClient::connect(&addr).unwrap();
+    for _ in 0..30 {
+        let (status, resp) = client.post("/v1/suggest", &body("hy", "hypre", &[])).unwrap();
+        assert_eq!(status, 200);
+        let arm = resp.get("arm").and_then(Json::as_usize).unwrap();
+        assert!(arm < 92_160);
+        let (status, _) = client
+            .post(
+                "/v1/report",
+                &body(
+                    "hy",
+                    "hypre",
+                    &[
+                        ("arm", Json::Num(arm as f64)),
+                        ("time_s", Json::Num(fake_time(arm))),
+                        ("power_w", Json::Num(5.0)),
+                    ],
+                ),
+            )
+            .unwrap();
+        assert_eq!(status, 202);
+    }
+    let mut probe = HttpClient::connect(&addr).unwrap();
+    assert!(
+        wait_until(
+            || {
+                let (s, b) = probe.get(&best_query("hy", "hypre")).unwrap();
+                s == 200 && b.get("total_pulls").and_then(Json::as_f64) == Some(30.0)
+            },
+            Duration::from_secs(10)
+        ),
+        "hypre reports never applied"
+    );
+    let (status, b) = probe.get(&best_query("hy", "hypre")).unwrap();
+    assert_eq!(status, 200);
+    assert_eq!(b.get("policy").and_then(Json::as_str), Some("lasp-ucb1-subset"));
+    handle.shutdown().unwrap();
+}

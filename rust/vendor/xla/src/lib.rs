@@ -1,0 +1,168 @@
+//! Offline stub of the `xla-rs` PJRT binding surface used by
+//! `rust/src/runtime/engine.rs`.
+//!
+//! This build has no network access and no PJRT shared library, so the
+//! real `xla` crate cannot be fetched or linked. This stub provides the
+//! exact types and signatures the runtime layer compiles against;
+//! everything fails cleanly at runtime with [`Error::Unavailable`], which
+//! the engine surfaces as "PJRT backend unavailable" — the scalar backend
+//! (the default) is unaffected. Swap this path dependency for the real
+//! `xla` crate to enable the AOT artifact path.
+
+use std::path::Path;
+
+/// Error type matching the `{e:?}` formatting the engine layer uses.
+#[derive(Debug)]
+pub enum Error {
+    /// The stub is in place of the real PJRT binding.
+    Unavailable(&'static str),
+}
+
+fn unavailable<T>() -> Result<T, Error> {
+    Err(Error::Unavailable(
+        "xla/PJRT is stubbed in this offline build; link the real xla crate to enable it",
+    ))
+}
+
+/// Marker for element types the literal accessors accept.
+pub trait NativeType: Copy + 'static {}
+impl NativeType for f32 {}
+impl NativeType for f64 {}
+impl NativeType for i32 {}
+impl NativeType for i64 {}
+
+/// Host-side literal value (stub: shape-only placeholder).
+#[derive(Debug, Clone, Default)]
+pub struct Literal {
+    _priv: (),
+}
+
+impl Literal {
+    /// Rank-1 literal from a host slice.
+    pub fn vec1<T: NativeType>(_values: &[T]) -> Literal {
+        Literal { _priv: () }
+    }
+
+    /// Rank-0 literal.
+    pub fn scalar<T: NativeType>(_value: T) -> Literal {
+        Literal { _priv: () }
+    }
+
+    /// Reshape to the given dimensions.
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal, Error> {
+        unavailable()
+    }
+
+    /// Destructure a tuple literal.
+    pub fn to_tuple(self) -> Result<Vec<Literal>, Error> {
+        unavailable()
+    }
+
+    /// Copy out as a host vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>, Error> {
+        unavailable()
+    }
+
+    /// First element of the flattened literal.
+    pub fn get_first_element<T: NativeType>(&self) -> Result<T, Error> {
+        unavailable()
+    }
+}
+
+/// Parsed HLO module (stub).
+#[derive(Debug)]
+pub struct HloModuleProto {
+    _priv: (),
+}
+
+impl HloModuleProto {
+    /// Parse an HLO text file.
+    pub fn from_text_file(_path: &Path) -> Result<HloModuleProto, Error> {
+        unavailable()
+    }
+}
+
+/// An XLA computation built from a parsed module.
+#[derive(Debug)]
+pub struct XlaComputation {
+    _priv: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _priv: () }
+    }
+}
+
+/// Device-side buffer handle returned by an execution.
+#[derive(Debug)]
+pub struct PjRtBuffer {
+    _priv: (),
+}
+
+impl PjRtBuffer {
+    /// Copy the buffer back to a host literal.
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        unavailable()
+    }
+}
+
+/// Compiled executable handle.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {
+    _priv: (),
+}
+
+impl PjRtLoadedExecutable {
+    /// Execute with the given argument literals.
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        unavailable()
+    }
+}
+
+/// PJRT client handle.
+#[derive(Debug)]
+pub struct PjRtClient {
+    _priv: (),
+}
+
+impl PjRtClient {
+    /// Construct the CPU client. Always fails in the stub — callers
+    /// degrade to their scalar fallback.
+    pub fn cpu() -> Result<PjRtClient, Error> {
+        unavailable()
+    }
+
+    /// Platform string for diagnostics.
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    /// Compile a computation.
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        unavailable()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn everything_fails_cleanly() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file(Path::new("/nope")).is_err());
+        let lit = Literal::vec1(&[1.0f32, 2.0]);
+        assert!(lit.to_vec::<f32>().is_err());
+        assert!(lit.get_first_element::<i32>().is_err());
+        assert!(lit.reshape(&[2, 1]).is_err());
+        assert!(Literal::scalar(1.0f32).to_tuple().is_err());
+    }
+
+    #[test]
+    fn error_is_debug_formattable() {
+        let e = PjRtClient::cpu().unwrap_err();
+        let msg = format!("{e:?}");
+        assert!(msg.contains("stubbed"), "{msg}");
+    }
+}
