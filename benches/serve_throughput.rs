@@ -1,7 +1,12 @@
 //! Serve-layer throughput bench: boots the tuning service in-process on an
 //! ephemeral port and measures (a) single-connection suggest round-trip
-//! latency through the real HTTP stack, and (b) closed-loop loadgen
-//! throughput with concurrent sessions across all four apps.
+//! latency through the real HTTP stack, (b) the steady-state allocation
+//! behaviour of the HTTP+JSON layers (must be zero), and (c) closed-loop
+//! loadgen throughput with concurrent sessions across all four apps.
+//!
+//! Emits `BENCH_serve.json` (path override: `LASP_BENCH_OUT`) so the perf
+//! trajectory is tracked PR-over-PR; `LASP_BENCH_QUICK=1` runs a short
+//! smoke variant for CI.
 
 #[path = "common.rs"]
 mod common;
@@ -9,6 +14,7 @@ mod common;
 use lasp::serve::{loadgen, LoadgenConfig, ServeConfig};
 use lasp::util::json::Json;
 use std::collections::BTreeMap;
+use std::sync::atomic::Ordering;
 use std::time::Duration;
 
 fn suggest_body(client: &str, app: &str) -> Json {
@@ -20,6 +26,10 @@ fn suggest_body(client: &str, app: &str) -> Json {
 }
 
 fn main() {
+    let quick = std::env::var("LASP_BENCH_QUICK").map(|v| v == "1").unwrap_or(false);
+    let (latency_iters, lg_rounds, lg_sessions, lg_threads) =
+        if quick { (50, 800, 32, 4) } else { (200, 4000, 64, 4) };
+
     let handle = lasp::serve::start(ServeConfig {
         addr: "127.0.0.1:0".to_string(),
         workers: 8,
@@ -30,23 +40,39 @@ fn main() {
     })
     .expect("boot serve");
     let addr = handle.addr().to_string();
+    let stats = handle.transport_stats();
 
     println!("## single-connection suggest round-trip (real HTTP stack)");
     let mut client = lasp::serve::HttpClient::connect(&addr).expect("connect");
     for app in ["clomp", "kripke", "lulesh", "hypre"] {
-        let body = suggest_body("bench", app);
-        common::bench(&format!("http suggest {app}"), 200, || {
-            let (status, _) = client.post("/v1/suggest", &body).expect("suggest");
+        let body = suggest_body("bench", app).to_string();
+        common::bench(&format!("http suggest {app}"), latency_iters, || {
+            let status = client.post_slice("/v1/suggest", body.as_bytes()).expect("suggest");
             assert_eq!(status, 200);
         });
     }
 
+    // Steady-state allocation proxy: after the warmup above, a fixed
+    // request stream must not grow any HTTP/JSON buffer.
+    let alloc_probe_requests = 200u64;
+    let body = suggest_body("bench", "clomp").to_string();
+    let allocs_before = stats.alloc_events.load(Ordering::Relaxed);
+    for _ in 0..alloc_probe_requests {
+        let status = client.post_slice("/v1/suggest", body.as_bytes()).expect("suggest");
+        assert_eq!(status, 200);
+    }
+    let steady_allocs = stats.alloc_events.load(Ordering::Relaxed) - allocs_before;
+    let allocs_per_request = steady_allocs as f64 / alloc_probe_requests as f64;
+    println!(
+        "\n## steady-state alloc proxy: {steady_allocs} buffer-growth events / {alloc_probe_requests} requests ({allocs_per_request:.4}/req)"
+    );
+
     println!("\n## closed-loop loadgen (concurrent sessions, all apps)");
     let report = loadgen::run(&LoadgenConfig {
         addr: addr.clone(),
-        sessions: 64,
-        rounds: 4000,
-        threads: 4,
+        sessions: lg_sessions,
+        rounds: lg_rounds,
+        threads: lg_threads,
         ..Default::default()
     })
     .expect("loadgen");
@@ -54,8 +80,34 @@ fn main() {
 
     drop(client);
     handle.shutdown().expect("shutdown");
+
+    // Machine-readable perf baseline, tracked PR-over-PR.
+    let mut out = BTreeMap::new();
+    out.insert("bench".to_string(), Json::Str("serve_throughput".to_string()));
+    out.insert("mode".to_string(), Json::Str(if quick { "quick" } else { "full" }.to_string()));
+    out.insert("rounds".to_string(), Json::Num(report.rounds as f64));
+    out.insert("sessions".to_string(), Json::Num(report.sessions as f64));
+    out.insert("errors".to_string(), Json::Num(report.errors as f64));
+    out.insert("elapsed_s".to_string(), Json::Num(report.elapsed_s));
+    out.insert("round_trips_per_s".to_string(), Json::Num(report.round_trips_per_s));
+    out.insert("req_per_s".to_string(), Json::Num(report.round_trips_per_s * 2.0));
+    out.insert("p50_ms".to_string(), Json::Num(report.p50_ms));
+    out.insert("p99_ms".to_string(), Json::Num(report.p99_ms));
+    out.insert("mean_ms".to_string(), Json::Num(report.mean_ms));
+    out.insert("connections".to_string(), Json::Num(report.connections as f64));
+    out.insert("reconnects".to_string(), Json::Num(report.reconnects as f64));
+    out.insert(
+        "requests_per_connection".to_string(),
+        Json::Num(report.requests_per_connection()),
+    );
+    out.insert("steady_alloc_events".to_string(), Json::Num(steady_allocs as f64));
+    out.insert("allocs_per_request".to_string(), Json::Num(allocs_per_request));
+    let path = std::env::var("LASP_BENCH_OUT").unwrap_or_else(|_| "BENCH_serve.json".to_string());
+    std::fs::write(&path, Json::Obj(out).to_string() + "\n").expect("writing bench json");
+    println!("\nwrote {path}");
+
     common::report_shape(
         "serve_throughput",
-        report.errors == 0 && report.rounds == 4000 && report.p99_ms > 0.0,
+        report.errors == 0 && report.rounds == lg_rounds && report.p99_ms > 0.0 && steady_allocs == 0,
     );
 }

@@ -35,6 +35,15 @@ impl PowerMode {
         }
     }
 
+    /// Lowercase wire form — exactly what [`std::str::FromStr`] accepts,
+    /// so clients can echo it back without re-casing.
+    pub fn lower_name(&self) -> &'static str {
+        match self {
+            PowerMode::Maxn => "maxn",
+            PowerMode::FiveW => "5w",
+        }
+    }
+
     /// Table I row for this mode.
     pub fn spec(&self) -> DeviceSpec {
         match self {

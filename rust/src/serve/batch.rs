@@ -10,16 +10,20 @@
 //! [`crate::coordinator`].
 
 use super::metrics::Metrics;
-use super::store::{AppsCache, SessionKey, ShardedStore};
+use super::store::{AppsCache, SessionId, ShardedStore};
+use crate::apps::AppKind;
 use std::sync::atomic::Ordering;
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
-/// One measured evaluation reported by an edge client.
-#[derive(Debug, Clone)]
+/// One measured evaluation reported by an edge client. Identified by the
+/// interned [`SessionId`] (plus the `Copy` app kind for arm-count
+/// lookups), so enqueueing a report never clones a session key.
+#[derive(Debug, Clone, Copy)]
 pub struct Report {
-    pub key: SessionKey,
+    pub id: SessionId,
+    pub app: AppKind,
     pub alpha: f64,
     pub beta: f64,
     pub arm: usize,
@@ -149,12 +153,12 @@ fn apply_batch(
     apps: &AppsCache,
     metrics: &Metrics,
 ) {
-    let mut guard = store.lock_shard(shard);
+    let mut guard = store.write_shard(shard);
     for r in batch {
-        let k = apps.arms(r.key.app);
+        let k = apps.arms(r.app);
         // Reports may precede any suggest for the session (e.g. a client
         // replaying measurements after a server restart): create cold.
-        match guard.get_or_create(&r.key, r.alpha, r.beta, k) {
+        match store.get_or_create(&mut guard, r.id, r.alpha, r.beta, k) {
             Ok((session, created)) => {
                 if created {
                     metrics.sessions_created.fetch_add(1, Ordering::Relaxed);
@@ -179,9 +183,8 @@ fn apply_batch(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::apps::AppKind;
     use crate::device::PowerMode;
-    use crate::serve::store::PolicyKind;
+    use crate::serve::store::{PolicyKind, SessionKey};
     use std::time::{Duration, Instant};
 
     fn key(client: &str) -> SessionKey {
@@ -190,6 +193,18 @@ mod tests {
             app: AppKind::Clomp,
             device: PowerMode::Maxn,
             policy: PolicyKind::Ucb,
+        }
+    }
+
+    fn report(id: SessionId, arm: usize, time_s: f64, power_w: f64) -> Report {
+        Report {
+            id,
+            app: AppKind::Clomp,
+            alpha: 1.0,
+            beta: 0.0,
+            arm,
+            time_s,
+            power_w,
         }
     }
 
@@ -212,21 +227,11 @@ mod tests {
         let ingest = BatchIngest::start(store.clone(), apps, metrics.clone(), 64, 16);
 
         let k = key("async-client");
+        let id = store.intern(&k.as_ref(), k.hash64());
         let shard = store.shard_of(&k);
         for i in 0..50 {
             ingest
-                .enqueue(
-                    shard,
-                    Report {
-                        key: k.clone(),
-                        alpha: 1.0,
-                        beta: 0.0,
-                        arm: i % 125,
-                        time_s: 1.0,
-                        power_w: 5.0,
-                    },
-                    &metrics,
-                )
+                .enqueue(shard, report(id, i % 125, 1.0, 5.0), &metrics)
                 .unwrap();
         }
         assert!(
@@ -237,8 +242,8 @@ mod tests {
             "applied {} of 50",
             metrics.reports_applied.load(Ordering::Relaxed)
         );
-        let guard = store.lock_shard(shard);
-        let session = guard.sessions.get(&k).unwrap();
+        let guard = store.read_shard(shard);
+        let session = guard.sessions.get(&id.0).unwrap();
         assert_eq!(session.tuner.total_pulls(), 50.0);
         drop(guard);
         ingest.stop();
@@ -251,35 +256,14 @@ mod tests {
         let metrics = Arc::new(Metrics::new());
         let ingest = BatchIngest::start(store.clone(), apps, metrics.clone(), 16, 8);
         let k = key("bad-client");
+        let id = store.intern(&k.as_ref(), k.hash64());
         let shard = store.shard_of(&k);
         // Arm out of range for clomp (125 arms).
         ingest
-            .enqueue(
-                shard,
-                Report {
-                    key: k.clone(),
-                    alpha: 1.0,
-                    beta: 0.0,
-                    arm: 10_000,
-                    time_s: 1.0,
-                    power_w: 5.0,
-                },
-                &metrics,
-            )
+            .enqueue(shard, report(id, 10_000, 1.0, 5.0), &metrics)
             .unwrap();
         ingest
-            .enqueue(
-                shard,
-                Report {
-                    key: k.clone(),
-                    alpha: 1.0,
-                    beta: 0.0,
-                    arm: 3,
-                    time_s: 1.0,
-                    power_w: 5.0,
-                },
-                &metrics,
-            )
+            .enqueue(shard, report(id, 3, 1.0, 5.0), &metrics)
             .unwrap();
         assert!(wait_for(
             || metrics.reports_applied.load(Ordering::Relaxed) == 1
@@ -296,20 +280,10 @@ mod tests {
         let metrics = Arc::new(Metrics::new());
         let ingest = BatchIngest::start(store.clone(), apps, metrics.clone(), 256, 32);
         let k = key("drain-client");
+        let id = store.intern(&k.as_ref(), k.hash64());
         for i in 0..100 {
             ingest
-                .enqueue(
-                    0,
-                    Report {
-                        key: k.clone(),
-                        alpha: 1.0,
-                        beta: 0.0,
-                        arm: i % 125,
-                        time_s: 0.5,
-                        power_w: 4.0,
-                    },
-                    &metrics,
-                )
+                .enqueue(0, report(id, i % 125, 0.5, 4.0), &metrics)
                 .unwrap();
         }
         ingest.stop();

@@ -33,7 +33,7 @@ pub fn session_to_json(session: &Session) -> Option<String> {
     obj.insert("app".to_string(), Json::Str(session.key.app.name().to_string()));
     obj.insert(
         "device".to_string(),
-        Json::Str(session.key.device.name().to_ascii_lowercase()),
+        Json::Str(session.key.device.lower_name().to_string()),
     );
     obj.insert("policy".to_string(), Json::Str(session.key.policy.name().to_string()));
     obj.insert("alpha".to_string(), Json::Num(session.alpha));
@@ -96,7 +96,9 @@ pub fn snapshot(store: &ShardedStore, dir: &Path) -> Result<usize> {
     let mut written = 0usize;
     for i in 0..store.num_shards() {
         let payloads: Vec<(String, String)> = {
-            let shard = store.lock_shard(i);
+            // Serialization only reads; a shared lock keeps the suggest
+            // write path unblocked on other readers' shards.
+            let shard = store.read_shard(i);
             shard
                 .sessions
                 .values()

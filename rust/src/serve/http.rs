@@ -1,4 +1,5 @@
-//! Minimal HTTP/1.1 + JSON transport for the tuning service.
+//! Minimal HTTP/1.1 transport for the tuning service — allocation-free in
+//! steady state.
 //!
 //! No async runtime exists in this offline build, so this is the same
 //! std-threads-and-bounded-channels idiom as [`crate::coordinator`]: one
@@ -6,208 +7,146 @@
 //! by a fixed pool of worker threads (the bound is the backpressure — a
 //! flood of connections blocks in `accept`, not in unbounded memory).
 //! Supported surface: request line + headers + `Content-Length` bodies,
-//! keep-alive, and nothing else (no chunked encoding, no TLS, no HTTP/2);
-//! that is exactly what the loadgen, the integration tests and a curl
-//! smoke test need.
+//! keep-alive (with pipelining), and nothing else (no chunked encoding, no
+//! TLS, no HTTP/2); that is exactly what the loadgen, the integration
+//! tests and a curl smoke test need.
+//!
+//! ## Buffer lifecycle (the zero-allocation contract)
+//!
+//! Each worker owns one connection at a time and three reusable buffers
+//! that live for the whole connection:
+//!
+//! * a **read buffer** ([`ConnBuf`]) that raw socket bytes land in; the
+//!   request line, headers and body are parsed as *slices* into it
+//!   (never copied into `String`s), and consumed bytes are reclaimed by
+//!   compaction, so back-to-back (pipelined) requests parse with zero
+//!   reads wasted and zero allocations;
+//! * a **response buffer** ([`ResponseBuf`]) the handler serializes into
+//!   (cleared, not freed, between requests);
+//! * a **frame buffer** the status line + headers + body are assembled in
+//!   so each response is a single `write_all` (one syscall).
+//!
+//! All three grow to their high-water mark during warmup and are then only
+//! overwritten. Every growth event is counted in [`TransportStats`] —
+//! `alloc_events` staying flat under steady load *is* the zero-allocation
+//! property, and the tests assert exactly that.
 //!
 //! Each worker owns one connection at a time, so the pool size bounds the
 //! number of concurrent keep-alive clients — size `workers` to the client
 //! population (the `serve` CLI default of 8 matches the loadgen default).
 
-use crate::util::json::Json;
+use crate::util::json::JsonWriter;
 use anyhow::{Context as _, Result};
-use std::collections::HashMap;
-use std::io::{BufRead, BufReader, Read, Write};
+use std::borrow::Cow;
+use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
-/// Request bodies above this are rejected (a suggest/report payload is
-/// a few hundred bytes).
+/// Request bodies above this are rejected with 413 (a suggest/report
+/// payload is a few hundred bytes).
 pub const MAX_BODY_BYTES: usize = 1 << 20;
-/// Header-section ceiling.
-const MAX_HEADER_BYTES: usize = 16 * 1024;
+/// Header-section ceiling: request line + all headers must fit (431).
+pub const MAX_HEADER_BYTES: usize = 16 * 1024;
+/// Header-count ceiling (431) — a malicious client cannot make the server
+/// spend unbounded parse work per request.
+pub const MAX_HEADERS: usize = 64;
+/// Initial per-connection read-buffer size; grows (counted) on demand up
+/// to the header + body ceilings.
+const INITIAL_BUF: usize = 4 * 1024;
 /// Idle keep-alive connections wake this often to check for shutdown.
 const READ_TIMEOUT: Duration = Duration::from_millis(500);
+/// A request must arrive in full within this window of its first byte.
+/// Bounds slow-loris hold time: a client trickling a request (or stalling
+/// mid-request) is evicted with 408 instead of pinning a pool worker
+/// forever. Generous enough for any legitimate client on a bad link.
+const REQUEST_DEADLINE: Duration = Duration::from_secs(10);
 
-/// A parsed HTTP request.
+/// Transport-level counters, shared by every worker of one server.
+/// `alloc_events` is the serve hot path's allocation proxy: it counts
+/// buffer growth in the HTTP + JSON layers (read buffer, response body,
+/// frame scratch), so a flat value under steady load certifies the
+/// request path performs zero heap allocations in those layers.
+#[derive(Default)]
+pub struct TransportStats {
+    /// Connections accepted.
+    pub connections: AtomicU64,
+    /// Requests parsed and dispatched.
+    pub requests: AtomicU64,
+    /// Buffer growth events in the HTTP+JSON layers (see above).
+    pub alloc_events: AtomicU64,
+    /// Requests rejected with 431 (header limits).
+    pub rejected_431: AtomicU64,
+}
+
+impl TransportStats {
+    fn note_alloc(&self) {
+        self.alloc_events.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// A parsed HTTP request, borrowing from the connection's read buffer.
 #[derive(Debug)]
-pub struct Request {
-    pub method: String,
-    /// Path without the query string, e.g. `/v1/suggest`.
-    pub path: String,
-    /// Decoded query parameters.
-    pub query: HashMap<String, String>,
-    pub body: Vec<u8>,
-    /// Client sent `Connection: close`.
+pub struct Request<'a> {
+    pub method: &'a str,
+    /// Path without the query string, e.g. `/v1/suggest` (undecoded).
+    pub path: &'a str,
+    /// Raw query string after `?` (may be empty; decode via
+    /// [`Request::query_get`]).
+    pub query: &'a str,
+    pub body: &'a [u8],
+    /// Client asked for the connection to be closed after this response.
     pub close: bool,
 }
 
-impl Request {
-    /// Parse the body as JSON.
-    pub fn json(&self) -> Result<Json, String> {
-        let text = std::str::from_utf8(&self.body).map_err(|_| "body is not UTF-8".to_string())?;
-        Json::parse(text)
+impl<'a> Request<'a> {
+    /// Look up and percent-decode one query parameter. Borrows from the
+    /// request unless the value actually contains `%`/`+` escapes.
+    /// Values that decode to invalid UTF-8 are rejected (`None`) rather
+    /// than lossy-decoded — deterministic for the caller, and a malformed
+    /// parameter can never impersonate a different (valid) string.
+    pub fn query_get(&self, name: &str) -> Option<Cow<'a, str>> {
+        query_get(self.query, name)
     }
 }
 
-/// An HTTP response ready to serialize.
-#[derive(Debug)]
-pub struct Response {
-    pub status: u16,
-    pub content_type: &'static str,
-    pub body: Vec<u8>,
+/// Look up `name` in a raw `a=b&c=d` query string, returning the value
+/// still percent-encoded. Lets callers distinguish "absent" from
+/// "present but undecodable" (the latter must be a 400, not a silent
+/// fall-back to defaults).
+pub fn query_get_raw<'a>(query: &'a str, name: &str) -> Option<&'a str> {
+    for pair in query.split('&') {
+        if pair.is_empty() {
+            continue;
+        }
+        let (k, v) = pair.split_once('=').unwrap_or((pair, ""));
+        match percent_decode(k) {
+            Some(key) if key == name => return Some(v),
+            _ => {}
+        }
+    }
+    None
 }
 
-impl Response {
-    /// JSON response.
-    pub fn json(status: u16, v: &Json) -> Response {
-        Response {
-            status,
-            content_type: "application/json",
-            body: v.to_string().into_bytes(),
-        }
-    }
-
-    /// Plain-text response.
-    pub fn text(status: u16, body: impl Into<String>) -> Response {
-        Response {
-            status,
-            content_type: "text/plain; charset=utf-8",
-            body: body.into().into_bytes(),
-        }
-    }
-
-    /// JSON error envelope `{"error": msg}`.
-    pub fn error(status: u16, msg: &str) -> Response {
-        let mut obj = std::collections::BTreeMap::new();
-        obj.insert("error".to_string(), Json::Str(msg.to_string()));
-        Response::json(status, &Json::Obj(obj))
-    }
+/// Look up and decode `name` (shared with tests and the loadgen client).
+/// `None` for both absent and undecodable values; use
+/// [`query_get_raw`] + [`percent_decode`] to tell them apart.
+pub fn query_get<'a>(query: &'a str, name: &str) -> Option<Cow<'a, str>> {
+    percent_decode(query_get_raw(query, name)?)
 }
 
-fn status_text(code: u16) -> &'static str {
-    match code {
-        200 => "OK",
-        202 => "Accepted",
-        400 => "Bad Request",
-        404 => "Not Found",
-        405 => "Method Not Allowed",
-        413 => "Payload Too Large",
-        500 => "Internal Server Error",
-        503 => "Service Unavailable",
-        _ => "Unknown",
+/// Percent-decode (`%XX` and `+`). Borrowed when no escapes are present;
+/// `None` when the decoded bytes are not valid UTF-8 (deterministic
+/// rejection instead of silent U+FFFD substitution). A `%` not followed
+/// by two hex digits passes through literally, matching common lenient
+/// parsers.
+pub fn percent_decode(s: &str) -> Option<Cow<'_, str>> {
+    if !s.bytes().any(|b| b == b'%' || b == b'+') {
+        return Some(Cow::Borrowed(s));
     }
-}
-
-/// Outcome of trying to read one request off a connection.
-enum ReadOutcome {
-    Request(Request),
-    /// Peer closed cleanly between requests.
-    Closed,
-    /// Idle read timeout between requests (connection still healthy).
-    Idle,
-    /// Protocol violation; connection must be dropped after a 400.
-    Malformed(String),
-}
-
-fn read_request(reader: &mut BufReader<TcpStream>) -> ReadOutcome {
-    // Request line. A timeout with nothing read means an idle keep-alive
-    // connection; a timeout after partial bytes (read_line appends what it
-    // consumed before erroring) means a stalled half-written request —
-    // retrying would lose the consumed prefix and desync the stream.
-    let mut line = String::new();
-    match reader.read_line(&mut line) {
-        Ok(0) => return ReadOutcome::Closed,
-        Ok(_) => {}
-        Err(e)
-            if e.kind() == std::io::ErrorKind::WouldBlock
-                || e.kind() == std::io::ErrorKind::TimedOut =>
-        {
-            if line.is_empty() {
-                return ReadOutcome::Idle;
-            }
-            return ReadOutcome::Malformed("timed out mid-request".into());
-        }
-        Err(_) => return ReadOutcome::Closed,
-    }
-    let mut parts = line.split_whitespace();
-    let (Some(method), Some(target), Some(version)) =
-        (parts.next(), parts.next(), parts.next())
-    else {
-        return ReadOutcome::Malformed("bad request line".into());
-    };
-    if !version.starts_with("HTTP/1.") {
-        return ReadOutcome::Malformed("unsupported HTTP version".into());
-    }
-    let (path, query) = match target.split_once('?') {
-        Some((p, q)) => (p.to_string(), parse_query(q)),
-        None => (target.to_string(), HashMap::new()),
-    };
-
-    // Headers.
-    let mut content_length = 0usize;
-    let mut close = false;
-    let mut header_bytes = 0usize;
-    loop {
-        let mut h = String::new();
-        match reader.read_line(&mut h) {
-            Ok(0) => return ReadOutcome::Malformed("eof in headers".into()),
-            Ok(n) => header_bytes += n,
-            Err(_) => return ReadOutcome::Malformed("read error in headers".into()),
-        }
-        if header_bytes > MAX_HEADER_BYTES {
-            return ReadOutcome::Malformed("headers too large".into());
-        }
-        let h = h.trim_end();
-        if h.is_empty() {
-            break;
-        }
-        let Some((name, value)) = h.split_once(':') else {
-            return ReadOutcome::Malformed("bad header".into());
-        };
-        let name = name.trim().to_ascii_lowercase();
-        let value = value.trim();
-        if name == "content-length" {
-            match value.parse::<usize>() {
-                Ok(n) if n <= MAX_BODY_BYTES => content_length = n,
-                Ok(_) => return ReadOutcome::Malformed("body too large".into()),
-                Err(_) => return ReadOutcome::Malformed("bad content-length".into()),
-            }
-        } else if name == "connection" && value.eq_ignore_ascii_case("close") {
-            close = true;
-        }
-    }
-
-    // Body.
-    let mut body = vec![0u8; content_length];
-    if content_length > 0 && reader.read_exact(&mut body).is_err() {
-        return ReadOutcome::Malformed("short body".into());
-    }
-    ReadOutcome::Request(Request {
-        method: method.to_string(),
-        path,
-        query,
-        body,
-        close,
-    })
-}
-
-/// Decode `a=b&c=d` with minimal percent-decoding (`%XX` and `+`).
-fn parse_query(q: &str) -> HashMap<String, String> {
-    q.split('&')
-        .filter(|kv| !kv.is_empty())
-        .map(|kv| match kv.split_once('=') {
-            Some((k, v)) => (percent_decode(k), percent_decode(v)),
-            None => (percent_decode(kv), String::new()),
-        })
-        .collect()
-}
-
-fn percent_decode(s: &str) -> String {
     let bytes = s.as_bytes();
     let mut out = Vec::with_capacity(bytes.len());
     let mut i = 0;
@@ -237,12 +176,384 @@ fn percent_decode(s: &str) -> String {
             }
         }
     }
-    String::from_utf8_lossy(&out).into_owned()
+    String::from_utf8(out).ok().map(Cow::Owned)
 }
 
-/// Serialize a response.
-fn write_response(stream: &mut TcpStream, resp: &Response, keep_alive: bool) -> std::io::Result<()> {
-    let head = format!(
+/// The response a handler fills in. The body buffer is cleared — not
+/// freed — between requests, so steady-state serialization into it is
+/// allocation-free.
+pub struct ResponseBuf {
+    status: u16,
+    content_type: &'static str,
+    /// Serialized response body; handlers append (via [`JsonWriter`] or
+    /// `extend_from_slice`) after [`ResponseBuf::reset`].
+    pub body: Vec<u8>,
+    /// Reusable text scratch for handlers (e.g. config descriptions
+    /// streamed into the body) — same lifecycle as `body`, and its
+    /// growth is counted as an alloc event too.
+    pub scratch: String,
+}
+
+impl ResponseBuf {
+    pub fn new() -> ResponseBuf {
+        ResponseBuf {
+            status: 200,
+            content_type: "application/json",
+            body: Vec::with_capacity(512),
+            scratch: String::with_capacity(128),
+        }
+    }
+
+    /// Clear for the next request (keeps capacity).
+    pub fn reset(&mut self) {
+        self.status = 200;
+        self.content_type = "application/json";
+        self.body.clear();
+        self.scratch.clear();
+    }
+
+    pub fn status(&self) -> u16 {
+        self.status
+    }
+
+    pub fn set_status(&mut self, status: u16) {
+        self.status = status;
+    }
+
+    /// Replace the response with a plain-text body.
+    pub fn text(&mut self, status: u16, body: &str) {
+        self.status = status;
+        self.content_type = "text/plain; charset=utf-8";
+        self.body.clear();
+        self.body.extend_from_slice(body.as_bytes());
+    }
+
+    /// Replace the response with a `{"error": msg}` JSON envelope.
+    pub fn error(&mut self, status: u16, msg: &str) {
+        self.status = status;
+        self.content_type = "application/json";
+        self.body.clear();
+        let mut w = JsonWriter::new(&mut self.body);
+        w.begin_obj();
+        w.field_str("error", msg);
+        w.end_obj();
+    }
+}
+
+impl Default for ResponseBuf {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+fn status_text(code: u16) -> &'static str {
+    match code {
+        200 => "OK",
+        202 => "Accepted",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        408 => "Request Timeout",
+        413 => "Payload Too Large",
+        431 => "Request Header Fields Too Large",
+        500 => "Internal Server Error",
+        501 => "Not Implemented",
+        503 => "Service Unavailable",
+        _ => "Unknown",
+    }
+}
+
+/// Reusable per-connection read buffer. Bytes live in `data[start..filled]`;
+/// parsing slices into that window, and `consume` reclaims the prefix.
+struct ConnBuf {
+    data: Vec<u8>,
+    start: usize,
+    filled: usize,
+    /// When the first byte of the currently pending request arrived
+    /// (None = no partial request buffered). Drives [`REQUEST_DEADLINE`].
+    since: Option<Instant>,
+}
+
+impl ConnBuf {
+    fn new() -> ConnBuf {
+        ConnBuf { data: vec![0u8; INITIAL_BUF], start: 0, filled: 0, since: None }
+    }
+
+    /// Forget any buffered bytes (new connection); keeps capacity.
+    fn reset(&mut self) {
+        self.start = 0;
+        self.filled = 0;
+        self.since = None;
+    }
+
+    fn window(&self) -> &[u8] {
+        &self.data[self.start..self.filled]
+    }
+
+    fn len(&self) -> usize {
+        self.filled - self.start
+    }
+
+    /// The pending (partial) request has overstayed [`REQUEST_DEADLINE`].
+    fn deadline_exceeded(&self) -> bool {
+        matches!(self.since, Some(t) if t.elapsed() > REQUEST_DEADLINE)
+    }
+
+    /// Drop `n` parsed bytes from the front of the window.
+    fn consume(&mut self, n: usize) {
+        self.start = (self.start + n).min(self.filled);
+        if self.start == self.filled {
+            self.start = 0;
+            self.filled = 0;
+            self.since = None;
+        } else {
+            // Pipelined follow-up already buffered: its clock starts now.
+            self.since = Some(Instant::now());
+        }
+    }
+
+    /// Read more bytes from `stream`, compacting or growing first if the
+    /// tail is full. Growth is a counted alloc event; steady state hits
+    /// the high-water capacity and never grows again.
+    fn fill(&mut self, stream: &mut TcpStream, stats: &TransportStats) -> std::io::Result<usize> {
+        if self.filled == self.data.len() {
+            if self.start > 0 {
+                self.data.copy_within(self.start..self.filled, 0);
+                self.filled -= self.start;
+                self.start = 0;
+            } else {
+                let new_len = (self.data.len() * 2).min(MAX_HEADER_BYTES + MAX_BODY_BYTES + 1024);
+                if new_len > self.data.len() {
+                    self.data.resize(new_len, 0);
+                    stats.note_alloc();
+                } else {
+                    // Window already at the absolute ceiling; the parser
+                    // rejects such requests before asking for more.
+                    return Ok(0);
+                }
+            }
+        }
+        let was_empty = self.len() == 0;
+        let n = stream.read(&mut self.data[self.filled..])?;
+        self.filled += n;
+        if was_empty && n > 0 {
+            self.since = Some(Instant::now());
+        }
+        Ok(n)
+    }
+}
+
+/// Byte ranges of one parsed request, relative to the buffer window at
+/// parse time (no borrows, so the caller can keep mutating the buffer
+/// before re-slicing).
+struct Parsed {
+    method: std::ops::Range<usize>,
+    path: std::ops::Range<usize>,
+    query: std::ops::Range<usize>,
+    body: std::ops::Range<usize>,
+    total_len: usize,
+    close: bool,
+}
+
+enum TryParse {
+    /// A complete request is buffered.
+    Complete(Parsed),
+    /// Not enough bytes yet.
+    NeedMore,
+    /// Protocol violation; respond with `status` and drop the connection.
+    Bad(u16, &'static str),
+}
+
+/// Find the blank line ending the header section: a line break followed
+/// immediately by another line break, where each break is `\n` or `\r\n`
+/// (the old line-based parser tolerated LF-only and mixed endings; keep
+/// accepting them). One short-circuiting pass — never scans past the
+/// header region into buffered body bytes. Returns `(head_len,
+/// body_start)`.
+fn find_head_end(data: &[u8]) -> Option<(usize, usize)> {
+    let mut i = 0;
+    while i < data.len() {
+        if data[i] == b'\n' {
+            match data.get(i + 1) {
+                Some(b'\n') => return Some((i, i + 2)),
+                Some(b'\r') if data.get(i + 2) == Some(&b'\n') => return Some((i, i + 3)),
+                _ => {}
+            }
+        }
+        i += 1;
+    }
+    None
+}
+
+/// Attempt to parse one request from `data` (the buffer window).
+fn try_parse(data: &[u8]) -> TryParse {
+    // Locate the end of the header section.
+    let Some((hdr_end, body_start)) = find_head_end(data) else {
+        return if data.len() > MAX_HEADER_BYTES {
+            TryParse::Bad(431, "headers too large")
+        } else {
+            TryParse::NeedMore
+        };
+    };
+    if hdr_end > MAX_HEADER_BYTES {
+        return TryParse::Bad(431, "headers too large");
+    }
+    let Ok(head) = std::str::from_utf8(&data[..hdr_end]) else {
+        return TryParse::Bad(400, "non-ASCII request head");
+    };
+    let mut lines = head.split('\n').map(|l| l.trim_end_matches('\r'));
+    let request_line = lines.next().unwrap_or("");
+    let mut parts = request_line.split_whitespace();
+    let (Some(method), Some(target), Some(version)) = (parts.next(), parts.next(), parts.next())
+    else {
+        return TryParse::Bad(400, "bad request line");
+    };
+    if !version.starts_with("HTTP/1.") {
+        return TryParse::Bad(400, "unsupported HTTP version");
+    }
+    let (path, query) = match target.split_once('?') {
+        Some((p, q)) => (p, q),
+        None => (target, ""),
+    };
+
+    // Headers.
+    let mut content_length: Option<usize> = None;
+    let mut close = version == "HTTP/1.0";
+    let mut n_headers = 0usize;
+    for line in lines {
+        n_headers += 1;
+        if n_headers > MAX_HEADERS {
+            return TryParse::Bad(431, "too many headers");
+        }
+        let Some((name, value)) = line.split_once(':') else {
+            return TryParse::Bad(400, "bad header");
+        };
+        let name = name.trim();
+        let value = value.trim();
+        if name.eq_ignore_ascii_case("content-length") {
+            match value.parse::<usize>() {
+                Ok(n) if n <= MAX_BODY_BYTES => {
+                    // Conflicting duplicates are a framing-desync
+                    // (request smuggling) vector: reject per RFC 7230.
+                    if matches!(content_length, Some(prev) if prev != n) {
+                        return TryParse::Bad(400, "conflicting content-length");
+                    }
+                    content_length = Some(n);
+                }
+                Ok(_) => return TryParse::Bad(413, "body too large"),
+                Err(_) => return TryParse::Bad(400, "bad content-length"),
+            }
+        } else if name.eq_ignore_ascii_case("transfer-encoding") {
+            // Chunked framing is not implemented; silently ignoring it
+            // would desync the pipelined stream at the chunk headers.
+            return TryParse::Bad(501, "transfer-encoding not supported");
+        } else if name.eq_ignore_ascii_case("connection") {
+            if value.eq_ignore_ascii_case("close") {
+                close = true;
+            } else if value.eq_ignore_ascii_case("keep-alive") {
+                close = false;
+            }
+        }
+    }
+    let content_length = content_length.unwrap_or(0);
+
+    let total_len = body_start + content_length;
+    if data.len() < total_len {
+        return TryParse::NeedMore;
+    }
+
+    let range_in = |s: &str| -> std::ops::Range<usize> {
+        let off = s.as_ptr() as usize - data.as_ptr() as usize;
+        off..off + s.len()
+    };
+    // An absent query is the static "" (not inside `data`): empty range.
+    let query = if query.is_empty() { 0..0 } else { range_in(query) };
+    TryParse::Complete(Parsed {
+        method: range_in(method),
+        path: range_in(path),
+        query,
+        body: body_start..total_len,
+        total_len,
+        close,
+    })
+}
+
+pub(crate) fn find_subsequence(haystack: &[u8], needle: &[u8]) -> Option<usize> {
+    haystack.windows(needle.len()).position(|w| w == needle)
+}
+
+/// Outcome of waiting for one request on a connection.
+enum ReadOutcome {
+    Request(Parsed),
+    /// Peer closed cleanly between requests.
+    Closed,
+    /// Idle read timeout (connection still healthy; buffered partial
+    /// bytes are preserved for the next attempt).
+    Idle,
+    /// Protocol violation; connection must be dropped after `status`.
+    Malformed(u16, &'static str),
+}
+
+/// Drive the buffer until one complete request is available (or a
+/// terminal outcome). Pipelined requests already in the buffer parse
+/// without touching the socket.
+fn read_request(
+    conn: &mut ConnBuf,
+    stream: &mut TcpStream,
+    stats: &TransportStats,
+) -> ReadOutcome {
+    loop {
+        if conn.len() > 0 {
+            match try_parse(conn.window()) {
+                TryParse::Complete(p) => return ReadOutcome::Request(p),
+                TryParse::Bad(status, msg) => return ReadOutcome::Malformed(status, msg),
+                TryParse::NeedMore => {
+                    // A partial request must complete within its deadline
+                    // — a trickling client (slow-loris) cannot pin a pool
+                    // worker indefinitely.
+                    if conn.deadline_exceeded() {
+                        return ReadOutcome::Malformed(408, "request timeout");
+                    }
+                }
+            }
+        }
+        match conn.fill(stream, stats) {
+            Ok(0) => {
+                return if conn.len() == 0 {
+                    ReadOutcome::Closed
+                } else {
+                    ReadOutcome::Malformed(400, "eof mid-request")
+                };
+            }
+            Ok(_) => {}
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                // Partial bytes stay buffered; surface Idle so the worker
+                // can check for shutdown and resume exactly where the
+                // stream paused (no desync, unlike a line-based parser).
+                return ReadOutcome::Idle;
+            }
+            Err(_) => return ReadOutcome::Closed,
+        }
+    }
+}
+
+/// Assemble head + body into the reusable frame buffer and write it as
+/// one segment (single syscall on the hot path).
+fn write_response(
+    stream: &mut TcpStream,
+    resp: &ResponseBuf,
+    keep_alive: bool,
+    frame: &mut Vec<u8>,
+    stats: &TransportStats,
+) -> std::io::Result<()> {
+    use std::io::Write as _;
+    let cap_before = frame.capacity();
+    frame.clear();
+    let _ = write!(
+        frame,
         "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: {}\r\n\r\n",
         resp.status,
         status_text(resp.status),
@@ -250,22 +561,23 @@ fn write_response(stream: &mut TcpStream, resp: &Response, keep_alive: bool) -> 
         resp.body.len(),
         if keep_alive { "keep-alive" } else { "close" },
     );
-    // One buffer, one write: head and body in the same segment keeps the
-    // hot suggest path at a single syscall per response.
-    let mut frame = Vec::with_capacity(head.len() + resp.body.len());
-    frame.extend_from_slice(head.as_bytes());
     frame.extend_from_slice(&resp.body);
-    stream.write_all(&frame)?;
+    if frame.capacity() != cap_before {
+        stats.note_alloc();
+    }
+    stream.write_all(frame)?;
     stream.flush()
 }
 
-/// The request handler shared by all worker threads.
-pub type HttpHandler = Arc<dyn Fn(&Request) -> Response + Send + Sync>;
+/// The request handler shared by all worker threads: parse the borrowed
+/// request, serialize into the reusable response buffer.
+pub type HttpHandler = Arc<dyn Fn(&Request<'_>, &mut ResponseBuf) + Send + Sync>;
 
 /// A running HTTP server: accept thread + fixed worker pool.
 pub struct HttpServer {
     addr: SocketAddr,
     shutdown: Arc<AtomicBool>,
+    stats: Arc<TransportStats>,
     accept_thread: JoinHandle<()>,
     workers: Vec<JoinHandle<()>>,
 }
@@ -273,6 +585,17 @@ pub struct HttpServer {
 impl HttpServer {
     /// Start serving `listener` with `workers` handler threads.
     pub fn start(listener: TcpListener, workers: usize, handler: HttpHandler) -> Result<HttpServer> {
+        Self::start_with_stats(listener, workers, handler, Arc::new(TransportStats::default()))
+    }
+
+    /// As [`HttpServer::start`], but share externally owned transport
+    /// stats (the service exports them on `/metrics`).
+    pub fn start_with_stats(
+        listener: TcpListener,
+        workers: usize,
+        handler: HttpHandler,
+        stats: Arc<TransportStats>,
+    ) -> Result<HttpServer> {
         assert!(workers > 0);
         let addr = listener.local_addr().context("reading bound address")?;
         let shutdown = Arc::new(AtomicBool::new(false));
@@ -287,23 +610,39 @@ impl HttpServer {
             let rx = rx.clone();
             let handler = handler.clone();
             let shutdown = shutdown.clone();
-            pool.push(std::thread::spawn(move || loop {
-                let stream = {
-                    let guard = match rx.lock() {
-                        Ok(g) => g,
-                        Err(p) => p.into_inner(),
+            let stats = stats.clone();
+            pool.push(std::thread::spawn(move || {
+                // Connection-lifetime buffers (see module docs). They are
+                // per-worker so a long-lived keep-alive client reuses the
+                // same memory for every request it sends.
+                let mut conn = ConnBuf::new();
+                let mut resp = ResponseBuf::new();
+                let mut frame: Vec<u8> = Vec::with_capacity(1024);
+                loop {
+                    let stream = {
+                        let guard = match rx.lock() {
+                            Ok(g) => g,
+                            Err(p) => p.into_inner(),
+                        };
+                        guard.recv()
                     };
-                    guard.recv()
-                };
-                match stream {
-                    Ok(s) => handle_connection(s, &handler, &shutdown),
-                    Err(_) => return, // accept thread gone: shutdown
+                    match stream {
+                        Ok(s) => {
+                            // Reset per-connection state, keep capacity.
+                            conn.reset();
+                            handle_connection(
+                                s, &handler, &shutdown, &stats, &mut conn, &mut resp, &mut frame,
+                            );
+                        }
+                        Err(_) => return, // accept thread gone: shutdown
+                    }
                 }
             }));
         }
 
         let accept_thread = {
             let shutdown = shutdown.clone();
+            let stats = stats.clone();
             std::thread::spawn(move || {
                 // `tx` lives in this thread; dropping it on exit releases
                 // the worker pool.
@@ -314,6 +653,7 @@ impl HttpServer {
                     let Ok(stream) = conn else { continue };
                     let _ = stream.set_nodelay(true);
                     let _ = stream.set_read_timeout(Some(READ_TIMEOUT));
+                    stats.connections.fetch_add(1, Ordering::Relaxed);
                     if tx.send(stream).is_err() {
                         return;
                     }
@@ -324,6 +664,7 @@ impl HttpServer {
         Ok(HttpServer {
             addr,
             shutdown,
+            stats,
             accept_thread,
             workers: pool,
         })
@@ -332,6 +673,11 @@ impl HttpServer {
     /// The bound address (ephemeral ports resolved).
     pub fn addr(&self) -> SocketAddr {
         self.addr
+    }
+
+    /// Transport counters (connections, requests, alloc events).
+    pub fn stats(&self) -> Arc<TransportStats> {
+        self.stats.clone()
     }
 
     /// Stop accepting, close workers, join all threads.
@@ -355,28 +701,71 @@ impl HttpServer {
     }
 }
 
-fn handle_connection(stream: TcpStream, handler: &HttpHandler, shutdown: &AtomicBool) {
-    let Ok(read_half) = stream.try_clone() else {
-        return;
-    };
-    let mut reader = BufReader::new(read_half);
-    let mut write_half = stream;
+#[allow(clippy::too_many_arguments)]
+fn handle_connection(
+    mut stream: TcpStream,
+    handler: &HttpHandler,
+    shutdown: &AtomicBool,
+    stats: &TransportStats,
+    conn: &mut ConnBuf,
+    resp: &mut ResponseBuf,
+    frame: &mut Vec<u8>,
+) {
     loop {
         if shutdown.load(Ordering::SeqCst) {
             return;
         }
-        match read_request(&mut reader) {
-            ReadOutcome::Request(req) => {
-                let resp = handler(&req);
-                let keep = !req.close;
-                if write_response(&mut write_half, &resp, keep).is_err() || !keep {
+        match read_request(conn, &mut stream, stats) {
+            ReadOutcome::Request(p) => {
+                stats.requests.fetch_add(1, Ordering::Relaxed);
+                let close = {
+                    // Borrow the parsed slices out of the buffer window.
+                    let base = conn.start;
+                    let data = &conn.data[base..conn.filled];
+                    // The head was validated as UTF-8 by try_parse.
+                    let req = Request {
+                        method: std::str::from_utf8(&data[p.method.clone()]).unwrap_or(""),
+                        path: std::str::from_utf8(&data[p.path.clone()]).unwrap_or(""),
+                        query: std::str::from_utf8(&data[p.query.clone()]).unwrap_or(""),
+                        body: &data[p.body.clone()],
+                        close: p.close,
+                    };
+                    resp.reset();
+                    let body_cap = resp.body.capacity();
+                    let scratch_cap = resp.scratch.capacity();
+                    handler(&req, resp);
+                    if resp.body.capacity() != body_cap || resp.scratch.capacity() != scratch_cap
+                    {
+                        stats.note_alloc();
+                    }
+                    req.close
+                };
+                if write_response(&mut stream, resp, !close, frame, stats).is_err() || close {
                     return;
                 }
+                conn.consume(p.total_len);
             }
             ReadOutcome::Idle => continue,
             ReadOutcome::Closed => return,
-            ReadOutcome::Malformed(msg) => {
-                let _ = write_response(&mut write_half, &Response::error(400, &msg), false);
+            ReadOutcome::Malformed(status, msg) => {
+                if status == 431 {
+                    stats.rejected_431.fetch_add(1, Ordering::Relaxed);
+                }
+                resp.reset();
+                resp.error(status, msg);
+                let _ = write_response(&mut stream, resp, false, frame, stats);
+                // Lingering close: drain (bounded) whatever the client is
+                // still sending, so closing the socket with unread bytes
+                // cannot RST the error response away before the client
+                // reads it.
+                let deadline = Instant::now() + Duration::from_millis(250);
+                let mut scratch = [0u8; 1024];
+                while Instant::now() < deadline {
+                    match stream.read(&mut scratch) {
+                        Ok(0) | Err(_) => break,
+                        Ok(_) => {}
+                    }
+                }
                 return;
             }
         }
@@ -389,29 +778,54 @@ mod tests {
 
     fn echo_server() -> HttpServer {
         let listener = TcpListener::bind("127.0.0.1:0").unwrap();
-        let handler: HttpHandler = Arc::new(|req: &Request| {
-            let mut obj = std::collections::BTreeMap::new();
-            obj.insert("method".into(), Json::Str(req.method.clone()));
-            obj.insert("path".into(), Json::Str(req.path.clone()));
-            obj.insert(
-                "body_len".into(),
-                Json::Num(req.body.len() as f64),
-            );
-            if let Some(v) = req.query.get("q") {
-                obj.insert("q".into(), Json::Str(v.clone()));
+        let handler: HttpHandler = Arc::new(|req: &Request<'_>, out: &mut ResponseBuf| {
+            let mut w = JsonWriter::new(&mut out.body);
+            w.begin_obj();
+            w.field_str("method", req.method);
+            w.field_str("path", req.path);
+            w.field_num("body_len", req.body.len() as f64);
+            if let Some(v) = req.query_get("q") {
+                w.field_str("q", &v);
             }
-            Response::json(200, &Json::Obj(obj))
+            w.end_obj();
         });
         HttpServer::start(listener, 2, handler).unwrap()
     }
 
-    fn raw_roundtrip(addr: SocketAddr, request: &str) -> String {
+    fn raw_roundtrip(addr: SocketAddr, request: &[u8]) -> String {
         let mut s = TcpStream::connect(addr).unwrap();
-        s.write_all(request.as_bytes()).unwrap();
+        s.write_all(request).unwrap();
         s.shutdown(std::net::Shutdown::Write).unwrap();
         let mut out = String::new();
         s.read_to_string(&mut out).unwrap();
         out
+    }
+
+    /// Read one full response (head + declared body) off a keep-alive
+    /// connection.
+    fn read_one_response(s: &mut TcpStream) -> String {
+        let mut raw = Vec::new();
+        let mut buf = [0u8; 4096];
+        loop {
+            if let Some(hdr_end) = find_subsequence(&raw, b"\r\n\r\n") {
+                let head = String::from_utf8_lossy(&raw[..hdr_end]);
+                let clen: usize = head
+                    .lines()
+                    .find_map(|l| {
+                        let (name, value) = l.split_once(':')?;
+                        name.trim()
+                            .eq_ignore_ascii_case("content-length")
+                            .then(|| value.trim().parse().ok())?
+                    })
+                    .unwrap_or(0);
+                if raw.len() >= hdr_end + 4 + clen {
+                    return String::from_utf8_lossy(&raw[..hdr_end + 4 + clen]).into_owned();
+                }
+            }
+            let n = s.read(&mut buf).unwrap();
+            assert!(n > 0, "connection closed early: {}", String::from_utf8_lossy(&raw));
+            raw.extend_from_slice(&buf[..n]);
+        }
     }
 
     #[test]
@@ -419,7 +833,7 @@ mod tests {
         let server = echo_server();
         let resp = raw_roundtrip(
             server.addr(),
-            "GET /hello?q=a%20b HTTP/1.1\r\nHost: x\r\nConnection: close\r\n\r\n",
+            b"GET /hello?q=a%20b HTTP/1.1\r\nHost: x\r\nConnection: close\r\n\r\n",
         );
         assert!(resp.starts_with("HTTP/1.1 200 OK"), "{resp}");
         assert!(resp.contains("\"path\":\"/hello\""), "{resp}");
@@ -438,15 +852,7 @@ mod tests {
                 body.len()
             );
             s.write_all(req.as_bytes()).unwrap();
-            // Read the response head + body off the same connection
-            // (looping in case the head and body arrive in two segments).
-            let mut text = String::new();
-            let mut buf = [0u8; 4096];
-            while !text.contains("body_len") {
-                let n = s.read(&mut buf).unwrap();
-                assert!(n > 0, "connection closed early: {text}");
-                text.push_str(&String::from_utf8_lossy(&buf[..n]));
-            }
+            let text = read_one_response(&mut s);
             assert!(text.starts_with("HTTP/1.1 200 OK"), "{text}");
             assert!(text.contains("\"body_len\":7"), "{text}");
         }
@@ -454,9 +860,111 @@ mod tests {
     }
 
     #[test]
+    fn pipelined_requests_are_all_answered() {
+        let server = echo_server();
+        let mut s = TcpStream::connect(server.addr()).unwrap();
+        // Three requests in a single segment; responses must come back
+        // in order on the same connection.
+        let mut burst = Vec::new();
+        for i in 0..3 {
+            burst.extend_from_slice(
+                format!("GET /pipe{i} HTTP/1.1\r\nHost: x\r\n\r\n").as_bytes(),
+            );
+        }
+        s.write_all(&burst).unwrap();
+        for i in 0..3 {
+            let text = read_one_response(&mut s);
+            assert!(text.starts_with("HTTP/1.1 200 OK"), "{text}");
+            assert!(text.contains(&format!("\"path\":\"/pipe{i}\"")), "{text}");
+        }
+        server.stop();
+    }
+
+    #[test]
+    fn split_reads_across_tcp_segments() {
+        let server = echo_server();
+        let mut s = TcpStream::connect(server.addr()).unwrap();
+        let body = "{\"split\":true}";
+        let req = format!(
+            "POST /seg HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n{body}",
+            body.len()
+        );
+        let bytes = req.as_bytes();
+        // Dribble the request out in 5-byte chunks with pauses: the
+        // parser must accumulate across reads without dropping state.
+        for chunk in bytes.chunks(5) {
+            s.write_all(chunk).unwrap();
+            s.flush().unwrap();
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        let text = read_one_response(&mut s);
+        assert!(text.starts_with("HTTP/1.1 200 OK"), "{text}");
+        assert!(text.contains(&format!("\"body_len\":{}", body.len())), "{text}");
+        server.stop();
+    }
+
+    #[test]
+    fn accepts_bare_lf_line_endings() {
+        // Hand-rolled clients (printf | nc) often send LF-only heads;
+        // the old line-based parser accepted them, so keep doing so.
+        let server = echo_server();
+        let resp = raw_roundtrip(
+            server.addr(),
+            b"GET /lf?q=ok HTTP/1.1\nHost: x\nConnection: close\n\n",
+        );
+        assert!(resp.starts_with("HTTP/1.1 200 OK"), "{resp}");
+        assert!(resp.contains("\"path\":\"/lf\""), "{resp}");
+        assert!(resp.contains("\"q\":\"ok\""), "{resp}");
+        server.stop();
+    }
+
+    #[test]
+    fn head_end_handles_all_line_ending_mixes() {
+        // CRLF throughout.
+        assert_eq!(find_head_end(b"GET / HTTP/1.1\r\nHost: x\r\n\r\nBODY"), Some((24, 27)));
+        // LF throughout.
+        assert_eq!(find_head_end(b"A\nB\n\nrest"), Some((3, 5)));
+        // LF lines closed by a CRLF blank line (old parser accepted it).
+        assert_eq!(find_head_end(b"A\nB\n\r\nrest"), Some((3, 6)));
+        // Incomplete head.
+        assert_eq!(find_head_end(b"GET / HTTP/1.1\r\nHost"), None);
+    }
+
+    #[test]
+    fn accepts_lf_lines_with_crlf_blank() {
+        let server = echo_server();
+        let resp = raw_roundtrip(
+            server.addr(),
+            b"GET /mixed HTTP/1.1\nHost: x\nConnection: close\n\r\n",
+        );
+        assert!(resp.starts_with("HTTP/1.1 200 OK"), "{resp}");
+        assert!(resp.contains("\"path\":\"/mixed\""), "{resp}");
+        server.stop();
+    }
+
+    #[test]
+    fn partial_request_deadline_trips() {
+        // The stall guard itself (no 10 s wait): a pending request whose
+        // first byte is older than the deadline must be evicted.
+        // checked_sub: Instant is monotonic-since-boot on Linux, and
+        // subtracting past the clock origin panics (fresh containers).
+        let Some(stale) =
+            Instant::now().checked_sub(REQUEST_DEADLINE + Duration::from_millis(10))
+        else {
+            return; // uptime < deadline: cannot fabricate a stale instant
+        };
+        let mut conn = ConnBuf::new();
+        conn.filled = 4; // pretend 4 bytes arrived
+        conn.since = Some(stale);
+        assert!(conn.deadline_exceeded());
+        conn.reset();
+        assert!(!conn.deadline_exceeded());
+    }
+
+    #[test]
     fn rejects_malformed_request_line() {
         let server = echo_server();
-        let resp = raw_roundtrip(server.addr(), "NOT-HTTP\r\n\r\n");
+        let resp = raw_roundtrip(server.addr(), b"NOT-HTTP\r\n\r\n");
         assert!(resp.starts_with("HTTP/1.1 400"), "{resp}");
         server.stop();
     }
@@ -466,17 +974,118 @@ mod tests {
         let server = echo_server();
         let resp = raw_roundtrip(
             server.addr(),
-            "POST / HTTP/1.1\r\nContent-Length: 99999999\r\n\r\n",
+            b"POST / HTTP/1.1\r\nContent-Length: 99999999\r\n\r\n",
+        );
+        assert!(resp.starts_with("HTTP/1.1 413"), "{resp}");
+        server.stop();
+    }
+
+    #[test]
+    fn rejects_conflicting_content_length() {
+        let server = echo_server();
+        let resp = raw_roundtrip(
+            server.addr(),
+            b"POST / HTTP/1.1\r\nContent-Length: 0\r\nContent-Length: 38\r\n\r\n",
         );
         assert!(resp.starts_with("HTTP/1.1 400"), "{resp}");
+        // Identical duplicates are mergeable per RFC 7230 and accepted.
+        let resp = raw_roundtrip(
+            server.addr(),
+            b"POST / HTTP/1.1\r\nContent-Length: 2\r\nContent-Length: 2\r\n\r\nok",
+        );
+        assert!(resp.starts_with("HTTP/1.1 200"), "{resp}");
+        server.stop();
+    }
+
+    #[test]
+    fn rejects_transfer_encoding_501() {
+        let server = echo_server();
+        let resp = raw_roundtrip(
+            server.addr(),
+            b"POST / HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n0\r\n\r\n",
+        );
+        assert!(resp.starts_with("HTTP/1.1 501"), "{resp}");
+        server.stop();
+    }
+
+    #[test]
+    fn rejects_oversized_headers_with_431() {
+        let server = echo_server();
+        let stats = server.stats();
+        let mut req = b"GET / HTTP/1.1\r\n".to_vec();
+        req.extend_from_slice(b"X-Big: ");
+        req.extend(std::iter::repeat(b'a').take(MAX_HEADER_BYTES + 100));
+        req.extend_from_slice(b"\r\n\r\n");
+        let resp = raw_roundtrip(server.addr(), &req);
+        assert!(resp.starts_with("HTTP/1.1 431"), "{resp}");
+        assert!(stats.rejected_431.load(Ordering::Relaxed) >= 1);
+        server.stop();
+    }
+
+    #[test]
+    fn rejects_too_many_headers_with_431() {
+        let server = echo_server();
+        let mut req = b"GET / HTTP/1.1\r\n".to_vec();
+        for i in 0..(MAX_HEADERS + 8) {
+            req.extend_from_slice(format!("X-H{i}: v\r\n").as_bytes());
+        }
+        req.extend_from_slice(b"\r\n");
+        let resp = raw_roundtrip(server.addr(), &req);
+        assert!(resp.starts_with("HTTP/1.1 431"), "{resp}");
+        server.stop();
+    }
+
+    #[test]
+    fn steady_state_is_allocation_free() {
+        let server = echo_server();
+        let stats = server.stats();
+        let mut s = TcpStream::connect(server.addr()).unwrap();
+        let body = "{\"client_id\":\"warm\",\"app\":\"clomp\",\"alpha\":0.8,\"beta\":0.2}";
+        let req = format!(
+            "POST /v1/echo HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n{body}",
+            body.len()
+        );
+        // Warmup: let every buffer reach its high-water mark.
+        for _ in 0..10 {
+            s.write_all(req.as_bytes()).unwrap();
+            read_one_response(&mut s);
+        }
+        let allocs_before = stats.alloc_events.load(Ordering::Relaxed);
+        let requests_before = stats.requests.load(Ordering::Relaxed);
+        for _ in 0..200 {
+            s.write_all(req.as_bytes()).unwrap();
+            read_one_response(&mut s);
+        }
+        let allocs = stats.alloc_events.load(Ordering::Relaxed) - allocs_before;
+        let requests = stats.requests.load(Ordering::Relaxed) - requests_before;
+        assert_eq!(requests, 200);
+        assert_eq!(
+            allocs, 0,
+            "HTTP+JSON layers allocated {allocs} times over {requests} steady-state requests"
+        );
         server.stop();
     }
 
     #[test]
     fn percent_decoding() {
-        assert_eq!(percent_decode("a%20b+c"), "a b c");
-        assert_eq!(percent_decode("plain"), "plain");
-        assert_eq!(percent_decode("bad%zz"), "bad%zz");
-        assert_eq!(percent_decode("%41"), "A");
+        assert_eq!(percent_decode("a%20b+c").unwrap(), "a b c");
+        let plain = percent_decode("plain").unwrap();
+        assert_eq!(plain, "plain");
+        assert!(matches!(plain, Cow::Borrowed(_)), "plain values must borrow");
+        assert_eq!(percent_decode("bad%zz").unwrap(), "bad%zz");
+        assert_eq!(percent_decode("%41").unwrap(), "A");
+        // Invalid UTF-8 after decoding is rejected deterministically,
+        // never lossy-substituted.
+        assert_eq!(percent_decode("%FF"), None);
+        assert_eq!(percent_decode("ok%FFtail"), None);
+    }
+
+    #[test]
+    fn query_lookup() {
+        assert_eq!(query_get("a=1&b=two", "b").unwrap(), "two");
+        assert_eq!(query_get("a=1&b=two", "a").unwrap(), "1");
+        assert_eq!(query_get("flag", "flag").unwrap(), "");
+        assert_eq!(query_get("a=1", "missing"), None);
+        assert_eq!(query_get("k=%FF", "k"), None);
     }
 }

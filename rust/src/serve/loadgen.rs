@@ -4,17 +4,23 @@
 //! configuration (`/v1/suggest`), runs it on a *local* device simulator
 //! ([`JetsonNano`]) at low fidelity, and reports the measurement back
 //! (`/v1/report`). Sessions are partitioned across client threads
-//! (round-robin), each thread reuses one keep-alive connection, and every
-//! HTTP round-trip is timed; the report prints throughput plus p50/p99
-//! latency — the numbers the service exists to keep flat under load.
+//! (round-robin). Each thread owns one persistent keep-alive connection —
+//! a pool of `threads` connections total — and reuses it for every
+//! request, reconnecting only when the server drops it; the report
+//! includes connection-reuse stats (requests per connection, reconnects)
+//! so regressions in keep-alive behaviour are visible. Request bodies are
+//! serialized with [`JsonWriter`] into reusable buffers and responses are
+//! read with [`JsonSlice`], so the client side of the loop is as
+//! allocation-light as the server side and does not become the
+//! bottleneck it is supposed to be measuring.
 
+use super::http::find_subsequence;
 use crate::apps::{self, AppKind, AppModel};
 use crate::device::{Device, JetsonNano, PowerMode};
-use crate::util::json::Json;
+use crate::util::json::{Json, JsonSlice, JsonWriter};
 use crate::util::stats;
 use anyhow::{anyhow, Context, Result};
-use std::collections::BTreeMap;
-use std::io::{BufRead, BufReader, Read, Write};
+use std::io::{Read, Write};
 use std::net::TcpStream;
 use std::time::{Duration, Instant};
 
@@ -27,7 +33,8 @@ pub struct LoadgenConfig {
     pub sessions: usize,
     /// Total suggest+report round-trips across all sessions.
     pub rounds: usize,
-    /// Client threads (each owns `sessions / threads` sessions).
+    /// Client threads (each owns `sessions / threads` sessions and one
+    /// persistent keep-alive connection).
     pub threads: usize,
     /// Applications to spread sessions over.
     pub apps: Vec<AppKind>,
@@ -71,9 +78,24 @@ pub struct LoadgenReport {
     pub p50_ms: f64,
     pub p99_ms: f64,
     pub mean_ms: f64,
+    /// Keep-alive pool stats: connections opened (threads + reconnects),
+    /// reconnects forced by the server, HTTP requests sent.
+    pub connections: usize,
+    pub reconnects: usize,
+    pub requests: usize,
 }
 
 impl LoadgenReport {
+    /// Mean HTTP requests served per TCP connection (the keep-alive
+    /// reuse factor; ~2x rounds/threads when reuse is healthy).
+    pub fn requests_per_connection(&self) -> f64 {
+        if self.connections == 0 {
+            0.0
+        } else {
+            self.requests as f64 / self.connections as f64
+        }
+    }
+
     /// Print the human-readable summary the CLI shows.
     pub fn print(&self) {
         println!(
@@ -88,102 +110,180 @@ impl LoadgenReport {
             self.p99_ms,
             self.mean_ms
         );
+        println!(
+            "connections: {} ({} reconnects) | {:.0} requests/connection",
+            self.connections,
+            self.reconnects,
+            self.requests_per_connection()
+        );
     }
 }
 
-/// A tiny keep-alive HTTP/1.1 client (shared with the integration tests).
+/// A tiny keep-alive HTTP/1.1 client (shared with the integration tests
+/// and benches). All buffers are connection-lifetime and reused: the
+/// request frame, the response accumulation buffer, and the parsed body
+/// span all live in the client, so a steady request loop does not
+/// allocate.
 pub struct HttpClient {
     addr: String,
-    reader: BufReader<TcpStream>,
-    writer: TcpStream,
+    stream: TcpStream,
+    /// Response accumulation buffer (reused; grows to high-water mark).
+    rbuf: Vec<u8>,
+    rfilled: usize,
+    /// Last response body span inside `rbuf` (valid until the next call).
+    body_span: (usize, usize),
+    /// Request frame scratch (head + body, one write syscall).
+    frame: Vec<u8>,
+    requests: u64,
+    reconnects: u64,
 }
 
 impl HttpClient {
     pub fn connect(addr: &str) -> Result<HttpClient> {
+        let stream = Self::dial(addr)?;
+        Ok(HttpClient {
+            addr: addr.to_string(),
+            stream,
+            rbuf: vec![0u8; 4096],
+            rfilled: 0,
+            body_span: (0, 0),
+            frame: Vec::with_capacity(1024),
+            requests: 0,
+            reconnects: 0,
+        })
+    }
+
+    fn dial(addr: &str) -> Result<TcpStream> {
         let stream = TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
         stream.set_nodelay(true).ok();
-        stream
-            .set_read_timeout(Some(Duration::from_secs(30)))
-            .ok();
-        let reader = BufReader::new(stream.try_clone().context("cloning stream")?);
-        Ok(HttpClient { addr: addr.to_string(), reader, writer: stream })
+        stream.set_read_timeout(Some(Duration::from_secs(30))).ok();
+        Ok(stream)
     }
 
-    /// POST a JSON body; reconnects once on a broken connection.
+    /// HTTP requests sent on this client (across reconnects).
+    pub fn requests(&self) -> u64 {
+        self.requests
+    }
+
+    /// Times the connection had to be re-established.
+    pub fn reconnects(&self) -> u64 {
+        self.reconnects
+    }
+
+    /// The body of the last response (valid until the next request).
+    pub fn last_body(&self) -> &[u8] {
+        &self.rbuf[self.body_span.0..self.body_span.1]
+    }
+
+    /// POST raw bytes; returns the status. Reconnects once on a broken
+    /// connection. The hot path of the load generator.
+    pub fn post_slice(&mut self, path: &str, body: &[u8]) -> Result<u16> {
+        match self.roundtrip("POST", path, body) {
+            Ok(s) => Ok(s),
+            Err(_) => {
+                self.stream = Self::dial(&self.addr)?;
+                self.reconnects += 1;
+                self.roundtrip("POST", path, body)
+            }
+        }
+    }
+
+    /// GET a path (with query string); returns the status. Reconnects
+    /// once on failure.
+    pub fn get_slice(&mut self, path_and_query: &str) -> Result<u16> {
+        match self.roundtrip("GET", path_and_query, b"") {
+            Ok(s) => Ok(s),
+            Err(_) => {
+                self.stream = Self::dial(&self.addr)?;
+                self.reconnects += 1;
+                self.roundtrip("GET", path_and_query, b"")
+            }
+        }
+    }
+
+    /// POST a JSON tree body (test/compat surface; allocates).
     pub fn post(&mut self, path: &str, body: &Json) -> Result<(u16, Json)> {
         let payload = body.to_string();
-        match self.roundtrip("POST", path, Some(&payload)) {
-            Ok(r) => Ok(r),
-            Err(_) => {
-                *self = HttpClient::connect(&self.addr)?;
-                self.roundtrip("POST", path, Some(&payload))
-            }
-        }
+        let status = self.post_slice(path, payload.as_bytes())?;
+        Ok((status, self.parse_body()))
     }
 
-    /// GET a path (with query string); reconnects once on failure.
+    /// GET returning a parsed JSON tree (test/compat surface; allocates).
     pub fn get(&mut self, path_and_query: &str) -> Result<(u16, Json)> {
-        match self.roundtrip("GET", path_and_query, None) {
-            Ok(r) => Ok(r),
-            Err(_) => {
-                *self = HttpClient::connect(&self.addr)?;
-                self.roundtrip("GET", path_and_query, None)
-            }
-        }
+        let status = self.get_slice(path_and_query)?;
+        Ok((status, self.parse_body()))
     }
 
-    fn roundtrip(&mut self, method: &str, target: &str, body: Option<&str>) -> Result<(u16, Json)> {
-        let body = body.unwrap_or("");
-        let req = format!(
-            "{method} {target} HTTP/1.1\r\nHost: lasp\r\nContent-Type: application/json\r\nContent-Length: {}\r\n\r\n{body}",
-            body.len()
-        );
-        self.writer.write_all(req.as_bytes()).context("writing request")?;
-        self.writer.flush().ok();
-
-        // Status line.
-        let mut line = String::new();
-        self.reader.read_line(&mut line).context("reading status line")?;
-        if line.is_empty() {
-            return Err(anyhow!("connection closed"));
-        }
-        let status: u16 = line
-            .split_whitespace()
-            .nth(1)
-            .and_then(|s| s.parse().ok())
-            .ok_or_else(|| anyhow!("bad status line: {line:?}"))?;
-
-        // Headers.
-        let mut content_length = 0usize;
-        loop {
-            let mut h = String::new();
-            let n = self.reader.read_line(&mut h).context("reading header")?;
-            if n == 0 {
-                return Err(anyhow!("eof in headers"));
-            }
-            let h = h.trim_end();
-            if h.is_empty() {
-                break;
-            }
-            if let Some((name, value)) = h.split_once(':') {
-                if name.trim().eq_ignore_ascii_case("content-length") {
-                    content_length = value.trim().parse().unwrap_or(0);
-                }
-            }
-        }
-
-        // Body.
-        let mut raw = vec![0u8; content_length];
-        self.reader.read_exact(&mut raw).context("reading body")?;
-        let text = String::from_utf8_lossy(&raw);
+    fn parse_body(&self) -> Json {
+        let text = String::from_utf8_lossy(self.last_body());
         // Non-JSON bodies (e.g. the Prometheus text of /metrics) come
         // back as a raw string value.
-        let json = if text.trim().is_empty() {
+        if text.trim().is_empty() {
             Json::Null
         } else {
             Json::parse(&text).unwrap_or_else(|_| Json::Str(text.into_owned()))
-        };
-        Ok((status, json))
+        }
+    }
+
+    fn roundtrip(&mut self, method: &str, target: &str, body: &[u8]) -> Result<u16> {
+        // One frame, one write.
+        self.frame.clear();
+        let _ = write!(
+            self.frame,
+            "{method} {target} HTTP/1.1\r\nHost: lasp\r\nContent-Type: application/json\r\nContent-Length: {}\r\n\r\n",
+            body.len()
+        );
+        self.frame.extend_from_slice(body);
+        self.stream.write_all(&self.frame).context("writing request")?;
+        self.requests += 1;
+
+        // Accumulate the response into the reused buffer. The previous
+        // response is dead by contract, so start from scratch.
+        self.rfilled = 0;
+        loop {
+            if let Some(hdr_end) = find_subsequence(&self.rbuf[..self.rfilled], b"\r\n\r\n") {
+                let head = std::str::from_utf8(&self.rbuf[..hdr_end])
+                    .map_err(|_| anyhow!("non-UTF-8 response head"))?;
+                let mut lines = head.split("\r\n");
+                let status: u16 = lines
+                    .next()
+                    .and_then(|l| l.split_whitespace().nth(1))
+                    .and_then(|s| s.parse().ok())
+                    .ok_or_else(|| anyhow!("bad status line"))?;
+                let mut content_length = 0usize;
+                for line in lines {
+                    if let Some((name, value)) = line.split_once(':') {
+                        if name.trim().eq_ignore_ascii_case("content-length") {
+                            content_length = value.trim().parse().unwrap_or(0);
+                        }
+                    }
+                }
+                let body_start = hdr_end + 4;
+                let total = body_start + content_length;
+                while self.rfilled < total {
+                    self.fill()?;
+                }
+                self.body_span = (body_start, total);
+                return Ok(status);
+            }
+            self.fill()?;
+        }
+    }
+
+    fn fill(&mut self) -> Result<()> {
+        if self.rfilled == self.rbuf.len() {
+            let new_len = self.rbuf.len() * 2;
+            self.rbuf.resize(new_len, 0);
+        }
+        let n = self
+            .stream
+            .read(&mut self.rbuf[self.rfilled..])
+            .context("reading response")?;
+        if n == 0 {
+            return Err(anyhow!("connection closed"));
+        }
+        self.rfilled += n;
+        Ok(())
     }
 }
 
@@ -196,17 +296,28 @@ struct ClientSession {
     device: JetsonNano,
 }
 
-fn request_body(cfg: &LoadgenConfig, s: &ClientSession) -> BTreeMap<String, Json> {
-    let mut obj = BTreeMap::new();
-    obj.insert("client_id".to_string(), Json::Str(s.client_id.clone()));
-    obj.insert("app".to_string(), Json::Str(s.kind.name().to_string()));
-    obj.insert(
-        "device".to_string(),
-        Json::Str(s.mode.name().to_ascii_lowercase()),
-    );
-    obj.insert("alpha".to_string(), Json::Num(cfg.alpha));
-    obj.insert("beta".to_string(), Json::Num(cfg.beta));
-    obj
+/// Serialize a suggest/report body into `buf` (cleared first). The
+/// measurement fields are appended only when `Some`.
+fn write_body(
+    buf: &mut Vec<u8>,
+    cfg: &LoadgenConfig,
+    s: &ClientSession,
+    measurement: Option<(usize, f64, f64)>,
+) {
+    buf.clear();
+    let mut w = JsonWriter::new(buf);
+    w.begin_obj();
+    w.field_str("client_id", &s.client_id);
+    w.field_str("app", s.kind.name());
+    w.field_str("device", s.mode.lower_name());
+    w.field_num("alpha", cfg.alpha);
+    w.field_num("beta", cfg.beta);
+    if let Some((arm, time_s, power_w)) = measurement {
+        w.field_num("arm", arm as f64);
+        w.field_num("time_s", time_s);
+        w.field_num("power_w", power_w);
+    }
+    w.end_obj();
 }
 
 /// Drive the configured load and aggregate the per-thread results.
@@ -227,13 +338,15 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
     let mut latencies: Vec<f64> = Vec::with_capacity(cfg.rounds * 2);
     let mut errors = 0usize;
     let mut rounds_done = 0usize;
+    let mut reconnects = 0usize;
+    let mut requests = 0usize;
     for h in handles {
-        let (lat, errs, rounds) = h
-            .join()
-            .map_err(|_| anyhow!("loadgen worker panicked"))??;
-        latencies.extend(lat);
-        errors += errs;
-        rounds_done += rounds;
+        let w = h.join().map_err(|_| anyhow!("loadgen worker panicked"))??;
+        latencies.extend(w.latencies);
+        errors += w.errors;
+        rounds_done += w.rounds;
+        reconnects += w.reconnects;
+        requests += w.requests;
     }
     let elapsed = t0.elapsed().as_secs_f64().max(1e-9);
     Ok(LoadgenReport {
@@ -245,15 +358,22 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
         p50_ms: stats::quantile(&latencies, 0.5) * 1e3,
         p99_ms: stats::quantile(&latencies, 0.99) * 1e3,
         mean_ms: stats::mean(&latencies) * 1e3,
+        connections: threads + reconnects,
+        reconnects,
+        requests,
     })
 }
 
-fn worker(
-    thread_id: usize,
-    threads: usize,
-    my_rounds: usize,
-    cfg: &LoadgenConfig,
-) -> Result<(Vec<f64>, usize, usize)> {
+/// Per-thread results.
+struct WorkerOut {
+    latencies: Vec<f64>,
+    errors: usize,
+    rounds: usize,
+    reconnects: usize,
+    requests: usize,
+}
+
+fn worker(thread_id: usize, threads: usize, my_rounds: usize, cfg: &LoadgenConfig) -> Result<WorkerOut> {
     // This thread owns sessions thread_id, thread_id+threads, ...
     let mut sessions: Vec<ClientSession> = (0..cfg.sessions)
         .skip(thread_id)
@@ -272,11 +392,18 @@ fn worker(
         })
         .collect();
     if sessions.is_empty() {
-        return Ok((vec![], 0, 0));
+        return Ok(WorkerOut {
+            latencies: vec![],
+            errors: 0,
+            rounds: 0,
+            reconnects: 0,
+            requests: 0,
+        });
     }
     let models: Vec<Box<dyn AppModel>> = cfg.apps.iter().map(|&k| apps::build(k)).collect();
     let mut client = HttpClient::connect(&cfg.addr)?;
     let mut latencies = Vec::with_capacity(my_rounds * 2);
+    let mut body = Vec::with_capacity(512);
     let mut errors = 0usize;
     let mut rounds_done = 0usize;
 
@@ -285,10 +412,10 @@ fn worker(
         let s = &mut sessions[idx];
 
         // Suggest.
-        let body = Json::Obj(request_body(cfg, s));
+        write_body(&mut body, cfg, s, None);
         let t0 = Instant::now();
-        let (status, resp) = match client.post("/v1/suggest", &body) {
-            Ok(r) => r,
+        let status = match client.post_slice("/v1/suggest", &body) {
+            Ok(st) => st,
             Err(_) => {
                 errors += 1;
                 continue;
@@ -299,9 +426,16 @@ fn worker(
             errors += 1;
             continue;
         }
-        let Some(arm) = resp.get("arm").and_then(Json::as_usize) else {
-            errors += 1;
-            continue;
+        let arm = match JsonSlice::parse(client.last_body())
+            .ok()
+            .and_then(|v| v.get("arm"))
+            .and_then(|v| v.as_usize())
+        {
+            Some(a) => a,
+            None => {
+                errors += 1;
+                continue;
+            }
         };
 
         // Evaluate locally on the simulated device.
@@ -309,14 +443,10 @@ fn worker(
         let m = s.device.run(&workload);
 
         // Report.
-        let mut obj = request_body(cfg, s);
-        obj.insert("arm".to_string(), Json::Num(arm as f64));
-        obj.insert("time_s".to_string(), Json::Num(m.time_s));
-        obj.insert("power_w".to_string(), Json::Num(m.power_w));
-        let body = Json::Obj(obj);
+        write_body(&mut body, cfg, s, Some((arm, m.time_s, m.power_w)));
         let t0 = Instant::now();
-        match client.post("/v1/report", &body) {
-            Ok((202, _)) | Ok((200, _)) => {
+        match client.post_slice("/v1/report", &body) {
+            Ok(202) | Ok(200) => {
                 latencies.push(t0.elapsed().as_secs_f64());
                 rounds_done += 1;
             }
@@ -325,7 +455,13 @@ fn worker(
             }
         }
     }
-    Ok((latencies, errors, rounds_done))
+    Ok(WorkerOut {
+        latencies,
+        errors,
+        rounds: rounds_done,
+        reconnects: client.reconnects() as usize,
+        requests: client.requests() as usize,
+    })
 }
 
 #[cfg(test)]
@@ -344,5 +480,23 @@ mod tests {
     fn rejects_empty_config() {
         let cfg = LoadgenConfig { sessions: 0, ..Default::default() };
         assert!(run(&cfg).is_err());
+    }
+
+    #[test]
+    fn report_reuse_factor() {
+        let r = LoadgenReport {
+            rounds: 100,
+            sessions: 8,
+            errors: 0,
+            elapsed_s: 1.0,
+            round_trips_per_s: 100.0,
+            p50_ms: 1.0,
+            p99_ms: 2.0,
+            mean_ms: 1.2,
+            connections: 4,
+            reconnects: 0,
+            requests: 200,
+        };
+        assert!((r.requests_per_connection() - 50.0).abs() < 1e-9);
     }
 }

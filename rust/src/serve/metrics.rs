@@ -4,6 +4,7 @@
 //! lightweight — carries over to the service: observing a latency is two
 //! relaxed atomic adds, nothing allocates on the hot path.
 
+use super::http::TransportStats;
 use crate::telemetry::ResourceReport;
 use std::fmt::Write as _;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -152,7 +153,13 @@ impl Metrics {
     }
 
     /// Render the full `/metrics` page.
-    pub fn render(&self, sessions: usize, shards: usize, resources: &ResourceReport) -> String {
+    pub fn render(
+        &self,
+        sessions: usize,
+        shards: usize,
+        transport: &TransportStats,
+        resources: &ResourceReport,
+    ) -> String {
         let mut out = String::with_capacity(2048);
         let gauge = |out: &mut String, name: &str, v: f64| {
             let _ = writeln!(out, "# TYPE {name} gauge\n{name} {v}");
@@ -175,6 +182,13 @@ impl Metrics {
         counter(&mut out, "lasp_serve_checkpoints_total", &self.checkpoints);
         counter(&mut out, "lasp_serve_checkpoint_sessions_total", &self.checkpoint_sessions);
         counter(&mut out, "lasp_serve_sessions_restored_total", &self.sessions_restored);
+        // Transport plane: the zero-allocation contract is observable —
+        // `alloc_events_total` flat under load means the HTTP+JSON layers
+        // are not heap-allocating per request.
+        counter(&mut out, "lasp_serve_transport_connections_total", &transport.connections);
+        counter(&mut out, "lasp_serve_transport_requests_total", &transport.requests);
+        counter(&mut out, "lasp_serve_transport_alloc_events_total", &transport.alloc_events);
+        counter(&mut out, "lasp_serve_transport_rejected_431_total", &transport.rejected_431);
         self.suggest_latency.render("lasp_serve_suggest_latency_us", &mut out);
         self.report_latency.render("lasp_serve_report_latency_us", &mut out);
         self.best_latency.render("lasp_serve_best_latency_us", &mut out);
@@ -221,9 +235,13 @@ mod tests {
         let m = Metrics::new();
         m.http_requests.fetch_add(3, Ordering::Relaxed);
         m.suggest_latency.observe(Duration::from_micros(120));
-        let page = m.render(5, 8, &ResourceReport::default());
+        let t = TransportStats::default();
+        t.requests.fetch_add(7, Ordering::Relaxed);
+        let page = m.render(5, 8, &t, &ResourceReport::default());
         assert!(page.contains("lasp_serve_http_requests_total 3"), "{page}");
         assert!(page.contains("lasp_serve_sessions 5"), "{page}");
+        assert!(page.contains("lasp_serve_transport_requests_total 7"), "{page}");
+        assert!(page.contains("lasp_serve_transport_alloc_events_total 0"), "{page}");
         assert!(page.contains("lasp_serve_suggest_latency_us_bucket{le=\"250\"} 1"));
         assert!(page.contains("lasp_serve_process_peak_rss_mib"));
     }

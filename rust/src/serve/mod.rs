@@ -8,9 +8,13 @@
 //! on-line autotuning frameworks (mARGOt) and MAB-driven edge decision
 //! services:
 //!
-//! * [`http`] — a dependency-free HTTP/1.1 + JSON server over
-//!   `std::net::TcpListener` with a fixed worker thread pool and bounded
-//!   hand-off (the [`crate::coordinator`] backpressure idiom);
+//! * [`http`] — a dependency-free HTTP/1.1 server over
+//!   `std::net::TcpListener` with a fixed worker thread pool, bounded
+//!   hand-off (the [`crate::coordinator`] backpressure idiom), and an
+//!   **allocation-free steady state**: per-connection reusable byte
+//!   buffers, slice-based request parsing, keep-alive with pipelining,
+//!   and counted buffer-growth events ([`http::TransportStats`]) that
+//!   certify the zero-allocation contract under load;
 //! * [`store`] — the **sharded session store**: sessions keyed by
 //!   `(client_id, app, device, policy)` hash onto N shards, each shard
 //!   owning its bandit tuners behind a single lock, so the store scales
@@ -26,8 +30,9 @@
 //!   (`/v1/suggest`, `/v1/report`, `/v1/best`, `/v1/checkpoint`,
 //!   `/healthz`, `/metrics`);
 //! * [`loadgen`] — a closed-loop load generator (`lasp loadgen`) that
-//!   hammers a running server with concurrent sessions across all four
-//!   apps and reports throughput + p50/p99 latency.
+//!   hammers a running server through a pool of persistent keep-alive
+//!   connections across all four apps and reports throughput, p50/p99
+//!   latency, and connection-reuse stats.
 
 pub mod batch;
 pub mod checkpoint;
@@ -37,6 +42,7 @@ pub mod metrics;
 pub mod service;
 pub mod store;
 
+pub use http::{ResponseBuf, TransportStats};
 pub use loadgen::{HttpClient, LoadgenConfig, LoadgenReport};
 pub use service::{start, ServeConfig, ServerHandle, TuningService};
-pub use store::{PolicyKind, SessionKey};
+pub use store::{KeyRef, PolicyKind, SessionId, SessionKey};

@@ -2,6 +2,13 @@
 //! transport, wired to the sharded store, the batched ingest plane and the
 //! checkpointer.
 //!
+//! The `/v1/suggest` and `/v1/report` hot paths are allocation-free in
+//! the HTTP+JSON layers: request bodies are read through the borrowed
+//! [`JsonSlice`] (no tree, strings borrow from the connection buffer),
+//! session identity is resolved to an interned [`SessionId`] (no key
+//! clone), and responses serialize through [`JsonWriter`] into the
+//! worker's reusable [`ResponseBuf`].
+//!
 //! Endpoints:
 //!
 //! | method | path             | purpose                                      |
@@ -12,21 +19,21 @@
 //! | POST   | `/v1/checkpoint` | force a snapshot of every session            |
 //! | GET    | `/healthz`       | liveness + session count                     |
 //! | GET    | `/metrics`       | Prometheus counters, latency histograms,     |
-//! |        |                  | process [`ResourceReport`]                   |
+//! |        |                  | transport stats, process [`ResourceReport`]  |
 //!
 //! [`ResourceReport`]: crate::telemetry::ResourceReport
 
 use super::batch::{BatchIngest, Report};
 use super::checkpoint;
-use super::http::{HttpHandler, HttpServer, Request, Response};
+use super::http::{self, HttpHandler, HttpServer, Request, ResponseBuf, TransportStats};
 use super::metrics::Metrics;
-use super::store::{AppsCache, PolicyKind, SessionKey, ShardedStore};
+use super::store::{AppsCache, KeyRef, PolicyKind, ShardedStore};
 use crate::apps::AppKind;
 use crate::device::PowerMode;
 use crate::telemetry::ResourceTracker;
-use crate::util::json::Json;
+use crate::util::json::{JsonSlice, JsonWriter};
 use anyhow::{anyhow, Context, Result};
-use std::collections::BTreeMap;
+use std::borrow::Cow;
 use std::net::{SocketAddr, TcpListener};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -86,6 +93,88 @@ impl ServeConfig {
     }
 }
 
+/// A request's parameter source: borrowed JSON body (POST) or raw query
+/// string (GET). Both resolve values without allocating unless the wire
+/// bytes contain escapes.
+enum Params<'a> {
+    Body(JsonSlice<'a>),
+    Query(&'a str),
+}
+
+impl<'a> Params<'a> {
+    /// `Ok(None)` = absent. A present-but-undecodable query value (e.g.
+    /// percent-encoding that is not UTF-8) is an error, never a silent
+    /// fall-back to the parameter's default.
+    fn get_str(&self, name: &str) -> std::result::Result<Option<Cow<'a, str>>, String> {
+        match self {
+            Params::Body(b) => {
+                let Some(v) = b.get(name) else {
+                    return Ok(None);
+                };
+                if let Some(s) = v.as_str() {
+                    return Ok(Some(s));
+                }
+                // Tolerate numeric values where strings are expected
+                // (e.g. a numeric client_id); cold path, may allocate.
+                match v.as_f64() {
+                    Some(n) => Ok(Some(Cow::Owned(if n.fract() == 0.0 && n.abs() < 1e15 {
+                        format!("{}", n as i64)
+                    } else {
+                        format!("{n}")
+                    }))),
+                    None => Err(format!("bad {name}")),
+                }
+            }
+            Params::Query(q) => match http::query_get_raw(q, name) {
+                None => Ok(None),
+                Some(raw) => match http::percent_decode(raw) {
+                    Some(v) => Ok(Some(v)),
+                    None => Err(format!("bad percent-encoding in {name}")),
+                },
+            },
+        }
+    }
+
+    /// `Ok(None)` = absent; present but unparsable is an error.
+    fn get_f64(&self, name: &str) -> std::result::Result<Option<f64>, String> {
+        match self {
+            Params::Body(b) => match b.get(name) {
+                None => Ok(None),
+                Some(v) => v
+                    .as_f64()
+                    .or_else(|| v.as_str().and_then(|s| s.parse().ok()))
+                    .map(Some)
+                    .ok_or_else(|| format!("bad {name}")),
+            },
+            Params::Query(_) => match self.get_str(name)? {
+                None => Ok(None),
+                Some(s) => s.parse::<f64>().map(Some).map_err(|_| format!("bad {name}")),
+            },
+        }
+    }
+}
+
+/// The session identity + objective weights parsed off a request.
+struct ParsedKey<'a> {
+    client_id: Cow<'a, str>,
+    app: AppKind,
+    device: PowerMode,
+    policy: PolicyKind,
+    alpha: f64,
+    beta: f64,
+}
+
+impl ParsedKey<'_> {
+    fn key_ref(&self) -> KeyRef<'_> {
+        KeyRef {
+            client_id: &*self.client_id,
+            app: self.app,
+            device: self.device,
+            policy: self.policy,
+        }
+    }
+}
+
 /// Shared state behind every worker thread.
 pub struct TuningService {
     cfg: ServeConfig,
@@ -93,93 +182,80 @@ pub struct TuningService {
     apps: Arc<AppsCache>,
     ingest: BatchIngest,
     metrics: Arc<Metrics>,
+    transport: Arc<TransportStats>,
     tracker: Mutex<ResourceTracker>,
 }
 
 impl TuningService {
-    /// Route one request.
-    pub fn handle(&self, req: &Request) -> Response {
+    /// Route one request, serializing into the worker's reusable buffer.
+    pub fn handle(&self, req: &Request<'_>, out: &mut ResponseBuf) {
         self.metrics.http_requests.fetch_add(1, Ordering::Relaxed);
-        let resp = match (req.method.as_str(), req.path.as_str()) {
-            ("POST", "/v1/suggest") => self.suggest(req),
-            ("POST", "/v1/report") => self.report(req),
-            ("GET", "/v1/best") => self.best(req),
-            ("POST", "/v1/checkpoint") => self.checkpoint_now(),
-            ("GET", "/healthz") => self.healthz(),
-            ("GET", "/metrics") => self.metrics_page(),
-            ("POST" | "GET", _) => Response::error(404, "no such endpoint"),
-            _ => Response::error(405, "method not allowed"),
-        };
-        if resp.status >= 400 {
+        match (req.method, req.path) {
+            ("POST", "/v1/suggest") => self.suggest(req, out),
+            ("POST", "/v1/report") => self.report(req, out),
+            ("GET", "/v1/best") => self.best(req, out),
+            ("POST", "/v1/checkpoint") => self.checkpoint_now(out),
+            ("GET", "/healthz") => self.healthz(out),
+            ("GET", "/metrics") => self.metrics_page(out),
+            ("POST" | "GET", _) => out.error(404, "no such endpoint"),
+            _ => out.error(405, "method not allowed"),
+        }
+        if out.status() >= 400 {
             self.metrics.http_errors.fetch_add(1, Ordering::Relaxed);
         }
-        resp
     }
 
-    /// Read the session identity (+ weights) from a request body or query.
-    fn parse_key(
-        &self,
-        get: impl Fn(&str) -> Option<String>,
-    ) -> Result<(SessionKey, f64, f64), String> {
-        let client_id = get("client_id").unwrap_or_default();
+    /// Read the session identity (+ weights) from a parameter source.
+    fn parse_key<'a>(&self, p: &Params<'a>) -> std::result::Result<ParsedKey<'a>, String> {
+        let client_id = p.get_str("client_id")?.unwrap_or(Cow::Borrowed(""));
         if client_id.is_empty() {
             return Err("missing client_id".to_string());
         }
-        let app: AppKind = get("app")
+        let app: AppKind = p
+            .get_str("app")?
             .ok_or_else(|| "missing app".to_string())?
             .parse()
-            .map_err(|e| format!("{e:#}"))?;
-        let device: PowerMode = match get("device") {
-            Some(d) => d.parse().map_err(|e| format!("{e:#}"))?,
+            .map_err(|e: anyhow::Error| format!("{e:#}"))?;
+        let device: PowerMode = match p.get_str("device")? {
+            Some(d) => d.parse().map_err(|e: anyhow::Error| format!("{e:#}"))?,
             None => PowerMode::Maxn,
         };
         let k = self.apps.arms(app);
-        let policy: PolicyKind = match get("policy") {
-            Some(p) => p.parse().map_err(|e| format!("{e:#}"))?,
+        let policy: PolicyKind = match p.get_str("policy")? {
+            Some(s) => s.parse().map_err(|e: anyhow::Error| format!("{e:#}"))?,
             None => PolicyKind::default_for(k),
         };
-        let parse_weight = |name: &str, default: f64| -> Result<f64, String> {
-            match get(name) {
-                None => Ok(default),
-                Some(s) => s.parse::<f64>().map_err(|_| format!("bad {name}")),
-            }
-        };
-        let alpha = parse_weight("alpha", 0.8)?;
-        let beta = parse_weight("beta", 0.2)?;
+        let alpha = p.get_f64("alpha")?.unwrap_or(0.8);
+        let beta = p.get_f64("beta")?.unwrap_or(0.2);
         if !(0.0..=1.0).contains(&alpha) || !(0.0..=1.0).contains(&beta) || alpha + beta == 0.0 {
             return Err("alpha/beta must lie in [0,1] with alpha+beta > 0".to_string());
         }
-        Ok((SessionKey { client_id, app, device, policy }, alpha, beta))
+        Ok(ParsedKey { client_id, app, device, policy, alpha, beta })
     }
 
-    fn body_getter(body: &Json) -> impl Fn(&str) -> Option<String> + '_ {
-        move |name: &str| {
-            body.get(name).and_then(|v| match v {
-                Json::Str(s) => Some(s.clone()),
-                Json::Num(n) => Some(format!("{n}")),
-                _ => None,
-            })
-        }
-    }
-
-    fn suggest(&self, req: &Request) -> Response {
+    fn suggest(&self, req: &Request<'_>, out: &mut ResponseBuf) {
         let t0 = Instant::now();
-        let body = match req.json() {
+        let body = match JsonSlice::parse(req.body) {
             Ok(b) => b,
-            Err(e) => return Response::error(400, &format!("bad JSON: {e}")),
+            Err(e) => return out.error(400, &format!("bad JSON: {e}")),
         };
-        let (key, alpha, beta) = match self.parse_key(Self::body_getter(&body)) {
+        let p = Params::Body(body);
+        let pk = match self.parse_key(&p) {
             Ok(x) => x,
-            Err(e) => return Response::error(400, &e),
+            Err(e) => return out.error(400, &e),
         };
-        let k = self.apps.arms(key.app);
-        let shard_i = self.store.shard_of(&key);
+        let kref = pk.key_ref();
+        let hash = kref.hash64();
+        let id = self.store.intern(&kref, hash);
+        let k = self.apps.arms(pk.app);
+        let shard_i = self.store.shard_of_hash(hash);
         let (arm, total_pulls, created) = {
-            let mut shard = self.store.lock_shard(shard_i);
-            let (session, created) = match shard.get_or_create(&key, alpha, beta, k) {
-                Ok(x) => x,
-                Err(e) => return Response::error(500, &e),
-            };
+            let mut shard = self.store.write_shard(shard_i);
+            let (session, created) =
+                match self.store.get_or_create(&mut shard, id, pk.alpha, pk.beta, k) {
+                    Ok(x) => x,
+                    Err(e) => return out.error(500, &e),
+                };
             session.suggests += 1;
             let arm = session.tuner.select();
             (arm, session.tuner.total_pulls(), created)
@@ -188,111 +264,135 @@ impl TuningService {
             self.metrics.sessions_created.fetch_add(1, Ordering::Relaxed);
         }
         self.metrics.suggests.fetch_add(1, Ordering::Relaxed);
-        let mut obj = BTreeMap::new();
-        obj.insert("arm".to_string(), Json::Num(arm as f64));
-        obj.insert("config".to_string(), Json::Str(self.apps.describe(key.app, arm)));
-        obj.insert("shard".to_string(), Json::Num(shard_i as f64));
-        obj.insert("total_pulls".to_string(), Json::Num(total_pulls));
-        let resp = Response::json(200, &Json::Obj(obj));
+        self.apps.describe_into(pk.app, arm, &mut out.scratch);
+        let mut w = JsonWriter::new(&mut out.body);
+        w.begin_obj();
+        w.field_num("arm", arm as f64);
+        w.field_str("config", &out.scratch);
+        w.field_num("shard", shard_i as f64);
+        w.field_num("total_pulls", total_pulls);
+        w.end_obj();
         self.metrics.suggest_latency.observe(t0.elapsed());
-        resp
     }
 
-    fn report(&self, req: &Request) -> Response {
+    fn report(&self, req: &Request<'_>, out: &mut ResponseBuf) {
         let t0 = Instant::now();
-        let body = match req.json() {
+        let body = match JsonSlice::parse(req.body) {
             Ok(b) => b,
-            Err(e) => return Response::error(400, &format!("bad JSON: {e}")),
+            Err(e) => return out.error(400, &format!("bad JSON: {e}")),
         };
-        let (key, alpha, beta) = match self.parse_key(Self::body_getter(&body)) {
+        let p = Params::Body(body);
+        let pk = match self.parse_key(&p) {
             Ok(x) => x,
-            Err(e) => return Response::error(400, &e),
+            Err(e) => return out.error(400, &e),
         };
-        let arm = match body.get("arm").and_then(Json::as_f64) {
-            Some(a) if a >= 0.0 && a.fract() == 0.0 => a as usize,
-            _ => return Response::error(400, "missing/invalid arm"),
+        // Strict arm conversion: negative, fractional or oversized
+        // numbers are rejected instead of silently truncated.
+        let arm = match body.get("arm").and_then(|v| v.as_usize()) {
+            Some(a) => a,
+            None => return out.error(400, "missing/invalid arm"),
         };
         let (time_s, power_w) = match (
-            body.get("time_s").and_then(Json::as_f64),
-            body.get("power_w").and_then(Json::as_f64),
+            body.get("time_s").and_then(|v| v.as_f64()),
+            body.get("power_w").and_then(|v| v.as_f64()),
         ) {
             (Some(t), Some(p)) if t.is_finite() && t > 0.0 && p.is_finite() && p >= 0.0 => (t, p),
-            _ => return Response::error(400, "missing/invalid time_s or power_w"),
+            _ => return out.error(400, "missing/invalid time_s or power_w"),
         };
-        let shard_i = self.store.shard_of(&key);
-        let report = Report { key, alpha, beta, arm, time_s, power_w };
-        let resp = match self.ingest.enqueue(shard_i, report, &self.metrics) {
+        let kref = pk.key_ref();
+        let hash = kref.hash64();
+        let id = self.store.intern(&kref, hash);
+        let shard_i = self.store.shard_of_hash(hash);
+        let report = Report {
+            id,
+            app: pk.app,
+            alpha: pk.alpha,
+            beta: pk.beta,
+            arm,
+            time_s,
+            power_w,
+        };
+        match self.ingest.enqueue(shard_i, report, &self.metrics) {
             Ok(()) => {
                 self.metrics.reports_enqueued.fetch_add(1, Ordering::Relaxed);
-                let mut obj = BTreeMap::new();
-                obj.insert("queued".to_string(), Json::Bool(true));
-                obj.insert("shard".to_string(), Json::Num(shard_i as f64));
-                Response::json(202, &Json::Obj(obj))
+                out.set_status(202);
+                let mut w = JsonWriter::new(&mut out.body);
+                w.begin_obj();
+                w.field_bool("queued", true);
+                w.field_num("shard", shard_i as f64);
+                w.end_obj();
             }
-            Err(e) => Response::error(503, &e),
-        };
+            Err(e) => out.error(503, &e),
+        }
         self.metrics.report_latency.observe(t0.elapsed());
-        resp
     }
 
-    fn best(&self, req: &Request) -> Response {
+    fn best(&self, req: &Request<'_>, out: &mut ResponseBuf) {
         let t0 = Instant::now();
-        let query = &req.query;
-        let (key, _, _) =
-            match self.parse_key(|name: &str| query.get(name).cloned()) {
-                Ok(x) => x,
-                Err(e) => return Response::error(400, &e),
-            };
-        let shard_i = self.store.shard_of(&key);
-        let shard = self.store.lock_shard(shard_i);
-        let Some(session) = shard.sessions.get(&key) else {
-            return Response::error(404, "unknown session");
+        let p = Params::Query(req.query);
+        let pk = match self.parse_key(&p) {
+            Ok(x) => x,
+            Err(e) => return out.error(400, &e),
+        };
+        let kref = pk.key_ref();
+        let hash = kref.hash64();
+        // Read-only surface: never interns, never takes a write lock.
+        let Some(id) = self.store.lookup(&kref, hash) else {
+            return out.error(404, "unknown session");
+        };
+        let shard_i = self.store.shard_of_hash(hash);
+        let shard = self.store.read_shard(shard_i);
+        let Some(session) = shard.sessions.get(&id.0) else {
+            return out.error(404, "unknown session");
         };
         let best = session.tuner.most_selected();
-        let mut obj = BTreeMap::new();
-        obj.insert("arm".to_string(), Json::Num(best as f64));
-        obj.insert("config".to_string(), Json::Str(self.apps.describe(key.app, best)));
-        obj.insert("pulls_of_best".to_string(), Json::Num(session.tuner.counts()[best]));
-        obj.insert("total_pulls".to_string(), Json::Num(session.tuner.total_pulls()));
-        obj.insert("suggests".to_string(), Json::Num(session.suggests as f64));
-        obj.insert("reports".to_string(), Json::Num(session.reports as f64));
-        obj.insert("policy".to_string(), Json::Str(session.tuner.name().to_string()));
+        self.apps.describe_into(pk.app, best, &mut out.scratch);
+        let mut w = JsonWriter::new(&mut out.body);
+        w.begin_obj();
+        w.field_num("arm", best as f64);
+        w.field_str("config", &out.scratch);
+        w.field_num("pulls_of_best", session.tuner.counts()[best]);
+        w.field_num("total_pulls", session.tuner.total_pulls());
+        w.field_num("suggests", session.suggests as f64);
+        w.field_num("reports", session.reports as f64);
+        w.field_str("policy", session.tuner.name());
         if let Some((mean_t, mean_p)) = session.tuner.mean_of(best) {
-            obj.insert("mean_time_s".to_string(), Json::Num(mean_t));
-            obj.insert("mean_power_w".to_string(), Json::Num(mean_p));
+            w.field_num("mean_time_s", mean_t);
+            w.field_num("mean_power_w", mean_p);
         }
+        w.end_obj();
         drop(shard);
-        let resp = Response::json(200, &Json::Obj(obj));
         self.metrics.best_latency.observe(t0.elapsed());
-        resp
     }
 
-    fn checkpoint_now(&self) -> Response {
+    fn checkpoint_now(&self, out: &mut ResponseBuf) {
         let Some(dir) = &self.cfg.checkpoint_dir else {
-            return Response::error(400, "no checkpoint_dir configured");
+            return out.error(400, "no checkpoint_dir configured");
         };
         match checkpoint::snapshot(&self.store, dir) {
             Ok(n) => {
                 self.metrics.checkpoints.fetch_add(1, Ordering::Relaxed);
                 self.metrics.checkpoint_sessions.fetch_add(n as u64, Ordering::Relaxed);
-                let mut obj = BTreeMap::new();
-                obj.insert("sessions".to_string(), Json::Num(n as f64));
-                Response::json(200, &Json::Obj(obj))
+                let mut w = JsonWriter::new(&mut out.body);
+                w.begin_obj();
+                w.field_num("sessions", n as f64);
+                w.end_obj();
             }
-            Err(e) => Response::error(500, &format!("{e:#}")),
+            Err(e) => out.error(500, &format!("{e:#}")),
         }
     }
 
-    fn healthz(&self) -> Response {
-        let mut obj = BTreeMap::new();
-        obj.insert("ok".to_string(), Json::Bool(true));
-        obj.insert("uptime_s".to_string(), Json::Num(self.metrics.uptime_s()));
-        obj.insert("sessions".to_string(), Json::Num(self.store.session_count() as f64));
-        obj.insert("shards".to_string(), Json::Num(self.store.num_shards() as f64));
-        Response::json(200, &Json::Obj(obj))
+    fn healthz(&self, out: &mut ResponseBuf) {
+        let mut w = JsonWriter::new(&mut out.body);
+        w.begin_obj();
+        w.field_bool("ok", true);
+        w.field_num("uptime_s", self.metrics.uptime_s());
+        w.field_num("sessions", self.store.session_count() as f64);
+        w.field_num("shards", self.store.num_shards() as f64);
+        w.end_obj();
     }
 
-    fn metrics_page(&self) -> Response {
+    fn metrics_page(&self, out: &mut ResponseBuf) {
         let resources = {
             let mut tracker = match self.tracker.lock() {
                 Ok(g) => g,
@@ -301,10 +401,13 @@ impl TuningService {
             tracker.sample();
             tracker.report()
         };
-        let body =
-            self.metrics
-                .render(self.store.session_count(), self.store.num_shards(), &resources);
-        Response::text(200, body)
+        let body = self.metrics.render(
+            self.store.session_count(),
+            self.store.num_shards(),
+            &self.transport,
+            &resources,
+        );
+        out.text(200, &body);
     }
 }
 
@@ -329,6 +432,12 @@ impl ServerHandle {
     /// Sessions warm-started from the checkpoint directory at boot.
     pub fn restored_sessions(&self) -> usize {
         self.restored
+    }
+
+    /// Transport counters (connections, requests, alloc events) — the
+    /// perf baseline reads these to certify the zero-allocation path.
+    pub fn transport_stats(&self) -> Arc<TransportStats> {
+        self.service.transport.clone()
     }
 
     /// Orderly shutdown: stop HTTP, drain report queues, final snapshot.
@@ -358,6 +467,7 @@ pub fn start(cfg: ServeConfig) -> Result<ServerHandle> {
     let store = Arc::new(ShardedStore::new(cfg.shards));
     let apps = Arc::new(AppsCache::new());
     let metrics = Arc::new(Metrics::new());
+    let transport = Arc::new(TransportStats::default());
 
     let mut restored = 0;
     if let Some(dir) = &cfg.checkpoint_dir {
@@ -378,6 +488,7 @@ pub fn start(cfg: ServeConfig) -> Result<ServerHandle> {
         apps,
         ingest,
         metrics: metrics.clone(),
+        transport: transport.clone(),
         tracker: Mutex::new(ResourceTracker::start()),
     });
 
@@ -385,9 +496,9 @@ pub fn start(cfg: ServeConfig) -> Result<ServerHandle> {
         TcpListener::bind(&cfg.addr).with_context(|| format!("binding {}", cfg.addr))?;
     let handler: HttpHandler = {
         let service = service.clone();
-        Arc::new(move |req: &Request| service.handle(req))
+        Arc::new(move |req: &Request<'_>, out: &mut ResponseBuf| service.handle(req, out))
     };
-    let http = HttpServer::start(listener, cfg.workers, handler)?;
+    let http = HttpServer::start_with_stats(listener, cfg.workers, handler, transport)?;
     let addr = http.addr();
 
     // Periodic checkpointer (only when a directory is configured).

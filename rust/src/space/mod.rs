@@ -154,14 +154,25 @@ impl ParamSpace {
 
     /// Human-readable rendering of a configuration.
     pub fn describe(&self, index: usize) -> String {
+        let mut out = String::new();
+        self.describe_into(index, &mut out);
+        out
+    }
+
+    /// As [`Self::describe`], but appending into a caller-owned buffer —
+    /// the serve hot path reuses one scratch string per worker instead
+    /// of allocating a description per request.
+    pub fn describe_into(&self, index: usize, out: &mut String) {
+        use std::fmt::Write as _;
         let cfg = self.decode(index);
-        let parts: Vec<String> = self
-            .params
-            .iter()
-            .zip(&cfg.values)
-            .map(|(p, v)| format!("{}={}", p.name(), v))
-            .collect();
-        format!("#{index} {{{}}}", parts.join(", "))
+        let _ = write!(out, "#{index} {{");
+        for (i, (p, v)) in self.params.iter().zip(&cfg.values).enumerate() {
+            if i > 0 {
+                out.push_str(", ");
+            }
+            let _ = write!(out, "{}={}", p.name(), v);
+        }
+        out.push('}');
     }
 }
 

@@ -1,8 +1,16 @@
-//! Minimal JSON parser (no external crates are available in this offline
-//! build — see Cargo.toml). Supports the full JSON grammar minus exotic
-//! number forms; enough to read `artifacts/manifest.json` and to write the
-//! experiment result files.
+//! Minimal JSON support (no external crates are available in this offline
+//! build — see Cargo.toml). Two layers:
+//!
+//! * [`Json`] — an owned tree parser/serializer supporting the full JSON
+//!   grammar minus exotic number forms; enough to read
+//!   `artifacts/manifest.json` and to write the experiment result files.
+//! * [`JsonSlice`] / [`JsonWriter`] — the serve hot path's borrowed layer:
+//!   a zero-copy reader over `&[u8]` (field access without building a
+//!   tree; strings borrow from the input unless they contain escapes) and
+//!   a writer that serializes straight into a caller-owned `Vec<u8>` so a
+//!   reused buffer makes steady-state serialization allocation-free.
 
+use std::borrow::Cow;
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
 
@@ -44,8 +52,11 @@ impl Json {
         }
     }
 
+    /// Integral, in-range numbers only: negative, fractional, non-finite
+    /// or `> 2^53` values return `None` instead of truncating (an `f64`
+    /// cannot even represent exact integers beyond 2^53).
     pub fn as_usize(&self) -> Option<usize> {
-        self.as_f64().map(|f| f as usize)
+        self.as_f64().and_then(f64_to_usize)
     }
 
     pub fn as_bool(&self) -> Option<bool> {
@@ -113,6 +124,481 @@ impl Json {
             }
         }
     }
+}
+
+/// Shared strict `f64 -> usize` conversion (also used by [`JsonSlice`]).
+fn f64_to_usize(f: f64) -> Option<usize> {
+    const MAX_EXACT: f64 = 9_007_199_254_740_992.0; // 2^53
+    if f.is_finite() && f >= 0.0 && f.fract() == 0.0 && f <= MAX_EXACT {
+        Some(f as usize)
+    } else {
+        None
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Borrowed layer: JsonSlice (reader) + JsonWriter (serializer).
+// ---------------------------------------------------------------------------
+
+/// Nesting ceiling for the borrowed scanner (adversarial `[[[[…` input
+/// must not overflow the stack of a server thread).
+const MAX_DEPTH: usize = 64;
+
+/// A borrowed JSON value: a validated byte span inside a caller-owned
+/// buffer. Field access re-scans the (tiny) span instead of building a
+/// tree, so reading a request body performs zero heap allocations unless
+/// a string actually contains escape sequences.
+#[derive(Debug, Clone, Copy)]
+pub struct JsonSlice<'a> {
+    /// Trimmed span of exactly one JSON value.
+    bytes: &'a [u8],
+}
+
+impl<'a> JsonSlice<'a> {
+    /// Validate `bytes` as one JSON document and wrap it. No tree is
+    /// built; the scan only checks well-formedness (and bounds nesting
+    /// depth), so later accessors can navigate without re-validating.
+    pub fn parse(bytes: &'a [u8]) -> Result<JsonSlice<'a>, String> {
+        let mut s = Scan { bytes, pos: 0 };
+        s.skip_ws();
+        let start = s.pos;
+        s.skip_value(0)?;
+        let end = s.pos;
+        s.skip_ws();
+        if s.pos != bytes.len() {
+            return Err(format!("trailing garbage at byte {}", s.pos));
+        }
+        Ok(JsonSlice { bytes: &bytes[start..end] })
+    }
+
+    /// The raw (trimmed) span of this value.
+    pub fn raw(&self) -> &'a [u8] {
+        self.bytes
+    }
+
+    pub fn is_null(&self) -> bool {
+        self.bytes == b"null"
+    }
+
+    pub fn is_obj(&self) -> bool {
+        self.bytes.first() == Some(&b'{')
+    }
+
+    /// Object field lookup by linear scan. `O(len)` per call — request
+    /// bodies are a few hundred bytes, so rescanning beats allocating a
+    /// map. Returns `None` on non-objects and absent keys.
+    pub fn get(&self, key: &str) -> Option<JsonSlice<'a>> {
+        let mut s = Scan { bytes: self.bytes, pos: 0 };
+        if s.peek() != Some(b'{') {
+            return None;
+        }
+        s.pos += 1;
+        s.skip_ws();
+        if s.peek() == Some(b'}') {
+            return None;
+        }
+        loop {
+            s.skip_ws();
+            let kspan = s.string_span().ok()?;
+            s.skip_ws();
+            if s.peek() != Some(b':') {
+                return None;
+            }
+            s.pos += 1;
+            s.skip_ws();
+            let vstart = s.pos;
+            s.skip_value(0).ok()?;
+            let vend = s.pos;
+            if string_content_eq(kspan, key) {
+                return Some(JsonSlice { bytes: &self.bytes[vstart..vend] });
+            }
+            s.skip_ws();
+            match s.peek() {
+                Some(b',') => s.pos += 1,
+                _ => return None, // '}' (key absent) or garbage
+            }
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        let c = *self.bytes.first()?;
+        if c != b'-' && !c.is_ascii_digit() {
+            return None;
+        }
+        std::str::from_utf8(self.bytes).ok()?.parse().ok()
+    }
+
+    /// Strict integral conversion (see [`Json::as_usize`]).
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_f64().and_then(f64_to_usize)
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self.bytes {
+            b"true" => Some(true),
+            b"false" => Some(false),
+            _ => None,
+        }
+    }
+
+    /// String value; borrows from the input unless the string contains
+    /// escape sequences. Invalid UTF-8 or bad escapes return `None`.
+    pub fn as_str(&self) -> Option<Cow<'a, str>> {
+        if self.bytes.first() != Some(&b'"') || self.bytes.len() < 2 {
+            return None;
+        }
+        unescape(&self.bytes[1..self.bytes.len() - 1])
+    }
+}
+
+/// Decode the inner bytes of a JSON string literal. Borrowed when no
+/// escapes are present.
+fn unescape(inner: &[u8]) -> Option<Cow<'_, str>> {
+    if !inner.contains(&b'\\') {
+        return std::str::from_utf8(inner).ok().map(Cow::Borrowed);
+    }
+    let mut out = String::with_capacity(inner.len());
+    let mut i = 0;
+    while i < inner.len() {
+        if inner[i] == b'\\' {
+            let esc = *inner.get(i + 1)?;
+            i += 2;
+            match esc {
+                b'n' => out.push('\n'),
+                b't' => out.push('\t'),
+                b'r' => out.push('\r'),
+                b'"' => out.push('"'),
+                b'\\' => out.push('\\'),
+                b'/' => out.push('/'),
+                b'b' => out.push('\u{8}'),
+                b'f' => out.push('\u{c}'),
+                b'u' => {
+                    let hex = inner.get(i..i + 4)?;
+                    let code =
+                        u32::from_str_radix(std::str::from_utf8(hex).ok()?, 16).ok()?;
+                    i += 4;
+                    let c = if (0xD800..=0xDBFF).contains(&code) {
+                        // High surrogate: must combine with a following
+                        // low surrogate (standard ensure_ascii encoders
+                        // emit non-BMP chars as pairs). Replacing each
+                        // half with U+FFFD would alias distinct ids.
+                        if inner.get(i) != Some(&b'\\') || inner.get(i + 1) != Some(&b'u') {
+                            return None;
+                        }
+                        let hex2 = inner.get(i + 2..i + 6)?;
+                        let low =
+                            u32::from_str_radix(std::str::from_utf8(hex2).ok()?, 16).ok()?;
+                        if !(0xDC00..=0xDFFF).contains(&low) {
+                            return None;
+                        }
+                        i += 6;
+                        char::from_u32(0x10000 + ((code - 0xD800) << 10) + (low - 0xDC00))?
+                    } else {
+                        // Lone low surrogates are rejected, not replaced.
+                        char::from_u32(code)?
+                    };
+                    out.push(c);
+                }
+                _ => return None,
+            }
+        } else {
+            // Consume one UTF-8 scalar.
+            let rest = std::str::from_utf8(&inner[i..]).ok()?;
+            let c = rest.chars().next()?;
+            out.push(c);
+            i += c.len_utf8();
+        }
+    }
+    Some(Cow::Owned(out))
+}
+
+/// Compare a string literal's inner span against a plain key without
+/// allocating. Escaped keys fall back to full decoding (rare).
+fn string_content_eq(inner: &[u8], key: &str) -> bool {
+    if !inner.contains(&b'\\') {
+        return inner == key.as_bytes();
+    }
+    matches!(unescape(inner), Some(s) if s == key)
+}
+
+/// Allocation-free well-formedness scanner over raw JSON bytes.
+struct Scan<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Scan<'a> {
+    fn skip_ws(&mut self) {
+        while self.pos < self.bytes.len()
+            && matches!(self.bytes[self.pos], b' ' | b'\t' | b'\n' | b'\r')
+        {
+            self.pos += 1;
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    /// Skip one string literal, returning its inner (undecoded) span.
+    fn string_span(&mut self) -> Result<&'a [u8], String> {
+        if self.peek() != Some(b'"') {
+            return Err(format!("expected string at byte {}", self.pos));
+        }
+        self.pos += 1;
+        let start = self.pos;
+        loop {
+            match self.peek() {
+                None => return Err("unterminated string".into()),
+                Some(b'"') => {
+                    let span = &self.bytes[start..self.pos];
+                    self.pos += 1;
+                    return Ok(span);
+                }
+                Some(b'\\') => {
+                    // The escaped byte is validated on decode; here we
+                    // only need to not treat an escaped quote as the end.
+                    self.pos += 2;
+                    if self.pos > self.bytes.len() {
+                        return Err("unterminated escape".into());
+                    }
+                }
+                Some(_) => self.pos += 1,
+            }
+        }
+    }
+
+    fn skip_literal(&mut self, word: &[u8]) -> Result<(), String> {
+        if self.bytes[self.pos..].starts_with(word) {
+            self.pos += word.len();
+            Ok(())
+        } else {
+            Err(format!("bad literal at byte {}", self.pos))
+        }
+    }
+
+    fn skip_number(&mut self) -> Result<(), String> {
+        let start = self.pos;
+        while let Some(c) = self.peek() {
+            if c.is_ascii_digit() || matches!(c, b'-' | b'+' | b'.' | b'e' | b'E') {
+                self.pos += 1;
+            } else {
+                break;
+            }
+        }
+        let text = std::str::from_utf8(&self.bytes[start..self.pos])
+            .map_err(|_| format!("bad number at byte {start}"))?;
+        text.parse::<f64>()
+            .map(|_| ())
+            .map_err(|_| format!("bad number at byte {start}"))
+    }
+
+    /// Skip exactly one JSON value, validating structure.
+    fn skip_value(&mut self, depth: usize) -> Result<(), String> {
+        if depth > MAX_DEPTH {
+            return Err("nesting too deep".into());
+        }
+        match self.peek() {
+            Some(b'"') => self.string_span().map(|_| ()),
+            Some(b't') => self.skip_literal(b"true"),
+            Some(b'f') => self.skip_literal(b"false"),
+            Some(b'n') => self.skip_literal(b"null"),
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.skip_number(),
+            Some(b'[') => {
+                self.pos += 1;
+                self.skip_ws();
+                if self.peek() == Some(b']') {
+                    self.pos += 1;
+                    return Ok(());
+                }
+                loop {
+                    self.skip_ws();
+                    self.skip_value(depth + 1)?;
+                    self.skip_ws();
+                    match self.peek() {
+                        Some(b',') => self.pos += 1,
+                        Some(b']') => {
+                            self.pos += 1;
+                            return Ok(());
+                        }
+                        _ => return Err(format!("expected , or ] at byte {}", self.pos)),
+                    }
+                }
+            }
+            Some(b'{') => {
+                self.pos += 1;
+                self.skip_ws();
+                if self.peek() == Some(b'}') {
+                    self.pos += 1;
+                    return Ok(());
+                }
+                loop {
+                    self.skip_ws();
+                    self.string_span()?;
+                    self.skip_ws();
+                    if self.peek() != Some(b':') {
+                        return Err(format!("expected ':' at byte {}", self.pos));
+                    }
+                    self.pos += 1;
+                    self.skip_ws();
+                    self.skip_value(depth + 1)?;
+                    self.skip_ws();
+                    match self.peek() {
+                        Some(b',') => self.pos += 1,
+                        Some(b'}') => {
+                            self.pos += 1;
+                            return Ok(());
+                        }
+                        _ => return Err(format!("expected , or }} at byte {}", self.pos)),
+                    }
+                }
+            }
+            other => Err(format!(
+                "unexpected {:?} at byte {}",
+                other.map(|c| c as char),
+                self.pos
+            )),
+        }
+    }
+}
+
+/// Streaming JSON serializer writing into a caller-owned `Vec<u8>`. With
+/// a reused buffer the steady state performs zero heap allocations: the
+/// buffer grows to its high-water mark once and is then only overwritten.
+pub struct JsonWriter<'a> {
+    out: &'a mut Vec<u8>,
+    /// Comma state per nesting level (bit set once a container has
+    /// entries) — a bitset so the writer itself never allocates.
+    comma: u64,
+    depth: usize,
+}
+
+/// `JsonWriter` nesting ceiling (bitset width). Exceeding it is a
+/// programmer error and panics loudly rather than silently emitting
+/// malformed JSON.
+const MAX_WRITER_DEPTH: usize = 64;
+
+impl<'a> JsonWriter<'a> {
+    /// Append to `out` (callers `clear()` it between messages).
+    pub fn new(out: &'a mut Vec<u8>) -> JsonWriter<'a> {
+        JsonWriter { out, comma: 0, depth: 0 }
+    }
+
+    fn elem(&mut self) {
+        if self.comma >> self.depth & 1 == 1 {
+            self.out.push(b',');
+        }
+        self.comma |= 1 << self.depth;
+    }
+
+    fn descend(&mut self) {
+        self.depth += 1;
+        assert!(
+            self.depth < MAX_WRITER_DEPTH,
+            "JsonWriter nesting exceeds {MAX_WRITER_DEPTH} levels"
+        );
+        self.comma &= !(1 << self.depth);
+    }
+
+    pub fn begin_obj(&mut self) {
+        self.elem();
+        self.out.push(b'{');
+        self.descend();
+    }
+
+    pub fn end_obj(&mut self) {
+        self.out.push(b'}');
+        self.depth = self.depth.saturating_sub(1);
+    }
+
+    pub fn begin_arr(&mut self) {
+        self.elem();
+        self.out.push(b'[');
+        self.descend();
+    }
+
+    pub fn end_arr(&mut self) {
+        self.out.push(b']');
+        self.depth = self.depth.saturating_sub(1);
+    }
+
+    /// Object key. The caller must follow with exactly one value.
+    pub fn key(&mut self, k: &str) {
+        self.elem();
+        escape_into(k, self.out);
+        self.out.push(b':');
+        // The value that follows completes this element rather than
+        // starting a new one: suppress its comma.
+        self.comma &= !(1 << self.depth);
+    }
+
+    pub fn str_val(&mut self, s: &str) {
+        self.elem();
+        escape_into(s, self.out);
+    }
+
+    /// Numbers render like [`Json::to_string`]: integral values without a
+    /// fraction, everything else via the shortest `f64` display form.
+    pub fn num_val(&mut self, n: f64) {
+        use std::io::Write as _;
+        self.elem();
+        if n.fract() == 0.0 && n.abs() < 1e15 {
+            let _ = write!(self.out, "{}", n as i64);
+        } else {
+            let _ = write!(self.out, "{n}");
+        }
+    }
+
+    pub fn bool_val(&mut self, b: bool) {
+        self.elem();
+        self.out.extend_from_slice(if b { b"true" as &[u8] } else { b"false" });
+    }
+
+    pub fn null_val(&mut self) {
+        self.elem();
+        self.out.extend_from_slice(b"null");
+    }
+
+    /// `"key": "string"` convenience.
+    pub fn field_str(&mut self, k: &str, v: &str) {
+        self.key(k);
+        self.str_val(v);
+    }
+
+    /// `"key": number` convenience.
+    pub fn field_num(&mut self, k: &str, v: f64) {
+        self.key(k);
+        self.num_val(v);
+    }
+
+    /// `"key": bool` convenience.
+    pub fn field_bool(&mut self, k: &str, v: bool) {
+        self.key(k);
+        self.bool_val(v);
+    }
+}
+
+/// Escape a string into UTF-8 bytes (same rules as [`write_escaped`]).
+fn escape_into(s: &str, out: &mut Vec<u8>) {
+    use std::io::Write as _;
+    out.push(b'"');
+    for c in s.chars() {
+        match c {
+            '"' => out.extend_from_slice(b"\\\""),
+            '\\' => out.extend_from_slice(b"\\\\"),
+            '\n' => out.extend_from_slice(b"\\n"),
+            '\t' => out.extend_from_slice(b"\\t"),
+            '\r' => out.extend_from_slice(b"\\r"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => {
+                let mut buf = [0u8; 4];
+                out.extend_from_slice(c.encode_utf8(&mut buf).as_bytes());
+            }
+        }
+    }
+    out.push(b'"');
 }
 
 fn write_escaped(s: &str, out: &mut String) {
@@ -198,6 +684,16 @@ impl<'a> Parser<'a> {
             .ok_or_else(|| format!("bad number at byte {start}"))
     }
 
+    /// Four hex digits starting at `start`.
+    fn hex4(&self, start: usize) -> Result<u32, String> {
+        let hex = self
+            .bytes
+            .get(start..start + 4)
+            .ok_or_else(|| "bad \\u escape".to_string())?;
+        let text = std::str::from_utf8(hex).map_err(|_| "bad \\u".to_string())?;
+        u32::from_str_radix(text, 16).map_err(|_| "bad \\u".to_string())
+    }
+
     fn string(&mut self) -> Result<String, String> {
         self.expect(b'"')?;
         let mut out = String::new();
@@ -220,17 +716,26 @@ impl<'a> Parser<'a> {
                         Some(b'b') => out.push('\u{8}'),
                         Some(b'f') => out.push('\u{c}'),
                         Some(b'u') => {
-                            let hex = self
-                                .bytes
-                                .get(self.pos + 1..self.pos + 5)
-                                .ok_or("bad \\u escape")?;
-                            let code = u32::from_str_radix(
-                                std::str::from_utf8(hex).map_err(|_| "bad \\u")?,
-                                16,
-                            )
-                            .map_err(|_| "bad \\u")?;
-                            out.push(char::from_u32(code).unwrap_or('\u{fffd}'));
+                            let code = self.hex4(self.pos + 1)?;
                             self.pos += 4;
+                            let c = if (0xD800..=0xDBFF).contains(&code) {
+                                // Combine surrogate pairs (see `unescape`).
+                                if self.bytes.get(self.pos + 1) != Some(&b'\\')
+                                    || self.bytes.get(self.pos + 2) != Some(&b'u')
+                                {
+                                    return Err("lone high surrogate".into());
+                                }
+                                let low = self.hex4(self.pos + 3)?;
+                                if !(0xDC00..=0xDFFF).contains(&low) {
+                                    return Err("invalid low surrogate".into());
+                                }
+                                self.pos += 6;
+                                char::from_u32(0x10000 + ((code - 0xD800) << 10) + (low - 0xDC00))
+                                    .ok_or("bad surrogate pair")?
+                            } else {
+                                char::from_u32(code).ok_or("lone low surrogate")?
+                            };
+                            out.push(c);
                         }
                         other => return Err(format!("bad escape {other:?}")),
                     }
@@ -339,6 +844,137 @@ mod tests {
     #[test]
     fn unicode_escape() {
         assert_eq!(Json::parse("\"\\u0041\"").unwrap(), Json::Str("A".into()));
+        // Surrogate pairs combine into one scalar (ensure_ascii
+        // encoders emit non-BMP chars this way)...
+        assert_eq!(
+            Json::parse("\"\\ud83d\\ude00\"").unwrap(),
+            Json::Str("\u{1F600}".into())
+        );
+        // ...and lone surrogates are rejected, never U+FFFD-aliased.
+        assert!(Json::parse("\"\\ud83d\"").is_err());
+        assert!(Json::parse("\"\\ude00\"").is_err());
+        assert!(Json::parse("\"\\ud83dx\"").is_err());
+    }
+
+    #[test]
+    fn slice_unicode_escape_matches_tree() {
+        let v = JsonSlice::parse(b"{\"id\":\"\\ud83d\\ude00\"}").unwrap();
+        assert_eq!(v.get("id").unwrap().as_str().unwrap(), "\u{1F600}");
+        let lone = JsonSlice::parse(b"{\"id\":\"\\ud83d\"}").unwrap();
+        assert_eq!(lone.get("id").unwrap().as_str(), None);
+    }
+
+    #[test]
+    fn as_usize_is_strict() {
+        assert_eq!(Json::Num(216.0).as_usize(), Some(216));
+        assert_eq!(Json::Num(0.0).as_usize(), Some(0));
+        assert_eq!(Json::Num(-1.0).as_usize(), None);
+        assert_eq!(Json::Num(1.5).as_usize(), None);
+        assert_eq!(Json::Num(f64::NAN).as_usize(), None);
+        assert_eq!(Json::Num(f64::INFINITY).as_usize(), None);
+        assert_eq!(Json::Num(1e300).as_usize(), None);
+        assert_eq!(Json::Str("3".into()).as_usize(), None);
+    }
+
+    #[test]
+    fn slice_reads_flat_objects_without_copying() {
+        let body = br#"{"client_id":"lg-7","app":"clomp","alpha":0.8,"arm":42,"ok":true,"x":null}"#;
+        let v = JsonSlice::parse(body).unwrap();
+        let cid = v.get("client_id").unwrap().as_str().unwrap();
+        assert_eq!(cid, "lg-7");
+        assert!(matches!(cid, Cow::Borrowed(_)), "plain strings must borrow");
+        assert_eq!(v.get("app").unwrap().as_str().unwrap(), "clomp");
+        assert_eq!(v.get("alpha").unwrap().as_f64(), Some(0.8));
+        assert_eq!(v.get("arm").unwrap().as_usize(), Some(42));
+        assert_eq!(v.get("ok").unwrap().as_bool(), Some(true));
+        assert!(v.get("x").unwrap().is_null());
+        assert!(v.get("missing").is_none());
+        assert!(v.is_obj());
+    }
+
+    #[test]
+    fn slice_handles_escapes_and_nesting() {
+        let body = br#"{"aA":"x","s":"tab\there","o":{"inner":[1,2,{"d":3}]}}"#;
+        let v = JsonSlice::parse(body).unwrap();
+        assert_eq!(v.get("aA").unwrap().as_str().unwrap(), "x");
+        let s = v.get("s").unwrap().as_str().unwrap();
+        assert_eq!(s, "tab\there");
+        assert!(matches!(s, Cow::Owned(_)), "escaped strings must decode");
+        let inner = v.get("o").unwrap().get("inner").unwrap();
+        assert_eq!(inner.raw()[0], b'[');
+    }
+
+    #[test]
+    fn slice_rejects_malformed_documents() {
+        assert!(JsonSlice::parse(b"{").is_err());
+        assert!(JsonSlice::parse(b"[1,]").is_err());
+        assert!(JsonSlice::parse(b"12 34").is_err());
+        assert!(JsonSlice::parse(b"{'a': 1}").is_err());
+        assert!(JsonSlice::parse(b"\"unterminated").is_err());
+        // Deep nesting is bounded, not a stack overflow.
+        let deep = [b'['; 10_000];
+        assert!(JsonSlice::parse(&deep).is_err());
+    }
+
+    #[test]
+    fn slice_rejects_invalid_utf8_strings() {
+        let mut body = b"{\"k\":\"".to_vec();
+        body.push(0xFF);
+        body.extend_from_slice(b"\"}");
+        // The scan is byte-level so parse succeeds, but string access
+        // refuses to lossy-decode.
+        if let Ok(v) = JsonSlice::parse(&body) {
+            assert!(v.get("k").unwrap().as_str().is_none());
+        }
+    }
+
+    #[test]
+    fn writer_matches_tree_serialization() {
+        let mut buf = Vec::new();
+        let mut w = JsonWriter::new(&mut buf);
+        w.begin_obj();
+        w.field_num("arm", 42.0);
+        w.field_str("config", "omp=4 \"quoted\"");
+        w.field_bool("queued", true);
+        w.key("quantiles");
+        w.begin_arr();
+        w.num_val(0.5);
+        w.num_val(0.99);
+        w.end_arr();
+        w.key("nested");
+        w.begin_obj();
+        w.field_num("n", 1.25);
+        w.key("none");
+        w.null_val();
+        w.end_obj();
+        w.end_obj();
+        let text = String::from_utf8(buf).unwrap();
+        // Round-trips through the tree parser to an identical document.
+        let tree = Json::parse(&text).unwrap();
+        assert_eq!(tree.get("arm").and_then(Json::as_usize), Some(42));
+        assert_eq!(tree.get("config").and_then(Json::as_str), Some("omp=4 \"quoted\""));
+        assert_eq!(tree.get("queued").and_then(Json::as_bool), Some(true));
+        let q = tree.get("quantiles").unwrap().as_arr().unwrap();
+        assert_eq!(q, &[Json::Num(0.5), Json::Num(0.99)][..]);
+        assert_eq!(
+            tree.get("nested").and_then(|n| n.get("n")).and_then(Json::as_f64),
+            Some(1.25)
+        );
+    }
+
+    #[test]
+    fn writer_reuses_buffer_without_realloc() {
+        let mut buf = Vec::with_capacity(256);
+        for i in 0..100 {
+            buf.clear();
+            let ptr = buf.as_ptr();
+            let mut w = JsonWriter::new(&mut buf);
+            w.begin_obj();
+            w.field_num("round", i as f64);
+            w.field_str("config", "omp_threads=8 tiling=2");
+            w.end_obj();
+            assert_eq!(buf.as_ptr(), ptr, "steady-state write must not realloc");
+        }
     }
 
     #[test]

@@ -1,0 +1,247 @@
+//! Hot-path integration tests for the zero-allocation serve transport:
+//! pipelined keep-alive requests, split reads across TCP segments, header
+//! limits (431), malformed request lines, a serve_restart-style
+//! concurrency pass through the rewritten parser, and the steady-state
+//! allocation contract observed end-to-end through a real service.
+
+use lasp::serve::{start, HttpClient, ServeConfig};
+use lasp::util::json::{Json, JsonSlice};
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::Ordering;
+use std::time::{Duration, Instant};
+
+fn boot(workers: usize, shards: usize) -> lasp::serve::ServerHandle {
+    start(ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        workers,
+        shards,
+        checkpoint_dir: None,
+        checkpoint_every: Duration::from_secs(3600),
+        ..Default::default()
+    })
+    .unwrap()
+}
+
+fn body(client: &str, app: &str, extra: &[(&str, Json)]) -> String {
+    let mut obj = BTreeMap::new();
+    obj.insert("client_id".to_string(), Json::Str(client.to_string()));
+    obj.insert("app".to_string(), Json::Str(app.to_string()));
+    obj.insert("device".to_string(), Json::Str("maxn".to_string()));
+    obj.insert("alpha".to_string(), Json::Num(1.0));
+    obj.insert("beta".to_string(), Json::Num(0.0));
+    for (k, v) in extra {
+        obj.insert((*k).to_string(), v.clone());
+    }
+    Json::Obj(obj).to_string()
+}
+
+fn find_subsequence(haystack: &[u8], needle: &[u8]) -> Option<usize> {
+    haystack.windows(needle.len()).position(|w| w == needle)
+}
+
+/// Read one full HTTP response (head + declared body) off `s`.
+fn read_one_response(s: &mut TcpStream) -> String {
+    let mut raw = Vec::new();
+    let mut buf = [0u8; 4096];
+    loop {
+        if let Some(hdr_end) = find_subsequence(&raw, b"\r\n\r\n") {
+            let head = String::from_utf8_lossy(&raw[..hdr_end]);
+            let clen: usize = head
+                .lines()
+                .filter_map(|l| l.split_once(':'))
+                .find(|(name, _)| name.trim().eq_ignore_ascii_case("content-length"))
+                .and_then(|(_, value)| value.trim().parse().ok())
+                .unwrap_or(0);
+            if raw.len() >= hdr_end + 4 + clen {
+                return String::from_utf8_lossy(&raw[..hdr_end + 4 + clen]).into_owned();
+            }
+        }
+        let n = s.read(&mut buf).unwrap();
+        assert!(n > 0, "connection closed early: {}", String::from_utf8_lossy(&raw));
+        raw.extend_from_slice(&buf[..n]);
+    }
+}
+
+#[test]
+fn pipelined_suggests_on_one_connection() {
+    let handle = boot(2, 2);
+    let mut s = TcpStream::connect(handle.addr()).unwrap();
+    let payload = body("pipeline", "clomp", &[]);
+    let one = format!(
+        "POST /v1/suggest HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n{payload}",
+        payload.len()
+    );
+    // Three requests in a single TCP segment: the parser must answer all
+    // three, in order, on the same connection.
+    let burst = one.repeat(3);
+    s.write_all(burst.as_bytes()).unwrap();
+    for _ in 0..3 {
+        let resp = read_one_response(&mut s);
+        assert!(resp.starts_with("HTTP/1.1 200 OK"), "{resp}");
+        assert!(resp.contains("\"arm\":"), "{resp}");
+    }
+    drop(s);
+    handle.shutdown().unwrap();
+}
+
+#[test]
+fn split_reads_across_segments() {
+    let handle = boot(2, 2);
+    let mut s = TcpStream::connect(handle.addr()).unwrap();
+    let payload = body("dribble", "kripke", &[]);
+    let req = format!(
+        "POST /v1/suggest HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n{payload}",
+        payload.len()
+    );
+    for chunk in req.as_bytes().chunks(7) {
+        s.write_all(chunk).unwrap();
+        s.flush().unwrap();
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    let resp = read_one_response(&mut s);
+    assert!(resp.starts_with("HTTP/1.1 200 OK"), "{resp}");
+    drop(s);
+    handle.shutdown().unwrap();
+}
+
+#[test]
+fn oversized_headers_rejected_431() {
+    let handle = boot(2, 2);
+    let mut s = TcpStream::connect(handle.addr()).unwrap();
+    let mut req = b"GET /healthz HTTP/1.1\r\nX-Pad: ".to_vec();
+    req.extend(std::iter::repeat(b'p').take(20 * 1024));
+    req.extend_from_slice(b"\r\n\r\n");
+    s.write_all(&req).unwrap();
+    let resp = read_one_response(&mut s);
+    assert!(resp.starts_with("HTTP/1.1 431"), "{resp}");
+    let stats = handle.transport_stats();
+    assert!(stats.rejected_431.load(Ordering::Relaxed) >= 1);
+    drop(s);
+    handle.shutdown().unwrap();
+}
+
+#[test]
+fn malformed_request_line_rejected_400() {
+    let handle = boot(2, 2);
+    let mut s = TcpStream::connect(handle.addr()).unwrap();
+    s.write_all(b"GARBAGE\r\n\r\n").unwrap();
+    let resp = read_one_response(&mut s);
+    assert!(resp.starts_with("HTTP/1.1 400"), "{resp}");
+    drop(s);
+    handle.shutdown().unwrap();
+}
+
+#[test]
+fn concurrent_mixed_traffic_through_new_parser() {
+    // serve_restart-style pass: many threads drive suggest/report through
+    // the rewritten buffer-reuse path; every report must land.
+    let handle = boot(8, 4);
+    let addr = handle.addr().to_string();
+    let apps = ["clomp", "kripke", "lulesh"];
+    let rounds = 30usize;
+    let mut workers = vec![];
+    for t in 0..8usize {
+        let addr = addr.clone();
+        let app = apps[t % apps.len()].to_string();
+        workers.push(std::thread::spawn(move || {
+            let mut client = HttpClient::connect(&addr).unwrap();
+            let client_id = format!("hot-{t}");
+            for _ in 0..rounds {
+                let payload = body(&client_id, &app, &[]);
+                let status = client.post_slice("/v1/suggest", payload.as_bytes()).unwrap();
+                assert_eq!(status, 200);
+                let arm = JsonSlice::parse(client.last_body())
+                    .unwrap()
+                    .get("arm")
+                    .and_then(|v| v.as_usize())
+                    .unwrap();
+                let payload = body(
+                    &client_id,
+                    &app,
+                    &[
+                        ("arm", Json::Num(arm as f64)),
+                        ("time_s", Json::Num(0.5 + (arm % 7) as f64 * 0.1)),
+                        ("power_w", Json::Num(5.0)),
+                    ],
+                );
+                let status = client.post_slice("/v1/report", payload.as_bytes()).unwrap();
+                assert_eq!(status, 202);
+            }
+            assert_eq!(client.reconnects(), 0, "keep-alive must hold for the whole run");
+        }));
+    }
+    for w in workers {
+        w.join().unwrap();
+    }
+
+    // All reports drain through the batched updaters.
+    let mut probe = HttpClient::connect(&addr).unwrap();
+    let deadline = Instant::now() + Duration::from_secs(10);
+    for t in 0..8usize {
+        let app = apps[t % apps.len()];
+        let q = format!("/v1/best?client_id=hot-{t}&app={app}&device=maxn&alpha=1.0&beta=0.0");
+        loop {
+            let (status, b) = probe.get(&q).unwrap();
+            if status == 200
+                && b.get("total_pulls").and_then(Json::as_f64) == Some(rounds as f64)
+            {
+                break;
+            }
+            assert!(Instant::now() < deadline, "reports never applied for hot-{t}: {b:?}");
+            std::thread::sleep(Duration::from_millis(20));
+        }
+    }
+
+    // The transport counters are live on /metrics.
+    let (status, page) = probe.get("/metrics").unwrap();
+    assert_eq!(status, 200);
+    let text = page.as_str().unwrap_or_default().to_string();
+    assert!(text.contains("lasp_serve_transport_requests_total"), "{text}");
+    assert!(text.contains("lasp_serve_transport_alloc_events_total"), "{text}");
+    handle.shutdown().unwrap();
+}
+
+#[test]
+fn undecodable_query_param_is_400_not_defaulted() {
+    // A present-but-mangled parameter must be rejected, never silently
+    // replaced by the parameter's default (which would address a
+    // different session).
+    let handle = boot(2, 2);
+    let addr = handle.addr().to_string();
+    let mut client = HttpClient::connect(&addr).unwrap();
+    let (status, resp) = client
+        .get("/v1/best?client_id=x&app=clomp&policy=%FF")
+        .unwrap();
+    assert_eq!(status, 400, "{resp:?}");
+    let (status, resp) = client.get("/v1/best?client_id=%FF&app=clomp").unwrap();
+    assert_eq!(status, 400, "{resp:?}");
+    drop(client);
+    handle.shutdown().unwrap();
+}
+
+#[test]
+fn steady_state_suggest_is_allocation_free_end_to_end() {
+    let handle = boot(2, 2);
+    let addr = handle.addr().to_string();
+    let stats = handle.transport_stats();
+    let mut client = HttpClient::connect(&addr).unwrap();
+    let payload = body("steady", "clomp", &[]);
+
+    // Warmup: buffers reach their high-water marks.
+    for _ in 0..20 {
+        assert_eq!(client.post_slice("/v1/suggest", payload.as_bytes()).unwrap(), 200);
+    }
+    let allocs_before = stats.alloc_events.load(Ordering::Relaxed);
+    for _ in 0..300 {
+        assert_eq!(client.post_slice("/v1/suggest", payload.as_bytes()).unwrap(), 200);
+    }
+    let allocs = stats.alloc_events.load(Ordering::Relaxed) - allocs_before;
+    assert_eq!(
+        allocs, 0,
+        "HTTP+JSON layers performed {allocs} buffer growths over 300 steady-state suggests"
+    );
+    drop(client);
+    handle.shutdown().unwrap();
+}
