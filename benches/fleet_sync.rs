@@ -1,0 +1,172 @@
+//! Two-node fleet-sync bench: boots a leader and a follower in-process,
+//! trains a scenario on the leader, waits for the follower to pull the
+//! fleet prior, and measures rounds-to-parity of a warm-started session
+//! against a cold-started baseline node — the transfer payoff of the
+//! networked fleet plane, tracked PR-over-PR.
+//!
+//! Emits `BENCH_fleet.json` (path override: `LASP_BENCH_FLEET_OUT`);
+//! `LASP_BENCH_QUICK=1` runs a shorter training phase for CI.
+
+#[path = "common.rs"]
+mod common;
+
+use lasp::serve::{start, HttpClient, ServeConfig};
+use lasp::util::json::Json;
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+const BEST_ARM: usize = 77;
+
+fn fake_time(arm: usize) -> f64 {
+    if arm == BEST_ARM {
+        0.3
+    } else {
+        2.0 + (arm % 13) as f64 * 0.05
+    }
+}
+
+fn cfg(leader: Option<String>, sync_ms: u64, node_id: &str) -> ServeConfig {
+    ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        workers: 4,
+        shards: 2,
+        checkpoint_dir: None,
+        leader,
+        node_id: Some(node_id.to_string()),
+        sync_every: Duration::from_millis(sync_ms),
+        fleet_retain: 0.5,
+        ..Default::default()
+    }
+}
+
+fn body(client: &str, extra: &[(&str, Json)]) -> Json {
+    let mut obj = BTreeMap::new();
+    obj.insert("client_id".to_string(), Json::Str(client.to_string()));
+    obj.insert("app".to_string(), Json::Str("clomp".to_string()));
+    obj.insert("device".to_string(), Json::Str("maxn".to_string()));
+    obj.insert("alpha".to_string(), Json::Num(1.0));
+    obj.insert("beta".to_string(), Json::Num(0.0));
+    for (k, v) in extra {
+        obj.insert((*k).to_string(), v.clone());
+    }
+    Json::Obj(obj)
+}
+
+fn one_round(client: &mut HttpClient, client_id: &str) -> usize {
+    let (status, resp) = client.post("/v1/suggest", &body(client_id, &[])).expect("suggest");
+    assert_eq!(status, 200, "{resp:?}");
+    let arm = resp.get("arm").and_then(Json::as_usize).expect("arm");
+    let (status, _) = client
+        .post(
+            "/v1/report",
+            &body(
+                client_id,
+                &[
+                    ("arm", Json::Num(arm as f64)),
+                    ("time_s", Json::Num(fake_time(arm))),
+                    ("power_w", Json::Num(5.0)),
+                ],
+            ),
+        )
+        .expect("report");
+    assert_eq!(status, 202);
+    arm
+}
+
+fn best_arm(client: &mut HttpClient, client_id: &str) -> Option<usize> {
+    let q = format!("/v1/best?client_id={client_id}&app=clomp&device=maxn&alpha=1.0&beta=0.0");
+    let (status, b) = client.get(&q).expect("best");
+    if status != 200 {
+        return None;
+    }
+    b.get("arm").and_then(Json::as_usize)
+}
+
+fn rounds_to_parity(addr: &str, client_id: &str, cap: usize) -> usize {
+    let mut client = HttpClient::connect(addr).expect("connect");
+    for round in 1..=cap {
+        one_round(&mut client, client_id);
+        if best_arm(&mut client, client_id) == Some(BEST_ARM) {
+            return round;
+        }
+    }
+    cap
+}
+
+fn main() {
+    let quick = std::env::var("LASP_BENCH_QUICK").map(|v| v == "1").unwrap_or(false);
+    let (train_rounds, cap) = if quick { (200, 160) } else { (400, 200) };
+
+    // Leader learns the scenario.
+    let leader = start(cfg(None, 60_000, "bench-leader")).expect("boot leader");
+    let leader_addr = leader.addr().to_string();
+    let mut veteran = HttpClient::connect(&leader_addr).expect("connect leader");
+    let t0 = Instant::now();
+    for _ in 0..train_rounds {
+        one_round(&mut veteran, "veteran");
+    }
+    let train_s = t0.elapsed().as_secs_f64();
+
+    // Follower syncs; measure time to a usable fleet prior.
+    let t0 = Instant::now();
+    let follower =
+        start(cfg(Some(leader_addr.clone()), 100, "bench-follower")).expect("boot follower");
+    let follower_addr = follower.addr().to_string();
+    let deadline = Instant::now() + Duration::from_secs(30);
+    let mut probe = HttpClient::connect(&follower_addr).expect("connect follower");
+    let synced = loop {
+        let (status, page) = probe.get("/metrics").expect("metrics");
+        assert_eq!(status, 200);
+        let text = page.as_str().unwrap_or_default().to_string();
+        if text
+            .lines()
+            .any(|l| l.starts_with("lasp_serve_fleet_prior_keys") && !l.ends_with(" 0"))
+        {
+            break true;
+        }
+        if Instant::now() > deadline {
+            break false;
+        }
+        std::thread::sleep(Duration::from_millis(25));
+    };
+    let sync_latency_s = t0.elapsed().as_secs_f64();
+
+    // Warm (fleet-synced follower) vs cold (isolated node) convergence.
+    let warm_rounds = rounds_to_parity(&follower_addr, "newcomer", cap);
+    let cold = start(cfg(None, 60_000, "bench-cold")).expect("boot cold");
+    let cold_rounds = rounds_to_parity(&cold.addr().to_string(), "newcomer", cap);
+
+    println!("fleet bench: train={train_rounds} rounds in {train_s:.2}s | first sync {sync_latency_s:.2}s");
+    println!(
+        "rounds-to-parity: warm={warm_rounds} cold={cold_rounds} (speedup {:.1}x)",
+        cold_rounds as f64 / warm_rounds.max(1) as f64
+    );
+
+    let mut out = BTreeMap::new();
+    out.insert("bench".to_string(), Json::Str("fleet_sync".to_string()));
+    out.insert("mode".to_string(), Json::Str(if quick { "quick" } else { "full" }.to_string()));
+    out.insert("train_rounds".to_string(), Json::Num(train_rounds as f64));
+    out.insert("train_s".to_string(), Json::Num(train_s));
+    out.insert("sync_latency_s".to_string(), Json::Num(sync_latency_s));
+    out.insert("warm_rounds_to_parity".to_string(), Json::Num(warm_rounds as f64));
+    out.insert("cold_rounds_to_parity".to_string(), Json::Num(cold_rounds as f64));
+    out.insert(
+        "speedup".to_string(),
+        Json::Num(cold_rounds as f64 / warm_rounds.max(1) as f64),
+    );
+    let path =
+        std::env::var("LASP_BENCH_FLEET_OUT").unwrap_or_else(|_| "BENCH_fleet.json".to_string());
+    std::fs::write(&path, Json::Obj(out).to_string() + "\n").expect("writing bench json");
+    println!("wrote {path}");
+
+    drop(veteran);
+    drop(probe);
+    leader.shutdown().expect("leader shutdown");
+    follower.shutdown().expect("follower shutdown");
+    cold.shutdown().expect("cold shutdown");
+
+    common::report_shape(
+        "fleet_sync",
+        synced && warm_rounds < cold_rounds && cold_rounds >= 100,
+    );
+}

@@ -49,10 +49,21 @@ pub struct LaspConfig {
     pub fidelity: f64,
     /// Injected synthetic measurement error percentage (0.0-1.0).
     pub noise_pct: f64,
-    // [fleet]
+    // [fleet] — the simulated in-process fleet (`lasp fleet`) ...
     pub devices: usize,
     pub loss_prob: f64,
     pub latency_s: f64,
+    // ... and the networked sync plane (`lasp serve --leader`).
+    /// Leader address to push/pull fleet state against (None = standalone).
+    pub fleet_leader: Option<String>,
+    /// Stable node identity on the sync wire (None = derived from addr).
+    pub fleet_node_id: Option<String>,
+    /// Seconds between fleet push/pull cycles.
+    pub fleet_sync_secs: f64,
+    /// Retention (0, 1] applied when warm-starting from a fleet prior.
+    pub fleet_retain: f64,
+    /// Half-life (seconds) for time-decaying fleet evidence.
+    pub fleet_half_life_secs: f64,
     // [serve]
     pub serve_port: u16,
     pub serve_workers: usize,
@@ -79,6 +90,11 @@ impl Default for LaspConfig {
             devices: 2,
             loss_prob: 0.0,
             latency_s: 0.0,
+            fleet_leader: None,
+            fleet_node_id: None,
+            fleet_sync_secs: 10.0,
+            fleet_retain: 0.3,
+            fleet_half_life_secs: 600.0,
             serve_port: 8787,
             serve_workers: 8,
             serve_shards: 8,
@@ -142,6 +158,34 @@ impl LaspConfig {
         }
         if let Some(v) = get("fleet", "latency_s") {
             cfg.latency_s = v.as_float().ok_or_else(|| anyhow!("fleet.latency_s must be number"))?;
+        }
+        if let Some(v) = get("fleet", "leader") {
+            cfg.fleet_leader = Some(
+                v.as_str()
+                    .ok_or_else(|| anyhow!("fleet.leader must be a string"))?
+                    .to_string(),
+            );
+        }
+        if let Some(v) = get("fleet", "node_id") {
+            cfg.fleet_node_id = Some(
+                v.as_str()
+                    .ok_or_else(|| anyhow!("fleet.node_id must be a string"))?
+                    .to_string(),
+            );
+        }
+        if let Some(v) = get("fleet", "sync_secs") {
+            cfg.fleet_sync_secs = v
+                .as_float()
+                .ok_or_else(|| anyhow!("fleet.sync_secs must be number"))?;
+        }
+        if let Some(v) = get("fleet", "retain") {
+            cfg.fleet_retain =
+                v.as_float().ok_or_else(|| anyhow!("fleet.retain must be number"))?;
+        }
+        if let Some(v) = get("fleet", "half_life_secs") {
+            cfg.fleet_half_life_secs = v
+                .as_float()
+                .ok_or_else(|| anyhow!("fleet.half_life_secs must be number"))?;
         }
         // Checked integer conversion: TOML values are i64, and a plain
         // `as usize` would wrap negatives into huge counts.
@@ -213,6 +257,12 @@ impl LaspConfig {
         if !(self.serve_checkpoint_secs.is_finite() && self.serve_checkpoint_secs > 0.0) {
             return Err(anyhow!("serve.checkpoint_secs must be positive"));
         }
+        if !(self.fleet_sync_secs.is_finite() && self.fleet_sync_secs > 0.0) {
+            return Err(anyhow!("fleet.sync_secs must be positive"));
+        }
+        if !(self.fleet_half_life_secs.is_finite() && self.fleet_half_life_secs > 0.0) {
+            return Err(anyhow!("fleet.half_life_secs must be positive"));
+        }
         // Single source of truth for the remaining serve rules.
         self.serve_config().validate()?;
         Ok(())
@@ -229,6 +279,11 @@ impl LaspConfig {
             checkpoint_dir: self.serve_checkpoint_dir.as_ref().map(std::path::PathBuf::from),
             checkpoint_every: std::time::Duration::from_secs_f64(self.serve_checkpoint_secs),
             warm_retain: self.serve_retain,
+            leader: self.fleet_leader.clone(),
+            node_id: self.fleet_node_id.clone(),
+            sync_every: std::time::Duration::from_secs_f64(self.fleet_sync_secs),
+            fleet_retain: self.fleet_retain,
+            fleet_half_life: std::time::Duration::from_secs_f64(self.fleet_half_life_secs),
         }
     }
 
@@ -327,6 +382,44 @@ mod tests {
         assert_eq!(sc.addr, "127.0.0.1:9999");
         assert_eq!(sc.shards, 16);
         assert_eq!(sc.checkpoint_every, std::time::Duration::from_secs(5));
+    }
+
+    #[test]
+    fn parses_fleet_sync_section() {
+        let cfg = LaspConfig::from_toml_str(
+            r#"
+            [fleet]
+            devices = 3
+            leader = "10.0.0.7:8787"
+            node_id = "edge-a"
+            sync_secs = 2.5
+            retain = 0.4
+            half_life_secs = 120.0
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.devices, 3);
+        assert_eq!(cfg.fleet_leader.as_deref(), Some("10.0.0.7:8787"));
+        assert_eq!(cfg.fleet_node_id.as_deref(), Some("edge-a"));
+        assert!((cfg.fleet_sync_secs - 2.5).abs() < 1e-12);
+        assert!((cfg.fleet_retain - 0.4).abs() < 1e-12);
+        assert!((cfg.fleet_half_life_secs - 120.0).abs() < 1e-12);
+        let sc = cfg.serve_config();
+        assert_eq!(sc.leader.as_deref(), Some("10.0.0.7:8787"));
+        assert_eq!(sc.node_id.as_deref(), Some("edge-a"));
+        assert_eq!(sc.sync_every, std::time::Duration::from_millis(2500));
+        assert!((sc.fleet_retain - 0.4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rejects_bad_fleet_sync_values() {
+        assert!(LaspConfig::from_toml_str("[fleet]\nsync_secs = 0\n").is_err());
+        assert!(LaspConfig::from_toml_str("[fleet]\nsync_secs = -2\n").is_err());
+        assert!(LaspConfig::from_toml_str("[fleet]\nretain = 0.0\n").is_err());
+        assert!(LaspConfig::from_toml_str("[fleet]\nretain = 1.5\n").is_err());
+        assert!(LaspConfig::from_toml_str("[fleet]\nhalf_life_secs = 0\n").is_err());
+        assert!(LaspConfig::from_toml_str("[fleet]\nleader = \"\"\n").is_err());
+        assert!(LaspConfig::from_toml_str("[fleet]\nleader = 12\n").is_err());
     }
 
     #[test]

@@ -107,9 +107,15 @@ fn usage_text() -> &'static str {
      \x20 --checkpoint-dir <d>   snapshot sessions here    [off]\n\
      \x20 --checkpoint-secs <s>  snapshot period           [30]\n\
      \x20 --retain <f>           warm-start retention      [0.5]\n\
+     \x20 --leader <host:port>   fleet leader to sync with [standalone]\n\
+     \x20 --node-id <id>         sync identity             [node-<addr>]\n\
+     \x20 --sync-secs <s>        fleet sync period         [10]\n\
+     \x20 --fleet-retain <f>     fleet-prior retention     [0.3]\n\
+     \x20 --half-life-secs <s>   fleet evidence half-life  [600]\n\
      \n\
      FLAGS (loadgen)\n\
-     \x20 --addr <host:port>     server to hammer          [127.0.0.1:8787]\n\
+     \x20 --addr <a[,b,...]>     server(s) to hammer       [127.0.0.1:8787]\n\
+     \x20 --port <n>             shorthand for 127.0.0.1:<port>\n\
      \x20 --sessions <n>         concurrent sessions       [128]\n\
      \x20 --rounds <n>           suggest/report round-trips [12000]\n\
      \x20 --threads <n>          client threads            [8]\n\
@@ -378,6 +384,29 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
     if let Some(v) = flags.get("retain") {
         serve_cfg.warm_retain = v.parse().context("--retain")?;
     }
+    if let Some(v) = flags.get("leader") {
+        serve_cfg.leader = Some(v.to_string());
+    }
+    if let Some(v) = flags.get("node-id") {
+        serve_cfg.node_id = Some(v.to_string());
+    }
+    if let Some(v) = flags.get("sync-secs") {
+        let secs: f64 = v.parse().context("--sync-secs")?;
+        if !(secs.is_finite() && secs > 0.0) {
+            return Err(anyhow!("--sync-secs must be positive"));
+        }
+        serve_cfg.sync_every = std::time::Duration::from_secs_f64(secs);
+    }
+    if let Some(v) = flags.get("fleet-retain") {
+        serve_cfg.fleet_retain = v.parse().context("--fleet-retain")?;
+    }
+    if let Some(v) = flags.get("half-life-secs") {
+        let secs: f64 = v.parse().context("--half-life-secs")?;
+        if !(secs.is_finite() && secs > 0.0) {
+            return Err(anyhow!("--half-life-secs must be positive"));
+        }
+        serve_cfg.fleet_half_life = std::time::Duration::from_secs_f64(secs);
+    }
     let ckpt = serve_cfg
         .checkpoint_dir
         .as_ref()
@@ -400,7 +429,21 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
             serve_cfg.warm_retain
         );
     }
-    println!("# endpoints: POST /v1/suggest  POST /v1/report  GET /v1/best  GET /healthz  GET /metrics");
+    match &serve_cfg.leader {
+        Some(leader) => println!(
+            "# fleet sync: node {} -> leader {} every {:.1}s (retain={}, half-life={:.0}s)",
+            handle.node_id(),
+            leader,
+            serve_cfg.sync_every.as_secs_f64(),
+            serve_cfg.fleet_retain,
+            serve_cfg.fleet_half_life.as_secs_f64(),
+        ),
+        None => println!("# fleet sync: standalone (this node can serve as a leader)"),
+    }
+    println!(
+        "# endpoints: POST /v1/suggest  POST /v1/report  GET /v1/best  POST /v1/checkpoint  \
+         POST /v1/sync/push  POST /v1/sync/pull  GET /healthz  GET /metrics"
+    );
     handle.wait();
     Ok(())
 }

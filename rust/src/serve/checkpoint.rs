@@ -8,6 +8,40 @@
 //! but its effective pull counts are shrunk, so a restarted service biases
 //! toward what it had learned while still re-verifying a possibly shifted
 //! environment (the paper's warm-start story, applied to the service).
+//!
+//! # File format
+//!
+//! One file per session, named `sess-<hash16>.json` where `<hash16>` is
+//! the session key's stable FNV-1a hash in hex ([`SessionKey::hash64`] —
+//! restart-invariant, so a snapshot always overwrites its predecessor).
+//! Each file is a versioned *envelope* (session identity, objective
+//! weights, traffic counters) embedding the policy's reward state in the
+//! [`persist`] checkpoint format:
+//!
+//! ```json
+//! {"version": 1,
+//!  "client_id": "edge-1", "app": "kripke", "device": "maxn",
+//!  "policy": "ucb", "alpha": 0.8, "beta": 0.2,
+//!  "suggests": 420, "reports": 418,
+//!  "state": {"version": 1, "app": "kripke", "alpha": 0.8, "beta": 0.2,
+//!            "t": 419, "tau_sum": [...], "rho_sum": [...], "counts": [...]}}
+//! ```
+//!
+//! Subset-policy sessions store *subset-space* vectors (positions are
+//! candidate indices); the candidate list itself is never persisted
+//! because it is re-derived from the session-key seed on restore.
+//! Sessions warm-started from a fleet prior additionally carry an
+//! optional `fleet_baseline` object (same [`persist`] format) recording
+//! the borrowed statistics they were seeded with, so a restored session
+//! keeps exporting only locally measured deltas to the sync plane.
+//!
+//! **Versioning rules.** Envelope and state versions are checked
+//! independently; a reader rejects any version it does not know.
+//! Restores skip unreadable, corrupt or version-mismatched files instead
+//! of failing the boot — a tuning service must come up even if one
+//! checkpoint rotted. Format changes bump the version and must keep a
+//! reader for every version still in the field (see DESIGN.md
+//! §Checkpoint file format).
 
 use super::store::{AppsCache, PolicyKind, Session, SessionKey, ShardedStore, Tuner};
 use crate::apps::AppKind;
@@ -41,6 +75,16 @@ pub fn session_to_json(session: &Session) -> Option<String> {
     obj.insert("suggests".to_string(), Json::Num(session.suggests as f64));
     obj.insert("reports".to_string(), Json::Num(session.reports as f64));
     obj.insert("state".to_string(), inner);
+    // Warm-started sessions carry their fleet baseline across restarts
+    // (optional field, same persist format) so restored sessions keep
+    // exporting only locally measured deltas — without it a restart
+    // would launder borrowed fleet evidence into "own" measurements.
+    if let Some(baseline) = &session.fleet_baseline {
+        let b = persist::to_json(baseline, session.key.app.name(), session.alpha, session.beta);
+        if let Ok(b) = Json::parse(&b) {
+            obj.insert("fleet_baseline".to_string(), b);
+        }
+    }
     Some(Json::Obj(obj).to_string())
 }
 
@@ -73,11 +117,21 @@ pub fn session_from_json(text: &str, apps: &AppsCache, retain: f64) -> Result<Se
     let k = apps.arms(app);
     let tuner = Tuner::build(policy, k, alpha, beta, key.hash64(), Some(&cp.state), retain)
         .map_err(|e| anyhow!("rebuilding tuner: {e}"))?;
+    // Restore the fleet baseline (optional — absent in cold-started and
+    // pre-fleet checkpoints), discounted by the same `retain` as the
+    // main state so the exported delta stays proportional. A corrupt
+    // baseline degrades to `None` (the session still restores; it may
+    // over-export once) rather than failing the whole session.
+    let fleet_baseline = root
+        .get("fleet_baseline")
+        .and_then(|b| persist::from_json(&b.to_string()).ok())
+        .map(|b| persist::discounted(&b.state, retain));
     Ok(Session {
         key,
         alpha,
         beta,
         tuner,
+        fleet_baseline,
         suggests: root.get("suggests").and_then(Json::as_f64).unwrap_or(0.0) as u64,
         reports: root.get("reports").and_then(Json::as_f64).unwrap_or(0.0) as u64,
     })
@@ -164,7 +218,15 @@ mod tests {
             let t = if arm == 7 { 0.4 } else { 2.0 + (i % 3) as f64 * 0.1 };
             tuner.observe(arm, t, 5.0).unwrap();
         }
-        Session { key, alpha: 1.0, beta: 0.0, tuner, suggests: pulls as u64, reports: pulls as u64 }
+        Session {
+            key,
+            alpha: 1.0,
+            beta: 0.0,
+            tuner,
+            fleet_baseline: None,
+            suggests: pulls as u64,
+            reports: pulls as u64,
+        }
     }
 
     #[test]
@@ -184,6 +246,32 @@ mod tests {
         assert!((mean_before - mean_after).abs() < 1e-9);
         assert!(restored.tuner.total_pulls() > 0.0);
         assert!(restored.tuner.total_pulls() < s.tuner.total_pulls());
+    }
+
+    #[test]
+    fn fleet_baseline_survives_restart() {
+        // A warm-started session's borrowed-prior baseline must round-trip
+        // through the envelope, or a restart would launder fleet evidence
+        // into "own" measurements (echo amplification across restarts).
+        let apps = AppsCache::new();
+        let mut s = trained_session("warmed", 50);
+        let mut baseline = crate::bandit::reward::RewardState::new(125);
+        for _ in 0..10 {
+            baseline.observe(7, 2.0, 5.0);
+        }
+        s.fleet_baseline = Some(baseline);
+        let text = session_to_json(&s).unwrap();
+        let restored = session_from_json(&text, &apps, 0.5).unwrap();
+        let b = restored.fleet_baseline.expect("baseline lost across restart");
+        assert_eq!(b.k(), 125);
+        // Discounting shrinks baseline counts but preserves the mean.
+        assert!(b.counts[7] > 0.0 && b.counts[7] <= 10.0);
+        assert!((b.tau_sum[7] / b.counts[7] - 2.0).abs() < 1e-9);
+        // Cold sessions keep an absent baseline (and old envelopes
+        // without the field still parse).
+        let cold = trained_session("cold", 10);
+        let restored = session_from_json(&session_to_json(&cold).unwrap(), &apps, 0.5).unwrap();
+        assert!(restored.fleet_baseline.is_none());
     }
 
     #[test]

@@ -1,0 +1,907 @@
+//! Cross-node fleet synchronization: the transfer plane of the tuning
+//! service.
+//!
+//! The paper's deployment story (Fig 1) is a leader coordinating a fleet
+//! of edge devices, and the transfer-learning line of autotuning work
+//! (multitask exascale autotuning, ensemble-model online tuners) shows
+//! that per-configuration statistics learned on one node are exactly the
+//! prior another node needs. [`crate::coordinator`] simulates that with
+//! in-process threads; this module makes it real over the serve HTTP
+//! stack:
+//!
+//! * **Snapshots** ([`FleetSnapshot`]) are compact, *sparse* per-
+//!   `(app, device, policy)` arm statistics — only pulled arms travel,
+//!   capped at [`FLEET_MAX_ARMS`] entries — serialized with the borrowed
+//!   [`JsonWriter`]/[`JsonSlice`] codecs shared with the request path.
+//! * **`POST /v1/sync/push`** lets any node deposit its local aggregate
+//!   under its `node_id`. Pushes *replace* the node's previous slot, so
+//!   retries and duplicated deliveries are idempotent by construction.
+//! * **`POST /v1/sync/pull`** returns the discount-merged knowledge of
+//!   every *other* node (plus the serving node's own live aggregate).
+//! * **[`FleetSync`]** is the background thread a follower runs: every
+//!   `sync_every` it pushes its local deltas to the configured leader and
+//!   installs the pulled merge as the node's fleet prior
+//!   ([`ShardedStore::install_fleet_prior`]), which
+//!   [`ShardedStore::get_or_create`] uses to warm-start new sessions.
+//!
+//! **Discounted merging.** Remote evidence is weighted by
+//! `0.5^(age / half_life)` at merge time (ages travel on the wire as
+//! relative `age_s`, so nodes never need synchronized clocks), and the
+//! installed prior keeps decaying by the same rule until refreshed. Stale
+//! fleet knowledge therefore fades instead of swamping fresh local
+//! observations — the same non-stationarity posture as SW-UCB.
+//!
+//! **Failure posture.** Sync is strictly best-effort: the suggest/report
+//! hot path never touches the network, and a dead or unreachable leader
+//! only increments `fleet_sync_errors_total` while the node keeps serving
+//! standalone. Lock order is documented on [`ShardedStore`]; the sync
+//! plane never takes a shard lock while holding the prior map.
+
+use super::loadgen::HttpClient;
+use super::metrics::Metrics;
+use super::store::{AppsCache, FleetKey, PolicyKind, ShardedStore, Tuner};
+use crate::apps::AppKind;
+use crate::bandit::reward::RewardState;
+use crate::bandit::Policy as _;
+use crate::device::PowerMode;
+use crate::util::json::{JsonSlice, JsonWriter};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Hard cap on sparse arm entries per snapshot: keeps a Hypre-scale push
+/// bounded (~150 KiB of JSON) and inside the transport's 1 MiB body
+/// limit. When a node knows more arms than this, the most-pulled arms
+/// travel and the long tail of single-pull probes is dropped.
+pub const FLEET_MAX_ARMS: usize = 2048;
+
+/// Hard cap on remembered nodes: a leader bombarded with churning node
+/// ids evicts the stalest slot instead of growing without bound.
+pub const FLEET_MAX_NODES: usize = 256;
+
+/// Merge weights below this are treated as fully aged-out evidence.
+const MIN_WEIGHT: f64 = 1e-3;
+
+/// Sparse arm statistics for one `(app, device, policy)` scenario.
+/// `arms` is strictly ascending; `counts[i]`/`tau_sum[i]`/`rho_sum[i]`
+/// are the sufficient statistics of `arms[i]`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetSnapshot {
+    pub key: FleetKey,
+    /// Age of these statistics when serialized (seconds, relative — no
+    /// cross-node clock agreement needed).
+    pub age_s: f64,
+    pub arms: Vec<u32>,
+    pub counts: Vec<f64>,
+    pub tau_sum: Vec<f64>,
+    pub rho_sum: Vec<f64>,
+}
+
+impl FleetSnapshot {
+    /// Sparse view of a full-space reward state. `None` when nothing has
+    /// been pulled (empty snapshots never travel).
+    pub fn from_state(key: FleetKey, state: &RewardState, age_s: f64) -> Option<FleetSnapshot> {
+        let mut idx: Vec<usize> = (0..state.k()).filter(|&i| state.counts[i] > 0.0).collect();
+        if idx.is_empty() {
+            return None;
+        }
+        if idx.len() > FLEET_MAX_ARMS {
+            idx.sort_by(|&a, &b| {
+                state.counts[b]
+                    .partial_cmp(&state.counts[a])
+                    .unwrap_or(std::cmp::Ordering::Equal)
+            });
+            idx.truncate(FLEET_MAX_ARMS);
+            idx.sort_unstable();
+        }
+        Some(FleetSnapshot {
+            key,
+            age_s: age_s.max(0.0),
+            arms: idx.iter().map(|&i| i as u32).collect(),
+            counts: idx.iter().map(|&i| state.counts[i]).collect(),
+            tau_sum: idx.iter().map(|&i| state.tau_sum[i]).collect(),
+            rho_sum: idx.iter().map(|&i| state.rho_sum[i]).collect(),
+        })
+    }
+
+    /// Densify into a `k`-arm reward state (entries beyond `k` are
+    /// dropped — a snapshot from a node running a different space size
+    /// must not panic the receiver).
+    pub fn to_state(&self, k: usize) -> RewardState {
+        let mut s = RewardState::new(k);
+        for (i, &arm) in self.arms.iter().enumerate() {
+            let a = arm as usize;
+            if a < k && self.counts[i] > 0.0 {
+                s.counts[a] += self.counts[i];
+                s.tau_sum[a] += self.tau_sum[i];
+                s.rho_sum[a] += self.rho_sum[i];
+            }
+        }
+        s.t = s.counts.iter().sum::<f64>() + 1.0;
+        s
+    }
+
+    /// Serialize as one JSON object (wire format documented in
+    /// `docs/API.md` and DESIGN.md §Fleet sync).
+    pub fn write_json(&self, w: &mut JsonWriter<'_>) {
+        w.begin_obj();
+        w.field_str("app", self.key.app.name());
+        w.field_str("device", self.key.device.lower_name());
+        w.field_str("policy", self.key.policy.name());
+        w.field_num("age_s", self.age_s);
+        w.key("arms");
+        w.begin_arr();
+        for &a in &self.arms {
+            w.num_val(a as f64);
+        }
+        w.end_arr();
+        for (name, vals) in [
+            ("counts", &self.counts),
+            ("tau_sum", &self.tau_sum),
+            ("rho_sum", &self.rho_sum),
+        ] {
+            w.key(name);
+            w.begin_arr();
+            for &v in vals.iter() {
+                w.num_val(v);
+            }
+            w.end_arr();
+        }
+        w.end_obj();
+    }
+
+    /// Parse and validate one snapshot object. Strict: unknown apps,
+    /// ragged vectors, non-finite statistics, negative counts and
+    /// unsorted/duplicate arms are errors, never silently repaired.
+    pub fn from_slice(v: &JsonSlice<'_>) -> Result<FleetSnapshot, String> {
+        let field = |name: &str| {
+            v.get(name)
+                .and_then(|x| x.as_str())
+                .ok_or_else(|| format!("snapshot missing '{name}'"))
+        };
+        let app: AppKind = field("app")?
+            .parse()
+            .map_err(|e: anyhow::Error| format!("{e:#}"))?;
+        let device: PowerMode = field("device")?
+            .parse()
+            .map_err(|e: anyhow::Error| format!("{e:#}"))?;
+        let policy: PolicyKind = field("policy")?
+            .parse()
+            .map_err(|e: anyhow::Error| format!("{e:#}"))?;
+        let age_s = match v.get("age_s") {
+            None => 0.0,
+            Some(x) => x.as_f64().ok_or("bad age_s")?,
+        };
+        if !age_s.is_finite() || age_s < 0.0 {
+            return Err("bad age_s".into());
+        }
+        let read_vec = |name: &str| -> Result<Vec<f64>, String> {
+            let arr = v.get(name).ok_or_else(|| format!("snapshot missing '{name}'"))?;
+            if !arr.is_arr() {
+                return Err(format!("'{name}' must be an array"));
+            }
+            arr.items()
+                .map(|e| e.as_f64().ok_or_else(|| format!("non-numeric entry in '{name}'")))
+                .collect()
+        };
+        let arms_f = read_vec("arms")?;
+        if arms_f.len() > FLEET_MAX_ARMS {
+            return Err(format!(
+                "snapshot has {} arm entries (max {FLEET_MAX_ARMS})",
+                arms_f.len()
+            ));
+        }
+        let counts = read_vec("counts")?;
+        let tau_sum = read_vec("tau_sum")?;
+        let rho_sum = read_vec("rho_sum")?;
+        if arms_f.len() != counts.len()
+            || tau_sum.len() != counts.len()
+            || rho_sum.len() != counts.len()
+        {
+            return Err("snapshot vector lengths disagree".into());
+        }
+        let mut arms = Vec::with_capacity(arms_f.len());
+        for &a in &arms_f {
+            if !(a.is_finite() && a >= 0.0 && a.fract() == 0.0 && a <= u32::MAX as f64) {
+                return Err(format!("bad arm index {a}"));
+            }
+            let arm = a as u32;
+            if let Some(&prev) = arms.last() {
+                if arm <= prev {
+                    return Err("arms must be strictly ascending".into());
+                }
+            }
+            arms.push(arm);
+        }
+        if counts.iter().any(|&c| !c.is_finite() || c < 0.0) {
+            return Err("snapshot counts invalid".into());
+        }
+        if tau_sum.iter().chain(rho_sum.iter()).any(|x| !x.is_finite()) {
+            return Err("snapshot sums invalid".into());
+        }
+        Ok(FleetSnapshot {
+            key: FleetKey { app, device, policy },
+            age_s,
+            arms,
+            counts,
+            tau_sum,
+            rho_sum,
+        })
+    }
+}
+
+/// Serialize a `/v1/sync/push` request body into `out` (cleared first).
+pub fn write_push_body(node_id: &str, snapshots: &[FleetSnapshot], out: &mut Vec<u8>) {
+    out.clear();
+    let mut w = JsonWriter::new(out);
+    w.begin_obj();
+    w.field_str("node_id", node_id);
+    w.key("snapshots");
+    w.begin_arr();
+    for s in snapshots {
+        s.write_json(&mut w);
+    }
+    w.end_arr();
+    w.end_obj();
+}
+
+/// Add one arm's statistics to a scenario accumulator, net of the
+/// session's warm-start baseline: only evidence measured *on this node*
+/// is exported. Without the subtraction every warm-started session
+/// would re-export its borrowed prior as local measurements, and the
+/// fleet would amplify its own echo by the session count.
+fn add_arm_delta(
+    entry: &mut HashMap<u32, [f64; 3]>,
+    arm: u32,
+    idx: usize,
+    st: &RewardState,
+    baseline: Option<&RewardState>,
+) {
+    let (bc, bt, br) = match baseline {
+        Some(b) if b.k() == st.k() => (b.counts[idx], b.tau_sum[idx], b.rho_sum[idx]),
+        _ => (0.0, 0.0, 0.0),
+    };
+    let c = st.counts[idx] - bc;
+    if c <= 1e-9 {
+        return;
+    }
+    let mut tau = st.tau_sum[idx] - bt;
+    let mut rho = st.rho_sum[idx] - br;
+    if tau < 0.0 || rho < 0.0 {
+        // Windowed policies (swucb) evict baseline entries over time, so
+        // the lifetime-sum subtraction can go negative while the count
+        // delta stays positive. Export the count delta at the arm's
+        // *current* observed means instead of fabricating impossible
+        // (e.g. zero-time) statistics.
+        tau = c * st.tau_sum[idx] / st.counts[idx];
+        rho = c * st.rho_sum[idx] / st.counts[idx];
+    }
+    let e = entry.entry(arm).or_insert([0.0; 3]);
+    e[0] += c;
+    e[1] += tau;
+    e[2] += rho;
+}
+
+/// Aggregate every live session into per-scenario sparse snapshots —
+/// the node's contribution to the fleet. Each session exports its
+/// statistics *net of its warm-start baseline* (see `add_arm_delta`),
+/// so fleet-borrowed evidence never circulates a second time. Subset
+/// sessions project their subset-space statistics back into full-space
+/// arm indices through their candidate lists; different nodes' subsets
+/// overlap partially, which is exactly what makes pooling them
+/// informative.
+pub fn aggregate_local(store: &ShardedStore) -> Vec<FleetSnapshot> {
+    let mut acc: HashMap<FleetKey, HashMap<u32, [f64; 3]>> = HashMap::new();
+    for i in 0..store.num_shards() {
+        let shard = store.read_shard(i);
+        for session in shard.sessions.values() {
+            let fkey = FleetKey {
+                app: session.key.app,
+                device: session.key.device,
+                policy: session.key.policy,
+            };
+            let baseline = session.fleet_baseline.as_ref();
+            let entry = acc.entry(fkey).or_default();
+            match &session.tuner {
+                Tuner::Subset(t) => {
+                    if let Some(st) = t.reward_state() {
+                        for (pos, &full) in t.candidates().iter().enumerate() {
+                            add_arm_delta(entry, full as u32, pos, st, baseline);
+                        }
+                    }
+                }
+                other => {
+                    if let Some(st) = other.reward_state() {
+                        for arm in 0..st.k() {
+                            add_arm_delta(entry, arm as u32, arm, st, baseline);
+                        }
+                    }
+                }
+            }
+        }
+    }
+    acc_into_snapshots(acc)
+}
+
+/// Turn accumulated `(key → arm → [count, τΣ, ρΣ])` maps into sorted,
+/// capped snapshots (deterministic output for tests and idempotent
+/// re-serialization).
+fn acc_into_snapshots(acc: HashMap<FleetKey, HashMap<u32, [f64; 3]>>) -> Vec<FleetSnapshot> {
+    let mut out = Vec::with_capacity(acc.len());
+    for (key, by_arm) in acc {
+        let mut arms: Vec<u32> = by_arm
+            .iter()
+            .filter(|(_, v)| v[0] > 0.0)
+            .map(|(&a, _)| a)
+            .collect();
+        if arms.is_empty() {
+            continue;
+        }
+        if arms.len() > FLEET_MAX_ARMS {
+            arms.sort_by(|&a, &b| {
+                by_arm[&b][0]
+                    .partial_cmp(&by_arm[&a][0])
+                    .unwrap_or(std::cmp::Ordering::Equal)
+            });
+            arms.truncate(FLEET_MAX_ARMS);
+        }
+        arms.sort_unstable();
+        let mut snap = FleetSnapshot {
+            key,
+            age_s: 0.0,
+            arms: Vec::with_capacity(arms.len()),
+            counts: Vec::with_capacity(arms.len()),
+            tau_sum: Vec::with_capacity(arms.len()),
+            rho_sum: Vec::with_capacity(arms.len()),
+        };
+        for a in arms {
+            let v = by_arm[&a];
+            snap.arms.push(a);
+            snap.counts.push(v[0]);
+            snap.tau_sum.push(v[1]);
+            snap.rho_sum.push(v[2]);
+        }
+        out.push(snap);
+    }
+    out.sort_by_key(|s| (s.key.app.name(), s.key.device.name(), s.key.policy.name()));
+    out
+}
+
+/// One remembered node: its latest pushed snapshots and when they
+/// arrived (receive-side clock, used together with the carried `age_s`
+/// to age the evidence).
+struct NodeSlot {
+    snapshots: Vec<FleetSnapshot>,
+    received: Instant,
+}
+
+/// The leader-side registry of per-node snapshots. Every serve node owns
+/// one (any node can act as a leader — "leader" is purely which address
+/// the followers point at).
+pub struct FleetStore {
+    nodes: Mutex<HashMap<String, NodeSlot>>,
+    half_life: Duration,
+}
+
+impl FleetStore {
+    pub fn new(half_life: Duration) -> FleetStore {
+        FleetStore {
+            nodes: Mutex::new(HashMap::new()),
+            half_life,
+        }
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, HashMap<String, NodeSlot>> {
+        match self.nodes.lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        }
+    }
+
+    /// Store (replace) a node's snapshots. Replacement — not
+    /// accumulation — is what makes repeated pushes idempotent: a node
+    /// retrying the same cumulative snapshot cannot double-count itself.
+    /// Returns the number of snapshots stored.
+    pub fn absorb(&self, node_id: &str, snapshots: Vec<FleetSnapshot>) -> usize {
+        let n = snapshots.len();
+        let mut nodes = self.lock();
+        if !nodes.contains_key(node_id) && nodes.len() >= FLEET_MAX_NODES {
+            let stalest = nodes
+                .iter()
+                .max_by_key(|(_, slot)| slot.received.elapsed())
+                .map(|(id, _)| id.clone());
+            if let Some(id) = stalest {
+                nodes.remove(&id);
+            }
+        }
+        nodes.insert(
+            node_id.to_string(),
+            NodeSlot { snapshots, received: Instant::now() },
+        );
+        n
+    }
+
+    /// Nodes currently remembered.
+    pub fn node_count(&self) -> usize {
+        self.lock().len()
+    }
+
+    /// Discount-merge every remembered node's snapshots (each weighted by
+    /// `0.5^(age / half_life)`, where age = carried `age_s` + time since
+    /// receipt), optionally excluding one node (a puller must not be fed
+    /// its own echo) and optionally folding in the serving node's live
+    /// local aggregate at full weight.
+    pub fn merged(
+        &self,
+        exclude: Option<&str>,
+        local: Option<(&str, &[FleetSnapshot])>,
+    ) -> Vec<FleetSnapshot> {
+        let half = self.half_life.as_secs_f64().max(1e-9);
+        let mut acc: HashMap<FleetKey, HashMap<u32, [f64; 3]>> = HashMap::new();
+        let mut add = |snap: &FleetSnapshot, w: f64| {
+            let entry = acc.entry(snap.key).or_default();
+            for (i, &arm) in snap.arms.iter().enumerate() {
+                let e = entry.entry(arm).or_insert([0.0; 3]);
+                e[0] += snap.counts[i] * w;
+                e[1] += snap.tau_sum[i] * w;
+                e[2] += snap.rho_sum[i] * w;
+            }
+        };
+        {
+            let nodes = self.lock();
+            for (id, slot) in nodes.iter() {
+                if exclude == Some(id.as_str()) {
+                    continue;
+                }
+                let since = slot.received.elapsed().as_secs_f64();
+                for snap in &slot.snapshots {
+                    let w = 0.5_f64.powf((snap.age_s + since) / half);
+                    if w >= MIN_WEIGHT {
+                        add(snap, w);
+                    }
+                }
+            }
+        }
+        if let Some((id, snaps)) = local {
+            if exclude != Some(id) {
+                for snap in snaps {
+                    add(snap, 1.0);
+                }
+            }
+        }
+        drop(add);
+        acc_into_snapshots(acc)
+    }
+}
+
+/// Install a set of pulled/merged snapshots as the node's fleet priors.
+/// Returns how many scenarios were installed.
+pub fn install_priors(
+    snapshots: &[FleetSnapshot],
+    store: &ShardedStore,
+    apps: &AppsCache,
+) -> usize {
+    let mut installed = 0;
+    for snap in snapshots {
+        let k = apps.arms(snap.key.app);
+        let state = snap.to_state(k);
+        if state.counts.iter().any(|&c| c > 0.0) {
+            store.install_fleet_prior(snap.key, state);
+            installed += 1;
+        }
+    }
+    installed
+}
+
+/// Parse a `/v1/sync/pull` response body and install the merged priors.
+pub fn apply_pull_body(
+    body: &[u8],
+    store: &ShardedStore,
+    apps: &AppsCache,
+) -> Result<usize, String> {
+    let v = JsonSlice::parse(body)?;
+    let snaps_v = v
+        .get("snapshots")
+        .ok_or_else(|| "pull response missing 'snapshots'".to_string())?;
+    if !snaps_v.is_arr() {
+        return Err("'snapshots' must be an array".into());
+    }
+    let mut snapshots = Vec::new();
+    for item in snaps_v.items() {
+        snapshots.push(FleetSnapshot::from_slice(&item)?);
+    }
+    Ok(install_priors(&snapshots, store, apps))
+}
+
+/// What the background sync thread needs to know.
+#[derive(Debug, Clone)]
+pub struct FleetSyncConfig {
+    /// Leader address (`host:port`).
+    pub leader: String,
+    /// This node's stable identity on the wire.
+    pub node_id: String,
+    /// Period between push/pull cycles.
+    pub every: Duration,
+}
+
+/// The follower-side background thread: push local aggregate, pull the
+/// fleet merge, install it as warm-start priors. Strictly best-effort —
+/// every failure increments a counter and the next cycle retries from a
+/// fresh connection; the serving path is never involved.
+pub struct FleetSync {
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl FleetSync {
+    pub fn start(
+        cfg: FleetSyncConfig,
+        store: Arc<ShardedStore>,
+        apps: Arc<AppsCache>,
+        metrics: Arc<Metrics>,
+    ) -> FleetSync {
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let handle = std::thread::spawn(move || run_loop(&cfg, &store, &apps, &metrics, &stop2));
+        FleetSync {
+            stop,
+            handle: Some(handle),
+        }
+    }
+
+    /// Signal the loop and join it. Idempotent.
+    pub fn stop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for FleetSync {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+fn run_loop(
+    cfg: &FleetSyncConfig,
+    store: &ShardedStore,
+    apps: &AppsCache,
+    metrics: &Metrics,
+    stop: &AtomicBool,
+) {
+    let mut client: Option<HttpClient> = None;
+    let mut buf: Vec<u8> = Vec::with_capacity(4096);
+    let mut last = Instant::now();
+    loop {
+        std::thread::sleep(Duration::from_millis(25));
+        if stop.load(Ordering::SeqCst) {
+            return;
+        }
+        if last.elapsed() < cfg.every {
+            continue;
+        }
+        last = Instant::now();
+        match sync_once(cfg, &mut client, &mut buf, store, apps) {
+            Ok(_) => {
+                metrics.fleet_pushes.fetch_add(1, Ordering::Relaxed);
+                metrics.fleet_pulls.fetch_add(1, Ordering::Relaxed);
+            }
+            Err(_) => {
+                // Reconnect next cycle; the node keeps serving standalone.
+                client = None;
+                metrics.fleet_sync_errors.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+}
+
+/// One push + pull cycle against the leader.
+fn sync_once(
+    cfg: &FleetSyncConfig,
+    client: &mut Option<HttpClient>,
+    buf: &mut Vec<u8>,
+    store: &ShardedStore,
+    apps: &AppsCache,
+) -> Result<usize, String> {
+    if client.is_none() {
+        *client = Some(HttpClient::connect(&cfg.leader).map_err(|e| format!("{e:#}"))?);
+    }
+    let c = client.as_mut().expect("client just ensured");
+
+    let local = aggregate_local(store);
+    write_push_body(&cfg.node_id, &local, buf);
+    let status = c.post_slice("/v1/sync/push", buf).map_err(|e| format!("{e:#}"))?;
+    if status != 200 {
+        return Err(format!("push rejected: HTTP {status}"));
+    }
+
+    buf.clear();
+    {
+        let mut w = JsonWriter::new(buf);
+        w.begin_obj();
+        w.field_str("node_id", &cfg.node_id);
+        w.end_obj();
+    }
+    let status = c.post_slice("/v1/sync/pull", buf).map_err(|e| format!("{e:#}"))?;
+    if status != 200 {
+        return Err(format!("pull rejected: HTTP {status}"));
+    }
+    apply_pull_body(c.last_body(), store, apps)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::store::SessionKey;
+
+    fn fkey(app: AppKind, policy: PolicyKind) -> FleetKey {
+        FleetKey {
+            app,
+            device: PowerMode::Maxn,
+            policy,
+        }
+    }
+
+    fn snap(app: AppKind, arms: &[u32], counts: &[f64]) -> FleetSnapshot {
+        FleetSnapshot {
+            key: fkey(app, PolicyKind::Ucb),
+            age_s: 0.0,
+            arms: arms.to_vec(),
+            counts: counts.to_vec(),
+            tau_sum: counts.iter().map(|c| c * 1.5).collect(),
+            rho_sum: counts.iter().map(|c| c * 5.0).collect(),
+        }
+    }
+
+    fn roundtrip(s: &FleetSnapshot) -> FleetSnapshot {
+        let mut buf = Vec::new();
+        let mut w = JsonWriter::new(&mut buf);
+        s.write_json(&mut w);
+        let v = JsonSlice::parse(&buf).unwrap();
+        FleetSnapshot::from_slice(&v).unwrap()
+    }
+
+    #[test]
+    fn snapshot_json_roundtrip() {
+        let s = FleetSnapshot {
+            key: fkey(AppKind::Clomp, PolicyKind::SwUcb),
+            age_s: 2.5,
+            arms: vec![3, 7, 120],
+            counts: vec![4.0, 9.5, 1.0],
+            tau_sum: vec![3.25, 4.0, 2.0],
+            rho_sum: vec![20.0, 45.0, 5.0],
+        };
+        assert_eq!(roundtrip(&s), s);
+    }
+
+    #[test]
+    fn snapshot_parse_rejects_malformed() {
+        let good = r#"{"app":"clomp","device":"maxn","policy":"ucb","age_s":0,
+            "arms":[1,2],"counts":[1,1],"tau_sum":[1,1],"rho_sum":[1,1]}"#;
+        let v = JsonSlice::parse(good.as_bytes()).unwrap();
+        assert!(FleetSnapshot::from_slice(&v).is_ok());
+        for bad in [
+            // Unknown app.
+            r#"{"app":"doom","device":"maxn","policy":"ucb","arms":[1],"counts":[1],"tau_sum":[1],"rho_sum":[1]}"#,
+            // Ragged vectors.
+            r#"{"app":"clomp","device":"maxn","policy":"ucb","arms":[1,2],"counts":[1],"tau_sum":[1,1],"rho_sum":[1,1]}"#,
+            // Unsorted arms.
+            r#"{"app":"clomp","device":"maxn","policy":"ucb","arms":[2,1],"counts":[1,1],"tau_sum":[1,1],"rho_sum":[1,1]}"#,
+            // Duplicate arms.
+            r#"{"app":"clomp","device":"maxn","policy":"ucb","arms":[1,1],"counts":[1,1],"tau_sum":[1,1],"rho_sum":[1,1]}"#,
+            // Fractional arm index.
+            r#"{"app":"clomp","device":"maxn","policy":"ucb","arms":[1.5],"counts":[1],"tau_sum":[1],"rho_sum":[1]}"#,
+            // Negative counts.
+            r#"{"app":"clomp","device":"maxn","policy":"ucb","arms":[1],"counts":[-1],"tau_sum":[1],"rho_sum":[1]}"#,
+            // Non-array stats.
+            r#"{"app":"clomp","device":"maxn","policy":"ucb","arms":7,"counts":[1],"tau_sum":[1],"rho_sum":[1]}"#,
+            // Missing policy.
+            r#"{"app":"clomp","device":"maxn","arms":[1],"counts":[1],"tau_sum":[1],"rho_sum":[1]}"#,
+            // Negative age.
+            r#"{"app":"clomp","device":"maxn","policy":"ucb","age_s":-3,"arms":[1],"counts":[1],"tau_sum":[1],"rho_sum":[1]}"#,
+        ] {
+            let v = JsonSlice::parse(bad.as_bytes()).unwrap();
+            assert!(FleetSnapshot::from_slice(&v).is_err(), "accepted: {bad}");
+        }
+    }
+
+    #[test]
+    fn sparse_state_roundtrip_and_cap() {
+        let mut state = RewardState::new(10_000);
+        for arm in 0..5_000 {
+            for _ in 0..(1 + arm % 7) {
+                state.observe(arm, 1.0, 5.0);
+            }
+        }
+        let s = FleetSnapshot::from_state(fkey(AppKind::Hypre, PolicyKind::Subset), &state, 0.0)
+            .unwrap();
+        assert!(s.arms.len() <= FLEET_MAX_ARMS, "cap not applied: {}", s.arms.len());
+        // Capping keeps the most-pulled arms.
+        assert!(s.counts.iter().all(|&c| c >= 4.0), "kept a low-count arm over a high one");
+        // Ascending and unique.
+        assert!(s.arms.windows(2).all(|w| w[0] < w[1]));
+        // Densify: kept arms match exactly.
+        let dense = s.to_state(10_000);
+        for (i, &arm) in s.arms.iter().enumerate() {
+            assert_eq!(dense.counts[arm as usize], s.counts[i]);
+        }
+        // Empty states never serialize.
+        assert!(FleetSnapshot::from_state(
+            fkey(AppKind::Clomp, PolicyKind::Ucb),
+            &RewardState::new(8),
+            0.0
+        )
+        .is_none());
+    }
+
+    #[test]
+    fn absorb_is_idempotent() {
+        let fs = FleetStore::new(Duration::from_secs(3600));
+        let s = snap(AppKind::Clomp, &[5], &[10.0]);
+        fs.absorb("edge-a", vec![s.clone()]);
+        let once = fs.merged(None, None);
+        fs.absorb("edge-a", vec![s.clone()]);
+        fs.absorb("edge-a", vec![s]);
+        let thrice = fs.merged(None, None);
+        assert_eq!(fs.node_count(), 1);
+        assert_eq!(once.len(), 1);
+        // Counts are within decay noise of each other (sub-second ages).
+        assert!((once[0].counts[0] - thrice[0].counts[0]).abs() < 0.01);
+    }
+
+    #[test]
+    fn merged_excludes_requester_and_folds_local() {
+        let fs = FleetStore::new(Duration::from_secs(3600));
+        fs.absorb("edge-a", vec![snap(AppKind::Clomp, &[1], &[4.0])]);
+        fs.absorb("edge-b", vec![snap(AppKind::Clomp, &[1, 2], &[2.0, 6.0])]);
+        let local = [snap(AppKind::Kripke, &[9], &[3.0])];
+        let merged = fs.merged(Some("edge-a"), Some(("leader", &local)));
+        // Clomp comes only from edge-b; kripke from the local aggregate.
+        let clomp = merged.iter().find(|s| s.key.app == AppKind::Clomp).unwrap();
+        assert_eq!(clomp.arms, vec![1, 2]);
+        assert!((clomp.counts[0] - 2.0).abs() < 0.01, "echoed the excluded node");
+        let kripke = merged.iter().find(|s| s.key.app == AppKind::Kripke).unwrap();
+        assert_eq!(kripke.arms, vec![9]);
+        // Without exclusion both nodes pool.
+        let all = fs.merged(None, None);
+        let clomp = all.iter().find(|s| s.key.app == AppKind::Clomp).unwrap();
+        assert!((clomp.counts[0] - 6.0).abs() < 0.01, "nodes did not pool");
+    }
+
+    #[test]
+    fn merged_decays_stale_evidence() {
+        // Tiny half-life: evidence a few ms old is already worthless.
+        let fs = FleetStore::new(Duration::from_millis(1));
+        fs.absorb("edge-a", vec![snap(AppKind::Clomp, &[1], &[1000.0])]);
+        std::thread::sleep(Duration::from_millis(30));
+        assert!(fs.merged(None, None).is_empty(), "stale evidence survived");
+        // Carried age counts too: a snapshot pushed as already-old decays
+        // even when received just now.
+        let fs = FleetStore::new(Duration::from_secs(1));
+        let mut old = snap(AppKind::Clomp, &[1], &[1000.0]);
+        old.age_s = 3600.0;
+        fs.absorb("edge-a", vec![old]);
+        assert!(fs.merged(None, None).is_empty(), "carried age ignored");
+    }
+
+    #[test]
+    fn aggregate_local_pools_sessions_per_scenario() {
+        let store = ShardedStore::new(4);
+        for (client, pulls) in [("a", 3usize), ("b", 5usize)] {
+            let key = SessionKey {
+                client_id: client.to_string(),
+                app: AppKind::Clomp,
+                device: PowerMode::Maxn,
+                policy: PolicyKind::Ucb,
+            };
+            let hash = key.hash64();
+            let id = store.intern(&key.as_ref(), hash);
+            let i = store.shard_of_hash(hash);
+            let mut shard = store.write_shard(i);
+            let (s, _) = store.get_or_create(&mut shard, id, 1.0, 0.0, 125).unwrap();
+            for _ in 0..pulls {
+                s.tuner.observe(7, 0.5, 5.0).unwrap();
+            }
+        }
+        let snaps = aggregate_local(&store);
+        assert_eq!(snaps.len(), 1, "one scenario expected");
+        let s = &snaps[0];
+        assert_eq!(s.key, fkey(AppKind::Clomp, PolicyKind::Ucb));
+        assert_eq!(s.arms, vec![7]);
+        assert!((s.counts[0] - 8.0).abs() < 1e-9, "sessions did not pool: {:?}", s.counts);
+        // Round-trip through the wire and back into a store prior.
+        let apps = AppsCache::new();
+        let fresh = ShardedStore::new(2);
+        let installed = install_priors(&snaps, &fresh, &apps);
+        assert_eq!(installed, 1);
+        assert_eq!(fresh.fleet_prior_keys(), 1);
+    }
+
+    #[test]
+    fn snapshot_parse_rejects_oversized() {
+        let n = FLEET_MAX_ARMS + 1;
+        let arms: Vec<String> = (0..n).map(|i| i.to_string()).collect();
+        let ones = vec!["1"; n].join(",");
+        let big = format!(
+            r#"{{"app":"clomp","device":"maxn","policy":"ucb","arms":[{}],"counts":[{ones}],"tau_sum":[{ones}],"rho_sum":[{ones}]}}"#,
+            arms.join(",")
+        );
+        let v = JsonSlice::parse(big.as_bytes()).unwrap();
+        let err = FleetSnapshot::from_slice(&v).unwrap_err();
+        assert!(err.contains("arm entries"), "{err}");
+    }
+
+    #[test]
+    fn aggregate_local_exports_only_local_deltas() {
+        // A warm-started session must not re-export its borrowed fleet
+        // prior as this node's own evidence (echo amplification).
+        let store = ShardedStore::new(1).with_fleet_tuning(0.5, Duration::from_secs(3600));
+        let mut prior = RewardState::new(125);
+        for _ in 0..40 {
+            prior.observe(7, 0.3, 5.0);
+        }
+        store.install_fleet_prior(fkey(AppKind::Clomp, PolicyKind::Ucb), prior);
+        let key = SessionKey {
+            client_id: "warm".to_string(),
+            app: AppKind::Clomp,
+            device: PowerMode::Maxn,
+            policy: PolicyKind::Ucb,
+        };
+        let id = store.intern(&key.as_ref(), key.hash64());
+        {
+            let mut shard = store.write_shard(0);
+            let (s, created) = store.get_or_create(&mut shard, id, 1.0, 0.0, 125).unwrap();
+            assert!(created);
+            assert!(s.fleet_baseline.is_some(), "warm start did not record a baseline");
+            assert!(s.tuner.total_pulls() > 0.0, "prior not applied");
+        }
+        assert!(
+            aggregate_local(&store).is_empty(),
+            "borrowed prior was re-exported as local evidence"
+        );
+        // Local measurements, and only they, are exported.
+        {
+            let mut shard = store.write_shard(0);
+            let (s, _) = store.get_or_create(&mut shard, id, 1.0, 0.0, 125).unwrap();
+            s.tuner.observe(7, 0.3, 5.0).unwrap();
+            s.tuner.observe(9, 2.0, 5.0).unwrap();
+        }
+        let snaps = aggregate_local(&store);
+        assert_eq!(snaps.len(), 1);
+        assert_eq!(snaps[0].arms, vec![7, 9]);
+        assert!((snaps[0].counts[0] - 1.0).abs() < 1e-9, "{:?}", snaps[0].counts);
+        assert!((snaps[0].counts[1] - 1.0).abs() < 1e-9, "{:?}", snaps[0].counts);
+    }
+
+    #[test]
+    fn push_body_and_pull_body_roundtrip() {
+        let snaps = vec![
+            snap(AppKind::Clomp, &[5, 9], &[10.0, 2.0]),
+            snap(AppKind::Kripke, &[0], &[1.0]),
+        ];
+        let mut buf = Vec::new();
+        write_push_body("edge-a", &snaps, &mut buf);
+        let v = JsonSlice::parse(&buf).unwrap();
+        assert_eq!(v.get("node_id").unwrap().as_str().unwrap(), "edge-a");
+        let parsed: Vec<FleetSnapshot> = v
+            .get("snapshots")
+            .unwrap()
+            .items()
+            .map(|i| FleetSnapshot::from_slice(&i).unwrap())
+            .collect();
+        assert_eq!(parsed, snaps);
+
+        // The same wire shape is a valid pull body for apply_pull_body.
+        let apps = AppsCache::new();
+        let store = ShardedStore::new(2);
+        assert_eq!(apply_pull_body(&buf, &store, &apps).unwrap(), 2);
+        assert_eq!(store.fleet_prior_keys(), 2);
+        assert!(apply_pull_body(b"{\"snapshots\":3}", &store, &apps).is_err());
+        assert!(apply_pull_body(b"{}", &store, &apps).is_err());
+        assert!(apply_pull_body(b"not json", &store, &apps).is_err());
+    }
+}

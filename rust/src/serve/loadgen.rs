@@ -27,7 +27,10 @@ use std::time::{Duration, Instant};
 /// Load-generation parameters.
 #[derive(Debug, Clone)]
 pub struct LoadgenConfig {
-    /// Server address, e.g. `127.0.0.1:8787`.
+    /// Server address(es): `127.0.0.1:8787`, or a comma-separated list
+    /// for a multi-node fleet (`host1:8787,host2:8787`) — client threads
+    /// round-robin over the targets, so a two-node fleet-sync deployment
+    /// is driven with one loadgen invocation.
     pub addr: String,
     /// Concurrent tuning sessions to maintain.
     pub sessions: usize,
@@ -83,6 +86,8 @@ pub struct LoadgenReport {
     pub connections: usize,
     pub reconnects: usize,
     pub requests: usize,
+    /// Distinct server addresses the load was spread over.
+    pub targets: usize,
 }
 
 impl LoadgenReport {
@@ -99,8 +104,8 @@ impl LoadgenReport {
     /// Print the human-readable summary the CLI shows.
     pub fn print(&self) {
         println!(
-            "loadgen: {} round-trips over {} sessions in {:.2}s ({} errors)",
-            self.rounds, self.sessions, self.elapsed_s, self.errors
+            "loadgen: {} round-trips over {} sessions across {} target(s) in {:.2}s ({} errors)",
+            self.rounds, self.sessions, self.targets, self.elapsed_s, self.errors
         );
         println!(
             "throughput: {:.0} round-trips/s ({:.0} req/s) | latency p50 {:.2}ms p99 {:.2}ms mean {:.2}ms",
@@ -320,19 +325,48 @@ fn write_body(
     w.end_obj();
 }
 
+impl LoadgenConfig {
+    /// The target address list (see [`LoadgenConfig::addr`]).
+    pub fn targets(&self) -> Vec<String> {
+        self.addr
+            .split(',')
+            .map(str::trim)
+            .filter(|s| !s.is_empty())
+            .map(str::to_string)
+            .collect()
+    }
+}
+
 /// Drive the configured load and aggregate the per-thread results.
 pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
     if cfg.sessions == 0 || cfg.rounds == 0 || cfg.threads == 0 || cfg.apps.is_empty() {
         return Err(anyhow!("loadgen: sessions/rounds/threads/apps must be non-empty"));
     }
+    let targets = cfg.targets();
+    if targets.is_empty() {
+        return Err(anyhow!("loadgen: no target address"));
+    }
     let t0 = Instant::now();
     let threads = cfg.threads.min(cfg.sessions);
+    // Threads map onto targets round-robin; fewer threads than targets
+    // would silently leave trailing nodes with zero traffic while the
+    // report claims fleet-wide coverage.
+    if threads < targets.len() {
+        return Err(anyhow!(
+            "loadgen: {threads} client thread(s) cannot cover {} targets; raise --threads/--sessions",
+            targets.len()
+        ));
+    }
     let mut handles = Vec::with_capacity(threads);
     for t in 0..threads {
         let cfg = cfg.clone();
+        // Threads round-robin over the target nodes; each session stays
+        // pinned to one node (its owning thread's target) so per-node
+        // session state remains coherent.
+        let target = targets[t % targets.len()].clone();
         // Rounds split evenly; the first threads absorb the remainder.
         let my_rounds = cfg.rounds / threads + usize::from(t < cfg.rounds % threads);
-        handles.push(std::thread::spawn(move || worker(t, threads, my_rounds, &cfg)));
+        handles.push(std::thread::spawn(move || worker(t, threads, my_rounds, &cfg, &target)));
     }
 
     let mut latencies: Vec<f64> = Vec::with_capacity(cfg.rounds * 2);
@@ -361,6 +395,7 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
         connections: threads + reconnects,
         reconnects,
         requests,
+        targets: targets.len(),
     })
 }
 
@@ -373,7 +408,13 @@ struct WorkerOut {
     requests: usize,
 }
 
-fn worker(thread_id: usize, threads: usize, my_rounds: usize, cfg: &LoadgenConfig) -> Result<WorkerOut> {
+fn worker(
+    thread_id: usize,
+    threads: usize,
+    my_rounds: usize,
+    cfg: &LoadgenConfig,
+    target: &str,
+) -> Result<WorkerOut> {
     // This thread owns sessions thread_id, thread_id+threads, ...
     let mut sessions: Vec<ClientSession> = (0..cfg.sessions)
         .skip(thread_id)
@@ -401,7 +442,7 @@ fn worker(thread_id: usize, threads: usize, my_rounds: usize, cfg: &LoadgenConfi
         });
     }
     let models: Vec<Box<dyn AppModel>> = cfg.apps.iter().map(|&k| apps::build(k)).collect();
-    let mut client = HttpClient::connect(&cfg.addr)?;
+    let mut client = HttpClient::connect(target)?;
     let mut latencies = Vec::with_capacity(my_rounds * 2);
     let mut body = Vec::with_capacity(512);
     let mut errors = 0usize;
@@ -496,7 +537,27 @@ mod tests {
             connections: 4,
             reconnects: 0,
             requests: 200,
+            targets: 1,
         };
         assert!((r.requests_per_connection() - 50.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn addr_lists_split_into_targets() {
+        let cfg = LoadgenConfig {
+            addr: "127.0.0.1:8787, 127.0.0.1:8788 ,".to_string(),
+            ..Default::default()
+        };
+        assert_eq!(cfg.targets(), vec!["127.0.0.1:8787", "127.0.0.1:8788"]);
+        let cfg = LoadgenConfig { addr: " , ".to_string(), ..Default::default() };
+        assert!(run(&cfg).is_err(), "empty target list must be rejected");
+        // Fewer threads than targets would leave nodes untouched while
+        // the report claimed coverage: refuse up front.
+        let cfg = LoadgenConfig {
+            addr: "h1:1,h2:1".to_string(),
+            threads: 1,
+            ..Default::default()
+        };
+        assert!(run(&cfg).is_err(), "threads < targets must be rejected");
     }
 }

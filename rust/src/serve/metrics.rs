@@ -105,6 +105,19 @@ impl Default for Histogram {
     }
 }
 
+/// Point-in-time gauges of the fleet-sync plane, sampled at render time
+/// (the counts live in [`super::store::ShardedStore`] and
+/// [`super::fleet::FleetStore`], not behind atomics here).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FleetGauges {
+    /// Remote nodes with a stored push slot.
+    pub nodes: usize,
+    /// Scenarios with an installed fleet prior.
+    pub prior_keys: usize,
+    /// Sessions warm-started from a fleet prior since boot.
+    pub warm_starts: u64,
+}
+
 /// All counters the service exports.
 pub struct Metrics {
     started: Instant,
@@ -123,6 +136,15 @@ pub struct Metrics {
     pub checkpoints: AtomicU64,
     pub checkpoint_sessions: AtomicU64,
     pub sessions_restored: AtomicU64,
+    /// Fleet-sync client plane: completed pushes/pulls and failed cycles
+    /// (the [`super::fleet::FleetSync`] thread).
+    pub fleet_pushes: AtomicU64,
+    pub fleet_pulls: AtomicU64,
+    pub fleet_sync_errors: AtomicU64,
+    /// Fleet-sync server plane: snapshots absorbed via `/v1/sync/push`
+    /// and pulls served via `/v1/sync/pull`.
+    pub fleet_push_snapshots: AtomicU64,
+    pub fleet_pulls_served: AtomicU64,
 }
 
 impl Metrics {
@@ -144,6 +166,11 @@ impl Metrics {
             checkpoints: AtomicU64::new(0),
             checkpoint_sessions: AtomicU64::new(0),
             sessions_restored: AtomicU64::new(0),
+            fleet_pushes: AtomicU64::new(0),
+            fleet_pulls: AtomicU64::new(0),
+            fleet_sync_errors: AtomicU64::new(0),
+            fleet_push_snapshots: AtomicU64::new(0),
+            fleet_pulls_served: AtomicU64::new(0),
         }
     }
 
@@ -159,6 +186,7 @@ impl Metrics {
         shards: usize,
         transport: &TransportStats,
         resources: &ResourceReport,
+        fleet: FleetGauges,
     ) -> String {
         let mut out = String::with_capacity(2048);
         let gauge = |out: &mut String, name: &str, v: f64| {
@@ -182,6 +210,20 @@ impl Metrics {
         counter(&mut out, "lasp_serve_checkpoints_total", &self.checkpoints);
         counter(&mut out, "lasp_serve_checkpoint_sessions_total", &self.checkpoint_sessions);
         counter(&mut out, "lasp_serve_sessions_restored_total", &self.sessions_restored);
+        // Fleet-sync plane: client-side cycles, server-side absorption,
+        // and the warm-start payoff (sessions that skipped cold start).
+        counter(&mut out, "lasp_serve_fleet_pushes_total", &self.fleet_pushes);
+        counter(&mut out, "lasp_serve_fleet_pulls_total", &self.fleet_pulls);
+        counter(&mut out, "lasp_serve_fleet_sync_errors_total", &self.fleet_sync_errors);
+        counter(&mut out, "lasp_serve_fleet_push_snapshots_total", &self.fleet_push_snapshots);
+        counter(&mut out, "lasp_serve_fleet_pulls_served_total", &self.fleet_pulls_served);
+        gauge(&mut out, "lasp_serve_fleet_nodes", fleet.nodes as f64);
+        gauge(&mut out, "lasp_serve_fleet_prior_keys", fleet.prior_keys as f64);
+        let _ = writeln!(
+            out,
+            "# TYPE lasp_serve_fleet_warm_starts_total counter\nlasp_serve_fleet_warm_starts_total {}",
+            fleet.warm_starts
+        );
         // Transport plane: the zero-allocation contract is observable —
         // `alloc_events_total` flat under load means the HTTP+JSON layers
         // are not heap-allocating per request.
@@ -237,9 +279,15 @@ mod tests {
         m.suggest_latency.observe(Duration::from_micros(120));
         let t = TransportStats::default();
         t.requests.fetch_add(7, Ordering::Relaxed);
-        let page = m.render(5, 8, &t, &ResourceReport::default());
+        m.fleet_sync_errors.fetch_add(2, Ordering::Relaxed);
+        let fleet = FleetGauges { nodes: 3, prior_keys: 2, warm_starts: 4 };
+        let page = m.render(5, 8, &t, &ResourceReport::default(), fleet);
         assert!(page.contains("lasp_serve_http_requests_total 3"), "{page}");
         assert!(page.contains("lasp_serve_sessions 5"), "{page}");
+        assert!(page.contains("lasp_serve_fleet_nodes 3"), "{page}");
+        assert!(page.contains("lasp_serve_fleet_prior_keys 2"), "{page}");
+        assert!(page.contains("lasp_serve_fleet_warm_starts_total 4"), "{page}");
+        assert!(page.contains("lasp_serve_fleet_sync_errors_total 2"), "{page}");
         assert!(page.contains("lasp_serve_transport_requests_total 7"), "{page}");
         assert!(page.contains("lasp_serve_transport_alloc_events_total 0"), "{page}");
         assert!(page.contains("lasp_serve_suggest_latency_us_bucket{le=\"250\"} 1"));

@@ -25,24 +25,32 @@
 //! * [`checkpoint`] — periodic snapshots of every shard via
 //!   [`crate::bandit::persist`], with [`crate::bandit::persist::discounted`]
 //!   staleness decay on boot, so a restarted service resumes learned state;
+//! * [`fleet`] — **networked fleet sync**: nodes exchange compact sparse
+//!   arm-statistic snapshots over `/v1/sync/push` and `/v1/sync/pull`,
+//!   merge them with time-decayed counts, and warm-start new sessions
+//!   from the fleet prior — knowledge learned on one edge node transfers
+//!   to every other (the paper's Fig 1 leader/fleet story, made real);
 //! * [`metrics`] — latency histograms and counters for `GET /metrics`;
 //! * [`service`] — the endpoint router and server lifecycle
 //!   (`/v1/suggest`, `/v1/report`, `/v1/best`, `/v1/checkpoint`,
-//!   `/healthz`, `/metrics`);
+//!   `/v1/sync/push`, `/v1/sync/pull`, `/healthz`, `/metrics` — see
+//!   `docs/API.md` for the full HTTP reference);
 //! * [`loadgen`] — a closed-loop load generator (`lasp loadgen`) that
-//!   hammers a running server through a pool of persistent keep-alive
-//!   connections across all four apps and reports throughput, p50/p99
-//!   latency, and connection-reuse stats.
+//!   hammers one or more running servers through a pool of persistent
+//!   keep-alive connections across all four apps and reports throughput,
+//!   p50/p99 latency, and connection-reuse stats.
 
 pub mod batch;
 pub mod checkpoint;
+pub mod fleet;
 pub mod http;
 pub mod loadgen;
 pub mod metrics;
 pub mod service;
 pub mod store;
 
+pub use fleet::{FleetSnapshot, FleetStore, FleetSync, FleetSyncConfig};
 pub use http::{ResponseBuf, TransportStats};
 pub use loadgen::{HttpClient, LoadgenConfig, LoadgenReport};
 pub use service::{start, ServeConfig, ServerHandle, TuningService};
-pub use store::{KeyRef, PolicyKind, SessionId, SessionKey};
+pub use store::{FleetKey, KeyRef, PolicyKind, SessionId, SessionKey};

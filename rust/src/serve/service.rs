@@ -9,7 +9,7 @@
 //! clone), and responses serialize through [`JsonWriter`] into the
 //! worker's reusable [`ResponseBuf`].
 //!
-//! Endpoints:
+//! Endpoints (full reference with examples: `docs/API.md`):
 //!
 //! | method | path             | purpose                                      |
 //! |--------|------------------|----------------------------------------------|
@@ -17,6 +17,8 @@
 //! | POST   | `/v1/report`     | enqueue a measured evaluation (batched)      |
 //! | GET    | `/v1/best`       | the session's tuned configuration (Eq. 4)    |
 //! | POST   | `/v1/checkpoint` | force a snapshot of every session            |
+//! | POST   | `/v1/sync/push`  | deposit a peer node's arm statistics         |
+//! | POST   | `/v1/sync/pull`  | fetch the discount-merged fleet prior        |
 //! | GET    | `/healthz`       | liveness + session count                     |
 //! | GET    | `/metrics`       | Prometheus counters, latency histograms,     |
 //! |        |                  | transport stats, process [`ResourceReport`]  |
@@ -25,8 +27,9 @@
 
 use super::batch::{BatchIngest, Report};
 use super::checkpoint;
+use super::fleet::{self, FleetSnapshot, FleetStore, FleetSync, FleetSyncConfig};
 use super::http::{self, HttpHandler, HttpServer, Request, ResponseBuf, TransportStats};
-use super::metrics::Metrics;
+use super::metrics::{FleetGauges, Metrics};
 use super::store::{AppsCache, KeyRef, PolicyKind, ShardedStore};
 use crate::apps::AppKind;
 use crate::device::PowerMode;
@@ -60,6 +63,19 @@ pub struct ServeConfig {
     pub checkpoint_every: Duration,
     /// Warm-start retention `∈ (0, 1]` applied to restored states.
     pub warm_retain: f64,
+    /// Fleet leader to sync with (`host:port`; None = standalone node).
+    pub leader: Option<String>,
+    /// Stable node identity on the sync wire (None = derived from the
+    /// bound address).
+    pub node_id: Option<String>,
+    /// Period between fleet push/pull cycles.
+    pub sync_every: Duration,
+    /// Retention `∈ (0, 1]` applied when warm-starting a session from a
+    /// fleet prior (fleet knowledge biases, never dominates).
+    pub fleet_retain: f64,
+    /// Half-life for time-decaying fleet evidence (merge-side and on the
+    /// installed prior).
+    pub fleet_half_life: Duration,
 }
 
 impl Default for ServeConfig {
@@ -73,6 +89,11 @@ impl Default for ServeConfig {
             checkpoint_dir: None,
             checkpoint_every: Duration::from_secs(30),
             warm_retain: 0.5,
+            leader: None,
+            node_id: None,
+            sync_every: Duration::from_secs(10),
+            fleet_retain: 0.3,
+            fleet_half_life: Duration::from_secs(600),
         }
     }
 }
@@ -88,6 +109,18 @@ impl ServeConfig {
         }
         if self.checkpoint_every.is_zero() {
             return Err(anyhow!("serve: checkpoint_every must be positive"));
+        }
+        if !(self.fleet_retain > 0.0 && self.fleet_retain <= 1.0) {
+            return Err(anyhow!("serve: fleet_retain must lie in (0, 1]"));
+        }
+        if self.sync_every.is_zero() {
+            return Err(anyhow!("serve: sync_every must be positive"));
+        }
+        if self.fleet_half_life.is_zero() {
+            return Err(anyhow!("serve: fleet_half_life must be positive"));
+        }
+        if matches!(&self.leader, Some(l) if l.is_empty()) {
+            return Err(anyhow!("serve: leader address must not be empty"));
         }
         Ok(())
     }
@@ -184,7 +217,25 @@ pub struct TuningService {
     metrics: Arc<Metrics>,
     transport: Arc<TransportStats>,
     tracker: Mutex<ResourceTracker>,
+    /// Per-node snapshot registry for the sync plane (every node can
+    /// serve as a leader; see [`super::fleet`]).
+    fleet: Arc<FleetStore>,
+    /// This node's identity on the sync wire.
+    node_id: String,
+    /// Last time `/v1/sync/push` refreshed the local warm-start priors —
+    /// the fleet-wide merge is O(nodes × scenarios × arms), so it runs
+    /// at most once per `PRIOR_REFRESH_MIN` rather than per push.
+    prior_refresh: Mutex<Option<Instant>>,
+    /// Cached local aggregate served to `/v1/sync/pull` (same TTL): the
+    /// session-store scan takes every shard's read lock, so a large
+    /// follower fleet pulling must not re-run it per request.
+    local_agg: Mutex<Option<(Instant, Arc<Vec<FleetSnapshot>>)>>,
 }
+
+/// Minimum interval between full prior-refresh merges in the push
+/// handler (a 256-follower leader sees ~50 pushes/s; consecutive merges
+/// are near-identical).
+const PRIOR_REFRESH_MIN: Duration = Duration::from_secs(1);
 
 impl TuningService {
     /// Route one request, serializing into the worker's reusable buffer.
@@ -195,6 +246,8 @@ impl TuningService {
             ("POST", "/v1/report") => self.report(req, out),
             ("GET", "/v1/best") => self.best(req, out),
             ("POST", "/v1/checkpoint") => self.checkpoint_now(out),
+            ("POST", "/v1/sync/push") => self.sync_push(req, out),
+            ("POST", "/v1/sync/pull") => self.sync_pull(req, out),
             ("GET", "/healthz") => self.healthz(out),
             ("GET", "/metrics") => self.metrics_page(out),
             ("POST" | "GET", _) => out.error(404, "no such endpoint"),
@@ -382,6 +435,121 @@ impl TuningService {
         }
     }
 
+    /// Read the mandatory `node_id` off a sync request body.
+    fn sync_node_id<'a>(body: &JsonSlice<'a>) -> std::result::Result<Cow<'a, str>, String> {
+        match body.get("node_id").and_then(|v| v.as_str()) {
+            Some(id) if !id.is_empty() => Ok(id),
+            _ => Err("missing node_id".to_string()),
+        }
+    }
+
+    /// `POST /v1/sync/push`: store a peer's snapshots under its node id
+    /// (replace semantics — repeated pushes are idempotent), then refresh
+    /// this node's own warm-start priors from everything remote.
+    fn sync_push(&self, req: &Request<'_>, out: &mut ResponseBuf) {
+        let body = match JsonSlice::parse(req.body) {
+            Ok(b) => b,
+            Err(e) => return out.error(400, &format!("bad JSON: {e}")),
+        };
+        let node_id = match Self::sync_node_id(&body) {
+            Ok(id) => id,
+            Err(e) => return out.error(400, &e),
+        };
+        if node_id.as_ref() == self.node_id.as_str() {
+            // A leader flag pointing a node at itself would echo its own
+            // statistics back as "remote" evidence; refuse loudly.
+            return out.error(400, "node cannot sync with itself (check --leader)");
+        }
+        let snaps_v = match body.get("snapshots") {
+            Some(v) if v.is_arr() => v,
+            _ => return out.error(400, "missing snapshots array"),
+        };
+        let mut snapshots = Vec::new();
+        for item in snaps_v.items() {
+            match FleetSnapshot::from_slice(&item) {
+                Ok(s) => snapshots.push(s),
+                Err(e) => return out.error(400, &format!("bad snapshot: {e}")),
+            }
+        }
+        let accepted = self.fleet.absorb(node_id.as_ref(), snapshots);
+        self.metrics
+            .fleet_push_snapshots
+            .fetch_add(accepted as u64, Ordering::Relaxed);
+        // Pushes teach this node something: refresh the local warm-start
+        // priors from the full remote merge — throttled, since the merge
+        // scans every node slot and back-to-back pushes barely change
+        // it. (Local sessions are not folded in — they already hold
+        // their own evidence.)
+        let refresh_due = {
+            let mut last = match self.prior_refresh.lock() {
+                Ok(g) => g,
+                Err(p) => p.into_inner(),
+            };
+            match *last {
+                Some(t) if t.elapsed() < PRIOR_REFRESH_MIN => false,
+                _ => {
+                    *last = Some(Instant::now());
+                    true
+                }
+            }
+        };
+        if refresh_due {
+            let merged = self.fleet.merged(None, None);
+            fleet::install_priors(&merged, &self.store, &self.apps);
+        }
+        let mut w = JsonWriter::new(&mut out.body);
+        w.begin_obj();
+        w.field_num("accepted", accepted as f64);
+        w.field_num("nodes", self.fleet.node_count() as f64);
+        w.end_obj();
+    }
+
+    /// The node's local aggregate, recomputed at most once per
+    /// `PRIOR_REFRESH_MIN` (concurrent pulls share one scan; holding the
+    /// cache lock across the scan prevents a stampede).
+    fn cached_local_aggregate(&self) -> Arc<Vec<FleetSnapshot>> {
+        let mut guard = match self.local_agg.lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        };
+        if let Some((at, snaps)) = guard.as_ref() {
+            if at.elapsed() < PRIOR_REFRESH_MIN {
+                return snaps.clone();
+            }
+        }
+        let fresh = Arc::new(fleet::aggregate_local(&self.store));
+        *guard = Some((Instant::now(), fresh.clone()));
+        fresh
+    }
+
+    /// `POST /v1/sync/pull`: serve the discount-merged knowledge of every
+    /// other node plus this node's (lightly cached) local aggregate.
+    fn sync_pull(&self, req: &Request<'_>, out: &mut ResponseBuf) {
+        let body = match JsonSlice::parse(req.body) {
+            Ok(b) => b,
+            Err(e) => return out.error(400, &format!("bad JSON: {e}")),
+        };
+        let node_id = match Self::sync_node_id(&body) {
+            Ok(id) => id,
+            Err(e) => return out.error(400, &e),
+        };
+        let local = self.cached_local_aggregate();
+        let merged = self
+            .fleet
+            .merged(Some(node_id.as_ref()), Some((self.node_id.as_str(), local.as_slice())));
+        self.metrics.fleet_pulls_served.fetch_add(1, Ordering::Relaxed);
+        let mut w = JsonWriter::new(&mut out.body);
+        w.begin_obj();
+        w.field_str("node_id", &self.node_id);
+        w.key("snapshots");
+        w.begin_arr();
+        for s in &merged {
+            s.write_json(&mut w);
+        }
+        w.end_arr();
+        w.end_obj();
+    }
+
     fn healthz(&self, out: &mut ResponseBuf) {
         let mut w = JsonWriter::new(&mut out.body);
         w.begin_obj();
@@ -401,11 +569,17 @@ impl TuningService {
             tracker.sample();
             tracker.report()
         };
+        let fleet = FleetGauges {
+            nodes: self.fleet.node_count(),
+            prior_keys: self.store.fleet_prior_keys(),
+            warm_starts: self.store.fleet_warm_starts(),
+        };
         let body = self.metrics.render(
             self.store.session_count(),
             self.store.num_shards(),
             &self.transport,
             &resources,
+            fleet,
         );
         out.text(200, &body);
     }
@@ -420,6 +594,7 @@ pub struct ServerHandle {
     service: Arc<TuningService>,
     stop_checkpointer: Arc<AtomicBool>,
     checkpointer: Option<JoinHandle<()>>,
+    fleet_sync: Option<FleetSync>,
     restored: usize,
 }
 
@@ -427,6 +602,11 @@ impl ServerHandle {
     /// The bound address (ephemeral ports resolved).
     pub fn addr(&self) -> SocketAddr {
         self.addr
+    }
+
+    /// This node's identity on the fleet-sync wire.
+    pub fn node_id(&self) -> &str {
+        &self.service.node_id
     }
 
     /// Sessions warm-started from the checkpoint directory at boot.
@@ -440,8 +620,12 @@ impl ServerHandle {
         self.service.transport.clone()
     }
 
-    /// Orderly shutdown: stop HTTP, drain report queues, final snapshot.
-    pub fn shutdown(self) -> Result<()> {
+    /// Orderly shutdown: stop fleet sync and HTTP, drain report queues,
+    /// final snapshot.
+    pub fn shutdown(mut self) -> Result<()> {
+        if let Some(mut sync) = self.fleet_sync.take() {
+            sync.stop();
+        }
         self.http.stop();
         self.service.ingest.stop();
         self.stop_checkpointer.store(true, Ordering::SeqCst);
@@ -461,19 +645,34 @@ impl ServerHandle {
     }
 }
 
-/// Boot the service: restore checkpoints, start ingest, bind, serve.
+/// Boot the service: restore checkpoints, start ingest, bind, serve,
+/// and (when a leader is configured) start the fleet-sync thread.
 pub fn start(cfg: ServeConfig) -> Result<ServerHandle> {
     cfg.validate()?;
-    let store = Arc::new(ShardedStore::new(cfg.shards));
+    let store = Arc::new(
+        ShardedStore::new(cfg.shards).with_fleet_tuning(cfg.fleet_retain, cfg.fleet_half_life),
+    );
     let apps = Arc::new(AppsCache::new());
     let metrics = Arc::new(Metrics::new());
     let transport = Arc::new(TransportStats::default());
+    let fleet = Arc::new(FleetStore::new(cfg.fleet_half_life));
 
     let mut restored = 0;
     if let Some(dir) = &cfg.checkpoint_dir {
         restored = checkpoint::restore(&store, &apps, dir, cfg.warm_retain)?;
         metrics.sessions_restored.fetch_add(restored as u64, Ordering::Relaxed);
     }
+
+    // Bind before constructing the service: the node's default sync
+    // identity is derived from the resolved (ephemeral ports included)
+    // bound address.
+    let listener =
+        TcpListener::bind(&cfg.addr).with_context(|| format!("binding {}", cfg.addr))?;
+    let bound = listener.local_addr().context("resolving bound address")?;
+    let node_id = cfg
+        .node_id
+        .clone()
+        .unwrap_or_else(|| format!("node-{bound}"));
 
     let ingest = BatchIngest::start(
         store.clone(),
@@ -485,21 +684,39 @@ pub fn start(cfg: ServeConfig) -> Result<ServerHandle> {
     let service = Arc::new(TuningService {
         cfg: cfg.clone(),
         store: store.clone(),
-        apps,
+        apps: apps.clone(),
         ingest,
         metrics: metrics.clone(),
         transport: transport.clone(),
         tracker: Mutex::new(ResourceTracker::start()),
+        fleet,
+        node_id: node_id.clone(),
+        prior_refresh: Mutex::new(None),
+        local_agg: Mutex::new(None),
     });
 
-    let listener =
-        TcpListener::bind(&cfg.addr).with_context(|| format!("binding {}", cfg.addr))?;
     let handler: HttpHandler = {
         let service = service.clone();
         Arc::new(move |req: &Request<'_>, out: &mut ResponseBuf| service.handle(req, out))
     };
     let http = HttpServer::start_with_stats(listener, cfg.workers, handler, transport)?;
     let addr = http.addr();
+
+    // Follower plane: periodic push/pull against the configured leader.
+    // Best-effort by design — an unreachable leader leaves the node
+    // serving standalone and only bumps `fleet_sync_errors_total`.
+    let fleet_sync = cfg.leader.clone().map(|leader| {
+        FleetSync::start(
+            FleetSyncConfig {
+                leader,
+                node_id,
+                every: cfg.sync_every,
+            },
+            store.clone(),
+            apps.clone(),
+            metrics.clone(),
+        )
+    });
 
     // Periodic checkpointer (only when a directory is configured).
     let stop_checkpointer = Arc::new(AtomicBool::new(false));
@@ -532,6 +749,7 @@ pub fn start(cfg: ServeConfig) -> Result<ServerHandle> {
         service,
         stop_checkpointer,
         checkpointer,
+        fleet_sync,
         restored,
     })
 }

@@ -26,7 +26,9 @@ use crate::bandit::reward::RewardState;
 use crate::bandit::{Policy, SlidingWindowUcb, SubsetTuner, ThompsonSampler, UcbTuner};
 use crate::device::PowerMode;
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{RwLock, RwLockReadGuard, RwLockWriteGuard};
+use std::time::{Duration, Instant};
 
 /// Spaces larger than this default to [`SubsetTuner`] (a full UCB init
 /// sweep over Hypre's 92,160 arms would dwarf any realistic session).
@@ -37,6 +39,11 @@ pub const SUBSET_ARMS: usize = 1024;
 
 /// Sliding-window length floor for `swucb` sessions.
 const SWUCB_MIN_WINDOW: usize = 512;
+
+/// Minimum decayed effective count for a fleet-prior arm to survive (see
+/// [`ShardedStore::fleet_prior_for`]): below a quarter-pull of evidence
+/// the warm-start floor would dominate what the decay left.
+pub const FLEET_PRIOR_MIN_COUNT: f64 = 0.25;
 
 /// The bandit policy driving a session.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -85,6 +92,25 @@ impl std::str::FromStr for PolicyKind {
             )),
         }
     }
+}
+
+/// Identity of one *fleet scenario*: the session key minus the client.
+/// All sessions tuning the same app on the same device class with the
+/// same policy share one reward landscape, so cross-node knowledge (see
+/// [`super::fleet`]) is aggregated and transferred at this granularity.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct FleetKey {
+    pub app: AppKind,
+    pub device: PowerMode,
+    pub policy: PolicyKind,
+}
+
+/// One installed fleet prior: full-space arm statistics merged from the
+/// rest of the fleet, stamped with its installation instant so staleness
+/// keeps decaying between syncs.
+struct FleetPrior {
+    state: RewardState,
+    installed: Instant,
 }
 
 /// Identity of one tuning session (owned form — held by the interner and
@@ -244,13 +270,29 @@ impl Tuner {
                 // a checkpointed subset-space state lines up position-wise.
                 let mut t = SubsetTuner::new(k, m, alpha, beta, seed);
                 if let Some(p) = prior {
-                    if p.k() != m {
+                    if p.k() == m {
+                        // Subset-space prior (a checkpoint of this tuner).
+                        t = t.with_prior_state(persist::discounted(p, retain));
+                    } else if p.k() == k {
+                        // Full-space prior (a fleet prior aggregated across
+                        // nodes whose sessions drew *different* candidate
+                        // subsets): project onto this session's candidates.
+                        let candidates: Vec<usize> = t.candidates().to_vec();
+                        let mut sub = RewardState::new(candidates.len());
+                        for (pos, &full) in candidates.iter().enumerate() {
+                            sub.counts[pos] = p.counts[full];
+                            sub.tau_sum[pos] = p.tau_sum[full];
+                            sub.rho_sum[pos] = p.rho_sum[full];
+                        }
+                        if sub.counts.iter().any(|&c| c > 0.0) {
+                            t = t.with_prior_state(persist::discounted(&sub, retain));
+                        }
+                    } else {
                         return Err(format!(
-                            "checkpoint subset has {} arms, expected {m}",
+                            "checkpoint subset has {} arms, expected {m} (or full {k})",
                             p.k()
                         ));
                     }
-                    t = t.with_prior_state(persist::discounted(p, retain));
                 }
                 Ok(Tuner::Subset(t))
             }
@@ -375,6 +417,14 @@ pub struct Session {
     pub alpha: f64,
     pub beta: f64,
     pub tuner: Tuner,
+    /// The reward state the tuner started from when it was warm-started
+    /// from a fleet prior (tuner-space: subset positions for subset
+    /// policies; `None` for cold starts and checkpoint restores).
+    /// [`super::fleet::aggregate_local`] subtracts this baseline so
+    /// borrowed fleet evidence is never re-exported as this node's own
+    /// measurements — without it, every warm-started session would echo
+    /// the prior back into the fleet, amplifying it by the session count.
+    pub fleet_baseline: Option<RewardState>,
     /// Suggest requests served.
     pub suggests: u64,
     /// Reports applied.
@@ -404,9 +454,25 @@ struct Interner {
 /// [`SessionId`] packs `(local_index, shard)` as
 /// `local * num_shards + shard`, so id→shard resolution is arithmetic,
 /// not a lock.
+///
+/// The store also holds the node's **fleet priors**: merged cross-node
+/// arm statistics per [`FleetKey`], installed by the sync plane
+/// ([`super::fleet`]) and consulted exactly once per session lifetime —
+/// at cold creation — to warm-start new sessions from fleet knowledge.
+/// Lock order is strictly `shard → fleet_priors` (creation reads the
+/// prior map under a shard write lock; installers never hold a shard
+/// lock), so the two planes cannot deadlock.
 pub struct ShardedStore {
     shards: Vec<RwLock<Shard>>,
     interners: Vec<RwLock<Interner>>,
+    fleet_priors: RwLock<HashMap<FleetKey, FleetPrior>>,
+    /// Retention applied to a fleet prior at session creation ((0, 1]).
+    fleet_retain: f64,
+    /// Half-life of fleet-prior counts between syncs; stale remote
+    /// evidence decays instead of swamping fresh local observations.
+    fleet_half_life: Duration,
+    /// Sessions that were warm-started from a fleet prior.
+    fleet_warm_starts: AtomicU64,
 }
 
 impl ShardedStore {
@@ -415,7 +481,88 @@ impl ShardedStore {
         ShardedStore {
             shards: (0..shards).map(|_| RwLock::new(Shard::default())).collect(),
             interners: (0..shards).map(|_| RwLock::new(Interner::default())).collect(),
+            fleet_priors: RwLock::new(HashMap::new()),
+            fleet_retain: 0.3,
+            fleet_half_life: Duration::from_secs(600),
+            fleet_warm_starts: AtomicU64::new(0),
         }
+    }
+
+    /// Builder: how strongly fleet priors bias new sessions (`retain`)
+    /// and how quickly an installed prior ages out (`half_life`).
+    pub fn with_fleet_tuning(mut self, retain: f64, half_life: Duration) -> ShardedStore {
+        assert!(retain > 0.0 && retain <= 1.0, "fleet retain out of (0,1]");
+        assert!(!half_life.is_zero(), "fleet half-life must be positive");
+        self.fleet_retain = retain;
+        self.fleet_half_life = half_life;
+        self
+    }
+
+    /// Install (replace) the merged fleet prior for one scenario. Called
+    /// by the sync plane after every successful pull/push merge; never
+    /// called under a shard lock (see the struct-level lock order).
+    pub fn install_fleet_prior(&self, key: FleetKey, state: RewardState) {
+        let mut priors = match self.fleet_priors.write() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        };
+        priors.insert(key, FleetPrior { state, installed: Instant::now() });
+    }
+
+    /// Scenarios with an installed fleet prior.
+    pub fn fleet_prior_keys(&self) -> usize {
+        match self.fleet_priors.read() {
+            Ok(g) => g.len(),
+            Err(p) => p.into_inner().len(),
+        }
+    }
+
+    /// Sessions warm-started from a fleet prior since boot.
+    pub fn fleet_warm_starts(&self) -> u64 {
+        self.fleet_warm_starts.load(Ordering::Relaxed)
+    }
+
+    /// The decayed fleet prior for a scenario, if one is installed and
+    /// still carries weight. Counts (and sums, preserving means) are
+    /// scaled by `0.5^(age / half_life)`, so a prior that stopped being
+    /// refreshed — leader gone, network partitioned — fades away instead
+    /// of anchoring new sessions to stale evidence forever.
+    ///
+    /// Arms whose decayed count falls below [`FLEET_PRIOR_MIN_COUNT`]
+    /// are dropped entirely: the downstream `persist::discounted` floors
+    /// any positive count back to one whole pull, which would otherwise
+    /// resurrect long-dead evidence at full strength and defeat the
+    /// decay.
+    pub fn fleet_prior_for(&self, key: &FleetKey, k: usize) -> Option<RewardState> {
+        let priors = match self.fleet_priors.read() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        };
+        let prior = priors.get(key)?;
+        if prior.state.k() != k {
+            return None;
+        }
+        let age_s = prior.installed.elapsed().as_secs_f64();
+        let w = 0.5_f64.powf(age_s / self.fleet_half_life.as_secs_f64().max(1e-9));
+        if w < 1e-3 {
+            return None;
+        }
+        let mut state = RewardState::new(k);
+        let mut live = false;
+        for i in 0..k {
+            let c = prior.state.counts[i] * w;
+            if c >= FLEET_PRIOR_MIN_COUNT {
+                state.counts[i] = c;
+                state.tau_sum[i] = prior.state.tau_sum[i] * w;
+                state.rho_sum[i] = prior.state.rho_sum[i] * w;
+                live = true;
+            }
+        }
+        if !live {
+            return None;
+        }
+        state.t = state.counts.iter().sum::<f64>() + 1.0;
+        Some(state)
     }
 
     pub fn num_shards(&self) -> usize {
@@ -514,11 +661,17 @@ impl ShardedStore {
         }
     }
 
-    /// Fetch a session in a locked shard, creating a cold one on first
-    /// contact. Returns the session and whether it was created. A
-    /// session's `alpha`/`beta` are fixed at creation; later requests
-    /// with different weights reuse the existing tuner (re-keying by
-    /// weights would fragment state).
+    /// Fetch a session in a locked shard, creating one on first contact.
+    /// Returns the session and whether it was created. A session's
+    /// `alpha`/`beta` are fixed at creation; later requests with
+    /// different weights reuse the existing tuner (re-keying by weights
+    /// would fragment state).
+    ///
+    /// Creation is not always cold: when the sync plane has installed a
+    /// fleet prior for the session's `(app, device, policy)` scenario,
+    /// the new tuner warm-starts from it (decayed by prior age, then
+    /// discounted by `fleet_retain`) instead of exploring from scratch —
+    /// the cross-node transfer payoff.
     pub fn get_or_create<'s>(
         &self,
         shard: &'s mut Shard,
@@ -534,12 +687,36 @@ impl ShardedStore {
                 let key = self
                     .key_of(id)
                     .ok_or_else(|| format!("unknown session id {}", id.0))?;
-                let tuner = Tuner::build(key.policy, k, alpha, beta, key.hash64(), None, 1.0)?;
+                let fleet_key = FleetKey {
+                    app: key.app,
+                    device: key.device,
+                    policy: key.policy,
+                };
+                let prior = self.fleet_prior_for(&fleet_key, k);
+                let (prior_ref, retain) = match &prior {
+                    Some(state) => (Some(state), self.fleet_retain),
+                    None => (None, 1.0),
+                };
+                let tuner =
+                    Tuner::build(key.policy, k, alpha, beta, key.hash64(), prior_ref, retain)?;
+                // Record what the tuner starts from (post-discount,
+                // tuner-space) so the sync plane can export deltas only.
+                // A prior can fail to apply — e.g. a sparse fleet prior
+                // with zero overlap with a subset session's candidates —
+                // in which case this is a cold start, not a warm one.
+                let applied = prior.is_some() && tuner.total_pulls() > 0.0;
+                let fleet_baseline = if applied {
+                    self.fleet_warm_starts.fetch_add(1, Ordering::Relaxed);
+                    tuner.reward_state().cloned()
+                } else {
+                    None
+                };
                 let session = Session {
                     key,
                     alpha,
                     beta,
                     tuner,
+                    fleet_baseline,
                     suggests: 0,
                     reports: 0,
                 };
@@ -773,6 +950,121 @@ mod tests {
     fn warm_start_arm_mismatch_is_error() {
         let state = RewardState::new(8);
         assert!(Tuner::build(PolicyKind::Ucb, 16, 1.0, 0.0, 7, Some(&state), 0.5).is_err());
+    }
+
+    fn fleet_key(app: AppKind, policy: PolicyKind) -> FleetKey {
+        FleetKey { app, device: PowerMode::Maxn, policy }
+    }
+
+    /// A full-space prior shaped like a converged campaign: every arm
+    /// pulled (so a warm start skips the init sweep), the `best` arm both
+    /// fastest and by far the most pulled (so Eq. 4 transfers too).
+    fn full_prior(k: usize, best: usize) -> RewardState {
+        let mut s = RewardState::new(k);
+        for arm in 0..k {
+            let (t, pulls) = if arm == best { (0.3, 40) } else { (2.0, 4) };
+            for _ in 0..pulls {
+                s.observe(arm, t, 5.0);
+            }
+        }
+        s
+    }
+
+    #[test]
+    fn fleet_prior_warm_starts_new_sessions() {
+        let store = ShardedStore::new(2).with_fleet_tuning(0.5, Duration::from_secs(600));
+        store.install_fleet_prior(
+            fleet_key(AppKind::Clomp, PolicyKind::Ucb),
+            full_prior(125, 77),
+        );
+        assert_eq!(store.fleet_prior_keys(), 1);
+
+        let k = key("fresh", AppKind::Clomp, PolicyKind::Ucb);
+        let id = store.intern(&k.as_ref(), k.hash64());
+        let i = store.shard_of_hash(k.hash64());
+        let mut shard = store.write_shard(i);
+        let (s, created) = store.get_or_create(&mut shard, id, 1.0, 0.0, 125).unwrap();
+        assert!(created);
+        // Every arm carries prior counts: no init sweep, Eq. 4 answers
+        // the fleet's best arm before a single local pull.
+        assert!(s.tuner.total_pulls() > 0.0);
+        assert_eq!(s.tuner.most_selected(), 77);
+        let (mean_t, _) = s.tuner.mean_of(77).unwrap();
+        assert!((mean_t - 0.3).abs() < 1e-9, "prior mean drifted: {mean_t}");
+        drop(shard);
+        assert_eq!(store.fleet_warm_starts(), 1);
+
+        // A scenario without a prior still cold-starts.
+        let k2 = key("fresh", AppKind::Kripke, PolicyKind::Ucb);
+        let id2 = store.intern(&k2.as_ref(), k2.hash64());
+        let i2 = store.shard_of_hash(k2.hash64());
+        let mut shard2 = store.write_shard(i2);
+        let (s2, _) = store.get_or_create(&mut shard2, id2, 1.0, 0.0, 216).unwrap();
+        assert_eq!(s2.tuner.total_pulls(), 0.0);
+        drop(shard2);
+        assert_eq!(store.fleet_warm_starts(), 1);
+    }
+
+    #[test]
+    fn fleet_prior_decays_with_age() {
+        // A ~zero half-life makes any installed prior immediately stale:
+        // it must be ignored, not applied at full weight.
+        let store = ShardedStore::new(1).with_fleet_tuning(0.5, Duration::from_millis(1));
+        let fk = fleet_key(AppKind::Clomp, PolicyKind::Ucb);
+        store.install_fleet_prior(fk, full_prior(125, 7));
+        std::thread::sleep(Duration::from_millis(30));
+        assert!(store.fleet_prior_for(&fk, 125).is_none(), "stale prior survived");
+
+        // A long half-life keeps it essentially intact, means preserved.
+        let store = ShardedStore::new(1).with_fleet_tuning(0.5, Duration::from_secs(3600));
+        store.install_fleet_prior(fk, full_prior(125, 7));
+        let got = store.fleet_prior_for(&fk, 125).unwrap();
+        assert!((got.tau_sum[7] / got.counts[7] - 0.3).abs() < 1e-9);
+        assert!(got.counts[7] <= 40.0 + 1e-9, "decay must never grow counts");
+        // Arm-count mismatch (wrong app space) is refused.
+        assert!(store.fleet_prior_for(&fk, 216).is_none());
+    }
+
+    #[test]
+    fn fleet_prior_projects_onto_subset_sessions() {
+        let store = ShardedStore::new(1).with_fleet_tuning(0.5, Duration::from_secs(3600));
+        // Full-space Hypre prior: every arm pulled once, arm `fast` much
+        // faster. The subset session sees it through its own candidates.
+        let mut prior = RewardState::new(92_160);
+        for arm in 0..92_160 {
+            prior.observe(arm, 2.0, 5.0);
+        }
+        store.install_fleet_prior(fleet_key(AppKind::Hypre, PolicyKind::Subset), prior);
+
+        let k = key("hy", AppKind::Hypre, PolicyKind::Subset);
+        let id = store.intern(&k.as_ref(), k.hash64());
+        let mut shard = store.write_shard(0);
+        let (s, created) = store.get_or_create(&mut shard, id, 1.0, 0.0, 92_160).unwrap();
+        assert!(created);
+        // All candidates carry projected prior pulls.
+        assert!(s.tuner.total_pulls() > 0.0, "subset projection lost the prior");
+        let arm = s.tuner.select();
+        assert!(arm < 92_160);
+        drop(shard);
+        assert_eq!(store.fleet_warm_starts(), 1);
+    }
+
+    #[test]
+    fn subset_build_accepts_full_space_prior() {
+        // Direct Tuner::build coverage for the projection path: a prior
+        // sized to the full space (fleet) and one sized to the subset
+        // (checkpoint) both build; other sizes are errors.
+        let k = 92_160;
+        let mut full = RewardState::new(k);
+        for arm in 0..k {
+            full.observe(arm, 1.0, 5.0);
+        }
+        let t = Tuner::build(PolicyKind::Subset, k, 1.0, 0.0, 9, Some(&full), 0.5).unwrap();
+        assert!(t.total_pulls() > 0.0);
+        let sub = RewardState::new(SUBSET_ARMS);
+        assert!(Tuner::build(PolicyKind::Subset, k, 1.0, 0.0, 9, Some(&sub), 0.5).is_ok());
+        let bad = RewardState::new(17);
+        assert!(Tuner::build(PolicyKind::Subset, k, 1.0, 0.0, 9, Some(&bad), 0.5).is_err());
     }
 
     #[test]

@@ -249,6 +249,69 @@ impl<'a> JsonSlice<'a> {
         }
         unescape(&self.bytes[1..self.bytes.len() - 1])
     }
+
+    pub fn is_arr(&self) -> bool {
+        self.bytes.first() == Some(&b'[')
+    }
+
+    /// Iterate the elements of a JSON array as borrowed sub-slices. A
+    /// non-array value yields an empty iterator (pair with [`Self::is_arr`]
+    /// when absence and emptiness must be distinguished). Like
+    /// [`Self::get`], this re-scans the already-validated span, so
+    /// iteration allocates nothing.
+    pub fn items(&self) -> JsonItems<'a> {
+        let inside = self.bytes.first() == Some(&b'[');
+        JsonItems {
+            bytes: self.bytes,
+            pos: if inside { 1 } else { 0 },
+            inside,
+        }
+    }
+}
+
+/// Iterator over the elements of a [`JsonSlice`] array (see
+/// [`JsonSlice::items`]).
+pub struct JsonItems<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+    inside: bool,
+}
+
+impl<'a> Iterator for JsonItems<'a> {
+    type Item = JsonSlice<'a>;
+
+    fn next(&mut self) -> Option<JsonSlice<'a>> {
+        if !self.inside {
+            return None;
+        }
+        let mut s = Scan { bytes: self.bytes, pos: self.pos };
+        s.skip_ws();
+        match s.peek() {
+            None | Some(b']') => {
+                self.inside = false;
+                return None;
+            }
+            _ => {}
+        }
+        let start = s.pos;
+        // The enclosing document was validated by `JsonSlice::parse`, so
+        // a scan failure here is unreachable; treat it as end-of-array.
+        if s.skip_value(0).is_err() {
+            self.inside = false;
+            return None;
+        }
+        let end = s.pos;
+        s.skip_ws();
+        match s.peek() {
+            Some(b',') => self.pos = s.pos + 1,
+            _ => {
+                // ']' (or exhausted input): this element is the last.
+                self.pos = s.pos;
+                self.inside = false;
+            }
+        }
+        Some(JsonSlice { bytes: &self.bytes[start..end] })
+    }
 }
 
 /// Decode the inner bytes of a JSON string literal. Borrowed when no
@@ -902,6 +965,29 @@ mod tests {
         assert!(matches!(s, Cow::Owned(_)), "escaped strings must decode");
         let inner = v.get("o").unwrap().get("inner").unwrap();
         assert_eq!(inner.raw()[0], b'[');
+    }
+
+    #[test]
+    fn slice_iterates_arrays() {
+        let body = br#"{"arms":[3, 7, 12],"counts":[4.5,9,1],"empty":[],"nested":[[1],{"a":2}]}"#;
+        let v = JsonSlice::parse(body).unwrap();
+        let arms: Vec<usize> =
+            v.get("arms").unwrap().items().filter_map(|e| e.as_usize()).collect();
+        assert_eq!(arms, vec![3, 7, 12]);
+        let counts: Vec<f64> =
+            v.get("counts").unwrap().items().filter_map(|e| e.as_f64()).collect();
+        assert_eq!(counts, vec![4.5, 9.0, 1.0]);
+        let empty = v.get("empty").unwrap();
+        assert!(empty.is_arr());
+        assert_eq!(empty.items().count(), 0);
+        let nested: Vec<JsonSlice<'_>> = v.get("nested").unwrap().items().collect();
+        assert_eq!(nested.len(), 2);
+        assert!(nested[0].is_arr());
+        assert_eq!(nested[1].get("a").unwrap().as_f64(), Some(2.0));
+        // Non-arrays neither claim to be arrays nor yield elements.
+        let scalar = v.get("arms").unwrap().items().next().unwrap();
+        assert!(!scalar.is_arr());
+        assert_eq!(scalar.items().count(), 0);
     }
 
     #[test]

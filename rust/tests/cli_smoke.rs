@@ -20,6 +20,40 @@ fn help_lists_commands() {
 }
 
 #[test]
+fn usage_covers_every_flag() {
+    // Anti-drift: every `--flag` the dispatcher actually reads
+    // (`flags.get("…")` / `flags.has("…")` in main.rs) must appear in the
+    // help output, so the usage text cannot rot away from the flag set.
+    let src = include_str!("../src/main.rs");
+    let out = lasp_bin().arg("help").output().unwrap();
+    assert!(out.status.success());
+    let usage = String::from_utf8_lossy(&out.stdout);
+    let mut flags = std::collections::BTreeSet::new();
+    for pat in [".get(\"", ".has(\""] {
+        let mut pos = 0;
+        while let Some(i) = src[pos..].find(pat) {
+            let start = pos + i + pat.len();
+            let Some(end) = src[start..].find('"') else { break };
+            let name = &src[start..start + end];
+            pos = start + end;
+            if !name.is_empty()
+                && name.chars().all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '-')
+            {
+                flags.insert(name.to_string());
+            }
+        }
+    }
+    assert!(flags.len() >= 25, "flag extraction broke: found only {flags:?}");
+    for f in &flags {
+        assert!(usage.contains(&format!("--{f}")), "usage text missing --{f}");
+    }
+    // And the serve fleet-sync flags exist at all (tentpole surface).
+    for f in ["leader", "node-id", "sync-secs", "fleet-retain", "half-life-secs"] {
+        assert!(flags.contains(f), "main.rs no longer reads --{f}");
+    }
+}
+
+#[test]
 fn no_args_prints_usage() {
     let out = lasp_bin().output().unwrap();
     assert!(out.status.success());

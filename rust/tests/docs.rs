@@ -1,0 +1,129 @@
+//! Documentation anti-drift tests: every route string registered in the
+//! serve router must be documented in `docs/API.md`, the documented
+//! status codes must cover the transport's error set, and every relative
+//! markdown link in README/DESIGN/docs must resolve to a real file.
+
+use std::collections::BTreeSet;
+
+const SERVICE_SRC: &str = include_str!("../src/serve/service.rs");
+const API_MD: &str = include_str!("../../docs/API.md");
+const README_MD: &str = include_str!("../../README.md");
+const DESIGN_MD: &str = include_str!("../../DESIGN.md");
+
+/// Extract route string literals (`"/v1/..."`, `"/healthz"`,
+/// `"/metrics"`) from the router source.
+fn route_literals(src: &str) -> BTreeSet<String> {
+    let mut out = BTreeSet::new();
+    let bytes = src.as_bytes();
+    let mut i = 0;
+    while i + 1 < bytes.len() {
+        if bytes[i] == b'"' && bytes[i + 1] == b'/' {
+            if let Some(end) = src[i + 1..].find('"') {
+                let lit = &src[i + 1..i + 1 + end];
+                if lit.starts_with("/v1/") || lit == "/healthz" || lit == "/metrics" {
+                    out.insert(lit.to_string());
+                }
+                i += end + 2;
+                continue;
+            }
+        }
+        i += 1;
+    }
+    out
+}
+
+#[test]
+fn api_doc_covers_every_registered_route() {
+    let routes = route_literals(SERVICE_SRC);
+    // The router registers (at least) the eight known endpoints; if this
+    // shrinks, the extraction logic broke, not the API.
+    for expected in [
+        "/v1/suggest",
+        "/v1/report",
+        "/v1/best",
+        "/v1/checkpoint",
+        "/v1/sync/push",
+        "/v1/sync/pull",
+        "/healthz",
+        "/metrics",
+    ] {
+        assert!(
+            routes.contains(expected),
+            "route extraction lost {expected}: {routes:?}"
+        );
+    }
+    for route in &routes {
+        assert!(
+            API_MD.contains(&format!("`{route}`")),
+            "docs/API.md does not document route {route}"
+        );
+    }
+}
+
+#[test]
+fn api_doc_covers_transport_status_codes() {
+    // Every status the zero-alloc parser and handlers can emit.
+    for code in ["200", "202", "400", "404", "405", "408", "413", "431", "500", "501", "503"] {
+        assert!(
+            API_MD.contains(code),
+            "docs/API.md does not mention status code {code}"
+        );
+    }
+    assert!(
+        API_MD.to_lowercase().contains("keep-alive"),
+        "docs/API.md must describe keep-alive semantics"
+    );
+}
+
+/// Walk `](target)` markdown links and assert relative targets exist
+/// (relative to the repo root, which is where `cargo test` runs).
+fn assert_links_resolve(md: &str, label: &str) {
+    let mut pos = 0;
+    let mut checked = 0;
+    while let Some(idx) = md[pos..].find("](") {
+        let start = pos + idx + 2;
+        let Some(close) = md[start..].find(')') else { break };
+        let target = &md[start..start + close];
+        pos = start + close;
+        if target.is_empty()
+            || target.starts_with("http://")
+            || target.starts_with("https://")
+            || target.starts_with('#')
+            || target.starts_with("mailto:")
+        {
+            continue;
+        }
+        let path = target.split('#').next().unwrap_or(target);
+        assert!(
+            std::path::Path::new(path).exists(),
+            "{label}: broken relative link '{target}'"
+        );
+        checked += 1;
+    }
+    let _ = checked;
+}
+
+#[test]
+fn markdown_links_resolve() {
+    assert_links_resolve(README_MD, "README.md");
+    assert_links_resolve(DESIGN_MD, "DESIGN.md");
+    assert_links_resolve(API_MD, "docs/API.md");
+}
+
+#[test]
+fn design_documents_fleet_protocol_and_checkpoint_format() {
+    for needle in [
+        "Networked fleet sync",
+        "/v1/sync/push",
+        "/v1/sync/pull",
+        "idempoten",
+        "half_life",
+        "Checkpoint file format",
+        "sess-",
+    ] {
+        assert!(
+            DESIGN_MD.contains(needle),
+            "DESIGN.md missing '{needle}' (fleet protocol / checkpoint format section)"
+        );
+    }
+}

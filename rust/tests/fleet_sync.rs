@@ -1,0 +1,311 @@
+//! Two-node fleet-sync integration: a veteran node learns a scenario, a
+//! follower pulls the fleet prior over real HTTP and warm-starts a fresh
+//! session that reaches best-config parity in measurably fewer
+//! suggest/report rounds than a cold-started node; killing the leader
+//! mid-run leaves every node serving suggestions without errors.
+
+use lasp::serve::{start, HttpClient, ServeConfig};
+use lasp::util::json::Json;
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+/// The uniquely fastest clomp arm in this synthetic landscape.
+const BEST_ARM: usize = 77;
+
+/// Arm-determined measurement: stationary, unique minimum at [`BEST_ARM`].
+fn fake_time(arm: usize) -> f64 {
+    if arm == BEST_ARM {
+        0.3
+    } else {
+        2.0 + (arm % 13) as f64 * 0.05
+    }
+}
+
+fn cfg(leader: Option<String>, sync_ms: u64, node_id: &str) -> ServeConfig {
+    ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        workers: 4,
+        shards: 2,
+        queue_cap: 1024,
+        max_batch: 64,
+        checkpoint_dir: None,
+        leader,
+        node_id: Some(node_id.to_string()),
+        sync_every: Duration::from_millis(sync_ms),
+        fleet_retain: 0.5,
+        fleet_half_life: Duration::from_secs(600),
+        ..ServeConfig::default()
+    }
+}
+
+fn body(client: &str, extra: &[(&str, Json)]) -> Json {
+    let mut obj = BTreeMap::new();
+    obj.insert("client_id".to_string(), Json::Str(client.to_string()));
+    obj.insert("app".to_string(), Json::Str("clomp".to_string()));
+    obj.insert("device".to_string(), Json::Str("maxn".to_string()));
+    obj.insert("alpha".to_string(), Json::Num(1.0));
+    obj.insert("beta".to_string(), Json::Num(0.0));
+    for (k, v) in extra {
+        obj.insert((*k).to_string(), v.clone());
+    }
+    Json::Obj(obj)
+}
+
+fn best_query(client: &str) -> String {
+    format!("/v1/best?client_id={client}&app=clomp&device=maxn&alpha=1.0&beta=0.0")
+}
+
+fn wait_until<F: FnMut() -> bool>(mut cond: F, timeout: Duration) -> bool {
+    let deadline = Instant::now() + timeout;
+    while Instant::now() < deadline {
+        if cond() {
+            return true;
+        }
+        std::thread::sleep(Duration::from_millis(25));
+    }
+    cond()
+}
+
+/// One suggest + evaluate + report round. Returns the suggested arm.
+fn one_round(client: &mut HttpClient, client_id: &str) -> usize {
+    let (status, resp) = client.post("/v1/suggest", &body(client_id, &[])).unwrap();
+    assert_eq!(status, 200, "suggest failed: {resp:?}");
+    let arm = resp.get("arm").and_then(Json::as_usize).unwrap();
+    let (status, resp) = client
+        .post(
+            "/v1/report",
+            &body(
+                client_id,
+                &[
+                    ("arm", Json::Num(arm as f64)),
+                    ("time_s", Json::Num(fake_time(arm))),
+                    ("power_w", Json::Num(5.0)),
+                ],
+            ),
+        )
+        .unwrap();
+    assert_eq!(status, 202, "report not queued: {resp:?}");
+    arm
+}
+
+/// Rounds until `/v1/best` answers [`BEST_ARM`] (capped). The
+/// convergence metric of the acceptance criterion.
+fn rounds_to_parity(addr: &str, client_id: &str, cap: usize) -> usize {
+    let mut client = HttpClient::connect(addr).unwrap();
+    for round in 1..=cap {
+        one_round(&mut client, client_id);
+        let (status, b) = client.get(&best_query(client_id)).unwrap();
+        assert_eq!(status, 200);
+        if b.get("arm").and_then(Json::as_usize) == Some(BEST_ARM) {
+            return round;
+        }
+    }
+    cap
+}
+
+fn metric_value(text: &str, name: &str) -> f64 {
+    text.lines()
+        .find_map(|l| l.strip_prefix(name).and_then(|rest| rest.trim().parse::<f64>().ok()))
+        .unwrap_or(0.0)
+}
+
+fn metrics_text(client: &mut HttpClient) -> String {
+    let (status, page) = client.get("/metrics").unwrap();
+    assert_eq!(status, 200);
+    page.as_str().unwrap_or_default().to_string()
+}
+
+#[test]
+fn fleet_prior_warm_start_beats_cold_start_and_survives_leader_death() {
+    // --- Leader: learn the scenario with a veteran client. ---
+    let leader = start(cfg(None, 60_000, "leader")).unwrap();
+    let leader_addr = leader.addr().to_string();
+    let mut veteran = HttpClient::connect(&leader_addr).unwrap();
+    let veteran_rounds = 300usize;
+    for _ in 0..veteran_rounds {
+        one_round(&mut veteran, "veteran");
+    }
+    // Wait for the async report plane to drain, then sanity-check that
+    // the veteran actually converged on the designed optimum.
+    assert!(
+        wait_until(
+            || {
+                let (s, b) = veteran.get(&best_query("veteran")).unwrap();
+                s == 200
+                    && b.get("total_pulls").and_then(Json::as_f64)
+                        == Some(veteran_rounds as f64)
+            },
+            Duration::from_secs(15)
+        ),
+        "veteran reports never fully applied"
+    );
+    let (_, b) = veteran.get(&best_query("veteran")).unwrap();
+    assert_eq!(
+        b.get("arm").and_then(Json::as_usize),
+        Some(BEST_ARM),
+        "veteran did not converge; landscape broken"
+    );
+
+    // --- Follower: sync against the leader, then serve a newcomer. ---
+    let follower = start(cfg(Some(leader_addr.clone()), 200, "edge-b")).unwrap();
+    let follower_addr = follower.addr().to_string();
+    let mut fprobe = HttpClient::connect(&follower_addr).unwrap();
+    assert!(
+        wait_until(
+            || {
+                let m = metrics_text(&mut fprobe);
+                metric_value(&m, "lasp_serve_fleet_pulls_total") >= 1.0
+                    && metric_value(&m, "lasp_serve_fleet_prior_keys") >= 1.0
+            },
+            Duration::from_secs(20)
+        ),
+        "follower never completed a sync cycle"
+    );
+    let warm_rounds = rounds_to_parity(&follower_addr, "newcomer", 200);
+    let m = metrics_text(&mut fprobe);
+    assert!(
+        metric_value(&m, "lasp_serve_fleet_warm_starts_total") >= 1.0,
+        "newcomer session was not warm-started: {m}"
+    );
+
+    // --- Cold baseline: an isolated node, same traffic pattern. ---
+    let cold = start(cfg(None, 60_000, "cold")).unwrap();
+    let cold_addr = cold.addr().to_string();
+    let cold_rounds = rounds_to_parity(&cold_addr, "newcomer", 200);
+
+    // A cold 125-arm UCB session cannot even finish its init sweep before
+    // round 125; the warm-started one answers the fleet optimum almost
+    // immediately. "Measurably fewer" with wide safety margins:
+    assert!(
+        warm_rounds < cold_rounds,
+        "warm start not faster: warm={warm_rounds} cold={cold_rounds}"
+    );
+    assert!(warm_rounds <= 40, "warm start too slow: {warm_rounds} rounds");
+    assert!(cold_rounds >= 100, "cold baseline implausibly fast: {cold_rounds} rounds");
+
+    // --- Kill the leader mid-run: everyone keeps serving. ---
+    drop(veteran);
+    leader.shutdown().unwrap();
+    assert!(
+        wait_until(
+            || metric_value(
+                &metrics_text(&mut fprobe),
+                "lasp_serve_fleet_sync_errors_total"
+            ) >= 1.0,
+            Duration::from_secs(20)
+        ),
+        "follower never noticed the dead leader"
+    );
+    let mut fclient = HttpClient::connect(&follower_addr).unwrap();
+    let mut cclient = HttpClient::connect(&cold_addr).unwrap();
+    for _ in 0..20 {
+        // one_round asserts 200/202 internally: suggest never degrades.
+        one_round(&mut fclient, "after-death");
+        one_round(&mut cclient, "after-death");
+    }
+    let (status, health) = fclient.get("/healthz").unwrap();
+    assert_eq!(status, 200);
+    assert_eq!(health.get("ok"), Some(&Json::Bool(true)));
+
+    follower.shutdown().unwrap();
+    cold.shutdown().unwrap();
+}
+
+#[test]
+fn sync_endpoints_validate_and_pushes_are_idempotent() {
+    let node = start(cfg(None, 60_000, "solo")).unwrap();
+    let addr = node.addr().to_string();
+    assert_eq!(node.node_id(), "solo");
+    let mut client = HttpClient::connect(&addr).unwrap();
+
+    // Malformed sync requests are 400s, never panics.
+    let (status, _) = client.post("/v1/sync/push", &Json::Str("nope".into())).unwrap();
+    assert_eq!(status, 400);
+    let (status, _) = client.post("/v1/sync/push", &Json::Obj(BTreeMap::new())).unwrap();
+    assert_eq!(status, 400, "missing node_id accepted");
+    let (status, _) = client.post("/v1/sync/pull", &Json::Obj(BTreeMap::new())).unwrap();
+    assert_eq!(status, 400, "missing node_id accepted");
+    // Self-sync misconfiguration is refused loudly.
+    let mut self_push = BTreeMap::new();
+    self_push.insert("node_id".to_string(), Json::Str("solo".to_string()));
+    self_push.insert("snapshots".to_string(), Json::Arr(vec![]));
+    let (status, _) = client.post("/v1/sync/push", &Json::Obj(self_push)).unwrap();
+    assert_eq!(status, 400, "self-push accepted");
+    // Sync endpoints are POST-only.
+    let (status, _) = client.get("/v1/sync/pull").unwrap();
+    assert_eq!(status, 404);
+
+    // A valid push: one clomp snapshot where arm 5 dominates.
+    let snapshot = |arms: Vec<f64>, counts: Vec<f64>, tau: Vec<f64>, rho: Vec<f64>| {
+        let arr = |v: Vec<f64>| Json::Arr(v.into_iter().map(Json::Num).collect());
+        let mut o = BTreeMap::new();
+        o.insert("app".to_string(), Json::Str("clomp".to_string()));
+        o.insert("device".to_string(), Json::Str("maxn".to_string()));
+        o.insert("policy".to_string(), Json::Str("ucb".to_string()));
+        o.insert("age_s".to_string(), Json::Num(0.0));
+        o.insert("arms".to_string(), arr(arms));
+        o.insert("counts".to_string(), arr(counts));
+        o.insert("tau_sum".to_string(), arr(tau));
+        o.insert("rho_sum".to_string(), arr(rho));
+        Json::Obj(o)
+    };
+    let push = |snaps: Vec<Json>| {
+        let mut o = BTreeMap::new();
+        o.insert("node_id".to_string(), Json::Str("peer-1".to_string()));
+        o.insert("snapshots".to_string(), Json::Arr(snaps));
+        Json::Obj(o)
+    };
+    let snap = snapshot(
+        vec![5.0],
+        vec![60.0],
+        vec![18.0],  // mean time 0.3
+        vec![300.0], // mean power 5.0
+    );
+    for _ in 0..3 {
+        let (status, resp) = client.post("/v1/sync/push", &push(vec![snap.clone()])).unwrap();
+        assert_eq!(status, 200, "{resp:?}");
+        assert_eq!(resp.get("accepted").and_then(Json::as_usize), Some(1));
+        assert_eq!(resp.get("nodes").and_then(Json::as_usize), Some(1), "push not idempotent");
+    }
+
+    // A malformed snapshot inside an otherwise valid push is rejected.
+    let bad = snapshot(vec![5.0, 4.0], vec![1.0, 1.0], vec![1.0, 1.0], vec![1.0, 1.0]);
+    let (status, _) = client.post("/v1/sync/push", &push(vec![bad])).unwrap();
+    assert_eq!(status, 400, "unsorted arms accepted");
+
+    // Pulling as another peer sees peer-1's evidence once (idempotency
+    // end to end: three pushes, one copy).
+    let mut pull = BTreeMap::new();
+    pull.insert("node_id".to_string(), Json::Str("peer-2".to_string()));
+    let (status, resp) = client.post("/v1/sync/pull", &Json::Obj(pull.clone())).unwrap();
+    assert_eq!(status, 200);
+    let snaps = resp.get("snapshots").and_then(Json::as_arr).unwrap();
+    assert_eq!(snaps.len(), 1);
+    let counts = snaps[0].get("counts").and_then(Json::as_arr).unwrap();
+    let c0 = counts[0].as_f64().unwrap();
+    assert!((c0 - 60.0).abs() < 1.0, "triple push double-counted: {c0}");
+
+    // Pulling as peer-1 must not echo peer-1's own evidence back.
+    pull.insert("node_id".to_string(), Json::Str("peer-1".to_string()));
+    let (status, resp) = client.post("/v1/sync/pull", &Json::Obj(pull)).unwrap();
+    assert_eq!(status, 200);
+    assert_eq!(
+        resp.get("snapshots").and_then(Json::as_arr).map(|s| s.len()),
+        Some(0),
+        "pull echoed the requester's own snapshots"
+    );
+
+    // The push installed a warm-start prior on this node: a brand-new
+    // session immediately answers the pushed optimum.
+    let (status, _) = client.post("/v1/suggest", &body("fresh", &[])).unwrap();
+    assert_eq!(status, 200);
+    let (status, b) = client.get(&best_query("fresh")).unwrap();
+    assert_eq!(status, 200);
+    assert_eq!(b.get("arm").and_then(Json::as_usize), Some(5));
+    let m = metrics_text(&mut client);
+    assert!(metric_value(&m, "lasp_serve_fleet_warm_starts_total") >= 1.0, "{m}");
+    assert!(metric_value(&m, "lasp_serve_fleet_push_snapshots_total") >= 3.0, "{m}");
+    assert!(metric_value(&m, "lasp_serve_fleet_nodes") >= 1.0, "{m}");
+
+    node.shutdown().unwrap();
+}

@@ -29,6 +29,7 @@ fn cfg_with_dir(dir: &std::path::Path) -> ServeConfig {
         // and the final shutdown snapshot.
         checkpoint_every: Duration::from_secs(3600),
         warm_retain: 0.5,
+        ..ServeConfig::default()
     }
 }
 
