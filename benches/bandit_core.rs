@@ -1,0 +1,143 @@
+//! Bandit-core microbench: per-policy steady-state `select()` throughput
+//! and — via a counting global allocator — *exact* heap allocations per
+//! select/update round. The unified `ArmStats` + `Scratch` core promises
+//! zero allocations in steady state for every policy; this bench measures
+//! it directly (not through a buffer-growth proxy) and fails the shape
+//! check if `ucb` or `swucb` ever allocates.
+//!
+//! Emits `BENCH_bandit.json` (path override: `LASP_BENCH_OUT`) so the
+//! selects/sec trajectory is tracked PR-over-PR; `LASP_BENCH_QUICK=1`
+//! runs a short smoke variant for CI.
+
+#[path = "common.rs"]
+mod common;
+
+use lasp::bandit::{
+    EpsilonGreedy, Policy, SlidingWindowUcb, SubsetTuner, ThompsonSampler, UcbTuner,
+};
+use lasp::util::json::Json;
+use lasp::util::Rng;
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+/// System allocator wrapper counting every allocation (reallocs included).
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+struct PolicyReport {
+    name: &'static str,
+    selects_per_s: f64,
+    allocs_per_select: f64,
+    scratch_growths: u64,
+}
+
+/// Drive one policy through warmup + a measured steady-state phase on a
+/// deterministic synthetic landscape; count allocations across the whole
+/// measured select/update loop.
+fn measure(name: &'static str, mut policy: Box<dyn Policy>, rounds: usize) -> PolicyReport {
+    let k = policy.k();
+    let mut env = Rng::new(0xC0FFEE);
+    let mut drive = |p: &mut dyn Policy, n: usize| {
+        for _ in 0..n {
+            let arm = p.select();
+            let time = (1.0 + (arm % 13) as f64 * 0.07) * env.relative_noise(0.03);
+            p.update(arm, time, 5.0);
+        }
+    };
+    // Warmup: cover the init sweep and let every reusable buffer (scratch,
+    // sliding-window deque) reach its high-water mark.
+    drive(policy.as_mut(), 2 * k.min(4096) + 64);
+    let growths_before = policy.scratch_growths();
+
+    let allocs_before = ALLOCS.load(Ordering::Relaxed);
+    let t0 = Instant::now();
+    drive(policy.as_mut(), rounds);
+    let elapsed = t0.elapsed().as_secs_f64();
+    let allocs = ALLOCS.load(Ordering::Relaxed) - allocs_before;
+
+    let report = PolicyReport {
+        name,
+        selects_per_s: rounds as f64 / elapsed.max(1e-12),
+        allocs_per_select: allocs as f64 / rounds as f64,
+        scratch_growths: policy.scratch_growths() - growths_before,
+    };
+    println!(
+        "bench bandit_core {name:<10} {rounds} rounds: {:>12.0} selects/s, {:.4} allocs/select ({} scratch growths)",
+        report.selects_per_s, report.allocs_per_select, report.scratch_growths
+    );
+    report
+}
+
+fn main() {
+    let quick = std::env::var("LASP_BENCH_QUICK").map(|v| v == "1").unwrap_or(false);
+    let rounds = if quick { 2_000 } else { 50_000 };
+    let k = 216; // kripke-sized space
+    let window = 512;
+
+    println!("## bandit core — steady-state select/update (K={k})");
+    let reports = vec![
+        measure("ucb", Box::new(UcbTuner::new(k, 0.8, 0.2)), rounds),
+        measure("swucb", Box::new(SlidingWindowUcb::new(k, 0.8, 0.2, window)), rounds),
+        measure("thompson", Box::new(ThompsonSampler::new(k, 0.8, 0.2, 7)), rounds),
+        measure("epsilon", Box::new(EpsilonGreedy::new(k, 0.8, 0.2, 0.1, 7)), rounds),
+        measure(
+            "subset",
+            Box::new(SubsetTuner::new(92_160, 1024, 0.8, 0.2, 7)),
+            rounds,
+        ),
+    ];
+
+    let mut policies = BTreeMap::new();
+    for r in &reports {
+        let mut o = BTreeMap::new();
+        o.insert("selects_per_s".to_string(), Json::Num(r.selects_per_s));
+        o.insert("allocs_per_select".to_string(), Json::Num(r.allocs_per_select));
+        o.insert("scratch_growths".to_string(), Json::Num(r.scratch_growths as f64));
+        policies.insert(r.name.to_string(), Json::Obj(o));
+    }
+    let mut out = BTreeMap::new();
+    out.insert("bench".to_string(), Json::Str("bandit_core".to_string()));
+    out.insert(
+        "mode".to_string(),
+        Json::Str(if quick { "quick" } else { "full" }.to_string()),
+    );
+    out.insert("rounds".to_string(), Json::Num(rounds as f64));
+    out.insert("k".to_string(), Json::Num(k as f64));
+    out.insert("policies".to_string(), Json::Obj(policies));
+    let path = std::env::var("LASP_BENCH_OUT").unwrap_or_else(|_| "BENCH_bandit.json".to_string());
+    std::fs::write(&path, Json::Obj(out).to_string() + "\n").expect("writing bench json");
+    println!("\nwrote {path}");
+
+    // The acceptance criterion: zero allocs/select in steady state for ucb
+    // and swucb (the paper policy and its non-stationary variant), and no
+    // scratch regrowth anywhere.
+    let by_name = |n: &str| reports.iter().find(|r| r.name == n).unwrap();
+    common::report_shape(
+        "bandit_core",
+        by_name("ucb").allocs_per_select == 0.0
+            && by_name("swucb").allocs_per_select == 0.0
+            && reports.iter().all(|r| r.scratch_growths == 0),
+    );
+}

@@ -6,6 +6,10 @@
 //! (c) reports wall-clock timings for the regeneration so `cargo bench`
 //! doubles as a coarse performance tracker.
 
+// Shared by every `[[bench]]` target via `#[path]`; not every bench uses
+// every helper, and CI denies warnings across all targets.
+#![allow(dead_code)]
+
 use std::time::Instant;
 
 /// Time one closure over `iters` runs; prints mean ± spread like criterion.

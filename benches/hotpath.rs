@@ -5,12 +5,12 @@
 #[path = "common.rs"]
 mod common;
 
-use lasp::bandit::{RewardState, ScalarBackend, ScoreBackend};
+use lasp::bandit::{ArmStats, ScalarBackend, ScoreBackend, Scratch};
 use lasp::runtime::EngineHandle;
 use lasp::util::Rng;
 
-fn populated_state(k: usize, pulls: usize, seed: u64) -> RewardState {
-    let mut state = RewardState::new(k);
+fn populated_state(k: usize, pulls: usize, seed: u64) -> ArmStats {
+    let mut state = ArmStats::new(k);
     let mut rng = Rng::new(seed);
     for _ in 0..pulls {
         let arm = rng.below(k);
@@ -27,8 +27,9 @@ fn main() {
     for (app, k) in apps {
         let state = populated_state(k, 1000, 7);
         let mut backend = ScalarBackend;
+        let mut scratch = Scratch::new();
         common::bench(&format!("scalar lasp_step {app} (K={k})"), 50, || {
-            let _ = backend.lasp_step(&state, 0.8, 0.2, 0.25).unwrap();
+            let _ = backend.lasp_step(&state, 0.8, 0.2, 0.25, &mut scratch).unwrap();
         });
     }
 
@@ -37,9 +38,9 @@ fn main() {
             println!("\n## PJRT backend — same step through the AOT artifact");
             for (app, k) in apps {
                 let state = populated_state(k, 1000, 7);
-                let tau: Vec<f32> = state.tau_sum.iter().map(|&v| v as f32).collect();
-                let rho: Vec<f32> = state.rho_sum.iter().map(|&v| v as f32).collect();
-                let cnt: Vec<f32> = state.counts.iter().map(|&v| v as f32).collect();
+                let tau: Vec<f32> = state.tau_sum().iter().map(|&v| v as f32).collect();
+                let rho: Vec<f32> = state.rho_sum().iter().map(|&v| v as f32).collect();
+                let cnt: Vec<f32> = state.counts().iter().map(|&v| v as f32).collect();
                 // Warm the executable cache before timing.
                 let _ = engine
                     .lasp_step(app, tau.clone(), rho.clone(), cnt.clone(), 1001.0, 0.8, 0.2, 0.25)

@@ -1,0 +1,408 @@
+//! The shared bandit core: one struct-of-arrays [`ArmStats`] engine under
+//! every policy, plus the reusable [`Scratch`] buffers that keep
+//! `Policy::select` allocation-free in steady state.
+//!
+//! Before this module existed each of the five policies kept its own
+//! `RewardState` plus ad-hoc counters, re-implemented warm-start logic per
+//! variant, and re-summed the counts slice on every `total_pulls()` call.
+//! [`ArmStats`] centralizes the sufficient statistics (paper Alg. 1
+//! lines 1-2) in one cache-friendly struct-of-arrays layout:
+//!
+//! * `counts` / `tau_sum` / `rho_sum` — the per-arm statistics, each a
+//!   dense contiguous `Vec<f64>` so score kernels stream them linearly;
+//! * `mean_tau` / `mean_rho` — cached per-arm means, updated O(1) on every
+//!   [`ArmStats::observe`], so the per-select kernels never divide;
+//! * `total` — a cached pull total, making [`ArmStats::total_pulls`] O(1)
+//!   (it sits on the suggest hot path via UCB's `log t` term).
+//!
+//! Invariant: `mean_*[i] == *_sum[i] / counts[i]` whenever `counts[i] > 0`
+//! and `0.0` otherwise; `total == Σ counts`. Every mutator re-establishes
+//! it, which is why the fields are private.
+
+/// Struct-of-arrays per-arm sufficient statistics: Στ, Σρ, N, cached
+/// means, and an O(1) pull total.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArmStats {
+    counts: Vec<f64>,
+    tau_sum: Vec<f64>,
+    rho_sum: Vec<f64>,
+    mean_tau: Vec<f64>,
+    mean_rho: Vec<f64>,
+    total: f64,
+    /// Iteration counter `t` (1-based, advanced per observation).
+    t: f64,
+}
+
+impl ArmStats {
+    pub fn new(k: usize) -> ArmStats {
+        ArmStats {
+            counts: vec![0.0; k],
+            tau_sum: vec![0.0; k],
+            rho_sum: vec![0.0; k],
+            mean_tau: vec![0.0; k],
+            mean_rho: vec![0.0; k],
+            total: 0.0,
+            t: 1.0,
+        }
+    }
+
+    /// Rebuild from raw vectors (checkpoint restore). The caller validates
+    /// shapes and finiteness; means and the total are recomputed here.
+    pub fn from_parts(tau_sum: Vec<f64>, rho_sum: Vec<f64>, counts: Vec<f64>, t: f64) -> ArmStats {
+        assert_eq!(tau_sum.len(), counts.len());
+        assert_eq!(rho_sum.len(), counts.len());
+        let k = counts.len();
+        let mut s = ArmStats {
+            counts,
+            tau_sum,
+            rho_sum,
+            mean_tau: vec![0.0; k],
+            mean_rho: vec![0.0; k],
+            total: 0.0,
+            t: t.max(1.0),
+        };
+        for i in 0..k {
+            s.total += s.counts[i];
+            if s.counts[i] > 0.0 {
+                s.mean_tau[i] = s.tau_sum[i] / s.counts[i];
+                s.mean_rho[i] = s.rho_sum[i] / s.counts[i];
+            }
+        }
+        s
+    }
+
+    /// Number of arms.
+    pub fn k(&self) -> usize {
+        self.counts.len()
+    }
+
+    /// Record one measurement for `arm`.
+    pub fn observe(&mut self, arm: usize, time_s: f64, power_w: f64) {
+        self.tau_sum[arm] += time_s;
+        self.rho_sum[arm] += power_w;
+        self.counts[arm] += 1.0;
+        self.mean_tau[arm] = self.tau_sum[arm] / self.counts[arm];
+        self.mean_rho[arm] = self.rho_sum[arm] / self.counts[arm];
+        self.total += 1.0;
+        self.t += 1.0;
+    }
+
+    /// Remove one previously observed measurement (sliding-window
+    /// eviction). The iteration counter `t` is *not* rewound — time only
+    /// moves forward. Accumulated fp dust at zero is squashed so an arm
+    /// whose window emptied reads as genuinely unpulled.
+    pub fn unobserve(&mut self, arm: usize, time_s: f64, power_w: f64) {
+        self.tau_sum[arm] -= time_s;
+        self.rho_sum[arm] -= power_w;
+        self.counts[arm] -= 1.0;
+        self.total -= 1.0;
+        if self.counts[arm] < 1e-9 {
+            self.total -= self.counts[arm];
+            self.counts[arm] = 0.0;
+            self.tau_sum[arm] = 0.0;
+            self.rho_sum[arm] = 0.0;
+            self.mean_tau[arm] = 0.0;
+            self.mean_rho[arm] = 0.0;
+        } else {
+            self.mean_tau[arm] = self.tau_sum[arm] / self.counts[arm];
+            self.mean_rho[arm] = self.rho_sum[arm] / self.counts[arm];
+        }
+    }
+
+    /// Replace one arm's statistics wholesale (prior installation,
+    /// projection). Re-derives `t` as `total + 1`, the convention for
+    /// rebuilt states.
+    pub fn set_arm(&mut self, arm: usize, count: f64, tau_sum: f64, rho_sum: f64) {
+        self.total += count - self.counts[arm];
+        self.counts[arm] = count;
+        self.tau_sum[arm] = tau_sum;
+        self.rho_sum[arm] = rho_sum;
+        if count > 0.0 {
+            self.mean_tau[arm] = tau_sum / count;
+            self.mean_rho[arm] = rho_sum / count;
+        } else {
+            self.mean_tau[arm] = 0.0;
+            self.mean_rho[arm] = 0.0;
+        }
+        self.t = self.total + 1.0;
+    }
+
+    /// Accumulate onto one arm's statistics (sparse-snapshot densify,
+    /// cross-node merging). Same `t` convention as [`ArmStats::set_arm`].
+    pub fn add_arm(&mut self, arm: usize, count: f64, tau_sum: f64, rho_sum: f64) {
+        self.set_arm(
+            arm,
+            self.counts[arm] + count,
+            self.tau_sum[arm] + tau_sum,
+            self.rho_sum[arm] + rho_sum,
+        );
+    }
+
+    /// Pull counts `N_x`.
+    pub fn counts(&self) -> &[f64] {
+        &self.counts
+    }
+
+    /// Per-arm Στ.
+    pub fn tau_sum(&self) -> &[f64] {
+        &self.tau_sum
+    }
+
+    /// Per-arm Σρ.
+    pub fn rho_sum(&self) -> &[f64] {
+        &self.rho_sum
+    }
+
+    /// Cached per-arm mean execution times (0.0 for unpulled arms).
+    pub fn mean_tau(&self) -> &[f64] {
+        &self.mean_tau
+    }
+
+    /// Cached per-arm mean powers (0.0 for unpulled arms).
+    pub fn mean_rho(&self) -> &[f64] {
+        &self.mean_rho
+    }
+
+    /// Iteration counter `t`.
+    pub fn t(&self) -> f64 {
+        self.t
+    }
+
+    /// Total pulls — O(1) via the cached counter.
+    pub fn total_pulls(&self) -> f64 {
+        self.total
+    }
+
+    /// Mean observed (time, power) for `arm`, if it has been pulled.
+    pub fn means_of(&self, arm: usize) -> Option<(f64, f64)> {
+        if arm >= self.k() || self.counts[arm] <= 0.0 {
+            return None;
+        }
+        Some((self.mean_tau[arm], self.mean_rho[arm]))
+    }
+
+    /// Per-arm mean times/powers with unpulled arms filled neutrally (the
+    /// mean over pulled arms), mirroring `model.py::reward_norm`.
+    /// Reference/diagnostic path — allocates; the hot kernels in
+    /// [`super::reward`] fuse this computation instead.
+    pub fn filled_means(&self) -> (Vec<f64>, Vec<f64>) {
+        let k = self.k();
+        let mut mean_tau = vec![0.0; k];
+        let mut mean_rho = vec![0.0; k];
+        let mut fill_tau = 0.0;
+        let mut fill_rho = 0.0;
+        let mut pulled = 0.0f64;
+        for i in 0..k {
+            if self.counts[i] > 0.0 {
+                mean_tau[i] = self.mean_tau[i];
+                mean_rho[i] = self.mean_rho[i];
+                fill_tau += mean_tau[i];
+                fill_rho += mean_rho[i];
+                pulled += 1.0;
+            }
+        }
+        let denom = pulled.max(1.0);
+        let (fill_tau, fill_rho) = (fill_tau / denom, fill_rho / denom);
+        for i in 0..k {
+            if self.counts[i] == 0.0 {
+                mean_tau[i] = fill_tau;
+                mean_rho[i] = fill_rho;
+            }
+        }
+        (mean_tau, mean_rho)
+    }
+
+    /// Discount for warm-starting: keep per-arm means but shrink effective
+    /// counts by `retain ∈ (0, 1]`, so prior knowledge biases early
+    /// selection without suppressing re-verification of a shifted
+    /// environment. Unpulled arms stay unpulled; pulled arms keep at
+    /// least one effective pull.
+    pub fn discounted(&self, retain: f64) -> ArmStats {
+        assert!(retain > 0.0 && retain <= 1.0);
+        let k = self.k();
+        let mut out = ArmStats::new(k);
+        for i in 0..k {
+            if self.counts[i] > 0.0 {
+                let kept = (self.counts[i] * retain).max(1.0);
+                out.set_arm(i, kept, self.mean_tau[i] * kept, self.mean_rho[i] * kept);
+            }
+        }
+        out
+    }
+}
+
+/// Reusable per-policy score buffers. Each policy instance owns one, so a
+/// session's `select()` allocates only until both buffers reach `k`
+/// elements; after that warm-up the whole scoring pass is allocation-free
+/// (asserted end-to-end by `rust/tests/serve_hotpath.rs` and per-policy by
+/// `benches/bandit_core.rs`).
+#[derive(Debug, Default)]
+pub struct Scratch {
+    /// Eq. 5 rewards from the most recent scoring pass.
+    pub rewards: Vec<f64>,
+    /// Per-arm scores (UCB bonuses or Thompson samples).
+    pub scores: Vec<f64>,
+    /// Growth events of this instance (see [`Scratch::growths`]).
+    growths: u64,
+}
+
+impl Scratch {
+    pub fn new() -> Scratch {
+        Scratch::default()
+    }
+
+    /// Size both buffers to `k` arms, counting a growth event when either
+    /// has to reallocate. For single-buffer kernels use
+    /// [`Scratch::ensure_rewards`] instead — no point carrying a dead
+    /// `scores` vector (737 KB at Hypre scale) in sessions that never run
+    /// a two-stage kernel.
+    pub fn ensure(&mut self, k: usize) {
+        if k > self.rewards.capacity() || k > self.scores.capacity() {
+            self.growths += 1;
+        }
+        self.rewards.resize(k, 0.0);
+        self.scores.resize(k, 0.0);
+    }
+
+    /// Size only the rewards buffer (kernels that never write scores:
+    /// the fused `lasp_step`, ε-greedy's greedy pass).
+    pub fn ensure_rewards(&mut self, k: usize) {
+        if k > self.rewards.capacity() {
+            self.growths += 1;
+        }
+        self.rewards.resize(k, 0.0);
+    }
+
+    /// How many times this instance had to reallocate. Flat after warm-up
+    /// — the per-session zero-allocation contract, aggregated across live
+    /// sessions by `serve::ShardedStore::scratch_growth_total`.
+    pub fn growths(&self) -> u64 {
+        self.growths
+    }
+
+    /// Split mutable borrows of the two buffers (two-stage kernels read
+    /// rewards while writing scores).
+    pub fn rewards_scores_mut(&mut self) -> (&mut [f64], &mut [f64]) {
+        (&mut self.rewards, &mut self.scores)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn observe_maintains_cached_invariants() {
+        let mut s = ArmStats::new(3);
+        s.observe(1, 2.0, 5.0);
+        s.observe(1, 4.0, 7.0);
+        assert_eq!(s.tau_sum()[1], 6.0);
+        assert_eq!(s.rho_sum()[1], 12.0);
+        assert_eq!(s.counts()[1], 2.0);
+        assert_eq!(s.mean_tau()[1], 3.0);
+        assert_eq!(s.mean_rho()[1], 6.0);
+        assert_eq!(s.total_pulls(), 2.0);
+        assert_eq!(s.t(), 3.0);
+        assert_eq!(s.means_of(1), Some((3.0, 6.0)));
+        assert_eq!(s.means_of(0), None);
+        assert_eq!(s.means_of(99), None);
+    }
+
+    #[test]
+    fn unobserve_reverses_and_squashes_dust() {
+        let mut s = ArmStats::new(2);
+        s.observe(0, 1.5, 4.0);
+        s.observe(0, 2.5, 6.0);
+        s.unobserve(0, 1.5, 4.0);
+        assert_eq!(s.counts()[0], 1.0);
+        assert_eq!(s.mean_tau()[0], 2.5);
+        assert_eq!(s.total_pulls(), 1.0);
+        s.unobserve(0, 2.5, 6.0);
+        assert_eq!(s.counts()[0], 0.0);
+        assert_eq!(s.tau_sum()[0], 0.0);
+        assert_eq!(s.mean_tau()[0], 0.0);
+        assert_eq!(s.total_pulls(), 0.0);
+        // t never rewinds.
+        assert_eq!(s.t(), 3.0);
+    }
+
+    #[test]
+    fn set_and_add_arm_rebuild_totals() {
+        let mut s = ArmStats::new(4);
+        s.set_arm(2, 5.0, 10.0, 20.0);
+        assert_eq!(s.total_pulls(), 5.0);
+        assert_eq!(s.mean_tau()[2], 2.0);
+        assert_eq!(s.t(), 6.0);
+        s.add_arm(2, 5.0, 10.0, 20.0);
+        assert_eq!(s.counts()[2], 10.0);
+        assert_eq!(s.mean_tau()[2], 2.0);
+        s.set_arm(2, 0.0, 0.0, 0.0);
+        assert_eq!(s.total_pulls(), 0.0);
+        assert_eq!(s.mean_tau()[2], 0.0);
+    }
+
+    #[test]
+    fn from_parts_recomputes_caches() {
+        let s = ArmStats::from_parts(vec![4.0, 0.0], vec![8.0, 0.0], vec![2.0, 0.0], 3.0);
+        assert_eq!(s.mean_tau()[0], 2.0);
+        assert_eq!(s.mean_rho()[0], 4.0);
+        assert_eq!(s.total_pulls(), 2.0);
+        assert_eq!(s.t(), 3.0);
+        // t clamps to at least 1.
+        let s = ArmStats::from_parts(vec![0.0], vec![0.0], vec![0.0], -5.0);
+        assert_eq!(s.t(), 1.0);
+    }
+
+    #[test]
+    fn filled_means_neutral_for_unpulled() {
+        let mut s = ArmStats::new(3);
+        s.observe(0, 2.0, 4.0);
+        s.observe(1, 4.0, 8.0);
+        let (mt, mr) = s.filled_means();
+        assert_eq!(mt, vec![2.0, 4.0, 3.0]); // arm 2 filled with mean(2,4)
+        assert_eq!(mr, vec![4.0, 8.0, 6.0]);
+    }
+
+    #[test]
+    fn discount_preserves_means_shrinks_counts() {
+        let mut s = ArmStats::new(4);
+        for _ in 0..10 {
+            s.observe(0, 2.0, 6.0);
+            s.observe(2, 4.0, 8.0);
+        }
+        let d = s.discounted(0.3);
+        assert_eq!(d.counts()[0], 3.0);
+        assert_eq!(d.mean_tau()[0], 2.0);
+        assert_eq!(d.mean_rho()[2], 8.0);
+        assert_eq!(d.counts()[1], 0.0);
+        assert_eq!(d.t(), d.total_pulls() + 1.0);
+        // Floor: a single-pull arm keeps one effective pull.
+        let mut s = ArmStats::new(1);
+        s.observe(0, 1.0, 1.0);
+        assert_eq!(s.discounted(0.1).counts()[0], 1.0);
+    }
+
+    #[test]
+    fn scratch_grows_once_then_stays_flat() {
+        let mut sc = Scratch::new();
+        sc.ensure(64);
+        assert_eq!(sc.rewards.len(), 64);
+        assert_eq!(sc.scores.len(), 64);
+        assert_eq!(sc.growths(), 1);
+        for _ in 0..100 {
+            sc.ensure(64);
+        }
+        assert_eq!(sc.growths(), 1, "steady-state ensure reallocated");
+        sc.ensure(128);
+        assert_eq!(sc.growths(), 2);
+
+        // The rewards-only variant leaves scores untouched.
+        let mut sc = Scratch::new();
+        sc.ensure_rewards(32);
+        assert_eq!(sc.rewards.len(), 32);
+        assert!(sc.scores.is_empty());
+        assert_eq!(sc.growths(), 1);
+        sc.ensure_rewards(32);
+        assert_eq!(sc.growths(), 1);
+    }
+}

@@ -3,61 +3,79 @@
 //! The simplest explore/exploit baseline: with probability ε pick a random
 //! arm, otherwise exploit the best current weighted reward. Used by the
 //! ablation benches to quantify what UCB's confidence bonus buys LASP.
+//! A thin strategy layer over the shared [`ArmStats`] core — which also
+//! makes it checkpointable and fleet-syncable like every other policy.
 
-use super::reward::{weighted_rewards, RewardState};
+use super::core::{ArmStats, Scratch};
+use super::reward::weighted_rewards_into;
 use super::Policy;
 use crate::util::{stats, Rng};
 
 /// ε-greedy over the paper's Eq. 5 reward.
 pub struct EpsilonGreedy {
-    state: RewardState,
+    stats: ArmStats,
     alpha: f64,
     beta: f64,
     epsilon: f64,
     rng: Rng,
+    scratch: Scratch,
 }
 
 impl EpsilonGreedy {
     pub fn new(k: usize, alpha: f64, beta: f64, epsilon: f64, seed: u64) -> Self {
         assert!((0.0..=1.0).contains(&epsilon));
         EpsilonGreedy {
-            state: RewardState::new(k),
+            stats: ArmStats::new(k),
             alpha,
             beta,
             epsilon,
             rng: Rng::new(seed),
+            scratch: Scratch::new(),
         }
     }
 }
 
 impl Policy for EpsilonGreedy {
     fn k(&self) -> usize {
-        self.state.k()
+        self.stats.k()
     }
 
     fn select(&mut self) -> usize {
         // Unpulled arms first (same initialization as UCB1).
-        if let Some(arm) = self.state.counts.iter().position(|&c| c == 0.0) {
+        if let Some(arm) = self.stats.counts().iter().position(|&c| c == 0.0) {
             return arm;
         }
         if self.rng.uniform() < self.epsilon {
             return self.rng.below(self.k());
         }
-        let (mt, mr) = self.state.filled_means();
-        let rewards = weighted_rewards(&mt, &mr, self.alpha, self.beta);
-        stats::argmax(&rewards)
+        self.scratch.ensure_rewards(self.stats.k());
+        weighted_rewards_into(&self.stats, self.alpha, self.beta, &mut self.scratch.rewards);
+        stats::argmax(&self.scratch.rewards)
     }
 
     fn update(&mut self, arm: usize, time_s: f64, power_w: f64) {
-        self.state.observe(arm, time_s, power_w);
+        self.stats.observe(arm, time_s, power_w);
     }
 
     fn counts(&self) -> &[f64] {
-        &self.state.counts
+        self.stats.counts()
     }
 
     fn name(&self) -> &'static str {
         "epsilon-greedy"
+    }
+
+    fn stats(&self) -> &ArmStats {
+        &self.stats
+    }
+
+    fn warm_start(&mut self, prior: ArmStats) {
+        assert_eq!(prior.k(), self.stats.k(), "warm-start arm count mismatch");
+        self.stats = prior;
+    }
+
+    fn scratch_growths(&self) -> u64 {
+        self.scratch.growths()
     }
 }
 
@@ -101,5 +119,30 @@ mod tests {
         for &c in p.counts() {
             assert!(c > 80.0, "counts {:?}", p.counts());
         }
+    }
+
+    #[test]
+    fn warm_start_skips_init_sweep_and_exploits() {
+        // The satellite fix: ε-greedy now shares the core, so a restored
+        // prior (every arm pulled, arm 1 clearly best) must go straight to
+        // exploitation under ε = 0.
+        let mut prior = ArmStats::new(3);
+        for _ in 0..20 {
+            prior.observe(0, 3.0, 1.0);
+            prior.observe(1, 0.5, 1.0);
+            prior.observe(2, 2.0, 1.0);
+        }
+        let mut p = EpsilonGreedy::new(3, 1.0, 0.0, 0.0, 9);
+        p.warm_start(prior);
+        assert_eq!(p.select(), 1);
+        assert_eq!(p.stats().total_pulls(), 60.0);
+        assert_eq!(p.total_pulls(), 60.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn warm_start_arm_mismatch_panics() {
+        let mut p = EpsilonGreedy::new(4, 1.0, 0.0, 0.1, 1);
+        p.warm_start(ArmStats::new(3));
     }
 }

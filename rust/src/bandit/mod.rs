@@ -7,6 +7,14 @@
 //! next selection (Eq. 2-3). The tuned configuration is the most-selected
 //! arm (Eq. 4).
 //!
+//! Since the unified-core refactor every policy is a thin *strategy layer*
+//! over one shared [`core::ArmStats`] engine: the core owns the per-arm
+//! sufficient statistics (struct-of-arrays, cached means, O(1) pull
+//! total), the policies own only their selection rule plus whatever extra
+//! state that rule needs (an rng, a sliding window, a candidate map). All
+//! steady-state scoring runs through each policy's reusable
+//! [`core::Scratch`], so [`Policy::select`] allocates nothing once warm.
+//!
 //! [`UcbTuner`] is LASP itself. [`EpsilonGreedy`], [`ThompsonSampler`] and
 //! [`SlidingWindowUcb`] are ablation policies used by the extension benches
 //! (the paper motivates MAB adaptivity; these quantify it).
@@ -16,6 +24,7 @@
 //! ([`crate::runtime::Engine`]), which are differentially tested against
 //! each other.
 
+pub mod core;
 pub mod epsilon;
 pub mod persist;
 pub mod regret;
@@ -25,9 +34,10 @@ pub mod swucb;
 pub mod thompson;
 pub mod ucb;
 
+pub use self::core::{ArmStats, Scratch};
 pub use epsilon::EpsilonGreedy;
 pub use regret::RegretTracker;
-pub use reward::{RewardState, ScalarBackend, ScoreBackend, StepOutput, DEFAULT_EXPLORATION};
+pub use reward::{ScalarBackend, ScoreBackend, Step, DEFAULT_EXPLORATION};
 pub use subset::SubsetTuner;
 pub use swucb::SlidingWindowUcb;
 pub use thompson::ThompsonSampler;
@@ -37,17 +47,22 @@ pub use ucb::UcbTuner;
 ///
 /// The contract mirrors the paper's loop (Alg. 1): call [`Policy::select`],
 /// run the configuration, feed the measurement back via [`Policy::update`].
+/// Every policy is backed by one [`ArmStats`] core, exposed through
+/// [`Policy::stats`] — that is what checkpointing, fleet sync and
+/// warm-starting read and write, identically for every variant.
 pub trait Policy: Send {
-    /// Number of arms.
+    /// Number of arms (full space — subset policies report the full space
+    /// here and keep their candidate-space core behind [`Policy::stats`]).
     fn k(&self) -> usize;
 
-    /// Choose the arm to pull at the current iteration.
+    /// Choose the arm to pull at the current iteration. Allocation-free
+    /// in steady state: scoring runs through the policy's [`Scratch`].
     fn select(&mut self) -> usize;
 
     /// Observe the measurement for `arm` (execution time seconds, watts).
     fn update(&mut self, arm: usize, time_s: f64, power_w: f64);
 
-    /// Pull counts `N_x`.
+    /// Pull counts `N_x` (full-space view).
     fn counts(&self) -> &[f64];
 
     /// Eq. 4: the most frequently selected arm — the tuner's answer.
@@ -55,19 +70,34 @@ pub trait Policy: Send {
         crate::util::stats::argmax(self.counts())
     }
 
-    /// Total pulls so far.
+    /// Total pulls so far — O(1) via the core's cached counter (policies
+    /// whose full-space view diverges from their core, like the windowed
+    /// SW-UCB, override this with their own cached total).
     fn total_pulls(&self) -> f64 {
-        self.counts().iter().sum()
+        self.stats().total_pulls()
     }
 
     /// Policy name for reports.
     fn name(&self) -> &'static str;
 
-    /// The underlying reward sufficient statistics, if this policy keeps
-    /// them (UCB-family policies do) — enables checkpointing.
-    fn reward_state(&self) -> Option<&RewardState> {
-        None
-    }
+    /// The shared arm-statistics core — the policy's sufficient
+    /// statistics for checkpointing and fleet transfer. Subset policies
+    /// expose their candidate-space core (positions are subset indices);
+    /// windowed policies expose the windowed view.
+    fn stats(&self) -> &ArmStats;
+
+    /// Warm-start from a prior in the policy's own arm space (already
+    /// discounted by the caller — see `serve::store::Tuner::warm_start`
+    /// for the one shared dimension-check → project → discount pipeline).
+    /// Each strategy absorbs the same prior its own way: UCB-family and
+    /// Thompson install it as their core, SW-UCB replays it into the
+    /// window, subset additionally projects counts to the full space.
+    fn warm_start(&mut self, prior: ArmStats);
+
+    /// Growth events of the policy's [`Scratch`] — flat after warm-up is
+    /// the per-policy zero-allocation contract, asserted end-to-end by
+    /// `rust/tests/serve_hotpath.rs`.
+    fn scratch_growths(&self) -> u64;
 }
 
 #[cfg(test)]
@@ -99,5 +129,24 @@ mod tests {
         exercise(Box::new(EpsilonGreedy::new(k, 1.0, 0.0, 0.1, 7)), k);
         exercise(Box::new(ThompsonSampler::new(k, 1.0, 0.0, 11)), k);
         exercise(Box::new(SlidingWindowUcb::new(k, 1.0, 0.0, 400)), k);
+    }
+
+    #[test]
+    fn every_policy_exposes_its_core() {
+        // The unified-core contract: stats() is total (no Option), and a
+        // policy's pulls are visible through it after updates.
+        let policies: Vec<Box<dyn Policy>> = vec![
+            Box::new(UcbTuner::new(4, 1.0, 0.0)),
+            Box::new(EpsilonGreedy::new(4, 1.0, 0.0, 0.1, 3)),
+            Box::new(ThompsonSampler::new(4, 1.0, 0.0, 3)),
+            Box::new(SlidingWindowUcb::new(4, 1.0, 0.0, 16)),
+            Box::new(SubsetTuner::new(100, 4, 1.0, 0.0, 3)),
+        ];
+        for mut p in policies {
+            let arm = p.select();
+            p.update(arm, 1.0, 5.0);
+            assert_eq!(p.stats().total_pulls(), 1.0, "{}", p.name());
+            assert_eq!(p.total_pulls(), 1.0, "{}", p.name());
+        }
     }
 }

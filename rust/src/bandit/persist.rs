@@ -7,8 +7,13 @@
 //! are tiny (3 f64 per arm), so LASP can checkpoint them after a campaign
 //! and *warm-start* the next one: prior knowledge is kept but discounted,
 //! letting the tuner re-verify quickly instead of re-exploring blindly.
+//!
+//! Since the unified-core refactor the serialized state is the shared
+//! [`ArmStats`] engine itself (cached means and totals are derived, so
+//! only the three sum vectors and `t` travel), which is why every policy
+//! — not just the UCB family — checkpoints identically.
 
-use super::reward::RewardState;
+use super::core::ArmStats;
 use crate::util::json::Json;
 use anyhow::{anyhow, Context, Result};
 use std::collections::BTreeMap;
@@ -17,18 +22,18 @@ use std::path::Path;
 /// Current checkpoint format version.
 const VERSION: f64 = 1.0;
 
-/// Serialize a reward state (plus identifying metadata) to JSON text.
-pub fn to_json(state: &RewardState, app: &str, alpha: f64, beta: f64) -> String {
+/// Serialize an arm-statistics core (plus identifying metadata) to JSON.
+pub fn to_json(state: &ArmStats, app: &str, alpha: f64, beta: f64) -> String {
     let mut obj = BTreeMap::new();
     obj.insert("version".into(), Json::Num(VERSION));
     obj.insert("app".into(), Json::Str(app.into()));
     obj.insert("alpha".into(), Json::Num(alpha));
     obj.insert("beta".into(), Json::Num(beta));
-    obj.insert("t".into(), Json::Num(state.t));
+    obj.insert("t".into(), Json::Num(state.t()));
     let vec_of = |v: &[f64]| Json::Arr(v.iter().map(|&x| Json::Num(x)).collect());
-    obj.insert("tau_sum".into(), vec_of(&state.tau_sum));
-    obj.insert("rho_sum".into(), vec_of(&state.rho_sum));
-    obj.insert("counts".into(), vec_of(&state.counts));
+    obj.insert("tau_sum".into(), vec_of(state.tau_sum()));
+    obj.insert("rho_sum".into(), vec_of(state.rho_sum()));
+    obj.insert("counts".into(), vec_of(state.counts()));
     Json::Obj(obj).to_string()
 }
 
@@ -38,7 +43,7 @@ pub struct Checkpoint {
     pub app: String,
     pub alpha: f64,
     pub beta: f64,
-    pub state: RewardState,
+    pub state: ArmStats,
 }
 
 /// Parse a checkpoint from JSON text.
@@ -64,11 +69,11 @@ pub fn from_json(text: &str) -> Result<Checkpoint> {
     if counts.iter().any(|&c| c < 0.0 || !c.is_finite()) {
         return Err(anyhow!("checkpoint counts invalid"));
     }
-    let mut state = RewardState::new(counts.len());
-    state.tau_sum = tau_sum;
-    state.rho_sum = rho_sum;
-    state.counts = counts;
-    state.t = root.get("t").and_then(Json::as_f64).unwrap_or(1.0).max(1.0);
+    if tau_sum.iter().chain(rho_sum.iter()).any(|x| !x.is_finite()) {
+        return Err(anyhow!("checkpoint sums invalid"));
+    }
+    let t = root.get("t").and_then(Json::as_f64).unwrap_or(1.0).max(1.0);
+    let state = ArmStats::from_parts(tau_sum, rho_sum, counts, t);
     Ok(Checkpoint {
         app: root
             .get("app")
@@ -110,7 +115,7 @@ pub fn write_atomic(path: &Path, text: &str) -> Result<()> {
 }
 
 /// Write a checkpoint file (atomically).
-pub fn save(path: &Path, state: &RewardState, app: &str, alpha: f64, beta: f64) -> Result<()> {
+pub fn save(path: &Path, state: &ArmStats, app: &str, alpha: f64, beta: f64) -> Result<()> {
     write_atomic(path, &to_json(state, app, alpha, beta))
 }
 
@@ -121,25 +126,10 @@ pub fn load(path: &Path) -> Result<Checkpoint> {
     from_json(&text)
 }
 
-/// Discount a prior state for warm-starting: keep per-arm means but shrink
-/// effective counts by `retain ∈ (0, 1]`, so prior knowledge biases early
-/// selection without suppressing re-verification of a shifted environment.
-pub fn discounted(prior: &RewardState, retain: f64) -> RewardState {
-    assert!(retain > 0.0 && retain <= 1.0);
-    let k = prior.k();
-    let mut out = RewardState::new(k);
-    for i in 0..k {
-        if prior.counts[i] > 0.0 {
-            let kept = (prior.counts[i] * retain).max(1.0);
-            let mean_tau = prior.tau_sum[i] / prior.counts[i];
-            let mean_rho = prior.rho_sum[i] / prior.counts[i];
-            out.counts[i] = kept;
-            out.tau_sum[i] = mean_tau * kept;
-            out.rho_sum[i] = mean_rho * kept;
-        }
-    }
-    out.t = out.counts.iter().sum::<f64>() + 1.0;
-    out
+/// Discount a prior state for warm-starting (see [`ArmStats::discounted`]:
+/// per-arm means are kept, effective counts shrink by `retain ∈ (0, 1]`).
+pub fn discounted(prior: &ArmStats, retain: f64) -> ArmStats {
+    prior.discounted(retain)
 }
 
 #[cfg(test)]
@@ -148,8 +138,8 @@ mod tests {
     use crate::bandit::{Policy, UcbTuner};
     use crate::util::Rng;
 
-    fn populated(k: usize, pulls: usize) -> RewardState {
-        let mut s = RewardState::new(k);
+    fn populated(k: usize, pulls: usize) -> ArmStats {
+        let mut s = ArmStats::new(k);
         let mut rng = Rng::new(3);
         for _ in 0..pulls {
             s.observe(rng.below(k), rng.range(0.2, 4.0), rng.range(2.0, 9.0));
@@ -163,10 +153,13 @@ mod tests {
         let text = to_json(&s, "kripke", 0.8, 0.2);
         let cp = from_json(&text).unwrap();
         assert_eq!(cp.app, "kripke");
-        assert_eq!(cp.state.tau_sum, s.tau_sum);
-        assert_eq!(cp.state.rho_sum, s.rho_sum);
-        assert_eq!(cp.state.counts, s.counts);
-        assert_eq!(cp.state.t, s.t);
+        assert_eq!(cp.state.tau_sum(), s.tau_sum());
+        assert_eq!(cp.state.rho_sum(), s.rho_sum());
+        assert_eq!(cp.state.counts(), s.counts());
+        assert_eq!(cp.state.t(), s.t());
+        // Derived caches are rebuilt, so the whole core round-trips.
+        assert_eq!(cp.state.total_pulls(), s.total_pulls());
+        assert_eq!(cp.state.mean_tau(), s.mean_tau());
     }
 
     #[test]
@@ -178,7 +171,7 @@ mod tests {
         save(&path, &s, "clomp", 1.0, 0.0).unwrap();
         let cp = load(&path).unwrap();
         assert_eq!(cp.app, "clomp");
-        assert_eq!(cp.state.counts, s.counts);
+        assert_eq!(cp.state.counts(), s.counts());
     }
 
     #[test]
@@ -196,6 +189,13 @@ mod tests {
         // Non-finite counts.
         let bad = r#"{"version":1,"app":"x","alpha":1,"beta":0,"t":3,
             "tau_sum":[1],"rho_sum":[1],"counts":[1e999]}"#;
+        assert!(from_json(bad).is_err());
+        // Non-finite sums (would poison means and fail re-serialization).
+        let bad = r#"{"version":1,"app":"x","alpha":1,"beta":0,"t":3,
+            "tau_sum":[1e999],"rho_sum":[1],"counts":[1]}"#;
+        assert!(from_json(bad).is_err());
+        let bad = r#"{"version":1,"app":"x","alpha":1,"beta":0,"t":3,
+            "tau_sum":[1],"rho_sum":[-1e999],"counts":[1]}"#;
         assert!(from_json(bad).is_err());
         // Non-numeric vector entries.
         let bad = r#"{"version":1,"app":"x","alpha":1,"beta":0,"t":3,
@@ -219,9 +219,9 @@ mod tests {
         assert_eq!(cp.app, "unknown");
         assert_eq!(cp.alpha, 0.8);
         assert_eq!(cp.beta, 0.2);
-        assert_eq!(cp.state.t, 1.0);
+        assert_eq!(cp.state.t(), 1.0);
         let clamped = r#"{"version":1,"t":-5,"tau_sum":[2],"rho_sum":[4],"counts":[2]}"#;
-        assert_eq!(from_json(clamped).unwrap().state.t, 1.0);
+        assert_eq!(from_json(clamped).unwrap().state.t(), 1.0);
     }
 
     #[test]
@@ -234,7 +234,7 @@ mod tests {
         save(&path, &s1, "kripke", 0.8, 0.2).unwrap();
         save(&path, &s2, "kripke", 0.8, 0.2).unwrap();
         let cp = load(&path).unwrap();
-        assert_eq!(cp.state.counts, s2.counts, "second write must win");
+        assert_eq!(cp.state.counts(), s2.counts(), "second write must win");
         let leftovers = std::fs::read_dir(&dir)
             .unwrap()
             .filter_map(|e| e.ok())
@@ -251,28 +251,28 @@ mod tests {
         let s = populated(12, 200);
         let d = discounted(&s, 1.0);
         for i in 0..12 {
-            if s.counts[i] > 0.0 {
-                assert!((d.counts[i] - s.counts[i]).abs() < 1e-12);
-                assert!((d.tau_sum[i] - s.tau_sum[i]).abs() < 1e-9);
-                assert!((d.rho_sum[i] - s.rho_sum[i]).abs() < 1e-9);
+            if s.counts()[i] > 0.0 {
+                assert!((d.counts()[i] - s.counts()[i]).abs() < 1e-12);
+                assert!((d.tau_sum()[i] - s.tau_sum()[i]).abs() < 1e-9);
+                assert!((d.rho_sum()[i] - s.rho_sum()[i]).abs() < 1e-9);
             } else {
-                assert_eq!(d.counts[i], 0.0);
+                assert_eq!(d.counts()[i], 0.0);
             }
         }
     }
 
     #[test]
     fn discount_never_revives_unpulled_arms() {
-        let mut s = RewardState::new(6);
+        let mut s = ArmStats::new(6);
         s.observe(2, 1.0, 2.0);
         s.observe(4, 3.0, 2.0);
         let d = discounted(&s, 0.3);
         for i in [0usize, 1, 3, 5] {
-            assert_eq!(d.counts[i], 0.0);
-            assert_eq!(d.tau_sum[i], 0.0);
+            assert_eq!(d.counts()[i], 0.0);
+            assert_eq!(d.tau_sum()[i], 0.0);
         }
         // t is rebuilt from the retained counts.
-        assert!((d.t - (d.counts.iter().sum::<f64>() + 1.0)).abs() < 1e-12);
+        assert!((d.t() - (d.total_pulls() + 1.0)).abs() < 1e-12);
     }
 
     #[test]
@@ -280,12 +280,12 @@ mod tests {
         let s = populated(10, 300);
         let d = discounted(&s, 0.1);
         for i in 0..10 {
-            if s.counts[i] > 0.0 {
-                let m1 = s.tau_sum[i] / s.counts[i];
-                let m2 = d.tau_sum[i] / d.counts[i];
+            if s.counts()[i] > 0.0 {
+                let m1 = s.mean_tau()[i];
+                let m2 = d.mean_tau()[i];
                 assert!((m1 - m2).abs() < 1e-12);
-                assert!(d.counts[i] <= s.counts[i]);
-                assert!(d.counts[i] >= 1.0);
+                assert!(d.counts()[i] <= s.counts()[i]);
+                assert!(d.counts()[i] >= 1.0);
             }
         }
     }
@@ -309,7 +309,7 @@ mod tests {
             let m = device.run(&app.workload(arm, device.fidelity()));
             cold.update(arm, m.time_s, m.power_w);
         }
-        let prior = cold.state().clone();
+        let prior = cold.stats().clone();
 
         // Phase 2 (new input size q=0.5): cold vs warm with a small budget.
         let sweep: Vec<f64> = app
@@ -323,7 +323,7 @@ mod tests {
 
         // Budget smaller than k: a cold start cannot even finish the UCB
         // init sweep, a warm start exploits prior knowledge immediately.
-        let run_phase2 = |state: Option<RewardState>| -> f64 {
+        let run_phase2 = |state: Option<ArmStats>| -> f64 {
             let mut tuner = UcbTuner::new(k, 1.0, 0.0);
             if let Some(s) = state {
                 tuner = tuner.with_state(s);

@@ -1,6 +1,17 @@
-//! Reward bookkeeping (paper Alg. 1 lines 1-2, Eq. 5) and the score
-//! backend abstraction shared by the pure-rust and PJRT implementations.
+//! Score kernels over the shared [`ArmStats`] core (paper Eq. 2, Eq. 5)
+//! and the score-backend abstraction shared by the pure-rust and PJRT
+//! implementations.
+//!
+//! Two flavours of every kernel exist:
+//!
+//! * `*_into` — the hot-path form: reads the core's cached per-arm means,
+//!   writes into a caller-provided buffer (in practice a policy's
+//!   [`Scratch`]), allocates nothing;
+//! * the allocating form (`weighted_rewards`, `ucb_scores`) — the
+//!   reference pipeline over plain slices, used by the offline experiment
+//!   drivers and as the equivalence oracle for the fused kernels.
 
+use super::core::{ArmStats, Scratch};
 use anyhow::Result;
 
 /// Reward assigned to never-pulled arms by the UCB kernel (must match
@@ -19,107 +30,93 @@ pub const MINMAX_EPS: f64 = 1e-9;
 /// paper's observed convergence speeds (DESIGN.md §Calibration).
 pub const DEFAULT_EXPLORATION: f64 = 0.25;
 
-/// Running per-arm sufficient statistics: Στ, Σρ, N.
-#[derive(Debug, Clone)]
-pub struct RewardState {
-    pub tau_sum: Vec<f64>,
-    pub rho_sum: Vec<f64>,
-    pub counts: Vec<f64>,
-    /// Iteration counter `t` (1-based, incremented per update).
-    pub t: f64,
+/// Raw-reward extrema produced by the shared pass over [`ArmStats`].
+struct RawExtrema {
+    lo: f64,
+    range: f64,
 }
 
-impl RewardState {
-    pub fn new(k: usize) -> Self {
-        RewardState {
-            tau_sum: vec![0.0; k],
-            rho_sum: vec![0.0; k],
-            counts: vec![0.0; k],
-            t: 1.0,
+/// Passes 1-2 of the fused pipeline: per-arm fill means + mean extrema,
+/// then raw Eq. 5 rewards into `out`. Shared by [`weighted_rewards_into`]
+/// and [`ScalarBackend::lasp_step`] so both produce bit-identical rewards.
+fn raw_rewards_into(stats: &ArmStats, alpha: f64, beta: f64, out: &mut [f64]) -> RawExtrema {
+    let k = stats.k();
+    debug_assert_eq!(out.len(), k);
+    let counts = stats.counts();
+    let mean_tau = stats.mean_tau();
+    let mean_rho = stats.mean_rho();
+
+    // Pass 1: fill value + mean extrema over pulled arms (cached means —
+    // the core keeps `mean_* = *_sum / counts` current on every observe).
+    let mut fill_tau = 0.0;
+    let mut fill_rho = 0.0;
+    let mut pulled = 0.0f64;
+    let mut tau_lo = f64::INFINITY;
+    let mut tau_hi = f64::NEG_INFINITY;
+    let mut rho_lo = f64::INFINITY;
+    let mut rho_hi = f64::NEG_INFINITY;
+    for i in 0..k {
+        if counts[i] > 0.0 {
+            let mt = mean_tau[i];
+            let mr = mean_rho[i];
+            fill_tau += mt;
+            fill_rho += mr;
+            pulled += 1.0;
+            tau_lo = tau_lo.min(mt);
+            tau_hi = tau_hi.max(mt);
+            rho_lo = rho_lo.min(mr);
+            rho_hi = rho_hi.max(mr);
         }
     }
-
-    pub fn k(&self) -> usize {
-        self.counts.len()
+    let denom = pulled.max(1.0);
+    let fill_tau = fill_tau / denom;
+    let fill_rho = fill_rho / denom;
+    if pulled == 0.0 {
+        // Degenerate: nothing observed; fill value defines the range.
+        tau_lo = fill_tau;
+        tau_hi = fill_tau;
+        rho_lo = fill_rho;
+        rho_hi = fill_rho;
     }
+    // Unpulled arms carry the fill mean, which lies inside [lo, hi]
+    // whenever pulled > 0, so the extrema above are already final.
+    let tau_range = (tau_hi - tau_lo).max(MINMAX_EPS);
+    let rho_range = (rho_hi - rho_lo).max(MINMAX_EPS);
 
-    /// Record one measurement for `arm`.
-    pub fn observe(&mut self, arm: usize, time_s: f64, power_w: f64) {
-        self.tau_sum[arm] += time_s;
-        self.rho_sum[arm] += power_w;
-        self.counts[arm] += 1.0;
-        self.t += 1.0;
+    // Pass 2: raw Eq. 5 rewards into the output buffer + raw extrema.
+    let mut raw_lo = f64::INFINITY;
+    let mut raw_hi = f64::NEG_INFINITY;
+    for i in 0..k {
+        let (mt, mr) = if counts[i] > 0.0 {
+            (mean_tau[i], mean_rho[i])
+        } else {
+            (fill_tau, fill_rho)
+        };
+        let tau_hat = (mt - tau_lo) / tau_range;
+        let rho_hat = (mr - rho_lo) / rho_range;
+        let raw = alpha / (tau_hat + REWARD_EPS) + beta / (rho_hat + REWARD_EPS);
+        out[i] = raw;
+        raw_lo = raw_lo.min(raw);
+        raw_hi = raw_hi.max(raw);
     }
+    RawExtrema { lo: raw_lo, range: (raw_hi - raw_lo).max(MINMAX_EPS) }
+}
 
-    /// Per-arm mean execution times with unpulled arms filled neutrally
-    /// (the mean over pulled arms), mirroring `model.py::reward_norm`.
-    pub fn filled_means(&self) -> (Vec<f64>, Vec<f64>) {
-        let k = self.k();
-        let mut mean_tau = vec![0.0; k];
-        let mut mean_rho = vec![0.0; k];
-        let mut fill_tau = 0.0;
-        let mut fill_rho = 0.0;
-        let mut pulled = 0.0f64;
-        for i in 0..k {
-            if self.counts[i] > 0.0 {
-                mean_tau[i] = self.tau_sum[i] / self.counts[i];
-                mean_rho[i] = self.rho_sum[i] / self.counts[i];
-                fill_tau += mean_tau[i];
-                fill_rho += mean_rho[i];
-                pulled += 1.0;
-            }
-        }
-        let denom = pulled.max(1.0);
-        let (fill_tau, fill_rho) = (fill_tau / denom, fill_rho / denom);
-        for i in 0..k {
-            if self.counts[i] == 0.0 {
-                mean_tau[i] = fill_tau;
-                mean_rho[i] = fill_rho;
-            }
-        }
-        (mean_tau, mean_rho)
+/// Eq. 5 weighted rewards over the core's (fill-completed) means,
+/// re-normalized to [0, 1], written into `out` (`out.len() == stats.k()`).
+/// Allocation-free; equivalent to
+/// `weighted_rewards(&stats.filled_means()...)` bit for bit.
+pub fn weighted_rewards_into(stats: &ArmStats, alpha: f64, beta: f64, out: &mut [f64]) {
+    let raw = raw_rewards_into(stats, alpha, beta, out);
+    for r in out.iter_mut() {
+        *r = (*r - raw.lo) / raw.range;
     }
 }
 
-/// Output of one fused scoring step.
-#[derive(Debug, Clone)]
-pub struct StepOutput {
-    /// Eq. 3: arm with the highest UCB score.
-    pub best: usize,
-    /// Its UCB score.
-    pub score: f64,
-    /// Eq. 5 rewards for all arms (normalized to `[0, 1]`).
-    pub rewards: Vec<f64>,
-}
-
-/// The per-iteration scoring hot path: reward normalization (Eq. 5) +
-/// UCB scores (Eq. 2) + argmax (Eq. 3). Implemented by [`ScalarBackend`]
-/// (pure rust) and [`crate::runtime::Engine`] (AOT PJRT artifact).
-pub trait ScoreBackend: Send {
-    fn lasp_step(
-        &mut self,
-        state: &RewardState,
-        alpha: f64,
-        beta: f64,
-        exploration: f64,
-    ) -> Result<StepOutput>;
-
-    /// Backend name for reports.
-    fn backend_name(&self) -> &'static str;
-}
-
-/// Pure-rust reference backend, semantically identical to the lowered
-/// `lasp_step` artifact (differential-tested in `rust/tests/`).
-#[derive(Debug, Default, Clone)]
-pub struct ScalarBackend;
-
-/// Eq. 5 weighted reward over filled per-arm means, re-normalized to [0,1].
-pub fn weighted_rewards(
-    mean_tau: &[f64],
-    mean_rho: &[f64],
-    alpha: f64,
-    beta: f64,
-) -> Vec<f64> {
+/// Eq. 5 weighted reward over explicit per-arm means, re-normalized to
+/// [0, 1]. Reference/offline form (allocates); the experiment drivers use
+/// it to build regret oracles from sweeps.
+pub fn weighted_rewards(mean_tau: &[f64], mean_rho: &[f64], alpha: f64, beta: f64) -> Vec<f64> {
     let tau_hat = minmax_eps(mean_tau);
     let rho_hat = minmax_eps(mean_rho);
     let raw: Vec<f64> = tau_hat
@@ -137,102 +134,90 @@ fn minmax_eps(xs: &[f64]) -> Vec<f64> {
     xs.iter().map(|x| (x - lo) / range).collect()
 }
 
-/// Eq. 2 scores for all arms (with exploration coefficient `c`).
-pub fn ucb_scores(rewards: &[f64], counts: &[f64], t: f64, c: f64) -> Vec<f64> {
+/// Eq. 2 scores for all arms into `out` (`out.len() == rewards.len()`),
+/// with exploration coefficient `c`. Allocation-free.
+pub fn ucb_scores_into(rewards: &[f64], counts: &[f64], t: f64, c: f64, out: &mut [f64]) {
+    debug_assert_eq!(rewards.len(), counts.len());
+    debug_assert_eq!(rewards.len(), out.len());
     let log_t = t.max(1.0).ln();
-    rewards
-        .iter()
-        .zip(counts)
-        .map(|(r, n)| {
-            if *n > 0.0 {
-                r + c * (2.0 * log_t / n.max(1.0)).sqrt()
-            } else {
-                UNPULLED_SCORE
-            }
-        })
-        .collect()
+    for i in 0..rewards.len() {
+        out[i] = if counts[i] > 0.0 {
+            rewards[i] + c * (2.0 * log_t / counts[i].max(1.0)).sqrt()
+        } else {
+            UNPULLED_SCORE
+        };
+    }
 }
 
-impl ScoreBackend for ScalarBackend {
-    /// Fused single-buffer implementation of the reference pipeline
-    /// `filled_means → weighted_rewards → ucb_scores → argmax`
-    /// (§Perf: 3 passes and one allocation instead of 9 passes and 7 —
-    /// see EXPERIMENTS.md §Perf for before/after; equivalence is asserted
-    /// by `fused_step_matches_reference_pipeline` below and the PJRT
-    /// differential tests).
+/// Eq. 2 scores for all arms (reference/offline form — allocates).
+pub fn ucb_scores(rewards: &[f64], counts: &[f64], t: f64, c: f64) -> Vec<f64> {
+    let mut out = vec![0.0; rewards.len()];
+    ucb_scores_into(rewards, counts, t, c, &mut out);
+    out
+}
+
+/// Result of one fused scoring step. The Eq. 5 rewards land in the
+/// caller's [`Scratch::rewards`] instead of a fresh allocation.
+#[derive(Debug, Clone, Copy)]
+pub struct Step {
+    /// Eq. 3: arm with the highest UCB score.
+    pub best: usize,
+    /// Its UCB score.
+    pub score: f64,
+}
+
+/// The per-iteration scoring hot path: reward normalization (Eq. 5) +
+/// UCB scores (Eq. 2) + argmax (Eq. 3). Implemented by [`ScalarBackend`]
+/// (pure rust) and the AOT PJRT artifact
+/// ([`crate::runtime::PjrtScoreBackend`]). Implementations must leave the
+/// normalized rewards in `scratch.rewards` and are expected to be
+/// allocation-free once the scratch reaches `stats.k()` elements.
+pub trait ScoreBackend: Send {
     fn lasp_step(
         &mut self,
-        state: &RewardState,
+        stats: &ArmStats,
         alpha: f64,
         beta: f64,
         exploration: f64,
-    ) -> Result<StepOutput> {
-        let k = state.k();
-        let counts = &state.counts;
+        scratch: &mut Scratch,
+    ) -> Result<Step>;
 
-        // Pass 1: per-arm means (pulled only) + fill value + mean extrema.
-        let mut fill_tau = 0.0;
-        let mut fill_rho = 0.0;
-        let mut pulled = 0.0f64;
-        let mut tau_lo = f64::INFINITY;
-        let mut tau_hi = f64::NEG_INFINITY;
-        let mut rho_lo = f64::INFINITY;
-        let mut rho_hi = f64::NEG_INFINITY;
-        for i in 0..k {
-            if counts[i] > 0.0 {
-                let mt = state.tau_sum[i] / counts[i];
-                let mr = state.rho_sum[i] / counts[i];
-                fill_tau += mt;
-                fill_rho += mr;
-                pulled += 1.0;
-                tau_lo = tau_lo.min(mt);
-                tau_hi = tau_hi.max(mt);
-                rho_lo = rho_lo.min(mr);
-                rho_hi = rho_hi.max(mr);
-            }
-        }
-        let denom = pulled.max(1.0);
-        let fill_tau = fill_tau / denom;
-        let fill_rho = fill_rho / denom;
-        if pulled == 0.0 {
-            // Degenerate: nothing observed; fill value defines the range.
-            tau_lo = fill_tau;
-            tau_hi = fill_tau;
-            rho_lo = fill_rho;
-            rho_hi = fill_rho;
-        } else {
-            // Unpulled arms carry the fill mean: it is inside [lo, hi]
-            // already when pulled > 0, so extrema are unchanged.
-        }
-        let tau_range = (tau_hi - tau_lo).max(MINMAX_EPS);
-        let rho_range = (rho_hi - rho_lo).max(MINMAX_EPS);
+    /// Backend name for reports.
+    fn backend_name(&self) -> &'static str;
+}
 
-        // Pass 2: raw Eq. 5 rewards into the output buffer + raw extrema.
-        let mut rewards = vec![0.0f64; k];
-        let mut raw_lo = f64::INFINITY;
-        let mut raw_hi = f64::NEG_INFINITY;
-        for i in 0..k {
-            let (mt, mr) = if counts[i] > 0.0 {
-                (state.tau_sum[i] / counts[i], state.rho_sum[i] / counts[i])
-            } else {
-                (fill_tau, fill_rho)
-            };
-            let tau_hat = (mt - tau_lo) / tau_range;
-            let rho_hat = (mr - rho_lo) / rho_range;
-            let raw = alpha / (tau_hat + REWARD_EPS) + beta / (rho_hat + REWARD_EPS);
-            rewards[i] = raw;
-            raw_lo = raw_lo.min(raw);
-            raw_hi = raw_hi.max(raw);
-        }
-        let raw_range = (raw_hi - raw_lo).max(MINMAX_EPS);
+/// Pure-rust reference backend, semantically identical to the lowered
+/// `lasp_step` artifact (differential-tested in `rust/tests/`).
+#[derive(Debug, Default, Clone)]
+pub struct ScalarBackend;
+
+impl ScoreBackend for ScalarBackend {
+    /// Fused zero-allocation implementation of the reference pipeline
+    /// `filled_means → weighted_rewards → ucb_scores → argmax`
+    /// (3 passes, no allocations, rewards left in `scratch.rewards`;
+    /// equivalence is asserted by `fused_step_matches_reference_pipeline`
+    /// below and the PJRT differential tests).
+    fn lasp_step(
+        &mut self,
+        stats: &ArmStats,
+        alpha: f64,
+        beta: f64,
+        exploration: f64,
+        scratch: &mut Scratch,
+    ) -> Result<Step> {
+        let k = stats.k();
+        scratch.ensure_rewards(k);
+        let rewards = &mut scratch.rewards[..k];
+        let raw = raw_rewards_into(stats, alpha, beta, rewards);
 
         // Pass 3: normalize rewards in place + UCB score + running argmax.
-        let log_t = state.t.max(1.0).ln();
+        let counts = stats.counts();
+        let log_t = stats.t().max(1.0).ln();
         let bonus_base = 2.0 * log_t;
         let mut best = 0usize;
         let mut best_score = f64::NEG_INFINITY;
         for i in 0..k {
-            let r = (rewards[i] - raw_lo) / raw_range;
+            let r = (rewards[i] - raw.lo) / raw.range;
             rewards[i] = r;
             let score = if counts[i] > 0.0 {
                 r + exploration * (bonus_base / counts[i]).sqrt()
@@ -244,7 +229,7 @@ impl ScoreBackend for ScalarBackend {
                 best = i;
             }
         }
-        Ok(StepOutput { best, score: best_score, rewards })
+        Ok(Step { best, score: best_score })
     }
 
     fn backend_name(&self) -> &'static str {
@@ -257,25 +242,10 @@ mod tests {
     use super::*;
     use crate::util::stats;
 
-    #[test]
-    fn observe_accumulates() {
-        let mut s = RewardState::new(3);
-        s.observe(1, 2.0, 5.0);
-        s.observe(1, 4.0, 7.0);
-        assert_eq!(s.tau_sum[1], 6.0);
-        assert_eq!(s.rho_sum[1], 12.0);
-        assert_eq!(s.counts[1], 2.0);
-        assert_eq!(s.t, 3.0);
-    }
-
-    #[test]
-    fn filled_means_neutral_for_unpulled() {
-        let mut s = RewardState::new(3);
-        s.observe(0, 2.0, 4.0);
-        s.observe(1, 4.0, 8.0);
-        let (mt, mr) = s.filled_means();
-        assert_eq!(mt, vec![2.0, 4.0, 3.0]); // arm 2 filled with mean(2,4)
-        assert_eq!(mr, vec![4.0, 8.0, 6.0]);
+    fn step(s: &ArmStats, alpha: f64, beta: f64, c: f64) -> (Step, Vec<f64>) {
+        let mut scratch = Scratch::new();
+        let out = ScalarBackend.lasp_step(s, alpha, beta, c, &mut scratch).unwrap();
+        (out, scratch.rewards)
     }
 
     #[test]
@@ -297,26 +267,52 @@ mod tests {
     }
 
     #[test]
+    fn into_kernels_match_reference_forms() {
+        let mut rng = crate::util::Rng::new(41);
+        for _ in 0..100 {
+            let k = 2 + rng.below(120);
+            let mut s = ArmStats::new(k);
+            for _ in 0..rng.below(400) {
+                s.observe(rng.below(k), rng.range(0.05, 9.0), rng.range(0.5, 12.0));
+            }
+            let (alpha, beta) = (rng.uniform(), rng.uniform());
+            let (mt, mr) = s.filled_means();
+            let reference = weighted_rewards(&mt, &mr, alpha, beta);
+            let mut fused = vec![0.0; k];
+            weighted_rewards_into(&s, alpha, beta, &mut fused);
+            for (a, b) in fused.iter().zip(&reference) {
+                assert!((a - b).abs() < 1e-12, "weighted_rewards_into drifted: {a} vs {b}");
+            }
+            let t = s.t();
+            let mut scores = vec![0.0; k];
+            ucb_scores_into(&fused, s.counts(), t, 0.25, &mut scores);
+            for (a, b) in scores.iter().zip(&ucb_scores(&reference, s.counts(), t, 0.25)) {
+                assert!((a - b).abs() < 1e-12, "ucb_scores_into drifted: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
     fn scalar_backend_selects_unpulled_first() {
-        let mut s = RewardState::new(4);
+        let mut s = ArmStats::new(4);
         s.observe(0, 1.0, 1.0);
         s.observe(1, 1.0, 1.0);
-        let out = ScalarBackend.lasp_step(&s, 0.8, 0.2, 1.0).unwrap();
+        let (out, _) = step(&s, 0.8, 0.2, 1.0);
         assert!(out.best == 2 || out.best == 3);
         assert_eq!(out.score, UNPULLED_SCORE);
     }
 
     #[test]
     fn scalar_backend_exploits_best_arm() {
-        let mut s = RewardState::new(3);
+        let mut s = ArmStats::new(3);
         for _ in 0..500 {
             s.observe(0, 5.0, 5.0);
             s.observe(1, 1.0, 5.0); // fastest
             s.observe(2, 3.0, 5.0);
         }
-        let out = ScalarBackend.lasp_step(&s, 1.0, 0.0, 1.0).unwrap();
+        let (out, rewards) = step(&s, 1.0, 0.0, 1.0);
         assert_eq!(out.best, 1);
-        assert_eq!(stats::argmax(&out.rewards), 1);
+        assert_eq!(stats::argmax(&rewards), 1);
     }
 
     #[test]
@@ -324,21 +320,22 @@ mod tests {
         // The optimized lasp_step must equal the composed reference
         // functions bit-for-bit-ish across many random states.
         let mut rng = crate::util::Rng::new(5);
+        let mut scratch = Scratch::new();
         for trial in 0..200 {
             let k = 2 + rng.below(300);
-            let mut s = RewardState::new(k);
+            let mut s = ArmStats::new(k);
             for _ in 0..rng.below(1000) {
                 s.observe(rng.below(k), rng.range(0.05, 9.0), rng.range(0.5, 12.0));
             }
             let (alpha, beta, c) = (rng.uniform(), rng.uniform(), rng.range(0.01, 1.5));
-            let fused = ScalarBackend.lasp_step(&s, alpha, beta, c).unwrap();
+            let fused = ScalarBackend.lasp_step(&s, alpha, beta, c, &mut scratch).unwrap();
             let (mt, mr) = s.filled_means();
             let rewards = weighted_rewards(&mt, &mr, alpha, beta);
-            let scores = ucb_scores(&rewards, &s.counts, s.t, c);
+            let scores = ucb_scores(&rewards, s.counts(), s.t(), c);
             let best = stats::argmax(&scores);
             assert_eq!(fused.best, best, "trial {trial}");
             assert!((fused.score - scores[best]).abs() < 1e-12, "trial {trial}");
-            for (a, b) in fused.rewards.iter().zip(&rewards) {
+            for (a, b) in scratch.rewards[..k].iter().zip(&rewards) {
                 assert!((a - b).abs() < 1e-12, "trial {trial}");
             }
         }
@@ -346,14 +343,14 @@ mod tests {
 
     #[test]
     fn alpha_beta_tradeoff() {
-        let mut s = RewardState::new(2);
+        let mut s = ArmStats::new(2);
         for _ in 0..100 {
             s.observe(0, 1.0, 10.0); // fast, hungry
             s.observe(1, 2.0, 5.0); // slow, frugal
         }
-        let time_focus = ScalarBackend.lasp_step(&s, 1.0, 0.0, 1.0).unwrap();
-        let power_focus = ScalarBackend.lasp_step(&s, 0.0, 1.0, 1.0).unwrap();
-        assert_eq!(stats::argmax(&time_focus.rewards), 0);
-        assert_eq!(stats::argmax(&power_focus.rewards), 1);
+        let (_, time_rewards) = step(&s, 1.0, 0.0, 1.0);
+        let (_, power_rewards) = step(&s, 0.0, 1.0, 1.0);
+        assert_eq!(stats::argmax(&time_rewards), 0);
+        assert_eq!(stats::argmax(&power_rewards), 1);
     }
 }

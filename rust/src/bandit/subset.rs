@@ -10,6 +10,7 @@
 //! the budget and run full LASP over it. Pull counts are reported in the
 //! full space so Eq. 4 output and downstream metrics are unchanged.
 
+use super::core::ArmStats;
 use super::ucb::UcbTuner;
 use super::Policy;
 use crate::util::Rng;
@@ -52,11 +53,7 @@ impl SubsetTuner {
 
     /// Builder: exploration coefficient of the inner UCB.
     pub fn with_exploration(mut self, c: f64) -> Self {
-        self.inner = std::mem::replace(
-            &mut self.inner,
-            UcbTuner::new(1, 1.0, 0.0),
-        )
-        .with_exploration(c);
+        self.inner.set_exploration(c);
         self
     }
 
@@ -75,24 +72,25 @@ impl SubsetTuner {
         self.positions.get(&arm).copied()
     }
 
-    /// Builder: warm-start the inner tuner from a *subset-space* prior
-    /// (e.g. a [`super::persist`] checkpoint of this tuner's
-    /// `reward_state`). The caller must rebuild the tuner with the same
-    /// candidate list — in practice the same draw seed — so positions line
-    /// up. The prior counts are also projected into the full-space Eq. 4
-    /// view so `most_selected` survives a restart.
-    pub fn with_prior_state(mut self, state: super::reward::RewardState) -> Self {
-        assert_eq!(
-            state.k(),
-            self.candidates.len(),
-            "subset warm-start size mismatch"
-        );
-        for (pos, &full) in self.candidates.iter().enumerate() {
-            self.full_counts[full] = state.counts[pos];
-        }
-        self.inner = std::mem::replace(&mut self.inner, UcbTuner::new(1, 1.0, 0.0))
-            .with_state(state);
+    /// Builder form of [`Policy::warm_start`] (subset-space prior).
+    pub fn with_prior_state(mut self, stats: ArmStats) -> Self {
+        self.warm_start(stats);
         self
+    }
+
+    /// Project a *full-space* prior (e.g. a fleet prior aggregated across
+    /// nodes whose sessions drew different candidate subsets) onto this
+    /// tuner's candidates, producing a subset-space [`ArmStats`] that
+    /// [`Policy::warm_start`] accepts.
+    pub fn project_full_prior(&self, full: &ArmStats) -> ArmStats {
+        assert_eq!(full.k(), self.full_counts.len(), "full-space prior size mismatch");
+        let mut sub = ArmStats::new(self.candidates.len());
+        for (pos, &arm) in self.candidates.iter().enumerate() {
+            if full.counts()[arm] > 0.0 {
+                sub.set_arm(pos, full.counts()[arm], full.tau_sum()[arm], full.rho_sum()[arm]);
+            }
+        }
+        sub
     }
 
     /// Recommended subset size for a `k`-arm space under `iterations`
@@ -128,9 +126,31 @@ impl Policy for SubsetTuner {
         "lasp-ucb1-subset"
     }
 
-    fn reward_state(&self) -> Option<&crate::bandit::RewardState> {
-        // Subset-local state (positions are subset indices).
-        self.inner.reward_state()
+    fn stats(&self) -> &ArmStats {
+        // Subset-local core (positions are subset indices).
+        self.inner.stats()
+    }
+
+    /// Warm-start the inner tuner from a *subset-space* prior (e.g. a
+    /// [`super::persist`] checkpoint of this tuner's core). The caller
+    /// must rebuild the tuner with the same candidate list — in practice
+    /// the same draw seed — so positions line up. The prior counts are
+    /// also projected into the full-space Eq. 4 view so `most_selected`
+    /// survives a restart.
+    fn warm_start(&mut self, prior: ArmStats) {
+        assert_eq!(
+            prior.k(),
+            self.candidates.len(),
+            "subset warm-start size mismatch"
+        );
+        for (pos, &full) in self.candidates.iter().enumerate() {
+            self.full_counts[full] = prior.counts()[pos];
+        }
+        self.inner.warm_start(prior);
+    }
+
+    fn scratch_growths(&self) -> u64 {
+        self.inner.scratch_growths()
     }
 }
 
@@ -194,7 +214,7 @@ mod tests {
             t.update(arm, time, 5.0);
         }
         let best = t.most_selected();
-        let state = t.reward_state().unwrap().clone();
+        let state = t.stats().clone();
 
         let rebuilt = SubsetTuner::new(10_000, 64, 1.0, 0.0, 123).with_prior_state(state);
         assert_eq!(rebuilt.candidates(), t.candidates());
@@ -208,9 +228,26 @@ mod tests {
     }
 
     #[test]
+    fn full_space_prior_projects_onto_candidates() {
+        let t = SubsetTuner::new(1_000, 16, 1.0, 0.0, 5);
+        let mut full = ArmStats::new(1_000);
+        for arm in 0..1_000 {
+            full.observe(arm, 1.0 + (arm % 7) as f64, 5.0);
+        }
+        let sub = t.project_full_prior(&full);
+        assert_eq!(sub.k(), 16);
+        for (pos, &arm) in t.candidates().iter().enumerate() {
+            assert_eq!(sub.counts()[pos], 1.0);
+            assert_eq!(sub.mean_tau()[pos], 1.0 + (arm % 7) as f64);
+        }
+        let warmed = t.with_prior_state(sub);
+        assert_eq!(warmed.total_pulls(), 16.0);
+    }
+
+    #[test]
     #[should_panic]
     fn warm_start_size_mismatch_panics() {
-        let state = crate::bandit::RewardState::new(32);
+        let state = ArmStats::new(32);
         let _ = SubsetTuner::new(1000, 16, 1.0, 0.0, 1).with_prior_state(state);
     }
 

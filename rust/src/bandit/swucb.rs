@@ -6,39 +6,46 @@
 //! reward distribution shift is forgotten after one window. This is the
 //! "future work: adaptive algorithms" direction made concrete, exercised by
 //! the mode-switch ablation bench.
+//!
+//! A thin strategy layer over the shared [`ArmStats`] core: the core holds
+//! the *windowed* sufficient statistics (kept incrementally via
+//! `observe`/`unobserve`), while lifetime pull counts — the Eq. 4 view —
+//! live beside it with their own O(1) cached total.
 
-use super::reward::{ucb_scores, weighted_rewards, RewardState, DEFAULT_EXPLORATION};
+use super::core::{ArmStats, Scratch};
+use super::reward::{ucb_scores_into, weighted_rewards_into, DEFAULT_EXPLORATION};
 use super::Policy;
 use crate::util::stats;
 use std::collections::VecDeque;
 
 /// UCB1 over a sliding window of the most recent observations.
 pub struct SlidingWindowUcb {
-    k: usize,
     alpha: f64,
     beta: f64,
     window: usize,
     /// (arm, time, power) of the most recent `window` pulls.
     history: VecDeque<(usize, f64, f64)>,
     /// Windowed sufficient statistics, kept incrementally.
-    state: RewardState,
+    stats: ArmStats,
     /// Lifetime pull counts (Eq. 4 output still uses all history).
     lifetime_counts: Vec<f64>,
-    t: f64,
+    /// Cached lifetime total (O(1) `total_pulls`).
+    lifetime_total: f64,
+    scratch: Scratch,
 }
 
 impl SlidingWindowUcb {
     pub fn new(k: usize, alpha: f64, beta: f64, window: usize) -> Self {
         assert!(window >= k, "window must cover at least one pull per arm");
         SlidingWindowUcb {
-            k,
             alpha,
             beta,
             window,
             history: VecDeque::with_capacity(window + 1),
-            state: RewardState::new(k),
+            stats: ArmStats::new(k),
             lifetime_counts: vec![0.0; k],
-            t: 1.0,
+            lifetime_total: 0.0,
+            scratch: Scratch::new(),
         }
     }
 
@@ -47,8 +54,64 @@ impl SlidingWindowUcb {
         self.window
     }
 
-    /// Builder: warm-start from a prior reward state (see
-    /// [`super::persist`]) by replaying each arm's mean into the window as
+    /// Builder form of [`Policy::warm_start`].
+    pub fn with_prior(mut self, prior: ArmStats) -> Self {
+        self.warm_start(prior);
+        self
+    }
+}
+
+impl Policy for SlidingWindowUcb {
+    fn k(&self) -> usize {
+        self.stats.k()
+    }
+
+    fn select(&mut self) -> usize {
+        // Arms absent from the current window are "unpulled": retried.
+        if let Some(arm) = self.stats.counts().iter().position(|&c| c == 0.0) {
+            return arm;
+        }
+        self.scratch.ensure(self.stats.k());
+        weighted_rewards_into(&self.stats, self.alpha, self.beta, &mut self.scratch.rewards);
+        // Windowed t: bonus uses the window size, not lifetime.
+        let t_eff = (self.history.len() as f64).max(1.0);
+        let (rewards, scores) = self.scratch.rewards_scores_mut();
+        ucb_scores_into(rewards, self.stats.counts(), t_eff, DEFAULT_EXPLORATION, scores);
+        stats::argmax(scores)
+    }
+
+    fn update(&mut self, arm: usize, time_s: f64, power_w: f64) {
+        self.history.push_back((arm, time_s, power_w));
+        self.stats.observe(arm, time_s, power_w);
+        self.lifetime_counts[arm] += 1.0;
+        self.lifetime_total += 1.0;
+        if self.history.len() > self.window {
+            let (old_arm, old_t, old_p) = self.history.pop_front().unwrap();
+            // `unobserve` guards accumulated fp error at zero.
+            self.stats.unobserve(old_arm, old_t, old_p);
+        }
+    }
+
+    fn counts(&self) -> &[f64] {
+        &self.lifetime_counts
+    }
+
+    fn total_pulls(&self) -> f64 {
+        self.lifetime_total
+    }
+
+    fn name(&self) -> &'static str {
+        "sw-ucb"
+    }
+
+    fn stats(&self) -> &ArmStats {
+        // The *windowed* sufficient statistics: a checkpoint restores the
+        // recent view of the environment, which is exactly what SW-UCB
+        // considers current.
+        &self.stats
+    }
+
+    /// Warm-start by replaying each arm's prior mean into the window as
     /// synthetic observations. Going through the history deque (rather
     /// than poking the sums directly) preserves the eviction invariant:
     /// every unit of windowed state has a history entry that will
@@ -57,89 +120,32 @@ impl SlidingWindowUcb {
     /// every arm's replay count is scaled down *proportionally* (with a
     /// floor of one entry per pulled arm), so no arm loses its prior just
     /// because of its index.
-    pub fn with_prior(mut self, prior: &RewardState) -> Self {
-        assert_eq!(prior.k(), self.k, "warm-start arm count mismatch");
-        let total: f64 = prior.counts.iter().filter(|&&c| c > 0.0).sum();
+    fn warm_start(&mut self, prior: ArmStats) {
+        assert_eq!(prior.k(), self.stats.k(), "warm-start arm count mismatch");
+        let total = prior.total_pulls();
         if total <= 0.0 {
-            return self;
+            return;
         }
         let scale = (self.window as f64 / total).min(1.0);
-        for arm in 0..self.k {
-            if prior.counts[arm] <= 0.0 {
+        for arm in 0..prior.k() {
+            let Some((mean_tau, mean_rho)) = prior.means_of(arm) else {
                 continue;
-            }
-            let n = ((prior.counts[arm] * scale).round() as usize).max(1);
-            let mean_tau = prior.tau_sum[arm] / prior.counts[arm];
-            let mean_rho = prior.rho_sum[arm] / prior.counts[arm];
+            };
+            let n = ((prior.counts()[arm] * scale).round() as usize).max(1);
             for _ in 0..n {
                 if self.history.len() >= self.window {
                     break;
                 }
                 self.history.push_back((arm, mean_tau, mean_rho));
-                self.state.tau_sum[arm] += mean_tau;
-                self.state.rho_sum[arm] += mean_rho;
-                self.state.counts[arm] += 1.0;
+                self.stats.observe(arm, mean_tau, mean_rho);
                 self.lifetime_counts[arm] += 1.0;
-                self.t += 1.0;
-            }
-        }
-        self.state.t = self.t;
-        self
-    }
-}
-
-impl Policy for SlidingWindowUcb {
-    fn k(&self) -> usize {
-        self.k
-    }
-
-    fn select(&mut self) -> usize {
-        // Arms absent from the current window are "unpulled": retried.
-        if let Some(arm) = self.state.counts.iter().position(|&c| c == 0.0) {
-            return arm;
-        }
-        let (mt, mr) = self.state.filled_means();
-        let rewards = weighted_rewards(&mt, &mr, self.alpha, self.beta);
-        // Windowed t: bonus uses the window size, not lifetime.
-        let t_eff = (self.history.len() as f64).max(1.0);
-        let scores = ucb_scores(&rewards, &self.state.counts, t_eff, DEFAULT_EXPLORATION);
-        stats::argmax(&scores)
-    }
-
-    fn update(&mut self, arm: usize, time_s: f64, power_w: f64) {
-        self.history.push_back((arm, time_s, power_w));
-        self.state.tau_sum[arm] += time_s;
-        self.state.rho_sum[arm] += power_w;
-        self.state.counts[arm] += 1.0;
-        self.lifetime_counts[arm] += 1.0;
-        self.t += 1.0;
-        if self.history.len() > self.window {
-            let (old_arm, old_t, old_p) = self.history.pop_front().unwrap();
-            self.state.tau_sum[old_arm] -= old_t;
-            self.state.rho_sum[old_arm] -= old_p;
-            self.state.counts[old_arm] -= 1.0;
-            // Guard accumulated fp error at zero.
-            if self.state.counts[old_arm] < 1e-9 {
-                self.state.counts[old_arm] = 0.0;
-                self.state.tau_sum[old_arm] = 0.0;
-                self.state.rho_sum[old_arm] = 0.0;
+                self.lifetime_total += 1.0;
             }
         }
     }
 
-    fn counts(&self) -> &[f64] {
-        &self.lifetime_counts
-    }
-
-    fn name(&self) -> &'static str {
-        "sw-ucb"
-    }
-
-    fn reward_state(&self) -> Option<&RewardState> {
-        // The *windowed* sufficient statistics: a checkpoint restores the
-        // recent view of the environment, which is exactly what SW-UCB
-        // considers current.
-        Some(&self.state)
+    fn scratch_growths(&self) -> u64 {
+        self.scratch.growths()
     }
 }
 
@@ -199,10 +205,12 @@ mod tests {
             let arm = i % 4;
             p.update(arm, 1.0 + arm as f64, 2.0);
         }
-        let window_total: f64 = p.state.counts.iter().sum();
+        let window_total: f64 = p.stats().counts().iter().sum();
         assert_eq!(window_total, 16.0);
+        assert_eq!(p.stats().total_pulls(), 16.0);
         let lifetime_total: f64 = p.counts().iter().sum();
         assert_eq!(lifetime_total, 200.0);
+        assert_eq!(p.total_pulls(), 200.0);
     }
 
     #[test]
@@ -213,16 +221,16 @@ mod tests {
 
     #[test]
     fn warm_start_replays_prior_into_window() {
-        let mut prior = RewardState::new(3);
+        let mut prior = ArmStats::new(3);
         for _ in 0..20 {
             prior.observe(0, 2.0, 4.0);
             prior.observe(1, 0.5, 4.0);
             prior.observe(2, 3.0, 4.0);
         }
-        let p = SlidingWindowUcb::new(3, 1.0, 0.0, 100).with_prior(&prior);
+        let p = SlidingWindowUcb::new(3, 1.0, 0.0, 100).with_prior(prior);
         // Replayed means match the prior exactly.
-        assert_eq!(p.state.counts, vec![20.0, 20.0, 20.0]);
-        assert!((p.state.tau_sum[1] / p.state.counts[1] - 0.5).abs() < 1e-12);
+        assert_eq!(p.stats().counts(), &[20.0, 20.0, 20.0]);
+        assert!((p.stats().mean_tau()[1] - 0.5).abs() < 1e-12);
         assert_eq!(p.history.len(), 60);
         // And the replayed entries age out like real observations.
         let mut p = p;
@@ -230,7 +238,7 @@ mod tests {
             let arm = p.select();
             p.update(arm, 1.0, 1.0);
         }
-        let window_total: f64 = p.state.counts.iter().sum();
+        let window_total: f64 = p.stats().counts().iter().sum();
         assert_eq!(window_total, 100.0);
     }
 
@@ -239,20 +247,20 @@ mod tests {
         // 1500 prior pulls into a 64-slot window: every arm keeps a share
         // proportional to its prior counts — no arm is dropped just
         // because of its index.
-        let mut prior = RewardState::new(3);
+        let mut prior = ArmStats::new(3);
         for _ in 0..500 {
             prior.observe(0, 1.0, 1.0);
             prior.observe(1, 2.0, 1.0);
             prior.observe(2, 3.0, 1.0);
         }
-        let p = SlidingWindowUcb::new(3, 1.0, 0.0, 64).with_prior(&prior);
+        let p = SlidingWindowUcb::new(3, 1.0, 0.0, 64).with_prior(prior);
         assert!(p.history.len() <= 64);
         for arm in 0..3 {
-            assert!(p.state.counts[arm] > 0.0, "arm {arm} lost its prior");
-            let mean = p.state.tau_sum[arm] / p.state.counts[arm];
+            assert!(p.stats().counts()[arm] > 0.0, "arm {arm} lost its prior");
+            let mean = p.stats().mean_tau()[arm];
             assert!((mean - (arm as f64 + 1.0)).abs() < 1e-9);
         }
         // Shares are roughly equal for equal prior counts.
-        assert!((p.state.counts[0] - p.state.counts[2]).abs() <= 1.0);
+        assert!((p.stats().counts()[0] - p.stats().counts()[2]).abs() <= 1.0);
     }
 }

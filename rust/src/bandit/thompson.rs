@@ -3,78 +3,90 @@
 //! Posterior-sampling alternative to UCB's optimism: each arm's reward mean
 //! gets a Normal posterior (known-variance model); every round samples each
 //! posterior and plays the argmax. Included to quantify the paper's choice
-//! of UCB against the other classic stochastic-bandit family.
+//! of UCB against the other classic stochastic-bandit family. A thin
+//! strategy layer over the shared [`ArmStats`] core; sampling runs through
+//! the reusable [`Scratch`], so `select()` is allocation-free once warm.
 
-use super::reward::{weighted_rewards, RewardState};
+use super::core::{ArmStats, Scratch};
+use super::reward::weighted_rewards_into;
 use super::Policy;
 use crate::util::{stats, Rng};
 
 /// Thompson sampling over the paper's Eq. 5 reward.
 pub struct ThompsonSampler {
-    state: RewardState,
+    stats: ArmStats,
     alpha: f64,
     beta: f64,
     rng: Rng,
     /// Assumed observation std-dev of the normalized reward.
     obs_std: f64,
+    scratch: Scratch,
 }
 
 impl ThompsonSampler {
     pub fn new(k: usize, alpha: f64, beta: f64, seed: u64) -> Self {
         ThompsonSampler {
-            state: RewardState::new(k),
+            stats: ArmStats::new(k),
             alpha,
             beta,
             rng: Rng::new(seed),
             obs_std: 0.25,
+            scratch: Scratch::new(),
         }
     }
 
-    /// Builder: warm-start from a prior reward state (see
-    /// [`super::persist`]). The state's arm count must match `k`; pulled
-    /// arms start with narrowed posteriors proportional to their retained
-    /// counts.
-    pub fn with_state(mut self, state: RewardState) -> Self {
-        assert_eq!(state.k(), self.state.k(), "warm-start arm count mismatch");
-        self.state = state;
+    /// Builder: warm-start from a prior state (see [`super::persist`]).
+    /// The prior's arm count must match `k`; pulled arms start with
+    /// narrowed posteriors proportional to their retained counts.
+    pub fn with_state(mut self, stats: ArmStats) -> Self {
+        self.warm_start(stats);
         self
     }
 }
 
 impl Policy for ThompsonSampler {
     fn k(&self) -> usize {
-        self.state.k()
+        self.stats.k()
     }
 
     fn select(&mut self) -> usize {
-        if let Some(arm) = self.state.counts.iter().position(|&c| c == 0.0) {
+        if let Some(arm) = self.stats.counts().iter().position(|&c| c == 0.0) {
             return arm;
         }
-        let (mt, mr) = self.state.filled_means();
-        let rewards = weighted_rewards(&mt, &mr, self.alpha, self.beta);
+        let k = self.stats.k();
+        self.scratch.ensure(k);
+        weighted_rewards_into(&self.stats, self.alpha, self.beta, &mut self.scratch.rewards);
         // Sample posterior mean ~ N(reward_i, obs_std² / N_i) per arm.
-        let samples: Vec<f64> = rewards
-            .iter()
-            .zip(&self.state.counts)
-            .map(|(r, n)| r + self.rng.normal() * self.obs_std / n.max(1.0).sqrt())
-            .collect();
-        stats::argmax(&samples)
+        let (rewards, scores) = self.scratch.rewards_scores_mut();
+        for (i, (r, n)) in rewards.iter().zip(self.stats.counts()).enumerate() {
+            scores[i] = r + self.rng.normal() * self.obs_std / n.max(1.0).sqrt();
+        }
+        stats::argmax(scores)
     }
 
     fn update(&mut self, arm: usize, time_s: f64, power_w: f64) {
-        self.state.observe(arm, time_s, power_w);
+        self.stats.observe(arm, time_s, power_w);
     }
 
     fn counts(&self) -> &[f64] {
-        &self.state.counts
+        self.stats.counts()
     }
 
     fn name(&self) -> &'static str {
         "thompson"
     }
 
-    fn reward_state(&self) -> Option<&RewardState> {
-        Some(&self.state)
+    fn stats(&self) -> &ArmStats {
+        &self.stats
+    }
+
+    fn warm_start(&mut self, prior: ArmStats) {
+        assert_eq!(prior.k(), self.stats.k(), "warm-start arm count mismatch");
+        self.stats = prior;
+    }
+
+    fn scratch_growths(&self) -> u64 {
+        self.scratch.growths()
     }
 }
 
@@ -112,7 +124,7 @@ mod tests {
         // A restored posterior should exploit immediately: every arm
         // carries prior counts (no init sweep), and the prior best
         // dominates selection.
-        let mut prior = RewardState::new(4);
+        let mut prior = ArmStats::new(4);
         for _ in 0..50 {
             prior.observe(0, 2.0, 1.0);
             prior.observe(1, 2.0, 1.0);
@@ -122,13 +134,13 @@ mod tests {
         let mut p = ThompsonSampler::new(4, 1.0, 0.0, 5).with_state(prior);
         let picks_of_best = (0..100).filter(|_| p.select() == 2).count();
         assert!(picks_of_best > 60, "only {picks_of_best}/100 prior-best picks");
-        assert_eq!(p.reward_state().unwrap().counts[2], 50.0);
+        assert_eq!(p.stats().counts()[2], 50.0);
     }
 
     #[test]
     #[should_panic]
     fn warm_start_arm_mismatch_panics() {
-        let prior = RewardState::new(3);
+        let prior = ArmStats::new(3);
         let _ = ThompsonSampler::new(4, 1.0, 0.0, 5).with_state(prior);
     }
 }

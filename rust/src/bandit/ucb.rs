@@ -1,22 +1,27 @@
 //! LASP's UCB1 policy (paper Alg. 1).
 
-use super::reward::{RewardState, ScalarBackend, ScoreBackend, DEFAULT_EXPLORATION};
+use super::core::{ArmStats, Scratch};
+use super::reward::{ScalarBackend, ScoreBackend, DEFAULT_EXPLORATION};
 use super::Policy;
 
 /// The LASP tuner: UCB1 over the weighted time/power reward.
+///
+/// A thin strategy layer over the shared [`ArmStats`] core: the core keeps
+/// the statistics, the pluggable [`ScoreBackend`] turns them into Eq. 2
+/// scores through the tuner's reusable [`Scratch`] — [`Policy::select`]
+/// allocates nothing in steady state.
 ///
 /// `alpha` and `beta` are the paper's user-priority weights for execution
 /// time and power consumption respectively (§III). The score computation is
 /// pluggable: [`ScalarBackend`] by default, or the AOT PJRT artifact via
 /// [`UcbTuner::with_backend`].
 pub struct UcbTuner {
-    state: RewardState,
+    stats: ArmStats,
     alpha: f64,
     beta: f64,
     exploration: f64,
     backend: Box<dyn ScoreBackend>,
-    /// Rewards from the most recent scoring pass (diagnostics).
-    last_rewards: Vec<f64>,
+    scratch: Scratch,
 }
 
 impl UcbTuner {
@@ -35,28 +40,32 @@ impl UcbTuner {
         assert!(k > 0);
         assert!((0.0..=1.0).contains(&alpha) && (0.0..=1.0).contains(&beta));
         UcbTuner {
-            state: RewardState::new(k),
+            stats: ArmStats::new(k),
             alpha,
             beta,
             exploration: DEFAULT_EXPLORATION,
             backend,
-            last_rewards: vec![],
+            scratch: Scratch::new(),
         }
     }
 
-    /// Builder: warm-start from a prior reward state (see
-    /// [`super::persist`]). The state's arm count must match `k`.
-    pub fn with_state(mut self, state: RewardState) -> Self {
-        assert_eq!(state.k(), self.state.k(), "warm-start arm count mismatch");
-        self.state = state;
+    /// Builder: warm-start from a prior state (see [`super::persist`]).
+    /// The prior's arm count must match `k`.
+    pub fn with_state(mut self, stats: ArmStats) -> Self {
+        self.warm_start(stats);
         self
     }
 
     /// Builder: override the exploration coefficient (1.0 = textbook UCB1).
     pub fn with_exploration(mut self, c: f64) -> Self {
+        self.set_exploration(c);
+        self
+    }
+
+    /// Override the exploration coefficient in place.
+    pub fn set_exploration(&mut self, c: f64) {
         assert!(c >= 0.0);
         self.exploration = c;
-        self
     }
 
     /// The exploration coefficient c.
@@ -76,37 +85,30 @@ impl UcbTuner {
 
     /// Current iteration counter `t`.
     pub fn t(&self) -> f64 {
-        self.state.t
+        self.stats.t()
     }
 
     /// Rewards from the most recent scoring pass (empty before first call).
     pub fn last_rewards(&self) -> &[f64] {
-        &self.last_rewards
+        &self.scratch.rewards
     }
 
     /// Scoring backend name ("scalar" or "pjrt").
     pub fn backend_name(&self) -> &'static str {
         self.backend.backend_name()
     }
-
-    /// Borrow the raw reward state (telemetry / checkpointing).
-    pub fn state(&self) -> &RewardState {
-        &self.state
-    }
 }
 
 impl Policy for UcbTuner {
     fn k(&self) -> usize {
-        self.state.k()
+        self.stats.k()
     }
 
     fn select(&mut self) -> usize {
-        let out = self
-            .backend
-            .lasp_step(&self.state, self.alpha, self.beta, self.exploration)
-            .expect("score backend failed");
-        self.last_rewards = out.rewards;
-        out.best
+        self.backend
+            .lasp_step(&self.stats, self.alpha, self.beta, self.exploration, &mut self.scratch)
+            .expect("score backend failed")
+            .best
     }
 
     fn update(&mut self, arm: usize, time_s: f64, power_w: f64) {
@@ -115,19 +117,28 @@ impl Policy for UcbTuner {
         // ingestion, so updates may arrive out of order relative to the
         // most recent `select`. UCB's sufficient statistics are
         // order-free, so any valid arm is accepted.
-        self.state.observe(arm, time_s, power_w);
+        self.stats.observe(arm, time_s, power_w);
     }
 
     fn counts(&self) -> &[f64] {
-        &self.state.counts
+        self.stats.counts()
     }
 
     fn name(&self) -> &'static str {
         "lasp-ucb1"
     }
 
-    fn reward_state(&self) -> Option<&RewardState> {
-        Some(&self.state)
+    fn stats(&self) -> &ArmStats {
+        &self.stats
+    }
+
+    fn warm_start(&mut self, prior: ArmStats) {
+        assert_eq!(prior.k(), self.stats.k(), "warm-start arm count mismatch");
+        self.stats = prior;
+    }
+
+    fn scratch_growths(&self) -> u64 {
+        self.scratch.growths()
     }
 }
 
@@ -182,8 +193,33 @@ mod tests {
     }
 
     #[test]
+    fn select_reuses_scratch_after_warmup() {
+        let mut tuner = UcbTuner::new(32, 1.0, 0.0);
+        let arm = tuner.select(); // scratch reaches its high-water mark
+        tuner.update(arm, 1.0, 1.0);
+        let before = tuner.scratch_growths();
+        assert_eq!(before, 1);
+        for _ in 0..200 {
+            let arm = tuner.select();
+            tuner.update(arm, 1.0 + (arm % 3) as f64, 5.0);
+        }
+        assert_eq!(
+            tuner.scratch_growths(),
+            before,
+            "steady-state select grew the scratch"
+        );
+        assert_eq!(tuner.last_rewards().len(), 32);
+    }
+
+    #[test]
     #[should_panic]
     fn invalid_alpha_rejected() {
         UcbTuner::new(2, 1.5, 0.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn warm_start_arm_mismatch_panics() {
+        let _ = UcbTuner::new(4, 1.0, 0.0).with_state(ArmStats::new(3));
     }
 }

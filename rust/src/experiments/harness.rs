@@ -67,6 +67,7 @@ pub fn lasp_policy(k: usize, iterations: usize, alpha: f64, beta: f64, seed: u64
 
 /// One complete LASP run; returns (best index by Eq. 4, selection counts,
 /// selection trace).
+#[allow(clippy::too_many_arguments)]
 pub fn run_lasp(
     kind: AppKind,
     mode: PowerMode,

@@ -253,7 +253,7 @@ fn cmd_tune(flags: &Flags) -> Result<()> {
                 cfg.app
             ));
         }
-        println!("# warm start from {path} (t={})", cp.state.t);
+        println!("# warm start from {path} (t={})", cp.state.t());
         tuner = tuner.with_state(lasp::bandit::persist::discounted(&cp.state, 0.2));
     }
     let save_state = flags.get("save-state").map(String::from);

@@ -166,6 +166,7 @@ impl Engine {
     }
 
     /// Execute `reward_norm_<app>`: Eq. 5 rewards from running sums.
+    #[allow(clippy::too_many_arguments)]
     pub fn reward_norm(
         &mut self,
         app: &str,
@@ -281,23 +282,25 @@ mod tests {
     fn lasp_step_matches_scalar_backend() {
         let Some(mut e) = engine() else { return };
         let k = 216;
-        let mut state = crate::bandit::RewardState::new(k);
+        let mut state = crate::bandit::ArmStats::new(k);
         let mut rng = crate::util::Rng::new(3);
         for _ in 0..400 {
             let arm = rng.below(k);
             state.observe(arm, rng.range(0.5, 3.0), rng.range(3.0, 9.0));
         }
-        let tau: Vec<f32> = state.tau_sum.iter().map(|&v| v as f32).collect();
-        let rho: Vec<f32> = state.rho_sum.iter().map(|&v| v as f32).collect();
-        let cnt: Vec<f32> = state.counts.iter().map(|&v| v as f32).collect();
+        let tau: Vec<f32> = state.tau_sum().iter().map(|&v| v as f32).collect();
+        let rho: Vec<f32> = state.rho_sum().iter().map(|&v| v as f32).collect();
+        let cnt: Vec<f32> = state.counts().iter().map(|&v| v as f32).collect();
         let out = e
-            .lasp_step("kripke", &tau, &rho, &cnt, state.t as f32, 0.8, 0.2, 1.0)
+            .lasp_step("kripke", &tau, &rho, &cnt, state.t() as f32, 0.8, 0.2, 1.0)
             .unwrap();
         let mut sb = crate::bandit::ScalarBackend;
+        let mut scratch = crate::bandit::Scratch::new();
         let scalar =
-            crate::bandit::ScoreBackend::lasp_step(&mut sb, &state, 0.8, 0.2, 1.0).unwrap();
+            crate::bandit::ScoreBackend::lasp_step(&mut sb, &state, 0.8, 0.2, 1.0, &mut scratch)
+                .unwrap();
         // Rewards agree to f32 tolerance...
-        for (a, b) in out.rewards.iter().zip(&scalar.rewards) {
+        for (a, b) in out.rewards.iter().zip(&scratch.rewards) {
             assert!((*a as f64 - b).abs() < 1e-4, "{a} vs {b}");
         }
         // ...and the selected arm matches (or ties within tolerance).

@@ -4,7 +4,7 @@
 //! coordinator use when the AOT backend is enabled.
 
 use super::engine::{Engine, PjrtStep};
-use crate::bandit::{RewardState, ScoreBackend, StepOutput};
+use crate::bandit::{ArmStats, ScoreBackend, Scratch, Step};
 use anyhow::{anyhow, Result};
 use std::path::PathBuf;
 use std::sync::mpsc;
@@ -240,31 +240,37 @@ impl PjrtScoreBackend {
 }
 
 impl ScoreBackend for PjrtScoreBackend {
+    #[allow(clippy::too_many_arguments)]
     fn lasp_step(
         &mut self,
-        state: &RewardState,
+        stats: &ArmStats,
         alpha: f64,
         beta: f64,
         exploration: f64,
-    ) -> Result<StepOutput> {
-        let tau: Vec<f32> = state.tau_sum.iter().map(|&v| v as f32).collect();
-        let rho: Vec<f32> = state.rho_sum.iter().map(|&v| v as f32).collect();
-        let cnt: Vec<f32> = state.counts.iter().map(|&v| v as f32).collect();
+        scratch: &mut Scratch,
+    ) -> Result<Step> {
+        let tau: Vec<f32> = stats.tau_sum().iter().map(|&v| v as f32).collect();
+        let rho: Vec<f32> = stats.rho_sum().iter().map(|&v| v as f32).collect();
+        let cnt: Vec<f32> = stats.counts().iter().map(|&v| v as f32).collect();
         let out = self.handle.lasp_step(
             &self.app,
             tau,
             rho,
             cnt,
-            state.t as f32,
+            stats.t() as f32,
             alpha as f32,
             beta as f32,
             exploration as f32,
         )?;
-        Ok(StepOutput {
-            best: out.best,
-            score: out.score,
-            rewards: out.rewards.iter().map(|&v| v as f64).collect(),
-        })
+        // Honour the ScoreBackend contract: rewards land in the scratch.
+        // (The f32 staging vectors above still allocate — the PJRT path
+        // is the offline differential-testing backend, not the serve hot
+        // path, which always runs the scalar backend.)
+        scratch.ensure_rewards(stats.k());
+        for (dst, &v) in scratch.rewards.iter_mut().zip(&out.rewards) {
+            *dst = v as f64;
+        }
+        Ok(Step { best: out.best, score: out.score })
     }
 
     fn backend_name(&self) -> &'static str {

@@ -56,9 +56,13 @@ use std::path::Path;
 const VERSION: f64 = 1.0;
 
 /// Serialize one session (metadata envelope + embedded persist state).
-/// Returns `None` for policies with no checkpointable state.
+/// Every policy exposes the shared [`crate::bandit::ArmStats`] core, so
+/// every session is checkpointable — ε-greedy included. Returns `None`
+/// only when the state cannot round-trip through the persist format
+/// (e.g. a non-finite statistic): one rotten session must degrade to a
+/// skipped snapshot, never a panicking checkpoint thread.
 pub fn session_to_json(session: &Session) -> Option<String> {
-    let state = session.tuner.reward_state()?;
+    let state = session.tuner.stats();
     let inner = persist::to_json(state, session.key.app.name(), session.alpha, session.beta);
     let inner = Json::parse(&inner).ok()?;
     let mut obj = BTreeMap::new();
@@ -255,7 +259,7 @@ mod tests {
         // into "own" measurements (echo amplification across restarts).
         let apps = AppsCache::new();
         let mut s = trained_session("warmed", 50);
-        let mut baseline = crate::bandit::reward::RewardState::new(125);
+        let mut baseline = crate::bandit::ArmStats::new(125);
         for _ in 0..10 {
             baseline.observe(7, 2.0, 5.0);
         }
@@ -265,13 +269,55 @@ mod tests {
         let b = restored.fleet_baseline.expect("baseline lost across restart");
         assert_eq!(b.k(), 125);
         // Discounting shrinks baseline counts but preserves the mean.
-        assert!(b.counts[7] > 0.0 && b.counts[7] <= 10.0);
-        assert!((b.tau_sum[7] / b.counts[7] - 2.0).abs() < 1e-9);
+        assert!(b.counts()[7] > 0.0 && b.counts()[7] <= 10.0);
+        assert!((b.mean_tau()[7] - 2.0).abs() < 1e-9);
         // Cold sessions keep an absent baseline (and old envelopes
         // without the field still parse).
         let cold = trained_session("cold", 10);
-        let restored = session_from_json(&session_to_json(&cold).unwrap(), &apps, 0.5).unwrap();
+        let restored =
+            session_from_json(&session_to_json(&cold).unwrap(), &apps, 0.5).unwrap();
         assert!(restored.fleet_baseline.is_none());
+    }
+
+    #[test]
+    fn epsilon_sessions_checkpoint_and_restore() {
+        // The satellite fix: ε-greedy silently could not be checkpointed
+        // (no reward_state under the old Policy trait). With the unified
+        // core it round-trips exactly like the UCB family.
+        let apps = AppsCache::new();
+        let key = SessionKey {
+            client_id: "eps".to_string(),
+            app: AppKind::Clomp,
+            device: PowerMode::Maxn,
+            policy: PolicyKind::Epsilon,
+        };
+        let mut tuner =
+            Tuner::build(PolicyKind::Epsilon, 125, 1.0, 0.0, key.hash64(), None, 1.0).unwrap();
+        for _ in 0..200 {
+            let arm = tuner.select();
+            let t = if arm == 9 { 0.4 } else { 2.0 };
+            tuner.observe(arm, t, 5.0).unwrap();
+        }
+        let session = Session {
+            key,
+            alpha: 1.0,
+            beta: 0.0,
+            tuner,
+            fleet_baseline: None,
+            suggests: 200,
+            reports: 200,
+        };
+        let best = session.tuner.most_selected();
+        let (mean_before, _) = session.tuner.mean_of(best).unwrap();
+        let restored =
+            session_from_json(&session_to_json(&session).unwrap(), &apps, 0.5).unwrap();
+        assert_eq!(restored.key.policy, PolicyKind::Epsilon);
+        assert_eq!(restored.tuner.name(), "epsilon-greedy");
+        assert_eq!(restored.tuner.most_selected(), best);
+        let (mean_after, _) = restored.tuner.mean_of(best).unwrap();
+        assert!((mean_before - mean_after).abs() < 1e-9);
+        assert!(restored.tuner.total_pulls() > 0.0);
+        assert!(restored.tuner.total_pulls() < session.tuner.total_pulls());
     }
 
     #[test]

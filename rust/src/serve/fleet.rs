@@ -41,8 +41,7 @@ use super::loadgen::HttpClient;
 use super::metrics::Metrics;
 use super::store::{AppsCache, FleetKey, PolicyKind, ShardedStore, Tuner};
 use crate::apps::AppKind;
-use crate::bandit::reward::RewardState;
-use crate::bandit::Policy as _;
+use crate::bandit::{ArmStats, Policy as _};
 use crate::device::PowerMode;
 use crate::util::json::{JsonSlice, JsonWriter};
 use std::collections::HashMap;
@@ -80,17 +79,18 @@ pub struct FleetSnapshot {
 }
 
 impl FleetSnapshot {
-    /// Sparse view of a full-space reward state. `None` when nothing has
-    /// been pulled (empty snapshots never travel).
-    pub fn from_state(key: FleetKey, state: &RewardState, age_s: f64) -> Option<FleetSnapshot> {
-        let mut idx: Vec<usize> = (0..state.k()).filter(|&i| state.counts[i] > 0.0).collect();
+    /// Sparse view of a full-space arm-statistics core. `None` when
+    /// nothing has been pulled (empty snapshots never travel).
+    pub fn from_state(key: FleetKey, state: &ArmStats, age_s: f64) -> Option<FleetSnapshot> {
+        let counts = state.counts();
+        let mut idx: Vec<usize> = (0..state.k()).filter(|&i| counts[i] > 0.0).collect();
         if idx.is_empty() {
             return None;
         }
         if idx.len() > FLEET_MAX_ARMS {
             idx.sort_by(|&a, &b| {
-                state.counts[b]
-                    .partial_cmp(&state.counts[a])
+                counts[b]
+                    .partial_cmp(&counts[a])
                     .unwrap_or(std::cmp::Ordering::Equal)
             });
             idx.truncate(FLEET_MAX_ARMS);
@@ -100,26 +100,23 @@ impl FleetSnapshot {
             key,
             age_s: age_s.max(0.0),
             arms: idx.iter().map(|&i| i as u32).collect(),
-            counts: idx.iter().map(|&i| state.counts[i]).collect(),
-            tau_sum: idx.iter().map(|&i| state.tau_sum[i]).collect(),
-            rho_sum: idx.iter().map(|&i| state.rho_sum[i]).collect(),
+            counts: idx.iter().map(|&i| counts[i]).collect(),
+            tau_sum: idx.iter().map(|&i| state.tau_sum()[i]).collect(),
+            rho_sum: idx.iter().map(|&i| state.rho_sum()[i]).collect(),
         })
     }
 
-    /// Densify into a `k`-arm reward state (entries beyond `k` are
+    /// Densify into a `k`-arm statistics core (entries beyond `k` are
     /// dropped — a snapshot from a node running a different space size
     /// must not panic the receiver).
-    pub fn to_state(&self, k: usize) -> RewardState {
-        let mut s = RewardState::new(k);
+    pub fn to_state(&self, k: usize) -> ArmStats {
+        let mut s = ArmStats::new(k);
         for (i, &arm) in self.arms.iter().enumerate() {
             let a = arm as usize;
             if a < k && self.counts[i] > 0.0 {
-                s.counts[a] += self.counts[i];
-                s.tau_sum[a] += self.tau_sum[i];
-                s.rho_sum[a] += self.rho_sum[i];
+                s.add_arm(a, self.counts[i], self.tau_sum[i], self.rho_sum[i]);
             }
         }
-        s.t = s.counts.iter().sum::<f64>() + 1.0;
         s
     }
 
@@ -256,27 +253,27 @@ fn add_arm_delta(
     entry: &mut HashMap<u32, [f64; 3]>,
     arm: u32,
     idx: usize,
-    st: &RewardState,
-    baseline: Option<&RewardState>,
+    st: &ArmStats,
+    baseline: Option<&ArmStats>,
 ) {
     let (bc, bt, br) = match baseline {
-        Some(b) if b.k() == st.k() => (b.counts[idx], b.tau_sum[idx], b.rho_sum[idx]),
+        Some(b) if b.k() == st.k() => (b.counts()[idx], b.tau_sum()[idx], b.rho_sum()[idx]),
         _ => (0.0, 0.0, 0.0),
     };
-    let c = st.counts[idx] - bc;
+    let c = st.counts()[idx] - bc;
     if c <= 1e-9 {
         return;
     }
-    let mut tau = st.tau_sum[idx] - bt;
-    let mut rho = st.rho_sum[idx] - br;
+    let mut tau = st.tau_sum()[idx] - bt;
+    let mut rho = st.rho_sum()[idx] - br;
     if tau < 0.0 || rho < 0.0 {
         // Windowed policies (swucb) evict baseline entries over time, so
         // the lifetime-sum subtraction can go negative while the count
         // delta stays positive. Export the count delta at the arm's
-        // *current* observed means instead of fabricating impossible
-        // (e.g. zero-time) statistics.
-        tau = c * st.tau_sum[idx] / st.counts[idx];
-        rho = c * st.rho_sum[idx] / st.counts[idx];
+        // *current* observed means (cached by the core) instead of
+        // fabricating impossible (e.g. zero-time) statistics.
+        tau = c * st.mean_tau()[idx];
+        rho = c * st.mean_rho()[idx];
     }
     let e = entry.entry(arm).or_insert([0.0; 3]);
     e[0] += c;
@@ -304,19 +301,19 @@ pub fn aggregate_local(store: &ShardedStore) -> Vec<FleetSnapshot> {
             };
             let baseline = session.fleet_baseline.as_ref();
             let entry = acc.entry(fkey).or_default();
+            // Every policy exposes the shared ArmStats core, so delta
+            // extraction reads it directly — ε-greedy sessions included.
             match &session.tuner {
                 Tuner::Subset(t) => {
-                    if let Some(st) = t.reward_state() {
-                        for (pos, &full) in t.candidates().iter().enumerate() {
-                            add_arm_delta(entry, full as u32, pos, st, baseline);
-                        }
+                    let st = t.stats();
+                    for (pos, &full) in t.candidates().iter().enumerate() {
+                        add_arm_delta(entry, full as u32, pos, st, baseline);
                     }
                 }
                 other => {
-                    if let Some(st) = other.reward_state() {
-                        for arm in 0..st.k() {
-                            add_arm_delta(entry, arm as u32, arm, st, baseline);
-                        }
+                    let st = other.stats();
+                    for arm in 0..st.k() {
+                        add_arm_delta(entry, arm as u32, arm, st, baseline);
                     }
                 }
             }
@@ -487,7 +484,7 @@ pub fn install_priors(
     for snap in snapshots {
         let k = apps.arms(snap.key.app);
         let state = snap.to_state(k);
-        if state.counts.iter().any(|&c| c > 0.0) {
+        if state.total_pulls() > 0.0 {
             store.install_fleet_prior(snap.key, state);
             installed += 1;
         }
@@ -711,7 +708,7 @@ mod tests {
 
     #[test]
     fn sparse_state_roundtrip_and_cap() {
-        let mut state = RewardState::new(10_000);
+        let mut state = ArmStats::new(10_000);
         for arm in 0..5_000 {
             for _ in 0..(1 + arm % 7) {
                 state.observe(arm, 1.0, 5.0);
@@ -727,12 +724,12 @@ mod tests {
         // Densify: kept arms match exactly.
         let dense = s.to_state(10_000);
         for (i, &arm) in s.arms.iter().enumerate() {
-            assert_eq!(dense.counts[arm as usize], s.counts[i]);
+            assert_eq!(dense.counts()[arm as usize], s.counts[i]);
         }
         // Empty states never serialize.
         assert!(FleetSnapshot::from_state(
             fkey(AppKind::Clomp, PolicyKind::Ucb),
-            &RewardState::new(8),
+            &ArmStats::new(8),
             0.0
         )
         .is_none());
@@ -840,7 +837,7 @@ mod tests {
         // A warm-started session must not re-export its borrowed fleet
         // prior as this node's own evidence (echo amplification).
         let store = ShardedStore::new(1).with_fleet_tuning(0.5, Duration::from_secs(3600));
-        let mut prior = RewardState::new(125);
+        let mut prior = ArmStats::new(125);
         for _ in 0..40 {
             prior.observe(7, 0.3, 5.0);
         }

@@ -620,6 +620,14 @@ impl ServerHandle {
         self.service.transport.clone()
     }
 
+    /// Scratch-buffer growth events across every live session's bandit
+    /// core — the bandit-layer counterpart of
+    /// [`TransportStats::alloc_events`]: flat in steady state, so the
+    /// end-to-end zero-allocation assertion covers the policy layer too.
+    pub fn bandit_scratch_growths(&self) -> u64 {
+        self.service.store.scratch_growth_total()
+    }
+
     /// Orderly shutdown: stop fleet sync and HTTP, drain report queues,
     /// final snapshot.
     pub fn shutdown(mut self) -> Result<()> {

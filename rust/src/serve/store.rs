@@ -21,9 +21,9 @@
 //!   critical section.
 
 use crate::apps::{self, AppKind, AppModel};
-use crate::bandit::persist;
-use crate::bandit::reward::RewardState;
-use crate::bandit::{Policy, SlidingWindowUcb, SubsetTuner, ThompsonSampler, UcbTuner};
+use crate::bandit::{
+    ArmStats, EpsilonGreedy, Policy, SlidingWindowUcb, SubsetTuner, ThompsonSampler, UcbTuner,
+};
 use crate::device::PowerMode;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -40,6 +40,9 @@ pub const SUBSET_ARMS: usize = 1024;
 /// Sliding-window length floor for `swucb` sessions.
 const SWUCB_MIN_WINDOW: usize = 512;
 
+/// Exploration probability for `epsilon` sessions.
+const DEFAULT_EPSILON: f64 = 0.1;
+
 /// Minimum decayed effective count for a fleet-prior arm to survive (see
 /// [`ShardedStore::fleet_prior_for`]): below a quarter-pull of evidence
 /// the warm-start floor would dominate what the decay left.
@@ -54,6 +57,9 @@ pub enum PolicyKind {
     SwUcb,
     /// Gaussian Thompson sampling.
     Thompson,
+    /// ε-greedy (ablation baseline, checkpointable like every policy
+    /// since the unified-core refactor).
+    Epsilon,
     /// UCB over a seeded candidate subset (very large spaces).
     Subset,
 }
@@ -64,6 +70,7 @@ impl PolicyKind {
             PolicyKind::Ucb => "ucb",
             PolicyKind::SwUcb => "swucb",
             PolicyKind::Thompson => "thompson",
+            PolicyKind::Epsilon => "epsilon",
             PolicyKind::Subset => "subset",
         }
     }
@@ -86,9 +93,10 @@ impl std::str::FromStr for PolicyKind {
             "ucb" => Ok(PolicyKind::Ucb),
             "swucb" | "sw-ucb" => Ok(PolicyKind::SwUcb),
             "thompson" => Ok(PolicyKind::Thompson),
+            "epsilon" | "eps-greedy" => Ok(PolicyKind::Epsilon),
             "subset" => Ok(PolicyKind::Subset),
             other => Err(anyhow::anyhow!(
-                "unknown policy '{other}' (ucb|swucb|thompson|subset)"
+                "unknown policy '{other}' (ucb|swucb|thompson|epsilon|subset)"
             )),
         }
     }
@@ -109,7 +117,7 @@ pub struct FleetKey {
 /// rest of the fleet, stamped with its installation instant so staleness
 /// keeps decaying between syncs.
 struct FleetPrior {
-    state: RewardState,
+    state: ArmStats,
     installed: Instant,
 }
 
@@ -201,25 +209,27 @@ pub struct SessionId(pub u32);
 
 /// A session's bandit tuner. An enum (not `Box<dyn Policy>`) so the store
 /// can reject malformed client input — out-of-range or out-of-subset arms
-/// — as errors instead of panics, and can reach policy-specific state for
-/// checkpointing.
+/// — as errors instead of panics, and can reach policy-specific structure
+/// (the subset candidate map) where index spaces differ. Everything else
+/// dispatches through the one shared [`Policy`] trait.
 pub enum Tuner {
     Ucb(UcbTuner),
     SwUcb(SlidingWindowUcb),
     Thompson(ThompsonSampler),
+    Epsilon(EpsilonGreedy),
     Subset(SubsetTuner),
 }
 
 impl Tuner {
-    /// Construct a tuner, optionally warm-started from a checkpointed
-    /// reward state discounted by `retain` (see [`persist::discounted`]).
+    /// Construct a tuner, optionally warm-started from a prior state
+    /// discounted by `retain` (see [`Tuner::warm_start`]).
     pub fn build(
         kind: PolicyKind,
         k: usize,
         alpha: f64,
         beta: f64,
         seed: u64,
-        prior: Option<&RewardState>,
+        prior: Option<&ArmStats>,
         retain: f64,
     ) -> Result<Tuner, String> {
         if k == 0 {
@@ -231,92 +241,112 @@ impl Tuner {
         if !(retain > 0.0 && retain <= 1.0) {
             return Err(format!("retain out of (0,1]: {retain}"));
         }
-        match kind {
-            PolicyKind::Ucb => {
-                let mut t = UcbTuner::new(k, alpha, beta);
-                if let Some(p) = prior {
-                    if p.k() != k {
-                        return Err(format!("checkpoint has {} arms, space has {k}", p.k()));
-                    }
-                    t = t.with_state(persist::discounted(p, retain));
-                }
-                Ok(Tuner::Ucb(t))
-            }
+        let mut tuner = match kind {
+            PolicyKind::Ucb => Tuner::Ucb(UcbTuner::new(k, alpha, beta)),
             PolicyKind::SwUcb => {
                 let window = (2 * k).max(SWUCB_MIN_WINDOW);
-                let mut t = SlidingWindowUcb::new(k, alpha, beta, window);
-                if let Some(p) = prior {
-                    if p.k() != k {
-                        return Err(format!("checkpoint has {} arms, space has {k}", p.k()));
-                    }
-                    t = t.with_prior(&persist::discounted(p, retain));
-                }
-                Ok(Tuner::SwUcb(t))
+                Tuner::SwUcb(SlidingWindowUcb::new(k, alpha, beta, window))
             }
-            PolicyKind::Thompson => {
-                let mut t = ThompsonSampler::new(k, alpha, beta, seed);
-                if let Some(p) = prior {
-                    if p.k() != k {
-                        return Err(format!("checkpoint has {} arms, space has {k}", p.k()));
-                    }
-                    t = t.with_state(persist::discounted(p, retain));
-                }
-                Ok(Tuner::Thompson(t))
+            PolicyKind::Thompson => Tuner::Thompson(ThompsonSampler::new(k, alpha, beta, seed)),
+            PolicyKind::Epsilon => {
+                Tuner::Epsilon(EpsilonGreedy::new(k, alpha, beta, DEFAULT_EPSILON, seed))
             }
             PolicyKind::Subset => {
                 let m = SUBSET_ARMS.min(k).max(2.min(k));
                 // The candidate draw is seeded by the session-key hash, so
                 // a restarted service regenerates the identical subset and
                 // a checkpointed subset-space state lines up position-wise.
-                let mut t = SubsetTuner::new(k, m, alpha, beta, seed);
-                if let Some(p) = prior {
-                    if p.k() == m {
-                        // Subset-space prior (a checkpoint of this tuner).
-                        t = t.with_prior_state(persist::discounted(p, retain));
-                    } else if p.k() == k {
-                        // Full-space prior (a fleet prior aggregated across
-                        // nodes whose sessions drew *different* candidate
-                        // subsets): project onto this session's candidates.
-                        let candidates: Vec<usize> = t.candidates().to_vec();
-                        let mut sub = RewardState::new(candidates.len());
-                        for (pos, &full) in candidates.iter().enumerate() {
-                            sub.counts[pos] = p.counts[full];
-                            sub.tau_sum[pos] = p.tau_sum[full];
-                            sub.rho_sum[pos] = p.rho_sum[full];
-                        }
-                        if sub.counts.iter().any(|&c| c > 0.0) {
-                            t = t.with_prior_state(persist::discounted(&sub, retain));
-                        }
-                    } else {
-                        return Err(format!(
-                            "checkpoint subset has {} arms, expected {m} (or full {k})",
-                            p.k()
-                        ));
-                    }
-                }
-                Ok(Tuner::Subset(t))
+                Tuner::Subset(SubsetTuner::new(k, m, alpha, beta, seed))
             }
+        };
+        if let Some(p) = prior {
+            tuner.warm_start(p, retain)?;
+        }
+        Ok(tuner)
+    }
+
+    /// The one generic warm-start path, used identically by checkpoint
+    /// restore and fleet priors for every policy: dimension check →
+    /// optional subset projection → discount → [`Policy::warm_start`].
+    /// This replaced five hand-rolled per-policy branches; a policy only
+    /// customizes how it *absorbs* a prior (via its `warm_start`), never
+    /// how one is validated or prepared.
+    pub fn warm_start(&mut self, prior: &ArmStats, retain: f64) -> Result<(), String> {
+        if !(retain > 0.0 && retain <= 1.0) {
+            return Err(format!("retain out of (0,1]: {retain}"));
+        }
+        let m = self.stats().k();
+        // Dimension check. Caveat (pre-existing semantics, preserved):
+        // for a subset tuner whose candidate count equals the full space
+        // (k <= SUBSET_ARMS), a full-space prior is indistinguishable
+        // from a subset-space one and is installed position-wise against
+        // the shuffled candidate list. Default policy selection never
+        // builds such a tuner (subset only kicks in past
+        // SUBSET_THRESHOLD > SUBSET_ARMS); only an explicit
+        // policy=subset request on a small space can hit it.
+        let prepared = if prior.k() == m {
+            Some(prior.discounted(retain))
+        } else if let Tuner::Subset(t) = self {
+            if prior.k() == t.k() {
+                // Full-space prior (e.g. a fleet prior aggregated across
+                // nodes whose sessions drew *different* candidate
+                // subsets): project onto this session's candidates. Zero
+                // overlap degrades to a cold start, not an error.
+                let sub = t.project_full_prior(prior);
+                if sub.total_pulls() > 0.0 {
+                    Some(sub.discounted(retain))
+                } else {
+                    None
+                }
+            } else {
+                return Err(format!(
+                    "checkpoint subset has {} arms, expected {m} (or full {})",
+                    prior.k(),
+                    t.k()
+                ));
+            }
+        } else {
+            return Err(format!(
+                "checkpoint has {} arms, space has {m}",
+                prior.k()
+            ));
+        };
+        if let Some(p) = prepared {
+            self.policy_mut().warm_start(p);
+        }
+        Ok(())
+    }
+
+    /// The policy behind this tuner — the single dispatch point for every
+    /// [`Policy`] surface (the old per-method five-arm matches are gone).
+    pub fn policy(&self) -> &dyn Policy {
+        match self {
+            Tuner::Ucb(t) => t,
+            Tuner::SwUcb(t) => t,
+            Tuner::Thompson(t) => t,
+            Tuner::Epsilon(t) => t,
+            Tuner::Subset(t) => t,
+        }
+    }
+
+    fn policy_mut(&mut self) -> &mut dyn Policy {
+        match self {
+            Tuner::Ucb(t) => t,
+            Tuner::SwUcb(t) => t,
+            Tuner::Thompson(t) => t,
+            Tuner::Epsilon(t) => t,
+            Tuner::Subset(t) => t,
         }
     }
 
     /// Arm count of the (full) space.
     pub fn k(&self) -> usize {
-        match self {
-            Tuner::Ucb(t) => t.k(),
-            Tuner::SwUcb(t) => t.k(),
-            Tuner::Thompson(t) => t.k(),
-            Tuner::Subset(t) => t.k(),
-        }
+        self.policy().k()
     }
 
     /// Choose the next arm to evaluate.
     pub fn select(&mut self) -> usize {
-        match self {
-            Tuner::Ucb(t) => t.select(),
-            Tuner::SwUcb(t) => t.select(),
-            Tuner::Thompson(t) => t.select(),
-            Tuner::Subset(t) => t.select(),
-        }
+        self.policy_mut().select()
     }
 
     /// Apply one measured report. Unlike [`Policy::update`], malformed arms
@@ -329,85 +359,51 @@ impl Tuner {
         if !time_s.is_finite() || time_s <= 0.0 || !power_w.is_finite() || power_w < 0.0 {
             return Err(format!("invalid measurement time={time_s} power={power_w}"));
         }
-        match self {
-            Tuner::Ucb(t) => t.update(arm, time_s, power_w),
-            Tuner::SwUcb(t) => t.update(arm, time_s, power_w),
-            Tuner::Thompson(t) => t.update(arm, time_s, power_w),
-            Tuner::Subset(t) => {
-                if !t.contains_arm(arm) {
-                    return Err(format!("arm {arm} outside the candidate subset"));
-                }
-                t.update(arm, time_s, power_w);
+        if let Tuner::Subset(t) = self {
+            if !t.contains_arm(arm) {
+                return Err(format!("arm {arm} outside the candidate subset"));
             }
         }
+        self.policy_mut().update(arm, time_s, power_w);
         Ok(())
     }
 
     /// Full-space pull counts.
     pub fn counts(&self) -> &[f64] {
-        match self {
-            Tuner::Ucb(t) => t.counts(),
-            Tuner::SwUcb(t) => t.counts(),
-            Tuner::Thompson(t) => t.counts(),
-            Tuner::Subset(t) => t.counts(),
-        }
+        self.policy().counts()
     }
 
     /// Eq. 4: the most frequently selected arm.
     pub fn most_selected(&self) -> usize {
-        match self {
-            Tuner::Ucb(t) => t.most_selected(),
-            Tuner::SwUcb(t) => t.most_selected(),
-            Tuner::Thompson(t) => t.most_selected(),
-            Tuner::Subset(t) => t.most_selected(),
-        }
+        self.policy().most_selected()
     }
 
-    /// Total pulls observed.
+    /// Total pulls observed — O(1) via the shared core's cached counter
+    /// (this sits on the suggest hot path).
     pub fn total_pulls(&self) -> f64 {
-        match self {
-            Tuner::Ucb(t) => t.total_pulls(),
-            Tuner::SwUcb(t) => t.total_pulls(),
-            Tuner::Thompson(t) => t.total_pulls(),
-            Tuner::Subset(t) => t.total_pulls(),
-        }
+        self.policy().total_pulls()
     }
 
-    /// Checkpointable sufficient statistics (subset tuners expose the
-    /// subset-space state; positions are subset indices).
-    pub fn reward_state(&self) -> Option<&RewardState> {
-        match self {
-            Tuner::Ucb(t) => t.reward_state(),
-            Tuner::SwUcb(t) => t.reward_state(),
-            Tuner::Thompson(t) => t.reward_state(),
-            Tuner::Subset(t) => t.reward_state(),
-        }
+    /// The shared arm-statistics core: checkpointable sufficient
+    /// statistics for *every* policy (subset tuners expose the
+    /// subset-space core; positions are subset indices).
+    pub fn stats(&self) -> &ArmStats {
+        self.policy().stats()
     }
 
     /// Mean observed (time, power) for a full-space arm, if it has been
     /// pulled. Handles the subset tuner's index mapping.
     pub fn mean_of(&self, arm: usize) -> Option<(f64, f64)> {
-        let (state, idx) = match self {
-            Tuner::Subset(t) => (t.reward_state()?, t.position_of(arm)?),
-            other => (other.reward_state()?, arm),
+        let (stats, idx) = match self {
+            Tuner::Subset(t) => (t.stats(), t.position_of(arm)?),
+            other => (other.stats(), arm),
         };
-        if idx >= state.k() || state.counts[idx] <= 0.0 {
-            return None;
-        }
-        Some((
-            state.tau_sum[idx] / state.counts[idx],
-            state.rho_sum[idx] / state.counts[idx],
-        ))
+        stats.means_of(idx)
     }
 
     /// Policy name for reports.
     pub fn name(&self) -> &'static str {
-        match self {
-            Tuner::Ucb(t) => t.name(),
-            Tuner::SwUcb(t) => t.name(),
-            Tuner::Thompson(t) => t.name(),
-            Tuner::Subset(t) => t.name(),
-        }
+        self.policy().name()
     }
 }
 
@@ -424,7 +420,7 @@ pub struct Session {
     /// borrowed fleet evidence is never re-exported as this node's own
     /// measurements — without it, every warm-started session would echo
     /// the prior back into the fleet, amplifying it by the session count.
-    pub fleet_baseline: Option<RewardState>,
+    pub fleet_baseline: Option<ArmStats>,
     /// Suggest requests served.
     pub suggests: u64,
     /// Reports applied.
@@ -501,7 +497,7 @@ impl ShardedStore {
     /// Install (replace) the merged fleet prior for one scenario. Called
     /// by the sync plane after every successful pull/push merge; never
     /// called under a shard lock (see the struct-level lock order).
-    pub fn install_fleet_prior(&self, key: FleetKey, state: RewardState) {
+    pub fn install_fleet_prior(&self, key: FleetKey, state: ArmStats) {
         let mut priors = match self.fleet_priors.write() {
             Ok(g) => g,
             Err(p) => p.into_inner(),
@@ -529,11 +525,11 @@ impl ShardedStore {
     /// of anchoring new sessions to stale evidence forever.
     ///
     /// Arms whose decayed count falls below [`FLEET_PRIOR_MIN_COUNT`]
-    /// are dropped entirely: the downstream `persist::discounted` floors
-    /// any positive count back to one whole pull, which would otherwise
-    /// resurrect long-dead evidence at full strength and defeat the
-    /// decay.
-    pub fn fleet_prior_for(&self, key: &FleetKey, k: usize) -> Option<RewardState> {
+    /// are dropped entirely: the downstream [`ArmStats::discounted`]
+    /// floors any positive count back to one whole pull, which would
+    /// otherwise resurrect long-dead evidence at full strength and defeat
+    /// the decay.
+    pub fn fleet_prior_for(&self, key: &FleetKey, k: usize) -> Option<ArmStats> {
         let priors = match self.fleet_priors.read() {
             Ok(g) => g,
             Err(p) => p.into_inner(),
@@ -547,21 +543,16 @@ impl ShardedStore {
         if w < 1e-3 {
             return None;
         }
-        let mut state = RewardState::new(k);
-        let mut live = false;
+        let mut state = ArmStats::new(k);
         for i in 0..k {
-            let c = prior.state.counts[i] * w;
+            let c = prior.state.counts()[i] * w;
             if c >= FLEET_PRIOR_MIN_COUNT {
-                state.counts[i] = c;
-                state.tau_sum[i] = prior.state.tau_sum[i] * w;
-                state.rho_sum[i] = prior.state.rho_sum[i] * w;
-                live = true;
+                state.set_arm(i, c, prior.state.tau_sum()[i] * w, prior.state.rho_sum()[i] * w);
             }
         }
-        if !live {
+        if state.total_pulls() <= 0.0 {
             return None;
         }
-        state.t = state.counts.iter().sum::<f64>() + 1.0;
         Some(state)
     }
 
@@ -707,7 +698,7 @@ impl ShardedStore {
                 let applied = prior.is_some() && tuner.total_pulls() > 0.0;
                 let fleet_baseline = if applied {
                     self.fleet_warm_starts.fetch_add(1, Ordering::Relaxed);
-                    tuner.reward_state().cloned()
+                    Some(tuner.stats().clone())
                 } else {
                     None
                 };
@@ -729,6 +720,22 @@ impl ShardedStore {
     pub fn session_count(&self) -> usize {
         (0..self.num_shards())
             .map(|i| self.read_shard(i).sessions.len())
+            .sum()
+    }
+
+    /// Total scratch-buffer growth events across every session's policy
+    /// (read locks only). Flat after warm-up: the bandit-core half of the
+    /// serve layer's zero-allocation contract, asserted end-to-end by
+    /// `rust/tests/serve_hotpath.rs`.
+    pub fn scratch_growth_total(&self) -> u64 {
+        (0..self.num_shards())
+            .map(|i| {
+                self.read_shard(i)
+                    .sessions
+                    .values()
+                    .map(|s| s.tuner.policy().scratch_growths())
+                    .sum::<u64>()
+            })
             .sum()
     }
 
@@ -933,23 +940,57 @@ mod tests {
     }
 
     #[test]
+    fn policy_kind_parses_every_variant() {
+        for kind in [
+            PolicyKind::Ucb,
+            PolicyKind::SwUcb,
+            PolicyKind::Thompson,
+            PolicyKind::Epsilon,
+            PolicyKind::Subset,
+        ] {
+            assert_eq!(kind.name().parse::<PolicyKind>().unwrap(), kind);
+        }
+        assert!("doom".parse::<PolicyKind>().is_err());
+    }
+
+    #[test]
     fn warm_start_preserves_means() {
-        let mut state = RewardState::new(16);
+        let mut state = ArmStats::new(16);
         for arm in 0..16 {
             for _ in 0..10 {
                 state.observe(arm, 1.0 + arm as f64, 5.0);
             }
         }
-        let t = Tuner::build(PolicyKind::Ucb, 16, 1.0, 0.0, 7, Some(&state), 0.5).unwrap();
-        let (mt, _) = t.mean_of(3).unwrap();
-        assert!((mt - 4.0).abs() < 1e-9);
-        assert!(t.total_pulls() > 0.0);
+        // The unified warm-start path behaves identically for every
+        // same-space policy, epsilon included (the satellite fix).
+        for kind in [
+            PolicyKind::Ucb,
+            PolicyKind::SwUcb,
+            PolicyKind::Thompson,
+            PolicyKind::Epsilon,
+        ] {
+            let t = Tuner::build(kind, 16, 1.0, 0.0, 7, Some(&state), 0.5).unwrap();
+            let (mt, _) = t.mean_of(3).unwrap();
+            assert!((mt - 4.0).abs() < 1e-9, "{}", kind.name());
+            assert!(t.total_pulls() > 0.0, "{}", kind.name());
+        }
     }
 
     #[test]
     fn warm_start_arm_mismatch_is_error() {
-        let state = RewardState::new(8);
-        assert!(Tuner::build(PolicyKind::Ucb, 16, 1.0, 0.0, 7, Some(&state), 0.5).is_err());
+        let state = ArmStats::new(8);
+        for kind in [
+            PolicyKind::Ucb,
+            PolicyKind::SwUcb,
+            PolicyKind::Thompson,
+            PolicyKind::Epsilon,
+        ] {
+            assert!(
+                Tuner::build(kind, 16, 1.0, 0.0, 7, Some(&state), 0.5).is_err(),
+                "{}",
+                kind.name()
+            );
+        }
     }
 
     fn fleet_key(app: AppKind, policy: PolicyKind) -> FleetKey {
@@ -959,8 +1000,8 @@ mod tests {
     /// A full-space prior shaped like a converged campaign: every arm
     /// pulled (so a warm start skips the init sweep), the `best` arm both
     /// fastest and by far the most pulled (so Eq. 4 transfers too).
-    fn full_prior(k: usize, best: usize) -> RewardState {
-        let mut s = RewardState::new(k);
+    fn full_prior(k: usize, best: usize) -> ArmStats {
+        let mut s = ArmStats::new(k);
         for arm in 0..k {
             let (t, pulls) = if arm == best { (0.3, 40) } else { (2.0, 4) };
             for _ in 0..pulls {
@@ -1019,8 +1060,8 @@ mod tests {
         let store = ShardedStore::new(1).with_fleet_tuning(0.5, Duration::from_secs(3600));
         store.install_fleet_prior(fk, full_prior(125, 7));
         let got = store.fleet_prior_for(&fk, 125).unwrap();
-        assert!((got.tau_sum[7] / got.counts[7] - 0.3).abs() < 1e-9);
-        assert!(got.counts[7] <= 40.0 + 1e-9, "decay must never grow counts");
+        assert!((got.mean_tau()[7] - 0.3).abs() < 1e-9);
+        assert!(got.counts()[7] <= 40.0 + 1e-9, "decay must never grow counts");
         // Arm-count mismatch (wrong app space) is refused.
         assert!(store.fleet_prior_for(&fk, 216).is_none());
     }
@@ -1030,7 +1071,7 @@ mod tests {
         let store = ShardedStore::new(1).with_fleet_tuning(0.5, Duration::from_secs(3600));
         // Full-space Hypre prior: every arm pulled once, arm `fast` much
         // faster. The subset session sees it through its own candidates.
-        let mut prior = RewardState::new(92_160);
+        let mut prior = ArmStats::new(92_160);
         for arm in 0..92_160 {
             prior.observe(arm, 2.0, 5.0);
         }
@@ -1055,15 +1096,15 @@ mod tests {
         // sized to the full space (fleet) and one sized to the subset
         // (checkpoint) both build; other sizes are errors.
         let k = 92_160;
-        let mut full = RewardState::new(k);
+        let mut full = ArmStats::new(k);
         for arm in 0..k {
             full.observe(arm, 1.0, 5.0);
         }
         let t = Tuner::build(PolicyKind::Subset, k, 1.0, 0.0, 9, Some(&full), 0.5).unwrap();
         assert!(t.total_pulls() > 0.0);
-        let sub = RewardState::new(SUBSET_ARMS);
+        let sub = ArmStats::new(SUBSET_ARMS);
         assert!(Tuner::build(PolicyKind::Subset, k, 1.0, 0.0, 9, Some(&sub), 0.5).is_ok());
-        let bad = RewardState::new(17);
+        let bad = ArmStats::new(17);
         assert!(Tuner::build(PolicyKind::Subset, k, 1.0, 0.0, 9, Some(&bad), 0.5).is_err());
     }
 

@@ -131,7 +131,8 @@ impl TuningSession {
         self.app.as_ref()
     }
 
-    /// Checkpoint the policy's reward state (UCB-family policies only).
+    /// Checkpoint the policy's arm-statistics core. Since the unified-core
+    /// refactor every policy exposes one, so any session is persistable.
     pub fn save_policy_state(
         &self,
         path: &std::path::Path,
@@ -139,11 +140,7 @@ impl TuningSession {
         alpha: f64,
         beta: f64,
     ) -> Result<()> {
-        let state = self
-            .policy
-            .reward_state()
-            .ok_or_else(|| anyhow::anyhow!("policy '{}' keeps no reward state", self.policy.name()))?;
-        crate::bandit::persist::save(path, state, app, alpha, beta)
+        crate::bandit::persist::save(path, self.policy.stats(), app, alpha, beta)
     }
 }
 

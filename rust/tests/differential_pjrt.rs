@@ -3,7 +3,7 @@
 //! guarantee of the three-layer architecture. All tests no-op (pass) when
 //! artifacts are absent; `make artifacts` builds them.
 
-use lasp::bandit::{RewardState, ScalarBackend, ScoreBackend};
+use lasp::bandit::{ArmStats, ScalarBackend, ScoreBackend, Scratch};
 use lasp::runtime::{Engine, EngineHandle};
 use lasp::util::Rng;
 
@@ -12,8 +12,8 @@ fn engine() -> Option<Engine> {
     Some(Engine::load(&dir).expect("engine load"))
 }
 
-fn random_state(k: usize, pulls: usize, rng: &mut Rng) -> RewardState {
-    let mut s = RewardState::new(k);
+fn random_state(k: usize, pulls: usize, rng: &mut Rng) -> ArmStats {
+    let mut s = ArmStats::new(k);
     for _ in 0..pulls {
         s.observe(rng.below(k), rng.range(0.05, 8.0), rng.range(1.0, 11.0));
     }
@@ -31,16 +31,17 @@ fn lasp_step_agrees_across_backends_many_states() {
         let (alpha, beta) = (rng.uniform(), rng.uniform());
         let c = rng.range(0.05, 1.0);
 
-        let tau: Vec<f32> = state.tau_sum.iter().map(|&v| v as f32).collect();
-        let rho: Vec<f32> = state.rho_sum.iter().map(|&v| v as f32).collect();
-        let cnt: Vec<f32> = state.counts.iter().map(|&v| v as f32).collect();
+        let tau: Vec<f32> = state.tau_sum().iter().map(|&v| v as f32).collect();
+        let rho: Vec<f32> = state.rho_sum().iter().map(|&v| v as f32).collect();
+        let cnt: Vec<f32> = state.counts().iter().map(|&v| v as f32).collect();
         let pjrt = e
-            .lasp_step(app, &tau, &rho, &cnt, state.t as f32, alpha as f32, beta as f32, c as f32)
+            .lasp_step(app, &tau, &rho, &cnt, state.t() as f32, alpha as f32, beta as f32, c as f32)
             .unwrap();
-        let scalar = ScalarBackend.lasp_step(&state, alpha, beta, c).unwrap();
+        let mut scratch = Scratch::new();
+        let scalar = ScalarBackend.lasp_step(&state, alpha, beta, c, &mut scratch).unwrap();
 
         // Rewards agree to f32 tolerance.
-        for (i, (a, b)) in pjrt.rewards.iter().zip(&scalar.rewards).enumerate() {
+        for (i, (a, b)) in pjrt.rewards.iter().zip(&scratch.rewards).enumerate() {
             assert!(
                 (*a as f64 - b).abs() < 5e-4,
                 "trial {trial} {app} arm {i}: pjrt {a} vs scalar {b}"
@@ -95,9 +96,9 @@ fn reward_norm_artifact_matches_scalar() {
     let mut rng = Rng::new(17);
     let k = 125;
     let state = random_state(k, 700, &mut rng);
-    let tau: Vec<f32> = state.tau_sum.iter().map(|&v| v as f32).collect();
-    let rho: Vec<f32> = state.rho_sum.iter().map(|&v| v as f32).collect();
-    let cnt: Vec<f32> = state.counts.iter().map(|&v| v as f32).collect();
+    let tau: Vec<f32> = state.tau_sum().iter().map(|&v| v as f32).collect();
+    let rho: Vec<f32> = state.rho_sum().iter().map(|&v| v as f32).collect();
+    let cnt: Vec<f32> = state.counts().iter().map(|&v| v as f32).collect();
     let rewards = e.reward_norm("clomp", &tau, &rho, &cnt, 0.6, 0.4).unwrap();
     let (mt, mr) = state.filled_means();
     let want = lasp::bandit::reward::weighted_rewards(&mt, &mr, 0.6, 0.4);
@@ -114,9 +115,9 @@ fn handle_and_direct_engine_agree() {
     let mut rng = Rng::new(23);
     let k = 128;
     let state = random_state(k, 500, &mut rng);
-    let tau: Vec<f32> = state.tau_sum.iter().map(|&v| v as f32).collect();
-    let rho: Vec<f32> = state.rho_sum.iter().map(|&v| v as f32).collect();
-    let cnt: Vec<f32> = state.counts.iter().map(|&v| v as f32).collect();
+    let tau: Vec<f32> = state.tau_sum().iter().map(|&v| v as f32).collect();
+    let rho: Vec<f32> = state.rho_sum().iter().map(|&v| v as f32).collect();
+    let cnt: Vec<f32> = state.counts().iter().map(|&v| v as f32).collect();
     let a = direct
         .lasp_step("lulesh", &tau, &rho, &cnt, 501.0, 0.8, 0.2, 0.25)
         .unwrap();

@@ -127,3 +127,32 @@ fn design_documents_fleet_protocol_and_checkpoint_format() {
         );
     }
 }
+
+#[test]
+fn design_documents_bandit_core_architecture() {
+    for needle in [
+        "Bandit core",
+        "ArmStats layout",
+        "Scratch lifecycle",
+        "Unified warm-start path",
+        "total_pulls",
+        "weighted_rewards_into",
+        "policy_golden",
+    ] {
+        assert!(
+            DESIGN_MD.contains(needle),
+            "DESIGN.md missing '{needle}' (bandit-core architecture section)"
+        );
+    }
+}
+
+#[test]
+fn api_doc_covers_every_policy_kind() {
+    // The serve config parses these policy names; each must be documented.
+    for policy in ["ucb", "swucb", "thompson", "epsilon", "subset"] {
+        assert!(
+            API_MD.contains(policy),
+            "docs/API.md does not document policy '{policy}'"
+        );
+    }
+}

@@ -309,3 +309,111 @@ fn sync_endpoints_validate_and_pushes_are_idempotent() {
 
     node.shutdown().unwrap();
 }
+
+#[test]
+fn epsilon_policy_rides_the_sync_plane_round_trip() {
+    // Satellite coverage for PolicyKind::Epsilon: an epsilon snapshot
+    // pushed over the wire installs a prior that warm-starts a fresh
+    // epsilon session, and that session's own measurements travel back
+    // out through /v1/sync/pull (ε-greedy was invisible to both planes
+    // before the unified core).
+    let node = start(cfg(None, 60_000, "solo-eps")).unwrap();
+    let addr = node.addr().to_string();
+    let mut client = HttpClient::connect(&addr).unwrap();
+
+    // Push a full-sweep epsilon snapshot where arm 5 dominates (every arm
+    // pulled once so the warm start skips the init sweep).
+    let arr = |v: Vec<f64>| Json::Arr(v.into_iter().map(Json::Num).collect());
+    let arms: Vec<f64> = (0..125).map(|a| a as f64).collect();
+    let counts: Vec<f64> = (0..125).map(|a| if a == 5 { 60.0 } else { 1.0 }).collect();
+    let tau: Vec<f64> = (0..125)
+        .map(|a| if a == 5 { 18.0 } else { 2.0 })
+        .collect();
+    let rho: Vec<f64> = counts.iter().map(|c| c * 5.0).collect();
+    let mut snap = BTreeMap::new();
+    snap.insert("app".to_string(), Json::Str("clomp".to_string()));
+    snap.insert("device".to_string(), Json::Str("maxn".to_string()));
+    snap.insert("policy".to_string(), Json::Str("epsilon".to_string()));
+    snap.insert("age_s".to_string(), Json::Num(0.0));
+    snap.insert("arms".to_string(), arr(arms));
+    snap.insert("counts".to_string(), arr(counts));
+    snap.insert("tau_sum".to_string(), arr(tau));
+    snap.insert("rho_sum".to_string(), arr(rho));
+    let mut push = BTreeMap::new();
+    push.insert("node_id".to_string(), Json::Str("peer-eps".to_string()));
+    push.insert("snapshots".to_string(), Json::Arr(vec![Json::Obj(snap)]));
+    let (status, resp) = client.post("/v1/sync/push", &Json::Obj(push)).unwrap();
+    assert_eq!(status, 200, "{resp:?}");
+    assert_eq!(resp.get("accepted").and_then(Json::as_usize), Some(1));
+
+    // A fresh epsilon session warm-starts from the pushed prior and
+    // reports locally; its delta then appears on a pull.
+    let eps = &[("policy", Json::Str("epsilon".to_string()))];
+    let (status, _) = client.post("/v1/suggest", &body("eps-fresh", eps)).unwrap();
+    assert_eq!(status, 200);
+    let (status, b) = client
+        .get(&format!("{}&policy=epsilon", best_query("eps-fresh")))
+        .unwrap();
+    assert_eq!(status, 200, "{b:?}");
+    assert_eq!(b.get("policy").and_then(Json::as_str), Some("epsilon-greedy"));
+    assert_eq!(
+        b.get("arm").and_then(Json::as_usize),
+        Some(5),
+        "epsilon session did not warm-start from the fleet prior: {b:?}"
+    );
+    let m = metrics_text(&mut client);
+    assert!(metric_value(&m, "lasp_serve_fleet_warm_starts_total") >= 1.0, "{m}");
+
+    // Report a fresh local measurement on arm 9 and wait for the batch
+    // plane to apply it.
+    let (status, _) = client
+        .post(
+            "/v1/report",
+            &body(
+                "eps-fresh",
+                &[
+                    ("policy", Json::Str("epsilon".to_string())),
+                    ("arm", Json::Num(9.0)),
+                    ("time_s", Json::Num(1.0)),
+                    ("power_w", Json::Num(5.0)),
+                ],
+            ),
+        )
+        .unwrap();
+    assert_eq!(status, 202);
+    assert!(
+        wait_until(
+            || {
+                let (s, b) = client
+                    .get(&format!("{}&policy=epsilon", best_query("eps-fresh")))
+                    .unwrap();
+                s == 200 && b.get("reports").and_then(Json::as_f64) == Some(1.0)
+            },
+            Duration::from_secs(10)
+        ),
+        "epsilon report never applied"
+    );
+
+    // The pull (as another peer) merges the pushed snapshot with this
+    // node's local epsilon aggregate — the local arm-9 delta must travel.
+    let mut pull = BTreeMap::new();
+    pull.insert("node_id".to_string(), Json::Str("peer-2".to_string()));
+    let (status, resp) = client.post("/v1/sync/pull", &Json::Obj(pull)).unwrap();
+    assert_eq!(status, 200);
+    let snaps = resp.get("snapshots").and_then(Json::as_arr).unwrap();
+    assert_eq!(snaps.len(), 1, "expected one merged epsilon scenario: {resp:?}");
+    assert_eq!(snaps[0].get("policy").and_then(Json::as_str), Some("epsilon"));
+    let arms = snaps[0].get("arms").and_then(Json::as_arr).unwrap();
+    let counts = snaps[0].get("counts").and_then(Json::as_arr).unwrap();
+    let pos9 = arms
+        .iter()
+        .position(|a| a.as_usize() == Some(9))
+        .expect("arm 9 missing from merged snapshot");
+    // The pushed snapshot carried one (decayed) pull on arm 9; the local
+    // epsilon measurement adds a full one on top — if the local delta
+    // were dropped the merged count would stay ~1.
+    let c9 = counts[pos9].as_f64().unwrap();
+    assert!(c9 > 1.5, "locally measured epsilon delta missing from pull: {c9}");
+
+    node.shutdown().unwrap();
+}

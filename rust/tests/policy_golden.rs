@@ -1,0 +1,492 @@
+//! Behavioral-equivalence golden test for the unified-core refactor.
+//!
+//! The five policies were rebuilt as thin strategy layers over the shared
+//! `ArmStats` engine; this test pins their *selection behaviour* to the
+//! pre-refactor implementations bit for bit. The "fixtures" are frozen
+//! reference implementations: the pre-refactor scoring pipeline
+//! (`RewardState` + `filled_means` → `weighted_rewards` → `ucb_scores` /
+//! fused `lasp_step`) copied verbatim below, driven through the same
+//! deterministic environment and seeds as the live policies. If a future
+//! change to the core or the kernels shifts even one selection, the arm
+//! sequences diverge and the failing iteration is reported.
+//!
+//! Both sides share `lasp::util::Rng` (untouched by the refactor); the
+//! per-iteration environment consumes a fixed number of draws per round,
+//! so sequences stay comparable even past a first divergence.
+//!
+//! Set `LASP_GOLDEN_REGEN=1` to (re)write the archived sequences to
+//! `rust/tests/fixtures/policy_golden.txt`; when that file exists the
+//! live sequences are additionally compared against it.
+
+use lasp::bandit::{
+    EpsilonGreedy, Policy, SlidingWindowUcb, SubsetTuner, ThompsonSampler, UcbTuner,
+};
+use lasp::util::Rng;
+use std::collections::VecDeque;
+
+// --- Frozen pre-refactor reference implementation ------------------------
+
+const UNPULLED_SCORE: f64 = 1.0e9;
+const REWARD_EPS: f64 = 1e-2;
+const MINMAX_EPS: f64 = 1e-9;
+const DEFAULT_EXPLORATION: f64 = 0.25;
+
+fn ref_argmax(xs: &[f64]) -> usize {
+    let mut best = 0;
+    let mut best_v = f64::NEG_INFINITY;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > best_v {
+            best_v = x;
+            best = i;
+        }
+    }
+    best
+}
+
+/// Pre-refactor `RewardState` (plain vectors, no caches).
+#[derive(Clone)]
+struct RefState {
+    tau_sum: Vec<f64>,
+    rho_sum: Vec<f64>,
+    counts: Vec<f64>,
+    t: f64,
+}
+
+impl RefState {
+    fn new(k: usize) -> RefState {
+        RefState {
+            tau_sum: vec![0.0; k],
+            rho_sum: vec![0.0; k],
+            counts: vec![0.0; k],
+            t: 1.0,
+        }
+    }
+
+    fn k(&self) -> usize {
+        self.counts.len()
+    }
+
+    fn observe(&mut self, arm: usize, time_s: f64, power_w: f64) {
+        self.tau_sum[arm] += time_s;
+        self.rho_sum[arm] += power_w;
+        self.counts[arm] += 1.0;
+        self.t += 1.0;
+    }
+
+    fn filled_means(&self) -> (Vec<f64>, Vec<f64>) {
+        let k = self.k();
+        let mut mean_tau = vec![0.0; k];
+        let mut mean_rho = vec![0.0; k];
+        let mut fill_tau = 0.0;
+        let mut fill_rho = 0.0;
+        let mut pulled = 0.0f64;
+        for i in 0..k {
+            if self.counts[i] > 0.0 {
+                mean_tau[i] = self.tau_sum[i] / self.counts[i];
+                mean_rho[i] = self.rho_sum[i] / self.counts[i];
+                fill_tau += mean_tau[i];
+                fill_rho += mean_rho[i];
+                pulled += 1.0;
+            }
+        }
+        let denom = pulled.max(1.0);
+        let (fill_tau, fill_rho) = (fill_tau / denom, fill_rho / denom);
+        for i in 0..k {
+            if self.counts[i] == 0.0 {
+                mean_tau[i] = fill_tau;
+                mean_rho[i] = fill_rho;
+            }
+        }
+        (mean_tau, mean_rho)
+    }
+}
+
+fn ref_minmax_eps(xs: &[f64]) -> Vec<f64> {
+    let lo = xs.iter().cloned().fold(f64::INFINITY, f64::min);
+    let hi = xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let range = (hi - lo).max(MINMAX_EPS);
+    xs.iter().map(|x| (x - lo) / range).collect()
+}
+
+fn ref_weighted_rewards(mean_tau: &[f64], mean_rho: &[f64], alpha: f64, beta: f64) -> Vec<f64> {
+    let tau_hat = ref_minmax_eps(mean_tau);
+    let rho_hat = ref_minmax_eps(mean_rho);
+    let raw: Vec<f64> = tau_hat
+        .iter()
+        .zip(&rho_hat)
+        .map(|(t, r)| alpha / (t + REWARD_EPS) + beta / (r + REWARD_EPS))
+        .collect();
+    ref_minmax_eps(&raw)
+}
+
+fn ref_ucb_scores(rewards: &[f64], counts: &[f64], t: f64, c: f64) -> Vec<f64> {
+    let log_t = t.max(1.0).ln();
+    rewards
+        .iter()
+        .zip(counts)
+        .map(|(r, n)| {
+            if *n > 0.0 {
+                r + c * (2.0 * log_t / n.max(1.0)).sqrt()
+            } else {
+                UNPULLED_SCORE
+            }
+        })
+        .collect()
+}
+
+/// Pre-refactor fused `ScalarBackend::lasp_step` (selection only).
+fn ref_lasp_step(state: &RefState, alpha: f64, beta: f64, exploration: f64) -> usize {
+    let k = state.k();
+    let counts = &state.counts;
+    let mut fill_tau = 0.0;
+    let mut fill_rho = 0.0;
+    let mut pulled = 0.0f64;
+    let mut tau_lo = f64::INFINITY;
+    let mut tau_hi = f64::NEG_INFINITY;
+    let mut rho_lo = f64::INFINITY;
+    let mut rho_hi = f64::NEG_INFINITY;
+    for i in 0..k {
+        if counts[i] > 0.0 {
+            let mt = state.tau_sum[i] / counts[i];
+            let mr = state.rho_sum[i] / counts[i];
+            fill_tau += mt;
+            fill_rho += mr;
+            pulled += 1.0;
+            tau_lo = tau_lo.min(mt);
+            tau_hi = tau_hi.max(mt);
+            rho_lo = rho_lo.min(mr);
+            rho_hi = rho_hi.max(mr);
+        }
+    }
+    let denom = pulled.max(1.0);
+    let fill_tau = fill_tau / denom;
+    let fill_rho = fill_rho / denom;
+    if pulled == 0.0 {
+        tau_lo = fill_tau;
+        tau_hi = fill_tau;
+        rho_lo = fill_rho;
+        rho_hi = fill_rho;
+    }
+    let tau_range = (tau_hi - tau_lo).max(MINMAX_EPS);
+    let rho_range = (rho_hi - rho_lo).max(MINMAX_EPS);
+
+    let mut rewards = vec![0.0f64; k];
+    let mut raw_lo = f64::INFINITY;
+    let mut raw_hi = f64::NEG_INFINITY;
+    for i in 0..k {
+        let (mt, mr) = if counts[i] > 0.0 {
+            (state.tau_sum[i] / counts[i], state.rho_sum[i] / counts[i])
+        } else {
+            (fill_tau, fill_rho)
+        };
+        let tau_hat = (mt - tau_lo) / tau_range;
+        let rho_hat = (mr - rho_lo) / rho_range;
+        let raw = alpha / (tau_hat + REWARD_EPS) + beta / (rho_hat + REWARD_EPS);
+        rewards[i] = raw;
+        raw_lo = raw_lo.min(raw);
+        raw_hi = raw_hi.max(raw);
+    }
+    let raw_range = (raw_hi - raw_lo).max(MINMAX_EPS);
+
+    let log_t = state.t.max(1.0).ln();
+    let bonus_base = 2.0 * log_t;
+    let mut best = 0usize;
+    let mut best_score = f64::NEG_INFINITY;
+    for i in 0..k {
+        let r = (rewards[i] - raw_lo) / raw_range;
+        let score = if counts[i] > 0.0 {
+            r + exploration * (bonus_base / counts[i]).sqrt()
+        } else {
+            UNPULLED_SCORE
+        };
+        if score > best_score {
+            best_score = score;
+            best = i;
+        }
+    }
+    best
+}
+
+/// Pre-refactor policy behaviours, each copied verbatim.
+enum RefPolicy {
+    Ucb {
+        state: RefState,
+        alpha: f64,
+        beta: f64,
+    },
+    Epsilon {
+        state: RefState,
+        alpha: f64,
+        beta: f64,
+        epsilon: f64,
+        rng: Rng,
+    },
+    Thompson {
+        state: RefState,
+        alpha: f64,
+        beta: f64,
+        rng: Rng,
+        obs_std: f64,
+    },
+    SwUcb {
+        alpha: f64,
+        beta: f64,
+        window: usize,
+        history: VecDeque<(usize, f64, f64)>,
+        state: RefState,
+    },
+    Subset {
+        inner: RefState,
+        alpha: f64,
+        beta: f64,
+        candidates: Vec<usize>,
+    },
+}
+
+impl RefPolicy {
+    fn ref_select(&mut self) -> usize {
+        match self {
+            RefPolicy::Ucb { state, alpha, beta } => {
+                ref_lasp_step(state, *alpha, *beta, DEFAULT_EXPLORATION)
+            }
+            RefPolicy::Epsilon { state, alpha, beta, epsilon, rng } => {
+                if let Some(arm) = state.counts.iter().position(|&c| c == 0.0) {
+                    return arm;
+                }
+                if rng.uniform() < *epsilon {
+                    return rng.below(state.k());
+                }
+                let (mt, mr) = state.filled_means();
+                let rewards = ref_weighted_rewards(&mt, &mr, *alpha, *beta);
+                ref_argmax(&rewards)
+            }
+            RefPolicy::Thompson { state, alpha, beta, rng, obs_std } => {
+                if let Some(arm) = state.counts.iter().position(|&c| c == 0.0) {
+                    return arm;
+                }
+                let (mt, mr) = state.filled_means();
+                let rewards = ref_weighted_rewards(&mt, &mr, *alpha, *beta);
+                let samples: Vec<f64> = rewards
+                    .iter()
+                    .zip(&state.counts)
+                    .map(|(r, n)| r + rng.normal() * *obs_std / n.max(1.0).sqrt())
+                    .collect();
+                ref_argmax(&samples)
+            }
+            RefPolicy::SwUcb { alpha, beta, history, state, .. } => {
+                if let Some(arm) = state.counts.iter().position(|&c| c == 0.0) {
+                    return arm;
+                }
+                let (mt, mr) = state.filled_means();
+                let rewards = ref_weighted_rewards(&mt, &mr, *alpha, *beta);
+                let t_eff = (history.len() as f64).max(1.0);
+                let scores = ref_ucb_scores(&rewards, &state.counts, t_eff, DEFAULT_EXPLORATION);
+                ref_argmax(&scores)
+            }
+            RefPolicy::Subset { inner, alpha, beta, candidates } => {
+                candidates[ref_lasp_step(inner, *alpha, *beta, DEFAULT_EXPLORATION)]
+            }
+        }
+    }
+
+    fn ref_update(&mut self, arm: usize, time_s: f64, power_w: f64) {
+        match self {
+            RefPolicy::Ucb { state, .. }
+            | RefPolicy::Epsilon { state, .. }
+            | RefPolicy::Thompson { state, .. } => state.observe(arm, time_s, power_w),
+            RefPolicy::SwUcb { window, history, state, .. } => {
+                history.push_back((arm, time_s, power_w));
+                state.tau_sum[arm] += time_s;
+                state.rho_sum[arm] += power_w;
+                state.counts[arm] += 1.0;
+                if history.len() > *window {
+                    let (old_arm, old_t, old_p) = history.pop_front().unwrap();
+                    state.tau_sum[old_arm] -= old_t;
+                    state.rho_sum[old_arm] -= old_p;
+                    state.counts[old_arm] -= 1.0;
+                    if state.counts[old_arm] < 1e-9 {
+                        state.counts[old_arm] = 0.0;
+                        state.tau_sum[old_arm] = 0.0;
+                        state.rho_sum[old_arm] = 0.0;
+                    }
+                }
+            }
+            RefPolicy::Subset { inner, candidates, .. } => {
+                let pos = candidates
+                    .iter()
+                    .position(|&c| c == arm)
+                    .expect("arm outside reference candidate subset");
+                inner.observe(pos, time_s, power_w);
+            }
+        }
+    }
+}
+
+// --- Shared deterministic environment -------------------------------------
+
+const ALPHA: f64 = 0.7;
+const BETA: f64 = 0.3;
+
+fn base_time(arm: usize) -> f64 {
+    0.5 + ((arm * 7919) % 97) as f64 / 40.0
+}
+
+fn base_power(arm: usize) -> f64 {
+    3.0 + ((arm * 104_729) % 11) as f64 * 0.5
+}
+
+/// Minimal select/update surface shared by the live policies and the
+/// frozen references.
+trait Agent {
+    fn select(&mut self) -> usize;
+    fn update(&mut self, arm: usize, time_s: f64, power_w: f64);
+}
+
+impl Agent for RefPolicy {
+    fn select(&mut self) -> usize {
+        self.ref_select()
+    }
+    fn update(&mut self, arm: usize, time_s: f64, power_w: f64) {
+        self.ref_update(arm, time_s, power_w)
+    }
+}
+
+impl Agent for Box<dyn Policy> {
+    fn select(&mut self) -> usize {
+        (**self).select()
+    }
+    fn update(&mut self, arm: usize, time_s: f64, power_w: f64) {
+        (**self).update(arm, time_s, power_w)
+    }
+}
+
+/// One scenario: iterate select → measure → update, recording the arm
+/// sequence. The environment consumes exactly two rng draws per round,
+/// whatever arm was chosen, so ref and live streams stay aligned.
+fn run(agent: &mut dyn Agent, iters: usize, env_seed: u64) -> Vec<usize> {
+    let mut env = Rng::new(env_seed);
+    let mut seq = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let arm = agent.select();
+        let time = base_time(arm) * env.relative_noise(0.05);
+        let power = base_power(arm) * env.relative_noise(0.02);
+        agent.update(arm, time, power);
+        seq.push(arm);
+    }
+    seq
+}
+
+struct Scenario {
+    name: &'static str,
+    env_seed: u64,
+    live: Box<dyn Policy>,
+    reference: RefPolicy,
+}
+
+fn scenarios() -> Vec<Scenario> {
+    let k = 24;
+    let window = 64;
+    let (big_k, m, subset_seed) = (2000, 48, 0xD00D);
+    vec![
+        Scenario {
+            name: "ucb",
+            env_seed: 0xE0,
+            live: Box::new(UcbTuner::new(k, ALPHA, BETA)),
+            reference: RefPolicy::Ucb { state: RefState::new(k), alpha: ALPHA, beta: BETA },
+        },
+        Scenario {
+            name: "epsilon",
+            env_seed: 0xE1,
+            live: Box::new(EpsilonGreedy::new(k, ALPHA, BETA, 0.1, 7)),
+            reference: RefPolicy::Epsilon {
+                state: RefState::new(k),
+                alpha: ALPHA,
+                beta: BETA,
+                epsilon: 0.1,
+                rng: Rng::new(7),
+            },
+        },
+        Scenario {
+            name: "thompson",
+            env_seed: 0xE2,
+            live: Box::new(ThompsonSampler::new(k, ALPHA, BETA, 11)),
+            reference: RefPolicy::Thompson {
+                state: RefState::new(k),
+                alpha: ALPHA,
+                beta: BETA,
+                rng: Rng::new(11),
+                obs_std: 0.25,
+            },
+        },
+        Scenario {
+            name: "swucb",
+            env_seed: 0xE3,
+            live: Box::new(SlidingWindowUcb::new(k, ALPHA, BETA, window)),
+            reference: RefPolicy::SwUcb {
+                alpha: ALPHA,
+                beta: BETA,
+                window,
+                history: VecDeque::new(),
+                state: RefState::new(k),
+            },
+        },
+        Scenario {
+            name: "subset",
+            env_seed: 0xE4,
+            live: Box::new(SubsetTuner::new(big_k, m, ALPHA, BETA, subset_seed)),
+            reference: RefPolicy::Subset {
+                // The pre-refactor candidate draw, verbatim.
+                inner: RefState::new(m),
+                alpha: ALPHA,
+                beta: BETA,
+                candidates: Rng::new(subset_seed).sample_indices(big_k, m),
+            },
+        },
+    ]
+}
+
+const ITERS: usize = 400;
+
+#[test]
+fn refactored_policies_reproduce_pre_refactor_sequences() {
+    let fixture_path = std::path::Path::new("rust/tests/fixtures/policy_golden.txt");
+    let regen = std::env::var("LASP_GOLDEN_REGEN").map(|v| v == "1").unwrap_or(false);
+    let mut archive = String::new();
+
+    for scenario in scenarios() {
+        let Scenario { name, env_seed, mut live, mut reference } = scenario;
+        let expected = run(&mut reference, ITERS, env_seed);
+        let got = run(&mut live, ITERS, env_seed);
+        for (i, (e, g)) in expected.iter().zip(&got).enumerate() {
+            assert_eq!(
+                g, e,
+                "{name}: refactored policy diverged from the pre-refactor \
+                 reference at iteration {i}"
+            );
+        }
+        // Eq. 4 consequences agree too.
+        let counts_total: f64 = live.counts().iter().sum();
+        assert_eq!(counts_total, ITERS as f64, "{name}");
+        assert_eq!(live.total_pulls(), ITERS as f64, "{name}");
+
+        archive.push_str(name);
+        archive.push(':');
+        for (i, arm) in got.iter().enumerate() {
+            archive.push(if i == 0 { ' ' } else { ',' });
+            archive.push_str(&arm.to_string());
+        }
+        archive.push('\n');
+    }
+
+    if regen {
+        std::fs::create_dir_all(fixture_path.parent().unwrap()).unwrap();
+        std::fs::write(fixture_path, &archive).unwrap();
+    } else if fixture_path.exists() {
+        let recorded = std::fs::read_to_string(fixture_path).unwrap();
+        assert_eq!(
+            archive, recorded,
+            "live sequences diverged from the archived fixtures \
+             (regenerate with LASP_GOLDEN_REGEN=1 only if the change is intended)"
+        );
+    }
+}

@@ -4,7 +4,7 @@
 //! same discipline is implemented directly: each property runs against many
 //! seeded random cases and reports the failing seed on violation.
 
-use lasp::bandit::{Policy, RewardState, ScalarBackend, ScoreBackend, SubsetTuner, UcbTuner};
+use lasp::bandit::{ArmStats, Policy, ScalarBackend, ScoreBackend, Scratch, SubsetTuner, UcbTuner};
 use lasp::space::{ParamDef, ParamSpace};
 use lasp::util::{stats, Rng};
 
@@ -56,20 +56,21 @@ fn prop_rewards_always_normalized() {
     // best arm's reward is exactly 1 when alpha = 1.
     forall(60, |rng| {
         let k = 2 + rng.below(40);
-        let mut state = RewardState::new(k);
+        let mut state = ArmStats::new(k);
         let pulls = 1 + rng.below(200);
         for _ in 0..pulls {
             state.observe(rng.below(k), rng.range(0.1, 10.0), rng.range(1.0, 12.0));
         }
-        let out = ScalarBackend.lasp_step(&state, 1.0, 0.0, 0.25).unwrap();
-        assert!(out.rewards.iter().all(|r| (-1e-12..=1.0 + 1e-12).contains(r)));
+        let mut scratch = Scratch::new();
+        ScalarBackend.lasp_step(&state, 1.0, 0.0, 0.25, &mut scratch).unwrap();
+        assert!(scratch.rewards.iter().all(|r| (-1e-12..=1.0 + 1e-12).contains(r)));
         // The arm with the minimum mean time gets reward 1.
         let (mt, _) = state.filled_means();
         let best_mean = stats::argmin(&mt);
         assert!(
-            (out.rewards[best_mean] - 1.0).abs() < 1e-9,
+            (scratch.rewards[best_mean] - 1.0).abs() < 1e-9,
             "best-mean arm reward {}",
-            out.rewards[best_mean]
+            scratch.rewards[best_mean]
         );
     });
 }
@@ -135,14 +136,16 @@ fn prop_scalar_step_deterministic() {
     // Same state must always produce the same selection (pure function).
     forall(30, |rng| {
         let k = 2 + rng.below(50);
-        let mut state = RewardState::new(k);
+        let mut state = ArmStats::new(k);
         for _ in 0..rng.below(100) + k {
             state.observe(rng.below(k), rng.range(0.1, 4.0), rng.range(1.0, 8.0));
         }
-        let a = ScalarBackend.lasp_step(&state, 0.8, 0.2, 0.25).unwrap();
-        let b = ScalarBackend.lasp_step(&state, 0.8, 0.2, 0.25).unwrap();
+        let mut sa = Scratch::new();
+        let mut sb = Scratch::new();
+        let a = ScalarBackend.lasp_step(&state, 0.8, 0.2, 0.25, &mut sa).unwrap();
+        let b = ScalarBackend.lasp_step(&state, 0.8, 0.2, 0.25, &mut sb).unwrap();
         assert_eq!(a.best, b.best);
-        assert_eq!(a.rewards, b.rewards);
+        assert_eq!(sa.rewards, sb.rewards);
     });
 }
 

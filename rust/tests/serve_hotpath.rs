@@ -229,11 +229,14 @@ fn steady_state_suggest_is_allocation_free_end_to_end() {
     let mut client = HttpClient::connect(&addr).unwrap();
     let payload = body("steady", "clomp", &[]);
 
-    // Warmup: buffers reach their high-water marks.
+    // Warmup: buffers reach their high-water marks — the transport's
+    // per-connection buffers AND the session's bandit-core scratch.
     for _ in 0..20 {
         assert_eq!(client.post_slice("/v1/suggest", payload.as_bytes()).unwrap(), 200);
     }
     let allocs_before = stats.alloc_events.load(Ordering::Relaxed);
+    let scratch_before = handle.bandit_scratch_growths();
+    assert!(scratch_before > 0, "warmup never touched the bandit scratch");
     for _ in 0..300 {
         assert_eq!(client.post_slice("/v1/suggest", payload.as_bytes()).unwrap(), 200);
     }
@@ -242,6 +245,36 @@ fn steady_state_suggest_is_allocation_free_end_to_end() {
         allocs, 0,
         "HTTP+JSON layers performed {allocs} buffer growths over 300 steady-state suggests"
     );
+    // The zero-allocation contract extends through the bandit core: the
+    // per-session scoring scratch must stay at its high-water mark.
+    let scratch_growths = handle.bandit_scratch_growths() - scratch_before;
+    assert_eq!(
+        scratch_growths, 0,
+        "bandit core grew its scratch {scratch_growths} times over 300 steady-state suggests"
+    );
+    drop(client);
+    handle.shutdown().unwrap();
+}
+
+#[test]
+fn epsilon_policy_serves_over_http() {
+    // PolicyKind::Epsilon rides the same serve surfaces as every other
+    // policy (the old Policy trait silently dropped it from checkpoints;
+    // the checkpoint/fleet round-trips are covered in serve/checkpoint.rs
+    // and rust/tests/fleet_sync.rs).
+    let handle = boot(2, 2);
+    let addr = handle.addr().to_string();
+    let mut client = HttpClient::connect(&addr).unwrap();
+    let payload = body("eps", "clomp", &[("policy", Json::Str("epsilon".to_string()))]);
+    for _ in 0..5 {
+        let status = client.post_slice("/v1/suggest", payload.as_bytes()).unwrap();
+        assert_eq!(status, 200);
+    }
+    let (status, resp) = client
+        .get("/v1/best?client_id=eps&app=clomp&device=maxn&alpha=1.0&beta=0.0&policy=epsilon")
+        .unwrap();
+    assert_eq!(status, 200, "{resp:?}");
+    assert_eq!(resp.get("policy").and_then(Json::as_str), Some("epsilon-greedy"));
     drop(client);
     handle.shutdown().unwrap();
 }
