@@ -17,34 +17,11 @@ use lasp::bandit::{
 };
 use lasp::util::json::Json;
 use lasp::util::Rng;
-use std::alloc::{GlobalAlloc, Layout, System};
 use std::collections::BTreeMap;
-use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Instant;
 
-/// System allocator wrapper counting every allocation (reallocs included).
-struct CountingAlloc;
-
-static ALLOCS: AtomicU64 = AtomicU64::new(0);
-
-unsafe impl GlobalAlloc for CountingAlloc {
-    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
-        ALLOCS.fetch_add(1, Ordering::Relaxed);
-        System.alloc(layout)
-    }
-
-    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
-        System.dealloc(ptr, layout)
-    }
-
-    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
-        ALLOCS.fetch_add(1, Ordering::Relaxed);
-        System.realloc(ptr, layout, new_size)
-    }
-}
-
 #[global_allocator]
-static GLOBAL: CountingAlloc = CountingAlloc;
+static GLOBAL: common::CountingAlloc = common::CountingAlloc;
 
 struct PolicyReport {
     name: &'static str,
@@ -71,11 +48,11 @@ fn measure(name: &'static str, mut policy: Box<dyn Policy>, rounds: usize) -> Po
     drive(policy.as_mut(), 2 * k.min(4096) + 64);
     let growths_before = policy.scratch_growths();
 
-    let allocs_before = ALLOCS.load(Ordering::Relaxed);
+    let allocs_before = common::alloc_count();
     let t0 = Instant::now();
     drive(policy.as_mut(), rounds);
     let elapsed = t0.elapsed().as_secs_f64();
-    let allocs = ALLOCS.load(Ordering::Relaxed) - allocs_before;
+    let allocs = common::alloc_count() - allocs_before;
 
     let report = PolicyReport {
         name,

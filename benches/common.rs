@@ -10,7 +10,38 @@
 // every helper, and CI denies warnings across all targets.
 #![allow(dead_code)]
 
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Instant;
+
+/// System allocator wrapper counting every allocation (reallocs included).
+/// Shared by the zero-alloc benches (`bandit_core`, `sim_engine`); each
+/// bench binary registers it itself:
+/// `#[global_allocator] static GLOBAL: common::CountingAlloc = common::CountingAlloc;`
+pub struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+/// Allocation events so far (monotonic; diff around a measured phase).
+pub fn alloc_count() -> u64 {
+    ALLOCS.load(Ordering::Relaxed)
+}
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
 
 /// Time one closure over `iters` runs; prints mean ± spread like criterion.
 pub fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) {

@@ -1,0 +1,151 @@
+//! Scenario-engine bench: steady-state episode steps/sec and — via the
+//! same counting global allocator as `benches/bandit_core.rs` — *exact*
+//! heap allocations per episode step, plus parallel sweep throughput
+//! (cells/sec, steps/sec) across the pool.
+//!
+//! The engine's contract is that a steady-state episode step (select →
+//! workload → device → observe → record) performs **zero** heap
+//! allocations for the UCB policy path; the shape check fails if it ever
+//! allocates, or if parallel sweep results stop matching the serial run.
+//!
+//! Emits `BENCH_sim.json` (path override: `LASP_BENCH_OUT`);
+//! `LASP_BENCH_QUICK=1` runs a short smoke variant for CI.
+
+#[path = "common.rs"]
+mod common;
+
+use lasp::apps::{self, AppKind};
+use lasp::bandit::UcbTuner;
+use lasp::device::{JetsonNano, PowerMode};
+use lasp::sim::{Episode, EpisodeSpec, PolicyStep, ScenarioGrid, StrategySpec, SweepRunner};
+use lasp::util::json::Json;
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+#[global_allocator]
+static GLOBAL: common::CountingAlloc = common::CountingAlloc;
+
+struct EpisodeReport {
+    app: &'static str,
+    steps_per_s: f64,
+    allocs_per_step: f64,
+}
+
+/// Steady-state stepping for one (app, UCB) episode: warm up past the
+/// init sweep, then measure a long run of manual steps.
+fn measure_episode(kind: AppKind, rounds: usize) -> EpisodeReport {
+    let app = apps::build(kind);
+    let k = app.space().len();
+    let mut device = JetsonNano::new(PowerMode::Maxn, 7).with_fidelity(0.15);
+    let mut policy = UcbTuner::new(k, 0.8, 0.2);
+    let mut step = PolicyStep::new(&mut policy);
+    let warmup = k.min(4096) + 64;
+    let spec = EpisodeSpec { iterations: warmup + rounds, ..Default::default() };
+    let mut episode = Episode::new(app.as_ref(), &mut device, &mut step, &[], &spec);
+
+    for _ in 0..warmup {
+        episode.step().expect("warmup step");
+    }
+    let allocs_before = common::alloc_count();
+    let t0 = Instant::now();
+    for _ in 0..rounds {
+        episode.step().expect("measured step");
+    }
+    let elapsed = t0.elapsed().as_secs_f64();
+    let allocs = common::alloc_count() - allocs_before;
+
+    let report = EpisodeReport {
+        app: kind.name(),
+        steps_per_s: rounds as f64 / elapsed.max(1e-12),
+        allocs_per_step: allocs as f64 / rounds as f64,
+    };
+    println!(
+        "bench sim_engine episode {:<8} {rounds} steps: {:>12.0} steps/s, {:.4} allocs/step",
+        report.app, report.steps_per_s, report.allocs_per_step
+    );
+    report
+}
+
+fn main() {
+    let quick = std::env::var("LASP_BENCH_QUICK").map(|v| v == "1").unwrap_or(false);
+    let rounds = if quick { 5_000 } else { 200_000 };
+
+    println!("## sim engine — steady-state episode stepping (UCB policy)");
+    let episodes: Vec<EpisodeReport> = [AppKind::Clomp, AppKind::Kripke, AppKind::Lulesh]
+        .into_iter()
+        .map(|kind| measure_episode(kind, rounds))
+        .collect();
+
+    // Parallel sweep throughput: the fig9-shaped grid (apps × objectives
+    // × seeds), serial vs pool, with a determinism cross-check.
+    let grid = ScenarioGrid {
+        apps: AppKind::all().to_vec(),
+        objectives: vec![(0.8, 0.2), (0.2, 0.8)],
+        strategies: vec![StrategySpec::Lasp],
+        seeds: if quick { vec![1, 2] } else { vec![1, 2, 3, 4, 5] },
+        iterations: if quick { 200 } else { 1000 },
+        record_trace: true,
+        ..Default::default()
+    };
+    let cells = grid.len();
+    let steps_total = (cells * grid.iterations) as f64;
+
+    let t0 = Instant::now();
+    let serial = SweepRunner::new(1).sweep(&grid).expect("serial sweep");
+    let serial_s = t0.elapsed().as_secs_f64();
+
+    let threads = std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1);
+    let t0 = Instant::now();
+    let pooled = SweepRunner::new(threads).sweep(&grid).expect("pooled sweep");
+    let pooled_s = t0.elapsed().as_secs_f64();
+
+    let deterministic = serial
+        .outcomes
+        .iter()
+        .zip(&pooled.outcomes)
+        .all(|(a, b)| a.trace == b.trace && a.best_index == b.best_index);
+    println!(
+        "bench sim_engine sweep {cells} cells × {} iters: serial {:>8.0} steps/s | {} threads {:>8.0} steps/s ({:.2}x)",
+        grid.iterations,
+        steps_total / serial_s.max(1e-12),
+        threads,
+        steps_total / pooled_s.max(1e-12),
+        serial_s / pooled_s.max(1e-12),
+    );
+
+    let mut episodes_json = BTreeMap::new();
+    for e in &episodes {
+        let mut o = BTreeMap::new();
+        o.insert("steps_per_s".to_string(), Json::Num(e.steps_per_s));
+        o.insert("allocs_per_step".to_string(), Json::Num(e.allocs_per_step));
+        episodes_json.insert(e.app.to_string(), Json::Obj(o));
+    }
+    let mut sweep_json = BTreeMap::new();
+    sweep_json.insert("cells".to_string(), Json::Num(cells as f64));
+    sweep_json.insert("iterations".to_string(), Json::Num(grid.iterations as f64));
+    sweep_json.insert("threads".to_string(), Json::Num(threads as f64));
+    sweep_json.insert("serial_steps_per_s".to_string(), Json::Num(steps_total / serial_s.max(1e-12)));
+    sweep_json.insert("pooled_steps_per_s".to_string(), Json::Num(steps_total / pooled_s.max(1e-12)));
+    sweep_json.insert("speedup".to_string(), Json::Num(serial_s / pooled_s.max(1e-12)));
+    sweep_json.insert("deterministic".to_string(), Json::Bool(deterministic));
+
+    let mut out = BTreeMap::new();
+    out.insert("bench".to_string(), Json::Str("sim_engine".to_string()));
+    out.insert(
+        "mode".to_string(),
+        Json::Str(if quick { "quick" } else { "full" }.to_string()),
+    );
+    out.insert("rounds".to_string(), Json::Num(rounds as f64));
+    out.insert("episodes".to_string(), Json::Obj(episodes_json));
+    out.insert("sweep".to_string(), Json::Obj(sweep_json));
+    let path = std::env::var("LASP_BENCH_OUT").unwrap_or_else(|_| "BENCH_sim.json".to_string());
+    std::fs::write(&path, Json::Obj(out).to_string() + "\n").expect("writing bench json");
+    println!("\nwrote {path}");
+
+    // Shape: zero allocations per steady-state UCB episode step on every
+    // app, and pool results identical to the serial run.
+    common::report_shape(
+        "sim_engine",
+        episodes.iter().all(|e| e.allocs_per_step == 0.0) && deterministic,
+    );
+}

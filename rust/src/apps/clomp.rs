@@ -57,10 +57,11 @@ impl AppModel for Clomp {
     }
 
     fn workload(&self, index: usize, fidelity: f64) -> Workload {
-        let cfg = self.space.decode(index);
-        let parts = cfg.values[0].as_int() as f64;
-        let zones = cfg.values[1].as_int() as f64;
-        let zsize = cfg.values[2].as_int() as f64;
+        // Allocation-free per-dimension decode: workload() sits on the
+        // episode hot path.
+        let parts = self.space.value_at(index, 0).as_int() as f64;
+        let zones = self.space.value_at(index, 1).as_int() as f64;
+        let zsize = self.space.value_at(index, 2).as_int() as f64;
 
         // Strong scaling: fixed total byte-work, fidelity-scaled.
         let total_bytes = 4.0e8 * fidelity_scale(fidelity, 0.05);

@@ -86,18 +86,20 @@ impl AppModel for Hypre {
     }
 
     fn workload(&self, index: usize, fidelity: f64) -> Workload {
-        let cfg = self.space.decode(index);
-        let px = cfg.values[0].as_int() as f64;
-        let py = cfg.values[1].as_int() as f64;
-        let strong = cfg.values[2].as_float();
-        let trunc = cfg.values[3].as_int() as f64;
-        let pmax = cfg.values[4].as_int() as f64;
-        let coarsen = cfg.values[5].as_int();
-        let relax = cfg.values[6].as_int();
-        let smooth_type = cfg.values[7].as_int();
-        let smooth_lvls = cfg.values[8].as_int() as f64;
-        let interp = cfg.values[9].as_int();
-        let agg = cfg.values[10].as_int() as f64;
+        // Allocation-free per-dimension decode (episode hot path; at 92k
+        // arms this is the sweep engine's hottest workload builder).
+        let v = |dim: usize| self.space.value_at(index, dim);
+        let px = v(0).as_int() as f64;
+        let py = v(1).as_int() as f64;
+        let strong = v(2).as_float();
+        let trunc = v(3).as_int() as f64;
+        let pmax = v(4).as_int() as f64;
+        let coarsen = v(5).as_int();
+        let relax = v(6).as_int();
+        let smooth_type = v(7).as_int();
+        let smooth_lvls = v(8).as_int() as f64;
+        let interp = v(9).as_int();
+        let agg = v(10).as_int() as f64;
 
         // ---- iterations to converge -------------------------------------
         // strong_threshold: classic convex valley around 0.25-0.5 for 3-D

@@ -88,10 +88,11 @@ impl AppModel for Kripke {
     }
 
     fn workload(&self, index: usize, fidelity: f64) -> Workload {
-        let cfg = self.space.decode(index);
-        let layout = cfg.values[0].as_tag().to_string();
-        let gsets = cfg.values[1].as_int() as f64;
-        let dsets = cfg.values[2].as_int() as f64;
+        // Allocation-free per-dimension decode (episode hot path): the
+        // layout tag is borrowed, never cloned.
+        let layout = self.space.value_at(index, 0).as_tag();
+        let gsets = self.space.value_at(index, 1).as_int() as f64;
+        let dsets = self.space.value_at(index, 2).as_int() as f64;
 
         // Block dims: groups-per-set × dirs-per-set × zones-per-tile.
         let g = TOTAL_GROUPS / gsets;
@@ -110,7 +111,7 @@ impl AppModel for Kripke {
         let l2 = 64.0 * 1024.0; // values that fit "L2" in the model
         let spill = if block > l2 { 1.0 + 0.25 * ((block / l2).ln()) } else { 1.0 };
 
-        let stride = Self::layout_penalty(&layout, g, d, z_tile);
+        let stride = Self::layout_penalty(layout, g, d, z_tile);
         let jitter = 1.0 + 0.02 * micro_jitter(APP_TAG, index);
 
         // Total angular work is gsets·dsets·(g·d)·zones = G·D·zones: fixed;

@@ -57,9 +57,9 @@ impl AppModel for Lulesh {
     }
 
     fn workload(&self, index: usize, fidelity: f64) -> Workload {
-        let cfg = self.space.decode(index);
-        let r = cfg.values[0].as_int() as f64; // regions: 1..=16
-        let s = cfg.values[1].as_int() as f64; // per-domain mesh edge: 1..=8
+        // Allocation-free per-dimension decode (episode hot path).
+        let r = self.space.value_at(index, 0).as_int() as f64; // regions: 1..=16
+        let s = self.space.value_at(index, 1).as_int() as f64; // per-domain mesh edge: 1..=8
 
         // Fixed total problem (the paper's HF run is mesh 80 ≈ 512k
         // elements); `s` decides how it is decomposed into (10s)³-element

@@ -2,7 +2,7 @@
 //! rule-based heuristic family the paper contrasts with (Kirkpatrick [10]):
 //! fast, but liable to park in local optima on rugged surfaces.
 
-use super::{EvalFn, Objective, Sample, SearchOutcome, Searcher};
+use super::{Decision, Measurement, Objective, SearchStep, Searcher};
 use crate::util::Rng;
 use anyhow::Result;
 
@@ -36,38 +36,76 @@ impl SimulatedAnnealing {
     }
 }
 
-impl Searcher for SimulatedAnnealing {
-    fn run(&mut self, k: usize, budget: usize, eval: &mut dyn EvalFn) -> Result<SearchOutcome> {
-        let q = eval.native_fidelity();
-        let mut trace = Vec::with_capacity(budget);
-        let mut current = self.rng.below(k);
-        let m0 = eval.eval(current, q);
-        self.objective.observe(&m0);
-        trace.push(Sample { index: current, measurement: m0, fidelity: q });
-        let mut current_cost = self.objective.cost(&m0);
-        let (mut best_index, mut best_cost) = (current, current_cost);
-        let mut temp = self.t0;
+/// One incremental annealing run: `next` proposes (the initial random
+/// point, then index-neighbourhood moves), `observe` applies Metropolis
+/// acceptance and cools the temperature.
+pub struct AnnealingRun<'a> {
+    search: &'a mut SimulatedAnnealing,
+    k: usize,
+    /// Incumbent position and its normalized cost (None before the first
+    /// observation).
+    current: Option<(usize, f64)>,
+    best: Option<(usize, f64)>,
+    temp: f64,
+}
 
-        while trace.len() < budget {
-            let cand = self.neighbour(current, k);
-            let m = eval.eval(cand, q);
-            self.objective.observe(&m);
-            trace.push(Sample { index: cand, measurement: m, fidelity: q });
-            let cost = self.objective.cost(&m);
-            // Metropolis acceptance on the normalized objective.
-            let accept = cost < current_cost
-                || self.rng.uniform() < ((current_cost - cost) / temp.max(1e-6)).exp();
-            if accept {
-                current = cand;
-                current_cost = cost;
+impl SearchStep for AnnealingRun<'_> {
+    fn next(&mut self) -> Result<Option<Decision>> {
+        let index = match self.current {
+            None => self.search.rng.below(self.k),
+            Some((current, _)) => self.search.neighbour(current, self.k),
+        };
+        Ok(Some(Decision::at_native(index)))
+    }
+
+    fn observe(&mut self, index: usize, _fidelity: f64, m: Measurement) {
+        self.search.objective.observe(&m);
+        let cost = self.search.objective.cost(&m);
+        match self.current {
+            None => {
+                self.current = Some((index, cost));
+                self.best = Some((index, cost));
             }
-            if cost < best_cost {
-                best_cost = cost;
-                best_index = cand;
+            Some((_, current_cost)) => {
+                // Metropolis acceptance on the normalized objective. The
+                // `||` short-circuit keeps the RNG draw order identical to
+                // the pre-refactor loop: no uniform is consumed on
+                // strictly-improving moves.
+                let accept = cost < current_cost
+                    || self.search.rng.uniform()
+                        < ((current_cost - cost) / self.temp.max(1e-6)).exp();
+                if accept {
+                    self.current = Some((index, cost));
+                }
+                let improved = match self.best {
+                    None => true,
+                    Some((_, b)) => cost < b,
+                };
+                if improved {
+                    self.best = Some((index, cost));
+                }
+                self.temp *= self.search.cooling;
             }
-            temp *= self.cooling;
         }
-        Ok(SearchOutcome { best_index, best_objective: best_cost, trace })
+    }
+
+    fn recommend(&self) -> usize {
+        self.best.map_or(0, |(i, _)| i)
+    }
+
+    fn best_objective(&self) -> f64 {
+        self.best.map_or(f64::INFINITY, |(_, c)| c)
+    }
+
+    fn name(&self) -> &'static str {
+        "simulated-annealing"
+    }
+}
+
+impl Searcher for SimulatedAnnealing {
+    fn begin<'a>(&'a mut self, k: usize, _budget: usize, _q: f64) -> Box<dyn SearchStep + 'a> {
+        let temp = self.t0;
+        Box::new(AnnealingRun { search: self, k, current: None, best: None, temp })
     }
 
     fn name(&self) -> &'static str {

@@ -11,7 +11,7 @@
 //! of BLISS vs LASP) and the §V-D discussion (BLISS converges in fewer
 //! evaluations but costs far more per iteration).
 
-use super::{EvalFn, Objective, Sample, SearchOutcome, Searcher};
+use super::{Decision, Measurement, Objective, SearchStep, Searcher};
 use crate::runtime::EngineHandle;
 use crate::util::{stats, Rng};
 use anyhow::{anyhow, Result};
@@ -256,50 +256,75 @@ impl BlissBo {
     }
 }
 
-impl Searcher for BlissBo {
-    fn run(&mut self, k: usize, budget: usize, eval: &mut dyn EvalFn) -> Result<SearchOutcome> {
-        let q = eval.native_fidelity();
-        let mut trace: Vec<Sample> = Vec::with_capacity(budget);
-        let mut seen: Vec<usize> = vec![];
+/// One incremental BLISS run: a random initial design, then one GP
+/// fit-and-propose per step over the most recent `max_obs` observations.
+pub struct BlissRun<'a> {
+    search: &'a mut BlissBo,
+    k: usize,
+    init: usize,
+    samples: Vec<(usize, Measurement)>,
+}
 
-        let init = self.init_samples.min(budget);
-        for _ in 0..init {
-            let index = self.rng.below(k);
-            let m = eval.eval(index, q);
-            self.objective.observe(&m);
-            trace.push(Sample { index, measurement: m, fidelity: q });
-            seen.push(index);
-        }
-
-        while trace.len() < budget {
-            // Rebuild y from the stable, latest objective extrema: reward =
-            // 1 − cost (BO maximizes).
-            let window = trace.len().saturating_sub(self.max_obs);
-            let obs: Vec<&Sample> = trace[window..].iter().collect();
-            let obs_x: Vec<Vec<f64>> =
-                obs.iter().map(|s| self.feat(s.index, k)).collect();
-            let obs_y: Vec<f64> = obs
-                .iter()
-                .map(|s| 1.0 - self.objective.cost(&s.measurement))
-                .collect();
-            let n_cand = self.candidates.min(k);
-            let cands = self.rng.sample_indices(k, n_cand);
-            let index = self.propose(k, &obs_x, &obs_y, &cands)?;
-            let m = eval.eval(index, q);
-            self.objective.observe(&m);
-            trace.push(Sample { index, measurement: m, fidelity: q });
-            seen.push(index);
-        }
-
-        let (mut best_index, mut best_cost) = (trace[0].index, f64::INFINITY);
-        for s in &trace {
-            let c = self.objective.cost(&s.measurement);
+impl BlissRun<'_> {
+    /// Score the whole run with the final objective extrema (stable
+    /// objective), exactly as the pre-refactor batch loop did.
+    fn best(&self) -> (usize, f64) {
+        let (mut best_index, mut best_cost) =
+            (self.samples.first().map_or(0, |s| s.0), f64::INFINITY);
+        for (index, m) in &self.samples {
+            let c = self.search.objective.cost(m);
             if c < best_cost {
                 best_cost = c;
-                best_index = s.index;
+                best_index = *index;
             }
         }
-        Ok(SearchOutcome { best_index, best_objective: best_cost, trace })
+        (best_index, best_cost)
+    }
+}
+
+impl SearchStep for BlissRun<'_> {
+    fn next(&mut self) -> Result<Option<Decision>> {
+        if self.samples.len() < self.init {
+            return Ok(Some(Decision::at_native(self.search.rng.below(self.k))));
+        }
+        // Rebuild y from the stable, latest objective extrema: reward =
+        // 1 − cost (BO maximizes).
+        let window = self.samples.len().saturating_sub(self.search.max_obs);
+        let obs = &self.samples[window..];
+        let obs_x: Vec<Vec<f64>> =
+            obs.iter().map(|(i, _)| self.search.feat(*i, self.k)).collect();
+        let obs_y: Vec<f64> = obs
+            .iter()
+            .map(|(_, m)| 1.0 - self.search.objective.cost(m))
+            .collect();
+        let n_cand = self.search.candidates.min(self.k);
+        let cands = self.search.rng.sample_indices(self.k, n_cand);
+        let index = self.search.propose(self.k, &obs_x, &obs_y, &cands)?;
+        Ok(Some(Decision::at_native(index)))
+    }
+
+    fn observe(&mut self, index: usize, _fidelity: f64, m: Measurement) {
+        self.search.objective.observe(&m);
+        self.samples.push((index, m));
+    }
+
+    fn recommend(&self) -> usize {
+        self.best().0
+    }
+
+    fn best_objective(&self) -> f64 {
+        self.best().1
+    }
+
+    fn name(&self) -> &'static str {
+        "bliss-bo"
+    }
+}
+
+impl Searcher for BlissBo {
+    fn begin<'a>(&'a mut self, k: usize, budget: usize, _q: f64) -> Box<dyn SearchStep + 'a> {
+        let init = self.init_samples.min(budget);
+        Box::new(BlissRun { search: self, k, init, samples: Vec::with_capacity(budget) })
     }
 
     fn name(&self) -> &'static str {

@@ -3,9 +3,11 @@
 //! best fraction, re-evaluate the survivors at higher fidelity, repeat.
 //! The natural multi-fidelity competitor to LASP's single-fidelity bandit.
 
-use super::{EvalFn, Objective, Sample, SearchOutcome, Searcher};
+use super::{Decision, Measurement, Objective, SearchStep, Searcher};
 use crate::util::Rng;
 use anyhow::Result;
+
+const RUNGS: usize = 3;
 
 /// Successive halving with geometric fidelity ramp.
 pub struct SuccessiveHalving {
@@ -28,57 +30,137 @@ impl SuccessiveHalving {
     }
 }
 
-impl Searcher for SuccessiveHalving {
-    fn run(&mut self, k: usize, budget: usize, eval: &mut dyn EvalFn) -> Result<SearchOutcome> {
-        let mut trace: Vec<Sample> = vec![];
-        // Rung count from budget: each rung keeps 1/eta of the cohort; the
-        // initial cohort is sized so the whole ladder fits the budget.
-        let rungs = 3usize;
-        // cohort + cohort/eta + cohort/eta² <= budget
-        let denom: f64 = (0..rungs).map(|r| 1.0 / (self.eta as f64).powi(r as i32)).sum();
-        let cohort_size = ((budget as f64 / denom) as usize).clamp(1, k);
+/// One incremental halving run: a rung ladder driven step by step. Costs
+/// are only comparable within one rung (execution time scales with
+/// fidelity), so each rung keeps its own [`Objective`] and the
+/// recommendation is the *latest* rung's winner.
+pub struct HalvingRun<'a> {
+    search: &'a mut SuccessiveHalving,
+    rung: usize,
+    cohort: Vec<usize>,
+    /// Next position within the current rung's cohort.
+    pos: usize,
+    /// Current rung fidelity.
+    q: f64,
+    q_hi: f64,
+    rung_obj: Objective,
+    rung_ms: Vec<(usize, Measurement)>,
+    last_winner: Option<(usize, f64)>,
+    done: bool,
+}
 
-        let mut cohort = self.rng.sample_indices(k, cohort_size);
-        let q_hi = 1.0f64.min(eval.native_fidelity().max(self.q_min) * 4.0);
-        // Costs are only comparable within one rung (execution time scales
-        // with fidelity), so the recommendation is the *last* rung's winner.
-        let mut last_winner: Option<(usize, f64)> = None;
-
-        for rung in 0..rungs {
-            // Geometric fidelity ramp: q_min -> q_hi across rungs.
-            let frac = rung as f64 / (rungs - 1).max(1) as f64;
-            let q = self.q_min * (q_hi / self.q_min).powf(frac);
-            // Per-rung objective: measurements at this fidelity only.
-            let mut rung_obj = Objective::new(self.objective.alpha, self.objective.beta);
-            let mut rung_ms: Vec<(usize, crate::device::Measurement)> = vec![];
-            for &index in &cohort {
-                if trace.len() >= budget {
-                    break;
-                }
-                let m = eval.eval(index, q);
-                rung_obj.observe(&m);
-                self.objective.observe(&m);
-                trace.push(Sample { index, measurement: m, fidelity: q });
-                rung_ms.push((index, m));
-            }
-            let mut scored: Vec<(usize, f64)> = rung_ms
-                .into_iter()
-                .map(|(i, m)| (i, rung_obj.cost(&m)))
-                .collect();
-            scored.sort_by(|a, b| a.1.total_cmp(&b.1));
-            if let Some(&(i, c)) = scored.first() {
-                last_winner = Some((i, c));
-            }
-            let keep = (scored.len() / self.eta).max(1);
-            cohort = scored.into_iter().take(keep).map(|(i, _)| i).collect();
-            if trace.len() >= budget || cohort.len() <= 1 {
-                break;
+impl HalvingRun<'_> {
+    /// Score the (possibly partial) current rung with its own objective.
+    fn rung_winner(&self) -> Option<(usize, f64)> {
+        let mut best: Option<(usize, f64)> = None;
+        for (index, m) in &self.rung_ms {
+            let c = self.rung_obj.cost(m);
+            let better = match best {
+                None => true,
+                Some((_, b)) => c < b,
+            };
+            if better {
+                best = Some((*index, c));
             }
         }
+        best
+    }
 
-        let (best_index, best_objective) =
-            last_winner.unwrap_or((cohort.first().copied().unwrap_or(0), f64::INFINITY));
-        Ok(SearchOutcome { best_index, best_objective, trace })
+    /// Close the current rung: record its winner, keep the best `1/eta`
+    /// of the cohort, and ramp the fidelity for the next rung.
+    fn finish_rung(&mut self) {
+        let mut scored: Vec<(usize, f64)> = self
+            .rung_ms
+            .iter()
+            .map(|(i, m)| (*i, self.rung_obj.cost(m)))
+            .collect();
+        scored.sort_by(|a, b| a.1.total_cmp(&b.1));
+        if let Some(&(i, c)) = scored.first() {
+            self.last_winner = Some((i, c));
+        }
+        let keep = (scored.len() / self.search.eta).max(1);
+        self.cohort = scored.into_iter().take(keep).map(|(i, _)| i).collect();
+        self.rung += 1;
+        if self.rung >= RUNGS || self.cohort.len() <= 1 {
+            self.done = true;
+            return;
+        }
+        // Geometric fidelity ramp: q_min -> q_hi across rungs.
+        let frac = self.rung as f64 / (RUNGS - 1).max(1) as f64;
+        self.q = self.search.q_min * (self.q_hi / self.search.q_min).powf(frac);
+        self.rung_obj = Objective::new(self.search.objective.alpha, self.search.objective.beta);
+        self.rung_ms.clear();
+        self.pos = 0;
+    }
+}
+
+impl SearchStep for HalvingRun<'_> {
+    fn next(&mut self) -> Result<Option<Decision>> {
+        if !self.done && self.pos >= self.cohort.len() {
+            self.finish_rung();
+        }
+        if self.done {
+            return Ok(None);
+        }
+        let index = self.cohort[self.pos];
+        self.pos += 1;
+        Ok(Some(Decision { index, fidelity: Some(self.q) }))
+    }
+
+    fn observe(&mut self, index: usize, _fidelity: f64, m: Measurement) {
+        self.search.objective.observe(&m);
+        self.rung_obj.observe(&m);
+        self.rung_ms.push((index, m));
+    }
+
+    fn recommend(&self) -> usize {
+        // A rung in flight (budget exhausted mid-rung, or a completed rung
+        // not yet closed by a further `next`) recommends its own winner —
+        // matching the pre-refactor batch loop, which always scored the
+        // final (possibly partial) rung.
+        if let Some((i, _)) = self.rung_winner() {
+            return i;
+        }
+        match self.last_winner {
+            Some((i, _)) => i,
+            None => self.cohort.first().copied().unwrap_or(0),
+        }
+    }
+
+    fn best_objective(&self) -> f64 {
+        if let Some((_, c)) = self.rung_winner() {
+            return c;
+        }
+        self.last_winner.map_or(f64::INFINITY, |(_, c)| c)
+    }
+
+    fn name(&self) -> &'static str {
+        "successive-halving"
+    }
+}
+
+impl Searcher for SuccessiveHalving {
+    fn begin<'a>(&'a mut self, k: usize, budget: usize, q: f64) -> Box<dyn SearchStep + 'a> {
+        // The initial cohort is sized so the whole ladder fits the budget:
+        // cohort + cohort/eta + cohort/eta² <= budget.
+        let denom: f64 = (0..RUNGS).map(|r| 1.0 / (self.eta as f64).powi(r as i32)).sum();
+        let cohort_size = ((budget as f64 / denom) as usize).clamp(1, k);
+        let cohort = self.rng.sample_indices(k, cohort_size);
+        let q_hi = 1.0f64.min(q.max(self.q_min) * 4.0);
+        let q0 = self.q_min;
+        let rung_obj = Objective::new(self.objective.alpha, self.objective.beta);
+        Box::new(HalvingRun {
+            search: self,
+            rung: 0,
+            cohort,
+            pos: 0,
+            q: q0,
+            q_hi,
+            rung_obj,
+            rung_ms: vec![],
+            last_winner: None,
+            done: false,
+        })
     }
 
     fn name(&self) -> &'static str {
@@ -122,5 +204,25 @@ mod tests {
         let mut s = SuccessiveHalving::new(3, 1.0, 0.0);
         let mut eval = FnEval { f: valley_eval(80, 4), fidelity: 0.2 };
         assert!(s.run(80, 90, &mut eval).unwrap().evaluations() <= 90);
+    }
+
+    #[test]
+    fn ladder_finishes_before_large_budget() {
+        // With a huge budget the ladder converges to <=1 survivor and the
+        // stepper reports exhaustion (`next` -> None) instead of looping.
+        let mut s = SuccessiveHalving::new(5, 1.0, 0.0);
+        let mut f = valley_eval(40, 6);
+        let mut step = s.begin(40, 10_000, 0.2);
+        let mut evals = 0;
+        while let Some(d) = step.next().unwrap() {
+            let q = d.fidelity.unwrap_or(0.2);
+            let m = f(d.index, q);
+            step.observe(d.index, q, m);
+            evals += 1;
+            assert!(evals < 10_000, "ladder never exhausted");
+        }
+        assert!(evals > 0);
+        let rec = step.recommend();
+        assert!(rec < 40);
     }
 }

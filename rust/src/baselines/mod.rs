@@ -57,6 +57,53 @@ pub trait EvalFn {
     fn native_fidelity(&self) -> f64;
 }
 
+/// One incremental search decision: evaluate configuration `index`, at an
+/// explicit fidelity if the strategy controls it (successive halving), or
+/// at the environment's native fidelity when `None`.
+#[derive(Debug, Clone, Copy)]
+pub struct Decision {
+    pub index: usize,
+    pub fidelity: Option<f64>,
+}
+
+impl Decision {
+    /// A decision at the environment's native fidelity.
+    pub fn at_native(index: usize) -> Decision {
+        Decision { index, fidelity: None }
+    }
+}
+
+/// The incremental stepping interface every search strategy exposes — the
+/// same select/observe contract as a bandit [`crate::bandit::Policy`], so
+/// the `sim` engine can drive baselines and policies through one episode
+/// loop. Obtained from [`Searcher::begin`]; the borrow ties the run to its
+/// parent searcher (RNG and objective state live there).
+pub trait SearchStep: Send {
+    /// The next configuration to evaluate, or `None` when the strategy has
+    /// exhausted its schedule before the episode budget (successive
+    /// halving's ladder can converge early). Errors abort the episode
+    /// (e.g. a GP fit on a non-positive-definite kernel).
+    fn next(&mut self) -> Result<Option<Decision>>;
+
+    /// Observe the measurement for `index` evaluated at `fidelity`.
+    fn observe(&mut self, index: usize, fidelity: f64, m: Measurement);
+
+    /// The configuration the strategy currently recommends.
+    fn recommend(&self) -> usize;
+
+    /// Objective value of the recommendation (as seen by the searcher).
+    fn best_objective(&self) -> f64;
+
+    /// Per-arm pull counts, when the strategy tracks them (bandits do;
+    /// search heuristics generally do not).
+    fn counts(&self) -> Option<&[f64]> {
+        None
+    }
+
+    /// Strategy name for reports.
+    fn name(&self) -> &'static str;
+}
+
 /// Adapter so closures `(usize, f64) -> Measurement` can serve as [`EvalFn`]
 /// with an explicit native fidelity tag.
 pub struct FnEval<F: FnMut(usize, f64) -> Measurement> {
@@ -75,12 +122,39 @@ impl<F: FnMut(usize, f64) -> Measurement> EvalFn for FnEval<F> {
 }
 
 /// A sequential configuration searcher.
-pub trait Searcher {
-    /// Search over `k` arms with at most `budget` evaluations.
-    fn run(&mut self, k: usize, budget: usize, eval: &mut dyn EvalFn) -> Result<SearchOutcome>;
+///
+/// Since the unified-engine refactor a searcher is a *factory* for
+/// incremental [`SearchStep`] runs; the old per-searcher evaluation loops
+/// are gone. [`Searcher::run`] is provided once, here, as the single
+/// batch-mode loop over the stepping interface — `sim::Episode` drives the
+/// very same steps for scenario-engine runs.
+pub trait Searcher: Send {
+    /// Start an incremental search over `k` arms with an evaluation budget
+    /// of `budget` and the environment's native fidelity `q`.
+    fn begin<'a>(&'a mut self, k: usize, budget: usize, q: f64) -> Box<dyn SearchStep + 'a>;
 
     /// Strategy name for reports.
     fn name(&self) -> &'static str;
+
+    /// Search over `k` arms with at most `budget` evaluations — the one
+    /// shared select/evaluate/observe loop.
+    fn run(&mut self, k: usize, budget: usize, eval: &mut dyn EvalFn) -> Result<SearchOutcome> {
+        let q = eval.native_fidelity();
+        let mut step = self.begin(k, budget, q);
+        let mut trace = Vec::with_capacity(budget);
+        while trace.len() < budget {
+            let Some(d) = step.next()? else { break };
+            let fidelity = d.fidelity.unwrap_or(q);
+            let measurement = eval.eval(d.index, fidelity);
+            step.observe(d.index, fidelity, measurement);
+            trace.push(Sample { index: d.index, measurement, fidelity });
+        }
+        Ok(SearchOutcome {
+            best_index: step.recommend(),
+            best_objective: step.best_objective(),
+            trace,
+        })
+    }
 }
 
 /// Scalarizes measurements into the search objective (lower = better),

@@ -1,6 +1,6 @@
 //! Uniform random search — the canonical sanity baseline.
 
-use super::{EvalFn, Objective, Sample, SearchOutcome, Searcher};
+use super::{Decision, Measurement, Objective, SearchStep, Searcher};
 use crate::util::Rng;
 use anyhow::Result;
 
@@ -16,26 +16,56 @@ impl RandomSearch {
     }
 }
 
-impl Searcher for RandomSearch {
-    fn run(&mut self, k: usize, budget: usize, eval: &mut dyn EvalFn) -> Result<SearchOutcome> {
-        let q = eval.native_fidelity();
-        let mut trace = Vec::with_capacity(budget);
-        for _ in 0..budget {
-            let index = self.rng.below(k);
-            let measurement = eval.eval(index, q);
-            self.objective.observe(&measurement);
-            trace.push(Sample { index, measurement, fidelity: q });
-        }
-        // Score the whole trace with the final extrema (stable objective).
-        let (mut best_index, mut best_objective) = (trace[0].index, f64::INFINITY);
-        for s in &trace {
-            let c = self.objective.cost(&s.measurement);
+/// One incremental random-search run. Samples are kept so the
+/// recommendation can be scored against the final objective extrema
+/// (stable objective), exactly as the pre-refactor batch loop did.
+pub struct RandomSearchRun<'a> {
+    search: &'a mut RandomSearch,
+    k: usize,
+    samples: Vec<(usize, Measurement)>,
+}
+
+impl RandomSearchRun<'_> {
+    fn best(&self) -> (usize, f64) {
+        let (mut best_index, mut best_objective) =
+            (self.samples.first().map_or(0, |s| s.0), f64::INFINITY);
+        for (index, m) in &self.samples {
+            let c = self.search.objective.cost(m);
             if c < best_objective {
                 best_objective = c;
-                best_index = s.index;
+                best_index = *index;
             }
         }
-        Ok(SearchOutcome { best_index, best_objective, trace })
+        (best_index, best_objective)
+    }
+}
+
+impl SearchStep for RandomSearchRun<'_> {
+    fn next(&mut self) -> Result<Option<Decision>> {
+        Ok(Some(Decision::at_native(self.search.rng.below(self.k))))
+    }
+
+    fn observe(&mut self, index: usize, _fidelity: f64, m: Measurement) {
+        self.search.objective.observe(&m);
+        self.samples.push((index, m));
+    }
+
+    fn recommend(&self) -> usize {
+        self.best().0
+    }
+
+    fn best_objective(&self) -> f64 {
+        self.best().1
+    }
+
+    fn name(&self) -> &'static str {
+        "random"
+    }
+}
+
+impl Searcher for RandomSearch {
+    fn begin<'a>(&'a mut self, k: usize, budget: usize, _q: f64) -> Box<dyn SearchStep + 'a> {
+        Box::new(RandomSearchRun { search: self, k, samples: Vec::with_capacity(budget) })
     }
 
     fn name(&self) -> &'static str {
@@ -65,5 +95,25 @@ mod tests {
             s.run(50, 40, &mut eval).unwrap().best_index
         };
         assert_eq!(run(5), run(5));
+    }
+
+    #[test]
+    fn stepping_interface_matches_batch_run() {
+        // The default `Searcher::run` drives `begin()`; a hand-rolled loop
+        // over the same steps must land on the same recommendation.
+        let mut batch = RandomSearch::new(9, 1.0, 0.0);
+        let mut eval = FnEval { f: valley_eval(60, 4), fidelity: 0.2 };
+        let expect = batch.run(60, 50, &mut eval).unwrap().best_index;
+
+        let mut s = RandomSearch::new(9, 1.0, 0.0);
+        let mut f = valley_eval(60, 4);
+        let mut step = s.begin(60, 50, 0.2);
+        for _ in 0..50 {
+            let d = step.next().unwrap().unwrap();
+            let q = d.fidelity.unwrap_or(0.2);
+            let m = f(d.index, q);
+            step.observe(d.index, q, m);
+        }
+        assert_eq!(step.recommend(), expect);
     }
 }

@@ -1,13 +1,16 @@
 //! Edge-device worker: one thread per simulated Jetson, executing tuning
 //! jobs with a local UCB tuner and streaming progress beacons to the
-//! leader. Python never appears here — if the PJRT backend is enabled the
-//! worker scores arms through the shared [`crate::runtime::EngineHandle`].
+//! leader. The tuning loop itself is one manually-stepped
+//! [`crate::sim::Episode`] (the worker polls its mailbox between steps);
+//! Python never appears here — if the PJRT backend is enabled the worker
+//! scores arms through the shared [`crate::runtime::EngineHandle`].
 
 use super::messages::{LinkSim, Message};
 use crate::apps::{self};
 use crate::bandit::{Policy, SubsetTuner, UcbTuner};
 use crate::device::{Device, JetsonNano, NoiseModel, PowerMode};
 use crate::runtime::{EngineHandle, PjrtScoreBackend};
+use crate::sim::{Episode, EpisodeSpec, PolicyStep};
 use std::sync::mpsc::{Receiver, Sender, TryRecvError};
 
 /// Static worker parameters.
@@ -118,11 +121,9 @@ fn worker_loop(
         match msg {
             Message::Shutdown => return,
             Message::SetPowerMode { mode } => {
-                // Mode switch mid-fleet: new spec, thermals persist.
-                let seed = config.seed.wrapping_add(0x5157);
-                device = JetsonNano::new(mode, seed)
-                    .with_fidelity(config.fidelity)
-                    .with_injected_noise(config.injected_noise);
+                // Mode switch mid-fleet: new operating point in place,
+                // thermals persist.
+                device.switch_mode(mode);
             }
             Message::TuneJob { job_id, app, iterations, alpha, beta } => {
                 let model = apps::build(app);
@@ -145,50 +146,47 @@ fn worker_loop(
                     }
                 };
                 let started = std::time::Instant::now();
-                let mut device_seconds = 0.0;
-                for it in 0..iterations {
+                let spec = EpisodeSpec { iterations, ..Default::default() };
+                let mut step = PolicyStep::new(tuner.as_mut());
+                let mut episode = Episode::new(model.as_ref(), &mut device, &mut step, &[], &spec);
+                loop {
                     // Mid-job control: handle mode switches without abandoning
                     // the job (the bandit adapts to the new distribution).
                     match rx.try_recv() {
-                        Ok(Message::SetPowerMode { mode }) => {
-                            let seed = config.seed.wrapping_add(it as u64);
-                            device = JetsonNano::new(mode, seed)
-                                .with_fidelity(config.fidelity)
-                                .with_injected_noise(config.injected_noise);
-                        }
+                        Ok(Message::SetPowerMode { mode }) => episode.switch_mode(mode),
                         Ok(Message::Shutdown) => return,
                         Ok(_) | Err(TryRecvError::Empty) => {}
                         Err(TryRecvError::Disconnected) => return,
                     }
-                    let arm = tuner.select();
-                    let w = model.workload(arm, device.fidelity());
-                    let m = device.run(&w);
-                    device_seconds += m.time_s;
-                    tuner.update(arm, m.time_s, m.power_w);
-                    if (it + 1) % config.progress_every == 0 {
+                    if episode.step().expect("policy episodes cannot fail").is_none() {
+                        break;
+                    }
+                    let it = episode.t();
+                    if it % config.progress_every == 0 {
+                        let current_best = episode.recommend();
                         send_up(
                             link,
                             &uplink,
                             Message::Progress {
                                 job_id,
                                 device_id: config.device_id,
-                                iterations_done: it + 1,
-                                current_best: tuner.most_selected(),
+                                iterations_done: it,
+                                current_best,
                             },
                         );
                     }
                 }
-                let best_index = tuner.most_selected();
+                let out = episode.finish();
                 send_up_confirmable(
                     link,
                     &uplink,
                     Message::JobDone {
                         job_id,
                         device_id: config.device_id,
-                        best_index,
-                        pulls_of_best: tuner.counts()[best_index],
+                        best_index: out.best_index,
+                        pulls_of_best: out.counts.expect("policy counts")[out.best_index],
                         tuner_wall_seconds: started.elapsed().as_secs_f64(),
-                        simulated_device_seconds: device_seconds,
+                        simulated_device_seconds: out.simulated_device_seconds,
                     },
                 );
             }

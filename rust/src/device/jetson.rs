@@ -138,6 +138,12 @@ impl JetsonNano {
         self.mode
     }
 
+    /// The seed this board was constructed with (preserved across
+    /// builder-style reconfiguration — see `experiments::harness::AppEval`).
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
     /// Current die temperature (for telemetry).
     pub fn temperature_c(&self) -> f64 {
         self.thermal.temperature()
@@ -178,6 +184,17 @@ impl Device for JetsonNano {
         self.thermal.reset();
         self.rng = Rng::new(self.seed);
         self.runs = 0;
+    }
+
+    fn switch_mode(&mut self, mode: PowerMode) {
+        // In-place operating-point change: thermal state, RNG stream and
+        // run counter persist, exactly like `nvpmodel -m` on a live board.
+        self.mode = mode;
+        self.spec = mode.spec();
+    }
+
+    fn set_injected_noise(&mut self, noise: NoiseModel) {
+        self.injected_noise = noise;
     }
 }
 
@@ -262,5 +279,36 @@ mod tests {
     fn fidelity_builder() {
         let d = JetsonNano::new(PowerMode::Maxn, 1).with_fidelity(0.3);
         assert_eq!(d.fidelity(), 0.3);
+    }
+
+    #[test]
+    fn switch_mode_changes_spec_keeps_state() {
+        let mut d = JetsonNano::new(PowerMode::Maxn, 11).with_intrinsic_noise(NoiseModel::none());
+        let before = d.run(&wl());
+        d.switch_mode(PowerMode::FiveW);
+        assert_eq!(d.mode(), PowerMode::FiveW);
+        assert_eq!(d.spec().cores, 2);
+        let after = d.run(&wl());
+        assert!(after.time_s > before.time_s, "{} !> {}", after.time_s, before.time_s);
+        assert!(after.power_w <= 5.0 + 1e-6);
+        // Run counter survived the switch.
+        assert_eq!(d.run_count(), 2);
+    }
+
+    #[test]
+    fn injected_noise_settable_mid_run() {
+        let mut d = JetsonNano::new(PowerMode::Maxn, 12).with_intrinsic_noise(NoiseModel::none());
+        let light = Workload { compute: 0.2, ..wl() };
+        let clean = d.run(&light);
+        d.set_injected_noise(NoiseModel::uniform(0.15));
+        let noisy: Vec<f64> = (0..50).map(|_| d.run(&light).time_s).collect();
+        let spread = crate::util::stats::std_dev(&noisy) / crate::util::stats::mean(&noisy);
+        assert!(spread > 0.01, "noise burst had no effect: {spread}");
+        assert!(clean.time_s > 0.0);
+    }
+
+    #[test]
+    fn seed_accessor_reports_construction_seed() {
+        assert_eq!(JetsonNano::new(PowerMode::Maxn, 77).seed(), 77);
     }
 }

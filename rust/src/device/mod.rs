@@ -81,6 +81,16 @@ pub trait Device: Send {
 
     /// Reset mutable state (thermals, noise stream) between experiments.
     fn reset(&mut self);
+
+    /// Switch the operating power mode mid-run, keeping thermal and RNG
+    /// state (a real board's `nvpmodel -m` does not cool the die or reseed
+    /// the universe). Devices without power modes ignore the request.
+    fn switch_mode(&mut self, _mode: jetson::PowerMode) {}
+
+    /// Replace the injected synthetic measurement error mid-run (noise
+    /// bursts in nonstationary scenarios). Devices without an injection
+    /// port ignore the request.
+    fn set_injected_noise(&mut self, _noise: NoiseModel) {}
 }
 
 /// Deterministic core of the device model, shared by Jetson and HPC node:

@@ -2,9 +2,10 @@
 //! at α = 0.8 (time focus) and α = 0.2 (power focus). The paper shows
 //! regret saturating after an initial trial-and-error phase.
 
-use super::harness::{print_table, run_with_regret};
+use super::harness::print_table;
 use crate::apps::AppKind;
 use crate::device::PowerMode;
+use crate::sim::{Scenario, SweepRunner};
 
 /// One regret curve.
 #[derive(Debug, Clone)]
@@ -38,23 +39,31 @@ pub struct Fig11 {
     pub iterations: usize,
 }
 
-/// Best-of-`tries` regret runs per (app, α).
+/// Best-of-`tries` regret runs per (app, α), all tries fanned out as one
+/// parallel sweep with the regret oracle installed per cell.
 pub fn run(iterations: usize, tries: usize) -> Fig11 {
-    let mut curves = vec![];
+    let mut grid = vec![];
     for app in AppKind::all() {
         for alpha in [0.8, 0.2] {
-            let beta = 1.0 - alpha;
-            let best = (0..tries)
-                .map(|t| {
-                    run_with_regret(
-                        app,
-                        PowerMode::Maxn,
-                        iterations,
-                        alpha,
-                        beta,
-                        1100 + t as u64,
-                    )
-                })
+            for t in 0..tries {
+                grid.push(
+                    Scenario::lasp(app, PowerMode::Maxn, iterations, 1100 + t as u64)
+                        .with_objective(alpha, 1.0 - alpha)
+                        .recording_regret(),
+                );
+            }
+        }
+    }
+    let outcomes = SweepRunner::new(0).run(&grid).expect("fig11 sweep");
+
+    let mut curves = vec![];
+    let mut cursor = outcomes.into_iter();
+    for app in AppKind::all() {
+        for alpha in [0.8, 0.2] {
+            let best = cursor
+                .by_ref()
+                .take(tries)
+                .map(|out| out.regret.expect("regret installed"))
                 .min_by(|a, b| {
                     a.last().unwrap_or(&f64::INFINITY).total_cmp(b.last().unwrap_or(&f64::INFINITY))
                 })

@@ -3,9 +3,10 @@
 //! network fluctuation). The paper's claim: gains degrade gracefully, LASP
 //! keeps finding good configurations.
 
-use super::harness::{edge_oracle, print_table, run_lasp, LF_FIDELITY};
+use super::harness::{edge_oracle, print_table, LF_FIDELITY};
 use crate::apps::{self, AppKind};
 use crate::device::{NoiseModel, PowerMode};
+use crate::sim::{Scenario, SweepRunner};
 use crate::util::stats;
 
 /// One (app, noise level) cell.
@@ -24,30 +25,40 @@ pub struct Fig12 {
     pub iterations: usize,
 }
 
-/// Run all apps × noise ∈ {0, 5, 10, 15}%.
+/// Run all apps × noise ∈ {0, 5, 10, 15}% × seeds as one parallel sweep.
 pub fn run(iterations: usize, seeds: usize) -> Fig12 {
-    let mut cells = vec![];
+    const NOISE_PCTS: [f64; 4] = [0.0, 0.05, 0.10, 0.15];
+    let mut grid = vec![];
     for app in AppKind::all() {
-        let sweep = edge_oracle(app, PowerMode::Maxn, LF_FIDELITY);
-        let default = apps::build(app).default_index();
-        for noise_pct in [0.0, 0.05, 0.10, 0.15] {
+        for noise_pct in NOISE_PCTS {
             let noise = if noise_pct > 0.0 {
                 NoiseModel::uniform(noise_pct)
             } else {
                 NoiseModel::none()
             };
-            let gains: Vec<f64> = (0..seeds)
-                .map(|s| {
-                    let (best, _, _) = run_lasp(
-                        app,
-                        PowerMode::Maxn,
-                        iterations,
-                        0.8,
-                        0.2,
-                        1200 + s as u64,
-                        noise,
-                    );
-                    (sweep[default].time_s - sweep[best].time_s) / sweep[default].time_s
+            for s in 0..seeds {
+                grid.push(
+                    Scenario::lasp(app, PowerMode::Maxn, iterations, 1200 + s as u64)
+                        .with_objective(0.8, 0.2)
+                        .with_noise(noise),
+                );
+            }
+        }
+    }
+    let outcomes = SweepRunner::new(0).run(&grid).expect("fig12 sweep");
+
+    let mut cells = vec![];
+    let mut cursor = outcomes.into_iter();
+    for app in AppKind::all() {
+        let sweep = edge_oracle(app, PowerMode::Maxn, LF_FIDELITY);
+        let default = apps::build(app).default_index();
+        for noise_pct in NOISE_PCTS {
+            let gains: Vec<f64> = cursor
+                .by_ref()
+                .take(seeds)
+                .map(|out| {
+                    (sweep[default].time_s - sweep[out.best_index].time_s)
+                        / sweep[default].time_s
                         * 100.0
                 })
                 .collect();

@@ -26,22 +26,22 @@ pub struct Fig2 {
     pub rows: Vec<Fig2Row>,
 }
 
-/// Run the experiment for the apps the paper uses in this figure.
+/// Run the experiment for the apps the paper uses in this figure, one app
+/// per pool slot (Hypre's 92k-arm LF+HF sweeps dominate).
 pub fn run() -> Fig2 {
     let edge = PowerMode::Maxn.spec();
     let hpc_node = HpcNode::new(0);
     let hpc = hpc_node.spec();
-    let rows = [AppKind::Lulesh, AppKind::Kripke, AppKind::Clomp, AppKind::Hypre]
-        .into_iter()
-        .map(|kind| {
-            let app = apps::build(kind);
-            Fig2Row {
-                app: kind,
-                avg_distance_pct: lf_topk_hf_distance(app.as_ref(), &edge, hpc, LF_FIDELITY, 20),
-                common_in_top20: lf_hf_topk_overlap(app.as_ref(), &edge, hpc, LF_FIDELITY, 20),
-            }
-        })
-        .collect();
+    let kinds = [AppKind::Lulesh, AppKind::Kripke, AppKind::Clomp, AppKind::Hypre];
+    let rows = crate::sim::SweepRunner::new(0).map(kinds.len(), |i| {
+        let kind = kinds[i];
+        let app = apps::build(kind);
+        Fig2Row {
+            app: kind,
+            avg_distance_pct: lf_topk_hf_distance(app.as_ref(), &edge, hpc, LF_FIDELITY, 20),
+            common_in_top20: lf_hf_topk_overlap(app.as_ref(), &edge, hpc, LF_FIDELITY, 20),
+        }
+    });
     Fig2 { rows }
 }
 

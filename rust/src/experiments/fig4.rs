@@ -21,31 +21,28 @@ pub struct Fig4 {
     pub sweeps: Vec<ParamSweep>,
 }
 
-/// Sweep each Kripke parameter independently at HF.
+/// Sweep each Kripke parameter independently at HF, one parameter per
+/// pool slot.
 pub fn run() -> Fig4 {
     let app = apps::build(AppKind::Kripke);
     let sweep = edge_oracle(AppKind::Kripke, PowerMode::Maxn, 1.0);
     let times: Vec<f64> = sweep.iter().map(|m| m.time_s).collect();
     let defaults = app.space().default_positions();
 
-    let sweeps = app
-        .space()
-        .params()
-        .iter()
-        .enumerate()
-        .map(|(pi, p)| {
-            let mut rows = vec![];
-            for (vi, v) in p.values().iter().enumerate() {
-                let mut pos = defaults.clone();
-                pos[pi] = vi;
-                let idx = app.space().encode_positions(&pos);
-                rows.push((v.to_string(), times[idx]));
-            }
-            let lo = rows.iter().map(|r| r.1).fold(f64::INFINITY, f64::min);
-            let hi = rows.iter().map(|r| r.1).fold(f64::NEG_INFINITY, f64::max);
-            ParamSweep { param: p.name().to_string(), times: rows, spread: hi / lo }
-        })
-        .collect();
+    let params = app.space().params();
+    let sweeps = crate::sim::SweepRunner::new(0).map(params.len(), |pi| {
+        let p = &params[pi];
+        let mut rows = vec![];
+        for (vi, v) in p.values().iter().enumerate() {
+            let mut pos = defaults.clone();
+            pos[pi] = vi;
+            let idx = app.space().encode_positions(&pos);
+            rows.push((v.to_string(), times[idx]));
+        }
+        let lo = rows.iter().map(|r| r.1).fold(f64::INFINITY, f64::min);
+        let hi = rows.iter().map(|r| r.1).fold(f64::NEG_INFINITY, f64::max);
+        ParamSweep { param: p.name().to_string(), times: rows, spread: hi / lo }
+    });
     Fig4 { sweeps }
 }
 

@@ -2,9 +2,10 @@
 //! 1000 iterations, with power and with execution time as the objective.
 //! Darker cell = selected more often by LASP.
 
-use super::harness::{run_lasp, ALPHA_POWER, ALPHA_TIME};
+use super::harness::{ALPHA_POWER, ALPHA_TIME};
 use crate::apps::{self, AppKind};
-use crate::device::{NoiseModel, PowerMode};
+use crate::device::PowerMode;
+use crate::sim::{Scenario, SweepRunner};
 
 /// One heatmap: counts[r_pos][s_pos].
 #[derive(Debug, Clone)]
@@ -22,36 +23,39 @@ pub struct Fig6 {
     pub panels: Vec<Heatmap>,
 }
 
-fn heatmap(label: &str, iterations: usize, alpha: f64, beta: f64, seed: u64) -> Heatmap {
-    let app = apps::build(AppKind::Lulesh);
-    let (best_index, counts, _) = run_lasp(
-        AppKind::Lulesh,
-        PowerMode::Maxn,
-        iterations,
-        alpha,
-        beta,
-        seed,
-        NoiseModel::none(),
-    );
-    // Fold dense counts into the (r: 16, s: 8) grid.
-    let mut grid = vec![vec![0.0; 8]; 16];
-    for (idx, &c) in counts.iter().enumerate() {
-        let pos = app.space().positions(idx);
-        grid[pos[0]][pos[1]] += c;
-    }
-    Heatmap { label: label.into(), iterations, counts: grid, best_index }
-}
-
-/// Run the four panels (paper: power/time × 1000/500 iterations).
+/// Run the four panels (paper: power/time × 1000/500 iterations) as one
+/// parallel sweep.
 pub fn run() -> Fig6 {
-    Fig6 {
-        panels: vec![
-            heatmap("(a) power, 1000 iters", 1000, ALPHA_POWER.0, ALPHA_POWER.1, 61),
-            heatmap("(b) power, 500 iters", 500, ALPHA_POWER.0, ALPHA_POWER.1, 62),
-            heatmap("(c) time, 1000 iters", 1000, ALPHA_TIME.0, ALPHA_TIME.1, 63),
-            heatmap("(d) time, 500 iters", 500, ALPHA_TIME.0, ALPHA_TIME.1, 64),
-        ],
-    }
+    let panels = [
+        ("(a) power, 1000 iters", 1000usize, ALPHA_POWER, 61u64),
+        ("(b) power, 500 iters", 500, ALPHA_POWER, 62),
+        ("(c) time, 1000 iters", 1000, ALPHA_TIME, 63),
+        ("(d) time, 500 iters", 500, ALPHA_TIME, 64),
+    ];
+    let cells: Vec<Scenario> = panels
+        .iter()
+        .map(|&(_, iterations, (alpha, beta), seed)| {
+            Scenario::lasp(AppKind::Lulesh, PowerMode::Maxn, iterations, seed)
+                .with_objective(alpha, beta)
+        })
+        .collect();
+    let outcomes = SweepRunner::new(0).run(&cells).expect("fig6 sweep");
+
+    let app = apps::build(AppKind::Lulesh);
+    let heatmaps = panels
+        .iter()
+        .zip(outcomes)
+        .map(|(&(label, iterations, _, _), out)| {
+            // Fold dense counts into the (r: 16, s: 8) grid.
+            let mut grid = vec![vec![0.0; 8]; 16];
+            for (idx, &c) in out.counts.as_ref().expect("policy counts").iter().enumerate() {
+                let pos = app.space().positions(idx);
+                grid[pos[0]][pos[1]] += c;
+            }
+            Heatmap { label: label.into(), iterations, counts: grid, best_index: out.best_index }
+        })
+        .collect();
+    Fig6 { panels: heatmaps }
 }
 
 impl Fig6 {

@@ -2,9 +2,10 @@
 //! and Clomp (c, d), with execution time and power as objective metrics.
 //! Shows convergence of the selection distribution toward the oracle.
 
-use super::harness::{oracle_index, run_lasp, ALPHA_POWER, ALPHA_TIME};
+use super::harness::{oracle_index, ALPHA_POWER, ALPHA_TIME};
 use crate::apps::AppKind;
-use crate::device::{NoiseModel, PowerMode};
+use crate::device::PowerMode;
+use crate::sim::{Scenario, SweepRunner};
 use crate::util::stats;
 
 /// One panel: an app × objective exploration run.
@@ -28,27 +29,42 @@ pub struct Fig7 {
     pub panels: Vec<Fig7Panel>,
 }
 
-fn panel(label: &str, app: AppKind, alpha: f64, beta: f64, seed: u64) -> Fig7Panel {
-    let iterations = 1000;
-    let (best_index, counts, _) =
-        run_lasp(app, PowerMode::Maxn, iterations, alpha, beta, seed, NoiseModel::none());
-    let oracle = oracle_index(app, PowerMode::Maxn, alpha, beta);
-    let mut sorted = counts.clone();
-    sorted.sort_by(|a, b| b.total_cmp(a));
-    let top5_mass: f64 = sorted.iter().take(5).sum::<f64>() / iterations as f64;
-    Fig7Panel { label: label.into(), app, counts, best_index, oracle, top5_mass }
-}
-
-/// Run the four panels.
+/// Run the four panels as one parallel sweep.
 pub fn run() -> Fig7 {
-    Fig7 {
-        panels: vec![
-            panel("(a) kripke, time", AppKind::Kripke, ALPHA_TIME.0, ALPHA_TIME.1, 71),
-            panel("(b) kripke, power", AppKind::Kripke, ALPHA_POWER.0, ALPHA_POWER.1, 72),
-            panel("(c) clomp, time", AppKind::Clomp, ALPHA_TIME.0, ALPHA_TIME.1, 73),
-            panel("(d) clomp, power", AppKind::Clomp, ALPHA_POWER.0, ALPHA_POWER.1, 74),
-        ],
-    }
+    let iterations = 1000usize;
+    let panels = [
+        ("(a) kripke, time", AppKind::Kripke, ALPHA_TIME, 71u64),
+        ("(b) kripke, power", AppKind::Kripke, ALPHA_POWER, 72),
+        ("(c) clomp, time", AppKind::Clomp, ALPHA_TIME, 73),
+        ("(d) clomp, power", AppKind::Clomp, ALPHA_POWER, 74),
+    ];
+    let cells: Vec<Scenario> = panels
+        .iter()
+        .map(|&(_, app, (alpha, beta), seed)| {
+            Scenario::lasp(app, PowerMode::Maxn, iterations, seed).with_objective(alpha, beta)
+        })
+        .collect();
+    let outcomes = SweepRunner::new(0).run(&cells).expect("fig7 sweep");
+    let built = panels
+        .iter()
+        .zip(outcomes)
+        .map(|(&(label, app, (alpha, beta), _), out)| {
+            let counts = out.counts.expect("policy counts");
+            let oracle = oracle_index(app, PowerMode::Maxn, alpha, beta);
+            let mut sorted = counts.clone();
+            sorted.sort_by(|a, b| b.total_cmp(a));
+            let top5_mass: f64 = sorted.iter().take(5).sum::<f64>() / iterations as f64;
+            Fig7Panel {
+                label: label.into(),
+                app,
+                counts,
+                best_index: out.best_index,
+                oracle,
+                top5_mass,
+            }
+        })
+        .collect();
+    Fig7 { panels: built }
 }
 
 impl Fig7 {

@@ -3,9 +3,10 @@
 //! Hypre's 92k-arm space when optimizing execution time; power-focused
 //! runs land farther (power rewards are flatter).
 
-use super::harness::{edge_oracle, print_table, run_lasp, LF_FIDELITY};
+use super::harness::{edge_oracle, print_table, LF_FIDELITY};
 use crate::apps::AppKind;
-use crate::device::{NoiseModel, PowerMode};
+use crate::device::PowerMode;
+use crate::sim::{Scenario, SweepRunner};
 use crate::tuning::oracle_distance_pct;
 use crate::util::stats;
 
@@ -30,23 +31,7 @@ pub struct Fig9 {
     pub iterations: usize,
 }
 
-fn distance_of_run(
-    app: AppKind,
-    alpha: f64,
-    beta: f64,
-    iterations: usize,
-    seed: u64,
-    sweep: &[crate::device::Measurement],
-) -> f64 {
-    let (best, _, _) = run_lasp(
-        app,
-        PowerMode::Maxn,
-        iterations,
-        alpha,
-        beta,
-        seed,
-        NoiseModel::none(),
-    );
+fn distance_of_best(best: usize, alpha: f64, sweep: &[crate::device::Measurement]) -> f64 {
     if alpha >= 0.5 {
         oracle_distance_pct(sweep, best)
     } else {
@@ -57,15 +42,36 @@ fn distance_of_run(
     }
 }
 
-/// Run `runs` repetitions per (app, objective) pair.
+/// Run `runs` repetitions per (app, objective) pair — one flat sweep of
+/// `4 apps × 2 objectives × runs` cells across the pool (the paper's full
+/// setting is 100 × 1000 iterations; serial seed-era code ground through
+/// it one episode at a time).
 pub fn run(runs: usize, iterations: usize) -> Fig9 {
+    const OBJECTIVES: [(&str, f64, f64); 2] = [("time", 0.8, 0.2), ("power", 0.2, 0.8)];
+    let mut grid = vec![];
+    for app in AppKind::all() {
+        for (_, alpha, beta) in OBJECTIVES {
+            for r in 0..runs {
+                grid.push(
+                    Scenario::lasp(app, PowerMode::Maxn, iterations, 900 + r as u64)
+                        .with_objective(alpha, beta),
+                );
+            }
+        }
+    }
+    let outcomes = SweepRunner::new(0).run(&grid).expect("fig9 sweep");
+
     let mut rows = vec![];
+    let mut cursor = grid.iter().zip(outcomes);
     for app in AppKind::all() {
         let sweep = edge_oracle(app, PowerMode::Maxn, LF_FIDELITY);
-        for (objective, alpha, beta) in [("time", 0.8, 0.2), ("power", 0.2, 0.8)] {
-            let dists: Vec<f64> = (0..runs)
-                .map(|r| {
-                    distance_of_run(app, alpha, beta, iterations, 900 + r as u64, &sweep)
+        for (objective, alpha, _) in OBJECTIVES {
+            let dists: Vec<f64> = cursor
+                .by_ref()
+                .take(runs)
+                .map(|(cell, out)| {
+                    debug_assert_eq!((cell.app, cell.alpha), (app, alpha));
+                    distance_of_best(out.best_index, alpha, &sweep)
                 })
                 .collect();
             rows.push(Fig9Row {

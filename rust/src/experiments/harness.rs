@@ -1,13 +1,21 @@
 //! Shared experiment harness: app+device evaluation closures, LASP runs,
 //! and the default experiment constants (iteration counts, seeds, α/β
 //! pairs) used across figures.
+//!
+//! Since the scenario-engine refactor the run helpers here are thin
+//! wrappers over [`crate::sim`]: `run_lasp` and `run_with_regret` declare
+//! one [`Scenario`] cell and execute it through the shared episode
+//! stepper (`rust/tests/sim_engine.rs` pins their output bit-for-bit to
+//! the pre-refactor loops).
 
 use crate::apps::{self, AppKind, AppModel};
 use crate::baselines::EvalFn;
-use crate::bandit::{Policy, SubsetTuner, UcbTuner};
 use crate::device::{Device, JetsonNano, Measurement, NoiseModel, PowerMode};
-use crate::tuning::{expected_rewards, oracle_sweep, SessionConfig, TuningSession};
+use crate::sim::{run_scenario, Scenario};
+use crate::tuning::expected_rewards;
 use crate::util::stats;
+
+pub use crate::sim::lasp_policy;
 
 /// The paper's two user-priority settings (§V-D/E): time-focused and
 /// power-focused.
@@ -15,7 +23,7 @@ pub const ALPHA_TIME: (f64, f64) = (0.8, 0.2);
 pub const ALPHA_POWER: (f64, f64) = (0.2, 0.8);
 
 /// Default LF evaluation point on the edge device.
-pub const LF_FIDELITY: f64 = 0.15;
+pub const LF_FIDELITY: f64 = crate::sim::DEFAULT_FIDELITY;
 
 /// [`EvalFn`] over an app model + Jetson device.
 pub struct AppEval {
@@ -32,9 +40,10 @@ impl AppEval {
     }
 
     pub fn with_noise(mut self, noise: NoiseModel) -> Self {
-        self.device = JetsonNano::new(self.device.mode(), 1)
-            .with_fidelity(LF_FIDELITY)
-            .with_injected_noise(noise);
+        // In-place injection: the device keeps its construction seed (a
+        // seed-era version rebuilt the board with a hardcoded seed 1,
+        // silently decorrelating "independent" runs).
+        self.device.set_injected_noise(noise);
         self
     }
 
@@ -53,20 +62,8 @@ impl EvalFn for AppEval {
     }
 }
 
-/// Build the LASP policy for a space of size `k`: plain UCB1 when the
-/// budget covers the init sweep, candidate-subset LASP otherwise
-/// (paper §IV-B scalability adaptation — see `bandit::subset`).
-pub fn lasp_policy(k: usize, iterations: usize, alpha: f64, beta: f64, seed: u64) -> Box<dyn Policy> {
-    if k > iterations / 2 && k > 256 {
-        let m = SubsetTuner::recommended_size(k, iterations);
-        Box::new(SubsetTuner::new(k, m, alpha, beta, seed ^ 0xA5A5))
-    } else {
-        Box::new(UcbTuner::new(k, alpha, beta))
-    }
-}
-
 /// One complete LASP run; returns (best index by Eq. 4, selection counts,
-/// selection trace).
+/// selection trace). Thin wrapper over one scenario-engine cell.
 #[allow(clippy::too_many_arguments)]
 pub fn run_lasp(
     kind: AppKind,
@@ -77,28 +74,20 @@ pub fn run_lasp(
     seed: u64,
     noise: NoiseModel,
 ) -> (usize, Vec<f64>, Vec<usize>) {
-    let app = apps::build(kind);
-    let k = app.space().len();
-    let mut device = JetsonNano::new(mode, seed)
-        .with_fidelity(LF_FIDELITY)
-        .with_injected_noise(noise);
-    let mut tuner = lasp_policy(k, iterations, alpha, beta, seed);
-    let mut trace = Vec::with_capacity(iterations);
-    for _ in 0..iterations {
-        let arm = tuner.select();
-        let m = device.run(&app.workload(arm, device.fidelity()));
-        tuner.update(arm, m.time_s, m.power_w);
-        trace.push(arm);
-    }
-    (tuner.most_selected(), tuner.counts().to_vec(), trace)
+    let cell = Scenario::lasp(kind, mode, iterations, seed)
+        .with_objective(alpha, beta)
+        .with_noise(noise)
+        .recording_trace();
+    let out = run_scenario(&cell).expect("LASP episode");
+    (out.best_index, out.counts.expect("policy counts"), out.trace.expect("trace recorded"))
 }
 
 /// Expected per-arm (time, power) on the edge device at LF, noise-free —
-/// the oracle table behind Figs 2/3/4/9/11.
+/// the oracle table behind Figs 2/3/4/9/11, fanned over the sweep pool.
 pub fn edge_oracle(kind: AppKind, mode: PowerMode, q: f64) -> Vec<Measurement> {
     let app = apps::build(kind);
     let spec = mode.spec();
-    oracle_sweep(app.as_ref(), &spec, q)
+    crate::sim::oracle_sweep_parallel(app.as_ref(), &spec, q)
 }
 
 /// Index of the noise-free oracle configuration for (α, β) on the edge.
@@ -108,7 +97,8 @@ pub fn oracle_index(kind: AppKind, mode: PowerMode, alpha: f64, beta: f64) -> us
     stats::argmax(&mu)
 }
 
-/// A full regret-instrumented session (Fig 11).
+/// A full regret-instrumented LASP run (Fig 11): one scenario cell with
+/// the regret oracle installed.
 pub fn run_with_regret(
     kind: AppKind,
     mode: PowerMode,
@@ -117,19 +107,10 @@ pub fn run_with_regret(
     beta: f64,
     seed: u64,
 ) -> Vec<f64> {
-    let app = apps::build(kind);
-    let sweep = edge_oracle(kind, mode, LF_FIDELITY);
-    let mu = expected_rewards(&sweep, alpha, beta);
-    let device = JetsonNano::new(mode, seed).with_fidelity(LF_FIDELITY);
-    let policy = lasp_policy(app.space().len(), iterations, alpha, beta, seed);
-    let mut session = TuningSession::with_policy(
-        app,
-        Box::new(device),
-        policy,
-        SessionConfig { iterations, alpha, beta, record_history: false },
-    )
-    .with_regret_oracle(mu);
-    session.run().expect("session").regret.expect("regret installed")
+    let cell = Scenario::lasp(kind, mode, iterations, seed)
+        .with_objective(alpha, beta)
+        .recording_regret();
+    run_scenario(&cell).expect("regret episode").regret.expect("regret installed")
 }
 
 /// Markdown-ish table printer shared by the experiment reports.
@@ -176,5 +157,23 @@ mod tests {
         let m = e.eval(0, e.native_fidelity());
         assert!(m.time_s > 0.0 && m.power_w > 0.0);
         assert_eq!(e.k(), 128);
+    }
+
+    #[test]
+    fn with_noise_preserves_the_device_seed() {
+        // Regression: `with_noise` used to rebuild the Jetson with a
+        // hardcoded seed 1, so every "independently seeded" noisy eval
+        // replayed the same stream. The seed must survive the builder.
+        let noise = NoiseModel::uniform(0.10);
+        let mut a = AppEval::new(AppKind::Clomp, PowerMode::Maxn, 5).with_noise(noise);
+        let mut a2 = AppEval::new(AppKind::Clomp, PowerMode::Maxn, 5).with_noise(noise);
+        let mut b = AppEval::new(AppKind::Clomp, PowerMode::Maxn, 1).with_noise(noise);
+        assert_eq!(a.device.seed(), 5, "builder dropped the seed");
+        let q = a.native_fidelity();
+        let (ma, ma2, mb) = (a.eval(0, q), a2.eval(0, q), b.eval(0, q));
+        assert_eq!(ma, ma2, "same seed must reproduce");
+        assert_ne!(ma, mb, "different seeds must diverge");
+        // Fidelity and noise survive alongside the seed.
+        assert_eq!(a.native_fidelity(), LF_FIDELITY);
     }
 }

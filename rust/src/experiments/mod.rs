@@ -3,6 +3,10 @@
 //! `run(...) -> FigN` with a `report()` printer and a
 //! `matches_paper_shape()` acceptance predicate; the `benches/figN_*`
 //! binaries and the `lasp experiment` CLI subcommand are thin wrappers.
+//!
+//! Every experiment is one [`REGISTRY`] entry (id → runner + shape
+//! check); `run_by_name` and the id list are both derived from that one
+//! table, so they cannot drift apart.
 
 pub mod ablation;
 pub mod fig10;
@@ -20,88 +24,151 @@ pub mod tables;
 
 use anyhow::{anyhow, Result};
 
-/// Run an experiment by figure/table id, printing its report. Returns
+/// One registered experiment: a stable id and a runner that regenerates
+/// the artifact (honouring quick mode), prints its report, and returns
 /// whether the paper-shape acceptance check passed.
-pub fn run_by_name(name: &str, quick: bool) -> Result<bool> {
-    let ok = match name {
-        "table1" => {
+pub struct ExperimentSpec {
+    pub id: &'static str,
+    pub run: fn(quick: bool) -> bool,
+}
+
+/// Every experiment, in paper order — the single source of truth for both
+/// dispatch and the id list.
+pub const REGISTRY: &[ExperimentSpec] = &[
+    ExperimentSpec {
+        id: "table1",
+        run: |_quick| {
             tables::table1_report();
             true
-        }
-        "table2" => {
+        },
+    },
+    ExperimentSpec {
+        id: "table2",
+        run: |_quick| {
             tables::table2_report();
             true
-        }
-        "fig2" => {
+        },
+    },
+    ExperimentSpec {
+        id: "fig2",
+        run: |_quick| {
             let f = fig2::run();
             f.report();
             f.matches_paper_shape()
-        }
-        "fig3" => {
+        },
+    },
+    ExperimentSpec {
+        id: "fig3",
+        run: |_quick| {
             let f = fig3::run();
             f.report();
             f.matches_paper_shape()
-        }
-        "fig4" => {
+        },
+    },
+    ExperimentSpec {
+        id: "fig4",
+        run: |_quick| {
             let f = fig4::run();
             f.report();
             f.matches_paper_shape()
-        }
-        "fig6" => {
+        },
+    },
+    ExperimentSpec {
+        id: "fig6",
+        run: |_quick| {
             let f = fig6::run();
             f.report();
             f.matches_paper_shape()
-        }
-        "fig7" => {
+        },
+    },
+    ExperimentSpec {
+        id: "fig7",
+        run: |_quick| {
             let f = fig7::run();
             f.report();
             f.matches_paper_shape()
-        }
-        "fig8" => {
+        },
+    },
+    ExperimentSpec {
+        id: "fig8",
+        run: |quick| {
             let f = fig8::run(if quick { 400 } else { 1000 });
             f.report();
             f.matches_paper_shape()
-        }
-        "fig9" => {
+        },
+    },
+    ExperimentSpec {
+        id: "fig9",
+        run: |quick| {
             let f = fig9::run(if quick { 10 } else { 100 }, if quick { 500 } else { 1000 });
             f.report();
             f.matches_paper_shape()
-        }
-        "fig10" => {
+        },
+    },
+    ExperimentSpec {
+        id: "fig10",
+        run: |_quick| {
             let f = fig10::run();
             f.report();
             f.matches_paper_shape()
-        }
-        "fig11" => {
+        },
+    },
+    ExperimentSpec {
+        id: "fig11",
+        run: |quick| {
             let f = fig11::run(if quick { 600 } else { 1500 }, if quick { 2 } else { 5 });
             f.report();
             f.matches_paper_shape()
-        }
-        "fig12" => {
+        },
+    },
+    ExperimentSpec {
+        id: "fig12",
+        run: |quick| {
             let f = fig12::run(if quick { 400 } else { 800 }, if quick { 2 } else { 5 });
             f.report();
             f.matches_paper_shape()
-        }
-        "ablation" => {
+        },
+    },
+    ExperimentSpec {
+        id: "ablation",
+        run: |quick| {
             let f = ablation::run(if quick { 400 } else { 1000 });
             f.report();
-            true
-        }
-        other => return Err(anyhow!("unknown experiment '{other}'")),
-    };
-    Ok(ok)
+            f.matches_paper_shape()
+        },
+    },
+];
+
+/// Run an experiment by figure/table id, printing its report. Returns
+/// whether the paper-shape acceptance check passed.
+pub fn run_by_name(name: &str, quick: bool) -> Result<bool> {
+    let spec = REGISTRY
+        .iter()
+        .find(|e| e.id == name)
+        .ok_or_else(|| anyhow!("unknown experiment '{name}' (try one of {:?})", all_ids()))?;
+    Ok((spec.run)(quick))
 }
 
-/// All experiment ids, in paper order.
-pub const ALL: &[&str] = &[
-    "table1", "table2", "fig2", "fig3", "fig4", "fig6", "fig7", "fig8", "fig9",
-    "fig10", "fig11", "fig12", "ablation",
-];
+/// All experiment ids, in paper order (derived from [`REGISTRY`]).
+pub fn all_ids() -> Vec<&'static str> {
+    REGISTRY.iter().map(|e| e.id).collect()
+}
 
 #[cfg(test)]
 mod tests {
     #[test]
     fn unknown_experiment_rejected() {
         assert!(super::run_by_name("fig99", true).is_err());
+    }
+
+    #[test]
+    fn registry_ids_unique_and_complete() {
+        let ids = super::all_ids();
+        assert!(ids.len() >= 13, "registry shrank: {ids:?}");
+        let set: std::collections::BTreeSet<_> = ids.iter().collect();
+        assert_eq!(set.len(), ids.len(), "duplicate experiment ids");
+        for expected in ["table1", "table2", "fig9", "fig12", "ablation"] {
+            assert!(ids.contains(&expected), "registry lost '{expected}'");
+        }
     }
 }

@@ -32,6 +32,7 @@ pub mod device;
 pub mod experiments;
 pub mod runtime;
 pub mod serve;
+pub mod sim;
 pub mod space;
 pub mod telemetry;
 pub mod tuning;

@@ -7,6 +7,7 @@
 //!   loadgen     drive suggest/report load against a running server
 //!   compare     LASP vs baselines on one application
 //!   experiment  regenerate a paper table/figure (or `all`)
+//!   simulate    run a TOML scenario grid through the parallel engine
 //!   spaces      print Table II (application parameter spaces)
 //!   devices     print Table I (Jetson power modes)
 //!
@@ -44,6 +45,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         "loadgen" => cmd_loadgen(&flags),
         "compare" => cmd_compare(&flags),
         "experiment" => cmd_experiment(&flags),
+        "simulate" => cmd_simulate(&flags),
         "spaces" => {
             lasp::experiments::tables::table2_report();
             Ok(())
@@ -76,6 +78,7 @@ fn usage_text() -> &'static str {
      \x20 loadgen     drive suggest/report load against a running server\n\
      \x20 compare     LASP vs baselines on one application\n\
      \x20 experiment  regenerate a paper artifact: table1|table2|fig2..fig12|ablation|all\n\
+     \x20 simulate    run a TOML scenario grid through the parallel engine\n\
      \x20 spaces      print Table II\n\
      \x20 devices     print Table I\n\
      \x20 help        print this message\n\
@@ -92,10 +95,20 @@ fn usage_text() -> &'static str {
      \x20 --devices <n>        fleet size                  [2]\n\
      \x20 --budget <n>         compare: evaluation budget  [--iters]\n\
      \x20 --name <id>          experiment id               [all]\n\
+     \x20 --all                experiment: run every artifact\n\
      \x20 --quick              experiment: reduced repetitions\n\
+     \x20 --bench-out <file>   experiment --all: wall-clock/steps report\n\
+     \x20                      [BENCH_experiments.json]\n\
      \x20 --hf-validate        tune: validate result on the HPC node\n\
      \x20 --save-state <file>  tune: checkpoint the tuner state (JSON)\n\
      \x20 --load-state <file>  tune: warm-start from a checkpoint\n\
+     \n\
+     FLAGS (simulate)\n\
+     \x20 --scenario <file>    TOML scenario grid (required; see\n\
+     \x20                      docs/scenarios/ and DESIGN.md)\n\
+     \x20 --threads <n>        sweep pool size             [host cores]\n\
+     \x20 --out <file>         write machine-readable JSON [sim_result.json]\n\
+     \x20                      (`--out -` prints JSON to stdout)\n\
      \n\
      FLAGS (serve)\n\
      \x20 --port <n>             bind 127.0.0.1:<port>     [8787]\n\
@@ -143,7 +156,7 @@ impl Flags {
                 .strip_prefix("--")
                 .ok_or_else(|| anyhow!("expected --flag, got '{a}'"))?;
             match name {
-                "quick" | "hf-validate" => {
+                "quick" | "hf-validate" | "all" => {
                     bools.push(name.to_string());
                     i += 1;
                 }
@@ -508,14 +521,18 @@ fn cmd_compare(flags: &Flags) -> Result<()> {
 fn cmd_experiment(flags: &Flags) -> Result<()> {
     let name = flags.get("name").unwrap_or("all");
     let quick = flags.has("quick");
-    let names: Vec<&str> = if name == "all" {
-        lasp::experiments::ALL.to_vec()
+    let run_all = flags.has("all") || name == "all";
+    let names: Vec<&str> = if run_all {
+        lasp::experiments::all_ids()
     } else {
         vec![name]
     };
     let mut failures = vec![];
+    let mut timings: Vec<(String, f64, u64)> = vec![];
     for n in names {
         println!("\n=== experiment {n} ===");
+        let steps_before = lasp::sim::steps_executed();
+        let t0 = std::time::Instant::now();
         match lasp::experiments::run_by_name(n, quick) {
             Ok(true) => println!("[shape OK] {n} matches the paper's qualitative shape"),
             Ok(false) => {
@@ -524,9 +541,109 @@ fn cmd_experiment(flags: &Flags) -> Result<()> {
             }
             Err(e) => return Err(e),
         }
+        timings.push((
+            n.to_string(),
+            t0.elapsed().as_secs_f64(),
+            lasp::sim::steps_executed() - steps_before,
+        ));
+    }
+    if run_all {
+        let path = flags.get("bench-out").unwrap_or("BENCH_experiments.json");
+        write_experiment_bench(path, quick, &timings, failures.is_empty())?;
+        println!("\nwrote {path}");
     }
     if !failures.is_empty() {
         return Err(anyhow!("shape mismatches: {failures:?}"));
+    }
+    Ok(())
+}
+
+/// Machine-readable per-figure wall-clock + engine steps/sec, uploaded as
+/// a CI artifact so experiment-suite latency is tracked PR-over-PR.
+fn write_experiment_bench(
+    path: &str,
+    quick: bool,
+    timings: &[(String, f64, u64)],
+    shapes_ok: bool,
+) -> Result<()> {
+    use lasp::util::json::Json;
+    use std::collections::BTreeMap;
+
+    let mut figures = BTreeMap::new();
+    let (mut total_wall, mut total_steps) = (0.0f64, 0u64);
+    for (id, wall, steps) in timings {
+        let mut o = BTreeMap::new();
+        o.insert("wall_s".to_string(), Json::Num(*wall));
+        o.insert("engine_steps".to_string(), Json::Num(*steps as f64));
+        o.insert(
+            "steps_per_s".to_string(),
+            Json::Num(*steps as f64 / wall.max(1e-9)),
+        );
+        figures.insert(id.clone(), Json::Obj(o));
+        total_wall += wall;
+        total_steps += steps;
+    }
+    let mut out = BTreeMap::new();
+    out.insert("bench".to_string(), Json::Str("experiments".to_string()));
+    out.insert(
+        "mode".to_string(),
+        Json::Str(if quick { "quick" } else { "full" }.to_string()),
+    );
+    out.insert("shapes_ok".to_string(), Json::Bool(shapes_ok));
+    out.insert("total_wall_s".to_string(), Json::Num(total_wall));
+    out.insert("total_engine_steps".to_string(), Json::Num(total_steps as f64));
+    out.insert(
+        "steps_per_s".to_string(),
+        Json::Num(total_steps as f64 / total_wall.max(1e-9)),
+    );
+    out.insert("figures".to_string(), Json::Obj(figures));
+    std::fs::write(path, Json::Obj(out).to_string() + "\n")
+        .with_context(|| format!("writing {path}"))?;
+    Ok(())
+}
+
+fn cmd_simulate(flags: &Flags) -> Result<()> {
+    let path = flags
+        .get("scenario")
+        .ok_or_else(|| anyhow!("simulate needs --scenario <file.toml> (see docs/scenarios/)"))?;
+    let grid = lasp::sim::ScenarioGrid::from_file(std::path::Path::new(path))?;
+    let threads: usize = match flags.get("threads") {
+        Some(v) => v.parse().context("--threads")?,
+        None => 0,
+    };
+    let runner = lasp::sim::SweepRunner::new(threads);
+    println!(
+        "# lasp simulate: {} | {} cells ({} apps × {} modes × {} noises × {} objectives × {} strategies × {} seeds), {} iterations",
+        path,
+        grid.len(),
+        grid.apps.len(),
+        grid.modes.len(),
+        grid.noise_pcts.len(),
+        grid.objectives.len(),
+        grid.strategies.len(),
+        grid.seeds.len(),
+        grid.iterations,
+    );
+    let steps_before = lasp::sim::steps_executed();
+    let t0 = std::time::Instant::now();
+    let result = runner.sweep(&grid)?;
+    let wall = t0.elapsed().as_secs_f64();
+    let steps = lasp::sim::steps_executed() - steps_before;
+    result.report();
+    println!(
+        "\n# engine: {} steps in {:.2}s ({:.0} steps/s)",
+        steps,
+        wall,
+        steps as f64 / wall.max(1e-9)
+    );
+    let json = result.to_json();
+    match flags.get("out") {
+        Some("-") => println!("{json}"),
+        out => {
+            let out = out.unwrap_or("sim_result.json");
+            std::fs::write(out, json + "\n").with_context(|| format!("writing {out}"))?;
+            println!("# wrote {out}");
+        }
     }
     Ok(())
 }

@@ -1,0 +1,376 @@
+//! The episode stepper: one tuning loop for everything.
+//!
+//! An [`Episode`] drives *any* strategy (bandit policy or search baseline,
+//! through the [`SearchStep`] interface) against *any* app model on *any*
+//! device, with a declarative mid-episode [`Event`] schedule for
+//! nonstationary scenarios: power-mode switches, noise bursts, shared-bus
+//! interference from co-located tenants. Before this module existed the
+//! same select → run → observe loop lived in four divergent places
+//! (`harness::run_lasp`, `tuning::TuningSession`, the baselines' private
+//! `EvalFn` loops, and the coordinator worker); they are all thin wrappers
+//! over this stepper now.
+//!
+//! Determinism contract: an episode's entire behaviour is a function of
+//! its inputs — app model, device seed, strategy seed, event schedule.
+//! Nothing reads global mutable state, so identical episodes produce
+//! bit-identical traces regardless of what runs on sibling threads
+//! (asserted by `rust/tests/sim_engine.rs` at 1/4/8 threads).
+//!
+//! Steady-state steps are allocation-free: the strategy reuses the bandit
+//! core's `Scratch`, recording buffers are preallocated to the episode
+//! length, and the event schedule is applied by cursor
+//! (`benches/sim_engine.rs` counts exact allocations per step).
+
+use crate::apps::AppModel;
+use crate::bandit::RegretTracker;
+use crate::baselines::SearchStep;
+use crate::device::{Device, Measurement, NoiseModel, PowerMode};
+use crate::telemetry::{ResourceReport, ResourceTracker};
+use anyhow::Result;
+
+/// A scheduled mid-episode environment change.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum EventAction {
+    /// Switch the device's power mode in place (thermal and RNG state
+    /// persist, like `nvpmodel -m` on a live board).
+    SetMode(PowerMode),
+    /// Replace the injected synthetic measurement error (noise bursts).
+    SetNoise(NoiseModel),
+    /// A co-located tenant saturates the shared memory bus: measured times
+    /// stretch by `1 + slope · max(0, mem_intensity − threshold)`, which
+    /// *reorders* the runtime ranking (the ablation's nonstationary mode).
+    BusContention { slope: f64, threshold: f64 },
+    /// The tenant leaves: end any bus contention.
+    ClearContention,
+}
+
+/// An [`EventAction`] applied immediately before iteration `at` (0-based).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Event {
+    pub at: usize,
+    pub action: EventAction,
+}
+
+/// Episode run parameters: length plus what to record.
+#[derive(Debug, Clone, Default)]
+pub struct EpisodeSpec {
+    /// Iteration budget `T`. The strategy may finish earlier (successive
+    /// halving's ladder can converge).
+    pub iterations: usize,
+    /// Record the per-iteration arm sequence.
+    pub record_trace: bool,
+    /// Record per-iteration (arm, measurement) pairs.
+    pub record_history: bool,
+    /// Sample `/proc/self` per iteration (slow; single-session tooling
+    /// like `lasp tune` wants it, sweeps do not).
+    pub track_resources: bool,
+    /// Per-arm expected rewards for cumulative-regret accounting (Fig 11).
+    pub regret_mu: Option<Vec<f64>>,
+}
+
+/// What one [`Episode::step`] did.
+#[derive(Debug, Clone, Copy)]
+pub struct StepRecord {
+    pub arm: usize,
+    pub fidelity: f64,
+    pub measurement: Measurement,
+}
+
+/// Everything an episode can report when it finishes.
+#[derive(Debug, Clone)]
+pub struct EpisodeOutcome {
+    /// The strategy's recommendation (Eq. 4 for bandits; best-seen for
+    /// search baselines).
+    pub best_index: usize,
+    /// Evaluations actually performed (≤ the iteration budget).
+    pub evaluations: usize,
+    /// Per-arm pull counts, when the strategy tracks them.
+    pub counts: Option<Vec<f64>>,
+    /// Arm sequence, if recording was enabled.
+    pub trace: Option<Vec<usize>>,
+    /// (arm, measurement) pairs, if recording was enabled.
+    pub history: Option<Vec<(usize, Measurement)>>,
+    /// Cumulative-regret trajectory, if a regret oracle was installed.
+    pub regret: Option<Vec<f64>>,
+    /// Total simulated seconds of application execution ("device time").
+    pub simulated_device_seconds: f64,
+    /// Wall-clock seconds the strategy itself spent selecting/updating.
+    pub tuner_wall_seconds: f64,
+    /// Process resource footprint, if tracking was enabled.
+    pub resources: Option<ResourceReport>,
+}
+
+/// One tuning episode over borrowed parts. Borrowing (rather than owning)
+/// lets `TuningSession`, the coordinator worker and the sweep runner all
+/// assemble episodes from whatever they already own.
+pub struct Episode<'a> {
+    app: &'a dyn AppModel,
+    device: &'a mut dyn Device,
+    strategy: &'a mut dyn SearchStep,
+    /// Event schedule, sorted by `at`.
+    events: Vec<Event>,
+    next_event: usize,
+    contention: Option<(f64, f64)>,
+    t: usize,
+    iterations: usize,
+    done: bool,
+    regret: Option<RegretTracker>,
+    trace: Option<Vec<usize>>,
+    history: Option<Vec<(usize, Measurement)>>,
+    tracker: Option<ResourceTracker>,
+    device_seconds: f64,
+    tuner_seconds: f64,
+}
+
+impl<'a> Episode<'a> {
+    pub fn new(
+        app: &'a dyn AppModel,
+        device: &'a mut dyn Device,
+        strategy: &'a mut dyn SearchStep,
+        events: &[Event],
+        spec: &EpisodeSpec,
+    ) -> Episode<'a> {
+        let mut events = events.to_vec();
+        events.sort_by_key(|e| e.at);
+        Episode {
+            app,
+            device,
+            strategy,
+            events,
+            next_event: 0,
+            contention: None,
+            t: 0,
+            iterations: spec.iterations,
+            done: false,
+            regret: spec.regret_mu.clone().map(RegretTracker::new),
+            trace: spec.record_trace.then(|| Vec::with_capacity(spec.iterations)),
+            history: spec.record_history.then(|| Vec::with_capacity(spec.iterations)),
+            tracker: spec.track_resources.then(ResourceTracker::start),
+            device_seconds: 0.0,
+            tuner_seconds: 0.0,
+        }
+    }
+
+    /// Iterations executed so far.
+    pub fn t(&self) -> usize {
+        self.t
+    }
+
+    /// The strategy's current recommendation (live, mid-episode).
+    pub fn recommend(&self) -> usize {
+        self.strategy.recommend()
+    }
+
+    /// The strategy's per-arm pull counts, when it tracks them.
+    pub fn counts(&self) -> Option<&[f64]> {
+        self.strategy.counts()
+    }
+
+    /// Out-of-schedule power-mode switch (the coordinator worker reacts to
+    /// leader messages this way; scripted scenarios use [`Event`]s).
+    pub fn switch_mode(&mut self, mode: PowerMode) {
+        self.device.switch_mode(mode);
+    }
+
+    fn apply_events(&mut self) {
+        while self.next_event < self.events.len() && self.events[self.next_event].at <= self.t {
+            match self.events[self.next_event].action {
+                EventAction::SetMode(mode) => self.device.switch_mode(mode),
+                EventAction::SetNoise(noise) => self.device.set_injected_noise(noise),
+                EventAction::BusContention { slope, threshold } => {
+                    self.contention = Some((slope, threshold));
+                }
+                EventAction::ClearContention => self.contention = None,
+            }
+            self.next_event += 1;
+        }
+    }
+
+    /// Execute one select → run → observe round. Returns `None` once the
+    /// iteration budget is spent or the strategy exhausted its schedule.
+    pub fn step(&mut self) -> Result<Option<StepRecord>> {
+        if self.done || self.t >= self.iterations {
+            return Ok(None);
+        }
+        self.apply_events();
+
+        let sel_start = std::time::Instant::now();
+        let decision = self.strategy.next()?;
+        self.tuner_seconds += sel_start.elapsed().as_secs_f64();
+        let Some(d) = decision else {
+            self.done = true;
+            return Ok(None);
+        };
+
+        let fidelity = d.fidelity.unwrap_or_else(|| self.device.fidelity());
+        let workload = self.app.workload(d.index, fidelity);
+        let mut m = self.device.run(&workload);
+        if let Some((slope, threshold)) = self.contention {
+            m.time_s *= 1.0 + slope * (workload.mem_intensity - threshold).max(0.0);
+        }
+        self.device_seconds += m.time_s;
+
+        let upd_start = std::time::Instant::now();
+        self.strategy.observe(d.index, fidelity, m);
+        self.tuner_seconds += upd_start.elapsed().as_secs_f64();
+
+        if let Some(r) = &mut self.regret {
+            r.record(d.index);
+        }
+        if let Some(tr) = &mut self.trace {
+            tr.push(d.index);
+        }
+        if let Some(h) = &mut self.history {
+            h.push((d.index, m));
+        }
+        if let Some(rt) = &mut self.tracker {
+            rt.sample();
+        }
+        self.t += 1;
+        Ok(Some(StepRecord { arm: d.index, fidelity, measurement: m }))
+    }
+
+    /// Run the remaining iterations and report.
+    pub fn run(mut self) -> Result<EpisodeOutcome> {
+        while self.step()?.is_some() {}
+        Ok(self.finish())
+    }
+
+    /// Assemble the outcome from the current state (for manual-stepping
+    /// drivers like the coordinator worker).
+    pub fn finish(self) -> EpisodeOutcome {
+        super::count_steps(self.t as u64);
+        EpisodeOutcome {
+            best_index: self.strategy.recommend(),
+            evaluations: self.t,
+            counts: self.strategy.counts().map(|c| c.to_vec()),
+            trace: self.trace,
+            history: self.history,
+            regret: self.regret.map(|r| r.trajectory().to_vec()),
+            simulated_device_seconds: self.device_seconds,
+            tuner_wall_seconds: self.tuner_seconds,
+            resources: self.tracker.map(|t| t.report()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::{self, AppKind};
+    use crate::device::JetsonNano;
+    use crate::sim::strategy::PolicyStep;
+
+    fn episode_outcome(events: &[Event], spec: &EpisodeSpec, seed: u64) -> EpisodeOutcome {
+        let app = apps::build(AppKind::Clomp);
+        let mut device = JetsonNano::new(PowerMode::Maxn, seed).with_fidelity(0.15);
+        let mut policy = crate::bandit::UcbTuner::new(app.space().len(), 1.0, 0.0);
+        let mut step = PolicyStep::new(&mut policy);
+        Episode::new(app.as_ref(), &mut device, &mut step, events, spec)
+            .run()
+            .expect("episode")
+    }
+
+    #[test]
+    fn plain_episode_matches_budget_and_counts() {
+        let spec = EpisodeSpec { iterations: 200, record_trace: true, ..Default::default() };
+        let out = episode_outcome(&[], &spec, 3);
+        assert_eq!(out.evaluations, 200);
+        assert_eq!(out.trace.as_ref().unwrap().len(), 200);
+        let counts = out.counts.unwrap();
+        assert_eq!(counts.iter().sum::<f64>(), 200.0);
+        assert!(out.simulated_device_seconds > 0.0);
+        assert!(out.history.is_none() && out.regret.is_none() && out.resources.is_none());
+    }
+
+    #[test]
+    fn episodes_are_deterministic() {
+        let spec = EpisodeSpec { iterations: 150, record_trace: true, ..Default::default() };
+        let a = episode_outcome(&[], &spec, 9);
+        let b = episode_outcome(&[], &spec, 9);
+        assert_eq!(a.trace, b.trace);
+        assert_eq!(a.best_index, b.best_index);
+    }
+
+    #[test]
+    fn mode_switch_event_changes_the_tail() {
+        let spec = EpisodeSpec { iterations: 120, record_history: true, ..Default::default() };
+        let calm = episode_outcome(&[], &spec, 4);
+        let switched = episode_outcome(
+            &[Event { at: 60, action: EventAction::SetMode(PowerMode::FiveW) }],
+            &spec,
+            4,
+        );
+        let calm_h = calm.history.unwrap();
+        let switched_h = switched.history.unwrap();
+        // Identical prefix (same seed, same draws), diverging after the
+        // switch: 5W runs are slower.
+        assert_eq!(calm_h[..60], switched_h[..60]);
+        let t = |h: &[(usize, Measurement)]| -> f64 {
+            h[60..].iter().map(|(_, m)| m.time_s).sum::<f64>()
+        };
+        assert!(t(&switched_h) > t(&calm_h), "5W tail not slower");
+        // Post-switch draws respect the 5W budget (modulo the board's
+        // ±1.5% intrinsic measurement noise).
+        for (_, m) in &switched_h[61..] {
+            assert!(m.power_w <= 5.0 * 1.02, "power cap ignored after switch");
+        }
+    }
+
+    #[test]
+    fn bus_contention_stretches_memory_bound_time() {
+        let spec = EpisodeSpec { iterations: 80, record_history: true, ..Default::default() };
+        let calm = episode_outcome(&[], &spec, 5);
+        let contended = episode_outcome(
+            &[Event { at: 0, action: EventAction::BusContention { slope: 4.0, threshold: 0.0 } }],
+            &spec,
+            5,
+        );
+        let sum = |o: &EpisodeOutcome| {
+            o.history.as_ref().unwrap().iter().map(|(_, m)| m.time_s).sum::<f64>()
+        };
+        assert!(sum(&contended) > sum(&calm) * 1.2);
+        // Clearing restores the calm behaviour.
+        let cleared = episode_outcome(
+            &[
+                Event { at: 0, action: EventAction::BusContention { slope: 4.0, threshold: 0.0 } },
+                Event { at: 0, action: EventAction::ClearContention },
+            ],
+            &spec,
+            5,
+        );
+        assert_eq!(sum(&cleared), sum(&calm));
+    }
+
+    #[test]
+    fn noise_burst_event_applies() {
+        let spec = EpisodeSpec { iterations: 100, record_history: true, ..Default::default() };
+        let calm = episode_outcome(&[], &spec, 6);
+        let bursty = episode_outcome(
+            &[Event { at: 50, action: EventAction::SetNoise(NoiseModel::uniform(0.20)) }],
+            &spec,
+            6,
+        );
+        assert_eq!(
+            calm.history.as_ref().unwrap()[..50],
+            bursty.history.as_ref().unwrap()[..50]
+        );
+        assert_ne!(
+            calm.history.as_ref().unwrap()[50..],
+            bursty.history.as_ref().unwrap()[50..]
+        );
+    }
+
+    #[test]
+    fn regret_oracle_records_per_round() {
+        let app = apps::build(AppKind::Clomp);
+        let spec_dev = PowerMode::Maxn.spec();
+        let sweep = crate::tuning::oracle_sweep(app.as_ref(), &spec_dev, 0.15);
+        let mu = crate::tuning::expected_rewards(&sweep, 1.0, 0.0);
+        let spec = EpisodeSpec { iterations: 90, regret_mu: Some(mu), ..Default::default() };
+        let out = episode_outcome(&[], &spec, 7);
+        let regret = out.regret.unwrap();
+        assert_eq!(regret.len(), 90);
+        assert!(regret.windows(2).all(|w| w[1] >= w[0] - 1e-9));
+    }
+}

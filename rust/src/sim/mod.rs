@@ -1,0 +1,50 @@
+//! The unified parallel scenario engine.
+//!
+//! One simulation core under everything that used to run its own loop:
+//!
+//! * [`episode`] — the single select → run → observe stepper
+//!   ([`Episode`]) over borrowed app/device/strategy parts, with a
+//!   declarative mid-episode [`Event`] schedule (power-mode switches,
+//!   noise bursts, shared-bus contention);
+//! * [`strategy`] — the declarative [`StrategySpec`] axis covering every
+//!   bandit policy *and* every search baseline through the one
+//!   [`crate::baselines::SearchStep`] interface;
+//! * [`scenario`] — [`Scenario`] cells and the [`ScenarioGrid`] cross
+//!   product, buildable from code or a `[sim]` TOML scenario file
+//!   (`lasp simulate`);
+//! * [`runner`] — the fixed-pool [`SweepRunner`] fanning cells out with
+//!   deterministic, thread-count-independent result ordering, plus JSON
+//!   emission.
+//!
+//! Every figure driver, `tuning::TuningSession`, the coordinator worker
+//! and the `lasp simulate` CLI are thin layers over this module; see
+//! DESIGN.md §Simulation engine for the episode model, the determinism
+//! contract and the scenario-file schema.
+
+pub mod episode;
+pub mod runner;
+pub mod scenario;
+pub mod strategy;
+
+pub use episode::{Episode, EpisodeOutcome, EpisodeSpec, Event, EventAction, StepRecord};
+pub use runner::{oracle_sweep_parallel, run_scenario, SweepResult, SweepRunner};
+pub use scenario::{parse_events, Scenario, ScenarioGrid, DEFAULT_FIDELITY};
+pub use strategy::{lasp_policy, Built, PolicyStep, StrategySpec};
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static STEPS: AtomicU64 = AtomicU64::new(0);
+
+/// Flush a finished episode's step count into the process-wide tally
+/// (called once per episode, not per step, to keep the hot loop free of
+/// shared-cacheline traffic).
+pub(crate) fn count_steps(n: u64) {
+    STEPS.fetch_add(n, Ordering::Relaxed);
+}
+
+/// Total episode steps executed by the engine in this process — the
+/// steps/sec numerator for `lasp experiment`'s `BENCH_experiments.json`
+/// and `benches/sim_engine.rs`.
+pub fn steps_executed() -> u64 {
+    STEPS.load(Ordering::Relaxed)
+}

@@ -1,0 +1,366 @@
+//! The sweep runner: fan a set of [`Scenario`] cells across a fixed thread
+//! pool with deterministic result ordering, plus the single-cell executor
+//! every wrapper (figures, `TuningSession`, `lasp simulate`) goes through.
+//!
+//! Determinism: cells are self-contained (own app model, own seeded
+//! device, own seeded strategy), workers claim cell indices from an atomic
+//! cursor, and results are reassembled by index — so the output is
+//! bit-identical at any thread count (`rust/tests/sim_engine.rs` pins
+//! 1 vs 4 vs 8 threads).
+
+use super::episode::{Episode, EpisodeOutcome, EpisodeSpec};
+use super::scenario::{Scenario, ScenarioGrid};
+use crate::apps::{self, AppKind, AppModel};
+use crate::device::{DeviceSpec, JetsonNano, Measurement, PowerMode};
+use crate::tuning::{expected_rewards, oracle_sweep};
+use crate::util::json::JsonWriter;
+use crate::util::stats;
+use anyhow::Result;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+/// Process-wide memo for regret-oracle tables: cells sharing an
+/// (app, mode, fidelity, α, β) point reuse one noise-free sweep instead of
+/// each recomputing it (at Hypre scale the 92,160-arm sweep costs more
+/// than the episode it feeds). The table is a pure function of the key,
+/// so caching cannot perturb determinism; concurrent first computations
+/// are benign duplicated work resolving to the same value.
+fn regret_mu_for(cell: &Scenario) -> Vec<f64> {
+    type Key = (&'static str, &'static str, u64, u64, u64);
+    static CACHE: OnceLock<Mutex<BTreeMap<Key, Vec<f64>>>> = OnceLock::new();
+    let key = (
+        cell.app.name(),
+        cell.mode.name(),
+        cell.fidelity.to_bits(),
+        cell.alpha.to_bits(),
+        cell.beta.to_bits(),
+    );
+    let cache = CACHE.get_or_init(|| Mutex::new(BTreeMap::new()));
+    if let Some(mu) = cache.lock().expect("mu cache poisoned").get(&key) {
+        return mu.clone();
+    }
+    let app = apps::build(cell.app);
+    let sweep = oracle_sweep(app.as_ref(), &cell.mode.spec(), cell.fidelity);
+    let mu = expected_rewards(&sweep, cell.alpha, cell.beta);
+    cache.lock().expect("mu cache poisoned").entry(key).or_insert(mu).clone()
+}
+
+/// Execute one scenario cell end to end: build the app model, the seeded
+/// device and the seeded strategy, then drive one [`Episode`].
+pub fn run_scenario(cell: &Scenario) -> Result<EpisodeOutcome> {
+    let app = apps::build(cell.app);
+    let k = app.space().len();
+    let mut device = JetsonNano::new(cell.mode, cell.seed)
+        .with_fidelity(cell.fidelity)
+        .with_injected_noise(cell.noise);
+    let regret_mu = cell.record_regret.then(|| regret_mu_for(cell));
+    let spec = EpisodeSpec {
+        iterations: cell.iterations,
+        record_trace: cell.record_trace,
+        record_history: false,
+        track_resources: false,
+        regret_mu,
+    };
+    let mut built = cell.strategy.build(k, cell.iterations, cell.alpha, cell.beta, cell.seed);
+    let mut step = built.step(k, cell.iterations, cell.fidelity);
+    Episode::new(app.as_ref(), &mut device, step.as_mut(), &cell.events, &spec).run()
+}
+
+/// A fixed-size thread pool for deterministic parallel sweeps.
+#[derive(Debug, Clone, Copy)]
+pub struct SweepRunner {
+    threads: usize,
+}
+
+impl SweepRunner {
+    /// `threads == 0` sizes the pool from the host (`LASP_SIM_THREADS`
+    /// overrides, then `available_parallelism`).
+    pub fn new(threads: usize) -> SweepRunner {
+        SweepRunner { threads }
+    }
+
+    fn pool_size(&self, jobs: usize) -> usize {
+        let configured = if self.threads > 0 {
+            self.threads
+        } else {
+            std::env::var("LASP_SIM_THREADS")
+                .ok()
+                .and_then(|v| v.parse().ok())
+                .filter(|&n| n > 0)
+                .unwrap_or_else(|| {
+                    std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1)
+                })
+        };
+        configured.min(jobs).max(1)
+    }
+
+    /// Deterministic parallel map: `f(0..n)` on the pool, results in index
+    /// order regardless of scheduling.
+    pub fn map<T, F>(&self, n: usize, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(usize) -> T + Sync,
+    {
+        let threads = self.pool_size(n);
+        if threads <= 1 {
+            return (0..n).map(f).collect();
+        }
+        let cursor = AtomicUsize::new(0);
+        let parts: Vec<Vec<(usize, T)>> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..threads)
+                .map(|_| {
+                    s.spawn(|| {
+                        let mut local = Vec::new();
+                        loop {
+                            let i = cursor.fetch_add(1, Ordering::Relaxed);
+                            if i >= n {
+                                break;
+                            }
+                            local.push((i, f(i)));
+                        }
+                        local
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("sweep worker panicked")).collect()
+        });
+        let mut merged: Vec<(usize, T)> = parts.into_iter().flatten().collect();
+        merged.sort_by_key(|(i, _)| *i);
+        merged.into_iter().map(|(_, t)| t).collect()
+    }
+
+    /// Run explicit cells (figure drivers build these), in cell order.
+    pub fn run(&self, cells: &[Scenario]) -> Result<Vec<EpisodeOutcome>> {
+        self.map(cells.len(), |i| run_scenario(&cells[i]))
+            .into_iter()
+            .collect()
+    }
+
+    /// Expand and run a grid.
+    pub fn sweep(&self, grid: &ScenarioGrid) -> Result<SweepResult> {
+        let cells = grid.cells();
+        let outcomes = self.run(&cells)?;
+        Ok(SweepResult { cells, outcomes })
+    }
+}
+
+/// Noise-free per-arm (time, power) sweep parallelized over arm chunks —
+/// the oracle table behind Figs 2/3/4/9/11, fanned over the pool for the
+/// 92,160-arm Hypre space.
+pub fn oracle_sweep_parallel(app: &dyn AppModel, spec: &DeviceSpec, q: f64) -> Vec<Measurement> {
+    const CHUNK: usize = 4096;
+    let k = app.space().len();
+    // A single chunk degrades to a serial in-place map on the runner.
+    let chunks = k.div_ceil(CHUNK);
+    let parts = SweepRunner::new(0).map(chunks, |c| {
+        let lo = c * CHUNK;
+        let hi = (lo + CHUNK).min(k);
+        (lo..hi)
+            .map(|i| crate::device::run_with_cap(spec, &app.workload(i, q)))
+            .collect::<Vec<_>>()
+    });
+    parts.into_iter().flatten().collect()
+}
+
+/// A completed sweep: cells paired with their outcomes, renderable as a
+/// human table and as machine-readable JSON.
+pub struct SweepResult {
+    pub cells: Vec<Scenario>,
+    pub outcomes: Vec<EpisodeOutcome>,
+}
+
+/// Oracle reference for one (app, mode, fidelity) point.
+struct OracleRef {
+    times: Vec<f64>,
+    powers: Vec<f64>,
+    default_index: usize,
+}
+
+impl OracleRef {
+    /// §II-A oracle distance and Eq. 8 gain-vs-default on the objective's
+    /// primary metric (time for α ≥ 0.5, else power), percent.
+    fn scores(&self, best: usize, alpha: f64) -> (f64, f64) {
+        let metric = if alpha >= 0.5 { &self.times } else { &self.powers };
+        let oracle = metric[stats::argmin(metric)];
+        let distance = (metric[best] / oracle - 1.0) * 100.0;
+        let gain = (metric[self.default_index] - metric[best]) / metric[self.default_index] * 100.0;
+        (distance, gain)
+    }
+}
+
+impl SweepResult {
+    fn oracle_key(c: &Scenario) -> (&'static str, &'static str, u64) {
+        (c.app.name(), c.mode.name(), c.fidelity.to_bits())
+    }
+
+    fn oracle_refs(&self) -> BTreeMap<(&'static str, &'static str, u64), OracleRef> {
+        let mut keys: Vec<(AppKind, PowerMode, f64)> = vec![];
+        for c in &self.cells {
+            if !keys
+                .iter()
+                .any(|(a, m, q)| *a == c.app && *m == c.mode && q.to_bits() == c.fidelity.to_bits())
+            {
+                keys.push((c.app, c.mode, c.fidelity));
+            }
+        }
+        let refs = SweepRunner::new(0).map(keys.len(), |i| {
+            let (app_kind, mode, q) = keys[i];
+            let app = apps::build(app_kind);
+            let sweep = oracle_sweep(app.as_ref(), &mode.spec(), q);
+            OracleRef {
+                times: sweep.iter().map(|m| m.time_s).collect(),
+                powers: sweep.iter().map(|m| m.power_w).collect(),
+                default_index: app.default_index(),
+            }
+        });
+        keys.into_iter()
+            .zip(refs)
+            .map(|((a, m, q), r)| ((a.name(), m.name(), q.to_bits()), r))
+            .collect()
+    }
+
+    /// Human-readable per-cell table.
+    pub fn report(&self) {
+        let oracles = self.oracle_refs();
+        println!("\n## Scenario sweep — {} cells", self.cells.len());
+        println!("| cell | best (Eq.4) | evals | oracle dist | gain vs default |");
+        println!("|---|---|---|---|---|");
+        for (c, o) in self.cells.iter().zip(&self.outcomes) {
+            let oref = &oracles[&Self::oracle_key(c)];
+            let (distance, gain) = oref.scores(o.best_index, c.alpha);
+            println!(
+                "| {} | #{} | {} | {:+.1}% | {:+.1}% |",
+                c.label(),
+                o.best_index,
+                o.evaluations,
+                distance,
+                gain
+            );
+        }
+    }
+
+    /// Machine-readable JSON: per-cell best arm (index + description),
+    /// oracle distance / gain vs default on the objective's primary
+    /// metric, and the regret curve when recorded.
+    pub fn to_json(&self) -> String {
+        let oracles = self.oracle_refs();
+        // One model per distinct app (describe() needs the space), not one
+        // per cell.
+        let mut models: BTreeMap<&'static str, Box<dyn AppModel>> = BTreeMap::new();
+        for c in &self.cells {
+            models.entry(c.app.name()).or_insert_with(|| apps::build(c.app));
+        }
+        let mut buf = Vec::with_capacity(4096);
+        let mut w = JsonWriter::new(&mut buf);
+        w.begin_obj();
+        w.field_str("engine", "lasp-sim");
+        w.field_num("cells", self.cells.len() as f64);
+        w.key("results");
+        w.begin_arr();
+        for (c, o) in self.cells.iter().zip(&self.outcomes) {
+            let app = &models[c.app.name()];
+            let oref = &oracles[&Self::oracle_key(c)];
+            let (distance, gain) = oref.scores(o.best_index, c.alpha);
+            w.begin_obj();
+            w.field_str("app", c.app.name());
+            w.field_str("mode", c.mode.lower_name());
+            w.field_str("strategy", &c.strategy.label());
+            w.field_num("alpha", c.alpha);
+            w.field_num("beta", c.beta);
+            w.field_num("seed", c.seed as f64);
+            w.field_num("iterations", c.iterations as f64);
+            w.field_num("noise_pct", c.noise.pct);
+            w.field_num("events", c.events.len() as f64);
+            w.field_num("best_index", o.best_index as f64);
+            w.field_str("best_config", &app.space().describe(o.best_index));
+            w.field_num("evaluations", o.evaluations as f64);
+            w.field_num("oracle_distance_pct", distance);
+            w.field_num("gain_vs_default_pct", gain);
+            w.field_num("simulated_device_seconds", o.simulated_device_seconds);
+            if let Some(regret) = &o.regret {
+                w.key("regret");
+                w.begin_arr();
+                for r in regret {
+                    w.num_val(*r);
+                }
+                w.end_arr();
+            }
+            if let Some(trace) = &o.trace {
+                w.key("trace");
+                w.begin_arr();
+                for arm in trace {
+                    w.num_val(*arm as f64);
+                }
+                w.end_arr();
+            }
+            w.end_obj();
+        }
+        w.end_arr();
+        w.end_obj();
+        String::from_utf8(buf).expect("sweep JSON is UTF-8")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::StrategySpec;
+    use crate::util::json::Json;
+
+    #[test]
+    fn map_preserves_index_order() {
+        for threads in [1, 3, 8] {
+            let out = SweepRunner::new(threads).map(23, |i| i * i);
+            assert_eq!(out, (0..23).map(|i| i * i).collect::<Vec<_>>());
+        }
+        assert!(SweepRunner::new(4).map(0, |i| i).is_empty());
+    }
+
+    #[test]
+    fn run_scenario_matches_direct_episode() {
+        let cell = Scenario::lasp(AppKind::Clomp, PowerMode::Maxn, 120, 3)
+            .with_objective(1.0, 0.0)
+            .recording_trace();
+        let a = run_scenario(&cell).unwrap();
+        let b = run_scenario(&cell).unwrap();
+        assert_eq!(a.trace, b.trace);
+        assert_eq!(a.best_index, b.best_index);
+        assert_eq!(a.evaluations, 120);
+    }
+
+    #[test]
+    fn sweep_emits_valid_json() {
+        let grid = ScenarioGrid {
+            apps: vec![AppKind::Clomp],
+            strategies: vec![StrategySpec::Ucb, StrategySpec::Random],
+            seeds: vec![1, 2],
+            iterations: 80,
+            record_regret: true,
+            ..Default::default()
+        };
+        let result = SweepRunner::new(2).sweep(&grid).unwrap();
+        assert_eq!(result.outcomes.len(), 4);
+        let json = result.to_json();
+        let parsed = Json::parse(&json).expect("valid JSON");
+        let cells = parsed.get("results").and_then(|r| r.as_arr()).unwrap();
+        assert_eq!(cells.len(), 4);
+        for cell in cells {
+            assert!(cell.get("best_index").and_then(|v| v.as_f64()).is_some());
+            assert_eq!(
+                cell.get("regret").and_then(|r| r.as_arr()).map(|a| a.len()),
+                Some(80)
+            );
+        }
+    }
+
+    #[test]
+    fn parallel_oracle_sweep_matches_serial() {
+        // Hypre's 92,160 arms exercise the chunked path (>1 chunk).
+        let app = apps::build(AppKind::Hypre);
+        let spec = PowerMode::Maxn.spec();
+        let serial = oracle_sweep(app.as_ref(), &spec, 0.15);
+        let parallel = oracle_sweep_parallel(app.as_ref(), &spec, 0.15);
+        assert_eq!(serial, parallel);
+    }
+}

@@ -1,0 +1,469 @@
+//! Declarative scenarios: one [`Scenario`] is a fully-specified episode
+//! (app × device mode × noise × objective × strategy × seed × events); a
+//! [`ScenarioGrid`] is the cross product the sweep runner fans out.
+//!
+//! Grids are buildable from code (the figure drivers declare them) or from
+//! a TOML scenario file with a `[sim]` section — see `DESIGN.md`
+//! §Simulation engine for the schema and `docs/scenarios/` for runnable
+//! examples (`lasp simulate --scenario <file>`).
+
+use super::episode::{Event, EventAction};
+use super::strategy::StrategySpec;
+use crate::apps::AppKind;
+use crate::config::parse_toml;
+use crate::device::{NoiseModel, PowerMode};
+use anyhow::{anyhow, Context, Result};
+
+/// Default low-fidelity evaluation point on the edge device (paper §II-C).
+pub const DEFAULT_FIDELITY: f64 = 0.15;
+
+/// One fully-specified episode cell.
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    pub app: AppKind,
+    pub mode: PowerMode,
+    pub iterations: usize,
+    pub alpha: f64,
+    pub beta: f64,
+    pub seed: u64,
+    pub fidelity: f64,
+    /// Injected synthetic measurement error (Fig 12 studies).
+    pub noise: NoiseModel,
+    pub strategy: StrategySpec,
+    /// Mid-episode environment changes.
+    pub events: Vec<Event>,
+    pub record_trace: bool,
+    pub record_regret: bool,
+}
+
+impl Scenario {
+    /// A LASP cell with the defaults every figure driver shares.
+    pub fn lasp(app: AppKind, mode: PowerMode, iterations: usize, seed: u64) -> Scenario {
+        Scenario {
+            app,
+            mode,
+            iterations,
+            alpha: 0.8,
+            beta: 0.2,
+            seed,
+            fidelity: DEFAULT_FIDELITY,
+            noise: NoiseModel::none(),
+            strategy: StrategySpec::Lasp,
+            events: vec![],
+            record_trace: false,
+            record_regret: false,
+        }
+    }
+
+    pub fn with_objective(mut self, alpha: f64, beta: f64) -> Scenario {
+        self.alpha = alpha;
+        self.beta = beta;
+        self
+    }
+
+    pub fn with_noise(mut self, noise: NoiseModel) -> Scenario {
+        self.noise = noise;
+        self
+    }
+
+    pub fn with_strategy(mut self, strategy: StrategySpec) -> Scenario {
+        self.strategy = strategy;
+        self
+    }
+
+    pub fn with_events(mut self, events: Vec<Event>) -> Scenario {
+        self.events = events;
+        self
+    }
+
+    pub fn recording_trace(mut self) -> Scenario {
+        self.record_trace = true;
+        self
+    }
+
+    pub fn recording_regret(mut self) -> Scenario {
+        self.record_regret = true;
+        self
+    }
+
+    /// Compact cell label for reports.
+    pub fn label(&self) -> String {
+        format!(
+            "{}/{}/α{:.2}/{}/seed{}",
+            self.app,
+            self.mode.lower_name(),
+            self.alpha,
+            self.strategy.label(),
+            self.seed
+        )
+    }
+}
+
+/// A declarative cross product of scenario axes.
+#[derive(Debug, Clone)]
+pub struct ScenarioGrid {
+    pub apps: Vec<AppKind>,
+    pub modes: Vec<PowerMode>,
+    /// Injected-noise percentages (0.0 = clean).
+    pub noise_pcts: Vec<f64>,
+    /// (α, β) objective pairs.
+    pub objectives: Vec<(f64, f64)>,
+    pub strategies: Vec<StrategySpec>,
+    pub seeds: Vec<u64>,
+    pub iterations: usize,
+    pub fidelity: f64,
+    /// Event schedule shared by every cell.
+    pub events: Vec<Event>,
+    pub record_trace: bool,
+    pub record_regret: bool,
+}
+
+impl Default for ScenarioGrid {
+    fn default() -> Self {
+        ScenarioGrid {
+            apps: AppKind::all().to_vec(),
+            modes: vec![PowerMode::Maxn],
+            noise_pcts: vec![0.0],
+            objectives: vec![(0.8, 0.2)],
+            strategies: vec![StrategySpec::Lasp],
+            seeds: vec![42],
+            iterations: 500,
+            fidelity: DEFAULT_FIDELITY,
+            events: vec![],
+            record_trace: false,
+            record_regret: false,
+        }
+    }
+}
+
+impl ScenarioGrid {
+    /// Expand the cross product in a fixed deterministic order:
+    /// app → mode → noise → objective → strategy → seed.
+    pub fn cells(&self) -> Vec<Scenario> {
+        let mut out = Vec::with_capacity(self.len());
+        for &app in &self.apps {
+            for &mode in &self.modes {
+                for &pct in &self.noise_pcts {
+                    let noise =
+                        if pct > 0.0 { NoiseModel::uniform(pct) } else { NoiseModel::none() };
+                    for &(alpha, beta) in &self.objectives {
+                        for &strategy in &self.strategies {
+                            for &seed in &self.seeds {
+                                out.push(Scenario {
+                                    app,
+                                    mode,
+                                    iterations: self.iterations,
+                                    alpha,
+                                    beta,
+                                    seed,
+                                    fidelity: self.fidelity,
+                                    noise,
+                                    strategy,
+                                    events: self.events.clone(),
+                                    record_trace: self.record_trace,
+                                    record_regret: self.record_regret,
+                                });
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Number of cells in the cross product.
+    pub fn len(&self) -> usize {
+        self.apps.len()
+            * self.modes.len()
+            * self.noise_pcts.len()
+            * self.objectives.len()
+            * self.strategies.len()
+            * self.seeds.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Load a grid from a TOML scenario file.
+    pub fn from_file(path: &std::path::Path) -> Result<ScenarioGrid> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::from_toml_str(&text).with_context(|| format!("parsing {}", path.display()))
+    }
+
+    /// Parse the `[sim]` section of a scenario file. List-valued keys are
+    /// comma-separated strings (the config parser's TOML subset has no
+    /// arrays); see DESIGN.md §Simulation engine for the full schema.
+    pub fn from_toml_str(text: &str) -> Result<ScenarioGrid> {
+        let doc = parse_toml(text).map_err(|e| anyhow!("scenario parse: {e}"))?;
+        let Some(sim) = doc.get("sim") else {
+            return Err(anyhow!("scenario file has no [sim] section"));
+        };
+        let mut grid = ScenarioGrid::default();
+
+        let str_of = |key: &str| -> Result<Option<&str>> {
+            match sim.get(key) {
+                None => Ok(None),
+                Some(v) => v
+                    .as_str()
+                    .map(Some)
+                    .ok_or_else(|| anyhow!("sim.{key} must be a string")),
+            }
+        };
+        if let Some(s) = str_of("apps")? {
+            grid.apps = if s.trim() == "all" {
+                AppKind::all().to_vec()
+            } else {
+                split_list(s).map(str::parse).collect::<Result<Vec<_>>>()?
+            };
+        }
+        if let Some(s) = str_of("modes")? {
+            grid.modes = if s.trim() == "all" {
+                vec![PowerMode::Maxn, PowerMode::FiveW]
+            } else {
+                split_list(s).map(str::parse).collect::<Result<Vec<_>>>()?
+            };
+        }
+        if let Some(s) = str_of("noise")? {
+            grid.noise_pcts = split_list(s)
+                .map(|x| x.parse::<f64>().map_err(|_| anyhow!("sim.noise: bad value '{x}'")))
+                .collect::<Result<Vec<_>>>()?;
+            if grid.noise_pcts.iter().any(|p| !(0.0..1.0).contains(p)) {
+                return Err(anyhow!("sim.noise values must lie in [0, 1)"));
+            }
+        }
+        if let Some(s) = str_of("objectives")? {
+            grid.objectives = split_list(s).map(parse_objective).collect::<Result<Vec<_>>>()?;
+        }
+        if let Some(s) = str_of("strategies")? {
+            grid.strategies =
+                split_list(s).map(StrategySpec::parse).collect::<Result<Vec<_>>>()?;
+        }
+        if let Some(s) = str_of("seeds")? {
+            grid.seeds = parse_seeds(s)?;
+        }
+        if let Some(v) = sim.get("iterations") {
+            let i = v.as_int().ok_or_else(|| anyhow!("sim.iterations must be int"))?;
+            if !(1..=10_000_000).contains(&i) {
+                return Err(anyhow!("sim.iterations must lie in 1..=10000000, got {i}"));
+            }
+            grid.iterations = i as usize;
+        }
+        if let Some(v) = sim.get("fidelity") {
+            let q = v.as_float().ok_or_else(|| anyhow!("sim.fidelity must be number"))?;
+            if !(0.0..=1.0).contains(&q) {
+                return Err(anyhow!("sim.fidelity must lie in [0, 1]"));
+            }
+            grid.fidelity = q;
+        }
+        if let Some(v) = sim.get("record_trace") {
+            grid.record_trace =
+                v.as_bool().ok_or_else(|| anyhow!("sim.record_trace must be bool"))?;
+        }
+        if let Some(v) = sim.get("record_regret") {
+            grid.record_regret =
+                v.as_bool().ok_or_else(|| anyhow!("sim.record_regret must be bool"))?;
+        }
+        if let Some(s) = str_of("events")? {
+            grid.events = parse_events(s)?;
+        }
+        if grid.is_empty() {
+            return Err(anyhow!("scenario grid is empty (an axis has no values)"));
+        }
+        Ok(grid)
+    }
+}
+
+fn split_list(s: &str) -> impl Iterator<Item = &str> {
+    s.split(',').map(str::trim).filter(|x| !x.is_empty())
+}
+
+/// `"0.8:0.2"` → (α, β).
+fn parse_objective(s: &str) -> Result<(f64, f64)> {
+    let (a, b) = s
+        .split_once(':')
+        .ok_or_else(|| anyhow!("objective '{s}' must be alpha:beta (e.g. 0.8:0.2)"))?;
+    let alpha: f64 = a.trim().parse().map_err(|_| anyhow!("bad alpha '{a}'"))?;
+    let beta: f64 = b.trim().parse().map_err(|_| anyhow!("bad beta '{b}'"))?;
+    if !(0.0..=1.0).contains(&alpha) || !(0.0..=1.0).contains(&beta) || alpha + beta == 0.0 {
+        return Err(anyhow!("objective '{s}': weights must lie in [0,1], not both zero"));
+    }
+    Ok((alpha, beta))
+}
+
+/// `"1,2,9"` or the half-open range `"900..905"`.
+fn parse_seeds(s: &str) -> Result<Vec<u64>> {
+    if let Some((lo, hi)) = s.split_once("..") {
+        let lo: u64 = lo.trim().parse().map_err(|_| anyhow!("bad seed range start '{lo}'"))?;
+        let hi: u64 = hi.trim().parse().map_err(|_| anyhow!("bad seed range end '{hi}'"))?;
+        if hi <= lo || hi - lo > 100_000 {
+            return Err(anyhow!("seed range {lo}..{hi} must be ascending and modest"));
+        }
+        return Ok((lo..hi).collect());
+    }
+    split_list(s)
+        .map(|x| x.parse::<u64>().map_err(|_| anyhow!("bad seed '{x}'")))
+        .collect()
+}
+
+/// Event DSL: comma-separated `action@iteration[=arg]` items.
+///
+/// * `mode@250=5w` — switch the power mode at iteration 250;
+/// * `noise@300=0.15` — inject 15% uniform measurement error from 300 on
+///   (`=0` ends a burst);
+/// * `bus@600=4x0.45` — bus contention with slope 4 above memory-intensity
+///   threshold 0.45;
+/// * `clear@800` — end the bus contention.
+pub fn parse_events(s: &str) -> Result<Vec<Event>> {
+    split_list(s).map(parse_event).collect()
+}
+
+fn parse_event(s: &str) -> Result<Event> {
+    let (head, arg) = match s.split_once('=') {
+        Some((h, a)) => (h.trim(), Some(a.trim())),
+        None => (s.trim(), None),
+    };
+    let (kind, at) = head
+        .split_once('@')
+        .ok_or_else(|| anyhow!("event '{s}' must be action@iteration[=arg]"))?;
+    let at: usize = at
+        .trim()
+        .parse()
+        .map_err(|_| anyhow!("event '{s}': bad iteration '{at}'"))?;
+    let need = |what: &str| -> Result<&str> {
+        arg.ok_or_else(|| anyhow!("event '{s}' needs ={what}"))
+    };
+    let action = match kind.trim() {
+        "mode" => EventAction::SetMode(need("mode")?.parse()?),
+        "noise" => {
+            let pct: f64 = need("pct")?
+                .parse()
+                .map_err(|_| anyhow!("event '{s}': bad noise pct"))?;
+            if !(0.0..1.0).contains(&pct) {
+                return Err(anyhow!("event '{s}': noise pct must lie in [0, 1)"));
+            }
+            let noise = if pct > 0.0 { NoiseModel::uniform(pct) } else { NoiseModel::none() };
+            EventAction::SetNoise(noise)
+        }
+        "bus" => {
+            let spec = need("slope x threshold")?;
+            let (slope, threshold) = spec
+                .split_once('x')
+                .ok_or_else(|| anyhow!("event '{s}': bus arg must be <slope>x<threshold>"))?;
+            let slope: f64 =
+                slope.trim().parse().map_err(|_| anyhow!("event '{s}': bad slope"))?;
+            let threshold: f64 =
+                threshold.trim().parse().map_err(|_| anyhow!("event '{s}': bad threshold"))?;
+            if slope < 0.0 || !(0.0..=1.0).contains(&threshold) {
+                return Err(anyhow!("event '{s}': slope >= 0, threshold in [0, 1]"));
+            }
+            EventAction::BusContention { slope, threshold }
+        }
+        "clear" => EventAction::ClearContention,
+        other => {
+            return Err(anyhow!("event '{s}': unknown action '{other}' (mode|noise|bus|clear)"))
+        }
+    };
+    Ok(Event { at, action })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_grid_covers_all_apps() {
+        let g = ScenarioGrid::default();
+        assert_eq!(g.len(), 4);
+        let cells = g.cells();
+        assert_eq!(cells.len(), 4);
+        assert_eq!(cells[0].app, AppKind::Lulesh);
+        assert!(cells.iter().all(|c| c.iterations == 500));
+    }
+
+    #[test]
+    fn cell_order_is_the_documented_cross_product() {
+        let g = ScenarioGrid {
+            apps: vec![AppKind::Clomp, AppKind::Kripke],
+            objectives: vec![(1.0, 0.0), (0.0, 1.0)],
+            seeds: vec![1, 2],
+            ..Default::default()
+        };
+        let cells = g.cells();
+        assert_eq!(cells.len(), 8);
+        // app is the slowest axis, seed the fastest.
+        assert_eq!((cells[0].app, cells[0].alpha, cells[0].seed), (AppKind::Clomp, 1.0, 1));
+        assert_eq!((cells[1].app, cells[1].alpha, cells[1].seed), (AppKind::Clomp, 1.0, 2));
+        assert_eq!((cells[2].app, cells[2].alpha, cells[2].seed), (AppKind::Clomp, 0.0, 1));
+        assert_eq!((cells[4].app, cells[4].alpha, cells[4].seed), (AppKind::Kripke, 1.0, 1));
+    }
+
+    #[test]
+    fn parses_full_scenario_file() {
+        let g = ScenarioGrid::from_toml_str(
+            r#"
+            # A nonstationary sweep the seed-era loops could not express.
+            [sim]
+            apps = "all"
+            modes = "maxn"
+            noise = "0, 0.05"
+            objectives = "0.8:0.2, 0.2:0.8"
+            strategies = "lasp, swucb:600"
+            seeds = "900..903"
+            iterations = 800
+            fidelity = 0.15
+            record_trace = true
+            events = "mode@400=5w, noise@500=0.15, noise@700=0, bus@600=4x0.45, clear@750"
+            "#,
+        )
+        .unwrap();
+        // 4 apps × 1 mode × 2 noises × 2 objectives × 2 strategies × 3 seeds
+        assert_eq!(g.len(), 96);
+        assert_eq!(g.iterations, 800);
+        assert_eq!(g.seeds, vec![900, 901, 902]);
+        assert_eq!(g.events.len(), 5);
+        assert_eq!(
+            g.events[0],
+            Event { at: 400, action: EventAction::SetMode(PowerMode::FiveW) }
+        );
+        assert_eq!(
+            g.events[3],
+            Event { at: 600, action: EventAction::BusContention { slope: 4.0, threshold: 0.45 } }
+        );
+        assert_eq!(g.events[4], Event { at: 750, action: EventAction::ClearContention });
+        assert!(g.record_trace && !g.record_regret);
+    }
+
+    #[test]
+    fn rejects_malformed_scenarios() {
+        assert!(ScenarioGrid::from_toml_str("[tune]\napp = \"kripke\"\n").is_err());
+        assert!(ScenarioGrid::from_toml_str("[sim]\napps = \"doom\"\n").is_err());
+        assert!(ScenarioGrid::from_toml_str("[sim]\nobjectives = \"0.8\"\n").is_err());
+        assert!(ScenarioGrid::from_toml_str("[sim]\nstrategies = \"sgd\"\n").is_err());
+        assert!(ScenarioGrid::from_toml_str("[sim]\nseeds = \"9..3\"\n").is_err());
+        assert!(ScenarioGrid::from_toml_str("[sim]\nnoise = \"1.5\"\n").is_err());
+        assert!(ScenarioGrid::from_toml_str("[sim]\nevents = \"warp@3\"\n").is_err());
+        assert!(ScenarioGrid::from_toml_str("[sim]\nevents = \"mode@x=5w\"\n").is_err());
+        assert!(ScenarioGrid::from_toml_str("[sim]\napps = \",\"\n").is_err());
+        assert!(ScenarioGrid::from_toml_str("[sim]\niterations = 0\n").is_err());
+    }
+
+    #[test]
+    fn scenario_builders_compose() {
+        let s = Scenario::lasp(AppKind::Hypre, PowerMode::FiveW, 300, 7)
+            .with_objective(0.2, 0.8)
+            .with_noise(NoiseModel::uniform(0.1))
+            .with_strategy(StrategySpec::Thompson)
+            .with_events(parse_events("mode@100=maxn").unwrap())
+            .recording_trace()
+            .recording_regret();
+        assert_eq!(s.alpha, 0.2);
+        assert_eq!(s.strategy, StrategySpec::Thompson);
+        assert_eq!(s.events.len(), 1);
+        assert!(s.record_trace && s.record_regret);
+        assert!(s.label().contains("hypre"));
+        assert!(s.label().contains("thompson"));
+    }
+}

@@ -1,0 +1,318 @@
+//! Strategy layer of the scenario engine: one declarative [`StrategySpec`]
+//! naming every tuner this system knows — the five bandit policies *and*
+//! the four search baselines — plus the [`PolicyStep`] adapter that lets a
+//! bandit [`Policy`] ride the same incremental
+//! [`SearchStep`](crate::baselines::SearchStep) interface the baselines
+//! expose. This is what collapses the seed-era per-family run loops into
+//! one episode stepper.
+
+use crate::bandit::{
+    EpsilonGreedy, Policy, SlidingWindowUcb, SubsetTuner, ThompsonSampler, UcbTuner,
+};
+use crate::baselines::{
+    BlissBo, Decision, RandomSearch, SearchStep, Searcher, SimulatedAnnealing, SuccessiveHalving,
+};
+use crate::device::Measurement;
+use anyhow::{anyhow, Result};
+
+/// Build the LASP policy for a space of size `k`: plain UCB1 when the
+/// budget covers the init sweep, candidate-subset LASP otherwise
+/// (paper §IV-B scalability adaptation — see `bandit::subset`).
+pub fn lasp_policy(
+    k: usize,
+    iterations: usize,
+    alpha: f64,
+    beta: f64,
+    seed: u64,
+) -> Box<dyn Policy> {
+    if k > iterations / 2 && k > 256 {
+        let m = SubsetTuner::recommended_size(k, iterations);
+        Box::new(SubsetTuner::new(k, m, alpha, beta, seed ^ 0xA5A5))
+    } else {
+        Box::new(UcbTuner::new(k, alpha, beta))
+    }
+}
+
+/// Adapter: any bandit [`Policy`] driven through the incremental
+/// [`SearchStep`] interface. Selection is allocation-free in steady state
+/// (the policy's own `Scratch` is reused underneath).
+pub struct PolicyStep<'a> {
+    policy: &'a mut dyn Policy,
+}
+
+impl<'a> PolicyStep<'a> {
+    pub fn new(policy: &'a mut dyn Policy) -> PolicyStep<'a> {
+        PolicyStep { policy }
+    }
+}
+
+impl SearchStep for PolicyStep<'_> {
+    fn next(&mut self) -> Result<Option<Decision>> {
+        Ok(Some(Decision::at_native(self.policy.select())))
+    }
+
+    fn observe(&mut self, index: usize, _fidelity: f64, m: Measurement) {
+        self.policy.update(index, m.time_s, m.power_w);
+    }
+
+    fn recommend(&self) -> usize {
+        self.policy.most_selected()
+    }
+
+    fn best_objective(&self) -> f64 {
+        // Bandit recommendations are by pull count (Eq. 4), not by a
+        // scalarized search objective; report the pull share instead.
+        let total = self.policy.total_pulls().max(1.0);
+        self.policy.counts()[self.policy.most_selected()] / total
+    }
+
+    fn counts(&self) -> Option<&[f64]> {
+        Some(self.policy.counts())
+    }
+
+    fn name(&self) -> &'static str {
+        self.policy.name()
+    }
+}
+
+/// Declarative strategy selector — one grid axis of a
+/// [`super::ScenarioGrid`]. Parsed from scenario files
+/// (`strategies = "lasp,swucb:600,random"`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum StrategySpec {
+    /// The paper's tuner: UCB1, or candidate-subset LASP on large spaces
+    /// (the [`lasp_policy`] budget rule).
+    Lasp,
+    /// Plain UCB1 regardless of space size.
+    Ucb,
+    /// ε-greedy with the given exploration rate.
+    Epsilon(f64),
+    /// Thompson sampling.
+    Thompson,
+    /// Sliding-window UCB; window 0 means `max(iterations, k)` (the
+    /// effectively-unwindowed ablation setting).
+    SwUcb(usize),
+    /// Candidate-subset LASP with an explicit subset size; 0 means the
+    /// recommended size for the budget.
+    Subset(usize),
+    /// Uniform random search.
+    Random,
+    /// Simulated annealing.
+    Annealing,
+    /// BLISS-style GP Bayesian optimization.
+    Bliss,
+    /// Hyperband-style successive halving over the fidelity knob.
+    Halving,
+}
+
+/// A constructed strategy: either a bandit policy or a search baseline.
+/// [`Built::step`] exposes both through the one [`SearchStep`] interface.
+pub enum Built {
+    Policy(Box<dyn Policy>),
+    Search(Box<dyn Searcher>),
+}
+
+impl Built {
+    /// Begin the incremental run (borrows the built strategy).
+    pub fn step<'a>(&'a mut self, k: usize, budget: usize, q: f64) -> Box<dyn SearchStep + 'a> {
+        match self {
+            Built::Policy(p) => Box::new(PolicyStep::new(p.as_mut())),
+            Built::Search(s) => s.begin(k, budget, q),
+        }
+    }
+}
+
+impl StrategySpec {
+    /// Parse one spec: a name with an optional `:arg` parameter
+    /// (`epsilon:0.1`, `swucb:600`, `subset:64`).
+    pub fn parse(s: &str) -> Result<StrategySpec> {
+        let (name, arg) = match s.split_once(':') {
+            Some((n, a)) => (n.trim(), Some(a.trim())),
+            None => (s.trim(), None),
+        };
+        let num = |what: &str| -> Result<f64> {
+            arg.ok_or_else(|| anyhow!("strategy '{name}' needs :{what}"))?
+                .parse::<f64>()
+                .map_err(|_| anyhow!("strategy '{name}': bad {what} '{}'", arg.unwrap_or("")))
+        };
+        // Validate at parse time (like every other scenario-file field), so
+        // a bad arg is a CLI error, not a panic inside a pool worker.
+        let count = |what: &str| -> Result<usize> {
+            let v = num(what)?;
+            if !(v.is_finite() && v > 0.0 && v.fract() == 0.0 && v <= 1e9) {
+                return Err(anyhow!("strategy '{name}': {what} must be a positive integer"));
+            }
+            Ok(v as usize)
+        };
+        Ok(match name {
+            "lasp" => StrategySpec::Lasp,
+            "ucb" => StrategySpec::Ucb,
+            "epsilon" => {
+                let rate = if arg.is_some() { num("rate")? } else { 0.1 };
+                if !(0.0..=1.0).contains(&rate) {
+                    return Err(anyhow!("strategy 'epsilon': rate must lie in [0, 1]"));
+                }
+                StrategySpec::Epsilon(rate)
+            }
+            "thompson" => StrategySpec::Thompson,
+            "swucb" => StrategySpec::SwUcb(if arg.is_some() { count("window")? } else { 0 }),
+            "subset" => StrategySpec::Subset(if arg.is_some() { count("size")? } else { 0 }),
+            "random" => StrategySpec::Random,
+            "annealing" => StrategySpec::Annealing,
+            "bliss" => StrategySpec::Bliss,
+            "halving" => StrategySpec::Halving,
+            other => {
+                return Err(anyhow!(
+                    "unknown strategy '{other}' \
+                     (lasp|ucb|epsilon[:rate]|thompson|swucb[:window]|subset[:size]|\
+                     random|annealing|bliss|halving)"
+                ))
+            }
+        })
+    }
+
+    /// Stable label for reports and JSON output.
+    pub fn label(&self) -> String {
+        match self {
+            StrategySpec::Lasp => "lasp".into(),
+            StrategySpec::Ucb => "ucb".into(),
+            StrategySpec::Epsilon(e) => format!("epsilon:{e}"),
+            StrategySpec::Thompson => "thompson".into(),
+            StrategySpec::SwUcb(0) => "swucb".into(),
+            StrategySpec::SwUcb(w) => format!("swucb:{w}"),
+            StrategySpec::Subset(0) => "subset".into(),
+            StrategySpec::Subset(m) => format!("subset:{m}"),
+            StrategySpec::Random => "random".into(),
+            StrategySpec::Annealing => "annealing".into(),
+            StrategySpec::Bliss => "bliss".into(),
+            StrategySpec::Halving => "halving".into(),
+        }
+    }
+
+    /// Construct the strategy for a `k`-arm space under an `iterations`
+    /// budget, seeded deterministically from the scenario seed.
+    pub fn build(
+        &self,
+        k: usize,
+        iterations: usize,
+        alpha: f64,
+        beta: f64,
+        seed: u64,
+    ) -> Built {
+        match *self {
+            StrategySpec::Lasp => Built::Policy(lasp_policy(k, iterations, alpha, beta, seed)),
+            StrategySpec::Ucb => Built::Policy(Box::new(UcbTuner::new(k, alpha, beta))),
+            StrategySpec::Epsilon(eps) => {
+                Built::Policy(Box::new(EpsilonGreedy::new(k, alpha, beta, eps, seed)))
+            }
+            StrategySpec::Thompson => {
+                Built::Policy(Box::new(ThompsonSampler::new(k, alpha, beta, seed)))
+            }
+            StrategySpec::SwUcb(window) => {
+                // A window below the arm count cannot even cover the init
+                // sweep (and SlidingWindowUcb rejects it): clamp up, so one
+                // grid line like `swucb:400` works across apps from
+                // Clomp (125 arms) to Hypre (92,160).
+                let w = if window == 0 { iterations.max(k) } else { window.max(k) };
+                Built::Policy(Box::new(SlidingWindowUcb::new(k, alpha, beta, w)))
+            }
+            StrategySpec::Subset(m) => {
+                let m = if m == 0 { SubsetTuner::recommended_size(k, iterations) } else { m };
+                // Same seed decorrelation as `lasp_policy`: the candidate
+                // sampler must not share the device RNG's starting state.
+                Built::Policy(Box::new(SubsetTuner::new(k, m.min(k), alpha, beta, seed ^ 0xA5A5)))
+            }
+            StrategySpec::Random => Built::Search(Box::new(RandomSearch::new(seed, alpha, beta))),
+            StrategySpec::Annealing => {
+                Built::Search(Box::new(SimulatedAnnealing::new(seed, alpha, beta)))
+            }
+            StrategySpec::Bliss => Built::Search(Box::new(BlissBo::new(seed, alpha, beta))),
+            StrategySpec::Halving => {
+                Built::Search(Box::new(SuccessiveHalving::new(seed, alpha, beta)))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrips_labels() {
+        for s in [
+            "lasp", "ucb", "thompson", "swucb", "swucb:600", "subset:64", "random", "annealing",
+            "bliss", "halving",
+        ] {
+            let spec = StrategySpec::parse(s).unwrap();
+            assert_eq!(spec.label(), s, "label drifted for {s}");
+        }
+        assert_eq!(StrategySpec::parse("epsilon:0.2").unwrap(), StrategySpec::Epsilon(0.2));
+        assert_eq!(StrategySpec::parse("epsilon").unwrap(), StrategySpec::Epsilon(0.1));
+        assert!(StrategySpec::parse("gradient-descent").is_err());
+        assert!(StrategySpec::parse("epsilon:x").is_err());
+        // Out-of-range args are parse errors, not mid-sweep panics.
+        assert!(StrategySpec::parse("epsilon:1.5").is_err());
+        assert!(StrategySpec::parse("swucb:-600").is_err());
+        assert!(StrategySpec::parse("swucb:0").is_err());
+        assert!(StrategySpec::parse("subset:2.5").is_err());
+    }
+
+    #[test]
+    fn small_swucb_window_clamps_to_arm_count() {
+        // One `swucb:400` grid line must work from Clomp to Hypre — the
+        // window clamps up to k instead of tripping SlidingWindowUcb's
+        // window >= k assertion inside a pool worker.
+        let mut built = StrategySpec::SwUcb(400).build(92_160, 100, 0.8, 0.2, 1);
+        let mut step = built.step(92_160, 100, 0.15);
+        let d = step.next().unwrap().unwrap();
+        assert!(d.index < 92_160);
+    }
+
+    #[test]
+    fn every_spec_builds_and_steps() {
+        for spec in [
+            StrategySpec::Lasp,
+            StrategySpec::Ucb,
+            StrategySpec::Epsilon(0.1),
+            StrategySpec::Thompson,
+            StrategySpec::SwUcb(0),
+            StrategySpec::Subset(8),
+            StrategySpec::Random,
+            StrategySpec::Annealing,
+            StrategySpec::Bliss,
+            StrategySpec::Halving,
+        ] {
+            let mut built = spec.build(32, 60, 1.0, 0.0, 7);
+            let mut step = built.step(32, 60, 0.15);
+            for _ in 0..20 {
+                let Some(d) = step.next().unwrap() else { break };
+                assert!(d.index < 32, "{}: arm out of range", step.name());
+                let q = d.fidelity.unwrap_or(0.15);
+                let m = Measurement { time_s: 1.0 + (d.index % 5) as f64 * 0.1, power_w: 5.0 };
+                step.observe(d.index, q, m);
+            }
+            assert!(step.recommend() < 32);
+        }
+    }
+
+    #[test]
+    fn policy_step_mirrors_policy() {
+        let mut p = UcbTuner::new(4, 1.0, 0.0);
+        let mut step = PolicyStep::new(&mut p);
+        for _ in 0..12 {
+            let d = step.next().unwrap().unwrap();
+            step.observe(d.index, 0.15, Measurement { time_s: 1.0 + d.index as f64, power_w: 4.0 });
+        }
+        let rec = step.recommend();
+        assert_eq!(rec, 0, "fastest arm wins");
+        assert_eq!(step.counts().unwrap().iter().sum::<f64>(), 12.0);
+        assert!(step.best_objective() > 0.0);
+    }
+
+    #[test]
+    fn lasp_policy_switches_to_subset_on_large_spaces() {
+        assert_eq!(lasp_policy(64, 500, 1.0, 0.0, 1).name(), "lasp-ucb1");
+        assert_eq!(lasp_policy(92_160, 500, 1.0, 0.0, 1).name(), "lasp-ucb1-subset");
+    }
+}

@@ -81,6 +81,18 @@ impl ParamSpace {
             .collect()
     }
 
+    /// Position of `index` along one dimension — the allocation-free
+    /// single-axis decode the app models' hot `workload()` path uses
+    /// (episode steps must not allocate; see `benches/sim_engine.rs`).
+    pub fn dim_position(&self, index: usize, dim: usize) -> usize {
+        (index / self.strides[dim]) % self.params[dim].cardinality()
+    }
+
+    /// Borrowed value of `index` along one dimension (allocation-free).
+    pub fn value_at(&self, index: usize, dim: usize) -> &Value {
+        &self.params[dim].values()[self.dim_position(index, dim)]
+    }
+
     /// Decode a dense index into a [`Config`].
     pub fn decode(&self, index: usize) -> Config {
         let values = self
@@ -218,6 +230,19 @@ mod tests {
             let cfg = s.decode(i);
             assert_eq!(cfg.index, i);
             assert_eq!(cfg.values.len(), 3);
+        }
+    }
+
+    #[test]
+    fn dim_decode_agrees_with_full_decode() {
+        let s = toy();
+        for i in s.indices() {
+            let pos = s.positions(i);
+            let cfg = s.decode(i);
+            for dim in 0..s.dims() {
+                assert_eq!(s.dim_position(i, dim), pos[dim]);
+                assert_eq!(*s.value_at(i, dim), cfg.values[dim]);
+            }
         }
     }
 

@@ -1,10 +1,13 @@
-//! The single-device tuning loop: glue between an application model, a
+//! The single-device tuning session: glue between an application model, a
 //! device simulator, and a bandit policy (paper Fig 5's block diagram).
+//! Since the scenario-engine refactor the actual loop lives in
+//! [`crate::sim::Episode`]; a session is a thin owning wrapper that
+//! assembles an episode from its parts.
 
 use crate::apps::AppModel;
-use crate::bandit::{Policy, RegretTracker, UcbTuner};
+use crate::bandit::{Policy, UcbTuner};
 use crate::device::{Device, Measurement};
-use crate::telemetry::ResourceTracker;
+use crate::sim::{Episode, EpisodeSpec, PolicyStep};
 use crate::util::stats;
 use anyhow::Result;
 
@@ -54,7 +57,7 @@ pub struct TuningSession {
     device: Box<dyn Device>,
     policy: Box<dyn Policy>,
     config: SessionConfig,
-    regret: Option<RegretTracker>,
+    regret_mu: Option<Vec<f64>>,
 }
 
 impl TuningSession {
@@ -73,56 +76,39 @@ impl TuningSession {
         config: SessionConfig,
     ) -> Self {
         assert_eq!(policy.k(), app.space().len(), "policy/space arm mismatch");
-        TuningSession { app, device, policy, config, regret: None }
+        TuningSession { app, device, policy, config, regret_mu: None }
     }
 
     /// Install a regret oracle (per-arm expected rewards) for Fig 11.
     pub fn with_regret_oracle(mut self, mu: Vec<f64>) -> Self {
         assert_eq!(mu.len(), self.app.space().len());
-        self.regret = Some(RegretTracker::new(mu));
+        self.regret_mu = Some(mu);
         self
     }
 
-    /// Run the loop for `config.iterations` rounds.
+    /// Run `config.iterations` rounds through one [`crate::sim::Episode`].
     pub fn run(&mut self) -> Result<Outcome> {
-        let mut history = Vec::new();
-        let mut tracker = ResourceTracker::start();
-        let mut device_seconds = 0.0;
-        let mut tuner_seconds = 0.0;
-        let q = self.device.fidelity();
-
-        for _ in 0..self.config.iterations {
-            let sel_start = std::time::Instant::now();
-            let arm = self.policy.select();
-            tuner_seconds += sel_start.elapsed().as_secs_f64();
-
-            let workload = self.app.workload(arm, q);
-            let m = self.device.run(&workload);
-            device_seconds += m.time_s;
-
-            let upd_start = std::time::Instant::now();
-            self.policy.update(arm, m.time_s, m.power_w);
-            tuner_seconds += upd_start.elapsed().as_secs_f64();
-
-            if let Some(r) = &mut self.regret {
-                r.record(arm);
-            }
-            if self.config.record_history {
-                history.push((arm, m));
-            }
-            tracker.sample();
-        }
-
+        let spec = EpisodeSpec {
+            iterations: self.config.iterations,
+            record_trace: false,
+            record_history: self.config.record_history,
+            track_resources: true,
+            regret_mu: self.regret_mu.clone(),
+        };
+        let out = {
+            let mut step = PolicyStep::new(self.policy.as_mut());
+            Episode::new(self.app.as_ref(), self.device.as_mut(), &mut step, &[], &spec).run()?
+        };
         let best_index = self.policy.most_selected();
         Ok(Outcome {
             best_index,
             best_config: self.app.space().describe(best_index),
             counts: self.policy.counts().to_vec(),
-            history,
-            regret: self.regret.as_ref().map(|r| r.trajectory().to_vec()),
-            resources: tracker.report(),
-            simulated_device_seconds: device_seconds,
-            tuner_wall_seconds: tuner_seconds,
+            history: out.history.unwrap_or_default(),
+            regret: out.regret,
+            resources: out.resources.unwrap_or_default(),
+            simulated_device_seconds: out.simulated_device_seconds,
+            tuner_wall_seconds: out.tuner_wall_seconds,
         })
     }
 

@@ -147,6 +147,53 @@ fn design_documents_bandit_core_architecture() {
 }
 
 #[test]
+fn design_documents_simulation_engine() {
+    for needle in [
+        "Simulation engine",
+        "Episode model",
+        "Determinism contract",
+        "Scenario-file schema",
+        "SweepRunner",
+        "SearchStep",
+        "PolicyStep",
+        "lasp simulate",
+        "events",
+        "docs/scenarios/modeswitch-burst.toml",
+        "BENCH_experiments.json",
+    ] {
+        assert!(
+            DESIGN_MD.contains(needle),
+            "DESIGN.md missing '{needle}' (simulation-engine section)"
+        );
+    }
+    // The schema block documents every grid axis and every event action.
+    for key in [
+        "apps", "modes", "noise", "objectives", "strategies", "seeds", "iterations",
+        "fidelity", "record_trace", "record_regret",
+    ] {
+        assert!(
+            DESIGN_MD.contains(&format!("{key} = ")),
+            "DESIGN.md scenario schema missing key '{key}'"
+        );
+    }
+    for action in ["mode@", "noise@", "bus@", "clear@"] {
+        assert!(
+            DESIGN_MD.contains(action),
+            "DESIGN.md scenario schema missing event action '{action}'"
+        );
+    }
+    // README carries the quickstart for the same subcommand.
+    assert!(
+        README_MD.contains("lasp simulate"),
+        "README.md missing the `lasp simulate` quickstart"
+    );
+    assert!(
+        README_MD.contains("docs/scenarios/modeswitch-burst.toml"),
+        "README.md must link the runnable example scenario"
+    );
+}
+
+#[test]
 fn api_doc_covers_every_policy_kind() {
     // The serve config parses these policy names; each must be documented.
     for policy in ["ucb", "swucb", "thompson", "epsilon", "subset"] {

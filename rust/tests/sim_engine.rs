@@ -1,0 +1,203 @@
+//! Scenario-engine acceptance tests.
+//!
+//! Three pillars:
+//! 1. **Thread-count determinism** — one `ScenarioGrid` produces
+//!    bit-for-bit identical traces at 1, 4 and 8 sweep threads.
+//! 2. **Golden equivalence** — `harness::run_lasp` (now a thin wrapper
+//!    over one engine cell) reproduces the frozen pre-refactor loop,
+//!    copied verbatim below, arm for arm (same style as
+//!    `rust/tests/policy_golden.rs`).
+//! 3. **Expressiveness** — a mid-episode power-mode switch + noise burst
+//!    across all four apps (inexpressible in the seed-era loops) runs
+//!    through `lasp simulate`'s grid path and emits valid JSON.
+
+use lasp::apps::{self, AppKind};
+use lasp::bandit::{Policy, SubsetTuner, UcbTuner};
+use lasp::device::{Device, JetsonNano, NoiseModel, PowerMode};
+use lasp::sim::{Scenario, ScenarioGrid, StrategySpec, SweepRunner};
+use lasp::util::json::Json;
+
+// --- Frozen pre-refactor reference loop -----------------------------------
+
+/// The seed-era `harness::lasp_policy`, copied verbatim.
+fn ref_lasp_policy(
+    k: usize,
+    iterations: usize,
+    alpha: f64,
+    beta: f64,
+    seed: u64,
+) -> Box<dyn Policy> {
+    if k > iterations / 2 && k > 256 {
+        let m = SubsetTuner::recommended_size(k, iterations);
+        Box::new(SubsetTuner::new(k, m, alpha, beta, seed ^ 0xA5A5))
+    } else {
+        Box::new(UcbTuner::new(k, alpha, beta))
+    }
+}
+
+/// The seed-era `harness::run_lasp` loop, copied verbatim.
+#[allow(clippy::too_many_arguments)]
+fn ref_run_lasp(
+    kind: AppKind,
+    mode: PowerMode,
+    iterations: usize,
+    alpha: f64,
+    beta: f64,
+    seed: u64,
+    noise: NoiseModel,
+) -> (usize, Vec<f64>, Vec<usize>) {
+    let app = apps::build(kind);
+    let k = app.space().len();
+    let mut device = JetsonNano::new(mode, seed)
+        .with_fidelity(0.15)
+        .with_injected_noise(noise);
+    let mut tuner = ref_lasp_policy(k, iterations, alpha, beta, seed);
+    let mut trace = Vec::with_capacity(iterations);
+    for _ in 0..iterations {
+        let arm = tuner.select();
+        let m = device.run(&app.workload(arm, device.fidelity()));
+        tuner.update(arm, m.time_s, m.power_w);
+        trace.push(arm);
+    }
+    (tuner.most_selected(), tuner.counts().to_vec(), trace)
+}
+
+#[test]
+fn run_lasp_reproduces_the_pre_refactor_loop() {
+    // Small-space UCB path, the 5W mode, a noisy run, and Hypre's
+    // subset path — each must match the frozen loop bit for bit.
+    let cases: [(AppKind, PowerMode, usize, f64, f64, u64, NoiseModel); 4] = [
+        (AppKind::Clomp, PowerMode::Maxn, 250, 1.0, 0.0, 3, NoiseModel::none()),
+        (AppKind::Kripke, PowerMode::FiveW, 300, 0.8, 0.2, 11, NoiseModel::none()),
+        (AppKind::Lulesh, PowerMode::Maxn, 200, 0.2, 0.8, 7, NoiseModel::uniform(0.10)),
+        (AppKind::Hypre, PowerMode::Maxn, 400, 0.8, 0.2, 5, NoiseModel::none()),
+    ];
+    for (kind, mode, iters, alpha, beta, seed, noise) in cases {
+        let (ref_best, ref_counts, ref_trace) =
+            ref_run_lasp(kind, mode, iters, alpha, beta, seed, noise);
+        let (best, counts, trace) =
+            lasp::experiments::harness::run_lasp(kind, mode, iters, alpha, beta, seed, noise);
+        for (i, (e, g)) in ref_trace.iter().zip(&trace).enumerate() {
+            assert_eq!(
+                g, e,
+                "{kind}: engine diverged from the pre-refactor loop at iteration {i}"
+            );
+        }
+        assert_eq!(best, ref_best, "{kind}: recommendation diverged");
+        assert_eq!(counts, ref_counts, "{kind}: counts diverged");
+    }
+}
+
+fn determinism_grid() -> ScenarioGrid {
+    ScenarioGrid {
+        apps: vec![AppKind::Clomp, AppKind::Kripke],
+        objectives: vec![(1.0, 0.0), (0.2, 0.8)],
+        strategies: vec![StrategySpec::Lasp, StrategySpec::SwUcb(0), StrategySpec::Random],
+        seeds: vec![1, 2],
+        iterations: 150,
+        record_trace: true,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn sweep_results_identical_at_1_4_and_8_threads() {
+    let grid = determinism_grid();
+    let reference = SweepRunner::new(1).sweep(&grid).expect("1-thread sweep");
+    for threads in [4, 8] {
+        let got = SweepRunner::new(threads).sweep(&grid).expect("sweep");
+        assert_eq!(got.outcomes.len(), reference.outcomes.len());
+        for (i, (a, b)) in reference.outcomes.iter().zip(&got.outcomes).enumerate() {
+            assert_eq!(
+                a.trace, b.trace,
+                "cell {i} ({}) trace differs at {threads} threads",
+                reference.cells[i].label()
+            );
+            assert_eq!(a.best_index, b.best_index, "cell {i} best differs");
+            assert_eq!(a.counts, b.counts, "cell {i} counts differ");
+        }
+        // The JSON artifact is byte-identical too.
+        assert_eq!(reference.to_json(), got.to_json());
+    }
+}
+
+#[test]
+fn inexpressible_scenario_runs_and_emits_valid_json() {
+    // Mid-episode power-mode switch + noise burst + bus contention across
+    // all four apps: the seed-era loops had no vocabulary for any of
+    // these. Parsed from the same TOML schema `lasp simulate` consumes.
+    let grid = ScenarioGrid::from_toml_str(
+        r#"
+        [sim]
+        apps = "all"
+        strategies = "lasp"
+        seeds = "1..3"
+        iterations = 240
+        record_trace = true
+        events = "mode@80=5w, noise@120=0.15, bus@160=4x0.45, noise@200=0, clear@220"
+        "#,
+    )
+    .expect("scenario parses");
+    assert_eq!(grid.len(), 8);
+    let result = SweepRunner::new(0).sweep(&grid).expect("sweep");
+    let json = result.to_json();
+    let parsed = Json::parse(&json).expect("valid JSON");
+    let cells = parsed.get("results").and_then(|r| r.as_arr()).expect("results array");
+    assert_eq!(cells.len(), 8);
+    for cell in cells {
+        let app: &str = cell.get("app").and_then(|v| v.as_str()).expect("app");
+        let k = apps::build(app.parse().unwrap()).space().len();
+        let best = cell.get("best_index").and_then(|v| v.as_usize()).expect("best_index");
+        assert!(best < k, "{app}: best arm out of range");
+        assert_eq!(cell.get("events").and_then(|v| v.as_usize()), Some(5));
+        assert_eq!(
+            cell.get("trace").and_then(|t| t.as_arr()).map(|t| t.len()),
+            Some(240)
+        );
+    }
+
+    // The events are real: the same grid without them must agree before
+    // iteration 80 (identical draws) and burn measurably less simulated
+    // device time afterwards (5W is slower and bus contention stretches
+    // memory-bound runs).
+    let mut calm = grid.clone();
+    calm.events.clear();
+    let calm_result = SweepRunner::new(0).sweep(&calm).expect("calm sweep");
+    for (eventful, quiet) in result.outcomes.iter().zip(&calm_result.outcomes) {
+        let (e_trace, q_trace) =
+            (eventful.trace.as_ref().unwrap(), quiet.trace.as_ref().unwrap());
+        assert_eq!(e_trace[..80], q_trace[..80], "prefix must agree");
+        assert!(
+            eventful.simulated_device_seconds > quiet.simulated_device_seconds,
+            "events had no effect on device time"
+        );
+    }
+}
+
+#[test]
+fn episode_steps_are_counted() {
+    let before = lasp::sim::steps_executed();
+    let cell = Scenario::lasp(AppKind::Clomp, PowerMode::Maxn, 64, 1);
+    lasp::sim::run_scenario(&cell).expect("cell");
+    assert!(lasp::sim::steps_executed() >= before + 64);
+}
+
+#[test]
+fn tuning_session_still_matches_the_engine() {
+    // TuningSession is a thin wrapper over the same episode stepper: its
+    // outcome must agree with the equivalent scenario cell.
+    use lasp::tuning::{SessionConfig, TuningSession};
+    let mut session = TuningSession::new(
+        apps::build(AppKind::Clomp),
+        Box::new(JetsonNano::new(PowerMode::Maxn, 42).with_fidelity(0.15)),
+        SessionConfig { iterations: 180, alpha: 1.0, beta: 0.0, record_history: true },
+    );
+    let out = session.run().expect("session");
+    let cell = Scenario::lasp(AppKind::Clomp, PowerMode::Maxn, 180, 42)
+        .with_objective(1.0, 0.0)
+        .with_strategy(StrategySpec::Ucb);
+    let engine = lasp::sim::run_scenario(&cell).expect("cell");
+    assert_eq!(out.best_index, engine.best_index);
+    assert_eq!(out.history.len(), 180);
+    assert_eq!(Some(out.counts), engine.counts);
+}
