@@ -1,0 +1,117 @@
+//! Flight-recorder overhead bench: measures the cost of one
+//! `Recorder::record` on the hot path (single-thread and contended), the
+//! cold-path drain, and — under a counting global allocator — proves that
+//! steady-state recording performs **zero allocations per event**, the
+//! contract that lets the serve hot path trace every suggest for free.
+//!
+//! Emits `BENCH_trace.json` (path override: `LASP_BENCH_OUT`);
+//! `LASP_BENCH_QUICK=1` runs a short smoke variant for CI. Shape-fails if
+//! any steady-state record allocates.
+
+#[path = "common.rs"]
+mod common;
+
+#[global_allocator]
+static GLOBAL: common::CountingAlloc = common::CountingAlloc;
+
+use lasp::obs::{pack_suggest, EventKind, Recorder, TraceEvent};
+use lasp::util::json::Json;
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::Instant;
+
+fn record_one(rec: &Recorder, i: u64) {
+    let (a, b, c) = pack_suggest(
+        (i % 128) as u32,
+        (i % 125) as u32,
+        0.03125,
+        i % 7 == 0,
+        0,
+        i,
+    );
+    rec.record(EventKind::Suggest, a, b, c);
+}
+
+fn main() {
+    let quick = std::env::var("LASP_BENCH_QUICK").map(|v| v == "1").unwrap_or(false);
+    let (events, threads) = if quick { (200_000u64, 4usize) } else { (2_000_000u64, 8usize) };
+
+    let rec = Arc::new(Recorder::for_workers(threads));
+
+    // Warmup: claim this thread's lane slot and fault the ring in.
+    for i in 0..10_000 {
+        record_one(&rec, i);
+    }
+
+    // Single-thread hot path, with exact allocation accounting.
+    let allocs_before = common::alloc_count();
+    let t0 = Instant::now();
+    for i in 0..events {
+        record_one(&rec, i);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let steady_allocs = common::alloc_count() - allocs_before;
+    let ns_per_event = wall * 1e9 / events as f64;
+    let events_per_s = events as f64 / wall.max(1e-12);
+    let allocs_per_event = steady_allocs as f64 / events as f64;
+    println!(
+        "record (1 thread): {ns_per_event:.1} ns/event, {events_per_s:.0} events/s, \
+         {steady_allocs} allocs / {events} events"
+    );
+
+    // Contended: every worker hammers its own lane concurrently.
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            let rec = rec.clone();
+            s.spawn(move || {
+                for i in 0..events / threads as u64 {
+                    record_one(&rec, i);
+                }
+            });
+        }
+    });
+    let contended_wall = t0.elapsed().as_secs_f64();
+    let contended_total = (events / threads as u64) * threads as u64;
+    let contended_events_per_s = contended_total as f64 / contended_wall.max(1e-12);
+    println!(
+        "record ({threads} threads): {:.1} ns/event aggregate, {contended_events_per_s:.0} events/s",
+        contended_wall * 1e9 / contended_total as f64
+    );
+
+    // Cold-path drain (the /v1/trace read side — allowed to allocate).
+    let mut out_events: Vec<TraceEvent> = Vec::new();
+    let recorded = rec.recorded();
+    let t0 = Instant::now();
+    rec.drain_since(recorded.saturating_sub(4096), &mut out_events);
+    let drain_s = t0.elapsed().as_secs_f64();
+    println!(
+        "drain: {} events in {} (overwritten {})",
+        out_events.len(),
+        common::human(drain_s),
+        rec.overwritten()
+    );
+    assert!(!out_events.is_empty(), "drain returned nothing");
+    assert!(out_events.windows(2).all(|w| w[0].seq < w[1].seq), "drain not seq-sorted");
+
+    let mut out = BTreeMap::new();
+    out.insert("bench".to_string(), Json::Str("trace_overhead".to_string()));
+    out.insert("mode".to_string(), Json::Str(if quick { "quick" } else { "full" }.to_string()));
+    out.insert("events".to_string(), Json::Num(events as f64));
+    out.insert("ns_per_event".to_string(), Json::Num(ns_per_event));
+    out.insert("events_per_s".to_string(), Json::Num(events_per_s));
+    out.insert("contended_threads".to_string(), Json::Num(threads as f64));
+    out.insert("contended_events_per_s".to_string(), Json::Num(contended_events_per_s));
+    out.insert("steady_alloc_events".to_string(), Json::Num(steady_allocs as f64));
+    out.insert("allocs_per_event".to_string(), Json::Num(allocs_per_event));
+    out.insert("drain_events".to_string(), Json::Num(out_events.len() as f64));
+    out.insert("drain_s".to_string(), Json::Num(drain_s));
+    let path = std::env::var("LASP_BENCH_OUT").unwrap_or_else(|_| "BENCH_trace.json".to_string());
+    std::fs::write(&path, Json::Obj(out).to_string() + "\n").expect("writing bench json");
+    println!("\nwrote {path}");
+
+    common::report_shape(
+        "trace_overhead",
+        steady_allocs == 0 && rec.recorded() >= events && ns_per_event < 10_000.0,
+    );
+}

@@ -8,8 +8,8 @@
 
 use super::core::{ArmStats, Scratch};
 use super::reward::weighted_rewards_into;
-use super::Policy;
-use crate::util::{stats, Rng};
+use super::{top2, Choice, Policy};
+use crate::util::Rng;
 
 /// ε-greedy over the paper's Eq. 5 reward.
 pub struct EpsilonGreedy {
@@ -41,16 +41,21 @@ impl Policy for EpsilonGreedy {
     }
 
     fn select(&mut self) -> usize {
+        self.select_traced().arm
+    }
+
+    fn select_traced(&mut self) -> Choice {
         // Unpulled arms first (same initialization as UCB1).
         if let Some(arm) = self.stats.counts().iter().position(|&c| c == 0.0) {
-            return arm;
+            return Choice { arm, gap: 0.0, explore: true };
         }
         if self.rng.uniform() < self.epsilon {
-            return self.rng.below(self.k());
+            return Choice { arm: self.rng.below(self.k()), gap: 0.0, explore: true };
         }
         self.scratch.ensure_rewards(self.stats.k());
         weighted_rewards_into(&self.stats, self.alpha, self.beta, &mut self.scratch.rewards);
-        stats::argmax(&self.scratch.rewards)
+        let (arm, gap) = top2(&self.scratch.rewards);
+        Choice { arm, gap, explore: false }
     }
 
     fn update(&mut self, arm: usize, time_s: f64, power_w: f64) {

@@ -43,6 +43,42 @@ pub use swucb::SlidingWindowUcb;
 pub use thompson::ThompsonSampler;
 pub use ucb::UcbTuner;
 
+/// A selection decision plus the observability facts the flight recorder
+/// logs per suggest: how close the runner-up was and whether the pick was
+/// driven by the exploration term rather than the reward estimate.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Choice {
+    /// The chosen arm — always identical to what [`Policy::select`]
+    /// would have returned at the same state (same RNG draws included).
+    pub arm: usize,
+    /// Top-2 score gap: winning score minus runner-up score, `0.0` when
+    /// there is no runner-up or the decision bypassed scoring (initial
+    /// sweep, ε-random branch).
+    pub gap: f64,
+    /// `true` when the pick was exploratory: an unpulled arm, an
+    /// ε-random draw, or a choice that differs from the greedy
+    /// reward-argmax.
+    pub explore: bool,
+}
+
+/// Running top-2 over a score slice: `(argmax, best − second)`. Ties
+/// resolve to the first maximum, matching [`crate::util::stats::argmax`].
+pub(crate) fn top2(xs: &[f64]) -> (usize, f64) {
+    let mut best_i = 0usize;
+    let mut best = f64::NEG_INFINITY;
+    let mut second = f64::NEG_INFINITY;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > best {
+            second = best;
+            best = x;
+            best_i = i;
+        } else if x > second {
+            second = x;
+        }
+    }
+    (best_i, if xs.len() > 1 { best - second } else { 0.0 })
+}
+
 /// A sequential arm-selection policy over `k` arms.
 ///
 /// The contract mirrors the paper's loop (Alg. 1): call [`Policy::select`],
@@ -58,6 +94,16 @@ pub trait Policy: Send {
     /// Choose the arm to pull at the current iteration. Allocation-free
     /// in steady state: scoring runs through the policy's [`Scratch`].
     fn select(&mut self) -> usize;
+
+    /// [`Policy::select`] plus the decision telemetry the serve-path
+    /// flight recorder logs. The contract is strict: for any policy
+    /// state, `select_traced().arm` and `select()` return the same arm
+    /// and consume the same RNG draws, and the traced pass stays
+    /// allocation-free once the scratch is warm. Policies with real
+    /// scoring passes override this; the default reports no telemetry.
+    fn select_traced(&mut self) -> Choice {
+        Choice { arm: self.select(), gap: 0.0, explore: false }
+    }
 
     /// Observe the measurement for `arm` (execution time seconds, watts).
     fn update(&mut self, arm: usize, time_s: f64, power_w: f64);
@@ -129,6 +175,53 @@ mod tests {
         exercise(Box::new(EpsilonGreedy::new(k, 1.0, 0.0, 0.1, 7)), k);
         exercise(Box::new(ThompsonSampler::new(k, 1.0, 0.0, 11)), k);
         exercise(Box::new(SlidingWindowUcb::new(k, 1.0, 0.0, 400)), k);
+    }
+
+    #[test]
+    fn select_traced_matches_select_including_rng_draws() {
+        // Two identically seeded instances of every policy, one driven
+        // through select(), the other through select_traced(): the arm
+        // sequences must match exactly (same RNG draw order).
+        let drive = |traced: bool| -> Vec<usize> {
+            let mut policies: Vec<Box<dyn Policy>> = vec![
+                Box::new(UcbTuner::new(8, 1.0, 0.0)),
+                Box::new(EpsilonGreedy::new(8, 1.0, 0.0, 0.3, 7)),
+                Box::new(ThompsonSampler::new(8, 1.0, 0.0, 11)),
+                Box::new(SlidingWindowUcb::new(8, 1.0, 0.0, 32)),
+                Box::new(SubsetTuner::new(100, 8, 1.0, 0.0, 3)),
+            ];
+            let mut out = vec![];
+            for p in policies.iter_mut() {
+                for i in 0..60usize {
+                    let arm = if traced { p.select_traced().arm } else { p.select() };
+                    out.push(arm);
+                    p.update(arm, 1.0 + ((arm + i) % 5) as f64 * 0.2, 5.0);
+                }
+            }
+            out
+        };
+        assert_eq!(drive(false), drive(true));
+    }
+
+    #[test]
+    fn traced_choices_expose_gap_and_explore() {
+        let mut p = UcbTuner::new(4, 1.0, 0.0);
+        // Init sweep: unpulled arms are exploratory picks.
+        for _ in 0..4 {
+            let c = p.select_traced();
+            assert!(c.explore);
+            p.update(c.arm, 1.0 + c.arm as f64, 5.0);
+        }
+        // Steady state: the top-2 gap is finite and non-negative, and a
+        // long-exploited arm eventually reads as exploit.
+        let mut saw_exploit = false;
+        for _ in 0..60 {
+            let c = p.select_traced();
+            assert!(c.gap.is_finite() && c.gap >= 0.0);
+            saw_exploit |= !c.explore;
+            p.update(c.arm, 1.0 + c.arm as f64, 5.0);
+        }
+        assert!(saw_exploit, "60 steady-state picks never exploited");
     }
 
     #[test]

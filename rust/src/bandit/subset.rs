@@ -12,7 +12,7 @@
 
 use super::core::ArmStats;
 use super::ucb::UcbTuner;
-use super::Policy;
+use super::{Choice, Policy};
 use crate::util::Rng;
 use std::collections::HashMap;
 
@@ -107,6 +107,11 @@ impl Policy for SubsetTuner {
 
     fn select(&mut self) -> usize {
         self.candidates[self.inner.select()]
+    }
+
+    fn select_traced(&mut self) -> Choice {
+        let c = self.inner.select_traced();
+        Choice { arm: self.candidates[c.arm], ..c }
     }
 
     fn update(&mut self, arm: usize, time_s: f64, power_w: f64) {

@@ -14,7 +14,7 @@
 
 use super::core::{ArmStats, Scratch};
 use super::reward::{ucb_scores_into, weighted_rewards_into, DEFAULT_EXPLORATION};
-use super::Policy;
+use super::{top2, Choice, Policy};
 use crate::util::stats;
 use std::collections::VecDeque;
 
@@ -67,9 +67,13 @@ impl Policy for SlidingWindowUcb {
     }
 
     fn select(&mut self) -> usize {
+        self.select_traced().arm
+    }
+
+    fn select_traced(&mut self) -> Choice {
         // Arms absent from the current window are "unpulled": retried.
         if let Some(arm) = self.stats.counts().iter().position(|&c| c == 0.0) {
-            return arm;
+            return Choice { arm, gap: 0.0, explore: true };
         }
         self.scratch.ensure(self.stats.k());
         weighted_rewards_into(&self.stats, self.alpha, self.beta, &mut self.scratch.rewards);
@@ -77,7 +81,8 @@ impl Policy for SlidingWindowUcb {
         let t_eff = (self.history.len() as f64).max(1.0);
         let (rewards, scores) = self.scratch.rewards_scores_mut();
         ucb_scores_into(rewards, self.stats.counts(), t_eff, DEFAULT_EXPLORATION, scores);
-        stats::argmax(scores)
+        let (arm, gap) = top2(scores);
+        Choice { arm, gap, explore: arm != stats::argmax(rewards) }
     }
 
     fn update(&mut self, arm: usize, time_s: f64, power_w: f64) {

@@ -9,7 +9,7 @@
 
 use super::core::{ArmStats, Scratch};
 use super::reward::weighted_rewards_into;
-use super::Policy;
+use super::{top2, Choice, Policy};
 use crate::util::{stats, Rng};
 
 /// Thompson sampling over the paper's Eq. 5 reward.
@@ -50,8 +50,12 @@ impl Policy for ThompsonSampler {
     }
 
     fn select(&mut self) -> usize {
+        self.select_traced().arm
+    }
+
+    fn select_traced(&mut self) -> Choice {
         if let Some(arm) = self.stats.counts().iter().position(|&c| c == 0.0) {
-            return arm;
+            return Choice { arm, gap: 0.0, explore: true };
         }
         let k = self.stats.k();
         self.scratch.ensure(k);
@@ -61,7 +65,8 @@ impl Policy for ThompsonSampler {
         for (i, (r, n)) in rewards.iter().zip(self.stats.counts()).enumerate() {
             scores[i] = r + self.rng.normal() * self.obs_std / n.max(1.0).sqrt();
         }
-        stats::argmax(scores)
+        let (arm, gap) = top2(scores);
+        Choice { arm, gap, explore: arm != stats::argmax(rewards) }
     }
 
     fn update(&mut self, arm: usize, time_s: f64, power_w: f64) {

@@ -1,8 +1,8 @@
 //! LASP's UCB1 policy (paper Alg. 1).
 
 use super::core::{ArmStats, Scratch};
-use super::reward::{ScalarBackend, ScoreBackend, DEFAULT_EXPLORATION};
-use super::Policy;
+use super::reward::{ScalarBackend, ScoreBackend, DEFAULT_EXPLORATION, UNPULLED_SCORE};
+use super::{Choice, Policy};
 
 /// The LASP tuner: UCB1 over the weighted time/power reward.
 ///
@@ -109,6 +109,48 @@ impl Policy for UcbTuner {
             .lasp_step(&self.stats, self.alpha, self.beta, self.exploration, &mut self.scratch)
             .expect("score backend failed")
             .best
+    }
+
+    fn select_traced(&mut self) -> Choice {
+        // The arm is the backend's verbatim (bit-identical to `select`,
+        // scalar or PJRT). Both backends leave the normalized Eq. 5
+        // rewards in `scratch.rewards` — the `ScoreBackend` contract —
+        // so the telemetry pass recomputes the per-arm scores from them
+        // with running top-2 locals: reads only, no scratch growth.
+        let step = self
+            .backend
+            .lasp_step(&self.stats, self.alpha, self.beta, self.exploration, &mut self.scratch)
+            .expect("score backend failed");
+        let k = self.stats.k();
+        let counts = self.stats.counts();
+        let bonus_base = 2.0 * self.stats.t().max(1.0).ln();
+        let mut best = f64::NEG_INFINITY;
+        let mut second = f64::NEG_INFINITY;
+        let mut greedy = 0usize;
+        let mut greedy_r = f64::NEG_INFINITY;
+        for i in 0..k {
+            let r = self.scratch.rewards[i];
+            let score = if counts[i] > 0.0 {
+                r + self.exploration * (bonus_base / counts[i]).sqrt()
+            } else {
+                UNPULLED_SCORE
+            };
+            if score > best {
+                second = best;
+                best = score;
+            } else if score > second {
+                second = score;
+            }
+            if r > greedy_r {
+                greedy_r = r;
+                greedy = i;
+            }
+        }
+        Choice {
+            arm: step.best,
+            gap: if k > 1 { best - second } else { 0.0 },
+            explore: counts[step.best] == 0.0 || step.best != greedy,
+        }
     }
 
     fn update(&mut self, arm: usize, time_s: f64, power_w: f64) {

@@ -284,6 +284,7 @@ impl LaspConfig {
             sync_every: std::time::Duration::from_secs_f64(self.fleet_sync_secs),
             fleet_retain: self.fleet_retain,
             fleet_half_life: std::time::Duration::from_secs_f64(self.fleet_half_life_secs),
+            trace_file: None,
         }
     }
 

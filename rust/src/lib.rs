@@ -30,6 +30,7 @@ pub mod config;
 pub mod coordinator;
 pub mod device;
 pub mod experiments;
+pub mod obs;
 pub mod runtime;
 pub mod serve;
 pub mod sim;

@@ -8,6 +8,7 @@
 //!   compare     LASP vs baselines on one application
 //!   experiment  regenerate a paper table/figure (or `all`)
 //!   simulate    run a TOML scenario grid through the parallel engine
+//!   trace       decode a flight-recorder capture (dump | stats)
 //!   spaces      print Table II (application parameter spaces)
 //!   devices     print Table I (Jetson power modes)
 //!
@@ -37,6 +38,10 @@ fn dispatch(args: &[String]) -> Result<()> {
         print_usage();
         return Ok(());
     };
+    if cmd == "trace" {
+        // `trace` takes a positional verb (dump|stats) before its flags.
+        return cmd_trace(&args[1..]);
+    }
     let flags = Flags::parse(&args[1..])?;
     match cmd.as_str() {
         "tune" => cmd_tune(&flags),
@@ -79,6 +84,7 @@ fn usage_text() -> &'static str {
      \x20 compare     LASP vs baselines on one application\n\
      \x20 experiment  regenerate a paper artifact: table1|table2|fig2..fig12|ablation|all\n\
      \x20 simulate    run a TOML scenario grid through the parallel engine\n\
+     \x20 trace       decode a flight-recorder capture: dump | stats\n\
      \x20 spaces      print Table II\n\
      \x20 devices     print Table I\n\
      \x20 help        print this message\n\
@@ -125,6 +131,7 @@ fn usage_text() -> &'static str {
      \x20 --sync-secs <s>        fleet sync period         [10]\n\
      \x20 --fleet-retain <f>     fleet-prior retention     [0.3]\n\
      \x20 --half-life-secs <s>   fleet evidence half-life  [600]\n\
+     \x20 --trace-file <path>    stream flight-recorder events to disk [off]\n\
      \n\
      FLAGS (loadgen)\n\
      \x20 --addr <a[,b,...]>     server(s) to hammer       [127.0.0.1:8787]\n\
@@ -132,7 +139,13 @@ fn usage_text() -> &'static str {
      \x20 --sessions <n>         concurrent sessions       [128]\n\
      \x20 --rounds <n>           suggest/report round-trips [12000]\n\
      \x20 --threads <n>          client threads            [8]\n\
-     \x20 --apps <list>          all | comma list          [all]"
+     \x20 --apps <list>          all | comma list          [all]\n\
+     \x20 --record <path>        capture measurements for `lasp trace` /\n\
+     \x20                        the sim engine's replay strategy  [off]\n\
+     \n\
+     FLAGS (trace dump|stats)\n\
+     \x20 --file <path>          LASPTRC1 capture to decode (required)\n\
+     \x20 --format <f>           dump output: json|csv     [json]"
 }
 
 fn print_usage() {
@@ -420,6 +433,9 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
         }
         serve_cfg.fleet_half_life = std::time::Duration::from_secs_f64(secs);
     }
+    if let Some(v) = flags.get("trace-file") {
+        serve_cfg.trace_file = Some(std::path::PathBuf::from(v));
+    }
     let ckpt = serve_cfg
         .checkpoint_dir
         .as_ref()
@@ -453,9 +469,13 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
         ),
         None => println!("# fleet sync: standalone (this node can serve as a leader)"),
     }
+    if let Some(path) = &serve_cfg.trace_file {
+        println!("# flight recorder: streaming to {}", path.display());
+    }
     println!(
         "# endpoints: POST /v1/suggest  POST /v1/report  GET /v1/best  POST /v1/checkpoint  \
-         POST /v1/sync/push  POST /v1/sync/pull  GET /healthz  GET /metrics"
+         POST /v1/sync/push  POST /v1/sync/pull  GET /v1/trace  GET /v1/debug/session  \
+         GET /healthz  GET /metrics"
     );
     handle.wait();
     Ok(())
@@ -493,6 +513,9 @@ fn cmd_loadgen(flags: &Flags) -> Result<()> {
                 .collect::<Result<Vec<_>>>()?;
         }
     }
+    if let Some(v) = flags.get("record") {
+        lg.record = Some(std::path::PathBuf::from(v));
+    }
     println!(
         "# lasp loadgen: {} | sessions={} rounds={} threads={} apps={:?}",
         lg.addr,
@@ -503,7 +526,77 @@ fn cmd_loadgen(flags: &Flags) -> Result<()> {
     );
     let report = lasp::serve::loadgen::run(&lg)?;
     report.print();
+    if let Some(path) = &lg.record {
+        println!("# capture written to {}", path.display());
+    }
     Ok(())
+}
+
+fn cmd_trace(args: &[String]) -> Result<()> {
+    let Some(verb) = args.first() else {
+        return Err(anyhow!("trace needs a verb: lasp trace dump|stats --file <capture>"));
+    };
+    let flags = Flags::parse(&args[1..])?;
+    let path = flags
+        .get("file")
+        .ok_or_else(|| anyhow!("trace {verb} needs --file <capture>"))?;
+    let events = lasp::obs::read_trace_file(std::path::Path::new(path))?;
+    match verb.as_str() {
+        "dump" => trace_dump(&events, flags.get("format").unwrap_or("json")),
+        "stats" => {
+            trace_stats(path, &events);
+            Ok(())
+        }
+        other => Err(anyhow!("unknown trace verb '{other}' (dump|stats)")),
+    }
+}
+
+/// Decode a capture to stdout: a JSON array of semantically-decoded
+/// events, or raw-word CSV for spreadsheet work.
+fn trace_dump(events: &[lasp::obs::TraceEvent], format: &str) -> Result<()> {
+    match format {
+        "json" => {
+            let mut buf = Vec::with_capacity(events.len() * 96 + 64);
+            let mut w = lasp::util::json::JsonWriter::new(&mut buf);
+            w.begin_arr();
+            for ev in events {
+                lasp::obs::write_event_json(ev, &mut w);
+            }
+            w.end_arr();
+            println!("{}", String::from_utf8(buf).expect("trace JSON is UTF-8"));
+        }
+        "csv" => {
+            println!("seq,t_us,kind,a,b,c");
+            for ev in events {
+                println!("{},{},{},{},{},{}", ev.seq, ev.t_us, ev.kind_name(), ev.a, ev.b, ev.c);
+            }
+        }
+        other => return Err(anyhow!("unknown trace format '{other}' (json|csv)")),
+    }
+    Ok(())
+}
+
+/// Capture summary: span, event rate, per-kind counts, dropped seqs.
+fn trace_stats(path: &str, events: &[lasp::obs::TraceEvent]) {
+    println!("# lasp trace stats: {path}");
+    println!("events: {}", events.len());
+    if events.is_empty() {
+        return;
+    }
+    let t0 = events.iter().map(|e| e.t_us).min().unwrap_or(0);
+    let t1 = events.iter().map(|e| e.t_us).max().unwrap_or(0);
+    let span_s = (t1.saturating_sub(t0)) as f64 / 1e6;
+    println!("span: {span_s:.3}s ({:.0} events/s)", events.len() as f64 / span_s.max(1e-9));
+    let max_seq = events.iter().map(|e| e.seq).max().unwrap_or(0);
+    let dropped = (max_seq + 1).saturating_sub(events.len() as u64);
+    println!("sequence range: 0..={max_seq} ({dropped} missing — ring overwrites or drains)");
+    let mut by_kind: std::collections::BTreeMap<&'static str, u64> = std::collections::BTreeMap::new();
+    for ev in events {
+        *by_kind.entry(ev.kind_name()).or_insert(0) += 1;
+    }
+    for (kind, n) in by_kind {
+        println!("  {kind:<16} {n}");
+    }
 }
 
 fn cmd_compare(flags: &Flags) -> Result<()> {

@@ -1,0 +1,748 @@
+//! Flight recorder: lock-free, fixed-capacity decision tracing.
+//!
+//! Every layer of the serve stack (transport, suggest path, batch
+//! updaters, fleet sync, checkpointer) logs compact binary events into a
+//! per-lane ring buffer. Recording is O(1) atomic stores with **zero
+//! allocations in steady state** — the contract is enforced end-to-end by
+//! `rust/tests/serve_hotpath.rs` and per-event by
+//! `benches/trace_overhead.rs` under the counting global allocator.
+//!
+//! The recorder is exposed three ways:
+//!
+//! 1. live, over HTTP: `GET /v1/trace?since=<seq>` drains decoded events
+//!    as JSON (plus `GET /v1/debug/session` for full per-session arm
+//!    statistics);
+//! 2. streamed to disk: `lasp serve --trace-file <path>` attaches a
+//!    [`TraceWriter`] that drains the ring into the `LASPTRC1` binary
+//!    format, and `lasp loadgen --record <path>` captures the observed
+//!    (arm, time, power) stream client-side in the same format;
+//! 3. replayed offline: `lasp simulate` with `trace = "<path>"` feeds a
+//!    recorded file back through the sim `Episode` engine
+//!    ([`crate::sim::replay`]).
+//!
+//! ## Ring semantics
+//!
+//! Events carry a global, monotonically increasing sequence number. Each
+//! lane is a fixed-capacity ring; writers claim a slot with a relaxed
+//! `fetch_add` and publish through a seqlock stamp (`0` = slot being
+//! written / empty, otherwise `seq + 1`). When the ring wraps, the oldest
+//! events are overwritten — readers observe the loss as a gap in the
+//! sequence numbers, and the recorder counts it in
+//! [`Recorder::overwritten`]. Torn slots (read racing a writer) are
+//! detected by re-checking the stamp and skipped. Tracing is therefore
+//! lossy under overload by design: it degrades by dropping history, never
+//! by blocking or allocating on the hot path.
+
+use crate::apps::AppKind;
+use crate::device::PowerMode;
+use crate::util::json::JsonWriter;
+use std::cell::Cell;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Binary trace-file magic; the trailing digit is the format version.
+pub const TRACE_MAGIC: [u8; 8] = *b"LASPTRC1";
+/// Fixed record width: six little-endian u64 words
+/// `[seq][t_us][kind][a][b][c]`.
+pub const TRACE_RECORD_BYTES: usize = 48;
+
+/// Default events retained per lane.
+pub const DEFAULT_LANE_CAP: usize = 4096;
+
+/// What happened. The payload words `a`/`b`/`c` are packed per kind; see
+/// the `pack_*`/`decode_*` helpers and DESIGN.md §Observability.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventKind {
+    /// A request started: `a` = route code.
+    ReqStart = 1,
+    /// A request finished: `a` = route code, `b` = status, `c` =
+    /// latency in µs.
+    ReqEnd = 2,
+    /// A suggest decision: `a` = session | arm<<32, `b` = top-2 score
+    /// gap (f64 bits), `c` = policy code | explore<<8 | total_pulls<<16.
+    Suggest = 3,
+    /// A report applied to a session: `a` = session | arm<<32, `b` =
+    /// time_s (f64 bits), `c` = power_w (f64 bits).
+    ReportApply = 4,
+    /// A batched-updater flush: `a` = shard, `b` = reports applied.
+    BatchFlush = 5,
+    /// Fleet sync pushed local state: `a` = snapshots sent.
+    FleetPush = 6,
+    /// Fleet sync pulled priors: `a` = priors installed.
+    FleetPull = 7,
+    /// The leader merged a pushed snapshot set: `a` = snapshots
+    /// absorbed, `b` = known nodes after the merge.
+    FleetMerge = 8,
+    /// A checkpoint was written: `a` = sessions, `b` = duration in µs.
+    Checkpoint = 9,
+    /// A session was created: `a` = session id, `b` = arm count, `c` =
+    /// warm-start flag | policy code<<8.
+    SessionCreate = 10,
+    /// A loadgen-side observation: `a` = app code | mode code<<8 |
+    /// arm<<16, `b` = time_s (f64 bits), `c` = power_w (f64 bits).
+    Measure = 11,
+}
+
+impl EventKind {
+    pub fn code(self) -> u64 {
+        self as u64
+    }
+
+    pub fn from_code(code: u64) -> Option<EventKind> {
+        Some(match code {
+            1 => EventKind::ReqStart,
+            2 => EventKind::ReqEnd,
+            3 => EventKind::Suggest,
+            4 => EventKind::ReportApply,
+            5 => EventKind::BatchFlush,
+            6 => EventKind::FleetPush,
+            7 => EventKind::FleetPull,
+            8 => EventKind::FleetMerge,
+            9 => EventKind::Checkpoint,
+            10 => EventKind::SessionCreate,
+            11 => EventKind::Measure,
+            _ => return None,
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            EventKind::ReqStart => "req_start",
+            EventKind::ReqEnd => "req_end",
+            EventKind::Suggest => "suggest",
+            EventKind::ReportApply => "report_apply",
+            EventKind::BatchFlush => "batch_flush",
+            EventKind::FleetPush => "fleet_push",
+            EventKind::FleetPull => "fleet_pull",
+            EventKind::FleetMerge => "fleet_merge",
+            EventKind::Checkpoint => "checkpoint",
+            EventKind::SessionCreate => "session_create",
+            EventKind::Measure => "measure",
+        }
+    }
+}
+
+/// Route codes for `ReqStart`/`ReqEnd` payloads.
+pub mod route {
+    pub const OTHER: u64 = 0;
+    pub const SUGGEST: u64 = 1;
+    pub const REPORT: u64 = 2;
+    pub const BEST: u64 = 3;
+    pub const CHECKPOINT: u64 = 4;
+    pub const SYNC_PUSH: u64 = 5;
+    pub const SYNC_PULL: u64 = 6;
+    pub const HEALTHZ: u64 = 7;
+    pub const METRICS: u64 = 8;
+    pub const TRACE: u64 = 9;
+    pub const DEBUG_SESSION: u64 = 10;
+}
+
+pub fn route_name(code: u64) -> &'static str {
+    match code {
+        route::SUGGEST => "/v1/suggest",
+        route::REPORT => "/v1/report",
+        route::BEST => "/v1/best",
+        route::CHECKPOINT => "/v1/checkpoint",
+        route::SYNC_PUSH => "/v1/sync/push",
+        route::SYNC_PULL => "/v1/sync/pull",
+        route::HEALTHZ => "/healthz",
+        route::METRICS => "/metrics",
+        route::TRACE => "/v1/trace",
+        route::DEBUG_SESSION => "/v1/debug/session",
+        _ => "other",
+    }
+}
+
+/// App wire code for `Measure` payloads — the index in
+/// [`AppKind::all`]'s paper order.
+pub fn app_code(app: AppKind) -> u64 {
+    AppKind::all().iter().position(|&a| a == app).unwrap_or(0) as u64
+}
+
+pub fn app_from_code(code: u64) -> Option<AppKind> {
+    AppKind::all().get(code as usize).copied()
+}
+
+/// Power-mode wire code for `Measure` payloads.
+pub fn mode_code(mode: PowerMode) -> u64 {
+    match mode {
+        PowerMode::Maxn => 0,
+        PowerMode::FiveW => 1,
+    }
+}
+
+pub fn mode_from_code(code: u64) -> Option<PowerMode> {
+    match code {
+        0 => Some(PowerMode::Maxn),
+        1 => Some(PowerMode::FiveW),
+        _ => None,
+    }
+}
+
+/// Pack a suggest decision into `(a, b, c)`.
+pub fn pack_suggest(
+    session: u32,
+    arm: u32,
+    gap: f64,
+    explore: bool,
+    policy_code: u8,
+    total_pulls: u64,
+) -> (u64, u64, u64) {
+    let a = session as u64 | (arm as u64) << 32;
+    let b = gap.to_bits();
+    let c = policy_code as u64 | (explore as u64) << 8 | total_pulls << 16;
+    (a, b, c)
+}
+
+/// Pack a loadgen observation into `(a, b, c)`.
+pub fn pack_measure(app: AppKind, mode: PowerMode, arm: u32, time_s: f64, power_w: f64) -> (u64, u64, u64) {
+    let a = app_code(app) | mode_code(mode) << 8 | (arm as u64) << 16;
+    (a, time_s.to_bits(), power_w.to_bits())
+}
+
+/// Unpack a `Measure` payload: `(app, mode, arm, time_s, power_w)`.
+pub fn decode_measure(ev: &TraceEvent) -> Option<(AppKind, PowerMode, usize, f64, f64)> {
+    if ev.kind != EventKind::Measure.code() {
+        return None;
+    }
+    let app = app_from_code(ev.a & 0xff)?;
+    let mode = mode_from_code(ev.a >> 8 & 0xff)?;
+    let arm = (ev.a >> 16) as usize;
+    Some((app, mode, arm, f64::from_bits(ev.b), f64::from_bits(ev.c)))
+}
+
+/// One decoded ring slot / trace-file record.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TraceEvent {
+    /// Global sequence number (gaps mark ring overwrites).
+    pub seq: u64,
+    /// Microseconds since the recorder's epoch (serve start / file
+    /// capture start).
+    pub t_us: u64,
+    /// Raw kind code — kept raw so newer files decode as `unknown`
+    /// instead of failing.
+    pub kind: u64,
+    pub a: u64,
+    pub b: u64,
+    pub c: u64,
+}
+
+impl TraceEvent {
+    pub fn kind_name(&self) -> &'static str {
+        EventKind::from_code(self.kind).map_or("unknown", EventKind::name)
+    }
+}
+
+/// A published slot: seqlock stamp plus an all-atomic payload (torn
+/// reads are *detected*, never undefined behaviour).
+struct Slot {
+    /// `0` = empty or mid-write; otherwise `seq + 1`.
+    stamp: AtomicU64,
+    t_us: AtomicU64,
+    kind: AtomicU64,
+    a: AtomicU64,
+    b: AtomicU64,
+    c: AtomicU64,
+}
+
+impl Slot {
+    fn empty() -> Slot {
+        Slot {
+            stamp: AtomicU64::new(0),
+            t_us: AtomicU64::new(0),
+            kind: AtomicU64::new(0),
+            a: AtomicU64::new(0),
+            b: AtomicU64::new(0),
+            c: AtomicU64::new(0),
+        }
+    }
+}
+
+struct Lane {
+    cursor: AtomicU64,
+    slots: Box<[Slot]>,
+}
+
+static NEXT_THREAD: AtomicU64 = AtomicU64::new(0);
+thread_local! {
+    static THREAD_SLOT: Cell<u64> = const { Cell::new(u64::MAX) };
+}
+
+/// Process-wide dense thread index; lane choice is `index % lanes`, so
+/// the mapping works for any recorder regardless of its lane count.
+fn thread_index() -> u64 {
+    THREAD_SLOT.with(|s| {
+        let v = s.get();
+        if v != u64::MAX {
+            return v;
+        }
+        let v = NEXT_THREAD.fetch_add(1, Ordering::Relaxed);
+        s.set(v);
+        v
+    })
+}
+
+/// The flight recorder. Cheap enough to be always on: the serve stack
+/// records into it unconditionally and `--trace-file` merely attaches a
+/// background drain.
+pub struct Recorder {
+    lanes: Box<[Lane]>,
+    cap: u64,
+    seq: AtomicU64,
+    overwritten: AtomicU64,
+    epoch: Instant,
+}
+
+impl Recorder {
+    /// `lanes` rings of `cap` slots each. Writers sharing a lane remain
+    /// correct (the slot claim is atomic); distinct lanes only remove
+    /// cursor contention.
+    pub fn new(lanes: usize, cap: usize) -> Recorder {
+        let lanes = lanes.max(1);
+        let cap = cap.max(16);
+        let lanes = (0..lanes)
+            .map(|_| Lane {
+                cursor: AtomicU64::new(0),
+                slots: (0..cap).map(|_| Slot::empty()).collect(),
+            })
+            .collect();
+        Recorder {
+            lanes,
+            cap: cap as u64,
+            seq: AtomicU64::new(0),
+            overwritten: AtomicU64::new(0),
+            epoch: Instant::now(),
+        }
+    }
+
+    /// Sized for a serve deployment: one lane per worker plus slack for
+    /// the batch updaters, fleet-sync and checkpoint threads.
+    pub fn for_workers(workers: usize) -> Recorder {
+        Recorder::new(workers.max(1) + 4, DEFAULT_LANE_CAP)
+    }
+
+    /// Record one event. O(1): a handful of atomic stores, no locks, no
+    /// allocation, never blocks.
+    pub fn record(&self, kind: EventKind, a: u64, b: u64, c: u64) {
+        let seq = self.seq.fetch_add(1, Ordering::Relaxed);
+        let t_us = self.epoch.elapsed().as_micros() as u64;
+        let lane = &self.lanes[(thread_index() % self.lanes.len() as u64) as usize];
+        let pos = (lane.cursor.fetch_add(1, Ordering::Relaxed) % self.cap) as usize;
+        let slot = &lane.slots[pos];
+        if slot.stamp.swap(0, Ordering::AcqRel) != 0 {
+            self.overwritten.fetch_add(1, Ordering::Relaxed);
+        }
+        slot.t_us.store(t_us, Ordering::Relaxed);
+        slot.kind.store(kind.code(), Ordering::Relaxed);
+        slot.a.store(a, Ordering::Relaxed);
+        slot.b.store(b, Ordering::Relaxed);
+        slot.c.store(c, Ordering::Relaxed);
+        slot.stamp.store(seq + 1, Ordering::Release);
+    }
+
+    /// Total events ever recorded (= the next sequence number).
+    pub fn recorded(&self) -> u64 {
+        self.seq.load(Ordering::Relaxed)
+    }
+
+    /// Events lost to ring wrap-around since start.
+    pub fn overwritten(&self) -> u64 {
+        self.overwritten.load(Ordering::Relaxed)
+    }
+
+    /// Microseconds since the recorder's epoch.
+    pub fn now_us(&self) -> u64 {
+        self.epoch.elapsed().as_micros() as u64
+    }
+
+    /// Snapshot every live slot with `seq >= since` into `out`, sorted
+    /// by sequence number. Cold path: allocates freely, skips torn
+    /// slots, tolerates concurrent writers.
+    pub fn drain_since(&self, since: u64, out: &mut Vec<TraceEvent>) {
+        out.clear();
+        for lane in self.lanes.iter() {
+            for slot in lane.slots.iter() {
+                let s1 = slot.stamp.load(Ordering::Acquire);
+                if s1 == 0 || s1 - 1 < since {
+                    continue;
+                }
+                let ev = TraceEvent {
+                    seq: s1 - 1,
+                    t_us: slot.t_us.load(Ordering::Relaxed),
+                    kind: slot.kind.load(Ordering::Relaxed),
+                    a: slot.a.load(Ordering::Relaxed),
+                    b: slot.b.load(Ordering::Relaxed),
+                    c: slot.c.load(Ordering::Relaxed),
+                };
+                // Seqlock re-check: the payload loads must not sink
+                // below the second stamp read.
+                std::sync::atomic::fence(Ordering::Acquire);
+                if slot.stamp.load(Ordering::Relaxed) == s1 {
+                    out.push(ev);
+                }
+            }
+        }
+        out.sort_unstable_by_key(|e| e.seq);
+    }
+}
+
+/// Append one event as a JSON object, decoding the packed payload into
+/// per-kind semantic fields. Raw `u64` payloads (f64 bit patterns,
+/// packed words) exceed the f64-exact integer range, so the wire format
+/// always decodes — `a`/`b`/`c` leak out only for unknown kinds.
+pub fn write_event_json(ev: &TraceEvent, w: &mut JsonWriter) {
+    w.begin_obj();
+    w.field_num("seq", ev.seq as f64);
+    w.field_num("t_us", ev.t_us as f64);
+    w.field_str("kind", ev.kind_name());
+    match EventKind::from_code(ev.kind) {
+        Some(EventKind::ReqStart) => {
+            w.field_str("route", route_name(ev.a));
+        }
+        Some(EventKind::ReqEnd) => {
+            w.field_str("route", route_name(ev.a));
+            w.field_num("status", ev.b as f64);
+            w.field_num("latency_us", ev.c as f64);
+        }
+        Some(EventKind::Suggest) => {
+            w.field_num("session", (ev.a & 0xffff_ffff) as f64);
+            w.field_num("arm", (ev.a >> 32) as f64);
+            w.field_num("gap", f64::from_bits(ev.b));
+            w.field_str("policy", policy_code_name((ev.c & 0xff) as u8));
+            w.field_bool("explore", ev.c >> 8 & 1 == 1);
+            w.field_num("pulls", (ev.c >> 16) as f64);
+        }
+        Some(EventKind::ReportApply) => {
+            w.field_num("session", (ev.a & 0xffff_ffff) as f64);
+            w.field_num("arm", (ev.a >> 32) as f64);
+            w.field_num("time_s", f64::from_bits(ev.b));
+            w.field_num("power_w", f64::from_bits(ev.c));
+        }
+        Some(EventKind::BatchFlush) => {
+            w.field_num("shard", ev.a as f64);
+            w.field_num("reports", ev.b as f64);
+        }
+        Some(EventKind::FleetPush) => {
+            w.field_num("snapshots", ev.a as f64);
+        }
+        Some(EventKind::FleetPull) => {
+            w.field_num("installed", ev.a as f64);
+        }
+        Some(EventKind::FleetMerge) => {
+            w.field_num("snapshots", ev.a as f64);
+            w.field_num("nodes", ev.b as f64);
+        }
+        Some(EventKind::Checkpoint) => {
+            w.field_num("sessions", ev.a as f64);
+            w.field_num("duration_us", ev.b as f64);
+        }
+        Some(EventKind::SessionCreate) => {
+            w.field_num("session", ev.a as f64);
+            w.field_num("arms", ev.b as f64);
+            w.field_bool("warm", ev.c & 1 == 1);
+            w.field_str("policy", policy_code_name((ev.c >> 8 & 0xff) as u8));
+        }
+        Some(EventKind::Measure) => match decode_measure(ev) {
+            Some((app, mode, arm, time_s, power_w)) => {
+                w.field_str("app", app.name());
+                w.field_str("mode", mode.lower_name());
+                w.field_num("arm", arm as f64);
+                w.field_num("time_s", time_s);
+                w.field_num("power_w", power_w);
+            }
+            None => {
+                w.field_num("a", ev.a as f64);
+            }
+        },
+        None => {
+            w.field_num("a", ev.a as f64);
+            w.field_num("b", ev.b as f64);
+            w.field_num("c", ev.c as f64);
+        }
+    }
+    w.end_obj();
+}
+
+/// Policy wire-code names — must mirror `serve::store::PolicyKind::code`.
+fn policy_code_name(code: u8) -> &'static str {
+    match code {
+        0 => "ucb",
+        1 => "swucb",
+        2 => "thompson",
+        3 => "epsilon",
+        4 => "subset",
+        _ => "unknown",
+    }
+}
+
+/// Serialize events into the binary on-disk body (no magic header).
+pub fn encode_events(events: &[TraceEvent], out: &mut Vec<u8>) {
+    out.reserve(events.len() * TRACE_RECORD_BYTES);
+    for ev in events {
+        for v in [ev.seq, ev.t_us, ev.kind, ev.a, ev.b, ev.c] {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+}
+
+fn decode_u64(bytes: &[u8], at: usize) -> u64 {
+    u64::from_le_bytes(bytes[at..at + 8].try_into().expect("8-byte window"))
+}
+
+/// Decode a binary body (magic already stripped).
+pub fn decode_events(body: &[u8]) -> anyhow::Result<Vec<TraceEvent>> {
+    if body.len() % TRACE_RECORD_BYTES != 0 {
+        anyhow::bail!(
+            "trace body length {} is not a multiple of the {TRACE_RECORD_BYTES}-byte record size",
+            body.len()
+        );
+    }
+    let mut out = Vec::with_capacity(body.len() / TRACE_RECORD_BYTES);
+    for rec in body.chunks_exact(TRACE_RECORD_BYTES) {
+        out.push(TraceEvent {
+            seq: decode_u64(rec, 0),
+            t_us: decode_u64(rec, 8),
+            kind: decode_u64(rec, 16),
+            a: decode_u64(rec, 24),
+            b: decode_u64(rec, 32),
+            c: decode_u64(rec, 40),
+        });
+    }
+    Ok(out)
+}
+
+/// Write a complete `LASPTRC1` trace file.
+pub fn write_trace_file(path: &Path, events: &[TraceEvent]) -> anyhow::Result<()> {
+    let mut buf = Vec::with_capacity(TRACE_MAGIC.len() + events.len() * TRACE_RECORD_BYTES);
+    buf.extend_from_slice(&TRACE_MAGIC);
+    encode_events(events, &mut buf);
+    std::fs::write(path, buf)
+        .map_err(|e| anyhow::anyhow!("writing trace file {}: {e}", path.display()))
+}
+
+/// Read a complete `LASPTRC1` trace file.
+pub fn read_trace_file(path: &Path) -> anyhow::Result<Vec<TraceEvent>> {
+    let bytes = std::fs::read(path)
+        .map_err(|e| anyhow::anyhow!("reading trace file {}: {e}", path.display()))?;
+    if bytes.len() < TRACE_MAGIC.len() || bytes[..TRACE_MAGIC.len()] != TRACE_MAGIC {
+        anyhow::bail!(
+            "{} is not a LASP trace file (expected magic {:?})",
+            path.display(),
+            std::str::from_utf8(&TRACE_MAGIC).unwrap_or("LASPTRC1")
+        );
+    }
+    decode_events(&bytes[TRACE_MAGIC.len()..])
+}
+
+/// Background drain attached by `lasp serve --trace-file`: every ~50 ms
+/// it snapshots new events off the ring and appends them to the file.
+/// Events overwritten between drains are lost (they show up as sequence
+/// gaps in the file) — the server's hot path never waits on disk.
+pub struct TraceWriter {
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+    path: PathBuf,
+}
+
+impl TraceWriter {
+    pub fn start(recorder: Arc<Recorder>, path: PathBuf) -> anyhow::Result<TraceWriter> {
+        let file = std::fs::File::create(&path)
+            .map_err(|e| anyhow::anyhow!("creating trace file {}: {e}", path.display()))?;
+        let mut file = std::io::BufWriter::new(file);
+        file.write_all(&TRACE_MAGIC)
+            .map_err(|e| anyhow::anyhow!("writing trace header: {e}"))?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let handle = std::thread::Builder::new()
+            .name("lasp-trace-writer".to_string())
+            .spawn(move || {
+                let mut since = 0u64;
+                let mut events = Vec::new();
+                let mut buf = Vec::new();
+                loop {
+                    let stopping = stop2.load(Ordering::Relaxed);
+                    recorder.drain_since(since, &mut events);
+                    if let Some(last) = events.last() {
+                        since = last.seq + 1;
+                        buf.clear();
+                        encode_events(&events, &mut buf);
+                        let _ = file.write_all(&buf);
+                    }
+                    if stopping {
+                        let _ = file.flush();
+                        return;
+                    }
+                    std::thread::sleep(Duration::from_millis(50));
+                }
+            })
+            .expect("spawn trace writer");
+        Ok(TraceWriter { stop, handle: Some(handle), path })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Final drain + flush; idempotent.
+    pub fn stop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for TraceWriter {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn drain_all(r: &Recorder) -> Vec<TraceEvent> {
+        let mut out = Vec::new();
+        r.drain_since(0, &mut out);
+        out
+    }
+
+    #[test]
+    fn records_and_drains_in_sequence_order() {
+        let r = Recorder::new(2, 64);
+        for i in 0..10u64 {
+            r.record(EventKind::Suggest, i, 0, 0);
+        }
+        let evs = drain_all(&r);
+        assert_eq!(evs.len(), 10);
+        assert_eq!(evs.iter().map(|e| e.seq).collect::<Vec<_>>(), (0..10).collect::<Vec<_>>());
+        assert_eq!(r.recorded(), 10);
+        assert_eq!(r.overwritten(), 0);
+        // since-cursor filters.
+        let mut out = Vec::new();
+        r.drain_since(7, &mut out);
+        assert_eq!(out.iter().map(|e| e.seq).collect::<Vec<_>>(), vec![7, 8, 9]);
+    }
+
+    #[test]
+    fn ring_wrap_counts_overwrites_and_keeps_newest() {
+        let r = Recorder::new(1, 16);
+        for i in 0..40u64 {
+            r.record(EventKind::ReqStart, i, 0, 0);
+        }
+        let evs = drain_all(&r);
+        assert_eq!(evs.len(), 16, "one full ring survives");
+        assert_eq!(evs.first().unwrap().seq, 24, "oldest surviving event");
+        assert_eq!(evs.last().unwrap().seq, 39);
+        assert_eq!(r.overwritten(), 24);
+    }
+
+    #[test]
+    fn concurrent_writers_never_produce_torn_events() {
+        let r = Arc::new(Recorder::new(4, 256));
+        let mut handles = vec![];
+        for t in 0..4u64 {
+            let r = Arc::clone(&r);
+            handles.push(std::thread::spawn(move || {
+                for i in 0..500u64 {
+                    // Payload redundantly encodes itself so tearing is
+                    // detectable.
+                    let v = t << 32 | i;
+                    r.record(EventKind::Measure, v, v, v);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let evs = drain_all(&r);
+        assert!(!evs.is_empty());
+        for ev in &evs {
+            assert_eq!(ev.a, ev.b);
+            assert_eq!(ev.b, ev.c);
+        }
+        // Sequence numbers are unique.
+        let mut seqs: Vec<u64> = evs.iter().map(|e| e.seq).collect();
+        seqs.dedup();
+        assert_eq!(seqs.len(), evs.len());
+    }
+
+    #[test]
+    fn trace_file_roundtrips() {
+        let dir = std::env::temp_dir().join(format!("lasp-obs-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("roundtrip.trc");
+        let events: Vec<TraceEvent> = (0..17)
+            .map(|i| TraceEvent {
+                seq: i,
+                t_us: i * 100,
+                kind: EventKind::Suggest.code(),
+                a: i << 32 | i,
+                b: (i as f64 * 0.25).to_bits(),
+                c: i * 7,
+            })
+            .collect();
+        write_trace_file(&path, &events).unwrap();
+        let back = read_trace_file(&path).unwrap();
+        assert_eq!(back, events);
+        // Bad magic is rejected, not misparsed.
+        let bogus = dir.join("bogus.trc");
+        std::fs::write(&bogus, b"NOTATRCE").unwrap();
+        assert!(read_trace_file(&bogus).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn suggest_payload_packs_and_decodes() {
+        let (a, b, c) = pack_suggest(77, 124, 0.125, true, 1, 990);
+        let ev = TraceEvent { seq: 0, t_us: 0, kind: EventKind::Suggest.code(), a, b, c };
+        assert_eq!(ev.a & 0xffff_ffff, 77);
+        assert_eq!(ev.a >> 32, 124);
+        assert_eq!(f64::from_bits(ev.b), 0.125);
+        assert_eq!(ev.c & 0xff, 1);
+        assert_eq!(ev.c >> 8 & 1, 1);
+        assert_eq!(ev.c >> 16, 990);
+        let mut out = Vec::new();
+        let mut w = JsonWriter::new(&mut out);
+        write_event_json(&ev, &mut w);
+        let s = String::from_utf8(out).unwrap();
+        assert!(s.contains("\"kind\":\"suggest\""), "{s}");
+        assert!(s.contains("\"arm\":124"), "{s}");
+        assert!(s.contains("\"policy\":\"swucb\""), "{s}");
+        assert!(s.contains("\"explore\":true"), "{s}");
+    }
+
+    #[test]
+    fn measure_payload_roundtrips() {
+        let (a, b, c) = pack_measure(AppKind::Kripke, PowerMode::FiveW, 201, 1.5, 4.25);
+        let ev = TraceEvent { seq: 3, t_us: 9, kind: EventKind::Measure.code(), a, b, c };
+        let (app, mode, arm, t, p) = decode_measure(&ev).unwrap();
+        assert_eq!(app, AppKind::Kripke);
+        assert_eq!(mode, PowerMode::FiveW);
+        assert_eq!(arm, 201);
+        assert_eq!(t, 1.5);
+        assert_eq!(p, 4.25);
+    }
+
+    #[test]
+    fn trace_writer_streams_to_disk() {
+        let dir = std::env::temp_dir().join(format!("lasp-obs-w-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("stream.trc");
+        let r = Arc::new(Recorder::new(2, 128));
+        let mut w = TraceWriter::start(Arc::clone(&r), path.clone()).unwrap();
+        for i in 0..25u64 {
+            r.record(EventKind::ReqEnd, route::SUGGEST, 200, i);
+        }
+        w.stop();
+        let back = read_trace_file(&path).unwrap();
+        assert_eq!(back.len(), 25);
+        assert_eq!(back.last().unwrap().c, 24);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

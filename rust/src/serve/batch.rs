@@ -12,6 +12,7 @@
 use super::metrics::Metrics;
 use super::store::{AppsCache, SessionId, ShardedStore};
 use crate::apps::AppKind;
+use crate::obs::{EventKind, Recorder};
 use std::sync::atomic::Ordering;
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex};
@@ -51,6 +52,7 @@ impl BatchIngest {
         store: Arc<ShardedStore>,
         apps: Arc<AppsCache>,
         metrics: Arc<Metrics>,
+        recorder: Arc<Recorder>,
         queue_cap: usize,
         max_batch: usize,
     ) -> BatchIngest {
@@ -64,8 +66,9 @@ impl BatchIngest {
             let store = store.clone();
             let apps = apps.clone();
             let metrics = metrics.clone();
+            let recorder = recorder.clone();
             updaters.push(std::thread::spawn(move || {
-                updater_loop(shard, &rx, &store, &apps, &metrics, max_batch)
+                updater_loop(shard, &rx, &store, &apps, &metrics, &recorder, max_batch)
             }));
         }
         BatchIngest {
@@ -117,6 +120,7 @@ fn updater_loop(
     store: &ShardedStore,
     apps: &AppsCache,
     metrics: &Metrics,
+    recorder: &Recorder,
     max_batch: usize,
 ) {
     loop {
@@ -138,8 +142,10 @@ fn updater_loop(
                 Err(_) => break,
             }
         }
-        apply_batch(shard, batch, store, apps, metrics);
+        let n = batch.len();
+        apply_batch(shard, batch, store, apps, metrics, recorder);
         metrics.update_batches.fetch_add(1, Ordering::Relaxed);
+        recorder.record(EventKind::BatchFlush, shard as u64, n as u64, 0);
         if stop_after {
             return;
         }
@@ -152,6 +158,7 @@ fn apply_batch(
     store: &ShardedStore,
     apps: &AppsCache,
     metrics: &Metrics,
+    recorder: &Recorder,
 ) {
     let mut guard = store.write_shard(shard);
     for r in batch {
@@ -167,6 +174,12 @@ fn apply_batch(
                     Ok(()) => {
                         session.reports += 1;
                         metrics.reports_applied.fetch_add(1, Ordering::Relaxed);
+                        recorder.record(
+                            EventKind::ReportApply,
+                            r.id.0 as u64 | (r.arm as u64) << 32,
+                            r.time_s.to_bits(),
+                            r.power_w.to_bits(),
+                        );
                     }
                     Err(_) => {
                         metrics.reports_rejected.fetch_add(1, Ordering::Relaxed);
@@ -224,7 +237,9 @@ mod tests {
         let store = Arc::new(ShardedStore::new(4));
         let apps = Arc::new(AppsCache::new());
         let metrics = Arc::new(Metrics::new());
-        let ingest = BatchIngest::start(store.clone(), apps, metrics.clone(), 64, 16);
+        let recorder = Arc::new(Recorder::new(2, 256));
+        let ingest =
+            BatchIngest::start(store.clone(), apps, metrics.clone(), recorder.clone(), 64, 16);
 
         let k = key("async-client");
         let id = store.intern(&k.as_ref(), k.hash64());
@@ -246,6 +261,16 @@ mod tests {
         let session = guard.sessions.get(&id.0).unwrap();
         assert_eq!(session.tuner.total_pulls(), 50.0);
         drop(guard);
+        // Every applied report and at least one flush landed in the
+        // flight recorder.
+        let mut events = Vec::new();
+        recorder.drain_since(0, &mut events);
+        let applies =
+            events.iter().filter(|e| e.kind == EventKind::ReportApply.code()).count();
+        let flushes =
+            events.iter().filter(|e| e.kind == EventKind::BatchFlush.code()).count();
+        assert_eq!(applies, 50);
+        assert!(flushes >= 1);
         ingest.stop();
     }
 
@@ -254,7 +279,14 @@ mod tests {
         let store = Arc::new(ShardedStore::new(2));
         let apps = Arc::new(AppsCache::new());
         let metrics = Arc::new(Metrics::new());
-        let ingest = BatchIngest::start(store.clone(), apps, metrics.clone(), 16, 8);
+        let ingest = BatchIngest::start(
+            store.clone(),
+            apps,
+            metrics.clone(),
+            Arc::new(Recorder::new(2, 256)),
+            16,
+            8,
+        );
         let k = key("bad-client");
         let id = store.intern(&k.as_ref(), k.hash64());
         let shard = store.shard_of(&k);
@@ -278,7 +310,14 @@ mod tests {
         let store = Arc::new(ShardedStore::new(1));
         let apps = Arc::new(AppsCache::new());
         let metrics = Arc::new(Metrics::new());
-        let ingest = BatchIngest::start(store.clone(), apps, metrics.clone(), 256, 32);
+        let ingest = BatchIngest::start(
+            store.clone(),
+            apps,
+            metrics.clone(),
+            Arc::new(Recorder::new(2, 256)),
+            256,
+            32,
+        );
         let k = key("drain-client");
         let id = store.intern(&k.as_ref(), k.hash64());
         for i in 0..100 {

@@ -42,6 +42,7 @@ use super::metrics::Metrics;
 use super::store::{AppsCache, FleetKey, PolicyKind, ShardedStore, Tuner};
 use crate::apps::AppKind;
 use crate::bandit::{ArmStats, Policy as _};
+use crate::obs::{EventKind, Recorder};
 use crate::device::PowerMode;
 use crate::util::json::{JsonSlice, JsonWriter};
 use std::collections::HashMap;
@@ -538,10 +539,12 @@ impl FleetSync {
         store: Arc<ShardedStore>,
         apps: Arc<AppsCache>,
         metrics: Arc<Metrics>,
+        recorder: Arc<Recorder>,
     ) -> FleetSync {
         let stop = Arc::new(AtomicBool::new(false));
         let stop2 = stop.clone();
-        let handle = std::thread::spawn(move || run_loop(&cfg, &store, &apps, &metrics, &stop2));
+        let handle =
+            std::thread::spawn(move || run_loop(&cfg, &store, &apps, &metrics, &recorder, &stop2));
         FleetSync {
             stop,
             handle: Some(handle),
@@ -568,6 +571,7 @@ fn run_loop(
     store: &ShardedStore,
     apps: &AppsCache,
     metrics: &Metrics,
+    recorder: &Recorder,
     stop: &AtomicBool,
 ) {
     let mut client: Option<HttpClient> = None;
@@ -583,9 +587,11 @@ fn run_loop(
         }
         last = Instant::now();
         match sync_once(cfg, &mut client, &mut buf, store, apps) {
-            Ok(_) => {
+            Ok((pushed, installed)) => {
                 metrics.fleet_pushes.fetch_add(1, Ordering::Relaxed);
                 metrics.fleet_pulls.fetch_add(1, Ordering::Relaxed);
+                recorder.record(EventKind::FleetPush, pushed as u64, 0, 0);
+                recorder.record(EventKind::FleetPull, installed as u64, 0, 0);
             }
             Err(_) => {
                 // Reconnect next cycle; the node keeps serving standalone.
@@ -596,20 +602,22 @@ fn run_loop(
     }
 }
 
-/// One push + pull cycle against the leader.
+/// One push + pull cycle against the leader. Returns `(snapshots
+/// pushed, priors installed from the pull)`.
 fn sync_once(
     cfg: &FleetSyncConfig,
     client: &mut Option<HttpClient>,
     buf: &mut Vec<u8>,
     store: &ShardedStore,
     apps: &AppsCache,
-) -> Result<usize, String> {
+) -> Result<(usize, usize), String> {
     if client.is_none() {
         *client = Some(HttpClient::connect(&cfg.leader).map_err(|e| format!("{e:#}"))?);
     }
     let c = client.as_mut().expect("client just ensured");
 
     let local = aggregate_local(store);
+    let pushed = local.len();
     write_push_body(&cfg.node_id, &local, buf);
     let status = c.post_slice("/v1/sync/push", buf).map_err(|e| format!("{e:#}"))?;
     if status != 200 {
@@ -627,7 +635,8 @@ fn sync_once(
     if status != 200 {
         return Err(format!("pull rejected: HTTP {status}"));
     }
-    apply_pull_body(c.last_body(), store, apps)
+    let installed = apply_pull_body(c.last_body(), store, apps)?;
+    Ok((pushed, installed))
 }
 
 #[cfg(test)]

@@ -17,11 +17,13 @@
 use super::http::find_subsequence;
 use crate::apps::{self, AppKind, AppModel};
 use crate::device::{Device, JetsonNano, PowerMode};
+use crate::obs::{self, EventKind, TraceEvent};
 use crate::util::json::{Json, JsonSlice, JsonWriter};
 use crate::util::stats;
 use anyhow::{anyhow, Context, Result};
 use std::io::{Read, Write};
 use std::net::TcpStream;
+use std::path::PathBuf;
 use std::time::{Duration, Instant};
 
 /// Load-generation parameters.
@@ -47,6 +49,10 @@ pub struct LoadgenConfig {
     /// Device-simulator fidelity and seed.
     pub fidelity: f64,
     pub seed: u64,
+    /// Capture the observed `(app, mode, arm, time, power)` stream to a
+    /// `LASPTRC1` trace file (`lasp loadgen --record`); replayable via
+    /// `lasp simulate` with `trace = "<path>"`.
+    pub record: Option<PathBuf>,
 }
 
 impl Default for LoadgenConfig {
@@ -61,6 +67,7 @@ impl Default for LoadgenConfig {
             beta: 0.2,
             fidelity: 0.15,
             seed: 42,
+            record: None,
         }
     }
 }
@@ -366,7 +373,8 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
         let target = targets[t % targets.len()].clone();
         // Rounds split evenly; the first threads absorb the remainder.
         let my_rounds = cfg.rounds / threads + usize::from(t < cfg.rounds % threads);
-        handles.push(std::thread::spawn(move || worker(t, threads, my_rounds, &cfg, &target)));
+        handles
+            .push(std::thread::spawn(move || worker(t, threads, my_rounds, &cfg, &target, t0)));
     }
 
     let mut latencies: Vec<f64> = Vec::with_capacity(cfg.rounds * 2);
@@ -374,6 +382,10 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
     let mut rounds_done = 0usize;
     let mut reconnects = 0usize;
     let mut requests = 0usize;
+    // Per-worker capture streams, concatenated in thread order (joins
+    // follow spawn order) so a given (sessions, threads, seed) config
+    // yields a stable event layout.
+    let mut records: Vec<TraceEvent> = Vec::new();
     for h in handles {
         let w = h.join().map_err(|_| anyhow!("loadgen worker panicked"))??;
         latencies.extend(w.latencies);
@@ -381,6 +393,13 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
         rounds_done += w.rounds;
         reconnects += w.reconnects;
         requests += w.requests;
+        records.extend(w.records);
+    }
+    if let Some(path) = &cfg.record {
+        for (i, ev) in records.iter_mut().enumerate() {
+            ev.seq = i as u64;
+        }
+        obs::write_trace_file(path, &records)?;
     }
     let elapsed = t0.elapsed().as_secs_f64().max(1e-9);
     Ok(LoadgenReport {
@@ -406,6 +425,9 @@ struct WorkerOut {
     rounds: usize,
     reconnects: usize,
     requests: usize,
+    /// Captured `Measure` events when `--record` is active (seq numbers
+    /// assigned by the aggregator).
+    records: Vec<TraceEvent>,
 }
 
 fn worker(
@@ -414,6 +436,7 @@ fn worker(
     my_rounds: usize,
     cfg: &LoadgenConfig,
     target: &str,
+    epoch: Instant,
 ) -> Result<WorkerOut> {
     // This thread owns sessions thread_id, thread_id+threads, ...
     let mut sessions: Vec<ClientSession> = (0..cfg.sessions)
@@ -439,6 +462,7 @@ fn worker(
             rounds: 0,
             reconnects: 0,
             requests: 0,
+            records: vec![],
         });
     }
     let models: Vec<Box<dyn AppModel>> = cfg.apps.iter().map(|&k| apps::build(k)).collect();
@@ -447,6 +471,8 @@ fn worker(
     let mut body = Vec::with_capacity(512);
     let mut errors = 0usize;
     let mut rounds_done = 0usize;
+    let mut records: Vec<TraceEvent> =
+        Vec::with_capacity(if cfg.record.is_some() { my_rounds } else { 0 });
 
     for round in 0..my_rounds {
         let idx = round % sessions.len();
@@ -482,6 +508,17 @@ fn worker(
         // Evaluate locally on the simulated device.
         let workload = models[s.app_index].workload(arm, cfg.fidelity);
         let m = s.device.run(&workload);
+        if cfg.record.is_some() {
+            let (a, b, c) = obs::pack_measure(s.kind, s.mode, arm as u32, m.time_s, m.power_w);
+            records.push(TraceEvent {
+                seq: 0,
+                t_us: epoch.elapsed().as_micros() as u64,
+                kind: EventKind::Measure.code(),
+                a,
+                b,
+                c,
+            });
+        }
 
         // Report.
         write_body(&mut body, cfg, s, Some((arm, m.time_s, m.power_w)));
@@ -502,6 +539,7 @@ fn worker(
         rounds: rounds_done,
         reconnects: client.reconnects() as usize,
         requests: client.requests() as usize,
+        records,
     })
 }
 

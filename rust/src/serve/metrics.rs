@@ -118,12 +118,28 @@ pub struct FleetGauges {
     pub warm_starts: u64,
 }
 
+/// Point-in-time gauges of the flight recorder ([`crate::obs::Recorder`]),
+/// sampled at render time.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct TraceGauges {
+    /// Events ever recorded (the next sequence number).
+    pub recorded: u64,
+    /// Events lost to ring wrap-around.
+    pub overwritten: u64,
+}
+
 /// All counters the service exports.
 pub struct Metrics {
     started: Instant,
     pub suggest_latency: Histogram,
     pub report_latency: Histogram,
     pub best_latency: Histogram,
+    /// Fleet-sync server plane and checkpoint-write latencies — without
+    /// these, a stalled leader merge or a slow checkpoint disk is
+    /// invisible next to the sub-millisecond suggest path.
+    pub sync_push_latency: Histogram,
+    pub sync_pull_latency: Histogram,
+    pub checkpoint_latency: Histogram,
     pub http_requests: AtomicU64,
     pub http_errors: AtomicU64,
     pub suggests: AtomicU64,
@@ -154,6 +170,9 @@ impl Metrics {
             suggest_latency: Histogram::new(),
             report_latency: Histogram::new(),
             best_latency: Histogram::new(),
+            sync_push_latency: Histogram::new(),
+            sync_pull_latency: Histogram::new(),
+            checkpoint_latency: Histogram::new(),
             http_requests: AtomicU64::new(0),
             http_errors: AtomicU64::new(0),
             suggests: AtomicU64::new(0),
@@ -187,53 +206,61 @@ impl Metrics {
         transport: &TransportStats,
         resources: &ResourceReport,
         fleet: FleetGauges,
+        trace: TraceGauges,
     ) -> String {
         let mut out = String::with_capacity(2048);
         let gauge = |out: &mut String, name: &str, v: f64| {
             let _ = writeln!(out, "# TYPE {name} gauge\n{name} {v}");
         };
-        let counter = |out: &mut String, name: &str, v: &AtomicU64| {
-            let _ = writeln!(out, "# TYPE {name} counter\n{name} {}", v.load(Ordering::Relaxed));
+        // Counters take the value, not the atomic, so monotone counts
+        // sampled from non-atomic sources (the fleet gauges, the flight
+        // recorder) go through the same exposition path.
+        let counter = |out: &mut String, name: &str, v: u64| {
+            let _ = writeln!(out, "# TYPE {name} counter\n{name} {v}");
         };
+        let load = |v: &AtomicU64| v.load(Ordering::Relaxed);
         gauge(&mut out, "lasp_serve_uptime_seconds", self.uptime_s());
         gauge(&mut out, "lasp_serve_sessions", sessions as f64);
         gauge(&mut out, "lasp_serve_shards", shards as f64);
-        counter(&mut out, "lasp_serve_http_requests_total", &self.http_requests);
-        counter(&mut out, "lasp_serve_http_errors_total", &self.http_errors);
-        counter(&mut out, "lasp_serve_suggests_total", &self.suggests);
-        counter(&mut out, "lasp_serve_reports_enqueued_total", &self.reports_enqueued);
-        counter(&mut out, "lasp_serve_reports_applied_total", &self.reports_applied);
-        counter(&mut out, "lasp_serve_reports_rejected_total", &self.reports_rejected);
-        counter(&mut out, "lasp_serve_update_batches_total", &self.update_batches);
-        counter(&mut out, "lasp_serve_queue_backpressure_total", &self.queue_backpressure);
-        counter(&mut out, "lasp_serve_sessions_created_total", &self.sessions_created);
-        counter(&mut out, "lasp_serve_checkpoints_total", &self.checkpoints);
-        counter(&mut out, "lasp_serve_checkpoint_sessions_total", &self.checkpoint_sessions);
-        counter(&mut out, "lasp_serve_sessions_restored_total", &self.sessions_restored);
+        counter(&mut out, "lasp_serve_http_requests_total", load(&self.http_requests));
+        counter(&mut out, "lasp_serve_http_errors_total", load(&self.http_errors));
+        counter(&mut out, "lasp_serve_suggests_total", load(&self.suggests));
+        counter(&mut out, "lasp_serve_reports_enqueued_total", load(&self.reports_enqueued));
+        counter(&mut out, "lasp_serve_reports_applied_total", load(&self.reports_applied));
+        counter(&mut out, "lasp_serve_reports_rejected_total", load(&self.reports_rejected));
+        counter(&mut out, "lasp_serve_update_batches_total", load(&self.update_batches));
+        counter(&mut out, "lasp_serve_queue_backpressure_total", load(&self.queue_backpressure));
+        counter(&mut out, "lasp_serve_sessions_created_total", load(&self.sessions_created));
+        counter(&mut out, "lasp_serve_checkpoints_total", load(&self.checkpoints));
+        counter(&mut out, "lasp_serve_checkpoint_sessions_total", load(&self.checkpoint_sessions));
+        counter(&mut out, "lasp_serve_sessions_restored_total", load(&self.sessions_restored));
         // Fleet-sync plane: client-side cycles, server-side absorption,
         // and the warm-start payoff (sessions that skipped cold start).
-        counter(&mut out, "lasp_serve_fleet_pushes_total", &self.fleet_pushes);
-        counter(&mut out, "lasp_serve_fleet_pulls_total", &self.fleet_pulls);
-        counter(&mut out, "lasp_serve_fleet_sync_errors_total", &self.fleet_sync_errors);
-        counter(&mut out, "lasp_serve_fleet_push_snapshots_total", &self.fleet_push_snapshots);
-        counter(&mut out, "lasp_serve_fleet_pulls_served_total", &self.fleet_pulls_served);
+        counter(&mut out, "lasp_serve_fleet_pushes_total", load(&self.fleet_pushes));
+        counter(&mut out, "lasp_serve_fleet_pulls_total", load(&self.fleet_pulls));
+        counter(&mut out, "lasp_serve_fleet_sync_errors_total", load(&self.fleet_sync_errors));
+        counter(&mut out, "lasp_serve_fleet_push_snapshots_total", load(&self.fleet_push_snapshots));
+        counter(&mut out, "lasp_serve_fleet_pulls_served_total", load(&self.fleet_pulls_served));
         gauge(&mut out, "lasp_serve_fleet_nodes", fleet.nodes as f64);
         gauge(&mut out, "lasp_serve_fleet_prior_keys", fleet.prior_keys as f64);
-        let _ = writeln!(
-            out,
-            "# TYPE lasp_serve_fleet_warm_starts_total counter\nlasp_serve_fleet_warm_starts_total {}",
-            fleet.warm_starts
-        );
+        counter(&mut out, "lasp_serve_fleet_warm_starts_total", fleet.warm_starts);
+        // Flight-recorder plane: total events and ring overwrites (loss
+        // under overload is visible, never silent).
+        counter(&mut out, "lasp_serve_trace_events_total", trace.recorded);
+        counter(&mut out, "lasp_serve_trace_overwritten_total", trace.overwritten);
         // Transport plane: the zero-allocation contract is observable —
         // `alloc_events_total` flat under load means the HTTP+JSON layers
         // are not heap-allocating per request.
-        counter(&mut out, "lasp_serve_transport_connections_total", &transport.connections);
-        counter(&mut out, "lasp_serve_transport_requests_total", &transport.requests);
-        counter(&mut out, "lasp_serve_transport_alloc_events_total", &transport.alloc_events);
-        counter(&mut out, "lasp_serve_transport_rejected_431_total", &transport.rejected_431);
+        counter(&mut out, "lasp_serve_transport_connections_total", load(&transport.connections));
+        counter(&mut out, "lasp_serve_transport_requests_total", load(&transport.requests));
+        counter(&mut out, "lasp_serve_transport_alloc_events_total", load(&transport.alloc_events));
+        counter(&mut out, "lasp_serve_transport_rejected_431_total", load(&transport.rejected_431));
         self.suggest_latency.render("lasp_serve_suggest_latency_us", &mut out);
         self.report_latency.render("lasp_serve_report_latency_us", &mut out);
         self.best_latency.render("lasp_serve_best_latency_us", &mut out);
+        self.sync_push_latency.render("lasp_serve_sync_push_latency_us", &mut out);
+        self.sync_pull_latency.render("lasp_serve_sync_pull_latency_us", &mut out);
+        self.checkpoint_latency.render("lasp_serve_checkpoint_latency_us", &mut out);
         resources.render_prometheus("lasp_serve_process", &mut out);
         out
     }
@@ -277,20 +304,74 @@ mod tests {
         let m = Metrics::new();
         m.http_requests.fetch_add(3, Ordering::Relaxed);
         m.suggest_latency.observe(Duration::from_micros(120));
+        m.sync_push_latency.observe(Duration::from_micros(900));
+        m.checkpoint_latency.observe(Duration::from_millis(3));
         let t = TransportStats::default();
         t.requests.fetch_add(7, Ordering::Relaxed);
         m.fleet_sync_errors.fetch_add(2, Ordering::Relaxed);
         let fleet = FleetGauges { nodes: 3, prior_keys: 2, warm_starts: 4 };
-        let page = m.render(5, 8, &t, &ResourceReport::default(), fleet);
+        let trace = TraceGauges { recorded: 11, overwritten: 1 };
+        let page = m.render(5, 8, &t, &ResourceReport::default(), fleet, trace);
         assert!(page.contains("lasp_serve_http_requests_total 3"), "{page}");
         assert!(page.contains("lasp_serve_sessions 5"), "{page}");
         assert!(page.contains("lasp_serve_fleet_nodes 3"), "{page}");
         assert!(page.contains("lasp_serve_fleet_prior_keys 2"), "{page}");
         assert!(page.contains("lasp_serve_fleet_warm_starts_total 4"), "{page}");
         assert!(page.contains("lasp_serve_fleet_sync_errors_total 2"), "{page}");
+        assert!(page.contains("lasp_serve_trace_events_total 11"), "{page}");
+        assert!(page.contains("lasp_serve_trace_overwritten_total 1"), "{page}");
         assert!(page.contains("lasp_serve_transport_requests_total 7"), "{page}");
         assert!(page.contains("lasp_serve_transport_alloc_events_total 0"), "{page}");
         assert!(page.contains("lasp_serve_suggest_latency_us_bucket{le=\"250\"} 1"));
+        assert!(page.contains("lasp_serve_sync_push_latency_us_count 1"), "{page}");
+        assert!(page.contains("lasp_serve_sync_pull_latency_us_count 0"), "{page}");
+        assert!(page.contains("lasp_serve_checkpoint_latency_us_count 1"), "{page}");
         assert!(page.contains("lasp_serve_process_peak_rss_mib"));
+    }
+
+    /// Prometheus text-exposition lint over the full page: every sample
+    /// name is declared by exactly one preceding `# TYPE` line, no metric
+    /// family is declared twice, and nothing trails the final newline.
+    #[test]
+    fn render_passes_exposition_format_lint() {
+        let m = Metrics::new();
+        m.suggest_latency.observe(Duration::from_micros(75));
+        m.sync_pull_latency.observe(Duration::from_micros(75));
+        let page = m.render(
+            1,
+            2,
+            &TransportStats::default(),
+            &ResourceReport::default(),
+            FleetGauges { nodes: 1, prior_keys: 1, warm_starts: 9 },
+            TraceGauges { recorded: 5, overwritten: 0 },
+        );
+        assert!(page.ends_with('\n'), "page must end with a newline, no trailing garbage");
+        let mut declared: std::collections::BTreeSet<String> = Default::default();
+        for line in page.lines() {
+            assert!(!line.trim().is_empty(), "blank line in exposition output");
+            if let Some(rest) = line.strip_prefix("# TYPE ") {
+                let mut parts = rest.split_whitespace();
+                let (name, kind) = (parts.next().unwrap(), parts.next().unwrap_or(""));
+                assert!(
+                    ["counter", "gauge", "histogram"].contains(&kind),
+                    "bad TYPE kind in '{line}'"
+                );
+                assert!(declared.insert(name.to_string()), "metric family '{name}' declared twice");
+                continue;
+            }
+            assert!(!line.starts_with('#'), "unexpected comment line '{line}'");
+            // Sample name = text before the first '{' or ' '.
+            let name = line.split(['{', ' ']).next().unwrap();
+            let family = declared.iter().any(|d| {
+                name == d
+                    || (name.starts_with(d.as_str())
+                        && ["_bucket", "_sum", "_sum_us", "_count"]
+                            .contains(&&name[d.len()..]))
+            });
+            assert!(family, "sample '{name}' has no preceding # TYPE declaration");
+            // The value parses as a number.
+            let value = line.rsplit(' ').next().unwrap();
+            assert!(value.parse::<f64>().is_ok(), "unparsable value in '{line}'");
+        }
     }
 }

@@ -11,17 +11,19 @@
 //!
 //! Endpoints (full reference with examples: `docs/API.md`):
 //!
-//! | method | path             | purpose                                      |
-//! |--------|------------------|----------------------------------------------|
-//! | POST   | `/v1/suggest`    | next configuration to evaluate (Eq. 2-3)     |
-//! | POST   | `/v1/report`     | enqueue a measured evaluation (batched)      |
-//! | GET    | `/v1/best`       | the session's tuned configuration (Eq. 4)    |
-//! | POST   | `/v1/checkpoint` | force a snapshot of every session            |
-//! | POST   | `/v1/sync/push`  | deposit a peer node's arm statistics         |
-//! | POST   | `/v1/sync/pull`  | fetch the discount-merged fleet prior        |
-//! | GET    | `/healthz`       | liveness + session count                     |
-//! | GET    | `/metrics`       | Prometheus counters, latency histograms,     |
-//! |        |                  | transport stats, process [`ResourceReport`]  |
+//! | method | path                | purpose                                      |
+//! |--------|---------------------|----------------------------------------------|
+//! | POST   | `/v1/suggest`       | next configuration to evaluate (Eq. 2-3)     |
+//! | POST   | `/v1/report`        | enqueue a measured evaluation (batched)      |
+//! | GET    | `/v1/best`          | the session's tuned configuration (Eq. 4)    |
+//! | POST   | `/v1/checkpoint`    | force a snapshot of every session            |
+//! | POST   | `/v1/sync/push`     | deposit a peer node's arm statistics         |
+//! | POST   | `/v1/sync/pull`     | fetch the discount-merged fleet prior        |
+//! | GET    | `/v1/trace`         | drain flight-recorder events since a seq     |
+//! | GET    | `/v1/debug/session` | full per-session arm statistics              |
+//! | GET    | `/healthz`          | liveness + session count                     |
+//! | GET    | `/metrics`          | Prometheus counters, latency histograms,     |
+//! |        |                     | transport stats, process [`ResourceReport`]  |
 //!
 //! [`ResourceReport`]: crate::telemetry::ResourceReport
 
@@ -29,10 +31,11 @@ use super::batch::{BatchIngest, Report};
 use super::checkpoint;
 use super::fleet::{self, FleetSnapshot, FleetStore, FleetSync, FleetSyncConfig};
 use super::http::{self, HttpHandler, HttpServer, Request, ResponseBuf, TransportStats};
-use super::metrics::{FleetGauges, Metrics};
-use super::store::{AppsCache, KeyRef, PolicyKind, ShardedStore};
+use super::metrics::{FleetGauges, Metrics, TraceGauges};
+use super::store::{AppsCache, KeyRef, PolicyKind, ShardedStore, Tuner};
 use crate::apps::AppKind;
 use crate::device::PowerMode;
+use crate::obs::{self, EventKind, Recorder, TraceWriter};
 use crate::telemetry::ResourceTracker;
 use crate::util::json::{JsonSlice, JsonWriter};
 use anyhow::{anyhow, Context, Result};
@@ -76,6 +79,10 @@ pub struct ServeConfig {
     /// Half-life for time-decaying fleet evidence (merge-side and on the
     /// installed prior).
     pub fleet_half_life: Duration,
+    /// Stream the flight-recorder ring to this binary trace file
+    /// (`LASPTRC1` format, decodable by `lasp trace dump`); `None` keeps
+    /// tracing in-memory only (`GET /v1/trace`).
+    pub trace_file: Option<PathBuf>,
 }
 
 impl Default for ServeConfig {
@@ -94,6 +101,7 @@ impl Default for ServeConfig {
             sync_every: Duration::from_secs(10),
             fleet_retain: 0.3,
             fleet_half_life: Duration::from_secs(600),
+            trace_file: None,
         }
     }
 }
@@ -230,6 +238,25 @@ pub struct TuningService {
     /// session-store scan takes every shard's read lock, so a large
     /// follower fleet pulling must not re-run it per request.
     local_agg: Mutex<Option<(Instant, Arc<Vec<FleetSnapshot>>)>>,
+    /// The flight recorder every layer logs into (see [`crate::obs`]).
+    recorder: Arc<Recorder>,
+}
+
+/// Flight-recorder route code for a request (see [`obs::route`]).
+fn route_code(method: &str, path: &str) -> u64 {
+    match (method, path) {
+        ("POST", "/v1/suggest") => obs::route::SUGGEST,
+        ("POST", "/v1/report") => obs::route::REPORT,
+        ("GET", "/v1/best") => obs::route::BEST,
+        ("POST", "/v1/checkpoint") => obs::route::CHECKPOINT,
+        ("POST", "/v1/sync/push") => obs::route::SYNC_PUSH,
+        ("POST", "/v1/sync/pull") => obs::route::SYNC_PULL,
+        ("GET", "/v1/trace") => obs::route::TRACE,
+        ("GET", "/v1/debug/session") => obs::route::DEBUG_SESSION,
+        ("GET", "/healthz") => obs::route::HEALTHZ,
+        ("GET", "/metrics") => obs::route::METRICS,
+        _ => obs::route::OTHER,
+    }
 }
 
 /// Minimum interval between full prior-refresh merges in the push
@@ -241,6 +268,9 @@ impl TuningService {
     /// Route one request, serializing into the worker's reusable buffer.
     pub fn handle(&self, req: &Request<'_>, out: &mut ResponseBuf) {
         self.metrics.http_requests.fetch_add(1, Ordering::Relaxed);
+        let t0 = Instant::now();
+        let route = route_code(req.method, req.path);
+        self.recorder.record(EventKind::ReqStart, route, 0, 0);
         match (req.method, req.path) {
             ("POST", "/v1/suggest") => self.suggest(req, out),
             ("POST", "/v1/report") => self.report(req, out),
@@ -248,6 +278,8 @@ impl TuningService {
             ("POST", "/v1/checkpoint") => self.checkpoint_now(out),
             ("POST", "/v1/sync/push") => self.sync_push(req, out),
             ("POST", "/v1/sync/pull") => self.sync_pull(req, out),
+            ("GET", "/v1/trace") => self.trace(req, out),
+            ("GET", "/v1/debug/session") => self.debug_session(req, out),
             ("GET", "/healthz") => self.healthz(out),
             ("GET", "/metrics") => self.metrics_page(out),
             ("POST" | "GET", _) => out.error(404, "no such endpoint"),
@@ -256,6 +288,12 @@ impl TuningService {
         if out.status() >= 400 {
             self.metrics.http_errors.fetch_add(1, Ordering::Relaxed);
         }
+        self.recorder.record(
+            EventKind::ReqEnd,
+            route,
+            out.status() as u64,
+            t0.elapsed().as_micros() as u64,
+        );
     }
 
     /// Read the session identity (+ weights) from a parameter source.
@@ -302,7 +340,7 @@ impl TuningService {
         let id = self.store.intern(&kref, hash);
         let k = self.apps.arms(pk.app);
         let shard_i = self.store.shard_of_hash(hash);
-        let (arm, total_pulls, created) = {
+        let (choice, total_pulls, created, warm) = {
             let mut shard = self.store.write_shard(shard_i);
             let (session, created) =
                 match self.store.get_or_create(&mut shard, id, pk.alpha, pk.beta, k) {
@@ -310,12 +348,30 @@ impl TuningService {
                     Err(e) => return out.error(500, &e),
                 };
             session.suggests += 1;
-            let arm = session.tuner.select();
-            (arm, session.tuner.total_pulls(), created)
+            // Warm-started sessions are born with prior pulls.
+            let warm = created && session.tuner.total_pulls() > 0.0;
+            let choice = session.tuner.select_traced();
+            (choice, session.tuner.total_pulls(), created, warm)
         };
+        let arm = choice.arm;
         if created {
             self.metrics.sessions_created.fetch_add(1, Ordering::Relaxed);
+            self.recorder.record(
+                EventKind::SessionCreate,
+                id.0 as u64,
+                k as u64,
+                warm as u64 | (pk.policy.code() as u64) << 8,
+            );
         }
+        let (a, b, c) = obs::pack_suggest(
+            id.0,
+            arm as u32,
+            choice.gap,
+            choice.explore,
+            pk.policy.code(),
+            total_pulls as u64,
+        );
+        self.recorder.record(EventKind::Suggest, a, b, c);
         self.metrics.suggests.fetch_add(1, Ordering::Relaxed);
         self.apps.describe_into(pk.app, arm, &mut out.scratch);
         let mut w = JsonWriter::new(&mut out.body);
@@ -422,10 +478,19 @@ impl TuningService {
         let Some(dir) = &self.cfg.checkpoint_dir else {
             return out.error(400, "no checkpoint_dir configured");
         };
+        let t0 = Instant::now();
         match checkpoint::snapshot(&self.store, dir) {
             Ok(n) => {
+                let took = t0.elapsed();
                 self.metrics.checkpoints.fetch_add(1, Ordering::Relaxed);
                 self.metrics.checkpoint_sessions.fetch_add(n as u64, Ordering::Relaxed);
+                self.metrics.checkpoint_latency.observe(took);
+                self.recorder.record(
+                    EventKind::Checkpoint,
+                    n as u64,
+                    took.as_micros() as u64,
+                    0,
+                );
                 let mut w = JsonWriter::new(&mut out.body);
                 w.begin_obj();
                 w.field_num("sessions", n as f64);
@@ -447,6 +512,7 @@ impl TuningService {
     /// (replace semantics — repeated pushes are idempotent), then refresh
     /// this node's own warm-start priors from everything remote.
     fn sync_push(&self, req: &Request<'_>, out: &mut ResponseBuf) {
+        let t0 = Instant::now();
         let body = match JsonSlice::parse(req.body) {
             Ok(b) => b,
             Err(e) => return out.error(400, &format!("bad JSON: {e}")),
@@ -497,11 +563,15 @@ impl TuningService {
             let merged = self.fleet.merged(None, None);
             fleet::install_priors(&merged, &self.store, &self.apps);
         }
+        let nodes = self.fleet.node_count();
+        self.recorder
+            .record(EventKind::FleetMerge, accepted as u64, nodes as u64, 0);
         let mut w = JsonWriter::new(&mut out.body);
         w.begin_obj();
         w.field_num("accepted", accepted as f64);
-        w.field_num("nodes", self.fleet.node_count() as f64);
+        w.field_num("nodes", nodes as f64);
         w.end_obj();
+        self.metrics.sync_push_latency.observe(t0.elapsed());
     }
 
     /// The node's local aggregate, recomputed at most once per
@@ -525,6 +595,7 @@ impl TuningService {
     /// `POST /v1/sync/pull`: serve the discount-merged knowledge of every
     /// other node plus this node's (lightly cached) local aggregate.
     fn sync_pull(&self, req: &Request<'_>, out: &mut ResponseBuf) {
+        let t0 = Instant::now();
         let body = match JsonSlice::parse(req.body) {
             Ok(b) => b,
             Err(e) => return out.error(400, &format!("bad JSON: {e}")),
@@ -548,6 +619,138 @@ impl TuningService {
         }
         w.end_arr();
         w.end_obj();
+        self.metrics.sync_pull_latency.observe(t0.elapsed());
+    }
+
+    /// `GET /v1/trace?since=<seq>&limit=<n>`: drain flight-recorder
+    /// events with `seq >= since` as decoded JSON. Cold path — may
+    /// allocate. `next_since` is the cursor to resume from; a jump in
+    /// `seq` between drains marks ring overwrites (`overwritten` counts
+    /// them globally).
+    fn trace(&self, req: &Request<'_>, out: &mut ResponseBuf) {
+        let p = Params::Query(req.query);
+        let since = match p.get_f64("since") {
+            Ok(v) => v.unwrap_or(0.0) as u64,
+            Err(e) => return out.error(400, &e),
+        };
+        let limit = match p.get_f64("limit") {
+            Ok(Some(v)) if v >= 1.0 => (v as usize).min(65_536),
+            Ok(Some(_)) => return out.error(400, "limit must be >= 1"),
+            Ok(None) => 4096,
+            Err(e) => return out.error(400, &e),
+        };
+        let mut events = Vec::new();
+        self.recorder.drain_since(since, &mut events);
+        let truncated = events.len() > limit;
+        events.truncate(limit);
+        let next_since = events.last().map_or(since, |e| e.seq + 1);
+        let mut w = JsonWriter::new(&mut out.body);
+        w.begin_obj();
+        w.field_num("next_since", next_since as f64);
+        w.field_num("recorded", self.recorder.recorded() as f64);
+        w.field_num("overwritten", self.recorder.overwritten() as f64);
+        w.field_bool("truncated", truncated);
+        w.key("events");
+        w.begin_arr();
+        for e in &events {
+            obs::write_event_json(e, &mut w);
+        }
+        w.end_arr();
+        w.end_obj();
+    }
+
+    /// `GET /v1/debug/session?...`: full per-session arm statistics for
+    /// one session (same query key as `/v1/best`). Read-only; emits
+    /// every pulled arm (capped by `limit`, default 512, index order)
+    /// with pull counts and mean measurements, plus a regret-vs-best
+    /// proxy: Σ pulls·(weighted cost − best weighted cost) over pulled
+    /// arms, using the session's α/β objective weights.
+    fn debug_session(&self, req: &Request<'_>, out: &mut ResponseBuf) {
+        let p = Params::Query(req.query);
+        let pk = match self.parse_key(&p) {
+            Ok(x) => x,
+            Err(e) => return out.error(400, &e),
+        };
+        let limit = match p.get_f64("limit") {
+            Ok(v) => v.map_or(512, |x| x as usize).max(1),
+            Err(e) => return out.error(400, &e),
+        };
+        let kref = pk.key_ref();
+        let hash = kref.hash64();
+        let Some(id) = self.store.lookup(&kref, hash) else {
+            return out.error(404, "unknown session");
+        };
+        let shard_i = self.store.shard_of_hash(hash);
+        let shard = self.store.read_shard(shard_i);
+        let Some(session) = shard.sessions.get(&id.0) else {
+            return out.error(404, "unknown session");
+        };
+        let tuner = &session.tuner;
+        let counts = tuner.counts();
+        let cost = |t: f64, p: f64| session.alpha * t + session.beta * p;
+        // Current-best weighted cost among pulled arms — the proxy's
+        // reference point (the tuner's live belief, not ground truth).
+        let mut best_cost = f64::INFINITY;
+        for (arm, &n) in counts.iter().enumerate() {
+            if n > 0.0 {
+                if let Some((mt, mp)) = tuner.mean_of(arm) {
+                    best_cost = best_cost.min(cost(mt, mp));
+                }
+            }
+        }
+        let mut w = JsonWriter::new(&mut out.body);
+        w.begin_obj();
+        w.field_num("session", id.0 as f64);
+        w.field_str("policy", tuner.name());
+        w.field_num("policy_code", pk.policy.code() as f64);
+        w.field_num("k", tuner.k() as f64);
+        w.field_num("total_pulls", tuner.total_pulls());
+        w.field_num("suggests", session.suggests as f64);
+        w.field_num("reports", session.reports as f64);
+        w.field_num("alpha", session.alpha);
+        w.field_num("beta", session.beta);
+        let best = tuner.most_selected();
+        w.field_num("best_arm", best as f64);
+        if let Some((mt, mp)) = tuner.mean_of(best) {
+            w.field_num("best_mean_time_s", mt);
+            w.field_num("best_mean_power_w", mp);
+        }
+        // Policy internals worth surfacing beyond the shared core.
+        if let Tuner::Subset(t) = tuner {
+            w.field_num("candidates", t.candidates().len() as f64);
+        }
+        let mut regret = 0.0;
+        let mut emitted = 0usize;
+        let mut pulled = 0usize;
+        w.key("arms");
+        w.begin_arr();
+        for (arm, &n) in counts.iter().enumerate() {
+            if n <= 0.0 {
+                continue;
+            }
+            pulled += 1;
+            let Some((mt, mp)) = tuner.mean_of(arm) else {
+                continue;
+            };
+            if best_cost.is_finite() {
+                regret += n * (cost(mt, mp) - best_cost);
+            }
+            if emitted < limit {
+                emitted += 1;
+                w.begin_obj();
+                w.field_num("arm", arm as f64);
+                w.field_num("pulls", n);
+                w.field_num("mean_time_s", mt);
+                w.field_num("mean_power_w", mp);
+                w.end_obj();
+            }
+        }
+        w.end_arr();
+        w.field_num("arms_pulled", pulled as f64);
+        w.field_bool("arms_truncated", pulled > emitted);
+        w.field_num("regret_vs_best_proxy", regret);
+        w.end_obj();
+        drop(shard);
     }
 
     fn healthz(&self, out: &mut ResponseBuf) {
@@ -574,12 +777,17 @@ impl TuningService {
             prior_keys: self.store.fleet_prior_keys(),
             warm_starts: self.store.fleet_warm_starts(),
         };
+        let trace = TraceGauges {
+            recorded: self.recorder.recorded(),
+            overwritten: self.recorder.overwritten(),
+        };
         let body = self.metrics.render(
             self.store.session_count(),
             self.store.num_shards(),
             &self.transport,
             &resources,
             fleet,
+            trace,
         );
         out.text(200, &body);
     }
@@ -595,6 +803,7 @@ pub struct ServerHandle {
     stop_checkpointer: Arc<AtomicBool>,
     checkpointer: Option<JoinHandle<()>>,
     fleet_sync: Option<FleetSync>,
+    trace_writer: Option<TraceWriter>,
     restored: usize,
 }
 
@@ -628,6 +837,12 @@ impl ServerHandle {
         self.service.store.scratch_growth_total()
     }
 
+    /// The server's flight recorder (tests and embedding tools drain it
+    /// directly; HTTP clients use `GET /v1/trace`).
+    pub fn recorder(&self) -> Arc<Recorder> {
+        self.service.recorder.clone()
+    }
+
     /// Orderly shutdown: stop fleet sync and HTTP, drain report queues,
     /// final snapshot.
     pub fn shutdown(mut self) -> Result<()> {
@@ -639,6 +854,10 @@ impl ServerHandle {
         self.stop_checkpointer.store(true, Ordering::SeqCst);
         if let Some(h) = self.checkpointer {
             let _ = h.join();
+        }
+        // Final ring drain + flush to the binary trace file.
+        if let Some(mut tw) = self.trace_writer.take() {
+            tw.stop();
         }
         if let Some(dir) = &self.service.cfg.checkpoint_dir {
             checkpoint::snapshot(&self.service.store, dir)
@@ -682,10 +901,16 @@ pub fn start(cfg: ServeConfig) -> Result<ServerHandle> {
         .clone()
         .unwrap_or_else(|| format!("node-{bound}"));
 
+    let recorder = Arc::new(Recorder::for_workers(cfg.workers));
+    let trace_writer = match &cfg.trace_file {
+        Some(path) => Some(TraceWriter::start(recorder.clone(), path.clone())?),
+        None => None,
+    };
     let ingest = BatchIngest::start(
         store.clone(),
         apps.clone(),
         metrics.clone(),
+        recorder.clone(),
         cfg.queue_cap,
         cfg.max_batch,
     );
@@ -701,6 +926,7 @@ pub fn start(cfg: ServeConfig) -> Result<ServerHandle> {
         node_id: node_id.clone(),
         prior_refresh: Mutex::new(None),
         local_agg: Mutex::new(None),
+        recorder: recorder.clone(),
     });
 
     let handler: HttpHandler = {
@@ -723,6 +949,7 @@ pub fn start(cfg: ServeConfig) -> Result<ServerHandle> {
             store.clone(),
             apps.clone(),
             metrics.clone(),
+            recorder.clone(),
         )
     });
 
@@ -731,6 +958,7 @@ pub fn start(cfg: ServeConfig) -> Result<ServerHandle> {
     let checkpointer = cfg.checkpoint_dir.clone().map(|dir| {
         let store = store.clone();
         let metrics = metrics.clone();
+        let recorder = recorder.clone();
         let stop = stop_checkpointer.clone();
         let every = cfg.checkpoint_every;
         std::thread::spawn(move || {
@@ -741,9 +969,18 @@ pub fn start(cfg: ServeConfig) -> Result<ServerHandle> {
                     return;
                 }
                 if last.elapsed() >= every {
+                    let t0 = Instant::now();
                     if let Ok(n) = checkpoint::snapshot(&store, &dir) {
+                        let took = t0.elapsed();
                         metrics.checkpoints.fetch_add(1, Ordering::Relaxed);
                         metrics.checkpoint_sessions.fetch_add(n as u64, Ordering::Relaxed);
+                        metrics.checkpoint_latency.observe(took);
+                        recorder.record(
+                            EventKind::Checkpoint,
+                            n as u64,
+                            took.as_micros() as u64,
+                            0,
+                        );
                     }
                     last = Instant::now();
                 }
@@ -758,6 +995,7 @@ pub fn start(cfg: ServeConfig) -> Result<ServerHandle> {
         stop_checkpointer,
         checkpointer,
         fleet_sync,
+        trace_writer,
         restored,
     })
 }

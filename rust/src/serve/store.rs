@@ -75,6 +75,19 @@ impl PolicyKind {
         }
     }
 
+    /// Compact wire code used by the flight-recorder event payloads
+    /// (see [`crate::obs`]); stable across releases so recorded traces
+    /// stay decodable.
+    pub fn code(&self) -> u8 {
+        match self {
+            PolicyKind::Ucb => 0,
+            PolicyKind::SwUcb => 1,
+            PolicyKind::Thompson => 2,
+            PolicyKind::Epsilon => 3,
+            PolicyKind::Subset => 4,
+        }
+    }
+
     /// Default policy for a `k`-arm space: plain UCB, or subset-UCB when
     /// the init sweep alone would exceed any plausible session budget.
     pub fn default_for(k: usize) -> PolicyKind {
@@ -347,6 +360,12 @@ impl Tuner {
     /// Choose the next arm to evaluate.
     pub fn select(&mut self) -> usize {
         self.policy_mut().select()
+    }
+
+    /// [`Tuner::select`] plus the flight-recorder telemetry (top-2 score
+    /// gap, explore-vs-exploit flag). Same arm, same RNG draws.
+    pub fn select_traced(&mut self) -> crate::bandit::Choice {
+        self.policy_mut().select_traced()
     }
 
     /// Apply one measured report. Unlike [`Policy::update`], malformed arms

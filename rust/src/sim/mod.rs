@@ -14,7 +14,10 @@
 //!   (`lasp simulate`);
 //! * [`runner`] — the fixed-pool [`SweepRunner`] fanning cells out with
 //!   deterministic, thread-count-independent result ordering, plus JSON
-//!   emission.
+//!   emission;
+//! * [`replay`] — the `replay` strategy: a recorded flight-recorder
+//!   capture (`lasp loadgen --record`, `lasp serve --trace-file`) fed
+//!   back through the episode engine as the decision-and-reward stream.
 //!
 //! Every figure driver, `tuning::TuningSession`, the coordinator worker
 //! and the `lasp simulate` CLI are thin layers over this module; see
@@ -22,11 +25,13 @@
 //! contract and the scenario-file schema.
 
 pub mod episode;
+pub mod replay;
 pub mod runner;
 pub mod scenario;
 pub mod strategy;
 
 pub use episode::{Episode, EpisodeOutcome, EpisodeSpec, Event, EventAction, StepRecord};
+pub use replay::ReplayStep;
 pub use runner::{oracle_sweep_parallel, run_scenario, SweepResult, SweepRunner};
 pub use scenario::{parse_events, Scenario, ScenarioGrid, DEFAULT_FIDELITY};
 pub use strategy::{lasp_policy, Built, PolicyStep, StrategySpec};

@@ -1,0 +1,268 @@
+//! Trace replay: feed a recorded flight-recorder capture back through the
+//! episode engine as the decision-and-reward stream.
+//!
+//! `lasp loadgen --record run.lasptrc` (or `lasp serve --trace-file`)
+//! captures `Measure` events — `(app, mode, arm, time_s, power_w)` per
+//! evaluation. A [`ReplayStep`] filters that capture down to one scenario
+//! cell's `(app, mode)` and replays it through the same
+//! [`SearchStep`](crate::baselines::SearchStep) interface every live
+//! strategy uses: `next()` yields the recorded arm sequence in capture
+//! order, `observe()` substitutes the *recorded* measurement for the sim
+//! device's synthesized one, so the step's statistics reproduce what the
+//! capture actually saw. Replay is pure data — no RNG — so a recorded run
+//! replays bit-identically at any sweep thread count
+//! (`rust/tests/trace_replay.rs`).
+//!
+//! Trace files are memoized process-wide by path: a grid fanning one
+//! capture across many cells parses the file once.
+
+use crate::apps::AppKind;
+use crate::baselines::{Decision, SearchStep};
+use crate::device::{Measurement, PowerMode};
+use crate::obs::{self, TraceEvent};
+use anyhow::{anyhow, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// One recorded evaluation: the arm pulled and what the live run measured.
+#[derive(Debug, Clone, Copy)]
+struct Recorded {
+    arm: usize,
+    m: Measurement,
+}
+
+/// Process-wide memo of parsed trace files. The parse is a pure function
+/// of the file contents, so caching cannot perturb determinism; concurrent
+/// first loads are benign duplicated work resolving to the same value.
+fn load_trace(path: &str) -> Result<Arc<Vec<TraceEvent>>> {
+    static CACHE: OnceLock<Mutex<BTreeMap<String, Arc<Vec<TraceEvent>>>>> = OnceLock::new();
+    let cache = CACHE.get_or_init(|| Mutex::new(BTreeMap::new()));
+    if let Some(events) = cache.lock().expect("trace cache poisoned").get(path) {
+        return Ok(events.clone());
+    }
+    let events = Arc::new(obs::read_trace_file(Path::new(path))?);
+    Ok(cache
+        .lock()
+        .expect("trace cache poisoned")
+        .entry(path.to_string())
+        .or_insert(events)
+        .clone())
+}
+
+/// A [`SearchStep`] that replays one `(app, mode)` slice of a recorded
+/// trace: decisions come from the capture, and the capture's measurements
+/// stand in for the sim device's as the observed reward stream.
+pub struct ReplayStep {
+    schedule: Vec<Recorded>,
+    cursor: usize,
+    /// The decision handed out by `next()`, consumed by the matching
+    /// `observe()`.
+    pending: Option<Recorded>,
+    counts: Vec<f64>,
+    time_sums: Vec<f64>,
+    power_sums: Vec<f64>,
+    alpha: f64,
+    beta: f64,
+}
+
+impl ReplayStep {
+    /// Load `path` and keep the `Measure` events matching `(app, mode)`,
+    /// in capture order. Errors on an unreadable file, an empty slice
+    /// (wrong cell for this capture), or an arm outside the app's space
+    /// (a capture from a different parameter-space build).
+    pub fn from_file(
+        path: &str,
+        app: AppKind,
+        mode: PowerMode,
+        k: usize,
+        alpha: f64,
+        beta: f64,
+    ) -> Result<ReplayStep> {
+        let events = load_trace(path)?;
+        let mut schedule = Vec::new();
+        for ev in events.iter() {
+            let Some((a, m, arm, time_s, power_w)) = obs::decode_measure(ev) else {
+                continue;
+            };
+            if a != app || m != mode {
+                continue;
+            }
+            if arm >= k {
+                return Err(anyhow!(
+                    "trace {path}: recorded arm {arm} is outside {}'s {k}-arm space \
+                     (capture from a different build?)",
+                    app.name()
+                ));
+            }
+            schedule.push(Recorded { arm, m: Measurement { time_s, power_w } });
+        }
+        if schedule.is_empty() {
+            return Err(anyhow!(
+                "trace {path} has no measurements for {}/{} — \
+                 record with `lasp loadgen --record` covering that cell",
+                app.name(),
+                mode.lower_name()
+            ));
+        }
+        Ok(ReplayStep {
+            schedule,
+            cursor: 0,
+            pending: None,
+            counts: vec![0.0; k],
+            time_sums: vec![0.0; k],
+            power_sums: vec![0.0; k],
+            alpha,
+            beta,
+        })
+    }
+
+    /// Recorded evaluations available for this cell.
+    pub fn len(&self) -> usize {
+        self.schedule.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.schedule.is_empty()
+    }
+}
+
+impl SearchStep for ReplayStep {
+    fn next(&mut self) -> Result<Option<Decision>> {
+        let Some(&r) = self.schedule.get(self.cursor) else {
+            return Ok(None);
+        };
+        self.cursor += 1;
+        self.pending = Some(r);
+        Ok(Some(Decision::at_native(r.arm)))
+    }
+
+    fn observe(&mut self, index: usize, _fidelity: f64, live: Measurement) {
+        // The capture is the reward stream: prefer the recorded
+        // measurement over the sim device's synthesized one. The fallback
+        // only fires for out-of-band observations a manual driver injects.
+        let m = match self.pending.take() {
+            Some(r) if r.arm == index => r.m,
+            _ => live,
+        };
+        self.counts[index] += 1.0;
+        self.time_sums[index] += m.time_s;
+        self.power_sums[index] += m.power_w;
+    }
+
+    fn recommend(&self) -> usize {
+        // Same Eq. 4 convention as the bandits: most-pulled arm,
+        // ties to the lowest index.
+        let mut best = 0;
+        for (i, &c) in self.counts.iter().enumerate() {
+            if c > self.counts[best] {
+                best = i;
+            }
+        }
+        best
+    }
+
+    fn best_objective(&self) -> f64 {
+        let i = self.recommend();
+        if self.counts[i] == 0.0 {
+            return f64::INFINITY;
+        }
+        let n = self.counts[i];
+        self.alpha * self.time_sums[i] / n + self.beta * self.power_sums[i] / n
+    }
+
+    fn counts(&self) -> Option<&[f64]> {
+        Some(&self.counts)
+    }
+
+    fn name(&self) -> &'static str {
+        "replay"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::{pack_measure, EventKind};
+
+    fn measure_event(seq: u64, app: AppKind, mode: PowerMode, arm: u32, t: f64, p: f64) -> TraceEvent {
+        let (a, b, c) = pack_measure(app, mode, arm, t, p);
+        TraceEvent { seq, t_us: seq * 10, kind: EventKind::Measure.code(), a, b, c }
+    }
+
+    fn write_fixture(path: &Path) {
+        let events = vec![
+            measure_event(0, AppKind::Clomp, PowerMode::Maxn, 3, 1.5, 6.0),
+            measure_event(1, AppKind::Kripke, PowerMode::Maxn, 9, 9.0, 9.0),
+            measure_event(2, AppKind::Clomp, PowerMode::Maxn, 3, 1.7, 6.2),
+            measure_event(3, AppKind::Clomp, PowerMode::FiveW, 4, 2.5, 4.0),
+            measure_event(4, AppKind::Clomp, PowerMode::Maxn, 1, 0.9, 5.5),
+        ];
+        obs::write_trace_file(path, &events).unwrap();
+    }
+
+    #[test]
+    fn replays_only_the_matching_cell_in_capture_order() {
+        let dir = std::env::temp_dir().join("lasp-replay-cell-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("capture.lasptrc");
+        write_fixture(&path);
+        let mut step = ReplayStep::from_file(
+            path.to_str().unwrap(),
+            AppKind::Clomp,
+            PowerMode::Maxn,
+            8,
+            1.0,
+            0.0,
+        )
+        .unwrap();
+        assert_eq!(step.len(), 3);
+        let mut arms = Vec::new();
+        while let Some(d) = step.next().unwrap() {
+            // A garbage live measurement must not leak into the stats.
+            step.observe(d.index, 0.15, Measurement { time_s: 999.0, power_w: 999.0 });
+            arms.push(d.index);
+        }
+        assert_eq!(arms, vec![3, 3, 1]);
+        assert_eq!(step.recommend(), 3);
+        // Mean recorded time of arm 3: (1.5 + 1.7) / 2.
+        assert!((step.best_objective() - 1.6).abs() < 1e-12);
+        assert_eq!(step.counts().unwrap()[3], 2.0);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_empty_slices_and_foreign_arms() {
+        let dir = std::env::temp_dir().join("lasp-replay-reject-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("capture.lasptrc");
+        write_fixture(&path);
+        let p = path.to_str().unwrap();
+        // No 5W Kripke measurements in the fixture.
+        let err = ReplayStep::from_file(p, AppKind::Kripke, PowerMode::FiveW, 8, 1.0, 0.0)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("no measurements"), "{err}");
+        // Kripke arm 9 does not fit a 4-arm space.
+        let err = ReplayStep::from_file(p, AppKind::Kripke, PowerMode::Maxn, 4, 1.0, 0.0)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("outside"), "{err}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn missing_file_is_an_error() {
+        let err = ReplayStep::from_file(
+            "/nonexistent/lasp-no-such-capture.lasptrc",
+            AppKind::Clomp,
+            PowerMode::Maxn,
+            8,
+            1.0,
+            0.0,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("lasp-no-such-capture"), "{err}");
+    }
+}

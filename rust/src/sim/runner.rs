@@ -9,13 +9,15 @@
 //! 1 vs 4 vs 8 threads).
 
 use super::episode::{Episode, EpisodeOutcome, EpisodeSpec};
+use super::replay::ReplayStep;
 use super::scenario::{Scenario, ScenarioGrid};
+use super::strategy::StrategySpec;
 use crate::apps::{self, AppKind, AppModel};
 use crate::device::{DeviceSpec, JetsonNano, Measurement, PowerMode};
 use crate::tuning::{expected_rewards, oracle_sweep};
 use crate::util::json::JsonWriter;
 use crate::util::stats;
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Mutex, OnceLock};
@@ -62,6 +64,16 @@ pub fn run_scenario(cell: &Scenario) -> Result<EpisodeOutcome> {
         track_resources: false,
         regret_mu,
     };
+    // Replay is built here, not in `StrategySpec::build`: only the
+    // scenario carries the capture file it feeds from.
+    if cell.strategy == StrategySpec::Replay {
+        let path = cell.trace.as_deref().ok_or_else(|| {
+            anyhow!("strategy 'replay' requires sim.trace = \"<capture file>\"")
+        })?;
+        let mut step =
+            ReplayStep::from_file(path, cell.app, cell.mode, k, cell.alpha, cell.beta)?;
+        return Episode::new(app.as_ref(), &mut device, &mut step, &cell.events, &spec).run();
+    }
     let mut built = cell.strategy.build(k, cell.iterations, cell.alpha, cell.beta, cell.seed);
     let mut step = built.step(k, cell.iterations, cell.fidelity);
     Episode::new(app.as_ref(), &mut device, step.as_mut(), &cell.events, &spec).run()

@@ -34,6 +34,8 @@ pub struct Scenario {
     pub events: Vec<Event>,
     pub record_trace: bool,
     pub record_regret: bool,
+    /// Recorded flight-recorder capture consumed by the `replay` strategy.
+    pub trace: Option<String>,
 }
 
 impl Scenario {
@@ -52,6 +54,7 @@ impl Scenario {
             events: vec![],
             record_trace: false,
             record_regret: false,
+            trace: None,
         }
     }
 
@@ -86,6 +89,12 @@ impl Scenario {
         self
     }
 
+    /// Attach the capture file the `replay` strategy feeds back.
+    pub fn with_trace(mut self, path: &str) -> Scenario {
+        self.trace = Some(path.to_string());
+        self
+    }
+
     /// Compact cell label for reports.
     pub fn label(&self) -> String {
         format!(
@@ -116,6 +125,8 @@ pub struct ScenarioGrid {
     pub events: Vec<Event>,
     pub record_trace: bool,
     pub record_regret: bool,
+    /// Capture file shared by every `replay` cell.
+    pub trace: Option<String>,
 }
 
 impl Default for ScenarioGrid {
@@ -132,6 +143,7 @@ impl Default for ScenarioGrid {
             events: vec![],
             record_trace: false,
             record_regret: false,
+            trace: None,
         }
     }
 }
@@ -162,6 +174,7 @@ impl ScenarioGrid {
                                     events: self.events.clone(),
                                     record_trace: self.record_trace,
                                     record_regret: self.record_regret,
+                                    trace: self.trace.clone(),
                                 });
                             }
                         }
@@ -268,6 +281,12 @@ impl ScenarioGrid {
         }
         if let Some(s) = str_of("events")? {
             grid.events = parse_events(s)?;
+        }
+        if let Some(s) = str_of("trace")? {
+            grid.trace = Some(s.trim().to_string());
+        }
+        if grid.strategies.contains(&StrategySpec::Replay) && grid.trace.is_none() {
+            return Err(anyhow!("strategy 'replay' requires sim.trace = \"<capture file>\""));
         }
         if grid.is_empty() {
             return Err(anyhow!("scenario grid is empty (an axis has no values)"));
@@ -448,6 +467,19 @@ mod tests {
         assert!(ScenarioGrid::from_toml_str("[sim]\nevents = \"mode@x=5w\"\n").is_err());
         assert!(ScenarioGrid::from_toml_str("[sim]\napps = \",\"\n").is_err());
         assert!(ScenarioGrid::from_toml_str("[sim]\niterations = 0\n").is_err());
+        // Replay without a capture file is a parse-time error.
+        assert!(ScenarioGrid::from_toml_str("[sim]\nstrategies = \"replay\"\n").is_err());
+    }
+
+    #[test]
+    fn replay_grid_carries_its_trace_file() {
+        let g = ScenarioGrid::from_toml_str(
+            "[sim]\nstrategies = \"replay\"\ntrace = \"runs/capture.lasptrc\"\n",
+        )
+        .unwrap();
+        assert_eq!(g.strategies, vec![StrategySpec::Replay]);
+        assert_eq!(g.trace.as_deref(), Some("runs/capture.lasptrc"));
+        assert!(g.cells().iter().all(|c| c.trace.as_deref() == Some("runs/capture.lasptrc")));
     }
 
     #[test]
@@ -457,12 +489,14 @@ mod tests {
             .with_noise(NoiseModel::uniform(0.1))
             .with_strategy(StrategySpec::Thompson)
             .with_events(parse_events("mode@100=maxn").unwrap())
+            .with_trace("runs/capture.lasptrc")
             .recording_trace()
             .recording_regret();
         assert_eq!(s.alpha, 0.2);
         assert_eq!(s.strategy, StrategySpec::Thompson);
         assert_eq!(s.events.len(), 1);
         assert!(s.record_trace && s.record_regret);
+        assert_eq!(s.trace.as_deref(), Some("runs/capture.lasptrc"));
         assert!(s.label().contains("hypre"));
         assert!(s.label().contains("thompson"));
     }

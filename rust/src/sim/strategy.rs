@@ -103,6 +103,9 @@ pub enum StrategySpec {
     Bliss,
     /// Hyperband-style successive halving over the fidelity knob.
     Halving,
+    /// Replay a recorded flight-recorder capture (`sim.trace`) as the
+    /// decision-and-reward stream — see [`super::replay`].
+    Replay,
 }
 
 /// A constructed strategy: either a bandit policy or a search baseline.
@@ -161,11 +164,12 @@ impl StrategySpec {
             "annealing" => StrategySpec::Annealing,
             "bliss" => StrategySpec::Bliss,
             "halving" => StrategySpec::Halving,
+            "replay" => StrategySpec::Replay,
             other => {
                 return Err(anyhow!(
                     "unknown strategy '{other}' \
                      (lasp|ucb|epsilon[:rate]|thompson|swucb[:window]|subset[:size]|\
-                     random|annealing|bliss|halving)"
+                     random|annealing|bliss|halving|replay)"
                 ))
             }
         })
@@ -186,6 +190,7 @@ impl StrategySpec {
             StrategySpec::Annealing => "annealing".into(),
             StrategySpec::Bliss => "bliss".into(),
             StrategySpec::Halving => "halving".into(),
+            StrategySpec::Replay => "replay".into(),
         }
     }
 
@@ -230,6 +235,12 @@ impl StrategySpec {
             StrategySpec::Halving => {
                 Built::Search(Box::new(SuccessiveHalving::new(seed, alpha, beta)))
             }
+            // Replay needs the scenario's trace file, which only the sweep
+            // runner holds; `run_scenario` constructs a `ReplayStep`
+            // directly and never reaches this arm.
+            StrategySpec::Replay => unreachable!(
+                "replay strategies are built by run_scenario from sim.trace"
+            ),
         }
     }
 }
@@ -242,7 +253,7 @@ mod tests {
     fn parse_roundtrips_labels() {
         for s in [
             "lasp", "ucb", "thompson", "swucb", "swucb:600", "subset:64", "random", "annealing",
-            "bliss", "halving",
+            "bliss", "halving", "replay",
         ] {
             let spec = StrategySpec::parse(s).unwrap();
             assert_eq!(spec.label(), s, "label drifted for {s}");

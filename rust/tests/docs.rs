@@ -44,6 +44,8 @@ fn api_doc_covers_every_registered_route() {
         "/v1/checkpoint",
         "/v1/sync/push",
         "/v1/sync/pull",
+        "/v1/trace",
+        "/v1/debug/session",
         "/healthz",
         "/metrics",
     ] {
@@ -169,7 +171,7 @@ fn design_documents_simulation_engine() {
     // The schema block documents every grid axis and every event action.
     for key in [
         "apps", "modes", "noise", "objectives", "strategies", "seeds", "iterations",
-        "fidelity", "record_trace", "record_regret",
+        "fidelity", "record_trace", "record_regret", "trace",
     ] {
         assert!(
             DESIGN_MD.contains(&format!("{key} = ")),
@@ -191,6 +193,39 @@ fn design_documents_simulation_engine() {
         README_MD.contains("docs/scenarios/modeswitch-burst.toml"),
         "README.md must link the runnable example scenario"
     );
+}
+
+#[test]
+fn design_documents_observability() {
+    for needle in [
+        "Observability",
+        "Flight recorder",
+        "LASPTRC1",
+        "seqlock",
+        "overwritten",
+        "/v1/trace",
+        "/v1/debug/session",
+        "lasp trace",
+        "--trace-file",
+        "--record",
+        "replay",
+        "trace_overhead",
+    ] {
+        assert!(
+            DESIGN_MD.contains(needle),
+            "DESIGN.md missing '{needle}' (observability section)"
+        );
+    }
+    // The event schema table names every event kind the recorder emits.
+    for kind in [
+        "req_start", "req_end", "suggest", "report_apply", "batch_flush", "fleet_push",
+        "fleet_pull", "fleet_merge", "checkpoint", "session_create", "measure",
+    ] {
+        assert!(
+            DESIGN_MD.contains(kind),
+            "DESIGN.md event schema missing kind '{kind}'"
+        );
+    }
 }
 
 #[test]

@@ -257,6 +257,71 @@ fn steady_state_suggest_is_allocation_free_end_to_end() {
 }
 
 #[test]
+fn steady_state_suggest_stays_allocation_free_with_tracing_enabled() {
+    // The flight recorder rides the suggest hot path (ReqStart + Suggest +
+    // ReqEnd per request); the zero-allocation contract must survive it,
+    // including with the trace-file writer draining in the background.
+    let dir = std::env::temp_dir().join(format!("lasp-hotpath-trace-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let trace_path = dir.join("serve.lasptrc");
+    let handle = start(ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        workers: 2,
+        shards: 2,
+        checkpoint_dir: None,
+        checkpoint_every: Duration::from_secs(3600),
+        trace_file: Some(trace_path.clone()),
+        ..Default::default()
+    })
+    .unwrap();
+    let addr = handle.addr().to_string();
+    let stats = handle.transport_stats();
+    let mut client = HttpClient::connect(&addr).unwrap();
+    let payload = body("steady-trace", "clomp", &[]);
+
+    for _ in 0..20 {
+        assert_eq!(client.post_slice("/v1/suggest", payload.as_bytes()).unwrap(), 200);
+    }
+    let allocs_before = stats.alloc_events.load(Ordering::Relaxed);
+    let scratch_before = handle.bandit_scratch_growths();
+    let recorded_before = handle.recorder().recorded();
+    for _ in 0..300 {
+        assert_eq!(client.post_slice("/v1/suggest", payload.as_bytes()).unwrap(), 200);
+    }
+    let allocs = stats.alloc_events.load(Ordering::Relaxed) - allocs_before;
+    assert_eq!(
+        allocs, 0,
+        "HTTP+JSON layers performed {allocs} buffer growths over 300 traced suggests"
+    );
+    let scratch_growths = handle.bandit_scratch_growths() - scratch_before;
+    assert_eq!(scratch_growths, 0, "bandit scratch grew under tracing");
+    // Every request recorded at least ReqStart + Suggest + ReqEnd.
+    let recorded = handle.recorder().recorded() - recorded_before;
+    assert!(recorded >= 900, "only {recorded} events recorded over 300 suggests");
+
+    // The ring drains over HTTP…
+    let (status, resp) = client.get("/v1/trace?since=0&limit=200").unwrap();
+    assert_eq!(status, 200, "{resp:?}");
+    let events = resp.get("events").and_then(Json::as_arr).expect("events array");
+    assert!(!events.is_empty());
+    assert!(resp.get("next_since").and_then(Json::as_f64).unwrap_or(0.0) > 0.0);
+    // …and the per-session debug view exposes the arm statistics.
+    let (status, resp) = client
+        .get("/v1/debug/session?client_id=steady-trace&app=clomp&device=maxn&alpha=1.0&beta=0.0")
+        .unwrap();
+    assert_eq!(status, 200, "{resp:?}");
+    assert_eq!(resp.get("suggests").and_then(Json::as_f64), Some(320.0));
+    assert!(resp.get("arms").and_then(Json::as_arr).map_or(false, |a| !a.is_empty()));
+
+    drop(client);
+    handle.shutdown().unwrap();
+    // The background writer flushed a decodable capture on shutdown.
+    let file_events = lasp::obs::read_trace_file(&trace_path).expect("readable trace file");
+    assert!(file_events.iter().any(|e| e.kind_name() == "suggest"), "no suggest events on disk");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
 fn epsilon_policy_serves_over_http() {
     // PolicyKind::Epsilon rides the same serve surfaces as every other
     // policy (the old Policy trait silently dropped it from checkpoints;

@@ -1,0 +1,138 @@
+//! Capture → replay round trip: record a live loadgen run against the
+//! serve stack (`LoadgenConfig::record`), then feed the capture back
+//! through the sim engine's `replay` strategy and pin that the replay is
+//! bit-identical at any sweep thread count — the observability tentpole's
+//! determinism contract.
+
+use lasp::apps::AppKind;
+use lasp::device::PowerMode;
+use lasp::obs;
+use lasp::serve::{loadgen, LoadgenConfig, ServeConfig};
+use lasp::sim::{Scenario, StrategySpec, SweepResult, SweepRunner};
+use std::process::Command;
+
+fn record_capture(path: &std::path::Path, rounds: usize) {
+    let handle = lasp::serve::start(ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        workers: 4,
+        shards: 4,
+        checkpoint_dir: None,
+        ..Default::default()
+    })
+    .expect("boot serve");
+    let report = loadgen::run(&LoadgenConfig {
+        addr: handle.addr().to_string(),
+        sessions: 8,
+        rounds,
+        threads: 4,
+        apps: vec![AppKind::Clomp],
+        record: Some(path.to_path_buf()),
+        ..Default::default()
+    })
+    .expect("loadgen");
+    assert_eq!(report.errors, 0, "loadgen errors while recording");
+    handle.shutdown().expect("shutdown");
+}
+
+fn replay_cells(path: &str, rounds: usize) -> Vec<Scenario> {
+    // Loadgen alternates session modes, so the capture covers both cells.
+    [PowerMode::Maxn, PowerMode::FiveW]
+        .into_iter()
+        .map(|mode| {
+            Scenario::lasp(AppKind::Clomp, mode, rounds, 42)
+                .with_strategy(StrategySpec::Replay)
+                .with_trace(path)
+                .recording_trace()
+        })
+        .collect()
+}
+
+#[test]
+fn recorded_loadgen_run_replays_bit_identically_at_any_thread_count() {
+    let dir = std::env::temp_dir().join(format!("lasp-trace-replay-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let capture = dir.join("loadgen.lasptrc");
+    let rounds = 256;
+    record_capture(&capture, rounds);
+
+    // Every loadgen round left exactly one Measure event in the capture.
+    let events = obs::read_trace_file(&capture).expect("readable capture");
+    let measures: Vec<_> = events.iter().filter_map(obs::decode_measure).collect();
+    assert_eq!(measures.len(), rounds, "one measurement per round");
+    assert!(measures.iter().all(|&(app, _, arm, t, p)| {
+        app == AppKind::Clomp && arm < 125 && t > 0.0 && p > 0.0
+    }));
+
+    let cells = replay_cells(capture.to_str().unwrap(), rounds);
+    let jsons: Vec<String> = [1usize, 4, 1]
+        .iter()
+        .map(|&threads| {
+            let outcomes = SweepRunner::new(threads).run(&cells).expect("replay sweep");
+            SweepResult { cells: cells.clone(), outcomes }.to_json()
+        })
+        .collect();
+    assert_eq!(jsons[0], jsons[1], "replay diverged between 1 and 4 threads");
+    assert_eq!(jsons[0], jsons[2], "replay is not re-runnable");
+
+    // The replayed arm sequence is exactly the capture's, per cell.
+    let outcomes = SweepRunner::new(2).run(&cells).expect("replay sweep");
+    for (cell, outcome) in cells.iter().zip(&outcomes) {
+        let expected: Vec<usize> = measures
+            .iter()
+            .filter(|&&(app, mode, _, _, _)| app == cell.app && mode == cell.mode)
+            .map(|&(_, _, arm, _, _)| arm)
+            .collect();
+        assert!(!expected.is_empty(), "capture has no events for {}", cell.label());
+        assert_eq!(outcome.evaluations, expected.len());
+        assert_eq!(outcome.trace.as_deref(), Some(expected.as_slice()));
+    }
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn trace_cli_decodes_a_capture() {
+    let dir = std::env::temp_dir().join(format!("lasp-trace-cli-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let capture = dir.join("cli.lasptrc");
+    record_capture(&capture, 64);
+
+    let out = Command::new(env!("CARGO_BIN_EXE_lasp"))
+        .args(["trace", "stats", "--file", capture.to_str().unwrap()])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("events: 64"), "{text}");
+    assert!(text.contains("measure"), "{text}");
+
+    let out = Command::new(env!("CARGO_BIN_EXE_lasp"))
+        .args(["trace", "dump", "--file", capture.to_str().unwrap(), "--format", "csv"])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.starts_with("seq,t_us,kind,a,b,c"), "{text}");
+    assert_eq!(text.lines().count(), 65, "header + one row per event");
+
+    let out = Command::new(env!("CARGO_BIN_EXE_lasp"))
+        .args(["trace", "dump", "--file", capture.to_str().unwrap()])
+        .output()
+        .unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("\"kind\":\"measure\""), "{text}");
+    // Semantic decode: app/mode names, not packed words.
+    assert!(text.contains("\"app\":\"clomp\""), "{text}");
+
+    // A non-trace file is rejected up front.
+    let bogus = dir.join("not-a-trace.bin");
+    std::fs::write(&bogus, b"hello world, definitely not LASPTRC1").unwrap();
+    let out = Command::new(env!("CARGO_BIN_EXE_lasp"))
+        .args(["trace", "stats", "--file", bogus.to_str().unwrap()])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+
+    std::fs::remove_dir_all(&dir).ok();
+}
