@@ -1,0 +1,142 @@
+//! Chaos-layer overhead bench: the fault-injection layer must be free
+//! when it is not firing. Boots the serve stack three ways — chaos
+//! disabled, chaos enabled but idle (every probability 0.0, so only the
+//! per-point `roll()` short-circuit runs), and chaos actively injecting —
+//! and compares suggest-path latency percentiles across the first two.
+//!
+//! Emits `BENCH_chaos.json` (path override: `LASP_BENCH_OUT`);
+//! `LASP_BENCH_QUICK=1` runs a short smoke variant for CI. Shape-fails if
+//! the idle layer visibly taxes the hot path.
+
+#[path = "common.rs"]
+mod common;
+
+use lasp::chaos::ChaosConfig;
+use lasp::serve::{start, HttpClient, ServeConfig, ServerHandle};
+use lasp::util::json::Json;
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+fn boot(chaos: Option<ChaosConfig>) -> ServerHandle {
+    start(ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        workers: 2,
+        shards: 2,
+        checkpoint_dir: None,
+        chaos,
+        ..ServeConfig::default()
+    })
+    .expect("boot serve")
+}
+
+fn suggest_body() -> Json {
+    let mut obj = BTreeMap::new();
+    obj.insert("client_id".to_string(), Json::Str("bench".to_string()));
+    obj.insert("app".to_string(), Json::Str("clomp".to_string()));
+    obj.insert("device".to_string(), Json::Str("maxn".to_string()));
+    obj.insert("alpha".to_string(), Json::Num(1.0));
+    obj.insert("beta".to_string(), Json::Num(0.0));
+    Json::Obj(obj)
+}
+
+/// Drive `n` sequential suggests, returning (p50_us, p99_us).
+fn measure(handle: &ServerHandle, n: usize) -> (f64, f64) {
+    let addr = handle.addr().to_string();
+    let mut client = HttpClient::connect(&addr).expect("connect");
+    let body = suggest_body();
+    // Warmup: fault the session + connection in.
+    for _ in 0..100 {
+        let (status, _) = client.post("/v1/suggest", &body).expect("suggest");
+        assert_eq!(status, 200);
+    }
+    let mut samples = Vec::with_capacity(n);
+    for _ in 0..n {
+        let t0 = Instant::now();
+        let (status, _) = client.post("/v1/suggest", &body).expect("suggest");
+        assert_eq!(status, 200);
+        samples.push(t0.elapsed().as_secs_f64() * 1e6);
+    }
+    samples.sort_by(|a, b| a.total_cmp(b));
+    (samples[n / 2], samples[(n * 99 / 100).min(n - 1)])
+}
+
+fn main() {
+    let quick = std::env::var("LASP_BENCH_QUICK").map(|v| v == "1").unwrap_or(false);
+    let n = if quick { 2_000 } else { 20_000 };
+
+    let disabled = boot(None);
+    let (dis_p50, dis_p99) = measure(&disabled, n);
+    disabled.shutdown().expect("shutdown");
+    println!("chaos disabled:     p50 {dis_p50:.1} µs, p99 {dis_p99:.1} µs over {n} suggests");
+
+    // Enabled but idle: the layer is armed, every probability is 0.0, so
+    // each fault point costs exactly one short-circuited branch.
+    let idle = boot(Some(ChaosConfig::default()));
+    let (idle_p50, idle_p99) = measure(&idle, n);
+    let idle_injections = {
+        let addr = idle.addr().to_string();
+        let mut probe = HttpClient::connect(&addr).expect("connect");
+        let (status, page) = probe.get("/metrics").expect("metrics");
+        assert_eq!(status, 200);
+        page.as_str()
+            .unwrap_or_default()
+            .lines()
+            .find_map(|l| {
+                l.strip_prefix("lasp_serve_chaos_injections_total")
+                    .and_then(|rest| rest.trim().parse::<u64>().ok())
+            })
+            .unwrap_or(u64::MAX)
+    };
+    idle.shutdown().expect("shutdown");
+    println!("chaos enabled-idle: p50 {idle_p50:.1} µs, p99 {idle_p99:.1} µs over {n} suggests");
+
+    // Actively injecting (delay-free faults only): not gated, printed so
+    // regressions in the *firing* path are visible in CI logs too.
+    let firing = boot(Some(ChaosConfig { handler_error: 0.2, ..ChaosConfig::default() }));
+    let addr = firing.addr().to_string();
+    let mut client = HttpClient::connect(&addr).expect("connect");
+    let body = suggest_body();
+    let t0 = Instant::now();
+    let (mut ok, mut injected) = (0u64, 0u64);
+    for _ in 0..n {
+        match client.post("/v1/suggest", &body).expect("suggest") {
+            (200, _) => ok += 1,
+            (503, _) => injected += 1,
+            (status, resp) => panic!("unexpected status {status}: {resp:?}"),
+        }
+    }
+    let firing_wall = t0.elapsed().as_secs_f64();
+    firing.shutdown().expect("shutdown");
+    println!(
+        "chaos firing (p=0.2): {ok} ok / {injected} injected, {:.0} req/s",
+        n as f64 / firing_wall.max(1e-12)
+    );
+
+    let p50_ratio = idle_p50 / dis_p50.max(1e-9);
+    let p99_ratio = idle_p99 / dis_p99.max(1e-9);
+    println!("idle/disabled ratio: p50 {p50_ratio:.2}x, p99 {p99_ratio:.2}x");
+
+    let mut out = BTreeMap::new();
+    out.insert("bench".to_string(), Json::Str("chaos".to_string()));
+    out.insert("mode".to_string(), Json::Str(if quick { "quick" } else { "full" }.to_string()));
+    out.insert("requests".to_string(), Json::Num(n as f64));
+    out.insert("disabled_p50_us".to_string(), Json::Num(dis_p50));
+    out.insert("disabled_p99_us".to_string(), Json::Num(dis_p99));
+    out.insert("idle_p50_us".to_string(), Json::Num(idle_p50));
+    out.insert("idle_p99_us".to_string(), Json::Num(idle_p99));
+    out.insert("idle_p50_ratio".to_string(), Json::Num(p50_ratio));
+    out.insert("idle_p99_ratio".to_string(), Json::Num(p99_ratio));
+    out.insert("idle_injections".to_string(), Json::Num(idle_injections as f64));
+    out.insert("firing_injected".to_string(), Json::Num(injected as f64));
+    let path = std::env::var("LASP_BENCH_OUT").unwrap_or_else(|_| "BENCH_chaos.json".to_string());
+    std::fs::write(&path, Json::Obj(out).to_string() + "\n").expect("writing bench json");
+    println!("\nwrote {path}");
+
+    // Loose gate — shared-runner latency percentiles are noisy; the claim
+    // is "free when off", not "identical to the nanosecond". An idle
+    // layer tripling median suggest latency would be a real regression.
+    common::report_shape(
+        "chaos_overhead",
+        p50_ratio < 3.0 && idle_injections == 0 && injected > 0 && ok + injected == n as u64,
+    );
+}

@@ -1,0 +1,456 @@
+//! Deterministic, seed-driven fault injection (the "chaos engine").
+//!
+//! Two injection surfaces share this module:
+//!
+//! * **Serve side** — [`ChaosLayer`], constructed from a `[chaos]` config
+//!   section (`lasp serve --chaos <file.toml>`), draws faults from one
+//!   seeded PRNG at well-defined points of the data plane: connection
+//!   accept, request handler, batch flush, fleet push/pull, checkpoint
+//!   write. Every injection is counted and logged through the flight
+//!   recorder as a [`EventKind::Chaos`] event, so a chaotic run leaves a
+//!   complete, replayable record of *what* was broken *when*.
+//! * **Sim side** — [`sim::DeliveryChaos`], the episode-level delivery
+//!   fault model (churn storms, Zipf-skewed duplication, delayed and
+//!   reordered reports, node kill/rejoin) driven by the scenario event
+//!   DSL (`churn@i=p`, `dup@i=p`, `zipf@i=s`, `delay@i=w`, `kill@i=j`).
+//!
+//! Determinism contract: every fault is a pure function of the configured
+//! seed and the draw sequence — two runs with the same seed and the same
+//! traffic order inject identically. The layer is `Option` everywhere it
+//! is consulted: a server without `--chaos` carries `None` and pays zero
+//! overhead (the `serve_hotpath` zero-alloc assertions and
+//! `benches/chaos.rs` pin this), and an enabled-but-idle layer (all
+//! probabilities 0.0) short-circuits before touching its RNG lock.
+//!
+//! The failure-model semantics the injections exercise — the idempotency
+//! window, fleet backoff states, checkpoint retry — are documented in
+//! DESIGN.md §Failure model.
+
+pub mod sim;
+
+use crate::config::parse_toml;
+use crate::obs::{EventKind, Recorder};
+use crate::util::Rng;
+use anyhow::{anyhow, Context, Result};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Where a serve-side fault can be injected. Codes are stable: they ride
+/// in the `a` word of [`EventKind::Chaos`] trace events and in capture
+/// files, so renumbering would corrupt recorded histories.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultPoint {
+    /// A just-accepted connection is closed before any byte is served.
+    Accept = 0,
+    /// The request handler answers 503 (or stalls) before routing.
+    Handler = 1,
+    /// A report in a batch flush is delivered twice (duplicate delivery).
+    BatchFlush = 2,
+    /// A fleet push/pull cycle fails before reaching the leader.
+    FleetSync = 3,
+    /// A checkpoint file write fails (simulated I/O error).
+    CheckpointWrite = 4,
+}
+
+/// Number of distinct [`FaultPoint`]s (sizes the per-point counters).
+pub const FAULT_POINTS: usize = 5;
+
+impl FaultPoint {
+    pub fn code(self) -> u64 {
+        self as u64
+    }
+
+    pub fn from_code(code: u64) -> Option<FaultPoint> {
+        match code {
+            0 => Some(FaultPoint::Accept),
+            1 => Some(FaultPoint::Handler),
+            2 => Some(FaultPoint::BatchFlush),
+            3 => Some(FaultPoint::FleetSync),
+            4 => Some(FaultPoint::CheckpointWrite),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultPoint::Accept => "accept",
+            FaultPoint::Handler => "handler",
+            FaultPoint::BatchFlush => "batch_flush",
+            FaultPoint::FleetSync => "fleet_sync",
+            FaultPoint::CheckpointWrite => "checkpoint_write",
+        }
+    }
+}
+
+/// Decoded name for a fault-point code from a trace event (`"unknown"`
+/// for codes this build does not know).
+pub fn fault_point_name(code: u64) -> &'static str {
+    FaultPoint::from_code(code).map_or("unknown", FaultPoint::name)
+}
+
+/// What the handler fault point injects.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum HandlerFault {
+    /// Answer 503 before routing (the request never reaches a handler).
+    Error,
+    /// Stall the worker for the configured delay before routing.
+    Delay(std::time::Duration),
+}
+
+/// The `[chaos]` config section: one seed plus a per-point probability.
+/// All probabilities default to 0.0 — a config with only a seed is an
+/// enabled-but-idle layer, useful for measuring the layer's own cost.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ChaosConfig {
+    /// PRNG seed; identical seeds inject identically over identical
+    /// traffic orders.
+    pub seed: u64,
+    /// P(close a just-accepted connection).
+    pub accept_drop: f64,
+    /// P(answer 503 before routing a request).
+    pub handler_error: f64,
+    /// P(stall a request by `handler_delay_ms` before routing).
+    pub handler_delay: f64,
+    /// Injected handler stall, milliseconds.
+    pub handler_delay_ms: u64,
+    /// P(redeliver a report during a batch flush — duplicate delivery).
+    pub flush_duplicate: f64,
+    /// P(fail a fleet sync cycle before it reaches the leader).
+    pub fleet_fail: f64,
+    /// P(fail one checkpoint file write attempt).
+    pub checkpoint_fail: f64,
+}
+
+impl Default for ChaosConfig {
+    fn default() -> Self {
+        ChaosConfig {
+            seed: 0xC0FFEE,
+            accept_drop: 0.0,
+            handler_error: 0.0,
+            handler_delay: 0.0,
+            handler_delay_ms: 5,
+            flush_duplicate: 0.0,
+            fleet_fail: 0.0,
+            checkpoint_fail: 0.0,
+        }
+    }
+}
+
+impl ChaosConfig {
+    /// Parse a `[chaos]` section from a TOML string (the config parser's
+    /// TOML subset: scalar keys only).
+    pub fn from_toml_str(text: &str) -> Result<ChaosConfig> {
+        let doc = parse_toml(text).map_err(|e| anyhow!("chaos config parse: {e}"))?;
+        let Some(section) = doc.get("chaos") else {
+            return Err(anyhow!("chaos config has no [chaos] section"));
+        };
+        Self::from_section(section)
+    }
+
+    /// Build from an already-parsed `[chaos]` table (the `LaspConfig`
+    /// loader hands its section here).
+    pub fn from_section(
+        section: &std::collections::BTreeMap<String, crate::config::TomlValue>,
+    ) -> Result<ChaosConfig> {
+        let mut cfg = ChaosConfig::default();
+        if let Some(v) = section.get("seed") {
+            let s = v.as_int().ok_or_else(|| anyhow!("chaos.seed must be an integer"))?;
+            if s < 0 {
+                return Err(anyhow!("chaos.seed must be non-negative, got {s}"));
+            }
+            cfg.seed = s as u64;
+        }
+        let mut prob = |key: &str, slot: &mut f64| -> Result<()> {
+            if let Some(v) = section.get(key) {
+                *slot = v
+                    .as_float()
+                    .ok_or_else(|| anyhow!("chaos.{key} must be a number"))?;
+            }
+            Ok(())
+        };
+        prob("accept_drop", &mut cfg.accept_drop)?;
+        prob("handler_error", &mut cfg.handler_error)?;
+        prob("handler_delay", &mut cfg.handler_delay)?;
+        prob("flush_duplicate", &mut cfg.flush_duplicate)?;
+        prob("fleet_fail", &mut cfg.fleet_fail)?;
+        prob("checkpoint_fail", &mut cfg.checkpoint_fail)?;
+        if let Some(v) = section.get("handler_delay_ms") {
+            let ms = v
+                .as_int()
+                .ok_or_else(|| anyhow!("chaos.handler_delay_ms must be an integer"))?;
+            if !(0..=10_000).contains(&ms) {
+                return Err(anyhow!("chaos.handler_delay_ms must lie in 0..=10000, got {ms}"));
+            }
+            cfg.handler_delay_ms = ms as u64;
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Load from a chaos config file (`lasp serve --chaos <file>`).
+    pub fn from_file(path: &std::path::Path) -> Result<ChaosConfig> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::from_toml_str(&text).with_context(|| format!("parsing {}", path.display()))
+    }
+
+    /// Every probability must be a valid probability.
+    pub fn validate(&self) -> Result<()> {
+        for (name, p) in [
+            ("accept_drop", self.accept_drop),
+            ("handler_error", self.handler_error),
+            ("handler_delay", self.handler_delay),
+            ("flush_duplicate", self.flush_duplicate),
+            ("fleet_fail", self.fleet_fail),
+            ("checkpoint_fail", self.checkpoint_fail),
+        ] {
+            if !p.is_finite() || !(0.0..=1.0).contains(&p) {
+                return Err(anyhow!("chaos.{name} must lie in [0, 1], got {p}"));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// The serve-side injection layer: one seeded PRNG behind a mutex (fault
+/// points are spread across threads; injections are rare by construction),
+/// per-point injection counters, and the flight recorder every injection
+/// is logged through.
+///
+/// Probability-zero points short-circuit *before* the lock, so an
+/// enabled-but-idle layer costs one branch per consultation and a fully
+/// absent layer (`Option::None` at the call sites) costs nothing.
+pub struct ChaosLayer {
+    cfg: ChaosConfig,
+    rng: Mutex<Rng>,
+    injected: [AtomicU64; FAULT_POINTS],
+    total: AtomicU64,
+    recorder: Arc<Recorder>,
+}
+
+impl ChaosLayer {
+    pub fn new(cfg: ChaosConfig, recorder: Arc<Recorder>) -> ChaosLayer {
+        let rng = Mutex::new(Rng::new(cfg.seed));
+        ChaosLayer {
+            cfg,
+            rng,
+            injected: Default::default(),
+            total: AtomicU64::new(0),
+            recorder,
+        }
+    }
+
+    pub fn config(&self) -> &ChaosConfig {
+        &self.cfg
+    }
+
+    /// Draw once against probability `p`. `p == 0` never locks the RNG —
+    /// the enabled-but-idle fast path.
+    fn roll(&self, p: f64) -> bool {
+        if p <= 0.0 {
+            return false;
+        }
+        if p >= 1.0 {
+            return true;
+        }
+        let mut rng = match self.rng.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        rng.uniform() < p
+    }
+
+    /// Count and trace one injection. `arg` is point-specific context
+    /// (shard, delay ms, attempt number) carried in the event's `c` word.
+    fn inject(&self, point: FaultPoint, arg: u64) {
+        self.injected[point as usize].fetch_add(1, Ordering::Relaxed);
+        let nth = self.total.fetch_add(1, Ordering::Relaxed) + 1;
+        self.recorder.record(EventKind::Chaos, point.code(), nth, arg);
+    }
+
+    /// Should this just-accepted connection be dropped?
+    pub fn accept_drop(&self) -> bool {
+        let hit = self.roll(self.cfg.accept_drop);
+        if hit {
+            self.inject(FaultPoint::Accept, 0);
+        }
+        hit
+    }
+
+    /// Should this request be faulted before routing, and how?
+    /// Error wins over delay when both are configured and both fire.
+    pub fn handler_fault(&self) -> Option<HandlerFault> {
+        if self.roll(self.cfg.handler_error) {
+            self.inject(FaultPoint::Handler, 0);
+            return Some(HandlerFault::Error);
+        }
+        if self.roll(self.cfg.handler_delay) {
+            self.inject(FaultPoint::Handler, self.cfg.handler_delay_ms);
+            return Some(HandlerFault::Delay(std::time::Duration::from_millis(
+                self.cfg.handler_delay_ms,
+            )));
+        }
+        None
+    }
+
+    /// Should this report be redelivered during the flush (duplicate
+    /// delivery)? `shard` travels in the trace event.
+    pub fn flush_duplicate(&self, shard: usize) -> bool {
+        let hit = self.roll(self.cfg.flush_duplicate);
+        if hit {
+            self.inject(FaultPoint::BatchFlush, shard as u64);
+        }
+        hit
+    }
+
+    /// Should this fleet sync cycle fail before reaching the leader?
+    pub fn fleet_fail(&self) -> bool {
+        let hit = self.roll(self.cfg.fleet_fail);
+        if hit {
+            self.inject(FaultPoint::FleetSync, 0);
+        }
+        hit
+    }
+
+    /// Should this checkpoint file write attempt fail? `attempt` (0-based)
+    /// travels in the trace event.
+    pub fn checkpoint_fail(&self, attempt: u64) -> bool {
+        let hit = self.roll(self.cfg.checkpoint_fail);
+        if hit {
+            self.inject(FaultPoint::CheckpointWrite, attempt);
+        }
+        hit
+    }
+
+    /// Total injections so far (exported as
+    /// `lasp_serve_chaos_injections_total`).
+    pub fn injections(&self) -> u64 {
+        self.total.load(Ordering::Relaxed)
+    }
+
+    /// Injections at one fault point.
+    pub fn injections_at(&self, point: FaultPoint) -> u64 {
+        self.injected[point as usize].load(Ordering::Relaxed)
+    }
+}
+
+impl std::fmt::Debug for ChaosLayer {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ChaosLayer")
+            .field("cfg", &self.cfg)
+            .field("injections", &self.injections())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn layer(cfg: ChaosConfig) -> ChaosLayer {
+        ChaosLayer::new(cfg, Arc::new(Recorder::new(1, 256)))
+    }
+
+    #[test]
+    fn parses_a_full_chaos_section() {
+        let cfg = ChaosConfig::from_toml_str(
+            r#"
+            [chaos]
+            seed = 99
+            accept_drop = 0.1
+            handler_error = 0.2
+            handler_delay = 0.3
+            handler_delay_ms = 7
+            flush_duplicate = 0.4
+            fleet_fail = 0.5
+            checkpoint_fail = 0.6
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.seed, 99);
+        assert_eq!(cfg.accept_drop, 0.1);
+        assert_eq!(cfg.handler_delay_ms, 7);
+        assert_eq!(cfg.checkpoint_fail, 0.6);
+        // A bare section is the enabled-but-idle default.
+        let idle = ChaosConfig::from_toml_str("[chaos]\nseed = 1\n").unwrap();
+        assert_eq!(idle.accept_drop, 0.0);
+        assert_eq!(idle.handler_delay_ms, 5);
+    }
+
+    #[test]
+    fn rejects_malformed_chaos_configs() {
+        assert!(ChaosConfig::from_toml_str("[serve]\nport = 1\n").is_err());
+        assert!(ChaosConfig::from_toml_str("[chaos]\naccept_drop = 1.5\n").is_err());
+        assert!(ChaosConfig::from_toml_str("[chaos]\naccept_drop = -0.1\n").is_err());
+        assert!(ChaosConfig::from_toml_str("[chaos]\nseed = -3\n").is_err());
+        assert!(ChaosConfig::from_toml_str("[chaos]\nhandler_delay_ms = 99999\n").is_err());
+        assert!(ChaosConfig::from_toml_str("[chaos]\nfleet_fail = \"often\"\n").is_err());
+    }
+
+    #[test]
+    fn injections_are_deterministic_per_seed() {
+        let draws = |seed: u64| -> Vec<bool> {
+            let l = layer(ChaosConfig { seed, accept_drop: 0.5, ..Default::default() });
+            (0..64).map(|_| l.accept_drop()).collect()
+        };
+        assert_eq!(draws(7), draws(7));
+        assert_ne!(draws(7), draws(8));
+    }
+
+    #[test]
+    fn zero_probability_points_never_fire_and_certain_points_always_do() {
+        let idle = layer(ChaosConfig { seed: 1, ..Default::default() });
+        for _ in 0..100 {
+            assert!(!idle.accept_drop());
+            assert!(idle.handler_fault().is_none());
+            assert!(!idle.flush_duplicate(0));
+            assert!(!idle.fleet_fail());
+            assert!(!idle.checkpoint_fail(0));
+        }
+        assert_eq!(idle.injections(), 0);
+
+        let certain = layer(ChaosConfig {
+            seed: 1,
+            accept_drop: 1.0,
+            handler_error: 1.0,
+            ..Default::default()
+        });
+        assert!(certain.accept_drop());
+        assert_eq!(certain.handler_fault(), Some(HandlerFault::Error));
+        assert_eq!(certain.injections(), 2);
+        assert_eq!(certain.injections_at(FaultPoint::Accept), 1);
+        assert_eq!(certain.injections_at(FaultPoint::Handler), 1);
+    }
+
+    #[test]
+    fn injections_are_traced_through_the_recorder() {
+        let recorder = Arc::new(Recorder::new(1, 256));
+        let l = ChaosLayer::new(
+            ChaosConfig { seed: 3, checkpoint_fail: 1.0, ..Default::default() },
+            recorder.clone(),
+        );
+        assert!(l.checkpoint_fail(2));
+        let mut events = Vec::new();
+        recorder.drain_since(0, &mut events);
+        assert_eq!(events.len(), 1);
+        assert_eq!(events[0].kind_name(), "chaos");
+        assert_eq!(events[0].a, FaultPoint::CheckpointWrite.code());
+        assert_eq!(events[0].c, 2);
+        assert_eq!(fault_point_name(events[0].a), "checkpoint_write");
+        assert_eq!(fault_point_name(999), "unknown");
+    }
+
+    #[test]
+    fn fault_point_codes_roundtrip() {
+        for p in [
+            FaultPoint::Accept,
+            FaultPoint::Handler,
+            FaultPoint::BatchFlush,
+            FaultPoint::FleetSync,
+            FaultPoint::CheckpointWrite,
+        ] {
+            assert_eq!(FaultPoint::from_code(p.code()), Some(p));
+        }
+        assert_eq!(FaultPoint::from_code(5), None);
+    }
+}

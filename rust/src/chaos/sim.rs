@@ -1,0 +1,258 @@
+//! Sim-side delivery chaos: the episode-level fault model behind the
+//! `churn@`, `dup@`, `zipf@`, `delay@` and `kill@` scenario events.
+//!
+//! The serve plane sees faults on real sockets; the sim plane models the
+//! same failure class *between* a device run and the strategy's `observe`:
+//! a measured report can be lost (session churn — the client vanished
+//! mid-evaluation), duplicated (at-least-once delivery retries, optionally
+//! with a Zipf-skewed duplicate tail modelling popularity-skewed retry
+//! storms), or delayed by a bounded window (which reorders deliveries).
+//! A `kill@i=j` outage stops the loop entirely for `[i, j)` and drops
+//! everything in flight.
+//!
+//! Determinism: all draws come from one [`Rng`] seeded from the episode
+//! spec, so a chaotic cell is as replayable as a clean one — bit-identical
+//! at any sweep thread count (`rust/tests/chaos.rs` pins this).
+
+use crate::device::Measurement;
+use crate::util::Rng;
+
+/// A report held in flight by the delay window.
+#[derive(Debug, Clone, Copy)]
+pub struct PendingReport {
+    /// Iteration at which the report arrives.
+    pub due: usize,
+    pub arm: usize,
+    pub fidelity: f64,
+    pub m: Measurement,
+}
+
+/// Bounded Zipf(s) sampler over ranks `1..=n` (P(r) ∝ r^-s), used for
+/// skewed duplicate-count draws: most reports get rank 1 (no extra
+/// copies), a heavy-tailed few get rank 2+ (duplicate bursts).
+#[derive(Debug, Clone)]
+pub struct Zipf {
+    cdf: Vec<f64>,
+}
+
+impl Zipf {
+    pub fn new(s: f64, n: usize) -> Zipf {
+        assert!(s > 0.0 && n > 0, "Zipf needs s > 0 and n > 0");
+        let mut cdf = Vec::with_capacity(n);
+        let mut acc = 0.0;
+        for r in 1..=n {
+            acc += (r as f64).powf(-s);
+            cdf.push(acc);
+        }
+        let total = acc;
+        for c in &mut cdf {
+            *c /= total;
+        }
+        Zipf { cdf }
+    }
+
+    /// Draw a rank in `1..=n`.
+    pub fn draw(&self, rng: &mut Rng) -> usize {
+        let u = rng.uniform();
+        match self.cdf.iter().position(|&c| u < c) {
+            Some(i) => i + 1,
+            None => self.cdf.len(),
+        }
+    }
+}
+
+/// Max duplicate ranks the Zipf tail can draw (bounds worst-case copies).
+const ZIPF_RANKS: usize = 16;
+
+/// The per-episode delivery fault state. Created lazily by the episode the
+/// first time a chaos event arms it — episodes without chaos events never
+/// construct one (zero steady-state overhead for clean cells).
+#[derive(Debug, Clone)]
+pub struct DeliveryChaos {
+    rng: Rng,
+    /// P(a report is lost — the session churned away mid-evaluation).
+    churn: f64,
+    /// P(a delivered report is duplicated once).
+    dup: f64,
+    /// Zipf-skewed duplicate-count draw (rank − 1 extra copies).
+    zipf: Option<Zipf>,
+    /// Uniform 0..=window extra iterations of delivery delay (0 = off).
+    delay_window: usize,
+    buffer: Vec<PendingReport>,
+}
+
+impl DeliveryChaos {
+    pub fn new(seed: u64) -> DeliveryChaos {
+        DeliveryChaos {
+            rng: Rng::new(seed),
+            churn: 0.0,
+            dup: 0.0,
+            zipf: None,
+            delay_window: 0,
+            buffer: Vec::new(),
+        }
+    }
+
+    pub fn set_churn(&mut self, p: f64) {
+        self.churn = p;
+    }
+
+    pub fn set_dup(&mut self, p: f64) {
+        self.dup = p;
+    }
+
+    /// `s <= 0` disables the Zipf duplicate tail.
+    pub fn set_zipf(&mut self, s: f64) {
+        self.zipf = (s > 0.0).then(|| Zipf::new(s, ZIPF_RANKS));
+    }
+
+    pub fn set_delay(&mut self, window: usize) {
+        self.delay_window = window;
+    }
+
+    /// Reports in the delay buffer (undelivered).
+    pub fn in_flight(&self) -> usize {
+        self.buffer.len()
+    }
+
+    /// Drop everything in flight (a killed node loses its outstanding
+    /// reports with it).
+    pub fn clear_in_flight(&mut self) {
+        self.buffer.clear();
+    }
+
+    /// Route one freshly measured report at iteration `t`: decide loss and
+    /// duplication, then either deliver now or buffer delayed copies.
+    pub fn route(
+        &mut self,
+        t: usize,
+        arm: usize,
+        fidelity: f64,
+        m: Measurement,
+        deliver: &mut dyn FnMut(usize, f64, Measurement),
+    ) {
+        if self.churn > 0.0 && self.rng.uniform() < self.churn {
+            return; // lost: the client vanished before reporting
+        }
+        let mut copies = 1usize;
+        if self.dup > 0.0 && self.rng.uniform() < self.dup {
+            copies += 1;
+        }
+        if let Some(z) = &self.zipf {
+            copies += z.draw(&mut self.rng) - 1;
+        }
+        for _ in 0..copies {
+            if self.delay_window > 0 {
+                let due = t + 1 + self.rng.below(self.delay_window as u64 + 1) as usize;
+                self.buffer.push(PendingReport { due, arm, fidelity, m });
+            } else {
+                deliver(arm, fidelity, m);
+            }
+        }
+    }
+
+    /// Deliver every buffered report due at or before `t`, in arrival
+    /// order (two reports with different draws swap — delivery reorder).
+    pub fn deliver_due(&mut self, t: usize, deliver: &mut dyn FnMut(usize, f64, Measurement)) {
+        let mut i = 0;
+        while i < self.buffer.len() {
+            if self.buffer[i].due <= t {
+                let p = self.buffer.remove(i);
+                deliver(p.arm, p.fidelity, p.m);
+            } else {
+                i += 1;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn m(time_s: f64) -> Measurement {
+        Measurement { time_s, power_w: 5.0 }
+    }
+
+    fn collect(chaos: &mut DeliveryChaos, t: usize, arm: usize) -> Vec<usize> {
+        let mut out = Vec::new();
+        chaos.route(t, arm, 0.15, m(1.0), &mut |a, _, _| out.push(a));
+        out
+    }
+
+    #[test]
+    fn zipf_is_rank_one_heavy_and_deterministic() {
+        let z = Zipf::new(1.2, ZIPF_RANKS);
+        let mut rng = Rng::new(11);
+        let draws: Vec<usize> = (0..2000).map(|_| z.draw(&mut rng)).collect();
+        assert!(draws.iter().all(|&r| (1..=ZIPF_RANKS).contains(&r)));
+        let ones = draws.iter().filter(|&&r| r == 1).count();
+        // Rank 1 dominates a Zipf(1.2) head.
+        assert!(ones > draws.len() / 3, "rank-1 share too small: {ones}/{}", draws.len());
+        assert!(draws.iter().any(|&r| r > 1), "tail never fired");
+        let mut rng2 = Rng::new(11);
+        let again: Vec<usize> = (0..2000).map(|_| z.draw(&mut rng2)).collect();
+        assert_eq!(draws, again);
+    }
+
+    #[test]
+    fn churn_drops_and_dup_duplicates() {
+        let mut c = DeliveryChaos::new(5);
+        c.set_churn(1.0);
+        assert!(collect(&mut c, 0, 3).is_empty());
+        let mut c = DeliveryChaos::new(5);
+        c.set_dup(1.0);
+        assert_eq!(collect(&mut c, 0, 3), vec![3, 3]);
+        // Probabilistic churn loses some but not all.
+        let mut c = DeliveryChaos::new(5);
+        c.set_churn(0.4);
+        let delivered: usize = (0..500).map(|t| collect(&mut c, t, 1).len()).sum();
+        assert!(delivered > 200 && delivered < 400, "delivered {delivered}/500");
+    }
+
+    #[test]
+    fn delay_buffers_and_reorders() {
+        let mut c = DeliveryChaos::new(9);
+        c.set_delay(6);
+        for t in 0..20 {
+            assert!(collect(&mut c, t, t).is_empty(), "delayed report delivered early");
+        }
+        assert_eq!(c.in_flight(), 20);
+        let mut order = Vec::new();
+        for t in 20..40 {
+            c.deliver_due(t, &mut |a, _, _| order.push(a));
+        }
+        assert_eq!(c.in_flight(), 0);
+        assert_eq!(order.len(), 20);
+        let mut sorted = order.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..20).collect::<Vec<_>>());
+        assert_ne!(order, sorted, "a 6-wide delay window should reorder");
+        // A kill drops everything in flight.
+        let mut c = DeliveryChaos::new(9);
+        c.set_delay(6);
+        let _ = collect(&mut c, 0, 0);
+        assert_eq!(c.in_flight(), 1);
+        c.clear_in_flight();
+        assert_eq!(c.in_flight(), 0);
+    }
+
+    #[test]
+    fn routing_is_deterministic_per_seed() {
+        let run = |seed: u64| -> Vec<usize> {
+            let mut c = DeliveryChaos::new(seed);
+            c.set_churn(0.2);
+            c.set_dup(0.3);
+            c.set_zipf(1.5);
+            c.set_delay(4);
+            let mut out = Vec::new();
+            for t in 0..100 {
+                c.deliver_due(t, &mut |a, _, _| out.push(a));
+                c.route(t, t, 0.15, m(1.0), &mut |a, _, _| out.push(a));
+            }
+            out
+        };
+        assert_eq!(run(21), run(21));
+        assert_ne!(run(21), run(22));
+    }
+}

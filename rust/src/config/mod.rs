@@ -73,6 +73,10 @@ pub struct LaspConfig {
     pub serve_checkpoint_dir: Option<String>,
     pub serve_checkpoint_secs: f64,
     pub serve_retain: f64,
+    // [chaos] — deterministic fault injection for the serve plane
+    // (`lasp serve --chaos <file>` loads a standalone file; a `[chaos]`
+    // section in the main config works too). None = no chaos code runs.
+    pub chaos: Option<crate::chaos::ChaosConfig>,
 }
 
 impl Default for LaspConfig {
@@ -103,6 +107,7 @@ impl Default for LaspConfig {
             serve_checkpoint_dir: None,
             serve_checkpoint_secs: 30.0,
             serve_retain: 0.5,
+            chaos: None,
         }
     }
 }
@@ -231,6 +236,9 @@ impl LaspConfig {
             cfg.serve_retain =
                 v.as_float().ok_or_else(|| anyhow!("serve.retain must be number"))?;
         }
+        if let Some(section) = doc.get("chaos") {
+            cfg.chaos = Some(crate::chaos::ChaosConfig::from_section(section)?);
+        }
         cfg.validate()?;
         Ok(cfg)
     }
@@ -285,6 +293,7 @@ impl LaspConfig {
             fleet_retain: self.fleet_retain,
             fleet_half_life: std::time::Duration::from_secs_f64(self.fleet_half_life_secs),
             trace_file: None,
+            chaos: self.chaos.clone(),
         }
     }
 
@@ -433,6 +442,33 @@ mod tests {
         assert!(LaspConfig::from_toml_str("[serve]\nworkers = -1\n").is_err());
         assert!(LaspConfig::from_toml_str("[serve]\nport = 65536\n").is_err());
         assert!(LaspConfig::from_toml_str("[serve]\nport = -1\n").is_err());
+    }
+
+    #[test]
+    fn parses_chaos_section() {
+        let cfg = LaspConfig::from_toml_str(
+            r#"
+            [chaos]
+            seed = 99
+            handler_error = 0.05
+            fleet_fail = 0.5
+            "#,
+        )
+        .unwrap();
+        let chaos = cfg.chaos.expect("chaos section parsed");
+        assert_eq!(chaos.seed, 99);
+        assert!((chaos.handler_error - 0.05).abs() < 1e-12);
+        assert!((chaos.fleet_fail - 0.5).abs() < 1e-12);
+        assert_eq!(cfg.serve_config().chaos, Some(chaos));
+        // No [chaos] section ⇒ the layer stays off entirely.
+        assert!(LaspConfig::from_toml_str("[tune]\napp = \"clomp\"\n").unwrap().chaos.is_none());
+    }
+
+    #[test]
+    fn rejects_bad_chaos_values() {
+        assert!(LaspConfig::from_toml_str("[chaos]\nhandler_error = 1.5\n").is_err());
+        assert!(LaspConfig::from_toml_str("[chaos]\naccept_drop = -0.1\n").is_err());
+        assert!(LaspConfig::from_toml_str("[chaos]\nseed = -1\n").is_err());
     }
 
     #[test]

@@ -26,6 +26,7 @@
 pub mod apps;
 pub mod bandit;
 pub mod baselines;
+pub mod chaos;
 pub mod config;
 pub mod coordinator;
 pub mod device;

@@ -132,6 +132,8 @@ fn usage_text() -> &'static str {
      \x20 --fleet-retain <f>     fleet-prior retention     [0.3]\n\
      \x20 --half-life-secs <s>   fleet evidence half-life  [600]\n\
      \x20 --trace-file <path>    stream flight-recorder events to disk [off]\n\
+     \x20 --chaos <file>         TOML fault-injection config ([chaos]\n\
+     \x20                        section; see DESIGN.md §Failure model) [off]\n\
      \n\
      FLAGS (loadgen)\n\
      \x20 --addr <a[,b,...]>     server(s) to hammer       [127.0.0.1:8787]\n\
@@ -140,6 +142,7 @@ fn usage_text() -> &'static str {
      \x20 --rounds <n>           suggest/report round-trips [12000]\n\
      \x20 --threads <n>          client threads            [8]\n\
      \x20 --apps <list>          all | comma list          [all]\n\
+     \x20 --timeout-secs <s>     socket read/write timeout [30]\n\
      \x20 --record <path>        capture measurements for `lasp trace` /\n\
      \x20                        the sim engine's replay strategy  [off]\n\
      \n\
@@ -436,6 +439,10 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
     if let Some(v) = flags.get("trace-file") {
         serve_cfg.trace_file = Some(std::path::PathBuf::from(v));
     }
+    if let Some(v) = flags.get("chaos") {
+        serve_cfg.chaos =
+            Some(lasp::chaos::ChaosConfig::from_file(std::path::Path::new(v))?);
+    }
     let ckpt = serve_cfg
         .checkpoint_dir
         .as_ref()
@@ -471,6 +478,9 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
     }
     if let Some(path) = &serve_cfg.trace_file {
         println!("# flight recorder: streaming to {}", path.display());
+    }
+    if let Some(chaos) = &serve_cfg.chaos {
+        println!("# chaos: ENABLED (seed={}) — injected faults are deliberate", chaos.seed);
     }
     println!(
         "# endpoints: POST /v1/suggest  POST /v1/report  GET /v1/best  POST /v1/checkpoint  \
@@ -515,6 +525,13 @@ fn cmd_loadgen(flags: &Flags) -> Result<()> {
     }
     if let Some(v) = flags.get("record") {
         lg.record = Some(std::path::PathBuf::from(v));
+    }
+    if let Some(v) = flags.get("timeout-secs") {
+        let secs: u64 = v.parse().context("--timeout-secs")?;
+        if secs == 0 {
+            return Err(anyhow!("--timeout-secs must be positive"));
+        }
+        lg.timeout_secs = secs;
     }
     println!(
         "# lasp loadgen: {} | sessions={} rounds={} threads={} apps={:?}",

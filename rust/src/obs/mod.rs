@@ -85,6 +85,10 @@ pub enum EventKind {
     /// A loadgen-side observation: `a` = app code | mode code<<8 |
     /// arm<<16, `b` = time_s (f64 bits), `c` = power_w (f64 bits).
     Measure = 11,
+    /// A chaos-layer fault injection: `a` = fault-point code
+    /// ([`crate::chaos::FaultPoint`]), `b` = injection ordinal, `c` =
+    /// point-specific context (shard, delay ms, attempt).
+    Chaos = 12,
 }
 
 impl EventKind {
@@ -105,6 +109,7 @@ impl EventKind {
             9 => EventKind::Checkpoint,
             10 => EventKind::SessionCreate,
             11 => EventKind::Measure,
+            12 => EventKind::Chaos,
             _ => return None,
         })
     }
@@ -122,6 +127,7 @@ impl EventKind {
             EventKind::Checkpoint => "checkpoint",
             EventKind::SessionCreate => "session_create",
             EventKind::Measure => "measure",
+            EventKind::Chaos => "chaos",
         }
     }
 }
@@ -458,6 +464,11 @@ pub fn write_event_json(ev: &TraceEvent, w: &mut JsonWriter) {
                 w.field_num("a", ev.a as f64);
             }
         },
+        Some(EventKind::Chaos) => {
+            w.field_str("point", crate::chaos::fault_point_name(ev.a));
+            w.field_num("injection", ev.b as f64);
+            w.field_num("arg", ev.c as f64);
+        }
         None => {
             w.field_num("a", ev.a as f64);
             w.field_num("b", ev.b as f64);

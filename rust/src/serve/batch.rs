@@ -4,14 +4,23 @@
 //! hot path shares the shard lock, so a burst of reports would stretch
 //! suggest tail latency. Instead each shard owns a bounded queue drained
 //! by a dedicated updater thread that applies reports in batches under a
-//! single lock acquisition. The queue bound is the backpressure: when a
-//! shard's updater falls behind, enqueueing blocks the reporting client
-//! (never unbounded memory), mirroring the bounded-channel discipline of
-//! [`crate::coordinator`].
+//! single lock acquisition. The queue bound is the overload valve: when a
+//! shard's updater falls behind, the report is *dropped and counted*
+//! (`lasp_serve_reports_dropped_total`, answered 503 upstream) rather
+//! than blocking an HTTP worker — a report is one measurement a client
+//! can resend, and a stalled worker would stall suggests for everyone.
+//!
+//! Ingestion is idempotent when clients cooperate: a report carrying a
+//! `seq` number is checked against its session's
+//! [`super::store::SeqWindow`], so at-least-once delivery (retries,
+//! duplicated packets, the chaos layer's `flush_duplicate` point) never
+//! double-counts a measurement into [`crate::bandit::ArmStats`]
+//! (`rust/tests/chaos.rs` pins this).
 
 use super::metrics::Metrics;
-use super::store::{AppsCache, SessionId, ShardedStore};
+use super::store::{AppsCache, SessionId, Shard, ShardedStore};
 use crate::apps::AppKind;
+use crate::chaos::ChaosLayer;
 use crate::obs::{EventKind, Recorder};
 use std::sync::atomic::Ordering;
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
@@ -30,6 +39,19 @@ pub struct Report {
     pub arm: usize,
     pub time_s: f64,
     pub power_w: f64,
+    /// Optional client-assigned sequence number: reports carrying one are
+    /// deduplicated through the session's idempotency window.
+    pub seq: Option<u64>,
+}
+
+/// What [`BatchIngest::enqueue`] did with the report.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Enqueue {
+    /// Queued for the shard's updater.
+    Queued,
+    /// Shard queue full: dropped and counted
+    /// (`lasp_serve_reports_dropped_total`). The client should resend.
+    Dropped,
 }
 
 enum Msg {
@@ -47,7 +69,8 @@ pub struct BatchIngest {
 }
 
 impl BatchIngest {
-    /// Spawn one updater thread per shard.
+    /// Spawn one updater thread per shard. `chaos` is the serve-side fault
+    /// layer (`None` without `--chaos`: zero overhead on the flush path).
     pub fn start(
         store: Arc<ShardedStore>,
         apps: Arc<AppsCache>,
@@ -55,6 +78,7 @@ impl BatchIngest {
         recorder: Arc<Recorder>,
         queue_cap: usize,
         max_batch: usize,
+        chaos: Option<Arc<ChaosLayer>>,
     ) -> BatchIngest {
         assert!(queue_cap > 0 && max_batch > 0);
         let shards = store.num_shards();
@@ -67,8 +91,18 @@ impl BatchIngest {
             let apps = apps.clone();
             let metrics = metrics.clone();
             let recorder = recorder.clone();
+            let chaos = chaos.clone();
             updaters.push(std::thread::spawn(move || {
-                updater_loop(shard, &rx, &store, &apps, &metrics, &recorder, max_batch)
+                updater_loop(
+                    shard,
+                    &rx,
+                    &store,
+                    &apps,
+                    &metrics,
+                    &recorder,
+                    max_batch,
+                    chaos.as_deref(),
+                )
             }));
         }
         BatchIngest {
@@ -78,17 +112,19 @@ impl BatchIngest {
     }
 
     /// Enqueue a report for its shard's updater. Fast path is a lock-light
-    /// `try_send`; a full queue blocks (backpressure) rather than dropping.
-    pub fn enqueue(&self, shard: usize, report: Report, metrics: &Metrics) -> Result<(), String> {
+    /// `try_send`; a full queue sheds the report — counted, never silent —
+    /// instead of blocking the HTTP worker that carried it.
+    pub fn enqueue(&self, shard: usize, report: Report, metrics: &Metrics) -> Result<Enqueue, String> {
         let tx = match self.txs[shard].lock() {
             Ok(g) => g,
             Err(p) => p.into_inner(),
         };
         match tx.try_send(Msg::Report(report)) {
-            Ok(()) => Ok(()),
-            Err(TrySendError::Full(m)) => {
+            Ok(()) => Ok(Enqueue::Queued),
+            Err(TrySendError::Full(_)) => {
                 metrics.queue_backpressure.fetch_add(1, Ordering::Relaxed);
-                tx.send(m).map_err(|_| "updater thread exited".to_string())
+                metrics.reports_dropped.fetch_add(1, Ordering::Relaxed);
+                Ok(Enqueue::Dropped)
             }
             Err(TrySendError::Disconnected(_)) => Err("updater thread exited".to_string()),
         }
@@ -114,6 +150,7 @@ impl BatchIngest {
     }
 }
 
+#[allow(clippy::too_many_arguments)] // one thread entry point per shard, mirrors start()
 fn updater_loop(
     shard: usize,
     rx: &Receiver<Msg>,
@@ -122,6 +159,7 @@ fn updater_loop(
     metrics: &Metrics,
     recorder: &Recorder,
     max_batch: usize,
+    chaos: Option<&ChaosLayer>,
 ) {
     loop {
         // Block for the first report, then opportunistically drain up to
@@ -143,7 +181,7 @@ fn updater_loop(
             }
         }
         let n = batch.len();
-        apply_batch(shard, batch, store, apps, metrics, recorder);
+        apply_batch(shard, batch, store, apps, metrics, recorder, chaos);
         metrics.update_batches.fetch_add(1, Ordering::Relaxed);
         recorder.record(EventKind::BatchFlush, shard as u64, n as u64, 0);
         if stop_after {
@@ -159,36 +197,64 @@ fn apply_batch(
     apps: &AppsCache,
     metrics: &Metrics,
     recorder: &Recorder,
+    chaos: Option<&ChaosLayer>,
 ) {
     let mut guard = store.write_shard(shard);
     for r in batch {
-        let k = apps.arms(r.app);
-        // Reports may precede any suggest for the session (e.g. a client
-        // replaying measurements after a server restart): create cold.
-        match store.get_or_create(&mut guard, r.id, r.alpha, r.beta, k) {
-            Ok((session, created)) => {
-                if created {
-                    metrics.sessions_created.fetch_add(1, Ordering::Relaxed);
-                }
-                match session.tuner.observe(r.arm, r.time_s, r.power_w) {
-                    Ok(()) => {
-                        session.reports += 1;
-                        metrics.reports_applied.fetch_add(1, Ordering::Relaxed);
-                        recorder.record(
-                            EventKind::ReportApply,
-                            r.id.0 as u64 | (r.arm as u64) << 32,
-                            r.time_s.to_bits(),
-                            r.power_w.to_bits(),
-                        );
-                    }
-                    Err(_) => {
-                        metrics.reports_rejected.fetch_add(1, Ordering::Relaxed);
-                    }
+        // The chaos `batch_flush` point models at-least-once delivery by
+        // re-applying the report through the *same* path a real duplicate
+        // would take — so a seq-carrying duplicate is absorbed by the
+        // idempotency window and a seq-less one genuinely double-counts
+        // (the contrast `rust/tests/chaos.rs` pins).
+        let copies = if chaos.is_some_and(|c| c.flush_duplicate(shard)) { 2 } else { 1 };
+        for _ in 0..copies {
+            apply_one(&r, store, &mut guard, apps, metrics, recorder);
+        }
+    }
+}
+
+fn apply_one(
+    r: &Report,
+    store: &ShardedStore,
+    guard: &mut Shard,
+    apps: &AppsCache,
+    metrics: &Metrics,
+    recorder: &Recorder,
+) {
+    let k = apps.arms(r.app);
+    // Reports may precede any suggest for the session (e.g. a client
+    // replaying measurements after a server restart): create cold.
+    match store.get_or_create(guard, r.id, r.alpha, r.beta, k) {
+        Ok((session, created)) => {
+            if created {
+                metrics.sessions_created.fetch_add(1, Ordering::Relaxed);
+            }
+            // Idempotency check before the reward update: a duplicate or
+            // out-of-window straggler is absorbed, never double-counted.
+            if let Some(seq) = r.seq {
+                if !session.seq_window.accept(seq) {
+                    metrics.reports_deduped.fetch_add(1, Ordering::Relaxed);
+                    return;
                 }
             }
-            Err(_) => {
-                metrics.reports_rejected.fetch_add(1, Ordering::Relaxed);
+            match session.tuner.observe(r.arm, r.time_s, r.power_w) {
+                Ok(()) => {
+                    session.reports += 1;
+                    metrics.reports_applied.fetch_add(1, Ordering::Relaxed);
+                    recorder.record(
+                        EventKind::ReportApply,
+                        r.id.0 as u64 | (r.arm as u64) << 32,
+                        r.time_s.to_bits(),
+                        r.power_w.to_bits(),
+                    );
+                }
+                Err(_) => {
+                    metrics.reports_rejected.fetch_add(1, Ordering::Relaxed);
+                }
             }
+        }
+        Err(_) => {
+            metrics.reports_rejected.fetch_add(1, Ordering::Relaxed);
         }
     }
 }
@@ -218,6 +284,7 @@ mod tests {
             arm,
             time_s,
             power_w,
+            seq: None,
         }
     }
 
@@ -238,8 +305,15 @@ mod tests {
         let apps = Arc::new(AppsCache::new());
         let metrics = Arc::new(Metrics::new());
         let recorder = Arc::new(Recorder::new(2, 256));
-        let ingest =
-            BatchIngest::start(store.clone(), apps, metrics.clone(), recorder.clone(), 64, 16);
+        let ingest = BatchIngest::start(
+            store.clone(),
+            apps,
+            metrics.clone(),
+            recorder.clone(),
+            64,
+            16,
+            None,
+        );
 
         let k = key("async-client");
         let id = store.intern(&k.as_ref(), k.hash64());
@@ -286,6 +360,7 @@ mod tests {
             Arc::new(Recorder::new(2, 256)),
             16,
             8,
+            None,
         );
         let k = key("bad-client");
         let id = store.intern(&k.as_ref(), k.hash64());
@@ -317,6 +392,7 @@ mod tests {
             Arc::new(Recorder::new(2, 256)),
             256,
             32,
+            None,
         );
         let k = key("drain-client");
         let id = store.intern(&k.as_ref(), k.hash64());
@@ -327,5 +403,83 @@ mod tests {
         }
         ingest.stop();
         assert_eq!(metrics.reports_applied.load(Ordering::Relaxed), 100);
+    }
+
+    #[test]
+    fn duplicate_and_reordered_seqs_are_absorbed() {
+        let store = Arc::new(ShardedStore::new(1));
+        let apps = Arc::new(AppsCache::new());
+        let metrics = Arc::new(Metrics::new());
+        let ingest = BatchIngest::start(
+            store.clone(),
+            apps,
+            metrics.clone(),
+            Arc::new(Recorder::new(2, 256)),
+            256,
+            32,
+            None,
+        );
+        let k = key("seq-client");
+        let id = store.intern(&k.as_ref(), k.hash64());
+        // 30 distinct seqs delivered at-least-once with reorders: each
+        // even seq twice, odds once, and a late straggler at the end.
+        for i in 0..30u64 {
+            let mut r = report(id, (i % 125) as usize, 1.0, 5.0);
+            r.seq = Some(i);
+            ingest.enqueue(0, r, &metrics).unwrap();
+            if i % 2 == 0 {
+                ingest.enqueue(0, r, &metrics).unwrap();
+            }
+        }
+        let mut straggler = report(id, 3, 1.0, 5.0);
+        straggler.seq = Some(5);
+        ingest.enqueue(0, straggler, &metrics).unwrap();
+        ingest.stop();
+        assert_eq!(metrics.reports_applied.load(Ordering::Relaxed), 30);
+        assert_eq!(metrics.reports_deduped.load(Ordering::Relaxed), 16);
+        let guard = store.read_shard(0);
+        let session = guard.sessions.get(&id.0).unwrap();
+        assert_eq!(session.tuner.total_pulls(), 30.0, "a duplicate reached ArmStats");
+    }
+
+    #[test]
+    fn full_queue_drops_are_counted_not_silent() {
+        let store = Arc::new(ShardedStore::new(1));
+        let apps = Arc::new(AppsCache::new());
+        let metrics = Arc::new(Metrics::new());
+        let ingest = BatchIngest::start(
+            store.clone(),
+            apps,
+            metrics.clone(),
+            Arc::new(Recorder::new(2, 256)),
+            8,
+            4,
+            None,
+        );
+        let k = key("drop-client");
+        let id = store.intern(&k.as_ref(), k.hash64());
+        let total = 64u64;
+        let mut dropped_now = 0u64;
+        {
+            // Hold the shard write lock so the updater cannot drain: the
+            // queue must fill and then shed deterministically.
+            let _guard = store.write_shard(0);
+            for i in 0..total {
+                match ingest
+                    .enqueue(0, report(id, (i % 125) as usize, 1.0, 5.0), &metrics)
+                    .unwrap()
+                {
+                    Enqueue::Queued => {}
+                    Enqueue::Dropped => dropped_now += 1,
+                }
+            }
+            assert!(dropped_now >= 1, "a 8-deep queue cannot hold {total} reports");
+        }
+        ingest.stop();
+        let applied = metrics.reports_applied.load(Ordering::Relaxed);
+        let dropped = metrics.reports_dropped.load(Ordering::Relaxed);
+        assert_eq!(dropped, dropped_now);
+        assert_eq!(applied + dropped, total, "a report vanished without being counted");
+        assert!(metrics.queue_backpressure.load(Ordering::Relaxed) >= dropped);
     }
 }

@@ -43,7 +43,7 @@
 //! reader for every version still in the field (see DESIGN.md
 //! §Checkpoint file format).
 
-use super::store::{AppsCache, PolicyKind, Session, SessionKey, ShardedStore, Tuner};
+use super::store::{AppsCache, PolicyKind, Session, SessionKey, SeqWindow, ShardedStore, Tuner};
 use crate::apps::AppKind;
 use crate::bandit::persist;
 use crate::device::PowerMode;
@@ -138,6 +138,10 @@ pub fn session_from_json(text: &str, apps: &AppsCache, retain: f64) -> Result<Se
         fleet_baseline,
         suggests: root.get("suggests").and_then(Json::as_f64).unwrap_or(0.0) as u64,
         reports: root.get("reports").and_then(Json::as_f64).unwrap_or(0.0) as u64,
+        // Deliberately not persisted: a restart re-keys client retry
+        // state, so the idempotency window restarts empty (see
+        // DESIGN.md §Failure model).
+        seq_window: SeqWindow::default(),
     })
 }
 
@@ -146,10 +150,31 @@ fn file_name(key: &SessionKey) -> String {
     format!("sess-{:016x}.json", key.hash64())
 }
 
+/// Attempts per session file before giving up on this snapshot cycle.
+const WRITE_ATTEMPTS: u32 = 3;
+
 /// Snapshot every checkpointable session into `dir`. Serialization happens
 /// under each shard lock; file I/O happens outside it so a slow disk never
 /// blocks the suggest path. Returns the number of sessions written.
 pub fn snapshot(store: &ShardedStore, dir: &Path) -> Result<usize> {
+    snapshot_with(store, dir, None, None)
+}
+
+/// As [`snapshot`], with write-failure tolerance and optional fault
+/// injection. Each session file gets up to [`WRITE_ATTEMPTS`] tries with
+/// a short exponential backoff between them; a file that still cannot be
+/// written is skipped for this cycle — [`persist::write_atomic`] renames
+/// over the target only on success, so the previous last-good checkpoint
+/// stays intact. Every failed *attempt* increments `failures`
+/// (`lasp_serve_checkpoint_failures_total`), and the chaos layer's
+/// `checkpoint_write` point injects failures before the real I/O.
+pub fn snapshot_with(
+    store: &ShardedStore,
+    dir: &Path,
+    chaos: Option<&crate::chaos::ChaosLayer>,
+    failures: Option<&std::sync::atomic::AtomicU64>,
+) -> Result<usize> {
+    use std::sync::atomic::Ordering;
     std::fs::create_dir_all(dir).with_context(|| format!("creating {}", dir.display()))?;
     let mut written = 0usize;
     for i in 0..store.num_shards() {
@@ -164,8 +189,28 @@ pub fn snapshot(store: &ShardedStore, dir: &Path) -> Result<usize> {
                 .collect()
         };
         for (name, text) in payloads {
-            persist::write_atomic(&dir.join(name), &text)?;
-            written += 1;
+            let path = dir.join(name);
+            for attempt in 0..WRITE_ATTEMPTS {
+                let result = if chaos.is_some_and(|c| c.checkpoint_fail(attempt as u64)) {
+                    Err(anyhow!("chaos: injected checkpoint write failure"))
+                } else {
+                    persist::write_atomic(&path, &text)
+                };
+                match result {
+                    Ok(()) => {
+                        written += 1;
+                        break;
+                    }
+                    Err(_) => {
+                        if let Some(f) = failures {
+                            f.fetch_add(1, Ordering::Relaxed);
+                        }
+                        if attempt + 1 < WRITE_ATTEMPTS {
+                            std::thread::sleep(std::time::Duration::from_millis(2 << attempt));
+                        }
+                    }
+                }
+            }
         }
     }
     Ok(written)
@@ -230,6 +275,7 @@ mod tests {
             fleet_baseline: None,
             suggests: pulls as u64,
             reports: pulls as u64,
+            seq_window: SeqWindow::default(),
         }
     }
 
@@ -306,6 +352,7 @@ mod tests {
             fleet_baseline: None,
             suggests: 200,
             reports: 200,
+            seq_window: SeqWindow::default(),
         };
         let best = session.tuner.most_selected();
         let (mean_before, _) = session.tuner.mean_of(best).unwrap();
@@ -335,6 +382,38 @@ mod tests {
         let restored = restore(&fresh, &apps, &d, 0.5).unwrap();
         assert_eq!(restored, 6);
         assert_eq!(fresh.session_count(), 6);
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn injected_write_failures_keep_the_last_good_checkpoint() {
+        use crate::chaos::{ChaosConfig, ChaosLayer};
+        use crate::obs::Recorder;
+        use std::sync::atomic::{AtomicU64, Ordering};
+        let d = dir("chaos");
+        let store = ShardedStore::new(2);
+        store.insert_session(trained_session("chaos-a", 60));
+        assert_eq!(snapshot(&store, &d).unwrap(), 1);
+        let file = std::fs::read_dir(&d)
+            .unwrap()
+            .flatten()
+            .map(|e| e.path())
+            .find(|p| p.extension().and_then(|e| e.to_str()) == Some("json"))
+            .unwrap();
+        let good = std::fs::read_to_string(&file).unwrap();
+
+        // Every write attempt fails: the cycle writes nothing, counts
+        // each failed attempt, and never touches the last-good file.
+        let cfg = ChaosConfig { seed: 5, checkpoint_fail: 1.0, ..Default::default() };
+        let chaos = ChaosLayer::new(cfg, std::sync::Arc::new(Recorder::new(1, 64)));
+        let failures = AtomicU64::new(0);
+        let written = snapshot_with(&store, &d, Some(&chaos), Some(&failures)).unwrap();
+        assert_eq!(written, 0);
+        assert_eq!(failures.load(Ordering::Relaxed), 3, "one count per failed attempt");
+        assert_eq!(std::fs::read_to_string(&file).unwrap(), good);
+
+        // Chaos gone ⇒ the next cycle recovers without intervention.
+        assert_eq!(snapshot(&store, &d).unwrap(), 1);
         let _ = std::fs::remove_dir_all(&d);
     }
 

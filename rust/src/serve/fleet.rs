@@ -33,12 +33,18 @@
 //!
 //! **Failure posture.** Sync is strictly best-effort: the suggest/report
 //! hot path never touches the network, and a dead or unreachable leader
-//! only increments `fleet_sync_errors_total` while the node keeps serving
-//! standalone. Lock order is documented on [`ShardedStore`]; the sync
-//! plane never takes a shard lock while holding the prior map.
+//! never blocks serving. Failures move the loop into an explicit
+//! **backoff** state ([`super::metrics::FLEET_STATE_BACKOFF`], visible in
+//! `/metrics` and `/v1/trace`): retry delays grow exponentially from
+//! `sync_every` with deterministic jitter ([`Backoff`]), capped at
+//! [`MAX_BACKOFF_SECS`], so a crashed leader sees a trickle of reconnect
+//! attempts instead of a thundering herd when it returns. The first
+//! successful cycle resets the delay and flips the state to **syncing**.
+//! Lock order is documented on [`ShardedStore`]; the sync plane never
+//! takes a shard lock while holding the prior map.
 
 use super::loadgen::HttpClient;
-use super::metrics::Metrics;
+use super::metrics::{Metrics, FLEET_STATE_BACKOFF, FLEET_STATE_SYNCING};
 use super::store::{AppsCache, FleetKey, PolicyKind, ShardedStore, Tuner};
 use crate::apps::AppKind;
 use crate::bandit::{ArmStats, Policy as _};
@@ -63,6 +69,47 @@ pub const FLEET_MAX_NODES: usize = 256;
 
 /// Merge weights below this are treated as fully aged-out evidence.
 const MIN_WEIGHT: f64 = 1e-3;
+
+/// Ceiling on the backed-off retry delay, seconds. A leader that has been
+/// gone for an hour still sees a reconnect attempt every five minutes.
+pub const MAX_BACKOFF_SECS: u64 = 300;
+
+/// Bounded exponential backoff with deterministic jitter for the sync
+/// loop. After `k` consecutive failures the delay is
+/// `base · 2^min(k, 4) · jitter` with `jitter ∈ [1.0, 1.5)` drawn from a
+/// seeded [`crate::util::Rng`] (same seed ⇒ same retry schedule — chaos
+/// runs stay replayable), capped at [`MAX_BACKOFF_SECS`]. Jitter spreads
+/// a fleet's reconnect attempts so a recovering leader is not hit by
+/// every follower in the same 25 ms poll tick.
+pub struct Backoff {
+    rng: crate::util::Rng,
+    consecutive: u32,
+}
+
+impl Backoff {
+    pub fn new(seed: u64) -> Backoff {
+        Backoff { rng: crate::util::Rng::new(seed), consecutive: 0 }
+    }
+
+    /// Consecutive failures since the last success.
+    pub fn failures(&self) -> u32 {
+        self.consecutive
+    }
+
+    /// A cycle succeeded: the next failure starts the ladder over.
+    pub fn reset(&mut self) {
+        self.consecutive = 0;
+    }
+
+    /// Record one failure and return the delay before the next attempt.
+    pub fn next_delay(&mut self, base: Duration) -> Duration {
+        let k = self.consecutive.min(4);
+        self.consecutive = self.consecutive.saturating_add(1);
+        let jitter = 1.0 + 0.5 * self.rng.uniform();
+        let d = base.mul_f64((1u64 << k) as f64 * jitter);
+        d.min(Duration::from_secs(MAX_BACKOFF_SECS))
+    }
+}
 
 /// Sparse arm statistics for one `(app, device, policy)` scenario.
 /// `arms` is strictly ascending; `counts[i]`/`tau_sum[i]`/`rho_sum[i]`
@@ -540,11 +587,13 @@ impl FleetSync {
         apps: Arc<AppsCache>,
         metrics: Arc<Metrics>,
         recorder: Arc<Recorder>,
+        chaos: Option<Arc<crate::chaos::ChaosLayer>>,
     ) -> FleetSync {
         let stop = Arc::new(AtomicBool::new(false));
         let stop2 = stop.clone();
-        let handle =
-            std::thread::spawn(move || run_loop(&cfg, &store, &apps, &metrics, &recorder, &stop2));
+        let handle = std::thread::spawn(move || {
+            run_loop(&cfg, &store, &apps, &metrics, &recorder, &stop2, chaos.as_deref())
+        });
         FleetSync {
             stop,
             handle: Some(handle),
@@ -566,6 +615,14 @@ impl Drop for FleetSync {
     }
 }
 
+/// Stable jitter seed from the node identity: the same node re-derives
+/// the same retry schedule across restarts (FNV-1a over the id bytes).
+fn backoff_seed(node_id: &str) -> u64 {
+    node_id
+        .bytes()
+        .fold(0xcbf2_9ce4_8422_2325u64, |h, b| (h ^ u64::from(b)).wrapping_mul(0x100_0000_01b3))
+}
+
 fn run_loop(
     cfg: &FleetSyncConfig,
     store: &ShardedStore,
@@ -573,30 +630,51 @@ fn run_loop(
     metrics: &Metrics,
     recorder: &Recorder,
     stop: &AtomicBool,
+    chaos: Option<&crate::chaos::ChaosLayer>,
 ) {
     let mut client: Option<HttpClient> = None;
     let mut buf: Vec<u8> = Vec::with_capacity(4096);
     let mut last = Instant::now();
+    let mut backoff = Backoff::new(backoff_seed(&cfg.node_id));
+    // Until the first success the node serves standalone; `wait` is the
+    // current cycle period — `every` while healthy, the backoff ladder
+    // after failures.
+    let mut wait = cfg.every;
     loop {
         std::thread::sleep(Duration::from_millis(25));
         if stop.load(Ordering::SeqCst) {
             return;
         }
-        if last.elapsed() < cfg.every {
+        if last.elapsed() < wait {
             continue;
         }
         last = Instant::now();
-        match sync_once(cfg, &mut client, &mut buf, store, apps) {
+        // The chaos `fleet_sync` point severs the cycle before any byte
+        // reaches the leader — indistinguishable from a link failure, so
+        // it exercises the same backoff transitions.
+        let result = if chaos.is_some_and(|c| c.fleet_fail()) {
+            client = None;
+            Err("chaos: injected fleet sync failure".to_string())
+        } else {
+            sync_once(cfg, &mut client, &mut buf, store, apps)
+        };
+        match result {
             Ok((pushed, installed)) => {
                 metrics.fleet_pushes.fetch_add(1, Ordering::Relaxed);
                 metrics.fleet_pulls.fetch_add(1, Ordering::Relaxed);
+                metrics.fleet_state.store(FLEET_STATE_SYNCING, Ordering::Relaxed);
+                backoff.reset();
+                wait = cfg.every;
                 recorder.record(EventKind::FleetPush, pushed as u64, 0, 0);
                 recorder.record(EventKind::FleetPull, installed as u64, 0, 0);
             }
             Err(_) => {
-                // Reconnect next cycle; the node keeps serving standalone.
+                // Reconnect from scratch after backing off; the node
+                // keeps serving standalone in the meantime.
                 client = None;
                 metrics.fleet_sync_errors.fetch_add(1, Ordering::Relaxed);
+                metrics.fleet_state.store(FLEET_STATE_BACKOFF, Ordering::Relaxed);
+                wait = backoff.next_delay(cfg.every);
             }
         }
     }
@@ -669,6 +747,38 @@ mod tests {
         s.write_json(&mut w);
         let v = JsonSlice::parse(&buf).unwrap();
         FleetSnapshot::from_slice(&v).unwrap()
+    }
+
+    #[test]
+    fn backoff_grows_jitters_caps_and_resets() {
+        let base = Duration::from_secs(10);
+        let mut b = Backoff::new(7);
+        let mut delays = Vec::new();
+        for k in 0..8u32 {
+            let d = b.next_delay(base);
+            delays.push(d);
+            assert_eq!(b.failures(), k + 1);
+            // Within the jittered envelope of base · 2^min(k,4), capped.
+            let lo = base.mul_f64((1u64 << k.min(4)) as f64);
+            let hi = lo.mul_f64(1.5).min(Duration::from_secs(MAX_BACKOFF_SECS));
+            assert!(d >= lo.min(hi) && d <= hi, "step {k}: {d:?} not in [{lo:?}, {hi:?}]");
+        }
+        // The ladder grows strictly while the exponent still grows.
+        for k in 0..4 {
+            assert!(delays[k + 1] > delays[k], "ladder did not grow at step {k}");
+        }
+        assert!(delays.last().unwrap() <= &Duration::from_secs(MAX_BACKOFF_SECS));
+        b.reset();
+        assert_eq!(b.failures(), 0);
+        let after = b.next_delay(base);
+        assert!(after < base.mul_f64(1.5) + Duration::from_millis(1));
+        // Same seed ⇒ same schedule (replayable chaos runs).
+        let schedule = |seed: u64| -> Vec<Duration> {
+            let mut b = Backoff::new(seed);
+            (0..6).map(|_| b.next_delay(base)).collect()
+        };
+        assert_eq!(schedule(3), schedule(3));
+        assert_ne!(schedule(3), schedule(4));
     }
 
     #[test]

@@ -596,6 +596,21 @@ impl HttpServer {
         handler: HttpHandler,
         stats: Arc<TransportStats>,
     ) -> Result<HttpServer> {
+        Self::start_with_opts(listener, workers, handler, stats, None)
+    }
+
+    /// Full-option start: as [`HttpServer::start_with_stats`] plus the
+    /// serve-side chaos layer. When armed, its `accept` fault point closes
+    /// a just-accepted connection before a byte is served — the client
+    /// sees a reset, exactly like a flaky edge link. `None` keeps the
+    /// accept loop untouched (zero overhead without `--chaos`).
+    pub fn start_with_opts(
+        listener: TcpListener,
+        workers: usize,
+        handler: HttpHandler,
+        stats: Arc<TransportStats>,
+        chaos: Option<Arc<crate::chaos::ChaosLayer>>,
+    ) -> Result<HttpServer> {
         assert!(workers > 0);
         let addr = listener.local_addr().context("reading bound address")?;
         let shutdown = Arc::new(AtomicBool::new(false));
@@ -651,6 +666,14 @@ impl HttpServer {
                         return;
                     }
                     let Ok(stream) = conn else { continue };
+                    if let Some(c) = &chaos {
+                        if c.accept_drop() {
+                            // Close before a byte is served; the client
+                            // sees a reset, as on a flaky edge link.
+                            drop(stream);
+                            continue;
+                        }
+                    }
                     let _ = stream.set_nodelay(true);
                     let _ = stream.set_read_timeout(Some(READ_TIMEOUT));
                     stats.connections.fetch_add(1, Ordering::Relaxed);

@@ -49,6 +49,9 @@ pub struct LoadgenConfig {
     /// Device-simulator fidelity and seed.
     pub fidelity: f64,
     pub seed: u64,
+    /// Socket read timeout, seconds (`--timeout-secs`). Long sweeps
+    /// against a checkpoint-heavy server want more than the default.
+    pub timeout_secs: u64,
     /// Capture the observed `(app, mode, arm, time, power)` stream to a
     /// `LASPTRC1` trace file (`lasp loadgen --record`); replayable via
     /// `lasp simulate` with `trace = "<path>"`.
@@ -67,6 +70,7 @@ impl Default for LoadgenConfig {
             beta: 0.2,
             fidelity: 0.15,
             seed: 42,
+            timeout_secs: 30,
             record: None,
         }
     }
@@ -93,6 +97,9 @@ pub struct LoadgenReport {
     pub connections: usize,
     pub reconnects: usize,
     pub requests: usize,
+    /// Initial connects that only succeeded on the backoff retry
+    /// (transient refusals while the server was still binding).
+    pub connect_retries: usize,
     /// Distinct server addresses the load was spread over.
     pub targets: usize,
 }
@@ -123,9 +130,10 @@ impl LoadgenReport {
             self.mean_ms
         );
         println!(
-            "connections: {} ({} reconnects) | {:.0} requests/connection",
+            "connections: {} ({} reconnects, {} connect retries) | {:.0} requests/connection",
             self.connections,
             self.reconnects,
+            self.connect_retries,
             self.requests_per_connection()
         );
     }
@@ -138,6 +146,7 @@ impl LoadgenReport {
 /// allocate.
 pub struct HttpClient {
     addr: String,
+    timeout: Duration,
     stream: TcpStream,
     /// Response accumulation buffer (reused; grows to high-water mark).
     rbuf: Vec<u8>,
@@ -152,9 +161,15 @@ pub struct HttpClient {
 
 impl HttpClient {
     pub fn connect(addr: &str) -> Result<HttpClient> {
-        let stream = Self::dial(addr)?;
+        Self::connect_with_timeout(addr, Duration::from_secs(30))
+    }
+
+    /// Connect with an explicit socket read timeout (`--timeout-secs`).
+    pub fn connect_with_timeout(addr: &str, timeout: Duration) -> Result<HttpClient> {
+        let stream = Self::dial(addr, timeout)?;
         Ok(HttpClient {
             addr: addr.to_string(),
+            timeout,
             stream,
             rbuf: vec![0u8; 4096],
             rfilled: 0,
@@ -165,10 +180,10 @@ impl HttpClient {
         })
     }
 
-    fn dial(addr: &str) -> Result<TcpStream> {
+    fn dial(addr: &str, timeout: Duration) -> Result<TcpStream> {
         let stream = TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
         stream.set_nodelay(true).ok();
-        stream.set_read_timeout(Some(Duration::from_secs(30))).ok();
+        stream.set_read_timeout(Some(timeout)).ok();
         Ok(stream)
     }
 
@@ -193,7 +208,7 @@ impl HttpClient {
         match self.roundtrip("POST", path, body) {
             Ok(s) => Ok(s),
             Err(_) => {
-                self.stream = Self::dial(&self.addr)?;
+                self.stream = Self::dial(&self.addr, self.timeout)?;
                 self.reconnects += 1;
                 self.roundtrip("POST", path, body)
             }
@@ -206,7 +221,7 @@ impl HttpClient {
         match self.roundtrip("GET", path_and_query, b"") {
             Ok(s) => Ok(s),
             Err(_) => {
-                self.stream = Self::dial(&self.addr)?;
+                self.stream = Self::dial(&self.addr, self.timeout)?;
                 self.reconnects += 1;
                 self.roundtrip("GET", path_and_query, b"")
             }
@@ -382,6 +397,7 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
     let mut rounds_done = 0usize;
     let mut reconnects = 0usize;
     let mut requests = 0usize;
+    let mut connect_retries = 0usize;
     // Per-worker capture streams, concatenated in thread order (joins
     // follow spawn order) so a given (sessions, threads, seed) config
     // yields a stable event layout.
@@ -393,6 +409,7 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
         rounds_done += w.rounds;
         reconnects += w.reconnects;
         requests += w.requests;
+        connect_retries += w.connect_retries;
         records.extend(w.records);
     }
     if let Some(path) = &cfg.record {
@@ -414,6 +431,7 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
         connections: threads + reconnects,
         reconnects,
         requests,
+        connect_retries,
         targets: targets.len(),
     })
 }
@@ -425,6 +443,8 @@ struct WorkerOut {
     rounds: usize,
     reconnects: usize,
     requests: usize,
+    /// 1 when the initial connect only succeeded on the backoff retry.
+    connect_retries: usize,
     /// Captured `Measure` events when `--record` is active (seq numbers
     /// assigned by the aggregator).
     records: Vec<TraceEvent>,
@@ -462,11 +482,22 @@ fn worker(
             rounds: 0,
             reconnects: 0,
             requests: 0,
+            connect_retries: 0,
             records: vec![],
         });
     }
     let models: Vec<Box<dyn AppModel>> = cfg.apps.iter().map(|&k| apps::build(k)).collect();
-    let mut client = HttpClient::connect(target)?;
+    // One backoff retry on the initial connect: loadgen regularly races
+    // the server's bind (CI scripts start both back to back), and a
+    // single transient refusal should not abort a whole worker's rounds.
+    let timeout = Duration::from_secs(cfg.timeout_secs);
+    let (mut client, connect_retries) = match HttpClient::connect_with_timeout(target, timeout) {
+        Ok(c) => (c, 0usize),
+        Err(_) => {
+            std::thread::sleep(Duration::from_millis(100 + 50 * thread_id as u64));
+            (HttpClient::connect_with_timeout(target, timeout)?, 1)
+        }
+    };
     let mut latencies = Vec::with_capacity(my_rounds * 2);
     let mut body = Vec::with_capacity(512);
     let mut errors = 0usize;
@@ -539,6 +570,7 @@ fn worker(
         rounds: rounds_done,
         reconnects: client.reconnects() as usize,
         requests: client.requests() as usize,
+        connect_retries,
         records,
     })
 }
@@ -553,6 +585,7 @@ mod tests {
         assert!(cfg.sessions >= 64, "acceptance needs >= 64 sessions");
         assert!(cfg.rounds >= 10_000, "acceptance needs >= 10k round-trips");
         assert_eq!(cfg.apps.len(), 4);
+        assert_eq!(cfg.timeout_secs, 30, "historical read-timeout default");
     }
 
     #[test]
@@ -575,6 +608,7 @@ mod tests {
             connections: 4,
             reconnects: 0,
             requests: 200,
+            connect_retries: 0,
             targets: 1,
         };
         assert!((r.requests_per_connection() - 50.0).abs() < 1e-9);

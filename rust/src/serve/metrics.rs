@@ -128,6 +128,32 @@ pub struct TraceGauges {
     pub overwritten: u64,
 }
 
+/// Point-in-time gauges of the chaos layer ([`crate::chaos::ChaosLayer`]),
+/// sampled at render time. Default = no layer configured.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ChaosGauges {
+    /// Whether a chaos layer is configured (`--chaos` / `[chaos]`).
+    pub enabled: bool,
+    /// Faults injected since boot, across every fault point.
+    pub injections: u64,
+}
+
+/// Degraded-mode states of the fleet-sync client plane, exported as the
+/// `lasp_serve_fleet_sync_state` gauge and named in `/v1/trace`.
+pub const FLEET_STATE_STANDALONE: u64 = 0;
+pub const FLEET_STATE_SYNCING: u64 = 1;
+pub const FLEET_STATE_BACKOFF: u64 = 2;
+
+/// Human name for a fleet-sync state gauge value.
+pub fn fleet_state_name(state: u64) -> &'static str {
+    match state {
+        FLEET_STATE_STANDALONE => "standalone",
+        FLEET_STATE_SYNCING => "syncing",
+        FLEET_STATE_BACKOFF => "backoff",
+        _ => "unknown",
+    }
+}
+
 /// All counters the service exports.
 pub struct Metrics {
     started: Instant,
@@ -146,12 +172,23 @@ pub struct Metrics {
     pub reports_enqueued: AtomicU64,
     pub reports_applied: AtomicU64,
     pub reports_rejected: AtomicU64,
+    /// Reports shed because a shard queue was full (the client is told —
+    /// 503 — and can resend; the count makes the shedding visible).
+    pub reports_dropped: AtomicU64,
+    /// Duplicate/stale-seq reports absorbed by the idempotency window.
+    pub reports_deduped: AtomicU64,
     pub update_batches: AtomicU64,
     pub queue_backpressure: AtomicU64,
     pub sessions_created: AtomicU64,
     pub checkpoints: AtomicU64,
     pub checkpoint_sessions: AtomicU64,
+    /// Failed checkpoint file-write *attempts* (retries count each time).
+    pub checkpoint_failures: AtomicU64,
     pub sessions_restored: AtomicU64,
+    /// Fleet-sync degraded-mode state ([`FLEET_STATE_STANDALONE`] /
+    /// [`FLEET_STATE_SYNCING`] / [`FLEET_STATE_BACKOFF`]), written by the
+    /// sync thread, exported as a gauge and named in `/v1/trace`.
+    pub fleet_state: AtomicU64,
     /// Fleet-sync client plane: completed pushes/pulls and failed cycles
     /// (the [`super::fleet::FleetSync`] thread).
     pub fleet_pushes: AtomicU64,
@@ -179,12 +216,16 @@ impl Metrics {
             reports_enqueued: AtomicU64::new(0),
             reports_applied: AtomicU64::new(0),
             reports_rejected: AtomicU64::new(0),
+            reports_dropped: AtomicU64::new(0),
+            reports_deduped: AtomicU64::new(0),
             update_batches: AtomicU64::new(0),
             queue_backpressure: AtomicU64::new(0),
             sessions_created: AtomicU64::new(0),
             checkpoints: AtomicU64::new(0),
             checkpoint_sessions: AtomicU64::new(0),
+            checkpoint_failures: AtomicU64::new(0),
             sessions_restored: AtomicU64::new(0),
+            fleet_state: AtomicU64::new(FLEET_STATE_STANDALONE),
             fleet_pushes: AtomicU64::new(0),
             fleet_pulls: AtomicU64::new(0),
             fleet_sync_errors: AtomicU64::new(0),
@@ -207,6 +248,7 @@ impl Metrics {
         resources: &ResourceReport,
         fleet: FleetGauges,
         trace: TraceGauges,
+        chaos: ChaosGauges,
     ) -> String {
         let mut out = String::with_capacity(2048);
         let gauge = |out: &mut String, name: &str, v: f64| {
@@ -228,11 +270,14 @@ impl Metrics {
         counter(&mut out, "lasp_serve_reports_enqueued_total", load(&self.reports_enqueued));
         counter(&mut out, "lasp_serve_reports_applied_total", load(&self.reports_applied));
         counter(&mut out, "lasp_serve_reports_rejected_total", load(&self.reports_rejected));
+        counter(&mut out, "lasp_serve_reports_dropped_total", load(&self.reports_dropped));
+        counter(&mut out, "lasp_serve_reports_deduped_total", load(&self.reports_deduped));
         counter(&mut out, "lasp_serve_update_batches_total", load(&self.update_batches));
         counter(&mut out, "lasp_serve_queue_backpressure_total", load(&self.queue_backpressure));
         counter(&mut out, "lasp_serve_sessions_created_total", load(&self.sessions_created));
         counter(&mut out, "lasp_serve_checkpoints_total", load(&self.checkpoints));
         counter(&mut out, "lasp_serve_checkpoint_sessions_total", load(&self.checkpoint_sessions));
+        counter(&mut out, "lasp_serve_checkpoint_failures_total", load(&self.checkpoint_failures));
         counter(&mut out, "lasp_serve_sessions_restored_total", load(&self.sessions_restored));
         // Fleet-sync plane: client-side cycles, server-side absorption,
         // and the warm-start payoff (sessions that skipped cold start).
@@ -244,6 +289,14 @@ impl Metrics {
         gauge(&mut out, "lasp_serve_fleet_nodes", fleet.nodes as f64);
         gauge(&mut out, "lasp_serve_fleet_prior_keys", fleet.prior_keys as f64);
         counter(&mut out, "lasp_serve_fleet_warm_starts_total", fleet.warm_starts);
+        // Degraded-mode state machine (0 standalone / 1 syncing /
+        // 2 backoff): an operator can alert on `== 2` without scraping
+        // error-rate deltas.
+        gauge(&mut out, "lasp_serve_fleet_sync_state", load(&self.fleet_state) as f64);
+        // Chaos plane: whether a fault layer is armed and how much it has
+        // actually broken so far.
+        gauge(&mut out, "lasp_serve_chaos_enabled", if chaos.enabled { 1.0 } else { 0.0 });
+        counter(&mut out, "lasp_serve_chaos_injections_total", chaos.injections);
         // Flight-recorder plane: total events and ring overwrites (loss
         // under overload is visible, never silent).
         counter(&mut out, "lasp_serve_trace_events_total", trace.recorded);
@@ -309,10 +362,21 @@ mod tests {
         let t = TransportStats::default();
         t.requests.fetch_add(7, Ordering::Relaxed);
         m.fleet_sync_errors.fetch_add(2, Ordering::Relaxed);
+        m.fleet_state.store(FLEET_STATE_BACKOFF, Ordering::Relaxed);
+        m.reports_dropped.fetch_add(5, Ordering::Relaxed);
+        m.reports_deduped.fetch_add(6, Ordering::Relaxed);
+        m.checkpoint_failures.fetch_add(2, Ordering::Relaxed);
         let fleet = FleetGauges { nodes: 3, prior_keys: 2, warm_starts: 4 };
         let trace = TraceGauges { recorded: 11, overwritten: 1 };
-        let page = m.render(5, 8, &t, &ResourceReport::default(), fleet, trace);
+        let chaos = ChaosGauges { enabled: true, injections: 9 };
+        let page = m.render(5, 8, &t, &ResourceReport::default(), fleet, trace, chaos);
         assert!(page.contains("lasp_serve_http_requests_total 3"), "{page}");
+        assert!(page.contains("lasp_serve_reports_dropped_total 5"), "{page}");
+        assert!(page.contains("lasp_serve_reports_deduped_total 6"), "{page}");
+        assert!(page.contains("lasp_serve_checkpoint_failures_total 2"), "{page}");
+        assert!(page.contains("lasp_serve_fleet_sync_state 2"), "{page}");
+        assert!(page.contains("lasp_serve_chaos_enabled 1"), "{page}");
+        assert!(page.contains("lasp_serve_chaos_injections_total 9"), "{page}");
         assert!(page.contains("lasp_serve_sessions 5"), "{page}");
         assert!(page.contains("lasp_serve_fleet_nodes 3"), "{page}");
         assert!(page.contains("lasp_serve_fleet_prior_keys 2"), "{page}");
@@ -327,6 +391,14 @@ mod tests {
         assert!(page.contains("lasp_serve_sync_pull_latency_us_count 0"), "{page}");
         assert!(page.contains("lasp_serve_checkpoint_latency_us_count 1"), "{page}");
         assert!(page.contains("lasp_serve_process_peak_rss_mib"));
+    }
+
+    #[test]
+    fn fleet_states_have_names() {
+        assert_eq!(fleet_state_name(FLEET_STATE_STANDALONE), "standalone");
+        assert_eq!(fleet_state_name(FLEET_STATE_SYNCING), "syncing");
+        assert_eq!(fleet_state_name(FLEET_STATE_BACKOFF), "backoff");
+        assert_eq!(fleet_state_name(77), "unknown");
     }
 
     /// Prometheus text-exposition lint over the full page: every sample
@@ -344,6 +416,7 @@ mod tests {
             &ResourceReport::default(),
             FleetGauges { nodes: 1, prior_keys: 1, warm_starts: 9 },
             TraceGauges { recorded: 5, overwritten: 0 },
+            ChaosGauges::default(),
         );
         assert!(page.ends_with('\n'), "page must end with a newline, no trailing garbage");
         let mut declared: std::collections::BTreeSet<String> = Default::default();

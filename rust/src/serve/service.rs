@@ -27,13 +27,14 @@
 //!
 //! [`ResourceReport`]: crate::telemetry::ResourceReport
 
-use super::batch::{BatchIngest, Report};
+use super::batch::{BatchIngest, Enqueue, Report};
 use super::checkpoint;
 use super::fleet::{self, FleetSnapshot, FleetStore, FleetSync, FleetSyncConfig};
 use super::http::{self, HttpHandler, HttpServer, Request, ResponseBuf, TransportStats};
-use super::metrics::{FleetGauges, Metrics, TraceGauges};
+use super::metrics::{fleet_state_name, ChaosGauges, FleetGauges, Metrics, TraceGauges};
 use super::store::{AppsCache, KeyRef, PolicyKind, ShardedStore, Tuner};
 use crate::apps::AppKind;
+use crate::chaos::{ChaosConfig, ChaosLayer, HandlerFault};
 use crate::device::PowerMode;
 use crate::obs::{self, EventKind, Recorder, TraceWriter};
 use crate::telemetry::ResourceTracker;
@@ -83,6 +84,9 @@ pub struct ServeConfig {
     /// (`LASPTRC1` format, decodable by `lasp trace dump`); `None` keeps
     /// tracing in-memory only (`GET /v1/trace`).
     pub trace_file: Option<PathBuf>,
+    /// Fault-injection layer (`--chaos <file.toml>` / `[chaos]` section);
+    /// `None` = no chaos code on any path (the zero-overhead default).
+    pub chaos: Option<ChaosConfig>,
 }
 
 impl Default for ServeConfig {
@@ -102,6 +106,7 @@ impl Default for ServeConfig {
             fleet_retain: 0.3,
             fleet_half_life: Duration::from_secs(600),
             trace_file: None,
+            chaos: None,
         }
     }
 }
@@ -129,6 +134,9 @@ impl ServeConfig {
         }
         if matches!(&self.leader, Some(l) if l.is_empty()) {
             return Err(anyhow!("serve: leader address must not be empty"));
+        }
+        if let Some(chaos) = &self.chaos {
+            chaos.validate()?;
         }
         Ok(())
     }
@@ -240,6 +248,9 @@ pub struct TuningService {
     local_agg: Mutex<Option<(Instant, Arc<Vec<FleetSnapshot>>)>>,
     /// The flight recorder every layer logs into (see [`crate::obs`]).
     recorder: Arc<Recorder>,
+    /// Seeded fault-injection layer; `None` (the default) keeps every
+    /// hot path chaos-free — call sites short-circuit on the `Option`.
+    chaos: Option<Arc<ChaosLayer>>,
 }
 
 /// Flight-recorder route code for a request (see [`obs::route`]).
@@ -271,6 +282,34 @@ impl TuningService {
         let t0 = Instant::now();
         let route = route_code(req.method, req.path);
         self.recorder.record(EventKind::ReqStart, route, 0, 0);
+        // Chaos handler faults fire after ReqStart so the trace shows the
+        // request that was hit; an injected error still flows through the
+        // shared epilogue (error counter + ReqEnd) like a real failure.
+        let mut faulted = false;
+        if let Some(chaos) = &self.chaos {
+            match chaos.handler_fault() {
+                Some(HandlerFault::Error) => faulted = true,
+                Some(HandlerFault::Delay(d)) => std::thread::sleep(d),
+                None => {}
+            }
+        }
+        if faulted {
+            out.error(503, "chaos: injected handler fault");
+        } else {
+            self.route(req, out);
+        }
+        if out.status() >= 400 {
+            self.metrics.http_errors.fetch_add(1, Ordering::Relaxed);
+        }
+        self.recorder.record(
+            EventKind::ReqEnd,
+            route,
+            out.status() as u64,
+            t0.elapsed().as_micros() as u64,
+        );
+    }
+
+    fn route(&self, req: &Request<'_>, out: &mut ResponseBuf) {
         match (req.method, req.path) {
             ("POST", "/v1/suggest") => self.suggest(req, out),
             ("POST", "/v1/report") => self.report(req, out),
@@ -285,15 +324,6 @@ impl TuningService {
             ("POST" | "GET", _) => out.error(404, "no such endpoint"),
             _ => out.error(405, "method not allowed"),
         }
-        if out.status() >= 400 {
-            self.metrics.http_errors.fetch_add(1, Ordering::Relaxed);
-        }
-        self.recorder.record(
-            EventKind::ReqEnd,
-            route,
-            out.status() as u64,
-            t0.elapsed().as_micros() as u64,
-        );
     }
 
     /// Read the session identity (+ weights) from a parameter source.
@@ -408,6 +438,16 @@ impl TuningService {
             (Some(t), Some(p)) if t.is_finite() && t > 0.0 && p.is_finite() && p >= 0.0 => (t, p),
             _ => return out.error(400, "missing/invalid time_s or power_w"),
         };
+        // Optional client sequence number: when present, duplicate and
+        // reordered deliveries inside the per-session window are absorbed
+        // by the shard updater instead of double-counting the reward.
+        let seq = match body.get("seq") {
+            None => None,
+            Some(v) => match v.as_usize() {
+                Some(s) => Some(s as u64),
+                None => return out.error(400, "invalid seq (expect a non-negative integer)"),
+            },
+        };
         let kref = pk.key_ref();
         let hash = kref.hash64();
         let id = self.store.intern(&kref, hash);
@@ -420,9 +460,10 @@ impl TuningService {
             arm,
             time_s,
             power_w,
+            seq,
         };
         match self.ingest.enqueue(shard_i, report, &self.metrics) {
-            Ok(()) => {
+            Ok(Enqueue::Queued) => {
                 self.metrics.reports_enqueued.fetch_add(1, Ordering::Relaxed);
                 out.set_status(202);
                 let mut w = JsonWriter::new(&mut out.body);
@@ -431,6 +472,7 @@ impl TuningService {
                 w.field_num("shard", shard_i as f64);
                 w.end_obj();
             }
+            Ok(Enqueue::Dropped) => out.error(503, "report queue full"),
             Err(e) => out.error(503, &e),
         }
         self.metrics.report_latency.observe(t0.elapsed());
@@ -479,7 +521,12 @@ impl TuningService {
             return out.error(400, "no checkpoint_dir configured");
         };
         let t0 = Instant::now();
-        match checkpoint::snapshot(&self.store, dir) {
+        match checkpoint::snapshot_with(
+            &self.store,
+            dir,
+            self.chaos.as_deref(),
+            Some(&self.metrics.checkpoint_failures),
+        ) {
             Ok(n) => {
                 let took = t0.elapsed();
                 self.metrics.checkpoints.fetch_add(1, Ordering::Relaxed);
@@ -649,6 +696,10 @@ impl TuningService {
         w.field_num("next_since", next_since as f64);
         w.field_num("recorded", self.recorder.recorded() as f64);
         w.field_num("overwritten", self.recorder.overwritten() as f64);
+        w.field_str(
+            "fleet_state",
+            fleet_state_name(self.metrics.fleet_state.load(Ordering::Relaxed)),
+        );
         w.field_bool("truncated", truncated);
         w.key("events");
         w.begin_arr();
@@ -781,6 +832,10 @@ impl TuningService {
             recorded: self.recorder.recorded(),
             overwritten: self.recorder.overwritten(),
         };
+        let chaos = ChaosGauges {
+            enabled: self.chaos.is_some(),
+            injections: self.chaos.as_ref().map_or(0, |c| c.injections()),
+        };
         let body = self.metrics.render(
             self.store.session_count(),
             self.store.num_shards(),
@@ -788,6 +843,7 @@ impl TuningService {
             &resources,
             fleet,
             trace,
+            chaos,
         );
         out.text(200, &body);
     }
@@ -906,6 +962,12 @@ pub fn start(cfg: ServeConfig) -> Result<ServerHandle> {
         Some(path) => Some(TraceWriter::start(recorder.clone(), path.clone())?),
         None => None,
     };
+    // The chaos layer is built once and shared by every injection
+    // surface; `None` keeps each surface's hot path a plain branch.
+    let chaos = cfg
+        .chaos
+        .clone()
+        .map(|c| Arc::new(ChaosLayer::new(c, recorder.clone())));
     let ingest = BatchIngest::start(
         store.clone(),
         apps.clone(),
@@ -913,6 +975,7 @@ pub fn start(cfg: ServeConfig) -> Result<ServerHandle> {
         recorder.clone(),
         cfg.queue_cap,
         cfg.max_batch,
+        chaos.clone(),
     );
     let service = Arc::new(TuningService {
         cfg: cfg.clone(),
@@ -927,13 +990,15 @@ pub fn start(cfg: ServeConfig) -> Result<ServerHandle> {
         prior_refresh: Mutex::new(None),
         local_agg: Mutex::new(None),
         recorder: recorder.clone(),
+        chaos: chaos.clone(),
     });
 
     let handler: HttpHandler = {
         let service = service.clone();
         Arc::new(move |req: &Request<'_>, out: &mut ResponseBuf| service.handle(req, out))
     };
-    let http = HttpServer::start_with_stats(listener, cfg.workers, handler, transport)?;
+    let http =
+        HttpServer::start_with_opts(listener, cfg.workers, handler, transport, chaos.clone())?;
     let addr = http.addr();
 
     // Follower plane: periodic push/pull against the configured leader.
@@ -950,6 +1015,7 @@ pub fn start(cfg: ServeConfig) -> Result<ServerHandle> {
             apps.clone(),
             metrics.clone(),
             recorder.clone(),
+            chaos.clone(),
         )
     });
 
@@ -961,6 +1027,7 @@ pub fn start(cfg: ServeConfig) -> Result<ServerHandle> {
         let recorder = recorder.clone();
         let stop = stop_checkpointer.clone();
         let every = cfg.checkpoint_every;
+        let chaos = chaos.clone();
         std::thread::spawn(move || {
             let mut last = Instant::now();
             loop {
@@ -970,7 +1037,12 @@ pub fn start(cfg: ServeConfig) -> Result<ServerHandle> {
                 }
                 if last.elapsed() >= every {
                     let t0 = Instant::now();
-                    if let Ok(n) = checkpoint::snapshot(&store, &dir) {
+                    if let Ok(n) = checkpoint::snapshot_with(
+                        &store,
+                        &dir,
+                        chaos.as_deref(),
+                        Some(&metrics.checkpoint_failures),
+                    ) {
                         let took = t0.elapsed();
                         metrics.checkpoints.fetch_add(1, Ordering::Relaxed);
                         metrics.checkpoint_sessions.fetch_add(n as u64, Ordering::Relaxed);

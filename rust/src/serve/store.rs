@@ -426,6 +426,68 @@ impl Tuner {
     }
 }
 
+/// Width of the per-session report idempotency window, in sequence
+/// numbers: duplicates and reorders within the last `SEQ_WINDOW`
+/// sequence numbers are absorbed, and anything older than the window is
+/// treated as an already-seen duplicate (at-least-once delivery means a
+/// very late retry is far more likely than a genuinely new report from
+/// the distant past).
+pub const SEQ_WINDOW: u64 = 128;
+
+/// Sliding acceptance window over client-assigned report sequence
+/// numbers, the idempotency half of at-least-once report delivery: a
+/// client that retries or a network that duplicates/reorders delivers
+/// the same `seq` more than once, and only the first copy may reach
+/// [`ArmStats`]. Fixed-width (`u128` bitmap), no allocation, in-memory
+/// only — it intentionally does not survive checkpoint restore, since a
+/// restart re-keys client retry state anyway (documented in
+/// `DESIGN.md` §Failure model).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SeqWindow {
+    /// Highest sequence number accepted so far.
+    head: u64,
+    /// Bit `i` set ⇔ `head - i` has been accepted (bit 0 = `head`).
+    bits: u128,
+    /// Whether any sequence number has been accepted yet.
+    any: bool,
+}
+
+impl SeqWindow {
+    /// Accept-or-reject one sequence number. Returns `true` exactly once
+    /// per distinct `seq` within the window; `false` means "duplicate
+    /// (or older than the window): absorb, do not apply".
+    pub fn accept(&mut self, seq: u64) -> bool {
+        if !self.any {
+            self.any = true;
+            self.head = seq;
+            self.bits = 1;
+            return true;
+        }
+        if seq > self.head {
+            let ahead = seq - self.head;
+            self.bits = if ahead >= SEQ_WINDOW { 0 } else { self.bits << ahead };
+            self.bits |= 1;
+            self.head = seq;
+            return true;
+        }
+        let back = self.head - seq;
+        if back >= SEQ_WINDOW {
+            return false;
+        }
+        let mask = 1u128 << back;
+        if self.bits & mask != 0 {
+            return false;
+        }
+        self.bits |= mask;
+        true
+    }
+
+    /// Highest accepted sequence number, if any.
+    pub fn head(&self) -> Option<u64> {
+        self.any.then_some(self.head)
+    }
+}
+
 /// One tuning session: key, weights, tuner, and traffic counters.
 pub struct Session {
     pub key: SessionKey,
@@ -444,6 +506,9 @@ pub struct Session {
     pub suggests: u64,
     /// Reports applied.
     pub reports: u64,
+    /// Idempotency window over client report sequence numbers (only
+    /// consulted for reports that carry a `seq` field).
+    pub seq_window: SeqWindow,
 }
 
 /// The sessions owned by one shard, keyed by interned [`SessionId`].
@@ -729,6 +794,7 @@ impl ShardedStore {
                     fleet_baseline,
                     suggests: 0,
                     reports: 0,
+                    seq_window: SeqWindow::default(),
                 };
                 Ok((v.insert(session), true))
             }
@@ -926,6 +992,46 @@ mod tests {
         });
         assert_eq!(t.join().unwrap(), 1);
         assert_eq!(g1.sessions.len(), 1);
+    }
+
+    #[test]
+    fn seq_window_absorbs_duplicates_and_reorders() {
+        let mut w = SeqWindow::default();
+        // First-ever seq initializes the window.
+        assert!(w.accept(10));
+        assert!(!w.accept(10), "duplicate of the head");
+        // In-window reorder: older seqs are accepted exactly once each.
+        assert!(w.accept(8));
+        assert!(w.accept(9));
+        assert!(!w.accept(8));
+        assert!(!w.accept(9));
+        // Forward progress.
+        assert!(w.accept(11));
+        assert_eq!(w.head(), Some(11));
+        assert!(!w.accept(11));
+        // A gap leaves the skipped seqs acceptable later (reorder), and
+        // everything older than the window is absorbed as a duplicate.
+        assert!(w.accept(11 + SEQ_WINDOW));
+        assert!(w.accept(11 + SEQ_WINDOW - 1), "in-window straggler");
+        assert!(!w.accept(11), "older than the window: absorbed");
+        assert!(!w.accept(0), "far past: absorbed");
+        // A jump much larger than the window clears the bitmap cleanly.
+        assert!(w.accept(10 * SEQ_WINDOW));
+        assert!(!w.accept(10 * SEQ_WINDOW));
+        assert!(w.accept(10 * SEQ_WINDOW - 1));
+    }
+
+    #[test]
+    fn seq_window_is_fresh_per_session() {
+        let store = ShardedStore::new(1);
+        let k = key("seq", AppKind::Clomp, PolicyKind::Ucb);
+        let id = store.intern(&k.as_ref(), k.hash64());
+        let mut shard = store.write_shard(0);
+        let (s, created) = store.get_or_create(&mut shard, id, 0.8, 0.2, 125).unwrap();
+        assert!(created);
+        assert_eq!(s.seq_window.head(), None);
+        assert!(s.seq_window.accept(1));
+        assert!(!s.seq_window.accept(1));
     }
 
     #[test]

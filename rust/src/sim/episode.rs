@@ -24,6 +24,7 @@
 use crate::apps::AppModel;
 use crate::bandit::RegretTracker;
 use crate::baselines::SearchStep;
+use crate::chaos::sim::DeliveryChaos;
 use crate::device::{Device, Measurement, NoiseModel, PowerMode};
 use crate::telemetry::{ResourceReport, ResourceTracker};
 use anyhow::Result;
@@ -42,6 +43,26 @@ pub enum EventAction {
     BusContention { slope: f64, threshold: f64 },
     /// The tenant leaves: end any bus contention.
     ClearContention,
+    /// Session churn storm: from here on each measurement report is lost
+    /// with probability `p` before the strategy sees it (clients vanishing
+    /// mid-session). `p = 0` ends the storm.
+    ChurnStorm { p: f64 },
+    /// Duplicate delivery: each report reaches the strategy twice with
+    /// probability `p` (an at-least-once transport re-sending). `p = 0`
+    /// ends the fault.
+    DuplicateReports { p: f64 },
+    /// Skewed-popularity duplication: each report is re-delivered
+    /// `rank − 1` extra times where `rank` is drawn from a Zipf(`s`)
+    /// distribution — a heavy-tailed hot-key storm. `s ≤ 0` disables.
+    ZipfDuplicates { s: f64 },
+    /// Delayed delivery: reports are buffered and re-ordered, arriving
+    /// 1..=`window`+1 iterations late. `window = 0` restores immediacy
+    /// (already-buffered reports still drain on schedule).
+    DelayReports { window: usize },
+    /// Node kill: from the event's iteration until iteration `until` the
+    /// node is down — nothing is selected or observed, the iteration
+    /// budget still burns, and buffered in-flight reports are lost.
+    Kill { until: usize },
 }
 
 /// An [`EventAction`] applied immediately before iteration `at` (0-based).
@@ -66,6 +87,10 @@ pub struct EpisodeSpec {
     pub track_resources: bool,
     /// Per-arm expected rewards for cumulative-regret accounting (Fig 11).
     pub regret_mu: Option<Vec<f64>>,
+    /// Seed for the delivery-chaos RNG (churn/duplicate/delay events).
+    /// Only consumed when the schedule contains chaos events, so plain
+    /// episodes are bit-identical to their pre-chaos behaviour.
+    pub chaos_seed: u64,
 }
 
 /// What one [`Episode::step`] did.
@@ -111,6 +136,12 @@ pub struct Episode<'a> {
     events: Vec<Event>,
     next_event: usize,
     contention: Option<(f64, f64)>,
+    /// Delivery-chaos router, armed lazily by the first chaos event so
+    /// chaos-free episodes never touch it (determinism + zero cost).
+    chaos: Option<DeliveryChaos>,
+    chaos_seed: u64,
+    /// `Some(until)` while a [`EventAction::Kill`] window is open.
+    kill_until: Option<usize>,
     t: usize,
     iterations: usize,
     done: bool,
@@ -139,6 +170,9 @@ impl<'a> Episode<'a> {
             events,
             next_event: 0,
             contention: None,
+            chaos: None,
+            chaos_seed: spec.chaos_seed,
+            kill_until: None,
             t: 0,
             iterations: spec.iterations,
             done: false,
@@ -172,6 +206,14 @@ impl<'a> Episode<'a> {
         self.device.switch_mode(mode);
     }
 
+    /// The delivery-chaos router, armed on first use.
+    fn chaos_mut(&mut self) -> &mut DeliveryChaos {
+        if self.chaos.is_none() {
+            self.chaos = Some(DeliveryChaos::new(self.chaos_seed));
+        }
+        self.chaos.as_mut().expect("just armed")
+    }
+
     fn apply_events(&mut self) {
         while self.next_event < self.events.len() && self.events[self.next_event].at <= self.t {
             match self.events[self.next_event].action {
@@ -181,6 +223,11 @@ impl<'a> Episode<'a> {
                     self.contention = Some((slope, threshold));
                 }
                 EventAction::ClearContention => self.contention = None,
+                EventAction::ChurnStorm { p } => self.chaos_mut().set_churn(p),
+                EventAction::DuplicateReports { p } => self.chaos_mut().set_dup(p),
+                EventAction::ZipfDuplicates { s } => self.chaos_mut().set_zipf(s),
+                EventAction::DelayReports { window } => self.chaos_mut().set_delay(window),
+                EventAction::Kill { until } => self.kill_until = Some(until),
             }
             self.next_event += 1;
         }
@@ -193,6 +240,35 @@ impl<'a> Episode<'a> {
             return Ok(None);
         }
         self.apply_events();
+
+        // Open kill window: the node is down. The iteration budget still
+        // burns, nothing is selected or observed, and whatever the delay
+        // buffer held dies with the process.
+        while let Some(until) = self.kill_until {
+            if self.t >= until {
+                self.kill_until = None;
+                break;
+            }
+            if let Some(c) = &mut self.chaos {
+                c.clear_in_flight();
+            }
+            self.t += 1;
+            if self.t >= self.iterations {
+                return Ok(None);
+            }
+            self.apply_events();
+        }
+
+        // Drain delayed reports that are due this iteration *before*
+        // selecting, so the strategy decides on everything that has
+        // arrived by now (matching a real async report pipeline).
+        {
+            let t = self.t;
+            let (chaos, strategy) = (&mut self.chaos, &mut self.strategy);
+            if let Some(c) = chaos.as_mut() {
+                c.deliver_due(t, &mut |arm, fid, m| strategy.observe(arm, fid, m));
+            }
+        }
 
         let sel_start = std::time::Instant::now();
         let decision = self.strategy.next()?;
@@ -211,7 +287,18 @@ impl<'a> Episode<'a> {
         self.device_seconds += m.time_s;
 
         let upd_start = std::time::Instant::now();
-        self.strategy.observe(d.index, fidelity, m);
+        {
+            let t = self.t;
+            let (chaos, strategy) = (&mut self.chaos, &mut self.strategy);
+            match chaos.as_mut() {
+                None => strategy.observe(d.index, fidelity, m),
+                Some(c) => {
+                    c.route(t, d.index, fidelity, m, &mut |arm, fid, mm| {
+                        strategy.observe(arm, fid, mm)
+                    });
+                }
+            }
+        }
         self.tuner_seconds += upd_start.elapsed().as_secs_f64();
 
         if let Some(r) = &mut self.regret {
@@ -372,5 +459,81 @@ mod tests {
         let regret = out.regret.unwrap();
         assert_eq!(regret.len(), 90);
         assert!(regret.windows(2).all(|w| w[1] >= w[0] - 1e-9));
+    }
+
+    #[test]
+    fn churn_storm_loses_every_observation() {
+        let spec =
+            EpisodeSpec { iterations: 60, record_trace: true, chaos_seed: 11, ..Default::default() };
+        let out = episode_outcome(
+            &[Event { at: 0, action: EventAction::ChurnStorm { p: 1.0 } }],
+            &spec,
+            8,
+        );
+        // Every report dropped before the strategy saw it: the episode
+        // still ran its budget but the tuner recorded zero pulls.
+        assert_eq!(out.trace.as_ref().unwrap().len(), 60);
+        assert_eq!(out.counts.unwrap().iter().sum::<f64>(), 0.0);
+    }
+
+    #[test]
+    fn duplicate_reports_double_count_without_idempotency() {
+        let spec = EpisodeSpec { iterations: 50, chaos_seed: 12, ..Default::default() };
+        let out = episode_outcome(
+            &[Event { at: 0, action: EventAction::DuplicateReports { p: 1.0 } }],
+            &spec,
+            8,
+        );
+        // The sim strategy has no sequence numbers, so an at-least-once
+        // transport doubles its pull counts — the failure mode the serve
+        // path's seq window exists to absorb.
+        assert_eq!(out.counts.unwrap().iter().sum::<f64>(), 100.0);
+    }
+
+    #[test]
+    fn delayed_reports_arrive_late_but_mostly_arrive() {
+        let spec = EpisodeSpec { iterations: 60, chaos_seed: 13, ..Default::default() };
+        let out = episode_outcome(
+            &[Event { at: 0, action: EventAction::DelayReports { window: 4 } }],
+            &spec,
+            8,
+        );
+        let sum = out.counts.unwrap().iter().sum::<f64>();
+        // Only the tail (due after the budget ends, ≤ window+1 reports)
+        // can be lost.
+        assert!((55.0..60.0).contains(&sum), "delayed delivery sum {sum}");
+    }
+
+    #[test]
+    fn kill_window_burns_budget_without_observations() {
+        let spec =
+            EpisodeSpec { iterations: 50, record_trace: true, chaos_seed: 14, ..Default::default() };
+        let out = episode_outcome(
+            &[Event { at: 10, action: EventAction::Kill { until: 30 } }],
+            &spec,
+            8,
+        );
+        // 20 iterations burned while down: the budget is spent but only
+        // 30 select/observe rounds happened.
+        assert_eq!(out.evaluations, 50);
+        assert_eq!(out.trace.as_ref().unwrap().len(), 30);
+        assert_eq!(out.counts.unwrap().iter().sum::<f64>(), 30.0);
+    }
+
+    #[test]
+    fn chaos_schedules_replay_bit_identically() {
+        let events = [
+            Event { at: 5, action: EventAction::ChurnStorm { p: 0.3 } },
+            Event { at: 20, action: EventAction::DuplicateReports { p: 0.4 } },
+            Event { at: 40, action: EventAction::DelayReports { window: 3 } },
+            Event { at: 60, action: EventAction::Kill { until: 70 } },
+        ];
+        let spec =
+            EpisodeSpec { iterations: 90, record_trace: true, chaos_seed: 21, ..Default::default() };
+        let a = episode_outcome(&events, &spec, 9);
+        let b = episode_outcome(&events, &spec, 9);
+        assert_eq!(a.trace, b.trace);
+        assert_eq!(a.counts, b.counts);
+        assert_eq!(a.best_index, b.best_index);
     }
 }

@@ -63,6 +63,9 @@ pub fn run_scenario(cell: &Scenario) -> Result<EpisodeOutcome> {
         record_history: false,
         track_resources: false,
         regret_mu,
+        // Decorrelated from the device/strategy seed so chaos draws never
+        // echo measurement noise, yet still a pure function of the cell.
+        chaos_seed: cell.seed ^ 0x9E37_79B9_7F4A_7C15,
     };
     // Replay is built here, not in `StrategySpec::build`: only the
     // scenario carries the capture file it feeds from.

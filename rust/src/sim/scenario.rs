@@ -335,8 +335,29 @@ fn parse_seeds(s: &str) -> Result<Vec<u64>> {
 /// * `bus@600=4x0.45` — bus contention with slope 4 above memory-intensity
 ///   threshold 0.45;
 /// * `clear@800` — end the bus contention.
+///
+/// Chaos actions (seeded from the cell, replayable at any thread count):
+///
+/// * `churn@100=0.3` — session churn storm: each report lost with
+///   probability 0.3 (`=0` ends the storm);
+/// * `dup@200=0.5` — duplicate delivery with probability 0.5 per report;
+/// * `zipf@300=1.2` — skewed-popularity re-delivery, Zipf exponent 1.2
+///   (`s` in (0, 8]);
+/// * `delay@400=4` — buffer and reorder reports, arriving 1..=5
+///   iterations late (`=0` restores immediate delivery);
+/// * `kill@500=550` — node down from iteration 500 until 550 (budget
+///   burns, nothing selected or observed, in-flight reports lost).
 pub fn parse_events(s: &str) -> Result<Vec<Event>> {
     split_list(s).map(parse_event).collect()
+}
+
+/// Parse a probability-valued chaos arg in [0, 1).
+fn chaos_prob(s: &str, arg: &str) -> Result<f64> {
+    let p: f64 = arg.parse().map_err(|_| anyhow!("event '{s}': bad probability '{arg}'"))?;
+    if !(0.0..1.0).contains(&p) {
+        return Err(anyhow!("event '{s}': probability must lie in [0, 1)"));
+    }
+    Ok(p)
 }
 
 fn parse_event(s: &str) -> Result<Event> {
@@ -381,8 +402,40 @@ fn parse_event(s: &str) -> Result<Event> {
             EventAction::BusContention { slope, threshold }
         }
         "clear" => EventAction::ClearContention,
+        "churn" => EventAction::ChurnStorm { p: chaos_prob(s, need("probability")?)? },
+        "dup" => EventAction::DuplicateReports { p: chaos_prob(s, need("probability")?)? },
+        "zipf" => {
+            let exp: f64 = need("exponent")?
+                .parse()
+                .map_err(|_| anyhow!("event '{s}': bad zipf exponent"))?;
+            if !(0.0..=8.0).contains(&exp) {
+                return Err(anyhow!("event '{s}': zipf exponent must lie in [0, 8] (0 disables)"));
+            }
+            EventAction::ZipfDuplicates { s: exp }
+        }
+        "delay" => {
+            let window: usize = need("window")?
+                .parse()
+                .map_err(|_| anyhow!("event '{s}': bad delay window"))?;
+            if window > 10_000 {
+                return Err(anyhow!("event '{s}': delay window must be <= 10000"));
+            }
+            EventAction::DelayReports { window }
+        }
+        "kill" => {
+            let until: usize = need("until")?
+                .parse()
+                .map_err(|_| anyhow!("event '{s}': bad kill end iteration"))?;
+            if until <= at {
+                return Err(anyhow!("event '{s}': kill end {until} must be > start {at}"));
+            }
+            EventAction::Kill { until }
+        }
         other => {
-            return Err(anyhow!("event '{s}': unknown action '{other}' (mode|noise|bus|clear)"))
+            return Err(anyhow!(
+                "event '{s}': unknown action '{other}' \
+                 (mode|noise|bus|clear|churn|dup|zipf|delay|kill)"
+            ))
         }
     };
     Ok(Event { at, action })
@@ -469,6 +522,35 @@ mod tests {
         assert!(ScenarioGrid::from_toml_str("[sim]\niterations = 0\n").is_err());
         // Replay without a capture file is a parse-time error.
         assert!(ScenarioGrid::from_toml_str("[sim]\nstrategies = \"replay\"\n").is_err());
+    }
+
+    #[test]
+    fn parses_chaos_events() {
+        let events = parse_events(
+            "churn@100=0.3, dup@200=0.5, zipf@300=1.2, delay@400=4, kill@500=550, churn@600=0",
+        )
+        .unwrap();
+        assert_eq!(events.len(), 6);
+        assert_eq!(events[0], Event { at: 100, action: EventAction::ChurnStorm { p: 0.3 } });
+        assert_eq!(events[1], Event { at: 200, action: EventAction::DuplicateReports { p: 0.5 } });
+        assert_eq!(events[2], Event { at: 300, action: EventAction::ZipfDuplicates { s: 1.2 } });
+        assert_eq!(events[3], Event { at: 400, action: EventAction::DelayReports { window: 4 } });
+        assert_eq!(events[4], Event { at: 500, action: EventAction::Kill { until: 550 } });
+        assert_eq!(events[5], Event { at: 600, action: EventAction::ChurnStorm { p: 0.0 } });
+    }
+
+    #[test]
+    fn rejects_malformed_chaos_events() {
+        // Probabilities must lie in [0, 1); 1.0 would drop everything forever.
+        assert!(parse_events("churn@10=1.0").is_err());
+        assert!(parse_events("dup@10=-0.1").is_err());
+        assert!(parse_events("churn@10").is_err());
+        // Zipf exponent bounded; delay window bounded; kill must end later.
+        assert!(parse_events("zipf@10=9.0").is_err());
+        assert!(parse_events("delay@10=20000").is_err());
+        assert!(parse_events("kill@50=50").is_err());
+        assert!(parse_events("kill@50=10").is_err());
+        assert!(parse_events("kill@50").is_err());
     }
 
     #[test]

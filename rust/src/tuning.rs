@@ -94,6 +94,7 @@ impl TuningSession {
             record_history: self.config.record_history,
             track_resources: true,
             regret_mu: self.regret_mu.clone(),
+            chaos_seed: 0,
         };
         let out = {
             let mut step = PolicyStep::new(self.policy.as_mut());

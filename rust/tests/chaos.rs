@@ -1,0 +1,448 @@
+//! Chaos-engine integration suite: boots the real serve stack with the
+//! `[chaos]` layer armed and pins the hardening invariants the layer
+//! exists to prove — no reward double-counted under duplicate delivery,
+//! fleet merges idempotent under replayed pushes, trace cursors monotone
+//! while faults fire, kill/rejoin converging to the unfaulted best arm,
+//! and chaos-laden sim grids bit-identical at any thread count.
+//!
+//! Every probabilistic test draws its seed from `LASP_CHAOS_SEED` (CI's
+//! randomized smoke) and bakes the seed into assertion messages so a
+//! failure is reproducible with `LASP_CHAOS_SEED=<seed> cargo test`.
+
+use lasp::apps::AppKind;
+use lasp::chaos::ChaosConfig;
+use lasp::device::PowerMode;
+use lasp::serve::{start, HttpClient, ServeConfig};
+use lasp::sim::{parse_events, Scenario, ScenarioGrid, SweepResult, SweepRunner};
+use lasp::util::json::Json;
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+/// The seed every chaos test runs under: `LASP_CHAOS_SEED` when set (the
+/// CI randomized smoke), the layer's default otherwise.
+fn chaos_seed() -> u64 {
+    std::env::var("LASP_CHAOS_SEED")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0xC0FFEE)
+}
+
+fn chaos_cfg(seed: u64) -> ChaosConfig {
+    ChaosConfig { seed, ..ChaosConfig::default() }
+}
+
+fn serve_cfg(chaos: ChaosConfig) -> ServeConfig {
+    ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        workers: 2,
+        shards: 1,
+        checkpoint_dir: None,
+        chaos: Some(chaos),
+        ..ServeConfig::default()
+    }
+}
+
+fn body(client: &str, extra: &[(&str, Json)]) -> Json {
+    let mut obj = BTreeMap::new();
+    obj.insert("client_id".to_string(), Json::Str(client.to_string()));
+    obj.insert("app".to_string(), Json::Str("clomp".to_string()));
+    obj.insert("device".to_string(), Json::Str("maxn".to_string()));
+    obj.insert("alpha".to_string(), Json::Num(1.0));
+    obj.insert("beta".to_string(), Json::Num(0.0));
+    for (k, v) in extra {
+        obj.insert((*k).to_string(), v.clone());
+    }
+    Json::Obj(obj)
+}
+
+fn best_query(client: &str) -> String {
+    format!("/v1/best?client_id={client}&app=clomp&device=maxn&alpha=1.0&beta=0.0")
+}
+
+fn wait_until<F: FnMut() -> bool>(mut cond: F, timeout: Duration) -> bool {
+    let deadline = Instant::now() + timeout;
+    while Instant::now() < deadline {
+        if cond() {
+            return true;
+        }
+        std::thread::sleep(Duration::from_millis(25));
+    }
+    cond()
+}
+
+fn metric_value(text: &str, name: &str) -> f64 {
+    text.lines()
+        .find_map(|l| l.strip_prefix(name).and_then(|rest| rest.trim().parse::<f64>().ok()))
+        .unwrap_or(0.0)
+}
+
+fn metrics_text(client: &mut HttpClient) -> String {
+    let (status, page) = client.get("/metrics").unwrap();
+    assert_eq!(status, 200);
+    page.as_str().unwrap_or_default().to_string()
+}
+
+/// Suggest + report one round for `client_id`; `seq` opts the report into
+/// the idempotency window. Returns the suggested arm.
+fn one_round(client: &mut HttpClient, client_id: &str, seq: Option<u64>) -> usize {
+    let (status, resp) = client.post("/v1/suggest", &body(client_id, &[])).unwrap();
+    assert_eq!(status, 200, "suggest failed: {resp:?}");
+    let arm = resp.get("arm").and_then(Json::as_usize).unwrap();
+    let mut extra = vec![
+        ("arm", Json::Num(arm as f64)),
+        ("time_s", Json::Num(1.0 + (arm % 7) as f64 * 0.1)),
+        ("power_w", Json::Num(5.0)),
+    ];
+    if let Some(s) = seq {
+        extra.push(("seq", Json::Num(s as f64)));
+    }
+    let (status, resp) = client.post("/v1/report", &body(client_id, &extra)).unwrap();
+    assert_eq!(status, 202, "report not queued: {resp:?}");
+    arm
+}
+
+fn total_pulls(client: &mut HttpClient, client_id: &str) -> f64 {
+    let (status, b) = client.get(&best_query(client_id)).unwrap();
+    assert_eq!(status, 200, "{b:?}");
+    b.get("total_pulls").and_then(Json::as_f64).unwrap_or(0.0)
+}
+
+/// Duplicate delivery (the `batch_flush` chaos point redelivers every
+/// report) must not double-count rewards — *when* the client carries a
+/// `seq` number. A seq-less client genuinely double-counts, which is the
+/// contrast proving the faults actually fired.
+#[test]
+fn duplicate_delivery_never_double_counts_sequenced_reports() {
+    let seed = chaos_seed();
+    let handle = start(serve_cfg(ChaosConfig { flush_duplicate: 1.0, ..chaos_cfg(seed) })).unwrap();
+    let addr = handle.addr().to_string();
+    let mut client = HttpClient::connect(&addr).unwrap();
+
+    let rounds = 40u64;
+    for i in 0..rounds {
+        one_round(&mut client, "careful", Some(i));
+        one_round(&mut client, "naive", None);
+    }
+
+    assert!(
+        wait_until(
+            || {
+                total_pulls(&mut client, "careful") == rounds as f64
+                    && total_pulls(&mut client, "naive") == 2.0 * rounds as f64
+            },
+            Duration::from_secs(15),
+        ),
+        "seed={seed}: careful={} (want {rounds}), naive={} (want {})",
+        total_pulls(&mut client, "careful"),
+        total_pulls(&mut client, "naive"),
+        2 * rounds,
+    );
+
+    let m = metrics_text(&mut client);
+    assert!(metric_value(&m, "lasp_serve_chaos_enabled") == 1.0, "{m}");
+    assert!(metric_value(&m, "lasp_serve_chaos_injections_total") >= rounds as f64, "{m}");
+    assert!(
+        metric_value(&m, "lasp_serve_reports_deduped_total") >= rounds as f64,
+        "seed={seed}: dedup counter missing the rejected duplicates: {m}"
+    );
+    handle.shutdown().unwrap();
+}
+
+/// A fleet push replayed verbatim (a retrying peer, a duplicated packet)
+/// merges idempotently: three identical pushes leave exactly one copy of
+/// the evidence, end to end through a pull.
+#[test]
+fn replayed_fleet_pushes_merge_idempotently() {
+    let handle = start(ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        workers: 2,
+        shards: 1,
+        checkpoint_dir: None,
+        node_id: Some("solo".to_string()),
+        ..ServeConfig::default()
+    })
+    .unwrap();
+    let addr = handle.addr().to_string();
+    let mut client = HttpClient::connect(&addr).unwrap();
+
+    let arr = |v: Vec<f64>| Json::Arr(v.into_iter().map(Json::Num).collect());
+    let mut snap = BTreeMap::new();
+    snap.insert("app".to_string(), Json::Str("clomp".to_string()));
+    snap.insert("device".to_string(), Json::Str("maxn".to_string()));
+    snap.insert("policy".to_string(), Json::Str("ucb".to_string()));
+    snap.insert("age_s".to_string(), Json::Num(0.0));
+    snap.insert("arms".to_string(), arr(vec![7.0]));
+    snap.insert("counts".to_string(), arr(vec![40.0]));
+    snap.insert("tau_sum".to_string(), arr(vec![12.0]));
+    snap.insert("rho_sum".to_string(), arr(vec![200.0]));
+    let mut push = BTreeMap::new();
+    push.insert("node_id".to_string(), Json::Str("replayer".to_string()));
+    push.insert("snapshots".to_string(), Json::Arr(vec![Json::Obj(snap)]));
+    let push = Json::Obj(push);
+
+    for i in 0..3 {
+        let (status, resp) = client.post("/v1/sync/push", &push).unwrap();
+        assert_eq!(status, 200, "push {i}: {resp:?}");
+        assert_eq!(resp.get("nodes").and_then(Json::as_usize), Some(1), "push {i} not idempotent");
+    }
+
+    let mut pull = BTreeMap::new();
+    pull.insert("node_id".to_string(), Json::Str("reader".to_string()));
+    let (status, resp) = client.post("/v1/sync/pull", &Json::Obj(pull)).unwrap();
+    assert_eq!(status, 200);
+    let snaps = resp.get("snapshots").and_then(Json::as_arr).unwrap();
+    assert_eq!(snaps.len(), 1, "{resp:?}");
+    let c0 = snaps[0].get("counts").and_then(Json::as_arr).unwrap()[0].as_f64().unwrap();
+    assert!((c0 - 40.0).abs() < 1.0, "replayed push double-counted: {c0}");
+    handle.shutdown().unwrap();
+}
+
+/// While handler faults fire, `/v1/trace` cursors stay strictly monotone,
+/// every injection surfaces as a `chaos` event naming its fault point,
+/// and the degraded-mode `fleet_state` field is present.
+#[test]
+fn trace_cursors_stay_monotone_while_faults_fire() {
+    let seed = chaos_seed();
+    let handle = start(serve_cfg(ChaosConfig {
+        handler_error: 0.3,
+        handler_delay: 0.1,
+        handler_delay_ms: 1,
+        ..chaos_cfg(seed)
+    }))
+    .unwrap();
+    let addr = handle.addr().to_string();
+    let mut traffic = HttpClient::connect(&addr).unwrap();
+    let mut probe = HttpClient::connect(&addr).unwrap();
+
+    // The handler fault point fires before routing, so even probe reads
+    // can draw an injected 503 — retry until one gets through (P(40
+    // consecutive injections at p=0.4) ≈ 1e-16, for any seed).
+    fn fetch_ok(probe: &mut HttpClient, addr: &str, path: &str, seed: u64) -> Json {
+        for _ in 0..40 {
+            match probe.get(path) {
+                Ok((200, page)) => return page,
+                Ok((503, _)) => {}
+                Ok((status, resp)) => {
+                    panic!("seed={seed}: unexpected status {status} for {path}: {resp:?}")
+                }
+                Err(_) => *probe = HttpClient::connect(addr).unwrap(),
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        panic!("seed={seed}: 40 consecutive injected faults on {path}");
+    }
+
+    let (mut cursor, mut faulted, mut chaos_events, mut handler_points) = (0u64, 0u32, 0u32, 0u32);
+    for i in 0..200 {
+        // An injected fault may cost us the connection; that is the point.
+        match traffic.post("/v1/suggest", &body("storm", &[])) {
+            Ok((200, _)) => {}
+            Ok((503, _)) => faulted += 1,
+            Ok((status, resp)) => panic!("seed={seed}: unexpected status {status}: {resp:?}"),
+            Err(_) => {
+                faulted += 1;
+                traffic = HttpClient::connect(&addr).unwrap();
+            }
+        }
+        if i % 20 != 19 {
+            continue;
+        }
+        let page = fetch_ok(&mut probe, &addr, &format!("/v1/trace?since={cursor}"), seed);
+        let next = page.get("next_since").and_then(Json::as_f64).unwrap() as u64;
+        assert!(next >= cursor, "seed={seed}: cursor went backwards {cursor} -> {next}");
+        assert!(
+            page.get("fleet_state").and_then(Json::as_str).is_some(),
+            "seed={seed}: trace page lost the degraded-mode field: {page:?}"
+        );
+        let events = page.get("events").and_then(Json::as_arr).unwrap();
+        let mut prev = None;
+        for e in events {
+            let seq = e.get("seq").and_then(Json::as_f64).unwrap() as u64;
+            assert!(seq >= cursor, "seed={seed}: drained event below the cursor");
+            assert!(prev.map_or(true, |p| seq > p), "seed={seed}: seq not strictly monotone");
+            prev = Some(seq);
+            if e.get("kind").and_then(Json::as_str) == Some("chaos") {
+                chaos_events += 1;
+                if e.get("point").and_then(Json::as_str) == Some("handler") {
+                    handler_points += 1;
+                }
+            }
+        }
+        cursor = next;
+    }
+
+    // P(zero injections over 200 requests at p≥0.3) < 1e-30: any seed
+    // must have produced faults, and every fault must have left a trace.
+    assert!(faulted > 0, "seed={seed}: chaos layer never injected");
+    assert!(chaos_events > 0, "seed={seed}: injections missing from the flight recorder");
+    assert!(handler_points > 0, "seed={seed}: chaos events lost their fault-point name");
+    let m = fetch_ok(&mut probe, &addr, "/metrics", seed);
+    let m = m.as_str().unwrap_or_default();
+    assert!(
+        metric_value(m, "lasp_serve_chaos_injections_total") >= faulted as f64,
+        "seed={seed}: {m}"
+    );
+    handle.shutdown().unwrap();
+}
+
+/// A node killed mid-sweep (its reports lost, its budget burning) rejoins
+/// and still converges to the best arm an unfaulted run finds, within a
+/// bounded extra-rounds budget: the kill window plus slack.
+#[test]
+fn kill_and_rejoin_converges_to_the_unfaulted_best_arm() {
+    let seed = chaos_seed();
+    let baseline = vec![Scenario::lasp(AppKind::Clomp, PowerMode::Maxn, 600, seed)];
+    let unfaulted = SweepRunner::new(2).run(&baseline).unwrap();
+
+    // Kill at 150 until 450: 300 decisions burned, budget 600+300+50.
+    let faulted_cells = vec![Scenario::lasp(AppKind::Clomp, PowerMode::Maxn, 950, seed)
+        .with_events(parse_events("kill@150=450").unwrap())
+        .recording_trace()];
+    let faulted = SweepRunner::new(2).run(&faulted_cells).unwrap();
+
+    assert_eq!(faulted[0].evaluations, 950, "kill window must still burn budget");
+    assert_eq!(
+        faulted[0].trace.as_ref().map(Vec::len),
+        Some(950 - 300),
+        "seed={seed}: decisions inside the kill window should not exist"
+    );
+    assert_eq!(
+        faulted[0].best_index, unfaulted[0].best_index,
+        "seed={seed}: kill/rejoin diverged from the unfaulted best arm"
+    );
+}
+
+/// A scenario grid with every chaos schedule armed through the TOML DSL
+/// replays bit-identically at any sweep thread count — the determinism
+/// contract that makes a chaotic run debuggable.
+#[test]
+fn chaos_grids_replay_bit_identically_at_any_thread_count() {
+    let seed = chaos_seed();
+    let mut grid = ScenarioGrid::from_toml_str(
+        "[sim]\n\
+         events = \"churn@50=0.2, dup@150=0.3, zipf@250=1.1, delay@350=3, kill@450=520\"\n",
+    )
+    .unwrap();
+    grid.iterations = 600;
+    grid.seeds = vec![seed, seed ^ 0x5DEECE66D];
+    grid.record_trace = true;
+    let cells = grid.cells();
+
+    let jsons: Vec<String> = [1usize, 4, 1]
+        .iter()
+        .map(|&threads| {
+            let outcomes = SweepRunner::new(threads).run(&cells).unwrap();
+            SweepResult { cells: cells.clone(), outcomes }.to_json()
+        })
+        .collect();
+    assert_eq!(jsons[0], jsons[1], "seed={seed}: chaos grid diverged between 1 and 4 threads");
+    assert_eq!(jsons[0], jsons[2], "seed={seed}: chaos grid is not re-runnable");
+}
+
+/// Injected fleet-sync failures drive the node into the explicit backoff
+/// state (visible in `/metrics`) while the data plane keeps serving.
+#[test]
+fn injected_fleet_failures_enter_backoff_and_keep_serving() {
+    let seed = chaos_seed();
+    let leader = start(ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        workers: 2,
+        shards: 1,
+        checkpoint_dir: None,
+        ..ServeConfig::default()
+    })
+    .unwrap();
+    let follower = start(ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        workers: 2,
+        shards: 1,
+        checkpoint_dir: None,
+        leader: Some(leader.addr().to_string()),
+        node_id: Some("chaotic".to_string()),
+        sync_every: Duration::from_millis(100),
+        chaos: Some(ChaosConfig { fleet_fail: 1.0, ..chaos_cfg(seed) }),
+        ..ServeConfig::default()
+    })
+    .unwrap();
+    let follower_addr = follower.addr().to_string();
+    let mut probe = HttpClient::connect(&follower_addr).unwrap();
+
+    assert!(
+        wait_until(
+            || metric_value(&metrics_text(&mut probe), "lasp_serve_fleet_sync_state") == 2.0,
+            Duration::from_secs(20),
+        ),
+        "seed={seed}: follower never entered backoff: {}",
+        metrics_text(&mut probe)
+    );
+    let m = metrics_text(&mut probe);
+    assert!(metric_value(&m, "lasp_serve_chaos_injections_total") >= 1.0, "seed={seed}: {m}");
+
+    // Degraded mode still serves the data plane.
+    let mut client = HttpClient::connect(&follower_addr).unwrap();
+    for _ in 0..10 {
+        one_round(&mut client, "degraded", None);
+    }
+    let (status, health) = client.get("/healthz").unwrap();
+    assert_eq!(status, 200);
+    assert_eq!(health.get("ok"), Some(&Json::Bool(true)));
+
+    follower.shutdown().unwrap();
+    leader.shutdown().unwrap();
+}
+
+/// Checkpoint write failures are retried, counted, and never take the
+/// serving plane down; the last-good file survives (pinned at the unit
+/// level in `serve/checkpoint.rs` — this is the end-to-end half).
+#[test]
+fn injected_checkpoint_failures_are_counted_and_survivable() {
+    let seed = chaos_seed();
+    let dir = std::env::temp_dir().join(format!("lasp-chaos-ckpt-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let handle = start(ServeConfig {
+        checkpoint_dir: Some(dir.clone()),
+        checkpoint_every: Duration::from_secs(3600),
+        ..serve_cfg(ChaosConfig { checkpoint_fail: 1.0, ..chaos_cfg(seed) })
+    })
+    .unwrap();
+    let addr = handle.addr().to_string();
+    let mut client = HttpClient::connect(&addr).unwrap();
+    one_round(&mut client, "ckpt", None);
+
+    // Every write attempt fails: the snapshot errors after its retries…
+    let (status, resp) = client.post("/v1/checkpoint", &Json::Obj(BTreeMap::new())).unwrap();
+    assert_eq!(status, 500, "seed={seed}: {resp:?}");
+    let m = metrics_text(&mut client);
+    assert!(
+        metric_value(&m, "lasp_serve_checkpoint_failures_total") >= 1.0,
+        "seed={seed}: {m}"
+    );
+
+    // …and the node shrugs it off.
+    for _ in 0..5 {
+        one_round(&mut client, "ckpt", None);
+    }
+    let (status, health) = client.get("/healthz").unwrap();
+    assert_eq!(status, 200);
+    assert_eq!(health.get("ok"), Some(&Json::Bool(true)));
+
+    handle.shutdown().unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The `--chaos` config surface rejects malformed files and sections with
+/// actionable errors instead of arming a half-configured layer.
+#[test]
+fn chaos_config_rejects_malformed_input() {
+    assert!(ChaosConfig::from_toml_str("[serve]\nworkers = 2\n").is_err(), "missing section");
+    assert!(ChaosConfig::from_toml_str("[chaos]\nhandler_error = 1.5\n").is_err());
+    assert!(ChaosConfig::from_toml_str("[chaos]\naccept_drop = -0.1\n").is_err());
+    assert!(ChaosConfig::from_toml_str("[chaos]\nhandler_delay_ms = 99999\n").is_err());
+    let cfg = ChaosConfig::from_toml_str("[chaos]\nseed = 7\nflush_duplicate = 0.25\n").unwrap();
+    assert_eq!(cfg.seed, 7);
+    assert_eq!(cfg.flush_duplicate, 0.25);
+    assert!(
+        ChaosConfig::from_file(std::path::Path::new("/nonexistent/chaos.toml")).is_err(),
+        "missing file must error cleanly"
+    );
+}

@@ -219,11 +219,60 @@ fn design_documents_observability() {
     // The event schema table names every event kind the recorder emits.
     for kind in [
         "req_start", "req_end", "suggest", "report_apply", "batch_flush", "fleet_push",
-        "fleet_pull", "fleet_merge", "checkpoint", "session_create", "measure",
+        "fleet_pull", "fleet_merge", "checkpoint", "session_create", "measure", "chaos",
     ] {
         assert!(
             DESIGN_MD.contains(kind),
             "DESIGN.md event schema missing kind '{kind}'"
+        );
+    }
+}
+
+#[test]
+fn design_documents_failure_model_and_chaos_layer() {
+    // §Failure model: fault points, degraded-mode states, idempotency
+    // window semantics, and the chaos layer that exercises them.
+    for needle in [
+        "Failure model",
+        "[chaos]",
+        "--chaos",
+        "batch_flush",
+        "fleet_sync",
+        "checkpoint_write",
+        "standalone",
+        "syncing",
+        "backoff",
+        "SeqWindow",
+        "idempotency window",
+        "lasp_serve_reports_dropped_total",
+        "lasp_serve_checkpoint_failures_total",
+        "LASP_CHAOS_SEED",
+    ] {
+        assert!(
+            DESIGN_MD.contains(needle),
+            "DESIGN.md missing '{needle}' (failure-model section)"
+        );
+    }
+    // The scenario schema documents every adversarial event action.
+    for action in ["churn@", "dup@", "zipf@", "delay@", "kill@"] {
+        assert!(
+            DESIGN_MD.contains(action),
+            "DESIGN.md scenario schema missing chaos event action '{action}'"
+        );
+    }
+    // The API reference documents the idempotency field and the
+    // degraded-mode surfaces clients can observe.
+    for needle in [
+        "`seq`",
+        "report queue full",
+        "lasp_serve_fleet_sync_state",
+        "fleet_state",
+        "lasp_serve_chaos_injections_total",
+        "lasp_serve_reports_deduped_total",
+    ] {
+        assert!(
+            API_MD.contains(needle),
+            "docs/API.md missing '{needle}' (failure-model surfaces)"
         );
     }
 }

@@ -200,6 +200,10 @@ fn concurrent_mixed_traffic_through_new_parser() {
     let text = page.as_str().unwrap_or_default().to_string();
     assert!(text.contains("lasp_serve_transport_requests_total"), "{text}");
     assert!(text.contains("lasp_serve_transport_alloc_events_total"), "{text}");
+    // Queue-full drops are counted, never silent — the family must exist
+    // (and stay zero on an unloaded queue) so operators can alert on it.
+    assert!(text.contains("lasp_serve_reports_dropped_total 0"), "{text}");
+    assert!(text.contains("lasp_serve_fleet_sync_state 0"), "{text}");
     handle.shutdown().unwrap();
 }
 

@@ -136,3 +136,55 @@ fn trace_cli_decodes_a_capture() {
 
     std::fs::remove_dir_all(&dir).ok();
 }
+
+#[test]
+fn truncated_and_corrupt_captures_fail_cleanly() {
+    // A capture cut off mid-record (a crashed writer, a partial copy) and
+    // a capture with a garbled header must both surface as clean errors —
+    // from the CLI and from the sim engine's replay strategy — never as a
+    // panic or a silently-shortened replay. Every fixture gets a unique
+    // path: the replay layer memoizes parsed captures per path.
+    let dir = std::env::temp_dir().join(format!("lasp-trace-corrupt-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+
+    // Start from a small valid capture so the truncation is realistic.
+    let valid = dir.join("valid.lasptrc");
+    record_capture(&valid, 8);
+    let bytes = std::fs::read(&valid).unwrap();
+    assert!(bytes.len() > 58, "capture too small to truncate meaningfully");
+
+    let truncated = dir.join("truncated.lasptrc");
+    std::fs::write(&truncated, &bytes[..bytes.len() - 17]).unwrap();
+    let corrupt = dir.join("corrupt.lasptrc");
+    let mut garbled = bytes.clone();
+    garbled[..8].copy_from_slice(b"NOTATRCE");
+    std::fs::write(&corrupt, &garbled).unwrap();
+
+    for (path, needle) in
+        [(&truncated, "record size"), (&corrupt, "not a LASP trace file")]
+    {
+        // `lasp trace dump` exits non-zero with a diagnostic on stderr.
+        let out = Command::new(env!("CARGO_BIN_EXE_lasp"))
+            .args(["trace", "dump", "--file", path.to_str().unwrap()])
+            .output()
+            .unwrap();
+        assert!(!out.status.success(), "dump accepted {}", path.display());
+        let stderr = String::from_utf8_lossy(&out.stderr);
+        assert!(stderr.contains(needle), "stderr for {}: {stderr}", path.display());
+
+        // The replay strategy reports the same failure as a clean Err.
+        let err = lasp::sim::ReplayStep::from_file(
+            path.to_str().unwrap(),
+            AppKind::Clomp,
+            PowerMode::Maxn,
+            125,
+            1.0,
+            0.0,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains(needle), "replay error for {}: {err}", path.display());
+    }
+
+    std::fs::remove_dir_all(&dir).ok();
+}
