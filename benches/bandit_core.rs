@@ -13,7 +13,8 @@
 mod common;
 
 use lasp::bandit::{
-    EpsilonGreedy, Policy, SlidingWindowUcb, SubsetTuner, ThompsonSampler, UcbTuner,
+    select_batch, Choice, EpsilonGreedy, Policy, Scratch, SlidingWindowUcb, SubsetTuner,
+    ThompsonSampler, UcbTuner,
 };
 use lasp::util::json::Json;
 use lasp::util::Rng;
@@ -67,6 +68,74 @@ fn measure(name: &'static str, mut policy: Box<dyn Policy>, rounds: usize) -> Po
     report
 }
 
+/// One batched-selection series over a 64-session UCB fleet: `group`
+/// sessions advance per [`select_batch`] call (group 1 is the
+/// single-select baseline via [`Policy::select_traced`], matching the
+/// serve path's one-session-per-request mode). All batched scoring runs
+/// through ONE shared scratch, so the series measures exactly what
+/// `/v1/suggest/batch` buys: a single warm buffer kept hot in cache
+/// instead of 64 per-session buffers.
+fn measure_batched(name: &'static str, group: usize, sweeps: usize) -> PolicyReport {
+    const FLEET: usize = 64;
+    let k = 216;
+    let mut fleet: Vec<UcbTuner> = (0..FLEET).map(|_| UcbTuner::new(k, 0.8, 0.2)).collect();
+    let mut refs: Vec<&mut dyn Policy> = fleet.iter_mut().map(|p| p as &mut dyn Policy).collect();
+    let mut scratch = Scratch::new();
+    let mut choices: Vec<Choice> = Vec::with_capacity(group);
+    let mut env = Rng::new(0xC0FFEE);
+
+    let mut sweep = |refs: &mut Vec<&mut dyn Policy>,
+                     scratch: &mut Scratch,
+                     choices: &mut Vec<Choice>,
+                     env: &mut Rng| {
+        let mut s = 0usize;
+        while s < FLEET {
+            let e = (s + group).min(FLEET);
+            if group == 1 {
+                let arm = refs[s].select_traced().arm;
+                let time = (1.0 + (arm % 13) as f64 * 0.07) * env.relative_noise(0.03);
+                refs[s].update(arm, time, 5.0);
+            } else {
+                select_batch(&mut refs[s..e], scratch, choices);
+                for j in 0..choices.len() {
+                    let arm = choices[j].arm;
+                    let time = (1.0 + (arm % 13) as f64 * 0.07) * env.relative_noise(0.03);
+                    refs[s + j].update(arm, time, 5.0);
+                }
+            }
+            s = e;
+        }
+    };
+
+    // Warmup: every session finishes its init sweep (k pulls) and every
+    // reusable buffer reaches its high-water mark.
+    for _ in 0..(2 * k + 16) {
+        sweep(&mut refs, &mut scratch, &mut choices, &mut env);
+    }
+    let growths_before: u64 = refs.iter().map(|p| p.scratch_growths()).sum();
+
+    let allocs_before = common::alloc_count();
+    let t0 = Instant::now();
+    for _ in 0..sweeps {
+        sweep(&mut refs, &mut scratch, &mut choices, &mut env);
+    }
+    let elapsed = t0.elapsed().as_secs_f64();
+    let allocs = common::alloc_count() - allocs_before;
+    let selects = (sweeps * FLEET) as f64;
+
+    let report = PolicyReport {
+        name,
+        selects_per_s: selects / elapsed.max(1e-12),
+        allocs_per_select: allocs as f64 / selects,
+        scratch_growths: refs.iter().map(|p| p.scratch_growths()).sum::<u64>() - growths_before,
+    };
+    println!(
+        "bench bandit_core {name:<10} {} selects ({group}/call): {:>12.0} selects/s, {:.4} allocs/select ({} scratch growths)",
+        selects as u64, report.selects_per_s, report.allocs_per_select, report.scratch_growths
+    );
+    report
+}
+
 fn main() {
     let quick = std::env::var("LASP_BENCH_QUICK").map(|v| v == "1").unwrap_or(false);
     let rounds = if quick { 2_000 } else { 50_000 };
@@ -86,6 +155,19 @@ fn main() {
         ),
     ];
 
+    // Batched multi-session selection over a 64-session fleet: the same
+    // select/update work routed through `select_batch` with 1, 8, and 64
+    // sessions per call. The b64 series must beat the single-select
+    // baseline (shared warm scratch vs 64 cold per-session buffers) and
+    // every batched select must stay allocation-free.
+    println!("\n## bandit core — batched multi-session selection (64-session UCB fleet)");
+    let sweeps = (rounds / 64).max(50);
+    let batched = vec![
+        measure_batched("b1", 1, sweeps),
+        measure_batched("b8", 8, sweeps),
+        measure_batched("b64", 64, sweeps),
+    ];
+
     let mut policies = BTreeMap::new();
     for r in &reports {
         let mut o = BTreeMap::new();
@@ -103,6 +185,16 @@ fn main() {
     out.insert("rounds".to_string(), Json::Num(rounds as f64));
     out.insert("k".to_string(), Json::Num(k as f64));
     out.insert("policies".to_string(), Json::Obj(policies));
+    let mut batched_out = BTreeMap::new();
+    batched_out.insert("fleet_sessions".to_string(), Json::Num(64.0));
+    for r in &batched {
+        let mut o = BTreeMap::new();
+        o.insert("selects_per_s".to_string(), Json::Num(r.selects_per_s));
+        o.insert("allocs_per_select".to_string(), Json::Num(r.allocs_per_select));
+        o.insert("scratch_growths".to_string(), Json::Num(r.scratch_growths as f64));
+        batched_out.insert(r.name.to_string(), Json::Obj(o));
+    }
+    out.insert("batched".to_string(), Json::Obj(batched_out));
     let path = std::env::var("LASP_BENCH_OUT").unwrap_or_else(|_| "BENCH_bandit.json".to_string());
     std::fs::write(&path, Json::Obj(out).to_string() + "\n").expect("writing bench json");
     println!("\nwrote {path}");
@@ -111,10 +203,16 @@ fn main() {
     // and swucb (the paper policy and its non-stationary variant), and no
     // scratch regrowth anywhere.
     let by_name = |n: &str| reports.iter().find(|r| r.name == n).unwrap();
+    let batched_by = |n: &str| batched.iter().find(|r| r.name == n).unwrap();
     common::report_shape(
         "bandit_core",
         by_name("ucb").allocs_per_select == 0.0
             && by_name("swucb").allocs_per_select == 0.0
-            && reports.iter().all(|r| r.scratch_growths == 0),
+            && reports.iter().all(|r| r.scratch_growths == 0)
+            // Batched selection must pay off and stay allocation-free:
+            // 64-per-call throughput above the single-select baseline,
+            // zero allocs and zero scratch regrowth in every series.
+            && batched_by("b64").selects_per_s > batched_by("b1").selects_per_s
+            && batched.iter().all(|r| r.allocs_per_select == 0.0 && r.scratch_growths == 0),
     );
 }

@@ -78,6 +78,21 @@ fn main() {
     .expect("loadgen");
     report.print();
 
+    // Same closed loop through the batch endpoints: 16 sessions advance
+    // per suggest/report HTTP round-trip pair, so the per-request
+    // overhead amortizes and round-trips/s should rise.
+    println!("\n## closed-loop loadgen, batched (16 entries/request)");
+    let batched_report = loadgen::run(&LoadgenConfig {
+        addr: addr.clone(),
+        sessions: lg_sessions,
+        rounds: lg_rounds,
+        threads: lg_threads,
+        batch: 16,
+        ..Default::default()
+    })
+    .expect("batched loadgen");
+    batched_report.print();
+
     drop(client);
     handle.shutdown().expect("shutdown");
 
@@ -102,12 +117,34 @@ fn main() {
     );
     out.insert("steady_alloc_events".to_string(), Json::Num(steady_allocs as f64));
     out.insert("allocs_per_request".to_string(), Json::Num(allocs_per_request));
+    let mut batched = BTreeMap::new();
+    batched.insert("batch".to_string(), Json::Num(16.0));
+    batched.insert("rounds".to_string(), Json::Num(batched_report.rounds as f64));
+    batched.insert("errors".to_string(), Json::Num(batched_report.errors as f64));
+    batched.insert(
+        "round_trips_per_s".to_string(),
+        Json::Num(batched_report.round_trips_per_s),
+    );
+    batched.insert(
+        "req_per_s".to_string(),
+        // Two HTTP requests (suggest/batch + report/batch) move `batch`
+        // rounds, so the raw request rate is round-trips/s * 2 / batch.
+        Json::Num(batched_report.round_trips_per_s * 2.0 / 16.0),
+    );
+    batched.insert("p50_ms".to_string(), Json::Num(batched_report.p50_ms));
+    batched.insert("p99_ms".to_string(), Json::Num(batched_report.p99_ms));
+    out.insert("batched".to_string(), Json::Obj(batched));
     let path = std::env::var("LASP_BENCH_OUT").unwrap_or_else(|_| "BENCH_serve.json".to_string());
     std::fs::write(&path, Json::Obj(out).to_string() + "\n").expect("writing bench json");
     println!("\nwrote {path}");
 
     common::report_shape(
         "serve_throughput",
-        report.errors == 0 && report.rounds == lg_rounds && report.p99_ms > 0.0 && steady_allocs == 0,
+        report.errors == 0
+            && report.rounds == lg_rounds
+            && report.p99_ms > 0.0
+            && steady_allocs == 0
+            && batched_report.errors == 0
+            && batched_report.rounds == lg_rounds,
     );
 }

@@ -235,7 +235,10 @@ impl ArmStats {
 /// session's `select()` allocates only until both buffers reach `k`
 /// elements; after that warm-up the whole scoring pass is allocation-free
 /// (asserted end-to-end by `rust/tests/serve_hotpath.rs` and per-policy by
-/// `benches/bandit_core.rs`).
+/// `benches/bandit_core.rs`). A scratch can also be *shared* across many
+/// sessions with different `k` — `resize` keeps capacity at the high-water
+/// mark, so a warm shared scratch never reallocates as the batch path
+/// ([`crate::bandit::select_batch`]) walks mixed-size sessions.
 #[derive(Debug, Default)]
 pub struct Scratch {
     /// Eq. 5 rewards from the most recent scoring pass.
@@ -254,8 +257,7 @@ impl Scratch {
     /// Size both buffers to `k` arms, counting a growth event when either
     /// has to reallocate. For single-buffer kernels use
     /// [`Scratch::ensure_rewards`] instead — no point carrying a dead
-    /// `scores` vector (737 KB at Hypre scale) in sessions that never run
-    /// a two-stage kernel.
+    /// `scores` vector in sessions that never run a two-stage kernel.
     pub fn ensure(&mut self, k: usize) {
         if k > self.rewards.capacity() || k > self.scores.capacity() {
             self.growths += 1;
@@ -264,8 +266,8 @@ impl Scratch {
         self.scores.resize(k, 0.0);
     }
 
-    /// Size only the rewards buffer (kernels that never write scores:
-    /// the fused `lasp_step`, ε-greedy's greedy pass).
+    /// Size only the rewards buffer (kernels that never write scores,
+    /// like ε-greedy's greedy pass).
     pub fn ensure_rewards(&mut self, k: usize) {
         if k > self.rewards.capacity() {
             self.growths += 1;

@@ -35,6 +35,31 @@ impl EpsilonGreedy {
     }
 }
 
+/// The traced ε-greedy pass over explicit parts, so the same body can run
+/// through the policy's own scratch (`select_traced`) or a shared batch
+/// scratch (`select_traced_in`). RNG draw order is part of the contract:
+/// one `uniform()` per steady-state call, one `below()` on the ε branch.
+fn traced_step(
+    stats: &ArmStats,
+    alpha: f64,
+    beta: f64,
+    epsilon: f64,
+    rng: &mut Rng,
+    scratch: &mut Scratch,
+) -> Choice {
+    // Unpulled arms first (same initialization as UCB1).
+    if let Some(arm) = stats.counts().iter().position(|&c| c == 0.0) {
+        return Choice { arm, gap: 0.0, explore: true };
+    }
+    if rng.uniform() < epsilon {
+        return Choice { arm: rng.below(stats.k()), gap: 0.0, explore: true };
+    }
+    scratch.ensure_rewards(stats.k());
+    weighted_rewards_into(stats, alpha, beta, &mut scratch.rewards);
+    let (arm, gap) = top2(&scratch.rewards);
+    Choice { arm, gap, explore: false }
+}
+
 impl Policy for EpsilonGreedy {
     fn k(&self) -> usize {
         self.stats.k()
@@ -45,17 +70,12 @@ impl Policy for EpsilonGreedy {
     }
 
     fn select_traced(&mut self) -> Choice {
-        // Unpulled arms first (same initialization as UCB1).
-        if let Some(arm) = self.stats.counts().iter().position(|&c| c == 0.0) {
-            return Choice { arm, gap: 0.0, explore: true };
-        }
-        if self.rng.uniform() < self.epsilon {
-            return Choice { arm: self.rng.below(self.k()), gap: 0.0, explore: true };
-        }
-        self.scratch.ensure_rewards(self.stats.k());
-        weighted_rewards_into(&self.stats, self.alpha, self.beta, &mut self.scratch.rewards);
-        let (arm, gap) = top2(&self.scratch.rewards);
-        Choice { arm, gap, explore: false }
+        let EpsilonGreedy { stats, alpha, beta, epsilon, rng, scratch } = self;
+        traced_step(stats, *alpha, *beta, *epsilon, rng, scratch)
+    }
+
+    fn select_traced_in(&mut self, scratch: &mut Scratch) -> Choice {
+        traced_step(&self.stats, self.alpha, self.beta, self.epsilon, &mut self.rng, scratch)
     }
 
     fn update(&mut self, arm: usize, time_s: f64, power_w: f64) {

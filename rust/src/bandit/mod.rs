@@ -105,6 +105,20 @@ pub trait Policy: Send {
         Choice { arm: self.select(), gap: 0.0, explore: false }
     }
 
+    /// [`Policy::select_traced`] scoring through a caller-provided
+    /// scratch instead of the policy's own — the primitive under
+    /// [`select_batch`], which drives many sessions through one shared
+    /// scratch so a batched suggest keeps a single warm buffer instead of
+    /// touching every session's. The contract is the same as
+    /// [`Policy::select_traced`] plus buffer independence: the returned
+    /// [`Choice`] and the RNG draws consumed are bit-identical no matter
+    /// which scratch the scores land in (scores are pure functions of the
+    /// policy state). The policy's own scratch is neither read nor grown.
+    fn select_traced_in(&mut self, scratch: &mut Scratch) -> Choice {
+        let _ = scratch;
+        self.select_traced()
+    }
+
     /// Observe the measurement for `arm` (execution time seconds, watts).
     fn update(&mut self, arm: usize, time_s: f64, power_w: f64);
 
@@ -144,6 +158,28 @@ pub trait Policy: Send {
     /// the per-policy zero-allocation contract, asserted end-to-end by
     /// `rust/tests/serve_hotpath.rs`.
     fn scratch_growths(&self) -> u64;
+}
+
+/// Multi-session batched selection: one [`Choice`] per session, in entry
+/// order, every scoring pass running through the single shared `scratch`.
+/// This is the bandit-side core of `POST /v1/suggest/batch`: a batch of N
+/// sessions costs one warm scratch (kept hot in cache across sessions)
+/// instead of N per-session buffers, and the choices are bit-identical to
+/// calling [`Policy::select_traced`] on each session in the same order
+/// (pinned for every policy by `rust/tests/batch_equivalence.rs`).
+///
+/// `choices` is cleared and refilled — reuse it across batches (alongside
+/// the scratch) to keep the steady state allocation-free.
+pub fn select_batch(
+    sessions: &mut [&mut dyn Policy],
+    scratch: &mut Scratch,
+    choices: &mut Vec<Choice>,
+) {
+    choices.clear();
+    choices.reserve(sessions.len());
+    for session in sessions.iter_mut() {
+        choices.push(session.select_traced_in(scratch));
+    }
 }
 
 #[cfg(test)]
@@ -201,6 +237,38 @@ mod tests {
             out
         };
         assert_eq!(drive(false), drive(true));
+    }
+
+    #[test]
+    fn select_batch_matches_per_session_traced_selects() {
+        // One shared scratch across a mixed-k fleet vs each session's own
+        // scratch: identical choices, identical RNG draws, in entry order.
+        let fleet = || -> Vec<Box<dyn Policy>> {
+            vec![
+                Box::new(UcbTuner::new(8, 1.0, 0.0)),
+                Box::new(EpsilonGreedy::new(5, 1.0, 0.0, 0.3, 7)),
+                Box::new(ThompsonSampler::new(12, 1.0, 0.0, 11)),
+                Box::new(SlidingWindowUcb::new(8, 1.0, 0.0, 32)),
+                Box::new(SubsetTuner::new(100, 8, 1.0, 0.0, 3)),
+            ]
+        };
+        let (mut singles, mut batched) = (fleet(), fleet());
+        let mut scratch = Scratch::new();
+        let mut choices = Vec::new();
+        for round in 0..60usize {
+            let expected: Vec<Choice> =
+                singles.iter_mut().map(|p| p.select_traced()).collect();
+            let mut refs: Vec<&mut dyn Policy> =
+                batched.iter_mut().map(|p| p.as_mut()).collect();
+            select_batch(&mut refs, &mut scratch, &mut choices);
+            assert_eq!(choices, expected, "round {round}");
+            for (p, c) in singles.iter_mut().zip(&expected) {
+                p.update(c.arm, 1.0 + ((c.arm + round) % 5) as f64 * 0.2, 5.0);
+            }
+            for (p, c) in batched.iter_mut().zip(&choices) {
+                p.update(c.arm, 1.0 + ((c.arm + round) % 5) as f64 * 0.2, 5.0);
+            }
+        }
     }
 
     #[test]

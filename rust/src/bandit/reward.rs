@@ -48,6 +48,15 @@ fn raw_rewards_into(stats: &ArmStats, alpha: f64, beta: f64, out: &mut [f64]) ->
 
     // Pass 1: fill value + mean extrema over pulled arms (cached means —
     // the core keeps `mean_* = *_sum / counts` current on every observe).
+    //
+    // Branch-free: unpulled arms contribute `+0.0` to the fill sums (their
+    // cached means are exactly 0.0, and every partial sum is non-negative,
+    // so the added zeros cannot flip a sign bit) and `±inf` to the extrema
+    // (the identity elements of min/max). The fill sums keep their frozen
+    // left-to-right order — reassociating them would drift the fill means
+    // and break the bit-stability contract pinned by the frozen scalar
+    // references in `batch_equivalence.rs` and the policy goldens. The
+    // pulled counter sums whole 1.0s, exact in any order.
     let mut fill_tau = 0.0;
     let mut fill_rho = 0.0;
     let mut pulled = 0.0f64;
@@ -56,17 +65,16 @@ fn raw_rewards_into(stats: &ArmStats, alpha: f64, beta: f64, out: &mut [f64]) ->
     let mut rho_lo = f64::INFINITY;
     let mut rho_hi = f64::NEG_INFINITY;
     for i in 0..k {
-        if counts[i] > 0.0 {
-            let mt = mean_tau[i];
-            let mr = mean_rho[i];
-            fill_tau += mt;
-            fill_rho += mr;
-            pulled += 1.0;
-            tau_lo = tau_lo.min(mt);
-            tau_hi = tau_hi.max(mt);
-            rho_lo = rho_lo.min(mr);
-            rho_hi = rho_hi.max(mr);
-        }
+        let on = counts[i] > 0.0;
+        let mt = mean_tau[i];
+        let mr = mean_rho[i];
+        fill_tau += if on { mt } else { 0.0 };
+        fill_rho += if on { mr } else { 0.0 };
+        pulled += if on { 1.0 } else { 0.0 };
+        tau_lo = tau_lo.min(if on { mt } else { f64::INFINITY });
+        tau_hi = tau_hi.max(if on { mt } else { f64::NEG_INFINITY });
+        rho_lo = rho_lo.min(if on { mr } else { f64::INFINITY });
+        rho_hi = rho_hi.max(if on { mr } else { f64::NEG_INFINITY });
     }
     let denom = pulled.max(1.0);
     let fill_tau = fill_tau / denom;
@@ -84,21 +92,44 @@ fn raw_rewards_into(stats: &ArmStats, alpha: f64, beta: f64, out: &mut [f64]) ->
     let rho_range = (rho_hi - rho_lo).max(MINMAX_EPS);
 
     // Pass 2: raw Eq. 5 rewards into the output buffer + raw extrema.
-    let mut raw_lo = f64::INFINITY;
-    let mut raw_hi = f64::NEG_INFINITY;
-    for i in 0..k {
-        let (mt, mr) = if counts[i] > 0.0 {
-            (mean_tau[i], mean_rho[i])
-        } else {
-            (fill_tau, fill_rho)
-        };
+    // Branch-free per element (the unpulled fallback is a select, not a
+    // branch, so every lane runs the same arithmetic) with `chunks_exact`
+    // bodies and split min/max accumulators — min/max are associative and
+    // commutative over the non-NaN rewards, so lane-splitting them cannot
+    // change a bit, unlike the ordered fill sums above.
+    const LANES: usize = 4;
+    let mut lo_l = [f64::INFINITY; LANES];
+    let mut hi_l = [f64::NEG_INFINITY; LANES];
+    let head = k - k % LANES;
+    let mut i = 0;
+    while i < head {
+        for l in 0..LANES {
+            let j = i + l;
+            let on = counts[j] > 0.0;
+            let mt = if on { mean_tau[j] } else { fill_tau };
+            let mr = if on { mean_rho[j] } else { fill_rho };
+            let tau_hat = (mt - tau_lo) / tau_range;
+            let rho_hat = (mr - rho_lo) / rho_range;
+            let raw = alpha / (tau_hat + REWARD_EPS) + beta / (rho_hat + REWARD_EPS);
+            out[j] = raw;
+            lo_l[l] = lo_l[l].min(raw);
+            hi_l[l] = hi_l[l].max(raw);
+        }
+        i += LANES;
+    }
+    for j in head..k {
+        let on = counts[j] > 0.0;
+        let mt = if on { mean_tau[j] } else { fill_tau };
+        let mr = if on { mean_rho[j] } else { fill_rho };
         let tau_hat = (mt - tau_lo) / tau_range;
         let rho_hat = (mr - rho_lo) / rho_range;
         let raw = alpha / (tau_hat + REWARD_EPS) + beta / (rho_hat + REWARD_EPS);
-        out[i] = raw;
-        raw_lo = raw_lo.min(raw);
-        raw_hi = raw_hi.max(raw);
+        out[j] = raw;
+        lo_l[0] = lo_l[0].min(raw);
+        hi_l[0] = hi_l[0].max(raw);
     }
+    let raw_lo = lo_l.iter().fold(f64::INFINITY, |a, &b| a.min(b));
+    let raw_hi = hi_l.iter().fold(f64::NEG_INFINITY, |a, &b| a.max(b));
     RawExtrema { lo: raw_lo, range: (raw_hi - raw_lo).max(MINMAX_EPS) }
 }
 
@@ -139,13 +170,16 @@ fn minmax_eps(xs: &[f64]) -> Vec<f64> {
 pub fn ucb_scores_into(rewards: &[f64], counts: &[f64], t: f64, c: f64, out: &mut [f64]) {
     debug_assert_eq!(rewards.len(), counts.len());
     debug_assert_eq!(rewards.len(), out.len());
+    let k = rewards.len();
+    let (rewards, counts, out) = (&rewards[..k], &counts[..k], &mut out[..k]);
     let log_t = t.max(1.0).ln();
-    for i in 0..rewards.len() {
-        out[i] = if counts[i] > 0.0 {
-            rewards[i] + c * (2.0 * log_t / counts[i].max(1.0)).sqrt()
-        } else {
-            UNPULLED_SCORE
-        };
+    let bonus_base = 2.0 * log_t;
+    // Branch-free: the bonus is computed for every lane (`max(1.0)` keeps
+    // the division safe and is the identity for real counts, which are
+    // never fractional below 1) and the unpulled sentinel is a select.
+    for i in 0..k {
+        let bonus = c * (bonus_base / counts[i].max(1.0)).sqrt();
+        out[i] = if counts[i] > 0.0 { rewards[i] + bonus } else { UNPULLED_SCORE };
     }
 }
 
@@ -206,24 +240,29 @@ impl ScoreBackend for ScalarBackend {
         scratch: &mut Scratch,
     ) -> Result<Step> {
         let k = stats.k();
-        scratch.ensure_rewards(k);
-        let rewards = &mut scratch.rewards[..k];
+        scratch.ensure(k);
+        let (rewards, scores) = scratch.rewards_scores_mut();
+        let (rewards, scores) = (&mut rewards[..k], &mut scores[..k]);
         let raw = raw_rewards_into(stats, alpha, beta, rewards);
 
-        // Pass 3: normalize rewards in place + UCB score + running argmax.
-        let counts = stats.counts();
+        // Pass 3a: normalize rewards in place + UCB score, branch-free.
+        // The bonus runs on every lane — for unpulled arms it degenerates
+        // to inf/NaN, which the select discards before it can matter — so
+        // the loop carries no per-iteration branch and vectorizes.
+        let counts = &stats.counts()[..k];
         let log_t = stats.t().max(1.0).ln();
         let bonus_base = 2.0 * log_t;
-        let mut best = 0usize;
-        let mut best_score = f64::NEG_INFINITY;
         for i in 0..k {
             let r = (rewards[i] - raw.lo) / raw.range;
             rewards[i] = r;
-            let score = if counts[i] > 0.0 {
-                r + exploration * (bonus_base / counts[i]).sqrt()
-            } else {
-                UNPULLED_SCORE
-            };
+            let bonus = exploration * (bonus_base / counts[i]).sqrt();
+            scores[i] = if counts[i] > 0.0 { r + bonus } else { UNPULLED_SCORE };
+        }
+        // Pass 3b: first-max argmax scan (kept scalar: the comparison is a
+        // loop-carried dependency; ties resolve to the lowest index).
+        let mut best = 0usize;
+        let mut best_score = f64::NEG_INFINITY;
+        for (i, &score) in scores.iter().enumerate() {
             if score > best_score {
                 best_score = score;
                 best = i;

@@ -114,6 +114,11 @@ impl Policy for SubsetTuner {
         Choice { arm: self.candidates[c.arm], ..c }
     }
 
+    fn select_traced_in(&mut self, scratch: &mut super::core::Scratch) -> Choice {
+        let c = self.inner.select_traced_in(scratch);
+        Choice { arm: self.candidates[c.arm], ..c }
+    }
+
     fn update(&mut self, arm: usize, time_s: f64, power_w: f64) {
         let pos = *self
             .positions

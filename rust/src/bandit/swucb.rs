@@ -61,6 +61,30 @@ impl SlidingWindowUcb {
     }
 }
 
+/// The traced windowed-UCB pass over explicit parts, so the same body can
+/// run through the policy's own scratch (`select_traced`) or a shared
+/// batch scratch (`select_traced_in`).
+fn traced_step(
+    windowed: &ArmStats,
+    alpha: f64,
+    beta: f64,
+    history_len: usize,
+    scratch: &mut Scratch,
+) -> Choice {
+    // Arms absent from the current window are "unpulled": retried.
+    if let Some(arm) = windowed.counts().iter().position(|&c| c == 0.0) {
+        return Choice { arm, gap: 0.0, explore: true };
+    }
+    scratch.ensure(windowed.k());
+    weighted_rewards_into(windowed, alpha, beta, &mut scratch.rewards);
+    // Windowed t: bonus uses the window size, not lifetime.
+    let t_eff = (history_len as f64).max(1.0);
+    let (rewards, scores) = scratch.rewards_scores_mut();
+    ucb_scores_into(rewards, windowed.counts(), t_eff, DEFAULT_EXPLORATION, scores);
+    let (arm, gap) = top2(scores);
+    Choice { arm, gap, explore: arm != stats::argmax(rewards) }
+}
+
 impl Policy for SlidingWindowUcb {
     fn k(&self) -> usize {
         self.stats.k()
@@ -71,18 +95,11 @@ impl Policy for SlidingWindowUcb {
     }
 
     fn select_traced(&mut self) -> Choice {
-        // Arms absent from the current window are "unpulled": retried.
-        if let Some(arm) = self.stats.counts().iter().position(|&c| c == 0.0) {
-            return Choice { arm, gap: 0.0, explore: true };
-        }
-        self.scratch.ensure(self.stats.k());
-        weighted_rewards_into(&self.stats, self.alpha, self.beta, &mut self.scratch.rewards);
-        // Windowed t: bonus uses the window size, not lifetime.
-        let t_eff = (self.history.len() as f64).max(1.0);
-        let (rewards, scores) = self.scratch.rewards_scores_mut();
-        ucb_scores_into(rewards, self.stats.counts(), t_eff, DEFAULT_EXPLORATION, scores);
-        let (arm, gap) = top2(scores);
-        Choice { arm, gap, explore: arm != stats::argmax(rewards) }
+        traced_step(&self.stats, self.alpha, self.beta, self.history.len(), &mut self.scratch)
+    }
+
+    fn select_traced_in(&mut self, scratch: &mut Scratch) -> Choice {
+        traced_step(&self.stats, self.alpha, self.beta, self.history.len(), scratch)
     }
 
     fn update(&mut self, arm: usize, time_s: f64, power_w: f64) {

@@ -44,6 +44,33 @@ impl ThompsonSampler {
     }
 }
 
+/// The traced sampling pass over explicit parts, so the same body can run
+/// through the sampler's own scratch (`select_traced`) or a shared batch
+/// scratch (`select_traced_in`). RNG draw order is part of the contract:
+/// exactly one `normal()` per arm, in arm order, on the steady-state path.
+fn traced_step(
+    stats_: &ArmStats,
+    alpha: f64,
+    beta: f64,
+    obs_std: f64,
+    rng: &mut Rng,
+    scratch: &mut Scratch,
+) -> Choice {
+    if let Some(arm) = stats_.counts().iter().position(|&c| c == 0.0) {
+        return Choice { arm, gap: 0.0, explore: true };
+    }
+    let k = stats_.k();
+    scratch.ensure(k);
+    weighted_rewards_into(stats_, alpha, beta, &mut scratch.rewards);
+    // Sample posterior mean ~ N(reward_i, obs_std² / N_i) per arm.
+    let (rewards, scores) = scratch.rewards_scores_mut();
+    for (i, (r, n)) in rewards.iter().zip(stats_.counts()).enumerate() {
+        scores[i] = r + rng.normal() * obs_std / n.max(1.0).sqrt();
+    }
+    let (arm, gap) = top2(scores);
+    Choice { arm, gap, explore: arm != stats::argmax(rewards) }
+}
+
 impl Policy for ThompsonSampler {
     fn k(&self) -> usize {
         self.stats.k()
@@ -54,19 +81,12 @@ impl Policy for ThompsonSampler {
     }
 
     fn select_traced(&mut self) -> Choice {
-        if let Some(arm) = self.stats.counts().iter().position(|&c| c == 0.0) {
-            return Choice { arm, gap: 0.0, explore: true };
-        }
-        let k = self.stats.k();
-        self.scratch.ensure(k);
-        weighted_rewards_into(&self.stats, self.alpha, self.beta, &mut self.scratch.rewards);
-        // Sample posterior mean ~ N(reward_i, obs_std² / N_i) per arm.
-        let (rewards, scores) = self.scratch.rewards_scores_mut();
-        for (i, (r, n)) in rewards.iter().zip(self.stats.counts()).enumerate() {
-            scores[i] = r + self.rng.normal() * self.obs_std / n.max(1.0).sqrt();
-        }
-        let (arm, gap) = top2(scores);
-        Choice { arm, gap, explore: arm != stats::argmax(rewards) }
+        let ThompsonSampler { stats: st, alpha, beta, rng, obs_std, scratch } = self;
+        traced_step(st, *alpha, *beta, *obs_std, rng, scratch)
+    }
+
+    fn select_traced_in(&mut self, scratch: &mut Scratch) -> Choice {
+        traced_step(&self.stats, self.alpha, self.beta, self.obs_std, &mut self.rng, scratch)
     }
 
     fn update(&mut self, arm: usize, time_s: f64, power_w: f64) {

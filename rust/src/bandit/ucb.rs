@@ -99,6 +99,55 @@ impl UcbTuner {
     }
 }
 
+/// The traced selection pass over explicit parts, so the same body can
+/// score through the tuner's own scratch (`select_traced`) or a shared
+/// batch scratch (`select_traced_in`). The arm is the backend's verbatim
+/// (bit-identical to `select`, scalar or PJRT). Both backends leave the
+/// normalized Eq. 5 rewards in `scratch.rewards` — the `ScoreBackend`
+/// contract — so the telemetry pass recomputes the per-arm scores from
+/// them with running top-2 locals: reads only, no scratch growth.
+fn traced_step(
+    stats: &ArmStats,
+    alpha: f64,
+    beta: f64,
+    exploration: f64,
+    backend: &mut dyn ScoreBackend,
+    scratch: &mut Scratch,
+) -> Choice {
+    let step =
+        backend.lasp_step(stats, alpha, beta, exploration, scratch).expect("score backend failed");
+    let k = stats.k();
+    let counts = stats.counts();
+    let bonus_base = 2.0 * stats.t().max(1.0).ln();
+    let mut best = f64::NEG_INFINITY;
+    let mut second = f64::NEG_INFINITY;
+    let mut greedy = 0usize;
+    let mut greedy_r = f64::NEG_INFINITY;
+    for i in 0..k {
+        let r = scratch.rewards[i];
+        let score = if counts[i] > 0.0 {
+            r + exploration * (bonus_base / counts[i]).sqrt()
+        } else {
+            UNPULLED_SCORE
+        };
+        if score > best {
+            second = best;
+            best = score;
+        } else if score > second {
+            second = score;
+        }
+        if r > greedy_r {
+            greedy_r = r;
+            greedy = i;
+        }
+    }
+    Choice {
+        arm: step.best,
+        gap: if k > 1 { best - second } else { 0.0 },
+        explore: counts[step.best] == 0.0 || step.best != greedy,
+    }
+}
+
 impl Policy for UcbTuner {
     fn k(&self) -> usize {
         self.stats.k()
@@ -112,45 +161,18 @@ impl Policy for UcbTuner {
     }
 
     fn select_traced(&mut self) -> Choice {
-        // The arm is the backend's verbatim (bit-identical to `select`,
-        // scalar or PJRT). Both backends leave the normalized Eq. 5
-        // rewards in `scratch.rewards` — the `ScoreBackend` contract —
-        // so the telemetry pass recomputes the per-arm scores from them
-        // with running top-2 locals: reads only, no scratch growth.
-        let step = self
-            .backend
-            .lasp_step(&self.stats, self.alpha, self.beta, self.exploration, &mut self.scratch)
-            .expect("score backend failed");
-        let k = self.stats.k();
-        let counts = self.stats.counts();
-        let bonus_base = 2.0 * self.stats.t().max(1.0).ln();
-        let mut best = f64::NEG_INFINITY;
-        let mut second = f64::NEG_INFINITY;
-        let mut greedy = 0usize;
-        let mut greedy_r = f64::NEG_INFINITY;
-        for i in 0..k {
-            let r = self.scratch.rewards[i];
-            let score = if counts[i] > 0.0 {
-                r + self.exploration * (bonus_base / counts[i]).sqrt()
-            } else {
-                UNPULLED_SCORE
-            };
-            if score > best {
-                second = best;
-                best = score;
-            } else if score > second {
-                second = score;
-            }
-            if r > greedy_r {
-                greedy_r = r;
-                greedy = i;
-            }
-        }
-        Choice {
-            arm: step.best,
-            gap: if k > 1 { best - second } else { 0.0 },
-            explore: counts[step.best] == 0.0 || step.best != greedy,
-        }
+        traced_step(
+            &self.stats,
+            self.alpha,
+            self.beta,
+            self.exploration,
+            self.backend.as_mut(),
+            &mut self.scratch,
+        )
+    }
+
+    fn select_traced_in(&mut self, scratch: &mut Scratch) -> Choice {
+        traced_step(&self.stats, self.alpha, self.beta, self.exploration, self.backend.as_mut(), scratch)
     }
 
     fn update(&mut self, arm: usize, time_s: f64, power_w: f64) {

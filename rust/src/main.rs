@@ -143,6 +143,8 @@ fn usage_text() -> &'static str {
      \x20 --threads <n>          client threads            [8]\n\
      \x20 --apps <list>          all | comma list          [all]\n\
      \x20 --timeout-secs <s>     socket read/write timeout [30]\n\
+     \x20 --batch <n>            entries per request via the\n\
+     \x20                        /v1/*/batch endpoints (1..=256) [1]\n\
      \x20 --record <path>        capture measurements for `lasp trace` /\n\
      \x20                        the sim engine's replay strategy  [off]\n\
      \n\
@@ -533,12 +535,16 @@ fn cmd_loadgen(flags: &Flags) -> Result<()> {
         }
         lg.timeout_secs = secs;
     }
+    if let Some(v) = flags.get("batch") {
+        lg.batch = v.parse().context("--batch")?;
+    }
     println!(
-        "# lasp loadgen: {} | sessions={} rounds={} threads={} apps={:?}",
+        "# lasp loadgen: {} | sessions={} rounds={} threads={} batch={} apps={:?}",
         lg.addr,
         lg.sessions,
         lg.rounds,
         lg.threads,
+        lg.batch,
         lg.apps.iter().map(|a| a.name()).collect::<Vec<_>>(),
     );
     let report = lasp::serve::loadgen::run(&lg)?;

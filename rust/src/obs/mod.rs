@@ -145,6 +145,8 @@ pub mod route {
     pub const METRICS: u64 = 8;
     pub const TRACE: u64 = 9;
     pub const DEBUG_SESSION: u64 = 10;
+    pub const SUGGEST_BATCH: u64 = 11;
+    pub const REPORT_BATCH: u64 = 12;
 }
 
 pub fn route_name(code: u64) -> &'static str {
@@ -159,6 +161,8 @@ pub fn route_name(code: u64) -> &'static str {
         route::METRICS => "/metrics",
         route::TRACE => "/v1/trace",
         route::DEBUG_SESSION => "/v1/debug/session",
+        route::SUGGEST_BATCH => "/v1/suggest/batch",
+        route::REPORT_BATCH => "/v1/report/batch",
         _ => "other",
     }
 }

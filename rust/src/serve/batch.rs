@@ -130,6 +130,40 @@ impl BatchIngest {
         }
     }
 
+    /// Enqueue a shard-grouped run of reports under *one* sender-lock
+    /// acquisition — the batch report endpoint groups its entries by
+    /// shard before calling this, so an N-entry batch costs one lock per
+    /// shard touched instead of N. Outcomes are pushed onto `out` in
+    /// input order; a full queue drops-and-counts the individual report
+    /// and keeps going, so one saturated shard degrades entries, never
+    /// the whole batch.
+    pub fn enqueue_group(
+        &self,
+        shard: usize,
+        reports: &[Report],
+        metrics: &Metrics,
+        out: &mut Vec<Enqueue>,
+    ) -> Result<(), String> {
+        let tx = match self.txs[shard].lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        };
+        for &r in reports {
+            match tx.try_send(Msg::Report(r)) {
+                Ok(()) => out.push(Enqueue::Queued),
+                Err(TrySendError::Full(_)) => {
+                    metrics.queue_backpressure.fetch_add(1, Ordering::Relaxed);
+                    metrics.reports_dropped.fetch_add(1, Ordering::Relaxed);
+                    out.push(Enqueue::Dropped);
+                }
+                Err(TrySendError::Disconnected(_)) => {
+                    return Err("updater thread exited".to_string())
+                }
+            }
+        }
+        Ok(())
+    }
+
     /// Stop all updaters after draining everything queued ahead of the
     /// stop marker. Safe to call once; later enqueues fail cleanly.
     pub fn stop(&self) {
@@ -440,6 +474,41 @@ mod tests {
         let guard = store.read_shard(0);
         let session = guard.sessions.get(&id.0).unwrap();
         assert_eq!(session.tuner.total_pulls(), 30.0, "a duplicate reached ArmStats");
+    }
+
+    #[test]
+    fn enqueue_group_drops_individually_under_one_lock() {
+        let store = Arc::new(ShardedStore::new(1));
+        let apps = Arc::new(AppsCache::new());
+        let metrics = Arc::new(Metrics::new());
+        let ingest = BatchIngest::start(
+            store.clone(),
+            apps,
+            metrics.clone(),
+            Arc::new(Recorder::new(2, 256)),
+            8,
+            4,
+            None,
+        );
+        let k = key("group-client");
+        let id = store.intern(&k.as_ref(), k.hash64());
+        let reports: Vec<Report> =
+            (0..64).map(|i| report(id, i % 125, 1.0, 5.0)).collect();
+        let mut out = Vec::new();
+        {
+            // Hold the shard write lock so the updater cannot drain: the
+            // 8-deep queue must shed most of the 64-entry group.
+            let _guard = store.write_shard(0);
+            ingest.enqueue_group(0, &reports, &metrics, &mut out).unwrap();
+        }
+        assert_eq!(out.len(), 64, "one outcome per report, in order");
+        let queued = out.iter().filter(|&&e| e == Enqueue::Queued).count() as u64;
+        let dropped = out.iter().filter(|&&e| e == Enqueue::Dropped).count() as u64;
+        assert!(queued >= 8 && dropped >= 1, "queued {queued} dropped {dropped}");
+        assert_eq!(metrics.reports_dropped.load(Ordering::Relaxed), dropped);
+        ingest.stop();
+        // Everything queued was eventually applied; drops stayed dropped.
+        assert_eq!(metrics.reports_applied.load(Ordering::Relaxed), queued);
     }
 
     #[test]

@@ -52,6 +52,11 @@ pub struct LoadgenConfig {
     /// Socket read timeout, seconds (`--timeout-secs`). Long sweeps
     /// against a checkpoint-heavy server want more than the default.
     pub timeout_secs: u64,
+    /// Entries per request (`--batch <n>`). With `batch > 1` each thread
+    /// drives its sessions through `/v1/suggest/batch` and
+    /// `/v1/report/batch`, carrying up to `n` sessions per HTTP
+    /// round-trip; `1` keeps the classic single-entry endpoints.
+    pub batch: usize,
     /// Capture the observed `(app, mode, arm, time, power)` stream to a
     /// `LASPTRC1` trace file (`lasp loadgen --record`); replayable via
     /// `lasp simulate` with `trace = "<path>"`.
@@ -71,6 +76,7 @@ impl Default for LoadgenConfig {
             fidelity: 0.15,
             seed: 42,
             timeout_secs: 30,
+            batch: 1,
             record: None,
         }
     }
@@ -347,6 +353,43 @@ fn write_body(
     w.end_obj();
 }
 
+/// Serialize a `{"entries": [...]}` batch body into `buf` (cleared
+/// first). Entry `j` describes session `(cursor + j) % sessions.len()`;
+/// when `measurements` is `Some` each entry carries its measurement
+/// triple (report batch), otherwise the entries are suggest-shaped.
+fn write_batch_body(
+    buf: &mut Vec<u8>,
+    cfg: &LoadgenConfig,
+    sessions: &[ClientSession],
+    cursor: usize,
+    n: usize,
+    measurements: Option<&[(usize, f64, f64)]>,
+) {
+    buf.clear();
+    let mut w = JsonWriter::new(buf);
+    w.begin_obj();
+    w.key("entries");
+    w.begin_arr();
+    for j in 0..n {
+        let s = &sessions[(cursor + j) % sessions.len()];
+        w.begin_obj();
+        w.field_str("client_id", &s.client_id);
+        w.field_str("app", s.kind.name());
+        w.field_str("device", s.mode.lower_name());
+        w.field_num("alpha", cfg.alpha);
+        w.field_num("beta", cfg.beta);
+        if let Some(ms) = measurements {
+            let (arm, time_s, power_w) = ms[j];
+            w.field_num("arm", arm as f64);
+            w.field_num("time_s", time_s);
+            w.field_num("power_w", power_w);
+        }
+        w.end_obj();
+    }
+    w.end_arr();
+    w.end_obj();
+}
+
 impl LoadgenConfig {
     /// The target address list (see [`LoadgenConfig::addr`]).
     pub fn targets(&self) -> Vec<String> {
@@ -363,6 +406,13 @@ impl LoadgenConfig {
 pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
     if cfg.sessions == 0 || cfg.rounds == 0 || cfg.threads == 0 || cfg.apps.is_empty() {
         return Err(anyhow!("loadgen: sessions/rounds/threads/apps must be non-empty"));
+    }
+    if cfg.batch == 0 || cfg.batch > super::service::MAX_BATCH_ENTRIES {
+        return Err(anyhow!(
+            "loadgen: --batch must be in 1..={} (got {})",
+            super::service::MAX_BATCH_ENTRIES,
+            cfg.batch
+        ));
     }
     let targets = cfg.targets();
     if targets.is_empty() {
@@ -505,6 +555,95 @@ fn worker(
     let mut records: Vec<TraceEvent> =
         Vec::with_capacity(if cfg.record.is_some() { my_rounds } else { 0 });
 
+    if cfg.batch > 1 {
+        // Batched closed loop: up to `batch` sessions advance one round
+        // per suggest/report *pair* of HTTP requests. Buffers (body,
+        // arms, measurements) are reused across iterations so the client
+        // stays allocation-light like the single-entry path.
+        let mut arms: Vec<usize> = Vec::with_capacity(cfg.batch);
+        let mut measurements: Vec<(usize, f64, f64)> = Vec::with_capacity(cfg.batch);
+        let mut cursor = 0usize;
+        let mut attempted = 0usize;
+        while attempted < my_rounds {
+            let n = cfg.batch.min(sessions.len()).min(my_rounds - attempted);
+            attempted += n;
+            let base = cursor;
+            cursor = (cursor + n) % sessions.len();
+
+            // Batched suggest.
+            write_batch_body(&mut body, cfg, &sessions, base, n, None);
+            let t0 = Instant::now();
+            let status = match client.post_slice("/v1/suggest/batch", &body) {
+                Ok(st) => st,
+                Err(_) => {
+                    errors += 1;
+                    continue;
+                }
+            };
+            latencies.push(t0.elapsed().as_secs_f64());
+            if status != 200 {
+                errors += 1;
+                continue;
+            }
+            arms.clear();
+            let parsed = (|| -> Option<()> {
+                let v = JsonSlice::parse(client.last_body()).ok()?;
+                for item in v.get("results")?.items() {
+                    arms.push(item.get("arm")?.as_usize()?);
+                }
+                (arms.len() == n).then_some(())
+            })();
+            if parsed.is_none() {
+                errors += 1;
+                continue;
+            }
+
+            // Evaluate every entry locally on its simulated device.
+            measurements.clear();
+            for (j, &arm) in arms.iter().enumerate() {
+                let idx = (base + j) % sessions.len();
+                let s = &mut sessions[idx];
+                let workload = models[s.app_index].workload(arm, cfg.fidelity);
+                let m = s.device.run(&workload);
+                if cfg.record.is_some() {
+                    let (a, b, c) =
+                        obs::pack_measure(s.kind, s.mode, arm as u32, m.time_s, m.power_w);
+                    records.push(TraceEvent {
+                        seq: 0,
+                        t_us: epoch.elapsed().as_micros() as u64,
+                        kind: EventKind::Measure.code(),
+                        a,
+                        b,
+                        c,
+                    });
+                }
+                measurements.push((arm, m.time_s, m.power_w));
+            }
+
+            // Batched report.
+            write_batch_body(&mut body, cfg, &sessions, base, n, Some(&measurements));
+            let t0 = Instant::now();
+            match client.post_slice("/v1/report/batch", &body) {
+                Ok(202) | Ok(200) => {
+                    latencies.push(t0.elapsed().as_secs_f64());
+                    rounds_done += n;
+                }
+                Ok(_) | Err(_) => {
+                    errors += 1;
+                }
+            }
+        }
+        return Ok(WorkerOut {
+            latencies,
+            errors,
+            rounds: rounds_done,
+            reconnects: client.reconnects() as usize,
+            requests: client.requests() as usize,
+            connect_retries,
+            records,
+        });
+    }
+
     for round in 0..my_rounds {
         let idx = round % sessions.len();
         let s = &mut sessions[idx];
@@ -586,6 +725,45 @@ mod tests {
         assert!(cfg.rounds >= 10_000, "acceptance needs >= 10k round-trips");
         assert_eq!(cfg.apps.len(), 4);
         assert_eq!(cfg.timeout_secs, 30, "historical read-timeout default");
+        assert_eq!(cfg.batch, 1, "single-entry endpoints are the default");
+    }
+
+    #[test]
+    fn rejects_bad_batch_sizes() {
+        let cfg = LoadgenConfig { batch: 0, ..Default::default() };
+        assert!(run(&cfg).is_err(), "batch 0 must be rejected");
+        let cfg = LoadgenConfig { batch: 10_000, ..Default::default() };
+        assert!(run(&cfg).is_err(), "batch beyond the server cap must be rejected");
+    }
+
+    #[test]
+    fn batch_body_shape_matches_endpoints() {
+        let cfg = LoadgenConfig::default();
+        let sessions: Vec<ClientSession> = (0..2)
+            .map(|s| ClientSession {
+                client_id: format!("lg-{s}"),
+                app_index: 0,
+                kind: cfg.apps[0],
+                mode: PowerMode::Maxn,
+                device: JetsonNano::new(PowerMode::Maxn, s as u64),
+            })
+            .collect();
+        let mut buf = Vec::new();
+        write_batch_body(&mut buf, &cfg, &sessions, 0, 2, None);
+        let v = JsonSlice::parse(&buf).expect("suggest batch body parses");
+        let entries: Vec<_> = v.get("entries").expect("entries").items().collect();
+        assert_eq!(entries.len(), 2);
+        assert!(entries[0].get("arm").is_none(), "suggest entries carry no measurement");
+        assert_eq!(entries[1].get("client_id").unwrap().as_str().unwrap(), "lg-1");
+
+        write_batch_body(&mut buf, &cfg, &sessions, 1, 2, Some(&[(3, 0.5, 4.0), (7, 0.25, 2.0)]));
+        let v = JsonSlice::parse(&buf).expect("report batch body parses");
+        let entries: Vec<_> = v.get("entries").unwrap().items().collect();
+        assert_eq!(entries.len(), 2);
+        // cursor=1 wraps: first entry is session lg-1.
+        assert_eq!(entries[0].get("client_id").unwrap().as_str().unwrap(), "lg-1");
+        assert_eq!(entries[0].get("arm").unwrap().as_usize().unwrap(), 3);
+        assert_eq!(entries[1].get("power_w").unwrap().as_f64().unwrap(), 2.0);
     }
 
     #[test]

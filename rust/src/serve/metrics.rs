@@ -105,6 +105,73 @@ impl Default for Histogram {
     }
 }
 
+/// Batch-size histogram bucket upper bounds (entries per batch request,
+/// plus a +Inf bucket). Powers of two up to the default `max_batch`-sized
+/// request cap, so the operator can see at a glance whether clients batch
+/// at all and how close they run to the cap.
+pub const BATCH_BOUNDS: [u64; 9] = [1, 2, 4, 8, 16, 32, 64, 128, 256];
+
+/// A fixed-bucket histogram over dimensionless integer observations
+/// (entries per batch request). Distinct from [`Histogram`] because the
+/// exposition differs: a plain `{name}_sum`, not `{name}_sum_us`.
+pub struct ValueHistogram {
+    /// One counter per bound, plus the +Inf bucket at the end.
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum: AtomicU64,
+}
+
+impl ValueHistogram {
+    pub fn new() -> ValueHistogram {
+        ValueHistogram {
+            buckets: (0..=BATCH_BOUNDS.len()).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one observation.
+    pub fn observe(&self, v: u64) {
+        let idx = BATCH_BOUNDS
+            .iter()
+            .position(|&b| v <= b)
+            .unwrap_or(BATCH_BOUNDS.len());
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+    }
+
+    /// Observations recorded (= batch requests seen).
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Sum of all observations (= batch entries seen).
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    /// Append Prometheus `_bucket`/`_sum`/`_count` lines.
+    pub fn render(&self, name: &str, out: &mut String) {
+        let _ = writeln!(out, "# TYPE {name} histogram");
+        let mut cum = 0u64;
+        for (i, bound) in BATCH_BOUNDS.iter().enumerate() {
+            cum += self.buckets[i].load(Ordering::Relaxed);
+            let _ = writeln!(out, "{name}_bucket{{le=\"{bound}\"}} {cum}");
+        }
+        cum += self.buckets[BATCH_BOUNDS.len()].load(Ordering::Relaxed);
+        let _ = writeln!(out, "{name}_bucket{{le=\"+Inf\"}} {cum}");
+        let _ = writeln!(out, "{name}_sum {}", self.sum());
+        let _ = writeln!(out, "{name}_count {}", self.count());
+    }
+}
+
+impl Default for ValueHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
 /// Point-in-time gauges of the fleet-sync plane, sampled at render time
 /// (the counts live in [`super::store::ShardedStore`] and
 /// [`super::fleet::FleetStore`], not behind atomics here).
@@ -160,6 +227,9 @@ pub struct Metrics {
     pub suggest_latency: Histogram,
     pub report_latency: Histogram,
     pub best_latency: Histogram,
+    /// Entries per batch request across both `/v1/suggest/batch` and
+    /// `/v1/report/batch` — `_count` is batch requests, `_sum` is entries.
+    pub batch_size: ValueHistogram,
     /// Fleet-sync server plane and checkpoint-write latencies — without
     /// these, a stalled leader merge or a slow checkpoint disk is
     /// invisible next to the sub-millisecond suggest path.
@@ -207,6 +277,7 @@ impl Metrics {
             suggest_latency: Histogram::new(),
             report_latency: Histogram::new(),
             best_latency: Histogram::new(),
+            batch_size: ValueHistogram::new(),
             sync_push_latency: Histogram::new(),
             sync_pull_latency: Histogram::new(),
             checkpoint_latency: Histogram::new(),
@@ -308,6 +379,7 @@ impl Metrics {
         counter(&mut out, "lasp_serve_transport_requests_total", load(&transport.requests));
         counter(&mut out, "lasp_serve_transport_alloc_events_total", load(&transport.alloc_events));
         counter(&mut out, "lasp_serve_transport_rejected_431_total", load(&transport.rejected_431));
+        self.batch_size.render("lasp_serve_batch_size", &mut out);
         self.suggest_latency.render("lasp_serve_suggest_latency_us", &mut out);
         self.report_latency.render("lasp_serve_report_latency_us", &mut out);
         self.best_latency.render("lasp_serve_best_latency_us", &mut out);
@@ -345,6 +417,24 @@ mod tests {
     }
 
     #[test]
+    fn value_histogram_buckets_and_overflow() {
+        let h = ValueHistogram::new();
+        for v in [1u64, 8, 64, 300] {
+            h.observe(v);
+        }
+        assert_eq!(h.count(), 4);
+        assert_eq!(h.sum(), 373);
+        let mut out = String::new();
+        h.render("x", &mut out);
+        assert!(out.contains("x_bucket{le=\"1\"} 1"), "{out}");
+        assert!(out.contains("x_bucket{le=\"8\"} 2"), "{out}");
+        assert!(out.contains("x_bucket{le=\"256\"} 3"), "{out}");
+        assert!(out.contains("x_bucket{le=\"+Inf\"} 4"), "{out}");
+        assert!(out.contains("x_sum 373"), "{out}");
+        assert!(out.contains("x_count 4"), "{out}");
+    }
+
+    #[test]
     fn empty_histogram_is_quiet() {
         let h = Histogram::new();
         assert_eq!(h.count(), 0);
@@ -366,6 +456,8 @@ mod tests {
         m.reports_dropped.fetch_add(5, Ordering::Relaxed);
         m.reports_deduped.fetch_add(6, Ordering::Relaxed);
         m.checkpoint_failures.fetch_add(2, Ordering::Relaxed);
+        m.batch_size.observe(16);
+        m.batch_size.observe(3);
         let fleet = FleetGauges { nodes: 3, prior_keys: 2, warm_starts: 4 };
         let trace = TraceGauges { recorded: 11, overwritten: 1 };
         let chaos = ChaosGauges { enabled: true, injections: 9 };
@@ -387,6 +479,9 @@ mod tests {
         assert!(page.contains("lasp_serve_transport_requests_total 7"), "{page}");
         assert!(page.contains("lasp_serve_transport_alloc_events_total 0"), "{page}");
         assert!(page.contains("lasp_serve_suggest_latency_us_bucket{le=\"250\"} 1"));
+        assert!(page.contains("lasp_serve_batch_size_bucket{le=\"16\"} 2"), "{page}");
+        assert!(page.contains("lasp_serve_batch_size_sum 19"), "{page}");
+        assert!(page.contains("lasp_serve_batch_size_count 2"), "{page}");
         assert!(page.contains("lasp_serve_sync_push_latency_us_count 1"), "{page}");
         assert!(page.contains("lasp_serve_sync_pull_latency_us_count 0"), "{page}");
         assert!(page.contains("lasp_serve_checkpoint_latency_us_count 1"), "{page}");

@@ -32,11 +32,14 @@
 //!   to every other (the paper's Fig 1 leader/fleet story, made real);
 //! * [`metrics`] — latency histograms and counters for `GET /metrics`;
 //! * [`service`] — the endpoint router and server lifecycle
-//!   (`/v1/suggest`, `/v1/report`, `/v1/best`, `/v1/checkpoint`,
+//!   (`/v1/suggest`, `/v1/report`, `/v1/suggest/batch`,
+//!   `/v1/report/batch`, `/v1/best`, `/v1/checkpoint`,
 //!   `/v1/sync/push`, `/v1/sync/pull`, `/v1/trace`,
 //!   `/v1/debug/session`, `/healthz`, `/metrics` — see `docs/API.md`
 //!   for the full HTTP reference), with every layer logging compact
-//!   binary events into the [`crate::obs`] flight recorder;
+//!   binary events into the [`crate::obs`] flight recorder; the batch
+//!   endpoints carry many entries per request, grouped by shard so each
+//!   shard lock is taken once per batch (`DESIGN.md` §Batched scoring);
 //! * [`loadgen`] — a closed-loop load generator (`lasp loadgen`) that
 //!   hammers one or more running servers through a pool of persistent
 //!   keep-alive connections across all four apps and reports throughput,

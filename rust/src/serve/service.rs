@@ -15,6 +15,10 @@
 //! |--------|---------------------|----------------------------------------------|
 //! | POST   | `/v1/suggest`       | next configuration to evaluate (Eq. 2-3)     |
 //! | POST   | `/v1/report`        | enqueue a measured evaluation (batched)      |
+//! | POST   | `/v1/suggest/batch` | many suggests in one request, one shard lock |
+//! |        |                     | per shard touched (see `DESIGN.md` §Batched) |
+//! | POST   | `/v1/report/batch`  | many reports in one request, per-entry       |
+//! |        |                     | queued/dropped status                        |
 //! | GET    | `/v1/best`          | the session's tuned configuration (Eq. 4)    |
 //! | POST   | `/v1/checkpoint`    | force a snapshot of every session            |
 //! | POST   | `/v1/sync/push`     | deposit a peer node's arm statistics         |
@@ -32,7 +36,7 @@ use super::checkpoint;
 use super::fleet::{self, FleetSnapshot, FleetStore, FleetSync, FleetSyncConfig};
 use super::http::{self, HttpHandler, HttpServer, Request, ResponseBuf, TransportStats};
 use super::metrics::{fleet_state_name, ChaosGauges, FleetGauges, Metrics, TraceGauges};
-use super::store::{AppsCache, KeyRef, PolicyKind, ShardedStore, Tuner};
+use super::store::{AppsCache, KeyRef, PolicyKind, SessionId, ShardedStore, Tuner};
 use crate::apps::AppKind;
 use crate::chaos::{ChaosConfig, ChaosLayer, HandlerFault};
 use crate::device::PowerMode;
@@ -41,6 +45,7 @@ use crate::telemetry::ResourceTracker;
 use crate::util::json::{JsonSlice, JsonWriter};
 use anyhow::{anyhow, Context, Result};
 use std::borrow::Cow;
+use std::cell::RefCell;
 use std::net::{SocketAddr, TcpListener};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -253,11 +258,87 @@ pub struct TuningService {
     chaos: Option<Arc<ChaosLayer>>,
 }
 
+/// Hard cap on entries per batch request (`/v1/suggest/batch`,
+/// `/v1/report/batch`). Oversized batches are rejected whole with 400 —
+/// a cap keeps one request from monopolizing a shard lock, and rejecting
+/// is cheaper than silently truncating a client's stream.
+pub const MAX_BATCH_ENTRIES: usize = 256;
+
+/// One validated batch entry, resolved to its interned session id. The
+/// measurement fields are zeroed for suggest entries.
+#[derive(Clone, Copy)]
+struct EntryPlan {
+    id: SessionId,
+    shard: u32,
+    app: AppKind,
+    policy: PolicyKind,
+    alpha: f64,
+    beta: f64,
+    arm: usize,
+    time_s: f64,
+    power_w: f64,
+    seq: Option<u64>,
+}
+
+/// Per-entry suggest outcome, written back in entry order.
+#[derive(Clone, Copy, Default)]
+struct ChoiceSlot {
+    arm: usize,
+    total_pulls: f64,
+}
+
+/// Reusable per-worker-thread scratch for the batch endpoints. Every
+/// buffer grows to its high-water mark once and is then only cleared and
+/// refilled, so steady-state batch handling allocates nothing — the same
+/// discipline as [`ResponseBuf`] on the single-request path.
+struct BatchArena {
+    /// Validated entries, in request order.
+    entries: Vec<EntryPlan>,
+    /// Entry indices sorted by (shard, arrival): the shard-grouped visit
+    /// order. Stable within a shard, so a session's entries apply in the
+    /// order the client sent them (sessions are pinned to one shard).
+    order: Vec<u32>,
+    /// One bandit scratch shared by every session scored in the batch
+    /// (see [`crate::bandit::Scratch`] — `resize` keeps capacity, so
+    /// mixed arm counts share one high-water allocation).
+    scratch: crate::bandit::Scratch,
+    /// Suggest outcomes, indexed by entry.
+    choices: Vec<ChoiceSlot>,
+    /// Staging for one shard's run of reports.
+    reports: Vec<Report>,
+    /// Enqueue outcomes in shard-grouped order...
+    grouped: Vec<Enqueue>,
+    /// ...scattered back to entry order for the response.
+    statuses: Vec<Enqueue>,
+}
+
+impl BatchArena {
+    fn new() -> BatchArena {
+        BatchArena {
+            entries: Vec::new(),
+            order: Vec::new(),
+            scratch: crate::bandit::Scratch::new(),
+            choices: Vec::new(),
+            reports: Vec::new(),
+            grouped: Vec::new(),
+            statuses: Vec::new(),
+        }
+    }
+}
+
+thread_local! {
+    /// One arena per HTTP worker thread (workers are pinned to threads,
+    /// so this is effectively per-worker reuse without locking).
+    static BATCH_ARENA: RefCell<BatchArena> = RefCell::new(BatchArena::new());
+}
+
 /// Flight-recorder route code for a request (see [`obs::route`]).
 fn route_code(method: &str, path: &str) -> u64 {
     match (method, path) {
         ("POST", "/v1/suggest") => obs::route::SUGGEST,
         ("POST", "/v1/report") => obs::route::REPORT,
+        ("POST", "/v1/suggest/batch") => obs::route::SUGGEST_BATCH,
+        ("POST", "/v1/report/batch") => obs::route::REPORT_BATCH,
         ("GET", "/v1/best") => obs::route::BEST,
         ("POST", "/v1/checkpoint") => obs::route::CHECKPOINT,
         ("POST", "/v1/sync/push") => obs::route::SYNC_PUSH,
@@ -313,6 +394,8 @@ impl TuningService {
         match (req.method, req.path) {
             ("POST", "/v1/suggest") => self.suggest(req, out),
             ("POST", "/v1/report") => self.report(req, out),
+            ("POST", "/v1/suggest/batch") => self.suggest_batch(req, out),
+            ("POST", "/v1/report/batch") => self.report_batch(req, out),
             ("GET", "/v1/best") => self.best(req, out),
             ("POST", "/v1/checkpoint") => self.checkpoint_now(out),
             ("POST", "/v1/sync/push") => self.sync_push(req, out),
@@ -476,6 +559,278 @@ impl TuningService {
             Err(e) => out.error(503, &e),
         }
         self.metrics.report_latency.observe(t0.elapsed());
+    }
+
+    /// Shared validation for both batch endpoints: parse the `entries`
+    /// array, reject malformed or ambiguous input *atomically* (every
+    /// entry is validated before any session state changes, so a 4xx
+    /// means nothing was applied), and resolve each entry to its
+    /// interned session id. `with_report` additionally requires the
+    /// measurement fields. On success the arena holds the entry plans
+    /// and the shard-grouped visit order; returns the entry count.
+    fn parse_batch(
+        &self,
+        body: &JsonSlice<'_>,
+        with_report: bool,
+        arena: &mut BatchArena,
+    ) -> std::result::Result<usize, (u16, String)> {
+        // Duplicate keys are grammatical JSON but ambiguous (`get`
+        // returns the first occurrence, tree parsers keep the last):
+        // reject instead of guessing which value the client meant.
+        if body.has_duplicate_keys() {
+            return Err((400, "duplicate keys in request object".to_string()));
+        }
+        let entries_v = match body.get("entries") {
+            Some(v) if v.is_arr() => v,
+            Some(_) => return Err((400, "entries must be an array".to_string())),
+            None => return Err((400, "missing entries array".to_string())),
+        };
+        arena.entries.clear();
+        for (i, entry) in entries_v.items().enumerate() {
+            if arena.entries.len() >= MAX_BATCH_ENTRIES {
+                return Err((400, format!("too many entries (max {MAX_BATCH_ENTRIES})")));
+            }
+            if !entry.is_obj() {
+                return Err((400, format!("entry {i}: not an object")));
+            }
+            if entry.has_duplicate_keys() {
+                return Err((400, format!("entry {i}: duplicate keys")));
+            }
+            let p = Params::Body(entry);
+            let pk = self.parse_key(&p).map_err(|e| (400, format!("entry {i}: {e}")))?;
+            let mut plan = EntryPlan {
+                id: SessionId(0),
+                shard: 0,
+                app: pk.app,
+                policy: pk.policy,
+                alpha: pk.alpha,
+                beta: pk.beta,
+                arm: 0,
+                time_s: 0.0,
+                power_w: 0.0,
+                seq: None,
+            };
+            if with_report {
+                // Same strictness as the single-report path: arm range is
+                // checked at apply time (`Tuner::observe`), everything
+                // else here.
+                plan.arm = match entry.get("arm").and_then(|v| v.as_usize()) {
+                    Some(a) => a,
+                    None => return Err((400, format!("entry {i}: missing/invalid arm"))),
+                };
+                (plan.time_s, plan.power_w) = match (
+                    entry.get("time_s").and_then(|v| v.as_f64()),
+                    entry.get("power_w").and_then(|v| v.as_f64()),
+                ) {
+                    (Some(t), Some(pw))
+                        if t.is_finite() && t > 0.0 && pw.is_finite() && pw >= 0.0 =>
+                    {
+                        (t, pw)
+                    }
+                    _ => {
+                        return Err((
+                            400,
+                            format!("entry {i}: missing/invalid time_s or power_w"),
+                        ))
+                    }
+                };
+                plan.seq = match entry.get("seq") {
+                    None => None,
+                    Some(v) => match v.as_usize() {
+                        Some(s) => Some(s as u64),
+                        None => {
+                            return Err((
+                                400,
+                                format!("entry {i}: invalid seq (expect a non-negative integer)"),
+                            ))
+                        }
+                    },
+                };
+            }
+            let kref = pk.key_ref();
+            let hash = kref.hash64();
+            plan.id = self.store.intern(&kref, hash);
+            plan.shard = self.store.shard_of_hash(hash) as u32;
+            arena.entries.push(plan);
+        }
+        if arena.entries.is_empty() {
+            return Err((400, "empty batch".to_string()));
+        }
+        // Shard-grouped visit order: each shard lock is taken once per
+        // batch. `sort_unstable` on a (shard, arrival) key keeps a
+        // session's entries in client order within its shard.
+        arena.order.clear();
+        arena.order.extend(0..arena.entries.len() as u32);
+        let entries = &arena.entries;
+        arena
+            .order
+            .sort_unstable_by_key(|&i| ((entries[i as usize].shard as u64) << 32) | i as u64);
+        Ok(arena.entries.len())
+    }
+
+    /// `POST /v1/suggest/batch`: many suggests in one request. Entries
+    /// are validated as a unit (any bad entry rejects the whole batch
+    /// with 400 and no state change), grouped by shard so each shard
+    /// write lock is taken once, and scored through one shared bandit
+    /// scratch. Results come back in entry order.
+    fn suggest_batch(&self, req: &Request<'_>, out: &mut ResponseBuf) {
+        let t0 = Instant::now();
+        let body = match JsonSlice::parse(req.body) {
+            Ok(b) => b,
+            Err(e) => return out.error(400, &format!("bad JSON: {e}")),
+        };
+        BATCH_ARENA.with(|cell| {
+            let arena = &mut *cell.borrow_mut();
+            let n = match self.parse_batch(&body, false, arena) {
+                Ok(n) => n,
+                Err((code, e)) => return out.error(code, &e),
+            };
+            arena.choices.clear();
+            arena.choices.resize(n, ChoiceSlot::default());
+            let BatchArena { entries, order, scratch, choices, .. } = arena;
+            let mut pos = 0usize;
+            while pos < order.len() {
+                let shard_i = entries[order[pos] as usize].shard as usize;
+                let mut shard = self.store.write_shard(shard_i);
+                while pos < order.len()
+                    && entries[order[pos] as usize].shard as usize == shard_i
+                {
+                    let idx = order[pos] as usize;
+                    let e = &entries[idx];
+                    let k = self.apps.arms(e.app);
+                    let (session, created) =
+                        match self.store.get_or_create(&mut shard, e.id, e.alpha, e.beta, k) {
+                            Ok(x) => x,
+                            Err(err) => return out.error(500, &err),
+                        };
+                    session.suggests += 1;
+                    let warm = created && session.tuner.total_pulls() > 0.0;
+                    let choice = session.tuner.select_traced_in(scratch);
+                    let total_pulls = session.tuner.total_pulls();
+                    if created {
+                        self.metrics.sessions_created.fetch_add(1, Ordering::Relaxed);
+                        self.recorder.record(
+                            EventKind::SessionCreate,
+                            e.id.0 as u64,
+                            k as u64,
+                            warm as u64 | (e.policy.code() as u64) << 8,
+                        );
+                    }
+                    let (a, b, c) = obs::pack_suggest(
+                        e.id.0,
+                        choice.arm as u32,
+                        choice.gap,
+                        choice.explore,
+                        e.policy.code(),
+                        total_pulls as u64,
+                    );
+                    self.recorder.record(EventKind::Suggest, a, b, c);
+                    self.metrics.suggests.fetch_add(1, Ordering::Relaxed);
+                    choices[idx] = ChoiceSlot { arm: choice.arm, total_pulls };
+                    pos += 1;
+                }
+            }
+            self.metrics.batch_size.observe(n as u64);
+            let mut w = JsonWriter::new(&mut out.body);
+            w.begin_obj();
+            w.field_num("count", n as f64);
+            w.key("results");
+            w.begin_arr();
+            for (i, e) in entries.iter().enumerate() {
+                out.scratch.clear();
+                self.apps.describe_into(e.app, choices[i].arm, &mut out.scratch);
+                w.begin_obj();
+                w.field_num("arm", choices[i].arm as f64);
+                w.field_str("config", &out.scratch);
+                w.field_num("shard", e.shard as f64);
+                w.field_num("total_pulls", choices[i].total_pulls);
+                w.end_obj();
+            }
+            w.end_arr();
+            w.end_obj();
+            self.metrics.suggest_latency.observe(t0.elapsed());
+        })
+    }
+
+    /// `POST /v1/report/batch`: many reports in one request. Validation
+    /// is all-or-nothing (400, nothing enqueued); *enqueueing* is
+    /// per-entry — an entry hitting a full shard queue is dropped and
+    /// counted individually (`lasp_serve_reports_dropped_total`, status
+    /// `"dropped"` in the response) while its neighbors proceed, so one
+    /// saturated shard degrades entries, never whole batches. Always 202
+    /// once validation passes; per-entry outcomes ride in `results`.
+    fn report_batch(&self, req: &Request<'_>, out: &mut ResponseBuf) {
+        let t0 = Instant::now();
+        let body = match JsonSlice::parse(req.body) {
+            Ok(b) => b,
+            Err(e) => return out.error(400, &format!("bad JSON: {e}")),
+        };
+        BATCH_ARENA.with(|cell| {
+            let arena = &mut *cell.borrow_mut();
+            let n = match self.parse_batch(&body, true, arena) {
+                Ok(n) => n,
+                Err((code, e)) => return out.error(code, &e),
+            };
+            let BatchArena { entries, order, reports, grouped, statuses, .. } = arena;
+            statuses.clear();
+            statuses.resize(n, Enqueue::Dropped);
+            grouped.clear();
+            let mut pos = 0usize;
+            while pos < order.len() {
+                let shard_i = entries[order[pos] as usize].shard as usize;
+                let run_start = pos;
+                reports.clear();
+                while pos < order.len()
+                    && entries[order[pos] as usize].shard as usize == shard_i
+                {
+                    let e = &entries[order[pos] as usize];
+                    reports.push(Report {
+                        id: e.id,
+                        app: e.app,
+                        alpha: e.alpha,
+                        beta: e.beta,
+                        arm: e.arm,
+                        time_s: e.time_s,
+                        power_w: e.power_w,
+                        seq: e.seq,
+                    });
+                    pos += 1;
+                }
+                let base = grouped.len();
+                if let Err(e) = self.ingest.enqueue_group(shard_i, reports, &self.metrics, grouped)
+                {
+                    return out.error(503, &e);
+                }
+                for (j, &idx) in order[run_start..pos].iter().enumerate() {
+                    statuses[idx as usize] = grouped[base + j];
+                }
+            }
+            let queued = statuses.iter().filter(|&&s| s == Enqueue::Queued).count();
+            self.metrics.reports_enqueued.fetch_add(queued as u64, Ordering::Relaxed);
+            self.metrics.batch_size.observe(n as u64);
+            out.set_status(202);
+            let mut w = JsonWriter::new(&mut out.body);
+            w.begin_obj();
+            w.field_num("queued", queued as f64);
+            w.field_num("dropped", (n - queued) as f64);
+            w.key("results");
+            w.begin_arr();
+            for (i, e) in entries.iter().enumerate() {
+                w.begin_obj();
+                w.field_str(
+                    "status",
+                    match statuses[i] {
+                        Enqueue::Queued => "queued",
+                        Enqueue::Dropped => "dropped",
+                    },
+                );
+                w.field_num("shard", e.shard as f64);
+                w.end_obj();
+            }
+            w.end_arr();
+            w.end_obj();
+            self.metrics.report_latency.observe(t0.elapsed());
+        })
     }
 
     fn best(&self, req: &Request<'_>, out: &mut ResponseBuf) {

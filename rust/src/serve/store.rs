@@ -368,6 +368,15 @@ impl Tuner {
         self.policy_mut().select_traced()
     }
 
+    /// [`Tuner::select_traced`] scoring through a caller-provided scratch
+    /// — the batched-suggest hot path walks every session in a batch
+    /// through one shared warm scratch instead of touching each session's
+    /// own buffers. Bit-identical choices, same RNG draws (the
+    /// [`Policy::select_traced_in`] contract).
+    pub fn select_traced_in(&mut self, scratch: &mut crate::bandit::Scratch) -> crate::bandit::Choice {
+        self.policy_mut().select_traced_in(scratch)
+    }
+
     /// Apply one measured report. Unlike [`Policy::update`], malformed arms
     /// (out of range, or outside a subset tuner's candidate set) are
     /// rejected as errors — a network service must not panic on bad input.

@@ -267,6 +267,51 @@ impl<'a> JsonSlice<'a> {
             inside,
         }
     }
+
+    /// Iterate the fields of a JSON object as `(inner key span, value)`
+    /// pairs in document order. The key span is the *undecoded* bytes
+    /// between the quotes (compare with [`Self::get`]'s key handling);
+    /// non-objects yield an empty iterator. Allocates nothing.
+    pub fn fields(&self) -> JsonFields<'a> {
+        let inside = self.bytes.first() == Some(&b'{');
+        JsonFields {
+            bytes: self.bytes,
+            pos: if inside { 1 } else { 0 },
+            inside,
+        }
+    }
+
+    /// Whether this object repeats a key at its top level. Duplicate keys
+    /// are grammatical JSON but ambiguous for a request codec — `get`
+    /// returns the first occurrence while tree parsers keep the last — so
+    /// the batch endpoints reject entries carrying them instead of
+    /// guessing. Pairwise span compares over a handful of fields; decoding
+    /// only happens when a key actually contains escapes. Non-objects
+    /// report `false`.
+    pub fn has_duplicate_keys(&self) -> bool {
+        let mut i = 0usize;
+        for (ka, _) in self.fields() {
+            for (kb, _) in self.fields().take(i) {
+                if json_key_eq(ka, kb) {
+                    return true;
+                }
+            }
+            i += 1;
+        }
+        false
+    }
+}
+
+/// Compare two undecoded key spans for semantic equality (escape-aware;
+/// the escape-free fast path is a plain byte compare).
+fn json_key_eq(a: &[u8], b: &[u8]) -> bool {
+    if !a.contains(&b'\\') && !b.contains(&b'\\') {
+        return a == b;
+    }
+    match (unescape(a), unescape(b)) {
+        (Some(x), Some(y)) => x == y,
+        _ => a == b,
+    }
 }
 
 /// Iterator over the elements of a [`JsonSlice`] array (see
@@ -311,6 +356,64 @@ impl<'a> Iterator for JsonItems<'a> {
             }
         }
         Some(JsonSlice { bytes: &self.bytes[start..end] })
+    }
+}
+
+/// Iterator over the fields of a [`JsonSlice`] object (see
+/// [`JsonSlice::fields`]).
+pub struct JsonFields<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+    inside: bool,
+}
+
+impl<'a> Iterator for JsonFields<'a> {
+    type Item = (&'a [u8], JsonSlice<'a>);
+
+    fn next(&mut self) -> Option<(&'a [u8], JsonSlice<'a>)> {
+        if !self.inside {
+            return None;
+        }
+        let mut s = Scan { bytes: self.bytes, pos: self.pos };
+        s.skip_ws();
+        match s.peek() {
+            None | Some(b'}') => {
+                self.inside = false;
+                return None;
+            }
+            _ => {}
+        }
+        // The enclosing document was validated by `JsonSlice::parse`, so
+        // scan failures are unreachable; treat them as end-of-object.
+        let kspan = match s.string_span() {
+            Ok(k) => k,
+            Err(_) => {
+                self.inside = false;
+                return None;
+            }
+        };
+        s.skip_ws();
+        if s.peek() != Some(b':') {
+            self.inside = false;
+            return None;
+        }
+        s.pos += 1;
+        s.skip_ws();
+        let vstart = s.pos;
+        if s.skip_value(0).is_err() {
+            self.inside = false;
+            return None;
+        }
+        let vend = s.pos;
+        s.skip_ws();
+        match s.peek() {
+            Some(b',') => self.pos = s.pos + 1,
+            _ => {
+                self.pos = s.pos;
+                self.inside = false;
+            }
+        }
+        Some((kspan, JsonSlice { bytes: &self.bytes[vstart..vend] }))
     }
 }
 
@@ -988,6 +1091,40 @@ mod tests {
         let scalar = v.get("arms").unwrap().items().next().unwrap();
         assert!(!scalar.is_arr());
         assert_eq!(scalar.items().count(), 0);
+    }
+
+    #[test]
+    fn slice_iterates_object_fields_in_order() {
+        let body = br#"{"client_id":"a","arm":3,"nested":{"x":1},"arr":[1,2]}"#;
+        let v = JsonSlice::parse(body).unwrap();
+        let fields: Vec<(&[u8], JsonSlice<'_>)> = v.fields().collect();
+        assert_eq!(fields.len(), 4);
+        assert_eq!(fields[0].0, b"client_id");
+        assert_eq!(fields[0].1.as_str().unwrap(), "a");
+        assert_eq!(fields[1].0, b"arm");
+        assert_eq!(fields[1].1.as_usize(), Some(3));
+        assert_eq!(fields[2].0, b"nested");
+        assert!(fields[2].1.is_obj());
+        assert_eq!(fields[3].0, b"arr");
+        assert!(fields[3].1.is_arr());
+        // Non-objects and empty objects yield nothing.
+        assert_eq!(fields[3].1.fields().count(), 0);
+        assert_eq!(JsonSlice::parse(b"{}").unwrap().fields().count(), 0);
+    }
+
+    #[test]
+    fn duplicate_keys_are_detected() {
+        let dup = JsonSlice::parse(br#"{"a":1,"b":2,"a":3}"#).unwrap();
+        assert!(dup.has_duplicate_keys());
+        let clean = JsonSlice::parse(br#"{"a":1,"b":2,"c":3}"#).unwrap();
+        assert!(!clean.has_duplicate_keys());
+        // Escape-aware: "\u0061" spells the same key as "a".
+        let escaped = JsonSlice::parse(br#"{"\u0061":1,"a":2}"#).unwrap();
+        assert!(escaped.has_duplicate_keys());
+        // Only the top level is checked; nested objects are separate.
+        let nested = JsonSlice::parse(br#"{"a":{"x":1},"b":{"x":2}}"#).unwrap();
+        assert!(!nested.has_duplicate_keys());
+        assert!(!JsonSlice::parse(b"[1,2]").unwrap().has_duplicate_keys());
     }
 
     #[test]

@@ -1,0 +1,443 @@
+//! Differential proof that the batched suggest/report path is *exactly*
+//! the single-request path, bit for bit, at every layer:
+//!
+//! 1. **Policy layer** — for every `PolicyKind`, a fleet driven through
+//!    [`select_batch`] (one shared scratch) must produce the identical
+//!    [`Choice`] stream — arm, `gap` bits, `explore` flag — and identical
+//!    final `ArmStats` as the same fleet driven through per-session
+//!    `select_traced()` calls in the same order.
+//! 2. **Kernel layer** — the autovectorization-friendly forms of
+//!    `weighted_rewards_into` / `ucb_scores_into` (branch-free selects,
+//!    lane-split min/max, chunked tails) are pinned bit-for-bit against
+//!    frozen scalar reference implementations in the style of
+//!    `policy_golden.rs`: plain branchy loops, single accumulators,
+//!    left-to-right order.
+//! 3. **HTTP layer** — two live servers, one fed single
+//!    `/v1/suggest`+`/v1/report` requests, the other the equivalent
+//!    `/v1/suggest/batch`+`/v1/report/batch` stream (same client ids, so
+//!    session-key-hash-seeded stochastic policies line up), must emit the
+//!    same arm sequences and converge to identical per-session arm
+//!    statistics.
+
+use lasp::bandit::reward::{
+    ucb_scores_into, weighted_rewards, weighted_rewards_into, MINMAX_EPS, REWARD_EPS,
+    UNPULLED_SCORE,
+};
+use lasp::bandit::{
+    select_batch, ArmStats, Choice, EpsilonGreedy, Policy, Scratch, SlidingWindowUcb, SubsetTuner,
+    ThompsonSampler, UcbTuner,
+};
+use lasp::serve::{start, HttpClient, ServeConfig};
+use lasp::util::json::{Json, JsonSlice};
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+const ALPHA: f64 = 0.7;
+const BETA: f64 = 0.3;
+
+// --- 1. Policy layer ------------------------------------------------------
+
+fn fleet(kind: &str, n: usize) -> Vec<Box<dyn Policy>> {
+    let k = 16;
+    (0..n)
+        .map(|i| {
+            let seed = 31 * i as u64 + 7;
+            let b: Box<dyn Policy> = match kind {
+                "ucb" => Box::new(UcbTuner::new(k, ALPHA, BETA)),
+                "swucb" => Box::new(SlidingWindowUcb::new(k, ALPHA, BETA, 48)),
+                "thompson" => Box::new(ThompsonSampler::new(k, ALPHA, BETA, seed)),
+                "epsilon" => Box::new(EpsilonGreedy::new(k, ALPHA, BETA, 0.1, seed)),
+                "subset" => Box::new(SubsetTuner::new(500, 24, ALPHA, BETA, seed)),
+                _ => unreachable!(),
+            };
+            b
+        })
+        .collect()
+}
+
+fn measurement(arm: usize, round: usize) -> (f64, f64) {
+    // Deterministic, positive, arm-dependent — no RNG, so both streams
+    // feed byte-identical updates whenever the arms agree.
+    (
+        0.5 + ((arm * 7919 + round * 13) % 97) as f64 / 40.0,
+        3.0 + ((arm * 104_729) % 11) as f64 * 0.5,
+    )
+}
+
+fn assert_choice_bits(name: &str, round: usize, i: usize, single: &Choice, batched: &Choice) {
+    assert_eq!(batched.arm, single.arm, "{name}: arm diverged (round {round}, session {i})");
+    assert_eq!(
+        batched.gap.to_bits(),
+        single.gap.to_bits(),
+        "{name}: gap bits diverged (round {round}, session {i}): {} vs {}",
+        batched.gap,
+        single.gap
+    );
+    assert_eq!(
+        batched.explore, single.explore,
+        "{name}: explore flag diverged (round {round}, session {i})"
+    );
+}
+
+#[test]
+fn batched_stream_is_bit_identical_to_interleaved_singles_for_every_policy() {
+    let (sessions, rounds) = (6usize, 120usize);
+    for kind in ["ucb", "swucb", "thompson", "epsilon", "subset"] {
+        let mut singles = fleet(kind, sessions);
+        let mut batched = fleet(kind, sessions);
+        let mut scratch = Scratch::new();
+        let mut choices: Vec<Choice> = Vec::new();
+        for round in 0..rounds {
+            // Single-request stream: suggest+report per session, in order.
+            let mut single_choices = Vec::with_capacity(sessions);
+            for s in singles.iter_mut() {
+                let c = s.select_traced();
+                let (t, p) = measurement(c.arm, round);
+                s.update(c.arm, t, p);
+                single_choices.push(c);
+            }
+            // Batched stream: one multi-session select through ONE shared
+            // scratch, then the same reports.
+            {
+                let mut refs: Vec<&mut dyn Policy> =
+                    batched.iter_mut().map(|b| b.as_mut()).collect();
+                select_batch(&mut refs, &mut scratch, &mut choices);
+            }
+            assert_eq!(choices.len(), sessions);
+            for (i, c) in choices.iter().enumerate() {
+                assert_choice_bits(kind, round, i, &single_choices[i], c);
+                let (t, p) = measurement(c.arm, round);
+                batched[i].update(c.arm, t, p);
+            }
+        }
+        // Identical decision streams must leave identical sufficient
+        // statistics (ArmStats: PartialEq over every f64 field).
+        for (i, (a, b)) in singles.iter().zip(&batched).enumerate() {
+            assert_eq!(
+                b.stats(),
+                a.stats(),
+                "{kind}: final ArmStats diverged for session {i}"
+            );
+            assert_eq!(b.counts(), a.counts(), "{kind}: full-space counts diverged ({i})");
+            assert_eq!(b.total_pulls(), a.total_pulls(), "{kind}");
+        }
+    }
+}
+
+// --- 2. Kernel layer ------------------------------------------------------
+// Frozen scalar references: plain branchy loops, single min/max
+// accumulators, strict left-to-right order. If a future "optimization"
+// reassociates the fill sums or turns a select back into a value-changing
+// branch, these diverge bit-for-bit.
+
+fn ref_weighted_rewards(stats: &ArmStats, alpha: f64, beta: f64) -> Vec<f64> {
+    let k = stats.k();
+    let counts = stats.counts();
+    let mean_tau = stats.mean_tau();
+    let mean_rho = stats.mean_rho();
+    let mut fill_tau = 0.0;
+    let mut fill_rho = 0.0;
+    let mut pulled = 0.0f64;
+    let mut tau_lo = f64::INFINITY;
+    let mut tau_hi = f64::NEG_INFINITY;
+    let mut rho_lo = f64::INFINITY;
+    let mut rho_hi = f64::NEG_INFINITY;
+    for i in 0..k {
+        if counts[i] > 0.0 {
+            fill_tau += mean_tau[i];
+            fill_rho += mean_rho[i];
+            pulled += 1.0;
+            tau_lo = tau_lo.min(mean_tau[i]);
+            tau_hi = tau_hi.max(mean_tau[i]);
+            rho_lo = rho_lo.min(mean_rho[i]);
+            rho_hi = rho_hi.max(mean_rho[i]);
+        }
+    }
+    let denom = pulled.max(1.0);
+    let fill_tau = fill_tau / denom;
+    let fill_rho = fill_rho / denom;
+    if pulled == 0.0 {
+        tau_lo = fill_tau;
+        tau_hi = fill_tau;
+        rho_lo = fill_rho;
+        rho_hi = fill_rho;
+    }
+    let tau_range = (tau_hi - tau_lo).max(MINMAX_EPS);
+    let rho_range = (rho_hi - rho_lo).max(MINMAX_EPS);
+
+    let mut out = vec![0.0f64; k];
+    let mut raw_lo = f64::INFINITY;
+    let mut raw_hi = f64::NEG_INFINITY;
+    for i in 0..k {
+        let (mt, mr) = if counts[i] > 0.0 {
+            (mean_tau[i], mean_rho[i])
+        } else {
+            (fill_tau, fill_rho)
+        };
+        let tau_hat = (mt - tau_lo) / tau_range;
+        let rho_hat = (mr - rho_lo) / rho_range;
+        let raw = alpha / (tau_hat + REWARD_EPS) + beta / (rho_hat + REWARD_EPS);
+        out[i] = raw;
+        raw_lo = raw_lo.min(raw);
+        raw_hi = raw_hi.max(raw);
+    }
+    let raw_range = (raw_hi - raw_lo).max(MINMAX_EPS);
+    for r in out.iter_mut() {
+        *r = (*r - raw_lo) / raw_range;
+    }
+    out
+}
+
+fn ref_ucb_scores(rewards: &[f64], counts: &[f64], t: f64, c: f64) -> Vec<f64> {
+    let log_t = t.max(1.0).ln();
+    rewards
+        .iter()
+        .zip(counts)
+        .map(|(r, n)| {
+            if *n > 0.0 {
+                r + c * (2.0 * log_t / n.max(1.0)).sqrt()
+            } else {
+                UNPULLED_SCORE
+            }
+        })
+        .collect()
+}
+
+/// Deterministic stats fixtures: k spans the lane width (1, tail-only),
+/// exact multiples, and off-by-tail sizes; `pulled_every` leaves gaps of
+/// unpulled arms (0 = pull nothing).
+fn stats_fixture(k: usize, pulled_every: usize, seed: usize) -> ArmStats {
+    let mut s = ArmStats::new(k);
+    if pulled_every == 0 {
+        return s;
+    }
+    for i in (0..k).step_by(pulled_every) {
+        for pull in 0..1 + (i + seed) % 3 {
+            let t = 0.3 + ((i * 7919 + pull * 31 + seed) % 89) as f64 / 30.0;
+            let p = 2.0 + ((i * 104_729 + pull) % 13) as f64 * 0.4;
+            s.observe(i, t, p);
+        }
+    }
+    s
+}
+
+#[test]
+fn vectorized_kernels_match_frozen_scalar_references_bit_for_bit() {
+    for &k in &[1usize, 3, 4, 7, 8, 9, 31, 64, 216] {
+        for &pulled_every in &[0usize, 1, 2, 3, 5] {
+            let stats = stats_fixture(k, pulled_every, k + pulled_every);
+            let expected = ref_weighted_rewards(&stats, ALPHA, BETA);
+            let mut got = vec![0.0f64; k];
+            weighted_rewards_into(&stats, ALPHA, BETA, &mut got);
+            for i in 0..k {
+                assert_eq!(
+                    got[i].to_bits(),
+                    expected[i].to_bits(),
+                    "weighted_rewards_into k={k} pulled_every={pulled_every} arm {i}: \
+                     {} vs {}",
+                    got[i],
+                    expected[i]
+                );
+            }
+            // The documented bridge to the allocating offline form holds
+            // bit-for-bit too.
+            let (mt, mr) = stats.filled_means();
+            let offline = weighted_rewards(&mt, &mr, ALPHA, BETA);
+            for i in 0..k {
+                assert_eq!(
+                    got[i].to_bits(),
+                    offline[i].to_bits(),
+                    "weighted_rewards_into vs weighted_rewards k={k} arm {i}"
+                );
+            }
+
+            let t = stats.t();
+            let expected_scores = ref_ucb_scores(&got, stats.counts(), t, 0.25);
+            let mut scores = vec![0.0f64; k];
+            ucb_scores_into(&got, stats.counts(), t, 0.25, &mut scores);
+            for i in 0..k {
+                assert_eq!(
+                    scores[i].to_bits(),
+                    expected_scores[i].to_bits(),
+                    "ucb_scores_into k={k} pulled_every={pulled_every} arm {i}"
+                );
+            }
+        }
+    }
+}
+
+// --- 3. HTTP layer --------------------------------------------------------
+
+fn boot() -> lasp::serve::ServerHandle {
+    start(ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        workers: 2,
+        shards: 4,
+        checkpoint_dir: None,
+        checkpoint_every: Duration::from_secs(3600),
+        ..Default::default()
+    })
+    .unwrap()
+}
+
+struct Entry {
+    client_id: String,
+    policy: &'static str,
+}
+
+fn entry_obj(e: &Entry, report: Option<(usize, f64, f64, u64)>) -> Json {
+    let mut obj = BTreeMap::new();
+    obj.insert("client_id".to_string(), Json::Str(e.client_id.clone()));
+    obj.insert("app".to_string(), Json::Str("clomp".to_string()));
+    obj.insert("device".to_string(), Json::Str("maxn".to_string()));
+    obj.insert("policy".to_string(), Json::Str(e.policy.to_string()));
+    obj.insert("alpha".to_string(), Json::Num(ALPHA));
+    obj.insert("beta".to_string(), Json::Num(BETA));
+    if let Some((arm, t, p, seq)) = report {
+        obj.insert("arm".to_string(), Json::Num(arm as f64));
+        obj.insert("time_s".to_string(), Json::Num(t));
+        obj.insert("power_w".to_string(), Json::Num(p));
+        obj.insert("seq".to_string(), Json::Num(seq as f64));
+    }
+    Json::Obj(obj)
+}
+
+fn metric_value(text: &str, name: &str) -> f64 {
+    for line in text.lines() {
+        if let Some(rest) = line.strip_prefix(name) {
+            if let Some(v) = rest.strip_prefix(' ').and_then(|r| r.trim().parse::<f64>().ok()) {
+                return v;
+            }
+        }
+    }
+    0.0
+}
+
+fn wait_applied(client: &mut HttpClient, want: f64, what: &str) {
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let (status, page) = client.get("/metrics").unwrap();
+        assert_eq!(status, 200);
+        let text = page.as_str().unwrap_or_default().to_string();
+        if metric_value(&text, "lasp_serve_reports_applied_total") >= want {
+            return;
+        }
+        assert!(Instant::now() < deadline, "{what}: reports never applied (want {want})");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+#[test]
+fn http_batch_endpoints_match_single_request_stream() {
+    let single_srv = boot();
+    let batch_srv = boot();
+    let mut sc = HttpClient::connect(&single_srv.addr().to_string()).unwrap();
+    let mut bc = HttpClient::connect(&batch_srv.addr().to_string()).unwrap();
+
+    // Two clients per policy: stochastic tuners are seeded by the
+    // session-key hash, so identical keys on both servers mean identical
+    // RNG streams.
+    let entries: Vec<Entry> = ["ucb", "swucb", "thompson", "epsilon", "subset"]
+        .iter()
+        .flat_map(|&p| {
+            (0..2).map(move |i| Entry { client_id: format!("eq-{p}-{i}"), policy: p })
+        })
+        .collect();
+    let n = entries.len();
+
+    let rounds = 8usize;
+    for round in 0..rounds {
+        // Suggest: singles on server A, one batch on server B.
+        let mut single_arms = Vec::with_capacity(n);
+        for e in &entries {
+            let payload = entry_obj(e, None).to_string();
+            let status = sc.post_slice("/v1/suggest", payload.as_bytes()).unwrap();
+            assert_eq!(status, 200);
+            let arm = JsonSlice::parse(sc.last_body())
+                .unwrap()
+                .get("arm")
+                .and_then(|v| v.as_usize())
+                .unwrap();
+            single_arms.push(arm);
+        }
+        let batch_body = {
+            let mut obj = BTreeMap::new();
+            obj.insert(
+                "entries".to_string(),
+                Json::Arr(entries.iter().map(|e| entry_obj(e, None)).collect()),
+            );
+            Json::Obj(obj).to_string()
+        };
+        let status = bc.post_slice("/v1/suggest/batch", batch_body.as_bytes()).unwrap();
+        assert_eq!(status, 200, "{}", String::from_utf8_lossy(bc.last_body()));
+        let resp = JsonSlice::parse(bc.last_body()).unwrap();
+        let mut batch_arms = Vec::with_capacity(n);
+        for item in resp.get("results").expect("results").items() {
+            batch_arms.push(item.get("arm").and_then(|v| v.as_usize()).unwrap());
+        }
+        assert_eq!(
+            batch_arms, single_arms,
+            "round {round}: batched suggests diverged from singles"
+        );
+
+        // Report the same deterministic measurements on both.
+        for (e, &arm) in entries.iter().zip(&single_arms) {
+            let (t, p) = measurement(arm, round);
+            let payload = entry_obj(e, Some((arm, t, p, round as u64))).to_string();
+            let status = sc.post_slice("/v1/report", payload.as_bytes()).unwrap();
+            assert_eq!(status, 202);
+        }
+        let report_body = {
+            let mut obj = BTreeMap::new();
+            obj.insert(
+                "entries".to_string(),
+                Json::Arr(
+                    entries
+                        .iter()
+                        .zip(&single_arms)
+                        .map(|(e, &arm)| {
+                            let (t, p) = measurement(arm, round);
+                            entry_obj(e, Some((arm, t, p, round as u64)))
+                        })
+                        .collect(),
+                ),
+            );
+            Json::Obj(obj).to_string()
+        };
+        let status = bc.post_slice("/v1/report/batch", report_body.as_bytes()).unwrap();
+        assert_eq!(status, 202, "{}", String::from_utf8_lossy(bc.last_body()));
+        let resp = JsonSlice::parse(bc.last_body()).unwrap();
+        assert_eq!(resp.get("queued").and_then(|v| v.as_usize()), Some(n));
+        assert_eq!(resp.get("dropped").and_then(|v| v.as_usize()), Some(0));
+
+        // Both servers must fully apply this round before the next
+        // suggest, so selection state stays comparable.
+        let want = ((round + 1) * n) as f64;
+        wait_applied(&mut sc, want, "single server");
+        wait_applied(&mut bc, want, "batch server");
+    }
+
+    // Final per-session statistics agree exactly.
+    for e in &entries {
+        let q = format!(
+            "/v1/debug/session?client_id={}&app=clomp&device=maxn&policy={}&alpha={ALPHA}&beta={BETA}",
+            e.client_id, e.policy
+        );
+        let (ss, sv) = sc.get(&q).unwrap();
+        let (bs, bv) = bc.get(&q).unwrap();
+        assert_eq!(ss, 200, "{sv:?}");
+        assert_eq!(bs, 200, "{bv:?}");
+        assert_eq!(
+            bv.get("arms"),
+            sv.get("arms"),
+            "{}: per-arm statistics diverged between servers",
+            e.client_id
+        );
+        assert_eq!(bv.get("total_pulls"), sv.get("total_pulls"), "{}", e.client_id);
+    }
+
+    drop(sc);
+    drop(bc);
+    single_srv.shutdown().unwrap();
+    batch_srv.shutdown().unwrap();
+}

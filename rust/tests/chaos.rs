@@ -148,6 +148,93 @@ fn duplicate_delivery_never_double_counts_sequenced_reports() {
     handle.shutdown().unwrap();
 }
 
+/// A batch slammed into a capacity-1 shard queue with the chaos layer
+/// redelivering every flush: entries hitting the full queue must drop
+/// and count INDIVIDUALLY (never fail the whole batch), the response's
+/// per-entry statuses must reconcile exactly with the drop counters, and
+/// every queued entry must apply exactly once despite duplicate
+/// delivery. Regression test for the all-or-nothing enqueue bug where
+/// one full queue 503'd every entry in the batch.
+#[test]
+fn batch_entries_against_a_full_queue_drop_and_count_individually() {
+    let seed = chaos_seed();
+    let handle = start(ServeConfig {
+        queue_cap: 1,
+        ..serve_cfg(ChaosConfig { flush_duplicate: 1.0, ..chaos_cfg(seed) })
+    })
+    .unwrap();
+    let addr = handle.addr().to_string();
+    let mut client = HttpClient::connect(&addr).unwrap();
+
+    // One full-cap batch (256 entries, the documented limit) for a single
+    // session, distinct seqs: the handler's try_send loop outruns the
+    // cap-1 updater by orders of magnitude, so most entries must shed.
+    let n = 256usize;
+    let entries: Vec<Json> = (0..n)
+        .map(|seq| {
+            let arm = seq % 5;
+            body(
+                "flood",
+                &[
+                    ("arm", Json::Num(arm as f64)),
+                    ("time_s", Json::Num(1.0 + arm as f64 * 0.1)),
+                    ("power_w", Json::Num(5.0)),
+                    ("seq", Json::Num(seq as f64)),
+                ],
+            )
+        })
+        .collect();
+    let mut batch = BTreeMap::new();
+    batch.insert("entries".to_string(), Json::Arr(entries));
+    let (status, resp) = client.post("/v1/report/batch", &Json::Obj(batch)).unwrap();
+    assert_eq!(status, 202, "seed={seed}: a full queue must degrade entries, not the batch");
+    let queued = resp.get("queued").and_then(Json::as_usize).unwrap();
+    let dropped = resp.get("dropped").and_then(Json::as_usize).unwrap();
+    assert_eq!(queued + dropped, n, "seed={seed}: {resp:?}");
+    assert!(queued >= 1, "seed={seed}: the first entry had a cap-1 queue all to itself");
+    assert!(dropped >= 1, "seed={seed}: 256 sends can't fit a cap-1 queue");
+    let results = resp.get("results").and_then(Json::as_arr).unwrap();
+    assert_eq!(results.len(), n);
+    let by_status = |want: &str| {
+        results
+            .iter()
+            .filter(|r| r.get("status").and_then(Json::as_str) == Some(want))
+            .count()
+    };
+    assert_eq!(by_status("queued"), queued, "seed={seed}: {resp:?}");
+    assert_eq!(by_status("dropped"), dropped, "seed={seed}: {resp:?}");
+
+    // The drop counters reconcile exactly with the response…
+    let m = metrics_text(&mut client);
+    assert_eq!(metric_value(&m, "lasp_serve_reports_dropped_total"), dropped as f64, "{m}");
+    assert_eq!(metric_value(&m, "lasp_serve_queue_backpressure_total"), dropped as f64, "{m}");
+    assert_eq!(metric_value(&m, "lasp_serve_reports_enqueued_total"), queued as f64, "{m}");
+
+    // …and every queued entry applies exactly once: the chaos layer
+    // redelivers each flush, so each queued seq shows up once in
+    // applied and once in deduped, and the session's pull count equals
+    // the queued count — a dropped entry must never half-apply.
+    assert!(
+        wait_until(
+            || {
+                let m = metrics_text(&mut client);
+                metric_value(&m, "lasp_serve_reports_applied_total") == queued as f64
+                    && metric_value(&m, "lasp_serve_reports_deduped_total") == queued as f64
+            },
+            Duration::from_secs(15),
+        ),
+        "seed={seed}: queued entries never settled: {}",
+        metrics_text(&mut client)
+    );
+    assert_eq!(total_pulls(&mut client, "flood"), queued as f64, "seed={seed}");
+    let m = metrics_text(&mut client);
+    assert!(
+        metric_value(&m, "lasp_serve_chaos_injections_total") >= queued as f64,
+        "seed={seed}: batch flush redeliveries missing from the injection counter: {m}"
+    );
+    handle.shutdown().unwrap();
+}
+
 /// A fleet push replayed verbatim (a retrying peer, a duplicated packet)
 /// merges idempotently: three identical pushes leave exactly one copy of
 /// the evidence, end to end through a pull.

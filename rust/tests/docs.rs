@@ -40,6 +40,8 @@ fn api_doc_covers_every_registered_route() {
     for expected in [
         "/v1/suggest",
         "/v1/report",
+        "/v1/suggest/batch",
+        "/v1/report/batch",
         "/v1/best",
         "/v1/checkpoint",
         "/v1/sync/push",
@@ -275,6 +277,49 @@ fn design_documents_failure_model_and_chaos_layer() {
             "docs/API.md missing '{needle}' (failure-model surfaces)"
         );
     }
+}
+
+#[test]
+fn design_documents_batched_scoring() {
+    // §Batched scoring: shard grouping, the per-worker arena, and the
+    // kernel vectorization/bit-stability contract.
+    for needle in [
+        "Batched scoring",
+        "/v1/suggest/batch",
+        "/v1/report/batch",
+        "enqueue_group",
+        "BatchArena",
+        "select_traced_in",
+        "select_batch",
+        "ucb_scores_into",
+        "batch_equivalence",
+        "bit-identical",
+    ] {
+        assert!(
+            DESIGN_MD.contains(needle),
+            "DESIGN.md missing '{needle}' (batched-scoring section)"
+        );
+    }
+    // The API reference documents both endpoints' semantics: the entry
+    // cap, per-entry statuses, and the all-or-nothing validation rule.
+    for needle in [
+        "`/v1/suggest/batch`",
+        "`/v1/report/batch`",
+        "256 entries",
+        "all-or-nothing",
+        "\"dropped\"",
+        "lasp_serve_batch_size",
+    ] {
+        assert!(
+            API_MD.contains(needle),
+            "docs/API.md missing '{needle}' (batch endpoint semantics)"
+        );
+    }
+    // README carries the batched loadgen quickstart.
+    assert!(
+        README_MD.contains("--batch"),
+        "README.md missing the loadgen --batch quickstart"
+    );
 }
 
 #[test]

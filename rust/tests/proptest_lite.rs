@@ -6,6 +6,7 @@
 
 use lasp::bandit::{ArmStats, Policy, ScalarBackend, ScoreBackend, Scratch, SubsetTuner, UcbTuner};
 use lasp::space::{ParamDef, ParamSpace};
+use lasp::util::json::{JsonSlice, JsonWriter};
 use lasp::util::{stats, Rng};
 
 /// Run `prop` on `cases` seeded inputs; panic with the seed on failure.
@@ -189,6 +190,272 @@ fn prop_fidelity_monotone_in_expected_time() {
         let t2 = run_with_cap(&spec, &app.workload(idx, q2)).time_s;
         assert!(t2 >= t1 - 1e-9, "{kind} #{idx}: q{q1:.2}->{t1}, q{q2:.2}->{t2}");
     });
+}
+
+// --- Batch endpoint properties --------------------------------------------
+
+/// Random client-id strings exercising the escape paths of the borrowed
+/// codec: quotes, backslashes, slashes, multi-byte UTF-8, spaces.
+fn random_client_id(rng: &mut Rng) -> String {
+    const POOL: &[char] = &['a', 'B', '7', '_', '-', '"', '\\', '/', 'é', '☃', ' ', '.'];
+    let len = 1 + rng.below(12);
+    (0..len).map(|_| POOL[rng.below(POOL.len())]).collect()
+}
+
+/// One random batch entry; `report` adds the measurement triple.
+struct BatchEntry {
+    client_id: String,
+    alpha: f64,
+    beta: f64,
+    arm: usize,
+    time_s: f64,
+    power_w: f64,
+}
+
+fn random_entries(rng: &mut Rng, n: usize) -> Vec<BatchEntry> {
+    (0..n)
+        .map(|_| BatchEntry {
+            client_id: random_client_id(rng),
+            alpha: rng.uniform(),
+            beta: rng.uniform(),
+            arm: rng.below(64),
+            time_s: rng.range(0.01, 10.0),
+            power_w: rng.range(0.5, 15.0),
+        })
+        .collect()
+}
+
+fn write_entries(buf: &mut Vec<u8>, entries: &[BatchEntry], report: bool) {
+    buf.clear();
+    let mut w = JsonWriter::new(buf);
+    w.begin_obj();
+    w.key("entries");
+    w.begin_arr();
+    for e in entries {
+        w.begin_obj();
+        w.field_str("client_id", &e.client_id);
+        w.field_str("app", "clomp");
+        w.field_str("device", "maxn");
+        w.field_num("alpha", e.alpha);
+        w.field_num("beta", e.beta);
+        if report {
+            w.field_num("arm", e.arm as f64);
+            w.field_num("time_s", e.time_s);
+            w.field_num("power_w", e.power_w);
+        }
+        w.end_obj();
+    }
+    w.end_arr();
+    w.end_obj();
+}
+
+#[test]
+fn prop_batch_bodies_roundtrip_borrowed_codec() {
+    // Any well-formed batch written by `JsonWriter` reads back through
+    // `JsonSlice` (the serve-side parser) with every field intact — keys
+    // in order, strings unescaped to the original, numbers bit-identical.
+    forall(60, |rng| {
+        let n = 1 + rng.below(8);
+        let report = rng.uniform() < 0.5;
+        let entries = random_entries(rng, n);
+        let mut buf = Vec::new();
+        write_entries(&mut buf, &entries, report);
+
+        let v = JsonSlice::parse(&buf).expect("writer output parses");
+        assert!(!v.has_duplicate_keys());
+        let arr = v.get("entries").expect("entries key");
+        assert!(arr.is_arr());
+        let mut seen = 0usize;
+        for (i, item) in arr.items().enumerate() {
+            assert!(item.is_obj());
+            assert!(!item.has_duplicate_keys());
+            let keys: Vec<String> = item
+                .fields()
+                .map(|(k, _)| String::from_utf8(k.to_vec()).unwrap())
+                .collect();
+            let mut expect = vec!["client_id", "app", "device", "alpha", "beta"];
+            if report {
+                expect.extend(["arm", "time_s", "power_w"]);
+            }
+            assert_eq!(keys, expect, "field order survives the round-trip");
+            let e = &entries[i];
+            assert_eq!(item.get("client_id").unwrap().as_str().unwrap(), e.client_id);
+            assert_eq!(
+                item.get("alpha").unwrap().as_f64().unwrap().to_bits(),
+                e.alpha.to_bits()
+            );
+            assert_eq!(item.get("beta").unwrap().as_f64().unwrap().to_bits(), e.beta.to_bits());
+            if report {
+                assert_eq!(item.get("arm").unwrap().as_usize().unwrap(), e.arm);
+                assert_eq!(
+                    item.get("time_s").unwrap().as_f64().unwrap().to_bits(),
+                    e.time_s.to_bits()
+                );
+                assert_eq!(
+                    item.get("power_w").unwrap().as_f64().unwrap().to_bits(),
+                    e.power_w.to_bits()
+                );
+            }
+            seen += 1;
+        }
+        assert_eq!(seen, n);
+    });
+}
+
+#[test]
+fn prop_malformed_batches_always_4xx_with_no_state_applied() {
+    // Batch ingestion is atomic per request at validation time: any
+    // mutation — truncation, duplicate keys, oversized batches, bad
+    // UTF-8, empty/nonsense entries — must yield a 4xx AND leave every
+    // observable counter (suggests, enqueued/applied reports, sessions)
+    // exactly where it was.
+    use lasp::serve::{start, HttpClient, ServeConfig};
+    use std::time::Duration;
+
+    let handle = start(ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        workers: 2,
+        shards: 2,
+        checkpoint_dir: None,
+        checkpoint_every: Duration::from_secs(3600),
+        ..Default::default()
+    })
+    .unwrap();
+    let addr = handle.addr().to_string();
+    let mut client = HttpClient::connect(&addr).unwrap();
+
+    fn metric_value(text: &str, name: &str) -> f64 {
+        for line in text.lines() {
+            if let Some(rest) = line.strip_prefix(name) {
+                if let Some(v) =
+                    rest.strip_prefix(' ').and_then(|r| r.trim().parse::<f64>().ok())
+                {
+                    return v;
+                }
+            }
+        }
+        0.0
+    }
+    const WATCHED: &[&str] = &[
+        "lasp_serve_suggests_total",
+        "lasp_serve_reports_enqueued_total",
+        "lasp_serve_reports_applied_total",
+        "lasp_serve_reports_dropped_total",
+        "lasp_serve_sessions_created_total",
+        "lasp_serve_sessions",
+        "lasp_serve_batch_size_count",
+    ];
+    let snapshot = |client: &mut HttpClient| -> Vec<f64> {
+        let (status, page) = client.get("/metrics").unwrap();
+        assert_eq!(status, 200);
+        let text = page.as_str().unwrap_or_default().to_string();
+        WATCHED.iter().map(|m| metric_value(&text, m)).collect()
+    };
+
+    // Sanity: the generator produces bodies both endpoints accept.
+    let mut rng = Rng::new(0xACCE97);
+    let mut buf = Vec::new();
+    let sane = random_entries(&mut rng, 3);
+    write_entries(&mut buf, &sane, false);
+    assert_eq!(client.post_slice("/v1/suggest/batch", &buf).unwrap(), 200);
+    write_entries(&mut buf, &sane, true);
+    assert_eq!(client.post_slice("/v1/report/batch", &buf).unwrap(), 202);
+
+    // Drain the sanity reports before snapshotting: they apply
+    // asynchronously on the shard workers, and a straddling apply would
+    // look like a rejected batch mutating state.
+    let deadline = std::time::Instant::now() + Duration::from_secs(10);
+    loop {
+        let (status, page) = client.get("/metrics").unwrap();
+        assert_eq!(status, 200);
+        let text = page.as_str().unwrap_or_default().to_string();
+        let settled = metric_value(&text, "lasp_serve_reports_applied_total")
+            + metric_value(&text, "lasp_serve_reports_rejected_total");
+        if settled >= sane.len() as f64 {
+            break;
+        }
+        assert!(std::time::Instant::now() < deadline, "sanity reports never drained");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+
+    for seed in 0..48u64 {
+        let mut rng = Rng::new(0xBA7C + seed);
+        let report = rng.uniform() < 0.5;
+        let path = if report { "/v1/report/batch" } else { "/v1/suggest/batch" };
+        let entries = random_entries(&mut rng, 1 + rng.below(6));
+        write_entries(&mut buf, &entries, report);
+
+        let mutated: Vec<u8> = match seed % 6 {
+            // Truncation: the top-level object never closes, so every
+            // strict prefix is invalid JSON.
+            0 => buf[..rng.below(buf.len().max(2) - 1)].to_vec(),
+            // Duplicate key at the top level.
+            1 => {
+                let mut b = b"{\"entries\":[],".to_vec();
+                b.extend_from_slice(&buf[1..]);
+                b
+            }
+            // Duplicate key inside an entry: splice a second alpha in
+            // right after each entry opens.
+            2 => {
+                let s = String::from_utf8(buf.clone()).unwrap();
+                s.replace("{\"client_id\"", "{\"alpha\":0.5,\"client_id\"").into_bytes()
+            }
+            // Oversized batch: one valid entry repeated past the cap.
+            3 => {
+                let mut one = Vec::new();
+                write_entries(&mut one, &random_entries(&mut rng, 1), report);
+                let s = String::from_utf8(one).unwrap();
+                let entry = s
+                    .strip_prefix("{\"entries\":[")
+                    .and_then(|x| x.strip_suffix("]}"))
+                    .unwrap()
+                    .to_string();
+                let mut b = String::from("{\"entries\":[");
+                for i in 0..257 {
+                    if i > 0 {
+                        b.push(',');
+                    }
+                    b.push_str(&entry);
+                }
+                b.push_str("]}");
+                b.into_bytes()
+            }
+            // Bad UTF-8 inside a string value.
+            4 => {
+                let mut b = b"{\"entries\":[{\"client_id\":\"Z\",\"app\":\"clomp\"}]}".to_vec();
+                let z = b.iter().position(|&c| c == b'Z').unwrap();
+                b[z] = 0xFF;
+                b
+            }
+            // Structurally wrong: empty batch or non-array entries.
+            _ => {
+                if rng.uniform() < 0.5 {
+                    b"{\"entries\":[]}".to_vec()
+                } else {
+                    b"{\"entries\":7}".to_vec()
+                }
+            }
+        };
+
+        let before = snapshot(&mut client);
+        let status = client.post_slice(path, &mutated).unwrap();
+        assert!(
+            (400..500).contains(&status),
+            "seed {seed}: mutated batch ({}) got {status}, want 4xx: {}",
+            seed % 6,
+            String::from_utf8_lossy(&mutated[..mutated.len().min(120)])
+        );
+        let after = snapshot(&mut client);
+        assert_eq!(
+            after, before,
+            "seed {seed}: a rejected batch (mutation {}) changed observable state",
+            seed % 6
+        );
+    }
+
+    drop(client);
+    handle.shutdown().unwrap();
 }
 
 #[test]

@@ -325,6 +325,187 @@ fn steady_state_suggest_stays_allocation_free_with_tracing_enabled() {
     std::fs::remove_dir_all(&dir).ok();
 }
 
+/// First value of a `/metrics` family, requiring the space separator so
+/// `lasp_serve_sessions` never matches `lasp_serve_sessions_created_total`.
+fn metric_value(text: &str, name: &str) -> f64 {
+    for line in text.lines() {
+        if let Some(rest) = line.strip_prefix(name) {
+            if let Some(v) = rest.strip_prefix(' ').and_then(|r| r.trim().parse::<f64>().ok()) {
+                return v;
+            }
+        }
+    }
+    0.0
+}
+
+/// One report payload for session `dup-{c}`, deterministic in (c, seq) so
+/// both injected copies of a pair are byte-identical duplicates.
+fn dup_report(c: usize, seq: u64) -> String {
+    let arm = (seq as usize * 3 + c) % 25;
+    body(
+        &format!("dup-{c}"),
+        "clomp",
+        &[
+            ("arm", Json::Num(arm as f64)),
+            ("time_s", Json::Num(0.5 + (arm % 7) as f64 * 0.1)),
+            ("power_w", Json::Num(5.0)),
+            ("seq", Json::Num(seq as f64)),
+        ],
+    )
+}
+
+#[test]
+fn mixed_single_and_batch_report_traffic_keeps_seq_dedup_exact() {
+    // Four threads drive the SAME four sessions concurrently — two via
+    // single `/v1/report`, two via `/v1/report/batch` — and every
+    // (client, seq) pair is injected exactly twice. The per-session
+    // idempotency window must absorb exactly one copy of each pair, in
+    // ANY interleaving: `lasp_serve_reports_deduped_total` equals the
+    // injected duplicate count, and each session's ArmStats sees each
+    // seq exactly once.
+    const SEQS: u64 = 40;
+    const CLIENTS: u64 = 4;
+    let handle = boot(8, 4);
+    let addr = handle.addr().to_string();
+
+    let mut threads = vec![];
+    for pair in [[0usize, 1], [2, 3]] {
+        // One copy of each (client, seq) as single requests…
+        let addr_single = addr.clone();
+        threads.push(std::thread::spawn(move || {
+            let mut client = HttpClient::connect(&addr_single).unwrap();
+            for seq in 0..SEQS {
+                for c in pair {
+                    let payload = dup_report(c, seq);
+                    let status = client.post_slice("/v1/report", payload.as_bytes()).unwrap();
+                    assert_eq!(status, 202);
+                }
+            }
+        }));
+        // …and the second copy through the batch endpoint, 16 entries
+        // per request spanning both overlapping sessions of the pair.
+        let addr_batch = addr.clone();
+        threads.push(std::thread::spawn(move || {
+            let mut client = HttpClient::connect(&addr_batch).unwrap();
+            for chunk in 0..SEQS / 8 {
+                let entries: Vec<String> = (chunk * 8..(chunk + 1) * 8)
+                    .flat_map(|seq| pair.map(|c| dup_report(c, seq)))
+                    .collect();
+                let payload = format!("{{\"entries\":[{}]}}", entries.join(","));
+                let status =
+                    client.post_slice("/v1/report/batch", payload.as_bytes()).unwrap();
+                assert_eq!(status, 202);
+                let resp = JsonSlice::parse(client.last_body()).unwrap();
+                assert_eq!(resp.get("queued").and_then(|v| v.as_usize()), Some(16));
+                assert_eq!(resp.get("dropped").and_then(|v| v.as_usize()), Some(0));
+            }
+        }));
+    }
+    for t in threads {
+        t.join().unwrap();
+    }
+
+    // Every injected report either applied or deduped — wait for the
+    // shard workers to settle, then the split must be exactly half/half.
+    let total = (2 * CLIENTS * SEQS) as f64;
+    let uniques = (CLIENTS * SEQS) as f64;
+    let mut probe = HttpClient::connect(&addr).unwrap();
+    let deadline = Instant::now() + Duration::from_secs(10);
+    let text = loop {
+        let (status, page) = probe.get("/metrics").unwrap();
+        assert_eq!(status, 200);
+        let text = page.as_str().unwrap_or_default().to_string();
+        let settled = metric_value(&text, "lasp_serve_reports_applied_total")
+            + metric_value(&text, "lasp_serve_reports_deduped_total");
+        if settled >= total {
+            break text;
+        }
+        assert!(Instant::now() < deadline, "reports never settled: {settled}/{total}");
+        std::thread::sleep(Duration::from_millis(10));
+    };
+    assert_eq!(metric_value(&text, "lasp_serve_reports_enqueued_total"), total, "{text}");
+    assert_eq!(metric_value(&text, "lasp_serve_reports_dropped_total"), 0.0, "{text}");
+    assert_eq!(
+        metric_value(&text, "lasp_serve_reports_applied_total"),
+        uniques,
+        "each (client, seq) pair must apply exactly once"
+    );
+    assert_eq!(
+        metric_value(&text, "lasp_serve_reports_deduped_total"),
+        uniques,
+        "deduped count must equal the injected duplicate count"
+    );
+
+    // And per-session: each of the 4 overlapping sessions saw each seq once.
+    for c in 0..CLIENTS {
+        let q = format!("/v1/best?client_id=dup-{c}&app=clomp&device=maxn&alpha=1.0&beta=0.0");
+        let (status, b) = probe.get(&q).unwrap();
+        assert_eq!(status, 200, "{b:?}");
+        assert_eq!(
+            b.get("total_pulls").and_then(Json::as_f64),
+            Some(SEQS as f64),
+            "session dup-{c} double-counted a duplicate: {b:?}"
+        );
+    }
+    drop(probe);
+    handle.shutdown().unwrap();
+}
+
+#[test]
+fn steady_state_batch_suggest_is_allocation_free_end_to_end() {
+    // The zero-allocation contract with batching enabled: after warmup,
+    // a mixed single + 16-entry-batch suggest stream must grow neither
+    // the HTTP/JSON buffers (including the per-worker batch arena feeding
+    // them) nor any session's bandit scratch.
+    let handle = boot(2, 2);
+    let addr = handle.addr().to_string();
+    let stats = handle.transport_stats();
+    let mut client = HttpClient::connect(&addr).unwrap();
+    let single = body("steady-batch", "clomp", &[]);
+    let entries: Vec<String> =
+        (0..16).map(|i| body(&format!("steady-batch-{i}"), "clomp", &[])).collect();
+    let batch = format!("{{\"entries\":[{}]}}", entries.join(","));
+
+    // Warmup: transport buffers, the batch arena, and every session's
+    // scoring scratch reach their high-water marks.
+    for _ in 0..20 {
+        assert_eq!(client.post_slice("/v1/suggest/batch", batch.as_bytes()).unwrap(), 200);
+        assert_eq!(client.post_slice("/v1/suggest", single.as_bytes()).unwrap(), 200);
+    }
+    let resp = JsonSlice::parse(client.last_body()).unwrap();
+    assert!(resp.get("arm").is_some(), "single suggest still answers under batching");
+
+    let allocs_before = stats.alloc_events.load(Ordering::Relaxed);
+    let scratch_before = handle.bandit_scratch_growths();
+    for _ in 0..300 {
+        assert_eq!(client.post_slice("/v1/suggest/batch", batch.as_bytes()).unwrap(), 200);
+        assert_eq!(client.post_slice("/v1/suggest", single.as_bytes()).unwrap(), 200);
+    }
+    let allocs = stats.alloc_events.load(Ordering::Relaxed) - allocs_before;
+    assert_eq!(
+        allocs, 0,
+        "HTTP+JSON layers performed {allocs} buffer growths over 300 mixed batch rounds"
+    );
+    let scratch_growths = handle.bandit_scratch_growths() - scratch_before;
+    assert_eq!(scratch_growths, 0, "a bandit scratch grew under steady-state batching");
+
+    // The batched response is fully formed: 16 per-entry results, each
+    // carrying a concrete arm and configuration.
+    assert_eq!(client.post_slice("/v1/suggest/batch", batch.as_bytes()).unwrap(), 200);
+    let resp = JsonSlice::parse(client.last_body()).unwrap();
+    assert_eq!(resp.get("count").and_then(|v| v.as_usize()), Some(16));
+    let mut seen = 0usize;
+    for item in resp.get("results").expect("results").items() {
+        assert!(item.get("arm").and_then(|v| v.as_usize()).is_some());
+        let config = item.get("config").and_then(|c| c.as_str()).expect("config string");
+        assert!(!config.is_empty());
+        seen += 1;
+    }
+    assert_eq!(seen, 16);
+    drop(client);
+    handle.shutdown().unwrap();
+}
+
 #[test]
 fn epsilon_policy_serves_over_http() {
     // PolicyKind::Epsilon rides the same serve surfaces as every other
