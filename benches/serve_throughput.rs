@@ -1,8 +1,12 @@
 //! Serve-layer throughput bench: boots the tuning service in-process on an
 //! ephemeral port and measures (a) single-connection suggest round-trip
 //! latency through the real HTTP stack, (b) the steady-state allocation
-//! behaviour of the HTTP+JSON layers (must be zero), and (c) closed-loop
-//! loadgen throughput with concurrent sessions across all four apps.
+//! behaviour of the HTTP+JSON layers (must be zero), (c) closed-loop
+//! loadgen throughput with concurrent sessions across all four apps, and
+//! (d) the held-connection series: the same closed loop while 256 / 1k /
+//! 10k mostly-idle keep-alive connections ride the reactor's event loops,
+//! gated against a legacy blocking-transport baseline at its worker-count
+//! ceiling.
 //!
 //! Emits `BENCH_serve.json` (path override: `LASP_BENCH_OUT`) so the perf
 //! trajectory is tracked PR-over-PR; `LASP_BENCH_QUICK=1` runs a short
@@ -93,8 +97,119 @@ fn main() {
     .expect("batched loadgen");
     batched_report.print();
 
+    // ---- held-connection series (open-loop holders + closed loop) ----
+    //
+    // 256 / 1k / 10k mostly-idle keep-alive connections (Zipf-activated
+    // by the loadgen holder thread) sit on the event loops while the
+    // same closed loop runs. Throughput must survive the herd with zero
+    // transport errors, zero dropped held connections, and zero
+    // steady-state buffer growth.
+    #[cfg(unix)]
+    let fd_limit = lasp::serve::transport::poller::raise_nofile_limit(65_536).unwrap_or(1024);
+    #[cfg(not(unix))]
+    let fd_limit = 1024u64;
+    // Both socket ends live in this process — two fds per held
+    // connection, plus headroom for the server, clients, and runtime.
+    // Clamping (and saying so) beats a series that silently sheds dials.
+    let max_held = (fd_limit.saturating_sub(1_000) / 2) as usize;
+
+    // Every event loop's response/frame buffers must reach their
+    // suggest-path high-water marks before the series measures alloc
+    // deltas; connections land on loops round-robin, so twice the loop
+    // count covers them all.
+    let loops = stats.event_loops.load(Ordering::Relaxed).max(1) as usize;
+    for _ in 0..loops * 2 {
+        let mut warm = lasp::serve::HttpClient::connect(&addr).expect("warmup connect");
+        for _ in 0..4 {
+            assert_eq!(warm.post_slice("/v1/suggest", body.as_bytes()).expect("warmup"), 200);
+        }
+        assert_eq!(warm.get_slice("/healthz").expect("warmup healthz"), 200);
+    }
+
+    let held_rounds = if quick { 800 } else { 3000 };
+    let mut held_series: Vec<Json> = Vec::new();
+    let mut held_ok = true;
+    let mut rps_at_10k = 0.0f64;
+    for target in [256usize, 1024, 10240] {
+        let held = target.min(max_held);
+        if held < target {
+            println!("\n(fd limit {fd_limit}: clamping {target} held connections to {held})");
+        }
+        println!("\n## closed loop + {held} held connections (Zipf-activated holder)");
+        let allocs_before = stats.alloc_events.load(Ordering::Relaxed);
+        let r = loadgen::run(&LoadgenConfig {
+            addr: addr.clone(),
+            sessions: lg_sessions,
+            rounds: held_rounds,
+            threads: lg_threads,
+            connections: held,
+            ..Default::default()
+        })
+        .expect("held-connection loadgen");
+        r.print();
+        let held_allocs = stats.alloc_events.load(Ordering::Relaxed) - allocs_before;
+        println!("held-run buffer-growth events: {held_allocs}");
+        // The zero-growth gate applies on unix, where the reactor is the
+        // default and the warmup above reached every loop. The non-unix
+        // blocking fallback offers no handle on which pool worker serves
+        // which connection, so cold-worker growth there is expected.
+        held_ok &= r.errors == 0 && r.connect_failures == 0 && (!cfg!(unix) || held_allocs == 0);
+        if target == 10240 {
+            rps_at_10k = r.round_trips_per_s;
+        }
+        let mut h = BTreeMap::new();
+        h.insert("held_target".to_string(), Json::Num(target as f64));
+        h.insert("held_connections".to_string(), Json::Num(r.held_connections as f64));
+        h.insert("connect_failures".to_string(), Json::Num(r.connect_failures as f64));
+        h.insert("rounds".to_string(), Json::Num(r.rounds as f64));
+        h.insert("errors".to_string(), Json::Num(r.errors as f64));
+        h.insert("round_trips_per_s".to_string(), Json::Num(r.round_trips_per_s));
+        h.insert("req_per_s".to_string(), Json::Num(r.round_trips_per_s * 2.0));
+        h.insert("p50_ms".to_string(), Json::Num(r.p50_ms));
+        h.insert("p99_ms".to_string(), Json::Num(r.p99_ms));
+        h.insert("per_conn_p50_ms".to_string(), Json::Num(r.per_conn_p50_ms));
+        h.insert("per_conn_p99_ms".to_string(), Json::Num(r.per_conn_p99_ms));
+        h.insert("alloc_events".to_string(), Json::Num(held_allocs as f64));
+        held_series.push(Json::Obj(h));
+    }
+
     drop(client);
     handle.shutdown().expect("shutdown");
+
+    // ---- legacy-transport baseline at its worker-count ceiling ----
+    //
+    // The same closed loop against the blocking pool, no held connections
+    // (its concurrency ceiling IS the worker count). The reactor carrying
+    // the full held herd must not fall behind this.
+    println!("\n## legacy blocking-transport baseline (worker-count ceiling)");
+    let legacy = lasp::serve::start(ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        workers: 8,
+        shards: 8,
+        transport: lasp::serve::TransportKind::Blocking,
+        checkpoint_dir: None,
+        checkpoint_every: Duration::from_secs(3600),
+        ..Default::default()
+    })
+    .expect("boot legacy serve");
+    let legacy_report = loadgen::run(&LoadgenConfig {
+        addr: legacy.addr().to_string(),
+        sessions: lg_sessions,
+        rounds: held_rounds,
+        threads: lg_threads,
+        ..Default::default()
+    })
+    .expect("legacy loadgen");
+    legacy_report.print();
+    legacy.shutdown().expect("legacy shutdown");
+    // The gate refuses a real regression, not runner jitter: a 10%
+    // cushion, with the exact ratio tracked in the JSON PR-over-PR.
+    let ceiling_ok = rps_at_10k >= legacy_report.round_trips_per_s * 0.9;
+    println!(
+        "\nreq/s at 10k held connections: {:.0} (reactor) vs {:.0} (legacy ceiling)",
+        rps_at_10k * 2.0,
+        legacy_report.round_trips_per_s * 2.0
+    );
 
     // Machine-readable perf baseline, tracked PR-over-PR.
     let mut out = BTreeMap::new();
@@ -134,6 +249,17 @@ fn main() {
     batched.insert("p50_ms".to_string(), Json::Num(batched_report.p50_ms));
     batched.insert("p99_ms".to_string(), Json::Num(batched_report.p99_ms));
     out.insert("batched".to_string(), Json::Obj(batched));
+    out.insert("held_series".to_string(), Json::Arr(held_series));
+    let mut legacy_json = BTreeMap::new();
+    legacy_json.insert("transport".to_string(), Json::Str("blocking".to_string()));
+    legacy_json.insert("rounds".to_string(), Json::Num(legacy_report.rounds as f64));
+    legacy_json.insert("errors".to_string(), Json::Num(legacy_report.errors as f64));
+    legacy_json
+        .insert("round_trips_per_s".to_string(), Json::Num(legacy_report.round_trips_per_s));
+    legacy_json.insert("req_per_s".to_string(), Json::Num(legacy_report.round_trips_per_s * 2.0));
+    legacy_json.insert("p50_ms".to_string(), Json::Num(legacy_report.p50_ms));
+    legacy_json.insert("p99_ms".to_string(), Json::Num(legacy_report.p99_ms));
+    out.insert("legacy_baseline".to_string(), Json::Obj(legacy_json));
     let path = std::env::var("LASP_BENCH_OUT").unwrap_or_else(|_| "BENCH_serve.json".to_string());
     std::fs::write(&path, Json::Obj(out).to_string() + "\n").expect("writing bench json");
     println!("\nwrote {path}");
@@ -145,6 +271,9 @@ fn main() {
             && report.p99_ms > 0.0
             && steady_allocs == 0
             && batched_report.errors == 0
-            && batched_report.rounds == lg_rounds,
+            && batched_report.rounds == lg_rounds
+            && held_ok
+            && legacy_report.errors == 0
+            && ceiling_ok,
     );
 }

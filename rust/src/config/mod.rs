@@ -67,6 +67,8 @@ pub struct LaspConfig {
     // [serve]
     pub serve_port: u16,
     pub serve_workers: usize,
+    /// Reactor event loops; 0 = auto (one per core).
+    pub serve_event_loops: usize,
     pub serve_shards: usize,
     pub serve_queue_cap: usize,
     pub serve_batch: usize,
@@ -101,6 +103,7 @@ impl Default for LaspConfig {
             fleet_half_life_secs: 600.0,
             serve_port: 8787,
             serve_workers: 8,
+            serve_event_loops: 0,
             serve_shards: 8,
             serve_queue_cap: 4096,
             serve_batch: 128,
@@ -211,6 +214,15 @@ impl LaspConfig {
         if let Some(v) = get("serve", "workers") {
             cfg.serve_workers = pos_count("serve", "workers", v)?;
         }
+        if let Some(v) = get("serve", "event_loops") {
+            // Unlike the other counts, 0 is meaningful here: auto-size to
+            // one event loop per core.
+            let i = v.as_int().ok_or_else(|| anyhow!("serve.event_loops must be int"))?;
+            if !(0..=1_000_000).contains(&i) {
+                return Err(anyhow!("serve.event_loops must lie in 0..=1000000, got {i}"));
+            }
+            cfg.serve_event_loops = i as usize;
+        }
         if let Some(v) = get("serve", "shards") {
             cfg.serve_shards = pos_count("serve", "shards", v)?;
         }
@@ -281,6 +293,8 @@ impl LaspConfig {
         crate::serve::ServeConfig {
             addr: format!("127.0.0.1:{}", self.serve_port),
             workers: self.serve_workers,
+            event_loops: self.serve_event_loops,
+            transport: crate::serve::transport::default_kind(),
             shards: self.serve_shards,
             queue_cap: self.serve_queue_cap,
             max_batch: self.serve_batch,

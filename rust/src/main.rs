@@ -119,7 +119,9 @@ fn usage_text() -> &'static str {
      FLAGS (serve)\n\
      \x20 --port <n>             bind 127.0.0.1:<port>     [8787]\n\
      \x20 --addr <host:port>     explicit bind address (overrides --port)\n\
-     \x20 --workers <n>          HTTP worker threads       [8]\n\
+     \x20 --transport <t>        reactor | blocking        [reactor]\n\
+     \x20 --event-loops <n>      reactor event loops; 0 = one per core [0]\n\
+     \x20 --workers <n>          worker threads (blocking transport) [8]\n\
      \x20 --shards <n>           session-store shards      [8]\n\
      \x20 --queue-cap <n>        per-shard report queue    [4096]\n\
      \x20 --batch <n>            max updates per drain     [128]\n\
@@ -139,6 +141,8 @@ fn usage_text() -> &'static str {
      \x20 --addr <a[,b,...]>     server(s) to hammer       [127.0.0.1:8787]\n\
      \x20 --port <n>             shorthand for 127.0.0.1:<port>\n\
      \x20 --sessions <n>         concurrent sessions       [128]\n\
+     \x20 --connections <n>      also hold <n> mostly-idle keep-alive\n\
+     \x20                        connections open (open-loop)  [0]\n\
      \x20 --rounds <n>           suggest/report round-trips [12000]\n\
      \x20 --threads <n>          client threads            [8]\n\
      \x20 --apps <list>          all | comma list          [all]\n\
@@ -393,6 +397,13 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
     if let Some(v) = flags.get("workers") {
         serve_cfg.workers = v.parse().context("--workers")?;
     }
+    if let Some(v) = flags.get("event-loops") {
+        serve_cfg.event_loops = v.parse().context("--event-loops")?;
+    }
+    if let Some(v) = flags.get("transport") {
+        serve_cfg.transport = lasp::serve::TransportKind::parse(v)
+            .ok_or_else(|| anyhow!("--transport must be reactor|blocking, got {v}"))?;
+    }
     if let Some(v) = flags.get("shards") {
         serve_cfg.shards = v.parse().context("--shards")?;
     }
@@ -452,9 +463,11 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
         .unwrap_or_else(|| "off".to_string());
     let handle = lasp::serve::start(serve_cfg.clone())?;
     println!(
-        "# lasp serve: listening on {} | workers={} shards={} queue={} batch={} checkpoints={}",
+        "# lasp serve: listening on {} | transport={} threads={} shards={} queue={} batch={} \
+         checkpoints={}",
         handle.addr(),
-        serve_cfg.workers,
+        serve_cfg.transport.name(),
+        serve_cfg.effective_threads(),
         serve_cfg.shards,
         serve_cfg.queue_cap,
         serve_cfg.max_batch,
@@ -511,6 +524,9 @@ fn cmd_loadgen(flags: &Flags) -> Result<()> {
     if let Some(v) = flags.get("sessions") {
         lg.sessions = v.parse().context("--sessions")?;
     }
+    if let Some(v) = flags.get("connections") {
+        lg.connections = v.parse().context("--connections")?;
+    }
     if let Some(v) = flags.get("rounds") {
         lg.rounds = v.parse().context("--rounds")?;
     }
@@ -539,9 +555,10 @@ fn cmd_loadgen(flags: &Flags) -> Result<()> {
         lg.batch = v.parse().context("--batch")?;
     }
     println!(
-        "# lasp loadgen: {} | sessions={} rounds={} threads={} batch={} apps={:?}",
+        "# lasp loadgen: {} | sessions={} connections={} rounds={} threads={} batch={} apps={:?}",
         lg.addr,
         lg.sessions,
+        lg.connections,
         lg.rounds,
         lg.threads,
         lg.batch,

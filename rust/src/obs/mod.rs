@@ -89,6 +89,12 @@ pub enum EventKind {
     /// ([`crate::chaos::FaultPoint`]), `b` = injection ordinal, `c` =
     /// point-specific context (shard, delay ms, attempt).
     Chaos = 12,
+    /// The reactor transport accepted a connection onto an event loop:
+    /// `a` = event-loop index, `b` = slab token.
+    ConnOpen = 13,
+    /// A reactor connection closed: `a` = event-loop index, `b` = slab
+    /// token, `c` = requests served over the connection's lifetime.
+    ConnClose = 14,
 }
 
 impl EventKind {
@@ -110,6 +116,8 @@ impl EventKind {
             10 => EventKind::SessionCreate,
             11 => EventKind::Measure,
             12 => EventKind::Chaos,
+            13 => EventKind::ConnOpen,
+            14 => EventKind::ConnClose,
             _ => return None,
         })
     }
@@ -128,6 +136,8 @@ impl EventKind {
             EventKind::SessionCreate => "session_create",
             EventKind::Measure => "measure",
             EventKind::Chaos => "chaos",
+            EventKind::ConnOpen => "conn_open",
+            EventKind::ConnClose => "conn_close",
         }
     }
 }
@@ -472,6 +482,15 @@ pub fn write_event_json(ev: &TraceEvent, w: &mut JsonWriter) {
             w.field_str("point", crate::chaos::fault_point_name(ev.a));
             w.field_num("injection", ev.b as f64);
             w.field_num("arg", ev.c as f64);
+        }
+        Some(EventKind::ConnOpen) => {
+            w.field_num("event_loop", ev.a as f64);
+            w.field_num("token", ev.b as f64);
+        }
+        Some(EventKind::ConnClose) => {
+            w.field_num("event_loop", ev.a as f64);
+            w.field_num("token", ev.b as f64);
+            w.field_num("requests", ev.c as f64);
         }
         None => {
             w.field_num("a", ev.a as f64);

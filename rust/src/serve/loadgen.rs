@@ -14,7 +14,7 @@
 //! allocation-light as the server side and does not become the
 //! bottleneck it is supposed to be measuring.
 
-use super::http::find_subsequence;
+use super::transport::find_subsequence;
 use crate::apps::{self, AppKind, AppModel};
 use crate::device::{Device, JetsonNano, PowerMode};
 use crate::obs::{self, EventKind, TraceEvent};
@@ -24,6 +24,8 @@ use anyhow::{anyhow, Context, Result};
 use std::io::{Read, Write};
 use std::net::TcpStream;
 use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 /// Load-generation parameters.
@@ -36,6 +38,14 @@ pub struct LoadgenConfig {
     pub addr: String,
     /// Concurrent tuning sessions to maintain.
     pub sessions: usize,
+    /// Open-loop held connections (`--connections <n>`): additionally
+    /// hold `n` keep-alive connections open for the duration of the run.
+    /// They are mostly idle — a single holder thread activates one at a
+    /// time, chosen by a Zipf(1) rank distribution so a few connections
+    /// are hot and the long tail barely speaks, which is what a reactor
+    /// transport has to be good at. The report carries held-connection
+    /// latency quantiles and connect failures. `0` disables the mode.
+    pub connections: usize,
     /// Total suggest+report round-trips across all sessions.
     pub rounds: usize,
     /// Client threads (each owns `sessions / threads` sessions and one
@@ -68,6 +78,7 @@ impl Default for LoadgenConfig {
         LoadgenConfig {
             addr: "127.0.0.1:8787".to_string(),
             sessions: 128,
+            connections: 0,
             rounds: 12_000,
             threads: 8,
             apps: AppKind::all().to_vec(),
@@ -108,6 +119,13 @@ pub struct LoadgenReport {
     pub connect_retries: usize,
     /// Distinct server addresses the load was spread over.
     pub targets: usize,
+    /// Open-loop held connections actually established (`--connections`).
+    pub held_connections: usize,
+    /// Held-connection dials that failed outright.
+    pub connect_failures: usize,
+    /// Latency quantiles over held-connection activations, milliseconds.
+    pub per_conn_p50_ms: f64,
+    pub per_conn_p99_ms: f64,
 }
 
 impl LoadgenReport {
@@ -142,6 +160,15 @@ impl LoadgenReport {
             self.connect_retries,
             self.requests_per_connection()
         );
+        if self.held_connections > 0 || self.connect_failures > 0 {
+            println!(
+                "held connections: {} open ({} connect failures) | activation p50 {:.2}ms p99 {:.2}ms",
+                self.held_connections,
+                self.connect_failures,
+                self.per_conn_p50_ms,
+                self.per_conn_p99_ms
+            );
+        }
     }
 }
 
@@ -441,6 +468,15 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
         handles
             .push(std::thread::spawn(move || worker(t, threads, my_rounds, &cfg, &target, t0)));
     }
+    // Open-loop holder: runs alongside the closed loop and stops when the
+    // workers have drained their rounds.
+    let stop = Arc::new(AtomicBool::new(false));
+    let holder = (cfg.connections > 0).then(|| {
+        let cfg = cfg.clone();
+        let targets = targets.clone();
+        let stop = Arc::clone(&stop);
+        std::thread::spawn(move || hold_connections(&cfg, &targets, &stop))
+    });
 
     let mut latencies: Vec<f64> = Vec::with_capacity(cfg.rounds * 2);
     let mut errors = 0usize;
@@ -462,6 +498,14 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
         connect_retries += w.connect_retries;
         records.extend(w.records);
     }
+    stop.store(true, Ordering::Relaxed);
+    let (held_connections, connect_failures, held_latencies) = match holder {
+        Some(h) => {
+            let out = h.join().map_err(|_| anyhow!("loadgen holder panicked"))?;
+            (out.held, out.connect_failures, out.latencies)
+        }
+        None => (0, 0, Vec::new()),
+    };
     if let Some(path) = &cfg.record {
         for (i, ev) in records.iter_mut().enumerate() {
             ev.seq = i as u64;
@@ -483,7 +527,123 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
         requests,
         connect_retries,
         targets: targets.len(),
+        held_connections,
+        connect_failures,
+        per_conn_p50_ms: stats::quantile(&held_latencies, 0.5) * 1e3,
+        per_conn_p99_ms: stats::quantile(&held_latencies, 0.99) * 1e3,
     })
+}
+
+/// Results from the open-loop connection holder.
+struct HolderOut {
+    /// Connections still alive when the run ended.
+    held: usize,
+    /// Dials that failed plus held connections the server dropped.
+    connect_failures: usize,
+    /// Seconds per activation round-trip.
+    latencies: Vec<f64>,
+}
+
+/// Hold `cfg.connections` keep-alive connections open until `stop`
+/// flips, activating one at a time by a Zipf(1) rank draw. Activations
+/// are plain `GET /healthz` round-trips, so the quantiles measure how
+/// quickly the transport wakes a long-idle connection while the closed
+/// loop saturates it — not tuner work.
+fn hold_connections(cfg: &LoadgenConfig, targets: &[String], stop: &AtomicBool) -> HolderOut {
+    let timeout = Duration::from_secs(cfg.timeout_secs);
+    let mut conns: Vec<TcpStream> = Vec::with_capacity(cfg.connections);
+    let mut connect_failures = 0usize;
+    for i in 0..cfg.connections {
+        if stop.load(Ordering::Relaxed) {
+            break;
+        }
+        match TcpStream::connect(targets[i % targets.len()].as_str()) {
+            Ok(s) => {
+                s.set_nodelay(true).ok();
+                s.set_read_timeout(Some(timeout)).ok();
+                conns.push(s);
+            }
+            Err(_) => connect_failures += 1,
+        }
+    }
+    // Zipf(1) cumulative weights over connection ranks: rank r is drawn
+    // with weight 1/(r+1), so a handful of connections are hot and the
+    // long tail sits idle — the access pattern a reactor must multiplex.
+    let mut cdf: Vec<f64> = Vec::with_capacity(conns.len());
+    let mut total = 0.0f64;
+    for r in 0..conns.len() {
+        total += 1.0 / (r + 1) as f64;
+        cdf.push(total);
+    }
+    let mut rng = cfg.seed | 1; // xorshift64 state; must be non-zero
+    let mut latencies: Vec<f64> = Vec::new();
+    let mut rbuf = vec![0u8; 4096];
+    while !stop.load(Ordering::Relaxed) && !conns.is_empty() {
+        rng ^= rng << 13;
+        rng ^= rng >> 7;
+        rng ^= rng << 17;
+        let u = (rng >> 11) as f64 / (1u64 << 53) as f64 * total;
+        let idx = cdf.partition_point(|&c| c < u).min(conns.len() - 1);
+        let t0 = Instant::now();
+        match holder_roundtrip(&mut conns[idx], &mut rbuf) {
+            Ok(()) => latencies.push(t0.elapsed().as_secs_f64()),
+            Err(_) => {
+                // A held connection the server dropped is a transport
+                // regression signal: count it and stop exercising it. The
+                // popped cdf entry keeps weights 1/(r+1) for the rest.
+                connect_failures += 1;
+                conns.swap_remove(idx);
+                cdf.pop();
+                total = cdf.last().copied().unwrap_or(0.0);
+            }
+        }
+        // Mostly idle: ~100 activations/s across the whole held pool.
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    HolderOut { held: conns.len(), connect_failures, latencies }
+}
+
+/// One `GET /healthz` round-trip on a held connection, draining the full
+/// response so the next activation starts on a clean stream.
+fn holder_roundtrip(stream: &mut TcpStream, rbuf: &mut Vec<u8>) -> Result<()> {
+    stream
+        .write_all(b"GET /healthz HTTP/1.1\r\nHost: lasp\r\n\r\n")
+        .context("held-connection write")?;
+    let mut filled = 0usize;
+    loop {
+        if let Some(hdr_end) = find_subsequence(&rbuf[..filled], b"\r\n\r\n") {
+            let head = std::str::from_utf8(&rbuf[..hdr_end])
+                .map_err(|_| anyhow!("non-UTF-8 response head"))?;
+            let mut content_length = 0usize;
+            for line in head.split("\r\n").skip(1) {
+                if let Some((name, value)) = line.split_once(':') {
+                    if name.trim().eq_ignore_ascii_case("content-length") {
+                        content_length = value.trim().parse().unwrap_or(0);
+                    }
+                }
+            }
+            let total = hdr_end + 4 + content_length;
+            while filled < total {
+                filled += fill_some(stream, rbuf, filled)?;
+            }
+            return Ok(());
+        }
+        filled += fill_some(stream, rbuf, filled)?;
+    }
+}
+
+/// Read at least one byte into `rbuf[filled..]`, growing the buffer when
+/// it is full; EOF is an error (held connections must stay open).
+fn fill_some(stream: &mut TcpStream, rbuf: &mut Vec<u8>, filled: usize) -> Result<usize> {
+    if filled == rbuf.len() {
+        let doubled = rbuf.len() * 2;
+        rbuf.resize(doubled, 0);
+    }
+    let n = stream.read(&mut rbuf[filled..]).context("held-connection read")?;
+    if n == 0 {
+        return Err(anyhow!("held connection closed by server"));
+    }
+    Ok(n)
 }
 
 /// Per-thread results.
@@ -726,6 +886,7 @@ mod tests {
         assert_eq!(cfg.apps.len(), 4);
         assert_eq!(cfg.timeout_secs, 30, "historical read-timeout default");
         assert_eq!(cfg.batch, 1, "single-entry endpoints are the default");
+        assert_eq!(cfg.connections, 0, "open-loop holder is opt-in");
     }
 
     #[test]
@@ -788,6 +949,10 @@ mod tests {
             requests: 200,
             connect_retries: 0,
             targets: 1,
+            held_connections: 0,
+            connect_failures: 0,
+            per_conn_p50_ms: 0.0,
+            per_conn_p99_ms: 0.0,
         };
         assert!((r.requests_per_connection() - 50.0).abs() < 1e-9);
     }

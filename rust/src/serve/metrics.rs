@@ -4,7 +4,7 @@
 //! lightweight — carries over to the service: observing a latency is two
 //! relaxed atomic adds, nothing allocates on the hot path.
 
-use super::http::TransportStats;
+use super::transport::TransportStats;
 use crate::telemetry::ResourceReport;
 use std::fmt::Write as _;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -379,6 +379,13 @@ impl Metrics {
         counter(&mut out, "lasp_serve_transport_requests_total", load(&transport.requests));
         counter(&mut out, "lasp_serve_transport_alloc_events_total", load(&transport.alloc_events));
         counter(&mut out, "lasp_serve_transport_rejected_431_total", load(&transport.rejected_431));
+        // Reactor plane: event-loop sizing, wakeup volume (epoll_wait
+        // returns), open-connection gauge, and how often a response had to
+        // park on writability because the client's socket buffer was full.
+        gauge(&mut out, "lasp_serve_event_loops", load(&transport.event_loops) as f64);
+        counter(&mut out, "lasp_serve_epoll_wakeups_total", load(&transport.wakeups));
+        gauge(&mut out, "lasp_serve_conns_open", load(&transport.conns_open) as f64);
+        counter(&mut out, "lasp_serve_write_backpressure_total", load(&transport.write_backpressure));
         self.batch_size.render("lasp_serve_batch_size", &mut out);
         self.suggest_latency.render("lasp_serve_suggest_latency_us", &mut out);
         self.report_latency.render("lasp_serve_report_latency_us", &mut out);
@@ -451,6 +458,10 @@ mod tests {
         m.checkpoint_latency.observe(Duration::from_millis(3));
         let t = TransportStats::default();
         t.requests.fetch_add(7, Ordering::Relaxed);
+        t.event_loops.store(4, Ordering::Relaxed);
+        t.wakeups.fetch_add(21, Ordering::Relaxed);
+        t.conns_open.fetch_add(12, Ordering::Relaxed);
+        t.write_backpressure.fetch_add(2, Ordering::Relaxed);
         m.fleet_sync_errors.fetch_add(2, Ordering::Relaxed);
         m.fleet_state.store(FLEET_STATE_BACKOFF, Ordering::Relaxed);
         m.reports_dropped.fetch_add(5, Ordering::Relaxed);
@@ -478,6 +489,10 @@ mod tests {
         assert!(page.contains("lasp_serve_trace_overwritten_total 1"), "{page}");
         assert!(page.contains("lasp_serve_transport_requests_total 7"), "{page}");
         assert!(page.contains("lasp_serve_transport_alloc_events_total 0"), "{page}");
+        assert!(page.contains("lasp_serve_event_loops 4"), "{page}");
+        assert!(page.contains("lasp_serve_epoll_wakeups_total 21"), "{page}");
+        assert!(page.contains("lasp_serve_conns_open 12"), "{page}");
+        assert!(page.contains("lasp_serve_write_backpressure_total 2"), "{page}");
         assert!(page.contains("lasp_serve_suggest_latency_us_bucket{le=\"250\"} 1"));
         assert!(page.contains("lasp_serve_batch_size_bucket{le=\"16\"} 2"), "{page}");
         assert!(page.contains("lasp_serve_batch_size_sum 19"), "{page}");

@@ -8,12 +8,16 @@
 //! on-line autotuning frameworks (mARGOt) and MAB-driven edge decision
 //! services:
 //!
-//! * [`http`] — a dependency-free HTTP/1.1 server over
-//!   `std::net::TcpListener` with a fixed worker thread pool, bounded
-//!   hand-off (the [`crate::coordinator`] backpressure idiom), and an
-//!   **allocation-free steady state**: per-connection reusable byte
-//!   buffers, slice-based request parsing, keep-alive with pipelining,
-//!   and counted buffer-growth events ([`http::TransportStats`]) that
+//! * [`transport`] — dependency-free HTTP/1.1 serving over
+//!   `std::net::TcpListener` with two interchangeable backends: the
+//!   default **event-driven reactor** (N event loops, epoll/poll
+//!   readiness, per-connection state machines, a timer wheel for the
+//!   408 slow-loris deadline — 10k+ mostly-idle keep-alive clients per
+//!   node) and the legacy **blocking worker pool** (bounded hand-off,
+//!   the [`crate::coordinator`] backpressure idiom), both with an
+//!   **allocation-free steady state**: reusable byte buffers,
+//!   slice-based request parsing, keep-alive with pipelining, and
+//!   counted buffer-growth events ([`transport::TransportStats`]) that
 //!   certify the zero-allocation contract under load;
 //! * [`store`] — the **sharded session store**: sessions keyed by
 //!   `(client_id, app, device, policy)` hash onto N shards, each shard
@@ -48,14 +52,14 @@
 pub mod batch;
 pub mod checkpoint;
 pub mod fleet;
-pub mod http;
 pub mod loadgen;
 pub mod metrics;
 pub mod service;
 pub mod store;
+pub mod transport;
 
 pub use fleet::{FleetSnapshot, FleetStore, FleetSync, FleetSyncConfig};
-pub use http::{ResponseBuf, TransportStats};
 pub use loadgen::{HttpClient, LoadgenConfig, LoadgenReport};
 pub use service::{start, ServeConfig, ServerHandle, TuningService};
 pub use store::{FleetKey, KeyRef, PolicyKind, SessionId, SessionKey};
+pub use transport::{ResponseBuf, TransportKind, TransportStats};

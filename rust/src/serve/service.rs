@@ -34,7 +34,10 @@
 use super::batch::{BatchIngest, Enqueue, Report};
 use super::checkpoint;
 use super::fleet::{self, FleetSnapshot, FleetStore, FleetSync, FleetSyncConfig};
-use super::http::{self, HttpHandler, HttpServer, Request, ResponseBuf, TransportStats};
+use super::transport::{
+    self, HttpHandler, HttpServer, Request, ResponseBuf, TransportKind, TransportOptions,
+    TransportStats,
+};
 use super::metrics::{fleet_state_name, ChaosGauges, FleetGauges, Metrics, TraceGauges};
 use super::store::{AppsCache, KeyRef, PolicyKind, SessionId, ShardedStore, Tuner};
 use crate::apps::AppKind;
@@ -58,8 +61,14 @@ use std::time::{Duration, Instant};
 pub struct ServeConfig {
     /// Bind address, e.g. `127.0.0.1:8787` (`:0` for an ephemeral port).
     pub addr: String,
-    /// HTTP worker threads.
+    /// HTTP worker threads (blocking transport only).
     pub workers: usize,
+    /// Reactor event loops; 0 = auto (one per core). Unlike `workers`,
+    /// this does not cap concurrent connections — each loop multiplexes
+    /// thousands — so the right value tracks cores, not expected load.
+    pub event_loops: usize,
+    /// Which transport backend serves the listener.
+    pub transport: TransportKind,
     /// Session-store shards.
     pub shards: usize,
     /// Per-shard report queue capacity (backpressure bound).
@@ -99,6 +108,8 @@ impl Default for ServeConfig {
         ServeConfig {
             addr: "127.0.0.1:8787".to_string(),
             workers: 8,
+            event_loops: 0,
+            transport: transport::default_kind(),
             shards: 8,
             queue_cap: 4096,
             max_batch: 128,
@@ -145,6 +156,22 @@ impl ServeConfig {
         }
         Ok(())
     }
+
+    /// How many transport threads this config actually starts: event
+    /// loops for the reactor (0 = one per core), `workers` for the
+    /// blocking pool.
+    pub fn effective_threads(&self) -> usize {
+        match self.transport {
+            TransportKind::Reactor => {
+                if self.event_loops > 0 {
+                    self.event_loops
+                } else {
+                    transport::default_event_loops()
+                }
+            }
+            TransportKind::Blocking => self.workers,
+        }
+    }
 }
 
 /// A request's parameter source: borrowed JSON body (POST) or raw query
@@ -179,9 +206,9 @@ impl<'a> Params<'a> {
                     None => Err(format!("bad {name}")),
                 }
             }
-            Params::Query(q) => match http::query_get_raw(q, name) {
+            Params::Query(q) => match transport::query_get_raw(q, name) {
                 None => Ok(None),
-                Some(raw) => match http::percent_decode(raw) {
+                Some(raw) => match transport::percent_decode(raw) {
                     Some(v) => Ok(Some(v)),
                     None => Err(format!("bad percent-encoding in {name}")),
                 },
@@ -327,8 +354,10 @@ impl BatchArena {
 }
 
 thread_local! {
-    /// One arena per HTTP worker thread (workers are pinned to threads,
-    /// so this is effectively per-worker reuse without locking).
+    /// One arena per transport thread: reactor event loops and blocking
+    /// pool workers are both OS threads that serve one request at a
+    /// time, so this is per-event-loop (or per-worker) reuse without
+    /// locking.
     static BATCH_ARENA: RefCell<BatchArena> = RefCell::new(BatchArena::new());
 }
 
@@ -1312,7 +1341,7 @@ pub fn start(cfg: ServeConfig) -> Result<ServerHandle> {
         .clone()
         .unwrap_or_else(|| format!("node-{bound}"));
 
-    let recorder = Arc::new(Recorder::for_workers(cfg.workers));
+    let recorder = Arc::new(Recorder::for_workers(cfg.effective_threads()));
     let trace_writer = match &cfg.trace_file {
         Some(path) => Some(TraceWriter::start(recorder.clone(), path.clone())?),
         None => None,
@@ -1352,8 +1381,17 @@ pub fn start(cfg: ServeConfig) -> Result<ServerHandle> {
         let service = service.clone();
         Arc::new(move |req: &Request<'_>, out: &mut ResponseBuf| service.handle(req, out))
     };
-    let http =
-        HttpServer::start_with_opts(listener, cfg.workers, handler, transport, chaos.clone())?;
+    let http = HttpServer::start_with_opts(
+        listener,
+        handler,
+        TransportOptions {
+            kind: cfg.transport,
+            threads: cfg.effective_threads(),
+            stats: transport,
+            chaos: chaos.clone(),
+            recorder: Some(recorder.clone()),
+        },
+    )?;
     let addr = http.addr();
 
     // Follower plane: periodic push/pull against the configured leader.

@@ -1,0 +1,285 @@
+//! The legacy blocking transport: one accept thread feeds accepted
+//! connections into a bounded channel drained by a fixed pool of worker
+//! threads (the bound is the backpressure — a flood of connections
+//! blocks in `accept`, not in unbounded memory). Each worker owns one
+//! connection at a time, so the pool size bounds the number of
+//! concurrent keep-alive clients.
+//!
+//! Kept as the differential baseline for the event-driven reactor: both
+//! backends share the parser, the reusable buffers, and the
+//! growth-accounting seams in [`super`], and the differential suite
+//! asserts bit-identical responses and alloc-event parity between them.
+
+use super::parser::{self, ConnBuf, Parsed, TryParse};
+use super::{
+    assemble_frame, dispatch, HttpHandler, Request, ResponseBuf, TransportOptions, TransportStats,
+};
+use anyhow::{Context as _, Result};
+use std::io::Read;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Idle keep-alive connections wake this often to check for shutdown.
+const READ_TIMEOUT: Duration = Duration::from_millis(500);
+
+/// Outcome of waiting for one request on a connection.
+enum ReadOutcome {
+    Request(Parsed),
+    /// Peer closed cleanly between requests.
+    Closed,
+    /// Idle read timeout (connection still healthy; buffered partial
+    /// bytes are preserved for the next attempt).
+    Idle,
+    /// Protocol violation; connection must be dropped after `status`.
+    Malformed(u16, &'static str),
+}
+
+/// A running blocking server: accept thread + fixed worker pool.
+pub struct BlockingServer {
+    addr: SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    stats: Arc<TransportStats>,
+    accept_thread: JoinHandle<()>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl BlockingServer {
+    /// Start serving `listener` with `opts.threads` handler threads.
+    pub fn start(
+        listener: TcpListener,
+        handler: HttpHandler,
+        opts: TransportOptions,
+    ) -> Result<BlockingServer> {
+        let workers = opts.threads;
+        assert!(workers > 0);
+        let stats = opts.stats;
+        let chaos = opts.chaos;
+        let addr = listener.local_addr().context("reading bound address")?;
+        let shutdown = Arc::new(AtomicBool::new(false));
+
+        // Bounded hand-off: a connection flood blocks the accept thread
+        // (kernel backlog) instead of queueing unboundedly in memory.
+        let (tx, rx): (SyncSender<TcpStream>, Receiver<TcpStream>) = sync_channel(workers * 4);
+        let rx = Arc::new(Mutex::new(rx));
+
+        let mut pool = Vec::with_capacity(workers);
+        for _ in 0..workers {
+            let rx = rx.clone();
+            let handler = handler.clone();
+            let shutdown = shutdown.clone();
+            let stats = stats.clone();
+            pool.push(std::thread::spawn(move || {
+                // Connection-lifetime buffers (see module docs). They are
+                // per-worker so a long-lived keep-alive client reuses the
+                // same memory for every request it sends.
+                let mut conn = ConnBuf::new();
+                let mut resp = ResponseBuf::new();
+                let mut frame: Vec<u8> = Vec::with_capacity(1024);
+                loop {
+                    let stream = {
+                        let guard = match rx.lock() {
+                            Ok(g) => g,
+                            Err(p) => p.into_inner(),
+                        };
+                        guard.recv()
+                    };
+                    match stream {
+                        Ok(s) => {
+                            // Reset per-connection state, keep capacity.
+                            conn.reset();
+                            handle_connection(
+                                s, &handler, &shutdown, &stats, &mut conn, &mut resp, &mut frame,
+                            );
+                        }
+                        Err(_) => return, // accept thread gone: shutdown
+                    }
+                }
+            }));
+        }
+
+        let accept_thread = {
+            let shutdown = shutdown.clone();
+            let stats = stats.clone();
+            std::thread::spawn(move || {
+                // `tx` lives in this thread; dropping it on exit releases
+                // the worker pool.
+                for conn in listener.incoming() {
+                    if shutdown.load(Ordering::SeqCst) {
+                        return;
+                    }
+                    let Ok(stream) = conn else { continue };
+                    if let Some(c) = &chaos {
+                        if c.accept_drop() {
+                            // Close before a byte is served; the client
+                            // sees a reset, as on a flaky edge link.
+                            drop(stream);
+                            continue;
+                        }
+                    }
+                    let _ = stream.set_nodelay(true);
+                    let _ = stream.set_read_timeout(Some(READ_TIMEOUT));
+                    stats.connections.fetch_add(1, Ordering::Relaxed);
+                    if tx.send(stream).is_err() {
+                        return;
+                    }
+                }
+            })
+        };
+
+        Ok(BlockingServer { addr, shutdown, stats, accept_thread, workers: pool })
+    }
+
+    /// The bound address (ephemeral ports resolved).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Transport counters (connections, requests, alloc events).
+    pub fn stats(&self) -> Arc<TransportStats> {
+        self.stats.clone()
+    }
+
+    /// Stop accepting, close workers, join all threads.
+    pub fn stop(self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        // Wake the accept thread out of its blocking accept.
+        let _ = TcpStream::connect(self.addr);
+        let _ = self.accept_thread.join();
+        for w in self.workers {
+            let _ = w.join();
+        }
+    }
+
+    /// Block until the server exits on its own (never, in practice).
+    pub fn join(self) {
+        let _ = self.accept_thread.join();
+        for w in self.workers {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Drive the buffer until one complete request is available (or a
+/// terminal outcome). Pipelined requests already in the buffer parse
+/// without touching the socket.
+fn read_request(conn: &mut ConnBuf, stream: &mut TcpStream, stats: &TransportStats) -> ReadOutcome {
+    loop {
+        if conn.len() > 0 {
+            match parser::try_parse(conn.window()) {
+                TryParse::Complete(p) => return ReadOutcome::Request(p),
+                TryParse::Bad(status, msg) => return ReadOutcome::Malformed(status, msg),
+                TryParse::NeedMore => {
+                    // A partial request must complete within its deadline
+                    // — a trickling client (slow-loris) cannot pin a pool
+                    // worker indefinitely.
+                    if conn.deadline_exceeded() {
+                        return ReadOutcome::Malformed(408, "request timeout");
+                    }
+                }
+            }
+        }
+        match conn.fill(stream, stats) {
+            Ok(0) => {
+                return if conn.len() == 0 {
+                    ReadOutcome::Closed
+                } else {
+                    ReadOutcome::Malformed(400, "eof mid-request")
+                };
+            }
+            Ok(_) => {}
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                // Partial bytes stay buffered; surface Idle so the worker
+                // can check for shutdown and resume exactly where the
+                // stream paused (no desync, unlike a line-based parser).
+                return ReadOutcome::Idle;
+            }
+            Err(_) => return ReadOutcome::Closed,
+        }
+    }
+}
+
+/// Assemble and write one response as a single segment (one syscall on
+/// the hot path).
+fn write_response(
+    stream: &mut TcpStream,
+    resp: &ResponseBuf,
+    keep_alive: bool,
+    frame: &mut Vec<u8>,
+    stats: &TransportStats,
+) -> std::io::Result<()> {
+    use std::io::Write as _;
+    assemble_frame(frame, resp, keep_alive, stats);
+    stream.write_all(frame)?;
+    stream.flush()
+}
+
+#[allow(clippy::too_many_arguments)]
+fn handle_connection(
+    mut stream: TcpStream,
+    handler: &HttpHandler,
+    shutdown: &AtomicBool,
+    stats: &TransportStats,
+    conn: &mut ConnBuf,
+    resp: &mut ResponseBuf,
+    frame: &mut Vec<u8>,
+) {
+    loop {
+        if shutdown.load(Ordering::SeqCst) {
+            return;
+        }
+        match read_request(conn, &mut stream, stats) {
+            ReadOutcome::Request(p) => {
+                stats.requests.fetch_add(1, Ordering::Relaxed);
+                let close = {
+                    // Borrow the parsed slices out of the buffer window.
+                    let base = conn.start;
+                    let data = &conn.data[base..conn.filled];
+                    // The head was validated as UTF-8 by try_parse.
+                    let req = Request {
+                        method: std::str::from_utf8(&data[p.method.clone()]).unwrap_or(""),
+                        path: std::str::from_utf8(&data[p.path.clone()]).unwrap_or(""),
+                        query: std::str::from_utf8(&data[p.query.clone()]).unwrap_or(""),
+                        body: &data[p.body.clone()],
+                        close: p.close,
+                    };
+                    dispatch(handler, &req, resp, stats);
+                    req.close
+                };
+                if write_response(&mut stream, resp, !close, frame, stats).is_err() || close {
+                    return;
+                }
+                conn.consume(p.total_len);
+            }
+            ReadOutcome::Idle => continue,
+            ReadOutcome::Closed => return,
+            ReadOutcome::Malformed(status, msg) => {
+                if status == 431 {
+                    stats.rejected_431.fetch_add(1, Ordering::Relaxed);
+                }
+                resp.reset();
+                resp.error(status, msg);
+                let _ = write_response(&mut stream, resp, false, frame, stats);
+                // Lingering close: drain (bounded) whatever the client is
+                // still sending, so closing the socket with unread bytes
+                // cannot RST the error response away before the client
+                // reads it.
+                let deadline = Instant::now() + parser::LINGER;
+                let mut scratch = [0u8; 1024];
+                while Instant::now() < deadline {
+                    match stream.read(&mut scratch) {
+                        Ok(0) | Err(_) => break,
+                        Ok(_) => {}
+                    }
+                }
+                return;
+            }
+        }
+    }
+}

@@ -1,0 +1,469 @@
+//! HTTP/1.1 transports for the tuning service — allocation-free in
+//! steady state, with two interchangeable backends behind one seam.
+//!
+//! * [`reactor`] (the default) — a readiness-driven event loop: N
+//!   event-loop threads, each owning a poller ([`poller::Poller`]: epoll
+//!   on Linux, `poll(2)` elsewhere), a slab of per-connection state
+//!   machines (`Reading → Handling → Writing → KeepAlive`), and a timer
+//!   wheel enforcing the 408 slow-loris deadline. Accepted sockets are
+//!   distributed round-robin across loops; a write that would block
+//!   parks the connection on `EPOLLOUT` instead of pinning a thread, so
+//!   one node holds 10k+ mostly-idle keep-alive clients.
+//! * [`blocking`] (legacy) — the accept-thread + bounded-channel +
+//!   fixed-worker-pool transport, kept as the differential baseline:
+//!   both backends must serve bit-identical responses and count
+//!   identical buffer-growth events.
+//!
+//! ## Buffer lifecycle (the zero-allocation contract)
+//!
+//! Three reusable buffers carry every request: a per-connection **read
+//! buffer** ([`parser::ConnBuf`]) the slice parser works in, a
+//! **response buffer** ([`ResponseBuf`]) the handler serializes into,
+//! and a **frame buffer** assembling head + body for a single write.
+//! In the blocking pool the response/frame buffers are per-worker; in
+//! the reactor they are per-event-loop (a loop handles one request at a
+//! time), as is the batch arena. All growth is counted in
+//! [`TransportStats::alloc_events`] by the shared buffer/dispatch code
+//! in this module — `alloc_events` staying flat under steady load *is*
+//! the zero-allocation property, and the tests assert exactly that.
+
+pub mod blocking;
+pub mod parser;
+#[cfg(unix)]
+pub mod poller;
+#[cfg(unix)]
+pub mod reactor;
+#[cfg(test)]
+mod server_tests;
+
+pub use parser::{MAX_BODY_BYTES, MAX_HEADER_BYTES, MAX_HEADERS};
+pub(crate) use parser::find_subsequence;
+
+use crate::obs::Recorder;
+use crate::util::json::JsonWriter;
+use anyhow::Result;
+use std::borrow::Cow;
+use std::net::{SocketAddr, TcpListener};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Transport-level counters, shared by every worker/event loop of one
+/// server. `alloc_events` is the serve hot path's allocation proxy: it
+/// counts buffer growth in the HTTP + JSON layers (read buffer, response
+/// body, frame scratch), so a flat value under steady load certifies the
+/// request path performs zero heap allocations in those layers.
+#[derive(Default)]
+pub struct TransportStats {
+    /// Connections accepted.
+    pub connections: AtomicU64,
+    /// Requests parsed and dispatched.
+    pub requests: AtomicU64,
+    /// Buffer growth events in the HTTP+JSON layers (see above).
+    pub alloc_events: AtomicU64,
+    /// Requests rejected with 431 (header limits).
+    pub rejected_431: AtomicU64,
+    /// Event loops serving this transport (gauge; 0 = blocking pool).
+    pub event_loops: AtomicU64,
+    /// Poller wakeups (`epoll_wait`/`poll` returns) across all loops.
+    pub wakeups: AtomicU64,
+    /// Currently open connections (gauge; reactor only).
+    pub conns_open: AtomicU64,
+    /// Writes that would have blocked and parked the connection on
+    /// `EPOLLOUT` instead (write backpressure).
+    pub write_backpressure: AtomicU64,
+}
+
+impl TransportStats {
+    pub(crate) fn note_alloc(&self) {
+        self.alloc_events.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// A parsed HTTP request, borrowing from the connection's read buffer.
+#[derive(Debug)]
+pub struct Request<'a> {
+    pub method: &'a str,
+    /// Path without the query string, e.g. `/v1/suggest` (undecoded).
+    pub path: &'a str,
+    /// Raw query string after `?` (may be empty; decode via
+    /// [`Request::query_get`]).
+    pub query: &'a str,
+    pub body: &'a [u8],
+    /// Client asked for the connection to be closed after this response.
+    pub close: bool,
+}
+
+impl<'a> Request<'a> {
+    /// Look up and percent-decode one query parameter. Borrows from the
+    /// request unless the value actually contains `%`/`+` escapes.
+    /// Values that decode to invalid UTF-8 are rejected (`None`) rather
+    /// than lossy-decoded — deterministic for the caller, and a malformed
+    /// parameter can never impersonate a different (valid) string.
+    pub fn query_get(&self, name: &str) -> Option<Cow<'a, str>> {
+        query_get(self.query, name)
+    }
+}
+
+/// Look up `name` in a raw `a=b&c=d` query string, returning the value
+/// still percent-encoded. Lets callers distinguish "absent" from
+/// "present but undecodable" (the latter must be a 400, not a silent
+/// fall-back to defaults).
+pub fn query_get_raw<'a>(query: &'a str, name: &str) -> Option<&'a str> {
+    for pair in query.split('&') {
+        if pair.is_empty() {
+            continue;
+        }
+        let (k, v) = pair.split_once('=').unwrap_or((pair, ""));
+        match percent_decode(k) {
+            Some(key) if key == name => return Some(v),
+            _ => {}
+        }
+    }
+    None
+}
+
+/// Look up and decode `name` (shared with tests and the loadgen client).
+/// `None` for both absent and undecodable values; use
+/// [`query_get_raw`] + [`percent_decode`] to tell them apart.
+pub fn query_get<'a>(query: &'a str, name: &str) -> Option<Cow<'a, str>> {
+    percent_decode(query_get_raw(query, name)?)
+}
+
+/// Percent-decode (`%XX` and `+`). Borrowed when no escapes are present;
+/// `None` when the decoded bytes are not valid UTF-8 (deterministic
+/// rejection instead of silent U+FFFD substitution). A `%` not followed
+/// by two hex digits passes through literally, matching common lenient
+/// parsers.
+pub fn percent_decode(s: &str) -> Option<Cow<'_, str>> {
+    if !s.bytes().any(|b| b == b'%' || b == b'+') {
+        return Some(Cow::Borrowed(s));
+    }
+    let bytes = s.as_bytes();
+    let mut out = Vec::with_capacity(bytes.len());
+    let mut i = 0;
+    while i < bytes.len() {
+        match bytes[i] {
+            b'+' => {
+                out.push(b' ');
+                i += 1;
+            }
+            b'%' => {
+                let hex = bytes.get(i + 1..i + 3);
+                match hex.and_then(|h| u8::from_str_radix(std::str::from_utf8(h).ok()?, 16).ok())
+                {
+                    Some(b) => {
+                        out.push(b);
+                        i += 3;
+                    }
+                    None => {
+                        out.push(b'%');
+                        i += 1;
+                    }
+                }
+            }
+            b => {
+                out.push(b);
+                i += 1;
+            }
+        }
+    }
+    String::from_utf8(out).ok().map(Cow::Owned)
+}
+
+/// The response a handler fills in. The body buffer is cleared — not
+/// freed — between requests, so steady-state serialization into it is
+/// allocation-free.
+pub struct ResponseBuf {
+    status: u16,
+    content_type: &'static str,
+    /// Serialized response body; handlers append (via [`JsonWriter`] or
+    /// `extend_from_slice`) after [`ResponseBuf::reset`].
+    pub body: Vec<u8>,
+    /// Reusable text scratch for handlers (e.g. config descriptions
+    /// streamed into the body) — same lifecycle as `body`, and its
+    /// growth is counted as an alloc event too.
+    pub scratch: String,
+}
+
+impl ResponseBuf {
+    pub fn new() -> ResponseBuf {
+        ResponseBuf {
+            status: 200,
+            content_type: "application/json",
+            body: Vec::with_capacity(512),
+            scratch: String::with_capacity(128),
+        }
+    }
+
+    /// Clear for the next request (keeps capacity).
+    pub fn reset(&mut self) {
+        self.status = 200;
+        self.content_type = "application/json";
+        self.body.clear();
+        self.scratch.clear();
+    }
+
+    pub fn status(&self) -> u16 {
+        self.status
+    }
+
+    pub fn set_status(&mut self, status: u16) {
+        self.status = status;
+    }
+
+    /// Replace the response with a plain-text body.
+    pub fn text(&mut self, status: u16, body: &str) {
+        self.status = status;
+        self.content_type = "text/plain; charset=utf-8";
+        self.body.clear();
+        self.body.extend_from_slice(body.as_bytes());
+    }
+
+    /// Replace the response with a `{"error": msg}` JSON envelope.
+    pub fn error(&mut self, status: u16, msg: &str) {
+        self.status = status;
+        self.content_type = "application/json";
+        self.body.clear();
+        let mut w = JsonWriter::new(&mut self.body);
+        w.begin_obj();
+        w.field_str("error", msg);
+        w.end_obj();
+    }
+}
+
+impl Default for ResponseBuf {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Run the handler against a parsed request with growth accounting:
+/// response-body and scratch growth is detected here, in code shared by
+/// both transports, so they count identically by construction.
+pub(crate) fn dispatch(
+    handler: &HttpHandler,
+    req: &Request<'_>,
+    resp: &mut ResponseBuf,
+    stats: &TransportStats,
+) {
+    resp.reset();
+    let body_cap = resp.body.capacity();
+    let scratch_cap = resp.scratch.capacity();
+    handler(req, resp);
+    if resp.body.capacity() != body_cap || resp.scratch.capacity() != scratch_cap {
+        stats.note_alloc();
+    }
+}
+
+/// Assemble status line + headers + body into the reusable frame buffer
+/// (so each response can go out as a single write). Frame growth is a
+/// counted alloc event — shared accounting, like [`dispatch`].
+pub(crate) fn assemble_frame(
+    frame: &mut Vec<u8>,
+    resp: &ResponseBuf,
+    keep_alive: bool,
+    stats: &TransportStats,
+) {
+    use std::io::Write as _;
+    let cap_before = frame.capacity();
+    frame.clear();
+    let _ = write!(
+        frame,
+        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: {}\r\n\r\n",
+        resp.status,
+        parser::status_text(resp.status),
+        resp.content_type,
+        resp.body.len(),
+        if keep_alive { "keep-alive" } else { "close" },
+    );
+    frame.extend_from_slice(&resp.body);
+    if frame.capacity() != cap_before {
+        stats.note_alloc();
+    }
+}
+
+/// The request handler shared by all worker/event-loop threads: parse
+/// the borrowed request, serialize into the reusable response buffer.
+pub type HttpHandler = Arc<dyn Fn(&Request<'_>, &mut ResponseBuf) + Send + Sync>;
+
+/// Which transport backend serves the listener.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TransportKind {
+    /// Event-driven reactor (epoll/poll readiness loops) — the default.
+    Reactor,
+    /// Legacy accept-thread + fixed worker pool (one thread per
+    /// connection in flight). Kept as the differential baseline.
+    Blocking,
+}
+
+impl TransportKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            TransportKind::Reactor => "reactor",
+            TransportKind::Blocking => "blocking",
+        }
+    }
+
+    /// Parse a `--transport` CLI value.
+    pub fn parse(s: &str) -> Option<TransportKind> {
+        match s {
+            "reactor" | "epoll" => Some(TransportKind::Reactor),
+            "blocking" | "threads" => Some(TransportKind::Blocking),
+            _ => None,
+        }
+    }
+}
+
+/// Full start options for [`HttpServer::start_with_opts`].
+pub struct TransportOptions {
+    pub kind: TransportKind,
+    /// Event loops (reactor) or worker threads (blocking).
+    pub threads: usize,
+    /// Externally owned counters (the service exports them on `/metrics`).
+    pub stats: Arc<TransportStats>,
+    /// Serve-side chaos layer. When armed, its `accept` fault point
+    /// closes a just-accepted connection before a byte is served — the
+    /// client sees a reset, exactly like a flaky edge link. `None` keeps
+    /// the accept path untouched (zero overhead without `--chaos`).
+    pub chaos: Option<Arc<crate::chaos::ChaosLayer>>,
+    /// Flight recorder for `conn_open`/`conn_close` events (reactor).
+    pub recorder: Option<Arc<Recorder>>,
+}
+
+impl TransportOptions {
+    pub fn new(kind: TransportKind, threads: usize) -> TransportOptions {
+        TransportOptions {
+            kind,
+            threads,
+            stats: Arc::new(TransportStats::default()),
+            chaos: None,
+            recorder: None,
+        }
+    }
+}
+
+/// A running HTTP server over one of the two transport backends.
+pub enum HttpServer {
+    Blocking(blocking::BlockingServer),
+    #[cfg(unix)]
+    Reactor(reactor::ReactorServer),
+}
+
+impl HttpServer {
+    /// Start serving `listener` on the default backend (the reactor on
+    /// unix; the blocking pool elsewhere) with `threads` loops/workers.
+    pub fn start(listener: TcpListener, threads: usize, handler: HttpHandler) -> Result<HttpServer> {
+        Self::start_with_opts(listener, handler, TransportOptions::new(default_kind(), threads))
+    }
+
+    /// Full-option start (backend, shared stats, chaos, recorder).
+    pub fn start_with_opts(
+        listener: TcpListener,
+        handler: HttpHandler,
+        opts: TransportOptions,
+    ) -> Result<HttpServer> {
+        match opts.kind {
+            TransportKind::Blocking => {
+                Ok(HttpServer::Blocking(blocking::BlockingServer::start(listener, handler, opts)?))
+            }
+            #[cfg(unix)]
+            TransportKind::Reactor => {
+                Ok(HttpServer::Reactor(reactor::ReactorServer::start(listener, handler, opts)?))
+            }
+            // No readiness syscalls to build a reactor on: serve with the
+            // portable blocking pool instead of failing to boot.
+            #[cfg(not(unix))]
+            TransportKind::Reactor => {
+                Ok(HttpServer::Blocking(blocking::BlockingServer::start(listener, handler, opts)?))
+            }
+        }
+    }
+
+    /// The bound address (ephemeral ports resolved).
+    pub fn addr(&self) -> SocketAddr {
+        match self {
+            HttpServer::Blocking(s) => s.addr(),
+            #[cfg(unix)]
+            HttpServer::Reactor(s) => s.addr(),
+        }
+    }
+
+    /// Transport counters (connections, requests, alloc events).
+    pub fn stats(&self) -> Arc<TransportStats> {
+        match self {
+            HttpServer::Blocking(s) => s.stats(),
+            #[cfg(unix)]
+            HttpServer::Reactor(s) => s.stats(),
+        }
+    }
+
+    /// Stop accepting, close connections, join all threads.
+    pub fn stop(self) {
+        match self {
+            HttpServer::Blocking(s) => s.stop(),
+            #[cfg(unix)]
+            HttpServer::Reactor(s) => s.stop(),
+        }
+    }
+
+    /// Block until the server exits on its own (never, in practice) —
+    /// used by the `lasp serve` CLI to park the main thread.
+    pub fn join(self) {
+        match self {
+            HttpServer::Blocking(s) => s.join(),
+            #[cfg(unix)]
+            HttpServer::Reactor(s) => s.join(),
+        }
+    }
+}
+
+/// The default backend for this platform.
+pub fn default_kind() -> TransportKind {
+    if cfg!(unix) {
+        TransportKind::Reactor
+    } else {
+        TransportKind::Blocking
+    }
+}
+
+/// Default event-loop count: one per core.
+pub fn default_event_loops() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percent_decoding() {
+        assert_eq!(percent_decode("a%20b+c").unwrap(), "a b c");
+        let plain = percent_decode("plain").unwrap();
+        assert_eq!(plain, "plain");
+        assert!(matches!(plain, Cow::Borrowed(_)), "plain values must borrow");
+        assert_eq!(percent_decode("bad%zz").unwrap(), "bad%zz");
+        assert_eq!(percent_decode("%41").unwrap(), "A");
+        // Invalid UTF-8 after decoding is rejected deterministically,
+        // never lossy-substituted.
+        assert_eq!(percent_decode("%FF"), None);
+        assert_eq!(percent_decode("ok%FFtail"), None);
+    }
+
+    #[test]
+    fn query_lookup() {
+        assert_eq!(query_get("a=1&b=two", "b").unwrap(), "two");
+        assert_eq!(query_get("a=1&b=two", "a").unwrap(), "1");
+        assert_eq!(query_get("flag", "flag").unwrap(), "");
+        assert_eq!(query_get("a=1", "missing"), None);
+        assert_eq!(query_get("k=%FF", "k"), None);
+    }
+
+    #[test]
+    fn transport_kind_parses() {
+        assert_eq!(TransportKind::parse("reactor"), Some(TransportKind::Reactor));
+        assert_eq!(TransportKind::parse("epoll"), Some(TransportKind::Reactor));
+        assert_eq!(TransportKind::parse("blocking"), Some(TransportKind::Blocking));
+        assert_eq!(TransportKind::parse("tokio"), None);
+        assert_eq!(TransportKind::Reactor.name(), "reactor");
+    }
+}

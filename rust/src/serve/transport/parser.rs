@@ -1,0 +1,317 @@
+//! The slice-based HTTP/1.1 request parser and the reusable
+//! per-connection read buffer, shared verbatim by both transports
+//! ([`super::blocking`] and [`super::reactor`]).
+//!
+//! Parsing yields *byte ranges* into the connection buffer, never owned
+//! strings, so the steady state performs zero heap allocations. Every
+//! buffer-growth event is counted through [`TransportStats`] **inside
+//! this module** — the transports cannot diverge in what they count,
+//! which is what makes the differential alloc-parity assertion
+//! meaningful.
+
+use super::TransportStats;
+use std::io::Read;
+use std::time::{Duration, Instant};
+
+/// Request bodies above this are rejected with 413 (a suggest/report
+/// payload is a few hundred bytes).
+pub const MAX_BODY_BYTES: usize = 1 << 20;
+/// Header-section ceiling: request line + all headers must fit (431).
+pub const MAX_HEADER_BYTES: usize = 16 * 1024;
+/// Header-count ceiling (431) — a malicious client cannot make the server
+/// spend unbounded parse work per request.
+pub const MAX_HEADERS: usize = 64;
+/// Initial per-connection read-buffer size; grows (counted) on demand up
+/// to the header + body ceilings.
+pub const INITIAL_BUF: usize = 4 * 1024;
+/// A request must arrive in full within this window of its first byte.
+/// Bounds slow-loris hold time: a client trickling a request (or stalling
+/// mid-request) is evicted with 408 instead of pinning a pool worker (or
+/// a reactor slab slot) forever. Generous enough for any legitimate
+/// client on a bad link.
+pub const REQUEST_DEADLINE: Duration = Duration::from_secs(10);
+/// After responding to a malformed request the connection lingers this
+/// long, draining unread bytes, so closing cannot RST the error response
+/// away before the client reads it.
+pub const LINGER: Duration = Duration::from_millis(250);
+
+pub(crate) fn status_text(code: u16) -> &'static str {
+    match code {
+        200 => "OK",
+        202 => "Accepted",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        408 => "Request Timeout",
+        413 => "Payload Too Large",
+        431 => "Request Header Fields Too Large",
+        500 => "Internal Server Error",
+        501 => "Not Implemented",
+        503 => "Service Unavailable",
+        _ => "Unknown",
+    }
+}
+
+/// Reusable per-connection read buffer. Bytes live in `data[start..filled]`;
+/// parsing slices into that window, and `consume` reclaims the prefix.
+pub(crate) struct ConnBuf {
+    pub(crate) data: Vec<u8>,
+    pub(crate) start: usize,
+    pub(crate) filled: usize,
+    /// When the first byte of the currently pending request arrived
+    /// (None = no partial request buffered). Drives [`REQUEST_DEADLINE`].
+    pub(crate) since: Option<Instant>,
+}
+
+impl ConnBuf {
+    pub(crate) fn new() -> ConnBuf {
+        ConnBuf { data: vec![0u8; INITIAL_BUF], start: 0, filled: 0, since: None }
+    }
+
+    /// Forget any buffered bytes (new connection); keeps capacity.
+    pub(crate) fn reset(&mut self) {
+        self.start = 0;
+        self.filled = 0;
+        self.since = None;
+    }
+
+    pub(crate) fn window(&self) -> &[u8] {
+        &self.data[self.start..self.filled]
+    }
+
+    pub(crate) fn len(&self) -> usize {
+        self.filled - self.start
+    }
+
+    /// When the currently pending (partial) request started arriving.
+    pub(crate) fn pending_since(&self) -> Option<Instant> {
+        self.since
+    }
+
+    /// The pending (partial) request has overstayed [`REQUEST_DEADLINE`].
+    pub(crate) fn deadline_exceeded(&self) -> bool {
+        matches!(self.since, Some(t) if t.elapsed() > REQUEST_DEADLINE)
+    }
+
+    /// Drop `n` parsed bytes from the front of the window.
+    pub(crate) fn consume(&mut self, n: usize) {
+        self.start = (self.start + n).min(self.filled);
+        if self.start == self.filled {
+            self.start = 0;
+            self.filled = 0;
+            self.since = None;
+        } else {
+            // Pipelined follow-up already buffered: its clock starts now.
+            self.since = Some(Instant::now());
+        }
+    }
+
+    /// Read more bytes from `stream`, compacting or growing first if the
+    /// tail is full. Growth is a counted alloc event (shared accounting —
+    /// both transports go through this exact path); steady state hits the
+    /// high-water capacity and never grows again.
+    pub(crate) fn fill(
+        &mut self,
+        stream: &mut impl Read,
+        stats: &TransportStats,
+    ) -> std::io::Result<usize> {
+        if self.filled == self.data.len() {
+            if self.start > 0 {
+                self.data.copy_within(self.start..self.filled, 0);
+                self.filled -= self.start;
+                self.start = 0;
+            } else {
+                let new_len = (self.data.len() * 2).min(MAX_HEADER_BYTES + MAX_BODY_BYTES + 1024);
+                if new_len > self.data.len() {
+                    self.data.resize(new_len, 0);
+                    stats.note_alloc();
+                } else {
+                    // Window already at the absolute ceiling; the parser
+                    // rejects such requests before asking for more.
+                    return Ok(0);
+                }
+            }
+        }
+        let was_empty = self.len() == 0;
+        let n = stream.read(&mut self.data[self.filled..])?;
+        self.filled += n;
+        if was_empty && n > 0 {
+            self.since = Some(Instant::now());
+        }
+        Ok(n)
+    }
+}
+
+/// Byte ranges of one parsed request, relative to the buffer window at
+/// parse time (no borrows, so the caller can keep mutating the buffer
+/// before re-slicing).
+pub(crate) struct Parsed {
+    pub(crate) method: std::ops::Range<usize>,
+    pub(crate) path: std::ops::Range<usize>,
+    pub(crate) query: std::ops::Range<usize>,
+    pub(crate) body: std::ops::Range<usize>,
+    pub(crate) total_len: usize,
+    pub(crate) close: bool,
+}
+
+pub(crate) enum TryParse {
+    /// A complete request is buffered.
+    Complete(Parsed),
+    /// Not enough bytes yet.
+    NeedMore,
+    /// Protocol violation; respond with `status` and drop the connection.
+    Bad(u16, &'static str),
+}
+
+/// Find the blank line ending the header section: a line break followed
+/// immediately by another line break, where each break is `\n` or `\r\n`
+/// (the old line-based parser tolerated LF-only and mixed endings; keep
+/// accepting them). One short-circuiting pass — never scans past the
+/// header region into buffered body bytes. Returns `(head_len,
+/// body_start)`.
+pub(crate) fn find_head_end(data: &[u8]) -> Option<(usize, usize)> {
+    let mut i = 0;
+    while i < data.len() {
+        if data[i] == b'\n' {
+            match data.get(i + 1) {
+                Some(b'\n') => return Some((i, i + 2)),
+                Some(b'\r') if data.get(i + 2) == Some(&b'\n') => return Some((i, i + 3)),
+                _ => {}
+            }
+        }
+        i += 1;
+    }
+    None
+}
+
+/// Attempt to parse one request from `data` (the buffer window).
+pub(crate) fn try_parse(data: &[u8]) -> TryParse {
+    // Locate the end of the header section.
+    let Some((hdr_end, body_start)) = find_head_end(data) else {
+        return if data.len() > MAX_HEADER_BYTES {
+            TryParse::Bad(431, "headers too large")
+        } else {
+            TryParse::NeedMore
+        };
+    };
+    if hdr_end > MAX_HEADER_BYTES {
+        return TryParse::Bad(431, "headers too large");
+    }
+    let Ok(head) = std::str::from_utf8(&data[..hdr_end]) else {
+        return TryParse::Bad(400, "non-ASCII request head");
+    };
+    let mut lines = head.split('\n').map(|l| l.trim_end_matches('\r'));
+    let request_line = lines.next().unwrap_or("");
+    let mut parts = request_line.split_whitespace();
+    let (Some(method), Some(target), Some(version)) = (parts.next(), parts.next(), parts.next())
+    else {
+        return TryParse::Bad(400, "bad request line");
+    };
+    if !version.starts_with("HTTP/1.") {
+        return TryParse::Bad(400, "unsupported HTTP version");
+    }
+    let (path, query) = match target.split_once('?') {
+        Some((p, q)) => (p, q),
+        None => (target, ""),
+    };
+
+    // Headers.
+    let mut content_length: Option<usize> = None;
+    let mut close = version == "HTTP/1.0";
+    let mut n_headers = 0usize;
+    for line in lines {
+        n_headers += 1;
+        if n_headers > MAX_HEADERS {
+            return TryParse::Bad(431, "too many headers");
+        }
+        let Some((name, value)) = line.split_once(':') else {
+            return TryParse::Bad(400, "bad header");
+        };
+        let name = name.trim();
+        let value = value.trim();
+        if name.eq_ignore_ascii_case("content-length") {
+            match value.parse::<usize>() {
+                Ok(n) if n <= MAX_BODY_BYTES => {
+                    // Conflicting duplicates are a framing-desync
+                    // (request smuggling) vector: reject per RFC 7230.
+                    if matches!(content_length, Some(prev) if prev != n) {
+                        return TryParse::Bad(400, "conflicting content-length");
+                    }
+                    content_length = Some(n);
+                }
+                Ok(_) => return TryParse::Bad(413, "body too large"),
+                Err(_) => return TryParse::Bad(400, "bad content-length"),
+            }
+        } else if name.eq_ignore_ascii_case("transfer-encoding") {
+            // Chunked framing is not implemented; silently ignoring it
+            // would desync the pipelined stream at the chunk headers.
+            return TryParse::Bad(501, "transfer-encoding not supported");
+        } else if name.eq_ignore_ascii_case("connection") {
+            if value.eq_ignore_ascii_case("close") {
+                close = true;
+            } else if value.eq_ignore_ascii_case("keep-alive") {
+                close = false;
+            }
+        }
+    }
+    let content_length = content_length.unwrap_or(0);
+
+    let total_len = body_start + content_length;
+    if data.len() < total_len {
+        return TryParse::NeedMore;
+    }
+
+    let range_in = |s: &str| -> std::ops::Range<usize> {
+        let off = s.as_ptr() as usize - data.as_ptr() as usize;
+        off..off + s.len()
+    };
+    // An absent query is the static "" (not inside `data`): empty range.
+    let query = if query.is_empty() { 0..0 } else { range_in(query) };
+    TryParse::Complete(Parsed {
+        method: range_in(method),
+        path: range_in(path),
+        query,
+        body: body_start..total_len,
+        total_len,
+        close,
+    })
+}
+
+pub(crate) fn find_subsequence(haystack: &[u8], needle: &[u8]) -> Option<usize> {
+    haystack.windows(needle.len()).position(|w| w == needle)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn head_end_handles_all_line_ending_mixes() {
+        // CRLF throughout.
+        assert_eq!(find_head_end(b"GET / HTTP/1.1\r\nHost: x\r\n\r\nBODY"), Some((24, 27)));
+        // LF throughout.
+        assert_eq!(find_head_end(b"A\nB\n\nrest"), Some((3, 5)));
+        // LF lines closed by a CRLF blank line (old parser accepted it).
+        assert_eq!(find_head_end(b"A\nB\n\r\nrest"), Some((3, 6)));
+        // Incomplete head.
+        assert_eq!(find_head_end(b"GET / HTTP/1.1\r\nHost"), None);
+    }
+
+    #[test]
+    fn partial_request_deadline_trips() {
+        // The stall guard itself (no 10 s wait): a pending request whose
+        // first byte is older than the deadline must be evicted.
+        // checked_sub: Instant is monotonic-since-boot on Linux, and
+        // subtracting past the clock origin panics (fresh containers).
+        let Some(stale) = Instant::now().checked_sub(REQUEST_DEADLINE + Duration::from_millis(10))
+        else {
+            return; // uptime < deadline: cannot fabricate a stale instant
+        };
+        let mut conn = ConnBuf::new();
+        conn.filled = 4; // pretend 4 bytes arrived
+        conn.since = Some(stale);
+        assert!(conn.deadline_exceeded());
+        conn.reset();
+        assert!(!conn.deadline_exceeded());
+    }
+}

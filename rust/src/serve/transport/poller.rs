@@ -1,0 +1,519 @@
+//! Readiness polling behind a small [`Poller`] trait: `epoll` on Linux,
+//! portable `poll(2)` everywhere else on unix (and on Linux under
+//! `LASP_POLLER=poll`, so the fallback stays tested).
+//!
+//! No `libc`/`mio` crates exist in this offline build, so the handful of
+//! syscalls the reactor needs are declared directly as `extern "C"` —
+//! std already links the platform libc, so the symbols resolve at link
+//! time. Everything raw lives in [`sys`]; the rest of the crate only
+//! sees safe wrappers.
+
+use std::io;
+use std::os::fd::RawFd;
+use std::time::Duration;
+
+/// Raw libc declarations (see module docs). Kept minimal: readiness
+/// syscalls, a self-pipe for cross-thread wakeups, and the fd-rlimit
+/// helpers the high-connection bench/tests use.
+pub mod sys {
+    use std::os::raw::{c_int, c_short};
+
+    pub const EPOLL_CTL_ADD: c_int = 1;
+    pub const EPOLL_CTL_DEL: c_int = 2;
+    pub const EPOLL_CTL_MOD: c_int = 3;
+    pub const EPOLLIN: u32 = 0x001;
+    pub const EPOLLOUT: u32 = 0x004;
+    pub const EPOLLERR: u32 = 0x008;
+    pub const EPOLLHUP: u32 = 0x010;
+
+    pub const POLLIN: c_short = 0x001;
+    pub const POLLOUT: c_short = 0x004;
+    pub const POLLERR: c_short = 0x008;
+    pub const POLLHUP: c_short = 0x010;
+    pub const POLLNVAL: c_short = 0x020;
+
+    pub const F_GETFL: c_int = 3;
+    pub const F_SETFL: c_int = 4;
+    #[cfg(target_os = "linux")]
+    pub const O_NONBLOCK: c_int = 0o4000;
+    #[cfg(not(target_os = "linux"))]
+    pub const O_NONBLOCK: c_int = 0x0004;
+
+    /// `epoll_event` carries `__EPOLL_PACKED` on x86 glibc; mirroring the
+    /// layout exactly is what keeps `epoll_wait` writes in bounds.
+    #[repr(C)]
+    #[cfg_attr(any(target_arch = "x86", target_arch = "x86_64"), repr(packed))]
+    #[derive(Clone, Copy)]
+    pub struct epoll_event {
+        pub events: u32,
+        pub u64: u64,
+    }
+
+    #[repr(C)]
+    #[derive(Clone, Copy)]
+    pub struct pollfd {
+        pub fd: c_int,
+        pub events: c_short,
+        pub revents: c_short,
+    }
+
+    #[cfg(target_os = "linux")]
+    pub type nfds_t = std::os::raw::c_ulong;
+    #[cfg(not(target_os = "linux"))]
+    pub type nfds_t = std::os::raw::c_uint;
+
+    #[cfg(target_os = "linux")]
+    pub const RLIMIT_NOFILE: c_int = 7;
+    #[cfg(not(target_os = "linux"))]
+    pub const RLIMIT_NOFILE: c_int = 8;
+
+    #[repr(C)]
+    pub struct rlimit {
+        pub rlim_cur: u64,
+        pub rlim_max: u64,
+    }
+
+    extern "C" {
+        #[cfg(target_os = "linux")]
+        pub fn epoll_create1(flags: c_int) -> c_int;
+        #[cfg(target_os = "linux")]
+        pub fn epoll_ctl(epfd: c_int, op: c_int, fd: c_int, event: *mut epoll_event) -> c_int;
+        #[cfg(target_os = "linux")]
+        pub fn epoll_wait(
+            epfd: c_int,
+            events: *mut epoll_event,
+            maxevents: c_int,
+            timeout: c_int,
+        ) -> c_int;
+        pub fn poll(fds: *mut pollfd, nfds: nfds_t, timeout: c_int) -> c_int;
+        pub fn pipe(fds: *mut c_int) -> c_int;
+        pub fn fcntl(fd: c_int, cmd: c_int, arg: c_int) -> c_int;
+        pub fn read(fd: c_int, buf: *mut u8, count: usize) -> isize;
+        pub fn write(fd: c_int, buf: *const u8, count: usize) -> isize;
+        pub fn close(fd: c_int) -> c_int;
+        pub fn getrlimit(resource: c_int, rlim: *mut rlimit) -> c_int;
+        pub fn setrlimit(resource: c_int, rlim: *const rlimit) -> c_int;
+    }
+}
+
+/// Raise the soft open-file limit to `min(want, hard limit)`. Returns
+/// the resulting soft limit. The 10k-connection bench series and the
+/// idle-connection tests call this so they do not depend on the shell's
+/// `ulimit -n` (CI additionally raises it for the bench step).
+pub fn raise_nofile_limit(want: u64) -> io::Result<u64> {
+    unsafe {
+        let mut lim = sys::rlimit { rlim_cur: 0, rlim_max: 0 };
+        if sys::getrlimit(sys::RLIMIT_NOFILE, &mut lim) != 0 {
+            return Err(io::Error::last_os_error());
+        }
+        let target = want.min(lim.rlim_max);
+        if target > lim.rlim_cur {
+            let new = sys::rlimit { rlim_cur: target, rlim_max: lim.rlim_max };
+            if sys::setrlimit(sys::RLIMIT_NOFILE, &new) != 0 {
+                return Err(io::Error::last_os_error());
+            }
+            return Ok(target);
+        }
+        Ok(lim.rlim_cur)
+    }
+}
+
+/// What a registration wants to be woken for.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Interest {
+    Read,
+    Write,
+}
+
+/// One readiness event delivered by [`Poller::wait`].
+#[derive(Debug, Clone, Copy)]
+pub struct Event {
+    pub token: usize,
+    pub readable: bool,
+    pub writable: bool,
+    /// Error/hangup on the fd; the connection should be torn down after
+    /// a final read attempt drains whatever the peer managed to send.
+    pub hangup: bool,
+}
+
+/// A minimal readiness selector. Level-triggered semantics on both
+/// backends: an event keeps firing while the condition holds, so a loop
+/// that processes partially and returns is never starved.
+pub trait Poller: Send {
+    fn add(&mut self, fd: RawFd, token: usize, interest: Interest) -> io::Result<()>;
+    fn modify(&mut self, fd: RawFd, token: usize, interest: Interest) -> io::Result<()>;
+    fn remove(&mut self, fd: RawFd) -> io::Result<()>;
+    /// Wait up to `timeout` and append readiness events to `out`
+    /// (cleared first). Returns the number of events delivered.
+    fn wait(&mut self, out: &mut Vec<Event>, timeout: Duration) -> io::Result<usize>;
+    fn name(&self) -> &'static str;
+}
+
+/// Build the platform-preferred poller: epoll on Linux (unless
+/// `LASP_POLLER=poll` forces the fallback), `poll(2)` elsewhere.
+pub fn new_poller() -> io::Result<Box<dyn Poller>> {
+    #[cfg(target_os = "linux")]
+    {
+        if std::env::var("LASP_POLLER").map(|v| v == "poll").unwrap_or(false) {
+            return Ok(Box::new(PollPoller::new()));
+        }
+        return Ok(Box::new(EpollPoller::new()?));
+    }
+    #[allow(unreachable_code)]
+    Ok(Box::new(PollPoller::new()))
+}
+
+/// Set `O_NONBLOCK` on a raw fd (pipes; sockets use std's setter).
+fn set_nonblocking(fd: RawFd) -> io::Result<()> {
+    unsafe {
+        let flags = sys::fcntl(fd, sys::F_GETFL, 0);
+        if flags < 0 {
+            return Err(io::Error::last_os_error());
+        }
+        if sys::fcntl(fd, sys::F_SETFL, flags | sys::O_NONBLOCK) < 0 {
+            return Err(io::Error::last_os_error());
+        }
+    }
+    Ok(())
+}
+
+fn timeout_ms(timeout: Duration) -> i32 {
+    // Round up so a 1ns timeout does not become a busy-loop zero.
+    let ms = timeout.as_millis().min(i32::MAX as u128 - 1) as i32;
+    ms + i32::from(timeout.subsec_nanos() % 1_000_000 != 0)
+}
+
+/// Linux epoll backend.
+#[cfg(target_os = "linux")]
+pub struct EpollPoller {
+    epfd: RawFd,
+    /// Reused event buffer for `epoll_wait` (no per-wakeup allocation).
+    events: Vec<sys::epoll_event>,
+}
+
+#[cfg(target_os = "linux")]
+impl EpollPoller {
+    pub fn new() -> io::Result<EpollPoller> {
+        let epfd = unsafe { sys::epoll_create1(0) };
+        if epfd < 0 {
+            return Err(io::Error::last_os_error());
+        }
+        Ok(EpollPoller { epfd, events: vec![sys::epoll_event { events: 0, u64: 0 }; 256] })
+    }
+
+    fn ctl(&self, op: i32, fd: RawFd, token: usize, interest: Interest) -> io::Result<()> {
+        let events = match interest {
+            Interest::Read => sys::EPOLLIN,
+            Interest::Write => sys::EPOLLOUT,
+        };
+        let mut ev = sys::epoll_event { events, u64: token as u64 };
+        if unsafe { sys::epoll_ctl(self.epfd, op, fd, &mut ev) } != 0 {
+            return Err(io::Error::last_os_error());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(target_os = "linux")]
+impl Drop for EpollPoller {
+    fn drop(&mut self) {
+        unsafe { sys::close(self.epfd) };
+    }
+}
+
+#[cfg(target_os = "linux")]
+impl Poller for EpollPoller {
+    fn add(&mut self, fd: RawFd, token: usize, interest: Interest) -> io::Result<()> {
+        self.ctl(sys::EPOLL_CTL_ADD, fd, token, interest)
+    }
+
+    fn modify(&mut self, fd: RawFd, token: usize, interest: Interest) -> io::Result<()> {
+        self.ctl(sys::EPOLL_CTL_MOD, fd, token, interest)
+    }
+
+    fn remove(&mut self, fd: RawFd) -> io::Result<()> {
+        let mut ev = sys::epoll_event { events: 0, u64: 0 };
+        if unsafe { sys::epoll_ctl(self.epfd, sys::EPOLL_CTL_DEL, fd, &mut ev) } != 0 {
+            return Err(io::Error::last_os_error());
+        }
+        Ok(())
+    }
+
+    fn wait(&mut self, out: &mut Vec<Event>, timeout: Duration) -> io::Result<usize> {
+        out.clear();
+        let n = unsafe {
+            sys::epoll_wait(
+                self.epfd,
+                self.events.as_mut_ptr(),
+                self.events.len() as i32,
+                timeout_ms(timeout),
+            )
+        };
+        if n < 0 {
+            let err = io::Error::last_os_error();
+            if err.kind() == io::ErrorKind::Interrupted {
+                return Ok(0);
+            }
+            return Err(err);
+        }
+        for ev in &self.events[..n as usize] {
+            // Copy out of the (possibly packed) struct before use.
+            let bits = ev.events;
+            let token = ev.u64 as usize;
+            out.push(Event {
+                token,
+                readable: bits & sys::EPOLLIN != 0,
+                writable: bits & sys::EPOLLOUT != 0,
+                hangup: bits & (sys::EPOLLERR | sys::EPOLLHUP) != 0,
+            });
+        }
+        Ok(out.len())
+    }
+
+    fn name(&self) -> &'static str {
+        "epoll"
+    }
+}
+
+/// Portable `poll(2)` backend — keeps macOS (and `LASP_POLLER=poll`
+/// test runs) working. O(n) per wait, which is fine for its role as the
+/// correctness fallback; the 10k-connection path runs on epoll.
+pub struct PollPoller {
+    /// Registered fds in insertion order; `pollfds` mirrors this layout
+    /// and both vecs are reused across waits (no steady-state growth).
+    tokens: Vec<(RawFd, usize)>,
+    pollfds: Vec<sys::pollfd>,
+}
+
+impl PollPoller {
+    pub fn new() -> PollPoller {
+        PollPoller { tokens: Vec::with_capacity(64), pollfds: Vec::with_capacity(64) }
+    }
+}
+
+impl Default for PollPoller {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Poller for PollPoller {
+    fn add(&mut self, fd: RawFd, token: usize, interest: Interest) -> io::Result<()> {
+        let events = match interest {
+            Interest::Read => sys::POLLIN,
+            Interest::Write => sys::POLLOUT,
+        };
+        self.tokens.push((fd, token));
+        self.pollfds.push(sys::pollfd { fd, events, revents: 0 });
+        Ok(())
+    }
+
+    fn modify(&mut self, fd: RawFd, token: usize, interest: Interest) -> io::Result<()> {
+        let Some(i) = self.tokens.iter().position(|&(f, _)| f == fd) else {
+            return Err(io::Error::new(io::ErrorKind::NotFound, "fd not registered"));
+        };
+        self.tokens[i].1 = token;
+        self.pollfds[i].events = match interest {
+            Interest::Read => sys::POLLIN,
+            Interest::Write => sys::POLLOUT,
+        };
+        Ok(())
+    }
+
+    fn remove(&mut self, fd: RawFd) -> io::Result<()> {
+        let Some(i) = self.tokens.iter().position(|&(f, _)| f == fd) else {
+            return Err(io::Error::new(io::ErrorKind::NotFound, "fd not registered"));
+        };
+        self.tokens.swap_remove(i);
+        self.pollfds.swap_remove(i);
+        Ok(())
+    }
+
+    fn wait(&mut self, out: &mut Vec<Event>, timeout: Duration) -> io::Result<usize> {
+        out.clear();
+        let n = unsafe {
+            sys::poll(
+                self.pollfds.as_mut_ptr(),
+                self.pollfds.len() as sys::nfds_t,
+                timeout_ms(timeout),
+            )
+        };
+        if n < 0 {
+            let err = io::Error::last_os_error();
+            if err.kind() == io::ErrorKind::Interrupted {
+                return Ok(0);
+            }
+            return Err(err);
+        }
+        for (pfd, &(_, token)) in self.pollfds.iter().zip(&self.tokens) {
+            let r = pfd.revents;
+            if r == 0 {
+                continue;
+            }
+            out.push(Event {
+                token,
+                readable: r & sys::POLLIN != 0,
+                writable: r & sys::POLLOUT != 0,
+                hangup: r & (sys::POLLERR | sys::POLLHUP | sys::POLLNVAL) != 0,
+            });
+        }
+        Ok(out.len())
+    }
+
+    fn name(&self) -> &'static str {
+        "poll"
+    }
+}
+
+/// A self-pipe wakeup: the read end is registered in the loop's poller,
+/// the write end ([`Waker`]) is shared with the accept thread and the
+/// shutdown path. Writing one byte makes the sleeping loop's `wait`
+/// return immediately.
+pub struct WakePipe {
+    rfd: RawFd,
+    waker: std::sync::Arc<Waker>,
+}
+
+pub struct Waker {
+    wfd: RawFd,
+}
+
+impl Waker {
+    /// Nudge the owning event loop (best-effort: a full pipe already
+    /// guarantees a pending wakeup).
+    pub fn wake(&self) {
+        let byte = 1u8;
+        unsafe { sys::write(self.wfd, &byte, 1) };
+    }
+}
+
+impl Drop for Waker {
+    fn drop(&mut self) {
+        unsafe { sys::close(self.wfd) };
+    }
+}
+
+impl WakePipe {
+    pub fn new() -> io::Result<WakePipe> {
+        let mut fds = [0i32; 2];
+        if unsafe { sys::pipe(fds.as_mut_ptr()) } != 0 {
+            return Err(io::Error::last_os_error());
+        }
+        set_nonblocking(fds[0])?;
+        set_nonblocking(fds[1])?;
+        Ok(WakePipe { rfd: fds[0], waker: std::sync::Arc::new(Waker { wfd: fds[1] }) })
+    }
+
+    pub fn read_fd(&self) -> RawFd {
+        self.rfd
+    }
+
+    pub fn waker(&self) -> std::sync::Arc<Waker> {
+        self.waker.clone()
+    }
+
+    /// Drain pending wakeup bytes (nonblocking).
+    pub fn drain(&self) {
+        let mut buf = [0u8; 64];
+        loop {
+            let n = unsafe { sys::read(self.rfd, buf.as_mut_ptr(), buf.len()) };
+            if n <= 0 || (n as usize) < buf.len() {
+                return;
+            }
+        }
+    }
+}
+
+impl Drop for WakePipe {
+    fn drop(&mut self) {
+        unsafe { sys::close(self.rfd) };
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::{Read as _, Write as _};
+    use std::net::{TcpListener, TcpStream};
+    use std::os::fd::AsRawFd;
+
+    fn connected_pair() -> (TcpStream, TcpStream) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let a = TcpStream::connect(listener.local_addr().unwrap()).unwrap();
+        let (b, _) = listener.accept().unwrap();
+        (a, b)
+    }
+
+    fn exercise(poller: &mut dyn Poller) {
+        let (mut a, b) = connected_pair();
+        b.set_nonblocking(true).unwrap();
+        poller.add(b.as_raw_fd(), 7, Interest::Read).unwrap();
+
+        // Nothing readable yet: a short wait returns empty.
+        let mut events = Vec::new();
+        poller.wait(&mut events, Duration::from_millis(10)).unwrap();
+        assert!(events.iter().all(|e| !e.readable), "{}: spurious readable", poller.name());
+
+        a.write_all(b"ping").unwrap();
+        poller.wait(&mut events, Duration::from_millis(1000)).unwrap();
+        assert!(
+            events.iter().any(|e| e.token == 7 && e.readable),
+            "{}: readable event missing",
+            poller.name()
+        );
+        let mut buf = [0u8; 16];
+        let n = (&b).read(&mut buf).unwrap();
+        assert_eq!(&buf[..n], b"ping");
+
+        // Write interest on an idle socket fires immediately.
+        poller.modify(b.as_raw_fd(), 9, Interest::Write).unwrap();
+        poller.wait(&mut events, Duration::from_millis(1000)).unwrap();
+        assert!(
+            events.iter().any(|e| e.token == 9 && e.writable),
+            "{}: writable event missing",
+            poller.name()
+        );
+
+        poller.remove(b.as_raw_fd()).unwrap();
+        poller.wait(&mut events, Duration::from_millis(10)).unwrap();
+        assert!(events.is_empty(), "{}: events after removal", poller.name());
+    }
+
+    #[test]
+    fn poll_backend_delivers_readiness() {
+        exercise(&mut PollPoller::new());
+    }
+
+    #[cfg(target_os = "linux")]
+    #[test]
+    fn epoll_backend_delivers_readiness() {
+        exercise(&mut EpollPoller::new().unwrap());
+    }
+
+    #[test]
+    fn wake_pipe_wakes_a_sleeping_poller() {
+        let pipe = WakePipe::new().unwrap();
+        let mut poller = PollPoller::new();
+        poller.add(pipe.read_fd(), 0, Interest::Read).unwrap();
+        let waker = pipe.waker();
+        let t = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(30));
+            waker.wake();
+        });
+        let mut events = Vec::new();
+        let t0 = std::time::Instant::now();
+        poller.wait(&mut events, Duration::from_secs(5)).unwrap();
+        assert!(events.iter().any(|e| e.token == 0 && e.readable));
+        assert!(t0.elapsed() < Duration::from_secs(2), "wakeup did not interrupt the wait");
+        pipe.drain();
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn nofile_limit_raises_or_reports() {
+        // Must not error on any sane system; raising to the current soft
+        // limit is a no-op that still returns the active value.
+        let cur = raise_nofile_limit(64).expect("getrlimit works");
+        assert!(cur >= 64 || cur > 0);
+    }
+}

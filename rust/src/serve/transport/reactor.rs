@@ -1,0 +1,775 @@
+//! The event-driven transport: N event-loop threads, each owning a
+//! poller, a slab of per-connection state machines, and a timer wheel.
+//!
+//! One accept thread (blocking accept keeps the chaos accept-drop fault
+//! point byte-for-byte where the legacy transport had it) distributes
+//! accepted sockets round-robin across the loops via per-loop inboxes +
+//! wake pipes. Each loop then drives its connections entirely by
+//! readiness:
+//!
+//! ```text
+//!            readable                 complete request
+//!   Reading ──────────▶ fill + parse ─────────────────▶ handle inline
+//!      ▲                     │                               │
+//!      │    flushed,         │ WouldBlock (socket dry)       │ write
+//!      │    pipeline empty   ▼                               ▼
+//!      └──────────── Writing (parked on EPOLLOUT) ◀── short write
+//!                             │
+//!                             │ after a malformed request's error
+//!                             ▼   response is flushed
+//!                         Draining (linger, discard reads, timer)
+//! ```
+//!
+//! "Handling" is synchronous and inline on the loop thread: suggest /
+//! report handlers are microsecond-scale CPU work, so parking the loop
+//! in the handler is cheaper than any cross-thread hand-off — and it
+//! makes the batch arena and the response/frame buffers genuinely
+//! per-event-loop (the loop serves one request at a time, so one
+//! [`ResponseBuf`] and one frame buffer serve every connection on it).
+//!
+//! The 408 slow-loris deadline and the post-error linger are enforced by
+//! a coarse per-loop timer wheel (`TimerWheel`): 64 slots × 250 ms
+//! covers the 10 s request deadline with one `Vec` push per armed
+//! connection and lazy cancellation — a fired entry re-checks the
+//! connection's real deadline and re-arms if it moved, so consuming a
+//! request never has to hunt down its wheel entry.
+
+use super::parser::{self, ConnBuf, TryParse, LINGER, REQUEST_DEADLINE};
+use super::poller::{self, Event, Interest, Poller, WakePipe, Waker};
+use super::{
+    assemble_frame, dispatch, HttpHandler, Request, ResponseBuf, TransportOptions, TransportStats,
+};
+use crate::obs::{EventKind, Recorder};
+use anyhow::{Context as _, Result};
+use std::collections::VecDeque;
+use std::io::{self, Read as _, Write as _};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::os::fd::AsRawFd;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Idle loops wake at least this often to notice shutdown and advance
+/// the timer wheel.
+const POLL_TIMEOUT: Duration = Duration::from_millis(100);
+
+/// Timer-wheel geometry: 64 slots × 250 ms ≈ 16 s horizon, comfortably
+/// past [`REQUEST_DEADLINE`] (10 s); anything longer cascades through
+/// the lazy re-arm on fire.
+const WHEEL_SLOTS: usize = 64;
+const WHEEL_TICK: Duration = Duration::from_millis(250);
+
+/// What a connection is waiting for.
+#[derive(Clone, Copy)]
+enum ConnState {
+    /// Waiting for request bytes (poller interest: readable).
+    Reading,
+    /// A response did not fit the socket buffer; parked on writable with
+    /// the remainder staged in `Conn::pending`. Reads pause while
+    /// parked — natural per-connection backpressure for pipelining.
+    Writing { then: AfterWrite },
+    /// Error response flushed for a malformed request; linger briefly
+    /// discarding reads so closing cannot RST the response away.
+    Draining,
+}
+
+/// What to do once a parked write finishes flushing.
+#[derive(Clone, Copy, PartialEq)]
+enum AfterWrite {
+    /// Keep serving (process buffered pipelined requests, then read).
+    Resume,
+    /// Enter [`ConnState::Draining`] (the flushed frame was an error
+    /// response to a malformed request).
+    Linger,
+    /// Close immediately (`Connection: close` or EOF mid-request).
+    Close,
+}
+
+/// Outcome of driving one connection's state machine.
+enum Drive {
+    Keep,
+    Close,
+}
+
+enum WriteOutcome {
+    Flushed,
+    Parked,
+    Failed,
+}
+
+/// One connection owned by an event loop.
+struct Conn {
+    stream: TcpStream,
+    buf: ConnBuf,
+    state: ConnState,
+    /// Unflushed response bytes (only populated while parked in
+    /// `Writing`); `sent` is the flushed prefix.
+    pending: Vec<u8>,
+    sent: usize,
+    /// Loop-unique id so stale timer entries cannot touch a different
+    /// connection after slab-slot reuse.
+    generation: u64,
+    /// Requests served on this connection (reported in `conn_close`).
+    requests: u64,
+    /// A timer entry for this connection is in the wheel.
+    timer_armed: bool,
+    /// Current poller registration, to skip redundant `modify` calls.
+    interest: Interest,
+}
+
+/// Coarse hashed timer wheel; entries are `(token, generation)` and
+/// cancellation is lazy (fired entries re-check the connection).
+struct TimerWheel {
+    slots: Vec<Vec<(usize, u64)>>,
+    /// Slot index the next advance starts from.
+    cursor: usize,
+    /// Wall-clock anchor of `cursor`'s tick boundary.
+    anchor: Instant,
+}
+
+impl TimerWheel {
+    fn new(now: Instant) -> TimerWheel {
+        TimerWheel { slots: (0..WHEEL_SLOTS).map(|_| Vec::new()).collect(), cursor: 0, anchor: now }
+    }
+
+    /// Arm `token` to fire at `deadline` (clamped to the wheel horizon;
+    /// the lazy re-arm on fire covers anything longer).
+    fn schedule(&mut self, now: Instant, deadline: Instant, token: usize, generation: u64) {
+        let delay = deadline.saturating_duration_since(now);
+        let ticks =
+            ((delay.as_millis() / WHEEL_TICK.as_millis()) as usize + 1).min(WHEEL_SLOTS - 1);
+        let slot = (self.cursor + ticks) % WHEEL_SLOTS;
+        self.slots[slot].push((token, generation));
+    }
+
+    /// Move the wheel up to `now`, draining due entries into `fired`.
+    fn advance(&mut self, now: Instant, fired: &mut Vec<(usize, u64)>) {
+        while now.saturating_duration_since(self.anchor) >= WHEEL_TICK {
+            self.anchor += WHEEL_TICK;
+            self.cursor = (self.cursor + 1) % WHEEL_SLOTS;
+            fired.append(&mut self.slots[self.cursor]);
+        }
+    }
+}
+
+/// Sockets handed from the accept thread to one event loop.
+type Inbox = Arc<Mutex<VecDeque<TcpStream>>>;
+
+/// A running reactor server: accept thread + N event-loop threads.
+pub struct ReactorServer {
+    addr: SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    stats: Arc<TransportStats>,
+    wakers: Vec<Arc<Waker>>,
+    accept_thread: JoinHandle<()>,
+    loops: Vec<JoinHandle<()>>,
+}
+
+impl ReactorServer {
+    /// Start serving `listener` with `opts.threads` event loops.
+    pub fn start(
+        listener: TcpListener,
+        handler: HttpHandler,
+        opts: TransportOptions,
+    ) -> Result<ReactorServer> {
+        let n_loops = opts.threads;
+        assert!(n_loops > 0);
+        let stats = opts.stats;
+        let chaos = opts.chaos;
+        let recorder = opts.recorder;
+        let addr = listener.local_addr().context("reading bound address")?;
+        let shutdown = Arc::new(AtomicBool::new(false));
+        stats.event_loops.store(n_loops as u64, Ordering::Relaxed);
+
+        let mut loops = Vec::with_capacity(n_loops);
+        let mut wakers = Vec::with_capacity(n_loops);
+        let mut inboxes: Vec<Inbox> = Vec::with_capacity(n_loops);
+        for loop_idx in 0..n_loops {
+            let wake = WakePipe::new().context("creating event-loop wake pipe")?;
+            wakers.push(wake.waker());
+            let inbox: Inbox = Arc::new(Mutex::new(VecDeque::new()));
+            inboxes.push(inbox.clone());
+            let poller = poller::new_poller().context("creating poller")?;
+            let mut el = EventLoop::new(
+                loop_idx,
+                poller,
+                wake,
+                inbox,
+                handler.clone(),
+                shutdown.clone(),
+                stats.clone(),
+                recorder.clone(),
+            )?;
+            loops.push(std::thread::spawn(move || el.run()));
+        }
+
+        let accept_thread = {
+            let shutdown = shutdown.clone();
+            let stats = stats.clone();
+            let wakers = wakers.clone();
+            std::thread::spawn(move || {
+                let mut next = 0usize;
+                for conn in listener.incoming() {
+                    if shutdown.load(Ordering::SeqCst) {
+                        return;
+                    }
+                    let Ok(stream) = conn else { continue };
+                    if let Some(c) = &chaos {
+                        if c.accept_drop() {
+                            // Close before a byte is served; the client
+                            // sees a reset, as on a flaky edge link.
+                            drop(stream);
+                            continue;
+                        }
+                    }
+                    let _ = stream.set_nodelay(true);
+                    if stream.set_nonblocking(true).is_err() {
+                        continue;
+                    }
+                    stats.connections.fetch_add(1, Ordering::Relaxed);
+                    // Round-robin across loops; the wake byte interrupts
+                    // the target loop's poller wait.
+                    let i = next % wakers.len();
+                    next = next.wrapping_add(1);
+                    match inboxes[i].lock() {
+                        Ok(mut q) => q.push_back(stream),
+                        Err(_) => return,
+                    }
+                    wakers[i].wake();
+                }
+            })
+        };
+
+        Ok(ReactorServer { addr, shutdown, stats, wakers, accept_thread, loops })
+    }
+
+    /// The bound address (ephemeral ports resolved).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Transport counters (connections, requests, alloc events, reactor
+    /// gauges).
+    pub fn stats(&self) -> Arc<TransportStats> {
+        self.stats.clone()
+    }
+
+    /// Stop accepting, close every connection, join all threads.
+    pub fn stop(self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        // Unblock the accept thread, then every sleeping event loop.
+        let _ = TcpStream::connect(self.addr);
+        for w in &self.wakers {
+            w.wake();
+        }
+        let _ = self.accept_thread.join();
+        for l in self.loops {
+            let _ = l.join();
+        }
+    }
+
+    /// Block until the server exits on its own (never, in practice) —
+    /// used by the `lasp serve` CLI to park the main thread.
+    pub fn join(self) {
+        let _ = self.accept_thread.join();
+        for l in self.loops {
+            let _ = l.join();
+        }
+    }
+}
+
+/// What a fired timer entry turned out to mean, decided while the
+/// connection is borrowed and acted on after the borrow ends.
+enum TimerAction {
+    Nothing,
+    Close,
+    Evict408,
+    Rearm(Instant),
+}
+
+/// Per-thread reactor state. The response/frame buffers (and, via
+/// `thread_local!`, the service's batch arena) are owned by the loop —
+/// one of each per event loop, not per connection.
+struct EventLoop {
+    idx: usize,
+    poller: Box<dyn Poller>,
+    wake: WakePipe,
+    inbox: Inbox,
+    handler: HttpHandler,
+    shutdown: Arc<AtomicBool>,
+    stats: Arc<TransportStats>,
+    recorder: Option<Arc<Recorder>>,
+    /// Connection slab: `token = slot + 1` (token 0 is the wake pipe).
+    conns: Vec<Option<Conn>>,
+    free: Vec<usize>,
+    /// Loop-unique generation source (never reused, unlike slots).
+    next_generation: u64,
+    wheel: TimerWheel,
+    resp: ResponseBuf,
+    frame: Vec<u8>,
+    /// Reused scratch for poller events and fired timers.
+    events: Vec<Event>,
+    fired: Vec<(usize, u64)>,
+}
+
+impl EventLoop {
+    #[allow(clippy::too_many_arguments)]
+    fn new(
+        idx: usize,
+        mut poller: Box<dyn Poller>,
+        wake: WakePipe,
+        inbox: Inbox,
+        handler: HttpHandler,
+        shutdown: Arc<AtomicBool>,
+        stats: Arc<TransportStats>,
+        recorder: Option<Arc<Recorder>>,
+    ) -> Result<EventLoop> {
+        poller.add(wake.read_fd(), 0, Interest::Read).context("registering wake pipe")?;
+        Ok(EventLoop {
+            idx,
+            poller,
+            wake,
+            inbox,
+            handler,
+            shutdown,
+            stats,
+            recorder,
+            conns: Vec::new(),
+            free: Vec::new(),
+            next_generation: 0,
+            wheel: TimerWheel::new(Instant::now()),
+            resp: ResponseBuf::new(),
+            frame: Vec::with_capacity(1024),
+            events: Vec::with_capacity(256),
+            fired: Vec::new(),
+        })
+    }
+
+    fn run(&mut self) {
+        loop {
+            let mut events = std::mem::take(&mut self.events);
+            let waited = self.poller.wait(&mut events, POLL_TIMEOUT);
+            self.stats.wakeups.fetch_add(1, Ordering::Relaxed);
+            if self.shutdown.load(Ordering::SeqCst) || waited.is_err() {
+                // Shutdown, or the poller itself failed (unrecoverable
+                // for this loop — drop its connections rather than spin).
+                self.close_all();
+                return;
+            }
+            for &ev in &events {
+                if ev.token == 0 {
+                    self.wake.drain();
+                    continue;
+                }
+                let slot = ev.token - 1;
+                if matches!(self.drive(slot, ev), Drive::Close) {
+                    self.close(slot);
+                }
+            }
+            events.clear();
+            self.events = events;
+
+            self.adopt_new_conns();
+            self.fire_timers();
+        }
+    }
+
+    /// Pull accepted sockets out of this loop's inbox into the slab.
+    fn adopt_new_conns(&mut self) {
+        loop {
+            let stream = match self.inbox.lock() {
+                Ok(mut q) => q.pop_front(),
+                Err(_) => return,
+            };
+            let Some(stream) = stream else { return };
+            let slot = match self.free.pop() {
+                Some(s) => s,
+                None => {
+                    self.conns.push(None);
+                    self.conns.len() - 1
+                }
+            };
+            self.next_generation += 1;
+            let fd = stream.as_raw_fd();
+            if self.poller.add(fd, slot + 1, Interest::Read).is_err() {
+                self.free.push(slot);
+                continue;
+            }
+            self.conns[slot] = Some(Conn {
+                stream,
+                buf: ConnBuf::new(),
+                state: ConnState::Reading,
+                pending: Vec::new(),
+                sent: 0,
+                generation: self.next_generation,
+                requests: 0,
+                timer_armed: false,
+                interest: Interest::Read,
+            });
+            self.stats.conns_open.fetch_add(1, Ordering::Relaxed);
+            if let Some(r) = &self.recorder {
+                r.record(EventKind::ConnOpen, self.idx as u64, (slot + 1) as u64, 0);
+            }
+        }
+    }
+
+    /// Advance the wheel and act on connections whose deadline really
+    /// passed (the lazy re-check re-arms deadlines that moved).
+    fn fire_timers(&mut self) {
+        let now = Instant::now();
+        let mut fired = std::mem::take(&mut self.fired);
+        self.wheel.advance(now, &mut fired);
+        for &(token, generation) in &fired {
+            let slot = token - 1;
+            let action = {
+                let Some(conn) = self.conns.get_mut(slot).and_then(|c| c.as_mut()) else {
+                    continue;
+                };
+                if conn.generation != generation {
+                    continue; // slot was reused; stale entry
+                }
+                match conn.state {
+                    // Linger elapsed: the error response has had its
+                    // window to be read. Close for real.
+                    ConnState::Draining => TimerAction::Close,
+                    ConnState::Reading => match conn.buf.pending_since() {
+                        Some(since) => {
+                            let due = since + REQUEST_DEADLINE;
+                            if now >= due {
+                                // Slow-loris eviction: the partial
+                                // request overstayed its deadline.
+                                TimerAction::Evict408
+                            } else {
+                                // Deadline moved (request completed and a
+                                // newer one started): follow it.
+                                TimerAction::Rearm(due)
+                            }
+                        }
+                        None => {
+                            conn.timer_armed = false;
+                            TimerAction::Nothing
+                        }
+                    },
+                    // Reads pause while parked on writable, so the
+                    // request clock cannot be enforced here; keep
+                    // patrolling until the write path unblocks (the
+                    // read path re-checks the deadline itself).
+                    ConnState::Writing { .. } => match conn.buf.pending_since() {
+                        Some(_) => TimerAction::Rearm(now + WHEEL_TICK),
+                        None => {
+                            conn.timer_armed = false;
+                            TimerAction::Nothing
+                        }
+                    },
+                }
+            };
+            match action {
+                TimerAction::Nothing => {}
+                TimerAction::Close => self.close(slot),
+                TimerAction::Rearm(due) => self.wheel.schedule(now, due, token, generation),
+                TimerAction::Evict408 => {
+                    if matches!(self.reject(slot, 408, "request timeout"), Drive::Close) {
+                        self.close(slot);
+                    }
+                }
+            }
+        }
+        fired.clear();
+        self.fired = fired;
+    }
+
+    /// Route one readiness event through the connection's state machine.
+    fn drive(&mut self, slot: usize, ev: Event) -> Drive {
+        let Some(conn) = self.conns.get_mut(slot).and_then(|c| c.as_mut()) else {
+            return Drive::Keep; // stale event for an already-closed slot
+        };
+        match conn.state {
+            ConnState::Reading => {
+                if ev.readable || ev.hangup {
+                    self.drive_reading(slot)
+                } else {
+                    Drive::Keep
+                }
+            }
+            ConnState::Writing { then } => {
+                if !(ev.writable || ev.hangup) {
+                    return Drive::Keep;
+                }
+                match flush_pending(conn) {
+                    Ok(true) => {
+                        conn.pending.clear();
+                        conn.sent = 0;
+                        match then {
+                            AfterWrite::Close => Drive::Close,
+                            AfterWrite::Linger => self.enter_draining(slot),
+                            AfterWrite::Resume => {
+                                conn.state = ConnState::Reading;
+                                self.set_interest(slot, Interest::Read);
+                                // Serve any pipelined requests that were
+                                // buffered while parked.
+                                self.drive_reading(slot)
+                            }
+                        }
+                    }
+                    Ok(false) => Drive::Keep, // still blocked
+                    Err(_) => Drive::Close,
+                }
+            }
+            ConnState::Draining => {
+                // Discard whatever the client is still sending; EOF or
+                // error ends the linger early.
+                let mut scratch = [0u8; 1024];
+                loop {
+                    match (&conn.stream).read(&mut scratch) {
+                        Ok(0) => return Drive::Close,
+                        Ok(_) => {}
+                        Err(e) if e.kind() == io::ErrorKind::WouldBlock => return Drive::Keep,
+                        Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+                        Err(_) => return Drive::Close,
+                    }
+                }
+            }
+        }
+    }
+
+    /// Fill + parse + serve until the socket runs dry, a response parks
+    /// on writable, or the connection ends.
+    fn drive_reading(&mut self, slot: usize) -> Drive {
+        loop {
+            // Serve every complete request already buffered.
+            loop {
+                let Some(conn) = self.conns.get_mut(slot).and_then(|c| c.as_mut()) else {
+                    return Drive::Keep;
+                };
+                if conn.buf.len() == 0 {
+                    break;
+                }
+                match parser::try_parse(conn.buf.window()) {
+                    TryParse::Complete(p) => {
+                        self.stats.requests.fetch_add(1, Ordering::Relaxed);
+                        conn.requests += 1;
+                        let close = {
+                            let base = conn.buf.start;
+                            let data = &conn.buf.data[base..conn.buf.filled];
+                            // The head was validated as UTF-8 by try_parse.
+                            let req = Request {
+                                method: std::str::from_utf8(&data[p.method.clone()]).unwrap_or(""),
+                                path: std::str::from_utf8(&data[p.path.clone()]).unwrap_or(""),
+                                query: std::str::from_utf8(&data[p.query.clone()]).unwrap_or(""),
+                                body: &data[p.body.clone()],
+                                close: p.close,
+                            };
+                            dispatch(&self.handler, &req, &mut self.resp, &self.stats);
+                            req.close
+                        };
+                        conn.buf.consume(p.total_len);
+                        assemble_frame(&mut self.frame, &self.resp, !close, &self.stats);
+                        let then = if close { AfterWrite::Close } else { AfterWrite::Resume };
+                        match self.write_frame(slot, then) {
+                            WriteOutcome::Flushed if close => return Drive::Close,
+                            WriteOutcome::Flushed => continue,
+                            WriteOutcome::Parked => return Drive::Keep,
+                            WriteOutcome::Failed => return Drive::Close,
+                        }
+                    }
+                    TryParse::Bad(status, msg) => {
+                        if status == 431 {
+                            self.stats.rejected_431.fetch_add(1, Ordering::Relaxed);
+                        }
+                        return self.reject(slot, status, msg);
+                    }
+                    TryParse::NeedMore => {
+                        if conn.buf.deadline_exceeded() {
+                            return self.reject(slot, 408, "request timeout");
+                        }
+                        break;
+                    }
+                }
+            }
+
+            // Need more bytes from the socket.
+            let Some(conn) = self.conns.get_mut(slot).and_then(|c| c.as_mut()) else {
+                return Drive::Keep;
+            };
+            match conn.buf.fill(&mut (&conn.stream), &self.stats) {
+                Ok(0) => {
+                    return if conn.buf.len() == 0 {
+                        Drive::Close
+                    } else {
+                        // EOF mid-request: answer 400, then close (the
+                        // peer already shut its write side; no linger).
+                        self.reject_then_close(slot, 400, "eof mid-request")
+                    };
+                }
+                Ok(_) => {
+                    // The first byte of a pending request arms the 408
+                    // deadline in the wheel (once; the fired entry
+                    // follows the deadline as requests complete).
+                    if !conn.timer_armed {
+                        if let Some(since) = conn.buf.pending_since() {
+                            conn.timer_armed = true;
+                            let generation = conn.generation;
+                            let now = Instant::now();
+                            self.wheel.schedule(
+                                now,
+                                since + REQUEST_DEADLINE,
+                                slot + 1,
+                                generation,
+                            );
+                        }
+                    }
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => return Drive::Keep,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(_) => return Drive::Close,
+            }
+        }
+    }
+
+    /// Serve an error response for a protocol violation, then linger.
+    fn reject(&mut self, slot: usize, status: u16, msg: &'static str) -> Drive {
+        self.resp.reset();
+        self.resp.error(status, msg);
+        assemble_frame(&mut self.frame, &self.resp, false, &self.stats);
+        match self.write_frame(slot, AfterWrite::Linger) {
+            WriteOutcome::Flushed => self.enter_draining(slot),
+            WriteOutcome::Parked => Drive::Keep,
+            WriteOutcome::Failed => Drive::Close,
+        }
+    }
+
+    /// Error response then immediate close (peer already sent EOF).
+    fn reject_then_close(&mut self, slot: usize, status: u16, msg: &'static str) -> Drive {
+        self.resp.reset();
+        self.resp.error(status, msg);
+        assemble_frame(&mut self.frame, &self.resp, false, &self.stats);
+        match self.write_frame(slot, AfterWrite::Close) {
+            WriteOutcome::Flushed => Drive::Close,
+            WriteOutcome::Parked => Drive::Keep,
+            WriteOutcome::Failed => Drive::Close,
+        }
+    }
+
+    /// Write the assembled frame; on a short write park the connection
+    /// on writable with the remainder staged.
+    fn write_frame(&mut self, slot: usize, then: AfterWrite) -> WriteOutcome {
+        let Some(conn) = self.conns.get_mut(slot).and_then(|c| c.as_mut()) else {
+            return WriteOutcome::Failed;
+        };
+        let mut off = 0usize;
+        while off < self.frame.len() {
+            match (&conn.stream).write(&self.frame[off..]) {
+                Ok(0) => return WriteOutcome::Failed,
+                Ok(n) => off += n,
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                    // Stage the remainder and park on writable. The
+                    // staging copy only happens under backpressure —
+                    // never on the steady-state hot path.
+                    conn.pending.clear();
+                    conn.pending.extend_from_slice(&self.frame[off..]);
+                    conn.sent = 0;
+                    conn.state = ConnState::Writing { then };
+                    self.stats.write_backpressure.fetch_add(1, Ordering::Relaxed);
+                    self.set_interest(slot, Interest::Write);
+                    return WriteOutcome::Parked;
+                }
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+                Err(_) => return WriteOutcome::Failed,
+            }
+        }
+        WriteOutcome::Flushed
+    }
+
+    /// Switch to the lingering-close state: interest back to readable
+    /// (to observe EOF), reads discarded, wheel closes us after
+    /// [`LINGER`].
+    fn enter_draining(&mut self, slot: usize) -> Drive {
+        let Some(conn) = self.conns.get_mut(slot).and_then(|c| c.as_mut()) else {
+            return Drive::Keep;
+        };
+        conn.state = ConnState::Draining;
+        let generation = conn.generation;
+        let now = Instant::now();
+        self.wheel.schedule(now, now + LINGER, slot + 1, generation);
+        self.set_interest(slot, Interest::Read);
+        Drive::Keep
+    }
+
+    /// Update the poller registration if the desired interest changed.
+    fn set_interest(&mut self, slot: usize, interest: Interest) {
+        let Some(conn) = self.conns.get_mut(slot).and_then(|c| c.as_mut()) else { return };
+        if conn.interest != interest {
+            conn.interest = interest;
+            let fd = conn.stream.as_raw_fd();
+            let _ = self.poller.modify(fd, slot + 1, interest);
+        }
+    }
+
+    /// Deregister, close, and release one connection slot.
+    fn close(&mut self, slot: usize) {
+        let Some(conn) = self.conns.get_mut(slot).and_then(|c| c.take()) else { return };
+        let _ = self.poller.remove(conn.stream.as_raw_fd());
+        self.stats.conns_open.fetch_sub(1, Ordering::Relaxed);
+        if let Some(r) = &self.recorder {
+            r.record(EventKind::ConnClose, self.idx as u64, (slot + 1) as u64, conn.requests);
+        }
+        drop(conn);
+        self.free.push(slot);
+    }
+
+    fn close_all(&mut self) {
+        for slot in 0..self.conns.len() {
+            self.close(slot);
+        }
+    }
+}
+
+/// Flush a parked connection's staged bytes. `Ok(true)` = fully flushed.
+fn flush_pending(conn: &mut Conn) -> io::Result<bool> {
+    while conn.sent < conn.pending.len() {
+        match (&conn.stream).write(&conn.pending[conn.sent..]) {
+            Ok(0) => return Err(io::Error::new(io::ErrorKind::WriteZero, "peer stopped reading")),
+            Ok(n) => conn.sent += n,
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => return Ok(false),
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(true)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_wheel_fires_at_and_after_deadline() {
+        let t0 = Instant::now();
+        let mut wheel = TimerWheel::new(t0);
+        wheel.schedule(t0, t0 + Duration::from_millis(600), 5, 1);
+        let mut fired = Vec::new();
+        // Not yet due: advancing one tick must not fire it.
+        wheel.advance(t0 + WHEEL_TICK, &mut fired);
+        assert!(fired.is_empty());
+        // Well past due: it must come out exactly once.
+        wheel.advance(t0 + Duration::from_secs(2), &mut fired);
+        assert_eq!(fired, vec![(5, 1)]);
+        fired.clear();
+        wheel.advance(t0 + Duration::from_secs(4), &mut fired);
+        assert!(fired.is_empty(), "entries fire once");
+    }
+
+    #[test]
+    fn timer_wheel_clamps_past_horizon_deadlines() {
+        let t0 = Instant::now();
+        let mut wheel = TimerWheel::new(t0);
+        // 60 s is past the ~16 s horizon: the entry still fires (early),
+        // relying on the caller's lazy re-arm to carry it the rest of
+        // the way.
+        wheel.schedule(t0, t0 + Duration::from_secs(60), 9, 3);
+        let mut fired = Vec::new();
+        wheel.advance(t0 + Duration::from_secs(17), &mut fired);
+        assert_eq!(fired, vec![(9, 3)]);
+    }
+}

@@ -1,0 +1,327 @@
+//! Socket-level conformance tests run against **both** transport
+//! backends: every case takes a [`TransportKind`] and the suite invokes
+//! it once per backend, so the reactor cannot drift from the blocking
+//! pool on protocol behavior (parsing tolerances, error statuses,
+//! keep-alive, pipelining, the zero-alloc contract).
+
+use super::*;
+use crate::util::json::JsonWriter;
+use std::io::{Read as _, Write as _};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::Ordering;
+use std::time::Duration;
+
+const BOTH: [TransportKind; 2] = [TransportKind::Reactor, TransportKind::Blocking];
+
+fn echo_server(kind: TransportKind) -> HttpServer {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let handler: HttpHandler = Arc::new(|req: &Request<'_>, out: &mut ResponseBuf| {
+        let mut w = JsonWriter::new(&mut out.body);
+        w.begin_obj();
+        w.field_str("method", req.method);
+        w.field_str("path", req.path);
+        w.field_num("body_len", req.body.len() as f64);
+        if let Some(v) = req.query_get("q") {
+            w.field_str("q", &v);
+        }
+        w.end_obj();
+    });
+    HttpServer::start_with_opts(listener, handler, TransportOptions::new(kind, 2)).unwrap()
+}
+
+fn raw_roundtrip(addr: SocketAddr, request: &[u8]) -> String {
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.write_all(request).unwrap();
+    s.shutdown(std::net::Shutdown::Write).unwrap();
+    let mut out = String::new();
+    s.read_to_string(&mut out).unwrap();
+    out
+}
+
+/// Read one full response (head + declared body) off a keep-alive
+/// connection.
+pub(crate) fn read_one_response(s: &mut TcpStream) -> String {
+    let mut raw = Vec::new();
+    let mut buf = [0u8; 4096];
+    loop {
+        if let Some(hdr_end) = find_subsequence(&raw, b"\r\n\r\n") {
+            let head = String::from_utf8_lossy(&raw[..hdr_end]);
+            let clen: usize = head
+                .lines()
+                .find_map(|l| {
+                    let (name, value) = l.split_once(':')?;
+                    name.trim()
+                        .eq_ignore_ascii_case("content-length")
+                        .then(|| value.trim().parse().ok())?
+                })
+                .unwrap_or(0);
+            if raw.len() >= hdr_end + 4 + clen {
+                return String::from_utf8_lossy(&raw[..hdr_end + 4 + clen]).into_owned();
+            }
+        }
+        let n = s.read(&mut buf).unwrap();
+        assert!(n > 0, "connection closed early: {}", String::from_utf8_lossy(&raw));
+        raw.extend_from_slice(&buf[..n]);
+    }
+}
+
+#[test]
+fn serves_get_with_query() {
+    for kind in BOTH {
+        let server = echo_server(kind);
+        let resp = raw_roundtrip(
+            server.addr(),
+            b"GET /hello?q=a%20b HTTP/1.1\r\nHost: x\r\nConnection: close\r\n\r\n",
+        );
+        assert!(resp.starts_with("HTTP/1.1 200 OK"), "[{}] {resp}", kind.name());
+        assert!(resp.contains("\"path\":\"/hello\""), "[{}] {resp}", kind.name());
+        assert!(resp.contains("\"q\":\"a b\""), "[{}] {resp}", kind.name());
+        server.stop();
+    }
+}
+
+#[test]
+fn serves_post_body_and_keep_alive() {
+    for kind in BOTH {
+        let server = echo_server(kind);
+        let mut s = TcpStream::connect(server.addr()).unwrap();
+        for _ in 0..3 {
+            let body = "{\"x\":1}";
+            let req = format!(
+                "POST /v1/echo HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n{body}",
+                body.len()
+            );
+            s.write_all(req.as_bytes()).unwrap();
+            let text = read_one_response(&mut s);
+            assert!(text.starts_with("HTTP/1.1 200 OK"), "[{}] {text}", kind.name());
+            assert!(text.contains("\"body_len\":7"), "[{}] {text}", kind.name());
+        }
+        server.stop();
+    }
+}
+
+#[test]
+fn pipelined_requests_are_all_answered() {
+    for kind in BOTH {
+        let server = echo_server(kind);
+        let mut s = TcpStream::connect(server.addr()).unwrap();
+        // Three requests in a single segment; responses must come back
+        // in order on the same connection.
+        let mut burst = Vec::new();
+        for i in 0..3 {
+            burst.extend_from_slice(format!("GET /pipe{i} HTTP/1.1\r\nHost: x\r\n\r\n").as_bytes());
+        }
+        s.write_all(&burst).unwrap();
+        for i in 0..3 {
+            let text = read_one_response(&mut s);
+            assert!(text.starts_with("HTTP/1.1 200 OK"), "[{}] {text}", kind.name());
+            assert!(text.contains(&format!("\"path\":\"/pipe{i}\"")), "[{}] {text}", kind.name());
+        }
+        server.stop();
+    }
+}
+
+#[test]
+fn split_reads_across_tcp_segments() {
+    for kind in BOTH {
+        let server = echo_server(kind);
+        let mut s = TcpStream::connect(server.addr()).unwrap();
+        let body = "{\"split\":true}";
+        let req = format!(
+            "POST /seg HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n{body}",
+            body.len()
+        );
+        let bytes = req.as_bytes();
+        // Dribble the request out in 5-byte chunks with pauses: the
+        // parser must accumulate across reads without dropping state.
+        for chunk in bytes.chunks(5) {
+            s.write_all(chunk).unwrap();
+            s.flush().unwrap();
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        let text = read_one_response(&mut s);
+        assert!(text.starts_with("HTTP/1.1 200 OK"), "[{}] {text}", kind.name());
+        assert!(text.contains(&format!("\"body_len\":{}", body.len())), "[{}] {text}", kind.name());
+        server.stop();
+    }
+}
+
+#[test]
+fn accepts_bare_lf_line_endings() {
+    // Hand-rolled clients (printf | nc) often send LF-only heads; the
+    // old line-based parser accepted them, so keep doing so.
+    for kind in BOTH {
+        let server = echo_server(kind);
+        let resp =
+            raw_roundtrip(server.addr(), b"GET /lf?q=ok HTTP/1.1\nHost: x\nConnection: close\n\n");
+        assert!(resp.starts_with("HTTP/1.1 200 OK"), "[{}] {resp}", kind.name());
+        assert!(resp.contains("\"path\":\"/lf\""), "[{}] {resp}", kind.name());
+        assert!(resp.contains("\"q\":\"ok\""), "[{}] {resp}", kind.name());
+        server.stop();
+    }
+}
+
+#[test]
+fn accepts_lf_lines_with_crlf_blank() {
+    for kind in BOTH {
+        let server = echo_server(kind);
+        let resp =
+            raw_roundtrip(server.addr(), b"GET /mixed HTTP/1.1\nHost: x\nConnection: close\n\r\n");
+        assert!(resp.starts_with("HTTP/1.1 200 OK"), "[{}] {resp}", kind.name());
+        assert!(resp.contains("\"path\":\"/mixed\""), "[{}] {resp}", kind.name());
+        server.stop();
+    }
+}
+
+#[test]
+fn rejects_malformed_request_line() {
+    for kind in BOTH {
+        let server = echo_server(kind);
+        let resp = raw_roundtrip(server.addr(), b"NOT-HTTP\r\n\r\n");
+        assert!(resp.starts_with("HTTP/1.1 400"), "[{}] {resp}", kind.name());
+        server.stop();
+    }
+}
+
+#[test]
+fn rejects_oversized_body_declaration() {
+    for kind in BOTH {
+        let server = echo_server(kind);
+        let resp =
+            raw_roundtrip(server.addr(), b"POST / HTTP/1.1\r\nContent-Length: 99999999\r\n\r\n");
+        assert!(resp.starts_with("HTTP/1.1 413"), "[{}] {resp}", kind.name());
+        server.stop();
+    }
+}
+
+#[test]
+fn rejects_conflicting_content_length() {
+    for kind in BOTH {
+        let server = echo_server(kind);
+        let resp = raw_roundtrip(
+            server.addr(),
+            b"POST / HTTP/1.1\r\nContent-Length: 0\r\nContent-Length: 38\r\n\r\n",
+        );
+        assert!(resp.starts_with("HTTP/1.1 400"), "[{}] {resp}", kind.name());
+        // Identical duplicates are mergeable per RFC 7230 and accepted.
+        let resp = raw_roundtrip(
+            server.addr(),
+            b"POST / HTTP/1.1\r\nContent-Length: 2\r\nContent-Length: 2\r\n\r\nok",
+        );
+        assert!(resp.starts_with("HTTP/1.1 200"), "[{}] {resp}", kind.name());
+        server.stop();
+    }
+}
+
+#[test]
+fn rejects_transfer_encoding_501() {
+    for kind in BOTH {
+        let server = echo_server(kind);
+        let resp = raw_roundtrip(
+            server.addr(),
+            b"POST / HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n0\r\n\r\n",
+        );
+        assert!(resp.starts_with("HTTP/1.1 501"), "[{}] {resp}", kind.name());
+        server.stop();
+    }
+}
+
+#[test]
+fn rejects_oversized_headers_with_431() {
+    for kind in BOTH {
+        let server = echo_server(kind);
+        let stats = server.stats();
+        let mut req = b"GET / HTTP/1.1\r\n".to_vec();
+        req.extend_from_slice(b"X-Big: ");
+        let padded = req.len() + MAX_HEADER_BYTES + 100;
+        req.resize(padded, b'a');
+        req.extend_from_slice(b"\r\n\r\n");
+        let resp = raw_roundtrip(server.addr(), &req);
+        assert!(resp.starts_with("HTTP/1.1 431"), "[{}] {resp}", kind.name());
+        assert!(stats.rejected_431.load(Ordering::Relaxed) >= 1, "[{}]", kind.name());
+        server.stop();
+    }
+}
+
+#[test]
+fn rejects_too_many_headers_with_431() {
+    for kind in BOTH {
+        let server = echo_server(kind);
+        let mut req = b"GET / HTTP/1.1\r\n".to_vec();
+        for i in 0..(MAX_HEADERS + 8) {
+            req.extend_from_slice(format!("X-H{i}: v\r\n").as_bytes());
+        }
+        req.extend_from_slice(b"\r\n");
+        let resp = raw_roundtrip(server.addr(), &req);
+        assert!(resp.starts_with("HTTP/1.1 431"), "[{}] {resp}", kind.name());
+        server.stop();
+    }
+}
+
+#[test]
+fn steady_state_is_allocation_free() {
+    for kind in BOTH {
+        let server = echo_server(kind);
+        let stats = server.stats();
+        let mut s = TcpStream::connect(server.addr()).unwrap();
+        let body = "{\"client_id\":\"warm\",\"app\":\"clomp\",\"alpha\":0.8,\"beta\":0.2}";
+        let req = format!(
+            "POST /v1/echo HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n{body}",
+            body.len()
+        );
+        // Warmup: let every buffer reach its high-water mark.
+        for _ in 0..10 {
+            s.write_all(req.as_bytes()).unwrap();
+            read_one_response(&mut s);
+        }
+        let allocs_before = stats.alloc_events.load(Ordering::Relaxed);
+        let requests_before = stats.requests.load(Ordering::Relaxed);
+        for _ in 0..200 {
+            s.write_all(req.as_bytes()).unwrap();
+            read_one_response(&mut s);
+        }
+        let allocs = stats.alloc_events.load(Ordering::Relaxed) - allocs_before;
+        let requests = stats.requests.load(Ordering::Relaxed) - requests_before;
+        assert_eq!(requests, 200, "[{}]", kind.name());
+        assert_eq!(
+            allocs,
+            0,
+            "[{}] HTTP+JSON layers allocated {allocs} times over {requests} steady-state requests",
+            kind.name()
+        );
+        server.stop();
+    }
+}
+
+#[cfg(unix)]
+#[test]
+fn reactor_counts_open_connections_and_wakeups() {
+    let server = echo_server(TransportKind::Reactor);
+    let stats = server.stats();
+    assert_eq!(stats.event_loops.load(Ordering::Relaxed), 2);
+    let mut held = Vec::new();
+    for _ in 0..8 {
+        held.push(TcpStream::connect(server.addr()).unwrap());
+    }
+    // One round-trip forces the loops to have adopted everything that
+    // was accepted before it.
+    let mut s = TcpStream::connect(server.addr()).unwrap();
+    s.write_all(b"GET /gauge HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+    read_one_response(&mut s);
+    let deadline = std::time::Instant::now() + Duration::from_secs(5);
+    while stats.conns_open.load(Ordering::Relaxed) < 9 {
+        assert!(std::time::Instant::now() < deadline, "conns_open gauge never reached 9");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    assert!(stats.wakeups.load(Ordering::Relaxed) >= 1);
+    drop(held);
+    drop(s);
+    // Closes are observed by readiness (EOF), so the gauge must fall
+    // back to zero shortly after the clients disconnect.
+    let deadline = std::time::Instant::now() + Duration::from_secs(5);
+    while stats.conns_open.load(Ordering::Relaxed) > 0 {
+        assert!(std::time::Instant::now() < deadline, "conns_open gauge never drained");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    server.stop();
+}

@@ -222,6 +222,7 @@ fn design_documents_observability() {
     for kind in [
         "req_start", "req_end", "suggest", "report_apply", "batch_flush", "fleet_push",
         "fleet_pull", "fleet_merge", "checkpoint", "session_create", "measure", "chaos",
+        "conn_open", "conn_close",
     ] {
         assert!(
             DESIGN_MD.contains(kind),
@@ -320,6 +321,59 @@ fn design_documents_batched_scoring() {
         README_MD.contains("--batch"),
         "README.md missing the loadgen --batch quickstart"
     );
+}
+
+#[test]
+fn design_documents_event_driven_transport() {
+    // §Event-driven transport: the per-connection state machine, the
+    // poller abstraction, the timer wheel, and per-loop buffer ownership.
+    for needle in [
+        "Event-driven transport",
+        "--event-loops",
+        "Poller",
+        "epoll",
+        "poll(2)",
+        "LASP_POLLER",
+        "timer wheel",
+        "EPOLLOUT",
+        "slab",
+        "generation",
+        "round-robin",
+        "Draining",
+        "lasp_serve_event_loops",
+        "lasp_serve_epoll_wakeups_total",
+        "lasp_serve_conns_open",
+        "lasp_serve_write_backpressure_total",
+        "--transport blocking",
+        "transport_differential",
+    ] {
+        assert!(
+            DESIGN_MD.contains(needle),
+            "DESIGN.md missing '{needle}' (event-driven transport section)"
+        );
+    }
+    // The API reference explains the semantics shift: event loops size
+    // the reactor, they do not bound concurrent connections the way
+    // --workers bounded the blocking pool.
+    for needle in [
+        "--event-loops",
+        "--transport",
+        "lasp_serve_conns_open",
+        "lasp_serve_write_backpressure_total",
+    ] {
+        assert!(
+            API_MD.contains(needle),
+            "docs/API.md missing '{needle}' (transport semantics)"
+        );
+    }
+    // README carries the serve-flag quickstart and the open-loop
+    // loadgen holder that drives the high-connection bench series.
+    for needle in ["--event-loops", "--connections"] {
+        assert!(
+            README_MD.contains(needle),
+            "README.md missing '{needle}' (transport quickstart)"
+        );
+    }
 }
 
 #[test]

@@ -1,0 +1,162 @@
+//! Reactor-transport integration tests: behaviours only an event-driven
+//! transport exhibits. A slow-reading client whose responses park on
+//! writability must not stall the other connections multiplexed on the
+//! same event loop, and a thousand idle keep-alive connections must not
+//! tax the suggest hot path.
+
+#![cfg(unix)]
+
+use lasp::serve::transport::poller;
+use lasp::serve::{start, HttpClient, ServeConfig, ServerHandle, TransportKind};
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::Ordering;
+use std::time::{Duration, Instant};
+
+fn boot(event_loops: usize) -> ServerHandle {
+    start(ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        transport: TransportKind::Reactor,
+        event_loops,
+        shards: 2,
+        checkpoint_dir: None,
+        checkpoint_every: Duration::from_secs(3600),
+        ..Default::default()
+    })
+    .unwrap()
+}
+
+fn suggest_body(client: &str) -> String {
+    format!(
+        "{{\"client_id\":\"{client}\",\"app\":\"clomp\",\"device\":\"maxn\",\
+         \"alpha\":1.0,\"beta\":0.0}}"
+    )
+}
+
+#[test]
+fn parked_slow_writer_does_not_stall_other_connections_on_the_loop() {
+    // ONE event loop, so the parked connection and the healthy one are
+    // guaranteed to share it.
+    let handle = boot(1);
+    let addr = handle.addr();
+    let stats = handle.transport_stats();
+
+    // Client A pipelines far more /metrics responses than the socket
+    // buffers can hold and reads none of them: the loop's writes must
+    // eventually park A on writability instead of blocking the thread.
+    const PIPELINED: usize = 2_000;
+    let mut slow = TcpStream::connect(addr).unwrap();
+    slow.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    let burst: Vec<u8> = b"GET /metrics HTTP/1.1\r\nHost: x\r\n\r\n".repeat(PIPELINED);
+    slow.write_all(&burst).unwrap();
+
+    // Wait until the write path actually hit backpressure.
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while stats.write_backpressure.load(Ordering::Relaxed) == 0 {
+        assert!(
+            Instant::now() < deadline,
+            "server never parked the slow writer; raise PIPELINED if socket buffers grew"
+        );
+        std::thread::sleep(Duration::from_millis(5));
+    }
+
+    // Client B shares the (single) event loop with the parked A and must
+    // keep completing round-trips promptly.
+    let mut healthy =
+        HttpClient::connect_with_timeout(&addr.to_string(), Duration::from_secs(5)).unwrap();
+    let payload = suggest_body("reactor-healthy");
+    let t0 = Instant::now();
+    for _ in 0..50 {
+        assert_eq!(healthy.post_slice("/v1/suggest", payload.as_bytes()).unwrap(), 200);
+    }
+    assert_eq!(healthy.reconnects(), 0, "the healthy connection must never be dropped");
+    let elapsed = t0.elapsed();
+    assert!(
+        elapsed < Duration::from_secs(5),
+        "50 round-trips took {elapsed:?} while a peer connection was parked"
+    );
+
+    // Drain A: once the client reads, the parked connection resumes and
+    // every pipelined request is eventually answered. Responses are
+    // counted by status line with a streaming window — the kept tail is
+    // one byte shorter than the needle, so no match is counted twice.
+    let needle = b"HTTP/1.1 200 OK\r\n";
+    let mut served = 0usize;
+    let mut tail: Vec<u8> = Vec::new();
+    let mut chunk = [0u8; 64 * 1024];
+    while served < PIPELINED {
+        let n = slow.read(&mut chunk).unwrap();
+        assert!(n > 0, "server closed the parked connection after {served} responses");
+        tail.extend_from_slice(&chunk[..n]);
+        served += tail.windows(needle.len()).filter(|w| *w == needle).count();
+        let keep_from = tail.len().saturating_sub(needle.len() - 1);
+        tail.drain(..keep_from);
+    }
+    drop(slow);
+    drop(healthy);
+    handle.shutdown().unwrap();
+}
+
+#[test]
+fn thousand_idle_connections_leave_suggest_latency_unaffected() {
+    poller::raise_nofile_limit(8192).ok();
+    let handle = boot(2);
+    let addr = handle.addr();
+    let stats = handle.transport_stats();
+
+    // Hold 1000 idle keep-alive connections.
+    let mut idle: Vec<TcpStream> = Vec::with_capacity(1000);
+    for _ in 0..1000 {
+        let s = TcpStream::connect(addr).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        idle.push(s);
+    }
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while stats.conns_open.load(Ordering::Relaxed) < 1000 {
+        assert!(
+            Instant::now() < deadline,
+            "only {} connections adopted",
+            stats.conns_open.load(Ordering::Relaxed)
+        );
+        std::thread::sleep(Duration::from_millis(10));
+    }
+
+    // An active client's suggest latency must not regress from the idle
+    // herd: idle connections produce no readiness events, so the loops
+    // do O(ready) work, not O(open).
+    let mut client =
+        HttpClient::connect_with_timeout(&addr.to_string(), Duration::from_secs(5)).unwrap();
+    let payload = suggest_body("reactor-idle-herd");
+    for _ in 0..50 {
+        assert_eq!(client.post_slice("/v1/suggest", payload.as_bytes()).unwrap(), 200);
+    }
+    let mut latencies: Vec<f64> = Vec::with_capacity(300);
+    for _ in 0..300 {
+        let t0 = Instant::now();
+        assert_eq!(client.post_slice("/v1/suggest", payload.as_bytes()).unwrap(), 200);
+        latencies.push(t0.elapsed().as_secs_f64());
+    }
+    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let p99 = latencies[(latencies.len() * 99) / 100 - 1];
+    assert!(
+        p99 < 0.25,
+        "suggest p99 {:.1}ms with 1000 idle connections held",
+        p99 * 1e3
+    );
+
+    // The idle connections are still live — a sample of them must still
+    // serve requests after sitting out the whole run.
+    for s in idle.iter_mut().step_by(333) {
+        s.write_all(b"GET /healthz HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+        let mut buf = [0u8; 1024];
+        let n = s.read(&mut buf).unwrap();
+        assert!(
+            buf[..n].starts_with(b"HTTP/1.1 200 OK"),
+            "idle connection no longer serves: {}",
+            String::from_utf8_lossy(&buf[..n])
+        );
+    }
+    drop(idle);
+    drop(client);
+    handle.shutdown().unwrap();
+}
