@@ -15,11 +15,20 @@
 #[path = "common.rs"]
 mod common;
 
-use lasp::serve::{loadgen, LoadgenConfig, ServeConfig};
-use lasp::util::json::Json;
+use lasp::serve::{loadgen, HttpClient, LoadgenConfig, ServeConfig};
+use lasp::util::json::{Json, JsonSlice};
 use std::collections::BTreeMap;
+use std::io::Write as _;
 use std::sync::atomic::Ordering;
-use std::time::Duration;
+use std::sync::{Arc, Barrier};
+use std::time::{Duration, Instant};
+
+// Process-wide allocation counter backing the contended series'
+// zero-steady-state gate: on the routed plane a measured suggest/report
+// phase must not allocate anywhere in the process — client, transport,
+// or bandit.
+#[global_allocator]
+static GLOBAL: common::CountingAlloc = common::CountingAlloc;
 
 fn suggest_body(client: &str, app: &str) -> Json {
     let mut obj = BTreeMap::new();
@@ -211,6 +220,47 @@ fn main() {
         legacy_report.round_trips_per_s * 2.0
     );
 
+    // ---- contended multi-loop series (shared-nothing scaling) ----
+    //
+    // Stable-key closed loops against 1-loop and 4-loop routed servers,
+    // uniform and Zipf-skewed key mixes. The uniform series is the
+    // scaling gate: going 1→4 event loops must buy >= 1.5x req/s when
+    // the host has the cores for it, and the measured phase must not
+    // allocate anywhere in the process (counting allocator).
+    let contended_rounds = if quick { 1000 } else { 4000 };
+    let mut contended_runs: Vec<ContendedRun> = Vec::new();
+    for loops in [1usize, 4] {
+        for mix in ["uniform", "zipf"] {
+            let r = contended_run(loops, mix, contended_rounds);
+            println!(
+                "\n## contended series: {} loop(s), {} keys: {:.0} req/s ({} errors, {} allocs)",
+                loops, mix, r.req_per_s, r.errors, r.alloc_events
+            );
+            contended_runs.push(r);
+        }
+    }
+    let contended_rps = |loops: usize, mix: &str| {
+        contended_runs
+            .iter()
+            .find(|r| r.event_loops == loops && r.key_mix == mix)
+            .map(|r| r.req_per_s)
+            .unwrap_or(0.0)
+    };
+    let contended_scaling = contended_rps(4, "uniform") / contended_rps(1, "uniform").max(1e-9);
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    // The scaling gate needs the routed plane (unix reactor) and enough
+    // cores for four loops to actually run in parallel.
+    let scaling_gated = cfg!(unix) && cores >= 4;
+    let scaling_ok = !scaling_gated || contended_scaling >= 1.5;
+    let contended_ok = contended_runs
+        .iter()
+        .all(|r| r.errors == 0 && (!cfg!(unix) || r.alloc_events == 0));
+    println!(
+        "\ncontended scaling 1→4 loops (uniform keys): {contended_scaling:.2}x \
+         (gate >=1.5x {})",
+        if scaling_gated { "armed" } else { "skipped: needs unix + >=4 cores" }
+    );
+
     // Machine-readable perf baseline, tracked PR-over-PR.
     let mut out = BTreeMap::new();
     out.insert("bench".to_string(), Json::Str("serve_throughput".to_string()));
@@ -250,6 +300,21 @@ fn main() {
     batched.insert("p99_ms".to_string(), Json::Num(batched_report.p99_ms));
     out.insert("batched".to_string(), Json::Obj(batched));
     out.insert("held_series".to_string(), Json::Arr(held_series));
+    let contended_series: Vec<Json> = contended_runs
+        .iter()
+        .map(|r| {
+            let mut c = BTreeMap::new();
+            c.insert("event_loops".to_string(), Json::Num(r.event_loops as f64));
+            c.insert("key_mix".to_string(), Json::Str(r.key_mix.to_string()));
+            c.insert("rounds".to_string(), Json::Num(r.rounds as f64));
+            c.insert("req_per_s".to_string(), Json::Num(r.req_per_s));
+            c.insert("errors".to_string(), Json::Num(r.errors as f64));
+            c.insert("alloc_events".to_string(), Json::Num(r.alloc_events as f64));
+            Json::Obj(c)
+        })
+        .collect();
+    out.insert("contended_series".to_string(), Json::Arr(contended_series));
+    out.insert("contended_scaling_uniform".to_string(), Json::Num(contended_scaling));
     let mut legacy_json = BTreeMap::new();
     legacy_json.insert("transport".to_string(), Json::Str("blocking".to_string()));
     legacy_json.insert("rounds".to_string(), Json::Num(legacy_report.rounds as f64));
@@ -274,6 +339,149 @@ fn main() {
             && batched_report.rounds == lg_rounds
             && held_ok
             && legacy_report.errors == 0
-            && ceiling_ok,
+            && ceiling_ok
+            && contended_ok
+            && scaling_ok,
     );
+}
+
+struct ContendedRun {
+    event_loops: usize,
+    key_mix: &'static str,
+    /// Total suggest/report rounds across all connections.
+    rounds: usize,
+    req_per_s: f64,
+    errors: usize,
+    /// Process-wide allocation events during the measured phase.
+    alloc_events: u64,
+}
+
+/// One suggest→report round with a *stable* key; returns false on any
+/// protocol surprise. Allocation-free after warmup: the suggest frame is
+/// prebuilt, the report frame is rewritten into a reused buffer, and the
+/// response parse is the zero-copy slice parser.
+fn contended_round(
+    client: &mut HttpClient,
+    suggest: &[u8],
+    key: &str,
+    report: &mut Vec<u8>,
+) -> bool {
+    if !matches!(client.post_slice("/v1/suggest", suggest), Ok(200)) {
+        return false;
+    }
+    let arm = JsonSlice::parse(client.last_body())
+        .ok()
+        .and_then(|v| v.get("arm")?.as_usize());
+    let Some(arm) = arm else { return false };
+    report.clear();
+    let _ = write!(
+        report,
+        "{{\"client_id\":\"{key}\",\"app\":\"clomp\",\"device\":\"maxn\",\
+         \"arm\":{arm},\"time_s\":0.5,\"power_w\":5.0}}"
+    );
+    matches!(client.post_slice("/v1/report", report), Ok(202))
+}
+
+/// Closed-loop suggest/report hammer with stable per-connection keys:
+/// eight connections, each pinned to one session for the whole run, so
+/// the routed plane re-homes a connection at most once and the measured
+/// phase is pure hot path. `key_mix` picks the assignment: "uniform"
+/// spreads the connections evenly over keys covering all four shards
+/// (every loop of a 4-loop server owns live traffic); "zipf" piles six
+/// of the eight onto one hot key, the skew ceiling.
+fn contended_run(event_loops: usize, key_mix: &'static str, rounds_per_conn: usize) -> ContendedRun {
+    const THREADS: usize = 8;
+    const WARMUP: usize = 200;
+    let handle = lasp::serve::start(ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        event_loops,
+        workers: event_loops,
+        shards: 4,
+        checkpoint_dir: None,
+        checkpoint_every: Duration::from_secs(3600),
+        ..Default::default()
+    })
+    .expect("boot contended serve");
+    let addr = handle.addr().to_string();
+
+    // Shard-covering keys, discovered through the API itself (the
+    // suggest response names the session's shard): key hashing is an
+    // implementation detail, and guessing it would leave loops idle.
+    let mut shard_keys: [Option<String>; 4] = [None, None, None, None];
+    {
+        let mut probe = HttpClient::connect(&addr).expect("probe connect");
+        let mut found = 0;
+        for i in 0..256 {
+            if found == 4 {
+                break;
+            }
+            let key = format!("ck-{i}");
+            let body = suggest_body(&key, "clomp").to_string();
+            assert_eq!(probe.post_slice("/v1/suggest", body.as_bytes()).expect("probe"), 200);
+            let shard = JsonSlice::parse(probe.last_body())
+                .ok()
+                .and_then(|v| v.get("shard")?.as_usize())
+                .expect("suggest response carries shard");
+            if shard_keys[shard % 4].is_none() {
+                shard_keys[shard % 4] = Some(key);
+                found += 1;
+            }
+        }
+        assert_eq!(found, 4, "256 candidate keys did not cover 4 shards");
+    }
+    let shard_keys: Vec<String> = shard_keys.into_iter().flatten().collect();
+
+    let barrier = Arc::new(Barrier::new(THREADS + 1));
+    let mut workers = Vec::with_capacity(THREADS);
+    for t in 0..THREADS {
+        let addr = addr.clone();
+        let key = match key_mix {
+            "uniform" => shard_keys[t % 4].clone(),
+            _ => shard_keys[if t < 6 { 0 } else { t - 5 }].clone(),
+        };
+        let barrier = Arc::clone(&barrier);
+        workers.push(std::thread::spawn(move || -> usize {
+            let mut client = HttpClient::connect(&addr).expect("contended connect");
+            let suggest = suggest_body(&key, "clomp").to_string();
+            let mut report: Vec<u8> = Vec::with_capacity(256);
+            let mut errors = 0usize;
+            for _ in 0..WARMUP {
+                if !contended_round(&mut client, suggest.as_bytes(), &key, &mut report) {
+                    errors += 1;
+                }
+            }
+            barrier.wait(); // warmed
+            barrier.wait(); // go
+            for _ in 0..rounds_per_conn {
+                if !contended_round(&mut client, suggest.as_bytes(), &key, &mut report) {
+                    errors += 1;
+                }
+            }
+            barrier.wait(); // done
+            barrier.wait(); // held until the main thread snapshots
+            errors
+        }));
+    }
+
+    barrier.wait(); // every connection warmed and parked
+    let allocs_before = common::alloc_count();
+    let t0 = Instant::now();
+    barrier.wait(); // go
+    barrier.wait(); // done
+    let elapsed = t0.elapsed().as_secs_f64().max(1e-9);
+    let alloc_events = common::alloc_count() - allocs_before;
+    barrier.wait(); // release the workers
+    let errors: usize = workers.into_iter().map(|w| w.join().expect("contended worker")).sum();
+    handle.shutdown().expect("contended shutdown");
+
+    let rounds = THREADS * rounds_per_conn;
+    ContendedRun {
+        event_loops,
+        key_mix,
+        rounds,
+        // Two HTTP requests per round (suggest + report).
+        req_per_s: (rounds * 2) as f64 / elapsed,
+        errors,
+        alloc_events,
+    }
 }

@@ -69,6 +69,8 @@ pub struct LaspConfig {
     pub serve_workers: usize,
     /// Reactor event loops; 0 = auto (one per core).
     pub serve_event_loops: usize,
+    /// Session-store shards; 0 = auto (track the event-loop count so
+    /// the routed plane's ownership map tiles evenly).
     pub serve_shards: usize,
     pub serve_queue_cap: usize,
     pub serve_batch: usize,
@@ -104,7 +106,7 @@ impl Default for LaspConfig {
             serve_port: 8787,
             serve_workers: 8,
             serve_event_loops: 0,
-            serve_shards: 8,
+            serve_shards: 0,
             serve_queue_cap: 4096,
             serve_batch: 128,
             serve_checkpoint_dir: None,

@@ -122,7 +122,8 @@ fn usage_text() -> &'static str {
      \x20 --transport <t>        reactor | blocking        [reactor]\n\
      \x20 --event-loops <n>      reactor event loops; 0 = one per core [0]\n\
      \x20 --workers <n>          worker threads (blocking transport) [8]\n\
-     \x20 --shards <n>           session-store shards      [8]\n\
+     \x20 --shards <n>           session-store shards; must be a multiple\n\
+     \x20                        of the event-loop count; 0 = match loops [0]\n\
      \x20 --queue-cap <n>        per-shard report queue    [4096]\n\
      \x20 --batch <n>            max updates per drain     [128]\n\
      \x20 --checkpoint-dir <d>   snapshot sessions here    [off]\n\
@@ -461,14 +462,19 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
         .as_ref()
         .map(|d| d.display().to_string())
         .unwrap_or_else(|| "off".to_string());
+    // Resolve the topology up front so the banner shows the actual
+    // shard/thread counts (0 means "derive") and so a non-multiple
+    // --shards/--event-loops pair fails here with the CLI error rather
+    // than deep inside server startup.
+    let (resolved_shards, resolved_threads) = serve_cfg.resolved_topology()?;
     let handle = lasp::serve::start(serve_cfg.clone())?;
     println!(
         "# lasp serve: listening on {} | transport={} threads={} shards={} queue={} batch={} \
          checkpoints={}",
         handle.addr(),
         serve_cfg.transport.name(),
-        serve_cfg.effective_threads(),
-        serve_cfg.shards,
+        resolved_threads,
+        resolved_shards,
         serve_cfg.queue_cap,
         serve_cfg.max_batch,
         ckpt,

@@ -57,7 +57,9 @@ pub const DEFAULT_LANE_CAP: usize = 4096;
 /// the `pack_*`/`decode_*` helpers and DESIGN.md §Observability.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum EventKind {
-    /// A request started: `a` = route code.
+    /// A request started: `a` = route code, `b` = handling event-loop
+    /// index (0 on the blocking transport), so a drained trace maps
+    /// every request back to the `lasp-loop-<i>` thread that owned it.
     ReqStart = 1,
     /// A request finished: `a` = route code, `b` = status, `c` =
     /// latency in µs.
@@ -422,6 +424,7 @@ pub fn write_event_json(ev: &TraceEvent, w: &mut JsonWriter) {
     match EventKind::from_code(ev.kind) {
         Some(EventKind::ReqStart) => {
             w.field_str("route", route_name(ev.a));
+            w.field_num("loop", ev.b as f64);
         }
         Some(EventKind::ReqEnd) => {
             w.field_str("route", route_name(ev.a));

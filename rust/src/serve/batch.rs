@@ -235,19 +235,33 @@ fn apply_batch(
 ) {
     let mut guard = store.write_shard(shard);
     for r in batch {
-        // The chaos `batch_flush` point models at-least-once delivery by
-        // re-applying the report through the *same* path a real duplicate
-        // would take — so a seq-carrying duplicate is absorbed by the
-        // idempotency window and a seq-less one genuinely double-counts
-        // (the contrast `rust/tests/chaos.rs` pins).
-        let copies = if chaos.is_some_and(|c| c.flush_duplicate(shard)) { 2 } else { 1 };
-        for _ in 0..copies {
+        for _ in 0..chaos_copies(chaos, shard) {
             apply_one(&r, store, &mut guard, apps, metrics, recorder);
         }
     }
 }
 
-fn apply_one(
+/// How many times to apply one report. The chaos `batch_flush` point
+/// models at-least-once delivery by re-applying the report through the
+/// *same* path a real duplicate would take — so a seq-carrying duplicate
+/// is absorbed by the idempotency window and a seq-less one genuinely
+/// double-counts (the contrast `rust/tests/chaos.rs` pins). Shared with
+/// the routed data plane's inline apply so the injection point survives
+/// the shared-nothing restructure unchanged.
+pub(crate) fn chaos_copies(chaos: Option<&ChaosLayer>, shard: usize) -> usize {
+    if chaos.is_some_and(|c| c.flush_duplicate(shard)) {
+        2
+    } else {
+        1
+    }
+}
+
+/// Apply one report to its session inside `guard` — the single reward
+/// path for every ingestion mode (shard updater threads in the shared
+/// plane, owner event loops in the routed plane). `guard` is a plain
+/// `&mut Shard`, so it serves both the locked and the loop-owned access
+/// disciplines.
+pub(crate) fn apply_one(
     r: &Report,
     store: &ShardedStore,
     guard: &mut Shard,
@@ -286,6 +300,7 @@ fn apply_one(
                     metrics.reports_rejected.fetch_add(1, Ordering::Relaxed);
                 }
             }
+            store.note_scratch(session);
         }
         Err(_) => {
             metrics.reports_rejected.fetch_add(1, Ordering::Relaxed);

@@ -43,7 +43,7 @@
 //! reader for every version still in the field (see DESIGN.md
 //! §Checkpoint file format).
 
-use super::store::{AppsCache, PolicyKind, Session, SessionKey, SeqWindow, ShardedStore, Tuner};
+use super::store::{AppsCache, PolicyKind, Session, SessionKey, SeqWindow, Shard, ShardedStore, Tuner};
 use crate::apps::AppKind;
 use crate::bandit::persist;
 use crate::device::PowerMode;
@@ -142,6 +142,7 @@ pub fn session_from_json(text: &str, apps: &AppsCache, retain: f64) -> Result<Se
         // state, so the idempotency window restarts empty (see
         // DESIGN.md §Failure model).
         seq_window: SeqWindow::default(),
+        scratch_growths_seen: 0,
     })
 }
 
@@ -152,6 +153,58 @@ fn file_name(key: &SessionKey) -> String {
 
 /// Attempts per session file before giving up on this snapshot cycle.
 const WRITE_ATTEMPTS: u32 = 3;
+
+/// Serialize every checkpointable session of one shard into
+/// `(file name, payload)` pairs. This is the piece of a snapshot that
+/// must run *inside* the shard's owner — under a read lock on the shared
+/// data plane, or on the owning event loop under the routed one (see
+/// `serve/plane.rs`); the file I/O half ([`write_payloads`]) runs
+/// wherever the snapshot was requested.
+pub fn shard_payloads(shard: &Shard) -> Vec<(String, String)> {
+    shard
+        .sessions
+        .values()
+        .filter_map(|s| session_to_json(s).map(|text| (file_name(&s.key), text)))
+        .collect()
+}
+
+/// Write pre-serialized session payloads into `dir` with the retry /
+/// fault-injection discipline of [`snapshot_with`]. Returns how many
+/// files were written.
+pub fn write_payloads(
+    payloads: &[(String, String)],
+    dir: &Path,
+    chaos: Option<&crate::chaos::ChaosLayer>,
+    failures: Option<&std::sync::atomic::AtomicU64>,
+) -> usize {
+    use std::sync::atomic::Ordering;
+    let mut written = 0usize;
+    for (name, text) in payloads {
+        let path = dir.join(name);
+        for attempt in 0..WRITE_ATTEMPTS {
+            let result = if chaos.is_some_and(|c| c.checkpoint_fail(attempt as u64)) {
+                Err(anyhow!("chaos: injected checkpoint write failure"))
+            } else {
+                persist::write_atomic(&path, text)
+            };
+            match result {
+                Ok(()) => {
+                    written += 1;
+                    break;
+                }
+                Err(_) => {
+                    if let Some(f) = failures {
+                        f.fetch_add(1, Ordering::Relaxed);
+                    }
+                    if attempt + 1 < WRITE_ATTEMPTS {
+                        std::thread::sleep(std::time::Duration::from_millis(2 << attempt));
+                    }
+                }
+            }
+        }
+    }
+    written
+}
 
 /// Snapshot every checkpointable session into `dir`. Serialization happens
 /// under each shard lock; file I/O happens outside it so a slow disk never
@@ -174,7 +227,6 @@ pub fn snapshot_with(
     chaos: Option<&crate::chaos::ChaosLayer>,
     failures: Option<&std::sync::atomic::AtomicU64>,
 ) -> Result<usize> {
-    use std::sync::atomic::Ordering;
     std::fs::create_dir_all(dir).with_context(|| format!("creating {}", dir.display()))?;
     let mut written = 0usize;
     for i in 0..store.num_shards() {
@@ -182,36 +234,9 @@ pub fn snapshot_with(
             // Serialization only reads; a shared lock keeps the suggest
             // write path unblocked on other readers' shards.
             let shard = store.read_shard(i);
-            shard
-                .sessions
-                .values()
-                .filter_map(|s| session_to_json(s).map(|text| (file_name(&s.key), text)))
-                .collect()
+            shard_payloads(&shard)
         };
-        for (name, text) in payloads {
-            let path = dir.join(name);
-            for attempt in 0..WRITE_ATTEMPTS {
-                let result = if chaos.is_some_and(|c| c.checkpoint_fail(attempt as u64)) {
-                    Err(anyhow!("chaos: injected checkpoint write failure"))
-                } else {
-                    persist::write_atomic(&path, &text)
-                };
-                match result {
-                    Ok(()) => {
-                        written += 1;
-                        break;
-                    }
-                    Err(_) => {
-                        if let Some(f) = failures {
-                            f.fetch_add(1, Ordering::Relaxed);
-                        }
-                        if attempt + 1 < WRITE_ATTEMPTS {
-                            std::thread::sleep(std::time::Duration::from_millis(2 << attempt));
-                        }
-                    }
-                }
-            }
-        }
+        written += write_payloads(&payloads, dir, chaos, failures);
     }
     Ok(written)
 }
@@ -276,6 +301,7 @@ mod tests {
             suggests: pulls as u64,
             reports: pulls as u64,
             seq_window: SeqWindow::default(),
+            scratch_growths_seen: 0,
         }
     }
 
@@ -353,6 +379,7 @@ mod tests {
             suggests: 200,
             reports: 200,
             seq_window: SeqWindow::default(),
+            scratch_growths_seen: 0,
         };
         let best = session.tuner.most_selected();
         let (mean_before, _) = session.tuner.mean_of(best).unwrap();

@@ -45,7 +45,7 @@
 
 use super::loadgen::HttpClient;
 use super::metrics::{Metrics, FLEET_STATE_BACKOFF, FLEET_STATE_SYNCING};
-use super::store::{AppsCache, FleetKey, PolicyKind, ShardedStore, Tuner};
+use super::store::{AppsCache, FleetKey, PolicyKind, Shard, ShardedStore, Tuner};
 use crate::apps::AppKind;
 use crate::bandit::{ArmStats, Policy as _};
 use crate::obs::{EventKind, Recorder};
@@ -341,39 +341,64 @@ pub fn aggregate_local(store: &ShardedStore) -> Vec<FleetSnapshot> {
     let mut acc: HashMap<FleetKey, HashMap<u32, [f64; 3]>> = HashMap::new();
     for i in 0..store.num_shards() {
         let shard = store.read_shard(i);
-        for session in shard.sessions.values() {
-            let fkey = FleetKey {
-                app: session.key.app,
-                device: session.key.device,
-                policy: session.key.policy,
-            };
-            let baseline = session.fleet_baseline.as_ref();
-            let entry = acc.entry(fkey).or_default();
-            // Every policy exposes the shared ArmStats core, so delta
-            // extraction reads it directly — ε-greedy sessions included.
-            match &session.tuner {
-                Tuner::Subset(t) => {
-                    let st = t.stats();
-                    for (pos, &full) in t.candidates().iter().enumerate() {
-                        add_arm_delta(entry, full as u32, pos, st, baseline);
-                    }
+        aggregate_shard_into(&shard, &mut acc);
+    }
+    acc_into_snapshots(acc)
+}
+
+/// Accumulator map for partial (per-shard) fleet aggregation; the routed
+/// data plane has each event loop fold its owned shards into one of
+/// these and merges the partials afterwards (see `serve/plane.rs`).
+pub(crate) type FleetAcc = HashMap<FleetKey, HashMap<u32, [f64; 3]>>;
+
+/// Fold one shard's sessions into a scenario accumulator — the inner
+/// loop of [`aggregate_local`], callable against an owned shard
+/// reference so the routed plane can aggregate without shard locks.
+pub(crate) fn aggregate_shard_into(shard: &Shard, acc: &mut FleetAcc) {
+    for session in shard.sessions.values() {
+        let fkey = FleetKey {
+            app: session.key.app,
+            device: session.key.device,
+            policy: session.key.policy,
+        };
+        let baseline = session.fleet_baseline.as_ref();
+        let entry = acc.entry(fkey).or_default();
+        // Every policy exposes the shared ArmStats core, so delta
+        // extraction reads it directly — ε-greedy sessions included.
+        match &session.tuner {
+            Tuner::Subset(t) => {
+                let st = t.stats();
+                for (pos, &full) in t.candidates().iter().enumerate() {
+                    add_arm_delta(entry, full as u32, pos, st, baseline);
                 }
-                other => {
-                    let st = other.stats();
-                    for arm in 0..st.k() {
-                        add_arm_delta(entry, arm as u32, arm, st, baseline);
-                    }
+            }
+            other => {
+                let st = other.stats();
+                for arm in 0..st.k() {
+                    add_arm_delta(entry, arm as u32, arm, st, baseline);
                 }
             }
         }
     }
-    acc_into_snapshots(acc)
+}
+
+/// Merge one partial accumulator into another (routed aggregation).
+pub(crate) fn merge_acc(into: &mut FleetAcc, from: FleetAcc) {
+    for (key, by_arm) in from {
+        let entry = into.entry(key).or_default();
+        for (arm, v) in by_arm {
+            let e = entry.entry(arm).or_insert([0.0; 3]);
+            e[0] += v[0];
+            e[1] += v[1];
+            e[2] += v[2];
+        }
+    }
 }
 
 /// Turn accumulated `(key → arm → [count, τΣ, ρΣ])` maps into sorted,
 /// capped snapshots (deterministic output for tests and idempotent
 /// re-serialization).
-fn acc_into_snapshots(acc: HashMap<FleetKey, HashMap<u32, [f64; 3]>>) -> Vec<FleetSnapshot> {
+pub(crate) fn acc_into_snapshots(acc: FleetAcc) -> Vec<FleetSnapshot> {
     let mut out = Vec::with_capacity(acc.len());
     for (key, by_arm) in acc {
         let mut arms: Vec<u32> = by_arm
@@ -560,6 +585,12 @@ pub fn apply_pull_body(
     Ok(install_priors(&snapshots, store, apps))
 }
 
+/// How the sync thread obtains this node's local aggregate. Injected by
+/// the service so the data-plane choice stays out of this module: the
+/// shared plane scans shard read locks ([`aggregate_local`]), the routed
+/// plane scatter-gathers partials from each shard's owning event loop.
+pub type LocalAggregateFn = Arc<dyn Fn() -> Vec<FleetSnapshot> + Send + Sync>;
+
 /// What the background sync thread needs to know.
 #[derive(Debug, Clone)]
 pub struct FleetSyncConfig {
@@ -588,11 +619,21 @@ impl FleetSync {
         metrics: Arc<Metrics>,
         recorder: Arc<Recorder>,
         chaos: Option<Arc<crate::chaos::ChaosLayer>>,
+        local_agg: LocalAggregateFn,
     ) -> FleetSync {
         let stop = Arc::new(AtomicBool::new(false));
         let stop2 = stop.clone();
         let handle = std::thread::spawn(move || {
-            run_loop(&cfg, &store, &apps, &metrics, &recorder, &stop2, chaos.as_deref())
+            run_loop(
+                &cfg,
+                &store,
+                &apps,
+                &metrics,
+                &recorder,
+                &stop2,
+                chaos.as_deref(),
+                &local_agg,
+            )
         });
         FleetSync {
             stop,
@@ -623,6 +664,7 @@ fn backoff_seed(node_id: &str) -> u64 {
         .fold(0xcbf2_9ce4_8422_2325u64, |h, b| (h ^ u64::from(b)).wrapping_mul(0x100_0000_01b3))
 }
 
+#[allow(clippy::too_many_arguments)]
 fn run_loop(
     cfg: &FleetSyncConfig,
     store: &ShardedStore,
@@ -631,6 +673,7 @@ fn run_loop(
     recorder: &Recorder,
     stop: &AtomicBool,
     chaos: Option<&crate::chaos::ChaosLayer>,
+    local_agg: &LocalAggregateFn,
 ) {
     let mut client: Option<HttpClient> = None;
     let mut buf: Vec<u8> = Vec::with_capacity(4096);
@@ -656,7 +699,7 @@ fn run_loop(
             client = None;
             Err("chaos: injected fleet sync failure".to_string())
         } else {
-            sync_once(cfg, &mut client, &mut buf, store, apps)
+            sync_once(cfg, &mut client, &mut buf, store, apps, local_agg)
         };
         match result {
             Ok((pushed, installed)) => {
@@ -688,13 +731,14 @@ fn sync_once(
     buf: &mut Vec<u8>,
     store: &ShardedStore,
     apps: &AppsCache,
+    local_agg: &LocalAggregateFn,
 ) -> Result<(usize, usize), String> {
     if client.is_none() {
         *client = Some(HttpClient::connect(&cfg.leader).map_err(|e| format!("{e:#}"))?);
     }
     let c = client.as_mut().expect("client just ensured");
 
-    let local = aggregate_local(store);
+    let local = local_agg();
     let pushed = local.len();
     write_push_body(&cfg.node_id, &local, buf);
     let status = c.post_slice("/v1/sync/push", buf).map_err(|e| format!("{e:#}"))?;

@@ -320,6 +320,7 @@ impl Metrics {
         fleet: FleetGauges,
         trace: TraceGauges,
         chaos: ChaosGauges,
+        loop_sessions: &[u64],
     ) -> String {
         let mut out = String::with_capacity(2048);
         let gauge = |out: &mut String, name: &str, v: f64| {
@@ -386,6 +387,20 @@ impl Metrics {
         counter(&mut out, "lasp_serve_epoll_wakeups_total", load(&transport.wakeups));
         gauge(&mut out, "lasp_serve_conns_open", load(&transport.conns_open) as f64);
         counter(&mut out, "lasp_serve_write_backpressure_total", load(&transport.write_backpressure));
+        // Routed (shared-nothing) plane: keyed requests re-homed to their
+        // owning event loop, and per-connection key-cache hits that
+        // skipped the hash+intern on the hot path.
+        counter(&mut out, "lasp_serve_forwarded_requests_total", load(&transport.forwarded));
+        counter(&mut out, "lasp_serve_key_cache_hits_total", load(&transport.key_cache_hits));
+        // Per-loop session ownership (routed plane only — empty slice on
+        // the shared plane). One TYPE line, one labeled sample per loop:
+        // a skewed distribution here explains a skewed per-loop load.
+        if !loop_sessions.is_empty() {
+            let _ = writeln!(out, "# TYPE lasp_serve_loop_owned_sessions gauge");
+            for (l, n) in loop_sessions.iter().enumerate() {
+                let _ = writeln!(out, "lasp_serve_loop_owned_sessions{{loop=\"{l}\"}} {n}");
+            }
+        }
         self.batch_size.render("lasp_serve_batch_size", &mut out);
         self.suggest_latency.render("lasp_serve_suggest_latency_us", &mut out);
         self.report_latency.render("lasp_serve_report_latency_us", &mut out);
@@ -462,6 +477,8 @@ mod tests {
         t.wakeups.fetch_add(21, Ordering::Relaxed);
         t.conns_open.fetch_add(12, Ordering::Relaxed);
         t.write_backpressure.fetch_add(2, Ordering::Relaxed);
+        t.forwarded.fetch_add(13, Ordering::Relaxed);
+        t.key_cache_hits.fetch_add(17, Ordering::Relaxed);
         m.fleet_sync_errors.fetch_add(2, Ordering::Relaxed);
         m.fleet_state.store(FLEET_STATE_BACKOFF, Ordering::Relaxed);
         m.reports_dropped.fetch_add(5, Ordering::Relaxed);
@@ -472,8 +489,12 @@ mod tests {
         let fleet = FleetGauges { nodes: 3, prior_keys: 2, warm_starts: 4 };
         let trace = TraceGauges { recorded: 11, overwritten: 1 };
         let chaos = ChaosGauges { enabled: true, injections: 9 };
-        let page = m.render(5, 8, &t, &ResourceReport::default(), fleet, trace, chaos);
+        let page = m.render(5, 8, &t, &ResourceReport::default(), fleet, trace, chaos, &[3, 2]);
         assert!(page.contains("lasp_serve_http_requests_total 3"), "{page}");
+        assert!(page.contains("lasp_serve_forwarded_requests_total 13"), "{page}");
+        assert!(page.contains("lasp_serve_key_cache_hits_total 17"), "{page}");
+        assert!(page.contains("lasp_serve_loop_owned_sessions{loop=\"0\"} 3"), "{page}");
+        assert!(page.contains("lasp_serve_loop_owned_sessions{loop=\"1\"} 2"), "{page}");
         assert!(page.contains("lasp_serve_reports_dropped_total 5"), "{page}");
         assert!(page.contains("lasp_serve_reports_deduped_total 6"), "{page}");
         assert!(page.contains("lasp_serve_checkpoint_failures_total 2"), "{page}");
@@ -527,6 +548,7 @@ mod tests {
             FleetGauges { nodes: 1, prior_keys: 1, warm_starts: 9 },
             TraceGauges { recorded: 5, overwritten: 0 },
             ChaosGauges::default(),
+            &[4, 0, 1],
         );
         assert!(page.ends_with('\n'), "page must end with a newline, no trailing garbage");
         let mut declared: std::collections::BTreeSet<String> = Default::default();

@@ -54,6 +54,7 @@ pub mod checkpoint;
 pub mod fleet;
 pub mod loadgen;
 pub mod metrics;
+pub(crate) mod plane;
 pub mod service;
 pub mod store;
 pub mod transport;

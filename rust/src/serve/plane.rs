@@ -1,0 +1,187 @@
+//! The routed (shared-nothing) data plane's cross-loop work mailboxes.
+//!
+//! In routed mode each reactor event loop exclusively owns the store
+//! shards `{s : s % n_loops == loop_idx}`: single keyed requests reach
+//! their owner by connection re-homing (the transport's
+//! [`super::transport::LoopHooks::route`] seam), so the suggest/report
+//! hot path touches only loop-owned state — zero locks, zero parks.
+//! Everything that *cannot* ride a connection to its owner — foreign
+//! batch-entry groups, checkpoint snapshot extraction, fleet-sync
+//! aggregation — is expressed as a [`Job`]: a boxed closure posted into
+//! the owning loop's mailbox here and executed on the owner's thread
+//! during its [`super::transport::LoopHooks::on_tick`] slice.
+//!
+//! The mailbox mutex is deliberate, not a hot-path concession: only
+//! batch requests and control-plane work post jobs, and the single
+//! suggest/report path never touches a mailbox. Posting threads that
+//! must wait for results spin-drain *their own* mailbox while waiting
+//! (see the service), which makes loop-to-loop rendezvous deadlock-free:
+//! jobs are depth-1 (they never post further jobs), so two loops posting
+//! to each other both make progress by executing the other's work.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// One unit of owner-loop work: runs on the owning event loop's thread
+/// with exclusive access to that loop's shards. The closure captures its
+/// inputs and writes results through shared slots (`Arc<Mutex<..>>` +
+/// an `Arc<AtomicBool>` done flag) owned by the poster.
+pub(crate) type Job = Box<dyn FnOnce() + Send>;
+
+/// Per-loop job mailboxes plus the wake handles to interrupt an idle
+/// poller after a post.
+pub(crate) struct RoutedPlane {
+    n_loops: usize,
+    n_shards: usize,
+    mailboxes: Vec<Mutex<VecDeque<Job>>>,
+    /// Wake closures registered by each loop at startup
+    /// (`LoopHooks::on_loop_start`); `None` until the loop is up.
+    wakes: Mutex<Vec<Option<Arc<dyn Fn() + Send + Sync>>>>,
+    /// True while the event loops run. Cleared during shutdown (after
+    /// the transport stops) so rendezvous waits bail out instead of
+    /// waiting on ticks that will never come.
+    live: AtomicBool,
+}
+
+impl RoutedPlane {
+    pub(crate) fn new(n_loops: usize, n_shards: usize) -> RoutedPlane {
+        assert!(n_loops > 0 && n_shards > 0 && n_shards % n_loops == 0);
+        RoutedPlane {
+            n_loops,
+            n_shards,
+            mailboxes: (0..n_loops).map(|_| Mutex::new(VecDeque::new())).collect(),
+            wakes: Mutex::new(vec![None; n_loops]),
+            live: AtomicBool::new(true),
+        }
+    }
+
+    pub(crate) fn n_loops(&self) -> usize {
+        self.n_loops
+    }
+
+    pub(crate) fn n_shards(&self) -> usize {
+        self.n_shards
+    }
+
+    /// The ownership map: shard `s` belongs to loop `s % n_loops`. With
+    /// `n_shards` a multiple of `n_loops` (enforced at config time),
+    /// every loop owns exactly `n_shards / n_loops` shards.
+    pub(crate) fn owner_of(&self, shard: usize) -> usize {
+        shard % self.n_loops
+    }
+
+    /// Iterate the shards loop `loop_idx` owns.
+    pub(crate) fn shards_of(&self, loop_idx: usize) -> impl Iterator<Item = usize> + '_ {
+        (loop_idx..self.n_shards).step_by(self.n_loops)
+    }
+
+    /// Called from `LoopHooks::on_loop_start`: make this loop wakeable.
+    pub(crate) fn register_wake(&self, loop_idx: usize, wake: Arc<dyn Fn() + Send + Sync>) {
+        if let Ok(mut w) = self.wakes.lock() {
+            w[loop_idx] = Some(wake);
+        }
+    }
+
+    /// Post a job to `loop_idx`'s mailbox and wake its poller. Jobs
+    /// posted after shutdown are dropped unexecuted (their done flags
+    /// stay false; waiters time out via [`RoutedPlane::live`]).
+    pub(crate) fn post(&self, loop_idx: usize, job: Job) {
+        match self.mailboxes[loop_idx].lock() {
+            Ok(mut q) => q.push_back(job),
+            Err(_) => return,
+        }
+        let wake = match self.wakes.lock() {
+            Ok(w) => w[loop_idx].clone(),
+            Err(_) => None,
+        };
+        if let Some(w) = wake {
+            w();
+        }
+    }
+
+    /// Execute everything in `loop_idx`'s mailbox on the current thread.
+    /// Called by the owning loop (its `on_tick`, or a handler spin-wait
+    /// on the same loop). Jobs are popped one at a time so a job posted
+    /// while another runs is seen in the same drain.
+    pub(crate) fn drain(&self, loop_idx: usize) {
+        loop {
+            let job = match self.mailboxes[loop_idx].lock() {
+                Ok(mut q) => q.pop_front(),
+                Err(_) => return,
+            };
+            match job {
+                Some(j) => j(),
+                None => return,
+            }
+        }
+    }
+
+    /// Whether the event loops are still ticking (rendezvous waits check
+    /// this to avoid blocking on a stopped transport).
+    pub(crate) fn live(&self) -> bool {
+        self.live.load(Ordering::Acquire)
+    }
+
+    /// Mark the loops stopped (called during shutdown, after the HTTP
+    /// transport has been torn down).
+    pub(crate) fn retire(&self) {
+        self.live.store(false, Ordering::Release);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn ownership_map_partitions_shards_evenly() {
+        let p = RoutedPlane::new(4, 8);
+        for s in 0..8 {
+            assert_eq!(p.owner_of(s), s % 4);
+        }
+        let mut seen = vec![false; 8];
+        for l in 0..4 {
+            let owned: Vec<usize> = p.shards_of(l).collect();
+            assert_eq!(owned.len(), 2, "loop {l} owns {owned:?}");
+            for s in owned {
+                assert_eq!(p.owner_of(s), l);
+                assert!(!seen[s], "shard {s} owned twice");
+                seen[s] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "every shard must have an owner");
+    }
+
+    #[test]
+    fn posted_jobs_run_on_drain_and_wake_fires() {
+        let p = RoutedPlane::new(2, 4);
+        let woken = Arc::new(AtomicUsize::new(0));
+        let w = woken.clone();
+        p.register_wake(1, Arc::new(move || {
+            w.fetch_add(1, Ordering::SeqCst);
+        }));
+        let ran = Arc::new(AtomicUsize::new(0));
+        for _ in 0..3 {
+            let ran = ran.clone();
+            p.post(1, Box::new(move || {
+                ran.fetch_add(1, Ordering::SeqCst);
+            }));
+        }
+        assert_eq!(woken.load(Ordering::SeqCst), 3);
+        assert_eq!(ran.load(Ordering::SeqCst), 0, "jobs must not run at post time");
+        p.drain(1);
+        assert_eq!(ran.load(Ordering::SeqCst), 3);
+        p.drain(1); // empty drain is a no-op
+        assert_eq!(ran.load(Ordering::SeqCst), 3);
+    }
+
+    #[test]
+    fn retire_flips_liveness() {
+        let p = RoutedPlane::new(1, 1);
+        assert!(p.live());
+        p.retire();
+        assert!(!p.live());
+    }
+}

@@ -31,15 +31,19 @@
 //!
 //! [`ResourceReport`]: crate::telemetry::ResourceReport
 
-use super::batch::{BatchIngest, Enqueue, Report};
+use super::batch::{self, BatchIngest, Enqueue, Report};
 use super::checkpoint;
 use super::fleet::{self, FleetSnapshot, FleetStore, FleetSync, FleetSyncConfig};
+use super::plane::RoutedPlane;
 use super::transport::{
-    self, HttpHandler, HttpServer, Request, ResponseBuf, TransportKind, TransportOptions,
-    TransportStats,
+    self, ConnCtx, HttpHandler, HttpServer, KeyCacheEntry, Request, ResponseBuf, TransportKind,
+    TransportOptions, TransportStats,
 };
 use super::metrics::{fleet_state_name, ChaosGauges, FleetGauges, Metrics, TraceGauges};
-use super::store::{AppsCache, KeyRef, PolicyKind, SessionId, ShardedStore, Tuner};
+use super::store::{
+    AppsCache, KeyRef, PolicyKind, SessionId, Shard, ShardReadGuard, ShardWriteGuard, ShardedStore,
+    Tuner,
+};
 use crate::apps::AppKind;
 use crate::chaos::{ChaosConfig, ChaosLayer, HandlerFault};
 use crate::device::PowerMode;
@@ -48,10 +52,10 @@ use crate::telemetry::ResourceTracker;
 use crate::util::json::{JsonSlice, JsonWriter};
 use anyhow::{anyhow, Context, Result};
 use std::borrow::Cow;
-use std::cell::RefCell;
+use std::cell::{Cell, RefCell};
 use std::net::{SocketAddr, TcpListener};
-use std::path::PathBuf;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -69,7 +73,10 @@ pub struct ServeConfig {
     pub event_loops: usize,
     /// Which transport backend serves the listener.
     pub transport: TransportKind,
-    /// Session-store shards.
+    /// Session-store shards; 0 = auto (derived from the event-loop
+    /// count so shard ownership divides evenly). Under the routed
+    /// reactor plane an explicit value must be a multiple of the event
+    /// loops — see [`ServeConfig::resolved_topology`].
     pub shards: usize,
     /// Per-shard report queue capacity (backpressure bound).
     pub queue_cap: usize,
@@ -110,7 +117,7 @@ impl Default for ServeConfig {
             workers: 8,
             event_loops: 0,
             transport: transport::default_kind(),
-            shards: 8,
+            shards: 0,
             queue_cap: 4096,
             max_batch: 128,
             checkpoint_dir: None,
@@ -130,9 +137,12 @@ impl Default for ServeConfig {
 impl ServeConfig {
     /// Sanity-check ranges (also delegated to by `LaspConfig::validate`).
     pub fn validate(&self) -> Result<()> {
-        if self.workers == 0 || self.shards == 0 || self.queue_cap == 0 || self.max_batch == 0 {
-            return Err(anyhow!("serve: workers/shards/queue_cap/max_batch must be positive"));
+        if self.workers == 0 || self.queue_cap == 0 || self.max_batch == 0 {
+            return Err(anyhow!("serve: workers/queue_cap/max_batch must be positive"));
         }
+        // Shards may be 0 (= auto); explicit values must tile the event
+        // loops so the routed plane's ownership map stays balanced.
+        self.resolved_topology()?;
         if !(self.warm_retain > 0.0 && self.warm_retain <= 1.0) {
             return Err(anyhow!("serve: warm_retain must lie in (0, 1]"));
         }
@@ -161,16 +171,52 @@ impl ServeConfig {
     /// loops for the reactor (0 = one per core), `workers` for the
     /// blocking pool.
     pub fn effective_threads(&self) -> usize {
-        match self.transport {
-            TransportKind::Reactor => {
-                if self.event_loops > 0 {
-                    self.event_loops
-                } else {
-                    transport::default_event_loops()
-                }
-            }
-            TransportKind::Blocking => self.workers,
+        match self.resolved_topology() {
+            Ok((_, threads)) => threads,
+            Err(_) => self.workers.max(1),
         }
+    }
+
+    /// Resolve `(shards, transport threads)`, applying the `0 = auto`
+    /// defaults and the routed plane's tiling rule:
+    ///
+    /// * reactor, both auto — one loop per core, one shard per loop;
+    /// * reactor, explicit loops — shards default to the loop count;
+    /// * reactor, explicit shards — loops become the largest divisor of
+    ///   the shard count not exceeding the core count, so ownership
+    ///   stays balanced on any host;
+    /// * reactor, both explicit — rejected unless the shard count is a
+    ///   multiple of the loop count;
+    /// * blocking — shards default to the worker count; no tiling rule
+    ///   (any worker may lock any shard).
+    pub fn resolved_topology(&self) -> Result<(usize, usize)> {
+        if self.transport == TransportKind::Blocking {
+            let shards = if self.shards == 0 { self.workers.max(1) } else { self.shards };
+            return Ok((shards, self.workers.max(1)));
+        }
+        let cores = transport::default_event_loops();
+        match (self.shards, self.event_loops) {
+            (0, 0) => Ok((cores, cores)),
+            (0, l) => Ok((l, l)),
+            (s, 0) => {
+                let l = (1..=s.min(cores)).rev().find(|l| s % l == 0).unwrap_or(1);
+                Ok((s, l))
+            }
+            (s, l) if s % l != 0 => Err(anyhow!(
+                "serve: --shards ({s}) must be a multiple of --event-loops ({l}) so every \
+                 event loop owns the same number of shards (pass --shards 0 to derive it)"
+            )),
+            (s, l) => Ok((s, l)),
+        }
+    }
+
+    /// Whether this config serves through the routed (shared-nothing)
+    /// data plane: reactor event loops exclusively own store shards and
+    /// the suggest/report hot path runs lock-free on the owner. Non-unix
+    /// builds fall back to the blocking transport and keep the shared
+    /// plane, matching the transport layer's own fallback.
+    pub(crate) fn is_routed(&self) -> bool {
+        cfg!(unix) && self.transport == TransportKind::Reactor
     }
 }
 
@@ -256,12 +302,116 @@ impl ParsedKey<'_> {
     }
 }
 
+/// Read the session identity (+ weights) from a parameter source. Free
+/// function (rather than a `TuningService` method) so the transport
+/// routing hooks can parse identity before a handler runs.
+fn parse_key_with<'a>(
+    apps: &AppsCache,
+    p: &Params<'a>,
+) -> std::result::Result<ParsedKey<'a>, String> {
+    let client_id = p.get_str("client_id")?.unwrap_or(Cow::Borrowed(""));
+    if client_id.is_empty() {
+        return Err("missing client_id".to_string());
+    }
+    let app: AppKind = p
+        .get_str("app")?
+        .ok_or_else(|| "missing app".to_string())?
+        .parse()
+        .map_err(|e: anyhow::Error| format!("{e:#}"))?;
+    let device: PowerMode = match p.get_str("device")? {
+        Some(d) => d.parse().map_err(|e: anyhow::Error| format!("{e:#}"))?,
+        None => PowerMode::Maxn,
+    };
+    let k = apps.arms(app);
+    let policy: PolicyKind = match p.get_str("policy")? {
+        Some(s) => s.parse().map_err(|e: anyhow::Error| format!("{e:#}"))?,
+        None => PolicyKind::default_for(k),
+    };
+    let alpha = p.get_f64("alpha")?.unwrap_or(0.8);
+    let beta = p.get_f64("beta")?.unwrap_or(0.2);
+    if !(0.0..=1.0).contains(&alpha) || !(0.0..=1.0).contains(&beta) || alpha + beta == 0.0 {
+        return Err("alpha/beta must lie in [0,1] with alpha+beta > 0".to_string());
+    }
+    Ok(ParsedKey { client_id, app, device, policy, alpha, beta })
+}
+
+thread_local! {
+    /// Which routed event loop the current thread is, set once in
+    /// `LoopHooks::on_loop_start`. `None` on every non-loop thread
+    /// (blocking workers, checkpointer, fleet sync) — the shard-access
+    /// helpers and rendezvous waits branch on it.
+    static CURRENT_LOOP: Cell<Option<usize>> = const { Cell::new(None) };
+}
+
+/// How reward ingestion and shard access are organized — chosen once at
+/// boot from the transport kind.
+enum DataPlane {
+    /// Shared store: any thread may lock any shard; reports drain
+    /// through the per-shard updater queues. The blocking transport
+    /// (and non-unix builds) serve through this plane.
+    Shared(BatchIngest),
+    /// Shared-nothing: each reactor event loop exclusively owns the
+    /// shards `{s : s % n_loops == loop_idx}`. Single keyed requests
+    /// reach their owner by connection re-homing, so suggest/report
+    /// touch only loop-owned state — no locks, no queues, no parking.
+    /// Cross-loop work (foreign batch groups, checkpoint extraction,
+    /// fleet aggregation) rides the plane's per-loop job mailboxes.
+    Routed(Arc<RoutedPlane>),
+}
+
+/// Mutable shard access under either data-plane discipline. Deref
+/// coercion keeps `ShardedStore::get_or_create` and friends oblivious
+/// to which discipline produced the reference.
+enum ShardRef<'a> {
+    /// Routed plane: the calling loop owns the shard; no lock taken.
+    Owned(&'a mut Shard),
+    /// Shared plane: a plain write guard.
+    Locked(ShardWriteGuard<'a>),
+}
+
+impl std::ops::Deref for ShardRef<'_> {
+    type Target = Shard;
+    fn deref(&self) -> &Shard {
+        match self {
+            ShardRef::Owned(s) => s,
+            ShardRef::Locked(g) => g,
+        }
+    }
+}
+
+impl std::ops::DerefMut for ShardRef<'_> {
+    fn deref_mut(&mut self) -> &mut Shard {
+        match self {
+            ShardRef::Owned(s) => s,
+            ShardRef::Locked(g) => g,
+        }
+    }
+}
+
+/// Read-only shard access under either discipline (`/v1/best`, the
+/// debug surface).
+enum ShardReadRef<'a> {
+    Owned(&'a Shard),
+    Locked(ShardReadGuard<'a>),
+}
+
+impl std::ops::Deref for ShardReadRef<'_> {
+    type Target = Shard;
+    fn deref(&self) -> &Shard {
+        match self {
+            ShardReadRef::Owned(s) => s,
+            ShardReadRef::Locked(g) => g,
+        }
+    }
+}
+
 /// Shared state behind every worker thread.
 pub struct TuningService {
     cfg: ServeConfig,
     store: Arc<ShardedStore>,
     apps: Arc<AppsCache>,
-    ingest: BatchIngest,
+    /// Shard-access + reward-ingestion discipline (see [`DataPlane`]).
+    plane: DataPlane,
     metrics: Arc<Metrics>,
     transport: Arc<TransportStats>,
     tracker: Mutex<ResourceTracker>,
@@ -283,6 +433,71 @@ pub struct TuningService {
     /// Seeded fault-injection layer; `None` (the default) keeps every
     /// hot path chaos-free — call sites short-circuit on the `Option`.
     chaos: Option<Arc<ChaosLayer>>,
+}
+
+/// The service's hooks into the reactor in routed mode: identify each
+/// loop thread, drain its job mailbox every tick, and map keyed single
+/// requests to their owning loop so the transport can re-home the
+/// connection before the handler runs.
+struct RoutedHooks {
+    plane: Arc<RoutedPlane>,
+    store: Arc<ShardedStore>,
+    apps: Arc<AppsCache>,
+}
+
+impl transport::LoopHooks for RoutedHooks {
+    fn on_loop_start(&self, loop_idx: usize, wake: Arc<dyn Fn() + Send + Sync>) {
+        CURRENT_LOOP.with(|c| c.set(Some(loop_idx)));
+        self.plane.register_wake(loop_idx, wake);
+    }
+
+    fn on_tick(&self, loop_idx: usize) {
+        self.plane.drain(loop_idx);
+    }
+
+    /// Owner lookup for the keyed single-request routes. Parses just
+    /// enough of the request to hash the session key — no interning, no
+    /// allocation (the body view and the key fields all borrow from the
+    /// connection buffer). Returns `None` for batch and non-keyed
+    /// routes (they run wherever the connection lives) and for
+    /// unparsable requests (the handler rejects those locally without
+    /// touching any shard).
+    fn route(&self, req: &Request<'_>, ctx: &mut ConnCtx) -> Option<usize> {
+        if !matches!(
+            (req.method, req.path),
+            ("POST", "/v1/suggest")
+                | ("POST", "/v1/report")
+                | ("GET", "/v1/best")
+                | ("GET", "/v1/debug/session")
+        ) {
+            return None;
+        }
+        let p = if req.method == "GET" {
+            Params::Query(req.query)
+        } else {
+            match JsonSlice::parse(req.body) {
+                Ok(b) => Params::Body(b),
+                Err(_) => return None,
+            }
+        };
+        let pk = match parse_key_with(&self.apps, &p) {
+            Ok(pk) => pk,
+            Err(_) => return None,
+        };
+        // A keep-alive connection re-sending its cached identity skips
+        // even the hash: the entry already knows the shard.
+        if let Some(e) = &ctx.key {
+            if e.client_id == *pk.client_id
+                && e.app == pk.app
+                && e.device == pk.device
+                && e.policy == pk.policy
+            {
+                return Some(self.plane.owner_of(e.shard as usize));
+            }
+        }
+        let shard = self.store.shard_of_hash(pk.key_ref().hash64());
+        Some(self.plane.owner_of(shard))
+    }
 }
 
 /// Hard cap on entries per batch request (`/v1/suggest/batch`,
@@ -361,6 +576,55 @@ thread_local! {
     static BATCH_ARENA: RefCell<BatchArena> = RefCell::new(BatchArena::new());
 }
 
+/// Score one shard's run of suggest-batch entries against `shard`,
+/// emitting each entry's outcome through `sink` keyed by its original
+/// batch index. Factored out of the handler so the routed plane can run
+/// it both inline (runs owned by the handling loop) and inside posted
+/// owner-loop jobs. Uses the session's private scoring scratch
+/// (`select_traced`); the policy contract guarantees it selects
+/// identically to the arena-shared `select_traced_in` variant, so the
+/// response bytes match the shared plane bit for bit.
+fn score_entries(
+    store: &ShardedStore,
+    apps: &AppsCache,
+    metrics: &Metrics,
+    recorder: &Recorder,
+    shard: &mut Shard,
+    items: impl Iterator<Item = (u32, EntryPlan)>,
+    sink: &mut dyn FnMut(u32, ChoiceSlot),
+) -> std::result::Result<(), String> {
+    for (idx, e) in items {
+        let k = apps.arms(e.app);
+        let (session, created) = store.get_or_create(shard, e.id, e.alpha, e.beta, k)?;
+        session.suggests += 1;
+        let warm = created && session.tuner.total_pulls() > 0.0;
+        let choice = session.tuner.select_traced();
+        let total_pulls = session.tuner.total_pulls();
+        store.note_scratch(session);
+        if created {
+            metrics.sessions_created.fetch_add(1, Ordering::Relaxed);
+            recorder.record(
+                EventKind::SessionCreate,
+                e.id.0 as u64,
+                k as u64,
+                warm as u64 | (e.policy.code() as u64) << 8,
+            );
+        }
+        let (a, b, c) = obs::pack_suggest(
+            e.id.0,
+            choice.arm as u32,
+            choice.gap,
+            choice.explore,
+            e.policy.code(),
+            total_pulls as u64,
+        );
+        recorder.record(EventKind::Suggest, a, b, c);
+        metrics.suggests.fetch_add(1, Ordering::Relaxed);
+        sink(idx, ChoiceSlot { arm: choice.arm, total_pulls });
+    }
+    Ok(())
+}
+
 /// Flight-recorder route code for a request (see [`obs::route`]).
 fn route_code(method: &str, path: &str) -> u64 {
     match (method, path) {
@@ -387,11 +651,15 @@ const PRIOR_REFRESH_MIN: Duration = Duration::from_secs(1);
 
 impl TuningService {
     /// Route one request, serializing into the worker's reusable buffer.
-    pub fn handle(&self, req: &Request<'_>, out: &mut ResponseBuf) {
+    /// `ctx` is the per-connection state: which loop the connection
+    /// lives on (stamped into `req_start` trace events) and the cached
+    /// resolved session key.
+    pub fn handle(&self, req: &Request<'_>, ctx: &mut ConnCtx, out: &mut ResponseBuf) {
         self.metrics.http_requests.fetch_add(1, Ordering::Relaxed);
         let t0 = Instant::now();
         let route = route_code(req.method, req.path);
-        self.recorder.record(EventKind::ReqStart, route, 0, 0);
+        self.recorder
+            .record(EventKind::ReqStart, route, ctx.loop_idx as u64, 0);
         // Chaos handler faults fire after ReqStart so the trace shows the
         // request that was hit; an injected error still flows through the
         // shared epilogue (error counter + ReqEnd) like a real failure.
@@ -406,7 +674,7 @@ impl TuningService {
         if faulted {
             out.error(503, "chaos: injected handler fault");
         } else {
-            self.route(req, out);
+            self.route(req, ctx, out);
         }
         if out.status() >= 400 {
             self.metrics.http_errors.fetch_add(1, Ordering::Relaxed);
@@ -419,18 +687,18 @@ impl TuningService {
         );
     }
 
-    fn route(&self, req: &Request<'_>, out: &mut ResponseBuf) {
+    fn route(&self, req: &Request<'_>, ctx: &mut ConnCtx, out: &mut ResponseBuf) {
         match (req.method, req.path) {
-            ("POST", "/v1/suggest") => self.suggest(req, out),
-            ("POST", "/v1/report") => self.report(req, out),
+            ("POST", "/v1/suggest") => self.suggest(req, ctx, out),
+            ("POST", "/v1/report") => self.report(req, ctx, out),
             ("POST", "/v1/suggest/batch") => self.suggest_batch(req, out),
             ("POST", "/v1/report/batch") => self.report_batch(req, out),
-            ("GET", "/v1/best") => self.best(req, out),
+            ("GET", "/v1/best") => self.best(req, ctx, out),
             ("POST", "/v1/checkpoint") => self.checkpoint_now(out),
             ("POST", "/v1/sync/push") => self.sync_push(req, out),
             ("POST", "/v1/sync/pull") => self.sync_pull(req, out),
             ("GET", "/v1/trace") => self.trace(req, out),
-            ("GET", "/v1/debug/session") => self.debug_session(req, out),
+            ("GET", "/v1/debug/session") => self.debug_session(req, ctx, out),
             ("GET", "/healthz") => self.healthz(out),
             ("GET", "/metrics") => self.metrics_page(out),
             ("POST" | "GET", _) => out.error(404, "no such endpoint"),
@@ -440,33 +708,134 @@ impl TuningService {
 
     /// Read the session identity (+ weights) from a parameter source.
     fn parse_key<'a>(&self, p: &Params<'a>) -> std::result::Result<ParsedKey<'a>, String> {
-        let client_id = p.get_str("client_id")?.unwrap_or(Cow::Borrowed(""));
-        if client_id.is_empty() {
-            return Err("missing client_id".to_string());
-        }
-        let app: AppKind = p
-            .get_str("app")?
-            .ok_or_else(|| "missing app".to_string())?
-            .parse()
-            .map_err(|e: anyhow::Error| format!("{e:#}"))?;
-        let device: PowerMode = match p.get_str("device")? {
-            Some(d) => d.parse().map_err(|e: anyhow::Error| format!("{e:#}"))?,
-            None => PowerMode::Maxn,
-        };
-        let k = self.apps.arms(app);
-        let policy: PolicyKind = match p.get_str("policy")? {
-            Some(s) => s.parse().map_err(|e: anyhow::Error| format!("{e:#}"))?,
-            None => PolicyKind::default_for(k),
-        };
-        let alpha = p.get_f64("alpha")?.unwrap_or(0.8);
-        let beta = p.get_f64("beta")?.unwrap_or(0.2);
-        if !(0.0..=1.0).contains(&alpha) || !(0.0..=1.0).contains(&beta) || alpha + beta == 0.0 {
-            return Err("alpha/beta must lie in [0,1] with alpha+beta > 0".to_string());
-        }
-        Ok(ParsedKey { client_id, app, device, policy, alpha, beta })
+        parse_key_with(&self.apps, p)
     }
 
-    fn suggest(&self, req: &Request<'_>, out: &mut ResponseBuf) {
+    /// Mutable access to shard `shard_i` under the active plane's
+    /// discipline: loop-owned (no lock — `owned_shard_mut`'s debug
+    /// assertion is the "suggest/report never parks" claim) in routed
+    /// mode, write-locked in shared mode.
+    fn shard_mut(&self, shard_i: usize) -> ShardRef<'_> {
+        match &self.plane {
+            DataPlane::Routed(plane) => {
+                debug_assert_eq!(
+                    CURRENT_LOOP.with(|c| c.get()),
+                    Some(plane.owner_of(shard_i)),
+                    "routed shard {shard_i} accessed off its owning loop"
+                );
+                // Safety: the routing hooks deliver every keyed request
+                // to the loop owning its shard (asserted above), and
+                // cross-loop work reaches owners through their
+                // mailboxes, so this thread is the shard's only
+                // accessor while the loops run.
+                ShardRef::Owned(unsafe { self.store.owned_shard_mut(shard_i) })
+            }
+            DataPlane::Shared(_) => ShardRef::Locked(self.store.write_shard(shard_i)),
+        }
+    }
+
+    /// Read access to shard `shard_i` under the active plane's
+    /// discipline (owned reference vs read guard).
+    fn shard_read(&self, shard_i: usize) -> ShardReadRef<'_> {
+        match &self.plane {
+            DataPlane::Routed(plane) => {
+                debug_assert_eq!(
+                    CURRENT_LOOP.with(|c| c.get()),
+                    Some(plane.owner_of(shard_i)),
+                    "routed shard {shard_i} read off its owning loop"
+                );
+                // Safety: as for `shard_mut`.
+                ShardReadRef::Owned(unsafe { self.store.owned_shard_mut(shard_i) })
+            }
+            DataPlane::Shared(_) => ShardReadRef::Locked(self.store.read_shard(shard_i)),
+        }
+    }
+
+    /// Overwrite (or create) the connection's cached key resolution in
+    /// place — the `String` keeps its capacity across key changes.
+    fn cache_key(
+        &self,
+        pk: &ParsedKey<'_>,
+        hash: u64,
+        shard: usize,
+        id: SessionId,
+        ctx: &mut ConnCtx,
+    ) {
+        match &mut ctx.key {
+            Some(e) => {
+                e.client_id.clear();
+                e.client_id.push_str(&pk.client_id);
+                e.app = pk.app;
+                e.device = pk.device;
+                e.policy = pk.policy;
+                e.hash = hash;
+                e.shard = shard as u32;
+                e.id = id;
+            }
+            None => {
+                ctx.key = Some(KeyCacheEntry {
+                    client_id: pk.client_id.to_string(),
+                    app: pk.app,
+                    device: pk.device,
+                    policy: pk.policy,
+                    hash,
+                    shard: shard as u32,
+                    id,
+                });
+            }
+        }
+    }
+
+    /// Resolve a parsed key to its `(shard, session id)` through the
+    /// connection's key cache: a keep-alive client re-sending the same
+    /// identity skips the FNV hash and the interner probe entirely. A
+    /// key change re-resolves and overwrites the entry.
+    fn resolve_key(&self, pk: &ParsedKey<'_>, ctx: &mut ConnCtx) -> (usize, SessionId) {
+        if let Some(e) = &ctx.key {
+            if e.client_id == *pk.client_id
+                && e.app == pk.app
+                && e.device == pk.device
+                && e.policy == pk.policy
+            {
+                self.transport.key_cache_hits.fetch_add(1, Ordering::Relaxed);
+                return (e.shard as usize, e.id);
+            }
+        }
+        let kref = pk.key_ref();
+        let hash = kref.hash64();
+        let id = self.store.intern(&kref, hash);
+        let shard = self.store.shard_of_hash(hash);
+        self.cache_key(pk, hash, shard, id, ctx);
+        (shard, id)
+    }
+
+    /// Like [`TuningService::resolve_key`] but read-only: a cache miss
+    /// probes the interner without creating an entry (`/v1/best` and
+    /// the debug surface must not mint ids for unknown sessions).
+    fn resolve_key_lookup(
+        &self,
+        pk: &ParsedKey<'_>,
+        ctx: &mut ConnCtx,
+    ) -> Option<(usize, SessionId)> {
+        if let Some(e) = &ctx.key {
+            if e.client_id == *pk.client_id
+                && e.app == pk.app
+                && e.device == pk.device
+                && e.policy == pk.policy
+            {
+                self.transport.key_cache_hits.fetch_add(1, Ordering::Relaxed);
+                return Some((e.shard as usize, e.id));
+            }
+        }
+        let kref = pk.key_ref();
+        let hash = kref.hash64();
+        let id = self.store.lookup(&kref, hash)?;
+        let shard = self.store.shard_of_hash(hash);
+        self.cache_key(pk, hash, shard, id, ctx);
+        Some((shard, id))
+    }
+
+    fn suggest(&self, req: &Request<'_>, ctx: &mut ConnCtx, out: &mut ResponseBuf) {
         let t0 = Instant::now();
         let body = match JsonSlice::parse(req.body) {
             Ok(b) => b,
@@ -477,13 +846,10 @@ impl TuningService {
             Ok(x) => x,
             Err(e) => return out.error(400, &e),
         };
-        let kref = pk.key_ref();
-        let hash = kref.hash64();
-        let id = self.store.intern(&kref, hash);
+        let (shard_i, id) = self.resolve_key(&pk, ctx);
         let k = self.apps.arms(pk.app);
-        let shard_i = self.store.shard_of_hash(hash);
         let (choice, total_pulls, created, warm) = {
-            let mut shard = self.store.write_shard(shard_i);
+            let mut shard = self.shard_mut(shard_i);
             let (session, created) =
                 match self.store.get_or_create(&mut shard, id, pk.alpha, pk.beta, k) {
                     Ok(x) => x,
@@ -493,7 +859,9 @@ impl TuningService {
             // Warm-started sessions are born with prior pulls.
             let warm = created && session.tuner.total_pulls() > 0.0;
             let choice = session.tuner.select_traced();
-            (choice, session.tuner.total_pulls(), created, warm)
+            let total_pulls = session.tuner.total_pulls();
+            self.store.note_scratch(session);
+            (choice, total_pulls, created, warm)
         };
         let arm = choice.arm;
         if created {
@@ -526,7 +894,7 @@ impl TuningService {
         self.metrics.suggest_latency.observe(t0.elapsed());
     }
 
-    fn report(&self, req: &Request<'_>, out: &mut ResponseBuf) {
+    fn report(&self, req: &Request<'_>, ctx: &mut ConnCtx, out: &mut ResponseBuf) {
         let t0 = Instant::now();
         let body = match JsonSlice::parse(req.body) {
             Ok(b) => b,
@@ -560,10 +928,7 @@ impl TuningService {
                 None => return out.error(400, "invalid seq (expect a non-negative integer)"),
             },
         };
-        let kref = pk.key_ref();
-        let hash = kref.hash64();
-        let id = self.store.intern(&kref, hash);
-        let shard_i = self.store.shard_of_hash(hash);
+        let (shard_i, id) = self.resolve_key(&pk, ctx);
         let report = Report {
             id,
             app: pk.app,
@@ -574,8 +939,40 @@ impl TuningService {
             power_w,
             seq,
         };
-        match self.ingest.enqueue(shard_i, report, &self.metrics) {
-            Ok(Enqueue::Queued) => {
+        match &self.plane {
+            DataPlane::Shared(ingest) => match ingest.enqueue(shard_i, report, &self.metrics) {
+                Ok(Enqueue::Queued) => {
+                    self.metrics.reports_enqueued.fetch_add(1, Ordering::Relaxed);
+                    out.set_status(202);
+                    let mut w = JsonWriter::new(&mut out.body);
+                    w.begin_obj();
+                    w.field_bool("queued", true);
+                    w.field_num("shard", shard_i as f64);
+                    w.end_obj();
+                }
+                Ok(Enqueue::Dropped) => out.error(503, "report queue full"),
+                Err(e) => out.error(503, &e),
+            },
+            DataPlane::Routed(_) => {
+                // Owner-loop inline apply: the connection was re-homed
+                // to this shard's owner, so the reward goes through the
+                // same `apply_one` path as the shard updaters — same
+                // seq-window dedup, same chaos duplicate injection —
+                // without any queue. The wire response is byte-identical
+                // to the queued path ("queued" = accepted).
+                {
+                    let mut shard = self.shard_mut(shard_i);
+                    for _ in 0..batch::chaos_copies(self.chaos.as_deref(), shard_i) {
+                        batch::apply_one(
+                            &report,
+                            &self.store,
+                            &mut shard,
+                            &self.apps,
+                            &self.metrics,
+                            &self.recorder,
+                        );
+                    }
+                }
                 self.metrics.reports_enqueued.fetch_add(1, Ordering::Relaxed);
                 out.set_status(202);
                 let mut w = JsonWriter::new(&mut out.body);
@@ -584,8 +981,6 @@ impl TuningService {
                 w.field_num("shard", shard_i as f64);
                 w.end_obj();
             }
-            Ok(Enqueue::Dropped) => out.error(503, "report queue full"),
-            Err(e) => out.error(503, &e),
         }
         self.metrics.report_latency.observe(t0.elapsed());
     }
@@ -717,46 +1112,60 @@ impl TuningService {
             arena.choices.clear();
             arena.choices.resize(n, ChoiceSlot::default());
             let BatchArena { entries, order, scratch, choices, .. } = arena;
-            let mut pos = 0usize;
-            while pos < order.len() {
-                let shard_i = entries[order[pos] as usize].shard as usize;
-                let mut shard = self.store.write_shard(shard_i);
-                while pos < order.len()
-                    && entries[order[pos] as usize].shard as usize == shard_i
-                {
-                    let idx = order[pos] as usize;
-                    let e = &entries[idx];
-                    let k = self.apps.arms(e.app);
-                    let (session, created) =
-                        match self.store.get_or_create(&mut shard, e.id, e.alpha, e.beta, k) {
-                            Ok(x) => x,
-                            Err(err) => return out.error(500, &err),
-                        };
-                    session.suggests += 1;
-                    let warm = created && session.tuner.total_pulls() > 0.0;
-                    let choice = session.tuner.select_traced_in(scratch);
-                    let total_pulls = session.tuner.total_pulls();
-                    if created {
-                        self.metrics.sessions_created.fetch_add(1, Ordering::Relaxed);
-                        self.recorder.record(
-                            EventKind::SessionCreate,
-                            e.id.0 as u64,
-                            k as u64,
-                            warm as u64 | (e.policy.code() as u64) << 8,
-                        );
+            match &self.plane {
+                DataPlane::Shared(_) => {
+                    let mut pos = 0usize;
+                    while pos < order.len() {
+                        let shard_i = entries[order[pos] as usize].shard as usize;
+                        let mut shard = self.store.write_shard(shard_i);
+                        while pos < order.len()
+                            && entries[order[pos] as usize].shard as usize == shard_i
+                        {
+                            let idx = order[pos] as usize;
+                            let e = &entries[idx];
+                            let k = self.apps.arms(e.app);
+                            let (session, created) = match self
+                                .store
+                                .get_or_create(&mut shard, e.id, e.alpha, e.beta, k)
+                            {
+                                Ok(x) => x,
+                                Err(err) => return out.error(500, &err),
+                            };
+                            session.suggests += 1;
+                            let warm = created && session.tuner.total_pulls() > 0.0;
+                            let choice = session.tuner.select_traced_in(scratch);
+                            let total_pulls = session.tuner.total_pulls();
+                            self.store.note_scratch(session);
+                            if created {
+                                self.metrics.sessions_created.fetch_add(1, Ordering::Relaxed);
+                                self.recorder.record(
+                                    EventKind::SessionCreate,
+                                    e.id.0 as u64,
+                                    k as u64,
+                                    warm as u64 | (e.policy.code() as u64) << 8,
+                                );
+                            }
+                            let (a, b, c) = obs::pack_suggest(
+                                e.id.0,
+                                choice.arm as u32,
+                                choice.gap,
+                                choice.explore,
+                                e.policy.code(),
+                                total_pulls as u64,
+                            );
+                            self.recorder.record(EventKind::Suggest, a, b, c);
+                            self.metrics.suggests.fetch_add(1, Ordering::Relaxed);
+                            choices[idx] = ChoiceSlot { arm: choice.arm, total_pulls };
+                            pos += 1;
+                        }
                     }
-                    let (a, b, c) = obs::pack_suggest(
-                        e.id.0,
-                        choice.arm as u32,
-                        choice.gap,
-                        choice.explore,
-                        e.policy.code(),
-                        total_pulls as u64,
-                    );
-                    self.recorder.record(EventKind::Suggest, a, b, c);
-                    self.metrics.suggests.fetch_add(1, Ordering::Relaxed);
-                    choices[idx] = ChoiceSlot { arm: choice.arm, total_pulls };
-                    pos += 1;
+                }
+                DataPlane::Routed(plane) => {
+                    if let Err((code, e)) =
+                        self.suggest_batch_routed(plane, entries, order, choices)
+                    {
+                        return out.error(code, &e);
+                    }
                 }
             }
             self.metrics.batch_size.observe(n as u64);
@@ -779,6 +1188,109 @@ impl TuningService {
             w.end_obj();
             self.metrics.suggest_latency.observe(t0.elapsed());
         })
+    }
+
+    /// The routed plane's `/v1/suggest/batch` core: walk the
+    /// shard-grouped visit order, score runs owned by this loop inline,
+    /// post every foreign run to its owner's mailbox, then rendezvous.
+    /// While waiting, this loop drains its *own* mailbox, so two loops
+    /// batch-posting to each other both make progress; jobs are depth-1
+    /// (they never post), which makes the rendezvous deadlock-free.
+    fn suggest_batch_routed(
+        &self,
+        plane: &Arc<RoutedPlane>,
+        entries: &[EntryPlan],
+        order: &[u32],
+        choices: &mut [ChoiceSlot],
+    ) -> std::result::Result<(), (u16, String)> {
+        type SuggestSlot = Arc<Mutex<(Vec<(u32, ChoiceSlot)>, Option<String>)>>;
+        let me = CURRENT_LOOP
+            .with(|c| c.get())
+            .expect("routed batch handler off an event loop");
+        let mut pending: Vec<(Arc<AtomicBool>, SuggestSlot)> = Vec::new();
+        let mut pos = 0usize;
+        while pos < order.len() {
+            let shard_i = entries[order[pos] as usize].shard as usize;
+            let run_start = pos;
+            while pos < order.len() && entries[order[pos] as usize].shard as usize == shard_i {
+                pos += 1;
+            }
+            let run = &order[run_start..pos];
+            if plane.owner_of(shard_i) == me {
+                // Safety: this loop owns `shard_i` (checked above).
+                let shard = unsafe { self.store.owned_shard_mut(shard_i) };
+                score_entries(
+                    &self.store,
+                    &self.apps,
+                    &self.metrics,
+                    &self.recorder,
+                    shard,
+                    run.iter().map(|&i| (i, entries[i as usize])),
+                    &mut |i, c| choices[i as usize] = c,
+                )
+                .map_err(|e| (500u16, e))?;
+            } else {
+                let items: Vec<(u32, EntryPlan)> =
+                    run.iter().map(|&i| (i, entries[i as usize])).collect();
+                let done = Arc::new(AtomicBool::new(false));
+                let slot: SuggestSlot = Arc::new(Mutex::new((Vec::new(), None)));
+                let store = self.store.clone();
+                let apps = self.apps.clone();
+                let metrics = self.metrics.clone();
+                let recorder = self.recorder.clone();
+                let plane2 = plane.clone();
+                let (d, s) = (done.clone(), slot.clone());
+                plane.post(
+                    plane.owner_of(shard_i),
+                    Box::new(move || {
+                        debug_assert_eq!(
+                            CURRENT_LOOP.with(|c| c.get()),
+                            Some(plane2.owner_of(shard_i)),
+                            "suggest-batch job off its owner loop"
+                        );
+                        // Safety: jobs in a loop's mailbox run only on
+                        // that loop's thread.
+                        let shard = unsafe { store.owned_shard_mut(shard_i) };
+                        let mut results = Vec::with_capacity(items.len());
+                        let err = score_entries(
+                            &store,
+                            &apps,
+                            &metrics,
+                            &recorder,
+                            shard,
+                            items.iter().copied(),
+                            &mut |i, c| results.push((i, c)),
+                        )
+                        .err();
+                        if let Ok(mut g) = s.lock() {
+                            *g = (results, err);
+                        }
+                        d.store(true, Ordering::Release);
+                    }),
+                );
+                pending.push((done, slot));
+            }
+        }
+        for (done, slot) in pending {
+            while !done.load(Ordering::Acquire) {
+                if !plane.live() {
+                    return Err((503, "server shutting down".to_string()));
+                }
+                plane.drain(me);
+                std::thread::yield_now();
+            }
+            let (results, err) = match slot.lock() {
+                Ok(mut g) => std::mem::take(&mut *g),
+                Err(_) => return Err((500, "batch scoring job panicked".to_string())),
+            };
+            if let Some(e) = err {
+                return Err((500, e));
+            }
+            for (i, c) in results {
+                choices[i as usize] = c;
+            }
+        }
+        Ok(())
     }
 
     /// `POST /v1/report/batch`: many reports in one request. Validation
@@ -825,13 +1337,82 @@ impl TuningService {
                     });
                     pos += 1;
                 }
-                let base = grouped.len();
-                if let Err(e) = self.ingest.enqueue_group(shard_i, reports, &self.metrics, grouped)
-                {
-                    return out.error(503, &e);
-                }
-                for (j, &idx) in order[run_start..pos].iter().enumerate() {
-                    statuses[idx as usize] = grouped[base + j];
+                match &self.plane {
+                    DataPlane::Shared(ingest) => {
+                        let base = grouped.len();
+                        if let Err(e) =
+                            ingest.enqueue_group(shard_i, reports, &self.metrics, grouped)
+                        {
+                            return out.error(503, &e);
+                        }
+                        for (j, &idx) in order[run_start..pos].iter().enumerate() {
+                            statuses[idx as usize] = grouped[base + j];
+                        }
+                    }
+                    DataPlane::Routed(plane) => {
+                        // Applying (inline on owned shards, via the
+                        // owner's mailbox otherwise) replaces queueing:
+                        // there is no bounded queue to overflow, so
+                        // every validated entry is "queued". Foreign
+                        // runs are fire-and-forget — 202 means
+                        // accepted, and the per-loop mailbox is FIFO,
+                        // so a session's reports still apply in the
+                        // order the client sent them.
+                        if plane.owner_of(shard_i)
+                            == CURRENT_LOOP
+                                .with(|c| c.get())
+                                .expect("routed batch handler off an event loop")
+                        {
+                            // Safety: this loop owns `shard_i`.
+                            let shard = unsafe { self.store.owned_shard_mut(shard_i) };
+                            for r in reports.iter() {
+                                for _ in 0..batch::chaos_copies(self.chaos.as_deref(), shard_i)
+                                {
+                                    batch::apply_one(
+                                        r,
+                                        &self.store,
+                                        &mut *shard,
+                                        &self.apps,
+                                        &self.metrics,
+                                        &self.recorder,
+                                    );
+                                }
+                            }
+                        } else {
+                            let run: Vec<Report> = reports.drain(..).collect();
+                            let store = self.store.clone();
+                            let apps = self.apps.clone();
+                            let metrics = self.metrics.clone();
+                            let recorder = self.recorder.clone();
+                            let chaos = self.chaos.clone();
+                            let plane2 = plane.clone();
+                            plane.post(
+                                plane.owner_of(shard_i),
+                                Box::new(move || {
+                                    debug_assert_eq!(
+                                        CURRENT_LOOP.with(|c| c.get()),
+                                        Some(plane2.owner_of(shard_i)),
+                                        "report-batch job off its owner loop"
+                                    );
+                                    // Safety: owner-loop mailbox job.
+                                    let shard = unsafe { store.owned_shard_mut(shard_i) };
+                                    for r in &run {
+                                        for _ in
+                                            0..batch::chaos_copies(chaos.as_deref(), shard_i)
+                                        {
+                                            batch::apply_one(
+                                                r, &store, &mut *shard, &apps, &metrics,
+                                                &recorder,
+                                            );
+                                        }
+                                    }
+                                }),
+                            );
+                        }
+                        for &idx in &order[run_start..pos] {
+                            statuses[idx as usize] = Enqueue::Queued;
+                        }
+                    }
                 }
             }
             let queued = statuses.iter().filter(|&&s| s == Enqueue::Queued).count();
@@ -862,21 +1443,19 @@ impl TuningService {
         })
     }
 
-    fn best(&self, req: &Request<'_>, out: &mut ResponseBuf) {
+    fn best(&self, req: &Request<'_>, ctx: &mut ConnCtx, out: &mut ResponseBuf) {
         let t0 = Instant::now();
         let p = Params::Query(req.query);
         let pk = match self.parse_key(&p) {
             Ok(x) => x,
             Err(e) => return out.error(400, &e),
         };
-        let kref = pk.key_ref();
-        let hash = kref.hash64();
-        // Read-only surface: never interns, never takes a write lock.
-        let Some(id) = self.store.lookup(&kref, hash) else {
+        // Read-only surface: never interns (a miss probes, it does not
+        // mint an id), never takes a write lock.
+        let Some((shard_i, id)) = self.resolve_key_lookup(&pk, ctx) else {
             return out.error(404, "unknown session");
         };
-        let shard_i = self.store.shard_of_hash(hash);
-        let shard = self.store.read_shard(shard_i);
+        let shard = self.shard_read(shard_i);
         let Some(session) = shard.sessions.get(&id.0) else {
             return out.error(404, "unknown session");
         };
@@ -900,17 +1479,141 @@ impl TuningService {
         self.metrics.best_latency.observe(t0.elapsed());
     }
 
+    /// Run every loop/shard's `work` with exclusive access to that shard
+    /// and collect `(shard index, result)` pairs. On the shared plane this
+    /// would be a lock sweep; callers only reach here on the routed plane,
+    /// where each shard's work is posted as a job to its owning event loop
+    /// (shards this thread already owns run inline). While waiting, an
+    /// event-loop requester drains its *own* mailbox so two loops
+    /// scatter-gathering at each other both make progress; a control
+    /// thread (checkpointer, fleet sync) just sleeps. Shards whose owner
+    /// never ran the job within the deadline — a stalled or stopped loop —
+    /// are *skipped*, not fatal: checkpoints and fleet aggregates degrade
+    /// to partial coverage rather than wedging the requester (see
+    /// DESIGN.md §Shared-nothing data plane, failure semantics).
+    fn scatter_gather<T: Send + 'static>(
+        &self,
+        plane: &Arc<RoutedPlane>,
+        work: Arc<dyn Fn(&Shard, usize) -> T + Send + Sync>,
+    ) -> Vec<(usize, T)> {
+        let me = CURRENT_LOOP.with(|c| c.get());
+        let n_shards = self.store.num_shards();
+        let mut out: Vec<(usize, T)> = Vec::with_capacity(n_shards);
+        type Slot<T> = Arc<(Mutex<Vec<(usize, T)>>, AtomicU64)>;
+        let slot: Slot<T> = Arc::new((Mutex::new(Vec::new()), AtomicU64::new(0)));
+        let mut posted = 0u64;
+        for l in 0..plane.n_loops() {
+            if Some(l) == me {
+                // Shards owned by the requesting loop: safe to touch
+                // directly, no rendezvous needed.
+                for s in plane.shards_of(l) {
+                    let shard = unsafe { self.store.owned_shard_mut(s) };
+                    out.push((s, work(shard, s)));
+                }
+                continue;
+            }
+            let shards: Vec<usize> = plane.shards_of(l).collect();
+            posted += 1;
+            let slot = slot.clone();
+            let work = work.clone();
+            let store = self.store.clone();
+            let plane2 = plane.clone();
+            plane.post(
+                l,
+                Box::new(move || {
+                    let mut results = Vec::with_capacity(shards.len());
+                    for s in shards {
+                        debug_assert_eq!(
+                            CURRENT_LOOP.with(|c| c.get()),
+                            Some(plane2.owner_of(s)),
+                            "scatter-gather job ran off the owning loop"
+                        );
+                        let shard = unsafe { store.owned_shard_mut(s) };
+                        results.push((s, work(shard, s)));
+                    }
+                    if let Ok(mut v) = slot.0.lock() {
+                        v.extend(results);
+                    }
+                    slot.1.fetch_add(1, Ordering::Release);
+                }),
+            );
+        }
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while slot.1.load(Ordering::Acquire) < posted {
+            if !plane.live() || Instant::now() >= deadline {
+                break; // stalled/stopped loops: return what completed
+            }
+            match me {
+                Some(l) => {
+                    plane.drain(l);
+                    std::thread::yield_now();
+                }
+                None => std::thread::sleep(Duration::from_millis(1)),
+            }
+        }
+        if let Ok(mut v) = slot.0.lock() {
+            out.append(&mut v);
+        }
+        out.sort_unstable_by_key(|(s, _)| *s);
+        out
+    }
+
+    /// Snapshot every shard into `dir`. Shared plane: the classic
+    /// read-lock sweep. Routed plane: serialization runs on each shard's
+    /// owning loop (message passing, no locks on owned state) and the
+    /// file I/O happens here, wherever the snapshot was requested.
+    ///
+    /// Partial write failures degrade to a smaller snapshot (the
+    /// per-file retry discipline lives in `checkpoint::write_payloads`),
+    /// but a cycle where *every* write failed surfaces as an error so
+    /// `/v1/checkpoint` reports 500 instead of a vacuous success.
+    fn run_checkpoint(&self, dir: &Path) -> Result<usize> {
+        let failed_before = self.metrics.checkpoint_failures.load(Ordering::Relaxed);
+        let written = match &self.plane {
+            DataPlane::Shared(_) => checkpoint::snapshot_with(
+                &self.store,
+                dir,
+                self.chaos.as_deref(),
+                Some(&self.metrics.checkpoint_failures),
+            )?,
+            DataPlane::Routed(plane) => {
+                std::fs::create_dir_all(dir)
+                    .with_context(|| format!("creating {}", dir.display()))?;
+                let parts = self.scatter_gather(
+                    plane,
+                    Arc::new(|shard: &Shard, _| checkpoint::shard_payloads(shard)),
+                );
+                let mut written = 0usize;
+                for (_, payloads) in parts {
+                    written += checkpoint::write_payloads(
+                        &payloads,
+                        dir,
+                        self.chaos.as_deref(),
+                        Some(&self.metrics.checkpoint_failures),
+                    );
+                }
+                written
+            }
+        };
+        let failed = self
+            .metrics
+            .checkpoint_failures
+            .load(Ordering::Relaxed)
+            .saturating_sub(failed_before);
+        if written == 0 && failed > 0 {
+            return Err(anyhow!(
+                "checkpoint wrote no sessions ({failed} write attempts failed)"
+            ));
+        }
+        Ok(written)
+    }
+
     fn checkpoint_now(&self, out: &mut ResponseBuf) {
         let Some(dir) = &self.cfg.checkpoint_dir else {
             return out.error(400, "no checkpoint_dir configured");
         };
         let t0 = Instant::now();
-        match checkpoint::snapshot_with(
-            &self.store,
-            dir,
-            self.chaos.as_deref(),
-            Some(&self.metrics.checkpoint_failures),
-        ) {
+        match self.run_checkpoint(dir) {
             Ok(n) => {
                 let took = t0.elapsed();
                 self.metrics.checkpoints.fetch_add(1, Ordering::Relaxed);
@@ -1005,20 +1708,59 @@ impl TuningService {
         self.metrics.sync_push_latency.observe(t0.elapsed());
     }
 
+    /// The node's contribution to the fleet. Shared plane: a read-lock
+    /// sweep ([`fleet::aggregate_local`]). Routed plane: each owning loop
+    /// folds its shards into a partial accumulator via message passing,
+    /// merged here — no shard locks.
+    fn compute_local_aggregate(&self) -> Vec<FleetSnapshot> {
+        match &self.plane {
+            DataPlane::Shared(_) => fleet::aggregate_local(&self.store),
+            DataPlane::Routed(plane) => {
+                let parts = self.scatter_gather(
+                    plane,
+                    Arc::new(|shard: &Shard, _| {
+                        let mut acc = fleet::FleetAcc::new();
+                        fleet::aggregate_shard_into(shard, &mut acc);
+                        acc
+                    }),
+                );
+                let mut merged = fleet::FleetAcc::new();
+                for (_, acc) in parts {
+                    fleet::merge_acc(&mut merged, acc);
+                }
+                fleet::acc_into_snapshots(merged)
+            }
+        }
+    }
+
     /// The node's local aggregate, recomputed at most once per
-    /// `PRIOR_REFRESH_MIN` (concurrent pulls share one scan; holding the
-    /// cache lock across the scan prevents a stampede).
+    /// `PRIOR_REFRESH_MIN`. On the shared plane concurrent pulls block on
+    /// the cache lock and share one scan (holding it across the scan
+    /// prevents a stampede). On the routed plane *blocking* here would
+    /// deadlock two event loops scatter-gathering at each other through
+    /// the same cache, so a contended lock falls back to an uncached
+    /// recompute — both waiters keep draining their own mailboxes and
+    /// make progress.
     fn cached_local_aggregate(&self) -> Arc<Vec<FleetSnapshot>> {
-        let mut guard = match self.local_agg.lock() {
-            Ok(g) => g,
-            Err(p) => p.into_inner(),
+        let mut guard = match &self.plane {
+            DataPlane::Shared(_) => match self.local_agg.lock() {
+                Ok(g) => g,
+                Err(p) => p.into_inner(),
+            },
+            DataPlane::Routed(_) => match self.local_agg.try_lock() {
+                Ok(g) => g,
+                Err(std::sync::TryLockError::Poisoned(p)) => p.into_inner(),
+                Err(std::sync::TryLockError::WouldBlock) => {
+                    return Arc::new(self.compute_local_aggregate());
+                }
+            },
         };
         if let Some((at, snaps)) = guard.as_ref() {
             if at.elapsed() < PRIOR_REFRESH_MIN {
                 return snaps.clone();
             }
         }
-        let fresh = Arc::new(fleet::aggregate_local(&self.store));
+        let fresh = Arc::new(self.compute_local_aggregate());
         *guard = Some((Instant::now(), fresh.clone()));
         fresh
     }
@@ -1100,7 +1842,7 @@ impl TuningService {
     /// with pull counts and mean measurements, plus a regret-vs-best
     /// proxy: Σ pulls·(weighted cost − best weighted cost) over pulled
     /// arms, using the session's α/β objective weights.
-    fn debug_session(&self, req: &Request<'_>, out: &mut ResponseBuf) {
+    fn debug_session(&self, req: &Request<'_>, ctx: &mut ConnCtx, out: &mut ResponseBuf) {
         let p = Params::Query(req.query);
         let pk = match self.parse_key(&p) {
             Ok(x) => x,
@@ -1110,13 +1852,10 @@ impl TuningService {
             Ok(v) => v.map_or(512, |x| x as usize).max(1),
             Err(e) => return out.error(400, &e),
         };
-        let kref = pk.key_ref();
-        let hash = kref.hash64();
-        let Some(id) = self.store.lookup(&kref, hash) else {
+        let Some((shard_i, id)) = self.resolve_key_lookup(&pk, ctx) else {
             return out.error(404, "unknown session");
         };
-        let shard_i = self.store.shard_of_hash(hash);
-        let shard = self.store.read_shard(shard_i);
+        let shard = self.shard_read(shard_i);
         let Some(session) = shard.sessions.get(&id.0) else {
             return out.error(404, "unknown session");
         };
@@ -1220,6 +1959,20 @@ impl TuningService {
             enabled: self.chaos.is_some(),
             injections: self.chaos.as_ref().map_or(0, |c| c.injections()),
         };
+        // Per-loop ownership gauge (routed plane only): session counts
+        // come from the store's atomics, so reading them never touches
+        // another loop's shards.
+        let loop_sessions: Vec<u64> = match &self.plane {
+            DataPlane::Shared(_) => Vec::new(),
+            DataPlane::Routed(plane) => (0..plane.n_loops())
+                .map(|l| {
+                    plane
+                        .shards_of(l)
+                        .map(|s| self.store.shard_session_count(s) as u64)
+                        .sum()
+                })
+                .collect(),
+        };
         let body = self.metrics.render(
             self.store.session_count(),
             self.store.num_shards(),
@@ -1228,6 +1981,7 @@ impl TuningService {
             fleet,
             trace,
             chaos,
+            &loop_sessions,
         );
         out.text(200, &body);
     }
@@ -1290,7 +2044,13 @@ impl ServerHandle {
             sync.stop();
         }
         self.http.stop();
-        self.service.ingest.stop();
+        match &self.service.plane {
+            DataPlane::Shared(ingest) => ingest.stop(),
+            // Loops are joined by http.stop(); retiring the plane lets
+            // any straggler rendezvous (a control thread mid
+            // scatter-gather) bail instead of waiting on dead loops.
+            DataPlane::Routed(plane) => plane.retire(),
+        }
         self.stop_checkpointer.store(true, Ordering::SeqCst);
         if let Some(h) = self.checkpointer {
             let _ = h.join();
@@ -1316,8 +2076,9 @@ impl ServerHandle {
 /// and (when a leader is configured) start the fleet-sync thread.
 pub fn start(cfg: ServeConfig) -> Result<ServerHandle> {
     cfg.validate()?;
+    let (n_shards, n_threads) = cfg.resolved_topology()?;
     let store = Arc::new(
-        ShardedStore::new(cfg.shards).with_fleet_tuning(cfg.fleet_retain, cfg.fleet_half_life),
+        ShardedStore::new(n_shards).with_fleet_tuning(cfg.fleet_retain, cfg.fleet_half_life),
     );
     let apps = Arc::new(AppsCache::new());
     let metrics = Arc::new(Metrics::new());
@@ -1341,7 +2102,7 @@ pub fn start(cfg: ServeConfig) -> Result<ServerHandle> {
         .clone()
         .unwrap_or_else(|| format!("node-{bound}"));
 
-    let recorder = Arc::new(Recorder::for_workers(cfg.effective_threads()));
+    let recorder = Arc::new(Recorder::for_workers(n_threads));
     let trace_writer = match &cfg.trace_file {
         Some(path) => Some(TraceWriter::start(recorder.clone(), path.clone())?),
         None => None,
@@ -1352,20 +2113,29 @@ pub fn start(cfg: ServeConfig) -> Result<ServerHandle> {
         .chaos
         .clone()
         .map(|c| Arc::new(ChaosLayer::new(c, recorder.clone())));
-    let ingest = BatchIngest::start(
-        store.clone(),
-        apps.clone(),
-        metrics.clone(),
-        recorder.clone(),
-        cfg.queue_cap,
-        cfg.max_batch,
-        chaos.clone(),
-    );
+    // Data-plane choice (DESIGN.md §Shared-nothing data plane): the
+    // reactor transport gets the routed, shard-per-loop plane; the
+    // blocking transport (and non-unix builds, where the reactor falls
+    // back to a poll loop without re-homing support) keeps the shared
+    // lock-based plane with background ingest updaters.
+    let routed_plane = cfg.is_routed().then(|| Arc::new(RoutedPlane::new(n_threads, n_shards)));
+    let plane = match &routed_plane {
+        Some(p) => DataPlane::Routed(p.clone()),
+        None => DataPlane::Shared(BatchIngest::start(
+            store.clone(),
+            apps.clone(),
+            metrics.clone(),
+            recorder.clone(),
+            cfg.queue_cap,
+            cfg.max_batch,
+            chaos.clone(),
+        )),
+    };
     let service = Arc::new(TuningService {
         cfg: cfg.clone(),
         store: store.clone(),
         apps: apps.clone(),
-        ingest,
+        plane,
         metrics: metrics.clone(),
         transport: transport.clone(),
         tracker: Mutex::new(ResourceTracker::start()),
@@ -1379,17 +2149,30 @@ pub fn start(cfg: ServeConfig) -> Result<ServerHandle> {
 
     let handler: HttpHandler = {
         let service = service.clone();
-        Arc::new(move |req: &Request<'_>, out: &mut ResponseBuf| service.handle(req, out))
+        Arc::new(move |req: &Request<'_>, ctx: &mut ConnCtx, out: &mut ResponseBuf| {
+            service.handle(req, ctx, out)
+        })
     };
+    // Routed plane: hand the transport the ownership-aware hooks so
+    // keyed requests re-home to their owning loop and each loop drains
+    // its job mailbox between poll rounds.
+    let hooks = routed_plane.as_ref().map(|p| {
+        Arc::new(RoutedHooks {
+            plane: p.clone(),
+            store: store.clone(),
+            apps: apps.clone(),
+        }) as Arc<dyn transport::LoopHooks>
+    });
     let http = HttpServer::start_with_opts(
         listener,
         handler,
         TransportOptions {
             kind: cfg.transport,
-            threads: cfg.effective_threads(),
+            threads: n_threads,
             stats: transport,
             chaos: chaos.clone(),
             recorder: Some(recorder.clone()),
+            hooks,
         },
     )?;
     let addr = http.addr();
@@ -1398,6 +2181,10 @@ pub fn start(cfg: ServeConfig) -> Result<ServerHandle> {
     // Best-effort by design — an unreachable leader leaves the node
     // serving standalone and only bumps `fleet_sync_errors_total`.
     let fleet_sync = cfg.leader.clone().map(|leader| {
+        // The aggregator is injected so the sync thread inherits the
+        // data-plane discipline: shared → read-lock sweep, routed →
+        // scatter-gather through the owning loops' mailboxes.
+        let agg_service = service.clone();
         FleetSync::start(
             FleetSyncConfig {
                 leader,
@@ -1409,18 +2196,19 @@ pub fn start(cfg: ServeConfig) -> Result<ServerHandle> {
             metrics.clone(),
             recorder.clone(),
             chaos.clone(),
+            Arc::new(move || (*agg_service.cached_local_aggregate()).clone()),
         )
     });
 
     // Periodic checkpointer (only when a directory is configured).
     let stop_checkpointer = Arc::new(AtomicBool::new(false));
     let checkpointer = cfg.checkpoint_dir.clone().map(|dir| {
-        let store = store.clone();
-        let metrics = metrics.clone();
-        let recorder = recorder.clone();
+        // Captures the service (not the raw store) so snapshots follow
+        // the active data plane: shard read locks on the shared plane,
+        // owner-loop message passing on the routed one.
+        let service = service.clone();
         let stop = stop_checkpointer.clone();
         let every = cfg.checkpoint_every;
-        let chaos = chaos.clone();
         std::thread::spawn(move || {
             let mut last = Instant::now();
             loop {
@@ -1430,17 +2218,15 @@ pub fn start(cfg: ServeConfig) -> Result<ServerHandle> {
                 }
                 if last.elapsed() >= every {
                     let t0 = Instant::now();
-                    if let Ok(n) = checkpoint::snapshot_with(
-                        &store,
-                        &dir,
-                        chaos.as_deref(),
-                        Some(&metrics.checkpoint_failures),
-                    ) {
+                    if let Ok(n) = service.run_checkpoint(&dir) {
                         let took = t0.elapsed();
-                        metrics.checkpoints.fetch_add(1, Ordering::Relaxed);
-                        metrics.checkpoint_sessions.fetch_add(n as u64, Ordering::Relaxed);
-                        metrics.checkpoint_latency.observe(took);
-                        recorder.record(
+                        service.metrics.checkpoints.fetch_add(1, Ordering::Relaxed);
+                        service
+                            .metrics
+                            .checkpoint_sessions
+                            .fetch_add(n as u64, Ordering::Relaxed);
+                        service.metrics.checkpoint_latency.observe(took);
+                        service.recorder.record(
                             EventKind::Checkpoint,
                             n as u64,
                             took.as_micros() as u64,

@@ -25,7 +25,9 @@ use crate::bandit::{
     ArmStats, EpsilonGreedy, Policy, SlidingWindowUcb, SubsetTuner, ThompsonSampler, UcbTuner,
 };
 use crate::device::PowerMode;
+use std::cell::UnsafeCell;
 use std::collections::HashMap;
+use std::ops::{Deref, DerefMut};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{RwLock, RwLockReadGuard, RwLockWriteGuard};
 use std::time::{Duration, Instant};
@@ -518,12 +520,83 @@ pub struct Session {
     /// Idempotency window over client report sequence numbers (only
     /// consulted for reports that carry a `seq` field).
     pub seq_window: SeqWindow,
+    /// Scratch growths of this session's policy already folded into the
+    /// store's global counter (see [`ShardedStore::note_scratch`]).
+    pub scratch_growths_seen: u64,
 }
 
 /// The sessions owned by one shard, keyed by interned [`SessionId`].
 #[derive(Default)]
 pub struct Shard {
     pub sessions: HashMap<u32, Session>,
+}
+
+/// One shard's storage cell: the session map plus the lock that guards
+/// it *on the shared (locked) paths only*.
+///
+/// Two access disciplines coexist:
+///
+/// * **Locked** ([`ShardedStore::read_shard`] / [`ShardedStore::write_shard`])
+///   — the classic `RwLock` protocol, used by the blocking transport,
+///   boot-time restore, the final shutdown checkpoint, and unit tests.
+/// * **Owned** ([`ShardedStore::owned_shard_mut`]) — the shared-nothing
+///   data plane: while the routed reactor is live, each event loop is
+///   the *unique* thread touching its owned shards, so it dereferences
+///   the cell directly with zero lock operations. A debug assertion
+///   (`try_write` must succeed) enforces that the owned path can never
+///   observe a held lock — the "suggest/report never parks" contract of
+///   DESIGN.md §Shared-nothing data plane.
+///
+/// Safety: the two disciplines are separated in *time*, not by the type
+/// system — owned access happens only between event-loop start and
+/// join, during which no locked accessor runs against live-owned shards
+/// (cross-cutting consumers go through the owner loop's mailbox
+/// instead; see `serve/plane.rs`).
+struct ShardCell {
+    lock: RwLock<()>,
+    data: UnsafeCell<Shard>,
+}
+
+// The cell hands out `&mut Shard` across threads under the ownership
+// protocol above; the RwLock half covers every shared (locked) access.
+unsafe impl Sync for ShardCell {}
+
+impl ShardCell {
+    fn new() -> ShardCell {
+        ShardCell { lock: RwLock::new(()), data: UnsafeCell::new(Shard::default()) }
+    }
+}
+
+/// Shared-read guard over one shard (locked discipline).
+pub struct ShardReadGuard<'a> {
+    _lock: RwLockReadGuard<'a, ()>,
+    data: &'a Shard,
+}
+
+impl Deref for ShardReadGuard<'_> {
+    type Target = Shard;
+    fn deref(&self) -> &Shard {
+        self.data
+    }
+}
+
+/// Exclusive guard over one shard (locked discipline).
+pub struct ShardWriteGuard<'a> {
+    _lock: RwLockWriteGuard<'a, ()>,
+    data: &'a mut Shard,
+}
+
+impl Deref for ShardWriteGuard<'_> {
+    type Target = Shard;
+    fn deref(&self) -> &Shard {
+        self.data
+    }
+}
+
+impl DerefMut for ShardWriteGuard<'_> {
+    fn deref_mut(&mut self) -> &mut Shard {
+        self.data
+    }
 }
 
 /// One shard's key interner: one owned [`SessionKey`] per distinct
@@ -552,7 +625,7 @@ struct Interner {
 /// prior map under a shard write lock; installers never hold a shard
 /// lock), so the two planes cannot deadlock.
 pub struct ShardedStore {
-    shards: Vec<RwLock<Shard>>,
+    shards: Vec<ShardCell>,
     interners: Vec<RwLock<Interner>>,
     fleet_priors: RwLock<HashMap<FleetKey, FleetPrior>>,
     /// Retention applied to a fleet prior at session creation ((0, 1]).
@@ -562,18 +635,30 @@ pub struct ShardedStore {
     fleet_half_life: Duration,
     /// Sessions that were warm-started from a fleet prior.
     fleet_warm_starts: AtomicU64,
+    /// Per-shard session counts, maintained at creation/insert so that
+    /// `/healthz` and `/metrics` never need a shard lock (in the routed
+    /// reactor the shards belong to their event loops and may not be
+    /// scanned from a foreign thread at all).
+    session_counts: Vec<AtomicU64>,
+    /// Global bandit scratch-growth counter, folded in incrementally
+    /// after tuner operations (see [`ShardedStore::note_scratch`]) for
+    /// the same reason: the zero-allocation certification reads it live
+    /// while event loops own the shards.
+    scratch_growths: AtomicU64,
 }
 
 impl ShardedStore {
     pub fn new(shards: usize) -> ShardedStore {
         assert!(shards > 0, "need at least one shard");
         ShardedStore {
-            shards: (0..shards).map(|_| RwLock::new(Shard::default())).collect(),
+            shards: (0..shards).map(|_| ShardCell::new()).collect(),
             interners: (0..shards).map(|_| RwLock::new(Interner::default())).collect(),
             fleet_priors: RwLock::new(HashMap::new()),
             fleet_retain: 0.3,
             fleet_half_life: Duration::from_secs(600),
             fleet_warm_starts: AtomicU64::new(0),
+            session_counts: (0..shards).map(|_| AtomicU64::new(0)).collect(),
+            scratch_growths: AtomicU64::new(0),
         }
     }
 
@@ -726,23 +811,56 @@ impl ShardedStore {
         interner.keys.get(local).cloned()
     }
 
-    /// Shared-read lock on shard `i` — the `/v1/best` and `/metrics`
-    /// scan path. Poisoned locks are recovered: a panicking request
-    /// handler must not take the whole shard down with it.
-    pub fn read_shard(&self, i: usize) -> RwLockReadGuard<'_, Shard> {
-        match self.shards[i].read() {
+    /// Shared-read lock on shard `i` (locked discipline: blocking
+    /// transport, boot restore, shutdown checkpoint, tests). Poisoned
+    /// locks are recovered: a panicking request handler must not take
+    /// the whole shard down with it.
+    pub fn read_shard(&self, i: usize) -> ShardReadGuard<'_> {
+        let cell = &self.shards[i];
+        let lock = match cell.lock.read() {
             Ok(g) => g,
             Err(poisoned) => poisoned.into_inner(),
-        }
+        };
+        // Safety: the read lock is held for the guard's lifetime, and
+        // every mutating accessor in the locked discipline takes the
+        // write lock. Owned (lockless) mutation never overlaps with the
+        // locked discipline in time — see [`ShardCell`].
+        ShardReadGuard { data: unsafe { &*cell.data.get() }, _lock: lock }
     }
 
-    /// Exclusive lock on shard `i` — suggest's `select()` and the
-    /// batched report drain.
-    pub fn write_shard(&self, i: usize) -> RwLockWriteGuard<'_, Shard> {
-        match self.shards[i].write() {
+    /// Exclusive lock on shard `i` (locked discipline) — suggest's
+    /// `select()` and the batched report drain when the shared
+    /// (non-routed) data plane is active.
+    pub fn write_shard(&self, i: usize) -> ShardWriteGuard<'_> {
+        let cell = &self.shards[i];
+        let lock = match cell.lock.write() {
             Ok(g) => g,
             Err(poisoned) => poisoned.into_inner(),
-        }
+        };
+        // Safety: as for `read_shard`, with the exclusive lock held.
+        ShardWriteGuard { data: unsafe { &mut *cell.data.get() }, _lock: lock }
+    }
+
+    /// Unsynchronized exclusive access to shard `i` — the shared-nothing
+    /// hot path. Zero lock operations in release builds; in debug builds
+    /// an assertion proves the suggest/report path could never have
+    /// parked here (the lock must be observably free).
+    ///
+    /// # Safety
+    ///
+    /// The caller must be the unique thread accessing shard `i` for the
+    /// lifetime of the returned reference: in practice, the event loop
+    /// that owns the shard under the routed data plane's ownership map,
+    /// between loop start and loop join, with every cross-cutting
+    /// consumer going through the owner's mailbox.
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn owned_shard_mut(&self, i: usize) -> &mut Shard {
+        let cell = &self.shards[i];
+        debug_assert!(
+            cell.lock.try_write().is_ok(),
+            "owned shard {i} accessed while its lock is held — the hot path would have parked"
+        );
+        unsafe { &mut *cell.data.get() }
     }
 
     /// Fetch a session in a locked shard, creating one on first contact.
@@ -804,33 +922,52 @@ impl ShardedStore {
                     suggests: 0,
                     reports: 0,
                     seq_window: SeqWindow::default(),
+                    scratch_growths_seen: 0,
                 };
+                let (_, shard_i) = self.local_of(id);
+                self.session_counts[shard_i].fetch_add(1, Ordering::Relaxed);
                 Ok((v.insert(session), true))
             }
         }
     }
 
-    /// Total sessions across all shards (read locks only).
+    /// Total sessions across all shards. Lock-free (atomic counters
+    /// maintained at creation), so `/healthz` and `/metrics` can read it
+    /// while event loops own the shards.
     pub fn session_count(&self) -> usize {
-        (0..self.num_shards())
-            .map(|i| self.read_shard(i).sessions.len())
+        self.session_counts
+            .iter()
+            .map(|c| c.load(Ordering::Relaxed) as usize)
             .sum()
     }
 
-    /// Total scratch-buffer growth events across every session's policy
-    /// (read locks only). Flat after warm-up: the bandit-core half of the
-    /// serve layer's zero-allocation contract, asserted end-to-end by
-    /// `rust/tests/serve_hotpath.rs`.
+    /// Sessions living on shard `i` (lock-free; drives the per-loop
+    /// ownership gauges in `/metrics`).
+    pub fn shard_session_count(&self, i: usize) -> usize {
+        self.session_counts[i].load(Ordering::Relaxed) as usize
+    }
+
+    /// Total scratch-buffer growth events across every session's policy.
+    /// Flat after warm-up: the bandit-core half of the serve layer's
+    /// zero-allocation contract, asserted end-to-end by
+    /// `rust/tests/serve_hotpath.rs`. Maintained incrementally (see
+    /// [`ShardedStore::note_scratch`]) so reading it never needs a shard
+    /// lock.
     pub fn scratch_growth_total(&self) -> u64 {
-        (0..self.num_shards())
-            .map(|i| {
-                self.read_shard(i)
-                    .sessions
-                    .values()
-                    .map(|s| s.tuner.policy().scratch_growths())
-                    .sum::<u64>()
-            })
-            .sum()
+        self.scratch_growths.load(Ordering::Relaxed)
+    }
+
+    /// Fold a session's unobserved scratch growths into the global
+    /// counter. Called after tuner operations that can grow scoring
+    /// scratch (select paths); zero atomic writes in the steady state
+    /// where nothing grew.
+    pub fn note_scratch(&self, session: &mut Session) {
+        let now = session.tuner.policy().scratch_growths();
+        let delta = now.saturating_sub(session.scratch_growths_seen);
+        if delta > 0 {
+            self.scratch_growths.fetch_add(delta, Ordering::Relaxed);
+            session.scratch_growths_seen = now;
+        }
     }
 
     /// Insert a fully built session (checkpoint restore). Existing live
@@ -840,7 +977,10 @@ impl ShardedStore {
         let id = self.intern(&session.key.as_ref(), hash);
         let i = self.shard_of_hash(hash);
         let mut shard = self.write_shard(i);
-        shard.sessions.entry(id.0).or_insert(session);
+        if let std::collections::hash_map::Entry::Vacant(v) = shard.sessions.entry(id.0) {
+            v.insert(session);
+            self.session_counts[i].fetch_add(1, Ordering::Relaxed);
+        }
     }
 }
 

@@ -12,7 +12,8 @@
 
 use super::parser::{self, ConnBuf, Parsed, TryParse};
 use super::{
-    assemble_frame, dispatch, HttpHandler, Request, ResponseBuf, TransportOptions, TransportStats,
+    assemble_frame, dispatch, ConnCtx, HttpHandler, Request, ResponseBuf, TransportOptions,
+    TransportStats,
 };
 use anyhow::{Context as _, Result};
 use std::io::Read;
@@ -79,6 +80,9 @@ impl BlockingServer {
                 let mut conn = ConnBuf::new();
                 let mut resp = ResponseBuf::new();
                 let mut frame: Vec<u8> = Vec::with_capacity(1024);
+                // Degenerate single-owner mode: every worker reports loop
+                // index 0, so the service's shared data plane applies.
+                let mut ctx = ConnCtx::new(0);
                 loop {
                     let stream = {
                         let guard = match rx.lock() {
@@ -91,8 +95,10 @@ impl BlockingServer {
                         Ok(s) => {
                             // Reset per-connection state, keep capacity.
                             conn.reset();
+                            ctx.reset(0);
                             handle_connection(
-                                s, &handler, &shutdown, &stats, &mut conn, &mut resp, &mut frame,
+                                s, &handler, &shutdown, &stats, &mut conn, &mut ctx, &mut resp,
+                                &mut frame,
                             );
                         }
                         Err(_) => return, // accept thread gone: shutdown
@@ -227,6 +233,7 @@ fn handle_connection(
     shutdown: &AtomicBool,
     stats: &TransportStats,
     conn: &mut ConnBuf,
+    ctx: &mut ConnCtx,
     resp: &mut ResponseBuf,
     frame: &mut Vec<u8>,
 ) {
@@ -249,7 +256,7 @@ fn handle_connection(
                         body: &data[p.body.clone()],
                         close: p.close,
                     };
-                    dispatch(handler, &req, resp, stats);
+                    dispatch(handler, &req, ctx, resp, stats);
                     req.close
                 };
                 if write_response(&mut stream, resp, !close, frame, stats).is_err() || close {

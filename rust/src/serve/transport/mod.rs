@@ -71,6 +71,14 @@ pub struct TransportStats {
     /// Writes that would have blocked and parked the connection on
     /// `EPOLLOUT` instead (write backpressure).
     pub write_backpressure: AtomicU64,
+    /// Connections re-homed to their owning event loop by the routed
+    /// reactor (shared-nothing mode). Each count is one connection
+    /// migration, not one request — steady-state keep-alive traffic
+    /// forwards once and then stays local.
+    pub forwarded: AtomicU64,
+    /// Requests whose `(shard, session)` resolution was served from the
+    /// per-connection key cache, skipping re-hash + interner lookup.
+    pub key_cache_hits: AtomicU64,
 }
 
 impl TransportStats {
@@ -102,6 +110,75 @@ impl<'a> Request<'a> {
     pub fn query_get(&self, name: &str) -> Option<Cow<'a, str>> {
         query_get(self.query, name)
     }
+}
+
+/// Cached `(shard, SessionId)` resolution for the session key most
+/// recently seen on a connection. Keep-alive clients (the loadgen steady
+/// state) send the same key on every request; matching the parsed fields
+/// against this entry lets the handler skip the FNV re-hash and the
+/// interner lookup entirely. Invalidation is by value: any field
+/// mismatch falls back to the full resolve path and overwrites the
+/// entry in place (`client_id` reuses its allocation).
+#[derive(Debug)]
+pub struct KeyCacheEntry {
+    pub client_id: String,
+    pub app: crate::apps::AppKind,
+    pub device: crate::device::PowerMode,
+    pub policy: super::store::PolicyKind,
+    /// FNV-1a hash of the full session key (stable across requests).
+    pub hash: u64,
+    /// Shard index derived from `hash`.
+    pub shard: u32,
+    pub id: super::store::SessionId,
+}
+
+/// Per-connection dispatch context, owned by the transport and handed to
+/// the handler alongside each request. Carries which event loop is
+/// driving the connection (0 on the blocking pool) and the keyed-session
+/// cache. Travels with the connection when the routed reactor re-homes
+/// it to its owning loop.
+#[derive(Debug)]
+pub struct ConnCtx {
+    /// Index of the event loop currently driving this connection.
+    pub loop_idx: usize,
+    /// Last resolved session key, if any request on this connection
+    /// carried one.
+    pub key: Option<KeyCacheEntry>,
+}
+
+impl ConnCtx {
+    pub fn new(loop_idx: usize) -> ConnCtx {
+        ConnCtx { loop_idx, key: None }
+    }
+
+    /// Clear for reuse by the next connection (keeps the entry's
+    /// allocations only if the caller chooses to overwrite in place —
+    /// a fresh connection must never observe a stale key).
+    pub fn reset(&mut self, loop_idx: usize) {
+        self.loop_idx = loop_idx;
+        self.key = None;
+    }
+}
+
+/// Callbacks the service installs into the reactor to run the
+/// shared-nothing data plane. The transport stays policy-free: it only
+/// knows that a request may belong to a different loop (`route`) and
+/// that each loop must offer the service a slice of its event-loop turn
+/// (`on_tick`) to drain cross-loop work mailboxes.
+pub trait LoopHooks: Send + Sync {
+    /// Called once on each event-loop thread before it starts polling.
+    /// `wake` wakes this loop's poller from any thread; the service
+    /// registers it so mailbox posts can interrupt an idle `epoll_wait`.
+    fn on_loop_start(&self, loop_idx: usize, wake: Arc<dyn Fn() + Send + Sync>);
+
+    /// Called once per event-loop iteration, after timers fire. The
+    /// poll timeout bounds how stale a tick can be (≤100 ms even when
+    /// the loop is otherwise idle).
+    fn on_tick(&self, loop_idx: usize);
+
+    /// Which loop owns `req`'s session, if the request is keyed and
+    /// parseable. `None` means "no opinion" — serve it where it landed.
+    fn route(&self, req: &Request<'_>, ctx: &mut ConnCtx) -> Option<usize>;
 }
 
 /// Look up `name` in a raw `a=b&c=d` query string, returning the value
@@ -243,13 +320,14 @@ impl Default for ResponseBuf {
 pub(crate) fn dispatch(
     handler: &HttpHandler,
     req: &Request<'_>,
+    ctx: &mut ConnCtx,
     resp: &mut ResponseBuf,
     stats: &TransportStats,
 ) {
     resp.reset();
     let body_cap = resp.body.capacity();
     let scratch_cap = resp.scratch.capacity();
-    handler(req, resp);
+    handler(req, ctx, resp);
     if resp.body.capacity() != body_cap || resp.scratch.capacity() != scratch_cap {
         stats.note_alloc();
     }
@@ -284,7 +362,10 @@ pub(crate) fn assemble_frame(
 
 /// The request handler shared by all worker/event-loop threads: parse
 /// the borrowed request, serialize into the reusable response buffer.
-pub type HttpHandler = Arc<dyn Fn(&Request<'_>, &mut ResponseBuf) + Send + Sync>;
+/// The [`ConnCtx`] is the connection's dispatch context (driving loop,
+/// key cache) — owned by the transport, mutated by the handler.
+pub type HttpHandler =
+    Arc<dyn Fn(&Request<'_>, &mut ConnCtx, &mut ResponseBuf) + Send + Sync>;
 
 /// Which transport backend serves the listener.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -328,6 +409,10 @@ pub struct TransportOptions {
     pub chaos: Option<Arc<crate::chaos::ChaosLayer>>,
     /// Flight recorder for `conn_open`/`conn_close` events (reactor).
     pub recorder: Option<Arc<Recorder>>,
+    /// Shared-nothing data-plane hooks (routing, per-loop ticks). `None`
+    /// serves every request where it lands — the blocking pool and the
+    /// single-loop reactor never consult hooks.
+    pub hooks: Option<Arc<dyn LoopHooks>>,
 }
 
 impl TransportOptions {
@@ -338,6 +423,7 @@ impl TransportOptions {
             stats: Arc::new(TransportStats::default()),
             chaos: None,
             recorder: None,
+            hooks: None,
         }
     }
 }

@@ -37,7 +37,8 @@
 use super::parser::{self, ConnBuf, TryParse, LINGER, REQUEST_DEADLINE};
 use super::poller::{self, Event, Interest, Poller, WakePipe, Waker};
 use super::{
-    assemble_frame, dispatch, HttpHandler, Request, ResponseBuf, TransportOptions, TransportStats,
+    assemble_frame, dispatch, ConnCtx, HttpHandler, LoopHooks, Request, ResponseBuf,
+    TransportOptions, TransportStats,
 };
 use crate::obs::{EventKind, Recorder};
 use anyhow::{Context as _, Result};
@@ -116,6 +117,9 @@ struct Conn {
     timer_armed: bool,
     /// Current poller registration, to skip redundant `modify` calls.
     interest: Interest,
+    /// Dispatch context (driving loop, session-key cache); travels with
+    /// the connection when it is re-homed to its owning loop.
+    ctx: ConnCtx,
 }
 
 /// Coarse hashed timer wheel; entries are `(token, generation)` and
@@ -153,8 +157,21 @@ impl TimerWheel {
     }
 }
 
-/// Sockets handed from the accept thread to one event loop.
-type Inbox = Arc<Mutex<VecDeque<TcpStream>>>;
+/// Work handed to one event loop from outside: freshly accepted sockets
+/// (from the accept thread, round-robin) and connections re-homed by a
+/// sibling loop because this loop owns their session's shard
+/// (shared-nothing routing). A handoff carries the socket, the read
+/// buffer with the still-unconsumed request bytes, and the dispatch
+/// context — the adopting loop serves the buffered request immediately,
+/// without waiting for further socket readiness (the bytes are in
+/// userspace; the poller would never report them again).
+enum Incoming {
+    New(TcpStream),
+    Handoff { stream: TcpStream, buf: ConnBuf, ctx: ConnCtx, requests: u64 },
+}
+
+/// Inbox of [`Incoming`] work for one event loop.
+type Inbox = Arc<Mutex<VecDeque<Incoming>>>;
 
 /// A running reactor server: accept thread + N event-loop threads.
 pub struct ReactorServer {
@@ -178,36 +195,56 @@ impl ReactorServer {
         let stats = opts.stats;
         let chaos = opts.chaos;
         let recorder = opts.recorder;
+        let hooks = opts.hooks;
         let addr = listener.local_addr().context("reading bound address")?;
         let shutdown = Arc::new(AtomicBool::new(false));
         stats.event_loops.store(n_loops as u64, Ordering::Relaxed);
 
-        let mut loops = Vec::with_capacity(n_loops);
+        // Phase 1: create every loop's wake pipe and inbox up front —
+        // re-homing a connection needs all-to-all reach (any loop must
+        // be able to push into any sibling's inbox and wake it).
+        let mut pipes = Vec::with_capacity(n_loops);
         let mut wakers = Vec::with_capacity(n_loops);
-        let mut inboxes: Vec<Inbox> = Vec::with_capacity(n_loops);
-        for loop_idx in 0..n_loops {
-            let wake = WakePipe::new().context("creating event-loop wake pipe")?;
-            wakers.push(wake.waker());
-            let inbox: Inbox = Arc::new(Mutex::new(VecDeque::new()));
-            inboxes.push(inbox.clone());
+        let mut inbox_vec: Vec<Inbox> = Vec::with_capacity(n_loops);
+        for _ in 0..n_loops {
+            let pipe = WakePipe::new().context("creating event-loop wake pipe")?;
+            wakers.push(pipe.waker());
+            pipes.push(pipe);
+            inbox_vec.push(Arc::new(Mutex::new(VecDeque::new())));
+        }
+        let inboxes = Arc::new(inbox_vec);
+        let all_wakers: Arc<Vec<Arc<Waker>>> = Arc::new(wakers.clone());
+
+        // Phase 2: spawn the loops, named for per-core profiling
+        // (`lasp-loop-<i>` shows up in `top -H`, perf, and core dumps).
+        let mut loops = Vec::with_capacity(n_loops);
+        for (loop_idx, wake) in pipes.into_iter().enumerate() {
             let poller = poller::new_poller().context("creating poller")?;
             let mut el = EventLoop::new(
                 loop_idx,
                 poller,
                 wake,
-                inbox,
+                inboxes.clone(),
+                all_wakers.clone(),
                 handler.clone(),
                 shutdown.clone(),
                 stats.clone(),
                 recorder.clone(),
+                hooks.clone(),
             )?;
-            loops.push(std::thread::spawn(move || el.run()));
+            loops.push(
+                std::thread::Builder::new()
+                    .name(format!("lasp-loop-{loop_idx}"))
+                    .spawn(move || el.run())
+                    .context("spawning event loop")?,
+            );
         }
 
         let accept_thread = {
             let shutdown = shutdown.clone();
             let stats = stats.clone();
             let wakers = wakers.clone();
+            let inboxes = inboxes.clone();
             std::thread::spawn(move || {
                 let mut next = 0usize;
                 for conn in listener.incoming() {
@@ -233,7 +270,7 @@ impl ReactorServer {
                     let i = next % wakers.len();
                     next = next.wrapping_add(1);
                     match inboxes[i].lock() {
-                        Ok(mut q) => q.push_back(stream),
+                        Ok(mut q) => q.push_back(Incoming::New(stream)),
                         Err(_) => return,
                     }
                     wakers[i].wake();
@@ -295,11 +332,18 @@ struct EventLoop {
     idx: usize,
     poller: Box<dyn Poller>,
     wake: WakePipe,
-    inbox: Inbox,
+    /// Every loop's inbox (ours is `inboxes[idx]`); siblings' entries
+    /// are the re-homing destinations.
+    inboxes: Arc<Vec<Inbox>>,
+    /// Every loop's waker, for waking a sibling after a handoff push.
+    wakers: Arc<Vec<Arc<Waker>>>,
     handler: HttpHandler,
     shutdown: Arc<AtomicBool>,
     stats: Arc<TransportStats>,
     recorder: Option<Arc<Recorder>>,
+    /// Shared-nothing data-plane hooks; `None` (or a single loop) means
+    /// every request is served where it lands, with no routing parse.
+    hooks: Option<Arc<dyn LoopHooks>>,
     /// Connection slab: `token = slot + 1` (token 0 is the wake pipe).
     conns: Vec<Option<Conn>>,
     free: Vec<usize>,
@@ -319,22 +363,26 @@ impl EventLoop {
         idx: usize,
         mut poller: Box<dyn Poller>,
         wake: WakePipe,
-        inbox: Inbox,
+        inboxes: Arc<Vec<Inbox>>,
+        wakers: Arc<Vec<Arc<Waker>>>,
         handler: HttpHandler,
         shutdown: Arc<AtomicBool>,
         stats: Arc<TransportStats>,
         recorder: Option<Arc<Recorder>>,
+        hooks: Option<Arc<dyn LoopHooks>>,
     ) -> Result<EventLoop> {
         poller.add(wake.read_fd(), 0, Interest::Read).context("registering wake pipe")?;
         Ok(EventLoop {
             idx,
             poller,
             wake,
-            inbox,
+            inboxes,
+            wakers,
             handler,
             shutdown,
             stats,
             recorder,
+            hooks,
             conns: Vec::new(),
             free: Vec::new(),
             next_generation: 0,
@@ -347,6 +395,10 @@ impl EventLoop {
     }
 
     fn run(&mut self) {
+        if let Some(h) = &self.hooks {
+            let waker = self.wakers[self.idx].clone();
+            h.on_loop_start(self.idx, Arc::new(move || waker.wake()));
+        }
         loop {
             let mut events = std::mem::take(&mut self.events);
             let waited = self.poller.wait(&mut events, POLL_TIMEOUT);
@@ -372,17 +424,33 @@ impl EventLoop {
 
             self.adopt_new_conns();
             self.fire_timers();
+            // One tick per loop iteration: the service drains cross-loop
+            // work mailboxes here. POLL_TIMEOUT bounds tick staleness.
+            if let Some(h) = &self.hooks {
+                h.on_tick(self.idx);
+            }
         }
     }
 
-    /// Pull accepted sockets out of this loop's inbox into the slab.
+    /// Pull incoming work out of this loop's inbox into the slab:
+    /// freshly accepted sockets, and connections re-homed here because
+    /// this loop owns their session's shard.
     fn adopt_new_conns(&mut self) {
         loop {
-            let stream = match self.inbox.lock() {
+            let incoming = match self.inboxes[self.idx].lock() {
                 Ok(mut q) => q.pop_front(),
                 Err(_) => return,
             };
-            let Some(stream) = stream else { return };
+            let Some(incoming) = incoming else { return };
+            let (stream, buf, ctx, requests, is_handoff) = match incoming {
+                Incoming::New(stream) => {
+                    (stream, ConnBuf::new(), ConnCtx::new(self.idx), 0, false)
+                }
+                Incoming::Handoff { stream, buf, mut ctx, requests } => {
+                    ctx.loop_idx = self.idx;
+                    (stream, buf, ctx, requests, true)
+                }
+            };
             let slot = match self.free.pop() {
                 Some(s) => s,
                 None => {
@@ -396,20 +464,41 @@ impl EventLoop {
                 self.free.push(slot);
                 continue;
             }
+            let pending_since = buf.pending_since();
             self.conns[slot] = Some(Conn {
                 stream,
-                buf: ConnBuf::new(),
+                buf,
                 state: ConnState::Reading,
                 pending: Vec::new(),
                 sent: 0,
                 generation: self.next_generation,
-                requests: 0,
+                requests,
                 timer_armed: false,
                 interest: Interest::Read,
+                ctx,
             });
             self.stats.conns_open.fetch_add(1, Ordering::Relaxed);
-            if let Some(r) = &self.recorder {
-                r.record(EventKind::ConnOpen, self.idx as u64, (slot + 1) as u64, 0);
+            if !is_handoff {
+                // A handoff is a migration, not a new connection: the
+                // origin loop's conn_open stands; no second event.
+                if let Some(r) = &self.recorder {
+                    r.record(EventKind::ConnOpen, self.idx as u64, (slot + 1) as u64, 0);
+                }
+                continue;
+            }
+            // The re-homed buffer may hold a partial follow-up request;
+            // keep its 408 clock running on this loop's wheel.
+            if let Some(since) = pending_since {
+                let conn = self.conns[slot].as_mut().unwrap();
+                conn.timer_armed = true;
+                let generation = conn.generation;
+                self.wheel.schedule(Instant::now(), since + REQUEST_DEADLINE, slot + 1, generation);
+            }
+            // Serve the buffered request now: the bytes already left the
+            // kernel on the origin loop, so no readiness event will ever
+            // fire for them here.
+            if matches!(self.drive_reading(slot), Drive::Close) {
+                self.close(slot);
             }
         }
     }
@@ -547,6 +636,32 @@ impl EventLoop {
                 }
                 match parser::try_parse(conn.buf.window()) {
                     TryParse::Complete(p) => {
+                        // Shared-nothing routing: if a sibling loop owns
+                        // this request's session shard, re-home the whole
+                        // connection there before counting or serving the
+                        // request. Single-loop reactors skip the routing
+                        // parse entirely — identical CPU/alloc profile to
+                        // the pre-routing reactor.
+                        let target = match &self.hooks {
+                            Some(hooks) if self.inboxes.len() > 1 => {
+                                let base = conn.buf.start;
+                                let data = &conn.buf.data[base..conn.buf.filled];
+                                let req = Request {
+                                    method: std::str::from_utf8(&data[p.method.clone()])
+                                        .unwrap_or(""),
+                                    path: std::str::from_utf8(&data[p.path.clone()]).unwrap_or(""),
+                                    query: std::str::from_utf8(&data[p.query.clone()])
+                                        .unwrap_or(""),
+                                    body: &data[p.body.clone()],
+                                    close: p.close,
+                                };
+                                hooks.route(&req, &mut conn.ctx).filter(|&o| o != self.idx)
+                            }
+                            _ => None,
+                        };
+                        if let Some(owner) = target {
+                            return self.rehome(slot, owner);
+                        }
                         self.stats.requests.fetch_add(1, Ordering::Relaxed);
                         conn.requests += 1;
                         let close = {
@@ -560,7 +675,7 @@ impl EventLoop {
                                 body: &data[p.body.clone()],
                                 close: p.close,
                             };
-                            dispatch(&self.handler, &req, &mut self.resp, &self.stats);
+                            dispatch(&self.handler, &req, &mut conn.ctx, &mut self.resp, &self.stats);
                             req.close
                         };
                         conn.buf.consume(p.total_len);
@@ -625,6 +740,36 @@ impl EventLoop {
                 Err(_) => return Drive::Close,
             }
         }
+    }
+
+    /// Re-home a connection to the loop that owns its session shard:
+    /// deregister it here, hand the socket + read buffer (with the
+    /// unconsumed request bytes) + dispatch context to the owner, and
+    /// wake it. Counted once per migration in `forwarded` — after the
+    /// first request, a keep-alive connection lives on its owner and
+    /// never crosses loops again (until its key changes).
+    fn rehome(&mut self, slot: usize, owner: usize) -> Drive {
+        let Some(conn) = self.conns.get_mut(slot).and_then(|c| c.take()) else {
+            return Drive::Keep;
+        };
+        let _ = self.poller.remove(conn.stream.as_raw_fd());
+        self.stats.conns_open.fetch_sub(1, Ordering::Relaxed);
+        self.stats.forwarded.fetch_add(1, Ordering::Relaxed);
+        self.free.push(slot);
+        let handoff = Incoming::Handoff {
+            stream: conn.stream,
+            buf: conn.buf,
+            ctx: conn.ctx,
+            requests: conn.requests,
+        };
+        match self.inboxes[owner].lock() {
+            // Poisoned sibling inbox: the process is already coming
+            // down; dropping the connection is the only safe move.
+            Ok(mut q) => q.push_back(handoff),
+            Err(_) => return Drive::Keep,
+        }
+        self.wakers[owner].wake();
+        Drive::Keep
     }
 
     /// Serve an error response for a protocol violation, then linger.

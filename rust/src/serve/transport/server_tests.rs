@@ -15,7 +15,7 @@ const BOTH: [TransportKind; 2] = [TransportKind::Reactor, TransportKind::Blockin
 
 fn echo_server(kind: TransportKind) -> HttpServer {
     let listener = TcpListener::bind("127.0.0.1:0").unwrap();
-    let handler: HttpHandler = Arc::new(|req: &Request<'_>, out: &mut ResponseBuf| {
+    let handler: HttpHandler = Arc::new(|req: &Request<'_>, _ctx: &mut ConnCtx, out: &mut ResponseBuf| {
         let mut w = JsonWriter::new(&mut out.body);
         w.begin_obj();
         w.field_str("method", req.method);

@@ -12,7 +12,7 @@
 use lasp::apps::AppKind;
 use lasp::chaos::ChaosConfig;
 use lasp::device::PowerMode;
-use lasp::serve::{start, HttpClient, ServeConfig};
+use lasp::serve::{start, HttpClient, ServeConfig, TransportKind};
 use lasp::sim::{parse_events, Scenario, ScenarioGrid, SweepResult, SweepRunner};
 use lasp::util::json::Json;
 use std::collections::BTreeMap;
@@ -158,8 +158,13 @@ fn duplicate_delivery_never_double_counts_sequenced_reports() {
 #[test]
 fn batch_entries_against_a_full_queue_drop_and_count_individually() {
     let seed = chaos_seed();
+    // Pinned to the blocking transport: bounded shard queues (and their
+    // drop/backpressure semantics) are a shared-plane property. The
+    // routed plane applies reports on their owning event loop and never
+    // queues, so there is nothing to saturate there.
     let handle = start(ServeConfig {
         queue_cap: 1,
+        transport: TransportKind::Blocking,
         ..serve_cfg(ChaosConfig { flush_duplicate: 1.0, ..chaos_cfg(seed) })
     })
     .unwrap();

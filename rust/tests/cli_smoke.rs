@@ -173,6 +173,71 @@ fn checkpoint_save_and_warm_start() {
 }
 
 #[test]
+fn serve_rejects_non_multiple_shards_per_loop() {
+    // The routed data plane maps shard s to event loop s % n_loops;
+    // a shard count that isn't a multiple of the loop count would give
+    // some loops more shards than others. That must be a clear CLI
+    // error naming both flags, not a silently unbalanced ownership map.
+    let out = lasp_bin()
+        .args([
+            "serve",
+            "--addr",
+            "127.0.0.1:0",
+            "--transport",
+            "reactor",
+            "--shards",
+            "6",
+            "--event-loops",
+            "4",
+        ])
+        .output()
+        .unwrap();
+    assert!(!out.status.success(), "non-multiple topology must be rejected");
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("--shards"), "error must name --shards: {err}");
+    assert!(err.contains("--event-loops"), "error must name --event-loops: {err}");
+    assert!(err.contains("multiple"), "error must explain the constraint: {err}");
+}
+
+#[test]
+fn serve_defaults_shards_to_event_loop_count() {
+    // With --shards unset (0 = auto) the shard count follows the
+    // event-loop count, so every loop owns exactly one shard. The
+    // banner prints the *resolved* topology; read it and kill the
+    // server.
+    use std::io::BufRead;
+    let mut child = lasp_bin()
+        .args([
+            "serve",
+            "--addr",
+            "127.0.0.1:0",
+            "--transport",
+            "reactor",
+            "--event-loops",
+            "2",
+        ])
+        .stdout(std::process::Stdio::piped())
+        .stderr(std::process::Stdio::piped())
+        .spawn()
+        .unwrap();
+    let stdout = child.stdout.take().unwrap();
+    let mut banner = String::new();
+    for line in std::io::BufReader::new(stdout).lines() {
+        let line = line.unwrap_or_default();
+        if line.contains("# lasp serve:") {
+            banner = line;
+            break;
+        }
+    }
+    let _ = child.kill();
+    let _ = child.wait();
+    assert!(
+        banner.contains("threads=2 shards=2"),
+        "banner should show shards derived from event loops: {banner:?}"
+    );
+}
+
+#[test]
 fn experiment_table2_runs() {
     let out = lasp_bin()
         .args(["experiment", "--name", "table2"])

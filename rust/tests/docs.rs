@@ -377,6 +377,49 @@ fn design_documents_event_driven_transport() {
 }
 
 #[test]
+fn design_documents_shared_nothing() {
+    // §Shared-nothing data plane: the ownership map, the re-home vs
+    // forward routing tradeoff, the snapshot (scatter-gather) protocol,
+    // and the loop-stall failure semantics.
+    for needle in [
+        "Shared-nothing data plane",
+        "owner(shard) = shard % L",
+        "re-home",
+        "mailbox",
+        "scatter_gather",
+        "key cache",
+        "lasp-loop-<i>",
+        "Loop-stall failure semantics",
+        "partial",
+        "lasp_serve_loop_owned_sessions",
+        "lasp_serve_forwarded_requests_total",
+        "lasp_serve_key_cache_hits_total",
+        "--shards 0",
+        "owned_shard_mut",
+    ] {
+        assert!(
+            DESIGN_MD.contains(needle),
+            "DESIGN.md missing '{needle}' (shared-nothing data plane section)"
+        );
+    }
+    // The API reference documents the client-visible surfaces: routing
+    // invisibility, routed report/batch acceptance semantics, and the
+    // new telemetry.
+    for needle in [
+        "Shared-nothing data plane",
+        "bit-identical across loop counts",
+        "lasp_serve_loop_owned_sessions",
+        "lasp_serve_forwarded_requests_total",
+        "lasp_serve_key_cache_hits_total",
+    ] {
+        assert!(
+            API_MD.contains(needle),
+            "docs/API.md missing '{needle}' (shared-nothing surfaces)"
+        );
+    }
+}
+
+#[test]
 fn api_doc_covers_every_policy_kind() {
     // The serve config parses these policy names; each must be documented.
     for policy in ["ucb", "swucb", "thompson", "epsilon", "subset"] {

@@ -249,6 +249,218 @@ fn both_transports_serve_bit_identical_responses_and_alloc_counts() {
     blocking.shutdown().unwrap();
 }
 
+// ---------------------------------------------------------------------------
+// Routed-plane differential: shard-per-loop routing must be invisible on
+// the wire. The same corpus — including batches whose entries span every
+// shard (cross-owner on a multi-loop server) and duplicate `seq`s racing
+// through different routes — must produce bit-identical responses and
+// bit-identical settled session state on the blocking transport, a
+// single-loop routed reactor, and a four-loop routed reactor.
+// ---------------------------------------------------------------------------
+
+fn boot_topology(kind: TransportKind, loops: usize, chaos: Option<lasp::chaos::ChaosConfig>) -> ServerHandle {
+    start(ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        workers: 1,
+        event_loops: loops,
+        transport: kind,
+        shards: 4,
+        checkpoint_dir: None,
+        checkpoint_every: Duration::from_secs(3600),
+        chaos,
+        ..Default::default()
+    })
+    .unwrap()
+}
+
+fn report_body_seq(client: &str, app: &str, arm: usize, seq: u64) -> String {
+    format!(
+        "{{\"client_id\":\"{client}\",\"app\":\"{app}\",\"device\":\"maxn\",\
+         \"alpha\":1.0,\"beta\":0.0,\"arm\":{arm},\"time_s\":0.5,\"power_w\":5.0,\
+         \"seq\":{seq}}}"
+    )
+}
+
+/// A report batch touching all eight `rt-*` sessions (keys spread by
+/// hash over the 4-shard store), every entry carrying the same `seq`.
+fn cross_owner_batch(seq: u64) -> String {
+    let entries: Vec<String> =
+        (0..8).map(|i| report_body_seq(&format!("rt-{i}"), "clomp", i % 4, seq)).collect();
+    format!("{{\"entries\":[{}]}}", entries.join(","))
+}
+
+fn best_frame(client: &str) -> Vec<u8> {
+    get_frame(&format!(
+        "/v1/best?client_id={client}&app=clomp&device=maxn&alpha=1.0&beta=0.0"
+    ))
+}
+
+fn body_pulls(resp: &[u8]) -> Option<usize> {
+    let body_at = find_subsequence(resp, b"\r\n\r\n")? + 4;
+    JsonSlice::parse(&resp[body_at..]).ok().and_then(|v| v.get("total_pulls")?.as_usize())
+}
+
+/// Poll `/v1/best` for `client` until `total_pulls == want`, then return
+/// the settled response bytes.
+fn settle(conn: &mut TcpStream, client: &str, want: usize) -> Vec<u8> {
+    let frame = best_frame(client);
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        conn.write_all(&frame).unwrap();
+        let resp = read_one_response(conn);
+        if body_pulls(&resp) == Some(want) {
+            return resp;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "{client} never settled at {want} pulls (last: {})",
+            String::from_utf8_lossy(&resp)
+        );
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+/// Drive the routing corpus against one server, returning every labelled
+/// response in order.
+fn drive_routed(addr: std::net::SocketAddr) -> Vec<(String, Vec<u8>)> {
+    let mut out = Vec::new();
+    let mut conn = TcpStream::connect(addr).unwrap();
+    conn.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+
+    // Eight sessions hash-spread over the four shards, created through
+    // one connection — on the four-loop server this exercises connection
+    // re-homing across owner loops.
+    for i in 0..8 {
+        let frame = post_frame("/v1/suggest", &suggest_body(&format!("rt-{i}"), "clomp"));
+        conn.write_all(&frame).unwrap();
+        out.push((format!("suggest-rt-{i}"), read_one_response(&mut conn)));
+    }
+
+    // Racing duplicate seqs, single-report path: the same (session, seq)
+    // delivered twice back to back, then a fresh seq.
+    for (label, frame) in [
+        ("report-rt-0-seq1", post_frame("/v1/report", &report_body_seq("rt-0", "clomp", 1, 1))),
+        ("report-rt-0-seq1-dup", post_frame("/v1/report", &report_body_seq("rt-0", "clomp", 1, 1))),
+        ("report-rt-0-seq2", post_frame("/v1/report", &report_body_seq("rt-0", "clomp", 2, 2))),
+    ] {
+        conn.write_all(&frame).unwrap();
+        out.push((label.to_string(), read_one_response(&mut conn)));
+    }
+
+    // Cross-owner batches with racing duplicate seqs: batch seq=10 twice
+    // in a row (on the routed plane the first batch's foreign applies are
+    // fire-and-forget, so the duplicate races the originals through the
+    // owner mailboxes), then seq=11 once.
+    for (label, seq) in [("batch-seq10", 10), ("batch-seq10-dup", 10), ("batch-seq11", 11)] {
+        let frame = post_frame("/v1/report/batch", &cross_owner_batch(seq));
+        conn.write_all(&frame).unwrap();
+        out.push((label.to_string(), read_one_response(&mut conn)));
+    }
+
+    // Settled state: duplicates must have been absorbed exactly —
+    // rt-0 saw seqs {1, 2, 10, 11}, everyone else {10, 11}.
+    out.push(("settled-rt-0".to_string(), settle(&mut conn, "rt-0", 4)));
+    for i in 1..8 {
+        let client = format!("rt-{i}");
+        out.push((format!("settled-{client}"), settle(&mut conn, &client, 2)));
+    }
+    for i in 0..8 {
+        let client = format!("rt-{i}");
+        conn.write_all(&get_frame(&format!(
+            "/v1/debug/session?client_id={client}&app=clomp&device=maxn&alpha=1.0&beta=0.0"
+        )))
+        .unwrap();
+        out.push((format!("debug-{client}"), read_one_response(&mut conn)));
+    }
+    out
+}
+
+#[test]
+fn routed_plane_is_bit_identical_across_loop_counts() {
+    let blocking = boot_topology(TransportKind::Blocking, 1, None);
+    let one_loop = boot_topology(TransportKind::Reactor, 1, None);
+    let four_loops = boot_topology(TransportKind::Reactor, 4, None);
+
+    let base = drive_routed(blocking.addr());
+    for (name, handle) in [("one-loop reactor", &one_loop), ("four-loop reactor", &four_loops)] {
+        let got = drive_routed(handle.addr());
+        assert_eq!(base.len(), got.len());
+        for ((label_b, bytes_b), (label_g, bytes_g)) in base.iter().zip(&got) {
+            assert_eq!(label_b, label_g);
+            assert_eq!(
+                bytes_b,
+                bytes_g,
+                "{name} diverged from blocking on `{label_b}`:\nblocking: {}\n  routed: {}",
+                String::from_utf8_lossy(bytes_b),
+                String::from_utf8_lossy(bytes_g)
+            );
+        }
+    }
+
+    blocking.shutdown().unwrap();
+    one_loop.shutdown().unwrap();
+    four_loops.shutdown().unwrap();
+}
+
+#[test]
+fn routed_batches_stay_dedup_exact_under_flush_duplicate_chaos() {
+    // flush_duplicate: 1.0 makes the apply path clone every report; the
+    // seq window must absorb the clones on the routed plane exactly as it
+    // does on the shared plane, even when the duplicates are injected on
+    // foreign owner loops via batch routing.
+    let handle = boot_topology(
+        TransportKind::Reactor,
+        4,
+        Some(lasp::chaos::ChaosConfig {
+            seed: 42,
+            flush_duplicate: 1.0,
+            ..Default::default()
+        }),
+    );
+    let mut conn = TcpStream::connect(handle.addr()).unwrap();
+    conn.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+
+    for seq in 1..=5u64 {
+        conn.write_all(&post_frame("/v1/report/batch", &cross_owner_batch(seq))).unwrap();
+        let resp = read_one_response(&mut conn);
+        assert!(resp.starts_with(b"HTTP/1.1 202"), "{}", String::from_utf8_lossy(&resp));
+    }
+
+    // Every session converges to exactly 5 pulls (5 distinct seqs) and
+    // stays there: injected duplicates were counted as deduped, never as
+    // extra reward.
+    for i in 0..8 {
+        let client = format!("rt-{i}");
+        settle(&mut conn, &client, 5);
+    }
+    std::thread::sleep(Duration::from_millis(50));
+    for i in 0..8 {
+        let client = format!("rt-{i}");
+        conn.write_all(&best_frame(&client)).unwrap();
+        let resp = read_one_response(&mut conn);
+        assert_eq!(
+            body_pulls(&resp),
+            Some(5),
+            "{client} drifted past its distinct-seq count: {}",
+            String::from_utf8_lossy(&resp)
+        );
+    }
+
+    // The injected copies actually happened — and were absorbed.
+    conn.write_all(&get_frame("/metrics")).unwrap();
+    let metrics = read_one_response(&mut conn);
+    let text = String::from_utf8_lossy(&metrics);
+    let deduped: u64 = text
+        .lines()
+        .find_map(|l| l.strip_prefix("lasp_serve_reports_deduped_total "))
+        .and_then(|v| v.trim().parse().ok())
+        .unwrap_or(0);
+    assert!(deduped >= 40, "expected >= 40 injected duplicates absorbed, saw {deduped}");
+
+    drop(conn);
+    handle.shutdown().unwrap();
+}
+
 #[test]
 fn reactor_steady_state_is_allocation_free_including_batch_endpoints() {
     let handle = boot(TransportKind::Reactor);
